@@ -1,0 +1,192 @@
+//! END-TO-END DRIVER (DESIGN.md §6, EXPERIMENTS.md §E2E): proves all three
+//! layers compose on a real workload.
+//!
+//! 1. pretrains the nanollama base via the AOT `llama_train_full` artifact,
+//!    logging the loss curve (L2 graphs through the L3 runtime);
+//! 2. finetunes THREE per-task SHiRA adapters + one LoRA baseline adapter
+//!    (the L1 scatter semantics inside the train-step graphs);
+//! 3. evaluates each adapter fused vs the base (accuracy lift);
+//! 4. serves a 200-request mixed-adapter trace under all three switching
+//!    policies, reporting throughput / p99 / switch overhead.
+//!
+//! Run: `cargo run --release --example e2e_serving [--fast]`
+
+use shira::adapter::mask::MaskStrategy;
+use shira::config::RunConfig;
+use shira::coordinator::server::Server;
+use shira::coordinator::switch::{Policy, SwitchEngine};
+use shira::data::tasks::Task;
+use shira::data::trace::{generate_trace, switch_count, TracePattern};
+use shira::runtime::{HostValue, Runtime};
+use shira::train::eval::eval_task;
+use shira::train::schedule::Schedule;
+use shira::train::{Trainer, TrainKind};
+use shira::util::cli::Args;
+use shira::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    shira::util::log::init();
+    let args = Args::from_env(&[]).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut cfg = RunConfig::from_args(&args).map_err(|e| anyhow::anyhow!(e))?;
+    if !args.has("steps") {
+        // the E2E driver trains a bit longer than the repro defaults
+        cfg.adapter_steps = if args.has("fast") { 40 } else { 300 };
+    }
+    let rt = Runtime::with_default_artifacts()?;
+    println!("=== E2E: layers L1(Pallas)+L2(JAX)+L3(rust) on {} ===", rt.platform());
+
+    // ---- phase 1: pretrain base (loss curve logged) ----------------------
+    let meta = rt.manifest.model("llama").unwrap().clone();
+    let (b, t, v) = (meta.dim("batch"), meta.dim("seq_len"), meta.dim("vocab"));
+    let base = shira::model::weights::WeightStore::init(&meta.params, cfg.seed);
+    let mut trainer = Trainer::new(&rt, "llama", base)?;
+    let table_seed = cfg.seed ^ 0x5EED;
+    let mut data = move |_s: usize, rng: &mut Rng| {
+        let batch = if rng.below(2) == 0 {
+            shira::data::tasks::pretrain_batch(v, b, t, rng)
+        } else {
+            shira::data::tasks::mixture_batch(
+                &shira::data::tasks::ALL_TASKS, b, t, table_seed, rng,
+            )
+        };
+        vec![
+            HostValue::i32(batch.x, vec![b, t]),
+            HostValue::i32(batch.y, vec![b, t]),
+            HostValue::f32(batch.mask, vec![b, t]),
+        ]
+    };
+    let steps = cfg.pretrain_steps;
+    let out = trainer.train(
+        TrainKind::Full,
+        steps,
+        Schedule::Cosine { lr: 3e-3 },
+        &mut data,
+        cfg.seed,
+    )?;
+    println!("\n-- pretraining loss curve ({} steps, {:.2} steps/s) --", steps, out.steps_per_sec);
+    let stride = (steps / 12).max(1);
+    for (i, loss) in out.losses.iter().enumerate() {
+        if i % stride == 0 || i == steps - 1 {
+            println!("  step {i:4}  loss {loss:.4}");
+        }
+    }
+    trainer.absorb_full_theta(&out.theta);
+    let base = trainer.base.clone();
+
+    // ---- phase 2: per-task adapters --------------------------------------
+    let tasks = [Task::BoolQ, Task::Piqa, Task::ArcEasy];
+    let mut adapters = Vec::new();
+    for (i, &task) in tasks.iter().enumerate() {
+        let trainer = Trainer::new(&rt, "llama", base.clone())?;
+        let seed = cfg.seed;
+        let mut data = move |_s: usize, rng: &mut Rng| {
+            let batch = shira::data::tasks::mixture_batch(&[task], b, t, seed, rng);
+            vec![
+                HostValue::i32(batch.x, vec![b, t]),
+                HostValue::i32(batch.y, vec![b, t]),
+                HostValue::f32(batch.mask, vec![b, t]),
+            ]
+        };
+        let out = trainer.train(
+            TrainKind::Shira(MaskStrategy::Snip),
+            cfg.adapter_steps,
+            Schedule::Linear { lr: cfg.lr_shira as f32, floor_frac: 0.1 },
+            &mut data,
+            cfg.seed ^ (100 + i as u64),
+        )?;
+        let adapter = trainer.export_shira(&out, task.name(), MaskStrategy::Snip);
+        println!(
+            "adapter '{}': loss {:.3}->{:.3}, nnz={} ({} bytes)",
+            adapter.name,
+            out.first_loss(),
+            out.last_loss(),
+            adapter.param_count(),
+            adapter.nbytes()
+        );
+        adapters.push((task, adapter));
+    }
+
+    // ---- phase 3: fused accuracy lift ------------------------------------
+    println!("\n-- accuracy: base vs adapted (fused mode) --");
+    println!("| task | base | +SHiRA | lift |");
+    println!("|---|---|---|---|");
+    for (task, adapter) in &adapters {
+        let base_acc = 100.0 * eval_task(&rt, &base, *task, cfg.eval_examples, cfg.seed)?;
+        let mut engine = SwitchEngine::new(base.clone());
+        engine.switch_to_shira(adapter, 1.0);
+        let acc = 100.0 * eval_task(&rt, &engine.weights, *task, cfg.eval_examples, cfg.seed)?;
+        println!(
+            "| {} | {base_acc:.1}% | {acc:.1}% | {:+.1} |",
+            task.name(),
+            acc - base_acc
+        );
+    }
+
+    // ---- phase 4: serve a mixed trace under each policy -------------------
+    let names: Vec<String> = adapters.iter().map(|(_, a)| a.name.clone()).collect();
+    let trace = generate_trace(
+        &names,
+        cfg.trace_len.max(60),
+        TracePattern::Bursty { burst: 6 },
+        2e4,
+        cfg.seed,
+    );
+    println!(
+        "\n-- serving {} requests ({} trace switches) --",
+        trace.len(),
+        switch_count(&trace)
+    );
+    // LoRA baseline adapter zoo for the fuse/unfused policies
+    let mut lora_adapters = Vec::new();
+    for (i, (task, _)) in adapters.iter().enumerate() {
+        let trainer = Trainer::new(&rt, "llama", base.clone())?;
+        let task = *task;
+        let seed = cfg.seed;
+        let mut data = move |_s: usize, rng: &mut Rng| {
+            let batch = shira::data::tasks::mixture_batch(&[task], b, t, seed, rng);
+            vec![
+                HostValue::i32(batch.x, vec![b, t]),
+                HostValue::i32(batch.y, vec![b, t]),
+                HostValue::f32(batch.mask, vec![b, t]),
+            ]
+        };
+        let out = trainer.train(
+            TrainKind::Lora,
+            cfg.adapter_steps.min(60), // baseline zoo only needs to exist
+            Schedule::Linear { lr: cfg.lr_lora as f32, floor_frac: 0.1 },
+            &mut data,
+            cfg.seed ^ (200 + i as u64),
+        )?;
+        lora_adapters.push(trainer.export_lora(&out, task.name()));
+    }
+    println!("| policy | switches | mean switch (us) | mean exec (us) | p99 (us) | req/s |");
+    println!("|---|---|---|---|---|---|");
+    for policy in [Policy::ShiraScatter, Policy::LoraFuse, Policy::LoraUnfused] {
+        let mut server = Server::new(&rt, base.clone(), policy, "llama", cfg.cache_bytes)?;
+        match policy {
+            Policy::ShiraScatter => {
+                for (_, a) in &adapters {
+                    server.store.add_shira(a);
+                }
+            }
+            _ => {
+                for a in &lora_adapters {
+                    server.store.add_lora(a);
+                }
+            }
+        }
+        let rep = server.run_trace(&trace)?;
+        println!(
+            "| {} | {} | {:.1} | {:.1} | {:.0} | {:.1} |",
+            policy.name(),
+            rep.switches,
+            rep.mean_switch_us,
+            rep.mean_exec_us,
+            rep.p99_latency_us,
+            rep.throughput_rps
+        );
+    }
+    println!("\nE2E complete: pretraining, adapter finetuning, fused eval and");
+    println!("policy-compared serving all ran through the AOT artifacts.");
+    Ok(())
+}

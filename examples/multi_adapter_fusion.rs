@@ -1,0 +1,95 @@
+//! Multi-adapter fusion walk-through (paper §3.2 + Table 4): train
+//! independent per-task adapters, fuse them naively, measure the concept
+//! retention of the fused adapter, and inspect the interference stats that
+//! explain WHY sparse fusion works.
+//!
+//! Run: `cargo run --release --example multi_adapter_fusion [--fast]`
+
+use shira::adapter::mask::MaskStrategy;
+use shira::config::RunConfig;
+use shira::coordinator::fusion;
+use shira::coordinator::switch::SwitchEngine;
+use shira::data::tasks::Task;
+use shira::runtime::{HostValue, Runtime};
+use shira::train::eval::eval_task;
+use shira::train::schedule::Schedule;
+use shira::train::{Trainer, TrainKind};
+use shira::util::cli::Args;
+use shira::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    shira::util::log::init();
+    let args = Args::from_env(&[]).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let cfg = RunConfig::from_args(&args).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::with_default_artifacts()?;
+    let base = shira::repro::ensure_llama_base(&rt, &cfg, "llama_a")?;
+    let tasks = [Task::BoolQ, Task::Piqa, Task::ArcEasy];
+    let meta = rt.manifest.model("llama").unwrap();
+    let (b, t) = (meta.dim("batch"), meta.dim("seq_len"));
+
+    // ---- independent adapters ------------------------------------------
+    let mut adapters = Vec::new();
+    for (i, &task) in tasks.iter().enumerate() {
+        let trainer = Trainer::new(&rt, "llama", base.clone())?;
+        let seed = cfg.seed;
+        let mut data = move |_s: usize, rng: &mut Rng| {
+            let batch = shira::data::tasks::mixture_batch(&[task], b, t, seed, rng);
+            vec![
+                HostValue::i32(batch.x, vec![b, t]),
+                HostValue::i32(batch.y, vec![b, t]),
+                HostValue::f32(batch.mask, vec![b, t]),
+            ]
+        };
+        let out = trainer.train(
+            TrainKind::Shira(MaskStrategy::WeightMagnitude),
+            cfg.adapter_steps,
+            Schedule::Linear { lr: cfg.lr_shira as f32, floor_frac: 0.1 },
+            &mut data,
+            cfg.seed ^ (300 + i as u64),
+        )?;
+        adapters.push(trainer.export_shira(&out, task.name(), MaskStrategy::WeightMagnitude));
+    }
+
+    // ---- interference analysis ------------------------------------------
+    let refs: Vec<&shira::adapter::ShiraAdapter> = adapters.iter().collect();
+    let report = fusion::analyze_shira(&refs);
+    println!("interference across {} independently trained adapters:", refs.len());
+    println!("  mean support overlap : {:.4}", report.mean_overlap);
+    println!("  mean A1ᵀA2 density   : {:.4}  (LoRA fused products: 1.0)", report.mean_ata_density);
+    println!("  colliding entries    : {}", report.collisions);
+
+    // ---- naive fusion + accuracy retention -------------------------------
+    let fused = fusion::fuse_shira(&refs, "boolq+piqa+arc_e");
+    println!(
+        "\nfused adapter: {} nnz ({} bytes) — naive sparse addition, no retraining",
+        fused.param_count(),
+        fused.nbytes()
+    );
+    println!("\n| task | base | own adapter | fused (3 concepts) | drop vs own |");
+    println!("|---|---|---|---|---|");
+    let mut single_avg = 0.0;
+    let mut multi_avg = 0.0;
+    for (task, adapter) in tasks.iter().zip(adapters.iter()) {
+        let base_acc = 100.0 * eval_task(&rt, &base, *task, cfg.eval_examples, cfg.seed)?;
+        let mut e1 = SwitchEngine::new(base.clone());
+        e1.switch_to_shira(adapter, 1.0);
+        let own = 100.0 * eval_task(&rt, &e1.weights, *task, cfg.eval_examples, cfg.seed)?;
+        let mut e2 = SwitchEngine::new(base.clone());
+        e2.switch_to_shira(&fused, 1.0);
+        let multi = 100.0 * eval_task(&rt, &e2.weights, *task, cfg.eval_examples, cfg.seed)?;
+        println!(
+            "| {} | {base_acc:.1}% | {own:.1}% | {multi:.1}% | {:.1} |",
+            task.name(),
+            own - multi
+        );
+        single_avg += own / tasks.len() as f64;
+        multi_avg += multi / tasks.len() as f64;
+    }
+    println!(
+        "\naverage: single {single_avg:.1}% -> fused {multi_avg:.1}% (%Drop = {:.2})",
+        single_avg - multi_avg
+    );
+    println!("paper shape (Table 4): SHiRA's %Drop stays small because sparse");
+    println!("supports barely collide; dense LoRA fusion interferes everywhere.");
+    Ok(())
+}

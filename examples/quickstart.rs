@@ -1,0 +1,89 @@
+//! Quickstart: the full SHiRA lifecycle in ~80 lines.
+//!
+//! 1. load the AOT runtime (built by `make artifacts`),
+//! 2. finetune a SHiRA adapter (1-2% of weights) on a task,
+//! 3. save it to the portable `.shira` format,
+//! 4. load it back and rapid-switch it onto the base weights,
+//! 5. evaluate fused vs base accuracy, and revert bit-exactly.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use shira::adapter::io;
+use shira::adapter::mask::MaskStrategy;
+use shira::config::RunConfig;
+use shira::coordinator::switch::SwitchEngine;
+use shira::data::tasks::Task;
+use shira::runtime::{HostValue, Runtime};
+use shira::train::eval::eval_task;
+use shira::train::schedule::Schedule;
+use shira::train::{Trainer, TrainKind};
+use shira::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    shira::util::log::init();
+    let cfg = RunConfig::fast();
+    let rt = Runtime::with_default_artifacts()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // -- base model (pretrained + cached under artifacts/checkpoints) ----
+    let base = shira::repro::ensure_llama_base(&rt, &cfg, "llama_a")?;
+    println!("base model: {} params", base.total_params());
+
+    // -- train a SHiRA-WM adapter on one task -----------------------------
+    let task = Task::ArcEasy;
+    let trainer = Trainer::new(&rt, "llama", base.clone())?;
+    let (b, t) = (trainer.model.dim("batch"), trainer.model.dim("seq_len"));
+    let seed = cfg.seed;
+    let mut data = move |_s: usize, rng: &mut Rng| {
+        let batch =
+            shira::data::tasks::mixture_batch(&[task], b, t, seed, rng);
+        vec![
+            HostValue::i32(batch.x, vec![b, t]),
+            HostValue::i32(batch.y, vec![b, t]),
+            HostValue::f32(batch.mask, vec![b, t]),
+        ]
+    };
+    let out = trainer.train(
+        TrainKind::Shira(MaskStrategy::WeightMagnitude),
+        cfg.adapter_steps,
+        Schedule::Linear { lr: cfg.lr_shira as f32, floor_frac: 0.1 },
+        &mut data,
+        cfg.seed,
+    )?;
+    println!(
+        "trained {}: loss {:.3} -> {:.3} ({} trainable = {:.2}% of model)",
+        out.kind_label,
+        out.first_loss(),
+        out.last_loss(),
+        out.trainable_params,
+        100.0 * out.trainable_params as f64 / base.total_params() as f64,
+    );
+
+    // -- export / save / load ---------------------------------------------
+    let adapter = trainer.export_shira(&out, "arc_easy", MaskStrategy::WeightMagnitude);
+    let path = std::env::temp_dir().join("quickstart.shira");
+    io::save_shira(&path, &adapter).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let loaded = io::load_shira(&path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "saved + loaded adapter '{}': {} nnz, {} bytes on disk",
+        loaded.name,
+        loaded.param_count(),
+        std::fs::metadata(&path)?.len()
+    );
+
+    // -- rapid switch + evaluate ------------------------------------------
+    let base_acc = 100.0 * eval_task(&rt, &base, task, cfg.eval_examples, cfg.seed)?;
+    let mut engine = SwitchEngine::new(base.clone());
+    let timing = engine.switch_to_shira(&loaded, 1.0);
+    let fused_acc =
+        100.0 * eval_task(&rt, &engine.weights, task, cfg.eval_examples, cfg.seed)?;
+    engine.revert();
+    assert!(engine.weights.bit_equal(&base), "revert must be exact");
+    println!(
+        "accuracy on {}: base {base_acc:.1}% -> adapted {fused_acc:.1}% \
+         (switch applied in {:.0}us, revert bit-exact)",
+        task.name(),
+        timing.fuse_us
+    );
+    Ok(())
+}

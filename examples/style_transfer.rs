@@ -1,0 +1,131 @@
+//! Vision-side walk-through (paper §4.2, Table 1 / Figs 1, 4, 6, 7 proxy):
+//! style-transfer adapters on the nanosd generator.
+//!
+//! Trains a bluefire and a paintings adapter (SHiRA-SNIP + LoRA baseline),
+//! scores single-style generation, the α knob, held-out "koala" concepts,
+//! and dual-style fusion with the SPS (HPSv2-proxy) metric.
+//!
+//! Run: `cargo run --release --example style_transfer [--fast]`
+
+use shira::adapter::mask::MaskStrategy;
+use shira::config::RunConfig;
+use shira::coordinator::fusion;
+use shira::coordinator::switch::SwitchEngine;
+use shira::data::style::{Style, StyleDataset};
+use shira::runtime::{HostValue, Runtime};
+use shira::train::eval::{eval_style, eval_style_multi};
+use shira::train::schedule::Schedule;
+use shira::train::{Trainer, TrainKind};
+use shira::util::cli::Args;
+use shira::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    shira::util::log::init();
+    let args = Args::from_env(&[]).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let cfg = RunConfig::from_args(&args).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::with_default_artifacts()?;
+    let world = shira::repro::style_world(&rt, &cfg);
+    let base = shira::repro::ensure_sd_base(&rt, &cfg, &world)?;
+    let meta = rt.manifest.model("sd").unwrap();
+    let batch = meta.dim("batch");
+
+    let mut shira_adapters = Vec::new();
+    let mut lora_adapters = Vec::new();
+    for (i, style) in [Style::Bluefire, Style::Paintings].into_iter().enumerate() {
+        let trainer = Trainer::new(&rt, "sd", base.clone())?;
+        let ds = StyleDataset::new(world.clone(), style, cfg.seed);
+        let dz = world.d_z;
+        let dimg = world.d_img;
+        let mk_data = |ds: &StyleDataset| {
+            let ds = StyleDataset::new(ds.world.clone(), ds.style, cfg.seed);
+            move |_s: usize, rng: &mut Rng| {
+                let (z, t) = ds.train_batch(batch, rng);
+                vec![
+                    HostValue::f32(z, vec![batch, dz]),
+                    HostValue::f32(t, vec![batch, dimg]),
+                ]
+            }
+        };
+        let mut data = mk_data(&ds);
+        let out = trainer.train(
+            TrainKind::Shira(MaskStrategy::Snip),
+            cfg.adapter_steps,
+            Schedule::Cosine { lr: cfg.lr_shira as f32 },
+            &mut data,
+            cfg.seed ^ (400 + i as u64),
+        )?;
+        println!(
+            "SHiRA {} adapter: loss {:.4} -> {:.4} ({} nnz)",
+            style.name(),
+            out.first_loss(),
+            out.last_loss(),
+            out.trainable_params
+        );
+        shira_adapters.push((style, trainer.export_shira(&out, style.name(), MaskStrategy::Snip)));
+
+        let mut data = mk_data(&ds);
+        let out = trainer.train(
+            TrainKind::Lora,
+            cfg.adapter_steps,
+            Schedule::Cosine { lr: cfg.lr_lora as f32 },
+            &mut data,
+            cfg.seed ^ (500 + i as u64),
+        )?;
+        lora_adapters.push((style, trainer.export_lora(&out, style.name())));
+    }
+
+    // ---- single-style quality (seen + unseen concepts) -------------------
+    println!("\n| adapter | SPS seen | SPS unseen (koala) |");
+    println!("|---|---|---|");
+    for (style, adapter) in &shira_adapters {
+        let mut e = SwitchEngine::new(base.clone());
+        e.switch_to_shira(adapter, 1.0);
+        let seen = eval_style(&rt, &e.weights, &world, *style, 1.0,
+                              cfg.style_eval_batches, false, cfg.seed)?;
+        let unseen = eval_style(&rt, &e.weights, &world, *style, 1.0,
+                                cfg.style_eval_batches, true, cfg.seed)?;
+        println!("| SHiRA {} | {seen:.1} | {unseen:.1} |", style.name());
+    }
+    for (style, adapter) in &lora_adapters {
+        let mut e = SwitchEngine::new(base.clone());
+        e.switch_to_lora(adapter);
+        let seen = eval_style(&rt, &e.weights, &world, *style, 1.0,
+                              cfg.style_eval_batches, false, cfg.seed)?;
+        let unseen = eval_style(&rt, &e.weights, &world, *style, 1.0,
+                                cfg.style_eval_batches, true, cfg.seed)?;
+        println!("| LoRA {} | {seen:.1} | {unseen:.1} |", style.name());
+    }
+
+    // ---- the α knob (Fig. 6) ---------------------------------------------
+    let (style, adapter) = &shira_adapters[0];
+    println!("\nα sweep on {} (SPS vs α-matched target):", style.name());
+    for alpha in [0.0f32, 0.5, 1.0, 1.5, 2.0] {
+        let mut e = SwitchEngine::new(base.clone());
+        e.switch_to_shira(adapter, alpha);
+        let s = eval_style(&rt, &e.weights, &world, *style, alpha,
+                           cfg.style_eval_batches, false, cfg.seed)?;
+        println!("  α={alpha:3.1}  SPS {s:.1}");
+    }
+
+    // ---- dual-style fusion (Figs 1/4/7) ------------------------------------
+    let fused = fusion::fuse_shira(
+        &[&shira_adapters[0].1, &shira_adapters[1].1],
+        "bluefire+paintings",
+    );
+    let mut e = SwitchEngine::new(base.clone());
+    e.switch_to_shira(&fused, 0.5);
+    let shira_multi = eval_style_multi(&rt, &e.weights, &world,
+                                       cfg.style_eval_batches, cfg.seed)?;
+    let mut lw = base.clone();
+    for (_, l) in &lora_adapters {
+        for t in &l.tensors {
+            lw.get_mut(&t.target).add_outer_product(&t.a, &t.b, 0.5 * l.scale);
+        }
+    }
+    let lora_multi = eval_style_multi(&rt, &lw, &world, cfg.style_eval_batches, cfg.seed)?;
+    println!("\ndual-style generation (both concepts at once):");
+    println!("  SHiRA naive fusion : SPS {shira_multi:.1}");
+    println!("  LoRA fused products: SPS {lora_multi:.1}");
+    println!("paper shape: SHiRA retains both styles; LoRA loses concepts.");
+    Ok(())
+}

@@ -1,0 +1,265 @@
+"""L2 adapter machinery: effective-weight builders + the generic train step.
+
+Every adapter kind reduces to the same interface:
+
+    theta  f32[K]   — the flat trainable vector (layout in params.py)
+    idx    i32[K']  — flat LOCAL indices (sparse kinds only; K' = sparse part)
+    build_effective(base, theta, idx) -> params dict with adapter applied
+
+and the train step is one generic Adam step over `theta`:
+
+    (base..., theta, m, v, idx, step, lr, batch...) ->
+        (theta', m', v', loss)
+
+This is the paper's *memory-efficient PEFT formulation* (Appendix D): for
+SHiRA the trainable leaf is the gathered value vector, so optimizer state is
+O(K)=O(0.01·nm), never O(nm) — the structural source of Table 6's ~16 % peak
+memory saving.  The dense-mask formulation (Appendix C, gradient hooks) is
+also provided (`shira_dense`) and routes its gradient Hadamard through the
+L1 Pallas `masked_grad` kernel.
+"""
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .kernels import masked_grad
+
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Effective-weight builders
+# ---------------------------------------------------------------------------
+
+def _scatter_into(w, local_idx, vals):
+    """W.flat[idx] <- vals (sparse overwrite; the SHiRA fuse)."""
+    n, m = w.shape
+    return w.reshape(-1).at[local_idx].set(vals).reshape(n, m)
+
+
+def effective_shira(base: Dict, theta, idx, layout: List[dict]) -> Dict:
+    """SHiRA: overwrite each target's sparse entries with theta segments."""
+    out = dict(base)
+    for ent in layout:
+        seg = slice(ent["off"], ent["off"] + ent["k"])
+        out[ent["name"]] = _scatter_into(base[ent["name"]], idx[seg], theta[seg])
+    return out
+
+
+def effective_lora(base: Dict, theta, layout: List[dict], scale: float) -> Dict:
+    """LoRA (fused form): W + scale * A @ B for each target."""
+    out = dict(base)
+    for ent in layout:
+        n, m, r = ent["shape"][0], ent["shape"][1], ent["r"]
+        a = theta[ent["a_off"]:ent["a_off"] + ent["a_len"]].reshape(n, r)
+        b = theta[ent["b_off"]:ent["b_off"] + ent["b_len"]].reshape(r, m)
+        out[ent["name"]] = base[ent["name"]] + scale * (a @ b)
+    return out
+
+
+def lora_branches(theta, layout: List[dict]):
+    """(A, B) per target — for the UNFUSED serving mode (Appendix A)."""
+    branches = {}
+    for ent in layout:
+        n, m, r = ent["shape"][0], ent["shape"][1], ent["r"]
+        a = theta[ent["a_off"]:ent["a_off"] + ent["a_len"]].reshape(n, r)
+        b = theta[ent["b_off"]:ent["b_off"] + ent["b_len"]].reshape(r, m)
+        branches[ent["name"]] = (a, b)
+    return branches
+
+
+def _column_normalize(w_dir, mag, eps=1e-6):
+    norm = jnp.sqrt(jnp.sum(w_dir * w_dir, axis=0, keepdims=True) + eps)
+    return mag[None, :] * w_dir / norm
+
+
+def effective_dora(base: Dict, theta, layout: List[dict], scale: float) -> Dict:
+    """DoRA: W' = mag ⊙_col (W + scale·AB) / ||W + scale·AB||_col."""
+    out = dict(base)
+    for ent in layout:
+        n, m, r = ent["shape"][0], ent["shape"][1], ent["r"]
+        a = theta[ent["a_off"]:ent["a_off"] + ent["a_len"]].reshape(n, r)
+        b = theta[ent["b_off"]:ent["b_off"] + ent["b_len"]].reshape(r, m)
+        mag = theta[ent["mag_off"]:ent["mag_off"] + ent["mag_len"]]
+        w_dir = base[ent["name"]] + scale * (a @ b)
+        out[ent["name"]] = _column_normalize(w_dir, mag)
+    return out
+
+
+def effective_shira_dora(base: Dict, theta, idx, layout: List[dict]) -> Dict:
+    """SHiRA-WM-DoRA (paper §4.3.1): sparse high-rank direction + magnitudes.
+
+    The direction matrix is the base weight with 1 % entries overwritten by
+    trainable values; per-column magnitudes are also trainable.  Fused form
+    still only changes ~1 % of entries plus column scales.
+    """
+    out = dict(base)
+    for ent in layout:
+        seg = slice(ent["off"], ent["off"] + ent["k"])
+        mag = theta[ent["mag_off"]:ent["mag_off"] + ent["mag_len"]]
+        w_dir = _scatter_into(base[ent["name"]], idx[seg], theta[seg])
+        out[ent["name"]] = _column_normalize(w_dir, mag)
+    return out
+
+
+def effective_full(theta, cfg) -> Dict:
+    """Full finetuning: theta IS the whole parameter set (pretraining)."""
+    out = {}
+    for ent in P.full_layout(cfg):
+        seg = theta[ent["off"]:ent["off"] + ent["len"]]
+        out[ent["name"]] = seg.reshape(ent["shape"])
+    return out
+
+
+def effective_shira_dense(base: Dict, theta, layout: List[dict]) -> Dict:
+    """Appendix-C formulation: theta holds FULL dense target matrices.
+
+    Gradient sparsification happens in the custom VJP below via the Pallas
+    `masked_grad` kernel; this builder just splices the dense targets in.
+    """
+    out = dict(base)
+    for ent in layout:
+        seg = theta[ent["off"]:ent["off"] + ent["len"]]
+        out[ent["name"]] = seg.reshape(ent["shape"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Adam (bias-corrected) over the flat theta vector
+# ---------------------------------------------------------------------------
+
+def adam_update(theta, g, m, v, step_i32, lr):
+    step = step_i32.astype(jnp.float32) + 1.0
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - jnp.power(ADAM_B1, step))
+    vhat = v / (1.0 - jnp.power(ADAM_B2, step))
+    theta = theta - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return theta, m, v
+
+
+# ---------------------------------------------------------------------------
+# Train-step factories (one per adapter kind x model family)
+# ---------------------------------------------------------------------------
+
+def make_train_step(family: str, kind: str, cfg, acfg):
+    """Return f(base_flat.., theta, m, v, [idx,] step, lr, batch..) -> tuple.
+
+    `family` is "llama" (batch = tokens,targets,mask) or "sd" (batch =
+    z,target).  `kind` is one of full|shira|lora|dora|shira_dora|shira_dense.
+    Loss is computed on the adapter-effective parameters; autodiff is taken
+    w.r.t. theta only — base weights are frozen inputs.
+    """
+    from . import model as M
+
+    spec = cfg.param_spec()
+    n_base = len(spec)
+    scale = acfg.lora_alpha / acfg.lora_rank
+    layouts = {
+        "shira": P.shira_layout(cfg, acfg),
+        "lora": P.lora_layout(cfg, acfg),
+        "dora": P.dora_layout(cfg, acfg),
+        "shira_dora": P.shira_dora_layout(cfg, acfg),
+        "shira_dense": P.probe_layout(cfg),
+    }
+
+    def loss_fn(base, eff_params, batch):
+        if family == "llama":
+            tokens, targets, mask = batch
+            return M.llama_loss(eff_params, tokens, targets, mask, cfg)
+        z, target = batch
+        return M.sd_loss(eff_params, z, target, cfg)
+
+    has_idx = kind in ("shira", "shira_dora")
+
+    def step_fn(*args):
+        base_flat = list(args[:n_base]) if kind != "full" else None
+        rest = args[n_base:] if kind != "full" else args
+        if has_idx:
+            theta, m, v, idx, step, lr = rest[:6]
+            batch = rest[6:]
+        else:
+            theta, m, v, step, lr = rest[:5]
+            batch = rest[5:]
+            idx = None
+        base = P.unflatten_params(base_flat, cfg) if base_flat is not None else None
+        # shira_dense carries the dense {0,1} gradient mask as the final
+        # input, after the data batch.
+        data_batch = batch[:-1] if kind == "shira_dense" else batch
+
+        def objective(th):
+            if kind == "full":
+                eff = effective_full(th, cfg)
+            elif kind == "shira":
+                eff = effective_shira(base, th, idx, layouts["shira"])
+            elif kind == "lora":
+                eff = effective_lora(base, th, layouts["lora"], scale)
+            elif kind == "dora":
+                eff = effective_dora(base, th, layouts["dora"], scale)
+            elif kind == "shira_dora":
+                eff = effective_shira_dora(base, th, idx, layouts["shira_dora"])
+            elif kind == "shira_dense":
+                eff = effective_shira_dense(base, th, layouts["shira_dense"])
+            else:
+                raise ValueError(kind)
+            return loss_fn(base, eff, data_batch)
+
+        loss, g = jax.value_and_grad(objective)(theta)
+        if kind == "shira_dense":
+            # Appendix C: Hadamard gradient masking through the L1 Pallas
+            # kernel, one row-tiled launch per target matrix.  The mask is
+            # the dense {0,1} complement of the sparse index set, provided
+            # as an extra input after the batch.
+            mask_flat = batch[-1]
+            masked = []
+            for ent in layouts["shira_dense"]:
+                seg = slice(ent["off"], ent["off"] + ent["len"])
+                gm = masked_grad(
+                    g[seg].reshape(ent["shape"]),
+                    mask_flat[seg].reshape(ent["shape"]),
+                )
+                masked.append(gm.reshape(-1))
+            g = jnp.concatenate(masked)
+        theta2, m2, v2 = adam_update(theta, g, m, v, step, lr)
+        return theta2, m2, v2, loss
+
+    return step_fn
+
+
+def make_grad_probe(family: str, cfg):
+    """f(base_flat.., batch..) -> (|grad| over targets concat, loss).
+
+    Used by the rust mask calibrator for SHiRA-Grad / SHiRA-SNIP: run a few
+    calibration batches, accumulate |g|, take the per-layer top-k.
+    """
+    from . import model as M
+
+    spec = cfg.param_spec()
+    n_base = len(spec)
+    probe = P.probe_layout(cfg)
+
+    def probe_fn(*args):
+        base_flat = list(args[:n_base])
+        batch = args[n_base:]
+        base = P.unflatten_params(base_flat, cfg)
+
+        def objective(targets_flat):
+            eff = dict(base)
+            for ent in probe:
+                seg = targets_flat[ent["off"]:ent["off"] + ent["len"]]
+                eff[ent["name"]] = seg.reshape(ent["shape"])
+            if family == "llama":
+                tokens, targets, mask = batch
+                return M.llama_loss(eff, tokens, targets, mask, cfg)
+            z, target = batch
+            return M.sd_loss(eff, z, target, cfg)
+
+        t0 = jnp.concatenate([base[e["name"]].reshape(-1) for e in probe])
+        loss, g = jax.value_and_grad(objective)(t0)
+        return jnp.abs(g), loss
+
+    return probe_fn

@@ -1,0 +1,353 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* + write the manifest.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run via `make artifacts` (a no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Python runs ONCE at build time; the rust binary is self-contained after
+artifacts exist and python is never on the request path.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import adapters as A
+from . import configs as C
+from . import model as M
+from . import params as P
+from .kernels import lora_fuse, masked_grad, scatter_update_flat
+
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def base_specs(cfg) -> List[jax.ShapeDtypeStruct]:
+    return [spec(s) for _, s in cfg.param_spec()]
+
+
+def named_base(cfg):
+    return [
+        {"name": n, "dtype": "f32", "shape": list(s)} for n, s in cfg.param_spec()
+    ]
+
+
+def io_entry(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": [int(x) for x in shape]}
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest_artifacts = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, in_specs, input_meta, output_meta):
+        # keep_unused=True: the manifest declares EVERY input, so the
+        # compiled program must too (shira_dense never reads the base
+        # target weights and jit would otherwise prune those parameters).
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest_artifacts[name] = {
+            "file": fname,
+            "inputs": input_meta,
+            "outputs": output_meta,
+            "hlo_bytes": len(text),
+        }
+        print(f"  emitted {name:28s} {len(text)/1024:9.1f} KiB")
+
+
+def build_llama(b: Builder, cfg, acfg):
+    B, T, V = cfg.batch, cfg.seq_len, cfg.vocab
+    base_meta = named_base(cfg)
+    batch_meta = [
+        io_entry("tokens", "i32", [B, T]),
+        io_entry("targets", "i32", [B, T]),
+        io_entry("loss_mask", "f32", [B, T]),
+    ]
+    batch_specs = [spec([B, T], I32), spec([B, T], I32), spec([B, T], F32)]
+
+    # --- forward (fused-mode inference; adapters already applied to weights)
+    def fwd(*args):
+        base = P.unflatten_params(list(args[:-1]), cfg)
+        return (M.llama_fwd(base, args[-1], cfg),)
+
+    b.emit(
+        "llama_fwd", fwd, base_specs(cfg) + [spec([B, T], I32)],
+        base_meta + [io_entry("tokens", "i32", [B, T])],
+        [io_entry("logits", "f32", [B, T, V])],
+    )
+
+    # --- unfused LoRA forward (Appendix A option ii: branches on hot path)
+    k_lora = P.lora_theta_len(cfg, acfg)
+    lora_layout = P.lora_layout(cfg, acfg)
+    scale = acfg.lora_alpha / acfg.lora_rank
+
+    def fwd_unfused(*args):
+        base = P.unflatten_params(list(args[:-2]), cfg)
+        theta, tokens = args[-2], args[-1]
+        branches = A.lora_branches(theta, lora_layout)
+        return (M.llama_fwd(base, tokens, cfg, lora_branch=branches,
+                            lora_scale=scale),)
+
+    b.emit(
+        "llama_fwd_unfused_lora", fwd_unfused,
+        base_specs(cfg) + [spec([k_lora]), spec([B, T], I32)],
+        base_meta + [io_entry("theta", "f32", [k_lora]),
+                     io_entry("tokens", "i32", [B, T])],
+        [io_entry("logits", "f32", [B, T, V])],
+    )
+
+    # --- train steps
+    def train_io(K, with_idx, extra=None):
+        ins = [io_entry("theta", "f32", [K]), io_entry("m", "f32", [K]),
+               io_entry("v", "f32", [K])]
+        specs = [spec([K]), spec([K]), spec([K])]
+        if with_idx:
+            ins.append(io_entry("idx", "i32", [K_sparse]))
+            specs.append(spec([K_sparse], I32))
+        ins += [io_entry("step", "i32", []), io_entry("lr", "f32", [])]
+        specs += [spec([], I32), spec([], F32)]
+        ins += batch_meta
+        specs += batch_specs
+        if extra:
+            for e_meta, e_spec in extra:
+                ins.append(e_meta)
+                specs.append(e_spec)
+        outs = [io_entry("theta_out", "f32", [K]), io_entry("m_out", "f32", [K]),
+                io_entry("v_out", "f32", [K]), io_entry("loss", "f32", [])]
+        return ins, specs, outs
+
+    K_sparse = P.shira_theta_len(cfg, acfg)
+    kinds = {
+        "shira": (P.shira_theta_len(cfg, acfg), True, None),
+        "lora": (P.lora_theta_len(cfg, acfg), False, None),
+        "dora": (P.dora_theta_len(cfg, acfg), False, None),
+        "shira_dora": (P.shira_dora_theta_len(cfg, acfg), True, None),
+        "full": (P.full_theta_len(cfg), False, None),
+        "shira_dense": (
+            sum(e["len"] for e in P.probe_layout(cfg)), False,
+            [(io_entry("dense_mask", "f32",
+                       [sum(e["len"] for e in P.probe_layout(cfg))]),
+              spec([sum(e["len"] for e in P.probe_layout(cfg))]))],
+        ),
+    }
+    for kind, (K, with_idx, extra) in kinds.items():
+        step_fn = A.make_train_step("llama", kind, cfg, acfg)
+        ins, specs_, outs = train_io(K, with_idx, extra)
+        if kind == "full":
+            full_ins, full_specs = ins, specs_
+        else:
+            full_ins = base_meta + ins
+            full_specs = base_specs(cfg) + specs_
+        b.emit(f"llama_train_{kind}", step_fn, full_specs, full_ins, outs)
+
+    # --- grad probe for mask calibration (Grad / SNIP)
+    K_probe = sum(e["len"] for e in P.probe_layout(cfg))
+    probe_fn = A.make_grad_probe("llama", cfg)
+    b.emit(
+        "llama_grad_probe", probe_fn, base_specs(cfg) + batch_specs,
+        base_meta + batch_meta,
+        [io_entry("grad_abs", "f32", [K_probe]), io_entry("loss", "f32", [])],
+    )
+
+
+def build_sd(b: Builder, cfg, acfg):
+    B, dz, dimg = cfg.batch, cfg.d_z, cfg.d_img
+    base_meta = named_base(cfg)
+    batch_meta = [io_entry("z", "f32", [B, dz]),
+                  io_entry("target", "f32", [B, dimg])]
+    batch_specs = [spec([B, dz]), spec([B, dimg])]
+
+    def fwd(*args):
+        base = P.unflatten_params(list(args[:-1]), cfg)
+        return (M.sd_fwd(base, args[-1], cfg),)
+
+    b.emit(
+        "sd_fwd", fwd, base_specs(cfg) + [spec([B, dz])],
+        base_meta + [io_entry("z", "f32", [B, dz])],
+        [io_entry("img", "f32", [B, dimg])],
+    )
+
+    kinds = {
+        "shira": (P.shira_theta_len(cfg, acfg), True),
+        "lora": (P.lora_theta_len(cfg, acfg), False),
+        "full": (P.full_theta_len(cfg), False),
+    }
+    K_sparse = P.shira_theta_len(cfg, acfg)
+    for kind, (K, with_idx) in kinds.items():
+        step_fn = A.make_train_step("sd", kind, cfg, acfg)
+        ins = [io_entry("theta", "f32", [K]), io_entry("m", "f32", [K]),
+               io_entry("v", "f32", [K])]
+        specs_ = [spec([K]), spec([K]), spec([K])]
+        if with_idx:
+            ins.append(io_entry("idx", "i32", [K_sparse]))
+            specs_.append(spec([K_sparse], I32))
+        ins += [io_entry("step", "i32", []), io_entry("lr", "f32", [])]
+        specs_ += [spec([], I32), spec([], F32)]
+        ins += batch_meta
+        specs_ += batch_specs
+        outs = [io_entry("theta_out", "f32", [K]), io_entry("m_out", "f32", [K]),
+                io_entry("v_out", "f32", [K]), io_entry("loss", "f32", [])]
+        if kind == "full":
+            b.emit(f"sd_train_{kind}", step_fn, specs_, ins, outs)
+        else:
+            b.emit(f"sd_train_{kind}", step_fn,
+                   base_specs(cfg) + specs_, named_base(cfg) + ins, outs)
+
+    K_probe = sum(e["len"] for e in P.probe_layout(cfg))
+    probe_fn = A.make_grad_probe("sd", cfg)
+    b.emit(
+        "sd_grad_probe", probe_fn, base_specs(cfg) + batch_specs,
+        named_base(cfg) + batch_meta,
+        [io_entry("grad_abs", "f32", [K_probe]), io_entry("loss", "f32", [])],
+    )
+
+
+def build_pallas_demos(b: Builder, acfg):
+    """Serving-side artifacts that route through the L1 Pallas kernels."""
+    D, K = C.APPLY_DIM, C.APPLY_K
+    r = acfg.lora_rank
+
+    def apply_shira(w, idx, vals):
+        return (scatter_update_flat(w, idx, vals),)
+
+    b.emit(
+        "apply_shira", apply_shira,
+        [spec([D, D]), spec([K], I32), spec([K])],
+        [io_entry("w", "f32", [D, D]), io_entry("idx", "i32", [K]),
+         io_entry("vals", "f32", [K])],
+        [io_entry("w_out", "f32", [D, D])],
+    )
+
+    def fuse(w, a, bb, s):
+        return (lora_fuse(w, a, bb, s),)
+
+    b.emit(
+        "fuse_lora", fuse,
+        [spec([D, D]), spec([D, r]), spec([r, D]), spec([1, 1])],
+        [io_entry("w", "f32", [D, D]), io_entry("a", "f32", [D, r]),
+         io_entry("b", "f32", [r, D]), io_entry("scale", "f32", [1, 1])],
+        [io_entry("w_out", "f32", [D, D])],
+    )
+
+    def mg(g, mask):
+        return (masked_grad(g, mask),)
+
+    b.emit(
+        "masked_grad_op", mg, [spec([D, D]), spec([D, D])],
+        [io_entry("g", "f32", [D, D]), io_entry("mask", "f32", [D, D])],
+        [io_entry("g_out", "f32", [D, D])],
+    )
+
+
+def build_manifest(b: Builder, acfg):
+    llama, sd = C.LLAMA_A, C.SD
+    manifest = {
+        "version": 1,
+        "artifacts": b.manifest_artifacts,
+        "adapter": {
+            "shira_frac": acfg.shira_frac,
+            "lora_rank": acfg.lora_rank,
+            "lora_alpha": acfg.lora_alpha,
+            "lora_scale": acfg.lora_alpha / acfg.lora_rank,
+            "adam": {"b1": A.ADAM_B1, "b2": A.ADAM_B2, "eps": A.ADAM_EPS},
+        },
+        "models": {
+            "llama": {
+                "vocab": llama.vocab, "d_model": llama.d_model,
+                "n_heads": llama.n_heads, "n_layers": llama.n_layers,
+                "d_ff": llama.d_ff, "seq_len": llama.seq_len,
+                "batch": llama.batch,
+                "params": [{"name": n, "shape": list(s)}
+                           for n, s in llama.param_spec()],
+                "targets": llama.target_names(),
+                "layout": {
+                    "shira": P.shira_layout(llama, acfg),
+                    "lora": P.lora_layout(llama, acfg),
+                    "dora": P.dora_layout(llama, acfg),
+                    "shira_dora": P.shira_dora_layout(llama, acfg),
+                    "probe": P.probe_layout(llama),
+                    "full": P.full_layout(llama),
+                },
+                "theta_len": {
+                    "shira": P.shira_theta_len(llama, acfg),
+                    "lora": P.lora_theta_len(llama, acfg),
+                    "dora": P.dora_theta_len(llama, acfg),
+                    "shira_dora": P.shira_dora_theta_len(llama, acfg),
+                    "full": P.full_theta_len(llama),
+                    "shira_dense": sum(e["len"] for e in P.probe_layout(llama)),
+                },
+            },
+            "sd": {
+                "d_z": sd.d_z, "d_hidden": sd.d_hidden,
+                "n_hidden": sd.n_hidden, "d_img": sd.d_img, "batch": sd.batch,
+                "params": [{"name": n, "shape": list(s)}
+                           for n, s in sd.param_spec()],
+                "targets": sd.target_names(),
+                "layout": {
+                    "shira": P.shira_layout(sd, acfg),
+                    "lora": P.lora_layout(sd, acfg),
+                    "probe": P.probe_layout(sd),
+                    "full": P.full_layout(sd),
+                },
+                "theta_len": {
+                    "shira": P.shira_theta_len(sd, acfg),
+                    "lora": P.lora_theta_len(sd, acfg),
+                    "full": P.full_theta_len(sd),
+                },
+            },
+        },
+        "pallas_demo": {"dim": C.APPLY_DIM, "k": C.APPLY_K,
+                        "rank": acfg.lora_rank},
+    }
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    acfg = C.ADAPTER
+    b = Builder(args.out)
+    print("AOT: lowering L2 graphs to HLO text")
+    build_llama(b, C.LLAMA_A, acfg)
+    build_sd(b, C.SD, acfg)
+    build_pallas_demos(b, acfg)
+    manifest = build_manifest(b, acfg)
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"  wrote manifest.json ({os.path.getsize(path)} bytes), "
+          f"{len(b.manifest_artifacts)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Build-time configuration shared by the L2 model, the AOT pipeline and the
+python test-suite.
+
+Everything here is *static at trace time*: the rust runtime learns the
+resulting shapes/orders from `artifacts/manifest.json`, never from this file.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class LlamaConfig:
+    """`nanollama` — the GPT-style stand-in for LLaMA-7B / LLaMA2-7B.
+
+    The paper's claims are relative (SHiRA vs LoRA vs DoRA at matched
+    %params); see DESIGN.md §3 for the substitution argument.
+    """
+
+    name: str = "llama_a"
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 3
+    d_ff: int = 256  # 2x d_model
+    seq_len: int = 32
+    batch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_spec(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list — THE canonical parameter order.
+
+        The rust side feeds literals in exactly this order (recorded in the
+        manifest); keep it deterministic and append-only.
+        """
+        spec: List[Tuple[str, Tuple[int, ...]]] = [
+            ("embed", (self.vocab, self.d_model)),
+            ("pos", (self.seq_len, self.d_model)),
+        ]
+        for i in range(self.n_layers):
+            spec += [
+                (f"l{i}.ln1", (self.d_model,)),
+                (f"l{i}.wq", (self.d_model, self.d_model)),
+                (f"l{i}.wk", (self.d_model, self.d_model)),
+                (f"l{i}.wv", (self.d_model, self.d_model)),
+                (f"l{i}.wo", (self.d_model, self.d_model)),
+                (f"l{i}.ln2", (self.d_model,)),
+                (f"l{i}.w_up", (self.d_model, self.d_ff)),
+                (f"l{i}.w_down", (self.d_ff, self.d_model)),
+            ]
+        spec += [
+            ("lnf", (self.d_model,)),
+            ("head", (self.d_model, self.vocab)),
+        ]
+        return spec
+
+    def target_names(self) -> List[str]:
+        """Adapter target modules — q,k,v,up,down per layer (paper Table 8)."""
+        names = []
+        for i in range(self.n_layers):
+            names += [f"l{i}.wq", f"l{i}.wk", f"l{i}.wv", f"l{i}.w_up", f"l{i}.w_down"]
+        return names
+
+
+@dataclass(frozen=True)
+class SdConfig:
+    """`nanosd` — MLP generator stand-in for Stable-Diffusion style transfer.
+
+    Maps a content latent z to an "image" feature vector; style adapters
+    shift the output distribution while content identity must survive.
+    """
+
+    name: str = "sd"
+    d_z: int = 16
+    d_hidden: int = 96
+    n_hidden: int = 3
+    d_img: int = 48
+    batch: int = 16
+
+    def param_spec(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        spec: List[Tuple[str, Tuple[int, ...]]] = [("w_in", (self.d_z, self.d_hidden))]
+        for i in range(self.n_hidden - 1):
+            spec.append((f"w_h{i}", (self.d_hidden, self.d_hidden)))
+        spec.append(("w_out", (self.d_hidden, self.d_img)))
+        return spec
+
+    def target_names(self) -> List[str]:
+        return [name for name, _ in self.param_spec()]
+
+
+@dataclass(frozen=True)
+class AdapterConfig:
+    """Sparsity / rank knobs shared across adapter kinds."""
+
+    # Parameter-matched regime (paper Table 2: SHiRA 1.0% vs LoRA 0.83%):
+    # at d_model=128, rank-2 LoRA gives ~1.6% trainable params and a 2.5%
+    # SHiRA mask gives ~1.5%.
+    shira_frac: float = 0.025  # fraction of each target matrix trainable
+    lora_rank: int = 2
+    lora_alpha: float = 4.0  # effective scale = lora_alpha / lora_rank
+
+
+# Default build configs.  Two llama bases (different pretrain seed) stand in
+# for LLaMA-7B vs LLaMA2-7B (Tables 2 vs 3).
+LLAMA_A = LlamaConfig(name="llama_a")
+LLAMA_B = LlamaConfig(name="llama_b")
+SD = SdConfig()
+ADAPTER = AdapterConfig()
+
+# Serving-side pallas demo artifacts (exercise L1 kernels in real HLO).
+APPLY_DIM = 512
+APPLY_K = int(APPLY_DIM * APPLY_DIM * 0.02)

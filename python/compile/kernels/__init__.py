@@ -1,0 +1,20 @@
+"""L1 Pallas kernels (interpret=True) and their pure-jnp oracle."""
+
+from .lora_fuse import lora_fuse, pick_tiles
+from .masked_grad import masked_grad
+from .scatter_update import (
+    partition_updates,
+    pick_block_rows,
+    scatter_update,
+    scatter_update_flat,
+)
+
+__all__ = [
+    "lora_fuse",
+    "pick_tiles",
+    "masked_grad",
+    "partition_updates",
+    "pick_block_rows",
+    "scatter_update",
+    "scatter_update_flat",
+]

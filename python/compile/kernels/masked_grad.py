@@ -1,0 +1,39 @@
+"""L1 Pallas kernel: Hadamard gradient masking `g' = g * M` (paper Fig. 2b).
+
+The dense-mask formulation of SHiRA training: after backprop, gradients are
+multiplied elementwise by a {0,1} mask so only the sparse trainable subset
+moves.  (The memory-efficient train step in model.py avoids the dense mask
+entirely by differentiating w.r.t. the gathered value vector — this kernel
+implements the paper's *gradient-hook* formulation, Appendix C, and is used
+by the `masked_grad` artifact + ablation benches.)
+
+TPU mapping: pure VPU elementwise over (block_rows, m) tiles.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .scatter_update import pick_block_rows
+
+
+def _mask_kernel(g_ref, m_ref, o_ref):
+    o_ref[...] = g_ref[...] * m_ref[...]
+
+
+def masked_grad(g, mask, *, block_rows: int | None = None):
+    """Elementwise `g * mask` over row tiles; shapes (n, m)."""
+    n, m = g.shape
+    if block_rows is None:
+        block_rows = pick_block_rows(n, m)
+    return pl.pallas_call(
+        _mask_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), g.dtype),
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+        interpret=True,
+    )(g, mask)

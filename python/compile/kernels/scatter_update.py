@@ -1,0 +1,164 @@
+"""L1 Pallas kernel: sparse scatter-overwrite of a weight matrix.
+
+This is the paper's `scatter_op` hot path (§3.2, Appendix B): applying a
+SHiRA adapter means overwriting the 1-2% of base-weight entries named by the
+adapter's flat indices — NOT a dense `W + AB` fuse.
+
+TPU mapping (DESIGN.md §4): the grid walks row-tiles of `W`; each program
+moves one `(block_rows, m)` tile HBM→VMEM via BlockSpec, applies the updates
+that land in its tile, and writes the tile back.  The host pre-partitions the
+(sorted) update stream into per-tile padded segments so the kernel body is a
+single vectorized masked scatter — no atomics, no dynamic shapes.  Padding
+slots carry the local index `block_rows*m` (one past the tile), which
+`mode="drop"` discards.
+
+VMEM per program: block_rows*m*4 B (tile) + kmax*8 B (idx+val) — block_rows
+is chosen so this stays well under the ~16 MiB VMEM budget.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU performance is *estimated* in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _masked_overwrite(w, idx, vals, tile_elems, m):
+    """Exact overwrite of `w.flat[idx] <- vals`, ignoring entries whose index
+    is outside [0, tile_elems).
+
+    Implementation note: `.at[].set(mode="drop")` mis-handles out-of-bounds
+    rows under pallas interpret mode, so we use a padding-safe scatter-add
+    formulation instead: count real hits per cell and sum real values per
+    cell, then select.  REQUIRES unique in-bounds indices (SHiRA masks are
+    unique by construction); padded/foreign entries contribute zero.
+    """
+    oob = (idx < 0) | (idx >= tile_elems)
+    safe = jnp.where(oob, 0, idx)
+    r = safe // m
+    c = safe % m
+    hit = jnp.where(oob, 0.0, 1.0).astype(w.dtype)
+    cnt = jnp.zeros_like(w).at[r, c].add(hit)
+    sval = jnp.zeros_like(w).at[r, c].add(jnp.where(oob, 0.0, vals))
+    return jnp.where(cnt > 0, sval, w)
+
+
+def _scatter_kernel(w_ref, idx_ref, val_ref, o_ref, *, m, block_rows):
+    """One grid step: overwrite this row-tile at the tile-local flat indices."""
+    w = w_ref[...]
+    idx = idx_ref[...].reshape(-1)  # (kmax,) tile-local flat indices, padded OOB
+    vals = val_ref[...].reshape(-1)
+    o_ref[...] = _masked_overwrite(w, idx, vals, block_rows * m, m)
+
+
+def pick_block_rows(n: int, m: int, vmem_budget_bytes: int = 4 * 1024 * 1024) -> int:
+    """Choose the row-tile height so a tile fits the VMEM budget."""
+    rows = max(1, vmem_budget_bytes // (4 * m))
+    rows = min(rows, n)
+    # Round down to a divisor of n to keep the grid exact.
+    while n % rows != 0:
+        rows -= 1
+    return rows
+
+
+def partition_updates(idx: np.ndarray, vals: np.ndarray, n: int, m: int,
+                      block_rows: int):
+    """Host-side prep: split a sorted flat-index update stream into per-tile
+    padded segments.
+
+    Returns (tile_idx[g, kmax] int32, tile_val[g, kmax] f32) where g = n //
+    block_rows and kmax is the max per-tile population (shared static shape).
+    Padding uses local index block_rows*m (OOB => dropped by the kernel).
+    """
+    assert n % block_rows == 0
+    g = n // block_rows
+    order = np.argsort(idx, kind="stable")
+    idx = np.asarray(idx)[order].astype(np.int64)
+    vals = np.asarray(vals)[order].astype(np.float32)
+    tile_of = idx // (block_rows * m)
+    counts = np.bincount(tile_of, minlength=g)
+    kmax = max(1, int(counts.max()) if len(idx) else 1)
+    pad_idx = block_rows * m  # one past the tile => drop
+    tile_idx = np.full((g, kmax), pad_idx, dtype=np.int32)
+    tile_val = np.zeros((g, kmax), dtype=np.float32)
+    start = 0
+    for t in range(g):
+        cnt = int(counts[t])
+        seg = slice(start, start + cnt)
+        tile_idx[t, :cnt] = (idx[seg] - t * block_rows * m).astype(np.int32)
+        tile_val[t, :cnt] = vals[seg]
+        start += cnt
+    return tile_idx, tile_val
+
+
+def scatter_update(w, tile_idx, tile_val, *, block_rows: int):
+    """`W.at[flat idx] <- vals` over row-tiles.  See `partition_updates`.
+
+    Args:
+      w: (n, m) f32 base weight.
+      tile_idx: (g, kmax) i32 tile-local flat indices (padded OOB).
+      tile_val: (g, kmax) f32 values.
+    Returns (n, m) updated weight.
+    """
+    n, m = w.shape
+    g, kmax = tile_idx.shape
+    assert g * block_rows == n, (g, block_rows, n)
+    kernel = functools.partial(_scatter_kernel, m=m, block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), w.dtype),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, kmax), lambda i: (i, 0)),
+            pl.BlockSpec((1, kmax), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+        interpret=True,
+    )(w, tile_idx, tile_val)
+
+
+def scatter_update_flat(w, idx, vals, *, block_rows: int | None = None):
+    """Convenience wrapper for *traced* use with host-static indices.
+
+    When indices are only known at runtime (the usual case for the rust
+    serving path), prefer `partition_updates` + `scatter_update` so the
+    per-tile segmentation happens on the host.  This wrapper accepts runtime
+    `idx` by scattering per-tile with a dense mask — used by the
+    `apply_shira` artifact where k is static but the index *values* are
+    runtime inputs: every tile receives the full update list and drops
+    entries that fall outside it.
+    """
+    n, m = w.shape
+    if block_rows is None:
+        block_rows = pick_block_rows(n, m)
+    g = n // block_rows
+
+    def kernel(w_ref, idx_ref, val_ref, o_ref):
+        t = pl.program_id(0)
+        w_tile = w_ref[...]
+        idx_all = idx_ref[...].reshape(-1)
+        vals_all = val_ref[...].reshape(-1)
+        # Entries outside this tile become OOB (negative or >= tile size)
+        # and are ignored by the padding-safe overwrite.
+        local = idx_all - t * block_rows * m
+        o_ref[...] = _masked_overwrite(w_tile, local, vals_all,
+                                       block_rows * m, m)
+
+    k = idx.shape[0]
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), w.dtype),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+        interpret=True,
+    )(w, idx, vals)

@@ -1,0 +1,98 @@
+"""L2: the JAX compute graphs — `nanollama` (LLaMA stand-in) and `nanosd`
+(Stable-Diffusion stand-in) forward passes and losses.
+
+Both models are written against a plain name->array dict; adapter-effective
+weights are produced by `adapters.py` (scatter / low-rank fuse / DoRA
+decomposition) BEFORE the forward, so the forward itself is adapter-agnostic
+— exactly the fused-inference dataflow of the paper.  The one exception is
+`llama_fwd` with `lora_branch`, which models the paper's UNFUSED LoRA mode
+(extra `(x@A)@B` branches on the request path, Appendix A option ii).
+"""
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    scale = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x * scale * gain
+
+
+def _dense(x, params, name, lora_branch, scale):
+    """x @ W, plus the unfused LoRA branch when serving in unfused mode."""
+    y = x @ params[name]
+    if lora_branch is not None and name in lora_branch:
+        a, b = lora_branch[name]
+        y = y + scale * ((x @ a) @ b)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# nanollama
+# ---------------------------------------------------------------------------
+
+def llama_fwd(
+    params: Dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,
+    cfg,
+    lora_branch: Optional[Dict[str, Tuple[jnp.ndarray, jnp.ndarray]]] = None,
+    lora_scale: float = 1.0,
+) -> jnp.ndarray:
+    """Causal transformer forward.  tokens: i32[B,T] -> logits f32[B,T,V]."""
+    B, T = tokens.shape
+    h = params["embed"][tokens] + params["pos"][None, :T, :]
+    causal = jnp.tril(jnp.ones((T, T), jnp.float32))
+    neg = jnp.float32(-1e9)
+    for i in range(cfg.n_layers):
+        pre = rmsnorm(h, params[f"l{i}.ln1"])
+        q = _dense(pre, params, f"l{i}.wq", lora_branch, lora_scale)
+        k = _dense(pre, params, f"l{i}.wk", lora_branch, lora_scale)
+        v = _dense(pre, params, f"l{i}.wv", lora_branch, lora_scale)
+        hd = cfg.head_dim
+        q = q.reshape(B, T, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(B, T, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(B, T, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+        att = jnp.where(causal[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(B, T, cfg.d_model)
+        h = h + ctx @ params[f"l{i}.wo"]
+        pre2 = rmsnorm(h, params[f"l{i}.ln2"])
+        up = _dense(pre2, params, f"l{i}.w_up", lora_branch, lora_scale)
+        h = h + _dense(jax.nn.silu(up), params, f"l{i}.w_down", lora_branch, lora_scale)
+    h = rmsnorm(h, params["lnf"])
+    return h @ params["head"]
+
+
+def llama_loss(params, tokens, targets, mask, cfg, **fwd_kw) -> jnp.ndarray:
+    """Masked token-level cross-entropy (mask selects answer positions)."""
+    logits = llama_fwd(params, tokens, cfg, **fwd_kw)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt_logit
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# nanosd
+# ---------------------------------------------------------------------------
+
+def sd_fwd(params: Dict[str, jnp.ndarray], z: jnp.ndarray, cfg) -> jnp.ndarray:
+    """MLP generator: content latent z f32[B,d_z] -> image f32[B,d_img]."""
+    h = jax.nn.gelu(z @ params["w_in"])
+    for i in range(cfg.n_hidden - 1):
+        h = jax.nn.gelu(h @ params[f"w_h{i}"]) + h  # residual hidden blocks
+    return h @ params["w_out"]
+
+
+def sd_loss(params, z, target, cfg) -> jnp.ndarray:
+    """Style-transfer finetuning objective: MSE to the styled target image."""
+    img = sd_fwd(params, z, cfg)
+    return jnp.mean((img - target) ** 2)

@@ -1,0 +1,157 @@
+"""Parameter initialization, canonical flattening, and adapter geometry.
+
+The rust runtime never sees python pytrees: every artifact takes parameters
+as a flat, ordered list of arrays (order = `cfg.param_spec()`), and every
+adapter's trainable state is a SINGLE flat f32 vector `theta` whose internal
+layout (per-target segments, static offsets) is recorded in the manifest.
+"""
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, seed: int) -> Dict[str, jnp.ndarray]:
+    """Deterministic scaled-gaussian init for any param_spec model."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in cfg.param_spec():
+        if len(shape) == 1:
+            params[name] = jnp.ones(shape, jnp.float32)  # norm gains
+        else:
+            fan_in = shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            params[name] = jnp.asarray(
+                rng.normal(0.0, std, size=shape), jnp.float32
+            )
+    return params
+
+
+def flatten_params(params: Dict[str, jnp.ndarray], cfg) -> List[jnp.ndarray]:
+    return [params[name] for name, _ in cfg.param_spec()]
+
+
+def unflatten_params(flat: List[jnp.ndarray], cfg) -> Dict[str, jnp.ndarray]:
+    return {name: arr for (name, _), arr in zip(cfg.param_spec(), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Adapter geometry: how theta's flat layout maps onto target matrices
+# ---------------------------------------------------------------------------
+
+def shira_k(shape: Tuple[int, int], frac: float) -> int:
+    """Trainable entries for one target = ceil(frac * numel), >= 1."""
+    return max(1, int(round(frac * shape[0] * shape[1])))
+
+
+def shira_layout(cfg, acfg) -> List[dict]:
+    """Per-target segments of the SHiRA theta/idx vectors.
+
+    Each entry: {name, shape, k, off} — theta[off:off+k] are the trainable
+    values for target `name`, idx[off:off+k] their LOCAL flat indices.
+    """
+    shapes = dict(cfg.param_spec())
+    layout, off = [], 0
+    for name in cfg.target_names():
+        n, m = shapes[name]
+        k = shira_k((n, m), acfg.shira_frac)
+        layout.append({"name": name, "shape": [n, m], "k": k, "off": off})
+        off += k
+    return layout
+
+
+def lora_layout(cfg, acfg) -> List[dict]:
+    """Per-target segments of the LoRA theta vector: [A (n*r) | B (r*m)]."""
+    shapes = dict(cfg.param_spec())
+    r = acfg.lora_rank
+    layout, off = [], 0
+    for name in cfg.target_names():
+        n, m = shapes[name]
+        layout.append(
+            {"name": name, "shape": [n, m], "r": r,
+             "a_off": off, "a_len": n * r,
+             "b_off": off + n * r, "b_len": r * m}
+        )
+        off += n * r + r * m
+    return layout
+
+
+def dora_layout(cfg, acfg) -> List[dict]:
+    """LoRA layout + a per-output-column magnitude vector per target."""
+    layout = lora_layout(cfg, acfg)
+    off = lora_theta_len(cfg, acfg)
+    out = []
+    for ent in layout:
+        ent = dict(ent)
+        m = ent["shape"][1]
+        ent["mag_off"] = off
+        ent["mag_len"] = m
+        off += m
+        out.append(ent)
+    return out
+
+
+def shira_dora_layout(cfg, acfg) -> List[dict]:
+    """SHiRA-WM-DoRA: sparse direction values + per-column magnitudes."""
+    layout = shira_layout(cfg, acfg)
+    off = shira_theta_len(cfg, acfg)
+    out = []
+    for ent in layout:
+        ent = dict(ent)
+        m = ent["shape"][1]
+        ent["mag_off"] = off
+        ent["mag_len"] = m
+        off += m
+        out.append(ent)
+    return out
+
+
+def shira_theta_len(cfg, acfg) -> int:
+    return sum(e["k"] for e in shira_layout(cfg, acfg))
+
+
+def lora_theta_len(cfg, acfg) -> int:
+    return sum(e["a_len"] + e["b_len"] for e in lora_layout(cfg, acfg))
+
+
+def dora_theta_len(cfg, acfg) -> int:
+    return lora_theta_len(cfg, acfg) + sum(
+        dict(cfg.param_spec())[n][1] for n in cfg.target_names()
+    )
+
+
+def shira_dora_theta_len(cfg, acfg) -> int:
+    return shira_theta_len(cfg, acfg) + sum(
+        dict(cfg.param_spec())[n][1] for n in cfg.target_names()
+    )
+
+
+def full_theta_len(cfg) -> int:
+    return sum(int(np.prod(s)) for _, s in cfg.param_spec())
+
+
+def full_layout(cfg) -> List[dict]:
+    layout, off = [], 0
+    for name, shape in cfg.param_spec():
+        ln = int(np.prod(shape))
+        layout.append({"name": name, "shape": list(shape), "off": off, "len": ln})
+        off += ln
+    return layout
+
+
+def probe_layout(cfg) -> List[dict]:
+    """Layout of the grad-probe output vector (dense grads over targets)."""
+    shapes = dict(cfg.param_spec())
+    layout, off = [], 0
+    for name in cfg.target_names():
+        n, m = shapes[name]
+        layout.append({"name": name, "shape": [n, m], "off": off, "len": n * m})
+        off += n * m
+    return layout

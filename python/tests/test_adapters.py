@@ -1,0 +1,369 @@
+"""Adapter machinery: effective-weight builders, gradient equivalences and
+the generic Adam train step.
+
+The two load-bearing equivalences for the paper:
+  * sparse-leaf gradient == dense gradient gathered at the mask (the
+    memory-efficient App.-D formulation computes exactly the App.-C
+    gradient-hook update), and
+  * fused LoRA forward == unfused LoRA-branch forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import adapters as A, configs as C, model as M, params as P
+
+
+CFG, ACFG = C.LLAMA_A, C.ADAPTER
+
+
+@pytest.fixture(scope="module")
+def base():
+    return P.init_params(CFG, seed=21)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(33)
+    x = rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)).astype(np.int32)
+    y = rng.integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)).astype(np.int32)
+    mask = np.zeros((CFG.batch, CFG.seq_len), np.float32)
+    mask[:, -1] = 1.0
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask)
+
+
+def random_mask_idx(seed=0):
+    rng = np.random.default_rng(seed)
+    lay = P.shira_layout(CFG, ACFG)
+    idx = np.concatenate([
+        rng.choice(e["shape"][0] * e["shape"][1], e["k"], replace=False)
+        for e in lay
+    ]).astype(np.int32)
+    return lay, jnp.asarray(idx)
+
+
+def gather_theta(base, lay, idx):
+    segs = []
+    for e in lay:
+        seg = idx[e["off"]:e["off"] + e["k"]]
+        segs.append(jnp.asarray(base[e["name"]]).reshape(-1)[seg])
+    return jnp.concatenate(segs)
+
+
+# ---------------------------------------------------------------------------
+# Effective-weight builders
+# ---------------------------------------------------------------------------
+
+class TestEffectiveShira:
+    def test_identity_when_theta_is_base(self, base):
+        lay, idx = random_mask_idx(0)
+        theta = gather_theta(base, lay, idx)
+        eff = A.effective_shira(base, theta, idx, lay)
+        for name in base:
+            np.testing.assert_array_equal(np.asarray(eff[name]),
+                                          np.asarray(base[name]))
+
+    def test_changes_only_masked_entries(self, base):
+        lay, idx = random_mask_idx(1)
+        theta = gather_theta(base, lay, idx) + 1.0
+        eff = A.effective_shira(base, theta, idx, lay)
+        for e in lay:
+            delta = np.abs(np.asarray(eff[e["name"]]) -
+                           np.asarray(base[e["name"]])).reshape(-1)
+            changed = np.nonzero(delta > 0)[0]
+            want = np.sort(np.asarray(idx[e["off"]:e["off"] + e["k"]]))
+            np.testing.assert_array_equal(np.sort(changed), want)
+            np.testing.assert_allclose(delta[changed], 1.0, rtol=1e-6)
+
+    def test_non_target_params_untouched(self, base):
+        lay, idx = random_mask_idx(2)
+        theta = gather_theta(base, lay, idx) + 5.0
+        eff = A.effective_shira(base, theta, idx, lay)
+        targets = set(CFG.target_names())
+        for name in base:
+            if name not in targets:
+                assert eff[name] is base[name]
+
+
+class TestEffectiveLora:
+    def test_zero_b_is_identity(self, base):
+        lay = P.lora_layout(CFG, ACFG)
+        K = P.lora_theta_len(CFG, ACFG)
+        rng = np.random.default_rng(0)
+        theta = np.zeros(K, np.float32)
+        for e in lay:  # A random, B zero -> AB = 0
+            theta[e["a_off"]:e["a_off"] + e["a_len"]] = rng.normal(
+                0, 1, e["a_len"])
+        eff = A.effective_lora(base, jnp.asarray(theta), lay, scale=2.0)
+        for name in CFG.target_names():
+            np.testing.assert_array_equal(np.asarray(eff[name]),
+                                          np.asarray(base[name]))
+
+    def test_matches_manual_ab(self, base):
+        lay = P.lora_layout(CFG, ACFG)
+        K = P.lora_theta_len(CFG, ACFG)
+        rng = np.random.default_rng(4)
+        theta = rng.normal(0, 0.1, K).astype(np.float32)
+        scale = 1.7
+        eff = A.effective_lora(base, jnp.asarray(theta), lay, scale=scale)
+        e = lay[0]
+        n, m, r = e["shape"][0], e["shape"][1], e["r"]
+        a = theta[e["a_off"]:e["a_off"] + e["a_len"]].reshape(n, r)
+        b = theta[e["b_off"]:e["b_off"] + e["b_len"]].reshape(r, m)
+        want = np.asarray(base[e["name"]]) + scale * a @ b
+        np.testing.assert_allclose(np.asarray(eff[e["name"]]), want,
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_fused_equals_unfused_forward(self, base, batch):
+        """Paper Appendix A: fused W+sAB forward == LoRA-branch forward."""
+        lay = P.lora_layout(CFG, ACFG)
+        K = P.lora_theta_len(CFG, ACFG)
+        rng = np.random.default_rng(5)
+        theta = jnp.asarray(rng.normal(0, 0.05, K), jnp.float32)
+        scale = ACFG.lora_alpha / ACFG.lora_rank
+        x, _, _ = batch
+        eff = A.effective_lora(base, theta, lay, scale)
+        fused = M.llama_fwd(eff, x, CFG)
+        branches = A.lora_branches(theta, lay)
+        unfused = M.llama_fwd(base, x, CFG, lora_branch=branches,
+                              lora_scale=scale)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class TestEffectiveDora:
+    def test_column_norms_equal_mag(self, base):
+        lay = P.dora_layout(CFG, ACFG)
+        K = P.dora_theta_len(CFG, ACFG)
+        rng = np.random.default_rng(6)
+        theta = np.zeros(K, np.float32)
+        for e in lay:
+            theta[e["a_off"]:e["a_off"] + e["a_len"]] = rng.normal(
+                0, 0.1, e["a_len"])
+            theta[e["b_off"]:e["b_off"] + e["b_len"]] = rng.normal(
+                0, 0.1, e["b_len"])
+            theta[e["mag_off"]:e["mag_off"] + e["mag_len"]] = rng.uniform(
+                0.5, 2.0, e["mag_len"])
+        eff = A.effective_dora(base, jnp.asarray(theta), lay, scale=0.5)
+        e = lay[0]
+        w = np.asarray(eff[e["name"]])
+        mag = theta[e["mag_off"]:e["mag_off"] + e["mag_len"]]
+        np.testing.assert_allclose(np.linalg.norm(w, axis=0), np.abs(mag),
+                                   rtol=1e-3)
+
+    def test_identity_at_init(self, base):
+        """B=0 and mag=||W||_col reproduces the base weight (DoRA init)."""
+        lay = P.dora_layout(CFG, ACFG)
+        K = P.dora_theta_len(CFG, ACFG)
+        theta = np.zeros(K, np.float32)
+        rng = np.random.default_rng(7)
+        for e in lay:
+            theta[e["a_off"]:e["a_off"] + e["a_len"]] = rng.normal(
+                0, 0.1, e["a_len"])
+            w = np.asarray(base[e["name"]])
+            theta[e["mag_off"]:e["mag_off"] + e["mag_len"]] = np.sqrt(
+                (w * w).sum(0) + 1e-6)
+        eff = A.effective_dora(base, jnp.asarray(theta), lay, scale=0.5)
+        for e in lay:
+            np.testing.assert_allclose(np.asarray(eff[e["name"]]),
+                                       np.asarray(base[e["name"]]),
+                                       rtol=1e-4, atol=1e-5)
+
+
+class TestEffectiveShiraDora:
+    def test_sparse_direction_and_mag(self, base):
+        lay = P.shira_dora_layout(CFG, ACFG)
+        Ks = P.shira_theta_len(CFG, ACFG)
+        K = P.shira_dora_theta_len(CFG, ACFG)
+        _, idx = random_mask_idx(8)
+        theta = np.zeros(K, np.float32)
+        # direction values = base values, mag = column norms -> identity
+        segs = gather_theta(base, P.shira_layout(CFG, ACFG), idx)
+        theta[:Ks] = np.asarray(segs)
+        for e in lay:
+            w = np.asarray(base[e["name"]])
+            theta[e["mag_off"]:e["mag_off"] + e["mag_len"]] = np.sqrt(
+                (w * w).sum(0) + 1e-6)
+        eff = A.effective_shira_dora(base, jnp.asarray(theta), idx, lay)
+        for e in lay:
+            np.testing.assert_allclose(np.asarray(eff[e["name"]]),
+                                       np.asarray(base[e["name"]]),
+                                       rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Gradient equivalence: sparse leaf == dense-grad gather (App. C == App. D)
+# ---------------------------------------------------------------------------
+
+def test_sparse_grad_equals_gathered_dense_grad(base, batch):
+    lay, idx = random_mask_idx(9)
+    theta = gather_theta(base, lay, idx)
+    x, y, mask = batch
+
+    def sparse_obj(th):
+        eff = A.effective_shira(base, th, idx, lay)
+        return M.llama_loss(eff, x, y, mask, CFG)
+
+    g_sparse = jax.grad(sparse_obj)(theta)
+
+    probe = P.probe_layout(CFG)
+
+    def dense_obj(flat):
+        eff = dict(base)
+        for e in probe:
+            seg = flat[e["off"]:e["off"] + e["len"]]
+            eff[e["name"]] = seg.reshape(e["shape"])
+        return M.llama_loss(eff, x, y, mask, CFG)
+
+    t0 = jnp.concatenate([jnp.asarray(base[e["name"]]).reshape(-1)
+                          for e in probe])
+    g_dense = jax.grad(dense_obj)(t0)
+
+    # gather dense grad at the mask indices, per target
+    gathered = []
+    probe_off = {e["name"]: e["off"] for e in probe}
+    for e in lay:
+        seg = idx[e["off"]:e["off"] + e["k"]]
+        gathered.append(g_dense[probe_off[e["name"]] + seg])
+    g_gathered = jnp.concatenate(gathered)
+    np.testing.assert_allclose(np.asarray(g_sparse), np.asarray(g_gathered),
+                               rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+class TestAdam:
+    def test_zero_grad_no_move(self):
+        theta = jnp.asarray([1.0, -2.0])
+        t2, m2, v2 = A.adam_update(theta, jnp.zeros(2), jnp.zeros(2),
+                                   jnp.zeros(2), jnp.int32(0), jnp.float32(0.1))
+        np.testing.assert_array_equal(np.asarray(t2), np.asarray(theta))
+
+    def test_first_step_magnitude_is_lr(self):
+        """With bias correction, |Δθ| == lr on step 0 (up to eps)."""
+        theta = jnp.zeros(3)
+        g = jnp.asarray([1.0, -0.5, 2.0])
+        t2, _, _ = A.adam_update(theta, g, jnp.zeros(3), jnp.zeros(3),
+                                 jnp.int32(0), jnp.float32(0.01))
+        np.testing.assert_allclose(np.abs(np.asarray(t2)), 0.01, rtol=1e-3)
+
+    def test_matches_reference_sequence(self):
+        rng = np.random.default_rng(0)
+        theta = jnp.asarray(rng.normal(size=5), jnp.float32)
+        m = jnp.zeros(5)
+        v = jnp.zeros(5)
+        ref_t, ref_m, ref_v = np.asarray(theta), np.zeros(5), np.zeros(5)
+        lr = 0.02
+        for step in range(4):
+            g = rng.normal(size=5).astype(np.float32)
+            theta, m, v = A.adam_update(theta, jnp.asarray(g), m, v,
+                                        jnp.int32(step), jnp.float32(lr))
+            ref_m = 0.9 * ref_m + 0.1 * g
+            ref_v = 0.999 * ref_v + 0.001 * g * g
+            mh = ref_m / (1 - 0.9 ** (step + 1))
+            vh = ref_v / (1 - 0.999 ** (step + 1))
+            ref_t = ref_t - lr * mh / (np.sqrt(vh) + 1e-8)
+        np.testing.assert_allclose(np.asarray(theta), ref_t, rtol=1e-4,
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Train steps actually learn
+# ---------------------------------------------------------------------------
+
+def run_steps(kind, n_steps=8, lr=5e-3, family="llama", seed=50):
+    rng = np.random.default_rng(seed)
+    if family == "llama":
+        cfg = CFG
+        base = P.init_params(cfg, seed=21)
+        x = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)).astype(np.int32)
+        y = np.roll(x, -1, axis=1).astype(np.int32)  # learnable: predict shift
+        mask = np.ones((cfg.batch, cfg.seq_len), np.float32)
+        mask[:, -1] = 0
+        data = (jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask))
+    else:
+        cfg = C.SD
+        base = P.init_params(cfg, seed=22)
+        z = rng.normal(size=(cfg.batch, cfg.d_z)).astype(np.float32)
+        tgt = rng.normal(size=(cfg.batch, cfg.d_img)).astype(np.float32)
+        data = (jnp.asarray(z), jnp.asarray(tgt))
+
+    flat = P.flatten_params(base, cfg)
+    step_fn = jax.jit(A.make_train_step(family, kind, cfg, ACFG))
+
+    if kind in ("shira", "shira_dora"):
+        lay = P.shira_layout(cfg, ACFG)
+        idx = np.concatenate([
+            rng.choice(e["shape"][0] * e["shape"][1], e["k"], replace=False)
+            for e in lay
+        ]).astype(np.int32)
+        idx = jnp.asarray(idx)
+    if kind == "shira":
+        theta = gather_theta(base, P.shira_layout(cfg, ACFG), idx) \
+            if family == "llama" else jnp.concatenate([
+                jnp.asarray(base[e["name"]]).reshape(-1)[
+                    idx[e["off"]:e["off"] + e["k"]]]
+                for e in P.shira_layout(cfg, ACFG)])
+    elif kind == "lora":
+        lay = P.lora_layout(cfg, ACFG)
+        K = P.lora_theta_len(cfg, ACFG)
+        th = np.zeros(K, np.float32)
+        for e in lay:
+            th[e["a_off"]:e["a_off"] + e["a_len"]] = rng.normal(
+                0, 0.02, e["a_len"])
+        theta = jnp.asarray(th)
+    elif kind == "dora":
+        lay = P.dora_layout(cfg, ACFG)
+        K = P.dora_theta_len(cfg, ACFG)
+        th = np.zeros(K, np.float32)
+        for e in lay:
+            th[e["a_off"]:e["a_off"] + e["a_len"]] = rng.normal(
+                0, 0.02, e["a_len"])
+            w = np.asarray(base[e["name"]])
+            th[e["mag_off"]:e["mag_off"] + e["mag_len"]] = np.sqrt(
+                (w * w).sum(0) + 1e-6)
+        theta = jnp.asarray(th)
+    elif kind == "shira_dora":
+        lay = P.shira_dora_layout(cfg, ACFG)
+        K = P.shira_dora_theta_len(cfg, ACFG)
+        th = np.zeros(K, np.float32)
+        th[:P.shira_theta_len(cfg, ACFG)] = np.asarray(
+            gather_theta(base, P.shira_layout(cfg, ACFG), idx))
+        for e in lay:
+            w = np.asarray(base[e["name"]])
+            th[e["mag_off"]:e["mag_off"] + e["mag_len"]] = np.sqrt(
+                (w * w).sum(0) + 1e-6)
+        theta = jnp.asarray(th)
+    elif kind == "full":
+        theta = jnp.concatenate([jnp.asarray(t).reshape(-1) for t in flat])
+
+    K = theta.shape[0]
+    m = jnp.zeros(K)
+    v = jnp.zeros(K)
+    losses = []
+    for s in range(n_steps):
+        args = list(flat) if kind != "full" else []
+        args += [theta, m, v]
+        if kind in ("shira", "shira_dora"):
+            args.append(idx)
+        args += [jnp.int32(s), jnp.float32(lr)]
+        args += list(data)
+        theta, m, v, loss = step_fn(*args)
+        losses.append(float(loss))
+    return losses
+
+
+@pytest.mark.parametrize("kind", ["shira", "lora", "dora", "shira_dora", "full"])
+def test_llama_train_step_reduces_loss(kind):
+    losses = run_steps(kind)
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("kind", ["shira", "lora", "full"])
+def test_sd_train_step_reduces_loss(kind):
+    losses = run_steps(kind, family="sd", lr=1e-2)
+    assert losses[-1] < losses[0], losses

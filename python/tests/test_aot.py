@@ -1,0 +1,124 @@
+"""AOT pipeline: artifacts exist, parse as HLO text, manifest is coherent.
+
+These tests run against the checked-out `artifacts/` directory when present
+(built by `make artifacts`), otherwise they build into a tmpdir once per
+session.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="session")
+def artifacts_dir(tmp_path_factory):
+    if os.path.exists(os.path.join(ART, "manifest.json")):
+        return os.path.abspath(ART)
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        check=True,
+    )
+    return str(out)
+
+
+@pytest.fixture(scope="session")
+def manifest(artifacts_dir):
+    with open(os.path.join(artifacts_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+EXPECTED = [
+    "llama_fwd", "llama_fwd_unfused_lora", "llama_train_shira",
+    "llama_train_lora", "llama_train_dora", "llama_train_shira_dora",
+    "llama_train_full", "llama_train_shira_dense", "llama_grad_probe",
+    "sd_fwd", "sd_train_shira", "sd_train_lora", "sd_train_full",
+    "sd_grad_probe", "apply_shira", "fuse_lora", "masked_grad_op",
+]
+
+
+def test_all_artifacts_present(manifest, artifacts_dir):
+    for name in EXPECTED:
+        assert name in manifest["artifacts"], name
+        path = os.path.join(artifacts_dir, manifest["artifacts"][name]["file"])
+        assert os.path.getsize(path) > 100, name
+
+
+def test_hlo_is_text(manifest, artifacts_dir):
+    for name in EXPECTED:
+        path = os.path.join(artifacts_dir, manifest["artifacts"][name]["file"])
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, name
+
+
+def test_train_step_io_shapes_match(manifest):
+    """theta/m/v inputs and outputs agree in length for every train step."""
+    for name, art in manifest["artifacts"].items():
+        if "_train_" not in name:
+            continue
+        ins = {e["name"]: e for e in art["inputs"]}
+        outs = {e["name"]: e for e in art["outputs"]}
+        K = ins["theta"]["shape"][0]
+        for field in ("theta", "m", "v"):
+            assert ins[field]["shape"] == [K], (name, field)
+        for field in ("theta_out", "m_out", "v_out"):
+            assert outs[field]["shape"] == [K], (name, field)
+        assert outs["loss"]["shape"] == []
+
+
+def test_theta_lens_consistent(manifest):
+    mm = manifest["models"]["llama"]
+    lay = mm["layout"]
+    assert mm["theta_len"]["shira"] == sum(e["k"] for e in lay["shira"])
+    assert mm["theta_len"]["lora"] == sum(
+        e["a_len"] + e["b_len"] for e in lay["lora"])
+    assert mm["theta_len"]["dora"] == mm["theta_len"]["lora"] + sum(
+        e["mag_len"] for e in lay["dora"])
+    # shira offsets are contiguous
+    off = 0
+    for e in lay["shira"]:
+        assert e["off"] == off
+        off += e["k"]
+
+
+def test_sparsity_matches_config(manifest):
+    """SHiRA trains ~frac of each target (paper: 1-2%)."""
+    frac = manifest["adapter"]["shira_frac"]
+    for e in manifest["models"]["llama"]["layout"]["shira"]:
+        numel = e["shape"][0] * e["shape"][1]
+        assert abs(e["k"] / numel - frac) < 0.5 * frac + 1.0 / numel
+
+
+def test_shira_changes_far_fewer_params_than_lora(manifest):
+    """The %C column of Table 2: fused SHiRA touches ~1-2% of target
+    weights; fused LoRA rewrites 100% of them."""
+    mm = manifest["models"]["llama"]
+    target_numel = sum(e["shape"][0] * e["shape"][1]
+                       for e in mm["layout"]["probe"])
+    shira_changed = mm["theta_len"]["shira"]
+    assert shira_changed / target_numel < 0.05
+
+
+def test_param_count_orders(manifest):
+    """Input ordering: base params come first, in param_spec order."""
+    mm = manifest["models"]["llama"]
+    art = manifest["artifacts"]["llama_fwd"]
+    base_names = [p["name"] for p in mm["params"]]
+    got = [e["name"] for e in art["inputs"][:len(base_names)]]
+    assert got == base_names
+
+
+def test_pallas_demo_shapes(manifest):
+    d = manifest["pallas_demo"]
+    art = manifest["artifacts"]["apply_shira"]
+    ins = {e["name"]: e for e in art["inputs"]}
+    assert ins["w"]["shape"] == [d["dim"], d["dim"]]
+    assert ins["idx"]["shape"] == [d["k"]]
+    assert ins["vals"]["shape"] == [d["k"]]

@@ -1,0 +1,263 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes / sparsity / block sizes; every property asserts
+bit-compatible (or allclose within f32 matmul tolerance) agreement between
+the tiled kernel and the reference.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    lora_fuse,
+    masked_grad,
+    partition_updates,
+    pick_block_rows,
+    pick_tiles,
+    scatter_update,
+    scatter_update_flat,
+)
+from compile.kernels.ref import (
+    gather_ref,
+    lora_fuse_ref,
+    masked_grad_ref,
+    scatter_update_ref,
+)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def make_case(rng, n, m, k):
+    w = rng.normal(size=(n, m)).astype(np.float32)
+    idx = rng.choice(n * m, size=k, replace=False).astype(np.int32)
+    vals = rng.normal(size=k).astype(np.float32)
+    return w, idx, vals
+
+
+# ---------------------------------------------------------------------------
+# scatter_update (tiled, host-partitioned)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([8, 16, 32, 64, 128]),
+    m=st.sampled_from([8, 32, 64, 128]),
+    frac=st.floats(0.005, 0.2),
+    seed=st.integers(0, 2**16),
+)
+def test_scatter_tiled_matches_ref(n, m, frac, seed):
+    rng = np.random.default_rng(seed)
+    k = max(1, int(frac * n * m))
+    w, idx, vals = make_case(rng, n, m, k)
+    br = pick_block_rows(n, m, vmem_budget_bytes=4 * m * max(1, n // 4))
+    ti, tv = partition_updates(idx, vals, n, m, br)
+    out = scatter_update(jnp.asarray(w), jnp.asarray(ti), jnp.asarray(tv),
+                         block_rows=br)
+    ref = scatter_update_ref(jnp.asarray(w), jnp.asarray(idx), jnp.asarray(vals))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**16), br=st.sampled_from([1, 2, 4, 8, 16, 32]))
+def test_scatter_tiled_all_block_sizes(seed, br):
+    rng = np.random.default_rng(seed)
+    n, m = 32, 16
+    w, idx, vals = make_case(rng, n, m, 50)
+    ti, tv = partition_updates(idx, vals, n, m, br)
+    out = scatter_update(jnp.asarray(w), jnp.asarray(ti), jnp.asarray(tv),
+                         block_rows=br)
+    ref = scatter_update_ref(jnp.asarray(w), jnp.asarray(idx), jnp.asarray(vals))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_scatter_single_update():
+    w = np.zeros((8, 8), np.float32)
+    ti, tv = partition_updates(np.array([13]), np.array([7.0]), 8, 8, 4)
+    out = scatter_update(jnp.asarray(w), jnp.asarray(ti), jnp.asarray(tv),
+                         block_rows=4)
+    assert out[1, 5] == 7.0
+    assert float(jnp.sum(jnp.abs(out))) == 7.0
+
+
+def test_scatter_empty_update_stream():
+    w = np.random.default_rng(0).normal(size=(8, 8)).astype(np.float32)
+    ti, tv = partition_updates(np.array([], np.int64), np.array([], np.float32),
+                               8, 8, 4)
+    out = scatter_update(jnp.asarray(w), jnp.asarray(ti), jnp.asarray(tv),
+                         block_rows=4)
+    np.testing.assert_array_equal(np.asarray(out), w)
+
+
+def test_scatter_full_overwrite():
+    """k = n*m degenerates to a full dense copy."""
+    rng = np.random.default_rng(3)
+    n, m = 16, 8
+    w = rng.normal(size=(n, m)).astype(np.float32)
+    idx = np.arange(n * m)
+    vals = rng.normal(size=n * m).astype(np.float32)
+    ti, tv = partition_updates(idx, vals, n, m, 4)
+    out = scatter_update(jnp.asarray(w), jnp.asarray(ti), jnp.asarray(tv),
+                         block_rows=4)
+    np.testing.assert_array_equal(np.asarray(out), vals.reshape(n, m))
+
+
+def test_partition_updates_preserves_every_update():
+    rng = np.random.default_rng(1)
+    n, m, br = 64, 32, 8
+    _, idx, vals = make_case(rng, n, m, 100)
+    ti, tv = partition_updates(idx, vals, n, m, br)
+    got = {}
+    for t in range(ti.shape[0]):
+        for j in range(ti.shape[1]):
+            if ti[t, j] != br * m:
+                got[t * br * m + int(ti[t, j])] = float(tv[t, j])
+    want = dict(zip(idx.tolist(), vals.tolist()))
+    assert got == pytest.approx(want)
+
+
+def test_partition_pad_index_is_oob():
+    ti, tv = partition_updates(np.array([0]), np.array([1.0]), 8, 8, 2)
+    assert ti.max() <= 2 * 8  # pad index == block_rows * m
+    assert (ti >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# scatter_update_flat (runtime indices, used by the apply_shira artifact)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([16, 32, 64]),
+    m=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_scatter_flat_matches_ref(n, m, seed):
+    rng = np.random.default_rng(seed)
+    k = max(1, (n * m) // 50)
+    w, idx, vals = make_case(rng, n, m, k)
+    out = scatter_update_flat(jnp.asarray(w), jnp.asarray(idx),
+                              jnp.asarray(vals))
+    ref = scatter_update_ref(jnp.asarray(w), jnp.asarray(idx), jnp.asarray(vals))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_scatter_flat_respects_block_rows():
+    rng = np.random.default_rng(7)
+    w, idx, vals = make_case(rng, 32, 32, 20)
+    for br in (2, 8, 16, 32):
+        out = scatter_update_flat(jnp.asarray(w), jnp.asarray(idx),
+                                  jnp.asarray(vals), block_rows=br)
+        ref = scatter_update_ref(jnp.asarray(w), jnp.asarray(idx),
+                                 jnp.asarray(vals))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# lora_fuse
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([16, 32, 64, 128]),
+    m=st.sampled_from([16, 64, 128]),
+    r=st.sampled_from([1, 2, 4, 8]),
+    scale=st.floats(-2.0, 2.0),
+    seed=st.integers(0, 2**16),
+)
+def test_lora_fuse_matches_ref(n, m, r, scale, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(n, m)).astype(np.float32)
+    a = rng.normal(size=(n, r)).astype(np.float32)
+    b = rng.normal(size=(r, m)).astype(np.float32)
+    s = np.array([[scale]], np.float32)
+    out = lora_fuse(jnp.asarray(w), jnp.asarray(a), jnp.asarray(b),
+                    jnp.asarray(s))
+    ref = lora_fuse_ref(w, a, b, np.float32(scale))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-5)
+
+
+def test_lora_fuse_zero_scale_is_identity():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(32, 32)).astype(np.float32)
+    a = rng.normal(size=(32, 4)).astype(np.float32)
+    b = rng.normal(size=(4, 32)).astype(np.float32)
+    out = lora_fuse(jnp.asarray(w), jnp.asarray(a), jnp.asarray(b),
+                    jnp.zeros((1, 1), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), w)
+
+
+def test_lora_fuse_explicit_tiles():
+    rng = np.random.default_rng(5)
+    w = rng.normal(size=(64, 48)).astype(np.float32)
+    a = rng.normal(size=(64, 4)).astype(np.float32)
+    b = rng.normal(size=(4, 48)).astype(np.float32)
+    s = np.ones((1, 1), np.float32)
+    for bm, bn in [(8, 8), (16, 48), (64, 16), (32, 24)]:
+        out = lora_fuse(jnp.asarray(w), jnp.asarray(a), jnp.asarray(b),
+                        jnp.asarray(s), bm=bm, bn=bn)
+        np.testing.assert_allclose(np.asarray(out), lora_fuse_ref(w, a, b, 1.0),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_pick_tiles_divides():
+    for n, m in [(100, 60), (4096, 4096), (7, 13), (256, 512)]:
+        bm, bn = pick_tiles(n, m)
+        assert n % bm == 0 and m % bn == 0
+        assert 1 <= bm <= n and 1 <= bn <= m
+
+
+# ---------------------------------------------------------------------------
+# masked_grad
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([8, 32, 64, 128]),
+    m=st.sampled_from([16, 64, 128]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_masked_grad_matches_ref(n, m, density, seed):
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(n, m)).astype(np.float32)
+    mask = (rng.random((n, m)) < density).astype(np.float32)
+    out = masked_grad(jnp.asarray(g), jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(out), masked_grad_ref(g, mask))
+
+
+def test_masked_grad_all_zero_mask():
+    g = np.ones((16, 16), np.float32)
+    out = masked_grad(jnp.asarray(g), jnp.zeros((16, 16), jnp.float32))
+    assert float(jnp.sum(jnp.abs(out))) == 0.0
+
+
+def test_masked_grad_identity_mask():
+    rng = np.random.default_rng(2)
+    g = rng.normal(size=(16, 16)).astype(np.float32)
+    out = masked_grad(jnp.asarray(g), jnp.ones((16, 16), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out), g)
+
+
+# ---------------------------------------------------------------------------
+# pick_block_rows
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 512), m=st.integers(1, 512))
+def test_pick_block_rows_divides_and_fits(n, m):
+    br = pick_block_rows(n, m)
+    assert 1 <= br <= n
+    assert n % br == 0
+    if br > 1:  # fits the default VMEM budget unless a single row overflows it
+        assert br * m * 4 <= 4 * 1024 * 1024
+
+
+def test_gather_ref_roundtrip():
+    """gather(scatter(w, idx, v), idx) == v — adapter extract/apply inverse."""
+    rng = np.random.default_rng(9)
+    w, idx, vals = make_case(rng, 32, 32, 64)
+    w2 = scatter_update_ref(jnp.asarray(w), jnp.asarray(idx), jnp.asarray(vals))
+    got = gather_ref(w2, jnp.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(got), vals)

@@ -1,0 +1,175 @@
+"""L2 model graphs: shapes, causality, loss-masking and determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs as C, model as M, params as P
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = C.LLAMA_A
+    return cfg, P.init_params(cfg, seed=11)
+
+
+@pytest.fixture(scope="module")
+def sd():
+    cfg = C.SD
+    return cfg, P.init_params(cfg, seed=12)
+
+
+def batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)).astype(np.int32)
+    y = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)).astype(np.int32)
+    mask = np.zeros((cfg.batch, cfg.seq_len), np.float32)
+    mask[:, -1] = 1.0
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask)
+
+
+class TestLlamaForward:
+    def test_logit_shape(self, llama):
+        cfg, p = llama
+        x, _, _ = batch(cfg)
+        logits = M.llama_fwd(p, x, cfg)
+        assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+
+    def test_deterministic(self, llama):
+        cfg, p = llama
+        x, _, _ = batch(cfg)
+        l1 = M.llama_fwd(p, x, cfg)
+        l2 = M.llama_fwd(p, x, cfg)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+    def test_causality(self, llama):
+        """Changing token t must not change logits at positions < t."""
+        cfg, p = llama
+        x, _, _ = batch(cfg)
+        t = cfg.seq_len // 2
+        x2 = x.at[:, t:].set((x[:, t:] + 1) % cfg.vocab)
+        l1 = np.asarray(M.llama_fwd(p, x, cfg))
+        l2 = np.asarray(M.llama_fwd(p, x2, cfg))
+        np.testing.assert_array_equal(l1[:, :t], l2[:, :t])
+        assert np.abs(l1[:, t:] - l2[:, t:]).max() > 0
+
+    def test_finite(self, llama):
+        cfg, p = llama
+        x, _, _ = batch(cfg)
+        assert bool(jnp.all(jnp.isfinite(M.llama_fwd(p, x, cfg))))
+
+    def test_batch_independence(self, llama):
+        """Row b of the batch depends only on row b of the tokens."""
+        cfg, p = llama
+        x, _, _ = batch(cfg)
+        x2 = x.at[1:].set((x[1:] + 3) % cfg.vocab)
+        l1 = np.asarray(M.llama_fwd(p, x, cfg))
+        l2 = np.asarray(M.llama_fwd(p, x2, cfg))
+        np.testing.assert_array_equal(l1[0], l2[0])
+
+
+class TestLlamaLoss:
+    def test_loss_positive_scalar(self, llama):
+        cfg, p = llama
+        x, y, mask = batch(cfg)
+        loss = M.llama_loss(p, x, y, mask, cfg)
+        assert loss.shape == ()
+        assert float(loss) > 0
+
+    def test_mask_selects_positions(self, llama):
+        """Loss with answer-only mask ignores target values elsewhere."""
+        cfg, p = llama
+        x, y, mask = batch(cfg)
+        y2 = y.at[:, :-1].set((y[:, :-1] + 7) % cfg.vocab)
+        l1 = float(M.llama_loss(p, x, y, mask, cfg))
+        l2 = float(M.llama_loss(p, x, y2, mask, cfg))
+        assert l1 == pytest.approx(l2, rel=1e-6)
+
+    def test_uniform_model_loss_near_log_vocab(self):
+        """A zeroed model predicts ~uniform -> CE ~= log(V)."""
+        cfg = C.LLAMA_A
+        p = {k: jnp.zeros_like(v) for k, v in P.init_params(cfg, 0).items()}
+        x, y, mask = batch(cfg)
+        loss = float(M.llama_loss(p, x, y, mask, cfg))
+        assert loss == pytest.approx(np.log(cfg.vocab), rel=1e-3)
+
+    def test_all_zero_mask_is_safe(self, llama):
+        cfg, p = llama
+        x, y, _ = batch(cfg)
+        loss = M.llama_loss(p, x, y, jnp.zeros_like(x, jnp.float32), cfg)
+        assert np.isfinite(float(loss))
+
+
+class TestRmsnorm:
+    def test_unit_norm(self):
+        x = np.random.default_rng(0).normal(size=(4, 16)).astype(np.float32)
+        y = M.rmsnorm(jnp.asarray(x), jnp.ones(16, jnp.float32))
+        rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-4)
+
+    def test_gain_scales(self):
+        x = np.random.default_rng(1).normal(size=(4, 16)).astype(np.float32)
+        y1 = M.rmsnorm(jnp.asarray(x), jnp.ones(16, jnp.float32))
+        y2 = M.rmsnorm(jnp.asarray(x), 3.0 * jnp.ones(16, jnp.float32))
+        np.testing.assert_allclose(np.asarray(y2), 3 * np.asarray(y1), rtol=1e-5)
+
+
+class TestSd:
+    def test_shapes(self, sd):
+        cfg, p = sd
+        z = jnp.ones((cfg.batch, cfg.d_z), jnp.float32)
+        img = M.sd_fwd(p, z, cfg)
+        assert img.shape == (cfg.batch, cfg.d_img)
+
+    def test_content_sensitivity(self, sd):
+        """Different content latents must map to different images."""
+        cfg, p = sd
+        rng = np.random.default_rng(0)
+        z1 = jnp.asarray(rng.normal(size=(cfg.batch, cfg.d_z)), jnp.float32)
+        z2 = jnp.asarray(rng.normal(size=(cfg.batch, cfg.d_z)), jnp.float32)
+        i1, i2 = M.sd_fwd(p, z1, cfg), M.sd_fwd(p, z2, cfg)
+        assert float(jnp.mean(jnp.abs(i1 - i2))) > 1e-3
+
+    def test_mse_loss_zero_on_self(self, sd):
+        cfg, p = sd
+        z = jnp.ones((cfg.batch, cfg.d_z), jnp.float32)
+        img = M.sd_fwd(p, z, cfg)
+        assert float(M.sd_loss(p, z, img, cfg)) == 0.0
+
+
+class TestParams:
+    def test_flatten_roundtrip(self, llama):
+        cfg, p = llama
+        flat = P.flatten_params(p, cfg)
+        p2 = P.unflatten_params(flat, cfg)
+        assert set(p2) == set(p)
+        for k in p:
+            np.testing.assert_array_equal(np.asarray(p[k]), np.asarray(p2[k]))
+
+    def test_param_spec_order_stable(self):
+        cfg = C.LLAMA_A
+        assert cfg.param_spec() == cfg.param_spec()
+        names = [n for n, _ in cfg.param_spec()]
+        assert names[0] == "embed" and names[-1] == "head"
+        assert len(names) == len(set(names))
+
+    def test_init_seed_determinism(self):
+        cfg = C.LLAMA_A
+        p1 = P.init_params(cfg, 5)
+        p2 = P.init_params(cfg, 5)
+        p3 = P.init_params(cfg, 6)
+        np.testing.assert_array_equal(np.asarray(p1["embed"]),
+                                      np.asarray(p2["embed"]))
+        assert np.abs(np.asarray(p1["embed"]) - np.asarray(p3["embed"])).max() > 0
+
+    def test_norm_gains_init_to_one(self):
+        cfg = C.LLAMA_A
+        p = P.init_params(cfg, 0)
+        np.testing.assert_array_equal(np.asarray(p["lnf"]),
+                                      np.ones(cfg.d_model, np.float32))
+
+    def test_target_names_subset_of_params(self):
+        for cfg in (C.LLAMA_A, C.SD):
+            names = {n for n, _ in cfg.param_spec()}
+            assert set(cfg.target_names()) <= names

@@ -1,0 +1,131 @@
+//! Table 5 reproduction: per-stage latency of the HF-style adapter
+//! pipeline (load / fuse / unfuse / unload) for SHiRA vs LoRA over a
+//! whole model's target set, plus an SDXL-shaped large-tensor variant.
+//!
+//! Run: `cargo bench --bench bench_pipeline`.
+
+use shira::adapter::io;
+use shira::adapter::sparse::SparseDelta;
+use shira::adapter::{LoraAdapter, LoraTensor, ShiraAdapter};
+use shira::coordinator::switch::SwitchEngine;
+use shira::model::tensor::Tensor2;
+use shira::model::weights::WeightStore;
+use shira::util::benchlib::Bencher;
+use shira::util::rng::Rng;
+
+/// Build a synthetic model + adapters over the given target shapes.
+fn build(
+    shapes: &[(usize, usize)],
+    frac: f64,
+    rank: usize,
+    seed: u64,
+) -> (WeightStore, ShiraAdapter, LoraAdapter) {
+    let mut rng = Rng::new(seed);
+    let specs: Vec<(String, Vec<usize>)> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(n, m))| (format!("t{i}"), vec![n, m]))
+        .collect();
+    let weights = WeightStore::init(&specs, seed);
+    let shira_tensors = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(n, m))| {
+            let k = ((n * m) as f64 * frac).max(1.0) as usize;
+            let idx = rng.sample_indices(n * m, k);
+            let mut d = vec![0.0f32; k];
+            rng.fill_normal(&mut d, 0.0, 0.1);
+            (format!("t{i}"), SparseDelta::new(n, m, idx, d))
+        })
+        .collect();
+    let lora_tensors = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(n, m))| {
+            let mut a = Tensor2::zeros(n, rank);
+            let mut b = Tensor2::zeros(rank, m);
+            rng.fill_normal(&mut a.data, 0.0, 0.1);
+            rng.fill_normal(&mut b.data, 0.0, 0.1);
+            LoraTensor {
+                target: format!("t{i}"),
+                a,
+                b,
+            }
+        })
+        .collect();
+    (
+        weights,
+        ShiraAdapter {
+            name: "s".into(),
+            strategy: "rand".into(),
+            tensors: shira_tensors,
+        },
+        LoraAdapter {
+            name: "l".into(),
+            scale: 2.0,
+            tensors: lora_tensors,
+        },
+    )
+}
+
+fn bench_stage_set(b: &mut Bencher, label: &str, shapes: &[(usize, usize)]) {
+    let (weights, shira, lora) = build(shapes, 0.02, 32, 7);
+    let shira_bytes = io::encode_shira(&shira);
+    let lora_bytes = io::encode_lora(&lora);
+    let mut engine = SwitchEngine::new(weights);
+
+    b.group(&format!("table5/{label}/shira"));
+    b.bench("load(decode)", || {
+        let a = io::decode_shira(&shira_bytes).unwrap();
+        std::hint::black_box(a.param_count());
+    });
+    b.bench("fuse(apply)", || {
+        engine.switch_to_shira(&shira, 1.0);
+    });
+    b.bench("unfuse(revert)", || {
+        engine.switch_to_shira(&shira, 1.0);
+        engine.revert();
+    });
+    b.bench("full_pipeline", || {
+        let t = engine.hf_pipeline_shira(&shira_bytes, 1.0);
+        std::hint::black_box(t.total_us());
+    });
+
+    b.group(&format!("table5/{label}/lora"));
+    b.bench("load(decode)", || {
+        let a = io::decode_lora(&lora_bytes).unwrap();
+        std::hint::black_box(a.param_count());
+    });
+    b.bench("fuse", || {
+        engine.switch_to_lora(&lora);
+    });
+    b.bench("unfuse", || {
+        engine.switch_to_lora(&lora);
+        engine.revert();
+    });
+    b.bench("full_pipeline", || {
+        let t = engine.hf_pipeline_lora(&lora_bytes);
+        std::hint::black_box(t.total_us());
+    });
+    engine.revert();
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    // nanollama-shaped target set (15 small matrices)
+    let llama_shapes: Vec<(usize, usize)> = (0..3)
+        .flat_map(|_| {
+            vec![(128, 128), (128, 128), (128, 128), (128, 256), (256, 128)]
+        })
+        .collect();
+    bench_stage_set(&mut b, "nanollama", &llama_shapes);
+
+    // SDXL-ish large tensors (the paper's Table 5 measures SDXL): a few
+    // big attention/MLP blocks.
+    let sdxl_shapes = vec![(1024, 1024), (1024, 1024), (1024, 4096), (4096, 1024)];
+    bench_stage_set(&mut b, "sdxl-shaped", &sdxl_shapes);
+
+    println!("\npaper shape (Table 5 CPU column): LoRA fuse/unfuse dominate;");
+    println!("SHiRA apply/revert are a small fraction of LoRA's stages.");
+    b.write_results("bench_pipeline");
+}

@@ -1,0 +1,82 @@
+//! Micro-benchmarks of the sparse hot path (supports the §Perf iteration
+//! log): scatter apply/revert/gather/snapshot, sorted vs unsorted index
+//! order, density sweep, and adapter (de)serialization.
+//!
+//! Run: `cargo bench --bench bench_sparse`.
+
+use shira::adapter::io;
+use shira::adapter::sparse::SparseDelta;
+use shira::adapter::ShiraAdapter;
+use shira::model::tensor::Tensor2;
+use shira::util::benchlib::{black_box, Bencher};
+use shira::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(0x5BA6);
+    let dim = 2048;
+    let mut w = Tensor2::zeros(dim, dim);
+    rng.fill_normal(&mut w.data, 0.0, 1.0);
+
+    b.group("sparse/density-sweep(dim2048)");
+    for frac in [0.005f64, 0.01, 0.02, 0.05] {
+        let k = ((dim * dim) as f64 * frac) as usize;
+        let idx = rng.sample_indices(dim * dim, k);
+        let mut d = vec![0.0f32; k];
+        rng.fill_normal(&mut d, 0.0, 0.1);
+        let sd = SparseDelta::new(dim, dim, idx, d);
+        b.bench(&format!("apply_frac{frac}"), || {
+            sd.apply(&mut w, 1.0);
+            black_box(&w.data[0]);
+        });
+    }
+
+    b.group("sparse/order-sensitivity(dim2048,2%)");
+    let k = ((dim * dim) as f64 * 0.02) as usize;
+    let sorted_idx = rng.sample_indices(dim * dim, k);
+    let mut unsorted = sorted_idx.clone();
+    rng.shuffle(&mut unsorted);
+    let mut d = vec![0.0f32; k];
+    rng.fill_normal(&mut d, 0.0, 0.1);
+    let sd_sorted = SparseDelta::new(dim, dim, sorted_idx.clone(), d.clone());
+    b.bench("apply_sorted_indices", || {
+        sd_sorted.apply(&mut w, 1.0);
+        black_box(&w.data[0]);
+    });
+    // unsorted apply: emulate with a raw loop (SparseDelta requires sorted)
+    b.bench("apply_unsorted_indices(raw)", || {
+        for (j, &i) in unsorted.iter().enumerate() {
+            w.data[i as usize] += d[j];
+        }
+        black_box(&w.data[0]);
+    });
+
+    b.group("sparse/stages(dim2048,2%)");
+    b.bench("snapshot", || {
+        black_box(sd_sorted.snapshot(&w).len());
+    });
+    let snap = sd_sorted.snapshot(&w);
+    b.bench("restore", || {
+        sd_sorted.restore(&mut w, &snap);
+        black_box(&w.data[0]);
+    });
+    b.bench("gather", || {
+        black_box(sd_sorted.gather(&w).len());
+    });
+
+    b.group("sparse/io");
+    let adapter = ShiraAdapter {
+        name: "io".into(),
+        strategy: "rand".into(),
+        tensors: vec![("w".into(), sd_sorted.clone())],
+    };
+    let bytes = io::encode_shira(&adapter);
+    b.bench("encode", || {
+        black_box(io::encode_shira(&adapter).len());
+    });
+    b.bench("decode", || {
+        black_box(io::decode_shira(&bytes).unwrap().param_count());
+    });
+
+    b.write_results("bench_sparse");
+}

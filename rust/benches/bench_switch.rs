@@ -1,0 +1,70 @@
+//! Fig. 5 reproduction: LoRA-fuse vs SHiRA-scatter time per weight tensor
+//! across dimensions (the paper's headline systems result — up to ~10×
+//! faster switching at dim 4096 on CPU).
+//!
+//! Protocol matches the paper: per dimension, 10 randomly initialized
+//! weights; fuse time = `W += s·A@B` (rank 32); scatter time = sparse
+//! overwrite of 2% of entries.  Run: `cargo bench --bench bench_switch`.
+
+use shira::adapter::sparse::SparseDelta;
+use shira::model::tensor::Tensor2;
+use shira::util::benchlib::{black_box, Bencher};
+use shira::util::rng::Rng;
+
+fn random_weight(rng: &mut Rng, dim: usize) -> Tensor2 {
+    let mut w = Tensor2::zeros(dim, dim);
+    rng.fill_normal(&mut w.data, 0.0, 1.0);
+    w
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(0xF165);
+    let frac = 0.02;
+    let rank = 32;
+
+    let mut speedups = Vec::new();
+    for dim in [512usize, 1024, 2048, 4096] {
+        b.group(&format!("fig5/dim{dim}"));
+        let k = ((dim * dim) as f64 * frac) as usize;
+        let mut w = random_weight(&mut rng, dim);
+        let idx = rng.sample_indices(dim * dim, k);
+        let mut delta = vec![0.0f32; k];
+        rng.fill_normal(&mut delta, 0.0, 0.1);
+        let sd = SparseDelta::new(dim, dim, idx, delta);
+        let mut a = Tensor2::zeros(dim, rank);
+        let mut bb = Tensor2::zeros(rank, dim);
+        rng.fill_normal(&mut a.data, 0.0, 0.1);
+        rng.fill_normal(&mut bb.data, 0.0, 0.1);
+
+        let scatter = b.bench("shira_scatter", || {
+            sd.apply(&mut w, 1.0);
+            black_box(&w.data[0]);
+        });
+        let fuse = b.bench("lora_fuse", || {
+            w.add_outer_product(&a, &bb, 1.0);
+            black_box(&w.data[0]);
+        });
+        // revert path (the other half of a switch)
+        let snap = sd.snapshot(&w);
+        b.bench("shira_revert", || {
+            sd.restore(&mut w, &snap);
+            black_box(&w.data[0]);
+        });
+        b.bench("lora_unfuse", || {
+            w.sub_outer_product(&a, &bb, 1.0);
+            black_box(&w.data[0]);
+        });
+        let speedup = fuse.mean_ns / scatter.mean_ns;
+        speedups.push((dim, speedup));
+    }
+
+    println!("\n== Fig. 5 summary (fuse / scatter) ==");
+    println!("| dim | speedup |");
+    println!("|---|---|");
+    for (dim, s) in &speedups {
+        println!("| {dim} | {s:.1}x |");
+    }
+    println!("paper shape: speedup grows with dim, ~10x at 4096");
+    b.write_results("bench_switch");
+}

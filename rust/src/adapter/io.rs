@@ -1,0 +1,413 @@
+//! Versioned binary adapter file format (paper Fig. 3a: "sparse weights and
+//! their indices").
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic   u32   0x53485241 ("SHRA") | 0x4C4F5241 ("LORA")
+//! version u32   1
+//! meta    u32 len + utf8 JSON  {name, strategy|scale}
+//! count   u32   number of tensors
+//! per tensor:
+//!   name  u32 len + utf8
+//!   rows  u32, cols u32
+//!   SHRA: k u32, idx  u32[k],  delta f32[k]
+//!   LORA: r u32, a f32[rows*r], b f32[r*cols]
+//! crc     u64   FNV-1a over everything before it
+//! ```
+
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use super::sparse::SparseDelta;
+use super::{LoraAdapter, LoraTensor, ShiraAdapter};
+use crate::model::tensor::Tensor2;
+use crate::util::json::{self, Json};
+
+const MAGIC_SHIRA: u32 = 0x5348_5241;
+const MAGIC_LORA: u32 = 0x4C4F_5241;
+const VERSION: u32 = 1;
+
+#[derive(Debug)]
+pub enum IoError {
+    Io(io::Error),
+    Format(String),
+}
+
+impl std::fmt::Display for IoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IoError::Io(e) => write!(f, "adapter io: {e}"),
+            IoError::Format(m) => write!(f, "adapter format: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for IoError {}
+
+impl From<io::Error> for IoError {
+    fn from(e: io::Error) -> Self {
+        IoError::Io(e)
+    }
+}
+
+// -- byte-level helpers -------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Writer { buf: Vec::new() }
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.bytes(s.as_bytes());
+    }
+
+    fn f32s(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn u32s(&mut self, xs: &[u32]) {
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        let crc = fnv64(&self.buf);
+        self.buf.extend_from_slice(&crc.to_le_bytes());
+        self.buf
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Result<Self, IoError> {
+        if b.len() < 8 {
+            return Err(IoError::Format("file too short".into()));
+        }
+        let body = &b[..b.len() - 8];
+        let want = u64::from_le_bytes(b[b.len() - 8..].try_into().unwrap());
+        if fnv64(body) != want {
+            return Err(IoError::Format("checksum mismatch (corrupt file)".into()));
+        }
+        Ok(Reader { b: body, i: 0 })
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], IoError> {
+        if self.i + n > self.b.len() {
+            return Err(IoError::Format("truncated file".into()));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, IoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String, IoError> {
+        let n = self.u32()? as usize;
+        if n > 1 << 20 {
+            return Err(IoError::Format("string too long".into()));
+        }
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| IoError::Format("bad utf8".into()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, IoError> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>, IoError> {
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+fn fnv64(b: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &x in b {
+        h ^= x as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+// -- SHiRA ----------------------------------------------------------------
+
+pub fn encode_shira(a: &ShiraAdapter) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(MAGIC_SHIRA);
+    w.u32(VERSION);
+    let meta = Json::obj(vec![
+        ("name", Json::str(&a.name)),
+        ("strategy", Json::str(&a.strategy)),
+    ]);
+    w.str(&meta.to_string_compact());
+    w.u32(a.tensors.len() as u32);
+    for (name, d) in &a.tensors {
+        w.str(name);
+        w.u32(d.rows as u32);
+        w.u32(d.cols as u32);
+        w.u32(d.nnz() as u32);
+        w.u32s(&d.idx);
+        w.f32s(&d.delta);
+    }
+    w.finish()
+}
+
+pub fn decode_shira(bytes: &[u8]) -> Result<ShiraAdapter, IoError> {
+    let mut r = Reader::new(bytes)?;
+    if r.u32()? != MAGIC_SHIRA {
+        return Err(IoError::Format("not a SHiRA adapter file".into()));
+    }
+    let ver = r.u32()?;
+    if ver != VERSION {
+        return Err(IoError::Format(format!("unsupported version {ver}")));
+    }
+    let meta = json::parse(&r.str()?)
+        .map_err(|e| IoError::Format(format!("bad meta json: {e}")))?;
+    let name = meta
+        .get("name")
+        .and_then(|j| j.as_str())
+        .unwrap_or("unnamed")
+        .to_string();
+    let strategy = meta
+        .get("strategy")
+        .and_then(|j| j.as_str())
+        .unwrap_or("unknown")
+        .to_string();
+    let count = r.u32()? as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let tname = r.str()?;
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        let k = r.u32()? as usize;
+        if k > rows * cols {
+            return Err(IoError::Format(format!("{tname}: k > numel")));
+        }
+        let idx = r.u32s(k)?;
+        let delta = r.f32s(k)?;
+        if !idx.windows(2).all(|w| w[0] < w[1]) {
+            return Err(IoError::Format(format!("{tname}: indices not sorted")));
+        }
+        if idx.iter().any(|&i| (i as usize) >= rows * cols) {
+            return Err(IoError::Format(format!("{tname}: index out of range")));
+        }
+        tensors.push((tname, SparseDelta::new(rows, cols, idx, delta)));
+    }
+    Ok(ShiraAdapter {
+        name,
+        strategy,
+        tensors,
+    })
+}
+
+pub fn save_shira(path: &Path, a: &ShiraAdapter) -> Result<(), IoError> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&encode_shira(a))?;
+    Ok(())
+}
+
+pub fn load_shira(path: &Path) -> Result<ShiraAdapter, IoError> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    decode_shira(&bytes)
+}
+
+// -- LoRA -------------------------------------------------------------------
+
+pub fn encode_lora(a: &LoraAdapter) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(MAGIC_LORA);
+    w.u32(VERSION);
+    let meta = Json::obj(vec![
+        ("name", Json::str(&a.name)),
+        ("scale", Json::num(a.scale as f64)),
+    ]);
+    w.str(&meta.to_string_compact());
+    w.u32(a.tensors.len() as u32);
+    for t in &a.tensors {
+        w.str(&t.target);
+        w.u32(t.a.rows as u32);
+        w.u32(t.b.cols as u32);
+        w.u32(t.a.cols as u32);
+        w.f32s(&t.a.data);
+        w.f32s(&t.b.data);
+    }
+    w.finish()
+}
+
+pub fn decode_lora(bytes: &[u8]) -> Result<LoraAdapter, IoError> {
+    let mut r = Reader::new(bytes)?;
+    if r.u32()? != MAGIC_LORA {
+        return Err(IoError::Format("not a LoRA adapter file".into()));
+    }
+    let ver = r.u32()?;
+    if ver != VERSION {
+        return Err(IoError::Format(format!("unsupported version {ver}")));
+    }
+    let meta = json::parse(&r.str()?)
+        .map_err(|e| IoError::Format(format!("bad meta json: {e}")))?;
+    let name = meta
+        .get("name")
+        .and_then(|j| j.as_str())
+        .unwrap_or("unnamed")
+        .to_string();
+    let scale = meta
+        .get("scale")
+        .and_then(|j| j.as_f64())
+        .unwrap_or(1.0) as f32;
+    let count = r.u32()? as usize;
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let target = r.str()?;
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        let rank = r.u32()? as usize;
+        let a = Tensor2::from_vec(rows, rank, r.f32s(rows * rank)?);
+        let b = Tensor2::from_vec(rank, cols, r.f32s(rank * cols)?);
+        tensors.push(LoraTensor { target, a, b });
+    }
+    Ok(LoraAdapter {
+        name,
+        scale,
+        tensors,
+    })
+}
+
+pub fn save_lora(path: &Path, a: &LoraAdapter) -> Result<(), IoError> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&encode_lora(a))?;
+    Ok(())
+}
+
+pub fn load_lora(path: &Path) -> Result<LoraAdapter, IoError> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    decode_lora(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_shira() -> ShiraAdapter {
+        let mut rng = Rng::new(1);
+        let idx = rng.sample_indices(256, 12);
+        let mut delta = vec![0.0; 12];
+        rng.fill_normal(&mut delta, 0.0, 0.5);
+        ShiraAdapter {
+            name: "bluefire".into(),
+            strategy: "snip".into(),
+            tensors: vec![("l0.wq".into(), SparseDelta::new(16, 16, idx, delta))],
+        }
+    }
+
+    fn sample_lora() -> LoraAdapter {
+        let mut rng = Rng::new(2);
+        let mut a = Tensor2::zeros(16, 4);
+        let mut b = Tensor2::zeros(4, 16);
+        rng.fill_normal(&mut a.data, 0.0, 0.1);
+        rng.fill_normal(&mut b.data, 0.0, 0.1);
+        LoraAdapter {
+            name: "paint".into(),
+            scale: 2.0,
+            tensors: vec![LoraTensor {
+                target: "l0.wq".into(),
+                a,
+                b,
+            }],
+        }
+    }
+
+    #[test]
+    fn shira_roundtrip() {
+        let a = sample_shira();
+        let b = decode_shira(&encode_shira(&a)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lora_roundtrip() {
+        let a = sample_lora();
+        let b = decode_lora(&encode_lora(&a)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("shira-io-test");
+        let _ = std::fs::create_dir_all(&dir);
+        let p = dir.join("a.shira");
+        save_shira(&p, &sample_shira()).unwrap();
+        assert_eq!(load_shira(&p).unwrap(), sample_shira());
+        let p2 = dir.join("a.lora");
+        save_lora(&p2, &sample_lora()).unwrap();
+        assert_eq!(load_lora(&p2).unwrap(), sample_lora());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut bytes = encode_shira(&sample_shira());
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        match decode_shira(&bytes) {
+            Err(IoError::Format(m)) => assert!(m.contains("checksum"), "{m}"),
+            other => panic!("expected checksum error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let bytes = encode_lora(&sample_lora());
+        assert!(decode_shira(&bytes).is_err());
+        let bytes = encode_shira(&sample_shira());
+        assert!(decode_lora(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = encode_shira(&sample_shira());
+        assert!(decode_shira(&bytes[..bytes.len() - 9]).is_err());
+        assert!(decode_shira(&bytes[..4]).is_err());
+    }
+
+    #[test]
+    fn size_matches_nnz_accounting() {
+        let a = sample_shira();
+        let bytes = encode_shira(&a);
+        // idx+delta payload plus bounded header/meta overhead
+        assert!(bytes.len() >= a.nbytes());
+        assert!(bytes.len() < a.nbytes() + 256);
+    }
+}

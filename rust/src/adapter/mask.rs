@@ -1,0 +1,295 @@
+//! The five SHiRA mask strategies (paper §3.1).
+//!
+//! A mask is a set of flat indices into one target weight tensor; the
+//! calibrator in `train::calibrate` produces the gradient statistics that
+//! Grad and SNIP need (via the `*_grad_probe` artifacts).
+
+use crate::model::tensor::Tensor2;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MaskStrategy {
+    /// Structured: evenly spaced trainable rows + the (wrapped) diagonal —
+    /// a rank-1-ish structure plus a high-rank diagonal (paper: SHiRA-Struct).
+    Struct,
+    /// Uniformly random 1-2% of entries (SHiRA-Rand).
+    Rand,
+    /// Top-k by |weight| (SHiRA-WM).
+    WeightMagnitude,
+    /// Top-k by accumulated |gradient| on a calibration set (SHiRA-Grad).
+    Grad,
+    /// Top-k by |weight·gradient| (SHiRA-SNIP, Lee et al. 2018).
+    Snip,
+}
+
+impl MaskStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MaskStrategy::Struct => "struct",
+            MaskStrategy::Rand => "rand",
+            MaskStrategy::WeightMagnitude => "wm",
+            MaskStrategy::Grad => "grad",
+            MaskStrategy::Snip => "snip",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MaskStrategy> {
+        Some(match s {
+            "struct" => MaskStrategy::Struct,
+            "rand" => MaskStrategy::Rand,
+            "wm" => MaskStrategy::WeightMagnitude,
+            "grad" => MaskStrategy::Grad,
+            "snip" => MaskStrategy::Snip,
+            _ => return None,
+        })
+    }
+
+    pub fn needs_gradients(&self) -> bool {
+        matches!(self, MaskStrategy::Grad | MaskStrategy::Snip)
+    }
+
+    pub fn all() -> [MaskStrategy; 5] {
+        [
+            MaskStrategy::Struct,
+            MaskStrategy::Rand,
+            MaskStrategy::WeightMagnitude,
+            MaskStrategy::Grad,
+            MaskStrategy::Snip,
+        ]
+    }
+}
+
+/// Generate the mask for one target tensor.
+///
+/// * `k` — exact number of trainable entries required (matches the AOT
+///   theta layout, so every strategy must return exactly k indices).
+/// * `grad_abs` — accumulated |grad| per entry (required by Grad/Snip).
+/// * `rng` — stream for Rand (and for tie-breaking top-k jitter).
+pub fn generate_mask(
+    strategy: MaskStrategy,
+    w: &Tensor2,
+    k: usize,
+    grad_abs: Option<&[f32]>,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let n = w.numel();
+    assert!(k <= n, "mask k={k} exceeds numel={n}");
+    match strategy {
+        MaskStrategy::Rand => rng.sample_indices(n, k),
+        MaskStrategy::WeightMagnitude => {
+            top_k_indices(&w.data, k, |_, x| x.abs())
+        }
+        MaskStrategy::Grad => {
+            let g = grad_abs.expect("SHiRA-Grad requires gradient statistics");
+            assert_eq!(g.len(), n);
+            top_k_indices(g, k, |_, x| x)
+        }
+        MaskStrategy::Snip => {
+            let g = grad_abs.expect("SHiRA-SNIP requires gradient statistics");
+            assert_eq!(g.len(), n);
+            top_k_indices(g, k, |i, x| x * w.data[i].abs())
+        }
+        MaskStrategy::Struct => struct_mask(w.rows, w.cols, k),
+    }
+}
+
+/// Indices of the k largest entries by `key(i, data[i])`, sorted ascending.
+/// Deterministic: ties broken by index.
+fn top_k_indices(data: &[f32], k: usize, key: impl Fn(usize, f32) -> f32) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..data.len() as u32).collect();
+    let score = |i: u32| key(i as usize, data[i as usize]);
+    if k < data.len() {
+        order.select_nth_unstable_by(k, |&a, &b| {
+            score(b)
+                .partial_cmp(&score(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        order.truncate(k);
+    }
+    order.sort_unstable();
+    order
+}
+
+/// SHiRA-Struct: the wrapped diagonal (high rank) plus evenly spaced full
+/// rows (the rank-1 component), filled to exactly k entries.
+fn struct_mask(rows: usize, cols: usize, k: usize) -> Vec<u32> {
+    let numel = rows * cols;
+    let mut picked = vec![false; numel];
+    let mut out: Vec<u32> = Vec::with_capacity(k);
+    let push = |i: usize, picked: &mut Vec<bool>, out: &mut Vec<u32>| {
+        if !picked[i] && out.len() < k {
+            picked[i] = true;
+            out.push(i as u32);
+        }
+    };
+    // 1. wrapped diagonal: (i, i % cols) for every row — high rank.
+    for i in 0..rows.min(k) {
+        push(i * cols + (i % cols), &mut picked, &mut out);
+    }
+    // 2. evenly spaced full rows until the budget is filled.
+    let remaining = k.saturating_sub(out.len());
+    let n_rows = remaining.div_ceil(cols).min(rows);
+    if n_rows > 0 {
+        let stride = rows.max(1) as f64 / n_rows as f64;
+        for j in 0..n_rows {
+            let r = ((j as f64 + 0.5) * stride) as usize % rows;
+            for c in 0..cols {
+                push(r * cols + c, &mut picked, &mut out);
+            }
+        }
+    }
+    // 3. pad with the first unpicked entries (exact-k contract).
+    for i in 0..numel {
+        if out.len() >= k {
+            break;
+        }
+        push(i, &mut picked, &mut out);
+    }
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(rows: usize, cols: usize, seed: u64) -> Tensor2 {
+        let mut rng = Rng::new(seed);
+        let mut t = Tensor2::zeros(rows, cols);
+        rng.fill_normal(&mut t.data, 0.0, 1.0);
+        t
+    }
+
+    fn assert_valid(idx: &[u32], k: usize, numel: usize) {
+        assert_eq!(idx.len(), k);
+        assert!(idx.windows(2).all(|p| p[0] < p[1]));
+        assert!(idx.iter().all(|&i| (i as usize) < numel));
+    }
+
+    #[test]
+    fn every_strategy_returns_exactly_k_valid_indices() {
+        let t = w(32, 24, 1);
+        let g: Vec<f32> = t.data.iter().map(|x| x.abs() * 0.5 + 0.1).collect();
+        let mut rng = Rng::new(2);
+        for s in MaskStrategy::all() {
+            for k in [1, 7, 76, 200] {
+                let idx = generate_mask(s, &t, k, Some(&g), &mut rng);
+                assert_valid(&idx, k, 32 * 24);
+            }
+        }
+    }
+
+    #[test]
+    fn wm_picks_largest_magnitudes() {
+        let mut t = Tensor2::zeros(4, 4);
+        t.data[3] = -10.0;
+        t.data[7] = 9.0;
+        t.data[11] = 0.5;
+        let mut rng = Rng::new(0);
+        let idx = generate_mask(MaskStrategy::WeightMagnitude, &t, 2, None, &mut rng);
+        assert_eq!(idx, vec![3, 7]);
+    }
+
+    #[test]
+    fn grad_picks_largest_gradients() {
+        let t = w(4, 4, 3);
+        let mut g = vec![0.0f32; 16];
+        g[5] = 100.0;
+        g[9] = 50.0;
+        g[2] = 49.0;
+        let mut rng = Rng::new(0);
+        let idx = generate_mask(MaskStrategy::Grad, &t, 2, Some(&g), &mut rng);
+        assert_eq!(idx, vec![5, 9]);
+    }
+
+    #[test]
+    fn snip_multiplies_weight_and_grad() {
+        let mut t = Tensor2::zeros(2, 2);
+        t.data = vec![10.0, 1.0, 1.0, 1.0];
+        let g = vec![1.0f32, 5.0, 0.1, 0.1];
+        // snip scores: 10, 5, 0.1, 0.1
+        let mut rng = Rng::new(0);
+        let idx = generate_mask(MaskStrategy::Snip, &t, 2, Some(&g), &mut rng);
+        assert_eq!(idx, vec![0, 1]);
+    }
+
+    #[test]
+    fn rand_is_seed_deterministic() {
+        let t = w(16, 16, 4);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = generate_mask(MaskStrategy::Rand, &t, 10, None, &mut r1);
+        let b = generate_mask(MaskStrategy::Rand, &t, 10, None, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn struct_mask_contains_diagonal() {
+        let t = w(16, 16, 6);
+        let mut rng = Rng::new(0);
+        // k large enough for diagonal + one row
+        let idx = generate_mask(MaskStrategy::Struct, &t, 40, None, &mut rng);
+        for i in 0..16u32 {
+            assert!(idx.contains(&(i * 16 + i)), "diagonal entry {i} missing");
+        }
+    }
+
+    #[test]
+    fn struct_mask_is_high_rank() {
+        // Rank of the mask (as a 0/1 matrix) must exceed any low-rank
+        // adapter's: diagonal support alone gives full rank.
+        let n = 24;
+        let idx = struct_mask(n, n, n + 2 * n); // diag + ~2 rows
+        let mut m = vec![vec![0.0f64; n]; n];
+        for &i in &idx {
+            m[(i as usize) / n][(i as usize) % n] = 1.0;
+        }
+        // Gaussian elimination rank.
+        let mut rank = 0;
+        for col in 0..n {
+            if let Some(p) = (rank..n).find(|&r| m[r][col].abs() > 1e-9) {
+                m.swap(rank, p);
+                let pivot = m[rank][col];
+                for r in 0..n {
+                    if r != rank && m[r][col].abs() > 1e-9 {
+                        let f = m[r][col] / pivot;
+                        for c in 0..n {
+                            m[r][c] -= f * m[rank][c];
+                        }
+                    }
+                }
+                rank += 1;
+            }
+        }
+        assert!(rank >= n - 1, "struct mask rank {rank} < {}", n - 1);
+    }
+
+    #[test]
+    fn top_k_ties_break_by_index() {
+        let data = vec![1.0f32; 8];
+        let idx = top_k_indices(&data, 3, |_, x| x);
+        assert_eq!(idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn strategies_differ_on_same_tensor() {
+        let t = w(32, 32, 7);
+        let g: Vec<f32> = (0..1024).map(|i| (1024 - i) as f32).collect();
+        let mut rng = Rng::new(8);
+        let k = 50;
+        let wm = generate_mask(MaskStrategy::WeightMagnitude, &t, k, Some(&g), &mut rng);
+        let gr = generate_mask(MaskStrategy::Grad, &t, k, Some(&g), &mut rng);
+        let rd = generate_mask(MaskStrategy::Rand, &t, k, Some(&g), &mut rng);
+        assert_ne!(wm, gr);
+        assert_ne!(wm, rd);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in MaskStrategy::all() {
+            assert_eq!(MaskStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(MaskStrategy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,216 @@
+//! Adapter types: SHiRA (sparse high-rank), LoRA, DoRA — the artifacts the
+//! coordinator trains, stores, switches and fuses.
+
+pub mod io;
+pub mod mask;
+pub mod sparse;
+
+use crate::model::tensor::Tensor2;
+use sparse::SparseDelta;
+
+/// One LoRA target: W' = W + scale · A @ B.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoraTensor {
+    pub target: String,
+    pub a: Tensor2, // (n, r)
+    pub b: Tensor2, // (r, m)
+}
+
+impl LoraTensor {
+    pub fn rank(&self) -> usize {
+        self.a.cols
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.a.numel() + self.b.numel()
+    }
+}
+
+/// A trained LoRA adapter (baseline).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoraAdapter {
+    pub name: String,
+    /// Effective fuse scale (= lora_alpha / rank).
+    pub scale: f32,
+    pub tensors: Vec<LoraTensor>,
+}
+
+impl LoraAdapter {
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.param_count()).sum()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    /// Entries of the base model REWRITTEN when fused: every element of
+    /// every target tensor (the %C column of paper Table 2).
+    pub fn changed_entries(&self) -> usize {
+        self.tensors
+            .iter()
+            .map(|t| t.a.rows * t.b.cols)
+            .sum()
+    }
+
+    pub fn find(&self, target: &str) -> Option<&LoraTensor> {
+        self.tensors.iter().find(|t| t.target == target)
+    }
+}
+
+/// A trained SHiRA adapter: one sparse delta per target tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShiraAdapter {
+    pub name: String,
+    /// Strategy used to build the mask (metadata; "merged" after fusion).
+    pub strategy: String,
+    pub tensors: Vec<(String, SparseDelta)>,
+}
+
+impl ShiraAdapter {
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|(_, d)| d.nnz()).sum()
+    }
+
+    /// Stored bytes: idx (u32) + delta (f32) per entry.
+    pub fn nbytes(&self) -> usize {
+        self.tensors.iter().map(|(_, d)| d.nbytes()).sum()
+    }
+
+    /// Entries rewritten at switch time (the %C column): exactly nnz.
+    pub fn changed_entries(&self) -> usize {
+        self.param_count()
+    }
+
+    pub fn find(&self, target: &str) -> Option<&SparseDelta> {
+        self.tensors
+            .iter()
+            .find(|(n, _)| n == target)
+            .map(|(_, d)| d)
+    }
+
+    /// Naive multi-adapter fusion (paper Fig. 3b): per-target union-merge.
+    pub fn fuse_with(&self, other: &ShiraAdapter, name: &str) -> ShiraAdapter {
+        let mut tensors = Vec::with_capacity(self.tensors.len());
+        for (tname, d) in &self.tensors {
+            let merged = match other.find(tname) {
+                Some(od) => d.merge(od),
+                None => d.clone(),
+            };
+            tensors.push((tname.clone(), merged));
+        }
+        // targets only in `other`
+        for (tname, od) in &other.tensors {
+            if self.find(tname).is_none() {
+                tensors.push((tname.clone(), od.clone()));
+            }
+        }
+        ShiraAdapter {
+            name: name.to_string(),
+            strategy: "merged".to_string(),
+            tensors,
+        }
+    }
+
+    /// Average per-target support overlap fraction with another adapter —
+    /// the interference diagnostic of §3.2.
+    pub fn overlap_fraction(&self, other: &ShiraAdapter) -> f64 {
+        let mut inter = 0usize;
+        let mut denom = 0usize;
+        for (tname, d) in &self.tensors {
+            if let Some(od) = other.find(tname) {
+                inter += d.overlap(od);
+                denom += d.nnz().min(od.nnz());
+            }
+        }
+        if denom == 0 {
+            0.0
+        } else {
+            inter as f64 / denom as f64
+        }
+    }
+}
+
+/// %Params metric used across the paper's tables: adapter trainable params
+/// relative to the base model's total.
+pub fn pct(x: usize, total: usize) -> f64 {
+    100.0 * x as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn delta(rng: &mut Rng, rows: usize, cols: usize, k: usize) -> SparseDelta {
+        let idx = rng.sample_indices(rows * cols, k);
+        let mut v = vec![0.0; k];
+        rng.fill_normal(&mut v, 0.0, 0.1);
+        SparseDelta::new(rows, cols, idx, v)
+    }
+
+    fn shira(rng: &mut Rng, name: &str) -> ShiraAdapter {
+        ShiraAdapter {
+            name: name.to_string(),
+            strategy: "rand".to_string(),
+            tensors: vec![
+                ("l0.wq".into(), delta(rng, 16, 16, 5)),
+                ("l0.wk".into(), delta(rng, 16, 16, 5)),
+            ],
+        }
+    }
+
+    #[test]
+    fn shira_counts() {
+        let mut rng = Rng::new(1);
+        let a = shira(&mut rng, "a");
+        assert_eq!(a.param_count(), 10);
+        assert_eq!(a.nbytes(), 80);
+        assert_eq!(a.changed_entries(), 10);
+    }
+
+    #[test]
+    fn lora_counts() {
+        let l = LoraAdapter {
+            name: "l".into(),
+            scale: 2.0,
+            tensors: vec![LoraTensor {
+                target: "l0.wq".into(),
+                a: Tensor2::zeros(16, 4),
+                b: Tensor2::zeros(4, 16),
+            }],
+        };
+        assert_eq!(l.param_count(), 128);
+        assert_eq!(l.changed_entries(), 256); // whole tensor rewritten on fuse
+        assert_eq!(l.tensors[0].rank(), 4);
+    }
+
+    #[test]
+    fn fuse_with_unions_targets() {
+        let mut rng = Rng::new(2);
+        let a = shira(&mut rng, "a");
+        let mut b = shira(&mut rng, "b");
+        b.tensors.push(("l0.wv".into(), delta(&mut rng, 16, 16, 3)));
+        let f = a.fuse_with(&b, "a+b");
+        assert_eq!(f.tensors.len(), 3);
+        assert_eq!(f.strategy, "merged");
+        let wq = f.find("l0.wq").unwrap();
+        assert!(wq.nnz() >= 5 && wq.nnz() <= 10);
+    }
+
+    #[test]
+    fn overlap_fraction_bounds() {
+        let mut rng = Rng::new(3);
+        let a = shira(&mut rng, "a");
+        let b = shira(&mut rng, "b");
+        let f = a.overlap_fraction(&b);
+        assert!((0.0..=1.0).contains(&f));
+        assert_eq!(a.overlap_fraction(&a), 1.0);
+    }
+
+    #[test]
+    fn pct_math() {
+        assert_eq!(pct(1, 100), 1.0);
+        assert_eq!(pct(0, 5), 0.0);
+    }
+}

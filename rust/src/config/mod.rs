@@ -1,0 +1,202 @@
+//! Run configuration: JSON files + CLI overrides, with validation.
+//!
+//! Every experiment is fully described by a `RunConfig`; the repro drivers
+//! serialize the exact config they ran into their report header so results
+//! are reproducible from the report alone.
+
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    /// Root seed — every stochastic stream derives from it.
+    pub seed: u64,
+    /// Steps for adapter finetuning runs.
+    pub adapter_steps: usize,
+    /// Steps for base-model pretraining.
+    pub pretrain_steps: usize,
+    /// Eval examples per task.
+    pub eval_examples: usize,
+    /// Eval batches per style measurement.
+    pub style_eval_batches: usize,
+    /// Adapter LR (paper Table 8: 5e-4 SHiRA LLM, 2e-4 LoRA/DoRA LLM).
+    pub lr_shira: f64,
+    pub lr_lora: f64,
+    /// Serving: requests per trace, adapter cache bytes.
+    pub trace_len: usize,
+    pub cache_bytes: usize,
+    /// Output directory for reports.
+    pub report_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            seed: 42,
+            adapter_steps: 2000,
+            pretrain_steps: 1500,
+            eval_examples: 128,
+            style_eval_batches: 4,
+            lr_shira: 5e-3,
+            lr_lora: 2e-3,
+            trace_len: 96,
+            cache_bytes: 8 << 20,
+            report_dir: "reports".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Small config for smoke tests / --fast runs.
+    pub fn fast() -> Self {
+        RunConfig {
+            adapter_steps: 60,
+            pretrain_steps: 120,
+            eval_examples: 48,
+            style_eval_batches: 2,
+            trace_len: 32,
+            ..Default::default()
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut c = RunConfig::default();
+        let get_usize = |key: &str, dst: &mut usize| {
+            if let Some(v) = j.get(key) {
+                *dst = v.as_usize().ok_or(format!("{key}: expected integer"))?;
+            }
+            Ok::<(), String>(())
+        };
+        if let Some(v) = j.get("seed") {
+            c.seed = v.as_f64().ok_or("seed: expected number")? as u64;
+        }
+        get_usize("adapter_steps", &mut c.adapter_steps)?;
+        get_usize("pretrain_steps", &mut c.pretrain_steps)?;
+        get_usize("eval_examples", &mut c.eval_examples)?;
+        get_usize("style_eval_batches", &mut c.style_eval_batches)?;
+        get_usize("trace_len", &mut c.trace_len)?;
+        get_usize("cache_bytes", &mut c.cache_bytes)?;
+        if let Some(v) = j.get("lr_shira") {
+            c.lr_shira = v.as_f64().ok_or("lr_shira: expected number")?;
+        }
+        if let Some(v) = j.get("lr_lora") {
+            c.lr_lora = v.as_f64().ok_or("lr_lora: expected number")?;
+        }
+        if let Some(v) = j.get("report_dir") {
+            c.report_dir = v.as_str().ok_or("report_dir: expected string")?.to_string();
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let j = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Apply CLI overrides (`--seed`, `--steps`, `--fast`, `--config`).
+    pub fn from_args(args: &Args) -> Result<Self, String> {
+        let mut c = if let Some(path) = args.get("config") {
+            Self::load(path)?
+        } else if args.has("fast") {
+            Self::fast()
+        } else {
+            Self::default()
+        };
+        c.seed = args.get_u64("seed", c.seed).map_err(|e| e.to_string())?;
+        c.adapter_steps = args
+            .get_usize("steps", c.adapter_steps)
+            .map_err(|e| e.to_string())?;
+        c.pretrain_steps = args
+            .get_usize("pretrain-steps", c.pretrain_steps)
+            .map_err(|e| e.to_string())?;
+        c.eval_examples = args
+            .get_usize("eval-examples", c.eval_examples)
+            .map_err(|e| e.to_string())?;
+        c.trace_len = args
+            .get_usize("trace-len", c.trace_len)
+            .map_err(|e| e.to_string())?;
+        if let Some(dir) = args.get("report-dir") {
+            c.report_dir = dir.to_string();
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.adapter_steps == 0 {
+            return Err("adapter_steps must be > 0".into());
+        }
+        if self.eval_examples == 0 {
+            return Err("eval_examples must be > 0".into());
+        }
+        if !(self.lr_shira > 0.0 && self.lr_lora > 0.0) {
+            return Err("learning rates must be positive".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("adapter_steps", Json::num(self.adapter_steps as f64)),
+            ("pretrain_steps", Json::num(self.pretrain_steps as f64)),
+            ("eval_examples", Json::num(self.eval_examples as f64)),
+            (
+                "style_eval_batches",
+                Json::num(self.style_eval_batches as f64),
+            ),
+            ("lr_shira", Json::num(self.lr_shira)),
+            ("lr_lora", Json::num(self.lr_lora)),
+            ("trace_len", Json::num(self.trace_len as f64)),
+            ("cache_bytes", Json::num(self.cache_bytes as f64)),
+            ("report_dir", Json::str(&self.report_dir)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        RunConfig::default().validate().unwrap();
+        RunConfig::fast().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = RunConfig::default();
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn overrides_from_args() {
+        let argv: Vec<String> = ["--seed", "7", "--steps", "10", "--fast"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = Args::parse(&argv, &[]).unwrap();
+        let c = RunConfig::from_args(&args).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.adapter_steps, 10);
+        assert_eq!(c.pretrain_steps, RunConfig::fast().pretrain_steps);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let j = json::parse(r#"{"adapter_steps": 0}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = json::parse(r#"{"seed": 9}"#).unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.adapter_steps, RunConfig::default().adapter_steps);
+    }
+}

@@ -1,0 +1,304 @@
+//! Dynamic batching with adapter affinity — the scheduling half of the
+//! rapid-switching story.
+//!
+//! Requests are queued per adapter.  The scheduler picks the next batch
+//! with an affinity-plus-aging policy: stay on the active adapter while it
+//! has work (switches are never free, even for SHiRA), but never let
+//! another adapter's head request age beyond `max_wait` picks (starvation
+//! freedom, verified by property test).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::data::trace::Request;
+
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Maximum requests per batch (the compiled artifact's batch dim).
+    pub max_batch: usize,
+    /// Aging bound: a queue whose head has waited this many scheduling
+    /// rounds preempts affinity.
+    pub max_wait_rounds: u64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait_rounds: 4,
+        }
+    }
+}
+
+struct Queue {
+    requests: VecDeque<Request>,
+    /// Scheduling round when the current head arrived in the queue.
+    head_since_round: u64,
+}
+
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    queues: HashMap<String, Queue>,
+    round: u64,
+    pending: usize,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        DynamicBatcher {
+            cfg,
+            queues: HashMap::new(),
+            round: 0,
+            pending: 0,
+        }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        let round = self.round;
+        let q = self
+            .queues
+            .entry(req.adapter.clone())
+            .or_insert_with(|| Queue {
+                requests: VecDeque::new(),
+                head_since_round: round,
+            });
+        if q.requests.is_empty() {
+            q.head_since_round = round;
+        }
+        q.requests.push_back(req);
+        self.pending += 1;
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending == 0
+    }
+
+    /// Pick the next (adapter, batch).  `active` is the adapter currently
+    /// applied to the weights (affinity target).
+    ///
+    /// Invariants (property-tested):
+    /// * every batch is single-adapter;
+    /// * FIFO within an adapter;
+    /// * no queue head waits more than max_wait_rounds once other queues
+    ///   are being served.
+    pub fn next_batch(&mut self, active: Option<&str>) -> Option<(String, Vec<Request>)> {
+        if self.pending == 0 {
+            return None;
+        }
+        self.round += 1;
+        // 1. starvation guard: oldest head beyond the aging bound wins.
+        let mut starving: Option<(&String, u64)> = None;
+        for (name, q) in &self.queues {
+            if q.requests.is_empty() {
+                continue;
+            }
+            let waited = self.round.saturating_sub(q.head_since_round);
+            if waited >= self.cfg.max_wait_rounds {
+                match starving {
+                    Some((_, w)) if w >= waited => {}
+                    _ => starving = Some((name, waited)),
+                }
+            }
+        }
+        let chosen: String = if let Some((name, _)) = starving {
+            name.clone()
+        } else if let Some(a) = active {
+            // 2. affinity: stay on the active adapter while it has work.
+            if self.queues.get(a).map(|q| !q.requests.is_empty()).unwrap_or(false) {
+                a.to_string()
+            } else {
+                self.longest_queue()?
+            }
+        } else {
+            self.longest_queue()?
+        };
+        let q = self.queues.get_mut(&chosen).unwrap();
+        let take = q.requests.len().min(self.cfg.max_batch);
+        let batch: Vec<Request> = q.requests.drain(..take).collect();
+        q.head_since_round = self.round;
+        self.pending -= batch.len();
+        Some((chosen, batch))
+    }
+
+    fn longest_queue(&self) -> Option<String> {
+        self.queues
+            .iter()
+            .filter(|(_, q)| !q.requests.is_empty())
+            .max_by_key(|(name, q)| (q.requests.len(), std::cmp::Reverse(name.as_str())))
+            .map(|(name, _)| name.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+    use crate::util::rng::Rng;
+
+    fn req(id: u64, adapter: &str) -> Request {
+        Request {
+            id,
+            adapter: adapter.to_string(),
+            arrival_us: id,
+            payload_seed: id,
+        }
+    }
+
+    #[test]
+    fn batches_are_single_adapter_and_fifo() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait_rounds: 100,
+        });
+        for i in 0..10 {
+            b.push(req(i, if i % 2 == 0 { "a" } else { "b" }));
+        }
+        let mut seen: HashMap<String, u64> = HashMap::new();
+        while let Some((name, batch)) = b.next_batch(None) {
+            assert!(batch.len() <= 4);
+            for r in &batch {
+                assert_eq!(r.adapter, name);
+                if let Some(&prev) = seen.get(&name) {
+                    assert!(r.id > prev, "FIFO violated in {name}");
+                }
+                seen.insert(name.clone(), r.id);
+            }
+        }
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn affinity_prefers_active_adapter() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait_rounds: 100,
+        });
+        for i in 0..4 {
+            b.push(req(i, "a"));
+        }
+        for i in 4..12 {
+            b.push(req(i, "b")); // longer queue
+        }
+        let (name, _) = b.next_batch(Some("a")).unwrap();
+        assert_eq!(name, "a"); // affinity beats queue length
+        let (name, _) = b.next_batch(Some("a")).unwrap();
+        assert_eq!(name, "a");
+        let (name, _) = b.next_batch(Some("a")).unwrap();
+        assert_eq!(name, "b"); // a drained
+    }
+
+    #[test]
+    fn aging_preempts_affinity() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 1,
+            max_wait_rounds: 3,
+        });
+        for i in 0..10 {
+            b.push(req(i, "hot"));
+        }
+        b.push(req(100, "cold"));
+        let mut served_cold_at = None;
+        for round in 0..8 {
+            let (name, _) = b.next_batch(Some("hot")).unwrap();
+            if name == "cold" {
+                served_cold_at = Some(round);
+                break;
+            }
+        }
+        assert!(
+            served_cold_at.is_some() && served_cold_at.unwrap() <= 4,
+            "cold starved: {served_cold_at:?}"
+        );
+    }
+
+    #[test]
+    fn empty_batcher_returns_none() {
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        assert!(b.next_batch(None).is_none());
+        assert!(b.next_batch(Some("x")).is_none());
+    }
+
+    #[test]
+    fn prop_all_requests_served_exactly_once() {
+        pt::forall(
+            13,
+            30,
+            |r: &mut Rng| {
+                let n = 1 + r.below(60);
+                (0..n as u64)
+                    .map(|i| (i, r.below(4)))
+                    .collect::<Vec<(u64, usize)>>()
+            },
+            |reqs| {
+                let mut b = DynamicBatcher::new(BatcherConfig {
+                    max_batch: 3,
+                    max_wait_rounds: 2,
+                });
+                for &(id, a) in reqs {
+                    b.push(req(id, &format!("a{a}")));
+                }
+                let mut served = Vec::new();
+                let mut active: Option<String> = None;
+                let mut guard = 0;
+                while let Some((name, batch)) = b.next_batch(active.as_deref()) {
+                    served.extend(batch.iter().map(|r| r.id));
+                    active = Some(name);
+                    guard += 1;
+                    if guard > 500 {
+                        return false;
+                    }
+                }
+                let mut ids: Vec<u64> = served;
+                ids.sort_unstable();
+                ids == reqs.iter().map(|&(id, _)| id).collect::<Vec<_>>()
+            },
+        );
+    }
+
+    #[test]
+    fn prop_no_head_waits_past_bound_plus_slack() {
+        // Once scheduling begins, a nonempty queue's head is served within
+        // max_wait_rounds + (number of adapters) rounds.
+        pt::forall(
+            17,
+            20,
+            |r: &mut Rng| (0..40u64).map(|i| (i, r.below(3))).collect::<Vec<_>>(),
+            |reqs| {
+                let max_wait = 3u64;
+                let mut b = DynamicBatcher::new(BatcherConfig {
+                    max_batch: 2,
+                    max_wait_rounds: max_wait,
+                });
+                for &(id, a) in reqs {
+                    b.push(req(id, &format!("a{a}")));
+                }
+                let mut active: Option<String> = None;
+                let mut rounds_since: HashMap<String, u64> = HashMap::new();
+                while let Some((name, _batch)) = b.next_batch(active.as_deref()) {
+                    for (k, v) in rounds_since.iter_mut() {
+                        if k != &name {
+                            *v += 1;
+                        }
+                    }
+                    rounds_since.insert(name.clone(), 0);
+                    active = Some(name);
+                    // drop drained queues from the wait ledger
+                    rounds_since.retain(|k, _| {
+                        b.queues
+                            .get(k)
+                            .map(|q| !q.requests.is_empty())
+                            .unwrap_or(false)
+                    });
+                    // no other nonempty queue may exceed the bound + slack
+                    if rounds_since.values().any(|&v| v > max_wait + 4) {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+}

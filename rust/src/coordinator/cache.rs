@@ -1,0 +1,208 @@
+//! Byte-budgeted LRU adapter cache — on-device adapter storage management
+//! for the rapid-switching serving loop (the paper's mobile deployment
+//! story: many adapters on flash, few resident in RAM).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Cached entry: the decoded adapter plus its resident byte cost.
+pub struct CacheEntry<T> {
+    pub value: Arc<T>,
+    pub bytes: usize,
+}
+
+pub struct LruCache<T> {
+    capacity_bytes: usize,
+    used_bytes: usize,
+    map: HashMap<String, CacheEntry<T>>,
+    /// LRU order: front = coldest.
+    order: Vec<String>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl<T> LruCache<T> {
+    pub fn new(capacity_bytes: usize) -> Self {
+        LruCache {
+            capacity_bytes,
+            used_bytes: 0,
+            map: HashMap::new(),
+            order: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    fn touch(&mut self, key: &str) {
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            let k = self.order.remove(pos);
+            self.order.push(k);
+        }
+    }
+
+    pub fn get(&mut self, key: &str) -> Option<Arc<T>> {
+        if self.map.contains_key(key) {
+            self.hits += 1;
+            self.touch(key);
+            Some(Arc::clone(&self.map[key].value))
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Insert (evicting LRU entries until the budget fits).  Entries larger
+    /// than the whole budget are admitted alone (budget temporarily
+    /// exceeded is a policy choice: serving must not fail).
+    pub fn put(&mut self, key: &str, value: T, bytes: usize) -> Arc<T> {
+        if let Some(old) = self.map.remove(key) {
+            self.used_bytes -= old.bytes;
+            self.order.retain(|k| k != key);
+        }
+        while !self.order.is_empty() && self.used_bytes + bytes > self.capacity_bytes {
+            let coldest = self.order.remove(0);
+            if let Some(e) = self.map.remove(&coldest) {
+                self.used_bytes -= e.bytes;
+                self.evictions += 1;
+            }
+        }
+        let arc = Arc::new(value);
+        self.map.insert(
+            key.to_string(),
+            CacheEntry {
+                value: Arc::clone(&arc),
+                bytes,
+            },
+        );
+        self.used_bytes += bytes;
+        self.order.push(key.to_string());
+        arc
+    }
+
+    /// Fetch or build-and-insert.
+    pub fn get_or_insert_with(
+        &mut self,
+        key: &str,
+        build: impl FnOnce() -> (T, usize),
+    ) -> Arc<T> {
+        if let Some(v) = self.get(key) {
+            return v;
+        }
+        let (value, bytes) = build();
+        self.put(key, value, bytes)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+
+    #[test]
+    fn hit_and_miss_counting() {
+        let mut c: LruCache<u32> = LruCache::new(1000);
+        assert!(c.get("a").is_none());
+        c.put("a", 1, 100);
+        assert_eq!(*c.get("a").unwrap(), 1);
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.hit_rate(), 0.5);
+    }
+
+    #[test]
+    fn evicts_lru_when_over_budget() {
+        let mut c: LruCache<u32> = LruCache::new(250);
+        c.put("a", 1, 100);
+        c.put("b", 2, 100);
+        let _ = c.get("a"); // a becomes hottest
+        c.put("c", 3, 100); // must evict b
+        assert!(c.get("b").is_none());
+        assert!(c.get("a").is_some());
+        assert!(c.get("c").is_some());
+        assert_eq!(c.evictions, 1);
+        assert!(c.used_bytes() <= 250);
+    }
+
+    #[test]
+    fn oversized_entry_admitted_alone() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        c.put("big", 1, 500);
+        assert!(c.get("big").is_some());
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn replace_updates_bytes() {
+        let mut c: LruCache<u32> = LruCache::new(300);
+        c.put("a", 1, 100);
+        c.put("a", 2, 200);
+        assert_eq!(c.used_bytes(), 200);
+        assert_eq!(*c.get("a").unwrap(), 2);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn get_or_insert_builds_once() {
+        let mut c: LruCache<u32> = LruCache::new(300);
+        let mut builds = 0;
+        for _ in 0..3 {
+            let v = c.get_or_insert_with("k", || {
+                builds += 1;
+                (7, 10)
+            });
+            assert_eq!(*v, 7);
+        }
+        assert_eq!(builds, 1);
+    }
+
+    #[test]
+    fn prop_used_bytes_invariant() {
+        // After any operation sequence, used_bytes == sum of live entries
+        // and (when >1 entry) stays within budget.
+        pt::forall(
+            11,
+            40,
+            |r| {
+                let n = 1 + r.below(30);
+                (0..n)
+                    .map(|_| (r.below(6), 1 + r.below(120)))
+                    .collect::<Vec<(usize, usize)>>()
+            },
+            |ops| {
+                let mut c: LruCache<usize> = LruCache::new(256);
+                for &(key, bytes) in ops {
+                    c.put(&format!("k{key}"), key, bytes);
+                }
+                let sum: usize = c
+                    .order
+                    .iter()
+                    .map(|k| c.map.get(k).map(|e| e.bytes).unwrap_or(0))
+                    .sum();
+                sum == c.used_bytes && c.map.len() == c.order.len()
+            },
+        );
+    }
+}

@@ -1,0 +1,99 @@
+//! Serving metrics: stage timers, switch counters, latency distributions.
+
+use crate::util::stats::{LatencyHist, Moments, Sample};
+
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// Per-switch weight-mutation time (scatter or fuse), microseconds.
+    pub switch_us: Sample,
+    /// Per-batch model execution time, microseconds.
+    pub exec_us: Sample,
+    /// Per-request end-to-end processing latency (switch share + exec).
+    pub request_latency: LatencyHist,
+    /// Batch occupancy (requests per executed batch, before padding).
+    pub batch_fill: Moments,
+    pub switches: u64,
+    pub batches: u64,
+    pub requests: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(
+        &mut self,
+        n_requests: usize,
+        switched: bool,
+        switch_us: f64,
+        exec_us: f64,
+    ) {
+        self.batches += 1;
+        self.requests += n_requests as u64;
+        self.batch_fill.push(n_requests as f64);
+        if switched {
+            self.switches += 1;
+            self.switch_us.push(switch_us);
+        }
+        self.exec_us.push(exec_us);
+        let per_request = (switch_us + exec_us) / n_requests.max(1) as f64;
+        for _ in 0..n_requests {
+            self.request_latency.record_us(per_request);
+        }
+    }
+
+    pub fn summary(&mut self, wall_secs: f64) -> String {
+        let thr = self.requests as f64 / wall_secs.max(1e-9);
+        format!(
+            "requests={} batches={} switches={} fill={:.2}\n\
+             switch: mean={:.1}us p50={:.1}us | exec: mean={:.1}us\n\
+             request latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
+             throughput={:.1} req/s",
+            self.requests,
+            self.batches,
+            self.switches,
+            self.batch_fill.mean(),
+            self.switch_us.mean(),
+            if self.switch_us.is_empty() {
+                0.0
+            } else {
+                self.switch_us.percentile(50.0)
+            },
+            self.exec_us.mean(),
+            self.request_latency.mean_us(),
+            self.request_latency.percentile_us(50.0),
+            self.request_latency.percentile_us(99.0),
+            thr
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let mut m = ServeMetrics::new();
+        m.record_batch(8, true, 100.0, 1000.0);
+        m.record_batch(4, false, 0.0, 900.0);
+        assert_eq!(m.requests, 12);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.switches, 1);
+        assert_eq!(m.switch_us.len(), 1);
+        assert_eq!(m.exec_us.len(), 2);
+        assert!((m.batch_fill.mean() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_formats() {
+        let mut m = ServeMetrics::new();
+        m.record_batch(8, true, 50.0, 500.0);
+        let s = m.summary(1.0);
+        assert!(s.contains("requests=8"));
+        assert!(s.contains("throughput"));
+    }
+}

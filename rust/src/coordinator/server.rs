@@ -1,0 +1,421 @@
+//! The serving loop: router → affinity batcher → switch engine → PJRT
+//! executor, with byte-budgeted adapter caching and full metrics.
+//!
+//! This is the deployment the paper argues for (Appendix A): one resident
+//! copy of the base weights, many adapters on "flash" (the encoded-bytes
+//! store), rapid in-place switching on the request path.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::cache::LruCache;
+use super::metrics::ServeMetrics;
+use super::switch::{Policy, SwitchEngine};
+use crate::adapter::{io, LoraAdapter, ShiraAdapter};
+use crate::data::trace::Request;
+use crate::model::weights::WeightStore;
+use crate::runtime::manifest::LoraSeg;
+use crate::runtime::{HostValue, Runtime};
+use crate::util::rng::Rng;
+
+/// A decoded adapter of either family.
+#[derive(Clone, Debug)]
+pub enum AnyAdapter {
+    Shira(ShiraAdapter),
+    Lora(LoraAdapter),
+}
+
+impl AnyAdapter {
+    pub fn name(&self) -> &str {
+        match self {
+            AnyAdapter::Shira(a) => &a.name,
+            AnyAdapter::Lora(a) => &a.name,
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        match self {
+            AnyAdapter::Shira(a) => a.nbytes(),
+            AnyAdapter::Lora(a) => a.nbytes(),
+        }
+    }
+}
+
+/// Flash-resident encoded adapters + RAM cache of decoded ones.
+pub struct AdapterStore {
+    flash: HashMap<String, Vec<u8>>,
+    cache: LruCache<AnyAdapter>,
+}
+
+impl AdapterStore {
+    pub fn new(cache_bytes: usize) -> Self {
+        AdapterStore {
+            flash: HashMap::new(),
+            cache: LruCache::new(cache_bytes),
+        }
+    }
+
+    pub fn add_shira(&mut self, a: &ShiraAdapter) {
+        self.flash.insert(a.name.clone(), io::encode_shira(a));
+    }
+
+    pub fn add_lora(&mut self, a: &LoraAdapter) {
+        self.flash.insert(a.name.clone(), io::encode_lora(a));
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.flash.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Fetch (decoding + caching on miss).
+    pub fn fetch(&mut self, name: &str) -> Result<Arc<AnyAdapter>> {
+        if let Some(a) = self.cache.get(name) {
+            return Ok(a);
+        }
+        let bytes = self
+            .flash
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown adapter {name}"))?;
+        let decoded = if let Ok(s) = io::decode_shira(bytes) {
+            AnyAdapter::Shira(s)
+        } else {
+            AnyAdapter::Lora(io::decode_lora(bytes).map_err(|e| anyhow!("{e}"))?)
+        };
+        let bytes_cost = decoded.nbytes();
+        Ok(self.cache.put(name, decoded, bytes_cost))
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits, self.cache.misses)
+    }
+}
+
+/// End-of-run report.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub policy: Policy,
+    pub wall_secs: f64,
+    pub requests: u64,
+    pub batches: u64,
+    pub switches: u64,
+    pub throughput_rps: f64,
+    pub mean_switch_us: f64,
+    pub mean_exec_us: f64,
+    pub p99_latency_us: f64,
+    pub cache_hit_rate: f64,
+    pub summary: String,
+}
+
+pub struct Server<'rt> {
+    rt: &'rt Runtime,
+    pub engine: SwitchEngine,
+    pub store: AdapterStore,
+    batcher: DynamicBatcher,
+    policy: Policy,
+    model: String,
+    alpha: f32,
+}
+
+impl<'rt> Server<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        base: WeightStore,
+        policy: Policy,
+        model: &str,
+        cache_bytes: usize,
+    ) -> Result<Self> {
+        let meta = rt.manifest.model(model).map_err(|e| anyhow!("{e}"))?;
+        let max_batch = meta.dim("batch");
+        Ok(Server {
+            rt,
+            engine: SwitchEngine::new(base),
+            store: AdapterStore::new(cache_bytes),
+            batcher: DynamicBatcher::new(BatcherConfig {
+                max_batch,
+                max_wait_rounds: 4,
+            }),
+            policy,
+            model: model.to_string(),
+            alpha: 1.0,
+        })
+    }
+
+    pub fn set_alpha(&mut self, alpha: f32) {
+        self.alpha = alpha;
+    }
+
+    /// Pack a LoRA adapter into the flat theta the unfused artifact expects.
+    fn pack_lora_theta(a: &LoraAdapter, segs: &[LoraSeg], total: usize) -> Vec<f32> {
+        let mut theta = vec![0.0f32; total];
+        for seg in segs {
+            if let Some(t) = a.find(&seg.name) {
+                theta[seg.a_off..seg.a_off + seg.a_len].copy_from_slice(&t.a.data);
+                theta[seg.b_off..seg.b_off + seg.b_len].copy_from_slice(&t.b.data);
+            }
+        }
+        theta
+    }
+
+    /// Run a full trace to completion; returns the report.
+    pub fn run_trace(&mut self, trace: &[Request]) -> Result<ServeReport> {
+        let meta = self.rt.manifest.model(&self.model).map_err(|e| anyhow!("{e}"))?.clone();
+        let (b, t) = (meta.dim("batch"), meta.dim("seq_len"));
+        let vocab = meta.dim("vocab");
+        let fwd = self.rt.load(&format!("{}_fwd", self.model))?;
+        let unfused = if self.policy == Policy::LoraUnfused {
+            Some(self.rt.load(&format!("{}_fwd_unfused_lora", self.model))?)
+        } else {
+            None
+        };
+        let theta_total = meta.theta_len.get("lora").copied().unwrap_or(0);
+
+        let mut metrics = ServeMetrics::new();
+        let wall0 = Instant::now();
+        for r in trace {
+            self.batcher.push(r.clone());
+        }
+        while let Some((adapter_name, batch)) =
+            self.batcher.next_batch(self.engine.active_name())
+        {
+            // ---- switch stage -------------------------------------------
+            let needs_switch = self.engine.active_name() != Some(adapter_name.as_str());
+            let mut switch_us = 0.0;
+            let mut lora_theta: Option<Vec<f32>> = None;
+            if needs_switch || self.policy == Policy::LoraUnfused {
+                let adapter = self.store.fetch(&adapter_name)?;
+                let t0 = Instant::now();
+                match (&*adapter, self.policy) {
+                    (AnyAdapter::Shira(a), Policy::ShiraScatter) => {
+                        self.engine.switch_to_shira(a, self.alpha);
+                    }
+                    (AnyAdapter::Lora(a), Policy::LoraFuse) => {
+                        self.engine.switch_to_lora(a);
+                    }
+                    (AnyAdapter::Lora(a), Policy::LoraUnfused) => {
+                        // weights stay at base; branches ride the fwd pass
+                        lora_theta =
+                            Some(Self::pack_lora_theta(a, &meta.lora, theta_total));
+                    }
+                    (a, p) => {
+                        return Err(anyhow!(
+                            "adapter {} family does not match policy {}",
+                            a.name(),
+                            p.name()
+                        ))
+                    }
+                }
+                switch_us = t0.elapsed().as_secs_f64() * 1e6;
+            }
+
+            // ---- execute stage ------------------------------------------
+            let t0 = Instant::now();
+            let mut rng = Rng::new(batch[0].payload_seed);
+            let mut tokens = Vec::with_capacity(b * t);
+            for r in &batch {
+                let mut prng = rng.stream(&format!("payload/{}", r.id));
+                for _ in 0..t {
+                    tokens.push(prng.below(vocab) as i32);
+                }
+            }
+            while tokens.len() < b * t {
+                // pad with the last request's stream
+                tokens.push(rng.below(vocab) as i32);
+            }
+            let mut inputs: Vec<HostValue> = meta
+                .params
+                .iter()
+                .map(|(name, shape)| {
+                    HostValue::f32(self.engine.weights.get(name).data.clone(), shape.clone())
+                })
+                .collect();
+            if let Some(theta) = lora_theta {
+                inputs.push(HostValue::f32(theta, vec![theta_total]));
+            }
+            inputs.push(HostValue::i32(tokens, vec![b, t]));
+            let exe = if self.policy == Policy::LoraUnfused {
+                unfused.as_ref().unwrap()
+            } else {
+                &fwd
+            };
+            let out = exe.run(&inputs)?;
+            debug_assert!(out[0].as_f32().iter().all(|x| x.is_finite()));
+            let exec_us = t0.elapsed().as_secs_f64() * 1e6;
+
+            metrics.record_batch(batch.len(), needs_switch, switch_us, exec_us);
+        }
+        let wall = wall0.elapsed().as_secs_f64();
+        let (hits, misses) = self.store.cache_stats();
+        let p99 = metrics.request_latency.percentile_us(99.0);
+        Ok(ServeReport {
+            policy: self.policy,
+            wall_secs: wall,
+            requests: metrics.requests,
+            batches: metrics.batches,
+            switches: metrics.switches,
+            throughput_rps: metrics.requests as f64 / wall.max(1e-9),
+            mean_switch_us: metrics.switch_us.mean(),
+            mean_exec_us: metrics.exec_us.mean(),
+            p99_latency_us: p99,
+            cache_hit_rate: if hits + misses == 0 {
+                0.0
+            } else {
+                hits as f64 / (hits + misses) as f64
+            },
+            summary: metrics.summary(wall),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::sparse::SparseDelta;
+    use crate::adapter::LoraTensor;
+    use crate::data::trace::{generate_trace, TracePattern};
+    use crate::model::tensor::Tensor2;
+    use crate::runtime::manifest::Manifest;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::new(&dir).expect("runtime"))
+        } else {
+            None
+        }
+    }
+
+    fn make_shira(rt: &Runtime, name: &str, seed: u64) -> ShiraAdapter {
+        let meta = rt.manifest.model("llama").unwrap();
+        let mut rng = Rng::new(seed);
+        let tensors = meta
+            .shira
+            .iter()
+            .map(|seg| {
+                let numel = seg.shape.0 * seg.shape.1;
+                let idx = rng.sample_indices(numel, seg.k);
+                let mut d = vec![0.0; seg.k];
+                rng.fill_normal(&mut d, 0.0, 0.01);
+                (
+                    seg.name.clone(),
+                    SparseDelta::new(seg.shape.0, seg.shape.1, idx, d),
+                )
+            })
+            .collect();
+        ShiraAdapter {
+            name: name.into(),
+            strategy: "rand".into(),
+            tensors,
+        }
+    }
+
+    fn make_lora(rt: &Runtime, name: &str, seed: u64) -> LoraAdapter {
+        let meta = rt.manifest.model("llama").unwrap();
+        let mut rng = Rng::new(seed);
+        let tensors = meta
+            .lora
+            .iter()
+            .map(|seg| {
+                let mut a = Tensor2::zeros(seg.shape.0, seg.rank);
+                let mut b = Tensor2::zeros(seg.rank, seg.shape.1);
+                rng.fill_normal(&mut a.data, 0.0, 0.01);
+                rng.fill_normal(&mut b.data, 0.0, 0.01);
+                LoraTensor {
+                    target: seg.name.clone(),
+                    a,
+                    b,
+                }
+            })
+            .collect();
+        LoraAdapter {
+            name: name.into(),
+            scale: rt.manifest.adapter.lora_scale as f32,
+            tensors,
+        }
+    }
+
+    fn serve(policy: Policy, n: usize) -> Option<ServeReport> {
+        let rt = runtime()?;
+        let meta = rt.manifest.model("llama").unwrap();
+        let base = WeightStore::init(&meta.params, 7);
+        let mut server = Server::new(&rt, base, policy, "llama", 1 << 20).unwrap();
+        let names: Vec<String> = (0..3).map(|i| format!("ad{i}")).collect();
+        for (i, name) in names.iter().enumerate() {
+            match policy {
+                Policy::ShiraScatter => {
+                    server.store.add_shira(&make_shira(&rt, name, i as u64))
+                }
+                _ => server.store.add_lora(&make_lora(&rt, name, i as u64)),
+            }
+        }
+        let trace = generate_trace(&names, n, TracePattern::Bursty { burst: 6 }, 1e4, 1);
+        Some(server.run_trace(&trace).unwrap())
+    }
+
+    #[test]
+    fn shira_serving_completes_all_requests() {
+        let Some(rep) = serve(Policy::ShiraScatter, 24) else { return };
+        assert_eq!(rep.requests, 24);
+        assert!(rep.batches >= 3);
+        assert!(rep.switches >= 1);
+        assert!(rep.throughput_rps > 0.0);
+        assert!(rep.summary.contains("requests=24"));
+    }
+
+    #[test]
+    fn lora_fuse_serving_completes() {
+        let Some(rep) = serve(Policy::LoraFuse, 16) else { return };
+        assert_eq!(rep.requests, 16);
+        assert!(rep.mean_switch_us > 0.0);
+    }
+
+    #[test]
+    fn lora_unfused_serving_completes() {
+        let Some(rep) = serve(Policy::LoraUnfused, 16) else { return };
+        assert_eq!(rep.requests, 16);
+    }
+
+    #[test]
+    fn base_weights_restored_after_serving_shira() {
+        let Some(rt) = runtime() else { return };
+        let meta = rt.manifest.model("llama").unwrap();
+        let base = WeightStore::init(&meta.params, 7);
+        let mut server =
+            Server::new(&rt, base.clone(), Policy::ShiraScatter, "llama", 1 << 20)
+                .unwrap();
+        server.store.add_shira(&make_shira(&rt, "a", 1));
+        let trace = generate_trace(
+            &["a".to_string()],
+            8,
+            TracePattern::UniformMix,
+            1e4,
+            2,
+        );
+        server.run_trace(&trace).unwrap();
+        server.engine.revert();
+        assert!(server.engine.weights.bit_equal(&base));
+    }
+
+    #[test]
+    fn policy_family_mismatch_errors() {
+        let Some(rt) = runtime() else { return };
+        let meta = rt.manifest.model("llama").unwrap();
+        let base = WeightStore::init(&meta.params, 7);
+        let mut server =
+            Server::new(&rt, base, Policy::ShiraScatter, "llama", 1 << 20).unwrap();
+        server.store.add_lora(&make_lora(&rt, "l", 1));
+        let trace = generate_trace(
+            &["l".to_string()],
+            4,
+            TracePattern::UniformMix,
+            1e4,
+            3,
+        );
+        assert!(server.run_trace(&trace).is_err());
+    }
+}

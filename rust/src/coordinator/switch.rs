@@ -1,0 +1,341 @@
+//! The switch engine — the paper's rapid-switching contribution (§3.2,
+//! Appendix A/B) implemented over the resident weight store.
+//!
+//! Three serving policies are implemented and benchmarked:
+//!
+//! * `ShiraScatter` — snapshot the k base values on the adapter's support,
+//!   scatter the adapter in, infer, scatter the snapshot back.  O(k) work,
+//!   exact revert.
+//! * `LoraFuse` — the HF load→fuse→infer→unfuse→unload pipeline: dense
+//!   `W += s·AB` / `W -= s·AB` over every target tensor.  O(n·m·r) work,
+//!   revert accumulates float drift.
+//! * `LoraUnfused` — leave branches on the forward path (handled by the
+//!   server via the `llama_fwd_unfused_lora` artifact; no weight mutation).
+
+use std::time::Instant;
+
+use crate::adapter::{LoraAdapter, ShiraAdapter};
+use crate::model::weights::WeightStore;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    ShiraScatter,
+    LoraFuse,
+    LoraUnfused,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::ShiraScatter => "shira-scatter",
+            Policy::LoraFuse => "lora-fuse",
+            Policy::LoraUnfused => "lora-unfused",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        Some(match s {
+            "shira-scatter" | "shira" => Policy::ShiraScatter,
+            "lora-fuse" | "lora" => Policy::LoraFuse,
+            "lora-unfused" | "unfused" => Policy::LoraUnfused,
+            _ => return None,
+        })
+    }
+}
+
+/// Per-stage timings of one switch, mirroring paper Table 5.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SwitchTiming {
+    pub load_us: f64,
+    pub fuse_us: f64,   // scatter-apply for SHiRA
+    pub unfuse_us: f64, // snapshot-restore for SHiRA
+    pub unload_us: f64,
+}
+
+impl SwitchTiming {
+    pub fn total_us(&self) -> f64 {
+        self.load_us + self.fuse_us + self.unfuse_us + self.unload_us
+    }
+}
+
+/// What is currently applied to the resident weights.
+#[derive(Debug)]
+enum Active {
+    None,
+    Shira {
+        name: String,
+        /// (target, snapshot of base values on the adapter's support)
+        snapshots: Vec<(String, Vec<f32>)>,
+        /// the adapter's supports, needed to restore
+        adapter: ShiraAdapter,
+    },
+    Lora {
+        name: String,
+        adapter: LoraAdapter,
+    },
+}
+
+/// Owns the resident base weights and mutates them per adapter.
+pub struct SwitchEngine {
+    pub weights: WeightStore,
+    active: Active,
+    pub switches: u64,
+}
+
+impl SwitchEngine {
+    pub fn new(weights: WeightStore) -> Self {
+        SwitchEngine {
+            weights,
+            active: Active::None,
+            switches: 0,
+        }
+    }
+
+    pub fn active_name(&self) -> Option<&str> {
+        match &self.active {
+            Active::None => None,
+            Active::Shira { name, .. } | Active::Lora { name, .. } => Some(name),
+        }
+    }
+
+    /// Apply a SHiRA adapter at strength `alpha` (reverting whatever was
+    /// active first).  Returns stage timings.
+    pub fn switch_to_shira(&mut self, a: &ShiraAdapter, alpha: f32) -> SwitchTiming {
+        let mut t = self.revert_timing();
+        let t0 = Instant::now();
+        let mut snapshots = Vec::with_capacity(a.tensors.len());
+        for (target, delta) in &a.tensors {
+            let w = self.weights.get_mut(target);
+            snapshots.push((target.clone(), delta.snapshot(w)));
+            delta.apply(w, alpha);
+        }
+        t.fuse_us += t0.elapsed().as_secs_f64() * 1e6;
+        self.active = Active::Shira {
+            name: a.name.clone(),
+            snapshots,
+            adapter: a.clone(),
+        };
+        self.switches += 1;
+        t
+    }
+
+    /// Fuse a LoRA adapter (HF pipeline's fuse stage).
+    pub fn switch_to_lora(&mut self, a: &LoraAdapter) -> SwitchTiming {
+        let mut t = self.revert_timing();
+        let t0 = Instant::now();
+        for lt in &a.tensors {
+            let w = self.weights.get_mut(&lt.target);
+            w.add_outer_product(&lt.a, &lt.b, a.scale);
+        }
+        t.fuse_us += t0.elapsed().as_secs_f64() * 1e6;
+        self.active = Active::Lora {
+            name: a.name.clone(),
+            adapter: a.clone(),
+        };
+        self.switches += 1;
+        t
+    }
+
+    /// Revert to base weights; returns the time spent (unfuse stage).
+    pub fn revert(&mut self) -> SwitchTiming {
+        self.revert_timing()
+    }
+
+    fn revert_timing(&mut self) -> SwitchTiming {
+        let mut t = SwitchTiming::default();
+        let t0 = Instant::now();
+        match std::mem::replace(&mut self.active, Active::None) {
+            Active::None => {}
+            Active::Shira {
+                snapshots, adapter, ..
+            } => {
+                for (target, snap) in &snapshots {
+                    let delta = adapter.find(target).expect("active adapter target");
+                    delta.restore(self.weights.get_mut(target), snap);
+                }
+            }
+            Active::Lora { adapter, .. } => {
+                for lt in &adapter.tensors {
+                    let w = self.weights.get_mut(&lt.target);
+                    w.sub_outer_product(&lt.a, &lt.b, adapter.scale);
+                }
+            }
+        }
+        t.unfuse_us = t0.elapsed().as_secs_f64() * 1e6;
+        t
+    }
+
+    /// Full HF-style pipeline for one adapter visit, with per-stage timers
+    /// (paper Table 5): load (deserialize) → fuse → [caller infers] is
+    /// simulated by apply/revert around a no-op → unfuse → unload (drop).
+    pub fn hf_pipeline_shira(&mut self, bytes: &[u8], alpha: f32) -> SwitchTiming {
+        let t0 = Instant::now();
+        let adapter = crate::adapter::io::decode_shira(bytes).expect("valid adapter");
+        let load_us = t0.elapsed().as_secs_f64() * 1e6;
+        let mut t = self.switch_to_shira(&adapter, alpha);
+        t.load_us = load_us;
+        let mut t2 = self.revert();
+        let t1 = Instant::now();
+        drop(adapter);
+        t2.unload_us = t1.elapsed().as_secs_f64() * 1e6;
+        t.unfuse_us = t2.unfuse_us;
+        t.unload_us = t2.unload_us;
+        t
+    }
+
+    pub fn hf_pipeline_lora(&mut self, bytes: &[u8]) -> SwitchTiming {
+        let t0 = Instant::now();
+        let adapter = crate::adapter::io::decode_lora(bytes).expect("valid adapter");
+        let load_us = t0.elapsed().as_secs_f64() * 1e6;
+        let mut t = self.switch_to_lora(&adapter);
+        t.load_us = load_us;
+        let mut t2 = self.revert();
+        let t1 = Instant::now();
+        drop(adapter);
+        t2.unload_us = t1.elapsed().as_secs_f64() * 1e6;
+        t.unfuse_us = t2.unfuse_us;
+        t.unload_us = t2.unload_us;
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::sparse::SparseDelta;
+    use crate::adapter::{io, LoraTensor};
+    use crate::model::tensor::Tensor2;
+    use crate::util::rng::Rng;
+
+    fn weights() -> WeightStore {
+        WeightStore::init(
+            &[
+                ("l0.wq".into(), vec![32, 32]),
+                ("l0.wk".into(), vec![32, 32]),
+            ],
+            1,
+        )
+    }
+
+    fn shira(rng: &mut Rng, name: &str) -> ShiraAdapter {
+        let mk = |rng: &mut Rng| {
+            let idx = rng.sample_indices(1024, 20);
+            let mut d = vec![0.0; 20];
+            rng.fill_normal(&mut d, 0.0, 0.5);
+            SparseDelta::new(32, 32, idx, d)
+        };
+        ShiraAdapter {
+            name: name.into(),
+            strategy: "rand".into(),
+            tensors: vec![("l0.wq".into(), mk(rng)), ("l0.wk".into(), mk(rng))],
+        }
+    }
+
+    fn lora(rng: &mut Rng, name: &str) -> LoraAdapter {
+        let mut a = Tensor2::zeros(32, 4);
+        let mut b = Tensor2::zeros(4, 32);
+        rng.fill_normal(&mut a.data, 0.0, 0.1);
+        rng.fill_normal(&mut b.data, 0.0, 0.1);
+        LoraAdapter {
+            name: name.into(),
+            scale: 2.0,
+            tensors: vec![LoraTensor {
+                target: "l0.wq".into(),
+                a,
+                b,
+            }],
+        }
+    }
+
+    #[test]
+    fn shira_switch_and_revert_is_bit_exact() {
+        let mut rng = Rng::new(1);
+        let base = weights();
+        let mut eng = SwitchEngine::new(base.clone());
+        let a = shira(&mut rng, "a");
+        eng.switch_to_shira(&a, 1.0);
+        assert_eq!(eng.active_name(), Some("a"));
+        assert!(eng.weights.max_abs_diff(&base) > 0.0);
+        eng.revert();
+        assert!(eng.weights.bit_equal(&base)); // the SHiRA exactness claim
+        assert_eq!(eng.active_name(), None);
+    }
+
+    #[test]
+    fn lora_fuse_unfuse_has_float_drift_but_small() {
+        let mut rng = Rng::new(2);
+        let base = weights();
+        let mut eng = SwitchEngine::new(base.clone());
+        let l = lora(&mut rng, "l");
+        eng.switch_to_lora(&l);
+        eng.revert();
+        let drift = eng.weights.max_abs_diff(&base);
+        assert!(drift < 1e-4, "drift={drift}");
+    }
+
+    #[test]
+    fn switching_between_adapters_reverts_previous() {
+        let mut rng = Rng::new(3);
+        let base = weights();
+        let mut eng = SwitchEngine::new(base.clone());
+        let a = shira(&mut rng, "a");
+        let b = shira(&mut rng, "b");
+        eng.switch_to_shira(&a, 1.0);
+        eng.switch_to_shira(&b, 1.0);
+        assert_eq!(eng.active_name(), Some("b"));
+        // reverting b restores base exactly (a was reverted on switch)
+        eng.revert();
+        assert!(eng.weights.bit_equal(&base));
+        assert_eq!(eng.switches, 2);
+    }
+
+    #[test]
+    fn cross_family_switch_shira_then_lora() {
+        let mut rng = Rng::new(4);
+        let base = weights();
+        let mut eng = SwitchEngine::new(base.clone());
+        eng.switch_to_shira(&shira(&mut rng, "s"), 0.5);
+        eng.switch_to_lora(&lora(&mut rng, "l"));
+        eng.revert();
+        assert!(eng.weights.max_abs_diff(&base) < 1e-4);
+    }
+
+    #[test]
+    fn alpha_scales_the_applied_delta() {
+        let mut rng = Rng::new(5);
+        let base = weights();
+        let a = shira(&mut rng, "a");
+        let mut e1 = SwitchEngine::new(base.clone());
+        let mut e2 = SwitchEngine::new(base.clone());
+        e1.switch_to_shira(&a, 1.0);
+        e2.switch_to_shira(&a, 0.5);
+        let d1 = e1.weights.max_abs_diff(&base);
+        let d2 = e2.weights.max_abs_diff(&base);
+        assert!((d2 - d1 * 0.5).abs() < 1e-5, "{d1} {d2}");
+    }
+
+    #[test]
+    fn hf_pipeline_timings_populated() {
+        let mut rng = Rng::new(6);
+        let base = weights();
+        let mut eng = SwitchEngine::new(base.clone());
+        let sa = shira(&mut rng, "s");
+        let sbytes = io::encode_shira(&sa);
+        let t = eng.hf_pipeline_shira(&sbytes, 1.0);
+        assert!(t.load_us > 0.0);
+        assert!(t.fuse_us > 0.0);
+        assert!(eng.weights.bit_equal(&base));
+        let lbytes = io::encode_lora(&lora(&mut rng, "l"));
+        let t2 = eng.hf_pipeline_lora(&lbytes);
+        assert!(t2.fuse_us > 0.0);
+        assert!(t2.total_us() >= t2.fuse_us);
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(Policy::parse("shira"), Some(Policy::ShiraScatter));
+        assert_eq!(Policy::parse("lora-fuse"), Some(Policy::LoraFuse));
+        assert_eq!(Policy::parse("unfused"), Some(Policy::LoraUnfused));
+        assert_eq!(Policy::parse("x"), None);
+    }
+}

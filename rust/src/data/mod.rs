@@ -1,0 +1,6 @@
+//! Synthetic workloads: commonsense-proxy tasks (S11), style-transfer proxy
+//! (S12), and serving request traces.
+
+pub mod style;
+pub mod tasks;
+pub mod trace;

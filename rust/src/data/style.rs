@@ -1,0 +1,363 @@
+//! Synthetic style-transfer proxy for the vision experiments (DESIGN.md §3).
+//!
+//! `nanosd` maps a content latent z to an "image" vector.  A *style* is an
+//! affine transform in image space (gain, shift, and a style direction) —
+//! the analogue of Bluefire's "blue fire effect" / Paintings' texture.
+//! Concepts are clusters in z-space; each style's training set covers some
+//! concepts and holds others out (the paper's unseen koala/lion prompts).
+//!
+//! Quality metric: SPS (Style-Preference Score), an HPSv2 proxy —
+//! geometric mean of style-match and content-preservation, scaled to the
+//! paper's ~0-40 range.  It is monotone in both failure modes HPSv2
+//! penalizes: missing style and lost/garbled concept.
+
+use crate::util::rng::Rng;
+
+/// Number of distinct content concepts (paper: 9 paintings / 6 bluefire).
+pub const N_CONCEPTS: usize = 9;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Style {
+    Bluefire,
+    Paintings,
+}
+
+pub const ALL_STYLES: [Style; 2] = [Style::Bluefire, Style::Paintings];
+
+impl Style {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Style::Bluefire => "bluefire",
+            Style::Paintings => "paintings",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Style> {
+        ALL_STYLES.iter().copied().find(|x| x.name() == s)
+    }
+
+    /// Concepts included in this style's TRAINING set (others are the
+    /// held-out "unseen concept" prompts, e.g. the koala).
+    pub fn train_concepts(&self) -> std::ops::Range<usize> {
+        match self {
+            Style::Bluefire => 0..6,
+            Style::Paintings => 3..9,
+        }
+    }
+}
+
+/// The synthetic vision world: fixed concept anchors, the ground-truth
+/// content renderer, and the two style transforms.
+#[derive(Clone, Debug)]
+pub struct StyleWorld {
+    pub d_z: usize,
+    pub d_img: usize,
+    /// concept anchors in z-space, (N_CONCEPTS, d_z)
+    anchors: Vec<Vec<f32>>,
+    /// ground-truth content renderer (d_z, d_img), applied as tanh(z M)
+    render: Vec<f32>,
+    /// per-style (gain, direction vector d_img, shift scalar)
+    gains: [f32; 2],
+    dirs: [Vec<f32>; 2],
+}
+
+impl StyleWorld {
+    pub fn new(d_z: usize, d_img: usize, seed: u64) -> Self {
+        let root = Rng::new(seed);
+        let mut anchors = Vec::with_capacity(N_CONCEPTS);
+        let mut ar = root.stream("anchors");
+        for _ in 0..N_CONCEPTS {
+            let mut a = vec![0.0f32; d_z];
+            ar.fill_normal(&mut a, 0.0, 1.0);
+            anchors.push(a);
+        }
+        let mut render = vec![0.0f32; d_z * d_img];
+        root.stream("render")
+            .fill_normal(&mut render, 0.0, 1.0 / (d_z as f32).sqrt());
+        let mut dirs = [vec![0.0f32; d_img], vec![0.0f32; d_img]];
+        root.stream("dir/bluefire").fill_normal(&mut dirs[0], 0.0, 1.0);
+        root.stream("dir/paintings").fill_normal(&mut dirs[1], 0.0, 1.0);
+        StyleWorld {
+            d_z,
+            d_img,
+            anchors,
+            render,
+            gains: [0.6, 0.45],
+            dirs,
+        }
+    }
+
+    /// Sample a content latent for `concept`.
+    pub fn sample_z(&self, concept: usize, rng: &mut Rng) -> Vec<f32> {
+        let a = &self.anchors[concept % N_CONCEPTS];
+        a.iter().map(|&x| x + 0.25 * rng.normal() as f32).collect()
+    }
+
+    /// Ground-truth base ("content") image for z.
+    pub fn base_image(&self, z: &[f32]) -> Vec<f32> {
+        let mut img = vec![0.0f32; self.d_img];
+        for (j, img_j) in img.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (i, &zi) in z.iter().enumerate() {
+                acc += zi * self.render[i * self.d_img + j];
+            }
+            *img_j = acc.tanh();
+        }
+        img
+    }
+
+    fn style_ix(style: Style) -> usize {
+        match style {
+            Style::Bluefire => 0,
+            Style::Paintings => 1,
+        }
+    }
+
+    /// Apply a style to a base image.
+    ///
+    /// Styles are *multiplicative, content-coupled* modulations:
+    /// `y_j = b_j·(1 + s·g·t_j) + 0.3·s·g·t_j` with `t = 0.7·tanh(dir)`.
+    /// An elementwise modulation is a (near-)diagonal transform of image
+    /// space — HIGH RANK, which is precisely the regime the paper argues
+    /// sparse high-rank adapters capture and low-rank adapters cannot
+    /// (§1, Kalajdzievski 2023).  It also couples style to content, so
+    /// independently trained dense adapters interfere when summed (the
+    /// concept-loss mechanism), while sparse supports barely collide.
+    pub fn stylize(&self, base: &[f32], style: Style, strength: f32) -> Vec<f32> {
+        let s = Self::style_ix(style);
+        let g = strength * self.gains[s];
+        base.iter()
+            .zip(self.dirs[s].iter())
+            .map(|(&b, &d)| {
+                let t = 0.7 * d.tanh();
+                b * (1.0 + g * t) + 0.3 * g * t
+            })
+            .collect()
+    }
+
+    /// Target for multi-style generation: both styles at half strength —
+    /// "a koala in blue fire, painted" (paper Figs. 1/4/7).
+    pub fn stylize_both(&self, base: &[f32]) -> Vec<f32> {
+        let once = self.stylize(base, Style::Bluefire, 0.5);
+        self.stylize(&once, Style::Paintings, 0.5)
+    }
+
+    /// Style-match component: how well does `img` reflect `style` applied
+    /// to the content of z?
+    fn match_score(&self, img: &[f32], target: &[f32]) -> f64 {
+        let mse: f64 = img
+            .iter()
+            .zip(target.iter())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / img.len() as f64;
+        (-3.0 * mse).exp()
+    }
+
+    /// SPS — the HPSv2 proxy, in the paper's ~0-40 scale.
+    ///
+    /// style-match: distance to the styled ground truth;
+    /// content-preservation: distance of the de-styled image to the base
+    /// render (detects concept loss independent of style strength).
+    pub fn sps(&self, img: &[f32], z: &[f32], style: Style, strength: f32) -> f64 {
+        let base = self.base_image(z);
+        let target = self.stylize(&base, style, strength);
+        let style_match = self.match_score(img, &target);
+        // de-style: invert the modulation at the nominal strength (detects
+        // concept loss independent of style strength)
+        let s = Self::style_ix(style);
+        let g = strength * self.gains[s];
+        let destyled: Vec<f32> = img
+            .iter()
+            .zip(self.dirs[s].iter())
+            .map(|(&y, &d)| {
+                let t = 0.7 * d.tanh();
+                (y - 0.3 * g * t) / (1.0 + g * t).max(0.15)
+            })
+            .collect();
+        let content = self.match_score(&destyled, &base);
+        40.0 * (style_match * content).sqrt()
+    }
+
+    /// SPS against the dual-style target (multi-adapter evaluation).
+    pub fn sps_multi(&self, img: &[f32], z: &[f32]) -> f64 {
+        let base = self.base_image(z);
+        let target = self.stylize_both(&base);
+        let style_match = self.match_score(img, &target);
+        let content = self.match_score(&base, &base); // = 1; content folded into target here
+        40.0 * (style_match * content).sqrt()
+    }
+}
+
+/// A (z, styled target) supervised pair set for adapter finetuning.
+pub struct StyleDataset {
+    pub style: Style,
+    pub world: StyleWorld,
+    seed: u64,
+}
+
+impl StyleDataset {
+    pub fn new(world: StyleWorld, style: Style, seed: u64) -> Self {
+        StyleDataset { style, world, seed }
+    }
+
+    /// Sample a training batch: concepts limited to the style's train set.
+    pub fn train_batch(&self, batch: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+        let range = self.style.train_concepts();
+        self.batch_from_concepts(batch, rng, |r| {
+            range.start + r.below(range.end - range.start)
+        })
+    }
+
+    /// Validation batch over given concepts (`unseen=true` → held-out).
+    pub fn eval_batch(
+        &self,
+        batch: usize,
+        unseen: bool,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let range = self.style.train_concepts();
+        self.batch_from_concepts(batch, rng, move |r| {
+            if unseen {
+                // concepts outside the training range
+                let mut c = r.below(N_CONCEPTS);
+                while range.contains(&c) {
+                    c = r.below(N_CONCEPTS);
+                }
+                c
+            } else {
+                range.start + r.below(range.end - range.start)
+            }
+        })
+    }
+
+    fn batch_from_concepts(
+        &self,
+        batch: usize,
+        rng: &mut Rng,
+        mut pick: impl FnMut(&mut Rng) -> usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let _ = self.seed;
+        let (dz, dimg) = (self.world.d_z, self.world.d_img);
+        let mut zs = Vec::with_capacity(batch * dz);
+        let mut targets = Vec::with_capacity(batch * dimg);
+        for _ in 0..batch {
+            let c = pick(rng);
+            let z = self.world.sample_z(c, rng);
+            let base = self.world.base_image(&z);
+            let styled = self.world.stylize(&base, self.style, 1.0);
+            zs.extend_from_slice(&z);
+            targets.extend_from_slice(&styled);
+        }
+        (zs, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> StyleWorld {
+        StyleWorld::new(16, 48, 11)
+    }
+
+    #[test]
+    fn base_image_deterministic_and_bounded() {
+        let w = world();
+        let mut rng = Rng::new(1);
+        let z = w.sample_z(0, &mut rng);
+        let a = w.base_image(&z);
+        let b = w.base_image(&z);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn perfect_styled_image_scores_high() {
+        let w = world();
+        let mut rng = Rng::new(2);
+        let z = w.sample_z(1, &mut rng);
+        let styled = w.stylize(&w.base_image(&z), Style::Bluefire, 1.0);
+        let sps = w.sps(&styled, &z, Style::Bluefire, 1.0);
+        assert!(sps > 39.0, "sps={sps}");
+    }
+
+    #[test]
+    fn unstyled_image_scores_lower() {
+        let w = world();
+        let mut rng = Rng::new(3);
+        let z = w.sample_z(2, &mut rng);
+        let base = w.base_image(&z);
+        let styled = w.stylize(&base, Style::Paintings, 1.0);
+        let sps_styled = w.sps(&styled, &z, Style::Paintings, 1.0);
+        let sps_base = w.sps(&base, &z, Style::Paintings, 1.0);
+        assert!(sps_styled > sps_base + 1.0, "{sps_styled} vs {sps_base}");
+    }
+
+    #[test]
+    fn wrong_content_scores_lower() {
+        // concept-loss direction: styled image of a DIFFERENT concept
+        let w = world();
+        let mut rng = Rng::new(4);
+        let z1 = w.sample_z(0, &mut rng);
+        let z2 = w.sample_z(5, &mut rng);
+        let right = w.stylize(&w.base_image(&z1), Style::Bluefire, 1.0);
+        let wrong = w.stylize(&w.base_image(&z2), Style::Bluefire, 1.0);
+        let s_right = w.sps(&right, &z1, Style::Bluefire, 1.0);
+        let s_wrong = w.sps(&wrong, &z1, Style::Bluefire, 1.0);
+        assert!(s_right > s_wrong + 3.0, "{s_right} vs {s_wrong}");
+    }
+
+    #[test]
+    fn alpha_zero_is_base_model_target() {
+        let w = world();
+        let mut rng = Rng::new(5);
+        let z = w.sample_z(3, &mut rng);
+        let base = w.base_image(&z);
+        let s0 = w.stylize(&base, Style::Bluefire, 0.0);
+        assert_eq!(s0, base);
+    }
+
+    #[test]
+    fn dataset_batches_shaped_and_deterministic_world() {
+        let w = world();
+        let ds = StyleDataset::new(w, Style::Bluefire, 7);
+        let mut rng = Rng::new(6);
+        let (z, t) = ds.train_batch(4, &mut rng);
+        assert_eq!(z.len(), 4 * 16);
+        assert_eq!(t.len(), 4 * 48);
+    }
+
+    #[test]
+    fn unseen_eval_concepts_outside_train_range() {
+        let w = world();
+        let ds = StyleDataset::new(w.clone(), Style::Bluefire, 7);
+        let range = Style::Bluefire.train_concepts();
+        // brute-force check: unseen z's are far from train anchors
+        let mut rng = Rng::new(8);
+        let (zs, _) = ds.eval_batch(16, true, &mut rng);
+        for chunk in zs.chunks(w.d_z) {
+            // nearest anchor must be a held-out concept
+            let mut best = (f32::MAX, 0usize);
+            for (c, a) in w.anchors.iter().enumerate() {
+                let d: f32 = chunk.iter().zip(a.iter()).map(|(x, y)| (x - y).powi(2)).sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            assert!(!range.contains(&best.1), "unseen batch drew train concept");
+        }
+    }
+
+    #[test]
+    fn multi_style_target_differs_from_single() {
+        let w = world();
+        let mut rng = Rng::new(9);
+        let z = w.sample_z(4, &mut rng);
+        let base = w.base_image(&z);
+        let both = w.stylize_both(&base);
+        let single = w.stylize(&base, Style::Bluefire, 1.0);
+        let d: f32 = both.iter().zip(single.iter()).map(|(a, b)| (a - b).abs()).sum();
+        assert!(d > 0.1);
+    }
+}

@@ -1,0 +1,483 @@
+//! Synthetic commonsense-reasoning proxy suite (DESIGN.md §3).
+//!
+//! Eight task families stand in for BoolQ / PIQA / SIQA / OBQA / WinoGrande
+//! / HellaSwag / ARC-e / ARC-c.  Each family:
+//!
+//! * draws its surface tokens from a disjoint "dialect" range, so adapters
+//!   trained on different tasks acquire genuinely different circuits
+//!   (the precondition for measuring multi-adapter concept interference);
+//! * is a deterministic function of its tokens (100 % achievable accuracy);
+//! * is evaluated as multiple-choice: the model's logit at the final
+//!   position is compared across the candidate answer tokens.
+//!
+//! The paper trains on a 170K mixed corpus and evaluates per-task
+//! (Tables 2-3), and trains per-task adapters for the fusion study
+//! (Table 4); `mixture()` and `task_split()` mirror those two setups.
+
+use crate::util::rng::Rng;
+
+/// Fixed special tokens (outside every dialect).
+pub const PAD: i32 = 0;
+pub const SEP: i32 = 1;
+pub const QUERY: i32 = 2;
+pub const YES: i32 = 3;
+pub const NO: i32 = 4;
+const DIALECT_BASE: i32 = 16;
+const DIALECT_SIZE: i32 = 28;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    BoolQ,
+    Piqa,
+    Siqa,
+    Obqa,
+    Winogrande,
+    HellaSwag,
+    ArcEasy,
+    ArcChallenge,
+}
+
+pub const ALL_TASKS: [Task; 8] = [
+    Task::BoolQ,
+    Task::Piqa,
+    Task::Siqa,
+    Task::Obqa,
+    Task::Winogrande,
+    Task::HellaSwag,
+    Task::ArcEasy,
+    Task::ArcChallenge,
+];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::BoolQ => "boolq",
+            Task::Piqa => "piqa",
+            Task::Siqa => "siqa",
+            Task::Obqa => "obqa",
+            Task::Winogrande => "winogrande",
+            Task::HellaSwag => "hellaswag",
+            Task::ArcEasy => "arc_e",
+            Task::ArcChallenge => "arc_c",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Task> {
+        ALL_TASKS.iter().copied().find(|t| t.name() == s)
+    }
+
+    fn index(&self) -> i32 {
+        ALL_TASKS.iter().position(|t| t == self).unwrap() as i32
+    }
+
+    /// First token of this task's dialect range.
+    fn base(&self) -> i32 {
+        DIALECT_BASE + self.index() * DIALECT_SIZE
+    }
+
+    /// Dialect token #j (wrapped into the task's range).
+    fn tok(&self, j: i32) -> i32 {
+        self.base() + j.rem_euclid(DIALECT_SIZE)
+    }
+}
+
+/// One multiple-choice example.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub task: Task,
+    /// Input tokens, length = seq_len; the model predicts at the LAST slot.
+    pub tokens: Vec<i32>,
+    /// Gold answer token.
+    pub answer: i32,
+    /// Candidate answer tokens (includes `answer`).
+    pub choices: Vec<i32>,
+}
+
+/// Deterministic per-task parameter tables (mappings, pairings,
+/// permutations) derived from a seed so train and test agree.
+fn task_table(task: Task, seed: u64, len: usize) -> Vec<i32> {
+    let mut rng = Rng::new(seed).stream(&format!("table/{}", task.name()));
+    let mut t: Vec<i32> = (0..len as i32).collect();
+    rng.shuffle(&mut t);
+    t
+}
+
+/// Generate one example.  `rng` drives the content; `seed` fixes the task's
+/// hidden parameter tables (shared across all examples of a run).
+pub fn generate(task: Task, seq_len: usize, seed: u64, rng: &mut Rng) -> Example {
+    assert!(seq_len >= 12, "tasks need seq_len >= 12");
+    let body = seq_len - 2; // room for QUERY marker + answer slot
+    let mut tokens = vec![PAD; seq_len];
+    let (answer, choices);
+    match task {
+        Task::BoolQ => {
+            // Entailment-style: does the probe symbol occur in the premise?
+            // (Associative/attention-friendly — parity-style counting is a
+            // grokking-regime task, unlearnable at adapter scale.)
+            let probe = task.tok(rng.below(8) as i32);
+            tokens[0] = probe;
+            tokens[1] = SEP;
+            for slot in tokens.iter_mut().take(body).skip(2) {
+                *slot = task.tok(8 + rng.below(20) as i32);
+            }
+            let present = rng.below(2) == 0;
+            if present {
+                let p = 2 + rng.below(body - 2);
+                tokens[p] = probe;
+            }
+            answer = if present { YES } else { NO };
+            choices = vec![YES, NO];
+        }
+        Task::Piqa => {
+            // Pairing: which candidate is the partner of the goal token?
+            let pairing = task_table(task, seed, 14);
+            let g = rng.below(14) as i32;
+            let correct = task.tok(14 + pairing[g as usize]);
+            let mut wrong = task.tok(14 + pairing[(g as usize + 1) % 14]);
+            if wrong == correct {
+                wrong = task.tok(14 + pairing[(g as usize + 2) % 14]);
+            }
+            tokens[0] = task.tok(g);
+            tokens[1] = SEP;
+            let flip = rng.below(2) == 0;
+            tokens[2] = if flip { correct } else { wrong };
+            tokens[3] = if flip { wrong } else { correct };
+            for slot in tokens.iter_mut().take(body).skip(4) {
+                *slot = task.tok(rng.below(14) as i32);
+            }
+            answer = correct;
+            choices = vec![correct, wrong];
+        }
+        Task::Siqa => {
+            // Social permutation: answer = p(actor).
+            let p = task_table(task, seed, 9);
+            let actor = rng.below(9) as i32;
+            tokens[0] = task.tok(actor);
+            tokens[1] = SEP;
+            for slot in tokens.iter_mut().take(body).skip(2) {
+                *slot = task.tok(9 + rng.below(10) as i32);
+            }
+            answer = task.tok(19 + p[actor as usize] % 9);
+            let d1 = task.tok(19 + (p[actor as usize] + 1) % 9);
+            let d2 = task.tok(19 + (p[actor as usize] + 2) % 9);
+            choices = vec![answer, d1, d2];
+        }
+        Task::Obqa => {
+            // Fact recall: answer = table[key].
+            let table = task_table(task, seed, 14);
+            let key = rng.below(14) as i32;
+            tokens[0] = task.tok(key);
+            tokens[1] = SEP;
+            for slot in tokens.iter_mut().take(body).skip(2) {
+                *slot = task.tok(rng.below(14) as i32);
+            }
+            tokens[0] = task.tok(key); // key survives the filler
+            answer = task.tok(14 + table[key as usize]);
+            let d1 = task.tok(14 + (table[key as usize] + 3) % 14);
+            choices = vec![answer, d1];
+        }
+        Task::Winogrande => {
+            // Coreference: marker selects entity 1 or entity 2.
+            let e1 = task.tok(rng.below(12) as i32);
+            let mut e2 = task.tok(rng.below(12) as i32);
+            if e2 == e1 {
+                e2 = task.tok((e1 - task.base() + 1) % 12);
+            }
+            let m1 = task.tok(24);
+            let m2 = task.tok(25);
+            let pick_first = rng.below(2) == 0;
+            tokens[0] = e1;
+            tokens[1] = e2;
+            tokens[2] = SEP;
+            tokens[3] = if pick_first { m1 } else { m2 };
+            for slot in tokens.iter_mut().take(body).skip(4) {
+                *slot = task.tok(12 + rng.below(12) as i32);
+            }
+            answer = if pick_first { e1 } else { e2 };
+            choices = vec![e1, e2];
+        }
+        Task::HellaSwag => {
+            // Continuation: chain successor of the last premise token.
+            let succ = task_table(task, seed, 20);
+            let mut cur = rng.below(20) as i32;
+            for slot in tokens.iter_mut().take(body) {
+                *slot = task.tok(cur);
+                cur = succ[cur as usize];
+            }
+            answer = task.tok(cur);
+            let d1 = task.tok((cur + 5) % 20);
+            let d2 = task.tok((cur + 11) % 20);
+            choices = vec![answer, d1, d2];
+        }
+        Task::ArcEasy => {
+            // Single-hop fact lookup: answer = table[key], with distractor
+            // keys in the premise (the model must attend to position 0).
+            let table = task_table(task, seed, 13);
+            let a = rng.below(13) as i32;
+            tokens[0] = task.tok(a);
+            tokens[1] = SEP;
+            for slot in tokens.iter_mut().take(body).skip(2) {
+                *slot = task.tok(rng.below(13) as i32);
+            }
+            tokens[0] = task.tok(a);
+            answer = task.tok(13 + table[a as usize]);
+            let d1 = task.tok(13 + (table[a as usize] + 4) % 13);
+            choices = vec![answer, d1];
+        }
+        Task::ArcChallenge => {
+            // Two-hop composition: answer = tableB[tableA[a]] — harder than
+            // arc_e (the paper's arc_c < arc_e accuracy ordering).
+            let ta = task_table(task, seed, 11);
+            let tb = task_table(task, seed ^ 0xC, 11);
+            let a = rng.below(11) as i32;
+            tokens[0] = task.tok(a);
+            tokens[1] = SEP;
+            for slot in tokens.iter_mut().take(body).skip(2) {
+                *slot = task.tok(rng.below(11) as i32);
+            }
+            tokens[0] = task.tok(a);
+            let hop = tb[ta[a as usize] as usize];
+            answer = task.tok(11 + hop);
+            let d1 = task.tok(11 + (hop + 3) % 11);
+            choices = vec![answer, d1];
+        }
+    }
+    tokens[body] = QUERY;
+    tokens[seq_len - 1] = answer; // training target position (masked in eval)
+    Example {
+        task,
+        tokens,
+        answer,
+        choices,
+    }
+}
+
+/// A training batch in the shape the AOT train steps expect.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<i32>,    // (B, T) inputs
+    pub y: Vec<i32>,    // (B, T) next-token targets
+    pub mask: Vec<f32>, // (B, T) loss mask (answer position only)
+    pub examples: Vec<Example>,
+}
+
+/// Pack examples into a next-token-prediction batch: the model must place
+/// the answer token at the final position; loss is masked to that slot.
+pub fn pack_batch(examples: &[Example], seq_len: usize) -> Batch {
+    let b = examples.len();
+    let mut x = vec![PAD; b * seq_len];
+    let mut y = vec![PAD; b * seq_len];
+    let mut mask = vec![0.0f32; b * seq_len];
+    for (i, ex) in examples.iter().enumerate() {
+        assert_eq!(ex.tokens.len(), seq_len);
+        // inputs: tokens with the answer slot blanked to QUERY
+        for t in 0..seq_len {
+            x[i * seq_len + t] = if t == seq_len - 1 { QUERY } else { ex.tokens[t] };
+        }
+        // next-token targets: shift left; only the answer position scores.
+        for t in 0..seq_len - 1 {
+            y[i * seq_len + t] = ex.tokens[t + 1];
+        }
+        y[i * seq_len + (seq_len - 2)] = ex.answer;
+        mask[i * seq_len + (seq_len - 2)] = 1.0;
+    }
+    Batch {
+        x,
+        y,
+        mask,
+        examples: examples.to_vec(),
+    }
+}
+
+/// Sample a batch from a task mixture (Tables 2-3 training setup).
+pub fn mixture_batch(
+    tasks: &[Task],
+    batch: usize,
+    seq_len: usize,
+    seed: u64,
+    rng: &mut Rng,
+) -> Batch {
+    let examples: Vec<Example> = (0..batch)
+        .map(|_| {
+            let t = *rng.choose(tasks);
+            generate(t, seq_len, seed, rng)
+        })
+        .collect();
+    pack_batch(&examples, seq_len)
+}
+
+/// Fixed evaluation set for one task (disjoint stream from training).
+pub fn eval_set(task: Task, n: usize, seq_len: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Rng::new(seed).stream(&format!("eval/{}", task.name()));
+    (0..n).map(|_| generate(task, seq_len, seed, &mut rng)).collect()
+}
+
+/// Generic "pretraining" stream: bigram chains over the whole vocab, so the
+/// base model learns token statistics but NO task circuits.
+pub fn pretrain_batch(
+    vocab: usize,
+    batch: usize,
+    seq_len: usize,
+    rng: &mut Rng,
+) -> Batch {
+    let mut x = vec![0i32; batch * seq_len];
+    let mut y = vec![0i32; batch * seq_len];
+    let mut mask = vec![0.0f32; batch * seq_len];
+    for i in 0..batch {
+        let mut cur = rng.below(vocab) as i32;
+        for t in 0..seq_len {
+            x[i * seq_len + t] = cur;
+            // bigram successor: deterministic mix + noise
+            let next = if rng.below(4) == 0 {
+                rng.below(vocab) as i32
+            } else {
+                ((cur as usize * 31 + 17) % vocab) as i32
+            };
+            if t + 1 < seq_len {
+                y[i * seq_len + t] = next;
+                mask[i * seq_len + t] = 1.0;
+            }
+            cur = next;
+        }
+    }
+    Batch {
+        x,
+        y,
+        mask,
+        examples: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dialects_are_disjoint() {
+        for (i, a) in ALL_TASKS.iter().enumerate() {
+            for b in ALL_TASKS.iter().skip(i + 1) {
+                let ra = a.base()..a.base() + DIALECT_SIZE;
+                let rb = b.base()..b.base() + DIALECT_SIZE;
+                assert!(ra.end <= rb.start || rb.end <= ra.start);
+            }
+        }
+        // all dialects fit a 256 vocab
+        assert!(DIALECT_BASE + 8 * DIALECT_SIZE <= 256);
+    }
+
+    #[test]
+    fn examples_well_formed() {
+        let mut rng = Rng::new(1);
+        for task in ALL_TASKS {
+            for _ in 0..50 {
+                let ex = generate(task, 32, 7, &mut rng);
+                assert_eq!(ex.tokens.len(), 32);
+                assert!(ex.choices.contains(&ex.answer), "{task:?}");
+                assert!(ex.choices.len() >= 2);
+                // all choices distinct
+                let mut c = ex.choices.clone();
+                c.sort_unstable();
+                c.dedup();
+                assert_eq!(c.len(), ex.choices.len(), "{task:?}");
+                assert!(ex.tokens.iter().all(|&t| (0..256).contains(&t)));
+            }
+        }
+    }
+
+    #[test]
+    fn answers_are_deterministic_functions() {
+        // Same content stream + same table seed => same answers.
+        for task in ALL_TASKS {
+            let mut r1 = Rng::new(5);
+            let mut r2 = Rng::new(5);
+            for _ in 0..20 {
+                let e1 = generate(task, 32, 9, &mut r1);
+                let e2 = generate(task, 32, 9, &mut r2);
+                assert_eq!(e1.tokens, e2.tokens);
+                assert_eq!(e1.answer, e2.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn table_seed_changes_mappings() {
+        // Different hidden-table seeds give different pairings (PIQA).
+        let mut found_diff = false;
+        for trial in 0..10 {
+            let mut r1 = Rng::new(100 + trial);
+            let mut r2 = r1.clone();
+            let e1 = generate(Task::Piqa, 32, 1, &mut r1);
+            let e2 = generate(Task::Piqa, 32, 2, &mut r2);
+            if e1.answer != e2.answer {
+                found_diff = true;
+                break;
+            }
+        }
+        assert!(found_diff);
+    }
+
+    #[test]
+    fn pack_batch_masks_answer_slot_only() {
+        let mut rng = Rng::new(2);
+        let exs: Vec<Example> =
+            (0..4).map(|_| generate(Task::ArcEasy, 32, 3, &mut rng)).collect();
+        let b = pack_batch(&exs, 32);
+        assert_eq!(b.x.len(), 4 * 32);
+        for i in 0..4 {
+            let row = &b.mask[i * 32..(i + 1) * 32];
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+            assert_eq!(row[30], 1.0);
+            assert_eq!(b.y[i * 32 + 30], exs[i].answer);
+            // the answer token never leaks into the input
+            assert_eq!(b.x[i * 32 + 31], QUERY);
+        }
+    }
+
+    #[test]
+    fn mixture_covers_tasks() {
+        let mut rng = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..30 {
+            let b = mixture_batch(&ALL_TASKS, 8, 32, 1, &mut rng);
+            for e in &b.examples {
+                seen.insert(e.task);
+            }
+        }
+        assert_eq!(seen.len(), 8);
+    }
+
+    #[test]
+    fn eval_set_is_stable() {
+        let a = eval_set(Task::BoolQ, 10, 32, 42);
+        let b = eval_set(Task::BoolQ, 10, 32, 42);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
+    #[test]
+    fn pretrain_batch_shapes() {
+        let mut rng = Rng::new(4);
+        let b = pretrain_batch(256, 8, 32, &mut rng);
+        assert_eq!(b.x.len(), 8 * 32);
+        assert!(b.mask.iter().sum::<f32>() > 0.0);
+        assert!(b.x.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn boolq_parity_is_learnable_signal() {
+        // sanity: YES and NO both occur
+        let mut rng = Rng::new(6);
+        let mut yes = 0;
+        let mut no = 0;
+        for _ in 0..200 {
+            let e = generate(Task::BoolQ, 32, 1, &mut rng);
+            if e.answer == YES {
+                yes += 1;
+            } else {
+                no += 1;
+            }
+        }
+        assert!(yes > 20 && no > 20, "yes={yes} no={no}");
+    }
+}

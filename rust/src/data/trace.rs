@@ -1,0 +1,133 @@
+//! Request-trace generation for the serving experiments (Appendix A/B):
+//! streams of inference requests tagged with the adapter they need.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Adapter name ("bluefire", "task/boolq", ...); empty = base model.
+    pub adapter: String,
+    /// Virtual arrival time (microseconds from trace start).
+    pub arrival_us: u64,
+    /// Seed for the request's payload (tokens / latent).
+    pub payload_seed: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TracePattern {
+    /// Each request picks an adapter uniformly — worst case for switching.
+    UniformMix,
+    /// Runs of the same adapter (length ~ `burst`), the mobile-app pattern
+    /// the paper's rapid-switching story targets.
+    Bursty { burst: usize },
+    /// Strict rotation through adapters — adversarial for affinity
+    /// scheduling, maximal switch count.
+    RoundRobin,
+}
+
+/// Generate a trace of `n` requests over `adapters` with Poisson-ish
+/// arrivals at `rate_per_sec`.
+pub fn generate_trace(
+    adapters: &[String],
+    n: usize,
+    pattern: TracePattern,
+    rate_per_sec: f64,
+    seed: u64,
+) -> Vec<Request> {
+    assert!(!adapters.is_empty());
+    let mut rng = Rng::new(seed).stream("trace");
+    let mut out = Vec::with_capacity(n);
+    let mut t_us = 0u64;
+    let mean_gap_us = 1e6 / rate_per_sec;
+    let mut current = 0usize;
+    let mut run_left = 0usize;
+    for id in 0..n {
+        let a = match pattern {
+            TracePattern::UniformMix => rng.below(adapters.len()),
+            TracePattern::RoundRobin => id % adapters.len(),
+            TracePattern::Bursty { burst } => {
+                if run_left == 0 {
+                    current = rng.below(adapters.len());
+                    run_left = 1 + rng.below(2 * burst);
+                }
+                run_left -= 1;
+                current
+            }
+        };
+        // exponential inter-arrival
+        let gap = -mean_gap_us * (1.0 - rng.uniform()).ln();
+        t_us += gap.max(1.0) as u64;
+        out.push(Request {
+            id: id as u64,
+            adapter: adapters[a].clone(),
+            arrival_us: t_us,
+            payload_seed: rng.next_u64(),
+        });
+    }
+    out
+}
+
+/// Number of adapter *switches* an in-order scan of the trace would incur —
+/// the quantity SHiRA's scatter path makes cheap.
+pub fn switch_count(trace: &[Request]) -> usize {
+    trace
+        .windows(2)
+        .filter(|w| w[0].adapter != w[1].adapter)
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("a{i}")).collect()
+    }
+
+    #[test]
+    fn trace_sorted_and_complete() {
+        let t = generate_trace(&names(3), 100, TracePattern::UniformMix, 1000.0, 1);
+        assert_eq!(t.len(), 100);
+        assert!(t.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+        assert!(t.iter().all(|r| r.adapter.starts_with('a')));
+    }
+
+    #[test]
+    fn round_robin_maximizes_switches() {
+        let rr = generate_trace(&names(4), 100, TracePattern::RoundRobin, 1e3, 2);
+        assert_eq!(switch_count(&rr), 99);
+    }
+
+    #[test]
+    fn bursty_reduces_switches() {
+        let b = generate_trace(&names(4), 400, TracePattern::Bursty { burst: 16 }, 1e3, 3);
+        let u = generate_trace(&names(4), 400, TracePattern::UniformMix, 1e3, 3);
+        assert!(
+            switch_count(&b) * 2 < switch_count(&u),
+            "bursty {} vs uniform {}",
+            switch_count(&b),
+            switch_count(&u)
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate_trace(&names(2), 50, TracePattern::UniformMix, 1e3, 9);
+        let b = generate_trace(&names(2), 50, TracePattern::UniformMix, 1e3, 9);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.adapter, y.adapter);
+            assert_eq!(x.arrival_us, y.arrival_us);
+        }
+    }
+
+    #[test]
+    fn uniform_mix_covers_all_adapters() {
+        let t = generate_trace(&names(5), 200, TracePattern::UniformMix, 1e3, 4);
+        let mut seen = std::collections::HashSet::new();
+        for r in &t {
+            seen.insert(r.adapter.clone());
+        }
+        assert_eq!(seen.len(), 5);
+    }
+}

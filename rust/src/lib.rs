@@ -1,0 +1,23 @@
+//! # SHiRA: Sparse High Rank Adapters
+//!
+//! A rapid-switching adapter serving + finetuning framework reproducing
+//! Bhardwaj et al., *"Rapid Switching and Multi-Adapter Fusion via Sparse
+//! High Rank Adapters"* (ICML 2024 W-FMW).
+//!
+//! Three layers (DESIGN.md §2):
+//! * **L1** Pallas kernels + **L2** JAX models live in `python/compile/` and
+//!   are AOT-lowered to HLO text at build time (`make artifacts`).
+//! * **L3** (this crate) owns everything at run time: the PJRT [`runtime`],
+//!   the [`adapter`] algebra (masks, sparse deltas, file format), the
+//!   [`train`] orchestrator, the synthetic [`data`] suites, and the serving
+//!   [`coordinator`] (router → batcher → switch engine → executor).
+
+pub mod adapter;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod repro;
+pub mod runtime;
+pub mod train;
+pub mod util;

@@ -1,0 +1,393 @@
+//! `shira` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info          print manifest/artifact summary
+//!   train         finetune one adapter and save it
+//!   eval          evaluate an adapter file on the task suite
+//!   serve         run a serving trace under a switching policy
+//!   fuse          fuse several SHiRA adapter files
+//!   switch-bench  quick Fig.5-style scatter-vs-fuse sweep
+//!   repro         regenerate a paper table/figure (or `--exp all`)
+
+use anyhow::{anyhow, Result};
+
+use shira::adapter::io;
+use shira::adapter::mask::MaskStrategy;
+use shira::config::RunConfig;
+use shira::coordinator::switch::{Policy, SwitchEngine};
+use shira::coordinator::server::Server;
+use shira::data::tasks::{Task, ALL_TASKS};
+use shira::data::trace::{generate_trace, switch_count, TracePattern};
+use shira::model::weights::WeightStore;
+use shira::repro;
+use shira::runtime::Runtime;
+use shira::train::eval::eval_tasks;
+use shira::train::schedule::Schedule;
+use shira::train::{Trainer, TrainKind};
+use shira::util::cli::Args;
+use shira::util::rng::Rng;
+use shira::runtime::HostValue;
+
+const SUBCOMMANDS: &[&str] = &[
+    "info", "train", "eval", "serve", "fuse", "switch-bench", "repro",
+];
+
+const USAGE: &str = "\
+shira — Sparse High Rank Adapters: rapid-switching adapter framework
+
+USAGE: shira <subcommand> [flags]
+
+  info                             manifest + artifact summary
+  train --kind <lora|dora|shira-{struct,rand,wm,grad,snip}|shira-wm-dora>
+        [--task <name>|mixture] [--steps N] [--out adapter.bin]
+  eval  --adapter <file> [--tasks all|t1,t2] [--eval-examples N]
+  serve --policy <shira|lora-fuse|unfused> [--pattern bursty|uniform|rr]
+        [--trace-len N] [--adapters N]
+  fuse  --out <file> <a.shira> <b.shira> ...
+  switch-bench [--dims 512,1024,2048,4096] [--frac 0.02] [--rank 32]
+  repro --exp <table1..6|fig4|fig5|fig6|fig7|orthogonality|all> [--fast]
+
+Common flags: --seed N --steps N --fast --config cfg.json --report-dir DIR
+";
+
+fn main() {
+    shira::util::log::init();
+    let args = match Args::from_env(SUBCOMMANDS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "info".to_string());
+    if args.has("help") {
+        println!("{USAGE}");
+        return;
+    }
+    let result = dispatch(&sub, &args);
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(sub: &str, args: &Args) -> Result<()> {
+    match sub {
+        "info" => cmd_info(),
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
+        "fuse" => cmd_fuse(args),
+        "switch-bench" => cmd_switch_bench(args),
+        "repro" => cmd_repro(args),
+        other => Err(anyhow!("unknown subcommand {other}\n{USAGE}")),
+    }
+}
+
+fn parse_kind(s: &str) -> Result<TrainKind> {
+    Ok(match s {
+        "lora" => TrainKind::Lora,
+        "dora" => TrainKind::Dora,
+        "full" => TrainKind::Full,
+        "shira-wm-dora" => TrainKind::ShiraDora(MaskStrategy::WeightMagnitude),
+        _ => {
+            if let Some(m) = s.strip_prefix("shira-dense-") {
+                TrainKind::ShiraDense(
+                    MaskStrategy::parse(m).ok_or_else(|| anyhow!("bad mask {m}"))?,
+                )
+            } else if let Some(m) = s.strip_prefix("shira-") {
+                TrainKind::Shira(
+                    MaskStrategy::parse(m).ok_or_else(|| anyhow!("bad mask {m}"))?,
+                )
+            } else {
+                return Err(anyhow!("unknown adapter kind '{s}'"));
+            }
+        }
+    })
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::with_default_artifacts()?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts dir: {}", rt.manifest.dir.display());
+    let mut names: Vec<&String> = rt.manifest.artifacts.keys().collect();
+    names.sort();
+    println!("artifacts ({}):", names.len());
+    for n in names {
+        let a = &rt.manifest.artifacts[n];
+        println!(
+            "  {n:28} inputs={:2} outputs={}",
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    for (name, m) in [
+        ("llama", rt.manifest.model("llama")),
+        ("sd", rt.manifest.model("sd")),
+    ] {
+        let m = m.map_err(|e| anyhow!("{e}"))?;
+        println!(
+            "model {name}: {} params across {} tensors, {} targets",
+            m.total_params(),
+            m.params.len(),
+            m.targets.len()
+        );
+        for (k, v) in [
+            ("shira", m.theta_len.get("shira")),
+            ("lora", m.theta_len.get("lora")),
+            ("dora", m.theta_len.get("dora")),
+        ] {
+            if let Some(v) = v {
+                println!(
+                    "  theta[{k}] = {v} ({:.2}% of model)",
+                    100.0 * *v as f64 / m.total_params() as f64
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args).map_err(|e| anyhow!(e))?;
+    let rt = Runtime::with_default_artifacts()?;
+    let kind = parse_kind(args.get_or("kind", "shira-wm"))?;
+    let base = repro::ensure_llama_base(&rt, &cfg, "llama_a")?;
+    let trainer = Trainer::new(&rt, "llama", base)?;
+    let (b, t) = (trainer.model.dim("batch"), trainer.model.dim("seq_len"));
+    let task_flag = args.get_or("task", "mixture").to_string();
+    let tasks: Vec<Task> = if task_flag == "mixture" {
+        ALL_TASKS.to_vec()
+    } else {
+        vec![Task::parse(&task_flag).ok_or_else(|| anyhow!("unknown task {task_flag}"))?]
+    };
+    let lr = match kind {
+        TrainKind::Lora | TrainKind::Dora => cfg.lr_lora as f32,
+        _ => cfg.lr_shira as f32,
+    };
+    let seed = cfg.seed;
+    let mut data = move |_s: usize, rng: &mut Rng| {
+        let batch = shira::data::tasks::mixture_batch(&tasks, b, t, seed, rng);
+        vec![
+            HostValue::i32(batch.x, vec![b, t]),
+            HostValue::i32(batch.y, vec![b, t]),
+            HostValue::f32(batch.mask, vec![b, t]),
+        ]
+    };
+    let out = trainer.train(
+        kind,
+        cfg.adapter_steps,
+        Schedule::Linear { lr, floor_frac: 0.1 },
+        &mut data,
+        cfg.seed,
+    )?;
+    println!(
+        "{}: loss {:.4} -> {:.4}, {:.2} steps/s, {} trainable params, peak mem {}",
+        out.kind_label,
+        out.first_loss(),
+        out.last_loss(),
+        out.steps_per_sec,
+        out.trainable_params,
+        shira::util::alloc::fmt_bytes(out.peak_bytes)
+    );
+    if let Some(path) = args.get("out") {
+        match kind {
+            TrainKind::Shira(s) => {
+                let a = trainer.export_shira(&out, &task_flag, s);
+                io::save_shira(std::path::Path::new(path), &a)
+                    .map_err(|e| anyhow!("{e}"))?;
+                println!("saved SHiRA adapter ({} bytes payload) -> {path}", a.nbytes());
+            }
+            TrainKind::Lora => {
+                let a = trainer.export_lora(&out, &task_flag);
+                io::save_lora(std::path::Path::new(path), &a)
+                    .map_err(|e| anyhow!("{e}"))?;
+                println!("saved LoRA adapter -> {path}");
+            }
+            _ => println!("(--out supports shira-* and lora kinds)"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args).map_err(|e| anyhow!(e))?;
+    let rt = Runtime::with_default_artifacts()?;
+    let base = repro::ensure_llama_base(&rt, &cfg, "llama_a")?;
+    let mut weights = base.clone();
+    if let Some(path) = args.get("adapter") {
+        let path = std::path::Path::new(path);
+        let mut engine = SwitchEngine::new(weights);
+        if let Ok(a) = io::load_shira(path) {
+            println!("applying SHiRA adapter '{}' ({} nnz)", a.name, a.param_count());
+            engine.switch_to_shira(&a, args.get_f64("alpha", 1.0)? as f32);
+        } else {
+            let a = io::load_lora(path).map_err(|e| anyhow!("{e}"))?;
+            println!("fusing LoRA adapter '{}'", a.name);
+            engine.switch_to_lora(&a);
+        }
+        weights = engine.weights;
+    }
+    let task_flag = args.get_or("tasks", "all");
+    let tasks: Vec<Task> = if task_flag == "all" {
+        ALL_TASKS.to_vec()
+    } else {
+        task_flag
+            .split(',')
+            .map(|t| Task::parse(t).ok_or_else(|| anyhow!("unknown task {t}")))
+            .collect::<Result<_>>()?
+    };
+    let (per, avg) = eval_tasks(&rt, &weights, &tasks, cfg.eval_examples, cfg.seed)?;
+    for (task, acc) in per {
+        println!("{:12} {:5.1}%", task.name(), acc);
+    }
+    println!("{:12} {:5.1}%", "average", avg);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args).map_err(|e| anyhow!(e))?;
+    let rt = Runtime::with_default_artifacts()?;
+    let policy = Policy::parse(args.get_or("policy", "shira"))
+        .ok_or_else(|| anyhow!("bad --policy"))?;
+    let pattern = match args.get_or("pattern", "bursty") {
+        "bursty" => TracePattern::Bursty { burst: 8 },
+        "uniform" => TracePattern::UniformMix,
+        "rr" => TracePattern::RoundRobin,
+        p => return Err(anyhow!("unknown pattern {p}")),
+    };
+    let n_adapters = args.get_usize("adapters", 4)?;
+    let meta = rt.manifest.model("llama").map_err(|e| anyhow!("{e}"))?;
+    let base = WeightStore::init(&meta.params, cfg.seed);
+    let mut server = Server::new(&rt, base, policy, "llama", cfg.cache_bytes)?;
+
+    // synthesize adapters
+    let mut rng = Rng::new(cfg.seed);
+    let names: Vec<String> = (0..n_adapters).map(|i| format!("adapter{i}")).collect();
+    for name in &names {
+        match policy {
+            Policy::ShiraScatter => {
+                let tensors = meta
+                    .shira
+                    .iter()
+                    .map(|seg| {
+                        let numel = seg.shape.0 * seg.shape.1;
+                        let idx = rng.sample_indices(numel, seg.k);
+                        let mut d = vec![0.0f32; seg.k];
+                        rng.fill_normal(&mut d, 0.0, 0.01);
+                        (
+                            seg.name.clone(),
+                            shira::adapter::sparse::SparseDelta::new(
+                                seg.shape.0,
+                                seg.shape.1,
+                                idx,
+                                d,
+                            ),
+                        )
+                    })
+                    .collect();
+                server.store.add_shira(&shira::adapter::ShiraAdapter {
+                    name: name.clone(),
+                    strategy: "rand".into(),
+                    tensors,
+                });
+            }
+            _ => {
+                let tensors = meta
+                    .lora
+                    .iter()
+                    .map(|seg| {
+                        let mut a = shira::model::tensor::Tensor2::zeros(seg.shape.0, seg.rank);
+                        let mut b = shira::model::tensor::Tensor2::zeros(seg.rank, seg.shape.1);
+                        rng.fill_normal(&mut a.data, 0.0, 0.01);
+                        rng.fill_normal(&mut b.data, 0.0, 0.01);
+                        shira::adapter::LoraTensor {
+                            target: seg.name.clone(),
+                            a,
+                            b,
+                        }
+                    })
+                    .collect();
+                server.store.add_lora(&shira::adapter::LoraAdapter {
+                    name: name.clone(),
+                    scale: rt.manifest.adapter.lora_scale as f32,
+                    tensors,
+                });
+            }
+        }
+    }
+    let trace = generate_trace(&names, cfg.trace_len, pattern, 1e4, cfg.seed);
+    println!(
+        "serving {} requests over {} adapters (pattern switches: {}) policy={}",
+        trace.len(),
+        names.len(),
+        switch_count(&trace),
+        policy.name()
+    );
+    let report = server.run_trace(&trace)?;
+    println!("{}", report.summary);
+    Ok(())
+}
+
+fn cmd_fuse(args: &Args) -> Result<()> {
+    let out_path = args
+        .get("out")
+        .ok_or_else(|| anyhow!("--out required"))?
+        .to_string();
+    if args.positional.is_empty() {
+        return Err(anyhow!("give at least one .shira file"));
+    }
+    let adapters: Vec<shira::adapter::ShiraAdapter> = args
+        .positional
+        .iter()
+        .map(|p| io::load_shira(std::path::Path::new(p)).map_err(|e| anyhow!("{p}: {e}")))
+        .collect::<Result<_>>()?;
+    let refs: Vec<&shira::adapter::ShiraAdapter> = adapters.iter().collect();
+    let fused = shira::coordinator::fusion::fuse_shira(&refs, "fused");
+    let report = shira::coordinator::fusion::analyze_shira(&refs);
+    println!(
+        "fused {} adapters: nnz={} overlap={:.4} ataDensity={:.4} collisions={}",
+        adapters.len(),
+        fused.param_count(),
+        report.mean_overlap,
+        report.mean_ata_density,
+        report.collisions
+    );
+    io::save_shira(std::path::Path::new(&out_path), &fused).map_err(|e| anyhow!("{e}"))?;
+    println!("-> {out_path}");
+    Ok(())
+}
+
+fn cmd_switch_bench(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args).map_err(|e| anyhow!(e))?;
+    let dims: Vec<usize> = args
+        .get_or("dims", "512,1024,2048,4096")
+        .split(',')
+        .map(|d| d.parse().map_err(|_| anyhow!("bad dim {d}")))
+        .collect::<Result<_>>()?;
+    let frac = args.get_f64("frac", 0.02)?;
+    let rank = args.get_usize("rank", 32)?;
+    println!("| dim | scatter (us) | fuse (us) | speedup |");
+    println!("|---|---|---|---|");
+    for dim in dims {
+        let s = shira::repro::systems::measure_switch(dim, frac, rank, 10, cfg.seed);
+        println!(
+            "| {} | {:.1} | {:.1} | {:.1}x |",
+            s.dim, s.scatter_us, s.fuse_us, s.speedup
+        );
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let cfg = RunConfig::from_args(args).map_err(|e| anyhow!(e))?;
+    let exp = args.get_or("exp", "all").to_string();
+    let rt = Runtime::with_default_artifacts()?;
+    let reports = repro::run(&rt, &cfg, &exp)?;
+    println!(
+        "\nwrote {} report(s) to {}/",
+        reports.len(),
+        cfg.report_dir
+    );
+    Ok(())
+}

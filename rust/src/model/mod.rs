@@ -1,0 +1,4 @@
+//! Dense tensor + weight-store substrate for the serving-side weight memory.
+
+pub mod tensor;
+pub mod weights;

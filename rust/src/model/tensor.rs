@@ -1,0 +1,208 @@
+//! Dense f32 tensor substrate for the serving-side weight memory.
+//!
+//! This is NOT a general autodiff tensor — the compute graphs live in the
+//! AOT-compiled XLA artifacts.  What lives here is what the paper's
+//! switching benchmarks exercise: contiguous weight storage, the dense
+//! `W += scale * A@B` LoRA fuse (kept deliberately fast — the Fig. 5
+//! baseline must not be a strawman), and elementwise utilities.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor2 {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Tensor2 { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Tensor2 { rows, cols, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// `self += scale * a @ b` — the LoRA fuse baseline (paper Fig. 5).
+    ///
+    /// Rank `r = a.cols` is small (4-64), so the optimal loop order is the
+    /// rank-1 update: for each row i and each k < r, do one vectorizable
+    /// axpy over the contiguous output row.  LLVM autovectorizes the inner
+    /// loop to FMA lanes; no blocking needed because each output row is
+    /// touched exactly once (streaming, cache-friendly).
+    pub fn add_outer_product(&mut self, a: &Tensor2, b: &Tensor2, scale: f32) {
+        assert_eq!(a.rows, self.rows);
+        assert_eq!(b.cols, self.cols);
+        assert_eq!(a.cols, b.rows);
+        let r = a.cols;
+        let m = self.cols;
+        for i in 0..self.rows {
+            let w_row = &mut self.data[i * m..(i + 1) * m];
+            let a_row = &a.data[i * r..(i + 1) * r];
+            for (k, &aik) in a_row.iter().enumerate() {
+                let s = scale * aik;
+                if s == 0.0 {
+                    continue;
+                }
+                let b_row = &b.data[k * m..(k + 1) * m];
+                for (w, &bv) in w_row.iter_mut().zip(b_row.iter()) {
+                    *w += s * bv;
+                }
+            }
+        }
+    }
+
+    /// `self -= scale * a @ b` — LoRA unfuse (the HF pipeline's 4th stage).
+    pub fn sub_outer_product(&mut self, a: &Tensor2, b: &Tensor2, scale: f32) {
+        self.add_outer_product(a, b, -scale);
+    }
+
+    /// Dense matmul (used by tests and the unfused-mode model): C = A @ B.
+    pub fn matmul(a: &Tensor2, b: &Tensor2) -> Tensor2 {
+        assert_eq!(a.cols, b.rows);
+        let mut c = Tensor2::zeros(a.rows, b.cols);
+        let m = b.cols;
+        for i in 0..a.rows {
+            let c_row = &mut c.data[i * m..(i + 1) * m];
+            for k in 0..a.cols {
+                let aik = a.data[i * a.cols + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let b_row = &b.data[k * m..(k + 1) * m];
+                for (cv, &bv) in c_row.iter_mut().zip(b_row.iter()) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+        c
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor2) -> f32 {
+        assert_eq!(self.numel(), other.numel());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random(rng: &mut Rng, n: usize, m: usize) -> Tensor2 {
+        let mut t = Tensor2::zeros(n, m);
+        rng.fill_normal(&mut t.data, 0.0, 1.0);
+        t
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let i3 = Tensor2::from_fn(3, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        let mut r = Rng::new(1);
+        let a = random(&mut r, 3, 3);
+        assert_eq!(Tensor2::matmul(&i3, &a), a);
+        assert_eq!(Tensor2::matmul(&a, &i3), a);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor2::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor2::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = Tensor2::matmul(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn outer_product_matches_matmul() {
+        let mut r = Rng::new(2);
+        let (n, rank, m) = (16, 4, 24);
+        let a = random(&mut r, n, rank);
+        let b = random(&mut r, rank, m);
+        let w0 = random(&mut r, n, m);
+        let mut w = w0.clone();
+        w.add_outer_product(&a, &b, 0.7);
+        let ab = Tensor2::matmul(&a, &b);
+        let want = Tensor2::from_fn(n, m, |i, j| w0.at(i, j) + 0.7 * ab.at(i, j));
+        assert!(w.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn fuse_then_unfuse_is_near_identity() {
+        // The float drift measured by the switch-drift ablation; tiny but
+        // nonzero — SHiRA's snapshot-revert is exact instead.
+        let mut r = Rng::new(3);
+        let a = random(&mut r, 32, 4);
+        let b = random(&mut r, 4, 32);
+        let w0 = random(&mut r, 32, 32);
+        let mut w = w0.clone();
+        w.add_outer_product(&a, &b, 2.0);
+        w.sub_outer_product(&a, &b, 2.0);
+        assert!(w.max_abs_diff(&w0) < 1e-4);
+    }
+
+    #[test]
+    fn zero_scale_is_noop() {
+        let mut r = Rng::new(4);
+        let a = random(&mut r, 8, 2);
+        let b = random(&mut r, 2, 8);
+        let w0 = random(&mut r, 8, 8);
+        let mut w = w0.clone();
+        w.add_outer_product(&a, &b, 0.0);
+        assert_eq!(w, w0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Tensor2::zeros(2, 3);
+        let b = Tensor2::zeros(2, 3);
+        Tensor2::matmul(&a, &b);
+    }
+
+    #[test]
+    fn from_fn_layout_row_major() {
+        let t = Tensor2::from_fn(2, 3, |i, j| (i * 10 + j) as f32);
+        assert_eq!(t.data, vec![0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+        assert_eq!(t.at(1, 2), 12.0);
+    }
+}

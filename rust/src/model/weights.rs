@@ -1,0 +1,177 @@
+//! Named weight store — the serving-side resident copy of the base model,
+//! the object the switch engine mutates in place.
+
+use std::collections::HashMap;
+
+use super::tensor::Tensor2;
+use crate::util::rng::Rng;
+
+/// Ordered, named collection of weight tensors (1-D tensors are stored as
+/// 1×n).  Order matches the AOT manifest's param order so the store can be
+/// marshalled straight into executable inputs.
+#[derive(Clone, Debug)]
+pub struct WeightStore {
+    names: Vec<String>,
+    index: HashMap<String, usize>,
+    tensors: Vec<Tensor2>,
+}
+
+impl WeightStore {
+    pub fn new() -> Self {
+        WeightStore {
+            names: Vec::new(),
+            index: HashMap::new(),
+            tensors: Vec::new(),
+        }
+    }
+
+    /// Initialize from (name, shape) specs with 1/sqrt(fan_in) gaussians for
+    /// matrices and ones for 1-D gains — matching python/compile/params.py.
+    pub fn init(specs: &[(String, Vec<usize>)], seed: u64) -> Self {
+        let rng = Rng::new(seed);
+        let mut store = WeightStore::new();
+        for (name, shape) in specs {
+            let t = match shape.len() {
+                1 => Tensor2::from_vec(1, shape[0], vec![1.0; shape[0]]),
+                2 => {
+                    let mut t = Tensor2::zeros(shape[0], shape[1]);
+                    let std = 1.0 / (shape[0] as f32).sqrt();
+                    let mut stream = rng.stream(name);
+                    stream.fill_normal(&mut t.data, 0.0, std);
+                    t
+                }
+                _ => panic!("unsupported rank for {name}"),
+            };
+            store.insert(name, t);
+        }
+        store
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor2) {
+        assert!(
+            !self.index.contains_key(name),
+            "duplicate weight name {name}"
+        );
+        self.index.insert(name.to_string(), self.tensors.len());
+        self.names.push(name.to_string());
+        self.tensors.push(t);
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor2 {
+        &self.tensors[*self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown weight {name}"))]
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor2 {
+        let i = *self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown weight {name}"));
+        &mut self.tensors[i]
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor2)> {
+        self.names.iter().zip(self.tensors.iter())
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.total_params() * 4
+    }
+
+    /// Bit-exact equality — the serving invariant check after revert.
+    pub fn bit_equal(&self, other: &WeightStore) -> bool {
+        self.names == other.names
+            && self
+                .tensors
+                .iter()
+                .zip(other.tensors.iter())
+                .all(|(a, b)| a.data == b.data)
+    }
+
+    pub fn max_abs_diff(&self, other: &WeightStore) -> f32 {
+        self.tensors
+            .iter()
+            .zip(other.tensors.iter())
+            .map(|(a, b)| a.max_abs_diff(b))
+            .fold(0.0, f32::max)
+    }
+}
+
+impl Default for WeightStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("embed".into(), vec![32, 8]),
+            ("l0.ln1".into(), vec![8]),
+            ("l0.wq".into(), vec![8, 8]),
+        ]
+    }
+
+    #[test]
+    fn init_shapes_and_order() {
+        let s = WeightStore::init(&specs(), 1);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.names(), &["embed", "l0.ln1", "l0.wq"]);
+        assert_eq!(s.get("embed").rows, 32);
+        assert_eq!(s.get("l0.ln1").rows, 1);
+        assert_eq!(s.get("l0.ln1").data, vec![1.0; 8]);
+        assert_eq!(s.total_params(), 32 * 8 + 8 + 64);
+    }
+
+    #[test]
+    fn init_is_seed_deterministic_per_name() {
+        let a = WeightStore::init(&specs(), 7);
+        let b = WeightStore::init(&specs(), 7);
+        let c = WeightStore::init(&specs(), 8);
+        assert!(a.bit_equal(&b));
+        assert!(!a.bit_equal(&c));
+    }
+
+    #[test]
+    fn mutation_via_get_mut() {
+        let mut s = WeightStore::init(&specs(), 1);
+        s.get_mut("l0.wq").data[0] = 42.0;
+        assert_eq!(s.get("l0.wq").data[0], 42.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown weight")]
+    fn unknown_name_panics() {
+        let s = WeightStore::init(&specs(), 1);
+        s.get("nope");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_name_panics() {
+        let mut s = WeightStore::new();
+        s.insert("a", Tensor2::zeros(1, 1));
+        s.insert("a", Tensor2::zeros(1, 1));
+    }
+}

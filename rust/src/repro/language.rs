@@ -1,0 +1,452 @@
+//! Language experiments: Table 2 (LLaMA-7B proxy, all adapter kinds),
+//! Table 3 (LLaMA2-7B proxy), Table 4 (multi-adapter fusion + %Drop).
+
+use anyhow::Result;
+
+use super::{ensure_llama_base, Report};
+use crate::adapter::mask::MaskStrategy;
+use crate::config::RunConfig;
+use crate::coordinator::fusion;
+use crate::coordinator::switch::SwitchEngine;
+use crate::data::tasks::{self, Task, ALL_TASKS};
+use crate::model::weights::WeightStore;
+use crate::runtime::{HostValue, Runtime};
+use crate::train::eval::eval_tasks;
+use crate::train::schedule::Schedule;
+use crate::train::{Trainer, TrainKind, TrainOutcome};
+use crate::util::rng::Rng;
+
+fn llama_data<'a>(
+    tasks_list: &'a [Task],
+    b: usize,
+    t: usize,
+    table_seed: u64,
+) -> impl FnMut(usize, &mut Rng) -> Vec<HostValue> + 'a {
+    move |_step, rng| {
+        let batch = tasks::mixture_batch(tasks_list, b, t, table_seed, rng);
+        vec![
+            HostValue::i32(batch.x, vec![b, t]),
+            HostValue::i32(batch.y, vec![b, t]),
+            HostValue::f32(batch.mask, vec![b, t]),
+        ]
+    }
+}
+
+/// Train one adapter kind on a task mixture; returns outcome + the fused
+/// weights (base with adapter applied) ready for evaluation.
+pub fn train_and_apply(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    base: &WeightStore,
+    kind: TrainKind,
+    tasks_list: &[Task],
+    seed: u64,
+) -> Result<(TrainOutcome, WeightStore)> {
+    let trainer = Trainer::new(rt, "llama", base.clone())?;
+    let (b, t) = (trainer.model.dim("batch"), trainer.model.dim("seq_len"));
+    let lr = match kind {
+        TrainKind::Lora | TrainKind::Dora => cfg.lr_lora as f32,
+        _ => cfg.lr_shira as f32,
+    };
+    let mut data = llama_data(tasks_list, b, t, cfg.seed);
+    let out = trainer.train(
+        kind,
+        cfg.adapter_steps,
+        Schedule::Linear { lr, floor_frac: 0.1 },
+        &mut data,
+        seed,
+    )?;
+    // Apply the trained adapter in FUSED form for evaluation.
+    let weights = apply_outcome(&trainer, kind, &out)?;
+    Ok((out, weights))
+}
+
+/// Apply a trained theta to a copy of the base (fused inference weights).
+pub fn apply_outcome(
+    trainer: &Trainer,
+    kind: TrainKind,
+    out: &TrainOutcome,
+) -> Result<WeightStore> {
+    let mut w = trainer.base.clone();
+    match kind {
+        TrainKind::Shira(s) => {
+            let adapter = trainer.export_shira(out, "tmp", s);
+            let mut engine = SwitchEngine::new(w);
+            engine.switch_to_shira(&adapter, 1.0);
+            w = engine.weights;
+        }
+        TrainKind::Lora => {
+            let adapter = trainer.export_lora(out, "tmp");
+            let mut engine = SwitchEngine::new(w);
+            engine.switch_to_lora(&adapter);
+            w = engine.weights;
+        }
+        TrainKind::Dora => {
+            // W' = mag ⊙_col (W + s·AB)/||W + s·AB||_col
+            let scale = trainer.rt.manifest.adapter.lora_scale as f32;
+            for seg in &trainer.model.dora {
+                let (n, m) = seg.shape;
+                let target = w.get_mut(&seg.name);
+                // dense AB
+                let a = &out.theta[seg.a_off..seg.a_off + seg.a_len];
+                let bmat = &out.theta[seg.b_off..seg.b_off + seg.b_len];
+                let mag =
+                    &out.theta[seg.mag_off.unwrap()..seg.mag_off.unwrap() + m];
+                let r = seg.rank;
+                let mut dir = target.data.clone();
+                for i in 0..n {
+                    for k in 0..r {
+                        let aik = scale * a[i * r + k];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        for j in 0..m {
+                            dir[i * m + j] += aik * bmat[k * m + j];
+                        }
+                    }
+                }
+                // column norms
+                for j in 0..m {
+                    let mut norm = 0.0f32;
+                    for i in 0..n {
+                        norm += dir[i * m + j] * dir[i * m + j];
+                    }
+                    let norm = (norm + 1e-6).sqrt();
+                    for i in 0..n {
+                        target.data[i * m + j] = mag[j] * dir[i * m + j] / norm;
+                    }
+                }
+            }
+        }
+        TrainKind::ShiraDora(_) => {
+            for seg in &trainer.model.shira_dora {
+                let (n, m) = seg.shape;
+                let target = w.get_mut(&seg.name);
+                let mag =
+                    &out.theta[seg.mag_off.unwrap()..seg.mag_off.unwrap() + m];
+                let mut dir = target.data.clone();
+                for j in 0..seg.k {
+                    let local = out.idx[seg.off + j] as usize;
+                    dir[local] = out.theta[seg.off + j];
+                }
+                for jm in 0..m {
+                    let mut norm = 0.0f32;
+                    for i in 0..n {
+                        norm += dir[i * m + jm] * dir[i * m + jm];
+                    }
+                    let norm = (norm + 1e-6).sqrt();
+                    for i in 0..n {
+                        target.data[i * m + jm] = mag[jm] * dir[i * m + jm] / norm;
+                    }
+                }
+            }
+        }
+        TrainKind::ShiraDense(_) => {
+            for seg in &trainer.model.probe {
+                let target = w.get_mut(&seg.name);
+                target
+                    .data
+                    .copy_from_slice(&out.theta[seg.off..seg.off + seg.len]);
+            }
+        }
+        TrainKind::Full => {
+            let mut off = 0;
+            for (name, shape) in trainer.model.params.clone() {
+                let numel: usize = shape.iter().product();
+                w.get_mut(&name)
+                    .data
+                    .copy_from_slice(&out.theta[off..off + numel]);
+                off += numel;
+            }
+        }
+    }
+    Ok(w)
+}
+
+/// %C — fraction of base-model parameters changed in fused mode.
+fn pct_changed(rt: &Runtime, kind: TrainKind, out: &TrainOutcome, total: usize) -> f64 {
+    let meta = rt.manifest.model("llama").expect("meta");
+    match kind {
+        TrainKind::Shira(_) => 100.0 * out.trainable_params as f64 / total as f64,
+        TrainKind::ShiraDora(_) => {
+            // sparse values + column magnitudes
+            100.0 * out.trainable_params as f64 / total as f64
+        }
+        TrainKind::Lora | TrainKind::Dora | TrainKind::ShiraDense(_) => {
+            let changed: usize = meta.probe.iter().map(|s| s.len).sum();
+            100.0 * changed as f64 / total as f64
+        }
+        TrainKind::Full => 100.0,
+    }
+}
+
+fn table_header(rep: &mut Report) {
+    let mut h = String::from("| Method | %Params | %C |");
+    for t in ALL_TASKS {
+        h.push_str(&format!(" {}(↑) |", t.name()));
+    }
+    h.push_str(" Avg(↑) |");
+    rep.line(h);
+    let mut sep = String::from("|---|---|---|");
+    for _ in ALL_TASKS {
+        sep.push_str("---|");
+    }
+    sep.push_str("---|");
+    rep.line(sep);
+}
+
+fn result_row(
+    rep: &mut Report,
+    label: &str,
+    pct_p: f64,
+    pct_c: f64,
+    per: &[(Task, f64)],
+    avg: f64,
+    baseline_avg: Option<f64>,
+) {
+    let mut row = format!("| {label} | {pct_p:.2} | {pct_c:.2} |");
+    for (_, acc) in per {
+        row.push_str(&format!(" {acc:.1} |"));
+    }
+    match baseline_avg {
+        Some(b) => row.push_str(&format!(" {avg:.1} ({:+.1}%) |", avg - b)),
+        None => row.push_str(&format!(" {avg:.1} (+0%) |")),
+    }
+    rep.line(row);
+}
+
+/// Table 2: LLaMA-7B proxy — LoRA vs SHiRA-{Grad,WM,SNIP} vs DoRA vs
+/// SHiRA-WM-DoRA on the combined commonsense mixture.
+pub fn table2(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
+    let base = ensure_llama_base(rt, cfg, "llama_a")?;
+    let total = base.total_params();
+    let mut rep = Report::new(
+        "table2",
+        "Commonsense reasoning (nanollama-A): LoRA vs SHiRA vs DoRA",
+    );
+    table_header(&mut rep);
+    let kinds: Vec<(&str, TrainKind)> = vec![
+        ("LoRA", TrainKind::Lora),
+        ("SHiRA-Grad", TrainKind::Shira(MaskStrategy::Grad)),
+        ("SHiRA-WM", TrainKind::Shira(MaskStrategy::WeightMagnitude)),
+        ("SHiRA-SNIP", TrainKind::Shira(MaskStrategy::Snip)),
+        ("DoRA", TrainKind::Dora),
+        (
+            "SHiRA-WM-DoRA",
+            TrainKind::ShiraDora(MaskStrategy::WeightMagnitude),
+        ),
+    ];
+    let mut lora_avg = None;
+    let mut dora_avg = None;
+    for (i, (label, kind)) in kinds.iter().enumerate() {
+        let (out, weights) = train_and_apply(
+            rt, cfg, &base, *kind, &ALL_TASKS, cfg.seed ^ (10 + i as u64),
+        )?;
+        let (per, avg) = eval_tasks(rt, &weights, &ALL_TASKS, cfg.eval_examples, cfg.seed)?;
+        let baseline = match kind {
+            TrainKind::Lora => {
+                lora_avg = Some(avg);
+                None
+            }
+            TrainKind::Dora => {
+                dora_avg = Some(avg);
+                None
+            }
+            TrainKind::ShiraDora(_) => dora_avg,
+            _ => lora_avg,
+        };
+        result_row(
+            &mut rep,
+            label,
+            100.0 * out.trainable_params as f64 / total as f64,
+            pct_changed(rt, *kind, &out, total),
+            &per,
+            avg,
+            baseline,
+        );
+        crate::log_info!(
+            "table2 {label}: loss {:.3}->{:.3}, avg acc {avg:.1}%",
+            out.first_loss(),
+            out.last_loss()
+        );
+    }
+    rep.line("");
+    rep.line("Paper shape: SHiRA variants ≥ LoRA at %C≈SHiRA-frac vs ≈66% for LoRA;");
+    rep.line("SHiRA-WM-DoRA within a few tenths of DoRA.");
+    rep.write(cfg)?;
+    rep.print(cfg);
+    Ok(vec![rep])
+}
+
+/// Table 3: second base model (LLaMA2-7B proxy) — LoRA vs DoRA vs SHiRA-SNIP.
+pub fn table3(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
+    let base = ensure_llama_base(rt, cfg, "llama_b")?;
+    let total = base.total_params();
+    let mut rep = Report::new(
+        "table3",
+        "Commonsense reasoning (nanollama-B): LoRA vs DoRA vs SHiRA-SNIP",
+    );
+    table_header(&mut rep);
+    let kinds: Vec<(&str, TrainKind)> = vec![
+        ("LoRA", TrainKind::Lora),
+        ("DoRA", TrainKind::Dora),
+        ("SHiRA-SNIP", TrainKind::Shira(MaskStrategy::Snip)),
+    ];
+    let mut lora_avg = None;
+    for (i, (label, kind)) in kinds.iter().enumerate() {
+        let (out, weights) = train_and_apply(
+            rt, cfg, &base, *kind, &ALL_TASKS, cfg.seed ^ (30 + i as u64),
+        )?;
+        let (per, avg) = eval_tasks(rt, &weights, &ALL_TASKS, cfg.eval_examples, cfg.seed)?;
+        let baseline = if matches!(kind, TrainKind::Lora) {
+            lora_avg = Some(avg);
+            None
+        } else {
+            lora_avg
+        };
+        result_row(
+            &mut rep,
+            label,
+            100.0 * out.trainable_params as f64 / total as f64,
+            pct_changed(rt, *kind, &out, total),
+            &per,
+            avg,
+            baseline,
+        );
+    }
+    rep.line("");
+    rep.line("Paper shape: SHiRA-SNIP beats LoRA and lands near DoRA.");
+    rep.write(cfg)?;
+    rep.print(cfg);
+    Ok(vec![rep])
+}
+
+/// Table 4: independently trained per-task adapters, naive multi-adapter
+/// fusion, accuracy drop.
+pub fn table4(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
+    let base = ensure_llama_base(rt, cfg, "llama_b")?;
+    let fusion_tasks = [Task::BoolQ, Task::Piqa, Task::ArcEasy];
+    let mut rep = Report::new(
+        "table4",
+        "Multi-adapter fusion of per-task adapters (BoolQ, PIQA, Arc-e)",
+    );
+    rep.line("| Method | single boolq | single piqa | single arc_e | single avg | multi boolq | multi piqa | multi arc_e | multi avg | %Drop(↓) |");
+    rep.line("|---|---|---|---|---|---|---|---|---|---|");
+
+    // ---- LoRA -----------------------------------------------------------
+    {
+        let mut single = Vec::new();
+        let mut adapters = Vec::new();
+        for (i, &task) in fusion_tasks.iter().enumerate() {
+            let trainer = Trainer::new(rt, "llama", base.clone())?;
+            let (b, t) = (trainer.model.dim("batch"), trainer.model.dim("seq_len"));
+            let mut data = llama_data(std::slice::from_ref(&task), b, t, cfg.seed);
+            let out = trainer.train(
+                TrainKind::Lora,
+                cfg.adapter_steps,
+                Schedule::Linear { lr: cfg.lr_lora as f32, floor_frac: 0.1 },
+                &mut data,
+                cfg.seed ^ (50 + i as u64),
+            )?;
+            let adapter = trainer.export_lora(&out, task.name());
+            let mut engine = SwitchEngine::new(base.clone());
+            engine.switch_to_lora(&adapter);
+            let acc =
+                100.0 * crate::train::eval::eval_task(rt, &engine.weights, task,
+                                                      cfg.eval_examples, cfg.seed)?;
+            single.push(acc);
+            adapters.push(adapter);
+        }
+        // naive multi-LoRA: fuse all three (1/n strength — standard recipe)
+        let mut fused = base.clone();
+        for a in &adapters {
+            for t in &a.tensors {
+                fused
+                    .get_mut(&t.target)
+                    .add_outer_product(&t.a, &t.b, a.scale / adapters.len() as f32);
+            }
+        }
+        let mut multi = Vec::new();
+        for &task in &fusion_tasks {
+            multi.push(100.0 * crate::train::eval::eval_task(
+                rt, &fused, task, cfg.eval_examples, cfg.seed,
+            )?);
+        }
+        emit_fusion_row(&mut rep, "LoRA", &single, &multi);
+    }
+
+    // ---- SHiRA-WM ---------------------------------------------------------
+    {
+        let mut single = Vec::new();
+        let mut adapters = Vec::new();
+        for (i, &task) in fusion_tasks.iter().enumerate() {
+            let trainer = Trainer::new(rt, "llama", base.clone())?;
+            let (b, t) = (trainer.model.dim("batch"), trainer.model.dim("seq_len"));
+            let mut data = llama_data(std::slice::from_ref(&task), b, t, cfg.seed);
+            let out = trainer.train(
+                TrainKind::Shira(MaskStrategy::WeightMagnitude),
+                cfg.adapter_steps,
+                Schedule::Linear { lr: cfg.lr_shira as f32, floor_frac: 0.1 },
+                &mut data,
+                cfg.seed ^ (60 + i as u64),
+            )?;
+            let adapter =
+                trainer.export_shira(&out, task.name(), MaskStrategy::WeightMagnitude);
+            let mut engine = SwitchEngine::new(base.clone());
+            engine.switch_to_shira(&adapter, 1.0);
+            let acc =
+                100.0 * crate::train::eval::eval_task(rt, &engine.weights, task,
+                                                      cfg.eval_examples, cfg.seed)?;
+            single.push(acc);
+            adapters.push(adapter);
+        }
+        let refs: Vec<&crate::adapter::ShiraAdapter> = adapters.iter().collect();
+        let fused_adapter = fusion::fuse_shira(&refs, "fused3");
+        let mut engine = SwitchEngine::new(base.clone());
+        engine.switch_to_shira(&fused_adapter, 1.0);
+        let mut multi = Vec::new();
+        for &task in &fusion_tasks {
+            multi.push(100.0 * crate::train::eval::eval_task(
+                rt, &engine.weights, task, cfg.eval_examples, cfg.seed,
+            )?);
+        }
+        // interference stats as a bonus line
+        let report = fusion::analyze_shira(&refs);
+        emit_fusion_row(&mut rep, "SHiRA-WM", &single, &multi);
+        rep.line("");
+        rep.line(format!(
+            "SHiRA interference: mean support overlap {:.4}, mean AᵀA density {:.4}, collisions {}",
+            report.mean_overlap, report.mean_ata_density, report.collisions
+        ));
+    }
+    rep.line("");
+    rep.line("Paper shape: SHiRA-WM's multi-adapter %Drop ≪ LoRA's (4.4% vs 11.1%).");
+    rep.write(cfg)?;
+    rep.print(cfg);
+    Ok(vec![rep])
+}
+
+fn emit_fusion_row(rep: &mut Report, label: &str, single: &[f64], multi: &[f64]) {
+    let s_avg = single.iter().sum::<f64>() / single.len() as f64;
+    let m_avg = multi.iter().sum::<f64>() / multi.len() as f64;
+    let drop = s_avg - m_avg;
+    rep.line(format!(
+        "| {label} | {:.1} | {:.1} | {:.1} | {s_avg:.1} | {:.1} | {:.1} | {:.1} | {m_avg:.1} | {drop:.2} |",
+        single[0], single[1], single[2], multi[0], multi[1], multi[2]
+    ));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pct_changed_full_is_100() {
+        // pure-logic check via a fake outcome is covered in integration;
+        // here we only pin the fusion-row formatting.
+        let mut rep = Report::new("t", "t");
+        emit_fusion_row(&mut rep, "X", &[80.0, 70.0, 60.0], &[75.0, 65.0, 55.0]);
+        assert!(rep.lines[0].contains("| X |"));
+        assert!(rep.lines[0].contains("5.00"));
+    }
+}

@@ -1,0 +1,215 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §6 index).
+//!
+//! Each driver produces a `Report` (markdown table + config header) that is
+//! printed and written under `reports/`.  Shared infrastructure here:
+//! checkpoint-cached base pretraining and adapter-training helpers.
+
+pub mod language;
+pub mod systems;
+pub mod vision;
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::model::weights::WeightStore;
+use crate::runtime::{HostValue, Runtime};
+use crate::train::schedule::Schedule;
+use crate::train::{checkpoint, Trainer, TrainKind};
+use crate::util::rng::Rng;
+
+/// A rendered experiment report.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub lines: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Self {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            lines: Vec::new(),
+        }
+    }
+
+    pub fn line(&mut self, s: impl Into<String>) {
+        self.lines.push(s.into());
+    }
+
+    pub fn render(&self, cfg: &RunConfig) -> String {
+        let mut out = format!("# {} — {}\n\nconfig: `{}`\n\n", self.id, self.title,
+                              cfg.to_json().to_string_compact());
+        for l in &self.lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write(&self, cfg: &RunConfig) -> Result<PathBuf> {
+        let dir = PathBuf::from(&cfg.report_dir);
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}.md", self.id));
+        std::fs::write(&path, self.render(cfg))?;
+        Ok(path)
+    }
+
+    pub fn print(&self, cfg: &RunConfig) {
+        println!("{}", self.render(cfg));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Base-model preparation (checkpoint-cached)
+// ---------------------------------------------------------------------------
+
+/// Pretrain (or load cached) nanollama base weights.
+///
+/// Pretraining mixes generic bigram text with task-FORMAT exposure under a
+/// different hidden-table seed, mirroring an LLM that has seen text of the
+/// task domains but not the eval mappings (DESIGN.md §3).
+pub fn ensure_llama_base(rt: &Runtime, cfg: &RunConfig, which: &str) -> Result<WeightStore> {
+    let seed = match which {
+        "llama_a" => cfg.seed,
+        "llama_b" => cfg.seed ^ 0xB10C_0BA5E,
+        other => return Err(anyhow!("unknown llama base {other}")),
+    };
+    let path = checkpoint::checkpoint_dir().join(format!(
+        "{which}_s{seed}_p{}.ckpt",
+        cfg.pretrain_steps
+    ));
+    if let Ok(store) = checkpoint::load(&path) {
+        return Ok(store);
+    }
+    let meta = rt.manifest.model("llama").map_err(|e| anyhow!("{e}"))?.clone();
+    let (b, t, v) = (meta.dim("batch"), meta.dim("seq_len"), meta.dim("vocab"));
+    let base = WeightStore::init(&meta.params, seed);
+    let mut trainer = Trainer::new(rt, "llama", base)?;
+    let pretrain_table_seed = seed ^ 0x5EED;
+    let mut data = move |_step: usize, rng: &mut Rng| {
+        let batch = if rng.below(2) == 0 {
+            crate::data::tasks::pretrain_batch(v, b, t, rng)
+        } else {
+            crate::data::tasks::mixture_batch(
+                &crate::data::tasks::ALL_TASKS,
+                b,
+                t,
+                pretrain_table_seed,
+                rng,
+            )
+        };
+        vec![
+            HostValue::i32(batch.x, vec![b, t]),
+            HostValue::i32(batch.y, vec![b, t]),
+            HostValue::f32(batch.mask, vec![b, t]),
+        ]
+    };
+    let out = trainer.train(
+        TrainKind::Full,
+        cfg.pretrain_steps,
+        Schedule::Cosine { lr: 3e-3 },
+        &mut data,
+        seed,
+    )?;
+    crate::log_info!(
+        "pretrained {which}: loss {:.3} -> {:.3} ({:.2} steps/s)",
+        out.first_loss(),
+        out.last_loss(),
+        out.steps_per_sec
+    );
+    trainer.absorb_full_theta(&out.theta);
+    checkpoint::save(&path, &trainer.base)?;
+    Ok(trainer.base)
+}
+
+/// Pretrain (or load cached) nanosd base weights against the style world's
+/// ground-truth content renderer.
+pub fn ensure_sd_base(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    world: &crate::data::style::StyleWorld,
+) -> Result<WeightStore> {
+    let seed = cfg.seed ^ 0x5D;
+    let path = checkpoint::checkpoint_dir().join(format!(
+        "sd_s{seed}_p{}.ckpt",
+        cfg.pretrain_steps
+    ));
+    if let Ok(store) = checkpoint::load(&path) {
+        return Ok(store);
+    }
+    let meta = rt.manifest.model("sd").map_err(|e| anyhow!("{e}"))?.clone();
+    let b = meta.dim("batch");
+    let base = WeightStore::init(&meta.params, seed);
+    let mut trainer = Trainer::new(rt, "sd", base)?;
+    let w = world.clone();
+    let mut data = move |_step: usize, rng: &mut Rng| {
+        let mut zs = Vec::with_capacity(b * w.d_z);
+        let mut imgs = Vec::with_capacity(b * w.d_img);
+        for _ in 0..b {
+            let c = rng.below(crate::data::style::N_CONCEPTS);
+            let z = w.sample_z(c, rng);
+            let img = w.base_image(&z);
+            zs.extend_from_slice(&z);
+            imgs.extend_from_slice(&img);
+        }
+        vec![
+            HostValue::f32(zs, vec![b, w.d_z]),
+            HostValue::f32(imgs, vec![b, w.d_img]),
+        ]
+    };
+    let out = trainer.train(
+        TrainKind::Full,
+        cfg.pretrain_steps,
+        Schedule::Cosine { lr: 5e-3 },
+        &mut data,
+        seed,
+    )?;
+    crate::log_info!(
+        "pretrained sd: loss {:.4} -> {:.4}",
+        out.first_loss(),
+        out.last_loss()
+    );
+    trainer.absorb_full_theta(&out.theta);
+    checkpoint::save(&path, &trainer.base)?;
+    Ok(trainer.base)
+}
+
+/// Shared style world for all vision experiments.
+pub fn style_world(rt: &Runtime, cfg: &RunConfig) -> crate::data::style::StyleWorld {
+    let meta = rt.manifest.model("sd").expect("sd meta");
+    crate::data::style::StyleWorld::new(meta.dim("d_z"), meta.dim("d_img"), cfg.seed ^ 0x57)
+}
+
+/// Run one repro experiment by id.
+pub fn run(rt: &Runtime, cfg: &RunConfig, exp: &str) -> Result<Vec<Report>> {
+    match exp {
+        "table1" => vision::table1(rt, cfg),
+        "fig4" => vision::fig4(rt, cfg),
+        "fig6" => vision::fig6(rt, cfg),
+        "fig7" => vision::fig7(rt, cfg),
+        "table2" => language::table2(rt, cfg),
+        "table3" => language::table3(rt, cfg),
+        "table4" => language::table4(rt, cfg),
+        "table5" => systems::table5(rt, cfg),
+        "table6" => systems::table6(rt, cfg),
+        "fig5" => systems::fig5(cfg),
+        "orthogonality" => systems::orthogonality(rt, cfg),
+        "all" => {
+            let mut all = Vec::new();
+            for e in [
+                "fig5", "table5", "table6", "orthogonality", "table1", "fig4", "fig6",
+                "fig7", "table2", "table3", "table4",
+            ] {
+                all.extend(run(rt, cfg, e)?);
+            }
+            Ok(all)
+        }
+        other => Err(anyhow!(
+            "unknown experiment '{other}' (try table1..6, fig4/5/6/7, orthogonality, all)"
+        )),
+    }
+}

@@ -1,0 +1,293 @@
+//! Systems experiments: Fig. 5 (scatter vs fuse sweep), Table 5 (pipeline
+//! stage latencies), Table 6 (training memory/speed), plus the §3.2
+//! orthogonality analysis.  The cargo benches regenerate Fig. 5/Table 5
+//! with full statistical protocol; these drivers are the quick CLI view.
+
+use anyhow::Result;
+
+use super::{ensure_llama_base, Report};
+use crate::adapter::mask::MaskStrategy;
+use crate::adapter::sparse::SparseDelta;
+use crate::adapter::ShiraAdapter;
+use crate::config::RunConfig;
+use crate::coordinator::fusion;
+use crate::coordinator::switch::SwitchEngine;
+use crate::data::tasks::ALL_TASKS;
+use crate::model::tensor::Tensor2;
+use crate::model::weights::WeightStore;
+use crate::runtime::{HostValue, Runtime};
+use crate::train::schedule::Schedule;
+use crate::train::{Trainer, TrainKind};
+use crate::util::alloc::fmt_bytes;
+use crate::util::rng::Rng;
+
+/// One scatter-vs-fuse measurement at a given dim (Fig. 5's x-axis).
+pub struct SwitchSample {
+    pub dim: usize,
+    pub scatter_us: f64,
+    pub fuse_us: f64,
+    pub speedup: f64,
+}
+
+/// Measure mean scatter and fuse times over `reps` random weights
+/// (paper: 10 randomly initialized weights per dimension).
+pub fn measure_switch(dim: usize, frac: f64, rank: usize, reps: usize, seed: u64) -> SwitchSample {
+    let mut rng = Rng::new(seed);
+    let k = ((dim * dim) as f64 * frac) as usize;
+    let mut scatter_total = 0.0;
+    let mut fuse_total = 0.0;
+    for _ in 0..reps {
+        let mut w = Tensor2::zeros(dim, dim);
+        rng.fill_normal(&mut w.data, 0.0, 1.0);
+        let idx = rng.sample_indices(dim * dim, k);
+        let mut delta = vec![0.0f32; k];
+        rng.fill_normal(&mut delta, 0.0, 0.1);
+        let sd = SparseDelta::new(dim, dim, idx, delta);
+        let mut a = Tensor2::zeros(dim, rank);
+        let mut b = Tensor2::zeros(rank, dim);
+        rng.fill_normal(&mut a.data, 0.0, 0.1);
+        rng.fill_normal(&mut b.data, 0.0, 0.1);
+
+        let t0 = std::time::Instant::now();
+        sd.apply(&mut w, 1.0);
+        scatter_total += t0.elapsed().as_secs_f64() * 1e6;
+
+        let t1 = std::time::Instant::now();
+        w.add_outer_product(&a, &b, 2.0);
+        fuse_total += t1.elapsed().as_secs_f64() * 1e6;
+        std::hint::black_box(&w.data[0]);
+    }
+    let scatter_us = scatter_total / reps as f64;
+    let fuse_us = fuse_total / reps as f64;
+    SwitchSample {
+        dim,
+        scatter_us,
+        fuse_us,
+        speedup: fuse_us / scatter_us.max(1e-9),
+    }
+}
+
+/// Fig. 5: LoRA-fuse vs SHiRA-scatter across tensor dimensions.
+pub fn fig5(cfg: &RunConfig) -> Result<Vec<Report>> {
+    let mut rep = Report::new(
+        "fig5",
+        "SHiRA scatter vs LoRA fuse — mean time per weight tensor (CPU)",
+    );
+    rep.line("| dim | SHiRA scatter (us) | LoRA fuse (us) | speedup |");
+    rep.line("|---|---|---|---|");
+    for dim in [512, 1024, 2048, 4096] {
+        let s = measure_switch(dim, 0.02, 32, 10, cfg.seed);
+        rep.line(format!(
+            "| {} | {:.1} | {:.1} | {:.1}x |",
+            s.dim, s.scatter_us, s.fuse_us, s.speedup
+        ));
+    }
+    rep.line("");
+    rep.line("Paper shape (Fig. 5): speedup grows with dim, ~10x at 4096.");
+    rep.write(cfg)?;
+    rep.print(cfg);
+    Ok(vec![rep])
+}
+
+/// Table 5: HF pipeline stage latencies (load/fuse/unfuse/unload) for a
+/// full model's worth of adapters, SHiRA vs LoRA.
+pub fn table5(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
+    let meta = rt.manifest.model("llama").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let base = WeightStore::init(&meta.params, cfg.seed);
+    let mut rng = Rng::new(cfg.seed ^ 0x7AB1E5);
+
+    // Build one SHiRA and one LoRA adapter covering every target.
+    let shira_tensors: Vec<(String, SparseDelta)> = meta
+        .shira
+        .iter()
+        .map(|seg| {
+            let numel = seg.shape.0 * seg.shape.1;
+            let idx = rng.sample_indices(numel, seg.k);
+            let mut d = vec![0.0f32; seg.k];
+            rng.fill_normal(&mut d, 0.0, 0.1);
+            (
+                seg.name.clone(),
+                SparseDelta::new(seg.shape.0, seg.shape.1, idx, d),
+            )
+        })
+        .collect();
+    let shira = ShiraAdapter {
+        name: "t5-shira".into(),
+        strategy: "rand".into(),
+        tensors: shira_tensors,
+    };
+    let lora_tensors: Vec<crate::adapter::LoraTensor> = meta
+        .lora
+        .iter()
+        .map(|seg| {
+            let mut a = Tensor2::zeros(seg.shape.0, seg.rank);
+            let mut b = Tensor2::zeros(seg.rank, seg.shape.1);
+            rng.fill_normal(&mut a.data, 0.0, 0.1);
+            rng.fill_normal(&mut b.data, 0.0, 0.1);
+            crate::adapter::LoraTensor {
+                target: seg.name.clone(),
+                a,
+                b,
+            }
+        })
+        .collect();
+    let lora = crate::adapter::LoraAdapter {
+        name: "t5-lora".into(),
+        scale: rt.manifest.adapter.lora_scale as f32,
+        tensors: lora_tensors,
+    };
+
+    let shira_bytes = crate::adapter::io::encode_shira(&shira);
+    let lora_bytes = crate::adapter::io::encode_lora(&lora);
+    let mut engine = SwitchEngine::new(base);
+    let reps = 20;
+    let mut acc = [[0.0f64; 4]; 2];
+    for _ in 0..reps {
+        let t = engine.hf_pipeline_shira(&shira_bytes, 1.0);
+        acc[0][0] += t.load_us;
+        acc[0][1] += t.fuse_us;
+        acc[0][2] += t.unfuse_us;
+        acc[0][3] += t.unload_us;
+        let t = engine.hf_pipeline_lora(&lora_bytes);
+        acc[1][0] += t.load_us;
+        acc[1][1] += t.fuse_us;
+        acc[1][2] += t.unfuse_us;
+        acc[1][3] += t.unload_us;
+    }
+    let mut rep = Report::new(
+        "table5",
+        "Pipeline stage latency (load/fuse(apply)/unfuse(revert)/unload), whole model",
+    );
+    rep.line("| Stage | SHiRA (us) | LoRA (us) |");
+    rep.line("|---|---|---|");
+    for (i, stage) in ["load", "fuse", "unfuse", "unload"].iter().enumerate() {
+        rep.line(format!(
+            "| {stage} | {:.1} | {:.1} |",
+            acc[0][i] / reps as f64,
+            acc[1][i] / reps as f64
+        ));
+    }
+    rep.line("");
+    rep.line("Paper shape (Table 5, CPU column): fuse/unfuse dominate for LoRA;");
+    rep.line("SHiRA's apply/revert are a small fraction of LoRA's fuse/unfuse.");
+    rep.write(cfg)?;
+    rep.print(cfg);
+    Ok(vec![rep])
+}
+
+/// Table 6: peak training memory + steps/s per adapter kind.
+pub fn table6(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
+    let base = ensure_llama_base(rt, cfg, "llama_a")?;
+    let trainer = Trainer::new(rt, "llama", base)?;
+    let (b, t) = (trainer.model.dim("batch"), trainer.model.dim("seq_len"));
+    let steps = 20.min(cfg.adapter_steps);
+    let kinds: Vec<(&str, TrainKind)> = vec![
+        ("LoRA-PEFT", TrainKind::Lora),
+        ("DoRA-PEFT", TrainKind::Dora),
+        ("SHiRA-PEFT (sparse, App. D)", TrainKind::Shira(MaskStrategy::WeightMagnitude)),
+        ("SHiRA grad-hook (dense, App. C)", TrainKind::ShiraDense(MaskStrategy::WeightMagnitude)),
+        ("Full FT (pre-LoRA partial-FT bound)", TrainKind::Full),
+    ];
+    let mut rep = Report::new(
+        "table6",
+        "Peak training memory and steps/s per adapter implementation",
+    );
+    rep.line("| Adapter | trainable | peak mem | Δ vs LoRA | steps/s | Δ vs LoRA |");
+    rep.line("|---|---|---|---|---|---|");
+    let mut lora_ref: Option<(usize, f64)> = None;
+    for (i, (label, kind)) in kinds.iter().enumerate() {
+        let mut data = |_step: usize, rng: &mut Rng| {
+            let batch =
+                crate::data::tasks::mixture_batch(&ALL_TASKS, b, t, cfg.seed, rng);
+            vec![
+                HostValue::i32(batch.x, vec![b, t]),
+                HostValue::i32(batch.y, vec![b, t]),
+                HostValue::f32(batch.mask, vec![b, t]),
+            ]
+        };
+        let out = trainer.train(
+            *kind,
+            steps,
+            Schedule::Const(1e-3),
+            &mut data,
+            cfg.seed ^ (70 + i as u64),
+        )?;
+        let (mem, sps) = (out.peak_bytes, out.steps_per_sec);
+        let (dm, ds) = match lora_ref {
+            Some((m0, s0)) => (
+                format!("{:+.1}%", 100.0 * (mem as f64 - m0 as f64) / m0 as f64),
+                format!("{:+.1}%", 100.0 * (sps - s0) / s0),
+            ),
+            None => {
+                lora_ref = Some((mem, sps));
+                ("+0%".into(), "+0%".into())
+            }
+        };
+        rep.line(format!(
+            "| {label} | {} | {} | {dm} | {sps:.2} | {ds} |",
+            out.trainable_params,
+            fmt_bytes(mem)
+        ));
+    }
+    rep.line("");
+    rep.line("Paper shape (Table 6): SHiRA-PEFT < LoRA < DoRA peak memory;");
+    rep.line("SHiRA trains at ~LoRA speed; the dense grad-hook variant shows why");
+    rep.line("the sparse App.-D formulation is the memory-efficient one.");
+    rep.write(cfg)?;
+    rep.print(cfg);
+    Ok(vec![rep])
+}
+
+/// §3.2 orthogonality analysis: AᵀA density for SHiRA vs LoRA across
+/// sparsity levels.
+pub fn orthogonality(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
+    let _ = rt;
+    let mut rep = Report::new(
+        "orthogonality",
+        "Adapter interference: support overlap and A1ᵀA2 density vs sparsity",
+    );
+    rep.line("| sparsity (frac trainable) | mean overlap | A1ᵀA2 density | collisions |");
+    rep.line("|---|---|---|---|");
+    for frac in [0.005, 0.01, 0.02, 0.05, 0.10, 0.25] {
+        let mk = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let n = 128;
+            let k = ((n * n) as f64 * frac).max(1.0) as usize;
+            let idx = rng.sample_indices(n * n, k);
+            let mut d = vec![0.0f32; k];
+            rng.fill_normal(&mut d, 0.0, 0.1);
+            ShiraAdapter {
+                name: format!("o{seed}"),
+                strategy: "rand".into(),
+                tensors: vec![("w".into(), SparseDelta::new(n, n, idx, d))],
+            }
+        };
+        let a = mk(cfg.seed ^ 1);
+        let b = mk(cfg.seed ^ 2);
+        let r = fusion::analyze_shira(&[&a, &b]);
+        rep.line(format!(
+            "| {frac:.3} | {:.4} | {:.4} | {} |",
+            r.mean_overlap, r.mean_ata_density, r.collisions
+        ));
+    }
+    rep.line("| 1.000 (LoRA fused) | 1.0000 | 1.0000 | all |");
+    rep.line("");
+    rep.line("Paper claim (§3.2): at 1-2% sparsity the product A1ᵀA2 is almost");
+    rep.line("entirely zero — adapters barely interact; dense LoRA products always do.");
+    rep.write(cfg)?;
+    rep.print(cfg);
+    Ok(vec![rep])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_switch_prefers_scatter_at_scale() {
+        // Even a single small rep shows scatter << fuse at dim 512.
+        let s = measure_switch(512, 0.02, 32, 2, 1);
+        assert!(s.scatter_us > 0.0);
+        assert!(s.fuse_us > s.scatter_us, "{} vs {}", s.fuse_us, s.scatter_us);
+    }
+}

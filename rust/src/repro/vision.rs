@@ -1,0 +1,350 @@
+//! Vision experiments: Table 1 (HPSv2-proxy per mask), Fig. 4 (mask
+//! comparison, single + multi), Fig. 6 (α sweep), Fig. 7 (unseen-concept
+//! multi-adapter generations).
+
+use anyhow::Result;
+
+use super::{ensure_sd_base, style_world, Report};
+use crate::adapter::mask::MaskStrategy;
+use crate::adapter::{LoraAdapter, ShiraAdapter};
+use crate::config::RunConfig;
+use crate::coordinator::fusion;
+use crate::coordinator::switch::SwitchEngine;
+use crate::data::style::{Style, StyleDataset, StyleWorld, ALL_STYLES};
+use crate::model::weights::WeightStore;
+use crate::runtime::{HostValue, Runtime};
+use crate::train::eval::{eval_style, eval_style_multi};
+use crate::train::schedule::Schedule;
+use crate::train::{Trainer, TrainKind, TrainOutcome};
+use crate::util::rng::Rng;
+
+/// All adapters of one style, trained with every method in Table 1.
+pub struct StyleAdapters {
+    pub style: Style,
+    pub lora: LoraAdapter,
+    pub lora_outcome: TrainOutcome,
+    pub shira: Vec<(MaskStrategy, ShiraAdapter, TrainOutcome)>,
+}
+
+fn sd_data<'a>(
+    ds: &'a StyleDataset,
+    batch: usize,
+) -> impl FnMut(usize, &mut Rng) -> Vec<HostValue> + 'a {
+    let dz = ds.world.d_z;
+    let dimg = ds.world.d_img;
+    move |_step, rng| {
+        let (z, t) = ds.train_batch(batch, rng);
+        vec![
+            HostValue::f32(z, vec![batch, dz]),
+            HostValue::f32(t, vec![batch, dimg]),
+        ]
+    }
+}
+
+/// Train the full Table-1 adapter zoo for one style.
+pub fn train_style_adapters(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    base: &WeightStore,
+    world: &StyleWorld,
+    style: Style,
+) -> Result<StyleAdapters> {
+    let trainer = Trainer::new(rt, "sd", base.clone())?;
+    let batch = trainer.model.dim("batch");
+    let ds = StyleDataset::new(world.clone(), style, cfg.seed);
+    let steps = cfg.adapter_steps;
+
+    let mut data = sd_data(&ds, batch);
+    let lora_out = trainer.train(
+        TrainKind::Lora,
+        steps,
+        Schedule::Cosine { lr: cfg.lr_lora as f32 },
+        &mut data,
+        cfg.seed ^ 1,
+    )?;
+    let lora = trainer.export_lora(&lora_out, &format!("{}-lora", style.name()));
+
+    let mut shira = Vec::new();
+    for strategy in MaskStrategy::all() {
+        let mut data = sd_data(&ds, batch);
+        let out = trainer.train(
+            TrainKind::Shira(strategy),
+            steps,
+            Schedule::Cosine { lr: cfg.lr_shira as f32 },
+            &mut data,
+            cfg.seed ^ (2 + strategy as u64),
+        )?;
+        let adapter = trainer.export_shira(
+            &out,
+            &format!("{}-shira-{}", style.name(), strategy.name()),
+            strategy,
+        );
+        shira.push((strategy, adapter, out));
+    }
+    Ok(StyleAdapters {
+        style,
+        lora,
+        lora_outcome: lora_out,
+        shira,
+    })
+}
+
+fn pct_params(trainable: usize, total: usize) -> f64 {
+    100.0 * trainable as f64 / total as f64
+}
+
+/// Evaluate one applied adapter state at strength alpha (seen + unseen mix).
+fn sps_at(
+    rt: &Runtime,
+    weights: &WeightStore,
+    world: &StyleWorld,
+    style: Style,
+    alpha: f32,
+    cfg: &RunConfig,
+) -> Result<f64> {
+    let seen = eval_style(rt, weights, world, style, alpha,
+                          cfg.style_eval_batches, false, cfg.seed)?;
+    let unseen = eval_style(rt, weights, world, style, alpha,
+                            cfg.style_eval_batches, true, cfg.seed)?;
+    Ok(0.5 * (seen + unseen))
+}
+
+/// Table 1: SPS for LoRA vs the five SHiRA masks, both styles, α ∈ {1, 0.5}.
+pub fn table1(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
+    let world = style_world(rt, cfg);
+    let base = ensure_sd_base(rt, cfg, &world)?;
+    let total = base.total_params();
+    let mut rep = Report::new(
+        "table1",
+        "SPS (HPSv2 proxy) — LoRA vs SHiRA masks, α ∈ {1.0, 0.5}",
+    );
+    rep.line("| Style | Method | %Params | SPS α=1 | SPS α=0.5 |");
+    rep.line("|---|---|---|---|---|");
+    for style in ALL_STYLES {
+        let zoo = train_style_adapters(rt, cfg, &base, &world, style)?;
+        // LoRA row (α scaling: rescale the fused product)
+        {
+            let pct = pct_params(zoo.lora_outcome.trainable_params, total);
+            let mut scores = Vec::new();
+            for &alpha in &[1.0f32, 0.5] {
+                let mut engine = SwitchEngine::new(base.clone());
+                let mut scaled = zoo.lora.clone();
+                scaled.scale *= alpha;
+                engine.switch_to_lora(&scaled);
+                scores.push(sps_at(rt, &engine.weights, &world, style, alpha, cfg)?);
+            }
+            rep.line(format!(
+                "| {} | LoRA | {pct:.2} | {:.1} | {:.1} |",
+                style.name(),
+                scores[0],
+                scores[1]
+            ));
+        }
+        for (strategy, adapter, out) in &zoo.shira {
+            let mut scores = Vec::new();
+            for &alpha in &[1.0f32, 0.5] {
+                let mut engine = SwitchEngine::new(base.clone());
+                engine.switch_to_shira(adapter, alpha);
+                scores.push(sps_at(rt, &engine.weights, &world, style, alpha, cfg)?);
+            }
+            rep.line(format!(
+                "| {} | SHiRA-{} | {:.2} | {:.1} | {:.1} |",
+                style.name(),
+                strategy.name(),
+                pct_params(out.trainable_params, total),
+                scores[0],
+                scores[1]
+            ));
+        }
+    }
+    rep.line("");
+    rep.line("Paper shape: all SHiRA variants ≥ LoRA, gap larger at α=1.");
+    rep.write(cfg)?;
+    rep.print(cfg);
+    Ok(vec![rep])
+}
+
+/// Fig. 4: per-mask single-adapter and multi-adapter quality.
+pub fn fig4(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
+    let world = style_world(rt, cfg);
+    let base = ensure_sd_base(rt, cfg, &world)?;
+    let bf = train_style_adapters(rt, cfg, &base, &world, Style::Bluefire)?;
+    let pt = train_style_adapters(rt, cfg, &base, &world, Style::Paintings)?;
+    let mut rep = Report::new(
+        "fig4",
+        "Mask comparison: single-adapter SPS and naive multi-adapter SPS",
+    );
+    rep.line("| Method | bluefire (single) | paintings (single) | multi (both) |");
+    rep.line("|---|---|---|---|");
+
+    // LoRA: multi = fuse both AB products into the base (half strength each,
+    // the standard multi-LoRA recipe).
+    {
+        let mut e1 = SwitchEngine::new(base.clone());
+        e1.switch_to_lora(&bf.lora);
+        let s_bf = sps_at(rt, &e1.weights, &world, Style::Bluefire, 1.0, cfg)?;
+        let mut e2 = SwitchEngine::new(base.clone());
+        e2.switch_to_lora(&pt.lora);
+        let s_pt = sps_at(rt, &e2.weights, &world, Style::Paintings, 1.0, cfg)?;
+        let mut both = base.clone();
+        for l in [&bf.lora, &pt.lora] {
+            for t in &l.tensors {
+                both.get_mut(&t.target)
+                    .add_outer_product(&t.a, &t.b, 0.5 * l.scale);
+            }
+        }
+        let s_multi = eval_style_multi(rt, &both, &world, cfg.style_eval_batches, cfg.seed)?;
+        rep.line(format!(
+            "| LoRA | {s_bf:.1} | {s_pt:.1} | {s_multi:.1} |"
+        ));
+    }
+    for (i, strategy) in MaskStrategy::all().into_iter().enumerate() {
+        let (_, a_bf, _) = &bf.shira[i];
+        let (_, a_pt, _) = &pt.shira[i];
+        let mut e1 = SwitchEngine::new(base.clone());
+        e1.switch_to_shira(a_bf, 1.0);
+        let s_bf = sps_at(rt, &e1.weights, &world, Style::Bluefire, 1.0, cfg)?;
+        let mut e2 = SwitchEngine::new(base.clone());
+        e2.switch_to_shira(a_pt, 1.0);
+        let s_pt = sps_at(rt, &e2.weights, &world, Style::Paintings, 1.0, cfg)?;
+        // naive multi-adapter fusion at half strength each
+        let fused = fusion::fuse_shira(&[a_bf, a_pt], "both");
+        let mut e3 = SwitchEngine::new(base.clone());
+        e3.switch_to_shira(&fused, 0.5);
+        let s_multi =
+            eval_style_multi(rt, &e3.weights, &world, cfg.style_eval_batches, cfg.seed)?;
+        rep.line(format!(
+            "| SHiRA-{} | {s_bf:.1} | {s_pt:.1} | {s_multi:.1} |",
+            strategy.name()
+        ));
+    }
+    rep.line("");
+    rep.line("Paper shape: SHiRA multi-adapter > LoRA multi-adapter (concept loss).");
+    rep.write(cfg)?;
+    rep.print(cfg);
+    Ok(vec![rep])
+}
+
+/// Fig. 6: effect of α on SHiRA generation quality (bluefire).
+pub fn fig6(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
+    let world = style_world(rt, cfg);
+    let base = ensure_sd_base(rt, cfg, &world)?;
+    let trainer = Trainer::new(rt, "sd", base.clone())?;
+    let batch = trainer.model.dim("batch");
+    let ds = StyleDataset::new(world.clone(), Style::Bluefire, cfg.seed);
+    let mut data = sd_data(&ds, batch);
+    let out = trainer.train(
+        TrainKind::Shira(MaskStrategy::Snip),
+        cfg.adapter_steps,
+        Schedule::Cosine { lr: cfg.lr_shira as f32 },
+        &mut data,
+        cfg.seed ^ 6,
+    )?;
+    let adapter = trainer.export_shira(&out, "bf-snip", MaskStrategy::Snip);
+    let mut rep = Report::new("fig6", "Effect of α on SHiRA (bluefire, SNIP mask)");
+    rep.line("| α | SPS vs α-target | SPS vs base (α=0 target) |");
+    rep.line("|---|---|---|");
+    for alpha in [0.0f32, 0.25, 0.5, 0.75, 1.0, 1.5, 2.0] {
+        let mut engine = SwitchEngine::new(base.clone());
+        engine.switch_to_shira(&adapter, alpha);
+        let vs_target = eval_style(
+            rt, &engine.weights, &world, Style::Bluefire, alpha,
+            cfg.style_eval_batches, false, cfg.seed,
+        )?;
+        let vs_base = eval_style(
+            rt, &engine.weights, &world, Style::Bluefire, 0.0,
+            cfg.style_eval_batches, false, cfg.seed,
+        )?;
+        rep.line(format!("| {alpha:.2} | {vs_target:.1} | {vs_base:.1} |"));
+    }
+    rep.line("");
+    rep.line("Paper shape: α=0 reproduces the base model; style strength rises with α;");
+    rep.line("over-amplified α drifts off the α-target curve.");
+    rep.write(cfg)?;
+    rep.print(cfg);
+    Ok(vec![rep])
+}
+
+/// Fig. 7 / Fig. 1: unseen-concept (koala) quality, single vs multi.
+pub fn fig7(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
+    let world = style_world(rt, cfg);
+    let base = ensure_sd_base(rt, cfg, &world)?;
+    let bf = train_style_adapters(rt, cfg, &base, &world, Style::Bluefire)?;
+    let pt = train_style_adapters(rt, cfg, &base, &world, Style::Paintings)?;
+    let mut rep = Report::new(
+        "fig7",
+        "Unseen-concept generations (the koala test): single and fused",
+    );
+    rep.line("| Method | bluefire unseen | paintings unseen | multi unseen |");
+    rep.line("|---|---|---|---|");
+    {
+        let mut e1 = SwitchEngine::new(base.clone());
+        e1.switch_to_lora(&bf.lora);
+        let s1 = eval_style(rt, &e1.weights, &world, Style::Bluefire, 1.0,
+                            cfg.style_eval_batches, true, cfg.seed)?;
+        let mut e2 = SwitchEngine::new(base.clone());
+        e2.switch_to_lora(&pt.lora);
+        let s2 = eval_style(rt, &e2.weights, &world, Style::Paintings, 1.0,
+                            cfg.style_eval_batches, true, cfg.seed)?;
+        let mut both = base.clone();
+        for l in [&bf.lora, &pt.lora] {
+            for t in &l.tensors {
+                both.get_mut(&t.target)
+                    .add_outer_product(&t.a, &t.b, 0.5 * l.scale);
+            }
+        }
+        let s3 = eval_style_multi(rt, &both, &world, cfg.style_eval_batches, cfg.seed)?;
+        rep.line(format!("| LoRA | {s1:.1} | {s2:.1} | {s3:.1} |"));
+    }
+    // best SHiRA masks per the paper: Struct and SNIP
+    for strategy in [MaskStrategy::Struct, MaskStrategy::Snip] {
+        let i = MaskStrategy::all().iter().position(|s| *s == strategy).unwrap();
+        let (_, a_bf, _) = &bf.shira[i];
+        let (_, a_pt, _) = &pt.shira[i];
+        let mut e1 = SwitchEngine::new(base.clone());
+        e1.switch_to_shira(a_bf, 1.0);
+        let s1 = eval_style(rt, &e1.weights, &world, Style::Bluefire, 1.0,
+                            cfg.style_eval_batches, true, cfg.seed)?;
+        let mut e2 = SwitchEngine::new(base.clone());
+        e2.switch_to_shira(a_pt, 1.0);
+        let s2 = eval_style(rt, &e2.weights, &world, Style::Paintings, 1.0,
+                            cfg.style_eval_batches, true, cfg.seed)?;
+        let fused = fusion::fuse_shira(&[a_bf, a_pt], "both");
+        let mut e3 = SwitchEngine::new(base.clone());
+        e3.switch_to_shira(&fused, 0.5);
+        let s3 = eval_style_multi(rt, &e3.weights, &world, cfg.style_eval_batches, cfg.seed)?;
+        rep.line(format!(
+            "| SHiRA-{} | {s1:.1} | {s2:.1} | {s3:.1} |",
+            strategy.name()
+        ));
+    }
+    rep.line("");
+    rep.line("Paper shape: on unseen concepts LoRA's fused generations degrade most;");
+    rep.line("SHiRA retains both the concept and the styles.");
+    rep.write(cfg)?;
+    rep.print(cfg);
+    Ok(vec![rep])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pct_params_sane() {
+        assert!((pct_params(1, 100) - 1.0).abs() < 1e-12);
+    }
+
+    // Full vision-experiment integration is exercised by
+    // examples/style_transfer and the repro CLI; unit coverage for the
+    // pieces lives in train/, adapter/ and data/style tests.
+    #[test]
+    fn report_render_includes_header() {
+        let mut r = Report::new("x", "t");
+        r.line("| a |");
+        let cfg = RunConfig::fast();
+        let s = r.render(&cfg);
+        assert!(s.contains("# x — t"));
+        assert!(s.contains("| a |"));
+    }
+}

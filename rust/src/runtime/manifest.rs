@@ -1,0 +1,493 @@
+//! Typed view of `artifacts/manifest.json` — the contract between the
+//! build-time python AOT pipeline and the rust runtime.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One target's segment of the SHiRA theta/idx vectors.
+#[derive(Clone, Debug)]
+pub struct ShiraSeg {
+    pub name: String,
+    pub shape: (usize, usize),
+    pub k: usize,
+    pub off: usize,
+    /// SHiRA-DoRA only: offset/length of the magnitude block.
+    pub mag_off: Option<usize>,
+    pub mag_len: Option<usize>,
+}
+
+/// One target's segment of the LoRA/DoRA theta vector.
+#[derive(Clone, Debug)]
+pub struct LoraSeg {
+    pub name: String,
+    pub shape: (usize, usize),
+    pub rank: usize,
+    pub a_off: usize,
+    pub a_len: usize,
+    pub b_off: usize,
+    pub b_len: usize,
+    pub mag_off: Option<usize>,
+    pub mag_len: Option<usize>,
+}
+
+/// Dense layout entry (grad probe / full finetune).
+#[derive(Clone, Debug)]
+pub struct DenseSeg {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub off: usize,
+    pub len: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub params: Vec<(String, Vec<usize>)>,
+    pub targets: Vec<String>,
+    pub shira: Vec<ShiraSeg>,
+    pub lora: Vec<LoraSeg>,
+    pub dora: Vec<LoraSeg>,
+    pub shira_dora: Vec<ShiraSeg>,
+    pub probe: Vec<DenseSeg>,
+    pub full: Vec<DenseSeg>,
+    pub theta_len: HashMap<String, usize>,
+    pub extra: HashMap<String, usize>, // vocab/d_model/batch/seq_len/...
+}
+
+impl ModelMeta {
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    pub fn dim(&self, key: &str) -> usize {
+        *self
+            .extra
+            .get(key)
+            .unwrap_or_else(|| panic!("model {} missing dim {key}", self.name))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct AdapterMeta {
+    pub shira_frac: f64,
+    pub lora_rank: usize,
+    pub lora_alpha: f64,
+    pub lora_scale: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub models: HashMap<String, ModelMeta>,
+    pub adapter: AdapterMeta,
+    pub pallas_dim: usize,
+    pub pallas_k: usize,
+}
+
+#[derive(Debug)]
+pub struct ManifestError(pub String);
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "manifest error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+fn err(msg: impl Into<String>) -> ManifestError {
+    ManifestError(msg.into())
+}
+
+fn io_specs(j: &Json) -> Result<Vec<IoSpec>, ManifestError> {
+    j.as_arr()
+        .ok_or_else(|| err("inputs/outputs not an array"))?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| err("io name"))?
+                    .to_string(),
+                dtype: DType::parse(
+                    e.get("dtype").and_then(|x| x.as_str()).unwrap_or("f32"),
+                )
+                .ok_or_else(|| err("bad dtype"))?,
+                shape: e
+                    .get("shape")
+                    .and_then(|x| x.as_shape())
+                    .ok_or_else(|| err("bad shape"))?,
+            })
+        })
+        .collect()
+}
+
+fn shira_segs(j: &Json) -> Result<Vec<ShiraSeg>, ManifestError> {
+    j.as_arr()
+        .ok_or_else(|| err("shira layout not array"))?
+        .iter()
+        .map(|e| {
+            let shape = e
+                .get("shape")
+                .and_then(|x| x.as_shape())
+                .ok_or_else(|| err("seg shape"))?;
+            Ok(ShiraSeg {
+                name: e
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| err("seg name"))?
+                    .to_string(),
+                shape: (shape[0], shape[1]),
+                k: e.get("k").and_then(|x| x.as_usize()).ok_or_else(|| err("k"))?,
+                off: e
+                    .get("off")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| err("off"))?,
+                mag_off: e.get("mag_off").and_then(|x| x.as_usize()),
+                mag_len: e.get("mag_len").and_then(|x| x.as_usize()),
+            })
+        })
+        .collect()
+}
+
+fn lora_segs(j: &Json) -> Result<Vec<LoraSeg>, ManifestError> {
+    j.as_arr()
+        .ok_or_else(|| err("lora layout not array"))?
+        .iter()
+        .map(|e| {
+            let shape = e
+                .get("shape")
+                .and_then(|x| x.as_shape())
+                .ok_or_else(|| err("seg shape"))?;
+            let g = |k: &str| e.get(k).and_then(|x| x.as_usize());
+            Ok(LoraSeg {
+                name: e
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| err("seg name"))?
+                    .to_string(),
+                shape: (shape[0], shape[1]),
+                rank: g("r").ok_or_else(|| err("r"))?,
+                a_off: g("a_off").ok_or_else(|| err("a_off"))?,
+                a_len: g("a_len").ok_or_else(|| err("a_len"))?,
+                b_off: g("b_off").ok_or_else(|| err("b_off"))?,
+                b_len: g("b_len").ok_or_else(|| err("b_len"))?,
+                mag_off: g("mag_off"),
+                mag_len: g("mag_len"),
+            })
+        })
+        .collect()
+}
+
+fn dense_segs(j: &Json) -> Result<Vec<DenseSeg>, ManifestError> {
+    j.as_arr()
+        .ok_or_else(|| err("dense layout not array"))?
+        .iter()
+        .map(|e| {
+            Ok(DenseSeg {
+                name: e
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| err("seg name"))?
+                    .to_string(),
+                shape: e
+                    .get("shape")
+                    .and_then(|x| x.as_shape())
+                    .ok_or_else(|| err("seg shape"))?,
+                off: e
+                    .get("off")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| err("off"))?,
+                len: e
+                    .get("len")
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| err("len"))?,
+            })
+        })
+        .collect()
+}
+
+fn model_meta(name: &str, j: &Json) -> Result<ModelMeta, ManifestError> {
+    let params = j
+        .get("params")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| err("params"))?
+        .iter()
+        .map(|p| {
+            Ok((
+                p.get("name")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| err("param name"))?
+                    .to_string(),
+                p.get("shape")
+                    .and_then(|x| x.as_shape())
+                    .ok_or_else(|| err("param shape"))?,
+            ))
+        })
+        .collect::<Result<Vec<_>, ManifestError>>()?;
+    let targets = j
+        .get("targets")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| err("targets"))?
+        .iter()
+        .map(|t| t.as_str().unwrap_or_default().to_string())
+        .collect();
+    let layout = j.get("layout").ok_or_else(|| err("layout"))?;
+    let theta_len = j
+        .get("theta_len")
+        .and_then(|x| x.as_obj())
+        .ok_or_else(|| err("theta_len"))?
+        .iter()
+        .filter_map(|(k, v)| v.as_usize().map(|n| (k.clone(), n)))
+        .collect();
+    let mut extra = HashMap::new();
+    if let Some(obj) = j.as_obj() {
+        for (k, v) in obj {
+            if let Some(n) = v.as_usize() {
+                if matches!(v, Json::Num(_)) {
+                    extra.insert(k.clone(), n);
+                }
+            }
+        }
+    }
+    Ok(ModelMeta {
+        name: name.to_string(),
+        params,
+        targets,
+        shira: layout
+            .get("shira")
+            .map(shira_segs)
+            .transpose()?
+            .unwrap_or_default(),
+        lora: layout
+            .get("lora")
+            .map(lora_segs)
+            .transpose()?
+            .unwrap_or_default(),
+        dora: layout
+            .get("dora")
+            .map(lora_segs)
+            .transpose()?
+            .unwrap_or_default(),
+        shira_dora: layout
+            .get("shira_dora")
+            .map(shira_segs)
+            .transpose()?
+            .unwrap_or_default(),
+        probe: layout
+            .get("probe")
+            .map(dense_segs)
+            .transpose()?
+            .unwrap_or_default(),
+        full: layout
+            .get("full")
+            .map(dense_segs)
+            .transpose()?
+            .unwrap_or_default(),
+        theta_len,
+        extra,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| err(format!("read {}: {e}", path.display())))?;
+        let j = json::parse(&text).map_err(|e| err(format!("parse: {e}")))?;
+
+        let mut artifacts = HashMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(|x| x.as_obj())
+            .ok_or_else(|| err("artifacts"))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: dir.join(
+                        a.get("file")
+                            .and_then(|x| x.as_str())
+                            .ok_or_else(|| err("artifact file"))?,
+                    ),
+                    inputs: io_specs(a.get("inputs").ok_or_else(|| err("inputs"))?)?,
+                    outputs: io_specs(a.get("outputs").ok_or_else(|| err("outputs"))?)?,
+                },
+            );
+        }
+
+        let mut models = HashMap::new();
+        for (name, m) in j
+            .get("models")
+            .and_then(|x| x.as_obj())
+            .ok_or_else(|| err("models"))?
+        {
+            models.insert(name.clone(), model_meta(name, m)?);
+        }
+
+        let ad = j.get("adapter").ok_or_else(|| err("adapter"))?;
+        let adapter = AdapterMeta {
+            shira_frac: ad
+                .get("shira_frac")
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| err("shira_frac"))?,
+            lora_rank: ad
+                .get("lora_rank")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| err("lora_rank"))?,
+            lora_alpha: ad
+                .get("lora_alpha")
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| err("lora_alpha"))?,
+            lora_scale: ad
+                .get("lora_scale")
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| err("lora_scale"))?,
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            pallas_dim: j
+                .path("pallas_demo.dim")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
+            pallas_k: j
+                .path("pallas_demo.k")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(0),
+            artifacts,
+            models,
+            adapter,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta, ManifestError> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| err(format!("unknown artifact {name}")))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta, ManifestError> {
+        self.models
+            .get(name)
+            .ok_or_else(|| err(format!("unknown model {name}")))
+    }
+
+    /// Default artifacts directory: $SHIRA_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SHIRA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                // tests run from the crate root; binaries may run elsewhere
+                let local = PathBuf::from("artifacts");
+                if local.join("manifest.json").exists() {
+                    local
+                } else {
+                    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+                }
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).expect("manifest loads"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_and_exposes_models() {
+        let Some(m) = manifest() else { return };
+        let llama = m.model("llama").unwrap();
+        assert!(llama.total_params() > 100_000);
+        assert_eq!(llama.targets.len(), llama.shira.len());
+        assert!(llama.dim("vocab") >= 64);
+        let sd = m.model("sd").unwrap();
+        assert!(!sd.shira.is_empty());
+    }
+
+    #[test]
+    fn artifact_inputs_start_with_base_params() {
+        let Some(m) = manifest() else { return };
+        let llama = m.model("llama").unwrap();
+        let fwd = m.artifact("llama_fwd").unwrap();
+        for (i, (pname, pshape)) in llama.params.iter().enumerate() {
+            assert_eq!(&fwd.inputs[i].name, pname);
+            let want: Vec<usize> = if pshape.len() == 1 {
+                pshape.clone()
+            } else {
+                pshape.clone()
+            };
+            assert_eq!(fwd.inputs[i].shape, want);
+        }
+        assert!(fwd.file.exists());
+    }
+
+    #[test]
+    fn shira_layout_offsets_contiguous() {
+        let Some(m) = manifest() else { return };
+        let llama = m.model("llama").unwrap();
+        let mut off = 0;
+        for seg in &llama.shira {
+            assert_eq!(seg.off, off);
+            off += seg.k;
+        }
+        assert_eq!(off, llama.theta_len["shira"]);
+    }
+
+    #[test]
+    fn unknown_names_error() {
+        let Some(m) = manifest() else { return };
+        assert!(m.artifact("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+}

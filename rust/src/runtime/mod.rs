@@ -1,0 +1,306 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the rust hot path.  Python never runs here.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  All artifacts are lowered with
+//! `return_tuple=True`, so outputs decompose via `Literal::to_tuple()`.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use manifest::{ArtifactMeta, DType, Manifest};
+
+/// Host-side value marshalled into / out of an executable.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostValue {
+    pub fn scalar_f32(x: f32) -> Self {
+        HostValue::F32(vec![x], vec![])
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostValue::I32(vec![x], vec![])
+    }
+
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostValue::F32(data, shape)
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostValue::I32(data, shape)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(_, s) | HostValue::I32(_, s) => s,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            HostValue::F32(d, _) => d.len(),
+            HostValue::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostValue::F32(d, _) => d,
+            _ => panic!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            HostValue::I32(d, _) => d,
+            _ => panic!("expected i32 value"),
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            HostValue::F32(d, _) => d,
+            _ => panic!("expected f32 value"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostValue::F32(data, shape) => {
+                let l = xla::Literal::vec1(data.as_slice());
+                let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                l.reshape(&dims)?
+            }
+            HostValue::I32(data, shape) => {
+                let l = xla::Literal::vec1(data.as_slice());
+                let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                l.reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Self> {
+        Ok(match dtype {
+            DType::F32 => HostValue::F32(lit.to_vec::<f32>()?, shape.to_vec()),
+            DType::I32 => HostValue::I32(lit.to_vec::<i32>()?, shape.to_vec()),
+        })
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host values; validates arity/shape against the manifest.
+    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (v, spec) in inputs.iter().zip(self.meta.inputs.iter()) {
+            if v.numel() != spec.numel() {
+                return Err(anyhow!(
+                    "{}: input '{}' expects {:?} ({} elems), got {} elems",
+                    self.meta.name,
+                    spec.name,
+                    spec.shape,
+                    spec.numel(),
+                    v.numel()
+                ));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} outputs, got {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                parts.len()
+            ));
+        }
+        parts
+            .iter()
+            .zip(self.meta.outputs.iter())
+            .map(|(lit, spec)| HostValue::from_literal(lit, spec.dtype, &spec.shape))
+            .collect()
+    }
+}
+
+/// The PJRT runtime: one CPU client + lazily compiled artifact cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)
+            .map_err(|e| anyhow!("loading manifest: {e}"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn with_default_artifacts() -> Result<Self> {
+        Runtime::new(&Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(std::sync::Arc::clone(e));
+        }
+        let meta = self
+            .manifest
+            .artifact(name)
+            .map_err(|e| anyhow!("{e}"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)
+            .with_context(|| format!("parsing HLO text {}", meta.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let entry = std::sync::Arc::new(Executable { meta, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), std::sync::Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// One-shot convenience.
+    pub fn run(&self, name: &str, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        self.load(name)?.run(inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::new(&dir).expect("runtime"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn host_value_accessors() {
+        let v = HostValue::f32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(v.numel(), 2);
+        assert_eq!(v.nbytes(), 8);
+        assert_eq!(v.as_f32(), &[1.0, 2.0]);
+        let s = HostValue::scalar_i32(7);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.as_i32(), &[7]);
+    }
+
+    #[test]
+    fn sd_fwd_runs_and_is_deterministic() {
+        let Some(rt) = runtime() else { return };
+        let sd = rt.manifest.model("sd").unwrap().clone();
+        let mut inputs = Vec::new();
+        let rng = crate::util::rng::Rng::new(3);
+        for (name, shape) in &sd.params {
+            let numel: usize = shape.iter().product();
+            let mut data = vec![0.0f32; numel];
+            rng.stream(name).fill_normal(&mut data, 0.0, 0.1);
+            inputs.push(HostValue::f32(data, shape.clone()));
+        }
+        let b = sd.dim("batch");
+        let dz = sd.dim("d_z");
+        let z: Vec<f32> = (0..b * dz).map(|i| (i as f32 * 0.01).sin()).collect();
+        inputs.push(HostValue::f32(z, vec![b, dz]));
+        let out1 = rt.run("sd_fwd", &inputs).unwrap();
+        let out2 = rt.run("sd_fwd", &inputs).unwrap();
+        assert_eq!(out1.len(), 1);
+        assert_eq!(out1[0].shape(), &[b, sd.dim("d_img")]);
+        assert_eq!(out1[0].as_f32(), out2[0].as_f32());
+        assert!(out1[0].as_f32().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn arity_mismatch_is_error() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.run("sd_fwd", &[]).is_err());
+    }
+
+    #[test]
+    fn apply_shira_artifact_matches_native_scatter() {
+        // The L1 pallas kernel (inside the artifact) and the native rust
+        // ScatterEngine must agree — the cross-layer correctness check.
+        let Some(rt) = runtime() else { return };
+        let d = rt.manifest.pallas_dim;
+        let k = rt.manifest.pallas_k;
+        if d == 0 {
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(9);
+        let mut w = vec![0.0f32; d * d];
+        rng.fill_normal(&mut w, 0.0, 1.0);
+        let idx = rng.sample_indices(d * d, k);
+        let mut vals = vec![0.0f32; k];
+        rng.fill_normal(&mut vals, 0.0, 1.0);
+
+        let out = rt
+            .run(
+                "apply_shira",
+                &[
+                    HostValue::f32(w.clone(), vec![d, d]),
+                    HostValue::i32(idx.iter().map(|&i| i as i32).collect(), vec![k]),
+                    HostValue::f32(vals.clone(), vec![k]),
+                ],
+            )
+            .unwrap();
+        let got = out[0].as_f32();
+
+        let mut want = w.clone();
+        for (j, &i) in idx.iter().enumerate() {
+            want[i as usize] = vals[j];
+        }
+        assert_eq!(got, want.as_slice());
+    }
+}

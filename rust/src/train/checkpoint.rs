@@ -1,0 +1,159 @@
+//! Weight-store checkpoints: pretrained base models are cached on disk so
+//! the repro drivers don't re-pretrain for every experiment.
+//!
+//! Format: magic "SHCK", version, count, per tensor (name, rows, cols,
+//! f32 data), FNV-64 trailer — same conventions as adapter/io.rs.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::model::tensor::Tensor2;
+use crate::model::weights::WeightStore;
+
+const MAGIC: u32 = 0x5348_434B;
+const VERSION: u32 = 1;
+
+fn fnv64(b: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &x in b {
+        h ^= x as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+pub fn encode(store: &WeightStore) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(store.len() as u32).to_le_bytes());
+    for (name, t) in store.iter() {
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name.as_bytes());
+        buf.extend_from_slice(&(t.rows as u32).to_le_bytes());
+        buf.extend_from_slice(&(t.cols as u32).to_le_bytes());
+        for &x in &t.data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    let crc = fnv64(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+pub fn decode(bytes: &[u8]) -> Result<WeightStore> {
+    if bytes.len() < 20 {
+        return Err(anyhow!("checkpoint too short"));
+    }
+    let body = &bytes[..bytes.len() - 8];
+    let want = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if fnv64(body) != want {
+        return Err(anyhow!("checkpoint checksum mismatch"));
+    }
+    let mut i = 0usize;
+    let u32_at = |i: &mut usize| -> Result<u32> {
+        if *i + 4 > body.len() {
+            return Err(anyhow!("truncated checkpoint"));
+        }
+        let v = u32::from_le_bytes(body[*i..*i + 4].try_into().unwrap());
+        *i += 4;
+        Ok(v)
+    };
+    if u32_at(&mut i)? != MAGIC {
+        return Err(anyhow!("not a checkpoint file"));
+    }
+    if u32_at(&mut i)? != VERSION {
+        return Err(anyhow!("unsupported checkpoint version"));
+    }
+    let count = u32_at(&mut i)? as usize;
+    let mut store = WeightStore::new();
+    for _ in 0..count {
+        let nlen = u32_at(&mut i)? as usize;
+        if i + nlen > body.len() {
+            return Err(anyhow!("truncated name"));
+        }
+        let name = String::from_utf8(body[i..i + nlen].to_vec())
+            .map_err(|_| anyhow!("bad name utf8"))?;
+        i += nlen;
+        let rows = u32_at(&mut i)? as usize;
+        let cols = u32_at(&mut i)? as usize;
+        let numel = rows * cols;
+        if i + numel * 4 > body.len() {
+            return Err(anyhow!("truncated tensor data"));
+        }
+        let data: Vec<f32> = body[i..i + numel * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        i += numel * 4;
+        store.insert(&name, Tensor2::from_vec(rows, cols, data));
+    }
+    Ok(store)
+}
+
+pub fn save(path: &Path, store: &WeightStore) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::File::create(path)?.write_all(&encode(store))?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<WeightStore> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    decode(&bytes)
+}
+
+/// Default checkpoint directory (sibling of the artifacts dir).
+pub fn checkpoint_dir() -> PathBuf {
+    crate::runtime::manifest::Manifest::default_dir().join("checkpoints")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> WeightStore {
+        WeightStore::init(
+            &[
+                ("embed".into(), vec![16, 8]),
+                ("l0.ln1".into(), vec![8]),
+                ("l0.wq".into(), vec![8, 8]),
+            ],
+            3,
+        )
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let s = store();
+        let s2 = decode(&encode(&s)).unwrap();
+        assert!(s.bit_equal(&s2));
+    }
+
+    #[test]
+    fn corruption_rejected() {
+        let mut b = encode(&store());
+        let mid = b.len() / 2;
+        b[mid] ^= 1;
+        assert!(decode(&b).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("shira-ckpt-test");
+        let p = dir.join("m.ckpt");
+        save(&p, &store()).unwrap();
+        assert!(load(&p).unwrap().bit_equal(&store()));
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let b = encode(&store());
+        assert!(decode(&b[..b.len() - 12]).is_err());
+        assert!(decode(&b[..2]).is_err());
+    }
+}

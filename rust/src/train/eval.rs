@@ -1,0 +1,218 @@
+//! Evaluation: multiple-choice accuracy for the commonsense proxy suite
+//! (paper Tables 2-4) and SPS for the style suite (Table 1, Figs 4/6/7).
+//!
+//! Evaluation always runs in FUSED mode: the adapter has been applied to
+//! the resident weights (by the switch engine) and the plain `*_fwd`
+//! artifact executes — the exact inference dataflow the paper deploys.
+
+use anyhow::Result;
+
+use crate::data::style::{Style, StyleWorld};
+use crate::data::tasks::{self, Example, Task};
+use crate::model::weights::WeightStore;
+use crate::runtime::{HostValue, Runtime};
+use crate::util::rng::Rng;
+
+/// Marshal a weight store in manifest order for `model`.
+pub fn weight_inputs(rt: &Runtime, model: &str, w: &WeightStore) -> Vec<HostValue> {
+    let meta = rt.manifest.model(model).expect("model meta");
+    meta.params
+        .iter()
+        .map(|(name, shape)| HostValue::f32(w.get(name).data.clone(), shape.clone()))
+        .collect()
+}
+
+/// Accuracy of the resident weights on one task's eval set.
+///
+/// The model scores each example by the logit at the answer slot
+/// (position T-2 predicts the final token); prediction = argmax over the
+/// example's candidate answers.
+pub fn eval_task(
+    rt: &Runtime,
+    weights: &WeightStore,
+    task: Task,
+    n_examples: usize,
+    seed: u64,
+) -> Result<f64> {
+    let meta = rt.manifest.model("llama").expect("llama meta");
+    let (b, t, v) = (meta.dim("batch"), meta.dim("seq_len"), meta.dim("vocab"));
+    let examples = tasks::eval_set(task, n_examples, t, seed);
+    let exe = rt.load("llama_fwd")?;
+    let base_inputs = weight_inputs(rt, "llama", weights);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for chunk in examples.chunks(b) {
+        // pad the final chunk by repeating the last example
+        let mut batch: Vec<&Example> = chunk.iter().collect();
+        while batch.len() < b {
+            batch.push(&chunk[chunk.len() - 1]);
+        }
+        let mut x = Vec::with_capacity(b * t);
+        for ex in &batch {
+            for (pos, &tok) in ex.tokens.iter().enumerate() {
+                x.push(if pos == t - 1 { tasks::QUERY } else { tok });
+            }
+        }
+        let mut inputs = base_inputs.clone();
+        inputs.push(HostValue::i32(x, vec![b, t]));
+        let out = exe.run(&inputs)?;
+        let logits = out[0].as_f32(); // (b, t, v)
+        for (i, ex) in chunk.iter().enumerate() {
+            let row = &logits[i * t * v + (t - 2) * v..i * t * v + (t - 1) * v];
+            let pred = ex
+                .choices
+                .iter()
+                .copied()
+                .max_by(|&a, &c| {
+                    row[a as usize]
+                        .partial_cmp(&row[c as usize])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .unwrap();
+            if pred == ex.answer {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total as f64)
+}
+
+/// Accuracy over several tasks; returns (per-task, average) as percentages.
+pub fn eval_tasks(
+    rt: &Runtime,
+    weights: &WeightStore,
+    task_list: &[Task],
+    n_examples: usize,
+    seed: u64,
+) -> Result<(Vec<(Task, f64)>, f64)> {
+    let mut per = Vec::with_capacity(task_list.len());
+    for &task in task_list {
+        let acc = 100.0 * eval_task(rt, weights, task, n_examples, seed)?;
+        per.push((task, acc));
+    }
+    let avg = per.iter().map(|(_, a)| *a).sum::<f64>() / per.len().max(1) as f64;
+    Ok((per, avg))
+}
+
+/// Mean SPS of the resident `nanosd` weights for `style` at strength
+/// `alpha` over `n_batches` eval batches (`unseen` = held-out concepts,
+/// the koala test of Figs 1/7).
+pub fn eval_style(
+    rt: &Runtime,
+    weights: &WeightStore,
+    world: &StyleWorld,
+    style: Style,
+    alpha: f32,
+    n_batches: usize,
+    unseen: bool,
+    seed: u64,
+) -> Result<f64> {
+    let meta = rt.manifest.model("sd").expect("sd meta");
+    let b = meta.dim("batch");
+    let (dz, dimg) = (world.d_z, world.d_img);
+    let exe = rt.load("sd_fwd")?;
+    let base_inputs = weight_inputs(rt, "sd", weights);
+    let ds = crate::data::style::StyleDataset::new(world.clone(), style, seed);
+    let mut rng = Rng::new(seed).stream("style-eval");
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for _ in 0..n_batches {
+        let (zs, _) = ds.eval_batch(b, unseen, &mut rng);
+        let mut inputs = base_inputs.clone();
+        inputs.push(HostValue::f32(zs.clone(), vec![b, dz]));
+        let out = exe.run(&inputs)?;
+        let imgs = out[0].as_f32();
+        for i in 0..b {
+            let z = &zs[i * dz..(i + 1) * dz];
+            let img = &imgs[i * dimg..(i + 1) * dimg];
+            sum += world.sps(img, z, style, alpha);
+            count += 1;
+        }
+    }
+    Ok(sum / count as f64)
+}
+
+/// Mean SPS against the dual-style target (multi-adapter generation).
+pub fn eval_style_multi(
+    rt: &Runtime,
+    weights: &WeightStore,
+    world: &StyleWorld,
+    n_batches: usize,
+    seed: u64,
+) -> Result<f64> {
+    let meta = rt.manifest.model("sd").expect("sd meta");
+    let b = meta.dim("batch");
+    let (dz, dimg) = (world.d_z, world.d_img);
+    let exe = rt.load("sd_fwd")?;
+    let base_inputs = weight_inputs(rt, "sd", weights);
+    let mut rng = Rng::new(seed).stream("style-eval-multi");
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for _ in 0..n_batches {
+        // all concepts, including ones unseen by both adapters (the koala)
+        let mut zs = Vec::with_capacity(b * dz);
+        for _ in 0..b {
+            let c = rng.below(crate::data::style::N_CONCEPTS);
+            zs.extend(world.sample_z(c, &mut rng));
+        }
+        let mut inputs = base_inputs.clone();
+        inputs.push(HostValue::f32(zs.clone(), vec![b, dz]));
+        let out = exe.run(&inputs)?;
+        let imgs = out[0].as_f32();
+        for i in 0..b {
+            let z = &zs[i * dz..(i + 1) * dz];
+            let img = &imgs[i * dimg..(i + 1) * dimg];
+            sum += world.sps_multi(img, z);
+            count += 1;
+        }
+    }
+    Ok(sum / count as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::new(&dir).expect("runtime"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn random_model_is_near_chance() {
+        let Some(rt) = runtime() else { return };
+        let meta = rt.manifest.model("llama").unwrap();
+        let w = WeightStore::init(&meta.params, 99);
+        // 2-choice task: untrained model should be within noise of 50%
+        let acc = eval_task(&rt, &w, Task::ArcEasy, 64, 7).unwrap();
+        assert!((0.2..=0.8).contains(&acc), "acc={acc}");
+    }
+
+    #[test]
+    fn eval_is_deterministic() {
+        let Some(rt) = runtime() else { return };
+        let meta = rt.manifest.model("llama").unwrap();
+        let w = WeightStore::init(&meta.params, 3);
+        let a = eval_task(&rt, &w, Task::BoolQ, 32, 5).unwrap();
+        let b = eval_task(&rt, &w, Task::BoolQ, 32, 5).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn style_eval_runs() {
+        let Some(rt) = runtime() else { return };
+        let meta = rt.manifest.model("sd").unwrap();
+        let w = WeightStore::init(&meta.params, 4);
+        let world = StyleWorld::new(16, 48, 5);
+        let s = eval_style(&rt, &w, &world, Style::Bluefire, 1.0, 2, false, 1).unwrap();
+        assert!((0.0..=40.0).contains(&s), "sps={s}");
+        let sm = eval_style_multi(&rt, &w, &world, 2, 1).unwrap();
+        assert!((0.0..=40.0).contains(&sm));
+    }
+}

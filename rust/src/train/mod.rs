@@ -1,0 +1,669 @@
+//! Training orchestrator: drives the AOT train-step executables from rust.
+//!
+//! The L2 train steps are pure functions  `(base.., theta, m, v, [idx,]
+//! step, lr, batch..) -> (theta', m', v', loss)`; this module owns the loop,
+//! the mask calibration (Grad/SNIP via the `*_grad_probe` artifact), theta
+//! initialization per adapter kind, checkpointing, and the byte accounting
+//! behind Table 6.  Python never runs here — only compiled artifacts.
+
+pub mod checkpoint;
+pub mod eval;
+pub mod schedule;
+
+use anyhow::{anyhow, Result};
+
+use crate::adapter::mask::{generate_mask, MaskStrategy};
+use crate::adapter::sparse::SparseDelta;
+use crate::adapter::{LoraAdapter, LoraTensor, ShiraAdapter};
+use crate::model::tensor::Tensor2;
+use crate::model::weights::WeightStore;
+use crate::runtime::manifest::ModelMeta;
+use crate::runtime::{HostValue, Runtime};
+use crate::util::alloc::MemLedger;
+use crate::util::rng::Rng;
+use schedule::Schedule;
+
+/// Which adapter formulation to train.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainKind {
+    Shira(MaskStrategy),
+    Lora,
+    Dora,
+    ShiraDora(MaskStrategy),
+    /// Full finetuning (used for base-model pretraining).
+    Full,
+    /// Appendix-C ablation: dense theta + Pallas gradient masking.
+    ShiraDense(MaskStrategy),
+}
+
+impl TrainKind {
+    pub fn artifact_suffix(&self) -> &'static str {
+        match self {
+            TrainKind::Shira(_) => "shira",
+            TrainKind::Lora => "lora",
+            TrainKind::Dora => "dora",
+            TrainKind::ShiraDora(_) => "shira_dora",
+            TrainKind::Full => "full",
+            TrainKind::ShiraDense(_) => "shira_dense",
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            TrainKind::Shira(s) => format!("shira-{}", s.name()),
+            TrainKind::Lora => "lora".into(),
+            TrainKind::Dora => "dora".into(),
+            TrainKind::ShiraDora(s) => format!("shira-{}-dora", s.name()),
+            TrainKind::Full => "full".into(),
+            TrainKind::ShiraDense(s) => format!("shira-dense-{}", s.name()),
+        }
+    }
+
+    pub fn mask_strategy(&self) -> Option<MaskStrategy> {
+        match self {
+            TrainKind::Shira(s) | TrainKind::ShiraDora(s) | TrainKind::ShiraDense(s) => {
+                Some(*s)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn needs_idx_input(&self) -> bool {
+        matches!(self, TrainKind::Shira(_) | TrainKind::ShiraDora(_))
+    }
+}
+
+/// Result of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub kind_label: String,
+    pub theta: Vec<f32>,
+    /// Mask indices (sparse kinds; local flat indices per target segment).
+    pub idx: Vec<i32>,
+    pub losses: Vec<f32>,
+    pub steps_per_sec: f64,
+    /// Peak logical training memory (params + trainable + optimizer + batch).
+    pub peak_bytes: usize,
+    pub trainable_params: usize,
+}
+
+impl TrainOutcome {
+    pub fn first_loss(&self) -> f32 {
+        *self.losses.first().unwrap_or(&f32::NAN)
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+}
+
+/// Provides batches in artifact input order (llama: x,y,mask; sd: z,target).
+pub type BatchFn<'a> = dyn FnMut(usize, &mut Rng) -> Vec<HostValue> + 'a;
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub model: ModelMeta,
+    pub base: WeightStore,
+    pub ledger: MemLedger,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, model_name: &str, base: WeightStore) -> Result<Self> {
+        let model = rt
+            .manifest
+            .model(model_name)
+            .map_err(|e| anyhow!("{e}"))?
+            .clone();
+        Ok(Trainer {
+            rt,
+            model,
+            base,
+            ledger: MemLedger::new(),
+        })
+    }
+
+    /// Fresh base weights from the manifest spec (pre-pretraining).
+    pub fn fresh_base(rt: &Runtime, model_name: &str, seed: u64) -> Result<WeightStore> {
+        let model = rt.manifest.model(model_name).map_err(|e| anyhow!("{e}"))?;
+        Ok(WeightStore::init(&model.params, seed))
+    }
+
+    /// Base weights marshalled in manifest param order.
+    pub fn base_inputs(&self) -> Vec<HostValue> {
+        self.model
+            .params
+            .iter()
+            .map(|(name, shape)| {
+                HostValue::f32(self.base.get(name).data.clone(), shape.clone())
+            })
+            .collect()
+    }
+
+    // ---------------------------------------------------------------
+    // Mask calibration (SHiRA-Grad / SHiRA-SNIP)
+    // ---------------------------------------------------------------
+
+    /// Accumulate |grad| over `n_batches` calibration batches using the
+    /// `*_grad_probe` artifact; returns the probe-layout vector.
+    pub fn calibrate_grads(
+        &self,
+        n_batches: usize,
+        data: &mut BatchFn,
+        rng: &mut Rng,
+    ) -> Result<Vec<f32>> {
+        let art = format!("{}_grad_probe", self.model.name_family());
+        let exe = self.rt.load(&art)?;
+        let probe_len: usize = self.model.probe.iter().map(|s| s.len).sum();
+        let mut acc = vec![0.0f32; probe_len];
+        for b in 0..n_batches {
+            let mut inputs = self.base_inputs();
+            inputs.extend(data(b, rng));
+            let out = exe.run(&inputs)?;
+            for (a, &g) in acc.iter_mut().zip(out[0].as_f32()) {
+                *a += g;
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Build the concatenated local-index vector for the SHiRA layout.
+    pub fn build_masks(
+        &self,
+        strategy: MaskStrategy,
+        grad_abs: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Vec<i32> {
+        let mut idx = Vec::with_capacity(self.model.theta_len["shira"]);
+        let probe_off: std::collections::HashMap<&str, usize> = self
+            .model
+            .probe
+            .iter()
+            .map(|s| (s.name.as_str(), s.off))
+            .collect();
+        for seg in &self.model.shira {
+            let w = self.base.get(&seg.name);
+            let g_seg = grad_abs.map(|g| {
+                let off = probe_off[seg.name.as_str()];
+                &g[off..off + w.numel()]
+            });
+            let mut stream = rng.stream(&format!("mask/{}/{}", strategy.name(), seg.name));
+            let local = generate_mask(strategy, w, seg.k, g_seg, &mut stream);
+            idx.extend(local.iter().map(|&i| i as i32));
+        }
+        idx
+    }
+
+    // ---------------------------------------------------------------
+    // Theta initialization
+    // ---------------------------------------------------------------
+
+    /// Initialize theta for `kind` (and return it).  For sparse kinds,
+    /// `idx` must be the concatenated local indices from `build_masks`.
+    pub fn init_theta(&self, kind: TrainKind, idx: &[i32], rng: &mut Rng) -> Vec<f32> {
+        match kind {
+            TrainKind::Shira(_) => self.gather_base(idx),
+            TrainKind::Lora | TrainKind::Dora => {
+                let segs = if matches!(kind, TrainKind::Lora) {
+                    &self.model.lora
+                } else {
+                    &self.model.dora
+                };
+                let total = self.model.theta_len[kind.artifact_suffix()];
+                let mut theta = vec![0.0f32; total];
+                for seg in segs {
+                    // A ~ N(0, 0.02), B = 0 (standard LoRA init)
+                    let mut stream = rng.stream(&format!("lora_a/{}", seg.name));
+                    stream.fill_normal(
+                        &mut theta[seg.a_off..seg.a_off + seg.a_len],
+                        0.0,
+                        0.02,
+                    );
+                    if let (Some(mo), Some(ml)) = (seg.mag_off, seg.mag_len) {
+                        let w = self.base.get(&seg.name);
+                        for c in 0..ml {
+                            let mut acc = 0.0f32;
+                            for r in 0..w.rows {
+                                let v = w.at(r, c);
+                                acc += v * v;
+                            }
+                            theta[mo + c] = (acc + 1e-6).sqrt();
+                        }
+                    }
+                }
+                theta
+            }
+            TrainKind::ShiraDora(_) => {
+                let total = self.model.theta_len["shira_dora"];
+                let mut theta = vec![0.0f32; total];
+                let gathered = self.gather_base(idx);
+                theta[..gathered.len()].copy_from_slice(&gathered);
+                for seg in &self.model.shira_dora {
+                    if let (Some(mo), Some(ml)) = (seg.mag_off, seg.mag_len) {
+                        let w = self.base.get(&seg.name);
+                        for c in 0..ml {
+                            let mut acc = 0.0f32;
+                            for r in 0..w.rows {
+                                let v = w.at(r, c);
+                                acc += v * v;
+                            }
+                            theta[mo + c] = (acc + 1e-6).sqrt();
+                        }
+                    }
+                }
+                theta
+            }
+            TrainKind::Full => {
+                let mut theta = Vec::with_capacity(self.model.theta_len["full"]);
+                for (name, _) in &self.model.params {
+                    theta.extend_from_slice(&self.base.get(name).data);
+                }
+                theta
+            }
+            TrainKind::ShiraDense(_) => {
+                let mut theta = Vec::new();
+                for seg in &self.model.probe {
+                    theta.extend_from_slice(&self.base.get(&seg.name).data);
+                }
+                theta
+            }
+        }
+    }
+
+    fn gather_base(&self, idx: &[i32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(idx.len());
+        for seg in &self.model.shira {
+            let w = self.base.get(&seg.name);
+            for &i in &idx[seg.off..seg.off + seg.k] {
+                out.push(w.data[i as usize]);
+            }
+        }
+        out
+    }
+
+    /// Dense {0,1} mask over the probe layout from sparse indices
+    /// (Appendix-C formulation).
+    pub fn dense_mask_from_idx(&self, idx: &[i32]) -> Vec<f32> {
+        let total: usize = self.model.probe.iter().map(|s| s.len).sum();
+        let mut mask = vec![0.0f32; total];
+        let probe_off: std::collections::HashMap<&str, usize> = self
+            .model
+            .probe
+            .iter()
+            .map(|s| (s.name.as_str(), s.off))
+            .collect();
+        for seg in &self.model.shira {
+            let off = probe_off[seg.name.as_str()];
+            for &i in &idx[seg.off..seg.off + seg.k] {
+                mask[off + i as usize] = 1.0;
+            }
+        }
+        mask
+    }
+
+    // ---------------------------------------------------------------
+    // The training loop
+    // ---------------------------------------------------------------
+
+    pub fn train(
+        &self,
+        kind: TrainKind,
+        steps: usize,
+        sched: Schedule,
+        data: &mut BatchFn,
+        seed: u64,
+    ) -> Result<TrainOutcome> {
+        let mut rng = Rng::new(seed);
+        // masks
+        let idx: Vec<i32> = match kind.mask_strategy() {
+            Some(strategy) if strategy.needs_gradients() => {
+                let mut calib_rng = rng.stream("calib");
+                let grads = self.calibrate_grads(4, data, &mut calib_rng)?;
+                self.build_masks(strategy, Some(&grads), &mut rng)
+            }
+            Some(strategy) => self.build_masks(strategy, None, &mut rng),
+            None => Vec::new(),
+        };
+        let theta0 = self.init_theta(kind, &idx, &mut rng);
+        self.train_with(kind, steps, sched, data, seed, theta0, idx)
+    }
+
+    /// Training loop with pre-built theta/idx (used by benches for control).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_with(
+        &self,
+        kind: TrainKind,
+        steps: usize,
+        sched: Schedule,
+        data: &mut BatchFn,
+        seed: u64,
+        theta0: Vec<f32>,
+        idx: Vec<i32>,
+    ) -> Result<TrainOutcome> {
+        let mut rng = Rng::new(seed).stream("train");
+        let art = format!(
+            "{}_train_{}",
+            self.model.name_family(),
+            kind.artifact_suffix()
+        );
+        let exe = self.rt.load(&art)?;
+        let k = theta0.len();
+        let mut theta = theta0;
+        let mut m = vec![0.0f32; k];
+        let mut v = vec![0.0f32; k];
+        let dense_mask = if matches!(kind, TrainKind::ShiraDense(_)) {
+            self.dense_mask_from_idx(&idx)
+        } else {
+            Vec::new()
+        };
+
+        // Table-6 accounting: what a training process must keep resident.
+        let base_bytes = if matches!(kind, TrainKind::Full) {
+            0 // full-FT: params ARE theta
+        } else {
+            self.base.nbytes()
+        };
+        self.ledger.alloc("base_params", base_bytes);
+        self.ledger.alloc("trainable", 4 * k);
+        self.ledger.alloc("optimizer", 8 * k); // adam m+v
+        self.ledger.alloc("mask_idx", 4 * idx.len() + 4 * dense_mask.len());
+
+        let base_inputs = if matches!(kind, TrainKind::Full) {
+            Vec::new()
+        } else {
+            self.base_inputs()
+        };
+
+        let mut losses = Vec::with_capacity(steps);
+        let t0 = std::time::Instant::now();
+        let mut batch_bytes_logged = false;
+        for step in 0..steps {
+            let batch = data(step, &mut rng);
+            if !batch_bytes_logged {
+                let bytes: usize = batch.iter().map(|b| b.nbytes()).sum();
+                self.ledger.alloc("batch", bytes);
+                batch_bytes_logged = true;
+            }
+            let mut inputs = base_inputs.clone();
+            inputs.push(HostValue::f32(std::mem::take(&mut theta), vec![k]));
+            inputs.push(HostValue::f32(std::mem::take(&mut m), vec![k]));
+            inputs.push(HostValue::f32(std::mem::take(&mut v), vec![k]));
+            if kind.needs_idx_input() {
+                inputs.push(HostValue::i32(idx.clone(), vec![idx.len()]));
+            }
+            inputs.push(HostValue::scalar_i32(step as i32));
+            inputs.push(HostValue::scalar_f32(sched.at(step, steps)));
+            inputs.extend(batch);
+            if !dense_mask.is_empty() {
+                inputs.push(HostValue::f32(dense_mask.clone(), vec![dense_mask.len()]));
+            }
+            let mut out = exe.run(&inputs)?;
+            let loss = out[3].as_f32()[0];
+            v = std::mem::replace(&mut out[2], HostValue::f32(vec![], vec![0])).into_f32();
+            m = std::mem::replace(&mut out[1], HostValue::f32(vec![], vec![0])).into_f32();
+            theta = std::mem::replace(&mut out[0], HostValue::f32(vec![], vec![0])).into_f32();
+            losses.push(loss);
+            if !loss.is_finite() {
+                return Err(anyhow!("{art}: loss diverged at step {step}"));
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let peak = self.ledger.peak_total();
+        // release (keeps ledger reusable across runs)
+        self.ledger.free("base_params", base_bytes);
+        self.ledger.free("trainable", 4 * k);
+        self.ledger.free("optimizer", 8 * k);
+        self.ledger.free("mask_idx", 4 * idx.len() + 4 * dense_mask.len());
+        if batch_bytes_logged {
+            let b = self.ledger.live("batch");
+            self.ledger.free("batch", b);
+        }
+
+        Ok(TrainOutcome {
+            kind_label: kind.label(),
+            theta,
+            idx,
+            losses,
+            steps_per_sec: steps as f64 / elapsed.max(1e-9),
+            peak_bytes: peak,
+            trainable_params: k,
+        })
+    }
+
+    // ---------------------------------------------------------------
+    // Export / import
+    // ---------------------------------------------------------------
+
+    /// Convert a trained sparse theta into a portable SHiRA adapter.
+    pub fn export_shira(
+        &self,
+        outcome: &TrainOutcome,
+        name: &str,
+        strategy: MaskStrategy,
+    ) -> ShiraAdapter {
+        let mut tensors = Vec::with_capacity(self.model.shira.len());
+        for seg in &self.model.shira {
+            let w = self.base.get(&seg.name);
+            let mut pairs: Vec<(u32, f32)> = (0..seg.k)
+                .map(|j| {
+                    let local = outcome.idx[seg.off + j] as u32;
+                    let delta = outcome.theta[seg.off + j] - w.data[local as usize];
+                    (local, delta)
+                })
+                .collect();
+            pairs.sort_unstable_by_key(|&(i, _)| i);
+            let (idx, delta): (Vec<u32>, Vec<f32>) = pairs.into_iter().unzip();
+            tensors.push((
+                seg.name.clone(),
+                SparseDelta::new(seg.shape.0, seg.shape.1, idx, delta),
+            ));
+        }
+        ShiraAdapter {
+            name: name.to_string(),
+            strategy: strategy.name().to_string(),
+            tensors,
+        }
+    }
+
+    /// Convert a trained LoRA theta into a portable LoRA adapter.
+    pub fn export_lora(&self, outcome: &TrainOutcome, name: &str) -> LoraAdapter {
+        let scale = self.rt.manifest.adapter.lora_scale as f32;
+        let mut tensors = Vec::with_capacity(self.model.lora.len());
+        for seg in &self.model.lora {
+            let (n, mm) = seg.shape;
+            let a = Tensor2::from_vec(
+                n,
+                seg.rank,
+                outcome.theta[seg.a_off..seg.a_off + seg.a_len].to_vec(),
+            );
+            let b = Tensor2::from_vec(
+                seg.rank,
+                mm,
+                outcome.theta[seg.b_off..seg.b_off + seg.b_len].to_vec(),
+            );
+            tensors.push(LoraTensor {
+                target: seg.name.clone(),
+                a,
+                b,
+            });
+        }
+        LoraAdapter {
+            name: name.to_string(),
+            scale,
+            tensors,
+        }
+    }
+
+    /// Write a full-FT theta back into the base weight store (pretraining).
+    pub fn absorb_full_theta(&mut self, theta: &[f32]) {
+        let mut off = 0;
+        for (name, shape) in self.model.params.clone() {
+            let numel: usize = shape.iter().product();
+            self.base
+                .get_mut(&name)
+                .data
+                .copy_from_slice(&theta[off..off + numel]);
+            off += numel;
+        }
+        assert_eq!(off, theta.len());
+    }
+}
+
+impl ModelMeta {
+    /// Artifact name prefix for this model family.
+    pub fn name_family(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::new(&dir).expect("runtime"))
+        } else {
+            None
+        }
+    }
+
+    fn sd_data<'a>(
+        world: &'a crate::data::style::StyleWorld,
+        ds: &'a crate::data::style::StyleDataset,
+        batch: usize,
+    ) -> impl FnMut(usize, &mut Rng) -> Vec<HostValue> + 'a {
+        let dz = world.d_z;
+        let dimg = world.d_img;
+        move |_step, rng| {
+            let (z, t) = ds.train_batch(batch, rng);
+            vec![
+                HostValue::f32(z, vec![batch, dz]),
+                HostValue::f32(t, vec![batch, dimg]),
+            ]
+        }
+    }
+
+    #[test]
+    fn kind_labels_and_suffixes() {
+        assert_eq!(TrainKind::Lora.label(), "lora");
+        assert_eq!(
+            TrainKind::Shira(MaskStrategy::Snip).label(),
+            "shira-snip"
+        );
+        assert_eq!(
+            TrainKind::ShiraDora(MaskStrategy::WeightMagnitude).artifact_suffix(),
+            "shira_dora"
+        );
+        assert!(TrainKind::Shira(MaskStrategy::Rand).needs_idx_input());
+        assert!(!TrainKind::Lora.needs_idx_input());
+    }
+
+    #[test]
+    fn sd_shira_training_reduces_loss_and_exports() {
+        let Some(rt) = runtime() else { return };
+        let base = Trainer::fresh_base(&rt, "sd", 42).unwrap();
+        let trainer = Trainer::new(&rt, "sd", base).unwrap();
+        let world = crate::data::style::StyleWorld::new(16, 48, 5);
+        let ds = crate::data::style::StyleDataset::new(
+            world.clone(),
+            crate::data::style::Style::Bluefire,
+            5,
+        );
+        let batch = trainer.model.dim("batch");
+        let mut data = sd_data(&world, &ds, batch);
+        let out = trainer
+            .train(
+                TrainKind::Shira(MaskStrategy::Rand),
+                12,
+                Schedule::Const(5e-3),
+                &mut data,
+                1,
+            )
+            .unwrap();
+        assert!(out.last_loss() < out.first_loss(), "{:?}", out.losses);
+        assert!(out.steps_per_sec > 0.0);
+        let adapter = trainer.export_shira(&out, "bf", MaskStrategy::Rand);
+        assert_eq!(adapter.tensors.len(), trainer.model.shira.len());
+        assert!(adapter.param_count() > 0);
+        // deltas should be nonzero after training
+        let total_delta: f32 = adapter
+            .tensors
+            .iter()
+            .flat_map(|(_, d)| d.delta.iter())
+            .map(|x| x.abs())
+            .sum();
+        assert!(total_delta > 0.0);
+    }
+
+    #[test]
+    fn sd_lora_training_reduces_loss() {
+        let Some(rt) = runtime() else { return };
+        let base = Trainer::fresh_base(&rt, "sd", 42).unwrap();
+        let trainer = Trainer::new(&rt, "sd", base).unwrap();
+        let world = crate::data::style::StyleWorld::new(16, 48, 5);
+        let ds = crate::data::style::StyleDataset::new(
+            world.clone(),
+            crate::data::style::Style::Paintings,
+            6,
+        );
+        let batch = trainer.model.dim("batch");
+        let mut data = sd_data(&world, &ds, batch);
+        let out = trainer
+            .train(TrainKind::Lora, 12, Schedule::Const(5e-3), &mut data, 2)
+            .unwrap();
+        assert!(out.last_loss() < out.first_loss());
+        let adapter = trainer.export_lora(&out, "paint");
+        assert_eq!(adapter.tensors.len(), trainer.model.lora.len());
+    }
+
+    #[test]
+    fn memory_accounting_orders_kinds() {
+        // Table 6 shape: shira trainable+optimizer bytes < lora < dora.
+        let Some(rt) = runtime() else { return };
+        let llama = rt.manifest.model("llama").unwrap();
+        let k_shira = llama.theta_len["shira"];
+        let k_lora = llama.theta_len["lora"];
+        let k_dora = llama.theta_len["dora"];
+        assert!(k_shira < k_lora, "{k_shira} vs {k_lora}");
+        assert!(k_lora < k_dora);
+    }
+
+    #[test]
+    fn grad_calibration_produces_nonzero_stats() {
+        let Some(rt) = runtime() else { return };
+        let base = Trainer::fresh_base(&rt, "sd", 7).unwrap();
+        let trainer = Trainer::new(&rt, "sd", base).unwrap();
+        let world = crate::data::style::StyleWorld::new(16, 48, 5);
+        let ds = crate::data::style::StyleDataset::new(
+            world.clone(),
+            crate::data::style::Style::Bluefire,
+            5,
+        );
+        let batch = trainer.model.dim("batch");
+        let mut data = sd_data(&world, &ds, batch);
+        let mut rng = Rng::new(3);
+        let g = trainer.calibrate_grads(2, &mut data, &mut rng).unwrap();
+        let probe_len: usize = trainer.model.probe.iter().map(|s| s.len).sum();
+        assert_eq!(g.len(), probe_len);
+        assert!(g.iter().any(|&x| x > 0.0));
+        assert!(g.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn masks_respect_layout_ks() {
+        let Some(rt) = runtime() else { return };
+        let base = Trainer::fresh_base(&rt, "llama", 7).unwrap();
+        let trainer = Trainer::new(&rt, "llama", base).unwrap();
+        let mut rng = Rng::new(4);
+        let idx = trainer.build_masks(MaskStrategy::WeightMagnitude, None, &mut rng);
+        assert_eq!(idx.len(), trainer.model.theta_len["shira"]);
+        for seg in &trainer.model.shira {
+            let slice = &idx[seg.off..seg.off + seg.k];
+            assert!(slice
+                .iter()
+                .all(|&i| (i as usize) < seg.shape.0 * seg.shape.1));
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Learning-rate schedules (paper Table 8: linear for LLM, cosine for LVM).
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    Const(f32),
+    /// Linear decay from lr to `floor_frac`·lr over the run.
+    Linear { lr: f32, floor_frac: f32 },
+    /// Cosine decay from lr to ~0 over the run.
+    Cosine { lr: f32 },
+}
+
+impl Schedule {
+    pub fn at(&self, step: usize, total: usize) -> f32 {
+        let t = if total <= 1 {
+            0.0
+        } else {
+            step as f32 / (total - 1) as f32
+        };
+        match *self {
+            Schedule::Const(lr) => lr,
+            Schedule::Linear { lr, floor_frac } => {
+                lr * (1.0 - (1.0 - floor_frac) * t)
+            }
+            Schedule::Cosine { lr } => {
+                lr * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+
+    pub fn peak(&self) -> f32 {
+        match *self {
+            Schedule::Const(lr) => lr,
+            Schedule::Linear { lr, .. } => lr,
+            Schedule::Cosine { lr } => lr,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_is_flat() {
+        let s = Schedule::Const(0.01);
+        assert_eq!(s.at(0, 100), 0.01);
+        assert_eq!(s.at(99, 100), 0.01);
+    }
+
+    #[test]
+    fn linear_decays_to_floor() {
+        let s = Schedule::Linear { lr: 1.0, floor_frac: 0.1 };
+        assert_eq!(s.at(0, 101), 1.0);
+        assert!((s.at(100, 101) - 0.1).abs() < 1e-6);
+        assert!(s.at(50, 101) < 1.0 && s.at(50, 101) > 0.1);
+    }
+
+    #[test]
+    fn cosine_decays_to_zero() {
+        let s = Schedule::Cosine { lr: 2.0 };
+        assert_eq!(s.at(0, 11), 2.0);
+        assert!(s.at(10, 11).abs() < 1e-6);
+        // monotone decreasing
+        let vals: Vec<f32> = (0..11).map(|i| s.at(i, 11)).collect();
+        assert!(vals.windows(2).all(|w| w[1] <= w[0] + 1e-7));
+    }
+
+    #[test]
+    fn single_step_run_uses_peak() {
+        for s in [
+            Schedule::Const(0.5),
+            Schedule::Linear { lr: 0.5, floor_frac: 0.1 },
+            Schedule::Cosine { lr: 0.5 },
+        ] {
+            assert_eq!(s.at(0, 1), 0.5);
+            assert_eq!(s.peak(), 0.5);
+        }
+    }
+}

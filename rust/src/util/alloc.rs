@@ -1,0 +1,155 @@
+//! Byte accounting for peak-memory measurements (paper Table 6).
+//!
+//! Two complementary trackers:
+//!
+//! * `CountingAllocator` — a `GlobalAlloc` wrapper counting live + peak
+//!   rust-heap bytes.  Installed by the bench binaries (`#[global_allocator]`).
+//! * `MemLedger` — logical accounting of model/optimizer/adapter buffers
+//!   (including XLA-side literals, which the rust allocator cannot see).
+//!   This is the quantity the paper reasons about: SHiRA's optimizer state
+//!   is O(k), LoRA's O(K_lora), DoRA's O(K_dora), full-FT's O(N).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+pub struct CountingAllocator;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+}
+
+impl CountingAllocator {
+    pub fn live_bytes() -> usize {
+        LIVE.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_bytes() -> usize {
+        PEAK.load(Ordering::Relaxed)
+    }
+
+    /// Reset the peak to the current live value (scoped measurements).
+    pub fn reset_peak() {
+        PEAK.store(LIVE.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// Logical buffer ledger, keyed by category ("params", "optimizer",
+/// "adapter", "activations", ...).
+#[derive(Debug, Default)]
+pub struct MemLedger {
+    inner: Mutex<LedgerInner>,
+}
+
+#[derive(Debug, Default)]
+struct LedgerInner {
+    live: BTreeMap<String, i64>,
+    peak_total: i64,
+}
+
+impl MemLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&self, category: &str, bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        *g.live.entry(category.to_string()).or_insert(0) += bytes as i64;
+        let total: i64 = g.live.values().sum();
+        g.peak_total = g.peak_total.max(total);
+    }
+
+    pub fn free(&self, category: &str, bytes: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.live.entry(category.to_string()).or_insert(0);
+        *e -= bytes as i64;
+        debug_assert!(*e >= 0, "ledger underflow in {category}");
+    }
+
+    pub fn live(&self, category: &str) -> usize {
+        let g = self.inner.lock().unwrap();
+        (*g.live.get(category).unwrap_or(&0)).max(0) as usize
+    }
+
+    pub fn live_total(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.live.values().sum::<i64>().max(0) as usize
+    }
+
+    pub fn peak_total(&self) -> usize {
+        self.inner.lock().unwrap().peak_total.max(0) as usize
+    }
+
+    pub fn breakdown(&self) -> Vec<(String, usize)> {
+        let g = self.inner.lock().unwrap();
+        g.live
+            .iter()
+            .map(|(k, &v)| (k.clone(), v.max(0) as usize))
+            .collect()
+    }
+}
+
+pub fn fmt_bytes(b: usize) -> String {
+    if b < 1024 {
+        format!("{b} B")
+    } else if b < 1024 * 1024 {
+        format!("{:.1} KiB", b as f64 / 1024.0)
+    } else if b < 1024 * 1024 * 1024 {
+        format!("{:.2} MiB", b as f64 / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", b as f64 / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_tracks_peak() {
+        let l = MemLedger::new();
+        l.alloc("params", 1000);
+        l.alloc("optimizer", 2000);
+        assert_eq!(l.live_total(), 3000);
+        assert_eq!(l.peak_total(), 3000);
+        l.free("optimizer", 2000);
+        l.alloc("adapter", 500);
+        assert_eq!(l.live_total(), 1500);
+        assert_eq!(l.peak_total(), 3000); // peak survives frees
+        assert_eq!(l.live("params"), 1000);
+    }
+
+    #[test]
+    fn breakdown_lists_categories() {
+        let l = MemLedger::new();
+        l.alloc("a", 1);
+        l.alloc("b", 2);
+        let bd = l.breakdown();
+        assert_eq!(bd.len(), 2);
+        assert_eq!(bd[0], ("a".to_string(), 1));
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(12), "12 B");
+        assert!(fmt_bytes(2048).contains("KiB"));
+        assert!(fmt_bytes(3 * 1024 * 1024).contains("MiB"));
+        assert!(fmt_bytes(5 * 1024 * 1024 * 1024).contains("GiB"));
+    }
+}

@@ -1,0 +1,198 @@
+//! Bench harness substrate (criterion is not in the offline vendor set).
+//!
+//! Criterion-like protocol: warmup, calibrated iteration count, N timed
+//! samples, mean ± std with MAD-based outlier flagging.  Benches register
+//! with `Bencher` and emit both a human table and a machine-readable JSON
+//! lines file under `target/bench-results/`.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Sample;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub median_ns: f64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub outliers: usize,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure_samples: usize,
+    pub target_sample_time: Duration,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // SHIRA_BENCH_FAST=1 shrinks the protocol for CI smoke runs.
+        let fast = std::env::var("SHIRA_BENCH_FAST").is_ok();
+        Bencher {
+            warmup: if fast {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(300)
+            },
+            measure_samples: if fast { 5 } else { 15 },
+            target_sample_time: if fast {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(100)
+            },
+            results: Vec::new(),
+            group: String::new(),
+        }
+    }
+
+    pub fn group(&mut self, name: &str) {
+        self.group = name.to_string();
+        println!("\n== {name} ==");
+    }
+
+    /// Benchmark `f`, which performs ONE logical operation per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + calibration: how many iters fit in target_sample_time?
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.target_sample_time.as_secs_f64() / per_iter).ceil()
+            as u64)
+            .max(1);
+
+        let mut sample = Sample::new();
+        for _ in 0..self.measure_samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+            sample.push(ns);
+        }
+        let median = sample.percentile(50.0);
+        let mad = sample.mad().max(1.0);
+        let outliers = sample
+            .values()
+            .iter()
+            .filter(|&&x| (x - median).abs() > 5.0 * mad)
+            .count();
+        let res = BenchResult {
+            name: if self.group.is_empty() {
+                name.to_string()
+            } else {
+                format!("{}/{}", self.group, name)
+            },
+            mean_ns: sample.mean(),
+            std_ns: sample.std(),
+            median_ns: median,
+            samples: self.measure_samples,
+            iters_per_sample: iters,
+            outliers,
+        };
+        println!(
+            "  {:48} {:>12} ± {:>10}  (median {:>12}, {} iters/sample{})",
+            res.name,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.std_ns),
+            fmt_ns(res.median_ns),
+            iters,
+            if outliers > 0 {
+                format!(", {outliers} outliers")
+            } else {
+                String::new()
+            }
+        );
+        self.results.push(res.clone());
+        res
+    }
+
+    /// Write results as JSON-lines for downstream tooling / EXPERIMENTS.md.
+    pub fn write_results(&self, file_stem: &str) {
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let mut out = String::new();
+        for r in &self.results {
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"mean_ns\":{:.1},\"std_ns\":{:.1},\"median_ns\":{:.1},\"samples\":{},\"iters\":{}}}\n",
+                r.name, r.mean_ns, r.std_ns, r.median_ns, r.samples,
+                r.iters_per_sample
+            ));
+        }
+        let path = dir.join(format!("{file_stem}.jsonl"));
+        if std::fs::write(&path, out).is_ok() {
+            println!("\nresults -> {}", path.display());
+        }
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        std::env::set_var("SHIRA_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let mut acc = 0u64;
+        let r = b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.mean_ns < 1e6); // an add is < 1ms
+        assert_eq!(r.samples, 5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("us"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,166 @@
+//! CLI argument parsing substrate (no clap in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse argv (without the program name).  `subcommands` lists legal
+    /// first tokens; pass `&[]` to disable subcommand handling.
+    pub fn parse(argv: &[String], subcommands: &[&str]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') && subcommands.contains(&first.as_str()) {
+                out.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" => rest is positional
+                    out.positional.extend(it.by_ref().cloned());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else {
+                    // value-consuming iff the next token isn't another flag
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            out.flags
+                                .insert(body.to_string(), it.next().unwrap().clone());
+                        }
+                        _ => {
+                            out.flags.insert(body.to_string(), String::new());
+                        }
+                    }
+                    out.present.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(subcommands: &[&str]) -> Result<Args, CliError> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, subcommands)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.present.iter().any(|k| k == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str()).filter(|s| !s.is_empty())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected number, got '{v}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = Args::parse(&argv("train --kind shira --steps 100 --verbose"),
+                            &["train", "serve"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("kind"), Some("shira"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&argv("--lr=0.002 --out=path/x"), &[]).unwrap();
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.002);
+        assert_eq!(a.get("out"), Some("path/x"));
+    }
+
+    #[test]
+    fn positional_and_double_dash() {
+        let a = Args::parse(&argv("run a b -- --not-a-flag"), &["run"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["a", "b", "--not-a-flag"]);
+    }
+
+    #[test]
+    fn flag_before_flag_is_boolean() {
+        let a = Args::parse(&argv("--fast --steps 5"), &[]).unwrap();
+        assert!(a.has("fast"));
+        assert_eq!(a.get("fast"), None);
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv("--steps nope"), &[]).unwrap();
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&[], &[]).unwrap();
+        assert_eq!(a.get_or("mode", "serve"), "serve");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate layer: everything the framework needs that the offline vendor
+//! set does not provide (see DESIGN.md §5, S19/S21).
+
+pub mod alloc;
+pub mod benchlib;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,140 @@
+//! Property-testing substrate (proptest is not in the offline vendor set).
+//!
+//! A small QuickCheck-style harness: generators over an `Rng`, a fixed
+//! case budget, and greedy input shrinking for failures.  Used to check the
+//! coordinator/sparse-algebra invariants in DESIGN.md §7.
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 64;
+
+/// A generator is any `Fn(&mut Rng) -> T`.
+pub trait Gen<T>: Fn(&mut Rng) -> T {}
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for F {}
+
+/// Run `prop` over `cases` random inputs; panic with the (shrunk, when a
+/// shrinker is provided) counterexample on failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    forall_shrink(seed, cases, gen, |_| Vec::new(), prop)
+}
+
+/// `forall` with a shrinker: on failure, repeatedly replace the failing
+/// input with the first smaller failing candidate until a fixpoint.
+pub fn forall_shrink<T, G, S, P>(seed: u64, cases: usize, gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // shrink
+        let mut worst = input;
+        let mut budget = 200;
+        'outer: while budget > 0 {
+            for cand in shrink(&worst) {
+                budget -= 1;
+                if !prop(&cand) {
+                    worst = cand;
+                    continue 'outer;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!("property failed at case {case} (seed {seed}):\n  input = {worst:?}");
+    }
+}
+
+// -- common generators ------------------------------------------------------
+
+pub fn usize_in(lo: usize, hi: usize) -> impl Fn(&mut Rng) -> usize {
+    move |r| lo + r.below(hi - lo + 1)
+}
+
+pub fn f32_in(lo: f32, hi: f32) -> impl Fn(&mut Rng) -> f32 {
+    move |r| lo + r.uniform_f32() * (hi - lo)
+}
+
+pub fn vec_of<T>(
+    len: impl Fn(&mut Rng) -> usize,
+    item: impl Fn(&mut Rng) -> T,
+) -> impl Fn(&mut Rng) -> Vec<T> {
+    move |r| {
+        let n = len(r);
+        (0..n).map(|_| item(r)).collect()
+    }
+}
+
+/// Shrinker for vectors: drop halves, then single elements.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(v[..n / 2].to_vec());
+    out.push(v[n / 2..].to_vec());
+    if n <= 8 {
+        for i in 0..n {
+            let mut w = v.to_vec();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 100, |r| r.below(1000), |&x| x < 1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(2, 100, |r| r.below(1000), |&x| x < 500);
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // Property: sum < 100. Shrinker should reduce the vector.
+        let res = std::panic::catch_unwind(|| {
+            forall_shrink(
+                3,
+                200,
+                vec_of(usize_in(0, 20), usize_in(0, 50)),
+                |v| shrink_vec(v),
+                |v: &Vec<usize>| v.iter().sum::<usize>() < 100,
+            );
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut r = Rng::new(4);
+        for _ in 0..100 {
+            let x = usize_in(5, 10)(&mut r);
+            assert!((5..=10).contains(&x));
+            let f = f32_in(-1.0, 1.0)(&mut r);
+            assert!((-1.0..=1.0).contains(&f));
+        }
+    }
+}

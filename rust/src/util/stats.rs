@@ -1,0 +1,270 @@
+//! Statistics substrate: online moments, percentiles, fixed-bucket latency
+//! histograms — used by serving metrics and the bench harness.
+
+/// Online mean/variance (Welford) with min/max tracking.
+#[derive(Clone, Debug, Default)]
+pub struct Moments {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Moments {
+    pub fn new() -> Self {
+        Moments {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Exact percentile over a stored sample (fine for bench-scale data).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Sample container with summary helpers.
+#[derive(Clone, Debug, Default)]
+pub struct Sample {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Sample {
+    pub fn new() -> Self {
+        Sample {
+            xs: Vec::new(),
+            sorted: true,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        self.ensure_sorted();
+        percentile(&self.xs, p)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / (self.xs.len() - 1) as f64)
+            .sqrt()
+    }
+
+    /// Median absolute deviation — robust spread for outlier flagging.
+    pub fn mad(&mut self) -> f64 {
+        self.ensure_sorted();
+        let med = percentile(&self.xs, 50.0);
+        let mut devs: Vec<f64> = self.xs.iter().map(|x| (x - med).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile(&devs, 50.0)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Log-scaled latency histogram (microsecond buckets, powers of ~2).
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    buckets: Vec<u64>, // bucket i covers [2^i, 2^(i+1)) us
+    count: u64,
+    sum_us: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist {
+            buckets: vec![0; 40],
+            count: 0,
+            sum_us: 0.0,
+        }
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let b = if us < 1.0 {
+            0
+        } else {
+            (us.log2().floor() as usize).min(self.buckets.len() - 1)
+        };
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_us += us;
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    /// Approximate percentile from bucket boundaries (upper bound).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        (1u64 << self.buckets.len()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_basic() {
+        let mut m = Moments::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            m.push(x);
+        }
+        assert_eq!(m.count(), 5);
+        assert!((m.mean() - 3.0).abs() < 1e-12);
+        assert!((m.std() - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(m.min(), 1.0);
+        assert_eq!(m.max(), 5.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(percentile(&xs, 50.0), 25.0);
+    }
+
+    #[test]
+    fn sample_stats() {
+        let mut s = Sample::new();
+        for x in [5.0, 1.0, 3.0] {
+            s.push(x);
+        }
+        assert_eq!(s.percentile(50.0), 3.0);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.std() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mad_robust_to_outlier() {
+        let mut s = Sample::new();
+        for x in [1.0, 1.1, 0.9, 1.0, 1.05, 100.0] {
+            s.push(x);
+        }
+        assert!(s.mad() < 0.2, "mad={}", s.mad());
+    }
+
+    #[test]
+    fn latency_hist_percentiles_monotone() {
+        let mut h = LatencyHist::new();
+        for i in 1..1000u64 {
+            h.record_us(i as f64);
+        }
+        let p50 = h.percentile_us(50.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p99);
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.count(), 999);
+    }
+}
