@@ -4,6 +4,8 @@
 //! deployment argument.
 //!
 //! Run: `cargo bench --bench bench_serving` (requires `make artifacts`).
+//! Flags: `--check` compares stage timings against the committed
+//! `rust/BENCH_serving.json`; `--save-baseline` rewrites it.
 
 use shira::adapter::sparse::SparseDelta;
 use shira::adapter::{LoraAdapter, LoraTensor, ShiraAdapter};
@@ -13,6 +15,7 @@ use shira::data::trace::{generate_trace, switch_count, TracePattern};
 use shira::model::tensor::Tensor2;
 use shira::model::weights::WeightStore;
 use shira::runtime::Runtime;
+use shira::util::benchlib::{finish_bench, BaselineEntry};
 use shira::util::rng::Rng;
 
 fn main() {
@@ -33,6 +36,7 @@ fn main() {
     println!("| policy | pattern | trace switches | engine switches | mean switch (us) | mean exec (us) | p99 lat (us) | req/s |");
     println!("|---|---|---|---|---|---|---|---|");
     let mut rows = Vec::new();
+    let mut entries: Vec<BaselineEntry> = Vec::new();
     for policy in [Policy::ShiraScatter, Policy::LoraFuse, Policy::LoraUnfused] {
         for (pname, pattern) in [
             ("bursty", TracePattern::Bursty { burst: 8 }),
@@ -110,6 +114,19 @@ fn main() {
                 rep.mean_exec_us,
                 rep.throughput_rps
             ));
+            // Per-stage mean/p50/p99 for the regression harness (ns).
+            entries.push(BaselineEntry {
+                name: format!("serving/{}/{}/switch", policy.name(), pname),
+                mean_ns: rep.mean_switch_us * 1e3,
+                p50_ns: rep.p50_switch_us * 1e3,
+                p99_ns: rep.p99_switch_us * 1e3,
+            });
+            entries.push(BaselineEntry {
+                name: format!("serving/{}/{}/exec", policy.name(), pname),
+                mean_ns: rep.mean_exec_us * 1e3,
+                p50_ns: rep.p50_exec_us * 1e3,
+                p99_ns: rep.p99_exec_us * 1e3,
+            });
         }
     }
     println!("\npaper shape: shira-scatter's switch cost ≪ lora-fuse's; lora-unfused");
@@ -119,4 +136,7 @@ fn main() {
         "target/bench-results/bench_serving.jsonl",
         rows.join("\n") + "\n",
     );
+    if !finish_bench("serving", &entries) {
+        std::process::exit(1);
+    }
 }

@@ -1,15 +1,29 @@
-//! Fig. 5 reproduction: LoRA-fuse vs SHiRA-scatter time per weight tensor
-//! across dimensions (the paper's headline systems result — up to ~10×
-//! faster switching at dim 4096 on CPU).
+//! Fig. 5 reproduction + parallel switch-engine sweep.
 //!
-//! Protocol matches the paper: per dimension, 10 randomly initialized
-//! weights; fuse time = `W += s·A@B` (rank 32); scatter time = sparse
-//! overwrite of 2% of entries.  Run: `cargo bench --bench bench_switch`.
+//! Part 1 (serial, the paper's headline systems result): LoRA-fuse vs
+//! SHiRA-scatter time per weight tensor across dimensions — up to ~10×
+//! faster switching at dim 4096 on CPU.
+//!
+//! Part 2 (this repo's scaling claim): the shard-parallel scatter/restore
+//! paths and the parallel LoRA fuse baseline across thread counts, after
+//! verifying each parallel path is bit-identical to its serial twin.
+//!
+//! Run: `cargo bench --bench bench_switch`.  Flags:
+//!   --check           compare against the committed rust/BENCH_switch.json
+//!   --tolerance 0.5   fractional slowdown allowed by --check (default 0.5)
+//!   --save-baseline   rewrite rust/BENCH_switch.json from this run
+//! `SHIRA_BENCH_FAST=1` shrinks the protocol and dims for CI smoke runs.
+
+use std::sync::Arc;
 
 use shira::adapter::sparse::SparseDelta;
+use shira::adapter::ShiraAdapter;
+use shira::coordinator::switch::SwitchEngine;
 use shira::model::tensor::Tensor2;
-use shira::util::benchlib::{black_box, Bencher};
+use shira::model::weights::WeightStore;
+use shira::util::benchlib::{black_box, finish_bench, results_to_entries, Bencher};
 use shira::util::rng::Rng;
+use shira::util::threadpool::ThreadPool;
 
 fn random_weight(rng: &mut Rng, dim: usize) -> Tensor2 {
     let mut w = Tensor2::zeros(dim, dim);
@@ -17,21 +31,32 @@ fn random_weight(rng: &mut Rng, dim: usize) -> Tensor2 {
     w
 }
 
+fn random_sparse(rng: &mut Rng, dim: usize, frac: f64) -> SparseDelta {
+    let k = ((dim * dim) as f64 * frac) as usize;
+    let idx = rng.sample_indices(dim * dim, k);
+    let mut delta = vec![0.0f32; k];
+    rng.fill_normal(&mut delta, 0.0, 0.1);
+    SparseDelta::new(dim, dim, idx, delta)
+}
+
 fn main() {
+    let fast = std::env::var("SHIRA_BENCH_FAST").is_ok();
     let mut b = Bencher::new();
     let mut rng = Rng::new(0xF165);
     let frac = 0.02;
     let rank = 32;
 
+    // -- Part 1: the serial Fig. 5 sweep ---------------------------------
+    let dims: &[usize] = if fast {
+        &[512, 1024]
+    } else {
+        &[512, 1024, 2048, 4096]
+    };
     let mut speedups = Vec::new();
-    for dim in [512usize, 1024, 2048, 4096] {
+    for &dim in dims {
         b.group(&format!("fig5/dim{dim}"));
-        let k = ((dim * dim) as f64 * frac) as usize;
         let mut w = random_weight(&mut rng, dim);
-        let idx = rng.sample_indices(dim * dim, k);
-        let mut delta = vec![0.0f32; k];
-        rng.fill_normal(&mut delta, 0.0, 0.1);
-        let sd = SparseDelta::new(dim, dim, idx, delta);
+        let sd = random_sparse(&mut rng, dim, frac);
         let mut a = Tensor2::zeros(dim, rank);
         let mut bb = Tensor2::zeros(rank, dim);
         rng.fill_normal(&mut a.data, 0.0, 0.1);
@@ -59,6 +84,88 @@ fn main() {
         speedups.push((dim, speedup));
     }
 
+    // -- Part 2: the shard-parallel engine across thread counts ----------
+    let par_dim = if fast { 1024 } else { 4096 };
+    let threads_sweep: &[usize] = if fast { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let sd = random_sparse(&mut rng, par_dim, frac);
+    let w0 = random_weight(&mut rng, par_dim);
+    let mut la = Tensor2::zeros(par_dim, rank);
+    let mut lb = Tensor2::zeros(rank, par_dim);
+    rng.fill_normal(&mut la.data, 0.0, 0.1);
+    rng.fill_normal(&mut lb.data, 0.0, 0.1);
+
+    // Correctness gate before any timing: parallel == serial, bit for bit.
+    {
+        let pool = ThreadPool::new(4);
+        let plan = sd.shard(8);
+        let mut ws = w0.clone();
+        sd.apply(&mut ws, 1.0);
+        let mut wp = w0.clone();
+        let mut snap = vec![0.0f32; sd.nnz()];
+        sd.snapshot_apply_parallel(&mut wp, 1.0, &mut snap, &pool, &plan);
+        assert_eq!(ws.data, wp.data, "parallel apply != serial apply");
+        sd.restore_parallel(&mut wp, &snap, &pool, &plan);
+        assert_eq!(wp.data, w0.data, "parallel restore != snapshot");
+        let mut ls = w0.clone();
+        ls.add_outer_product(&la, &lb, 1.0);
+        let mut lp = w0.clone();
+        lp.add_outer_product_par(&la, &lb, 1.0, &pool);
+        assert_eq!(ls.data, lp.data, "parallel fuse != serial fuse");
+        println!("parallel paths verified bit-identical to serial (dim {par_dim})");
+    }
+
+    let mut par_scatter = Vec::new();
+    for &threads in threads_sweep {
+        b.group(&format!("par/dim{par_dim}/t{threads}"));
+        let pool = ThreadPool::new(threads);
+        let plan = sd.shard(threads * 2);
+        let mut w = w0.clone();
+        let mut snap = vec![0.0f32; sd.nnz()];
+        let scatter = b.bench("scatter_apply", || {
+            sd.snapshot_apply_parallel(&mut w, 1.0, &mut snap, &pool, &plan);
+            black_box(&w.data[0]);
+        });
+        let restore = b.bench("restore", || {
+            sd.restore_parallel(&mut w, &snap, &pool, &plan);
+            black_box(&w.data[0]);
+        });
+        b.bench("lora_fuse_par", || {
+            w.add_outer_product_par(&la, &lb, 1.0, &pool);
+            black_box(&w.data[0]);
+        });
+        par_scatter.push((threads, scatter.mean_ns + restore.mean_ns));
+    }
+
+    // Engine-level: full switch+revert cycles through the snapshot arena
+    // (zero allocation in steady state), serial vs pooled.
+    let adapter = ShiraAdapter {
+        name: "bench".into(),
+        strategy: "rand".into(),
+        tensors: vec![("w".into(), sd.clone())],
+    };
+    let mut store = WeightStore::new();
+    store.insert("w", w0.clone());
+    b.group(&format!("engine/dim{par_dim}"));
+    let shared = Arc::new(adapter.clone());
+    {
+        // Same Arc-shared entry point as the pooled runs, so serial vs
+        // parallel differ only in dispatch — not in adapter cloning.
+        let mut eng = SwitchEngine::new(store.clone());
+        b.bench("switch_cycle_serial", || {
+            eng.switch_to_shira_shared(Arc::clone(&shared), 1.0);
+            eng.revert();
+        });
+    }
+    for &threads in threads_sweep {
+        let pool = Arc::new(ThreadPool::new(threads));
+        let mut eng = SwitchEngine::with_pool(store.clone(), Some(pool));
+        b.bench(&format!("switch_cycle_t{threads}"), || {
+            eng.switch_to_shira_shared(Arc::clone(&shared), 1.0);
+            eng.revert();
+        });
+    }
+
+    // -- summaries --------------------------------------------------------
     println!("\n== Fig. 5 summary (fuse / scatter) ==");
     println!("| dim | speedup |");
     println!("|---|---|");
@@ -66,5 +173,19 @@ fn main() {
         println!("| {dim} | {s:.1}x |");
     }
     println!("paper shape: speedup grows with dim, ~10x at 4096");
+
+    println!("\n== parallel scaling (scatter_apply + restore, dim {par_dim}) ==");
+    println!("| threads | total (ms) | speedup vs t1 |");
+    println!("|---|---|---|");
+    if let Some(&(_, t1)) = par_scatter.first() {
+        for (threads, total) in &par_scatter {
+            println!("| {threads} | {:.2} | {:.2}x |", total / 1e6, t1 / total);
+        }
+    }
+
     b.write_results("bench_switch");
+    let ok = finish_bench("switch", &results_to_entries(b.results()));
+    if !ok {
+        std::process::exit(1);
+    }
 }

@@ -5,8 +5,51 @@
 //! values (new_weight − base_weight at α = 1).  Application at strength α
 //! is `W.flat[idx[i]] += α·delta[i]`; exact revert uses a base-value
 //! snapshot taken at apply time (float-exact, unlike LoRA's W−αAB unfuse).
+//!
+//! For multi-core switching the sorted index array can be partitioned into
+//! a row-aligned [`ShardPlan`]: shards own disjoint row ranges of W, so
+//! `apply`/`restore`/`gather`/`merge` run shard-parallel with disjoint
+//! writes and no false sharing on the output cache lines (DESIGN.md §3).
+//! Every parallel path is bit-identical to its serial counterpart: each
+//! element is touched by exactly one shard and the per-element arithmetic
+//! is unchanged.
 
 use crate::model::tensor::Tensor2;
+use crate::util::threadpool::{SendPtr, ThreadPool};
+
+/// Hard cap on shards per tensor; keeps [`ShardPlan`] a fixed-size (heap-
+/// allocation-free) value, which the zero-alloc switch path relies on.
+pub const MAX_SHARDS: usize = 64;
+
+/// Row-aligned partition of a sorted index array into `n` contiguous
+/// ranges with near-equal nnz.  `bounds[s]..bounds[s+1]` is shard `s`'s
+/// range into `idx`/`delta`; boundaries are snapped up to row boundaries
+/// of the underlying matrix so two shards never write the same row.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardPlan {
+    n_shards: usize,
+    bounds: [usize; MAX_SHARDS + 1],
+}
+
+impl ShardPlan {
+    pub fn len(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_shards == 0
+    }
+
+    /// Index range `[lo, hi)` of shard `s`.
+    pub fn range(&self, s: usize) -> (usize, usize) {
+        (self.bounds[s], self.bounds[s + 1])
+    }
+
+    /// Total entries covered (== nnz of the delta the plan was built for).
+    pub fn total(&self) -> usize {
+        self.bounds[self.n_shards]
+    }
+}
 
 /// Sparse delta for one weight tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -60,6 +103,41 @@ impl SparseDelta {
         SparseDelta::new(base.rows, base.cols, idx, delta)
     }
 
+    // -- sharding ---------------------------------------------------------
+
+    /// Partition the sorted index array into `n_shards` near-equal-nnz
+    /// ranges, snapping each boundary up to the next row boundary of W.
+    ///
+    /// Row alignment means shard `s` and shard `s+1` write disjoint rows,
+    /// so concurrent shards never contend for an output cache line (rows
+    /// are ≥ 64 B apart for any serving-scale `cols`).  Cheap: O(n·run)
+    /// where `run` is one row's nnz — recomputing per switch is noise next
+    /// to the O(nnz) scatter itself.
+    pub fn shard(&self, n_shards: usize) -> ShardPlan {
+        let n = n_shards.clamp(1, MAX_SHARDS);
+        let nnz = self.nnz();
+        let mut bounds = [0usize; MAX_SHARDS + 1];
+        let mut prev = 0usize;
+        for s in 1..n {
+            let mut t = (nnz * s / n).max(prev);
+            if t > 0 && t < nnz && self.cols > 0 {
+                let row = self.idx[t - 1] as usize / self.cols;
+                while t < nnz && self.idx[t] as usize / self.cols == row {
+                    t += 1;
+                }
+            }
+            bounds[s] = t;
+            prev = t;
+        }
+        bounds[n] = nnz;
+        ShardPlan {
+            n_shards: n,
+            bounds,
+        }
+    }
+
+    // -- scatter hot path -------------------------------------------------
+
     /// The scatter hot path: `W.flat[idx[i]] += α·delta[i]`.
     ///
     /// Indices are sorted, so writes walk memory monotonically — the
@@ -69,35 +147,178 @@ impl SparseDelta {
     pub fn apply(&self, w: &mut Tensor2, alpha: f32) {
         debug_assert_eq!(w.rows, self.rows);
         debug_assert_eq!(w.cols, self.cols);
-        let data = &mut w.data[..];
-        for (&i, &d) in self.idx.iter().zip(self.delta.iter()) {
-            // SAFETY: idx entries are validated < rows*cols at construction.
-            unsafe {
-                *data.get_unchecked_mut(i as usize) += alpha * d;
-            }
+        unsafe { self.apply_raw(w.data.as_mut_ptr(), alpha, 0, self.nnz()) }
+    }
+
+    /// Shard-parallel scatter.  Bit-identical to [`Self::apply`] for any
+    /// plan/thread count: indices are unique, so every element of W is
+    /// written by exactly one shard with the same single `+=`.
+    pub fn apply_parallel(
+        &self,
+        w: &mut Tensor2,
+        alpha: f32,
+        pool: &ThreadPool,
+        plan: &ShardPlan,
+    ) {
+        debug_assert_eq!(w.rows, self.rows);
+        debug_assert_eq!(w.cols, self.cols);
+        debug_assert_eq!(plan.total(), self.nnz());
+        let wp = SendPtr::new(w.data.as_mut_ptr());
+        let plan = *plan;
+        pool.scoped_for(plan.len(), move |s| {
+            let (lo, hi) = plan.range(s);
+            // SAFETY: shards cover disjoint idx ranges; idx entries are
+            // unique and validated < rows*cols at construction.
+            unsafe { self.apply_raw(wp.get(), alpha, lo, hi) }
+        });
+    }
+
+    #[inline]
+    unsafe fn apply_raw(&self, w: *mut f32, alpha: f32, lo: usize, hi: usize) {
+        for j in lo..hi {
+            let i = *self.idx.get_unchecked(j) as usize;
+            *w.add(i) += alpha * *self.delta.get_unchecked(j);
         }
     }
+
+    // -- snapshot / restore ----------------------------------------------
 
     /// Snapshot the base values at this delta's support (for exact revert).
     pub fn snapshot(&self, w: &Tensor2) -> Vec<f32> {
         self.idx.iter().map(|&i| w.data[i as usize]).collect()
     }
 
+    /// Snapshot into a caller-owned buffer (the zero-allocation arena path).
+    pub fn snapshot_into(&self, w: &Tensor2, out: &mut [f32]) {
+        assert_eq!(out.len(), self.nnz());
+        for (o, &i) in out.iter_mut().zip(self.idx.iter()) {
+            *o = w.data[i as usize];
+        }
+    }
+
+    /// Fused snapshot-then-apply over `[lo, hi)` — the switch hot path does
+    /// both in one pass over the support (one load feeds both the snapshot
+    /// store and the accumulate).
+    #[inline]
+    pub fn snapshot_apply_range(
+        &self,
+        w: &mut Tensor2,
+        alpha: f32,
+        snap: &mut [f32],
+        lo: usize,
+        hi: usize,
+    ) {
+        debug_assert_eq!(snap.len(), self.nnz());
+        debug_assert!(lo <= hi && hi <= self.nnz());
+        unsafe {
+            self.snapshot_apply_raw(w.data.as_mut_ptr(), alpha, snap.as_mut_ptr(), lo, hi)
+        }
+    }
+
+    /// Fused snapshot+apply over the whole support.
+    pub fn snapshot_apply(&self, w: &mut Tensor2, alpha: f32, snap: &mut [f32]) {
+        self.snapshot_apply_range(w, alpha, snap, 0, self.nnz());
+    }
+
+    /// Shard-parallel fused snapshot+apply.
+    pub fn snapshot_apply_parallel(
+        &self,
+        w: &mut Tensor2,
+        alpha: f32,
+        snap: &mut [f32],
+        pool: &ThreadPool,
+        plan: &ShardPlan,
+    ) {
+        assert_eq!(snap.len(), self.nnz());
+        debug_assert_eq!(plan.total(), self.nnz());
+        let wp = SendPtr::new(w.data.as_mut_ptr());
+        let sp = SendPtr::new(snap.as_mut_ptr());
+        let plan = *plan;
+        pool.scoped_for(plan.len(), move |s| {
+            let (lo, hi) = plan.range(s);
+            // SAFETY: disjoint idx ranges => disjoint W elements and
+            // disjoint snapshot slots.
+            unsafe { self.snapshot_apply_raw(wp.get(), alpha, sp.get(), lo, hi) }
+        });
+    }
+
+    #[inline]
+    unsafe fn snapshot_apply_raw(
+        &self,
+        w: *mut f32,
+        alpha: f32,
+        snap: *mut f32,
+        lo: usize,
+        hi: usize,
+    ) {
+        scatter_snapshot_apply(self.idx.as_ptr(), self.delta.as_ptr(), w, snap, alpha, lo, hi)
+    }
+
     /// Exact revert: write back a snapshot taken before `apply`.
     pub fn restore(&self, w: &mut Tensor2, snapshot: &[f32]) {
         assert_eq!(snapshot.len(), self.nnz());
-        let data = &mut w.data[..];
-        for (&i, &s) in self.idx.iter().zip(snapshot.iter()) {
-            unsafe {
-                *data.get_unchecked_mut(i as usize) = s;
-            }
+        unsafe {
+            self.restore_raw(w.data.as_mut_ptr(), snapshot.as_ptr(), 0, self.nnz())
         }
     }
+
+    /// Shard-parallel restore.  Bit-identical to [`Self::restore`]: pure
+    /// stores of snapshotted values to disjoint locations.
+    pub fn restore_parallel(
+        &self,
+        w: &mut Tensor2,
+        snapshot: &[f32],
+        pool: &ThreadPool,
+        plan: &ShardPlan,
+    ) {
+        assert_eq!(snapshot.len(), self.nnz());
+        debug_assert_eq!(plan.total(), self.nnz());
+        let wp = SendPtr::new(w.data.as_mut_ptr());
+        let plan = *plan;
+        pool.scoped_for(plan.len(), move |s| {
+            let (lo, hi) = plan.range(s);
+            // SAFETY: disjoint idx ranges => disjoint W elements.
+            unsafe { self.restore_raw(wp.get(), snapshot.as_ptr(), lo, hi) }
+        });
+    }
+
+    #[inline]
+    unsafe fn restore_raw(&self, w: *mut f32, snap: *const f32, lo: usize, hi: usize) {
+        scatter_restore(self.idx.as_ptr(), w, snap, lo, hi)
+    }
+
+    // -- gather -----------------------------------------------------------
 
     /// Gather current values at the support.
     pub fn gather(&self, w: &Tensor2) -> Vec<f32> {
         self.idx.iter().map(|&i| w.data[i as usize]).collect()
     }
+
+    /// Shard-parallel gather into a caller-owned buffer.
+    pub fn gather_parallel(
+        &self,
+        w: &Tensor2,
+        out: &mut [f32],
+        pool: &ThreadPool,
+        plan: &ShardPlan,
+    ) {
+        assert_eq!(out.len(), self.nnz());
+        debug_assert_eq!(plan.total(), self.nnz());
+        let op = SendPtr::new(out.as_mut_ptr());
+        let wd = &w.data;
+        let plan = *plan;
+        pool.scoped_for(plan.len(), move |s| {
+            let (lo, hi) = plan.range(s);
+            for j in lo..hi {
+                // SAFETY: disjoint out slots per shard; idx validated.
+                unsafe {
+                    *op.get().add(j) = wd[*self.idx.get_unchecked(j) as usize];
+                }
+            }
+        });
+    }
+
+    // -- merge ------------------------------------------------------------
 
     /// Naive multi-adapter fusion (paper Fig. 3b): index-union merge,
     /// summing deltas where supports overlap.
@@ -105,26 +326,87 @@ impl SparseDelta {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         let mut idx = Vec::with_capacity(self.nnz() + other.nnz());
         let mut delta = Vec::with_capacity(self.nnz() + other.nnz());
-        let (mut a, mut b) = (0usize, 0usize);
-        while a < self.nnz() || b < other.nnz() {
-            let ia = self.idx.get(a).copied().unwrap_or(u32::MAX);
-            let ib = other.idx.get(b).copied().unwrap_or(u32::MAX);
-            if ia < ib {
-                idx.push(ia);
-                delta.push(self.delta[a]);
-                a += 1;
-            } else if ib < ia {
-                idx.push(ib);
-                delta.push(other.delta[b]);
-                b += 1;
-            } else {
-                idx.push(ia);
-                delta.push(self.delta[a] + other.delta[b]);
-                a += 1;
-                b += 1;
-            }
-        }
+        merge_ranges(
+            &self.idx,
+            &self.delta,
+            &other.idx,
+            &other.delta,
+            &mut idx,
+            &mut delta,
+        );
         SparseDelta::new(self.rows, self.cols, idx, delta)
+    }
+
+    /// Shard-parallel union-merge, bit-identical to [`Self::merge`].
+    ///
+    /// Both supports are cut at the same flat-index thresholds (taken from
+    /// `self`'s row-aligned plan), each shard's output size is counted in a
+    /// first parallel pass, and shards then write disjoint output ranges.
+    pub fn merge_parallel(
+        &self,
+        other: &SparseDelta,
+        pool: &ThreadPool,
+        n_shards: usize,
+    ) -> SparseDelta {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let plan = self.shard(n_shards);
+        let n = plan.len();
+        if n <= 1 {
+            return self.merge(other);
+        }
+        // Flat-index thresholds at shard starts; both arrays are cut there.
+        let numel = self.numel() as u64;
+        let mut thresh = [0u64; MAX_SHARDS + 1];
+        thresh[n] = numel;
+        for s in 1..n {
+            let b = plan.bounds[s];
+            thresh[s] = if b < self.nnz() {
+                self.idx[b] as u64
+            } else {
+                numel
+            };
+        }
+        let mut ob = [0usize; MAX_SHARDS + 1];
+        ob[n] = other.nnz();
+        for s in 1..n {
+            ob[s] = other.idx.partition_point(|&i| (i as u64) < thresh[s]);
+        }
+
+        // Pass 1: per-shard union sizes (disjoint count slots).
+        let mut counts = [0usize; MAX_SHARDS];
+        let cp = SendPtr::new(counts.as_mut_ptr());
+        pool.scoped_for(n, |s| {
+            let (alo, ahi) = plan.range(s);
+            let c = merge_count(&self.idx[alo..ahi], &other.idx[ob[s]..ob[s + 1]]);
+            // SAFETY: one writer per slot.
+            unsafe { *cp.get().add(s) = c }
+        });
+        let mut offs = [0usize; MAX_SHARDS + 1];
+        for s in 0..n {
+            offs[s + 1] = offs[s] + counts[s];
+        }
+        let total = offs[n];
+
+        // Pass 2: write each shard's merged run at its offset.
+        let mut out_idx = vec![0u32; total];
+        let mut out_delta = vec![0f32; total];
+        let oi = SendPtr::new(out_idx.as_mut_ptr());
+        let od = SendPtr::new(out_delta.as_mut_ptr());
+        pool.scoped_for(n, |s| {
+            let (alo, ahi) = plan.range(s);
+            // SAFETY: output ranges [offs[s], offs[s+1]) are disjoint.
+            unsafe {
+                merge_write(
+                    &self.idx[alo..ahi],
+                    &self.delta[alo..ahi],
+                    &other.idx[ob[s]..ob[s + 1]],
+                    &other.delta[ob[s]..ob[s + 1]],
+                    oi.get().add(offs[s]),
+                    od.get().add(offs[s]),
+                );
+            }
+        });
+        SparseDelta::new(self.rows, self.cols, out_idx, out_delta)
     }
 
     /// Scale the delta (the paper's α baked in permanently).
@@ -160,27 +442,39 @@ impl SparseDelta {
     /// product is nonzero only if some row r has self[r,c1] ≠ 0 and
     /// other[r,c2] ≠ 0 — the orthogonality diagnostic of paper §3.2.
     /// Returns (nnz, total = m²).
+    ///
+    /// Sorted row-major indices mean each row's columns are a contiguous
+    /// run, so both supports are walked with two cursors — no per-row
+    /// `Vec<Vec<u32>>` grouping pass and no allocation beyond the dedup
+    /// set itself.
     pub fn ata_nnz(&self, other: &SparseDelta) -> (usize, usize) {
         use std::collections::HashSet;
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        // group columns by row for both supports
-        let mut rows_self: Vec<Vec<u32>> = vec![Vec::new(); self.rows];
-        for &i in &self.idx {
-            rows_self[(i as usize) / self.cols].push(i % self.cols as u32);
-        }
-        let mut rows_other: Vec<Vec<u32>> = vec![Vec::new(); other.rows];
-        for &i in &other.idx {
-            rows_other[(i as usize) / other.cols].push(i % other.cols as u32);
-        }
+        let cols = self.cols;
         let mut pairs: HashSet<u64> = HashSet::new();
-        for r in 0..self.rows {
-            for &c1 in &rows_self[r] {
-                for &c2 in &rows_other[r] {
-                    pairs.insert((c1 as u64) << 32 | c2 as u64);
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < self.nnz() && b < other.nnz() {
+            let ra = self.idx[a] as usize / cols;
+            let rb = other.idx[b] as usize / cols;
+            if ra < rb {
+                a = row_run_end(&self.idx, a, cols);
+            } else if rb < ra {
+                b = row_run_end(&other.idx, b, cols);
+            } else {
+                let a_end = row_run_end(&self.idx, a, cols);
+                let b_end = row_run_end(&other.idx, b, cols);
+                for &i1 in &self.idx[a..a_end] {
+                    let c1 = (i1 as usize % cols) as u64;
+                    for &i2 in &other.idx[b..b_end] {
+                        let c2 = (i2 as usize % cols) as u64;
+                        pairs.insert(c1 << 32 | c2);
+                    }
                 }
+                a = a_end;
+                b = b_end;
             }
         }
-        (pairs.len(), self.cols * self.cols)
+        (pairs.len(), cols * cols)
     }
 
     /// Densify (tests / analysis only).
@@ -190,6 +484,144 @@ impl SparseDelta {
             t.data[i as usize] = d;
         }
         t
+    }
+}
+
+/// The fused snapshot-then-apply scatter kernel over `[lo, hi)` — the one
+/// definition shared by the serial path, the shard-parallel path, and the
+/// switch engine's task list (so the bit-identity argument has a single
+/// code location).
+///
+/// # Safety
+/// `idx[lo..hi)` must be unique, in-bounds for `w`, and valid for `snap`
+/// slot `j`; ranges handed to concurrent callers must be disjoint.
+#[inline]
+pub(crate) unsafe fn scatter_snapshot_apply(
+    idx: *const u32,
+    delta: *const f32,
+    w: *mut f32,
+    snap: *mut f32,
+    alpha: f32,
+    lo: usize,
+    hi: usize,
+) {
+    for j in lo..hi {
+        let i = *idx.add(j) as usize;
+        let wp = w.add(i);
+        let base = *wp;
+        *snap.add(j) = base;
+        *wp = base + alpha * *delta.add(j);
+    }
+}
+
+/// Snapshot-restore kernel over `[lo, hi)` (see [`scatter_snapshot_apply`]).
+///
+/// # Safety
+/// Same contract as [`scatter_snapshot_apply`].
+#[inline]
+pub(crate) unsafe fn scatter_restore(
+    idx: *const u32,
+    w: *mut f32,
+    snap: *const f32,
+    lo: usize,
+    hi: usize,
+) {
+    for j in lo..hi {
+        *w.add(*idx.add(j) as usize) = *snap.add(j);
+    }
+}
+
+/// End of the run of entries sharing `idx[start]`'s row.
+#[inline]
+fn row_run_end(idx: &[u32], start: usize, cols: usize) -> usize {
+    let row = idx[start] as usize / cols;
+    let mut e = start + 1;
+    while e < idx.len() && idx[e] as usize / cols == row {
+        e += 1;
+    }
+    e
+}
+
+/// Two-pointer union size of two sorted unique index slices.
+fn merge_count(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut c) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                i += 1;
+                j += 1;
+            }
+        }
+        c += 1;
+    }
+    c + (a.len() - i) + (b.len() - j)
+}
+
+/// Union-merge into Vecs (serial path).
+fn merge_ranges(
+    a_idx: &[u32],
+    a_val: &[f32],
+    b_idx: &[u32],
+    b_val: &[f32],
+    out_idx: &mut Vec<u32>,
+    out_val: &mut Vec<f32>,
+) {
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < a_idx.len() || b < b_idx.len() {
+        let ia = a_idx.get(a).copied().unwrap_or(u32::MAX);
+        let ib = b_idx.get(b).copied().unwrap_or(u32::MAX);
+        if ia < ib {
+            out_idx.push(ia);
+            out_val.push(a_val[a]);
+            a += 1;
+        } else if ib < ia {
+            out_idx.push(ib);
+            out_val.push(b_val[b]);
+            b += 1;
+        } else {
+            out_idx.push(ia);
+            out_val.push(a_val[a] + b_val[b]);
+            a += 1;
+            b += 1;
+        }
+    }
+}
+
+/// Union-merge into raw output cursors (parallel pass 2).
+///
+/// # Safety
+/// `oi`/`od` must have room for `merge_count(a_idx, b_idx)` entries and be
+/// written by exactly one shard.
+unsafe fn merge_write(
+    a_idx: &[u32],
+    a_val: &[f32],
+    b_idx: &[u32],
+    b_val: &[f32],
+    mut oi: *mut u32,
+    mut od: *mut f32,
+) {
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < a_idx.len() || b < b_idx.len() {
+        let ia = a_idx.get(a).copied().unwrap_or(u32::MAX);
+        let ib = b_idx.get(b).copied().unwrap_or(u32::MAX);
+        if ia < ib {
+            *oi = ia;
+            *od = a_val[a];
+            a += 1;
+        } else if ib < ia {
+            *oi = ib;
+            *od = b_val[b];
+            b += 1;
+        } else {
+            *oi = ia;
+            *od = a_val[a] + b_val[b];
+            a += 1;
+            b += 1;
+        }
+        oi = oi.add(1);
+        od = od.add(1);
     }
 }
 
@@ -256,6 +688,31 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_into_matches_snapshot() {
+        let mut rng = Rng::new(31);
+        let w = random_w(&mut rng, 16, 16);
+        let d = random_delta(&mut rng, 16, 16, 20);
+        let mut buf = vec![0.0f32; 20];
+        d.snapshot_into(&w, &mut buf);
+        assert_eq!(buf, d.snapshot(&w));
+    }
+
+    #[test]
+    fn fused_snapshot_apply_matches_two_pass() {
+        let mut rng = Rng::new(32);
+        let w0 = random_w(&mut rng, 24, 24);
+        let d = random_delta(&mut rng, 24, 24, 48);
+        let mut w1 = w0.clone();
+        let snap1 = d.snapshot(&w1);
+        d.apply(&mut w1, 0.8);
+        let mut w2 = w0.clone();
+        let mut snap2 = vec![0.0f32; d.nnz()];
+        d.snapshot_apply(&mut w2, 0.8, &mut snap2);
+        assert_eq!(w1.data, w2.data);
+        assert_eq!(snap1, snap2);
+    }
+
+    #[test]
     fn from_diff_roundtrip() {
         let mut rng = Rng::new(4);
         let base = random_w(&mut rng, 8, 12);
@@ -319,6 +776,156 @@ mod tests {
         let (nnz, total) = a.ata_nnz(&b);
         assert_eq!(nnz, 1);
         assert_eq!(total, 16);
+    }
+
+    #[test]
+    fn ata_nnz_matches_dense_reference() {
+        // Cross-check the run-based walk against a brute-force dense count.
+        let mut rng = Rng::new(51);
+        for _ in 0..10 {
+            let (rows, cols) = (4 + rng.below(8), 4 + rng.below(8));
+            let total = rows * cols;
+            let a = random_delta(&mut rng, rows, cols, 1 + rng.below(total / 2));
+            let b = random_delta(&mut rng, rows, cols, 1 + rng.below(total / 2));
+            let da = a.to_dense();
+            let db = b.to_dense();
+            let mut want = 0usize;
+            for c1 in 0..cols {
+                for c2 in 0..cols {
+                    let nz = (0..rows)
+                        .any(|r| da.at(r, c1) != 0.0 && db.at(r, c2) != 0.0);
+                    if nz {
+                        want += 1;
+                    }
+                }
+            }
+            let (got, tot) = a.ata_nnz(&b);
+            assert_eq!(got, want);
+            assert_eq!(tot, cols * cols);
+        }
+    }
+
+    #[test]
+    fn shard_plan_is_row_aligned_partition() {
+        let mut rng = Rng::new(52);
+        for &(rows, cols, k, n) in
+            &[(32usize, 32usize, 200usize, 4usize), (8, 128, 300, 8), (64, 16, 1, 7), (4, 4, 0, 3)]
+        {
+            let d = random_delta(&mut rng, rows, cols, k);
+            let plan = d.shard(n);
+            assert_eq!(plan.total(), d.nnz());
+            let mut covered = 0usize;
+            for s in 0..plan.len() {
+                let (lo, hi) = plan.range(s);
+                assert!(lo <= hi);
+                assert_eq!(lo, covered);
+                covered = hi;
+                if s > 0 && lo > 0 && lo < d.nnz() {
+                    let prev_row = d.idx[lo - 1] as usize / cols;
+                    let this_row = d.idx[lo] as usize / cols;
+                    assert!(prev_row < this_row, "boundary splits a row");
+                }
+            }
+            assert_eq!(covered, d.nnz());
+        }
+    }
+
+    #[test]
+    fn parallel_apply_restore_bit_identical_for_any_thread_count() {
+        // The tentpole invariant: shard-parallel scatter/restore produce
+        // bytes equal to the serial path for thread counts 1, 2, N.
+        let mut rng = Rng::new(53);
+        let d = random_delta(&mut rng, 64, 64, 700);
+        let w0 = random_w(&mut rng, 64, 64);
+        let mut w_serial = w0.clone();
+        d.apply(&mut w_serial, 1.3);
+        for threads in [1usize, 2, 7] {
+            let pool = ThreadPool::new(threads);
+            let plan = d.shard(threads * 2);
+            let mut w = w0.clone();
+            let mut snap = vec![0.0f32; d.nnz()];
+            d.snapshot_apply_parallel(&mut w, 1.3, &mut snap, &pool, &plan);
+            assert_eq!(w.data, w_serial.data, "apply threads={threads}");
+            assert_eq!(snap, d.snapshot(&w0), "snapshot threads={threads}");
+            d.restore_parallel(&mut w, &snap, &pool, &plan);
+            assert_eq!(w.data, w0.data, "restore threads={threads}");
+            let mut w2 = w0.clone();
+            d.apply_parallel(&mut w2, 1.3, &pool, &plan);
+            assert_eq!(w2.data, w_serial.data, "apply_parallel threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_gather_matches_serial() {
+        let mut rng = Rng::new(54);
+        let d = random_delta(&mut rng, 32, 32, 100);
+        let w = random_w(&mut rng, 32, 32);
+        let pool = ThreadPool::new(3);
+        let plan = d.shard(5);
+        let mut out = vec![0.0f32; d.nnz()];
+        d.gather_parallel(&w, &mut out, &pool, &plan);
+        assert_eq!(out, d.gather(&w));
+    }
+
+    #[test]
+    fn prop_parallel_merge_bit_identical() {
+        let pool = ThreadPool::new(4);
+        pt::forall(
+            55,
+            30,
+            |r| {
+                let rows = 2 + r.below(16);
+                let cols = 2 + r.below(16);
+                let total = rows * cols;
+                let ka = 1 + r.below(total);
+                let kb = 1 + r.below(total);
+                (r.next_u64(), rows, cols, ka, kb)
+            },
+            |&(seed, rows, cols, ka, kb)| {
+                let mut rng = Rng::new(seed);
+                let a = random_delta(&mut rng, rows, cols, ka);
+                let b = random_delta(&mut rng, rows, cols, kb);
+                let serial = a.merge(&b);
+                [1usize, 2, 5, 16].iter().all(|&n| {
+                    let par = a.merge_parallel(&b, &pool, n);
+                    par.idx == serial.idx && par.delta == serial.delta
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_parallel_apply_restore_bit_identical() {
+        let pool = ThreadPool::new(4);
+        pt::forall(
+            56,
+            25,
+            |r| {
+                let rows = 2 + r.below(24);
+                let cols = 2 + r.below(24);
+                let total = rows * cols;
+                let k = 1 + r.below(total);
+                let shards = 1 + r.below(12);
+                let alpha = -2.0 + 4.0 * r.uniform_f32();
+                (r.next_u64(), rows, cols, k, shards, alpha)
+            },
+            |&(seed, rows, cols, k, shards, alpha)| {
+                let mut rng = Rng::new(seed);
+                let d = random_delta(&mut rng, rows, cols, k);
+                let w0 = random_w(&mut rng, rows, cols);
+                let plan = d.shard(shards);
+                let mut ws = w0.clone();
+                d.apply(&mut ws, alpha);
+                let mut wp = w0.clone();
+                let mut snap = vec![0.0f32; d.nnz()];
+                d.snapshot_apply_parallel(&mut wp, alpha, &mut snap, &pool, &plan);
+                if wp.data != ws.data {
+                    return false;
+                }
+                d.restore_parallel(&mut wp, &snap, &pool, &plan);
+                wp.data == w0.data
+            },
+        );
     }
 
     #[test]

@@ -1,22 +1,36 @@
 //! Byte-budgeted LRU adapter cache — on-device adapter storage management
 //! for the rapid-switching serving loop (the paper's mobile deployment
 //! story: many adapters on flash, few resident in RAM).
+//!
+//! Recency is an intrusive doubly-linked list threaded through a slab of
+//! nodes, with a name→slot map: `get`/`put`/evict are O(1) per entry (the
+//! previous implementation kept a `Vec<String>` order list whose touch and
+//! evict were O(n) scans with O(n) shifts — measurable at serving rates
+//! with many resident adapters).
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// Cached entry: the decoded adapter plus its resident byte cost.
-pub struct CacheEntry<T> {
-    pub value: Arc<T>,
-    pub bytes: usize,
+const NIL: usize = usize::MAX;
+
+struct Node<T> {
+    key: String,
+    value: Arc<T>,
+    bytes: usize,
+    prev: usize,
+    next: usize,
 }
 
 pub struct LruCache<T> {
     capacity_bytes: usize,
     used_bytes: usize,
-    map: HashMap<String, CacheEntry<T>>,
-    /// LRU order: front = coldest.
-    order: Vec<String>,
+    map: HashMap<String, usize>,
+    /// Slab of nodes; freed slots are recycled via `free`.
+    slab: Vec<Option<Node<T>>>,
+    free: Vec<usize>,
+    /// Intrusive list: head = coldest, tail = hottest.
+    head: usize,
+    tail: usize,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
@@ -28,7 +42,10 @@ impl<T> LruCache<T> {
             capacity_bytes,
             used_bytes: 0,
             map: HashMap::new(),
-            order: Vec::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
             hits: 0,
             misses: 0,
             evictions: 0,
@@ -47,18 +64,63 @@ impl<T> LruCache<T> {
         self.used_bytes
     }
 
-    fn touch(&mut self, key: &str) {
-        if let Some(pos) = self.order.iter().position(|k| k == key) {
-            let k = self.order.remove(pos);
-            self.order.push(k);
+    fn node(&self, i: usize) -> &Node<T> {
+        self.slab[i].as_ref().expect("live slot")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node<T> {
+        self.slab[i].as_mut().expect("live slot")
+    }
+
+    /// Detach slot `i` from the recency list.
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = {
+            let n = self.node(i);
+            (n.prev, n.next)
+        };
+        if prev != NIL {
+            self.node_mut(prev).next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.node_mut(next).prev = prev;
+        } else {
+            self.tail = prev;
         }
     }
 
+    /// Append slot `i` as hottest.
+    fn push_tail(&mut self, i: usize) {
+        let old_tail = self.tail;
+        {
+            let n = self.node_mut(i);
+            n.prev = old_tail;
+            n.next = NIL;
+        }
+        if old_tail != NIL {
+            self.node_mut(old_tail).next = i;
+        } else {
+            self.head = i;
+        }
+        self.tail = i;
+    }
+
+    /// Remove slot `i` entirely, returning its byte cost.
+    fn remove_slot(&mut self, i: usize) -> usize {
+        self.unlink(i);
+        let node = self.slab[i].take().expect("live slot");
+        self.free.push(i);
+        self.map.remove(&node.key);
+        node.bytes
+    }
+
     pub fn get(&mut self, key: &str) -> Option<Arc<T>> {
-        if self.map.contains_key(key) {
+        if let Some(&i) = self.map.get(key) {
             self.hits += 1;
-            self.touch(key);
-            Some(Arc::clone(&self.map[key].value))
+            self.unlink(i);
+            self.push_tail(i);
+            Some(Arc::clone(&self.node(i).value))
         } else {
             self.misses += 1;
             None
@@ -69,27 +131,35 @@ impl<T> LruCache<T> {
     /// than the whole budget are admitted alone (budget temporarily
     /// exceeded is a policy choice: serving must not fail).
     pub fn put(&mut self, key: &str, value: T, bytes: usize) -> Arc<T> {
-        if let Some(old) = self.map.remove(key) {
-            self.used_bytes -= old.bytes;
-            self.order.retain(|k| k != key);
+        if let Some(&i) = self.map.get(key) {
+            self.used_bytes -= self.remove_slot(i);
         }
-        while !self.order.is_empty() && self.used_bytes + bytes > self.capacity_bytes {
-            let coldest = self.order.remove(0);
-            if let Some(e) = self.map.remove(&coldest) {
-                self.used_bytes -= e.bytes;
-                self.evictions += 1;
-            }
+        while self.head != NIL && self.used_bytes + bytes > self.capacity_bytes {
+            let coldest = self.head;
+            self.used_bytes -= self.remove_slot(coldest);
+            self.evictions += 1;
         }
         let arc = Arc::new(value);
-        self.map.insert(
-            key.to_string(),
-            CacheEntry {
-                value: Arc::clone(&arc),
-                bytes,
-            },
-        );
+        let node = Node {
+            key: key.to_string(),
+            value: Arc::clone(&arc),
+            bytes,
+            prev: NIL,
+            next: NIL,
+        };
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slab[s] = Some(node);
+                s
+            }
+            None => {
+                self.slab.push(Some(node));
+                self.slab.len() - 1
+            }
+        };
+        self.push_tail(slot);
+        self.map.insert(key.to_string(), slot);
         self.used_bytes += bytes;
-        self.order.push(key.to_string());
         arc
     }
 
@@ -113,6 +183,18 @@ impl<T> LruCache<T> {
         } else {
             self.hits as f64 / total as f64
         }
+    }
+
+    /// Keys coldest-first — the recency order (diagnostics / tests).
+    pub fn keys_lru_order(&self) -> Vec<&str> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut cur = self.head;
+        while cur != NIL {
+            let n = self.node(cur);
+            out.push(n.key.as_str());
+            cur = n.next;
+        }
+        out
     }
 }
 
@@ -179,29 +261,108 @@ mod tests {
     }
 
     #[test]
-    fn prop_used_bytes_invariant() {
-        // After any operation sequence, used_bytes == sum of live entries
-        // and (when >1 entry) stays within budget.
+    fn recency_order_tracks_gets_and_puts() {
+        let mut c: LruCache<u32> = LruCache::new(10_000);
+        for (k, v) in [("a", 1), ("b", 2), ("c", 3)] {
+            c.put(k, v, 10);
+        }
+        assert_eq!(c.keys_lru_order(), vec!["a", "b", "c"]);
+        let _ = c.get("a");
+        assert_eq!(c.keys_lru_order(), vec!["b", "c", "a"]);
+        c.put("b", 9, 10); // replace re-inserts as hottest
+        assert_eq!(c.keys_lru_order(), vec!["c", "a", "b"]);
+    }
+
+    /// Reference model: the original Vec-order implementation, kept as the
+    /// behavioral oracle for the O(1) list version.
+    struct ModelCache {
+        cap: usize,
+        used: usize,
+        entries: Vec<(String, u32, usize)>, // coldest-first
+        hits: u64,
+        misses: u64,
+        evictions: u64,
+    }
+
+    impl ModelCache {
+        fn new(cap: usize) -> Self {
+            ModelCache {
+                cap,
+                used: 0,
+                entries: Vec::new(),
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }
+        }
+
+        fn get(&mut self, key: &str) -> Option<u32> {
+            if let Some(pos) = self.entries.iter().position(|(k, _, _)| k == key) {
+                self.hits += 1;
+                let e = self.entries.remove(pos);
+                let v = e.1;
+                self.entries.push(e);
+                Some(v)
+            } else {
+                self.misses += 1;
+                None
+            }
+        }
+
+        fn put(&mut self, key: &str, value: u32, bytes: usize) {
+            if let Some(pos) = self.entries.iter().position(|(k, _, _)| k == key) {
+                let e = self.entries.remove(pos);
+                self.used -= e.2;
+            }
+            while !self.entries.is_empty() && self.used + bytes > self.cap {
+                let e = self.entries.remove(0);
+                self.used -= e.2;
+                self.evictions += 1;
+            }
+            self.entries.push((key.to_string(), value, bytes));
+            self.used += bytes;
+        }
+    }
+
+    #[test]
+    fn prop_matches_reference_model() {
+        // Any op sequence: identical hits/misses/evictions, identical
+        // recency order, identical byte accounting.
         pt::forall(
             11,
-            40,
+            60,
             |r| {
-                let n = 1 + r.below(30);
+                let n = 1 + r.below(60);
                 (0..n)
-                    .map(|_| (r.below(6), 1 + r.below(120)))
-                    .collect::<Vec<(usize, usize)>>()
+                    .map(|_| (r.below(2), r.below(6), 1 + r.below(120)))
+                    .collect::<Vec<(usize, usize, usize)>>()
             },
             |ops| {
-                let mut c: LruCache<usize> = LruCache::new(256);
-                for &(key, bytes) in ops {
-                    c.put(&format!("k{key}"), key, bytes);
+                let mut real: LruCache<u32> = LruCache::new(256);
+                let mut model = ModelCache::new(256);
+                for &(op, key, bytes) in ops {
+                    let k = format!("k{key}");
+                    if op == 0 {
+                        let got = real.get(&k).map(|v| *v);
+                        let want = model.get(&k);
+                        if got != want {
+                            return false;
+                        }
+                    } else {
+                        real.put(&k, key as u32, bytes);
+                        model.put(&k, key as u32, bytes);
+                    }
                 }
-                let sum: usize = c
-                    .order
-                    .iter()
-                    .map(|k| c.map.get(k).map(|e| e.bytes).unwrap_or(0))
-                    .sum();
-                sum == c.used_bytes && c.map.len() == c.order.len()
+                let order: Vec<String> =
+                    real.keys_lru_order().iter().map(|s| s.to_string()).collect();
+                let model_order: Vec<String> =
+                    model.entries.iter().map(|(k, _, _)| k.clone()).collect();
+                order == model_order
+                    && real.used_bytes() == model.used
+                    && real.hits == model.hits
+                    && real.misses == model.misses
+                    && real.evictions == model.evictions
+                    && real.len() == model.entries.len()
             },
         );
     }

@@ -21,12 +21,14 @@ use crate::model::weights::WeightStore;
 use crate::runtime::manifest::LoraSeg;
 use crate::runtime::{HostValue, Runtime};
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 
-/// A decoded adapter of either family.
+/// A decoded adapter of either family.  Variants hold `Arc`s so a cache
+/// hit can be activated on the switch engine without copying tensor data.
 #[derive(Clone, Debug)]
 pub enum AnyAdapter {
-    Shira(ShiraAdapter),
-    Lora(LoraAdapter),
+    Shira(Arc<ShiraAdapter>),
+    Lora(Arc<LoraAdapter>),
 }
 
 impl AnyAdapter {
@@ -83,9 +85,9 @@ impl AdapterStore {
             .get(name)
             .ok_or_else(|| anyhow!("unknown adapter {name}"))?;
         let decoded = if let Ok(s) = io::decode_shira(bytes) {
-            AnyAdapter::Shira(s)
+            AnyAdapter::Shira(Arc::new(s))
         } else {
-            AnyAdapter::Lora(io::decode_lora(bytes).map_err(|e| anyhow!("{e}"))?)
+            AnyAdapter::Lora(Arc::new(io::decode_lora(bytes).map_err(|e| anyhow!("{e}"))?))
         };
         let bytes_cost = decoded.nbytes();
         Ok(self.cache.put(name, decoded, bytes_cost))
@@ -106,7 +108,11 @@ pub struct ServeReport {
     pub switches: u64,
     pub throughput_rps: f64,
     pub mean_switch_us: f64,
+    pub p50_switch_us: f64,
+    pub p99_switch_us: f64,
     pub mean_exec_us: f64,
+    pub p50_exec_us: f64,
+    pub p99_exec_us: f64,
     pub p99_latency_us: f64,
     pub cache_hit_rate: f64,
     pub summary: String,
@@ -130,11 +136,25 @@ impl<'rt> Server<'rt> {
         model: &str,
         cache_bytes: usize,
     ) -> Result<Self> {
+        let pool = Arc::new(ThreadPool::host_sized());
+        Self::with_pool(rt, base, policy, model, cache_bytes, pool)
+    }
+
+    /// Server with an explicit switch-work pool; the pool is shared with
+    /// the engine so scatter/restore overlap across target tensors.
+    pub fn with_pool(
+        rt: &'rt Runtime,
+        base: WeightStore,
+        policy: Policy,
+        model: &str,
+        cache_bytes: usize,
+        pool: Arc<ThreadPool>,
+    ) -> Result<Self> {
         let meta = rt.manifest.model(model).map_err(|e| anyhow!("{e}"))?;
         let max_batch = meta.dim("batch");
         Ok(Server {
             rt,
-            engine: SwitchEngine::new(base),
+            engine: SwitchEngine::with_pool(base, Some(pool)),
             store: AdapterStore::new(cache_bytes),
             batcher: DynamicBatcher::new(BatcherConfig {
                 max_batch,
@@ -192,10 +212,12 @@ impl<'rt> Server<'rt> {
                 let t0 = Instant::now();
                 match (&*adapter, self.policy) {
                     (AnyAdapter::Shira(a), Policy::ShiraScatter) => {
-                        self.engine.switch_to_shira(a, self.alpha);
+                        // Arc-shared activation: no tensor copy on the
+                        // request path, snapshots land in the engine arena.
+                        self.engine.switch_to_shira_shared(Arc::clone(a), self.alpha);
                     }
                     (AnyAdapter::Lora(a), Policy::LoraFuse) => {
-                        self.engine.switch_to_lora(a);
+                        self.engine.switch_to_lora_shared(Arc::clone(a));
                     }
                     (AnyAdapter::Lora(a), Policy::LoraUnfused) => {
                         // weights stay at base; branches ride the fwd pass
@@ -252,6 +274,22 @@ impl<'rt> Server<'rt> {
         let wall = wall0.elapsed().as_secs_f64();
         let (hits, misses) = self.store.cache_stats();
         let p99 = metrics.request_latency.percentile_us(99.0);
+        let (p50_switch, p99_switch) = if metrics.switch_us.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (
+                metrics.switch_us.percentile(50.0),
+                metrics.switch_us.percentile(99.0),
+            )
+        };
+        let (p50_exec, p99_exec) = if metrics.exec_us.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (
+                metrics.exec_us.percentile(50.0),
+                metrics.exec_us.percentile(99.0),
+            )
+        };
         Ok(ServeReport {
             policy: self.policy,
             wall_secs: wall,
@@ -260,7 +298,11 @@ impl<'rt> Server<'rt> {
             switches: metrics.switches,
             throughput_rps: metrics.requests as f64 / wall.max(1e-9),
             mean_switch_us: metrics.switch_us.mean(),
+            p50_switch_us: p50_switch,
+            p99_switch_us: p99_switch,
             mean_exec_us: metrics.exec_us.mean(),
+            p50_exec_us: p50_exec,
+            p99_exec_us: p99_exec,
             p99_latency_us: p99,
             cache_hit_rate: if hits + misses == 0 {
                 0.0

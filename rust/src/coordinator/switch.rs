@@ -11,11 +11,42 @@
 //!   revert accumulates float drift.
 //! * `LoraUnfused` — leave branches on the forward path (handled by the
 //!   server via the `llama_fwd_unfused_lora` artifact; no weight mutation).
+//!
+//! ## Steady-state allocation & parallelism (DESIGN.md §4)
+//!
+//! Snapshots live in a per-target **arena** of reusable buffers: after the
+//! first visit to a target tensor the switch path performs no O(nnz)
+//! allocations — buffers are resized within retained capacity.  (Parallel
+//! dispatch itself costs one small O(threads) control block per region —
+//! bounded and nnz-independent.)  When a
+//! [`ThreadPool`] is attached, scatter-apply and snapshot-restore run as a
+//! flat list of row-aligned shard tasks spanning *all* target tensors, so
+//! switch work overlaps across tensors and across shards of one tensor.
+//! Parallel results are bit-identical to the serial path (each element is
+//! written by exactly one shard; per-element arithmetic unchanged).
 
+use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::adapter::sparse::{scatter_restore, scatter_snapshot_apply, MAX_SHARDS};
 use crate::adapter::{LoraAdapter, ShiraAdapter};
 use crate::model::weights::WeightStore;
+use crate::util::threadpool::ThreadPool;
+
+/// Below this many touched entries per switch, shard dispatch overhead
+/// exceeds the scatter itself and the engine stays serial.
+const PAR_MIN_NNZ: usize = 4096;
+
+/// Target entries per shard (≈ a few cache-resident strides of work).
+const NNZ_PER_SHARD: usize = 2048;
+
+fn shards_for(nnz: usize, threads: usize) -> usize {
+    (nnz / NNZ_PER_SHARD)
+        .max(1)
+        .min(threads * 2)
+        .min(MAX_SHARDS)
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
@@ -58,21 +89,50 @@ impl SwitchTiming {
     }
 }
 
-/// What is currently applied to the resident weights.
+/// What is currently applied to the resident weights.  Adapters are held
+/// by `Arc`, so activating a cached adapter copies no tensor data.
 #[derive(Debug)]
 enum Active {
     None,
-    Shira {
-        name: String,
-        /// (target, snapshot of base values on the adapter's support)
-        snapshots: Vec<(String, Vec<f32>)>,
-        /// the adapter's supports, needed to restore
-        adapter: ShiraAdapter,
-    },
-    Lora {
-        name: String,
-        adapter: LoraAdapter,
-    },
+    Shira { adapter: Arc<ShiraAdapter> },
+    Lora { adapter: Arc<LoraAdapter> },
+}
+
+/// One shard's worth of scatter work: raw cursors into a target tensor,
+/// its snapshot arena buffer, and the adapter's idx/delta arrays.
+///
+/// Pointers are only dereferenced inside the `scoped_for` region of the
+/// switch call that built them; the task list is cleared afterwards.
+#[derive(Clone, Copy)]
+struct ShardTask {
+    w: *mut f32,
+    snap: *mut f32,
+    idx: *const u32,
+    delta: *const f32,
+    lo: usize,
+    hi: usize,
+}
+
+unsafe impl Send for ShardTask {}
+unsafe impl Sync for ShardTask {}
+
+impl ShardTask {
+    /// Fused snapshot + scatter-apply over this shard's range — delegates
+    /// to the one shared kernel in `adapter::sparse`.
+    ///
+    /// # Safety
+    /// Tasks must cover disjoint idx ranges; all pointers must be live.
+    unsafe fn snapshot_apply(&self, alpha: f32) {
+        scatter_snapshot_apply(self.idx, self.delta, self.w, self.snap, alpha, self.lo, self.hi)
+    }
+
+    /// Snapshot-restore over this shard's range.
+    ///
+    /// # Safety
+    /// Same contract as [`Self::snapshot_apply`].
+    unsafe fn restore(&self) {
+        scatter_restore(self.idx, self.w, self.snap, self.lo, self.hi)
+    }
 }
 
 /// Owns the resident base weights and mutates them per adapter.
@@ -80,58 +140,167 @@ pub struct SwitchEngine {
     pub weights: WeightStore,
     active: Active,
     pub switches: u64,
+    pool: Option<Arc<ThreadPool>>,
+    /// Reusable per-target snapshot buffers: allocation-free steady state.
+    arena: HashMap<String, Vec<f32>>,
+    /// Reusable shard-task scratch for the parallel path.
+    tasks: Vec<ShardTask>,
 }
 
 impl SwitchEngine {
     pub fn new(weights: WeightStore) -> Self {
+        Self::with_pool(weights, None)
+    }
+
+    /// Engine with an attached thread pool: scatter/restore and the LoRA
+    /// fuse baseline run shard-parallel across all target tensors.
+    pub fn with_pool(weights: WeightStore, pool: Option<Arc<ThreadPool>>) -> Self {
         SwitchEngine {
             weights,
             active: Active::None,
             switches: 0,
+            pool,
+            arena: HashMap::new(),
+            tasks: Vec::new(),
         }
+    }
+
+    pub fn set_pool(&mut self, pool: Option<Arc<ThreadPool>>) {
+        self.pool = pool;
+    }
+
+    pub fn pool(&self) -> Option<&Arc<ThreadPool>> {
+        self.pool.as_ref()
     }
 
     pub fn active_name(&self) -> Option<&str> {
         match &self.active {
             Active::None => None,
-            Active::Shira { name, .. } | Active::Lora { name, .. } => Some(name),
+            Active::Shira { adapter } => Some(adapter.name.as_str()),
+            Active::Lora { adapter } => Some(adapter.name.as_str()),
+        }
+    }
+
+    /// Ensure the arena buffer for `target` exists and has length `len`
+    /// (allocates only on first growth; steady state reuses capacity).
+    /// No clear(): stale contents are fine — the fused snapshot+apply
+    /// pass overwrites every slot, so only genuinely new capacity is
+    /// zero-filled by `resize`.
+    fn arena_buf_prepare(arena: &mut HashMap<String, Vec<f32>>, target: &str, len: usize) {
+        match arena.get_mut(target) {
+            Some(buf) => buf.resize(len, 0.0),
+            None => {
+                arena.insert(target.to_string(), vec![0.0; len]);
+            }
         }
     }
 
     /// Apply a SHiRA adapter at strength `alpha` (reverting whatever was
     /// active first).  Returns stage timings.
+    ///
+    /// Convenience wrapper that deep-clones the adapter into an `Arc`
+    /// (outside the timed fuse stage).  Hot paths — the server request
+    /// loop, switch benchmarks — should hold adapters in `Arc`s and use
+    /// [`Self::switch_to_shira_shared`], which copies nothing.
     pub fn switch_to_shira(&mut self, a: &ShiraAdapter, alpha: f32) -> SwitchTiming {
+        self.switch_to_shira_shared(Arc::new(a.clone()), alpha)
+    }
+
+    /// Zero-copy variant: the engine keeps the `Arc` (no tensor clone), so
+    /// activating a cache-resident adapter performs no O(nnz) allocation
+    /// in steady state — only first-visit arena growth, plus one
+    /// O(threads) dispatch control block per parallel region.
+    pub fn switch_to_shira_shared(&mut self, a: Arc<ShiraAdapter>, alpha: f32) -> SwitchTiming {
         let mut t = self.revert_timing();
         let t0 = Instant::now();
-        let mut snapshots = Vec::with_capacity(a.tensors.len());
-        for (target, delta) in &a.tensors {
-            let w = self.weights.get_mut(target);
-            snapshots.push((target.clone(), delta.snapshot(w)));
-            delta.apply(w, alpha);
+        let total_nnz = a.param_count();
+        let pool = match &self.pool {
+            Some(p) if total_nnz >= PAR_MIN_NNZ && p.threads() > 1 => Some(Arc::clone(p)),
+            _ => None,
+        };
+        match pool {
+            Some(pool) => {
+                self.build_shira_tasks(&a, pool.threads(), true);
+                let tasks = &self.tasks;
+                pool.scoped_for(tasks.len(), |i| {
+                    // SAFETY: tasks cover disjoint idx ranges (row-aligned
+                    // shard plans over unique sorted indices, one plan per
+                    // distinct target tensor with its own arena buffer).
+                    unsafe { tasks[i].snapshot_apply(alpha) }
+                });
+                self.tasks.clear();
+            }
+            None => {
+                for (target, delta) in &a.tensors {
+                    Self::arena_buf_prepare(&mut self.arena, target, delta.nnz());
+                    let buf = self.arena.get_mut(target.as_str()).unwrap();
+                    let w = self.weights.get_mut(target);
+                    delta.snapshot_apply(w, alpha, buf);
+                }
+            }
         }
         t.fuse_us += t0.elapsed().as_secs_f64() * 1e6;
-        self.active = Active::Shira {
-            name: a.name.clone(),
-            snapshots,
-            adapter: a.clone(),
-        };
+        self.active = Active::Shira { adapter: a };
         self.switches += 1;
         t
     }
 
-    /// Fuse a LoRA adapter (HF pipeline's fuse stage).
+    /// Build the flat shard-task list spanning every target tensor.
+    /// `fresh` resizes arena buffers for a new snapshot; revert reuses the
+    /// buffers exactly as the preceding apply left them.
+    fn build_shira_tasks(&mut self, a: &ShiraAdapter, threads: usize, fresh: bool) {
+        self.tasks.clear();
+        for (target, delta) in &a.tensors {
+            if fresh {
+                Self::arena_buf_prepare(&mut self.arena, target, delta.nnz());
+            }
+            let buf = self
+                .arena
+                .get_mut(target.as_str())
+                .expect("arena buffer exists for active target");
+            debug_assert_eq!(buf.len(), delta.nnz());
+            let w = self.weights.get_mut(target);
+            debug_assert_eq!((w.rows, w.cols), (delta.rows, delta.cols));
+            let plan = delta.shard(shards_for(delta.nnz(), threads));
+            for s in 0..plan.len() {
+                let (lo, hi) = plan.range(s);
+                if lo == hi {
+                    continue;
+                }
+                self.tasks.push(ShardTask {
+                    w: w.data.as_mut_ptr(),
+                    snap: buf.as_mut_ptr(),
+                    idx: delta.idx.as_ptr(),
+                    delta: delta.delta.as_ptr(),
+                    lo,
+                    hi,
+                });
+            }
+        }
+    }
+
+    /// Fuse a LoRA adapter (HF pipeline's fuse stage).  Convenience
+    /// wrapper that deep-clones; prefer [`Self::switch_to_lora_shared`]
+    /// on hot paths.
     pub fn switch_to_lora(&mut self, a: &LoraAdapter) -> SwitchTiming {
+        self.switch_to_lora_shared(Arc::new(a.clone()))
+    }
+
+    pub fn switch_to_lora_shared(&mut self, a: Arc<LoraAdapter>) -> SwitchTiming {
         let mut t = self.revert_timing();
         let t0 = Instant::now();
+        let pool = self.pool.clone();
         for lt in &a.tensors {
             let w = self.weights.get_mut(&lt.target);
-            w.add_outer_product(&lt.a, &lt.b, a.scale);
+            match &pool {
+                Some(p) if w.numel() >= PAR_MIN_NNZ && p.threads() > 1 => {
+                    w.add_outer_product_par(&lt.a, &lt.b, a.scale, p);
+                }
+                _ => w.add_outer_product(&lt.a, &lt.b, a.scale),
+            }
         }
         t.fuse_us += t0.elapsed().as_secs_f64() * 1e6;
-        self.active = Active::Lora {
-            name: a.name.clone(),
-            adapter: a.clone(),
-        };
+        self.active = Active::Lora { adapter: a };
         self.switches += 1;
         t
     }
@@ -146,18 +315,45 @@ impl SwitchEngine {
         let t0 = Instant::now();
         match std::mem::replace(&mut self.active, Active::None) {
             Active::None => {}
-            Active::Shira {
-                snapshots, adapter, ..
-            } => {
-                for (target, snap) in &snapshots {
-                    let delta = adapter.find(target).expect("active adapter target");
-                    delta.restore(self.weights.get_mut(target), snap);
+            Active::Shira { adapter } => {
+                let total_nnz = adapter.param_count();
+                let pool = match &self.pool {
+                    Some(p) if total_nnz >= PAR_MIN_NNZ && p.threads() > 1 => {
+                        Some(Arc::clone(p))
+                    }
+                    _ => None,
+                };
+                match pool {
+                    Some(pool) => {
+                        self.build_shira_tasks(&adapter, pool.threads(), false);
+                        let tasks = &self.tasks;
+                        pool.scoped_for(tasks.len(), |i| {
+                            // SAFETY: same disjointness contract as apply.
+                            unsafe { tasks[i].restore() }
+                        });
+                        self.tasks.clear();
+                    }
+                    None => {
+                        for (target, delta) in &adapter.tensors {
+                            let snap = self
+                                .arena
+                                .get(target.as_str())
+                                .expect("snapshot exists for active adapter");
+                            delta.restore(self.weights.get_mut(target), snap);
+                        }
+                    }
                 }
             }
-            Active::Lora { adapter, .. } => {
+            Active::Lora { adapter } => {
+                let pool = self.pool.clone();
                 for lt in &adapter.tensors {
                     let w = self.weights.get_mut(&lt.target);
-                    w.sub_outer_product(&lt.a, &lt.b, adapter.scale);
+                    match &pool {
+                        Some(p) if w.numel() >= PAR_MIN_NNZ && p.threads() > 1 => {
+                            w.sub_outer_product_par(&lt.a, &lt.b, adapter.scale, p);
+                        }
+                        _ => w.sub_outer_product(&lt.a, &lt.b, adapter.scale),
+                    }
                 }
             }
         }
@@ -172,11 +368,10 @@ impl SwitchEngine {
         let t0 = Instant::now();
         let adapter = crate::adapter::io::decode_shira(bytes).expect("valid adapter");
         let load_us = t0.elapsed().as_secs_f64() * 1e6;
-        let mut t = self.switch_to_shira(&adapter, alpha);
+        let mut t = self.switch_to_shira_shared(Arc::new(adapter), alpha);
         t.load_us = load_us;
         let mut t2 = self.revert();
         let t1 = Instant::now();
-        drop(adapter);
         t2.unload_us = t1.elapsed().as_secs_f64() * 1e6;
         t.unfuse_us = t2.unfuse_us;
         t.unload_us = t2.unload_us;
@@ -187,11 +382,10 @@ impl SwitchEngine {
         let t0 = Instant::now();
         let adapter = crate::adapter::io::decode_lora(bytes).expect("valid adapter");
         let load_us = t0.elapsed().as_secs_f64() * 1e6;
-        let mut t = self.switch_to_lora(&adapter);
+        let mut t = self.switch_to_lora_shared(Arc::new(adapter));
         t.load_us = load_us;
         let mut t2 = self.revert();
         let t1 = Instant::now();
-        drop(adapter);
         t2.unload_us = t1.elapsed().as_secs_f64() * 1e6;
         t.unfuse_us = t2.unfuse_us;
         t.unload_us = t2.unload_us;
@@ -247,6 +441,32 @@ mod tests {
         }
     }
 
+    /// A weight store + adapter big enough to cross the parallel threshold.
+    fn big_weights_and_adapter(seed: u64) -> (WeightStore, ShiraAdapter) {
+        let dim = 128usize;
+        let k = 6000usize; // 2 tensors * 6000 nnz > PAR_MIN_NNZ
+        let store = WeightStore::init(
+            &[
+                ("big.wq".into(), vec![dim, dim]),
+                ("big.wk".into(), vec![dim, dim]),
+            ],
+            seed,
+        );
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        let mk = |rng: &mut Rng| {
+            let idx = rng.sample_indices(dim * dim, k);
+            let mut d = vec![0.0; k];
+            rng.fill_normal(&mut d, 0.0, 0.5);
+            SparseDelta::new(dim, dim, idx, d)
+        };
+        let a = ShiraAdapter {
+            name: "big".into(),
+            strategy: "rand".into(),
+            tensors: vec![("big.wq".into(), mk(&mut rng)), ("big.wk".into(), mk(&mut rng))],
+        };
+        (store, a)
+    }
+
     #[test]
     fn shira_switch_and_revert_is_bit_exact() {
         let mut rng = Rng::new(1);
@@ -262,6 +482,49 @@ mod tests {
     }
 
     #[test]
+    fn parallel_engine_bit_identical_to_serial_for_any_thread_count() {
+        let (base, a) = big_weights_and_adapter(11);
+        // Serial reference.
+        let mut serial = SwitchEngine::new(base.clone());
+        serial.switch_to_shira(&a, 0.9);
+        let applied = serial.weights.clone();
+        serial.revert();
+        assert!(serial.weights.bit_equal(&base));
+        for threads in [1usize, 2, 4] {
+            let pool = Arc::new(ThreadPool::new(threads));
+            let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
+            eng.switch_to_shira(&a, 0.9);
+            assert!(
+                eng.weights.bit_equal(&applied),
+                "apply differs at threads={threads}"
+            );
+            eng.revert();
+            assert!(
+                eng.weights.bit_equal(&base),
+                "revert differs at threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn arena_is_reused_across_switches() {
+        let (base, a) = big_weights_and_adapter(12);
+        let (_, b) = big_weights_and_adapter(13);
+        let b = ShiraAdapter { name: "b".into(), ..b };
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
+        // Many switches through the same targets: snapshots stay correct.
+        for round in 0..6 {
+            let (adapter, alpha) = if round % 2 == 0 { (&a, 1.0) } else { (&b, 0.7) };
+            eng.switch_to_shira(adapter, alpha);
+            assert_eq!(eng.active_name(), Some(adapter.name.as_str()));
+        }
+        eng.revert();
+        assert!(eng.weights.bit_equal(&base));
+        assert_eq!(eng.switches, 6);
+    }
+
+    #[test]
     fn lora_fuse_unfuse_has_float_drift_but_small() {
         let mut rng = Rng::new(2);
         let base = weights();
@@ -271,6 +534,31 @@ mod tests {
         eng.revert();
         let drift = eng.weights.max_abs_diff(&base);
         assert!(drift < 1e-4, "drift={drift}");
+    }
+
+    #[test]
+    fn parallel_lora_fuse_bit_identical_to_serial() {
+        let dim = 96usize;
+        let base = WeightStore::init(&[("w".into(), vec![dim, dim])], 5);
+        let mut rng = Rng::new(6);
+        let mut a = Tensor2::zeros(dim, 8);
+        let mut b = Tensor2::zeros(8, dim);
+        rng.fill_normal(&mut a.data, 0.0, 0.1);
+        rng.fill_normal(&mut b.data, 0.0, 0.1);
+        let l = LoraAdapter {
+            name: "l".into(),
+            scale: 1.5,
+            tensors: vec![LoraTensor { target: "w".into(), a, b }],
+        };
+        let mut serial = SwitchEngine::new(base.clone());
+        serial.switch_to_lora(&l);
+        for threads in [2usize, 4] {
+            let pool = Arc::new(ThreadPool::new(threads));
+            let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
+            eng.switch_to_lora(&l);
+            assert!(eng.weights.bit_equal(&serial.weights), "threads={threads}");
+            eng.revert();
+        }
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! switching benchmarks exercise: contiguous weight storage, the dense
 //! `W += scale * A@B` LoRA fuse (kept deliberately fast — the Fig. 5
 //! baseline must not be a strawman), and elementwise utilities.
+//!
+//! The fuse has both a serial and a row-sharded parallel form; both run
+//! the *same* per-row kernel ([`Tensor2::add_outer_product`] delegates to
+//! it over the full row range), so when the switch engine goes parallel
+//! the LoRA baseline parallelizes identically and the Fig. 5 comparison
+//! stays fair.
+
+use crate::util::threadpool::{SendPtr, ThreadPool};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor2 {
@@ -66,10 +74,52 @@ impl Tensor2 {
         assert_eq!(a.rows, self.rows);
         assert_eq!(b.cols, self.cols);
         assert_eq!(a.cols, b.rows);
-        let r = a.cols;
+        let rows = self.rows;
+        Self::outer_rows(&mut self.data, a, b, scale, 0, rows);
+    }
+
+    /// Row-sharded parallel form of [`Self::add_outer_product`].
+    ///
+    /// Rows are split into contiguous chunks, one per task; each output
+    /// row is owned by exactly one task and the per-row arithmetic is the
+    /// same kernel as the serial path, so results are bit-identical for
+    /// any thread count (the baseline stays fair, per the Fig. 5
+    /// strawman note).
+    pub fn add_outer_product_par(
+        &mut self,
+        a: &Tensor2,
+        b: &Tensor2,
+        scale: f32,
+        pool: &ThreadPool,
+    ) {
+        assert_eq!(a.rows, self.rows);
+        assert_eq!(b.cols, self.cols);
+        assert_eq!(a.cols, b.rows);
+        let rows = self.rows;
+        let n_tasks = pool.threads().min(rows).max(1);
+        if n_tasks <= 1 {
+            Self::outer_rows(&mut self.data, a, b, scale, 0, rows);
+            return;
+        }
         let m = self.cols;
-        for i in 0..self.rows {
-            let w_row = &mut self.data[i * m..(i + 1) * m];
+        let wp = SendPtr::new(self.data.as_mut_ptr());
+        pool.scoped_for(n_tasks, move |t| {
+            let lo = rows * t / n_tasks;
+            let hi = rows * (t + 1) / n_tasks;
+            // SAFETY: tasks own disjoint row ranges [lo, hi) of the output.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(wp.get().add(lo * m), (hi - lo) * m)
+            };
+            Self::outer_rows(dst, a, b, scale, lo, hi);
+        });
+    }
+
+    /// The shared per-row fuse kernel: `dst` holds rows `[lo, hi)` of W.
+    fn outer_rows(dst: &mut [f32], a: &Tensor2, b: &Tensor2, scale: f32, lo: usize, hi: usize) {
+        let r = a.cols;
+        let m = b.cols;
+        for i in lo..hi {
+            let w_row = &mut dst[(i - lo) * m..(i - lo + 1) * m];
             let a_row = &a.data[i * r..(i + 1) * r];
             for (k, &aik) in a_row.iter().enumerate() {
                 let s = scale * aik;
@@ -87,6 +137,17 @@ impl Tensor2 {
     /// `self -= scale * a @ b` — LoRA unfuse (the HF pipeline's 4th stage).
     pub fn sub_outer_product(&mut self, a: &Tensor2, b: &Tensor2, scale: f32) {
         self.add_outer_product(a, b, -scale);
+    }
+
+    /// Parallel unfuse (see [`Self::add_outer_product_par`]).
+    pub fn sub_outer_product_par(
+        &mut self,
+        a: &Tensor2,
+        b: &Tensor2,
+        scale: f32,
+        pool: &ThreadPool,
+    ) {
+        self.add_outer_product_par(a, b, -scale, pool);
     }
 
     /// Dense matmul (used by tests and the unfused-mode model): C = A @ B.
@@ -178,6 +239,28 @@ mod tests {
         w.add_outer_product(&a, &b, 2.0);
         w.sub_outer_product(&a, &b, 2.0);
         assert!(w.max_abs_diff(&w0) < 1e-4);
+    }
+
+    #[test]
+    fn parallel_outer_product_bit_identical_for_any_thread_count() {
+        let mut rng = Rng::new(21);
+        let (n, rank, m) = (37, 8, 53); // deliberately non-divisible sizes
+        let a = random(&mut rng, n, rank);
+        let b = random(&mut rng, rank, m);
+        let w0 = random(&mut rng, n, m);
+        let mut serial = w0.clone();
+        serial.add_outer_product(&a, &b, 1.3);
+        for threads in [1usize, 2, 4, 9] {
+            let pool = ThreadPool::new(threads);
+            let mut par = w0.clone();
+            par.add_outer_product_par(&a, &b, 1.3, &pool);
+            assert_eq!(par.data, serial.data, "threads={threads}");
+            par.sub_outer_product_par(&a, &b, 1.3, &pool);
+            let mut serial_rt = w0.clone();
+            serial_rt.add_outer_product(&a, &b, 1.3);
+            serial_rt.sub_outer_product(&a, &b, 1.3);
+            assert_eq!(par.data, serial_rt.data, "roundtrip threads={threads}");
+        }
     }
 
     #[test]

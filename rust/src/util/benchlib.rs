@@ -4,9 +4,19 @@
 //! samples, mean ± std with MAD-based outlier flagging.  Benches register
 //! with `Bencher` and emit both a human table and a machine-readable JSON
 //! lines file under `target/bench-results/`.
+//!
+//! ## Regression harness (DESIGN.md §6)
+//!
+//! Benches additionally emit a `BENCH_<name>.json` baseline document with
+//! mean/p50/p99 per stage.  Passing `--check` to a bench compares the
+//! fresh run against the committed baseline (`rust/BENCH_<name>.json`) and
+//! exits nonzero on regression beyond a tolerance; `--save-baseline`
+//! rewrites the committed file from the current run.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use super::json::{self, Json};
 use super::stats::Sample;
 
 #[derive(Clone, Debug)]
@@ -15,6 +25,7 @@ pub struct BenchResult {
     pub mean_ns: f64,
     pub std_ns: f64,
     pub median_ns: f64,
+    pub p99_ns: f64,
     pub samples: usize,
     pub iters_per_sample: u64,
     pub outliers: usize,
@@ -94,6 +105,7 @@ impl Bencher {
             sample.push(ns);
         }
         let median = sample.percentile(50.0);
+        let p99 = sample.percentile(99.0);
         let mad = sample.mad().max(1.0);
         let outliers = sample
             .values()
@@ -109,6 +121,7 @@ impl Bencher {
             mean_ns: sample.mean(),
             std_ns: sample.std(),
             median_ns: median,
+            p99_ns: p99,
             samples: self.measure_samples,
             iters_per_sample: iters,
             outliers,
@@ -137,8 +150,8 @@ impl Bencher {
         let mut out = String::new();
         for r in &self.results {
             out.push_str(&format!(
-                "{{\"name\":\"{}\",\"mean_ns\":{:.1},\"std_ns\":{:.1},\"median_ns\":{:.1},\"samples\":{},\"iters\":{}}}\n",
-                r.name, r.mean_ns, r.std_ns, r.median_ns, r.samples,
+                "{{\"name\":\"{}\",\"mean_ns\":{:.1},\"std_ns\":{:.1},\"median_ns\":{:.1},\"p99_ns\":{:.1},\"samples\":{},\"iters\":{}}}\n",
+                r.name, r.mean_ns, r.std_ns, r.median_ns, r.p99_ns, r.samples,
                 r.iters_per_sample
             ));
         }
@@ -150,6 +163,216 @@ impl Bencher {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bench-regression harness: BENCH_*.json baselines + --check mode
+// ---------------------------------------------------------------------------
+
+/// One stage's record in a baseline document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BaselineEntry {
+    pub name: String,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+/// Serialize results as a `BENCH_*.json` baseline document.
+pub fn baseline_json(bench: &str, note: &str, entries: &[BaselineEntry]) -> String {
+    let arr = entries
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::str(&e.name)),
+                ("mean_ns", Json::num((e.mean_ns * 10.0).round() / 10.0)),
+                ("p50_ns", Json::num((e.p50_ns * 10.0).round() / 10.0)),
+                ("p99_ns", Json::num((e.p99_ns * 10.0).round() / 10.0)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::str(bench)),
+        ("schema", Json::num(1.0)),
+        ("note", Json::str(note)),
+        ("entries", Json::Arr(arr)),
+    ])
+    .to_string_pretty()
+        + "\n"
+}
+
+pub fn results_to_entries(results: &[BenchResult]) -> Vec<BaselineEntry> {
+    results
+        .iter()
+        .map(|r| BaselineEntry {
+            name: r.name.clone(),
+            mean_ns: r.mean_ns,
+            p50_ns: r.median_ns,
+            p99_ns: r.p99_ns,
+        })
+        .collect()
+}
+
+/// Write a baseline document; returns false (and warns) on IO failure.
+pub fn write_baseline(path: &Path, bench: &str, note: &str, entries: &[BaselineEntry]) -> bool {
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(path, baseline_json(bench, note, entries)) {
+        Ok(()) => {
+            println!("baseline -> {}", path.display());
+            true
+        }
+        Err(e) => {
+            eprintln!("warning: could not write baseline {}: {e}", path.display());
+            false
+        }
+    }
+}
+
+/// Parse a baseline document written by [`write_baseline`].
+pub fn load_baseline(path: &Path) -> Result<Vec<BaselineEntry>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    let j = json::parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))?;
+    let entries = j
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| format!("{}: missing entries array", path.display()))?;
+    entries
+        .iter()
+        .map(|e| {
+            let name = e
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("entry missing name")?
+                .to_string();
+            let num = |k: &str| {
+                e.get(k)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("entry {name} missing {k}"))
+            };
+            Ok(BaselineEntry {
+                mean_ns: num("mean_ns")?,
+                p50_ns: num("p50_ns")?,
+                p99_ns: num("p99_ns")?,
+                name,
+            })
+        })
+        .collect()
+}
+
+/// Outcome of comparing a fresh run against a committed baseline.
+#[derive(Clone, Debug, Default)]
+pub struct RegressionReport {
+    /// Human-readable "name: current vs baseline (+x%)" lines.
+    pub regressions: Vec<String>,
+    pub compared: usize,
+    /// Stages present in the run but absent from the baseline (or vice
+    /// versa) — reported, not failed, so adding a bench stage is not a
+    /// regression.
+    pub unmatched: usize,
+}
+
+impl RegressionReport {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Compare current p50s against the baseline's; a stage regresses when it
+/// is slower by more than `tolerance` (fractional, e.g. 0.5 = +50%).
+/// Medians are compared rather than means so one outlier sample cannot
+/// fail CI.
+pub fn check_regression(
+    current: &[BaselineEntry],
+    baseline: &[BaselineEntry],
+    tolerance: f64,
+) -> RegressionReport {
+    let mut report = RegressionReport::default();
+    for cur in current {
+        match baseline.iter().find(|b| b.name == cur.name) {
+            None => report.unmatched += 1,
+            Some(base) => {
+                report.compared += 1;
+                let limit = base.p50_ns * (1.0 + tolerance);
+                if cur.p50_ns > limit && base.p50_ns > 0.0 {
+                    report.regressions.push(format!(
+                        "{}: p50 {} vs baseline {} (+{:.0}%, tolerance {:.0}%)",
+                        cur.name,
+                        fmt_ns(cur.p50_ns),
+                        fmt_ns(base.p50_ns),
+                        100.0 * (cur.p50_ns / base.p50_ns - 1.0),
+                        100.0 * tolerance
+                    ));
+                }
+            }
+        }
+    }
+    report.unmatched += baseline
+        .iter()
+        .filter(|b| !current.iter().any(|c| c.name == b.name))
+        .count();
+    report
+}
+
+/// Shared CLI plumbing for bench mains: handles `--check`, `--tolerance`
+/// and `--save-baseline` against the committed `rust/BENCH_<stem>.json`.
+/// Always also writes the fresh document under `target/bench-results/`.
+/// Returns `false` when `--check` found a regression (caller should exit
+/// nonzero).
+pub fn finish_bench(stem: &str, entries: &[BaselineEntry]) -> bool {
+    let args: Vec<String> = std::env::args().collect();
+    let tolerance = args
+        .iter()
+        .position(|a| a == "--tolerance")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(0.5);
+    let committed = Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{stem}.json"));
+    let fresh = Path::new("target/bench-results").join(format!("BENCH_{stem}.json"));
+    write_baseline(
+        &fresh,
+        &format!("bench_{stem}"),
+        "fresh run (not a committed baseline)",
+        entries,
+    );
+    if args.iter().any(|a| a == "--save-baseline") {
+        write_baseline(
+            &committed,
+            &format!("bench_{stem}"),
+            "committed baseline; regenerate with --save-baseline",
+            entries,
+        );
+    }
+    if args.iter().any(|a| a == "--check") {
+        match load_baseline(&committed) {
+            Err(e) => {
+                eprintln!("--check: no usable baseline ({e}); treating as pass");
+                true
+            }
+            Ok(base) => {
+                let report = check_regression(entries, &base, tolerance);
+                if report.passed() {
+                    println!(
+                        "--check: OK ({} stages within {:.0}% of {})",
+                        report.compared,
+                        tolerance * 100.0,
+                        committed.display()
+                    );
+                    true
+                } else {
+                    eprintln!("--check: REGRESSION vs {}", committed.display());
+                    for r in &report.regressions {
+                        eprintln!("  {r}");
+                    }
+                    false
+                }
+            }
+        }
+    } else {
+        true
     }
 }
 
@@ -194,5 +417,51 @@ mod tests {
         assert!(fmt_ns(5e3).contains("us"));
         assert!(fmt_ns(5e6).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    fn entry(name: &str, p50: f64) -> BaselineEntry {
+        // Values chosen to be exact at the 0.1 ns precision the JSON
+        // writer rounds to, so the roundtrip compares equal.
+        BaselineEntry {
+            name: name.to_string(),
+            mean_ns: p50 + 0.5,
+            p50_ns: p50,
+            p99_ns: p50 * 2.0,
+        }
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_json() {
+        let entries = vec![entry("fig5/dim4096/shira_scatter", 1234.5), entry("x", 7.0)];
+        let text = baseline_json("bench_switch", "test", &entries);
+        let dir = std::env::temp_dir().join("shira-benchlib-test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("BENCH_test.json");
+        std::fs::write(&path, &text).unwrap();
+        let loaded = load_baseline(&path).unwrap();
+        assert_eq!(loaded, entries);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn regression_check_flags_only_slowdowns() {
+        let base = vec![entry("a", 100.0), entry("b", 100.0), entry("gone", 5.0)];
+        let cur = vec![
+            entry("a", 120.0), // +20% — within 50% tolerance
+            entry("b", 300.0), // +200% — regression
+            entry("new", 9.0), // unmatched, not a failure
+        ];
+        let rep = check_regression(&cur, &base, 0.5);
+        assert_eq!(rep.compared, 2);
+        assert_eq!(rep.regressions.len(), 1);
+        assert!(rep.regressions[0].starts_with("b:"));
+        assert_eq!(rep.unmatched, 2); // "new" and "gone"
+        assert!(!rep.passed());
+        assert!(check_regression(&cur, &base, 3.0).passed());
+    }
+
+    #[test]
+    fn missing_baseline_is_an_error() {
+        assert!(load_baseline(std::path::Path::new("/nonexistent/BENCH_x.json")).is_err());
     }
 }

@@ -1,15 +1,41 @@
 //! Thread-pool substrate (no tokio in the offline vendor set).
 //!
-//! A fixed-size worker pool over an MPMC channel built from Mutex+Condvar.
-//! The serving coordinator uses it for request execution; `scope`-free
-//! (jobs are 'static) with a `join` barrier for batch workloads.
+//! A fixed-size worker pool over an MPMC channel built from Mutex+Condvar,
+//! plus a **scoped parallel-for** primitive (`scoped_for`) that runs
+//! closures borrowing the caller's stack — no `'static` bound, no per-item
+//! `Arc<Mutex<..>>`.  The switch engine's scatter/restore hot paths and the
+//! tiled LoRA fuse baseline are built on it (DESIGN.md §4–§5).
+//!
+//! `scoped_for` is starvation-proof: the calling thread participates in the
+//! work-stealing loop, so the region completes even when every pool worker
+//! is pinned by unrelated long-running jobs.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A raw pointer that may cross threads.  Safety is the *user's* contract:
+/// every use must guarantee disjoint access (each index touched by exactly
+/// one task) and that the pointee outlives the parallel region.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        SendPtr(p)
+    }
+
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
 
 struct Shared {
     queue: Mutex<VecDeque<Job>>,
@@ -23,6 +49,82 @@ struct Shared {
 pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
+}
+
+/// Control block for one `scoped_for` region.
+struct ScopeCtl {
+    /// Next unclaimed task index (claims may overshoot `n`).
+    next: AtomicUsize,
+    /// Workers currently inside the region body (borrowing the closure).
+    borrowers: AtomicUsize,
+    /// Set by the caller once its own drive loop exits; late-starting
+    /// helpers observe it and never touch the (now possibly dead) closure.
+    closed: AtomicBool,
+    /// A task body panicked (on any thread); re-raised by the caller.
+    panicked: AtomicBool,
+    exit_mtx: Mutex<()>,
+    exit_cv: Condvar,
+}
+
+impl ScopeCtl {
+    fn notify_exit(&self) {
+        // Never poisoned by user code (the lock only guards the handoff),
+        // but stay non-panicking: this runs from Drop during unwinding.
+        let _g = self.exit_mtx.lock().unwrap_or_else(|p| p.into_inner());
+        self.exit_cv.notify_all();
+    }
+}
+
+/// Decrements the borrower count on drop — helper exit stays accounted
+/// even if the task body panics.
+struct BorrowerExit(Arc<ScopeCtl>);
+
+impl Drop for BorrowerExit {
+    fn drop(&mut self) {
+        if self.0.borrowers.fetch_sub(1, Ordering::SeqCst) == 1 {
+            self.0.notify_exit();
+        }
+    }
+}
+
+/// Caller-side guard: fences off late helpers and waits for in-flight
+/// borrowers.  Runs on normal exit AND on unwind, so the closure can never
+/// die while a worker still holds a pointer into it.
+struct CallerExit(Arc<ScopeCtl>);
+
+impl Drop for CallerExit {
+    fn drop(&mut self) {
+        self.0.closed.store(true, Ordering::SeqCst);
+        let mut g = self.0.exit_mtx.lock().unwrap_or_else(|p| p.into_inner());
+        while self.0.borrowers.load(Ordering::SeqCst) != 0 {
+            g = self
+                .0
+                .exit_cv
+                .wait(g)
+                .unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// Type-erased pointer to the region body.  The caller blocks until every
+/// borrower has exited, so the pointee outlives all dereferences.
+#[derive(Clone, Copy)]
+struct BodyPtr(*const (dyn Fn(usize) + Sync + 'static));
+
+unsafe impl Send for BodyPtr {}
+unsafe impl Sync for BodyPtr {}
+
+fn drive(body: BodyPtr, next: &AtomicUsize, n: usize) {
+    // SAFETY: the scoped_for caller keeps the closure alive until all
+    // borrowers exit; borrower registration guards this call.
+    let f = unsafe { &*body.0 };
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        f(i);
+    }
 }
 
 impl ThreadPool {
@@ -46,6 +148,14 @@ impl ThreadPool {
             );
         }
         ThreadPool { shared, workers }
+    }
+
+    /// A pool sized to the host (`available_parallelism`, min 1).
+    pub fn host_sized() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        ThreadPool::new(n)
     }
 
     pub fn threads(&self) -> usize {
@@ -72,32 +182,113 @@ impl ThreadPool {
             .unwrap();
     }
 
-    /// Run `f` over items in parallel, preserving order of results.
-    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
-    where
-        T: Send + 'static,
-        R: Send + 'static,
-        F: Fn(T) -> R + Send + Sync + 'static,
-    {
-        let n = items.len();
-        let f = Arc::new(f);
-        let results: Arc<Mutex<Vec<Option<R>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
-        for (i, item) in items.into_iter().enumerate() {
-            let f = Arc::clone(&f);
-            let results = Arc::clone(&results);
+    /// Scoped parallel-for: run `f(0)..f(n_tasks-1)` across the pool.
+    ///
+    /// * `f` may borrow the caller's stack — there is no `'static` bound.
+    /// * Task indices are claimed from a shared atomic counter, so there is
+    ///   no per-item allocation or locking on the hot path.
+    /// * The calling thread drives tasks too; if every pool worker is busy
+    ///   (or the pool is saturated by other scopes), the region still
+    ///   completes — helpers that start late simply find no work.
+    ///
+    /// Returns only after every claimed task has finished.
+    pub fn scoped_for<F: Fn(usize) + Sync>(&self, n_tasks: usize, f: F) {
+        if n_tasks == 0 {
+            return;
+        }
+        let helpers = self.threads().min(n_tasks.saturating_sub(1));
+        if helpers == 0 {
+            for i in 0..n_tasks {
+                f(i);
+            }
+            return;
+        }
+
+        let wide: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: only the lifetime is erased; layout of a fat reference and
+        // a fat raw pointer is identical.  The protocol below guarantees no
+        // dereference happens after this function returns.
+        let body = BodyPtr(unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(wide)
+        });
+
+        let ctl = Arc::new(ScopeCtl {
+            next: AtomicUsize::new(0),
+            borrowers: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+            exit_mtx: Mutex::new(()),
+            exit_cv: Condvar::new(),
+        });
+        for _ in 0..helpers {
+            let ctl = Arc::clone(&ctl);
             self.execute(move || {
-                let r = f(item);
-                results.lock().unwrap()[i] = Some(r);
+                // Register as a borrower BEFORE touching the closure, and
+                // re-check `closed` after registering: with SeqCst ordering
+                // either the caller sees our registration and waits, or we
+                // see `closed` and never dereference.
+                if ctl.closed.load(Ordering::SeqCst) {
+                    return;
+                }
+                ctl.borrowers.fetch_add(1, Ordering::SeqCst);
+                let exit = BorrowerExit(Arc::clone(&ctl));
+                if !ctl.closed.load(Ordering::SeqCst) {
+                    // Catch panics so a failing task neither kills the
+                    // worker nor strands the caller's borrower wait.
+                    if catch_unwind(AssertUnwindSafe(|| drive(body, &ctl.next, n_tasks)))
+                        .is_err()
+                    {
+                        ctl.panicked.store(true, Ordering::SeqCst);
+                    }
+                }
+                drop(exit);
             });
         }
-        self.join();
-        Arc::try_unwrap(results)
-            .ok()
-            .expect("all workers done")
-            .into_inner()
-            .unwrap()
-            .into_iter()
+
+        // The caller drives tasks itself — starvation-proof.  The guard
+        // fences off late helpers and waits for in-flight ones on every
+        // exit path, including unwinding out of a panicking body.
+        let guard = CallerExit(Arc::clone(&ctl));
+        let caller_result = catch_unwind(AssertUnwindSafe(|| drive(body, &ctl.next, n_tasks)));
+        drop(guard);
+        match caller_result {
+            Err(payload) => std::panic::resume_unwind(payload),
+            Ok(()) => {
+                if ctl.panicked.load(Ordering::SeqCst) {
+                    panic!("scoped_for: a task panicked on a pool worker");
+                }
+            }
+        }
+    }
+
+    /// Run `f` over items in parallel, preserving order of results.
+    ///
+    /// Built on `scoped_for`: results land in disjoint slots, so there is
+    /// no shared results mutex (the old implementation serialized every
+    /// completion on one lock) and no `'static` bound on `f` or the items.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        let mut slots: Vec<Option<T>> = items.into_iter().map(Some).collect();
+        let mut out: Vec<Option<R>> = std::iter::repeat_with(|| None).take(n).collect();
+        let slots_p = SendPtr::new(slots.as_mut_ptr());
+        let out_p = SendPtr::new(out.as_mut_ptr());
+        self.scoped_for(n, |i| {
+            // SAFETY: each index is claimed by exactly one task, so slot
+            // accesses are disjoint; both vectors outlive the region.
+            unsafe {
+                let item = (*slots_p.get().add(i)).take().expect("item taken once");
+                *out_p.get().add(i) = Some(f(item));
+            }
+        });
+        out.into_iter()
             .map(|o| o.expect("job completed"))
             .collect()
     }
@@ -143,7 +334,7 @@ impl Drop for ThreadPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, AtomicUsize};
 
     #[test]
     fn runs_all_jobs() {
@@ -167,6 +358,16 @@ mod tests {
     }
 
     #[test]
+    fn map_can_borrow_the_stack() {
+        // The old map required 'static captures; the scoped version lets
+        // the closure read local state without Arc.
+        let pool = ThreadPool::new(4);
+        let offset = 17u64;
+        let out = pool.map((0..20).collect::<Vec<u64>>(), |x| x + offset);
+        assert_eq!(out, (17..37).collect::<Vec<u64>>());
+    }
+
+    #[test]
     fn join_with_no_jobs_returns() {
         let pool = ThreadPool::new(2);
         pool.join();
@@ -185,5 +386,101 @@ mod tests {
         pool.execute(|| {});
         pool.join();
         drop(pool);
+    }
+
+    #[test]
+    fn scoped_for_runs_every_index_once() {
+        for threads in [1, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            let n = 1000;
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.scoped_for(n, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn scoped_for_borrows_mutable_disjoint_slices() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u64; 64];
+        let base = SendPtr::new(data.as_mut_ptr());
+        pool.scoped_for(64, |i| unsafe {
+            *base.get().add(i) = (i * i) as u64;
+        });
+        assert!(data.iter().enumerate().all(|(i, &v)| v == (i * i) as u64));
+    }
+
+    #[test]
+    fn scoped_for_zero_and_one_tasks() {
+        let pool = ThreadPool::new(4);
+        pool.scoped_for(0, |_| panic!("no tasks"));
+        let ran = AtomicUsize::new(0);
+        pool.scoped_for(1, |i| {
+            assert_eq!(i, 0);
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scoped_for_completes_when_all_workers_are_starved() {
+        // Pin every worker on a gate, then run a scoped region: the caller
+        // must drive all tasks itself and return without waiting for the
+        // (still-blocked) helpers to ever start.
+        let pool = ThreadPool::new(2);
+        let gate = Arc::new(AtomicBool::new(false));
+        for _ in 0..2 {
+            let g = Arc::clone(&gate);
+            pool.execute(move || {
+                while !g.load(Ordering::SeqCst) {
+                    std::thread::yield_now();
+                }
+            });
+        }
+        let done = AtomicUsize::new(0);
+        pool.scoped_for(100, |_| {
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 100);
+        gate.store(true, Ordering::SeqCst); // release the pinned workers
+        pool.join();
+    }
+
+    #[test]
+    fn scoped_for_propagates_panics_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped_for(64, |i| {
+                if i == 33 {
+                    panic!("boom at {i}");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // The pool is still functional afterwards (workers not killed,
+        // join not stranded).
+        let done = AtomicUsize::new(0);
+        pool.scoped_for(16, |_| {
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 16);
+        pool.join();
+    }
+
+    #[test]
+    fn nested_scoped_for_does_not_deadlock() {
+        let pool = ThreadPool::new(2);
+        let total = AtomicUsize::new(0);
+        pool.scoped_for(4, |_| {
+            pool.scoped_for(8, |_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 32);
     }
 }

@@ -1,0 +1,207 @@
+//! API-compatible stub of the `xla-rs` PJRT bindings.
+//!
+//! The offline build environment has neither the XLA C API shared library
+//! nor registry access, so this path crate provides the exact surface the
+//! runtime layer compiles against.  Host-side `Literal` plumbing is fully
+//! functional (so marshalling code is real and testable); the device-side
+//! entry points (`PjRtClient::cpu`, `HloModuleProto::from_text_file`)
+//! return a descriptive error, which the runtime and every artifact-gated
+//! test already treat as "artifacts unavailable — skip".
+//!
+//! Swap this crate's path in `rust/Cargo.toml` for the real xla-rs to run
+//! against a PJRT plugin; no source change in `shira` is needed.
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the PJRT runtime, which is not present in this \
+         build (vendored stub; see rust/vendor/xla)"
+    ))
+}
+
+/// Element types the host marshalling layer supports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    I32,
+}
+
+/// Sealed-ish conversion trait for host buffers.
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    fn to_bytes(data: &[Self]) -> Vec<u8>;
+    fn from_bytes(bytes: &[u8]) -> Vec<Self>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_bytes(data: &[Self]) -> Vec<u8> {
+        data.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+    fn from_bytes(bytes: &[u8]) -> Vec<Self> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::I32;
+    fn to_bytes(data: &[Self]) -> Vec<u8> {
+        data.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+    fn from_bytes(bytes: &[u8]) -> Vec<Self> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+/// Host-side literal: raw bytes + element type + dims.  Functional.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    bytes: Vec<u8>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            ty: T::TY,
+            bytes: T::to_bytes(data),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have: i64 = self.dims.iter().product();
+        if want != have {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal {
+            ty: self.ty,
+            bytes: self.bytes.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::TY != self.ty {
+            return Err(Error(format!(
+                "element type mismatch: literal is {:?}",
+                self.ty
+            )));
+        }
+        Ok(T::from_bytes(&self.bytes))
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<i64>() as usize
+    }
+
+    /// Tuple decomposition — stub literals are never tuples.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple on a device result"))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, -2.5, 3.25]);
+        assert_eq!(l.element_count(), 3);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_reshape_checks_count() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.element_count(), 4);
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn device_paths_report_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("stub"));
+    }
+}
