@@ -1,13 +1,19 @@
 //! Multi-adapter fusion walk-through (paper §3.2 + Table 4): train
 //! independent per-task adapters, fuse them naively, measure the concept
-//! retention of the fused adapter, and inspect the interference stats that
-//! explain WHY sparse fusion works.
+//! retention of the fused adapter, inspect the interference stats that
+//! explain WHY sparse fusion works — then drive the *incremental*
+//! fused-mode engine: fuse all three adapters, reweight one, unfuse one,
+//! each in O(that adapter's nnz) and bit-identical to a from-scratch
+//! rebuild.
 //!
 //! Run: `cargo run --release --example multi_adapter_fusion [--fast]`
+
+use std::sync::Arc;
 
 use shira::adapter::mask::MaskStrategy;
 use shira::config::RunConfig;
 use shira::coordinator::fusion;
+use shira::coordinator::fusion_engine::{FusionEngine, FusionPlan};
 use shira::coordinator::switch::SwitchEngine;
 use shira::data::tasks::Task;
 use shira::runtime::{HostValue, Runtime};
@@ -57,9 +63,19 @@ fn main() -> anyhow::Result<()> {
     println!("  mean support overlap : {:.4}", report.mean_overlap);
     println!("  mean A1ᵀA2 density   : {:.4}  (LoRA fused products: 1.0)", report.mean_ata_density);
     println!("  colliding entries    : {}", report.collisions);
+    println!("  per-pair breakdown (the engine's conflict-free scheduling input):");
+    for p in &report.pairs {
+        println!(
+            "    {} × {} : {} collisions (overlap {:.4})",
+            tasks[p.i].name(),
+            tasks[p.j].name(),
+            p.collisions,
+            p.overlap
+        );
+    }
 
     // ---- naive fusion + accuracy retention -------------------------------
-    let fused = fusion::fuse_shira(&refs, "boolq+piqa+arc_e");
+    let fused = fusion::fuse_shira(&refs, "boolq+piqa+arc_e")?;
     println!(
         "\nfused adapter: {} nnz ({} bytes) — naive sparse addition, no retraining",
         fused.param_count(),
@@ -91,5 +107,73 @@ fn main() -> anyhow::Result<()> {
     );
     println!("paper shape (Table 4): SHiRA's %Drop stays small because sparse");
     println!("supports barely collide; dense LoRA fusion interferes everywhere.");
+
+    // ---- incremental fused-mode engine ----------------------------------
+    // A LoRA-merge deployment would rebuild W for every change below
+    // (O(total params)); the FusionPlan makes each step O(the touched
+    // adapter's nnz) while staying bit-identical to a serial rebuild.
+    println!("\n== incremental fused-mode engine ==");
+    let roster: Vec<Arc<shira::adapter::ShiraAdapter>> =
+        adapters.iter().cloned().map(Arc::new).collect();
+    let plan = FusionPlan::build(roster)?;
+    println!(
+        "plan over {} adapters: union support {} entries",
+        plan.len(),
+        plan.union_nnz()
+    );
+    let mut engine = FusionEngine::new(plan);
+    let mut live = base.clone();
+    engine.activate(&mut live)?; // one-time base snapshot on the union
+
+    // Fuse all three, one incremental pass each (O(nnz_i) per op).
+    for (task, adapter) in tasks.iter().zip(adapters.iter()) {
+        engine.fuse_into(&mut live, &adapter.name, 1.0)?;
+        println!(
+            "  fuse_into({:8}) touched {:6} entries; fused set now {:?}",
+            task.name(),
+            adapter.param_count(),
+            engine.fused_members().iter().map(|(n, _)| *n).collect::<Vec<_>>()
+        );
+    }
+    // The incremental path lands on EXACTLY the serial fuse_shira bytes:
+    let mut reference = SwitchEngine::new(base.clone());
+    reference.switch_to_shira(&fused, 1.0);
+    assert!(live.bit_equal(&reference.weights));
+    println!("  state bit-identical to the serial fuse_shira rebuild ✓");
+
+    // Reweight one concept in place — no unfuse/refuse of the other two.
+    // (With LoRA-merge, softening one style means rebuilding everything.)
+    engine.reweight_one(&mut live, adapters[1].name.as_str(), 0.5)?;
+    println!(
+        "  reweight_one({}, 0.5) touched {} entries (set total {})",
+        adapters[1].name,
+        adapters[1].param_count(),
+        fused.param_count()
+    );
+    let acc = 100.0 * eval_task(&rt, &live, tasks[1], cfg.eval_examples, cfg.seed)?;
+    println!("    {} accuracy at half strength: {acc:.1}%", tasks[1].name());
+
+    // Unfuse one concept entirely; the remaining two are untouched except
+    // at (rare) colliding entries, which are recomputed from the base
+    // snapshot — never subtracted from live weights, so no float drift.
+    engine.unfuse_one(&mut live, adapters[2].name.as_str())?;
+    println!(
+        "  unfuse_one({}) touched {} entries; fused set now {:?}",
+        adapters[2].name,
+        adapters[2].param_count(),
+        engine.fused_members().iter().map(|(n, _)| *n).collect::<Vec<_>>()
+    );
+
+    // Unfusing the rest restores the base weights bit-exactly — the same
+    // exact-revert guarantee single-adapter SHiRA switching has, now in
+    // fused mode.  LoRA merge-unmerge leaves float residue instead.
+    engine.unfuse_one(&mut live, adapters[0].name.as_str())?;
+    engine.unfuse_one(&mut live, adapters[1].name.as_str())?;
+    assert!(live.bit_equal(&base));
+    println!("  unfused all -> base restored bit-exactly ✓");
+    println!(
+        "\nconcept-loss stays low (sparse supports barely collide) AND the\n\
+         fused set is editable in place — that is what LoRA merging cannot do."
+    );
     Ok(())
 }

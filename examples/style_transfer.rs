@@ -111,7 +111,7 @@ fn main() -> anyhow::Result<()> {
     let fused = fusion::fuse_shira(
         &[&shira_adapters[0].1, &shira_adapters[1].1],
         "bluefire+paintings",
-    );
+    )?;
     let mut e = SwitchEngine::new(base.clone());
     e.switch_to_shira(&fused, 0.5);
     let shira_multi = eval_style_multi(&rt, &e.weights, &world,

@@ -1,37 +1,50 @@
-//! §3.2 orthogonality + Fig. 3b fusion-cost benchmark: interference
-//! diagnostics (support overlap, A1ᵀA2 density) across sparsity levels, and
-//! the cost of the naive sparse merge itself.
+//! §3.2 orthogonality + fusion-cost benchmark, and the incremental
+//! fused-mode engine: interference diagnostics across sparsity levels,
+//! the cost of the naive serial merge, and — the headline — that
+//! `fuse_into`/`unfuse_one`/`reweight_one` cost scales with the *touched*
+//! adapter's nnz while a `fuse_shira` rebuild scales with the fused set's
+//! total nnz.
 //!
-//! Run: `cargo bench --bench bench_fusion`.
+//! Run: `cargo bench --bench bench_fusion`.  Flags:
+//!   --check           compare against the committed rust/BENCH_fusion.json
+//!   --tolerance 0.5   fractional slowdown allowed by --check (default 0.5)
+//!   --save-baseline   rewrite rust/BENCH_fusion.json from this run
+//! `SHIRA_BENCH_FAST=1` shrinks the protocol and dims for CI smoke runs.
+
+use std::sync::Arc;
 
 use shira::adapter::sparse::SparseDelta;
 use shira::adapter::ShiraAdapter;
 use shira::coordinator::fusion;
-use shira::util::benchlib::{black_box, Bencher};
+use shira::coordinator::fusion_engine::{FusionEngine, FusionPlan};
+use shira::model::tensor::Tensor2;
+use shira::model::weights::WeightStore;
+use shira::util::benchlib::{black_box, finish_bench, results_to_entries, Bencher};
 use shira::util::rng::Rng;
 
-fn adapter(seed: u64, n: usize, frac: f64) -> ShiraAdapter {
+fn adapter(seed: u64, name: &str, n: usize, frac: f64) -> ShiraAdapter {
     let mut rng = Rng::new(seed);
     let k = (((n * n) as f64) * frac).max(1.0) as usize;
     let idx = rng.sample_indices(n * n, k);
     let mut d = vec![0.0f32; k];
     rng.fill_normal(&mut d, 0.0, 0.1);
     ShiraAdapter {
-        name: format!("a{seed}"),
+        name: name.into(),
         strategy: "rand".into(),
         tensors: vec![("w".into(), SparseDelta::new(n, n, idx, d))],
     }
 }
 
 fn main() {
+    let fast = std::env::var("SHIRA_BENCH_FAST").is_ok();
     let mut b = Bencher::new();
 
     println!("== §3.2 orthogonality: interference vs sparsity (dim 512) ==");
     println!("| frac | mean overlap | A1ᵀA2 density | collisions |");
     println!("|---|---|---|---|");
     for frac in [0.005, 0.01, 0.02, 0.05, 0.10] {
-        let a1 = adapter(1, 512, frac);
-        let a2 = adapter(2, 512, frac);
+        let a1 = adapter(1, "a1", 512, frac);
+        let a2 = adapter(2, "a2", 512, frac);
         let rep = fusion::analyze_shira(&[&a1, &a2]);
         println!(
             "| {frac:.3} | {:.5} | {:.5} | {} |",
@@ -42,8 +55,8 @@ fn main() {
 
     b.group("fusion/merge-cost");
     for n in [256usize, 1024, 4096] {
-        let a1 = adapter(3, n, 0.02);
-        let a2 = adapter(4, n, 0.02);
+        let a1 = adapter(3, "a1", n, 0.02);
+        let a2 = adapter(4, "a2", n, 0.02);
         let (d1, d2) = (&a1.tensors[0].1, &a2.tensors[0].1);
         b.bench(&format!("sparse_merge_dim{n}"), || {
             black_box(d1.merge(d2).nnz());
@@ -54,13 +67,100 @@ fn main() {
     }
 
     b.group("fusion/analysis-cost");
-    let a1 = adapter(5, 1024, 0.02);
-    let a2 = adapter(6, 1024, 0.02);
+    let a1 = adapter(5, "a1", 1024, 0.02);
+    let a2 = adapter(6, "a2", 1024, 0.02);
     b.bench("ata_nnz_dim1024", || {
         black_box(a1.tensors[0].1.ata_nnz(&a2.tensors[0].1).0);
     });
 
-    println!("\npaper shape: at 1-2% sparsity A1ᵀA2 is >95% zeros; the naive");
-    println!("merge is linear in nnz (microseconds), i.e. fusion itself is free.");
+    // -- incremental engine: touched-nnz vs total-nnz scaling -------------
+    //
+    // One SMALL adapter rides in fused sets of growing total nnz.  If the
+    // incremental claim holds, reweighting/unfusing the small adapter
+    // costs roughly the same at every set size, while the serial
+    // fuse_shira rebuild grows linearly with the set.
+    let dim = if fast { 512 } else { 2048 };
+    let small_frac = 0.002;
+    let large_frac = 0.02;
+    let set_sizes: &[usize] = if fast { &[2, 4] } else { &[2, 4, 8, 16] };
+    let mut summary = Vec::new();
+    for &n_large in set_sizes {
+        let mut roster: Vec<Arc<ShiraAdapter>> =
+            vec![Arc::new(adapter(100, "small", dim, small_frac))];
+        for i in 0..n_large {
+            roster.push(Arc::new(adapter(
+                200 + i as u64,
+                &format!("large{i}"),
+                dim,
+                large_frac,
+            )));
+        }
+        let small_nnz = roster[0].param_count();
+        let total_nnz: usize = roster.iter().map(|a| a.param_count()).sum();
+        let plan = FusionPlan::build(roster.clone()).expect("uniform roster");
+
+        let mut store = WeightStore::new();
+        store.insert("w", {
+            let mut rng = Rng::new(7);
+            let mut w = Tensor2::zeros(dim, dim);
+            rng.fill_normal(&mut w.data, 0.0, 1.0);
+            w
+        });
+        let base = store.clone();
+        let mut eng = FusionEngine::new(plan);
+        eng.activate(&mut store).expect("store matches plan");
+        for a in &roster {
+            eng.fuse_into(&mut store, &a.name, 1.0).expect("member");
+        }
+        // Correctness gate before any timing: the incremental state must
+        // equal the serial fuse_shira rebuild, bit for bit.
+        let reference = eng.rebuild_reference(&base).expect("set nonempty");
+        assert!(
+            store.bit_equal(&reference),
+            "incremental != rebuild at set={n_large}"
+        );
+
+        b.group(&format!("fusion/incremental/set{n_large}"));
+        let mut flip = false;
+        let reweight = b.bench("reweight_small", || {
+            flip = !flip;
+            let w = if flip { 0.5 } else { 1.0 };
+            eng.reweight_one(&mut store, "small", w).expect("member");
+            black_box(&store.get("w").data[0]);
+        });
+        b.bench("unfuse_fuse_small", || {
+            eng.unfuse_one(&mut store, "small").expect("member");
+            eng.fuse_into(&mut store, "small", 1.0).expect("member");
+            black_box(&store.get("w").data[0]);
+        });
+        let refs: Vec<&ShiraAdapter> = roster.iter().map(|a| a.as_ref()).collect();
+        let rebuild = b.bench("rebuild_fuse_shira", || {
+            black_box(
+                fusion::fuse_shira(&refs, "rebuilt")
+                    .expect("uniform roster")
+                    .param_count(),
+            );
+        });
+        summary.push((n_large, small_nnz, total_nnz, reweight.mean_ns, rebuild.mean_ns));
+    }
+
+    println!("\n== incremental scaling (small adapter nnz fixed, set grows) ==");
+    println!("| set | small nnz | total nnz | reweight_small | rebuild | rebuild/reweight |");
+    println!("|---|---|---|---|---|---|");
+    for (n_large, small_nnz, total_nnz, reweight_ns, rebuild_ns) in &summary {
+        println!(
+            "| {n_large} | {small_nnz} | {total_nnz} | {:.1} us | {:.1} us | {:.1}x |",
+            reweight_ns / 1e3,
+            rebuild_ns / 1e3,
+            rebuild_ns / reweight_ns
+        );
+    }
+    println!("expected shape: reweight_small stays ~flat (O(touched nnz));");
+    println!("rebuild grows with the set's total nnz — the incremental win.");
+
     b.write_results("bench_fusion");
+    let ok = finish_bench("fusion", &results_to_entries(b.results()));
+    if !ok {
+        std::process::exit(1);
+    }
 }

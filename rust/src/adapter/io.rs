@@ -28,9 +28,12 @@ const MAGIC_SHIRA: u32 = 0x5348_5241;
 const MAGIC_LORA: u32 = 0x4C4F_5241;
 const VERSION: u32 = 1;
 
+/// Errors from adapter (de)serialization.
 #[derive(Debug)]
 pub enum IoError {
+    /// Underlying filesystem error.
     Io(io::Error),
+    /// Structural problem: bad magic, checksum, truncation, bad indices.
     Format(String),
 }
 
@@ -162,6 +165,7 @@ fn fnv64(b: &[u8]) -> u64 {
 
 // -- SHiRA ----------------------------------------------------------------
 
+/// Serialize a SHiRA adapter to the versioned binary format (module docs).
 pub fn encode_shira(a: &ShiraAdapter) -> Vec<u8> {
     let mut w = Writer::new();
     w.u32(MAGIC_SHIRA);
@@ -183,6 +187,8 @@ pub fn encode_shira(a: &ShiraAdapter) -> Vec<u8> {
     w.finish()
 }
 
+/// Decode a SHiRA adapter, verifying checksum, magic, version and the
+/// sorted-unique in-range index invariant.
 pub fn decode_shira(bytes: &[u8]) -> Result<ShiraAdapter, IoError> {
     let mut r = Reader::new(bytes)?;
     if r.u32()? != MAGIC_SHIRA {
@@ -231,12 +237,14 @@ pub fn decode_shira(bytes: &[u8]) -> Result<ShiraAdapter, IoError> {
     })
 }
 
+/// Write an encoded SHiRA adapter to `path`.
 pub fn save_shira(path: &Path, a: &ShiraAdapter) -> Result<(), IoError> {
     let mut f = std::fs::File::create(path)?;
     f.write_all(&encode_shira(a))?;
     Ok(())
 }
 
+/// Read and decode a SHiRA adapter from `path`.
 pub fn load_shira(path: &Path) -> Result<ShiraAdapter, IoError> {
     let mut bytes = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut bytes)?;
@@ -245,6 +253,7 @@ pub fn load_shira(path: &Path) -> Result<ShiraAdapter, IoError> {
 
 // -- LoRA -------------------------------------------------------------------
 
+/// Serialize a LoRA adapter to the versioned binary format (module docs).
 pub fn encode_lora(a: &LoraAdapter) -> Vec<u8> {
     let mut w = Writer::new();
     w.u32(MAGIC_LORA);
@@ -266,6 +275,7 @@ pub fn encode_lora(a: &LoraAdapter) -> Vec<u8> {
     w.finish()
 }
 
+/// Decode a LoRA adapter, verifying checksum, magic and version.
 pub fn decode_lora(bytes: &[u8]) -> Result<LoraAdapter, IoError> {
     let mut r = Reader::new(bytes)?;
     if r.u32()? != MAGIC_LORA {
@@ -304,12 +314,14 @@ pub fn decode_lora(bytes: &[u8]) -> Result<LoraAdapter, IoError> {
     })
 }
 
+/// Write an encoded LoRA adapter to `path`.
 pub fn save_lora(path: &Path, a: &LoraAdapter) -> Result<(), IoError> {
     let mut f = std::fs::File::create(path)?;
     f.write_all(&encode_lora(a))?;
     Ok(())
 }
 
+/// Read and decode a LoRA adapter from `path`.
 pub fn load_lora(path: &Path) -> Result<LoraAdapter, IoError> {
     let mut bytes = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut bytes)?;

@@ -7,6 +7,7 @@
 use crate::model::tensor::Tensor2;
 use crate::util::rng::Rng;
 
+/// How a SHiRA mask (the trainable-entry set) is chosen (paper §3.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MaskStrategy {
     /// Structured: evenly spaced trainable rows + the (wrapped) diagonal —
@@ -23,6 +24,7 @@ pub enum MaskStrategy {
 }
 
 impl MaskStrategy {
+    /// Stable CLI / report name of the strategy.
     pub fn name(&self) -> &'static str {
         match self {
             MaskStrategy::Struct => "struct",
@@ -33,6 +35,7 @@ impl MaskStrategy {
         }
     }
 
+    /// Parse a strategy name as produced by [`Self::name`].
     pub fn parse(s: &str) -> Option<MaskStrategy> {
         Some(match s {
             "struct" => MaskStrategy::Struct,
@@ -44,10 +47,12 @@ impl MaskStrategy {
         })
     }
 
+    /// Does this strategy require calibration gradient statistics?
     pub fn needs_gradients(&self) -> bool {
         matches!(self, MaskStrategy::Grad | MaskStrategy::Snip)
     }
 
+    /// All five strategies, in the paper's presentation order.
     pub fn all() -> [MaskStrategy; 5] {
         [
             MaskStrategy::Struct,

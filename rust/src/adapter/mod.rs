@@ -11,16 +11,21 @@ use sparse::SparseDelta;
 /// One LoRA target: W' = W + scale · A @ B.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LoraTensor {
+    /// Name of the weight tensor this delta applies to.
     pub target: String,
-    pub a: Tensor2, // (n, r)
-    pub b: Tensor2, // (r, m)
+    /// Left factor, shape (n, r).
+    pub a: Tensor2,
+    /// Right factor, shape (r, m).
+    pub b: Tensor2,
 }
 
 impl LoraTensor {
+    /// The adapter rank r (= `a.cols`).
     pub fn rank(&self) -> usize {
         self.a.cols
     }
 
+    /// Trainable parameters in this target (|A| + |B|).
     pub fn param_count(&self) -> usize {
         self.a.numel() + self.b.numel()
     }
@@ -29,17 +34,21 @@ impl LoraTensor {
 /// A trained LoRA adapter (baseline).
 #[derive(Clone, Debug, PartialEq)]
 pub struct LoraAdapter {
+    /// Adapter name (unique within a store).
     pub name: String,
     /// Effective fuse scale (= lora_alpha / rank).
     pub scale: f32,
+    /// One low-rank delta per target tensor.
     pub tensors: Vec<LoraTensor>,
 }
 
 impl LoraAdapter {
+    /// Trainable parameters across all targets.
     pub fn param_count(&self) -> usize {
         self.tensors.iter().map(|t| t.param_count()).sum()
     }
 
+    /// Stored bytes (f32 per parameter).
     pub fn nbytes(&self) -> usize {
         self.param_count() * 4
     }
@@ -53,6 +62,7 @@ impl LoraAdapter {
             .sum()
     }
 
+    /// The delta for `target`, if this adapter touches it.
     pub fn find(&self, target: &str) -> Option<&LoraTensor> {
         self.tensors.iter().find(|t| t.target == target)
     }
@@ -61,13 +71,16 @@ impl LoraAdapter {
 /// A trained SHiRA adapter: one sparse delta per target tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShiraAdapter {
+    /// Adapter name (unique within a store).
     pub name: String,
     /// Strategy used to build the mask (metadata; "merged" after fusion).
     pub strategy: String,
+    /// (target tensor name, sparse delta) pairs.
     pub tensors: Vec<(String, SparseDelta)>,
 }
 
 impl ShiraAdapter {
+    /// Trainable parameters = total nnz across targets.
     pub fn param_count(&self) -> usize {
         self.tensors.iter().map(|(_, d)| d.nnz()).sum()
     }
@@ -82,6 +95,7 @@ impl ShiraAdapter {
         self.param_count()
     }
 
+    /// The sparse delta for `target`, if this adapter touches it.
     pub fn find(&self, target: &str) -> Option<&SparseDelta> {
         self.tensors
             .iter()

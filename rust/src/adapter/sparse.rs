@@ -21,6 +21,22 @@ use crate::util::threadpool::{SendPtr, ThreadPool};
 /// allocation-free) value, which the zero-alloc switch path relies on.
 pub const MAX_SHARDS: usize = 64;
 
+/// Below this many touched entries per operation, shard dispatch overhead
+/// exceeds the scatter itself and engines stay serial (shared by the
+/// switch and fusion engines so the thresholds cannot drift apart).
+pub(crate) const PAR_MIN_NNZ: usize = 4096;
+
+/// Target entries per shard (≈ a few cache-resident strides of work).
+pub(crate) const NNZ_PER_SHARD: usize = 2048;
+
+/// Shard count for an `nnz`-entry scatter on a `threads`-wide pool.
+pub(crate) fn shards_for(nnz: usize, threads: usize) -> usize {
+    (nnz / NNZ_PER_SHARD)
+        .max(1)
+        .min(threads * 2)
+        .min(MAX_SHARDS)
+}
+
 /// Row-aligned partition of a sorted index array into `n` contiguous
 /// ranges with near-equal nnz.  `bounds[s]..bounds[s+1]` is shard `s`'s
 /// range into `idx`/`delta`; boundaries are snapped up to row boundaries
@@ -32,10 +48,12 @@ pub struct ShardPlan {
 }
 
 impl ShardPlan {
+    /// Number of shards in the plan.
     pub fn len(&self) -> usize {
         self.n_shards
     }
 
+    /// True when the plan holds no shards (never produced by `shard`).
     pub fn is_empty(&self) -> bool {
         self.n_shards == 0
     }
@@ -52,9 +70,29 @@ impl ShardPlan {
 }
 
 /// Sparse delta for one weight tensor.
+///
+/// # Examples
+///
+/// Apply, then revert exactly from a snapshot (the SHiRA switching story):
+///
+/// ```
+/// use shira::adapter::sparse::SparseDelta;
+/// use shira::model::tensor::Tensor2;
+///
+/// let mut w = Tensor2::zeros(2, 4);
+/// let d = SparseDelta::new(2, 4, vec![1, 6], vec![0.5, -2.0]);
+/// let snap = d.snapshot(&w);
+/// d.apply(&mut w, 1.0);
+/// assert_eq!(w.data[1], 0.5);
+/// assert_eq!(w.data[6], -2.0);
+/// d.restore(&mut w, &snap);
+/// assert!(w.data.iter().all(|&x| x == 0.0)); // bit-exact revert
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct SparseDelta {
+    /// Rows of the target tensor.
     pub rows: usize,
+    /// Columns of the target tensor.
     pub cols: usize,
     /// Sorted, unique flat indices (row-major).
     pub idx: Vec<u32>,
@@ -63,6 +101,7 @@ pub struct SparseDelta {
 }
 
 impl SparseDelta {
+    /// Build from sorted unique flat indices and their delta values.
     pub fn new(rows: usize, cols: usize, idx: Vec<u32>, delta: Vec<f32>) -> Self {
         assert_eq!(idx.len(), delta.len());
         debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices sorted+unique");
@@ -75,14 +114,17 @@ impl SparseDelta {
         }
     }
 
+    /// Number of nonzero entries.
     pub fn nnz(&self) -> usize {
         self.idx.len()
     }
 
+    /// Elements of the target tensor (rows × cols).
     pub fn numel(&self) -> usize {
         self.rows * self.cols
     }
 
+    /// nnz / numel — the paper's 1–2% sparsity knob.
     pub fn density(&self) -> f64 {
         self.nnz() as f64 / self.numel() as f64
     }

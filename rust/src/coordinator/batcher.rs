@@ -6,11 +6,19 @@
 //! has work (switches are never free, even for SHiRA), but never let
 //! another adapter's head request age beyond `max_wait` picks (starvation
 //! freedom, verified by property test).
+//!
+//! The batcher keys queues by the request's adapter *string*, so the
+//! affinity policy extends unchanged to fused-mode serving: the server
+//! canonicalizes adapter-set specs
+//! ([`SetSpec::id`](super::fusion_engine::SetSpec::id)) before pushing,
+//! and affinity then keeps consecutive batches on the currently-fused
+//! *set* — two spellings of one set never force a transition.
 
 use std::collections::{HashMap, VecDeque};
 
 use crate::data::trace::Request;
 
+/// Tunables for [`DynamicBatcher`].
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
     /// Maximum requests per batch (the compiled artifact's batch dim).
@@ -35,6 +43,7 @@ struct Queue {
     head_since_round: u64,
 }
 
+/// Per-adapter request queues with affinity-plus-aging batch selection.
 pub struct DynamicBatcher {
     cfg: BatcherConfig,
     queues: HashMap<String, Queue>,
@@ -43,6 +52,7 @@ pub struct DynamicBatcher {
 }
 
 impl DynamicBatcher {
+    /// Empty batcher with the given tunables.
     pub fn new(cfg: BatcherConfig) -> Self {
         DynamicBatcher {
             cfg,
@@ -52,6 +62,7 @@ impl DynamicBatcher {
         }
     }
 
+    /// Enqueue a request on its adapter's queue.
     pub fn push(&mut self, req: Request) {
         let round = self.round;
         let q = self
@@ -68,10 +79,12 @@ impl DynamicBatcher {
         self.pending += 1;
     }
 
+    /// Requests enqueued but not yet batched.
     pub fn pending(&self) -> usize {
         self.pending
     }
 
+    /// True when no requests are pending.
     pub fn is_empty(&self) -> bool {
         self.pending == 0
     }
@@ -212,6 +225,29 @@ mod tests {
             served_cold_at.is_some() && served_cold_at.unwrap() <= 4,
             "cold starved: {served_cold_at:?}"
         );
+    }
+
+    #[test]
+    fn affinity_extends_to_set_identity() {
+        // Fused-mode serving pushes canonical set ids as the adapter key;
+        // affinity then prefers the currently-fused set exactly like a
+        // single adapter.
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait_rounds: 100,
+        });
+        for i in 0..4 {
+            b.push(req(i, "a@1+b@0.5"));
+        }
+        for i in 4..10 {
+            b.push(req(i, "b@1+c@1")); // longer queue
+        }
+        let (name, _) = b.next_batch(Some("a@1+b@0.5")).unwrap();
+        assert_eq!(name, "a@1+b@0.5"); // set affinity beats queue length
+        let (name, _) = b.next_batch(Some("a@1+b@0.5")).unwrap();
+        assert_eq!(name, "a@1+b@0.5");
+        let (name, _) = b.next_batch(Some("a@1+b@0.5")).unwrap();
+        assert_eq!(name, "b@1+c@1"); // the fused set drained
     }
 
     #[test]

@@ -21,6 +21,21 @@ struct Node<T> {
     next: usize,
 }
 
+/// Byte-budgeted LRU cache keyed by name, with O(1) get/put/evict.
+///
+/// # Examples
+///
+/// ```
+/// use shira::coordinator::cache::LruCache;
+///
+/// let mut c: LruCache<u32> = LruCache::new(200);
+/// c.put("a", 1, 100);
+/// c.put("b", 2, 100);
+/// assert_eq!(*c.get("a").unwrap(), 1);    // touches "a"
+/// c.put("c", 3, 100);                     // evicts coldest ("b")
+/// assert!(c.get("b").is_none());
+/// assert_eq!(c.used_bytes(), 200);
+/// ```
 pub struct LruCache<T> {
     capacity_bytes: usize,
     used_bytes: usize,
@@ -31,12 +46,16 @@ pub struct LruCache<T> {
     /// Intrusive list: head = coldest, tail = hottest.
     head: usize,
     tail: usize,
+    /// Lookups that found a resident entry.
     pub hits: u64,
+    /// Lookups that missed.
     pub misses: u64,
+    /// Entries evicted to fit the byte budget.
     pub evictions: u64,
 }
 
 impl<T> LruCache<T> {
+    /// Empty cache with the given byte budget.
     pub fn new(capacity_bytes: usize) -> Self {
         LruCache {
             capacity_bytes,
@@ -52,14 +71,17 @@ impl<T> LruCache<T> {
         }
     }
 
+    /// Number of resident entries.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when no entries are resident.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Sum of the byte costs of resident entries.
     pub fn used_bytes(&self) -> usize {
         self.used_bytes
     }
@@ -115,6 +137,7 @@ impl<T> LruCache<T> {
         node.bytes
     }
 
+    /// Fetch by name, marking the entry hottest on a hit.
     pub fn get(&mut self, key: &str) -> Option<Arc<T>> {
         if let Some(&i) = self.map.get(key) {
             self.hits += 1;
@@ -176,6 +199,7 @@ impl<T> LruCache<T> {
         self.put(key, value, bytes)
     }
 
+    /// hits / (hits + misses), 0 when nothing was looked up.
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {

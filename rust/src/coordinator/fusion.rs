@@ -1,7 +1,139 @@
 //! Multi-adapter fusion (paper §3.2, Fig. 3b, Table 4) and the
 //! orthogonality/interference analysis behind the concept-loss claim.
+//!
+//! This module owns the *serial* fusion reference ([`fuse_shira`]) and the
+//! interference diagnostics ([`analyze_shira`] / [`analyze_lora`]).  The
+//! incremental fused-mode engine in [`super::fusion_engine`] is verified
+//! bit-identical against [`fuse_shira`] and reuses the per-pair collision
+//! breakdown ([`InterferenceReport::pairs`]) to pick a conflict-free
+//! scatter order.
 
 use crate::adapter::{LoraAdapter, ShiraAdapter};
+
+/// Errors from fusion construction and the incremental fusion engine.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FusionError {
+    /// A fusion was requested over zero adapters.
+    EmptySet,
+    /// Two adapters in the set do not target the same tensor names.
+    TargetSetMismatch {
+        /// Name of the reference adapter (first in the set).
+        first: String,
+        /// Name of the adapter whose target set differs.
+        other: String,
+    },
+    /// Two adapters target the same tensor with different shapes.
+    ShapeMismatch {
+        /// Target tensor name.
+        target: String,
+        /// (rows, cols) of the reference adapter's delta.
+        expect: (usize, usize),
+        /// (rows, cols) of the mismatching adapter's delta.
+        got: (usize, usize),
+    },
+    /// The same adapter name appears twice in a roster or set spec.
+    DuplicateMember(String),
+    /// A set operation named an adapter outside the plan's roster.
+    UnknownMember(String),
+    /// The roster exceeds the engine's member-index width.
+    RosterTooLarge(usize),
+    /// An engine operation was issued before [`activate`] snapshotted the
+    /// base weights.
+    ///
+    /// [`activate`]: super::fusion_engine::FusionEngine::activate
+    NotActive,
+    /// The weight store is missing a tensor the plan targets.
+    MissingTarget(String),
+    /// A fused-set request spec could not be parsed.
+    BadSpec(String),
+}
+
+impl std::fmt::Display for FusionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FusionError::EmptySet => write!(f, "fusion over an empty adapter set"),
+            FusionError::TargetSetMismatch { first, other } => write!(
+                f,
+                "adapters {first:?} and {other:?} target different tensor sets"
+            ),
+            FusionError::ShapeMismatch {
+                target,
+                expect,
+                got,
+            } => write!(
+                f,
+                "target {target:?}: shape {got:?} does not match {expect:?}"
+            ),
+            FusionError::DuplicateMember(n) => {
+                write!(f, "adapter {n:?} appears more than once")
+            }
+            FusionError::UnknownMember(n) => {
+                write!(f, "adapter {n:?} is not in the fusion roster")
+            }
+            FusionError::RosterTooLarge(n) => {
+                write!(f, "fusion roster of {n} adapters exceeds the engine limit")
+            }
+            FusionError::NotActive => {
+                write!(f, "fusion engine not activated on a weight store")
+            }
+            FusionError::MissingTarget(t) => {
+                write!(f, "weight store has no tensor {t:?}")
+            }
+            FusionError::BadSpec(s) => write!(f, "bad fused-set spec {s:?}"),
+        }
+    }
+}
+
+impl std::error::Error for FusionError {}
+
+/// Validate that every adapter targets the same tensor names with the same
+/// shapes as the first one.  Shared by [`fuse_shira`] and
+/// [`super::fusion_engine::FusionPlan::build`].
+pub(crate) fn validate_target_sets(adapters: &[&ShiraAdapter]) -> Result<(), FusionError> {
+    let first = adapters[0];
+    let mut names: Vec<&str> = first.tensors.iter().map(|(n, _)| n.as_str()).collect();
+    names.sort_unstable();
+    for a in &adapters[1..] {
+        let mut an: Vec<&str> = a.tensors.iter().map(|(n, _)| n.as_str()).collect();
+        an.sort_unstable();
+        if an != names {
+            return Err(FusionError::TargetSetMismatch {
+                first: first.name.clone(),
+                other: a.name.clone(),
+            });
+        }
+        for (tname, d) in &a.tensors {
+            let d0 = first.find(tname).expect("name set already matched");
+            if (d.rows, d.cols) != (d0.rows, d0.cols) {
+                return Err(FusionError::ShapeMismatch {
+                    target: tname.clone(),
+                    expect: (d0.rows, d0.cols),
+                    got: (d.rows, d.cols),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Interference between one pair of adapters — the per-pair breakdown of
+/// [`InterferenceReport`].  The fusion engine reads `collisions` to decide
+/// which adapters may scatter concurrently (zero collisions ⇒ disjoint
+/// writes ⇒ same parallel wave).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PairInterference {
+    /// Index of the first adapter in the analyzed slice.
+    pub i: usize,
+    /// Index of the second adapter (`i < j`).
+    pub j: usize,
+    /// Entries where both supports hit the same weight element, summed
+    /// over shared target tensors.
+    pub collisions: usize,
+    /// Support-overlap fraction for this pair (0 = disjoint).
+    pub overlap: f64,
+    /// Density of `AᵢᵀAⱼ` for this pair (paper §3.2's diagnostic).
+    pub ata_density: f64,
+}
 
 /// Interference diagnostics between a set of adapters.
 #[derive(Clone, Debug)]
@@ -13,52 +145,115 @@ pub struct InterferenceReport {
     pub mean_ata_density: f64,
     /// Total colliding entries across all pairs and targets.
     pub collisions: usize,
+    /// Number of adapters analyzed.
     pub n_adapters: usize,
+    /// Per-pair breakdown (one entry per unordered pair `i < j`).  The
+    /// incremental fusion engine uses this to group non-colliding
+    /// adapters into conflict-free parallel scatter waves.
+    pub pairs: Vec<PairInterference>,
 }
 
 /// Fuse SHiRA adapters by naive sparse addition (the paper's method: no
 /// post-processing, no retraining).
-pub fn fuse_shira(adapters: &[&ShiraAdapter], name: &str) -> ShiraAdapter {
-    assert!(!adapters.is_empty());
+///
+/// The adapters must all target the same tensor names with the same
+/// shapes; a mismatched set returns [`FusionError::TargetSetMismatch`] or
+/// [`FusionError::ShapeMismatch`] instead of silently producing a partial
+/// fusion.  This left-fold merge is the bit-exact reference the
+/// incremental [`super::fusion_engine::FusionEngine`] is verified against.
+///
+/// # Examples
+///
+/// ```
+/// use shira::adapter::sparse::SparseDelta;
+/// use shira::adapter::ShiraAdapter;
+/// use shira::coordinator::fusion::fuse_shira;
+///
+/// let mk = |name: &str, idx: Vec<u32>, val: f32| {
+///     let k = idx.len();
+///     ShiraAdapter {
+///         name: name.into(),
+///         strategy: "rand".into(),
+///         tensors: vec![("w".into(), SparseDelta::new(2, 4, idx, vec![val; k]))],
+///     }
+/// };
+/// let a = mk("a", vec![0, 3], 1.0);
+/// let b = mk("b", vec![3, 6], 2.0);
+/// let fused = fuse_shira(&[&a, &b], "a+b").unwrap();
+/// let d = fused.find("w").unwrap();
+/// assert_eq!(d.idx, vec![0, 3, 6]);   // union support
+/// assert_eq!(d.delta[1], 3.0);        // collision sums
+/// ```
+pub fn fuse_shira(adapters: &[&ShiraAdapter], name: &str) -> Result<ShiraAdapter, FusionError> {
+    if adapters.is_empty() {
+        return Err(FusionError::EmptySet);
+    }
+    validate_target_sets(adapters)?;
     let mut acc = adapters[0].clone();
     for other in &adapters[1..] {
         acc = acc.fuse_with(other, name);
     }
     acc.name = name.to_string();
-    acc
+    Ok(acc)
 }
 
-/// Interference analysis for SHiRA adapters.
+/// Interference analysis for SHiRA adapters, including the per-pair
+/// collision breakdown the fusion engine schedules by.
 pub fn analyze_shira(adapters: &[&ShiraAdapter]) -> InterferenceReport {
     let n = adapters.len();
     let mut overlap_sum = 0.0;
     let mut ata_sum = 0.0;
-    let mut pairs = 0usize;
+    let mut pairs_n = 0usize;
     let mut collisions = 0usize;
+    let mut pairs = Vec::new();
     for i in 0..n {
         for j in (i + 1)..n {
-            overlap_sum += adapters[i].overlap_fraction(adapters[j]);
+            let overlap = adapters[i].overlap_fraction(adapters[j]);
+            overlap_sum += overlap;
             let mut pair_ata = 0.0;
             let mut targets = 0usize;
+            let mut pair_coll = 0usize;
             for (tname, d) in &adapters[i].tensors {
                 if let Some(od) = adapters[j].find(tname) {
                     let (nnz, total) = d.ata_nnz(od);
                     pair_ata += nnz as f64 / total as f64;
                     targets += 1;
-                    collisions += d.overlap(od);
+                    pair_coll += d.overlap(od);
                 }
             }
+            let ata_density = if targets > 0 {
+                pair_ata / targets as f64
+            } else {
+                0.0
+            };
             if targets > 0 {
-                ata_sum += pair_ata / targets as f64;
+                ata_sum += ata_density;
             }
-            pairs += 1;
+            collisions += pair_coll;
+            pairs.push(PairInterference {
+                i,
+                j,
+                collisions: pair_coll,
+                overlap,
+                ata_density,
+            });
+            pairs_n += 1;
         }
     }
     InterferenceReport {
-        mean_overlap: if pairs > 0 { overlap_sum / pairs as f64 } else { 0.0 },
-        mean_ata_density: if pairs > 0 { ata_sum / pairs as f64 } else { 0.0 },
+        mean_overlap: if pairs_n > 0 {
+            overlap_sum / pairs_n as f64
+        } else {
+            0.0
+        },
+        mean_ata_density: if pairs_n > 0 {
+            ata_sum / pairs_n as f64
+        } else {
+            0.0
+        },
         collisions,
         n_adapters: n,
+        pairs,
     }
 }
 
@@ -68,14 +263,29 @@ pub fn analyze_shira(adapters: &[&ShiraAdapter]) -> InterferenceReport {
 pub fn analyze_lora(adapters: &[&LoraAdapter]) -> InterferenceReport {
     let n = adapters.len();
     let mut collisions = 0usize;
+    let mut pairs = Vec::new();
     for i in 0..n {
         for j in (i + 1)..n {
+            let mut pair_coll = 0usize;
+            let mut shared = 0usize;
             for t in &adapters[i].tensors {
                 if adapters[j].find(&t.target).is_some() {
                     // every entry of the shared target collides
-                    collisions += t.a.rows * t.b.cols;
+                    pair_coll += t.a.rows * t.b.cols;
+                    shared += 1;
                 }
             }
+            collisions += pair_coll;
+            // dense products interfere totally — but only where the two
+            // adapters actually share a target tensor
+            let structural = if shared > 0 { 1.0 } else { 0.0 };
+            pairs.push(PairInterference {
+                i,
+                j,
+                collisions: pair_coll,
+                overlap: structural,
+                ata_density: structural,
+            });
         }
     }
     InterferenceReport {
@@ -83,6 +293,7 @@ pub fn analyze_lora(adapters: &[&LoraAdapter]) -> InterferenceReport {
         mean_ata_density: if n > 1 { 1.0 } else { 0.0 },
         collisions,
         n_adapters: n,
+        pairs,
     }
 }
 
@@ -115,7 +326,7 @@ mod tests {
     fn fuse_preserves_disjoint_deltas() {
         let a = shira(1, 0.01);
         let b = shira(2, 0.01);
-        let f = fuse_shira(&[&a, &b], "ab");
+        let f = fuse_shira(&[&a, &b], "ab").unwrap();
         // every entry of a survives in f (possibly summed on collision)
         for (tname, d) in &a.tensors {
             let fd = f.find(tname).unwrap();
@@ -127,6 +338,40 @@ mod tests {
                 let want = d.delta[j] + other.unwrap_or(0.0);
                 assert!((fd.delta[pos] - want).abs() < 1e-6);
             }
+        }
+    }
+
+    #[test]
+    fn empty_set_is_an_error() {
+        assert_eq!(fuse_shira(&[], "none"), Err(FusionError::EmptySet));
+    }
+
+    #[test]
+    fn mismatched_target_sets_are_an_error() {
+        let a = shira(20, 0.01);
+        let mut b = shira(21, 0.01);
+        b.tensors.push(("wv".into(), SparseDelta::new(64, 64, vec![1], vec![1.0])));
+        match fuse_shira(&[&a, &b], "bad") {
+            Err(FusionError::TargetSetMismatch { first, other }) => {
+                assert_eq!(first, a.name);
+                assert_eq!(other, b.name);
+            }
+            other => panic!("expected TargetSetMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mismatched_shapes_are_an_error() {
+        let a = shira(22, 0.01);
+        let mut b = shira(23, 0.01);
+        b.tensors[0].1 = SparseDelta::new(32, 32, vec![0], vec![1.0]);
+        match fuse_shira(&[&a, &b], "bad") {
+            Err(FusionError::ShapeMismatch { target, expect, got }) => {
+                assert_eq!(target, "wq");
+                assert_eq!(expect, (64, 64));
+                assert_eq!(got, (32, 32));
+            }
+            other => panic!("expected ShapeMismatch, got {other:?}"),
         }
     }
 
@@ -160,6 +405,29 @@ mod tests {
         let lrep = analyze_lora(&[&l1, &l2]);
         assert_eq!(lrep.mean_ata_density, 1.0);
         assert!(lrep.collisions > rep.collisions * 100);
+        assert_eq!(lrep.pairs.len(), 1);
+        assert_eq!(lrep.pairs[0].collisions, lrep.collisions);
+    }
+
+    #[test]
+    fn pair_breakdown_sums_to_totals() {
+        let a = shira(30, 0.05);
+        let b = shira(31, 0.05);
+        let c = shira(32, 0.05);
+        let rep = analyze_shira(&[&a, &b, &c]);
+        assert_eq!(rep.pairs.len(), 3);
+        let sum: usize = rep.pairs.iter().map(|p| p.collisions).sum();
+        assert_eq!(sum, rep.collisions);
+        for p in &rep.pairs {
+            assert!(p.i < p.j && p.j < 3);
+        }
+        // self-consistency with a direct pairwise count
+        let direct: usize = a
+            .tensors
+            .iter()
+            .map(|(t, d)| d.overlap(b.find(t).unwrap()))
+            .sum();
+        assert_eq!(rep.pairs[0].collisions, direct);
     }
 
     #[test]
@@ -179,7 +447,7 @@ mod tests {
         let a = shira(9, 0.01);
         let b = shira(10, 0.01);
         let c = shira(11, 0.01);
-        let f = fuse_shira(&[&a, &b, &c], "abc");
+        let f = fuse_shira(&[&a, &b, &c], "abc").unwrap();
         assert_eq!(f.name, "abc");
         let rep = analyze_shira(&[&a, &b, &c]);
         assert_eq!(rep.n_adapters, 3);

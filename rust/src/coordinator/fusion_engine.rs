@@ -1,0 +1,1175 @@
+//! Incremental fused-mode multi-adapter serving (DESIGN.md §8).
+//!
+//! The serial path ([`fuse_shira`]) rebuilds a fused adapter from scratch:
+//! fusing k adapters re-walks every delta, and changing one adapter's
+//! weight in a fused set costs O(Σ nnz).  This module makes fused-mode
+//! serving *incremental*: a precomputed [`FusionPlan`] (per-target union
+//! support with per-adapter sub-slices) lets [`FusionEngine::fuse_into`],
+//! [`FusionEngine::unfuse_one`] and [`FusionEngine::reweight_one`] touch
+//! only the changed adapter's nnz — the "rapid switching directly in fused
+//! mode" property that distinguishes SHiRA from LoRA-merge schemes.
+//!
+//! ## Why incremental updates stay bit-identical
+//!
+//! The engine never accumulates `+=`/`-=` on live weights (that would
+//! drift from a fresh rebuild in float).  Instead every operation
+//! *recomputes* each touched union slot from the base snapshot:
+//!
+//! ```text
+//! W[flat] = base[flat] + fold(w_m · Δ_m[flat]  for fused m, roster order)
+//! ```
+//!
+//! The fold is a left-fold in roster order — exactly the order
+//! [`fuse_shira`] sums colliding entries when rebuilding from scratch over
+//! the scaled members — so after *any* sequence of fuse/unfuse/reweight
+//! the resident weights are bit-identical to a serial rebuild (verified by
+//! unit and property tests).  Slots with no fused contributor get the base
+//! value back, so unfusing everything is an exact revert.
+//!
+//! ## Parallel dispatch
+//!
+//! Operations shard the touched adapter's support with the row-aligned
+//! [`ShardPlan`](crate::adapter::sparse::ShardPlan) from the switch engine
+//! and run as a flat (target × shard) task list under one
+//! [`ThreadPool::scoped_for`] region.  Set transitions group the touched
+//! adapters into conflict-free waves using the per-pair collision
+//! breakdown ([`PairInterference`], the same shape
+//! [`analyze_shira`](super::fusion::analyze_shira) emits): adapters with
+//! zero pairwise collisions write disjoint slots and scatter concurrently;
+//! colliding adapters are serialized into later waves.  Every parallel path is
+//! bit-identical to its serial twin (disjoint writes, same per-slot
+//! arithmetic).
+
+use std::sync::Arc;
+
+use super::fusion::{fuse_shira, validate_target_sets, FusionError, PairInterference};
+use crate::adapter::sparse::{shards_for, SparseDelta, PAR_MIN_NNZ};
+use crate::adapter::ShiraAdapter;
+use crate::model::weights::WeightStore;
+use crate::util::threadpool::{SendPtr, ThreadPool};
+
+
+/// One roster member's view of one plan target: where its local entries
+/// land in the union support, and whether it can take the clean
+/// (collision-free) scatter path there.
+#[derive(Clone, Debug)]
+struct MemberSlice {
+    /// Index of this target in the member's `tensors` vec.
+    tensor_pos: usize,
+    /// Local entry `j` of the member's delta lands at union slot
+    /// `upos[j]` (strictly increasing).
+    upos: Vec<u32>,
+    /// True when every slot this member touches has exactly one
+    /// contributor (itself) — enables the direct scatter kernel with no
+    /// contributor walk.
+    clean: bool,
+}
+
+/// Per-target piece of a [`FusionPlan`]: the union support plus a CSR of
+/// contributors per union slot, stored in roster order so the per-slot
+/// fold reproduces [`fuse_shira`]'s left-fold exactly.
+#[derive(Clone, Debug)]
+struct PlanTarget {
+    /// Target tensor name in the weight store.
+    name: String,
+    rows: usize,
+    cols: usize,
+    /// Sorted unique union of all members' supports (flat indices).
+    union_idx: Vec<u32>,
+    /// CSR offsets: contributors of slot `s` are
+    /// `contrib_*[off[s]..off[s+1]]`, ordered by roster index.
+    contrib_off: Vec<u32>,
+    /// Roster index of each contributor.
+    contrib_member: Vec<u16>,
+    /// The contributor's unscaled delta value at that slot.
+    contrib_val: Vec<f32>,
+    /// One slice per roster member (identical target sets ⇒ always
+    /// present).
+    members: Vec<MemberSlice>,
+}
+
+/// Precomputed fusion layout over a fixed adapter roster: per-target union
+/// support, per-adapter sub-slices into it, contributor lists per slot,
+/// and the pairwise-collision matrix used for conflict-free scheduling.
+///
+/// Building the plan is the only heavy step — linear walks over the
+/// roster's supports (union merge + two-cursor pairwise overlap; the
+/// quadratic `ata_nnz` diagnostic is deliberately NOT run here).
+/// Afterwards every fuse/unfuse/reweight touches one adapter's entries
+/// only.
+#[derive(Clone, Debug)]
+pub struct FusionPlan {
+    roster: Vec<Arc<ShiraAdapter>>,
+    targets: Vec<PlanTarget>,
+    pairs: Vec<PairInterference>,
+    /// `collide[i * n + j]` — members i and j share at least one slot.
+    collide: Vec<bool>,
+}
+
+impl FusionPlan {
+    /// Build a plan over `roster`.  All adapters must target the same
+    /// tensor names with the same shapes and carry distinct names.
+    pub fn build(roster: Vec<Arc<ShiraAdapter>>) -> Result<FusionPlan, FusionError> {
+        if roster.is_empty() {
+            return Err(FusionError::EmptySet);
+        }
+        if roster.len() > u16::MAX as usize {
+            return Err(FusionError::RosterTooLarge(roster.len()));
+        }
+        for (i, a) in roster.iter().enumerate() {
+            if roster[..i].iter().any(|b| b.name == a.name) {
+                return Err(FusionError::DuplicateMember(a.name.clone()));
+            }
+        }
+        let refs: Vec<&ShiraAdapter> = roster.iter().map(|a| a.as_ref()).collect();
+        validate_target_sets(&refs)?;
+        let n = roster.len();
+
+        // Per-pair collision counts via the cheap two-cursor overlap walk
+        // (NOT analyze_shira: its ata_nnz diagnostic is quadratic in
+        // per-row support and would stall plan builds on big rosters).
+        let mut pairs = Vec::with_capacity(n * (n - 1) / 2);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let mut collisions = 0usize;
+                let mut denom = 0usize;
+                for (tname, d) in &refs[i].tensors {
+                    if let Some(od) = refs[j].find(tname) {
+                        collisions += d.overlap(od);
+                        denom += d.nnz().min(od.nnz());
+                    }
+                }
+                pairs.push(PairInterference {
+                    i,
+                    j,
+                    collisions,
+                    overlap: if denom == 0 {
+                        0.0
+                    } else {
+                        collisions as f64 / denom as f64
+                    },
+                    // the §3.2 diagnostic is not computed at build time;
+                    // run fusion::analyze_shira for it
+                    ata_density: 0.0,
+                });
+            }
+        }
+
+        let mut targets = Vec::with_capacity(roster[0].tensors.len());
+        for (tname, d0) in &roster[0].tensors {
+            // Union support across all members.
+            let mut union: Vec<u32> = d0.idx.clone();
+            for a in &roster[1..] {
+                let d = a.find(tname).expect("target sets validated identical");
+                union = union_sorted(&union, &d.idx);
+            }
+            // Per-member slot maps + per-slot contributor counts.
+            let mut counts = vec![0u32; union.len()];
+            let mut members = Vec::with_capacity(n);
+            for a in &roster {
+                let tensor_pos = a
+                    .tensors
+                    .iter()
+                    .position(|(name, _)| name == tname)
+                    .expect("target sets validated identical");
+                let d = &a.tensors[tensor_pos].1;
+                let mut upos = Vec::with_capacity(d.nnz());
+                let mut s = 0usize;
+                for &i in &d.idx {
+                    while union[s] < i {
+                        s += 1;
+                    }
+                    debug_assert_eq!(union[s], i);
+                    upos.push(s as u32);
+                    counts[s] += 1;
+                    s += 1;
+                }
+                members.push(MemberSlice {
+                    tensor_pos,
+                    upos,
+                    clean: false,
+                });
+            }
+            // CSR of contributors, filled in roster order (the fold order).
+            let mut off = vec![0u32; union.len() + 1];
+            for s in 0..union.len() {
+                off[s + 1] = off[s] + counts[s];
+            }
+            let total = off[union.len()] as usize;
+            let mut contrib_member = vec![0u16; total];
+            let mut contrib_val = vec![0f32; total];
+            let mut fill: Vec<u32> = off[..union.len()].to_vec();
+            for (mi, a) in roster.iter().enumerate() {
+                let ms = &members[mi];
+                let d = &a.tensors[ms.tensor_pos].1;
+                for (j, &s) in ms.upos.iter().enumerate() {
+                    let c = fill[s as usize] as usize;
+                    contrib_member[c] = mi as u16;
+                    contrib_val[c] = d.delta[j];
+                    fill[s as usize] += 1;
+                }
+            }
+            for ms in members.iter_mut() {
+                ms.clean = ms.upos.iter().all(|&s| counts[s as usize] == 1);
+            }
+            targets.push(PlanTarget {
+                name: tname.clone(),
+                rows: d0.rows,
+                cols: d0.cols,
+                union_idx: union,
+                contrib_off: off,
+                contrib_member,
+                contrib_val,
+                members,
+            });
+        }
+
+        let mut collide = vec![false; n * n];
+        for p in &pairs {
+            if p.collisions > 0 {
+                collide[p.i * n + p.j] = true;
+                collide[p.j * n + p.i] = true;
+            }
+        }
+        Ok(FusionPlan {
+            roster,
+            targets,
+            pairs,
+            collide,
+        })
+    }
+
+    /// The adapters this plan was built over, in roster order.
+    pub fn roster(&self) -> &[Arc<ShiraAdapter>] {
+        &self.roster
+    }
+
+    /// Number of roster members.
+    pub fn len(&self) -> usize {
+        self.roster.len()
+    }
+
+    /// True when the roster is empty (never — `build` rejects it — but
+    /// required for the `len`/`is_empty` convention).
+    pub fn is_empty(&self) -> bool {
+        self.roster.is_empty()
+    }
+
+    /// Roster index of the member named `name`.
+    pub fn member_index(&self, name: &str) -> Option<usize> {
+        self.roster.iter().position(|a| a.name == name)
+    }
+
+    /// Per-pair collision entries (`i < j`, roster indices), computed at
+    /// build time with the cheap two-cursor overlap walk.  `ata_density`
+    /// is left 0.0 here; run
+    /// [`analyze_shira`](super::fusion::analyze_shira) over the roster for
+    /// the full §3.2 diagnostic.
+    pub fn pairs(&self) -> &[PairInterference] {
+        &self.pairs
+    }
+
+    /// Do members `i` and `j` share at least one weight slot?
+    pub fn collides(&self, i: usize, j: usize) -> bool {
+        i != j && self.collide[i * self.roster.len() + j]
+    }
+
+    /// Total union-support entries across all targets (the cost of a full
+    /// set activation; each incremental op costs one member's nnz).
+    pub fn union_nnz(&self) -> usize {
+        self.targets.iter().map(|t| t.union_idx.len()).sum()
+    }
+
+    fn member_delta(&self, t: usize, m: usize) -> &SparseDelta {
+        let pt = &self.targets[t];
+        &self.roster[m].tensors[pt.members[m].tensor_pos].1
+    }
+}
+
+/// Counts describing one [`FusionEngine::apply_set`] transition.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SetTransition {
+    /// Members newly fused in.
+    pub fused: usize,
+    /// Members unfused.
+    pub unfused: usize,
+    /// Members whose weight changed while staying fused.
+    pub reweighted: usize,
+    /// Conflict-free scatter waves the transition was dispatched in.
+    pub waves: usize,
+}
+
+/// One shard of refresh work: member `m`'s local entries `[lo, hi)` on
+/// plan target `t`.
+#[derive(Clone, Copy)]
+struct RefreshTask {
+    t: usize,
+    m: usize,
+    lo: usize,
+    hi: usize,
+}
+
+/// Incremental fused-mode engine over a [`FusionPlan`].
+///
+/// The engine tracks which roster members are fused at which weight and
+/// mutates a caller-owned [`WeightStore`] in place.  `activate` snapshots
+/// the base values on the union support once; every subsequent
+/// fuse/unfuse/reweight recomputes only the touched adapter's slots from
+/// that snapshot, so the cost is O(that adapter's nnz) — not O(Σ nnz) —
+/// and the resident weights stay bit-identical to a serial
+/// [`fuse_shira`] rebuild of the currently-fused set.
+///
+/// # Examples
+///
+/// ```
+/// use std::sync::Arc;
+/// use shira::adapter::sparse::SparseDelta;
+/// use shira::adapter::ShiraAdapter;
+/// use shira::coordinator::fusion_engine::{FusionEngine, FusionPlan};
+/// use shira::model::tensor::Tensor2;
+/// use shira::model::weights::WeightStore;
+///
+/// let mk = |name: &str, idx: Vec<u32>, val: f32| {
+///     let k = idx.len();
+///     ShiraAdapter {
+///         name: name.into(),
+///         strategy: "rand".into(),
+///         tensors: vec![("w".into(), SparseDelta::new(4, 4, idx, vec![val; k]))],
+///     }
+/// };
+/// let plan = FusionPlan::build(vec![
+///     Arc::new(mk("a", vec![0, 5], 1.0)),
+///     Arc::new(mk("b", vec![5, 9], 2.0)),
+/// ])
+/// .unwrap();
+/// let mut store = WeightStore::new();
+/// store.insert("w", Tensor2::zeros(4, 4));
+///
+/// let mut eng = FusionEngine::new(plan);
+/// eng.activate(&mut store).unwrap();
+/// eng.fuse_into(&mut store, "a", 1.0).unwrap();
+/// eng.fuse_into(&mut store, "b", 0.5).unwrap();
+/// assert_eq!(store.get("w").data[5], 1.0 + 0.5 * 2.0); // collision sums
+/// eng.reweight_one(&mut store, "b", 2.0).unwrap();
+/// assert_eq!(store.get("w").data[9], 4.0);
+/// eng.unfuse_one(&mut store, "a").unwrap();
+/// eng.unfuse_one(&mut store, "b").unwrap();
+/// assert!(store.get("w").data.iter().all(|&x| x == 0.0)); // exact revert
+/// ```
+pub struct FusionEngine {
+    plan: FusionPlan,
+    pool: Option<Arc<ThreadPool>>,
+    /// Current per-member weight (meaningful while `fused[m]`).
+    weights: Vec<f32>,
+    fused: Vec<bool>,
+    /// Base values at the union support, one buffer per plan target;
+    /// filled by `activate`.
+    base_snap: Vec<Vec<f32>>,
+    active: bool,
+    /// Incremental operations performed (members refreshed).
+    updates: u64,
+    /// Reusable shard-task scratch for the parallel path.
+    tasks: Vec<RefreshTask>,
+}
+
+impl FusionEngine {
+    /// Engine without a thread pool (all scatters serial).
+    pub fn new(plan: FusionPlan) -> Self {
+        Self::with_pool(plan, None)
+    }
+
+    /// Engine with an attached pool: refresh passes run as a flat
+    /// (target × shard) task list under one `scoped_for` region.
+    pub fn with_pool(plan: FusionPlan, pool: Option<Arc<ThreadPool>>) -> Self {
+        let n = plan.len();
+        FusionEngine {
+            plan,
+            pool,
+            weights: vec![0.0; n],
+            fused: vec![false; n],
+            base_snap: Vec::new(),
+            active: false,
+            updates: 0,
+            tasks: Vec::new(),
+        }
+    }
+
+    /// The plan this engine operates over.
+    pub fn plan(&self) -> &FusionPlan {
+        &self.plan
+    }
+
+    /// Has `activate` snapshotted a weight store?
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Incremental operations performed so far (members refreshed).
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    /// Current weight of a fused member (`None` when not fused).
+    pub fn fused_weight(&self, name: &str) -> Option<f32> {
+        let m = self.plan.member_index(name)?;
+        if self.fused[m] {
+            Some(self.weights[m])
+        } else {
+            None
+        }
+    }
+
+    /// Currently-fused members in roster order.
+    pub fn fused_members(&self) -> Vec<(&str, f32)> {
+        (0..self.plan.len())
+            .filter(|&m| self.fused[m])
+            .map(|m| (self.plan.roster[m].name.as_str(), self.weights[m]))
+            .collect()
+    }
+
+    /// Snapshot the base values on the plan's union support.  The store
+    /// must hold every plan target at the plan's shape and currently carry
+    /// *base* values there (nothing fused / no other adapter applied).
+    pub fn activate(&mut self, store: &mut WeightStore) -> Result<(), FusionError> {
+        for pt in &self.plan.targets {
+            if !store.names().iter().any(|n| n == &pt.name) {
+                return Err(FusionError::MissingTarget(pt.name.clone()));
+            }
+            let w = store.get(&pt.name);
+            if (w.rows, w.cols) != (pt.rows, pt.cols) {
+                return Err(FusionError::ShapeMismatch {
+                    target: pt.name.clone(),
+                    expect: (pt.rows, pt.cols),
+                    got: (w.rows, w.cols),
+                });
+            }
+        }
+        self.base_snap = self
+            .plan
+            .targets
+            .iter()
+            .map(|pt| {
+                let w = store.get(&pt.name);
+                pt.union_idx.iter().map(|&i| w.data[i as usize]).collect()
+            })
+            .collect();
+        self.weights.iter_mut().for_each(|w| *w = 0.0);
+        self.fused.iter_mut().for_each(|f| *f = false);
+        self.active = true;
+        Ok(())
+    }
+
+    /// Unfuse everything and restore the base values exactly, leaving the
+    /// engine inactive.
+    pub fn deactivate(&mut self, store: &mut WeightStore) {
+        if !self.active {
+            return;
+        }
+        for (t, pt) in self.plan.targets.iter().enumerate() {
+            let w = store.get_mut(&pt.name);
+            for (s, &i) in pt.union_idx.iter().enumerate() {
+                w.data[i as usize] = self.base_snap[t][s];
+            }
+        }
+        self.fused.iter_mut().for_each(|f| *f = false);
+        self.active = false;
+    }
+
+    /// Fuse `name` into the resident weights at `weight`.  O(that
+    /// adapter's nnz).  Fusing an already-fused member re-weights it.
+    pub fn fuse_into(
+        &mut self,
+        store: &mut WeightStore,
+        name: &str,
+        weight: f32,
+    ) -> Result<(), FusionError> {
+        let m = self.member(name)?;
+        self.ensure_active()?;
+        self.fused[m] = true;
+        self.weights[m] = weight;
+        self.refresh_members(store, &[m]);
+        Ok(())
+    }
+
+    /// Remove `name` from the fused set without touching the other
+    /// members' slots (their shared slots are recomputed from the base
+    /// snapshot).  O(that adapter's nnz).  Unfusing a non-fused member is
+    /// a no-op.
+    pub fn unfuse_one(&mut self, store: &mut WeightStore, name: &str) -> Result<(), FusionError> {
+        let m = self.member(name)?;
+        self.ensure_active()?;
+        if !self.fused[m] {
+            return Ok(());
+        }
+        self.fused[m] = false;
+        self.refresh_members(store, &[m]);
+        Ok(())
+    }
+
+    /// Change a fused member's weight in place — no unfuse/refuse of the
+    /// rest of the set.  O(that adapter's nnz).  Same operation as
+    /// [`Self::fuse_into`] (which fuses the member if it was not).
+    pub fn reweight_one(
+        &mut self,
+        store: &mut WeightStore,
+        name: &str,
+        weight: f32,
+    ) -> Result<(), FusionError> {
+        self.fuse_into(store, name, weight)
+    }
+
+    /// Transition to exactly the fused set `desired` (members absent from
+    /// it are unfused).  The touched members are grouped into
+    /// conflict-free waves via the plan's per-pair collision breakdown;
+    /// each wave scatters as one parallel region.  Cost is the *touched*
+    /// members' nnz, so moving between overlapping sets is far cheaper
+    /// than a rebuild.
+    pub fn apply_set(
+        &mut self,
+        store: &mut WeightStore,
+        desired: &[(String, f32)],
+    ) -> Result<SetTransition, FusionError> {
+        self.ensure_active()?;
+        let n = self.plan.len();
+        let mut want: Vec<Option<f32>> = vec![None; n];
+        for (name, w) in desired {
+            let m = self.member(name)?;
+            if want[m].is_some() {
+                return Err(FusionError::DuplicateMember(name.clone()));
+            }
+            want[m] = Some(*w);
+        }
+        let mut stats = SetTransition::default();
+        let mut touched = Vec::new();
+        for m in 0..n {
+            match (self.fused[m], want[m]) {
+                (false, Some(w)) => {
+                    self.fused[m] = true;
+                    self.weights[m] = w;
+                    stats.fused += 1;
+                    touched.push(m);
+                }
+                (true, None) => {
+                    self.fused[m] = false;
+                    stats.unfused += 1;
+                    touched.push(m);
+                }
+                (true, Some(w)) if w.to_bits() != self.weights[m].to_bits() => {
+                    self.weights[m] = w;
+                    stats.reweighted += 1;
+                    touched.push(m);
+                }
+                _ => {}
+            }
+        }
+        // Conflict-free waves: members in one wave share no slots, so
+        // their scatters write disjoint weights and run concurrently.
+        // Flags are already final, so every refresh computes the final
+        // canonical value and wave order is irrelevant to the result.
+        let mut waves: Vec<Vec<usize>> = Vec::new();
+        for &m in &touched {
+            match waves
+                .iter_mut()
+                .find(|wave| wave.iter().all(|&o| !self.plan.collides(o, m)))
+            {
+                Some(wave) => wave.push(m),
+                None => waves.push(vec![m]),
+            }
+        }
+        stats.waves = waves.len();
+        for wave in waves {
+            self.refresh_members(store, &wave);
+        }
+        Ok(stats)
+    }
+
+    fn member(&self, name: &str) -> Result<usize, FusionError> {
+        self.plan
+            .member_index(name)
+            .ok_or_else(|| FusionError::UnknownMember(name.to_string()))
+    }
+
+    fn ensure_active(&self) -> Result<(), FusionError> {
+        if self.active {
+            Ok(())
+        } else {
+            Err(FusionError::NotActive)
+        }
+    }
+
+    /// Recompute every union slot touched by `members` (which must be
+    /// mutually conflict-free so their writes are disjoint).  Flags and
+    /// weights must already hold their final values.
+    fn refresh_members(&mut self, store: &mut WeightStore, members: &[usize]) {
+        if members.is_empty() {
+            return;
+        }
+        self.updates += members.len() as u64;
+        let total_nnz: usize = members
+            .iter()
+            .map(|&m| self.plan.roster[m].param_count())
+            .sum();
+        let pool = match &self.pool {
+            Some(p) if total_nnz >= PAR_MIN_NNZ && p.threads() > 1 => Some(Arc::clone(p)),
+            _ => None,
+        };
+        // Raw weight cursors per target.  SAFETY: pointers are only used
+        // inside this call; tensors are not resized.
+        let wptrs: Vec<SendPtr<f32>> = self
+            .plan
+            .targets
+            .iter()
+            .map(|pt| SendPtr::new(store.get_mut(&pt.name).data.as_mut_ptr()))
+            .collect();
+        let threads = pool.as_ref().map(|p| p.threads()).unwrap_or(1);
+        self.tasks.clear();
+        let n_targets = self.plan.targets.len();
+        for &m in members {
+            for t in 0..n_targets {
+                let d = self.plan.member_delta(t, m);
+                if d.nnz() == 0 {
+                    continue;
+                }
+                let sp = d.shard(shards_for(d.nnz(), threads));
+                for s in 0..sp.len() {
+                    let (lo, hi) = sp.range(s);
+                    if lo < hi {
+                        self.tasks.push(RefreshTask { t, m, lo, hi });
+                    }
+                }
+            }
+        }
+        let plan = &self.plan;
+        let fused = &self.fused;
+        let weights = &self.weights;
+        let snaps = &self.base_snap;
+        let tasks = &self.tasks;
+        match pool {
+            Some(pool) => {
+                pool.scoped_for(tasks.len(), |i| {
+                    let task = tasks[i];
+                    // SAFETY: tasks cover disjoint local ranges of each
+                    // member's unique sorted support; members in one call
+                    // are conflict-free (no shared slots), so every weight
+                    // element is written by exactly one task.
+                    unsafe {
+                        refresh_range(
+                            plan,
+                            snaps,
+                            fused,
+                            weights,
+                            wptrs[task.t].get(),
+                            task.t,
+                            task.m,
+                            task.lo,
+                            task.hi,
+                        )
+                    }
+                });
+            }
+            None => {
+                for &task in tasks {
+                    // SAFETY: serial — trivially disjoint.
+                    unsafe {
+                        refresh_range(
+                            plan,
+                            snaps,
+                            fused,
+                            weights,
+                            wptrs[task.t].get(),
+                            task.t,
+                            task.m,
+                            task.lo,
+                            task.hi,
+                        )
+                    }
+                }
+            }
+        }
+        self.tasks.clear();
+    }
+
+    /// Rebuild the fused weights for the current set from scratch with the
+    /// serial [`fuse_shira`] path (tests / verification — O(Σ nnz)).
+    /// Returns `None` when nothing is fused (weights are at base).
+    pub fn rebuild_reference(&self, base: &WeightStore) -> Option<WeightStore> {
+        let scaled: Vec<ShiraAdapter> = (0..self.plan.len())
+            .filter(|&m| self.fused[m])
+            .map(|m| {
+                let a = &self.plan.roster[m];
+                ShiraAdapter {
+                    name: a.name.clone(),
+                    strategy: a.strategy.clone(),
+                    tensors: a
+                        .tensors
+                        .iter()
+                        .map(|(t, d)| (t.clone(), d.scaled(self.weights[m])))
+                        .collect(),
+                }
+            })
+            .collect();
+        if scaled.is_empty() {
+            return None;
+        }
+        let refs: Vec<&ShiraAdapter> = scaled.iter().collect();
+        let merged = fuse_shira(&refs, "reference").expect("roster pre-validated");
+        let mut w = base.clone();
+        for (t, d) in &merged.tensors {
+            d.apply(w.get_mut(t), 1.0);
+        }
+        Some(w)
+    }
+}
+
+/// Recompute member `m`'s union slots `[lo, hi)` (local entry indices) on
+/// plan target `t`: each slot gets `base + fold(contributions)` — one
+/// addition to base, never an increment of a live weight, so the result
+/// matches a from-scratch [`fuse_shira`] rebuild bit for bit.
+///
+/// # Safety
+/// `w` must point at target `t`'s weight data; ranges handed to concurrent
+/// callers must be disjoint, and no two concurrently-refreshed members may
+/// share a slot (enforced by conflict-free wave grouping).
+#[allow(clippy::too_many_arguments)]
+unsafe fn refresh_range(
+    plan: &FusionPlan,
+    snaps: &[Vec<f32>],
+    fused: &[bool],
+    weights: &[f32],
+    w: *mut f32,
+    t: usize,
+    m: usize,
+    lo: usize,
+    hi: usize,
+) {
+    let pt = &plan.targets[t];
+    let ms = &pt.members[m];
+    let d = &plan.roster[m].tensors[ms.tensor_pos].1;
+    let snap = &snaps[t];
+    if ms.clean {
+        // Collision-free sub-slice: single contributor per slot, direct
+        // scatter with no contributor walk.
+        if fused[m] {
+            let wm = weights[m];
+            for j in lo..hi {
+                let s = *ms.upos.get_unchecked(j) as usize;
+                *w.add(*d.idx.get_unchecked(j) as usize) =
+                    snap[s] + *d.delta.get_unchecked(j) * wm;
+            }
+        } else {
+            for j in lo..hi {
+                let s = *ms.upos.get_unchecked(j) as usize;
+                *w.add(*d.idx.get_unchecked(j) as usize) = snap[s];
+            }
+        }
+    } else {
+        for j in lo..hi {
+            let s = *ms.upos.get_unchecked(j) as usize;
+            let mut acc = 0.0f32;
+            let mut any = false;
+            let c0 = pt.contrib_off[s] as usize;
+            let c1 = pt.contrib_off[s + 1] as usize;
+            for c in c0..c1 {
+                let cm = *pt.contrib_member.get_unchecked(c) as usize;
+                if fused[cm] {
+                    let v = *pt.contrib_val.get_unchecked(c) * weights[cm];
+                    acc = if any { acc + v } else { v };
+                    any = true;
+                }
+            }
+            let base = snap[s];
+            *w.add(*d.idx.get_unchecked(j) as usize) = if any { base + acc } else { base };
+        }
+    }
+}
+
+/// Union of two sorted unique index slices.
+fn union_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() || j < b.len() {
+        let ia = a.get(i).copied().unwrap_or(u32::MAX);
+        let ib = b.get(j).copied().unwrap_or(u32::MAX);
+        if ia < ib {
+            out.push(ia);
+            i += 1;
+        } else if ib < ia {
+            out.push(ib);
+            j += 1;
+        } else {
+            out.push(ia);
+            i += 1;
+            j += 1;
+        }
+    }
+    out
+}
+
+/// A parsed fused-set request: adapter names with per-adapter strengths,
+/// kept sorted by name so equal sets share one canonical identity (the
+/// batcher's affinity key in fused-serving mode).
+///
+/// Spec grammar: `name[@weight]` joined by `+`; weight defaults to 1.
+/// `"b+a@0.5"` and `"a@0.5+b"` canonicalize to the same [`SetSpec::id`].
+///
+/// # Examples
+///
+/// ```
+/// use shira::coordinator::fusion_engine::SetSpec;
+///
+/// let s = SetSpec::parse("b+a@0.5").unwrap();
+/// assert_eq!(s.members[0], ("a".to_string(), 0.5));
+/// assert_eq!(s.id(), "a@0.5+b@1");
+/// assert_eq!(s.id(), SetSpec::parse("a@0.5+b@1").unwrap().id());
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct SetSpec {
+    /// (adapter name, strength), sorted by name, no duplicates.
+    pub members: Vec<(String, f32)>,
+}
+
+impl SetSpec {
+    /// Parse a spec string (see type docs for the grammar).
+    pub fn parse(spec: &str) -> Result<SetSpec, FusionError> {
+        let mut members = Vec::new();
+        for part in spec.split('+') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(FusionError::BadSpec(spec.to_string()));
+            }
+            let (name, weight) = match part.split_once('@') {
+                Some((n, w)) => {
+                    let n = n.trim();
+                    let w: f32 = w
+                        .trim()
+                        .parse()
+                        .map_err(|_| FusionError::BadSpec(spec.to_string()))?;
+                    if n.is_empty() || !w.is_finite() {
+                        return Err(FusionError::BadSpec(spec.to_string()));
+                    }
+                    (n.to_string(), w)
+                }
+                None => (part.to_string(), 1.0),
+            };
+            members.push((name, weight));
+        }
+        members.sort_by(|a, b| a.0.cmp(&b.0));
+        if let Some(w) = members.windows(2).find(|w| w[0].0 == w[1].0) {
+            return Err(FusionError::DuplicateMember(w[0].0.clone()));
+        }
+        Ok(SetSpec { members })
+    }
+
+    /// Canonical identity string: `name@weight` joined by `+`, sorted by
+    /// name.  Equal sets — regardless of input order — share one id, so
+    /// the affinity batcher keys fused batches by set identity.
+    pub fn id(&self) -> String {
+        self.members
+            .iter()
+            .map(|(n, w)| format!("{n}@{w}"))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest as pt;
+    use crate::util::rng::Rng;
+
+    fn delta(rng: &mut Rng, rows: usize, cols: usize, k: usize) -> SparseDelta {
+        let idx = rng.sample_indices(rows * cols, k);
+        let mut d = vec![0.0; k];
+        rng.fill_normal(&mut d, 0.0, 1.0);
+        SparseDelta::new(rows, cols, idx, d)
+    }
+
+    fn adapter(seed: u64, name: &str, rows: usize, cols: usize, k: usize) -> Arc<ShiraAdapter> {
+        let mut rng = Rng::new(seed);
+        Arc::new(ShiraAdapter {
+            name: name.into(),
+            strategy: "rand".into(),
+            tensors: vec![
+                ("wq".into(), delta(&mut rng, rows, cols, k)),
+                ("wk".into(), delta(&mut rng, rows, cols, k)),
+            ],
+        })
+    }
+
+    fn store(rows: usize, cols: usize, seed: u64) -> WeightStore {
+        WeightStore::init(
+            &[("wq".into(), vec![rows, cols]), ("wk".into(), vec![rows, cols])],
+            seed,
+        )
+    }
+
+    /// Engine state must equal a from-scratch serial rebuild, bit for bit.
+    fn assert_matches_rebuild(eng: &FusionEngine, base: &WeightStore, live: &WeightStore) {
+        match eng.rebuild_reference(base) {
+            Some(reference) => assert!(live.bit_equal(&reference), "live != rebuild"),
+            None => assert!(live.bit_equal(base), "empty set should be base"),
+        }
+    }
+
+    #[test]
+    fn plan_build_validates_roster() {
+        let a = adapter(1, "a", 8, 8, 6);
+        let b = adapter(2, "b", 8, 8, 6);
+        assert!(FusionPlan::build(vec![]).is_err());
+        assert!(FusionPlan::build(vec![a.clone(), a.clone()]).is_err()); // dup name
+        let mut c = (*adapter(3, "c", 8, 8, 6)).clone();
+        c.tensors.pop();
+        assert!(matches!(
+            FusionPlan::build(vec![a.clone(), Arc::new(c)]),
+            Err(FusionError::TargetSetMismatch { .. })
+        ));
+        let plan = FusionPlan::build(vec![a, b]).unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.pairs().len(), 1);
+    }
+
+    #[test]
+    fn plan_union_covers_all_members() {
+        let a = adapter(4, "a", 8, 8, 10);
+        let b = adapter(5, "b", 8, 8, 10);
+        let plan = FusionPlan::build(vec![a.clone(), b.clone()]).unwrap();
+        for pt in &plan.targets {
+            assert!(pt.union_idx.windows(2).all(|w| w[0] < w[1]));
+            for m in [&a, &b] {
+                for &i in &m.find(&pt.name).unwrap().idx {
+                    assert!(pt.union_idx.binary_search(&i).is_ok());
+                }
+            }
+            // contributor counts sum to member nnz totals
+            let total: u32 = *pt.contrib_off.last().unwrap();
+            let want: usize = [&a, &b].iter().map(|m| m.find(&pt.name).unwrap().nnz()).sum();
+            assert_eq!(total as usize, want);
+        }
+    }
+
+    #[test]
+    fn fuse_reweight_unfuse_bit_identical_to_rebuild() {
+        let base = store(16, 16, 7);
+        let roster = vec![
+            adapter(10, "a", 16, 16, 40),
+            adapter(11, "b", 16, 16, 40),
+            adapter(12, "c", 16, 16, 40),
+        ];
+        let plan = FusionPlan::build(roster).unwrap();
+        let mut eng = FusionEngine::new(plan);
+        let mut w = base.clone();
+        eng.activate(&mut w).unwrap();
+
+        eng.fuse_into(&mut w, "a", 1.0).unwrap();
+        assert_matches_rebuild(&eng, &base, &w);
+        eng.fuse_into(&mut w, "b", 0.5).unwrap();
+        assert_matches_rebuild(&eng, &base, &w);
+        eng.fuse_into(&mut w, "c", 1.5).unwrap();
+        assert_matches_rebuild(&eng, &base, &w);
+        eng.reweight_one(&mut w, "b", 2.0).unwrap();
+        assert_matches_rebuild(&eng, &base, &w);
+        eng.unfuse_one(&mut w, "a").unwrap();
+        assert_matches_rebuild(&eng, &base, &w);
+        eng.unfuse_one(&mut w, "c").unwrap();
+        assert_matches_rebuild(&eng, &base, &w);
+        eng.unfuse_one(&mut w, "b").unwrap();
+        assert!(w.bit_equal(&base)); // exact revert, the SHiRA claim
+        assert_eq!(eng.fused_members().len(), 0);
+    }
+
+    #[test]
+    fn unknown_member_and_inactive_errors() {
+        let plan = FusionPlan::build(vec![adapter(20, "a", 8, 8, 4)]).unwrap();
+        let mut eng = FusionEngine::new(plan);
+        let mut w = store(8, 8, 1);
+        assert_eq!(
+            eng.fuse_into(&mut w, "a", 1.0),
+            Err(FusionError::NotActive)
+        );
+        eng.activate(&mut w).unwrap();
+        assert!(matches!(
+            eng.fuse_into(&mut w, "nope", 1.0),
+            Err(FusionError::UnknownMember(_))
+        ));
+    }
+
+    #[test]
+    fn activate_validates_store() {
+        let plan = FusionPlan::build(vec![adapter(21, "a", 8, 8, 4)]).unwrap();
+        let mut eng = FusionEngine::new(plan.clone());
+        let mut missing = WeightStore::new();
+        assert!(matches!(
+            eng.activate(&mut missing),
+            Err(FusionError::MissingTarget(_))
+        ));
+        let mut wrong = store(4, 4, 1);
+        let mut eng2 = FusionEngine::new(plan);
+        assert!(matches!(
+            eng2.activate(&mut wrong),
+            Err(FusionError::ShapeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn apply_set_diffs_and_groups_waves() {
+        let base = store(16, 16, 3);
+        // enough support that the members collide with high probability
+        let roster = vec![
+            adapter(30, "a", 16, 16, 90),
+            adapter(31, "b", 16, 16, 90),
+            adapter(32, "c", 16, 16, 90),
+        ];
+        let plan = FusionPlan::build(roster).unwrap();
+        let colliding = plan.collides(0, 1);
+        let mut eng = FusionEngine::new(plan);
+        let mut w = base.clone();
+        eng.activate(&mut w).unwrap();
+
+        let t = eng
+            .apply_set(&mut w, &[("a".into(), 1.0), ("b".into(), 0.5)])
+            .unwrap();
+        assert_eq!((t.fused, t.unfused, t.reweighted), (2, 0, 0));
+        if colliding {
+            assert!(t.waves >= 2, "colliding members must serialize");
+        }
+        assert_matches_rebuild(&eng, &base, &w);
+
+        // b reweighted, a dropped, c added — one transition
+        let t = eng
+            .apply_set(&mut w, &[("b".into(), 2.0), ("c".into(), 1.0)])
+            .unwrap();
+        assert_eq!((t.fused, t.unfused, t.reweighted), (1, 1, 1));
+        assert_matches_rebuild(&eng, &base, &w);
+
+        // same set again: nothing touched
+        let t = eng
+            .apply_set(&mut w, &[("b".into(), 2.0), ("c".into(), 1.0)])
+            .unwrap();
+        assert_eq!(t, SetTransition { waves: 0, ..Default::default() });
+
+        eng.apply_set(&mut w, &[]).unwrap();
+        assert!(w.bit_equal(&base));
+    }
+
+    #[test]
+    fn deactivate_restores_base_exactly() {
+        let base = store(16, 16, 9);
+        let plan =
+            FusionPlan::build(vec![adapter(40, "a", 16, 16, 30), adapter(41, "b", 16, 16, 30)])
+                .unwrap();
+        let mut eng = FusionEngine::new(plan);
+        let mut w = base.clone();
+        eng.activate(&mut w).unwrap();
+        eng.fuse_into(&mut w, "a", 1.0).unwrap();
+        eng.fuse_into(&mut w, "b", -0.7).unwrap();
+        assert!(w.max_abs_diff(&base) > 0.0);
+        eng.deactivate(&mut w);
+        assert!(w.bit_equal(&base));
+        assert!(!eng.is_active());
+    }
+
+    #[test]
+    fn pooled_engine_bit_identical_to_serial_above_threshold() {
+        // Big enough to cross PAR_MIN_NNZ so the parallel path runs.
+        let dim = 96usize;
+        let k = 4000usize; // 2 targets × 4000 nnz ≫ PAR_MIN_NNZ
+        let base = store(dim, dim, 13);
+        let roster = vec![
+            adapter(50, "a", dim, dim, k),
+            adapter(51, "b", dim, dim, k),
+            adapter(52, "c", dim, dim, k),
+        ];
+        for threads in [1usize, 2, 4] {
+            let plan = FusionPlan::build(roster.clone()).unwrap();
+            let pool = Arc::new(ThreadPool::new(threads));
+            let mut eng = FusionEngine::with_pool(plan, Some(pool));
+            let mut w = base.clone();
+            eng.activate(&mut w).unwrap();
+            eng.fuse_into(&mut w, "a", 1.0).unwrap();
+            eng.fuse_into(&mut w, "b", 0.3).unwrap();
+            eng.fuse_into(&mut w, "c", -1.2).unwrap();
+            assert_matches_rebuild(&eng, &base, &w);
+            eng.reweight_one(&mut w, "b", 0.9).unwrap();
+            assert_matches_rebuild(&eng, &base, &w);
+            eng.unfuse_one(&mut w, "a").unwrap();
+            assert_matches_rebuild(&eng, &base, &w);
+            eng.apply_set(&mut w, &[]).unwrap();
+            assert!(w.bit_equal(&base), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn prop_any_op_sequence_bit_identical_to_rebuild() {
+        // The PR's acceptance property: any sequence of
+        // fuse_into/unfuse_one/reweight_one leaves the engine state
+        // bit-identical to rebuilding from scratch with fuse_shira.
+        pt::forall(
+            77,
+            30,
+            |r| {
+                let n_members = 2 + r.below(3);
+                let ops: Vec<(u8, usize, f32)> = (0..3 + r.below(8))
+                    .map(|_| {
+                        (
+                            r.below(3) as u8,
+                            r.below(n_members),
+                            -2.0 + 4.0 * r.uniform_f32(),
+                        )
+                    })
+                    .collect();
+                (r.next_u64(), n_members, ops)
+            },
+            |&(seed, n_members, ref ops)| {
+                let rows = 10usize;
+                let cols = 10usize;
+                let base = store(rows, cols, seed);
+                let roster: Vec<Arc<ShiraAdapter>> = (0..n_members)
+                    .map(|m| {
+                        // dense enough (30/100) that collisions are common
+                        adapter(seed ^ (m as u64 + 1), &format!("m{m}"), rows, cols, 30)
+                    })
+                    .collect();
+                let plan = FusionPlan::build(roster).unwrap();
+                let mut eng = FusionEngine::new(plan);
+                let mut w = base.clone();
+                eng.activate(&mut w).unwrap();
+                for &(op, m, alpha) in ops {
+                    let name = format!("m{m}");
+                    match op {
+                        0 => eng.fuse_into(&mut w, &name, alpha).unwrap(),
+                        1 => eng.unfuse_one(&mut w, &name).unwrap(),
+                        _ => eng.reweight_one(&mut w, &name, alpha).unwrap(),
+                    }
+                    let ok = match eng.rebuild_reference(&base) {
+                        Some(reference) => w.bit_equal(&reference),
+                        None => w.bit_equal(&base),
+                    };
+                    if !ok {
+                        return false;
+                    }
+                }
+                eng.apply_set(&mut w, &[]).unwrap();
+                w.bit_equal(&base)
+            },
+        );
+    }
+
+    #[test]
+    fn set_spec_parses_and_canonicalizes() {
+        let s = SetSpec::parse("b + a@0.5").unwrap();
+        assert_eq!(
+            s.members,
+            vec![("a".to_string(), 0.5), ("b".to_string(), 1.0)]
+        );
+        assert_eq!(s.id(), "a@0.5+b@1");
+        assert_eq!(SetSpec::parse("a@0.5+b").unwrap().id(), s.id());
+        assert!(SetSpec::parse("").is_err());
+        assert!(SetSpec::parse("a++b").is_err());
+        assert!(SetSpec::parse("a@x").is_err());
+        assert!(matches!(
+            SetSpec::parse("a+a@2"),
+            Err(FusionError::DuplicateMember(_))
+        ));
+    }
+}

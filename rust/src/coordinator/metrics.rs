@@ -2,6 +2,7 @@
 
 use crate::util::stats::{LatencyHist, Moments, Sample};
 
+/// Accumulating counters and distributions for one serving run.
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
     /// Per-switch weight-mutation time (scatter or fuse), microseconds.
@@ -12,18 +13,25 @@ pub struct ServeMetrics {
     pub request_latency: LatencyHist,
     /// Batch occupancy (requests per executed batch, before padding).
     pub batch_fill: Moments,
+    /// Adapter (or adapter-set) switches performed.
     pub switches: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Requests completed.
     pub requests: u64,
+    /// Decoded-adapter cache hits.
     pub cache_hits: u64,
+    /// Decoded-adapter cache misses.
     pub cache_misses: u64,
 }
 
 impl ServeMetrics {
+    /// Zeroed metrics.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one executed batch (and its switch, when one happened).
     pub fn record_batch(
         &mut self,
         n_requests: usize,
@@ -45,6 +53,7 @@ impl ServeMetrics {
         }
     }
 
+    /// Multi-line human-readable summary of the run so far.
     pub fn summary(&mut self, wall_secs: f64) -> String {
         let thr = self.requests as f64 / wall_secs.max(1e-9);
         format!(

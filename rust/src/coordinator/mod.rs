@@ -1,10 +1,12 @@
 //! L3 coordinator — the paper's systems contribution: rapid adapter
-//! switching (S13), multi-adapter fusion (S14), request routing + dynamic
-//! batching (S15), adapter caching (S16) and metrics (S17).
+//! switching (S13), multi-adapter fusion (S14) with an incremental
+//! fused-mode engine, request routing + dynamic batching (S15), adapter
+//! caching (S16) and metrics (S17).
 
 pub mod batcher;
 pub mod cache;
 pub mod fusion;
+pub mod fusion_engine;
 pub mod metrics;
 pub mod server;
 pub mod switch;

@@ -4,6 +4,12 @@
 //! This is the deployment the paper argues for (Appendix A): one resident
 //! copy of the base weights, many adapters on "flash" (the encoded-bytes
 //! store), rapid in-place switching on the request path.
+//!
+//! Under [`Policy::ShiraFusion`] requests name adapter *sets* (a
+//! [`SetSpec`] string such as `"style@0.5+task"`); set specs are
+//! canonicalized so the batcher's affinity policy extends to set identity,
+//! and transitions between sets run through the incremental
+//! [`FusionEngine`] — touching only the adapters that changed.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -13,6 +19,7 @@ use anyhow::{anyhow, Result};
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::cache::LruCache;
+use super::fusion_engine::{FusionEngine, FusionPlan, SetSpec};
 use super::metrics::ServeMetrics;
 use super::switch::{Policy, SwitchEngine};
 use crate::adapter::{io, LoraAdapter, ShiraAdapter};
@@ -27,11 +34,14 @@ use crate::util::threadpool::ThreadPool;
 /// hit can be activated on the switch engine without copying tensor data.
 #[derive(Clone, Debug)]
 pub enum AnyAdapter {
+    /// A sparse high-rank adapter.
     Shira(Arc<ShiraAdapter>),
+    /// A low-rank (LoRA) adapter.
     Lora(Arc<LoraAdapter>),
 }
 
 impl AnyAdapter {
+    /// The adapter's name (unique within a store).
     pub fn name(&self) -> &str {
         match self {
             AnyAdapter::Shira(a) => &a.name,
@@ -39,6 +49,7 @@ impl AnyAdapter {
         }
     }
 
+    /// Decoded in-memory size in bytes (the cache accounting unit).
     pub fn nbytes(&self) -> usize {
         match self {
             AnyAdapter::Shira(a) => a.nbytes(),
@@ -54,6 +65,7 @@ pub struct AdapterStore {
 }
 
 impl AdapterStore {
+    /// Store with a decoded-adapter cache budget of `cache_bytes`.
     pub fn new(cache_bytes: usize) -> Self {
         AdapterStore {
             flash: HashMap::new(),
@@ -61,14 +73,17 @@ impl AdapterStore {
         }
     }
 
+    /// Encode a SHiRA adapter onto "flash".
     pub fn add_shira(&mut self, a: &ShiraAdapter) {
         self.flash.insert(a.name.clone(), io::encode_shira(a));
     }
 
+    /// Encode a LoRA adapter onto "flash".
     pub fn add_lora(&mut self, a: &LoraAdapter) {
         self.flash.insert(a.name.clone(), io::encode_lora(a));
     }
 
+    /// Sorted names of every stored adapter.
     pub fn names(&self) -> Vec<String> {
         let mut v: Vec<String> = self.flash.keys().cloned().collect();
         v.sort();
@@ -93,6 +108,7 @@ impl AdapterStore {
         Ok(self.cache.put(name, decoded, bytes_cost))
     }
 
+    /// (cache hits, cache misses) so far.
     pub fn cache_stats(&self) -> (u64, u64) {
         (self.cache.hits, self.cache.misses)
     }
@@ -101,34 +117,56 @@ impl AdapterStore {
 /// End-of-run report.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// The policy the trace was served under.
     pub policy: Policy,
+    /// Wall-clock seconds for the whole trace.
     pub wall_secs: f64,
+    /// Requests completed.
     pub requests: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Adapter (or adapter-set) switches performed.
     pub switches: u64,
+    /// Requests per wall-clock second.
     pub throughput_rps: f64,
+    /// Mean weight-mutation time per switch, microseconds.
     pub mean_switch_us: f64,
+    /// Median switch time, microseconds.
     pub p50_switch_us: f64,
+    /// 99th-percentile switch time, microseconds.
     pub p99_switch_us: f64,
+    /// Mean executor time per batch, microseconds.
     pub mean_exec_us: f64,
+    /// Median executor time, microseconds.
     pub p50_exec_us: f64,
+    /// 99th-percentile executor time, microseconds.
     pub p99_exec_us: f64,
+    /// 99th-percentile end-to-end request latency, microseconds.
     pub p99_latency_us: f64,
+    /// Decoded-adapter cache hit rate over the run.
     pub cache_hit_rate: f64,
+    /// Human-readable multi-line summary (see `ServeMetrics::summary`).
     pub summary: String,
 }
 
+/// The serving coordinator: owns the switch engine (and, in fused mode,
+/// the incremental fusion engine), the adapter store and the batcher, and
+/// drives request traces to completion against a [`Runtime`].
 pub struct Server<'rt> {
     rt: &'rt Runtime,
+    /// The switch engine holding the resident base weights.
     pub engine: SwitchEngine,
+    /// Flash-encoded adapters + decoded cache.
     pub store: AdapterStore,
     batcher: DynamicBatcher,
     policy: Policy,
     model: String,
     alpha: f32,
+    fusion: Option<FusionEngine>,
 }
 
 impl<'rt> Server<'rt> {
+    /// Server with a host-sized switch-work pool.
     pub fn new(
         rt: &'rt Runtime,
         base: WeightStore,
@@ -163,11 +201,61 @@ impl<'rt> Server<'rt> {
             policy,
             model: model.to_string(),
             alpha: 1.0,
+            fusion: None,
         })
     }
 
+    /// Strength at which SHiRA adapters are applied (single-adapter mode).
     pub fn set_alpha(&mut self, alpha: f32) {
         self.alpha = alpha;
+    }
+
+    /// Build the incremental fused-mode engine over the named adapters
+    /// (the fusion roster) and snapshot the base weights.  All members
+    /// must be SHiRA adapters present in the store.  Any active
+    /// single-adapter switch is reverted first so the snapshot sees base
+    /// values.  [`Self::run_trace`] calls this lazily under
+    /// [`Policy::ShiraFusion`] with every adapter the trace names.
+    pub fn enable_fusion(&mut self, names: &[String]) -> Result<()> {
+        let mut roster = Vec::with_capacity(names.len());
+        for n in names {
+            if n.contains('+') || n.contains('@') {
+                // '+' and '@' are SetSpec metacharacters: such a name
+                // could never be addressed by a fused-set request.
+                return Err(anyhow!(
+                    "fusion roster member {n:?} contains a set-spec \
+                     metacharacter ('+' or '@')"
+                ));
+            }
+            match &*self.store.fetch(n)? {
+                AnyAdapter::Shira(a) => roster.push(Arc::clone(a)),
+                AnyAdapter::Lora(_) => {
+                    return Err(anyhow!("fusion roster member {n} is not a SHiRA adapter"))
+                }
+            }
+        }
+        // Unwind any previous fused state BEFORE snapshotting: a live
+        // engine's writes are invisible to `revert`, and dropping it
+        // without deactivating would bake its deltas into the new base.
+        self.disable_fusion();
+        self.engine.revert();
+        let plan = FusionPlan::build(roster)?;
+        let mut fusion = FusionEngine::with_pool(plan, self.engine.pool().cloned());
+        fusion.activate(&mut self.engine.weights)?;
+        self.fusion = Some(fusion);
+        Ok(())
+    }
+
+    /// Tear down fused-mode serving, restoring base weights exactly.
+    pub fn disable_fusion(&mut self) {
+        if let Some(mut f) = self.fusion.take() {
+            f.deactivate(&mut self.engine.weights);
+        }
+    }
+
+    /// The fused-mode engine, when enabled.
+    pub fn fusion(&self) -> Option<&FusionEngine> {
+        self.fusion.as_ref()
     }
 
     /// Pack a LoRA adapter into the flat theta the unfused artifact expects.
@@ -183,6 +271,11 @@ impl<'rt> Server<'rt> {
     }
 
     /// Run a full trace to completion; returns the report.
+    ///
+    /// Under [`Policy::ShiraFusion`] each request's `adapter` field is a
+    /// [`SetSpec`] string; it is canonicalized before batching so two
+    /// spellings of the same set batch together, and the batcher's
+    /// affinity keeps consecutive batches on the currently-fused set.
     pub fn run_trace(&mut self, trace: &[Request]) -> Result<ServeReport> {
         let meta = self.rt.manifest.model(&self.model).map_err(|e| anyhow!("{e}"))?.clone();
         let (b, t) = (meta.dim("batch"), meta.dim("seq_len"));
@@ -195,44 +288,116 @@ impl<'rt> Server<'rt> {
         };
         let theta_total = meta.theta_len.get("lora").copied().unwrap_or(0);
 
-        let mut metrics = ServeMetrics::new();
-        let wall0 = Instant::now();
-        for r in trace {
-            self.batcher.push(r.clone());
-        }
-        while let Some((adapter_name, batch)) =
-            self.batcher.next_batch(self.engine.active_name())
-        {
-            // ---- switch stage -------------------------------------------
-            let needs_switch = self.engine.active_name() != Some(adapter_name.as_str());
-            let mut switch_us = 0.0;
-            let mut lora_theta: Option<Vec<f32>> = None;
-            if needs_switch || self.policy == Policy::LoraUnfused {
-                let adapter = self.store.fetch(&adapter_name)?;
-                let t0 = Instant::now();
-                match (&*adapter, self.policy) {
-                    (AnyAdapter::Shira(a), Policy::ShiraScatter) => {
-                        // Arc-shared activation: no tensor copy on the
-                        // request path, snapshots land in the engine arena.
-                        self.engine.switch_to_shira_shared(Arc::clone(a), self.alpha);
-                    }
-                    (AnyAdapter::Lora(a), Policy::LoraFuse) => {
-                        self.engine.switch_to_lora_shared(Arc::clone(a));
-                    }
-                    (AnyAdapter::Lora(a), Policy::LoraUnfused) => {
-                        // weights stay at base; branches ride the fwd pass
-                        lora_theta =
-                            Some(Self::pack_lora_theta(a, &meta.lora, theta_total));
-                    }
-                    (a, p) => {
-                        return Err(anyhow!(
-                            "adapter {} family does not match policy {}",
-                            a.name(),
-                            p.name()
-                        ))
+        if self.policy == Policy::ShiraFusion {
+            // One parse per request: canonicalize the set id (so "b+a@1"
+            // batches with "a+b") and collect every adapter the trace
+            // names from the same parsed specs.
+            let mut names: Vec<String> = Vec::new();
+            let mut ids = Vec::with_capacity(trace.len());
+            for r in trace {
+                let spec = SetSpec::parse(&r.adapter)?;
+                for (n, _) in &spec.members {
+                    if !names.iter().any(|x| x == n) {
+                        names.push(n.clone());
                     }
                 }
-                switch_us = t0.elapsed().as_secs_f64() * 1e6;
+                ids.push(spec.id());
+            }
+            // (Re)build the engine when the trace names adapters outside
+            // the current roster — keeping already-enabled members so
+            // earlier sets stay addressable.  An empty trace enables
+            // nothing and returns a zeroed report like the other policies.
+            let needs_roster = match &self.fusion {
+                None => !names.is_empty(),
+                Some(f) => names
+                    .iter()
+                    .any(|n| f.plan().member_index(n).is_none()),
+            };
+            if needs_roster {
+                if let Some(f) = &self.fusion {
+                    for a in f.plan().roster() {
+                        if !names.iter().any(|x| x == &a.name) {
+                            names.push(a.name.clone());
+                        }
+                    }
+                }
+                names.sort();
+                self.enable_fusion(&names)?;
+            }
+            for (r, id) in trace.iter().zip(ids) {
+                let mut req = r.clone();
+                req.adapter = id;
+                self.batcher.push(req);
+            }
+        } else {
+            for r in trace {
+                self.batcher.push(r.clone());
+            }
+        }
+        let mut current_set: Option<String> = None;
+
+        let mut metrics = ServeMetrics::new();
+        let wall0 = Instant::now();
+        loop {
+            let active: Option<String> = if self.policy == Policy::ShiraFusion {
+                current_set.clone()
+            } else {
+                self.engine.active_name().map(|s| s.to_string())
+            };
+            let (adapter_name, batch) = match self.batcher.next_batch(active.as_deref()) {
+                Some(next) => next,
+                None => break,
+            };
+            // ---- switch stage -------------------------------------------
+            let needs_switch;
+            let mut switch_us = 0.0;
+            let mut lora_theta: Option<Vec<f32>> = None;
+            if self.policy == Policy::ShiraFusion {
+                needs_switch = current_set.as_deref() != Some(adapter_name.as_str());
+                if needs_switch {
+                    let spec = SetSpec::parse(&adapter_name)?;
+                    let t0 = Instant::now();
+                    let fusion = self
+                        .fusion
+                        .as_mut()
+                        .expect("fusion engine enabled above");
+                    // Incremental transition: only adapters that changed
+                    // between the sets are touched.
+                    fusion.apply_set(&mut self.engine.weights, &spec.members)?;
+                    switch_us = t0.elapsed().as_secs_f64() * 1e6;
+                    current_set = Some(adapter_name.clone());
+                }
+            } else {
+                needs_switch = self.engine.active_name() != Some(adapter_name.as_str());
+                if needs_switch || self.policy == Policy::LoraUnfused {
+                    let adapter = self.store.fetch(&adapter_name)?;
+                    let t0 = Instant::now();
+                    match (&*adapter, self.policy) {
+                        (AnyAdapter::Shira(a), Policy::ShiraScatter) => {
+                            // Arc-shared activation: no tensor copy on the
+                            // request path, snapshots land in the engine
+                            // arena.
+                            self.engine.switch_to_shira_shared(Arc::clone(a), self.alpha);
+                        }
+                        (AnyAdapter::Lora(a), Policy::LoraFuse) => {
+                            self.engine.switch_to_lora_shared(Arc::clone(a));
+                        }
+                        (AnyAdapter::Lora(a), Policy::LoraUnfused) => {
+                            // weights stay at base; branches ride the fwd
+                            // pass
+                            lora_theta =
+                                Some(Self::pack_lora_theta(a, &meta.lora, theta_total));
+                        }
+                        (a, p) => {
+                            return Err(anyhow!(
+                                "adapter {} family does not match policy {}",
+                                a.name(),
+                                p.name()
+                            ))
+                        }
+                    }
+                    switch_us = t0.elapsed().as_secs_f64() * 1e6;
+                }
             }
 
             // ---- execute stage ------------------------------------------
@@ -389,7 +554,7 @@ mod tests {
         let names: Vec<String> = (0..3).map(|i| format!("ad{i}")).collect();
         for (i, name) in names.iter().enumerate() {
             match policy {
-                Policy::ShiraScatter => {
+                Policy::ShiraScatter | Policy::ShiraFusion => {
                     server.store.add_shira(&make_shira(&rt, name, i as u64))
                 }
                 _ => server.store.add_lora(&make_lora(&rt, name, i as u64)),
@@ -420,6 +585,51 @@ mod tests {
     fn lora_unfused_serving_completes() {
         let Some(rep) = serve(Policy::LoraUnfused, 16) else { return };
         assert_eq!(rep.requests, 16);
+    }
+
+    #[test]
+    fn single_member_sets_serve_under_fusion_policy() {
+        // Plain adapter names are valid one-member set specs, so the
+        // fused-mode server handles single-adapter traces too.
+        let Some(rep) = serve(Policy::ShiraFusion, 16) else { return };
+        assert_eq!(rep.requests, 16);
+        assert!(rep.switches >= 1);
+    }
+
+    #[test]
+    fn fused_set_serving_completes_and_restores_base() {
+        let Some(rt) = runtime() else { return };
+        let meta = rt.manifest.model("llama").unwrap();
+        let base = WeightStore::init(&meta.params, 7);
+        let mut server =
+            Server::new(&rt, base.clone(), Policy::ShiraFusion, "llama", 1 << 20).unwrap();
+        for (i, name) in ["ad0", "ad1", "ad2"].iter().enumerate() {
+            server.store.add_shira(&make_shira(&rt, name, i as u64));
+        }
+        // Two spellings of the same set share one canonical identity, so
+        // they batch together and cost no extra transition.
+        let sets = vec![
+            "ad0+ad1".to_string(),
+            "ad1+ad0".to_string(),
+            "ad1@0.5+ad2".to_string(),
+            "ad0+ad1+ad2@2".to_string(),
+        ];
+        let trace = generate_trace(&sets, 16, TracePattern::Bursty { burst: 4 }, 1e4, 5);
+        let rep = server.run_trace(&trace).unwrap();
+        assert_eq!(rep.requests, 16);
+        assert!(rep.switches >= 1);
+        let fusion = server.fusion().expect("fusion enabled lazily");
+        assert_eq!(fusion.plan().len(), 3);
+        assert!(fusion.updates() > 0);
+        // Re-enabling over a different roster must unwind the live fused
+        // state first, or the new base snapshot would bake it in.
+        server
+            .enable_fusion(&["ad0".to_string(), "ad1".to_string()])
+            .unwrap();
+        assert_eq!(server.fusion().unwrap().plan().len(), 2);
+        server.disable_fusion();
+        server.engine.revert();
+        assert!(server.engine.weights.bit_equal(&base));
     }
 
     #[test]

@@ -1,11 +1,15 @@
 //! The switch engine — the paper's rapid-switching contribution (§3.2,
 //! Appendix A/B) implemented over the resident weight store.
 //!
-//! Three serving policies are implemented and benchmarked:
+//! Four serving policies are implemented and benchmarked:
 //!
 //! * `ShiraScatter` — snapshot the k base values on the adapter's support,
 //!   scatter the adapter in, infer, scatter the snapshot back.  O(k) work,
 //!   exact revert.
+//! * `ShiraFusion` — fused-mode serving: requests name an adapter *set*
+//!   plus weights, and the incremental
+//!   [`FusionEngine`](super::fusion_engine::FusionEngine) transitions
+//!   between sets by touching only the changed adapters' entries.
 //! * `LoraFuse` — the HF load→fuse→infer→unfuse→unload pipeline: dense
 //!   `W += s·AB` / `W -= s·AB` over every target tensor.  O(n·m·r) work,
 //!   revert accumulates float drift.
@@ -29,44 +33,45 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::adapter::sparse::{scatter_restore, scatter_snapshot_apply, MAX_SHARDS};
+use crate::adapter::sparse::{
+    scatter_restore, scatter_snapshot_apply, shards_for, PAR_MIN_NNZ,
+};
 use crate::adapter::{LoraAdapter, ShiraAdapter};
 use crate::model::weights::WeightStore;
 use crate::util::threadpool::ThreadPool;
 
-/// Below this many touched entries per switch, shard dispatch overhead
-/// exceeds the scatter itself and the engine stays serial.
-const PAR_MIN_NNZ: usize = 4096;
-
-/// Target entries per shard (≈ a few cache-resident strides of work).
-const NNZ_PER_SHARD: usize = 2048;
-
-fn shards_for(nnz: usize, threads: usize) -> usize {
-    (nnz / NNZ_PER_SHARD)
-        .max(1)
-        .min(threads * 2)
-        .min(MAX_SHARDS)
-}
-
+/// Serving policy: how the server applies an adapter (or adapter set)
+/// before executing a batch.  See the module docs for the four variants.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
+    /// SHiRA snapshot + sparse scatter, exact revert (the paper's method).
     ShiraScatter,
+    /// Fused-mode SHiRA serving: requests name adapter *sets* (parsed by
+    /// [`SetSpec`](super::fusion_engine::SetSpec)) and the incremental
+    /// fusion engine moves between sets in O(changed adapters' nnz).
+    ShiraFusion,
+    /// Dense LoRA fuse/unfuse on the resident weights (HF pipeline).
     LoraFuse,
+    /// LoRA branches on the forward path; weights stay at base.
     LoraUnfused,
 }
 
 impl Policy {
+    /// Stable CLI / report name of the policy.
     pub fn name(&self) -> &'static str {
         match self {
             Policy::ShiraScatter => "shira-scatter",
+            Policy::ShiraFusion => "shira-fusion",
             Policy::LoraFuse => "lora-fuse",
             Policy::LoraUnfused => "lora-unfused",
         }
     }
 
+    /// Parse a policy name (accepts the short aliases used by the CLI).
     pub fn parse(s: &str) -> Option<Policy> {
         Some(match s {
             "shira-scatter" | "shira" => Policy::ShiraScatter,
+            "shira-fusion" | "fusion" | "fused" => Policy::ShiraFusion,
             "lora-fuse" | "lora" => Policy::LoraFuse,
             "lora-unfused" | "unfused" => Policy::LoraUnfused,
             _ => return None,
@@ -77,13 +82,18 @@ impl Policy {
 /// Per-stage timings of one switch, mirroring paper Table 5.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SwitchTiming {
+    /// Deserialization time (flash → decoded adapter), microseconds.
     pub load_us: f64,
-    pub fuse_us: f64,   // scatter-apply for SHiRA
-    pub unfuse_us: f64, // snapshot-restore for SHiRA
+    /// Weight-mutation time: scatter-apply for SHiRA, dense fuse for LoRA.
+    pub fuse_us: f64,
+    /// Revert time: snapshot-restore for SHiRA, dense unfuse for LoRA.
+    pub unfuse_us: f64,
+    /// Drop/unload time, microseconds.
     pub unload_us: f64,
 }
 
 impl SwitchTiming {
+    /// Sum of all four stages, microseconds.
     pub fn total_us(&self) -> f64 {
         self.load_us + self.fuse_us + self.unfuse_us + self.unload_us
     }
@@ -137,8 +147,10 @@ impl ShardTask {
 
 /// Owns the resident base weights and mutates them per adapter.
 pub struct SwitchEngine {
+    /// The resident weight store (one copy of the base model).
     pub weights: WeightStore,
     active: Active,
+    /// Number of adapter activations performed.
     pub switches: u64,
     pool: Option<Arc<ThreadPool>>,
     /// Reusable per-target snapshot buffers: allocation-free steady state.
@@ -148,6 +160,7 @@ pub struct SwitchEngine {
 }
 
 impl SwitchEngine {
+    /// Engine without a thread pool (all scatters serial).
     pub fn new(weights: WeightStore) -> Self {
         Self::with_pool(weights, None)
     }
@@ -165,14 +178,17 @@ impl SwitchEngine {
         }
     }
 
+    /// Attach (or detach) the thread pool used for parallel dispatch.
     pub fn set_pool(&mut self, pool: Option<Arc<ThreadPool>>) {
         self.pool = pool;
     }
 
+    /// The attached thread pool, if any.
     pub fn pool(&self) -> Option<&Arc<ThreadPool>> {
         self.pool.as_ref()
     }
 
+    /// Name of the adapter currently applied to the weights.
     pub fn active_name(&self) -> Option<&str> {
         match &self.active {
             Active::None => None,
@@ -286,6 +302,7 @@ impl SwitchEngine {
         self.switch_to_lora_shared(Arc::new(a.clone()))
     }
 
+    /// Zero-copy LoRA fuse: the engine keeps the `Arc` (no tensor clone).
     pub fn switch_to_lora_shared(&mut self, a: Arc<LoraAdapter>) -> SwitchTiming {
         let mut t = self.revert_timing();
         let t0 = Instant::now();
@@ -378,6 +395,8 @@ impl SwitchEngine {
         t
     }
 
+    /// LoRA version of [`Self::hf_pipeline_shira`]: load → dense fuse →
+    /// unfuse → unload, with per-stage timers.
     pub fn hf_pipeline_lora(&mut self, bytes: &[u8]) -> SwitchTiming {
         let t0 = Instant::now();
         let adapter = crate::adapter::io::decode_lora(bytes).expect("valid adapter");
@@ -622,6 +641,8 @@ mod tests {
     #[test]
     fn policy_parse() {
         assert_eq!(Policy::parse("shira"), Some(Policy::ShiraScatter));
+        assert_eq!(Policy::parse("fusion"), Some(Policy::ShiraFusion));
+        assert_eq!(Policy::parse("shira-fusion"), Some(Policy::ShiraFusion));
         assert_eq!(Policy::parse("lora-fuse"), Some(Policy::LoraFuse));
         assert_eq!(Policy::parse("unfused"), Some(Policy::LoraUnfused));
         assert_eq!(Policy::parse("x"), None);

@@ -11,13 +11,26 @@
 //!   the [`adapter`] algebra (masks, sparse deltas, file format), the
 //!   [`train`] orchestrator, the synthetic [`data`] suites, and the serving
 //!   [`coordinator`] (router → batcher → switch engine → executor).
+//!
+//! See `rust/README.md` for the architecture map and DESIGN.md for the
+//! per-subsystem invariants.
+
+// Every public item in the serving core (adapter, coordinator, model, and
+// the bench harness) is documented; modules still carrying
+// `allow(missing_docs)` below are tracked for a follow-up docs pass.
+#![warn(missing_docs)]
 
 pub mod adapter;
+#[allow(missing_docs)]
 pub mod config;
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod data;
 pub mod model;
+#[allow(missing_docs)]
 pub mod repro;
+#[allow(missing_docs)]
 pub mod runtime;
+#[allow(missing_docs)]
 pub mod train;
 pub mod util;

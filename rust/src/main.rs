@@ -266,7 +266,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let names: Vec<String> = (0..n_adapters).map(|i| format!("adapter{i}")).collect();
     for name in &names {
         match policy {
-            Policy::ShiraScatter => {
+            Policy::ShiraScatter | Policy::ShiraFusion => {
                 let tensors = meta
                     .shira
                     .iter()
@@ -316,11 +316,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
     }
-    let trace = generate_trace(&names, cfg.trace_len, pattern, 1e4, cfg.seed);
+    // Fused-mode serving batches by adapter *set*: synthesize rotating
+    // two-member set specs ("adapter0+adapter1", ...) over the roster.
+    let trace_names: Vec<String> = if policy == Policy::ShiraFusion && names.len() > 1 {
+        (0..names.len())
+            .map(|i| format!("{}+{}", names[i], names[(i + 1) % names.len()]))
+            .collect()
+    } else {
+        names.clone()
+    };
+    let trace = generate_trace(&trace_names, cfg.trace_len, pattern, 1e4, cfg.seed);
     println!(
-        "serving {} requests over {} adapters (pattern switches: {}) policy={}",
+        "serving {} requests over {} adapter sets (pattern switches: {}) policy={}",
         trace.len(),
-        names.len(),
+        trace_names.len(),
         switch_count(&trace),
         policy.name()
     );
@@ -343,7 +352,7 @@ fn cmd_fuse(args: &Args) -> Result<()> {
         .map(|p| io::load_shira(std::path::Path::new(p)).map_err(|e| anyhow!("{p}: {e}")))
         .collect::<Result<_>>()?;
     let refs: Vec<&shira::adapter::ShiraAdapter> = adapters.iter().collect();
-    let fused = shira::coordinator::fusion::fuse_shira(&refs, "fused");
+    let fused = shira::coordinator::fusion::fuse_shira(&refs, "fused")?;
     let report = shira::coordinator::fusion::analyze_shira(&refs);
     println!(
         "fused {} adapters: nnz={} overlap={:.4} ataDensity={:.4} collisions={}",

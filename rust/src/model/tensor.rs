@@ -14,14 +14,19 @@
 
 use crate::util::threadpool::{SendPtr, ThreadPool};
 
+/// A dense row-major f32 matrix (1-D tensors are stored as 1×n).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor2 {
+    /// Number of rows.
     pub rows: usize,
+    /// Number of columns.
     pub cols: usize,
+    /// Row-major contiguous storage, `rows * cols` long.
     pub data: Vec<f32>,
 }
 
 impl Tensor2 {
+    /// All-zeros tensor of the given shape.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Tensor2 {
             rows,
@@ -30,11 +35,13 @@ impl Tensor2 {
         }
     }
 
+    /// Wrap an existing row-major buffer (length must match the shape).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         Tensor2 { rows, cols, data }
     }
 
+    /// Build element-wise from `f(row, col)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
@@ -45,19 +52,23 @@ impl Tensor2 {
         Tensor2 { rows, cols, data }
     }
 
+    /// Number of elements (rows × cols).
     pub fn numel(&self) -> usize {
         self.rows * self.cols
     }
 
+    /// Storage size in bytes (f32 per element).
     pub fn nbytes(&self) -> usize {
         self.numel() * 4
     }
 
+    /// Element at (i, j).
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.cols + j]
     }
 
+    /// Overwrite element (i, j).
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f32) {
         self.data[i * self.cols + j] = v;
@@ -171,6 +182,7 @@ impl Tensor2 {
         c
     }
 
+    /// Largest absolute element-wise difference to `other`.
     pub fn max_abs_diff(&self, other: &Tensor2) -> f32 {
         assert_eq!(self.numel(), other.numel());
         self.data
@@ -180,6 +192,7 @@ impl Tensor2 {
             .fold(0.0, f32::max)
     }
 
+    /// Frobenius norm (√Σx²).
     pub fn frob_norm(&self) -> f32 {
         self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
     }

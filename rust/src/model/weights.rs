@@ -17,6 +17,7 @@ pub struct WeightStore {
 }
 
 impl WeightStore {
+    /// Empty store.
     pub fn new() -> Self {
         WeightStore {
             names: Vec::new(),
@@ -47,6 +48,7 @@ impl WeightStore {
         store
     }
 
+    /// Append a named tensor (names must be unique).
     pub fn insert(&mut self, name: &str, t: Tensor2) {
         assert!(
             !self.index.contains_key(name),
@@ -57,6 +59,8 @@ impl WeightStore {
         self.tensors.push(t);
     }
 
+    /// The tensor named `name` (panics on unknown names — weight names
+    /// come from the manifest, so a miss is a programming error).
     pub fn get(&self, name: &str) -> &Tensor2 {
         &self.tensors[*self
             .index
@@ -64,6 +68,8 @@ impl WeightStore {
             .unwrap_or_else(|| panic!("unknown weight {name}"))]
     }
 
+    /// Mutable access to the tensor named `name` (same contract as
+    /// [`Self::get`]).
     pub fn get_mut(&mut self, name: &str) -> &mut Tensor2 {
         let i = *self
             .index
@@ -72,26 +78,32 @@ impl WeightStore {
         &mut self.tensors[i]
     }
 
+    /// Tensor names in insertion (= manifest) order.
     pub fn names(&self) -> &[String] {
         &self.names
     }
 
+    /// Number of tensors.
     pub fn len(&self) -> usize {
         self.tensors.len()
     }
 
+    /// True when the store holds no tensors.
     pub fn is_empty(&self) -> bool {
         self.tensors.is_empty()
     }
 
+    /// Iterate (name, tensor) pairs in insertion order.
     pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor2)> {
         self.names.iter().zip(self.tensors.iter())
     }
 
+    /// Total elements across all tensors.
     pub fn total_params(&self) -> usize {
         self.tensors.iter().map(|t| t.numel()).sum()
     }
 
+    /// Total storage bytes (f32 per element).
     pub fn nbytes(&self) -> usize {
         self.total_params() * 4
     }
@@ -106,6 +118,7 @@ impl WeightStore {
                 .all(|(a, b)| a.data == b.data)
     }
 
+    /// Largest absolute element-wise difference to `other`.
     pub fn max_abs_diff(&self, other: &WeightStore) -> f32 {
         self.tensors
             .iter()

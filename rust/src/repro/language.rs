@@ -401,7 +401,7 @@ pub fn table4(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
             adapters.push(adapter);
         }
         let refs: Vec<&crate::adapter::ShiraAdapter> = adapters.iter().collect();
-        let fused_adapter = fusion::fuse_shira(&refs, "fused3");
+        let fused_adapter = fusion::fuse_shira(&refs, "fused3")?;
         let mut engine = SwitchEngine::new(base.clone());
         engine.switch_to_shira(&fused_adapter, 1.0);
         let mut multi = Vec::new();

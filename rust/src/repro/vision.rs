@@ -208,7 +208,7 @@ pub fn fig4(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
         e2.switch_to_shira(a_pt, 1.0);
         let s_pt = sps_at(rt, &e2.weights, &world, Style::Paintings, 1.0, cfg)?;
         // naive multi-adapter fusion at half strength each
-        let fused = fusion::fuse_shira(&[a_bf, a_pt], "both");
+        let fused = fusion::fuse_shira(&[a_bf, a_pt], "both")?;
         let mut e3 = SwitchEngine::new(base.clone());
         e3.switch_to_shira(&fused, 0.5);
         let s_multi =
@@ -309,7 +309,7 @@ pub fn fig7(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
         e2.switch_to_shira(a_pt, 1.0);
         let s2 = eval_style(rt, &e2.weights, &world, Style::Paintings, 1.0,
                             cfg.style_eval_batches, true, cfg.seed)?;
-        let fused = fusion::fuse_shira(&[a_bf, a_pt], "both");
+        let fused = fusion::fuse_shira(&[a_bf, a_pt], "both")?;
         let mut e3 = SwitchEngine::new(base.clone());
         e3.switch_to_shira(&fused, 0.5);
         let s3 = eval_style_multi(rt, &e3.weights, &world, cfg.style_eval_batches, cfg.seed)?;

@@ -19,31 +19,47 @@ use std::time::{Duration, Instant};
 use super::json::{self, Json};
 use super::stats::Sample;
 
+/// One benchmark's measured statistics.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Full name, `group/bench`.
     pub name: String,
+    /// Mean time per operation, nanoseconds.
     pub mean_ns: f64,
+    /// Standard deviation across samples, nanoseconds.
     pub std_ns: f64,
+    /// Median (p50) time per operation, nanoseconds.
     pub median_ns: f64,
+    /// 99th-percentile time per operation, nanoseconds.
     pub p99_ns: f64,
+    /// Timed samples taken.
     pub samples: usize,
+    /// Iterations batched into each sample.
     pub iters_per_sample: u64,
+    /// Samples farther than 5 MADs from the median.
     pub outliers: usize,
 }
 
 impl BenchResult {
+    /// Mean in microseconds.
     pub fn mean_us(&self) -> f64 {
         self.mean_ns / 1e3
     }
 
+    /// Mean in milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.mean_ns / 1e6
     }
 }
 
+/// Criterion-like benchmark driver (module docs) collecting
+/// [`BenchResult`]s.
 pub struct Bencher {
+    /// Warmup duration before calibration.
     pub warmup: Duration,
+    /// Number of timed samples per bench.
     pub measure_samples: usize,
+    /// Target wall time per sample (sets the per-sample iteration count).
     pub target_sample_time: Duration,
     results: Vec<BenchResult>,
     group: String,
@@ -56,6 +72,8 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Bencher with the default (or, under `SHIRA_BENCH_FAST=1`, the
+    /// shrunk CI smoke) protocol.
     pub fn new() -> Self {
         // SHIRA_BENCH_FAST=1 shrinks the protocol for CI smoke runs.
         let fast = std::env::var("SHIRA_BENCH_FAST").is_ok();
@@ -76,6 +94,8 @@ impl Bencher {
         }
     }
 
+    /// Start a named group; subsequent benches are reported as
+    /// `group/name`.
     pub fn group(&mut self, name: &str) {
         self.group = name.to_string();
         println!("\n== {name} ==");
@@ -161,6 +181,7 @@ impl Bencher {
         }
     }
 
+    /// All results measured so far, in run order.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
@@ -173,13 +194,33 @@ impl Bencher {
 /// One stage's record in a baseline document.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BaselineEntry {
+    /// Stage name (matches the bench's `group/name`).
     pub name: String,
+    /// Mean nanoseconds per operation.
     pub mean_ns: f64,
+    /// Median nanoseconds per operation (the value `--check` gates on).
     pub p50_ns: f64,
+    /// 99th-percentile nanoseconds per operation.
     pub p99_ns: f64,
 }
 
 /// Serialize results as a `BENCH_*.json` baseline document.
+///
+/// # Examples
+///
+/// ```
+/// use shira::util::benchlib::{baseline_json, BaselineEntry};
+///
+/// let entries = vec![BaselineEntry {
+///     name: "fig5/dim512/shira_scatter".into(),
+///     mean_ns: 1200.0,
+///     p50_ns: 1100.0,
+///     p99_ns: 2000.0,
+/// }];
+/// let doc = baseline_json("bench_switch", "example", &entries);
+/// assert!(doc.contains("\"bench\": \"bench_switch\""));
+/// assert!(doc.contains("shira_scatter"));
+/// ```
 pub fn baseline_json(bench: &str, note: &str, entries: &[BaselineEntry]) -> String {
     let arr = entries
         .iter()
@@ -202,6 +243,7 @@ pub fn baseline_json(bench: &str, note: &str, entries: &[BaselineEntry]) -> Stri
         + "\n"
 }
 
+/// Project [`BenchResult`]s onto the baseline-entry schema.
 pub fn results_to_entries(results: &[BenchResult]) -> Vec<BaselineEntry> {
     results
         .iter()
@@ -268,6 +310,7 @@ pub fn load_baseline(path: &Path) -> Result<Vec<BaselineEntry>, String> {
 pub struct RegressionReport {
     /// Human-readable "name: current vs baseline (+x%)" lines.
     pub regressions: Vec<String>,
+    /// Stages present in both the run and the baseline.
     pub compared: usize,
     /// Stages present in the run but absent from the baseline (or vice
     /// versa) — reported, not failed, so adding a bench stage is not a
@@ -276,6 +319,7 @@ pub struct RegressionReport {
 }
 
 impl RegressionReport {
+    /// True when no stage regressed beyond tolerance.
     pub fn passed(&self) -> bool {
         self.regressions.is_empty()
     }
@@ -376,6 +420,7 @@ pub fn finish_bench(stem: &str, entries: &[BaselineEntry]) -> bool {
     }
 }
 
+/// Format a nanosecond count with a human-friendly unit.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")

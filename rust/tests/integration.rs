@@ -365,7 +365,7 @@ fn fusion_of_trained_adapters_is_conservative() {
         adapters.push(trainer.export_shira(&out, style.name(), MaskStrategy::Rand));
     }
     let refs: Vec<&shira::adapter::ShiraAdapter> = adapters.iter().collect();
-    let fused = fusion::fuse_shira(&refs, "both");
+    let fused = fusion::fuse_shira(&refs, "both").expect("adapters share target sets");
     let report = fusion::analyze_shira(&refs);
     // different random masks at ~2%: overlap must be tiny
     assert!(report.mean_overlap < 0.2, "{report:?}");
