@@ -52,8 +52,7 @@ fn main() {
                             .shira
                             .iter()
                             .map(|seg| {
-                                let numel = seg.shape.0 * seg.shape.1;
-                                let idx = rng.sample_indices(numel, seg.k);
+                                let idx = rng.sample_indices(seg.numel(), seg.k);
                                 let mut d = vec![0.0f32; seg.k];
                                 rng.fill_normal(&mut d, 0.0, 0.01);
                                 (

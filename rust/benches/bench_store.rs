@@ -1,0 +1,237 @@
+//! Adapter lifecycle bench: format v1/v2 encode/decode cost and size, and
+//! the three store fetch paths (cold miss / cache hit / prefetch hit) in
+//! front of a switch cycle.
+//!
+//! Correctness gates run before any timing:
+//!   * v1 and v2 decode bit-identically to the source adapter;
+//!   * v2 files are smaller than v1 (and v2-f16 smaller still) at the
+//!     paper's 1–2% sparsity.
+//!
+//! The fetch-path table is the tentpole claim in numbers: a prefetch-hit
+//! fetch+switch excludes decode cost (≈ the cache-hit line), while a cold
+//! miss pays decode on the request path.
+//!
+//! Run: `cargo bench --bench bench_store`.  Flags:
+//!   --check           compare against the committed rust/BENCH_store.json
+//!   --tolerance 0.5   fractional slowdown allowed by --check (default 0.5)
+//!   --save-baseline   rewrite rust/BENCH_store.json from this run
+//! `SHIRA_BENCH_FAST=1` shrinks the protocol and dims for CI smoke runs.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use shira::adapter::io::{self, Format};
+use shira::adapter::sparse::SparseDelta;
+use shira::adapter::ShiraAdapter;
+use shira::coordinator::store::{AdapterStore, AnyAdapter, StoreConfig};
+use shira::coordinator::switch::SwitchEngine;
+use shira::model::tensor::Tensor2;
+use shira::model::weights::WeightStore;
+use shira::util::benchlib::{
+    black_box, finish_bench, results_to_entries, BaselineEntry, Bencher,
+};
+use shira::util::rng::Rng;
+use shira::util::stats::Sample;
+use shira::util::threadpool::ThreadPool;
+
+fn random_shira(rng: &mut Rng, name: &str, dim: usize, frac: f64) -> ShiraAdapter {
+    let k = ((dim * dim) as f64 * frac) as usize;
+    let idx = rng.sample_indices(dim * dim, k);
+    let mut delta = vec![0.0f32; k];
+    rng.fill_normal(&mut delta, 0.0, 0.1);
+    ShiraAdapter {
+        name: name.into(),
+        strategy: "rand".into(),
+        tensors: vec![("w".into(), SparseDelta::new(dim, dim, idx, delta))],
+    }
+}
+
+/// Collect `reps` samples from `f`, which does its own per-rep setup and
+/// returns only the nanoseconds of the part it timed (used for the fetch
+/// paths, where prefetch must complete *outside* the timed window).
+fn timed_entry(name: &str, reps: usize, mut f: impl FnMut() -> f64) -> BaselineEntry {
+    let mut sample = Sample::new();
+    for _ in 0..reps {
+        sample.push(f());
+    }
+    let entry = BaselineEntry {
+        name: name.to_string(),
+        mean_ns: sample.mean(),
+        p50_ns: sample.percentile(50.0),
+        p99_ns: sample.percentile(99.0),
+    };
+    println!(
+        "  {:48} {:>12.1} us/op (p50 {:>10.1} us, {} reps)",
+        entry.name,
+        entry.mean_ns / 1e3,
+        entry.p50_ns / 1e3,
+        reps
+    );
+    entry
+}
+
+fn main() {
+    let fast = std::env::var("SHIRA_BENCH_FAST").is_ok();
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(0x570E);
+    let frac = 0.02;
+
+    // -- correctness + size gates (before any timing) ---------------------
+    let gate = random_shira(&mut rng, "gate", 256, frac);
+    let v1 = io::encode_shira(&gate);
+    let v2 = io::encode_shira_as(&gate, Format::V2);
+    let v2f16 = io::encode_shira_as(&gate, Format::V2F16);
+    assert_eq!(
+        io::decode_shira(&v1).unwrap(),
+        gate,
+        "v1 decode not bit-identical"
+    );
+    assert_eq!(
+        io::decode_shira(&v2).unwrap(),
+        gate,
+        "v2 decode not bit-identical"
+    );
+    assert!(v2.len() < v1.len(), "v2 ({}) not smaller than v1 ({})", v2.len(), v1.len());
+    assert!(v2f16.len() < v2.len());
+    println!("format gate: v1/v2 decode bit-identical; sizes verified\n");
+    println!("== on-flash size (dim 256, {:.0}% sparse) ==", frac * 100.0);
+    println!("| format | bytes | vs v1 |");
+    println!("|---|---|---|");
+    for (name, len) in [("v1", v1.len()), ("v2", v2.len()), ("v2-f16", v2f16.len())] {
+        println!("| {name} | {len} | {:.2}x |", v1.len() as f64 / len as f64);
+    }
+
+    // -- format encode/decode cost ---------------------------------------
+    let dims: &[usize] = if fast { &[512] } else { &[512, 2048] };
+    for &dim in dims {
+        b.group(&format!("format/dim{dim}"));
+        let a = random_shira(&mut rng, "fmt", dim, frac);
+        let enc_v1 = io::encode_shira(&a);
+        let enc_v2 = io::encode_shira_as(&a, Format::V2);
+        b.bench("encode_v1", || {
+            black_box(io::encode_shira_as(&a, Format::V1).len());
+        });
+        b.bench("encode_v2", || {
+            black_box(io::encode_shira_as(&a, Format::V2).len());
+        });
+        b.bench("decode_v1", || {
+            black_box(io::decode_shira(&enc_v1).unwrap().param_count());
+        });
+        b.bench("decode_v2", || {
+            black_box(io::decode_shira(&enc_v2).unwrap().param_count());
+        });
+    }
+
+    // -- fetch paths in front of a switch cycle ---------------------------
+    // Two adapters + a one-adapter cache budget: every alternating fetch
+    // is a cold miss unless staged by prefetch.
+    let dim = if fast { 512 } else { 2048 };
+    let reps = if fast { 30 } else { 200 };
+    let a0 = random_shira(&mut rng, "a0", dim, frac);
+    let a1 = random_shira(&mut rng, "a1", dim, frac);
+    let one_slot = a0.nbytes() + a1.nbytes() / 2; // holds one, not both
+    let pool = Arc::new(ThreadPool::host_sized());
+    let mut base = WeightStore::new();
+    let mut w = Tensor2::zeros(dim, dim);
+    rng.fill_normal(&mut w.data, 0.0, 1.0);
+    base.insert("w", w);
+
+    println!("\n== fetch paths (dim {dim}, one-adapter cache) ==");
+    let mut extra: Vec<BaselineEntry> = Vec::new();
+    {
+        // cache hit: generous budget, adapter resident after warmup.
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 64 << 20,
+                format: Format::V2,
+                prefetch_depth: 0,
+            },
+            Some(Arc::clone(&pool)),
+        );
+        store.add_shira(&a0);
+        store.fetch("a0").unwrap();
+        let mut eng = SwitchEngine::with_pool(base.clone(), Some(Arc::clone(&pool)));
+        extra.push(timed_entry("store/fetch_cache_hit_switch", reps, || {
+            let t0 = Instant::now();
+            let h = store.fetch("a0").unwrap();
+            if let AnyAdapter::Shira(a) = &h.adapter {
+                eng.switch_to_shira_planned(Arc::clone(a), Some(Arc::clone(&h.plans)), 1.0);
+            }
+            t0.elapsed().as_nanos() as f64
+        }));
+        eng.revert();
+    }
+    {
+        // cold miss: alternating pair, one-slot budget → decode every time.
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: one_slot,
+                format: Format::V2,
+                prefetch_depth: 0,
+            },
+            Some(Arc::clone(&pool)),
+        );
+        store.add_shira(&a0);
+        store.add_shira(&a1);
+        let mut eng = SwitchEngine::with_pool(base.clone(), Some(Arc::clone(&pool)));
+        let mut flip = 0usize;
+        extra.push(timed_entry("store/fetch_cold_miss_switch", reps, || {
+            flip += 1;
+            let name = if flip % 2 == 0 { "a0" } else { "a1" };
+            let t0 = Instant::now();
+            let h = store.fetch(name).unwrap();
+            if let AnyAdapter::Shira(a) = &h.adapter {
+                eng.switch_to_shira_planned(Arc::clone(a), Some(Arc::clone(&h.plans)), 1.0);
+            }
+            t0.elapsed().as_nanos() as f64
+        }));
+        let stats = store.stats();
+        assert!(stats.evictions > 0, "cold-miss setup failed to evict");
+        eng.revert();
+    }
+    {
+        // prefetch hit: same evicting pair, but the next adapter is decoded
+        // in the background (and joined) before the timed fetch — the
+        // switch path pays no decode.
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: one_slot,
+                format: Format::V2,
+                prefetch_depth: 1,
+            },
+            Some(Arc::clone(&pool)),
+        );
+        store.add_shira(&a0);
+        store.add_shira(&a1);
+        let mut eng = SwitchEngine::with_pool(base.clone(), Some(Arc::clone(&pool)));
+        let mut flip = 0usize;
+        let pool_ref = Arc::clone(&pool);
+        extra.push(timed_entry("store/fetch_prefetch_hit_switch", reps, || {
+            flip += 1;
+            let next = if flip % 2 == 0 { "a0" } else { "a1" }.to_string();
+            store.prefetch(std::slice::from_ref(&next));
+            pool_ref.join(); // decode completes off the timed path
+            let t0 = Instant::now();
+            let h = store.fetch(&next).unwrap();
+            if let AnyAdapter::Shira(a) = &h.adapter {
+                eng.switch_to_shira_planned(Arc::clone(a), Some(Arc::clone(&h.plans)), 1.0);
+            }
+            t0.elapsed().as_nanos() as f64
+        }));
+        let stats = store.stats();
+        assert!(stats.prefetch_hits > 0, "prefetch never hit");
+        eng.revert();
+    }
+    println!(
+        "interpretation: prefetch_hit ≈ cache_hit (decode excluded); \
+         cold_miss adds the decode cost"
+    );
+
+    b.write_results("bench_store");
+    let mut entries = results_to_entries(b.results());
+    entries.extend(extra);
+    let ok = finish_bench("store", &entries);
+    if !ok {
+        std::process::exit(1);
+    }
+}

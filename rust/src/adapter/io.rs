@@ -1,7 +1,10 @@
 //! Versioned binary adapter file format (paper Fig. 3a: "sparse weights and
 //! their indices").
 //!
-//! Layout (little-endian):
+//! Two on-disk versions are supported; [`Format`] selects what `encode_*_as`
+//! writes, and the decoders accept either.
+//!
+//! **v1** layout (little-endian):
 //!
 //! ```text
 //! magic   u32   0x53485241 ("SHRA") | 0x4C4F5241 ("LORA")
@@ -15,6 +18,28 @@
 //!   LORA: r u32, a f32[rows*r], b f32[r*cols]
 //! crc     u64   FNV-1a over everything before it
 //! ```
+//!
+//! **v2** layout — the flash-footprint format (ROADMAP: many adapters on
+//! flash).  Indices are stored as **delta-encoded varints**: the sorted
+//! row-major flat index sequence (row·cols + col) is turned into gaps
+//! (`idx[0], idx[1]−idx[0], …`), each LEB128-encoded.  At the paper's 1–2%
+//! sparsity gaps are ~50–100, so most take one byte instead of four.
+//! Values are f32 by default (**bit-exact round-trip**) or, opt-in, f16
+//! (`Format::V2F16`, lossy).  Every tensor carries its own FNV-1a CRC so
+//! corruption is localized, and the v1 whole-file trailing CRC is kept:
+//!
+//! ```text
+//! magic   u32, version u32 = 2, flags u8 (bit0: f16 values)
+//! meta    u32 len + utf8 JSON
+//! count   u32
+//! per tensor:
+//!   name  u32 len + utf8
+//!   rows  u32, cols u32
+//!   SHRA: k u32, gap_bytes u32, varint gaps, delta f32[k]|f16[k]
+//!   LORA: r u32, a vals, b vals (f32 or f16 per flags)
+//!   tcrc  u64   FNV-1a over this tensor's bytes (name..values)
+//! crc     u64   FNV-1a over everything before it
+//! ```
 
 use std::io::{self, Read, Write};
 use std::path::Path;
@@ -26,7 +51,70 @@ use crate::util::json::{self, Json};
 
 const MAGIC_SHIRA: u32 = 0x5348_5241;
 const MAGIC_LORA: u32 = 0x4C4F_5241;
-const VERSION: u32 = 1;
+const VERSION_V1: u32 = 1;
+const VERSION_V2: u32 = 2;
+const FLAG_F16: u8 = 1;
+
+/// On-disk format version selector for the `encode_*_as` entry points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// Version 1: u32 indices + f32 values (the original layout).
+    V1,
+    /// Version 2: varint delta-coded indices + f32 values.  Bit-exact
+    /// round-trip, ~30–40% smaller than v1 at 1–2% sparsity.
+    V2,
+    /// Version 2 with f16 values: smallest (~2–3× vs v1) but **lossy** —
+    /// decode returns the nearest-even f16 of each value.  Not valid when
+    /// serving must be bit-identical to the trained adapter.
+    V2F16,
+}
+
+impl Format {
+    /// Parse a CLI spelling: `v1`, `v2` or `v2-f16`.
+    pub fn parse(s: &str) -> Option<Format> {
+        match s {
+            "v1" => Some(Format::V1),
+            "v2" => Some(Format::V2),
+            "v2-f16" => Some(Format::V2F16),
+            _ => None,
+        }
+    }
+
+    /// Stable CLI / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Format::V1 => "v1",
+            Format::V2 => "v2",
+            Format::V2F16 => "v2-f16",
+        }
+    }
+
+    fn f16(self) -> bool {
+        matches!(self, Format::V2F16)
+    }
+}
+
+/// Adapter family identified by a file's magic number.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdapterFamily {
+    /// Sparse high-rank adapter ("SHRA" magic).
+    Shira,
+    /// Low-rank adapter ("LORA" magic).
+    Lora,
+}
+
+/// Identify an encoded adapter's family from its magic number without
+/// decoding (or checksumming) the file.
+pub fn sniff_family(bytes: &[u8]) -> Option<AdapterFamily> {
+    if bytes.len() < 4 {
+        return None;
+    }
+    match u32::from_le_bytes(bytes[..4].try_into().unwrap()) {
+        MAGIC_SHIRA => Some(AdapterFamily::Shira),
+        MAGIC_LORA => Some(AdapterFamily::Lora),
+        _ => None,
+    }
+}
 
 /// Errors from adapter (de)serialization.
 #[derive(Debug)]
@@ -54,7 +142,107 @@ impl From<io::Error> for IoError {
     }
 }
 
+// -- half-float conversion ----------------------------------------------
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even (no `half` crate in
+/// the offline vendor set).
+pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // inf / nan (nan keeps a set mantissa bit)
+        return sign | 0x7C00 | if man != 0 { 0x200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow → signed zero
+        }
+        // subnormal half: shift the 24-bit significand into 10 bits
+        let m = man | 0x80_0000;
+        let shift = (14 - e) as u32;
+        let half = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut h = half;
+        if rem > halfway || (rem == halfway && (h & 1) == 1) {
+            h += 1; // may carry into the exponent — numerically correct
+        }
+        return sign | h as u16;
+    }
+    let mut h = ((e as u32) << 10) | (man >> 13);
+    let round = man & 0x1FFF;
+    if round > 0x1000 || (round == 0x1000 && (h & 1) == 1) {
+        h += 1; // may carry into the exponent / infinity — correct
+    }
+    sign | h as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact).
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h >> 15) as u32) << 31;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: renormalize
+            let mut e = 113u32; // 127 - 15 + 1
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3FF) << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
 // -- byte-level helpers -------------------------------------------------
+
+fn push_varint(buf: &mut Vec<u8>, mut v: u32) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            break;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+/// Decode one LEB128 u32 at `b[i..]`; returns (value, bytes consumed).
+fn varint_at(b: &[u8], i: usize) -> Result<(u32, usize), IoError> {
+    let mut v = 0u32;
+    let mut shift = 0u32;
+    let mut j = i;
+    loop {
+        let Some(&byte) = b.get(j) else {
+            return Err(IoError::Format("truncated varint".into()));
+        };
+        j += 1;
+        if shift == 28 && (byte & 0xF0) != 0 {
+            return Err(IoError::Format("varint overflows u32".into()));
+        }
+        v |= ((byte & 0x7F) as u32) << shift;
+        if byte & 0x80 == 0 {
+            return Ok((v, j - i));
+        }
+        shift += 7;
+    }
+}
 
 struct Writer {
     buf: Vec<u8>,
@@ -63,6 +251,10 @@ struct Writer {
 impl Writer {
     fn new() -> Self {
         Writer { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
     }
 
     fn u32(&mut self, v: u32) {
@@ -84,10 +276,35 @@ impl Writer {
         }
     }
 
+    fn f16s(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.buf.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        }
+    }
+
+    fn vals(&mut self, xs: &[f32], f16: bool) {
+        if f16 {
+            self.f16s(xs)
+        } else {
+            self.f32s(xs)
+        }
+    }
+
     fn u32s(&mut self, xs: &[u32]) {
         for &x in xs {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
+    }
+
+    /// Current length — the start mark for a per-tensor CRC region.
+    fn mark(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Append the FNV-1a of everything written since `start`.
+    fn tensor_crc(&mut self, start: usize) {
+        let crc = fnv64(&self.buf[start..]);
+        self.buf.extend_from_slice(&crc.to_le_bytes());
     }
 
     fn finish(mut self) -> Vec<u8> {
@@ -124,8 +341,16 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
+    fn u8(&mut self) -> Result<u8, IoError> {
+        Ok(self.take(1)?[0])
+    }
+
     fn u32(&mut self) -> Result<u32, IoError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, IoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     fn str(&mut self) -> Result<String, IoError> {
@@ -145,12 +370,45 @@ impl<'a> Reader<'a> {
             .collect())
     }
 
+    fn f16s(&mut self, n: usize) -> Result<Vec<f32>, IoError> {
+        let raw = self.take(n * 2)?;
+        Ok(raw
+            .chunks_exact(2)
+            .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    fn vals(&mut self, n: usize, f16: bool) -> Result<Vec<f32>, IoError> {
+        if f16 {
+            self.f16s(n)
+        } else {
+            self.f32s(n)
+        }
+    }
+
     fn u32s(&mut self, n: usize) -> Result<Vec<u32>, IoError> {
         let raw = self.take(n * 4)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
             .collect())
+    }
+
+    /// Current offset — the start mark for a per-tensor CRC region.
+    fn pos(&self) -> usize {
+        self.i
+    }
+
+    /// Read the per-tensor CRC and compare against bytes since `start`.
+    fn check_tensor_crc(&mut self, start: usize, tname: &str) -> Result<(), IoError> {
+        let got = fnv64(&self.b[start..self.i]);
+        let want = self.u64()?;
+        if got != want {
+            return Err(IoError::Format(format!(
+                "{tname}: tensor checksum mismatch"
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -163,18 +421,19 @@ fn fnv64(b: &[u8]) -> u64 {
     h
 }
 
+fn checked_numel(rows: usize, cols: usize, tname: &str) -> Result<usize, IoError> {
+    rows.checked_mul(cols)
+        .ok_or_else(|| IoError::Format(format!("{tname}: rows*cols overflows")))
+}
+
 // -- SHiRA ----------------------------------------------------------------
 
-/// Serialize a SHiRA adapter to the versioned binary format (module docs).
+/// Serialize a SHiRA adapter in the v1 layout (module docs).
 pub fn encode_shira(a: &ShiraAdapter) -> Vec<u8> {
     let mut w = Writer::new();
     w.u32(MAGIC_SHIRA);
-    w.u32(VERSION);
-    let meta = Json::obj(vec![
-        ("name", Json::str(&a.name)),
-        ("strategy", Json::str(&a.strategy)),
-    ]);
-    w.str(&meta.to_string_compact());
+    w.u32(VERSION_V1);
+    w.str(&shira_meta_json(a));
     w.u32(a.tensors.len() as u32);
     for (name, d) in &a.tensors {
         w.str(name);
@@ -187,37 +446,90 @@ pub fn encode_shira(a: &ShiraAdapter) -> Vec<u8> {
     w.finish()
 }
 
-/// Decode a SHiRA adapter, verifying checksum, magic, version and the
-/// sorted-unique in-range index invariant.
+/// Serialize a SHiRA adapter in the chosen [`Format`].
+pub fn encode_shira_as(a: &ShiraAdapter, fmt: Format) -> Vec<u8> {
+    match fmt {
+        Format::V1 => encode_shira(a),
+        Format::V2 | Format::V2F16 => encode_shira_v2(a, fmt.f16()),
+    }
+}
+
+fn shira_meta_json(a: &ShiraAdapter) -> String {
+    Json::obj(vec![
+        ("name", Json::str(&a.name)),
+        ("strategy", Json::str(&a.strategy)),
+    ])
+    .to_string_compact()
+}
+
+fn encode_shira_v2(a: &ShiraAdapter, f16: bool) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(MAGIC_SHIRA);
+    w.u32(VERSION_V2);
+    w.u8(if f16 { FLAG_F16 } else { 0 });
+    w.str(&shira_meta_json(a));
+    w.u32(a.tensors.len() as u32);
+    let mut gaps = Vec::new();
+    for (name, d) in &a.tensors {
+        let start = w.mark();
+        w.str(name);
+        w.u32(d.rows as u32);
+        w.u32(d.cols as u32);
+        w.u32(d.nnz() as u32);
+        gaps.clear();
+        let mut prev = 0u32;
+        for (j, &i) in d.idx.iter().enumerate() {
+            push_varint(&mut gaps, if j == 0 { i } else { i - prev });
+            prev = i;
+        }
+        w.u32(gaps.len() as u32);
+        w.bytes(&gaps);
+        w.vals(&d.delta, f16);
+        w.tensor_crc(start);
+    }
+    w.finish()
+}
+
+/// Decode a SHiRA adapter (either version), verifying checksums, magic,
+/// version and the sorted-unique in-range index invariant.
 pub fn decode_shira(bytes: &[u8]) -> Result<ShiraAdapter, IoError> {
     let mut r = Reader::new(bytes)?;
     if r.u32()? != MAGIC_SHIRA {
         return Err(IoError::Format("not a SHiRA adapter file".into()));
     }
-    let ver = r.u32()?;
-    if ver != VERSION {
-        return Err(IoError::Format(format!("unsupported version {ver}")));
+    match r.u32()? {
+        VERSION_V1 => decode_shira_v1(&mut r),
+        VERSION_V2 => decode_shira_v2(&mut r),
+        ver => Err(IoError::Format(format!("unsupported version {ver}"))),
     }
+}
+
+fn parse_shira_meta(r: &mut Reader) -> Result<(String, String), IoError> {
     let meta = json::parse(&r.str()?)
         .map_err(|e| IoError::Format(format!("bad meta json: {e}")))?;
-    let name = meta
-        .get("name")
-        .and_then(|j| j.as_str())
-        .unwrap_or("unnamed")
-        .to_string();
-    let strategy = meta
-        .get("strategy")
-        .and_then(|j| j.as_str())
-        .unwrap_or("unknown")
-        .to_string();
+    Ok((
+        meta.get("name")
+            .and_then(|j| j.as_str())
+            .unwrap_or("unnamed")
+            .to_string(),
+        meta.get("strategy")
+            .and_then(|j| j.as_str())
+            .unwrap_or("unknown")
+            .to_string(),
+    ))
+}
+
+fn decode_shira_v1(r: &mut Reader) -> Result<ShiraAdapter, IoError> {
+    let (name, strategy) = parse_shira_meta(r)?;
     let count = r.u32()? as usize;
-    let mut tensors = Vec::with_capacity(count);
+    let mut tensors = Vec::new();
     for _ in 0..count {
         let tname = r.str()?;
         let rows = r.u32()? as usize;
         let cols = r.u32()? as usize;
         let k = r.u32()? as usize;
-        if k > rows * cols {
+        let numel = checked_numel(rows, cols, &tname)?;
+        if k > numel {
             return Err(IoError::Format(format!("{tname}: k > numel")));
         }
         let idx = r.u32s(k)?;
@@ -225,7 +537,7 @@ pub fn decode_shira(bytes: &[u8]) -> Result<ShiraAdapter, IoError> {
         if !idx.windows(2).all(|w| w[0] < w[1]) {
             return Err(IoError::Format(format!("{tname}: indices not sorted")));
         }
-        if idx.iter().any(|&i| (i as usize) >= rows * cols) {
+        if idx.iter().any(|&i| (i as usize) >= numel) {
             return Err(IoError::Format(format!("{tname}: index out of range")));
         }
         tensors.push((tname, SparseDelta::new(rows, cols, idx, delta)));
@@ -237,14 +549,75 @@ pub fn decode_shira(bytes: &[u8]) -> Result<ShiraAdapter, IoError> {
     })
 }
 
-/// Write an encoded SHiRA adapter to `path`.
+fn decode_shira_v2(r: &mut Reader) -> Result<ShiraAdapter, IoError> {
+    let flags = r.u8()?;
+    if flags & !FLAG_F16 != 0 {
+        return Err(IoError::Format(format!("unknown flags {flags:#04x}")));
+    }
+    let f16 = flags & FLAG_F16 != 0;
+    let (name, strategy) = parse_shira_meta(r)?;
+    let count = r.u32()? as usize;
+    let mut tensors = Vec::new();
+    for _ in 0..count {
+        let start = r.pos();
+        let tname = r.str()?;
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        let k = r.u32()? as usize;
+        let numel = checked_numel(rows, cols, &tname)?;
+        if k > numel {
+            return Err(IoError::Format(format!("{tname}: k > numel")));
+        }
+        let gap_bytes = r.u32()? as usize;
+        if k > gap_bytes {
+            // every gap takes at least one byte
+            return Err(IoError::Format(format!("{tname}: gap bytes < k")));
+        }
+        let graw = r.take(gap_bytes)?;
+        let mut idx = Vec::with_capacity(k);
+        let mut cursor = 0usize;
+        let mut prev = 0u64;
+        for j in 0..k {
+            let (gap, used) = varint_at(graw, cursor)?;
+            cursor += used;
+            let next = if j == 0 {
+                gap as u64
+            } else {
+                if gap == 0 {
+                    return Err(IoError::Format(format!(
+                        "{tname}: indices not sorted"
+                    )));
+                }
+                prev + gap as u64
+            };
+            if next >= numel as u64 {
+                return Err(IoError::Format(format!("{tname}: index out of range")));
+            }
+            idx.push(next as u32);
+            prev = next;
+        }
+        if cursor != graw.len() {
+            return Err(IoError::Format(format!("{tname}: trailing gap bytes")));
+        }
+        let delta = r.vals(k, f16)?;
+        r.check_tensor_crc(start, &tname)?;
+        tensors.push((tname, SparseDelta::new(rows, cols, idx, delta)));
+    }
+    Ok(ShiraAdapter {
+        name,
+        strategy,
+        tensors,
+    })
+}
+
+/// Write an encoded SHiRA adapter to `path` (v1 layout).
 pub fn save_shira(path: &Path, a: &ShiraAdapter) -> Result<(), IoError> {
     let mut f = std::fs::File::create(path)?;
     f.write_all(&encode_shira(a))?;
     Ok(())
 }
 
-/// Read and decode a SHiRA adapter from `path`.
+/// Read and decode a SHiRA adapter from `path` (either version).
 pub fn load_shira(path: &Path) -> Result<ShiraAdapter, IoError> {
     let mut bytes = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut bytes)?;
@@ -253,16 +626,12 @@ pub fn load_shira(path: &Path) -> Result<ShiraAdapter, IoError> {
 
 // -- LoRA -------------------------------------------------------------------
 
-/// Serialize a LoRA adapter to the versioned binary format (module docs).
+/// Serialize a LoRA adapter in the v1 layout (module docs).
 pub fn encode_lora(a: &LoraAdapter) -> Vec<u8> {
     let mut w = Writer::new();
     w.u32(MAGIC_LORA);
-    w.u32(VERSION);
-    let meta = Json::obj(vec![
-        ("name", Json::str(&a.name)),
-        ("scale", Json::num(a.scale as f64)),
-    ]);
-    w.str(&meta.to_string_compact());
+    w.u32(VERSION_V1);
+    w.str(&lora_meta_json(a));
     w.u32(a.tensors.len() as u32);
     for t in &a.tensors {
         w.str(&t.target);
@@ -275,16 +644,64 @@ pub fn encode_lora(a: &LoraAdapter) -> Vec<u8> {
     w.finish()
 }
 
-/// Decode a LoRA adapter, verifying checksum, magic and version.
+/// Serialize a LoRA adapter in the chosen [`Format`].  (v2 keeps u32
+/// framing — LoRA factors are dense, so only the f16 option shrinks it.)
+pub fn encode_lora_as(a: &LoraAdapter, fmt: Format) -> Vec<u8> {
+    match fmt {
+        Format::V1 => encode_lora(a),
+        Format::V2 | Format::V2F16 => encode_lora_v2(a, fmt.f16()),
+    }
+}
+
+fn lora_meta_json(a: &LoraAdapter) -> String {
+    Json::obj(vec![
+        ("name", Json::str(&a.name)),
+        ("scale", Json::num(a.scale as f64)),
+    ])
+    .to_string_compact()
+}
+
+fn encode_lora_v2(a: &LoraAdapter, f16: bool) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u32(MAGIC_LORA);
+    w.u32(VERSION_V2);
+    w.u8(if f16 { FLAG_F16 } else { 0 });
+    w.str(&lora_meta_json(a));
+    w.u32(a.tensors.len() as u32);
+    for t in &a.tensors {
+        let start = w.mark();
+        w.str(&t.target);
+        w.u32(t.a.rows as u32);
+        w.u32(t.b.cols as u32);
+        w.u32(t.a.cols as u32);
+        w.vals(&t.a.data, f16);
+        w.vals(&t.b.data, f16);
+        w.tensor_crc(start);
+    }
+    w.finish()
+}
+
+/// Decode a LoRA adapter (either version), verifying checksums, magic and
+/// version.
 pub fn decode_lora(bytes: &[u8]) -> Result<LoraAdapter, IoError> {
     let mut r = Reader::new(bytes)?;
     if r.u32()? != MAGIC_LORA {
         return Err(IoError::Format("not a LoRA adapter file".into()));
     }
-    let ver = r.u32()?;
-    if ver != VERSION {
-        return Err(IoError::Format(format!("unsupported version {ver}")));
+    match r.u32()? {
+        VERSION_V1 => decode_lora_body(&mut r, VERSION_V1, false),
+        VERSION_V2 => {
+            let flags = r.u8()?;
+            if flags & !FLAG_F16 != 0 {
+                return Err(IoError::Format(format!("unknown flags {flags:#04x}")));
+            }
+            decode_lora_body(&mut r, VERSION_V2, flags & FLAG_F16 != 0)
+        }
+        ver => Err(IoError::Format(format!("unsupported version {ver}"))),
     }
+}
+
+fn decode_lora_body(r: &mut Reader, ver: u32, f16: bool) -> Result<LoraAdapter, IoError> {
     let meta = json::parse(&r.str()?)
         .map_err(|e| IoError::Format(format!("bad meta json: {e}")))?;
     let name = meta
@@ -297,14 +714,20 @@ pub fn decode_lora(bytes: &[u8]) -> Result<LoraAdapter, IoError> {
         .and_then(|j| j.as_f64())
         .unwrap_or(1.0) as f32;
     let count = r.u32()? as usize;
-    let mut tensors = Vec::with_capacity(count);
+    let mut tensors = Vec::new();
     for _ in 0..count {
+        let start = r.pos();
         let target = r.str()?;
         let rows = r.u32()? as usize;
         let cols = r.u32()? as usize;
         let rank = r.u32()? as usize;
-        let a = Tensor2::from_vec(rows, rank, r.f32s(rows * rank)?);
-        let b = Tensor2::from_vec(rank, cols, r.f32s(rank * cols)?);
+        let a_len = checked_numel(rows, rank, &target)?;
+        let b_len = checked_numel(rank, cols, &target)?;
+        let a = Tensor2::from_vec(rows, rank, r.vals(a_len, f16)?);
+        let b = Tensor2::from_vec(rank, cols, r.vals(b_len, f16)?);
+        if ver == VERSION_V2 {
+            r.check_tensor_crc(start, &target)?;
+        }
         tensors.push(LoraTensor { target, a, b });
     }
     Ok(LoraAdapter {
@@ -314,14 +737,14 @@ pub fn decode_lora(bytes: &[u8]) -> Result<LoraAdapter, IoError> {
     })
 }
 
-/// Write an encoded LoRA adapter to `path`.
+/// Write an encoded LoRA adapter to `path` (v1 layout).
 pub fn save_lora(path: &Path, a: &LoraAdapter) -> Result<(), IoError> {
     let mut f = std::fs::File::create(path)?;
     f.write_all(&encode_lora(a))?;
     Ok(())
 }
 
-/// Read and decode a LoRA adapter from `path`.
+/// Read and decode a LoRA adapter from `path` (either version).
 pub fn load_lora(path: &Path) -> Result<LoraAdapter, IoError> {
     let mut bytes = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut bytes)?;
@@ -331,6 +754,7 @@ pub fn load_lora(path: &Path) -> Result<LoraAdapter, IoError> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest as pt;
     use crate::util::rng::Rng;
 
     fn sample_shira() -> ShiraAdapter {
@@ -362,6 +786,49 @@ mod tests {
         }
     }
 
+    fn random_shira(rng: &mut Rng, tensors: usize) -> ShiraAdapter {
+        let tensors = (0..tensors)
+            .map(|t| {
+                let rows = 2 + rng.below(40);
+                let cols = 2 + rng.below(40);
+                let k = 1 + rng.below(rows * cols);
+                let idx = rng.sample_indices(rows * cols, k);
+                let mut delta = vec![0.0; k];
+                rng.fill_normal(&mut delta, 0.0, 1.0);
+                (format!("t{t}"), SparseDelta::new(rows, cols, idx, delta))
+            })
+            .collect();
+        ShiraAdapter {
+            name: "rand".into(),
+            strategy: "rand".into(),
+            tensors,
+        }
+    }
+
+    fn random_lora(rng: &mut Rng, tensors: usize) -> LoraAdapter {
+        let tensors = (0..tensors)
+            .map(|t| {
+                let rows = 2 + rng.below(24);
+                let cols = 2 + rng.below(24);
+                let rank = 1 + rng.below(6);
+                let mut a = Tensor2::zeros(rows, rank);
+                let mut b = Tensor2::zeros(rank, cols);
+                rng.fill_normal(&mut a.data, 0.0, 1.0);
+                rng.fill_normal(&mut b.data, 0.0, 1.0);
+                LoraTensor {
+                    target: format!("t{t}"),
+                    a,
+                    b,
+                }
+            })
+            .collect();
+        LoraAdapter {
+            name: "rand".into(),
+            scale: 1.5,
+            tensors,
+        }
+    }
+
     #[test]
     fn shira_roundtrip() {
         let a = sample_shira();
@@ -374,6 +841,120 @@ mod tests {
         let a = sample_lora();
         let b = decode_lora(&encode_lora(&a)).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn v2_roundtrip_bit_exact() {
+        let a = sample_shira();
+        let enc = encode_shira_as(&a, Format::V2);
+        let dec = decode_shira(&enc).unwrap();
+        assert_eq!(a, dec);
+        for (orig, back) in a.tensors[0].1.delta.iter().zip(&dec.tensors[0].1.delta) {
+            assert_eq!(orig.to_bits(), back.to_bits());
+        }
+        let l = sample_lora();
+        assert_eq!(l, decode_lora(&encode_lora_as(&l, Format::V2)).unwrap());
+    }
+
+    #[test]
+    fn v2_smaller_than_v1_at_paper_sparsity() {
+        // 2%-sparse 128×128: gaps ~50 → 1-byte varints.
+        let mut rng = Rng::new(7);
+        let n = 128;
+        let k = (n * n) / 50;
+        let idx = rng.sample_indices(n * n, k);
+        let mut delta = vec![0.0; k];
+        rng.fill_normal(&mut delta, 0.0, 0.5);
+        let a = ShiraAdapter {
+            name: "sz".into(),
+            strategy: "rand".into(),
+            tensors: vec![("w".into(), SparseDelta::new(n, n, idx, delta))],
+        };
+        let v1 = encode_shira(&a).len();
+        let v2 = encode_shira_as(&a, Format::V2).len();
+        let v2f16 = encode_shira_as(&a, Format::V2F16).len();
+        assert!(v2 < v1, "v2={v2} not smaller than v1={v1}");
+        assert!(v2f16 < v2, "v2f16={v2f16} not smaller than v2={v2}");
+        // ~5.x bytes/entry vs 8 for v1; f16 drops to ~3.x
+        assert!((v2 as f64) < 0.8 * v1 as f64, "v2={v2} v1={v1}");
+        assert!((v2f16 as f64) < 0.55 * v1 as f64, "v2f16={v2f16} v1={v1}");
+    }
+
+    #[test]
+    fn v2_f16_roundtrip_is_close_and_idx_exact() {
+        let a = sample_shira();
+        let dec = decode_shira(&encode_shira_as(&a, Format::V2F16)).unwrap();
+        assert_eq!(a.tensors[0].1.idx, dec.tensors[0].1.idx);
+        for (orig, back) in a.tensors[0].1.delta.iter().zip(&dec.tensors[0].1.delta) {
+            assert!((orig - back).abs() <= orig.abs() * 1e-3 + 1e-6, "{orig} {back}");
+        }
+        let l = sample_lora();
+        let ldec = decode_lora(&encode_lora_as(&l, Format::V2F16)).unwrap();
+        assert_eq!(l.tensors[0].target, ldec.tensors[0].target);
+        assert_eq!(l.scale, ldec.scale);
+    }
+
+    #[test]
+    fn f16_conversion_exhaustive_roundtrip() {
+        // Every non-NaN half value survives f16 → f32 → f16 exactly; NaNs
+        // stay NaN.
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            if x.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(x)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(x), h, "h={h:#06x} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn format_parse_names() {
+        for f in [Format::V1, Format::V2, Format::V2F16] {
+            assert_eq!(Format::parse(f.name()), Some(f));
+        }
+        assert_eq!(Format::parse("v3"), None);
+    }
+
+    #[test]
+    fn sniff_identifies_family() {
+        assert_eq!(
+            sniff_family(&encode_shira(&sample_shira())),
+            Some(AdapterFamily::Shira)
+        );
+        assert_eq!(
+            sniff_family(&encode_lora_as(&sample_lora(), Format::V2)),
+            Some(AdapterFamily::Lora)
+        );
+        assert_eq!(sniff_family(&[1, 2, 3]), None);
+        assert_eq!(sniff_family(&[0; 16]), None);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_adapters_all_formats() {
+        // Satellite: random SHiRA/LoRA adapters survive v1 and v2
+        // bit-exactly; v2-f16 preserves structure with close values.
+        pt::forall(
+            21,
+            25,
+            |r| (r.next_u64(), 1 + r.below(4)),
+            |&(seed, nt)| {
+                let mut rng = Rng::new(seed);
+                let s = random_shira(&mut rng, nt);
+                let l = random_lora(&mut rng, nt);
+                let s_ok = decode_shira(&encode_shira_as(&s, Format::V1)).unwrap() == s
+                    && decode_shira(&encode_shira_as(&s, Format::V2)).unwrap() == s;
+                let l_ok = decode_lora(&encode_lora_as(&l, Format::V1)).unwrap() == l
+                    && decode_lora(&encode_lora_as(&l, Format::V2)).unwrap() == l;
+                let f16 = decode_shira(&encode_shira_as(&s, Format::V2F16)).unwrap();
+                let f16_ok = f16
+                    .tensors
+                    .iter()
+                    .zip(&s.tensors)
+                    .all(|((_, d), (_, o))| d.idx == o.idx && d.nnz() == o.nnz());
+                s_ok && l_ok && f16_ok
+            },
+        );
     }
 
     #[test]
@@ -400,10 +981,58 @@ mod tests {
     }
 
     #[test]
+    fn corruption_fuzz_every_truncation_and_flip() {
+        // Satellite: every truncation and every single-byte flip of every
+        // format must return IoError::Format — never panic, never decode.
+        let shira_files: Vec<Vec<u8>> = [Format::V1, Format::V2, Format::V2F16]
+            .iter()
+            .map(|&f| encode_shira_as(&sample_shira(), f))
+            .collect();
+        let lora_files: Vec<Vec<u8>> = [Format::V1, Format::V2, Format::V2F16]
+            .iter()
+            .map(|&f| encode_lora_as(&sample_lora(), f))
+            .collect();
+        for bytes in &shira_files {
+            for len in 0..bytes.len() {
+                assert!(
+                    matches!(decode_shira(&bytes[..len]), Err(IoError::Format(_))),
+                    "truncation to {len} not rejected"
+                );
+            }
+            for p in 0..bytes.len() {
+                let mut b = bytes.clone();
+                b[p] ^= 0xFF;
+                assert!(
+                    matches!(decode_shira(&b), Err(IoError::Format(_))),
+                    "flip at {p} not rejected"
+                );
+            }
+        }
+        for bytes in &lora_files {
+            for len in 0..bytes.len() {
+                assert!(
+                    matches!(decode_lora(&bytes[..len]), Err(IoError::Format(_))),
+                    "lora truncation to {len} not rejected"
+                );
+            }
+            for p in 0..bytes.len() {
+                let mut b = bytes.clone();
+                b[p] ^= 0xFF;
+                assert!(
+                    matches!(decode_lora(&b), Err(IoError::Format(_))),
+                    "lora flip at {p} not rejected"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn wrong_magic_rejected() {
         let bytes = encode_lora(&sample_lora());
         assert!(decode_shira(&bytes).is_err());
         let bytes = encode_shira(&sample_shira());
+        assert!(decode_lora(&bytes).is_err());
+        let bytes = encode_shira_as(&sample_shira(), Format::V2);
         assert!(decode_lora(&bytes).is_err());
     }
 

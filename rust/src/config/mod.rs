@@ -117,6 +117,9 @@ impl RunConfig {
         c.trace_len = args
             .get_usize("trace-len", c.trace_len)
             .map_err(|e| e.to_string())?;
+        c.cache_bytes = args
+            .get_usize("cache-bytes", c.cache_bytes)
+            .map_err(|e| e.to_string())?;
         if let Some(dir) = args.get("report-dir") {
             c.report_dir = dir.to_string();
         }
@@ -175,14 +178,16 @@ mod tests {
 
     #[test]
     fn overrides_from_args() {
-        let argv: Vec<String> = ["--seed", "7", "--steps", "10", "--fast"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
+        let argv: Vec<String> =
+            ["--seed", "7", "--steps", "10", "--fast", "--cache-bytes", "4096"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
         let args = Args::parse(&argv, &[]).unwrap();
         let c = RunConfig::from_args(&args).unwrap();
         assert_eq!(c.seed, 7);
         assert_eq!(c.adapter_steps, 10);
+        assert_eq!(c.cache_bytes, 4096);
         assert_eq!(c.pretrain_steps, RunConfig::fast().pretrain_steps);
     }
 

@@ -136,6 +136,31 @@ impl DynamicBatcher {
         Some((chosen, batch))
     }
 
+    /// Up to `k` adapters likely to be scheduled soon, in scheduling
+    /// priority order (aging first — a starving head preempts affinity —
+    /// then queue length, then name for determinism), excluding `exclude`
+    /// (normally the adapter the current batch is already switching to).
+    /// This is the store's prefetch lookahead: decoding these in the
+    /// background turns upcoming cold misses into prefetch hits.
+    pub fn upcoming(&self, k: usize, exclude: Option<&str>) -> Vec<String> {
+        let mut cands: Vec<(&str, u64, usize)> = self
+            .queues
+            .iter()
+            .filter(|(name, q)| {
+                !q.requests.is_empty() && Some(name.as_str()) != exclude
+            })
+            .map(|(name, q)| {
+                (
+                    name.as_str(),
+                    self.round.saturating_sub(q.head_since_round),
+                    q.requests.len(),
+                )
+            })
+            .collect();
+        cands.sort_by(|a, b| b.1.cmp(&a.1).then(b.2.cmp(&a.2)).then(a.0.cmp(b.0)));
+        cands.into_iter().take(k).map(|(n, _, _)| n.to_string()).collect()
+    }
+
     fn longest_queue(&self) -> Option<String> {
         self.queues
             .iter()
@@ -248,6 +273,38 @@ mod tests {
         assert_eq!(name, "a@1+b@0.5");
         let (name, _) = b.next_batch(Some("a@1+b@0.5")).unwrap();
         assert_eq!(name, "b@1+c@1"); // the fused set drained
+    }
+
+    #[test]
+    fn upcoming_orders_by_priority_and_excludes_active() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait_rounds: 100,
+        });
+        for i in 0..2 {
+            b.push(req(i, "a"));
+        }
+        for i in 2..8 {
+            b.push(req(i, "b"));
+        }
+        for i in 8..12 {
+            b.push(req(i, "c"));
+        }
+        // No aging yet: longest queue first, active excluded.
+        assert_eq!(b.upcoming(2, Some("b")), vec!["c", "a"]);
+        assert_eq!(b.upcoming(10, None), vec!["b", "c", "a"]);
+        assert_eq!(b.upcoming(0, None), Vec::<String>::new());
+        // Serve "b" for a while: the waiting queues age ahead of it.
+        for _ in 0..3 {
+            let (name, _) = b.next_batch(Some("b")).unwrap();
+            assert_eq!(name, "b");
+        }
+        let ahead = b.upcoming(3, Some("b"));
+        assert_eq!(ahead.len(), 2);
+        assert!(ahead.contains(&"a".to_string()) && ahead.contains(&"c".to_string()));
+        // Drained queues disappear from the lookahead.
+        while b.next_batch(None).is_some() {}
+        assert!(b.upcoming(4, None).is_empty());
     }
 
     #[test]

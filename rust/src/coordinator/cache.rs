@@ -17,11 +17,18 @@ struct Node<T> {
     key: String,
     value: Arc<T>,
     bytes: usize,
+    /// Pin refcount: while nonzero this entry is never evicted.
+    pins: u32,
     prev: usize,
     next: usize,
 }
 
-/// Byte-budgeted LRU cache keyed by name, with O(1) get/put/evict.
+/// Byte-budgeted LRU cache keyed by name, with O(1) get/put/evict,
+/// refcounted pinning ([`Self::pin`]: pinned entries are never evicted),
+/// and an uncached-passthrough policy for oversized entries: a `put`
+/// whose byte cost exceeds the whole budget returns its `Arc` without
+/// inserting — and without flushing resident entries to make room for a
+/// value that could never fit.
 ///
 /// # Examples
 ///
@@ -35,6 +42,10 @@ struct Node<T> {
 /// c.put("c", 3, 100);                     // evicts coldest ("b")
 /// assert!(c.get("b").is_none());
 /// assert_eq!(c.used_bytes(), 200);
+/// let big = c.put("big", 9, 500);         // oversized: served uncached
+/// assert_eq!(*big, 9);
+/// assert!(c.get("big").is_none());        // not resident...
+/// assert!(c.get("a").is_some());          // ...and nothing was flushed
 /// ```
 pub struct LruCache<T> {
     capacity_bytes: usize,
@@ -52,6 +63,8 @@ pub struct LruCache<T> {
     pub misses: u64,
     /// Entries evicted to fit the byte budget.
     pub evictions: u64,
+    /// Oversized puts served uncached (byte cost > whole budget).
+    pub oversized: u64,
 }
 
 impl<T> LruCache<T> {
@@ -68,12 +81,18 @@ impl<T> LruCache<T> {
             hits: 0,
             misses: 0,
             evictions: 0,
+            oversized: 0,
         }
     }
 
     /// Number of resident entries.
     pub fn len(&self) -> usize {
         self.map.len()
+    }
+
+    /// The byte budget this cache evicts to fit.
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
     }
 
     /// True when no entries are resident.
@@ -150,23 +169,83 @@ impl<T> LruCache<T> {
         }
     }
 
-    /// Insert (evicting LRU entries until the budget fits).  Entries larger
-    /// than the whole budget are admitted alone (budget temporarily
-    /// exceeded is a policy choice: serving must not fail).
+    /// Fetch by name without touching recency or the hit/miss counters
+    /// (for residency probes such as prefetch planning).
+    pub fn peek(&self, key: &str) -> Option<Arc<T>> {
+        self.map
+            .get(key)
+            .map(|&i| Arc::clone(&self.node(i).value))
+    }
+
+    /// Add a pin to `key` (refcounted): pinned entries are skipped by
+    /// eviction, so an adapter in an active fusion roster or an in-flight
+    /// switch stays resident under any cache pressure.  Returns false when
+    /// `key` is not resident (nothing to pin — callers holding an `Arc`
+    /// keep the value alive regardless).
+    pub fn pin(&mut self, key: &str) -> bool {
+        match self.map.get(key).copied() {
+            Some(i) => {
+                self.node_mut(i).pins += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop one pin from `key`.  Returns false when `key` is not resident
+    /// or not pinned.
+    pub fn unpin(&mut self, key: &str) -> bool {
+        match self.map.get(key).copied() {
+            Some(i) if self.node(i).pins > 0 => {
+                self.node_mut(i).pins -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// True when `key` is resident with at least one pin.
+    pub fn is_pinned(&self, key: &str) -> bool {
+        self.map
+            .get(key)
+            .map(|&i| self.node(i).pins > 0)
+            .unwrap_or(false)
+    }
+
+    /// Insert, evicting unpinned LRU entries until the budget fits.
+    ///
+    /// * **Oversized** (`bytes > capacity`): the value is returned as an
+    ///   uncached `Arc` — resident entries are NOT flushed for a value
+    ///   that could never fit (serving must not fail, and the rest of the
+    ///   working set must not pay for it).  Replacing a resident key with
+    ///   an oversized value drops the old entry (and its pins).
+    /// * **Pinned** entries are skipped by the eviction scan; when only
+    ///   pinned entries remain the budget is temporarily exceeded.
     pub fn put(&mut self, key: &str, value: T, bytes: usize) -> Arc<T> {
+        let mut inherited_pins = 0u32;
         if let Some(&i) = self.map.get(key) {
+            inherited_pins = self.node(i).pins;
             self.used_bytes -= self.remove_slot(i);
         }
-        while self.head != NIL && self.used_bytes + bytes > self.capacity_bytes {
-            let coldest = self.head;
-            self.used_bytes -= self.remove_slot(coldest);
-            self.evictions += 1;
+        if bytes > self.capacity_bytes {
+            self.oversized += 1;
+            return Arc::new(value);
+        }
+        let mut cur = self.head;
+        while cur != NIL && self.used_bytes + bytes > self.capacity_bytes {
+            let next = self.node(cur).next;
+            if self.node(cur).pins == 0 {
+                self.used_bytes -= self.remove_slot(cur);
+                self.evictions += 1;
+            }
+            cur = next;
         }
         let arc = Arc::new(value);
         let node = Node {
             key: key.to_string(),
             value: Arc::clone(&arc),
             bytes,
+            pins: inherited_pins,
             prev: NIL,
             next: NIL,
         };
@@ -253,11 +332,77 @@ mod tests {
     }
 
     #[test]
-    fn oversized_entry_admitted_alone() {
+    fn oversized_entry_served_uncached_without_flush() {
+        // Regression (was: evict everything, then admit over budget): an
+        // oversized put serves its Arc uncached and leaves residents alone.
         let mut c: LruCache<u32> = LruCache::new(100);
-        c.put("big", 1, 500);
-        assert!(c.get("big").is_some());
-        assert_eq!(c.len(), 1);
+        c.put("a", 1, 40);
+        c.put("b", 2, 40);
+        let big = c.put("big", 9, 500);
+        assert_eq!(*big, 9);
+        assert!(c.get("big").is_none());
+        assert!(c.get("a").is_some());
+        assert!(c.get("b").is_some());
+        assert_eq!(c.evictions, 0);
+        assert_eq!(c.oversized, 1);
+        assert_eq!(c.used_bytes(), 80);
+    }
+
+    #[test]
+    fn oversized_replace_drops_old_entry() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        c.put("a", 1, 40);
+        let big = c.put("a", 2, 500);
+        assert_eq!(*big, 2);
+        assert!(c.get("a").is_none());
+        assert_eq!(c.used_bytes(), 0);
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction_pressure() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        c.put("hot", 1, 60);
+        assert!(c.pin("hot"));
+        for i in 0..5 {
+            c.put(&format!("k{i}"), i, 60);
+        }
+        // "hot" is the coldest entry but pinned: never evicted.
+        assert!(c.get("hot").is_some());
+        assert!(c.is_pinned("hot"));
+        assert!(c.evictions > 0);
+        assert!(c.unpin("hot"));
+        assert!(!c.is_pinned("hot"));
+        c.put("k9", 9, 60);
+        // unpinned now — "hot" was touched by get above, so the coldest
+        // unpinned entry goes first; flood until "hot" must go too.
+        c.put("k10", 10, 60);
+        assert!(c.peek("hot").is_none());
+    }
+
+    #[test]
+    fn pin_on_absent_key_is_refused() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        assert!(!c.pin("ghost"));
+        assert!(!c.unpin("ghost"));
+        c.put("a", 1, 10);
+        assert!(c.pin("a"));
+        assert!(c.pin("a")); // refcounted
+        assert!(c.unpin("a"));
+        assert!(c.is_pinned("a")); // one pin still held
+        assert!(c.unpin("a"));
+        assert!(!c.unpin("a"));
+    }
+
+    #[test]
+    fn peek_does_not_touch_recency_or_counters() {
+        let mut c: LruCache<u32> = LruCache::new(1000);
+        c.put("a", 1, 10);
+        c.put("b", 2, 10);
+        assert_eq!(*c.peek("a").unwrap(), 1);
+        assert!(c.peek("x").is_none());
+        assert_eq!(c.hits, 0);
+        assert_eq!(c.misses, 0);
+        assert_eq!(c.keys_lru_order(), vec!["a", "b"]);
     }
 
     #[test]
@@ -297,15 +442,17 @@ mod tests {
         assert_eq!(c.keys_lru_order(), vec!["c", "a", "b"]);
     }
 
-    /// Reference model: the original Vec-order implementation, kept as the
-    /// behavioral oracle for the O(1) list version.
+    /// Reference model: a Vec-order implementation of the full policy
+    /// (recency, oversized passthrough, pins), kept as the behavioral
+    /// oracle for the O(1) list version.
     struct ModelCache {
         cap: usize,
         used: usize,
-        entries: Vec<(String, u32, usize)>, // coldest-first
+        entries: Vec<(String, u32, usize, u32)>, // coldest-first; .3 = pins
         hits: u64,
         misses: u64,
         evictions: u64,
+        oversized: u64,
     }
 
     impl ModelCache {
@@ -317,11 +464,12 @@ mod tests {
                 hits: 0,
                 misses: 0,
                 evictions: 0,
+                oversized: 0,
             }
         }
 
         fn get(&mut self, key: &str) -> Option<u32> {
-            if let Some(pos) = self.entries.iter().position(|(k, _, _)| k == key) {
+            if let Some(pos) = self.entries.iter().position(|(k, ..)| k == key) {
                 self.hits += 1;
                 let e = self.entries.remove(pos);
                 let v = e.1;
@@ -334,31 +482,56 @@ mod tests {
         }
 
         fn put(&mut self, key: &str, value: u32, bytes: usize) {
-            if let Some(pos) = self.entries.iter().position(|(k, _, _)| k == key) {
+            let mut pins = 0u32;
+            if let Some(pos) = self.entries.iter().position(|(k, ..)| k == key) {
                 let e = self.entries.remove(pos);
                 self.used -= e.2;
+                pins = e.3;
             }
-            while !self.entries.is_empty() && self.used + bytes > self.cap {
-                let e = self.entries.remove(0);
-                self.used -= e.2;
-                self.evictions += 1;
+            if bytes > self.cap {
+                self.oversized += 1;
+                return;
             }
-            self.entries.push((key.to_string(), value, bytes));
+            // evict unpinned entries coldest-first until the budget fits
+            let mut pos = 0usize;
+            while pos < self.entries.len() && self.used + bytes > self.cap {
+                if self.entries[pos].3 == 0 {
+                    let e = self.entries.remove(pos);
+                    self.used -= e.2;
+                    self.evictions += 1;
+                } else {
+                    pos += 1;
+                }
+            }
+            self.entries.push((key.to_string(), value, bytes, pins));
             self.used += bytes;
+        }
+
+        fn pin(&mut self, key: &str) {
+            if let Some(e) = self.entries.iter_mut().find(|(k, ..)| k == key) {
+                e.3 += 1;
+            }
+        }
+
+        fn unpin(&mut self, key: &str) {
+            if let Some(e) = self.entries.iter_mut().find(|(k, ..)| k == key) {
+                e.3 = e.3.saturating_sub(1);
+            }
         }
     }
 
     #[test]
     fn prop_matches_reference_model() {
-        // Any op sequence: identical hits/misses/evictions, identical
-        // recency order, identical byte accounting.
+        // Any op sequence (get/put/pin/unpin, byte costs up to oversized):
+        // identical hits/misses/evictions/oversized, identical recency
+        // order, identical byte accounting.
         pt::forall(
             11,
             60,
             |r| {
-                let n = 1 + r.below(60);
+                let n = 1 + r.below(80);
                 (0..n)
-                    .map(|_| (r.below(2), r.below(6), 1 + r.below(120)))
+                    .map(|_| (r.below(4), r.below(6), 1 + r.below(300)))
                     .collect::<Vec<(usize, usize, usize)>>()
             },
             |ops| {
@@ -366,26 +539,38 @@ mod tests {
                 let mut model = ModelCache::new(256);
                 for &(op, key, bytes) in ops {
                     let k = format!("k{key}");
-                    if op == 0 {
-                        let got = real.get(&k).map(|v| *v);
-                        let want = model.get(&k);
-                        if got != want {
-                            return false;
+                    match op {
+                        0 => {
+                            let got = real.get(&k).map(|v| *v);
+                            let want = model.get(&k);
+                            if got != want {
+                                return false;
+                            }
                         }
-                    } else {
-                        real.put(&k, key as u32, bytes);
-                        model.put(&k, key as u32, bytes);
+                        1 => {
+                            real.put(&k, key as u32, bytes);
+                            model.put(&k, key as u32, bytes);
+                        }
+                        2 => {
+                            real.pin(&k);
+                            model.pin(&k);
+                        }
+                        _ => {
+                            real.unpin(&k);
+                            model.unpin(&k);
+                        }
                     }
                 }
                 let order: Vec<String> =
                     real.keys_lru_order().iter().map(|s| s.to_string()).collect();
                 let model_order: Vec<String> =
-                    model.entries.iter().map(|(k, _, _)| k.clone()).collect();
+                    model.entries.iter().map(|(k, ..)| k.clone()).collect();
                 order == model_order
                     && real.used_bytes() == model.used
                     && real.hits == model.hits
                     && real.misses == model.misses
                     && real.evictions == model.evictions
+                    && real.oversized == model.oversized
                     && real.len() == model.entries.len()
             },
         );

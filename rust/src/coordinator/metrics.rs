@@ -1,5 +1,8 @@
-//! Serving metrics: stage timers, switch counters, latency distributions.
+//! Serving metrics: stage timers, switch counters, latency distributions,
+//! and the adapter-store lifecycle counters (cache, prefetch, residency).
 
+use super::store::StoreStats;
+use crate::util::alloc::fmt_bytes;
 use crate::util::stats::{LatencyHist, Moments, Sample};
 
 /// Accumulating counters and distributions for one serving run.
@@ -19,16 +22,20 @@ pub struct ServeMetrics {
     pub batches: u64,
     /// Requests completed.
     pub requests: u64,
-    /// Decoded-adapter cache hits.
-    pub cache_hits: u64,
-    /// Decoded-adapter cache misses.
-    pub cache_misses: u64,
+    /// Adapter-store lifecycle counters (set once at end of run via
+    /// [`Self::set_store`]).
+    pub store: StoreStats,
 }
 
 impl ServeMetrics {
     /// Zeroed metrics.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Capture the adapter store's lifecycle counters for the summary.
+    pub fn set_store(&mut self, s: StoreStats) {
+        self.store = s;
     }
 
     /// Record one executed batch (and its switch, when one happened).
@@ -60,6 +67,8 @@ impl ServeMetrics {
             "requests={} batches={} switches={} fill={:.2}\n\
              switch: mean={:.1}us p50={:.1}us | exec: mean={:.1}us\n\
              request latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
+             store: hits={} misses={} evictions={} prefetch_hits={} \
+             oversized={} resident={} ({} entries)\n\
              throughput={:.1} req/s",
             self.requests,
             self.batches,
@@ -75,6 +84,13 @@ impl ServeMetrics {
             self.request_latency.mean_us(),
             self.request_latency.percentile_us(50.0),
             self.request_latency.percentile_us(99.0),
+            self.store.hits,
+            self.store.misses,
+            self.store.evictions,
+            self.store.prefetch_hits,
+            self.store.oversized_serves,
+            fmt_bytes(self.store.resident_bytes),
+            self.store.resident_entries,
             thr
         )
     }
@@ -104,5 +120,29 @@ mod tests {
         let s = m.summary(1.0);
         assert!(s.contains("requests=8"));
         assert!(s.contains("throughput"));
+    }
+
+    #[test]
+    fn summary_surfaces_store_counters() {
+        let mut m = ServeMetrics::new();
+        m.record_batch(4, true, 50.0, 500.0);
+        m.set_store(StoreStats {
+            hits: 7,
+            misses: 3,
+            evictions: 2,
+            prefetch_issued: 5,
+            prefetch_hits: 4,
+            prefetch_waits: 1,
+            oversized_serves: 1,
+            resident_bytes: 2048,
+            resident_entries: 2,
+        });
+        let s = m.summary(1.0);
+        assert!(s.contains("hits=7"), "{s}");
+        assert!(s.contains("misses=3"), "{s}");
+        assert!(s.contains("evictions=2"), "{s}");
+        assert!(s.contains("prefetch_hits=4"), "{s}");
+        assert!(s.contains("2 entries"), "{s}");
+        assert!((m.store.hit_rate() - 0.7).abs() < 1e-12);
     }
 }

@@ -1,7 +1,8 @@
 //! L3 coordinator — the paper's systems contribution: rapid adapter
 //! switching (S13), multi-adapter fusion (S14) with an incremental
-//! fused-mode engine, request routing + dynamic batching (S15), adapter
-//! caching (S16) and metrics (S17).
+//! fused-mode engine, request routing + dynamic batching (S15), the
+//! adapter lifecycle store (S16: caching, shard-aligned decode, prefetch)
+//! and metrics (S17).
 
 pub mod batcher;
 pub mod cache;
@@ -9,4 +10,5 @@ pub mod fusion;
 pub mod fusion_engine;
 pub mod metrics;
 pub mod server;
+pub mod store;
 pub mod switch;

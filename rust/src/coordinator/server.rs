@@ -11,18 +11,16 @@
 //! and transitions between sets run through the incremental
 //! [`FusionEngine`] — touching only the adapters that changed.
 
-use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
-use super::cache::LruCache;
 use super::fusion_engine::{FusionEngine, FusionPlan, SetSpec};
 use super::metrics::ServeMetrics;
 use super::switch::{Policy, SwitchEngine};
-use crate::adapter::{io, LoraAdapter, ShiraAdapter};
+use crate::adapter::LoraAdapter;
 use crate::data::trace::Request;
 use crate::model::weights::WeightStore;
 use crate::runtime::manifest::LoraSeg;
@@ -30,89 +28,7 @@ use crate::runtime::{HostValue, Runtime};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
-/// A decoded adapter of either family.  Variants hold `Arc`s so a cache
-/// hit can be activated on the switch engine without copying tensor data.
-#[derive(Clone, Debug)]
-pub enum AnyAdapter {
-    /// A sparse high-rank adapter.
-    Shira(Arc<ShiraAdapter>),
-    /// A low-rank (LoRA) adapter.
-    Lora(Arc<LoraAdapter>),
-}
-
-impl AnyAdapter {
-    /// The adapter's name (unique within a store).
-    pub fn name(&self) -> &str {
-        match self {
-            AnyAdapter::Shira(a) => &a.name,
-            AnyAdapter::Lora(a) => &a.name,
-        }
-    }
-
-    /// Decoded in-memory size in bytes (the cache accounting unit).
-    pub fn nbytes(&self) -> usize {
-        match self {
-            AnyAdapter::Shira(a) => a.nbytes(),
-            AnyAdapter::Lora(a) => a.nbytes(),
-        }
-    }
-}
-
-/// Flash-resident encoded adapters + RAM cache of decoded ones.
-pub struct AdapterStore {
-    flash: HashMap<String, Vec<u8>>,
-    cache: LruCache<AnyAdapter>,
-}
-
-impl AdapterStore {
-    /// Store with a decoded-adapter cache budget of `cache_bytes`.
-    pub fn new(cache_bytes: usize) -> Self {
-        AdapterStore {
-            flash: HashMap::new(),
-            cache: LruCache::new(cache_bytes),
-        }
-    }
-
-    /// Encode a SHiRA adapter onto "flash".
-    pub fn add_shira(&mut self, a: &ShiraAdapter) {
-        self.flash.insert(a.name.clone(), io::encode_shira(a));
-    }
-
-    /// Encode a LoRA adapter onto "flash".
-    pub fn add_lora(&mut self, a: &LoraAdapter) {
-        self.flash.insert(a.name.clone(), io::encode_lora(a));
-    }
-
-    /// Sorted names of every stored adapter.
-    pub fn names(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.flash.keys().cloned().collect();
-        v.sort();
-        v
-    }
-
-    /// Fetch (decoding + caching on miss).
-    pub fn fetch(&mut self, name: &str) -> Result<Arc<AnyAdapter>> {
-        if let Some(a) = self.cache.get(name) {
-            return Ok(a);
-        }
-        let bytes = self
-            .flash
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown adapter {name}"))?;
-        let decoded = if let Ok(s) = io::decode_shira(bytes) {
-            AnyAdapter::Shira(Arc::new(s))
-        } else {
-            AnyAdapter::Lora(Arc::new(io::decode_lora(bytes).map_err(|e| anyhow!("{e}"))?))
-        };
-        let bytes_cost = decoded.nbytes();
-        Ok(self.cache.put(name, decoded, bytes_cost))
-    }
-
-    /// (cache hits, cache misses) so far.
-    pub fn cache_stats(&self) -> (u64, u64) {
-        (self.cache.hits, self.cache.misses)
-    }
-}
+pub use super::store::{AdapterStore, AnyAdapter, StoreConfig, StoreStats};
 
 /// End-of-run report.
 #[derive(Clone, Debug)]
@@ -145,6 +61,8 @@ pub struct ServeReport {
     pub p99_latency_us: f64,
     /// Decoded-adapter cache hit rate over the run.
     pub cache_hit_rate: f64,
+    /// Adapter-store lifecycle counters (cache, prefetch, residency).
+    pub store: StoreStats,
     /// Human-readable multi-line summary (see `ServeMetrics::summary`).
     pub summary: String,
 }
@@ -156,17 +74,22 @@ pub struct Server<'rt> {
     rt: &'rt Runtime,
     /// The switch engine holding the resident base weights.
     pub engine: SwitchEngine,
-    /// Flash-encoded adapters + decoded cache.
+    /// The adapter lifecycle store: flash bytes, decode cache, prefetch.
     pub store: AdapterStore,
     batcher: DynamicBatcher,
     policy: Policy,
     model: String,
     alpha: f32,
     fusion: Option<FusionEngine>,
+    /// Name pinned in the store for the currently-applied adapter.
+    pinned_active: Option<String>,
+    /// Names pinned in the store for the active fusion roster.
+    pinned_roster: Vec<String>,
 }
 
 impl<'rt> Server<'rt> {
-    /// Server with a host-sized switch-work pool.
+    /// Server with a host-sized switch-work pool and default store
+    /// settings at the given cache budget.
     pub fn new(
         rt: &'rt Runtime,
         base: WeightStore,
@@ -179,7 +102,8 @@ impl<'rt> Server<'rt> {
     }
 
     /// Server with an explicit switch-work pool; the pool is shared with
-    /// the engine so scatter/restore overlap across target tensors.
+    /// the engine (scatter/restore overlap across target tensors) and the
+    /// store (background prefetch decode).
     pub fn with_pool(
         rt: &'rt Runtime,
         base: WeightStore,
@@ -188,12 +112,36 @@ impl<'rt> Server<'rt> {
         cache_bytes: usize,
         pool: Arc<ThreadPool>,
     ) -> Result<Self> {
+        Self::with_store_config(
+            rt,
+            base,
+            policy,
+            model,
+            StoreConfig {
+                cache_bytes,
+                ..StoreConfig::default()
+            },
+            pool,
+        )
+    }
+
+    /// Server with full adapter-store tunables (cache budget, on-flash
+    /// format, prefetch depth) — the CLI's `--cache-bytes`,
+    /// `--prefetch-depth` and `--format` knobs land here.
+    pub fn with_store_config(
+        rt: &'rt Runtime,
+        base: WeightStore,
+        policy: Policy,
+        model: &str,
+        store_cfg: StoreConfig,
+        pool: Arc<ThreadPool>,
+    ) -> Result<Self> {
         let meta = rt.manifest.model(model).map_err(|e| anyhow!("{e}"))?;
         let max_batch = meta.dim("batch");
         Ok(Server {
             rt,
-            engine: SwitchEngine::with_pool(base, Some(pool)),
-            store: AdapterStore::new(cache_bytes),
+            engine: SwitchEngine::with_pool(base, Some(Arc::clone(&pool))),
+            store: AdapterStore::with_config(store_cfg, Some(pool)),
             batcher: DynamicBatcher::new(BatcherConfig {
                 max_batch,
                 max_wait_rounds: 4,
@@ -202,6 +150,8 @@ impl<'rt> Server<'rt> {
             model: model.to_string(),
             alpha: 1.0,
             fusion: None,
+            pinned_active: None,
+            pinned_roster: Vec::new(),
         })
     }
 
@@ -212,11 +162,27 @@ impl<'rt> Server<'rt> {
 
     /// Build the incremental fused-mode engine over the named adapters
     /// (the fusion roster) and snapshot the base weights.  All members
-    /// must be SHiRA adapters present in the store.  Any active
+    /// must be SHiRA adapters present in the store; each is pinned there
+    /// for as long as the roster is live, so no cache pressure can evict
+    /// an adapter that fused-mode serving may touch.  Any active
     /// single-adapter switch is reverted first so the snapshot sees base
     /// values.  [`Self::run_trace`] calls this lazily under
     /// [`Policy::ShiraFusion`] with every adapter the trace names.
     pub fn enable_fusion(&mut self, names: &[String]) -> Result<()> {
+        // Release the previous roster's pins up front: the fetch loop
+        // below pins each new member the moment it lands, and stale pins
+        // must neither crowd the new members out of the cache nor leak
+        // when the rosters are disjoint.
+        self.unpin_roster();
+        let result = self.build_fusion(names);
+        if result.is_err() {
+            // Don't leave a half-built roster pinned.
+            self.unpin_roster();
+        }
+        result
+    }
+
+    fn build_fusion(&mut self, names: &[String]) -> Result<()> {
         let mut roster = Vec::with_capacity(names.len());
         for n in names {
             if n.contains('+') || n.contains('@') {
@@ -227,8 +193,17 @@ impl<'rt> Server<'rt> {
                      metacharacter ('+' or '@')"
                 ));
             }
-            match &*self.store.fetch(n)? {
-                AnyAdapter::Shira(a) => roster.push(Arc::clone(a)),
+            match &self.store.fetch(n)?.adapter {
+                AnyAdapter::Shira(a) => {
+                    roster.push(Arc::clone(a));
+                    // Pin as fetched, so a later member's decode can
+                    // never evict this one mid-build (pin only fails for
+                    // oversized-uncached entries, which were never
+                    // resident to protect).
+                    if self.store.pin(n) {
+                        self.pinned_roster.push(n.clone());
+                    }
+                }
                 AnyAdapter::Lora(_) => {
                     return Err(anyhow!("fusion roster member {n} is not a SHiRA adapter"))
                 }
@@ -237,8 +212,14 @@ impl<'rt> Server<'rt> {
         // Unwind any previous fused state BEFORE snapshotting: a live
         // engine's writes are invisible to `revert`, and dropping it
         // without deactivating would bake its deltas into the new base.
-        self.disable_fusion();
+        if let Some(mut f) = self.fusion.take() {
+            f.deactivate(&mut self.engine.weights);
+        }
         self.engine.revert();
+        // The reverted single-adapter switch no longer needs residency.
+        if let Some(prev) = self.pinned_active.take() {
+            self.store.unpin(&prev);
+        }
         let plan = FusionPlan::build(roster)?;
         let mut fusion = FusionEngine::with_pool(plan, self.engine.pool().cloned());
         fusion.activate(&mut self.engine.weights)?;
@@ -246,10 +227,18 @@ impl<'rt> Server<'rt> {
         Ok(())
     }
 
-    /// Tear down fused-mode serving, restoring base weights exactly.
+    /// Tear down fused-mode serving, restoring base weights exactly and
+    /// releasing the roster's store pins.
     pub fn disable_fusion(&mut self) {
+        self.unpin_roster();
         if let Some(mut f) = self.fusion.take() {
             f.deactivate(&mut self.engine.weights);
+        }
+    }
+
+    fn unpin_roster(&mut self) {
+        for n in self.pinned_roster.drain(..) {
+            self.store.unpin(&n);
         }
     }
 
@@ -348,6 +337,19 @@ impl<'rt> Server<'rt> {
                 Some(next) => next,
                 None => break,
             };
+            // ---- prefetch stage -----------------------------------------
+            // Affinity lookahead: decode the adapters the batcher will
+            // schedule next in the background, so their switches hit the
+            // staging area instead of paying decode on the request path.
+            // (Fused mode pins its whole roster resident at enable time.)
+            if self.policy != Policy::ShiraFusion && self.store.prefetch_depth() > 0 {
+                let ahead = self
+                    .batcher
+                    .upcoming(self.store.prefetch_depth(), Some(adapter_name.as_str()));
+                if !ahead.is_empty() {
+                    self.store.prefetch(&ahead);
+                }
+            }
             // ---- switch stage -------------------------------------------
             let needs_switch;
             let mut switch_us = 0.0;
@@ -370,14 +372,35 @@ impl<'rt> Server<'rt> {
             } else {
                 needs_switch = self.engine.active_name() != Some(adapter_name.as_str());
                 if needs_switch || self.policy == Policy::LoraUnfused {
-                    let adapter = self.store.fetch(&adapter_name)?;
+                    let entry = self.store.fetch(&adapter_name)?;
+                    // Pin the adapter we are about to apply; the previous
+                    // active adapter's pin is released.  An in-flight
+                    // switch can therefore never lose its cache entry.
+                    // (Unfused LoRA never mutates the weights — there is
+                    // no applied adapter to keep resident, and its
+                    // `needs_switch` is true every batch, which would
+                    // leak one pin per batch.)
+                    if needs_switch && self.policy != Policy::LoraUnfused {
+                        self.store.pin(&adapter_name);
+                        if let Some(prev) = self.pinned_active.replace(adapter_name.clone())
+                        {
+                            if prev != adapter_name {
+                                self.store.unpin(&prev);
+                            }
+                        }
+                    }
                     let t0 = Instant::now();
-                    match (&*adapter, self.policy) {
+                    match (&entry.adapter, self.policy) {
                         (AnyAdapter::Shira(a), Policy::ShiraScatter) => {
                             // Arc-shared activation: no tensor copy on the
                             // request path, snapshots land in the engine
-                            // arena.
-                            self.engine.switch_to_shira_shared(Arc::clone(a), self.alpha);
+                            // arena, and the store-built shard plans skip
+                            // plan construction (shard-aligned decode).
+                            self.engine.switch_to_shira_planned(
+                                Arc::clone(a),
+                                Some(Arc::clone(&entry.plans)),
+                                self.alpha,
+                            );
                         }
                         (AnyAdapter::Lora(a), Policy::LoraFuse) => {
                             self.engine.switch_to_lora_shared(Arc::clone(a));
@@ -437,7 +460,8 @@ impl<'rt> Server<'rt> {
             metrics.record_batch(batch.len(), needs_switch, switch_us, exec_us);
         }
         let wall = wall0.elapsed().as_secs_f64();
-        let (hits, misses) = self.store.cache_stats();
+        let store_stats = self.store.stats();
+        metrics.set_store(store_stats.clone());
         let p99 = metrics.request_latency.percentile_us(99.0);
         let (p50_switch, p99_switch) = if metrics.switch_us.is_empty() {
             (0.0, 0.0)
@@ -469,11 +493,8 @@ impl<'rt> Server<'rt> {
             p50_exec_us: p50_exec,
             p99_exec_us: p99_exec,
             p99_latency_us: p99,
-            cache_hit_rate: if hits + misses == 0 {
-                0.0
-            } else {
-                hits as f64 / (hits + misses) as f64
-            },
+            cache_hit_rate: store_stats.hit_rate(),
+            store: store_stats,
             summary: metrics.summary(wall),
         })
     }
@@ -483,7 +504,7 @@ impl<'rt> Server<'rt> {
 mod tests {
     use super::*;
     use crate::adapter::sparse::SparseDelta;
-    use crate::adapter::LoraTensor;
+    use crate::adapter::{LoraTensor, ShiraAdapter};
     use crate::data::trace::{generate_trace, TracePattern};
     use crate::model::tensor::Tensor2;
     use crate::runtime::manifest::Manifest;
@@ -504,8 +525,7 @@ mod tests {
             .shira
             .iter()
             .map(|seg| {
-                let numel = seg.shape.0 * seg.shape.1;
-                let idx = rng.sample_indices(numel, seg.k);
+                let idx = rng.sample_indices(seg.numel(), seg.k);
                 let mut d = vec![0.0; seg.k];
                 rng.fill_normal(&mut d, 0.0, 0.01);
                 (
@@ -572,6 +592,10 @@ mod tests {
         assert!(rep.switches >= 1);
         assert!(rep.throughput_rps > 0.0);
         assert!(rep.summary.contains("requests=24"));
+        // The lifecycle counters ride the report and the summary.
+        assert!(rep.store.misses >= 1);
+        assert!(rep.store.resident_entries >= 1);
+        assert!(rep.summary.contains("store:"));
     }
 
     #[test]

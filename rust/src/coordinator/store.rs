@@ -1,0 +1,586 @@
+//! Adapter lifecycle subsystem (DESIGN.md §10): flash-encoded adapters, a
+//! byte-budgeted pinned decode cache, shard-aligned decode, and background
+//! prefetch on the serving thread pool.
+//!
+//! This is the storage half of the paper's deployment story (Fig. 3a):
+//! many adapters live on "flash" as compact encoded bytes (format v2 by
+//! default — varint delta-coded indices, see [`io::Format`]); a bounded
+//! RAM cache holds decoded [`AdapterHandle`]s.  Decode is *shard-aligned*:
+//! the store materializes each SHiRA tensor's row-aligned
+//! [`ShardPlan`] alongside the [`SparseDelta`](crate::adapter::sparse::SparseDelta),
+//! so the first switch or fuse through an adapter skips plan construction
+//! entirely.
+//!
+//! **Pinning.**  [`AdapterStore::pin`] adds a refcount under which the
+//! cache never evicts the entry — the server pins the active adapter and
+//! every fusion-roster member, so an adapter in an in-flight switch or an
+//! active fused set cannot be evicted mid-apply no matter the cache
+//! pressure.  (`Arc`s make eviction memory-safe regardless; pinning is the
+//! residency guarantee.)
+//!
+//! **Prefetch.**  [`AdapterStore::prefetch`] submits decode jobs for
+//! upcoming adapters (the batcher's affinity lookahead) to the shared
+//! [`ThreadPool`]; results land in a staging area.  A later
+//! [`AdapterStore::fetch`] that finds its adapter staged pays no decode on
+//! the switch path — and if the decode is still in flight it waits for it
+//! rather than decoding twice.  Decoded bytes are identical on every path
+//! (cold miss, cache hit, prefetch), so serving output is unaffected.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use super::cache::LruCache;
+use crate::adapter::io::{self, AdapterFamily, Format};
+use crate::adapter::sparse::{shards_for, ShardPlan};
+use crate::adapter::{LoraAdapter, ShiraAdapter};
+use crate::util::threadpool::ThreadPool;
+
+/// A decoded adapter of either family.  Variants hold `Arc`s so a cache
+/// hit can be activated on the switch engine without copying tensor data.
+#[derive(Clone, Debug)]
+pub enum AnyAdapter {
+    /// A sparse high-rank adapter.
+    Shira(Arc<ShiraAdapter>),
+    /// A low-rank (LoRA) adapter.
+    Lora(Arc<LoraAdapter>),
+}
+
+impl AnyAdapter {
+    /// The adapter's name (unique within a store).
+    pub fn name(&self) -> &str {
+        match self {
+            AnyAdapter::Shira(a) => &a.name,
+            AnyAdapter::Lora(a) => &a.name,
+        }
+    }
+
+    /// Decoded in-memory size in bytes (the cache accounting unit).
+    pub fn nbytes(&self) -> usize {
+        match self {
+            AnyAdapter::Shira(a) => a.nbytes(),
+            AnyAdapter::Lora(a) => a.nbytes(),
+        }
+    }
+}
+
+/// A decoded adapter plus its shard-aligned layout: one row-aligned
+/// [`ShardPlan`] per SHiRA tensor, built once at decode time for the
+/// store's pool width so the switch engine's first apply skips plan
+/// construction (empty for LoRA).
+#[derive(Clone, Debug)]
+pub struct AdapterHandle {
+    /// The decoded adapter.
+    pub adapter: AnyAdapter,
+    /// Per-tensor shard plans in `tensors` order (SHiRA only).
+    pub plans: Arc<Vec<ShardPlan>>,
+}
+
+impl AdapterHandle {
+    fn decode(bytes: &[u8], plan_threads: usize) -> Result<AdapterHandle, io::IoError> {
+        match io::sniff_family(bytes) {
+            Some(AdapterFamily::Shira) => {
+                let a = io::decode_shira(bytes)?;
+                let plans = a
+                    .tensors
+                    .iter()
+                    .map(|(_, d)| d.shard(shards_for(d.nnz(), plan_threads)))
+                    .collect();
+                Ok(AdapterHandle {
+                    adapter: AnyAdapter::Shira(Arc::new(a)),
+                    plans: Arc::new(plans),
+                })
+            }
+            Some(AdapterFamily::Lora) => Ok(AdapterHandle {
+                adapter: AnyAdapter::Lora(Arc::new(io::decode_lora(bytes)?)),
+                plans: Arc::new(Vec::new()),
+            }),
+            None => Err(io::IoError::Format("unknown adapter magic".into())),
+        }
+    }
+
+    /// Cache byte cost of this handle (the decoded adapter's size).
+    pub fn nbytes(&self) -> usize {
+        self.adapter.nbytes()
+    }
+}
+
+/// Store tunables: decode-cache budget, on-flash format, prefetch depth.
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    /// Byte budget of the decoded-adapter cache.
+    pub cache_bytes: usize,
+    /// On-flash encoding for adapters added to the store.
+    pub format: Format,
+    /// How many upcoming adapters one [`AdapterStore::prefetch`] call may
+    /// submit for background decode (0 disables prefetch).
+    pub prefetch_depth: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            cache_bytes: 8 << 20,
+            format: Format::V2,
+            prefetch_depth: 2,
+        }
+    }
+}
+
+/// Lifecycle counters for the end-of-run serving summary.
+#[derive(Clone, Debug, Default)]
+pub struct StoreStats {
+    /// Decoded-cache lookups that found a resident entry.
+    pub hits: u64,
+    /// Decoded-cache lookups that missed.
+    pub misses: u64,
+    /// Entries evicted to fit the cache byte budget.
+    pub evictions: u64,
+    /// Background decode jobs submitted.
+    pub prefetch_issued: u64,
+    /// Fetches satisfied from the prefetch staging area (instead of
+    /// decoding inline).
+    pub prefetch_hits: u64,
+    /// Subset of `prefetch_hits` whose decode was still in flight at
+    /// fetch time — the fetch waited it out, so part of the decode cost
+    /// landed on the request path after all (raise `--prefetch-depth` or
+    /// issue prefetch earlier when this is high).
+    pub prefetch_waits: u64,
+    /// Fetches of adapters larger than the whole cache budget, served as
+    /// uncached `Arc`s without flushing resident entries.
+    pub oversized_serves: u64,
+    /// Bytes of decoded adapters currently resident in the cache.
+    pub resident_bytes: usize,
+    /// Decoded adapters currently resident in the cache.
+    pub resident_entries: usize,
+}
+
+impl StoreStats {
+    /// hits / (hits + misses), 0 when nothing was looked up.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// What a background decode job has produced for a name so far.
+enum Staged {
+    /// A job is submitted or running; a fetch waits instead of re-decoding.
+    Pending,
+    /// Decode finished; the handle moves into the cache on first fetch.
+    Ready(AdapterHandle),
+    /// Decode failed (corrupt flash bytes); the fetch surfaces the error.
+    Failed(String),
+}
+
+struct PrefetchShared {
+    slots: Mutex<HashMap<String, Staged>>,
+    ready: Condvar,
+}
+
+/// Flash-resident encoded adapters + pinned RAM cache of decoded ones,
+/// with shard-aligned decode and background prefetch (module docs).
+pub struct AdapterStore {
+    flash: HashMap<String, Arc<Vec<u8>>>,
+    cache: LruCache<AdapterHandle>,
+    format: Format,
+    prefetch_depth: usize,
+    /// Shard-plan width for decode (the serving pool's thread count).
+    plan_threads: usize,
+    pool: Option<Arc<ThreadPool>>,
+    staging: Arc<PrefetchShared>,
+    prefetch_issued: u64,
+    prefetch_hits: u64,
+    prefetch_waits: u64,
+}
+
+impl AdapterStore {
+    /// Store with a decoded-adapter cache budget of `cache_bytes` and
+    /// default format/prefetch settings (no pool: prefetch disabled).
+    pub fn new(cache_bytes: usize) -> Self {
+        Self::with_config(
+            StoreConfig {
+                cache_bytes,
+                ..StoreConfig::default()
+            },
+            None,
+        )
+    }
+
+    /// Store with explicit tunables and an optional shared thread pool
+    /// (used for background prefetch decode and as the shard-plan width).
+    pub fn with_config(cfg: StoreConfig, pool: Option<Arc<ThreadPool>>) -> Self {
+        let plan_threads = pool.as_ref().map(|p| p.threads()).unwrap_or(1);
+        AdapterStore {
+            flash: HashMap::new(),
+            cache: LruCache::new(cfg.cache_bytes),
+            format: cfg.format,
+            prefetch_depth: cfg.prefetch_depth,
+            plan_threads,
+            pool,
+            staging: Arc::new(PrefetchShared {
+                slots: Mutex::new(HashMap::new()),
+                ready: Condvar::new(),
+            }),
+            prefetch_issued: 0,
+            prefetch_hits: 0,
+            prefetch_waits: 0,
+        }
+    }
+
+    /// The on-flash encoding this store writes.
+    pub fn format(&self) -> Format {
+        self.format
+    }
+
+    /// Adapters one [`Self::prefetch`] call may submit.
+    pub fn prefetch_depth(&self) -> usize {
+        self.prefetch_depth
+    }
+
+    /// Encode a SHiRA adapter onto "flash" in the store's format.
+    pub fn add_shira(&mut self, a: &ShiraAdapter) {
+        self.flash
+            .insert(a.name.clone(), Arc::new(io::encode_shira_as(a, self.format)));
+    }
+
+    /// Encode a LoRA adapter onto "flash" in the store's format.
+    pub fn add_lora(&mut self, a: &LoraAdapter) {
+        self.flash
+            .insert(a.name.clone(), Arc::new(io::encode_lora_as(a, self.format)));
+    }
+
+    /// Store pre-encoded bytes under `name` (validated lazily at fetch).
+    pub fn add_encoded(&mut self, name: &str, bytes: Vec<u8>) {
+        self.flash.insert(name.to_string(), Arc::new(bytes));
+    }
+
+    /// Sorted names of every stored adapter.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.flash.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// On-flash encoded size of `name`, if stored.
+    pub fn encoded_len(&self, name: &str) -> Option<usize> {
+        self.flash.get(name).map(|b| b.len())
+    }
+
+    /// Fetch a decoded handle: cache hit → prefetch staging → inline
+    /// decode, in that order.  An adapter whose decoded size exceeds the
+    /// whole cache budget is served as an uncached `Arc` without flushing
+    /// resident entries.
+    pub fn fetch(&mut self, name: &str) -> Result<Arc<AdapterHandle>> {
+        if let Some(h) = self.cache.get(name) {
+            return Ok(h);
+        }
+        match self.take_staged(name) {
+            Ok(Some((handle, waited))) => {
+                self.prefetch_hits += 1;
+                if waited {
+                    self.prefetch_waits += 1;
+                }
+                return Ok(self.admit(name, handle));
+            }
+            Ok(None) => {}
+            Err(e) => return Err(e),
+        }
+        let bytes = self
+            .flash
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown adapter {name}"))?;
+        let handle = AdapterHandle::decode(bytes, self.plan_threads)
+            .map_err(|e| anyhow!("decoding adapter {name}: {e}"))?;
+        Ok(self.admit(name, handle))
+    }
+
+    /// Submit background decode jobs for up to `prefetch_depth` of
+    /// `names` (skipping resident, already-staged and unknown names).
+    /// No-op without a pool.  Results are picked up by later fetches.
+    pub fn prefetch(&mut self, names: &[String]) {
+        let Some(pool) = self.pool.clone() else {
+            return;
+        };
+        for name in names.iter().take(self.prefetch_depth) {
+            if self.cache.peek(name).is_some() {
+                continue;
+            }
+            let Some(bytes) = self.flash.get(name) else {
+                continue;
+            };
+            let bytes = Arc::clone(bytes);
+            {
+                let mut slots = self.staging.slots.lock().unwrap();
+                if slots.contains_key(name.as_str()) {
+                    continue;
+                }
+                slots.insert(name.clone(), Staged::Pending);
+            }
+            self.prefetch_issued += 1;
+            let shared = Arc::clone(&self.staging);
+            let plan_threads = self.plan_threads;
+            let job_name = name.clone();
+            pool.execute(move || {
+                let res = AdapterHandle::decode(&bytes, plan_threads);
+                let mut slots = shared.slots.lock().unwrap();
+                slots.insert(
+                    job_name,
+                    match res {
+                        Ok(h) => Staged::Ready(h),
+                        Err(e) => Staged::Failed(e.to_string()),
+                    },
+                );
+                shared.ready.notify_all();
+            });
+        }
+    }
+
+    /// Pin `name` in the decode cache (refcounted): pinned entries are
+    /// never evicted.  Returns false when the adapter is not resident.
+    pub fn pin(&mut self, name: &str) -> bool {
+        self.cache.pin(name)
+    }
+
+    /// Drop one pin from `name`.
+    pub fn unpin(&mut self, name: &str) -> bool {
+        self.cache.unpin(name)
+    }
+
+    /// True when `name` is resident with at least one pin.
+    pub fn is_pinned(&self, name: &str) -> bool {
+        self.cache.is_pinned(name)
+    }
+
+    /// Lifecycle counters so far.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.cache.hits,
+            misses: self.cache.misses,
+            evictions: self.cache.evictions,
+            prefetch_issued: self.prefetch_issued,
+            prefetch_hits: self.prefetch_hits,
+            prefetch_waits: self.prefetch_waits,
+            oversized_serves: self.cache.oversized,
+            resident_bytes: self.cache.used_bytes(),
+            resident_entries: self.cache.len(),
+        }
+    }
+
+    /// (cache hits, cache misses) so far.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits, self.cache.misses)
+    }
+
+    /// Move a decoded handle into the cache; the cache serves it uncached
+    /// when it could never fit the budget (and counts it as oversized).
+    fn admit(&mut self, name: &str, handle: AdapterHandle) -> Arc<AdapterHandle> {
+        let cost = handle.nbytes();
+        self.cache.put(name, handle, cost)
+    }
+
+    /// Remove `name` from staging, waiting out an in-flight decode.
+    /// Returns the handle plus whether the fetch had to wait (the decode
+    /// was still in flight — part of its cost landed on the request path).
+    fn take_staged(&mut self, name: &str) -> Result<Option<(AdapterHandle, bool)>> {
+        let mut slots = self.staging.slots.lock().unwrap();
+        let mut waited = false;
+        loop {
+            let pending = match slots.get(name) {
+                None => return Ok(None),
+                Some(Staged::Pending) => true,
+                Some(_) => false,
+            };
+            if !pending {
+                break;
+            }
+            waited = true;
+            slots = self.staging.ready.wait(slots).unwrap();
+        }
+        match slots.remove(name) {
+            Some(Staged::Ready(h)) => Ok(Some((h, waited))),
+            Some(Staged::Failed(e)) => Err(anyhow!("prefetch decode of {name}: {e}")),
+            _ => unreachable!("loop exits only on Ready/Failed"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::sparse::SparseDelta;
+    use crate::util::rng::Rng;
+
+    fn shira(rng: &mut Rng, name: &str, dim: usize, k: usize) -> ShiraAdapter {
+        let idx = rng.sample_indices(dim * dim, k);
+        let mut d = vec![0.0; k];
+        rng.fill_normal(&mut d, 0.0, 0.5);
+        ShiraAdapter {
+            name: name.into(),
+            strategy: "rand".into(),
+            tensors: vec![("w".into(), SparseDelta::new(dim, dim, idx, d))],
+        }
+    }
+
+    #[test]
+    fn fetch_decodes_and_caches() {
+        let mut rng = Rng::new(1);
+        let a = shira(&mut rng, "a", 16, 20);
+        let mut store = AdapterStore::new(1 << 20);
+        store.add_shira(&a);
+        let h = store.fetch("a").unwrap();
+        match &h.adapter {
+            AnyAdapter::Shira(s) => assert_eq!(**s, a),
+            _ => panic!("family"),
+        }
+        assert_eq!(h.plans.len(), 1);
+        assert_eq!(h.plans[0].total(), 20);
+        let (hits, misses) = store.cache_stats();
+        assert_eq!((hits, misses), (0, 1));
+        store.fetch("a").unwrap();
+        assert_eq!(store.cache_stats(), (1, 1));
+        assert!(store.fetch("ghost").is_err());
+    }
+
+    #[test]
+    fn v1_and_v2_flash_decode_identically() {
+        let mut rng = Rng::new(2);
+        let a = shira(&mut rng, "a", 32, 64);
+        for format in [Format::V1, Format::V2] {
+            let mut store = AdapterStore::with_config(
+                StoreConfig {
+                    cache_bytes: 1 << 20,
+                    format,
+                    prefetch_depth: 0,
+                },
+                None,
+            );
+            store.add_shira(&a);
+            match &store.fetch("a").unwrap().adapter {
+                AnyAdapter::Shira(s) => assert_eq!(**s, a, "{}", format.name()),
+                _ => panic!("family"),
+            }
+        }
+    }
+
+    #[test]
+    fn v2_flash_bytes_smaller_than_v1() {
+        let mut rng = Rng::new(3);
+        let a = shira(&mut rng, "a", 128, (128 * 128) / 50); // 2% sparse
+        let mk = |format| {
+            let mut s = AdapterStore::with_config(
+                StoreConfig {
+                    cache_bytes: 1 << 20,
+                    format,
+                    prefetch_depth: 0,
+                },
+                None,
+            );
+            s.add_shira(&a);
+            s.encoded_len("a").unwrap()
+        };
+        assert!(mk(Format::V2) < mk(Format::V1));
+    }
+
+    #[test]
+    fn oversized_adapter_served_uncached_without_flushing() {
+        // Satellite regression: a fetch whose decoded size exceeds the
+        // whole budget must serve an uncached Arc and leave residents.
+        let mut rng = Rng::new(4);
+        let small = shira(&mut rng, "small", 16, 10); // 80 bytes decoded
+        let big = shira(&mut rng, "big", 64, 1000); // 8000 bytes decoded
+        let mut store = AdapterStore::new(500);
+        store.add_shira(&small);
+        store.add_shira(&big);
+        store.fetch("small").unwrap();
+        let h = store.fetch("big").unwrap();
+        assert_eq!(h.adapter.name(), "big");
+        let stats = store.stats();
+        assert_eq!(stats.oversized_serves, 1);
+        assert_eq!(stats.evictions, 0);
+        assert_eq!(stats.resident_entries, 1); // "small" survived
+        store.fetch("small").unwrap();
+        assert_eq!(store.stats().hits, 1);
+    }
+
+    #[test]
+    fn pinned_adapters_survive_cache_pressure() {
+        let mut rng = Rng::new(5);
+        let mut store = AdapterStore::new(200); // fits ~2 adapters of 80 B
+        for name in ["a", "b", "c", "d"] {
+            store.add_shira(&shira(&mut rng, name, 16, 10));
+        }
+        store.fetch("a").unwrap();
+        assert!(store.pin("a"));
+        for name in ["b", "c", "d"] {
+            store.fetch(name).unwrap();
+        }
+        assert!(store.stats().evictions > 0);
+        assert!(store.is_pinned("a"));
+        store.fetch("a").unwrap();
+        assert_eq!(store.stats().hits, 1, "pinned adapter stayed resident");
+        assert!(store.unpin("a"));
+        assert!(!store.is_pinned("a"));
+    }
+
+    #[test]
+    fn prefetch_stages_decode_off_the_fetch_path() {
+        let mut rng = Rng::new(6);
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 1 << 20,
+                format: Format::V2,
+                prefetch_depth: 2,
+            },
+            Some(Arc::new(ThreadPool::new(2))),
+        );
+        let a = shira(&mut rng, "a", 32, 100);
+        store.add_shira(&a);
+        store.add_shira(&shira(&mut rng, "b", 32, 100));
+        store.prefetch(&["a".to_string(), "b".to_string(), "zz".to_string()]);
+        let stats = store.stats();
+        assert_eq!(stats.prefetch_issued, 2); // depth 2; "zz" unknown anyway
+        let h = store.fetch("a").unwrap();
+        match &h.adapter {
+            AnyAdapter::Shira(s) => assert_eq!(**s, a),
+            _ => panic!("family"),
+        }
+        let stats = store.stats();
+        assert_eq!(stats.prefetch_hits, 1);
+        // re-prefetching a resident adapter is a no-op
+        store.prefetch(&["a".to_string()]);
+        assert_eq!(store.stats().prefetch_issued, 2);
+    }
+
+    #[test]
+    fn prefetch_without_pool_is_a_noop() {
+        let mut rng = Rng::new(7);
+        let mut store = AdapterStore::new(1 << 20);
+        store.add_shira(&shira(&mut rng, "a", 16, 10));
+        store.prefetch(&["a".to_string()]);
+        assert_eq!(store.stats().prefetch_issued, 0);
+        store.fetch("a").unwrap();
+        assert_eq!(store.stats().prefetch_hits, 0);
+    }
+
+    #[test]
+    fn corrupt_flash_bytes_error_on_fetch_and_prefetch() {
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 1 << 20,
+                format: Format::V2,
+                prefetch_depth: 1,
+            },
+            Some(Arc::new(ThreadPool::new(1))),
+        );
+        store.add_encoded("junk", vec![0xAB; 64]);
+        assert!(store.fetch("junk").is_err());
+        store.prefetch(&["junk".to_string()]);
+        assert!(store.fetch("junk").is_err());
+    }
+}

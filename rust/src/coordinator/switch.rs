@@ -34,7 +34,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::adapter::sparse::{
-    scatter_restore, scatter_snapshot_apply, shards_for, PAR_MIN_NNZ,
+    scatter_restore, scatter_snapshot_apply, shards_for, ShardPlan, PAR_MIN_NNZ,
 };
 use crate::adapter::{LoraAdapter, ShiraAdapter};
 use crate::model::weights::WeightStore;
@@ -100,12 +100,19 @@ impl SwitchTiming {
 }
 
 /// What is currently applied to the resident weights.  Adapters are held
-/// by `Arc`, so activating a cached adapter copies no tensor data.
+/// by `Arc`, so activating a cached adapter copies no tensor data.  An
+/// active SHiRA adapter may carry store-built per-tensor shard plans
+/// (shard-aligned decode) so revert reuses them too.
 #[derive(Debug)]
 enum Active {
     None,
-    Shira { adapter: Arc<ShiraAdapter> },
-    Lora { adapter: Arc<LoraAdapter> },
+    Shira {
+        adapter: Arc<ShiraAdapter>,
+        plans: Option<Arc<Vec<ShardPlan>>>,
+    },
+    Lora {
+        adapter: Arc<LoraAdapter>,
+    },
 }
 
 /// One shard's worth of scatter work: raw cursors into a target tensor,
@@ -192,7 +199,7 @@ impl SwitchEngine {
     pub fn active_name(&self) -> Option<&str> {
         match &self.active {
             Active::None => None,
-            Active::Shira { adapter } => Some(adapter.name.as_str()),
+            Active::Shira { adapter, .. } => Some(adapter.name.as_str()),
             Active::Lora { adapter } => Some(adapter.name.as_str()),
         }
     }
@@ -227,6 +234,23 @@ impl SwitchEngine {
     /// in steady state — only first-visit arena growth, plus one
     /// O(threads) dispatch control block per parallel region.
     pub fn switch_to_shira_shared(&mut self, a: Arc<ShiraAdapter>, alpha: f32) -> SwitchTiming {
+        self.switch_to_shira_planned(a, None, alpha)
+    }
+
+    /// [`Self::switch_to_shira_shared`] with store-built per-tensor shard
+    /// plans (shard-aligned decode, DESIGN.md §10): the parallel dispatch
+    /// reuses `plans` instead of recomputing row-aligned partitions, so
+    /// the first switch through a store-decoded adapter skips plan
+    /// construction.  Plans are positional with `a.tensors`; a plan set
+    /// that does not match (wrong length or totals) is ignored and the
+    /// engine falls back to computing its own — the result is
+    /// bit-identical either way, plans only affect dispatch.
+    pub fn switch_to_shira_planned(
+        &mut self,
+        a: Arc<ShiraAdapter>,
+        plans: Option<Arc<Vec<ShardPlan>>>,
+        alpha: f32,
+    ) -> SwitchTiming {
         let mut t = self.revert_timing();
         let t0 = Instant::now();
         let total_nnz = a.param_count();
@@ -236,7 +260,7 @@ impl SwitchEngine {
         };
         match pool {
             Some(pool) => {
-                self.build_shira_tasks(&a, pool.threads(), true);
+                self.build_shira_tasks(&a, plans.as_deref(), pool.threads(), true);
                 let tasks = &self.tasks;
                 pool.scoped_for(tasks.len(), |i| {
                     // SAFETY: tasks cover disjoint idx ranges (row-aligned
@@ -256,17 +280,26 @@ impl SwitchEngine {
             }
         }
         t.fuse_us += t0.elapsed().as_secs_f64() * 1e6;
-        self.active = Active::Shira { adapter: a };
+        self.active = Active::Shira { adapter: a, plans };
         self.switches += 1;
         t
     }
 
     /// Build the flat shard-task list spanning every target tensor.
     /// `fresh` resizes arena buffers for a new snapshot; revert reuses the
-    /// buffers exactly as the preceding apply left them.
-    fn build_shira_tasks(&mut self, a: &ShiraAdapter, threads: usize, fresh: bool) {
+    /// buffers exactly as the preceding apply left them.  `plans` carries
+    /// store-built per-tensor shard plans; any mismatch falls back to a
+    /// freshly computed row-aligned plan.
+    fn build_shira_tasks(
+        &mut self,
+        a: &ShiraAdapter,
+        plans: Option<&Vec<ShardPlan>>,
+        threads: usize,
+        fresh: bool,
+    ) {
         self.tasks.clear();
-        for (target, delta) in &a.tensors {
+        let prebuilt = plans.filter(|p| p.len() == a.tensors.len());
+        for (ti, (target, delta)) in a.tensors.iter().enumerate() {
             if fresh {
                 Self::arena_buf_prepare(&mut self.arena, target, delta.nnz());
             }
@@ -277,7 +310,10 @@ impl SwitchEngine {
             debug_assert_eq!(buf.len(), delta.nnz());
             let w = self.weights.get_mut(target);
             debug_assert_eq!((w.rows, w.cols), (delta.rows, delta.cols));
-            let plan = delta.shard(shards_for(delta.nnz(), threads));
+            let plan = match prebuilt {
+                Some(p) if p[ti].total() == delta.nnz() => p[ti],
+                _ => delta.shard(shards_for(delta.nnz(), threads)),
+            };
             for s in 0..plan.len() {
                 let (lo, hi) = plan.range(s);
                 if lo == hi {
@@ -332,7 +368,7 @@ impl SwitchEngine {
         let t0 = Instant::now();
         match std::mem::replace(&mut self.active, Active::None) {
             Active::None => {}
-            Active::Shira { adapter } => {
+            Active::Shira { adapter, plans } => {
                 let total_nnz = adapter.param_count();
                 let pool = match &self.pool {
                     Some(p) if total_nnz >= PAR_MIN_NNZ && p.threads() > 1 => {
@@ -342,7 +378,7 @@ impl SwitchEngine {
                 };
                 match pool {
                     Some(pool) => {
-                        self.build_shira_tasks(&adapter, pool.threads(), false);
+                        self.build_shira_tasks(&adapter, plans.as_deref(), pool.threads(), false);
                         let tasks = &self.tasks;
                         pool.scoped_for(tasks.len(), |i| {
                             // SAFETY: same disjointness contract as apply.
@@ -541,6 +577,39 @@ mod tests {
         eng.revert();
         assert!(eng.weights.bit_equal(&base));
         assert_eq!(eng.switches, 6);
+    }
+
+    #[test]
+    fn planned_switch_bit_identical_to_unplanned() {
+        // Store-built shard plans (shard-aligned decode) only change
+        // dispatch, never bytes — including revert, which reuses them.
+        let (base, a) = big_weights_and_adapter(14);
+        let a = Arc::new(a);
+        let plans: Arc<Vec<ShardPlan>> = Arc::new(
+            a.tensors
+                .iter()
+                .map(|(_, d)| d.shard(shards_for(d.nnz(), 4)))
+                .collect(),
+        );
+        let mut reference = SwitchEngine::new(base.clone());
+        reference.switch_to_shira_shared(Arc::clone(&a), 0.8);
+        let applied = reference.weights.clone();
+        for threads in [2usize, 4] {
+            let pool = Arc::new(ThreadPool::new(threads));
+            let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
+            eng.switch_to_shira_planned(Arc::clone(&a), Some(Arc::clone(&plans)), 0.8);
+            assert!(eng.weights.bit_equal(&applied), "threads={threads}");
+            eng.revert();
+            assert!(eng.weights.bit_equal(&base), "revert threads={threads}");
+        }
+        // A mismatched plan set is ignored, not trusted.
+        let bogus: Arc<Vec<ShardPlan>> = Arc::new(Vec::new());
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
+        eng.switch_to_shira_planned(Arc::clone(&a), Some(bogus), 0.8);
+        assert!(eng.weights.bit_equal(&applied));
+        eng.revert();
+        assert!(eng.weights.bit_equal(&base));
     }
 
     #[test]

@@ -15,9 +15,10 @@
 //! See `rust/README.md` for the architecture map and DESIGN.md for the
 //! per-subsystem invariants.
 
-// Every public item in the serving core (adapter, coordinator, model, and
-// the bench harness) is documented; modules still carrying
-// `allow(missing_docs)` below are tracked for a follow-up docs pass.
+// Every public item in the serving core (adapter, coordinator, model) and
+// the substrate it leans on (benchlib, threadpool, rng, stats, json) is
+// documented; modules still carrying `allow(missing_docs)` below are
+// tracked for a follow-up docs pass.
 #![warn(missing_docs)]
 
 pub mod adapter;

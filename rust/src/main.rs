@@ -9,6 +9,8 @@
 //!   switch-bench  quick Fig.5-style scatter-vs-fuse sweep
 //!   repro         regenerate a paper table/figure (or `--exp all`)
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use shira::adapter::io;
@@ -16,6 +18,8 @@ use shira::adapter::mask::MaskStrategy;
 use shira::config::RunConfig;
 use shira::coordinator::switch::{Policy, SwitchEngine};
 use shira::coordinator::server::Server;
+use shira::coordinator::store::StoreConfig;
+use shira::util::threadpool::ThreadPool;
 use shira::data::tasks::{Task, ALL_TASKS};
 use shira::data::trace::{generate_trace, switch_count, TracePattern};
 use shira::model::weights::WeightStore;
@@ -41,8 +45,9 @@ USAGE: shira <subcommand> [flags]
   train --kind <lora|dora|shira-{struct,rand,wm,grad,snip}|shira-wm-dora>
         [--task <name>|mixture] [--steps N] [--out adapter.bin]
   eval  --adapter <file> [--tasks all|t1,t2] [--eval-examples N]
-  serve --policy <shira|lora-fuse|unfused> [--pattern bursty|uniform|rr]
-        [--trace-len N] [--adapters N]
+  serve --policy <shira|fusion|lora-fuse|unfused> [--pattern bursty|uniform|rr]
+        [--trace-len N] [--adapters N] [--cache-bytes N]
+        [--prefetch-depth N] [--format v1|v2|v2-f16]
   fuse  --out <file> <a.shira> <b.shira> ...
   switch-bench [--dims 512,1024,2048,4096] [--frac 0.02] [--rank 32]
   repro --exp <table1..6|fig4|fig5|fig6|fig7|orthogonality|all> [--fast]
@@ -259,7 +264,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_adapters = args.get_usize("adapters", 4)?;
     let meta = rt.manifest.model("llama").map_err(|e| anyhow!("{e}"))?;
     let base = WeightStore::init(&meta.params, cfg.seed);
-    let mut server = Server::new(&rt, base, policy, "llama", cfg.cache_bytes)?;
+    let default_cfg = StoreConfig::default();
+    let store_cfg = StoreConfig {
+        cache_bytes: cfg.cache_bytes,
+        prefetch_depth: args.get_usize("prefetch-depth", default_cfg.prefetch_depth)?,
+        format: {
+            let f = args.get_or("format", default_cfg.format.name());
+            shira::adapter::io::Format::parse(f)
+                .ok_or_else(|| anyhow!("bad --format {f} (expected v1|v2|v2-f16)"))?
+        },
+    };
+    let pool = Arc::new(ThreadPool::host_sized());
+    let mut server = Server::with_store_config(&rt, base, policy, "llama", store_cfg, pool)?;
 
     // synthesize adapters
     let mut rng = Rng::new(cfg.seed);
@@ -271,8 +287,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     .shira
                     .iter()
                     .map(|seg| {
-                        let numel = seg.shape.0 * seg.shape.1;
-                        let idx = rng.sample_indices(numel, seg.k);
+                        let idx = rng.sample_indices(seg.numel(), seg.k);
                         let mut d = vec![0.0f32; seg.k];
                         rng.fill_normal(&mut d, 0.0, 0.01);
                         (
@@ -325,6 +340,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         names.clone()
     };
+    let flash_bytes: usize = names
+        .iter()
+        .filter_map(|n| server.store.encoded_len(n))
+        .sum();
+    println!(
+        "flash: {} adapters, {} encoded ({} format), cache budget {}, prefetch depth {}",
+        names.len(),
+        shira::util::alloc::fmt_bytes(flash_bytes),
+        server.store.format().name(),
+        shira::util::alloc::fmt_bytes(cfg.cache_bytes),
+        server.store.prefetch_depth(),
+    );
     let trace = generate_trace(&trace_names, cfg.trace_len, pattern, 1e4, cfg.seed);
     println!(
         "serving {} requests over {} adapter sets (pattern switches: {}) policy={}",

@@ -55,6 +55,14 @@ pub struct ShiraSeg {
     pub mag_len: Option<usize>,
 }
 
+impl ShiraSeg {
+    /// Elements of the target tensor (rows × cols) — the index space the
+    /// segment's `k` sparse entries are drawn from.
+    pub fn numel(&self) -> usize {
+        self.shape.0 * self.shape.1
+    }
+}
+
 /// One target's segment of the LoRA/DoRA theta vector.
 #[derive(Clone, Debug)]
 pub struct LoraSeg {

@@ -8,19 +8,40 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A parsed JSON value.  Objects preserve key order (a `Vec`, not a map),
+/// numbers are f64.
+///
+/// # Examples
+///
+/// ```
+/// use shira::util::json::{self, Json};
+///
+/// let j = json::parse(r#"{"dim": 64, "name": "llama"}"#).unwrap();
+/// assert_eq!(j.get("dim").and_then(Json::as_usize), Some(64));
+/// assert_eq!(j.path("name").and_then(Json::as_str), Some("llama"));
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (kept as f64; manifest integers are < 2^40).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object as (key, value) pairs in source order.
     Obj(Vec<(String, Json)>),
 }
 
+/// Parse failure with the byte offset where it happened.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset into the source text.
     pub pos: usize,
 }
 
@@ -34,6 +55,8 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     // -- accessors -------------------------------------------------------
+
+    /// Object field lookup (None on non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -50,6 +73,7 @@ impl Json {
         Some(cur)
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -57,10 +81,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -68,6 +94,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -75,6 +102,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(xs) => Some(xs),
@@ -82,6 +110,7 @@ impl Json {
         }
     }
 
+    /// The (key, value) pairs in source order, if this is an object.
     pub fn as_obj(&self) -> Option<&[(String, Json)]> {
         match self {
             Json::Obj(kvs) => Some(kvs),
@@ -98,25 +127,32 @@ impl Json {
     }
 
     // -- construction helpers -------------------------------------------
+
+    /// Build an object from (key, value) pairs.
     pub fn obj(kvs: Vec<(&str, Json)>) -> Json {
         Json::Obj(kvs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a number.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// Build a string.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
 
     // -- serialization ---------------------------------------------------
+
+    /// Serialize with newlines and two-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, true);
         out
     }
 
+    /// Serialize without any whitespace.
     pub fn to_string_compact(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, false);
@@ -202,6 +238,7 @@ fn write_escaped(out: &mut String, s: &str) {
 // Parser
 // ---------------------------------------------------------------------------
 
+/// Parse a complete JSON document (trailing characters are an error).
 pub fn parse(src: &str) -> Result<Json, JsonError> {
     let mut p = Parser {
         b: src.as_bytes(),

@@ -1,23 +1,19 @@
 //! Substrate layer: everything the framework needs that the offline vendor
 //! set does not provide (see DESIGN.md §5, S19/S21).
 
-// benchlib (the public bench/regression harness) is fully documented and
-// doc-tested; the remaining substrate modules are tracked for a follow-up
-// docs pass.
+// benchlib, threadpool, rng, stats and json (the substrate the serving
+// core leans on) are fully documented and doc-tested; alloc/cli/log/
+// proptest remain for a follow-up docs pass.
 #[allow(missing_docs)]
 pub mod alloc;
 pub mod benchlib;
 #[allow(missing_docs)]
 pub mod cli;
-#[allow(missing_docs)]
 pub mod json;
 #[allow(missing_docs)]
 pub mod log;
 #[allow(missing_docs)]
 pub mod proptest;
-#[allow(missing_docs)]
 pub mod rng;
-#[allow(missing_docs)]
 pub mod stats;
-#[allow(missing_docs)]
 pub mod threadpool;

@@ -25,7 +25,19 @@ fn fnv1a(label: &str) -> u64 {
     h
 }
 
-/// xoshiro256++ generator.
+/// xoshiro256++ generator with named sub-streams.
+///
+/// # Examples
+///
+/// ```
+/// use shira::util::rng::Rng;
+///
+/// let mut a = Rng::new(42);
+/// let mut b = Rng::new(42);
+/// assert_eq!(a.next_u64(), b.next_u64()); // fully deterministic
+/// let mut masks = Rng::new(42).stream("mask/rand");
+/// assert!(masks.below(10) < 10);
+/// ```
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
@@ -34,6 +46,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Generator seeded from `seed` via SplitMix64 state expansion.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let mut s = [0u64; 4];
@@ -52,6 +65,7 @@ impl Rng {
         Rng::new(self.s[0] ^ fnv1a(label).rotate_left(17) ^ self.s[2])
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -68,6 +82,7 @@ impl Rng {
         result
     }
 
+    /// Next raw 32-bit output (upper half of [`Self::next_u64`]).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
@@ -79,6 +94,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform f32 in [0, 1).
     #[inline]
     pub fn uniform_f32(&mut self) -> f32 {
         self.uniform() as f32
@@ -126,6 +142,7 @@ impl Rng {
         }
     }
 
+    /// Gaussian f32 with the given mean and standard deviation.
     pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
         mean + std * self.normal() as f32
     }

@@ -2,6 +2,18 @@
 //! histograms — used by serving metrics and the bench harness.
 
 /// Online mean/variance (Welford) with min/max tracking.
+///
+/// # Examples
+///
+/// ```
+/// use shira::util::stats::Moments;
+///
+/// let mut m = Moments::new();
+/// for x in [1.0, 2.0, 3.0] { m.push(x); }
+/// assert_eq!(m.count(), 3);
+/// assert!((m.mean() - 2.0).abs() < 1e-12);
+/// assert_eq!((m.min(), m.max()), (1.0, 3.0));
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct Moments {
     n: u64,
@@ -12,6 +24,7 @@ pub struct Moments {
 }
 
 impl Moments {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Moments {
             n: 0,
@@ -22,6 +35,7 @@ impl Moments {
         }
     }
 
+    /// Fold one observation in (O(1), numerically stable).
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -31,10 +45,12 @@ impl Moments {
         self.max = self.max.max(x);
     }
 
+    /// Observations folded so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean (0 before the first push).
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -48,10 +64,12 @@ impl Moments {
         }
     }
 
+    /// Smallest observation (+inf before the first push).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation (−inf before the first push).
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -72,7 +90,18 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     }
 }
 
-/// Sample container with summary helpers.
+/// Sample container with summary helpers (lazy sort for percentiles).
+///
+/// # Examples
+///
+/// ```
+/// use shira::util::stats::Sample;
+///
+/// let mut s = Sample::new();
+/// for x in [5.0, 1.0, 3.0] { s.push(x); }
+/// assert_eq!(s.percentile(50.0), 3.0);
+/// assert!((s.mean() - 3.0).abs() < 1e-12);
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct Sample {
     xs: Vec<f64>,
@@ -80,6 +109,7 @@ pub struct Sample {
 }
 
 impl Sample {
+    /// Empty sample.
     pub fn new() -> Self {
         Sample {
             xs: Vec::new(),
@@ -87,15 +117,18 @@ impl Sample {
         }
     }
 
+    /// Append one observation.
     pub fn push(&mut self, x: f64) {
         self.xs.push(x);
         self.sorted = false;
     }
 
+    /// Observations collected.
     pub fn len(&self) -> usize {
         self.xs.len()
     }
 
+    /// True when no observations were collected.
     pub fn is_empty(&self) -> bool {
         self.xs.is_empty()
     }
@@ -107,11 +140,13 @@ impl Sample {
         }
     }
 
+    /// Exact interpolated percentile `p` in [0, 100] (sorts lazily).
     pub fn percentile(&mut self, p: f64) -> f64 {
         self.ensure_sorted();
         percentile(&self.xs, p)
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.xs.is_empty() {
             return 0.0;
@@ -119,6 +154,7 @@ impl Sample {
         self.xs.iter().sum::<f64>() / self.xs.len() as f64
     }
 
+    /// Sample standard deviation (0 with fewer than two observations).
     pub fn std(&self) -> f64 {
         if self.xs.len() < 2 {
             return 0.0;
@@ -138,6 +174,8 @@ impl Sample {
         percentile(&devs, 50.0)
     }
 
+    /// The raw observations in insertion (or, after a percentile call,
+    /// sorted) order.
     pub fn values(&self) -> &[f64] {
         &self.xs
     }
@@ -158,6 +196,7 @@ impl Default for LatencyHist {
 }
 
 impl LatencyHist {
+    /// Empty histogram covering [1us, ~2^40us).
     pub fn new() -> Self {
         LatencyHist {
             buckets: vec![0; 40],
@@ -166,6 +205,7 @@ impl LatencyHist {
         }
     }
 
+    /// Record one latency in microseconds.
     pub fn record_us(&mut self, us: f64) {
         let b = if us < 1.0 {
             0
@@ -177,14 +217,17 @@ impl LatencyHist {
         self.sum_us += us;
     }
 
+    /// Record one latency from a [`std::time::Duration`].
     pub fn record(&mut self, d: std::time::Duration) {
         self.record_us(d.as_secs_f64() * 1e6);
     }
 
+    /// Latencies recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Exact mean latency in microseconds (tracked outside the buckets).
     pub fn mean_us(&self) -> f64 {
         if self.count == 0 {
             0.0

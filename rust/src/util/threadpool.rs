@@ -28,10 +28,12 @@ unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
+    /// Wrap a raw pointer for cross-thread use (see the type contract).
     pub fn new(p: *mut T) -> Self {
         SendPtr(p)
     }
 
+    /// The wrapped pointer.
     pub fn get(self) -> *mut T {
         self.0
     }
@@ -46,6 +48,20 @@ struct Shared {
     shutdown: Mutex<bool>,
 }
 
+/// Fixed-size worker pool with fire-and-forget jobs ([`Self::execute`]),
+/// an ordered parallel map ([`Self::map`]) and a starvation-proof scoped
+/// parallel-for ([`Self::scoped_for`]).
+///
+/// # Examples
+///
+/// ```
+/// use shira::util::threadpool::ThreadPool;
+///
+/// let pool = ThreadPool::new(4);
+/// let offset = 10u64; // borrowed from the stack: no 'static bound
+/// let out = pool.map(vec![1u64, 2, 3], |x| x + offset);
+/// assert_eq!(out, vec![11, 12, 13]);
+/// ```
 pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
@@ -128,6 +144,7 @@ fn drive(body: BodyPtr, next: &AtomicUsize, n: usize) {
 }
 
 impl ThreadPool {
+    /// Pool with `n_threads` workers (minimum 1).
     pub fn new(n_threads: usize) -> Self {
         let n = n_threads.max(1);
         let shared = Arc::new(Shared {
@@ -158,6 +175,7 @@ impl ThreadPool {
         ThreadPool::new(n)
     }
 
+    /// Number of worker threads.
     pub fn threads(&self) -> usize {
         self.workers.len()
     }

@@ -1,0 +1,273 @@
+//! Acceptance tests for the adapter lifecycle subsystem: serving is
+//! bit-identical no matter how an adapter reaches the engine (cold miss,
+//! cache hit, prefetch) and no matter which on-flash format stored it
+//! (v1 or v2).  Runs entirely at the engine level, so no compiled
+//! artifacts are needed.
+
+use std::sync::Arc;
+
+use shira::adapter::io::Format;
+use shira::adapter::sparse::SparseDelta;
+use shira::adapter::ShiraAdapter;
+use shira::coordinator::fusion_engine::{FusionEngine, FusionPlan};
+use shira::coordinator::store::{AdapterStore, AnyAdapter, StoreConfig};
+use shira::coordinator::switch::SwitchEngine;
+use shira::model::weights::WeightStore;
+use shira::util::rng::Rng;
+use shira::util::threadpool::ThreadPool;
+
+const DIM: usize = 96;
+
+fn base_weights(seed: u64) -> WeightStore {
+    WeightStore::init(
+        &[("l0.wq".into(), vec![DIM, DIM]), ("l0.wk".into(), vec![DIM, DIM])],
+        seed,
+    )
+}
+
+fn make_adapter(rng: &mut Rng, name: &str, k: usize) -> ShiraAdapter {
+    let mk = |rng: &mut Rng| {
+        let idx = rng.sample_indices(DIM * DIM, k);
+        let mut d = vec![0.0; k];
+        rng.fill_normal(&mut d, 0.0, 0.5);
+        SparseDelta::new(DIM, DIM, idx, d)
+    };
+    ShiraAdapter {
+        name: name.into(),
+        strategy: "rand".into(),
+        tensors: vec![("l0.wq".into(), mk(rng)), ("l0.wk".into(), mk(rng))],
+    }
+}
+
+fn adapters() -> Vec<ShiraAdapter> {
+    // 2 tensors × 3000 nnz crosses PAR_MIN_NNZ, so pooled runs exercise
+    // the store-built shard plans on the parallel dispatch path.
+    let mut rng = Rng::new(0xBEEF);
+    (0..4)
+        .map(|i| make_adapter(&mut rng, &format!("ad{i}"), 3000))
+        .collect()
+}
+
+/// The switch sequence a bursty trace would produce.
+fn switch_sequence() -> Vec<usize> {
+    vec![0, 1, 0, 2, 3, 1, 2, 0, 3, 2]
+}
+
+/// Reference: eagerly-decoded adapters through a serial engine, recording
+/// the weight bytes after every switch.
+fn reference_states(adapters: &[ShiraAdapter]) -> (Vec<WeightStore>, WeightStore) {
+    let base = base_weights(7);
+    let mut eng = SwitchEngine::new(base.clone());
+    let mut states = Vec::new();
+    for &i in &switch_sequence() {
+        eng.switch_to_shira(&adapters[i], 1.0);
+        states.push(eng.weights.clone());
+    }
+    eng.revert();
+    assert!(eng.weights.bit_equal(&base));
+    (states, base)
+}
+
+fn run_through_store(
+    adapters: &[ShiraAdapter],
+    format: Format,
+    cache_bytes: usize,
+    prefetch: bool,
+    threads: usize,
+) -> (Vec<WeightStore>, WeightStore, AdapterStore) {
+    let pool = Arc::new(ThreadPool::new(threads));
+    let mut store = AdapterStore::with_config(
+        StoreConfig {
+            cache_bytes,
+            format,
+            prefetch_depth: if prefetch { 2 } else { 0 },
+        },
+        Some(Arc::clone(&pool)),
+    );
+    for a in adapters {
+        store.add_shira(a);
+    }
+    let base = base_weights(7);
+    let mut eng = SwitchEngine::with_pool(base, Some(pool));
+    let seq = switch_sequence();
+    let mut states = Vec::new();
+    for (step, &i) in seq.iter().enumerate() {
+        if prefetch {
+            // trace lookahead: stage the next adapters in the background
+            let ahead: Vec<String> = seq[step + 1..]
+                .iter()
+                .take(2)
+                .map(|&j| adapters[j].name.clone())
+                .collect();
+            store.prefetch(&ahead);
+        }
+        let h = store.fetch(&adapters[i].name).unwrap();
+        match &h.adapter {
+            AnyAdapter::Shira(a) => {
+                eng.switch_to_shira_planned(Arc::clone(a), Some(Arc::clone(&h.plans)), 1.0);
+            }
+            AnyAdapter::Lora(_) => panic!("family"),
+        }
+        states.push(eng.weights.clone());
+    }
+    eng.revert();
+    let final_weights = eng.weights.clone();
+    (states, final_weights, store)
+}
+
+#[test]
+fn serving_bit_identical_across_formats_and_fetch_paths() {
+    let adapters = adapters();
+    let (want, base) = reference_states(&adapters);
+    let one_adapter = adapters[0].nbytes() + 1;
+    // (format, cache budget, prefetch): cold-miss heavy (evicting cache),
+    // all-hits (big cache), and prefetch-driven — for both formats.
+    let cases = [
+        (Format::V1, 64 << 20, false),
+        (Format::V1, one_adapter, false),
+        (Format::V2, 64 << 20, false),
+        (Format::V2, one_adapter, false),
+        (Format::V2, one_adapter, true),
+        (Format::V2, 64 << 20, true),
+    ];
+    for &(format, cache_bytes, prefetch) in &cases {
+        for threads in [1usize, 4] {
+            let (got, final_w, store) =
+                run_through_store(&adapters, format, cache_bytes, prefetch, threads);
+            for (step, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    g.bit_equal(w),
+                    "weights diverged at step {step} (format={} cache={cache_bytes} \
+                     prefetch={prefetch} threads={threads})",
+                    format.name()
+                );
+            }
+            assert!(final_w.bit_equal(&base), "revert not exact");
+            let stats = store.stats();
+            if cache_bytes > 1 << 20 {
+                assert!(stats.hits > 0, "big cache should hit");
+            } else {
+                assert!(stats.evictions > 0, "small cache should evict");
+            }
+            if prefetch {
+                assert!(stats.prefetch_issued > 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn v2_flash_is_smaller_for_paper_sparsity() {
+    // 400 nnz over 96×96 ≈ 4.3% here; also check a 1–2% sparse adapter.
+    let mut rng = Rng::new(3);
+    let sparse = make_adapter(&mut rng, "sp", (DIM * DIM) / 64);
+    for a in adapters().iter().chain(std::iter::once(&sparse)) {
+        let mut v1 = AdapterStore::with_config(
+            StoreConfig { cache_bytes: 1 << 20, format: Format::V1, prefetch_depth: 0 },
+            None,
+        );
+        let mut v2 = AdapterStore::with_config(
+            StoreConfig { cache_bytes: 1 << 20, format: Format::V2, prefetch_depth: 0 },
+            None,
+        );
+        v1.add_shira(a);
+        v2.add_shira(a);
+        assert!(
+            v2.encoded_len(&a.name).unwrap() < v1.encoded_len(&a.name).unwrap(),
+            "{}",
+            a.name
+        );
+    }
+}
+
+#[test]
+fn fusion_bit_identical_for_v1_and_v2_store_handles() {
+    // Fused-mode serving over Arc handles fetched from the store: v1 and
+    // v2 flash produce identical fused weights through identical
+    // apply_set sequences, and both match a serial rebuild.
+    let adapters = adapters();
+    let sets: Vec<Vec<(String, f32)>> = vec![
+        vec![("ad0".into(), 1.0), ("ad1".into(), 0.5)],
+        vec![("ad1".into(), 0.5), ("ad2".into(), 2.0)],
+        vec![("ad0".into(), 1.0), ("ad2".into(), 2.0), ("ad3".into(), 1.0)],
+        vec![("ad3".into(), 0.25)],
+    ];
+    let mut results: Vec<WeightStore> = Vec::new();
+    for format in [Format::V1, Format::V2] {
+        let pool = Arc::new(ThreadPool::new(3));
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 64 << 20,
+                format,
+                prefetch_depth: 0,
+            },
+            Some(Arc::clone(&pool)),
+        );
+        for a in &adapters {
+            store.add_shira(a);
+        }
+        let mut roster = Vec::new();
+        for a in &adapters {
+            match &store.fetch(&a.name).unwrap().adapter {
+                AnyAdapter::Shira(s) => roster.push(Arc::clone(s)),
+                AnyAdapter::Lora(_) => panic!("family"),
+            }
+            assert!(store.pin(&a.name), "roster member must pin after fetch");
+        }
+        let base = base_weights(11);
+        let mut weights = base.clone();
+        let plan = FusionPlan::build(roster).unwrap();
+        let mut eng = FusionEngine::with_pool(plan, Some(pool));
+        eng.activate(&mut weights).unwrap();
+        let mut final_states = Vec::new();
+        for set in &sets {
+            eng.apply_set(&mut weights, set).unwrap();
+            let reference = eng.rebuild_reference(&base).expect("active engine");
+            assert!(
+                weights.bit_equal(&reference),
+                "incremental state != rebuild ({})",
+                format.name()
+            );
+            final_states.push(weights.clone());
+        }
+        eng.deactivate(&mut weights);
+        assert!(weights.bit_equal(&base), "deactivate not exact");
+        results.push(final_states.pop().unwrap());
+    }
+    assert!(
+        results[0].bit_equal(&results[1]),
+        "v1-backed and v2-backed fusion diverged"
+    );
+}
+
+#[test]
+fn pinned_roster_survives_cache_pressure_from_switch_traffic() {
+    // The invariant behind fused-mode serving: roster members stay
+    // resident (pinned) while unrelated switch traffic thrashes the cache.
+    let adapters = adapters();
+    let one_adapter = adapters[0].nbytes() + 1;
+    let mut store = AdapterStore::with_config(
+        StoreConfig {
+            cache_bytes: 2 * one_adapter,
+            format: Format::V2,
+            prefetch_depth: 0,
+        },
+        None,
+    );
+    for a in &adapters {
+        store.add_shira(a);
+    }
+    store.fetch("ad0").unwrap();
+    assert!(store.pin("ad0"));
+    for _ in 0..3 {
+        for name in ["ad1", "ad2", "ad3"] {
+            store.fetch(name).unwrap();
+        }
+    }
+    let stats = store.stats();
+    assert!(stats.evictions > 0);
+    assert!(store.is_pinned("ad0"));
+    let before_hits = store.stats().hits;
+    store.fetch("ad0").unwrap();
+    assert_eq!(store.stats().hits, before_hits + 1, "pinned member decoded again");
+}
