@@ -145,6 +145,7 @@ fn main() {
                 cache_bytes: 64 << 20,
                 format: Format::V2,
                 prefetch_depth: 0,
+                ..StoreConfig::default()
             },
             Some(Arc::clone(&pool)),
         );
@@ -168,6 +169,7 @@ fn main() {
                 cache_bytes: one_slot,
                 format: Format::V2,
                 prefetch_depth: 0,
+                ..StoreConfig::default()
             },
             Some(Arc::clone(&pool)),
         );
@@ -198,6 +200,7 @@ fn main() {
                 cache_bytes: one_slot,
                 format: Format::V2,
                 prefetch_depth: 1,
+                ..StoreConfig::default()
             },
             Some(Arc::clone(&pool)),
         );

@@ -8,17 +8,24 @@
 //! paths and the parallel LoRA fuse baseline across thread counts, after
 //! verifying each parallel path is bit-identical to its serial twin.
 //!
+//! Part 3 (direct transitions): `SwitchEngine::transition_to` (one pass
+//! over the A∪B support union, one dispatch wave) vs revert+apply, across
+//! support-overlap ratios (0% / 50% / 95%) and nnz scales — gated on
+//! bit-identity before timing.  These stages land in their own baseline
+//! document, `rust/BENCH_transition.json`.
+//!
 //! Run: `cargo bench --bench bench_switch`.  Flags:
 //!   --check           compare against the committed rust/BENCH_switch.json
+//!                     AND rust/BENCH_transition.json
 //!   --tolerance 0.5   fractional slowdown allowed by --check (default 0.5)
-//!   --save-baseline   rewrite rust/BENCH_switch.json from this run
+//!   --save-baseline   rewrite both committed baselines from this run
 //! `SHIRA_BENCH_FAST=1` shrinks the protocol and dims for CI smoke runs.
 
 use std::sync::Arc;
 
 use shira::adapter::sparse::SparseDelta;
-use shira::adapter::ShiraAdapter;
-use shira::coordinator::switch::SwitchEngine;
+use shira::adapter::{AdapterTransition, ShiraAdapter};
+use shira::coordinator::switch::{SwitchEngine, SwitchPath};
 use shira::model::tensor::Tensor2;
 use shira::model::weights::WeightStore;
 use shira::util::benchlib::{black_box, finish_bench, results_to_entries, Bencher};
@@ -37,6 +44,31 @@ fn random_sparse(rng: &mut Rng, dim: usize, frac: f64) -> SparseDelta {
     let mut delta = vec![0.0f32; k];
     rng.fill_normal(&mut delta, 0.0, 0.1);
     SparseDelta::new(dim, dim, idx, delta)
+}
+
+/// A delta sharing ~`overlap` of `base`'s support (rest resampled), same
+/// nnz — the knob of the Part-3 transition table.
+fn overlapping_sparse(rng: &mut Rng, base: &SparseDelta, overlap: f64) -> SparseDelta {
+    use std::collections::HashSet;
+    let k = base.nnz();
+    let shared = (k as f64 * overlap) as usize;
+    let mut seen: HashSet<u32> = base.idx[..shared].iter().copied().collect();
+    while seen.len() < k {
+        seen.insert(rng.below(base.numel()) as u32);
+    }
+    let mut idx: Vec<u32> = seen.into_iter().collect();
+    idx.sort_unstable();
+    let mut delta = vec![0.0f32; k];
+    rng.fill_normal(&mut delta, 0.0, 0.1);
+    SparseDelta::new(base.rows, base.cols, idx, delta)
+}
+
+fn shira_of(name: &str, delta: SparseDelta) -> ShiraAdapter {
+    ShiraAdapter {
+        name: name.into(),
+        strategy: "rand".into(),
+        tensors: vec![("w".into(), delta)],
+    }
 }
 
 fn main() {
@@ -165,6 +197,82 @@ fn main() {
         });
     }
 
+    // -- Part 3: direct transitions vs revert+apply -----------------------
+    // One engine cycles A→B→A via transition_to (one union pass, one
+    // dispatch wave per switch); the reference cycles the same pair via
+    // switch_to (revert + apply, two passes, two waves).  Bit-identity is
+    // asserted before any timing.  The transition should win at EVERY
+    // overlap ratio: at 0% the union walk equals revert+apply's total
+    // work but saves a dispatch wave; overlap shrinks the union further.
+    let t_threads = 4usize;
+    let nnz_scales: &[usize] = if fast { &[8_000] } else { &[8_000, 80_000] };
+    let overlaps = [0.0f64, 0.5, 0.95];
+    let t_dim = if fast { 1024 } else { 2048 };
+    let mut transition_rows = Vec::new();
+    for &nnz in nnz_scales {
+        let frac = nnz as f64 / (t_dim * t_dim) as f64;
+        let da = random_sparse(&mut rng, t_dim, frac);
+        let w0 = random_weight(&mut rng, t_dim);
+        for &ov in &overlaps {
+            b.group(&format!("transition/nnz{nnz}/ov{}", (ov * 100.0) as usize));
+            let db = overlapping_sparse(&mut rng, &da, ov);
+            let a = Arc::new(shira_of("a", da.clone()));
+            let bb = Arc::new(shira_of("b", db));
+            let tp_ab = AdapterTransition::build(&a, &bb, t_threads).unwrap();
+            let tp_ba = AdapterTransition::build(&bb, &a, t_threads).unwrap();
+            let mut store = WeightStore::new();
+            store.insert("w", w0.clone());
+
+            // Bit-identity gate: transition == revert+apply, and both
+            // engines revert to base exactly.
+            {
+                let pool = Arc::new(ThreadPool::new(t_threads));
+                let mut direct =
+                    SwitchEngine::with_pool(store.clone(), Some(Arc::clone(&pool)));
+                let mut reference = SwitchEngine::with_pool(store.clone(), Some(pool));
+                direct.switch_to_shira_shared(Arc::clone(&a), 1.0);
+                reference.switch_to_shira_shared(Arc::clone(&a), 1.0);
+                for (next, tp) in [(&bb, &tp_ab), (&a, &tp_ba), (&bb, &tp_ab)] {
+                    let (_t, path) =
+                        direct.transition_to(Arc::clone(next), None, tp, 1.0);
+                    assert_eq!(path, SwitchPath::Transition, "plan rejected");
+                    reference.switch_to_shira_shared(Arc::clone(next), 1.0);
+                    assert!(
+                        direct.weights.bit_equal(&reference.weights),
+                        "transition != revert+apply (nnz {nnz}, overlap {ov})"
+                    );
+                }
+                direct.revert();
+                reference.revert();
+                assert!(direct.weights.bit_equal(&store));
+                assert!(reference.weights.bit_equal(&store));
+            }
+
+            let pool = Arc::new(ThreadPool::new(t_threads));
+            let mut direct =
+                SwitchEngine::with_pool(store.clone(), Some(Arc::clone(&pool)));
+            direct.switch_to_shira_shared(Arc::clone(&a), 1.0);
+            let mut flip = false;
+            let tr = b.bench("transition_cycle", || {
+                // alternate A→B / B→A so steady state stays a transition
+                let (next, tp) = if flip { (&a, &tp_ba) } else { (&bb, &tp_ab) };
+                flip = !flip;
+                direct.transition_to(Arc::clone(next), None, tp, 1.0);
+                black_box(&direct.weights.get("w").data[0]);
+            });
+            let mut reference = SwitchEngine::with_pool(store.clone(), Some(pool));
+            reference.switch_to_shira_shared(Arc::clone(&a), 1.0);
+            let mut flip = false;
+            let ra = b.bench("revert_apply_cycle", || {
+                let next = if flip { &a } else { &bb };
+                flip = !flip;
+                reference.switch_to_shira_shared(Arc::clone(next), 1.0);
+                black_box(&reference.weights.get("w").data[0]);
+            });
+            transition_rows.push((nnz, ov, tr.mean_ns, ra.mean_ns));
+        }
+    }
+
     // -- summaries --------------------------------------------------------
     println!("\n== Fig. 5 summary (fuse / scatter) ==");
     println!("| dim | speedup |");
@@ -183,9 +291,31 @@ fn main() {
         }
     }
 
+    println!("\n== direct transition vs revert+apply (dim {t_dim}, t{t_threads}) ==");
+    println!("| nnz | overlap | transition (us) | revert+apply (us) | speedup |");
+    println!("|---|---|---|---|---|");
+    for (nnz, ov, tr, ra) in &transition_rows {
+        println!(
+            "| {nnz} | {:.0}% | {:.1} | {:.1} | {:.2}x |",
+            ov * 100.0,
+            tr / 1e3,
+            ra / 1e3,
+            ra / tr
+        );
+    }
+    println!("expectation: transition wins at every overlap ratio (one union \
+              pass + one dispatch wave vs two passes + two waves)");
+
     b.write_results("bench_switch");
-    let ok = finish_bench("switch", &results_to_entries(b.results()));
-    if !ok {
+    // Part-3 stages gate against their own committed baseline so the
+    // transition-vs-revert+apply table can be regenerated independently.
+    let (transition_entries, switch_entries): (Vec<_>, Vec<_>) =
+        results_to_entries(b.results())
+            .into_iter()
+            .partition(|e| e.name.starts_with("transition/"));
+    let ok_switch = finish_bench("switch", &switch_entries);
+    let ok_transition = finish_bench("transition", &transition_entries);
+    if !(ok_switch && ok_transition) {
         std::process::exit(1);
     }
 }

@@ -145,6 +145,121 @@ impl ShiraAdapter {
     }
 }
 
+/// Precomputed direct A→B switch layout across every target tensor: one
+/// merged-support [`TransitionPlan`](sparse::TransitionPlan) per tensor
+/// of the incoming adapter, positional with its `tensors` vec.
+///
+/// Built off the serving thread (the store's transition-plan prefetch) and
+/// consumed by `SwitchEngine::transition_to`, which walks each union
+/// support once and dispatches all tensors' shards as ONE pool wave —
+/// instead of revert+apply's two full passes and two dispatch waves.
+///
+/// # Examples
+///
+/// ```
+/// use shira::adapter::sparse::SparseDelta;
+/// use shira::adapter::{AdapterTransition, ShiraAdapter};
+///
+/// let mk = |name: &str, idx: Vec<u32>| ShiraAdapter {
+///     name: name.into(),
+///     strategy: "rand".into(),
+///     tensors: vec![(
+///         "w".into(),
+///         SparseDelta::new(4, 4, idx.clone(), vec![1.0; idx.len()]),
+///     )],
+/// };
+/// let a = mk("a", vec![0, 5, 9]);
+/// let b = mk("b", vec![5, 7]);
+/// let t = AdapterTransition::build(&a, &b, 4).unwrap();
+/// assert_eq!((t.from.as_str(), t.to.as_str()), ("a", "b"));
+/// assert_eq!(t.union_nnz(), 4); // {0, 5, 7, 9}
+/// assert_eq!(t.overlap_nnz(), 1); // slot 5
+/// assert!(t.matches(&a, &b));
+/// assert!(!t.matches(&b, &a));
+/// ```
+#[derive(Clone, Debug)]
+pub struct AdapterTransition {
+    /// Name of the outgoing (currently-applied) adapter.
+    pub from: String,
+    /// Name of the incoming adapter.
+    pub to: String,
+    /// Per-tensor plans, positional with the incoming adapter's `tensors`.
+    plans: Vec<sparse::TransitionPlan>,
+}
+
+impl AdapterTransition {
+    /// Build the pairwise plan set for switching `from` → `to`, sharded
+    /// for a `threads`-wide pool.  Returns `None` when the two adapters do
+    /// not target the same tensor set (the engine falls back to
+    /// revert+apply for such pairs).
+    pub fn build(
+        from: &ShiraAdapter,
+        to: &ShiraAdapter,
+        threads: usize,
+    ) -> Option<AdapterTransition> {
+        if from.tensors.len() != to.tensors.len() {
+            return None;
+        }
+        let mut plans = Vec::with_capacity(to.tensors.len());
+        for (target, d_to) in &to.tensors {
+            let d_from = from.find(target)?;
+            if (d_from.rows, d_from.cols) != (d_to.rows, d_to.cols) {
+                return None;
+            }
+            let union = d_from.nnz() + d_to.nnz() - d_from.overlap(d_to);
+            plans.push(sparse::TransitionPlan::build(
+                d_from,
+                d_to,
+                sparse::shards_for(union, threads),
+            ));
+        }
+        Some(AdapterTransition {
+            from: from.name.clone(),
+            to: to.name.clone(),
+            plans,
+        })
+    }
+
+    /// Per-tensor plans, positional with the `to` adapter's `tensors`.
+    pub fn plans(&self) -> &[sparse::TransitionPlan] {
+        &self.plans
+    }
+
+    /// Total union-support entries across all tensors — the slots one
+    /// direct transition touches (vs `a_nnz + b_nnz` for revert+apply).
+    pub fn union_nnz(&self) -> usize {
+        self.plans.iter().map(|p| p.union_nnz()).sum()
+    }
+
+    /// Total overlapping entries across all tensors.
+    pub fn overlap_nnz(&self) -> usize {
+        self.plans.iter().map(|p| p.overlap()).sum()
+    }
+
+    /// Heap bytes held by the plan set (the plan-cache accounting unit).
+    pub fn nbytes(&self) -> usize {
+        self.plans.iter().map(|p| p.nbytes()).sum::<usize>()
+            + self.from.len()
+            + self.to.len()
+            + std::mem::size_of::<AdapterTransition>()
+    }
+
+    /// Cheap validation that this plan set describes exactly the
+    /// `from` → `to` pair (names, tensor count, per-tensor shapes and nnz).
+    /// The engine refuses a non-matching plan and falls back.
+    pub fn matches(&self, from: &ShiraAdapter, to: &ShiraAdapter) -> bool {
+        from.name == self.from
+            && to.name == self.to
+            && from.tensors.len() == to.tensors.len()
+            && to.tensors.len() == self.plans.len()
+            && to.tensors.iter().zip(&self.plans).all(|((t, d), p)| {
+                p.b_nnz() == d.nnz()
+                    && (p.rows(), p.cols()) == (d.rows, d.cols)
+                    && from.find(t).map(|fd| fd.nnz()) == Some(p.a_nnz())
+            })
+    }
+}
+
 /// %Params metric used across the paper's tables: adapter trainable params
 /// relative to the base model's total.
 pub fn pct(x: usize, total: usize) -> f64 {
@@ -226,5 +341,30 @@ mod tests {
     fn pct_math() {
         assert_eq!(pct(1, 100), 1.0);
         assert_eq!(pct(0, 5), 0.0);
+    }
+
+    #[test]
+    fn adapter_transition_builds_and_validates() {
+        let mut rng = Rng::new(4);
+        let a = shira(&mut rng, "a");
+        let b = shira(&mut rng, "b");
+        let t = AdapterTransition::build(&a, &b, 4).expect("same target sets");
+        assert_eq!(t.plans().len(), 2);
+        assert_eq!(
+            t.union_nnz() + t.overlap_nnz(),
+            a.param_count() + b.param_count()
+        );
+        assert!(t.nbytes() > 0);
+        assert!(t.matches(&a, &b));
+        assert!(!t.matches(&b, &a), "direction matters");
+        let c = shira(&mut rng, "c");
+        assert!(!t.matches(&a, &c), "wrong incoming adapter");
+        // different target sets are unplannable
+        let mut d = shira(&mut rng, "d");
+        d.tensors.pop();
+        assert!(AdapterTransition::build(&a, &d, 4).is_none());
+        let mut e = shira(&mut rng, "e");
+        e.tensors[0].0 = "other".into();
+        assert!(AdapterTransition::build(&a, &e, 4).is_none());
     }
 }

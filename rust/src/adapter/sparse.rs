@@ -156,26 +156,7 @@ impl SparseDelta {
     /// where `run` is one row's nnz — recomputing per switch is noise next
     /// to the O(nnz) scatter itself.
     pub fn shard(&self, n_shards: usize) -> ShardPlan {
-        let n = n_shards.clamp(1, MAX_SHARDS);
-        let nnz = self.nnz();
-        let mut bounds = [0usize; MAX_SHARDS + 1];
-        let mut prev = 0usize;
-        for s in 1..n {
-            let mut t = (nnz * s / n).max(prev);
-            if t > 0 && t < nnz && self.cols > 0 {
-                let row = self.idx[t - 1] as usize / self.cols;
-                while t < nnz && self.idx[t] as usize / self.cols == row {
-                    t += 1;
-                }
-            }
-            bounds[s] = t;
-            prev = t;
-        }
-        bounds[n] = nnz;
-        ShardPlan {
-            n_shards: n,
-            bounds,
-        }
+        shard_sorted(&self.idx, self.cols, n_shards)
     }
 
     // -- scatter hot path -------------------------------------------------
@@ -570,6 +551,326 @@ pub(crate) unsafe fn scatter_restore(
 ) {
     for j in lo..hi {
         *w.add(*idx.add(j) as usize) = *snap.add(j);
+    }
+}
+
+/// Row-aligned partition of *any* sorted unique flat-index slice into at
+/// most `n_shards` contiguous near-equal ranges (the generalization of
+/// [`SparseDelta::shard`], shared with the fusion engine's merged-support
+/// refresh and the [`TransitionPlan`] union walk).
+pub(crate) fn shard_sorted(idx: &[u32], cols: usize, n_shards: usize) -> ShardPlan {
+    let n = n_shards.clamp(1, MAX_SHARDS);
+    let nnz = idx.len();
+    let mut bounds = [0usize; MAX_SHARDS + 1];
+    let mut prev = 0usize;
+    for s in 1..n {
+        let mut t = (nnz * s / n).max(prev);
+        if t > 0 && t < nnz && cols > 0 {
+            let row = idx[t - 1] as usize / cols;
+            while t < nnz && idx[t] as usize / cols == row {
+                t += 1;
+            }
+        }
+        bounds[s] = t;
+        prev = t;
+    }
+    bounds[n] = nnz;
+    ShardPlan {
+        n_shards: n,
+        bounds,
+    }
+}
+
+/// Sentinel in [`TransitionPlan`] position arrays: the union slot has no
+/// entry on that side.
+pub(crate) const NONE_POS: u32 = u32::MAX;
+
+/// Precomputed direct A→B transition layout for one target tensor: the
+/// merged union of A's and B's sorted supports with each union slot
+/// classified by which sides carry it.
+///
+/// Slot classification (the three cases of the `scatter_transition`
+/// kernel):
+///
+/// * **A-only** (`a_pos` set, `b_pos` absent): restore A's snapshot value —
+///   exactly what `revert` would have written, and B leaves it alone.
+/// * **B-only** (`b_pos` set, `a_pos` absent): the resident value IS the
+///   base (A never touched it); snapshot it for B's future revert and
+///   write `base + α·Δ_B`.
+/// * **overlap** (both set): the base is A's *snapshot* value, not the
+///   resident one — capture it as B's snapshot and write
+///   `snap_A + α·Δ_B`, skipping the intermediate restore entirely.
+///
+/// One pass over the union therefore lands the weights (and B's snapshot
+/// buffer) in exactly the state a `revert` followed by a fresh
+/// snapshot+apply of B would have produced, bit for bit — but each union
+/// slot is touched once instead of up to twice, and the whole transition
+/// dispatches as one parallel wave over the embedded row-aligned
+/// [`ShardPlan`].
+///
+/// # Examples
+///
+/// ```
+/// use shira::adapter::sparse::{SparseDelta, TransitionPlan};
+/// use shira::model::tensor::Tensor2;
+///
+/// let a = SparseDelta::new(2, 4, vec![1, 3], vec![10.0, 20.0]);
+/// let b = SparseDelta::new(2, 4, vec![3, 6], vec![5.0, 7.0]);
+/// let tp = TransitionPlan::build(&a, &b, 1);
+/// assert_eq!(tp.union_nnz(), 3); // {1, 3, 6}
+/// assert_eq!(tp.overlap(), 1); // slot 3
+///
+/// let mut w = Tensor2::zeros(2, 4);
+/// let snap_a = a.snapshot(&w); // base values on A's support
+/// a.apply(&mut w, 1.0);
+/// let mut snap_b = vec![0.0; b.nnz()];
+/// tp.transition(&mut w, &snap_a, &mut snap_b, &b, 1.0);
+/// // Identical to revert(A) + snapshot + apply(B):
+/// assert_eq!(w.data[1], 0.0); // A-only slot restored
+/// assert_eq!(w.data[3], 5.0); // overlap: base (0) + B's delta
+/// assert_eq!(w.data[6], 7.0); // B-only slot applied
+/// assert_eq!(snap_b, vec![0.0, 0.0]); // B's revert snapshot is base
+/// ```
+#[derive(Clone, Debug)]
+pub struct TransitionPlan {
+    rows: usize,
+    cols: usize,
+    /// Sorted unique union of A's and B's supports (flat indices).
+    union_idx: Vec<u32>,
+    /// Per union slot: position in A's support/snapshot, or `NONE_POS`.
+    a_pos: Vec<u32>,
+    /// Per union slot: position in B's support/snapshot, or `NONE_POS`.
+    b_pos: Vec<u32>,
+    a_nnz: usize,
+    b_nnz: usize,
+    overlap: usize,
+    /// Row-aligned shards over the union walk (one-wave dispatch).
+    shards: ShardPlan,
+}
+
+impl TransitionPlan {
+    /// Merge A's and B's sorted supports into a classified union plan with
+    /// a row-aligned [`ShardPlan`] sized for `n_shards`-wide dispatch.
+    /// Both deltas must target the same tensor shape.
+    pub fn build(a: &SparseDelta, b: &SparseDelta, n_shards: usize) -> TransitionPlan {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols), "transition shape");
+        let cap = a.nnz() + b.nnz();
+        let mut union_idx = Vec::with_capacity(cap);
+        let mut a_pos = Vec::with_capacity(cap);
+        let mut b_pos = Vec::with_capacity(cap);
+        let mut overlap = 0usize;
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.nnz() || j < b.nnz() {
+            let ia = a.idx.get(i).copied().unwrap_or(u32::MAX);
+            let ib = b.idx.get(j).copied().unwrap_or(u32::MAX);
+            if ia < ib {
+                union_idx.push(ia);
+                a_pos.push(i as u32);
+                b_pos.push(NONE_POS);
+                i += 1;
+            } else if ib < ia {
+                union_idx.push(ib);
+                a_pos.push(NONE_POS);
+                b_pos.push(j as u32);
+                j += 1;
+            } else {
+                union_idx.push(ia);
+                a_pos.push(i as u32);
+                b_pos.push(j as u32);
+                overlap += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+        // Capacity was the no-overlap worst case; release the overlap's
+        // worth so `nbytes` (the plan-cache accounting unit) is the real
+        // heap footprint.
+        union_idx.shrink_to_fit();
+        a_pos.shrink_to_fit();
+        b_pos.shrink_to_fit();
+        let shards = shard_sorted(&union_idx, a.cols, n_shards);
+        TransitionPlan {
+            rows: a.rows,
+            cols: a.cols,
+            union_idx,
+            a_pos,
+            b_pos,
+            a_nnz: a.nnz(),
+            b_nnz: b.nnz(),
+            overlap,
+            shards,
+        }
+    }
+
+    /// Rows of the target tensor this plan transitions.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Columns of the target tensor this plan transitions.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// |support(A) ∪ support(B)| — the slots one transition touches.
+    pub fn union_nnz(&self) -> usize {
+        self.union_idx.len()
+    }
+
+    /// |support(A) ∩ support(B)| — slots that skip the restore entirely.
+    pub fn overlap(&self) -> usize {
+        self.overlap
+    }
+
+    /// nnz of the A (outgoing) side the plan was built for.
+    pub fn a_nnz(&self) -> usize {
+        self.a_nnz
+    }
+
+    /// nnz of the B (incoming) side the plan was built for.
+    pub fn b_nnz(&self) -> usize {
+        self.b_nnz
+    }
+
+    /// The embedded row-aligned shard plan over the union walk.
+    pub fn shards(&self) -> &ShardPlan {
+        &self.shards
+    }
+
+    /// Heap bytes held by the plan (the plan-cache accounting unit).
+    pub fn nbytes(&self) -> usize {
+        self.union_idx.len() * 12 + std::mem::size_of::<TransitionPlan>()
+    }
+
+    /// Raw array pointers for the engine's flat task list:
+    /// `(union_idx, a_pos, b_pos)`.
+    pub(crate) fn raw_parts(&self) -> (*const u32, *const u32, *const u32) {
+        (
+            self.union_idx.as_ptr(),
+            self.a_pos.as_ptr(),
+            self.b_pos.as_ptr(),
+        )
+    }
+
+    /// One-pass direct transition over the whole union (serial).
+    ///
+    /// `snap_a` is the base snapshot taken when A was applied; `snap_b`
+    /// (length `b.nnz()`) receives the base snapshot for B's future
+    /// revert; `b` is the incoming delta, applied at `alpha`.  The result
+    /// is bit-identical to `a.restore(w, snap_a)` followed by
+    /// `b.snapshot_apply(w, alpha, snap_b)`.
+    pub fn transition(
+        &self,
+        w: &mut Tensor2,
+        snap_a: &[f32],
+        snap_b: &mut [f32],
+        b: &SparseDelta,
+        alpha: f32,
+    ) {
+        assert_eq!((w.rows, w.cols), (self.rows, self.cols));
+        assert_eq!(snap_a.len(), self.a_nnz);
+        assert_eq!(snap_b.len(), self.b_nnz);
+        assert_eq!(b.nnz(), self.b_nnz);
+        unsafe {
+            scatter_transition(
+                self.union_idx.as_ptr(),
+                self.a_pos.as_ptr(),
+                self.b_pos.as_ptr(),
+                b.delta.as_ptr(),
+                w.data.as_mut_ptr(),
+                snap_a.as_ptr(),
+                snap_b.as_mut_ptr(),
+                alpha,
+                0,
+                self.union_idx.len(),
+            )
+        }
+    }
+
+    /// Shard-parallel one-pass transition — one `scoped_for` wave over the
+    /// embedded row-aligned shards, bit-identical to [`Self::transition`]
+    /// (disjoint union ranges ⇒ disjoint W slots and disjoint `snap_b`
+    /// slots; `snap_a` is read-only).
+    pub fn transition_parallel(
+        &self,
+        w: &mut Tensor2,
+        snap_a: &[f32],
+        snap_b: &mut [f32],
+        b: &SparseDelta,
+        alpha: f32,
+        pool: &ThreadPool,
+    ) {
+        assert_eq!((w.rows, w.cols), (self.rows, self.cols));
+        assert_eq!(snap_a.len(), self.a_nnz);
+        assert_eq!(snap_b.len(), self.b_nnz);
+        assert_eq!(b.nnz(), self.b_nnz);
+        let wp = SendPtr::new(w.data.as_mut_ptr());
+        let sb = SendPtr::new(snap_b.as_mut_ptr());
+        let plan = self.shards;
+        pool.scoped_for(plan.len(), move |s| {
+            let (lo, hi) = plan.range(s);
+            // SAFETY: shards cover disjoint union ranges; union indices
+            // are unique, so W and snap_b slots are written exactly once.
+            unsafe {
+                scatter_transition(
+                    self.union_idx.as_ptr(),
+                    self.a_pos.as_ptr(),
+                    self.b_pos.as_ptr(),
+                    b.delta.as_ptr(),
+                    wp.get(),
+                    snap_a.as_ptr(),
+                    sb.get(),
+                    alpha,
+                    lo,
+                    hi,
+                )
+            }
+        });
+    }
+}
+
+/// The fused one-pass transition kernel over union slots `[lo, hi)` — the
+/// one definition shared by [`TransitionPlan::transition`], its parallel
+/// twin, and the switch engine's flat task list.  Per slot it performs the
+/// A-only / B-only / overlap action described on [`TransitionPlan`].
+///
+/// # Safety
+/// `union_idx[lo..hi)` must be unique and in-bounds for `w`; `a_pos` /
+/// `b_pos` entries must be `NONE_POS` or in-bounds for `snap_a` /
+/// (`snap_b`, `delta_b`); ranges handed to concurrent callers must be
+/// disjoint.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn scatter_transition(
+    union_idx: *const u32,
+    a_pos: *const u32,
+    b_pos: *const u32,
+    delta_b: *const f32,
+    w: *mut f32,
+    snap_a: *const f32,
+    snap_b: *mut f32,
+    alpha: f32,
+    lo: usize,
+    hi: usize,
+) {
+    for s in lo..hi {
+        let i = *union_idx.add(s) as usize;
+        let ap = *a_pos.add(s);
+        let bp = *b_pos.add(s);
+        if bp != NONE_POS {
+            let base = if ap != NONE_POS {
+                // overlap: the base is A's snapshot, not the live value
+                *snap_a.add(ap as usize)
+            } else {
+                // B-only: A never touched this slot, live value IS base
+                *w.add(i)
+            };
+            *snap_b.add(bp as usize) = base;
+            *w.add(i) = base + alpha * *delta_b.add(bp as usize);
+        } else {
+            // A-only: plain restore
+            *w.add(i) = *snap_a.add(ap as usize);
+        }
     }
 }
 
@@ -1032,6 +1333,175 @@ mod tests {
                 w.data == w0.data
             },
         );
+    }
+
+    #[test]
+    fn transition_plan_classifies_slots() {
+        let a = SparseDelta::new(2, 4, vec![0, 3, 5], vec![1.0, 2.0, 3.0]);
+        let b = SparseDelta::new(2, 4, vec![3, 6], vec![10.0, 20.0]);
+        let tp = TransitionPlan::build(&a, &b, 2);
+        assert_eq!(tp.union_nnz(), 4); // {0, 3, 5, 6}
+        assert_eq!(tp.overlap(), 1); // slot 3
+        assert_eq!((tp.a_nnz(), tp.b_nnz()), (3, 2));
+        assert_eq!(tp.shards().total(), 4);
+        // classification arrays line up with the union walk
+        assert_eq!(tp.union_idx, vec![0, 3, 5, 6]);
+        assert_eq!(tp.a_pos, vec![0, 1, 2, NONE_POS]);
+        assert_eq!(tp.b_pos, vec![NONE_POS, 0, NONE_POS, 1]);
+    }
+
+    /// Reference: the two-pass path the transition must be bit-identical
+    /// to.  Returns (weights after, B's snapshot).
+    fn revert_then_apply(
+        w0: &Tensor2,
+        a: &SparseDelta,
+        b: &SparseDelta,
+        alpha_a: f32,
+        alpha_b: f32,
+    ) -> (Tensor2, Vec<f32>) {
+        let mut w = w0.clone();
+        let snap_a = a.snapshot(&w);
+        a.apply(&mut w, alpha_a);
+        a.restore(&mut w, &snap_a);
+        let mut snap_b = vec![0.0f32; b.nnz()];
+        b.snapshot_apply(&mut w, alpha_b, &mut snap_b);
+        (w, snap_b)
+    }
+
+    #[test]
+    fn transition_matches_revert_apply_serial_and_parallel() {
+        let mut rng = Rng::new(60);
+        let pool = ThreadPool::new(4);
+        let w0 = random_w(&mut rng, 32, 32);
+        let a = random_delta(&mut rng, 32, 32, 120);
+        let b = random_delta(&mut rng, 32, 32, 90);
+        let (want_w, want_snap) = revert_then_apply(&w0, &a, &b, 0.7, 1.3);
+        for shards in [1usize, 3, 8] {
+            let tp = TransitionPlan::build(&a, &b, shards);
+            // serial
+            let mut w = w0.clone();
+            let snap_a = a.snapshot(&w);
+            a.apply(&mut w, 0.7);
+            let mut snap_b = vec![0.0f32; b.nnz()];
+            tp.transition(&mut w, &snap_a, &mut snap_b, &b, 1.3);
+            assert_eq!(w.data, want_w.data, "serial shards={shards}");
+            assert_eq!(snap_b, want_snap, "serial snap shards={shards}");
+            // parallel
+            let mut w = w0.clone();
+            a.apply(&mut w, 0.7);
+            let mut snap_b = vec![0.0f32; b.nnz()];
+            tp.transition_parallel(&mut w, &snap_a, &mut snap_b, &b, 1.3, &pool);
+            assert_eq!(w.data, want_w.data, "parallel shards={shards}");
+            assert_eq!(snap_b, want_snap, "parallel snap shards={shards}");
+        }
+    }
+
+    #[test]
+    fn transition_handles_disjoint_identical_and_self() {
+        let mut rng = Rng::new(61);
+        let w0 = random_w(&mut rng, 16, 16);
+        // disjoint supports: union = a_nnz + b_nnz, overlap 0
+        let all = rng.sample_indices(256, 40);
+        let (ia, ib) = all.split_at(20);
+        let mut ibs = ib.to_vec();
+        ibs.sort_unstable();
+        let a = SparseDelta::new(16, 16, ia.to_vec(), vec![1.5; 20]);
+        let b = SparseDelta::new(16, 16, ibs, vec![-0.5; 20]);
+        let tp = TransitionPlan::build(&a, &b, 3);
+        assert_eq!(tp.overlap(), 0);
+        assert_eq!(tp.union_nnz(), 40);
+        let (want_w, want_snap) = revert_then_apply(&w0, &a, &b, 1.0, 1.0);
+        let mut w = w0.clone();
+        let snap_a = a.snapshot(&w);
+        a.apply(&mut w, 1.0);
+        let mut snap_b = vec![0.0f32; b.nnz()];
+        tp.transition(&mut w, &snap_a, &mut snap_b, &b, 1.0);
+        assert_eq!(w.data, want_w.data);
+        assert_eq!(snap_b, want_snap);
+        // self-transition A→A (identical supports, alpha change): full
+        // overlap, and the result equals re-applying A at the new alpha.
+        let tp = TransitionPlan::build(&a, &a, 2);
+        assert_eq!(tp.overlap(), a.nnz());
+        assert_eq!(tp.union_nnz(), a.nnz());
+        let (want_w, want_snap) = revert_then_apply(&w0, &a, &a, 1.0, 0.25);
+        let mut w = w0.clone();
+        a.apply(&mut w, 1.0);
+        let mut snap_b = vec![0.0f32; a.nnz()];
+        tp.transition(&mut w, &snap_a, &mut snap_b, &a, 0.25);
+        assert_eq!(w.data, want_w.data);
+        assert_eq!(snap_b, want_snap);
+    }
+
+    #[test]
+    fn prop_transition_bit_identical_to_revert_apply() {
+        // The tentpole invariant: for random shapes, supports (any overlap
+        // ratio, including empty sides) and alphas, the one-pass direct
+        // transition produces exactly the bytes of revert-then-apply — on
+        // both the weights and B's revert snapshot, serial and pooled.
+        let pool = ThreadPool::new(4);
+        pt::forall(
+            62,
+            30,
+            |r| {
+                let rows = 2 + r.below(24);
+                let cols = 2 + r.below(24);
+                let total = rows * cols;
+                let ka = r.below(total);
+                let kb = r.below(total);
+                let shards = 1 + r.below(12);
+                let alpha_a = -2.0 + 4.0 * r.uniform_f32();
+                let alpha_b = -2.0 + 4.0 * r.uniform_f32();
+                (r.next_u64(), rows, cols, ka, kb, shards, alpha_a, alpha_b)
+            },
+            |&(seed, rows, cols, ka, kb, shards, alpha_a, alpha_b)| {
+                let mut rng = Rng::new(seed);
+                let w0 = random_w(&mut rng, rows, cols);
+                let a = random_delta(&mut rng, rows, cols, ka);
+                let b = random_delta(&mut rng, rows, cols, kb);
+                let tp = TransitionPlan::build(&a, &b, shards);
+                if tp.union_nnz() + tp.overlap() != a.nnz() + b.nnz() {
+                    return false; // |A∪B| + |A∩B| = |A| + |B|
+                }
+                let (want_w, want_snap) =
+                    revert_then_apply(&w0, &a, &b, alpha_a, alpha_b);
+                let snap_a = a.snapshot(&w0);
+                let mut w = w0.clone();
+                a.apply(&mut w, alpha_a);
+                let mut snap_b = vec![0.0f32; b.nnz()];
+                tp.transition(&mut w, &snap_a, &mut snap_b, &b, alpha_b);
+                if w.data != want_w.data || snap_b != want_snap {
+                    return false;
+                }
+                let mut w = w0.clone();
+                a.apply(&mut w, alpha_a);
+                let mut snap_b = vec![0.0f32; b.nnz()];
+                tp.transition_parallel(&mut w, &snap_a, &mut snap_b, &b, alpha_b, &pool);
+                w.data == want_w.data && snap_b == want_snap
+            },
+        );
+    }
+
+    #[test]
+    fn shard_sorted_is_row_aligned_on_any_sorted_slice() {
+        let mut rng = Rng::new(63);
+        for &(cols, k, n) in &[(32usize, 500usize, 6usize), (7, 40, 12), (16, 0, 3)] {
+            let idx = rng.sample_indices(64 * cols, k);
+            let plan = shard_sorted(&idx, cols, n);
+            assert_eq!(plan.total(), idx.len());
+            let mut covered = 0usize;
+            for s in 0..plan.len() {
+                let (lo, hi) = plan.range(s);
+                assert_eq!(lo, covered);
+                covered = hi;
+                if lo > 0 && lo < idx.len() {
+                    assert!(
+                        idx[lo - 1] as usize / cols < idx[lo] as usize / cols,
+                        "boundary splits a row"
+                    );
+                }
+            }
+            assert_eq!(covered, idx.len());
+        }
     }
 
     #[test]

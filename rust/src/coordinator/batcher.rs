@@ -138,16 +138,19 @@ impl DynamicBatcher {
 
     /// Up to `k` adapters likely to be scheduled soon, in scheduling
     /// priority order (aging first — a starving head preempts affinity —
-    /// then queue length, then name for determinism), excluding `exclude`
-    /// (normally the adapter the current batch is already switching to).
-    /// This is the store's prefetch lookahead: decoding these in the
-    /// background turns upcoming cold misses into prefetch hits.
-    pub fn upcoming(&self, k: usize, exclude: Option<&str>) -> Vec<String> {
+    /// then queue length, then name for determinism), excluding every name
+    /// in `exclude` — typically the adapter the current batch is already
+    /// switching to, plus (for transition-plan prefetch) the adapters
+    /// whose pairwise plan is already resident, so the lookahead never
+    /// re-suggests pairs the plan cache holds.  This is the store's
+    /// prefetch lookahead: decoding these (and planning transitions to
+    /// them) in the background turns upcoming cold misses into hits.
+    pub fn upcoming(&self, k: usize, exclude: &[&str]) -> Vec<String> {
         let mut cands: Vec<(&str, u64, usize)> = self
             .queues
             .iter()
             .filter(|(name, q)| {
-                !q.requests.is_empty() && Some(name.as_str()) != exclude
+                !q.requests.is_empty() && !exclude.contains(&name.as_str())
             })
             .map(|(name, q)| {
                 (
@@ -291,20 +294,24 @@ mod tests {
             b.push(req(i, "c"));
         }
         // No aging yet: longest queue first, active excluded.
-        assert_eq!(b.upcoming(2, Some("b")), vec!["c", "a"]);
-        assert_eq!(b.upcoming(10, None), vec!["b", "c", "a"]);
-        assert_eq!(b.upcoming(0, None), Vec::<String>::new());
+        assert_eq!(b.upcoming(2, &["b"]), vec!["c", "a"]);
+        assert_eq!(b.upcoming(10, &[]), vec!["b", "c", "a"]);
+        assert_eq!(b.upcoming(0, &[]), Vec::<String>::new());
+        // A multi-name exclusion set (the transition-plan prefetch case:
+        // active adapter + already-planned pairs) filters them all.
+        assert_eq!(b.upcoming(10, &["b", "c"]), vec!["a"]);
+        assert!(b.upcoming(10, &["a", "b", "c"]).is_empty());
         // Serve "b" for a while: the waiting queues age ahead of it.
         for _ in 0..3 {
             let (name, _) = b.next_batch(Some("b")).unwrap();
             assert_eq!(name, "b");
         }
-        let ahead = b.upcoming(3, Some("b"));
+        let ahead = b.upcoming(3, &["b"]);
         assert_eq!(ahead.len(), 2);
         assert!(ahead.contains(&"a".to_string()) && ahead.contains(&"c".to_string()));
         // Drained queues disappear from the lookahead.
         while b.next_batch(None).is_some() {}
-        assert!(b.upcoming(4, None).is_empty());
+        assert!(b.upcoming(4, &[]).is_empty());
     }
 
     #[test]

@@ -147,9 +147,9 @@ pub struct InterferenceReport {
     pub collisions: usize,
     /// Number of adapters analyzed.
     pub n_adapters: usize,
-    /// Per-pair breakdown (one entry per unordered pair `i < j`).  The
-    /// incremental fusion engine uses this to group non-colliding
-    /// adapters into conflict-free parallel scatter waves.
+    /// Per-pair breakdown (one entry per unordered pair `i < j`) — the
+    /// same shape the incremental fusion engine computes at plan-build
+    /// time as its collision diagnostic.
     pub pairs: Vec<PairInterference>,
 }
 

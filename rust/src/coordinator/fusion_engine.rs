@@ -31,19 +31,20 @@
 //! Operations shard the touched adapter's support with the row-aligned
 //! [`ShardPlan`](crate::adapter::sparse::ShardPlan) from the switch engine
 //! and run as a flat (target × shard) task list under one
-//! [`ThreadPool::scoped_for`] region.  Set transitions group the touched
-//! adapters into conflict-free waves using the per-pair collision
-//! breakdown ([`PairInterference`], the same shape
-//! [`analyze_shira`](super::fusion::analyze_shira) emits): adapters with
-//! zero pairwise collisions write disjoint slots and scatter concurrently;
-//! colliding adapters are serialized into later waves.  Every parallel path is
-//! bit-identical to its serial twin (disjoint writes, same per-slot
-//! arithmetic).
+//! [`ThreadPool::scoped_for`] region.  Set transitions are always ONE
+//! wave: conflict-free touched members scatter member-local (disjoint
+//! slots), while colliding members use the same merged-support walk as
+//! the switch engine's direct transitions — their union slots are merged
+//! (sorted + deduped) per target and every slot is recomputed exactly
+//! once, so even a colliding single-member roster swap `"a"` → `"b"`
+//! dispatches as one wave instead of serialized per-member waves.  Every
+//! parallel path is bit-identical to its serial twin (disjoint writes,
+//! same per-slot arithmetic).
 
 use std::sync::Arc;
 
 use super::fusion::{fuse_shira, validate_target_sets, FusionError, PairInterference};
-use crate::adapter::sparse::{shards_for, SparseDelta, PAR_MIN_NNZ};
+use crate::adapter::sparse::{shard_sorted, shards_for, SparseDelta, PAR_MIN_NNZ};
 use crate::adapter::ShiraAdapter;
 use crate::model::weights::WeightStore;
 use crate::util::threadpool::{SendPtr, ThreadPool};
@@ -295,7 +296,10 @@ pub struct SetTransition {
     pub unfused: usize,
     /// Members whose weight changed while staying fused.
     pub reweighted: usize,
-    /// Conflict-free scatter waves the transition was dispatched in.
+    /// Scatter waves the transition was dispatched in: 1 when anything
+    /// was touched (the merged-support refresh recomputes every touched
+    /// union slot exactly once, so colliding members no longer
+    /// serialize), 0 for a no-op transition.
     pub waves: usize,
 }
 
@@ -307,6 +311,26 @@ struct RefreshTask {
     m: usize,
     lo: usize,
     hi: usize,
+}
+
+/// One shard of merged-support refresh work: positions `[lo, hi)` of plan
+/// target `t`'s merged (deduped) union-slot list.
+#[derive(Clone, Copy)]
+struct UnionTask {
+    t: usize,
+    lo: usize,
+    hi: usize,
+}
+
+/// Per-target scratch for the merged-support refresh, retained across
+/// transitions so steady-state set switching reuses capacity.
+#[derive(Default)]
+struct UnionScratch {
+    /// Merged, sorted, deduped union-slot indices touched this op.
+    slots: Vec<u32>,
+    /// `union_idx[slot]` per merged slot — the scatter destination, and
+    /// the sorted flat-index sequence the row-aligned shards cut.
+    flats: Vec<u32>,
 }
 
 /// Incremental fused-mode engine over a [`FusionPlan`].
@@ -370,6 +394,10 @@ pub struct FusionEngine {
     updates: u64,
     /// Reusable shard-task scratch for the parallel path.
     tasks: Vec<RefreshTask>,
+    /// Reusable merged-support task scratch (multi-member transitions).
+    utasks: Vec<UnionTask>,
+    /// Reusable per-target merged-slot scratch.
+    union_scratch: Vec<UnionScratch>,
 }
 
 impl FusionEngine {
@@ -391,6 +419,8 @@ impl FusionEngine {
             active: false,
             updates: 0,
             tasks: Vec::new(),
+            utasks: Vec::new(),
+            union_scratch: Vec::new(),
         }
     }
 
@@ -519,11 +549,14 @@ impl FusionEngine {
     }
 
     /// Transition to exactly the fused set `desired` (members absent from
-    /// it are unfused).  The touched members are grouped into
-    /// conflict-free waves via the plan's per-pair collision breakdown;
-    /// each wave scatters as one parallel region.  Cost is the *touched*
-    /// members' nnz, so moving between overlapping sets is far cheaper
-    /// than a rebuild.
+    /// it are unfused) in ONE parallel wave.  Conflict-free touched sets
+    /// scatter member-local (disjoint slots, clean-sub-slice fast path);
+    /// colliding touched members — which previously serialized into
+    /// per-member waves — have their slots merged into one deduped union
+    /// per target and every union slot recomputed exactly once (the
+    /// fused-mode twin of the switch engine's direct transitions).  Cost
+    /// is the *touched* members' union nnz, so moving between overlapping
+    /// sets is far cheaper than a rebuild.
     pub fn apply_set(
         &mut self,
         store: &mut WeightStore,
@@ -562,23 +595,21 @@ impl FusionEngine {
                 _ => {}
             }
         }
-        // Conflict-free waves: members in one wave share no slots, so
-        // their scatters write disjoint weights and run concurrently.
-        // Flags are already final, so every refresh computes the final
-        // canonical value and wave order is irrelevant to the result.
-        let mut waves: Vec<Vec<usize>> = Vec::new();
-        for &m in &touched {
-            match waves
-                .iter_mut()
-                .find(|wave| wave.iter().all(|&o| !self.plan.collides(o, m)))
-            {
-                Some(wave) => wave.push(m),
-                None => waves.push(vec![m]),
-            }
-        }
-        stats.waves = waves.len();
-        for wave in waves {
-            self.refresh_members(store, &wave);
+        // ONE wave: flags are already final, so every touched slot's
+        // canonical value is computable immediately.  Conflict-free
+        // touched sets keep the member-local path (disjoint slots, clean
+        // sub-slices skip the contributor walk — already one wave);
+        // colliding sets — which used to serialize into per-member waves
+        // — refresh the merged union of their slots, each slot exactly
+        // once.
+        stats.waves = usize::from(!touched.is_empty());
+        let colliding = touched.iter().enumerate().any(|(i, &m)| {
+            touched[..i].iter().any(|&o| self.plan.collides(o, m))
+        });
+        if colliding {
+            self.refresh_union(store, &touched);
+        } else {
+            self.refresh_members(store, &touched);
         }
         Ok(stats)
     }
@@ -689,6 +720,104 @@ impl FusionEngine {
         self.tasks.clear();
     }
 
+    /// Recompute every union slot touched by at least one of `members`,
+    /// exactly once per slot, in ONE dispatch wave: the members' `upos`
+    /// lists are merged (sorted + deduped) per target, the merged list is
+    /// cut into row-aligned shards with the same [`shard_sorted`] helper
+    /// the switch engine's transitions use, and each shard folds the
+    /// contributor CSR into the final canonical value.  Flags and weights
+    /// must already hold their final values.  Bit-identical to refreshing
+    /// the members one wave at a time (every refresh writes canonical
+    /// values), but colliding members no longer serialize.
+    fn refresh_union(&mut self, store: &mut WeightStore, members: &[usize]) {
+        debug_assert!(members.len() > 1, "single members take refresh_members");
+        self.updates += members.len() as u64;
+        let n_targets = self.plan.targets.len();
+        if self.union_scratch.len() < n_targets {
+            self.union_scratch
+                .resize_with(n_targets, UnionScratch::default);
+        }
+        // Pass 1: merged slot lists per target (capacity reused).
+        let mut total = 0usize;
+        for (t, pt) in self.plan.targets.iter().enumerate() {
+            let sc = &mut self.union_scratch[t];
+            sc.slots.clear();
+            for &m in members {
+                sc.slots.extend_from_slice(&pt.members[m].upos);
+            }
+            sc.slots.sort_unstable();
+            sc.slots.dedup();
+            sc.flats.clear();
+            sc.flats
+                .extend(sc.slots.iter().map(|&s| pt.union_idx[s as usize]));
+            total += sc.slots.len();
+        }
+        let pool = match &self.pool {
+            Some(p) if total >= PAR_MIN_NNZ && p.threads() > 1 => Some(Arc::clone(p)),
+            _ => None,
+        };
+        // Raw weight cursors per target.  SAFETY: pointers are only used
+        // inside this call; tensors are not resized.
+        let wptrs: Vec<SendPtr<f32>> = self
+            .plan
+            .targets
+            .iter()
+            .map(|pt| SendPtr::new(store.get_mut(&pt.name).data.as_mut_ptr()))
+            .collect();
+        let threads = pool.as_ref().map(|p| p.threads()).unwrap_or(1);
+        // Pass 2: row-aligned shards over each merged list, flat task list.
+        self.utasks.clear();
+        for t in 0..n_targets {
+            let sc = &self.union_scratch[t];
+            if sc.slots.is_empty() {
+                continue;
+            }
+            let sp = shard_sorted(
+                &sc.flats,
+                self.plan.targets[t].cols,
+                shards_for(sc.slots.len(), threads),
+            );
+            for s in 0..sp.len() {
+                let (lo, hi) = sp.range(s);
+                if lo < hi {
+                    self.utasks.push(UnionTask { t, lo, hi });
+                }
+            }
+        }
+        let plan = &self.plan;
+        let fused = &self.fused;
+        let weights = &self.weights;
+        let snaps = &self.base_snap;
+        let scratch = &self.union_scratch;
+        let tasks = &self.utasks;
+        let run = |i: usize| {
+            let task = tasks[i];
+            let sc = &scratch[task.t];
+            // SAFETY: merged slot lists are deduped and shards cover
+            // disjoint ranges, so every union slot — and thus every
+            // weight element — is written by exactly one task.
+            unsafe {
+                refresh_union_range(
+                    plan,
+                    snaps,
+                    fused,
+                    weights,
+                    wptrs[task.t].get(),
+                    task.t,
+                    &sc.slots,
+                    &sc.flats,
+                    task.lo,
+                    task.hi,
+                )
+            }
+        };
+        match pool {
+            Some(pool) => pool.scoped_for(tasks.len(), run),
+            None => (0..tasks.len()).for_each(run),
+        }
+        self.utasks.clear();
+    }
+
     /// Rebuild the fused weights for the current set from scratch with the
     /// serial [`fuse_shira`] path (tests / verification — O(Σ nnz)).
     /// Returns `None` when nothing is fused (weights are at base).
@@ -780,6 +909,52 @@ unsafe fn refresh_range(
             let base = snap[s];
             *w.add(*d.idx.get_unchecked(j) as usize) = if any { base + acc } else { base };
         }
+    }
+}
+
+/// Recompute merged union slots `[lo, hi)` (positions into the deduped
+/// `slots` list) of plan target `t`: each slot gets `base +
+/// fold(contributions)` over fused contributors in roster order — the
+/// merged-support one-wave twin of [`refresh_range`], writing every
+/// touched slot exactly once per transition no matter how many touched
+/// members share it, and matching a from-scratch [`fuse_shira`] rebuild
+/// bit for bit.
+///
+/// # Safety
+/// `w` must point at target `t`'s weight data; `slots`/`flats` must be
+/// deduped, parallel, and in-bounds for the plan; ranges handed to
+/// concurrent callers must be disjoint.
+#[allow(clippy::too_many_arguments)]
+unsafe fn refresh_union_range(
+    plan: &FusionPlan,
+    snaps: &[Vec<f32>],
+    fused: &[bool],
+    weights: &[f32],
+    w: *mut f32,
+    t: usize,
+    slots: &[u32],
+    flats: &[u32],
+    lo: usize,
+    hi: usize,
+) {
+    let pt = &plan.targets[t];
+    let snap = &snaps[t];
+    for k in lo..hi {
+        let s = *slots.get_unchecked(k) as usize;
+        let mut acc = 0.0f32;
+        let mut any = false;
+        let c0 = pt.contrib_off[s] as usize;
+        let c1 = pt.contrib_off[s + 1] as usize;
+        for c in c0..c1 {
+            let cm = *pt.contrib_member.get_unchecked(c) as usize;
+            if fused[cm] {
+                let v = *pt.contrib_val.get_unchecked(c) * weights[cm];
+                acc = if any { acc + v } else { v };
+                any = true;
+            }
+        }
+        let base = snap[s];
+        *w.add(*flats.get_unchecked(k) as usize) = if any { base + acc } else { base };
     }
 }
 
@@ -1012,7 +1187,7 @@ mod tests {
     }
 
     #[test]
-    fn apply_set_diffs_and_groups_waves() {
+    fn apply_set_diffs_in_one_wave() {
         let base = store(16, 16, 3);
         // enough support that the members collide with high probability
         let roster = vec![
@@ -1021,7 +1196,7 @@ mod tests {
             adapter(32, "c", 16, 16, 90),
         ];
         let plan = FusionPlan::build(roster).unwrap();
-        let colliding = plan.collides(0, 1);
+        assert!(plan.collides(0, 1), "dense supports should collide");
         let mut eng = FusionEngine::new(plan);
         let mut w = base.clone();
         eng.activate(&mut w).unwrap();
@@ -1030,16 +1205,16 @@ mod tests {
             .apply_set(&mut w, &[("a".into(), 1.0), ("b".into(), 0.5)])
             .unwrap();
         assert_eq!((t.fused, t.unfused, t.reweighted), (2, 0, 0));
-        if colliding {
-            assert!(t.waves >= 2, "colliding members must serialize");
-        }
+        // merged-support refresh: colliding members no longer serialize
+        assert_eq!(t.waves, 1, "every transition is one wave");
         assert_matches_rebuild(&eng, &base, &w);
 
-        // b reweighted, a dropped, c added — one transition
+        // b reweighted, a dropped, c added — one transition, one wave
         let t = eng
             .apply_set(&mut w, &[("b".into(), 2.0), ("c".into(), 1.0)])
             .unwrap();
         assert_eq!((t.fused, t.unfused, t.reweighted), (1, 1, 1));
+        assert_eq!(t.waves, 1);
         assert_matches_rebuild(&eng, &base, &w);
 
         // same set again: nothing touched
@@ -1050,6 +1225,102 @@ mod tests {
 
         eng.apply_set(&mut w, &[]).unwrap();
         assert!(w.bit_equal(&base));
+    }
+
+    #[test]
+    fn single_member_roster_swap_is_one_wave_and_exact() {
+        // The fused-mode serving case the transition work targets: a
+        // request stream moving between one-member sets "a" → "b" where
+        // a and b collide.  The swap (unfuse a + fuse b) must be ONE
+        // wave and bit-identical to a rebuild, at any thread count.
+        let dim = 96usize;
+        let k = 4000usize; // crosses PAR_MIN_NNZ so pooled runs dispatch
+        let base = store(dim, dim, 17);
+        let roster = vec![adapter(70, "a", dim, dim, k), adapter(71, "b", dim, dim, k)];
+        for threads in [1usize, 2, 4] {
+            let plan = FusionPlan::build(roster.clone()).unwrap();
+            let pool = Arc::new(ThreadPool::new(threads));
+            let mut eng = FusionEngine::with_pool(plan, Some(pool));
+            let mut w = base.clone();
+            eng.activate(&mut w).unwrap();
+            eng.apply_set(&mut w, &[("a".into(), 1.0)]).unwrap();
+            assert_matches_rebuild(&eng, &base, &w);
+            let t = eng.apply_set(&mut w, &[("b".into(), 0.7)]).unwrap();
+            assert_eq!((t.fused, t.unfused, t.waves), (1, 1, 1), "threads={threads}");
+            assert_matches_rebuild(&eng, &base, &w);
+            // swap back with an alpha change, still one wave
+            let t = eng.apply_set(&mut w, &[("a".into(), -0.3)]).unwrap();
+            assert_eq!((t.fused, t.unfused, t.waves), (1, 1, 1));
+            assert_matches_rebuild(&eng, &base, &w);
+            eng.apply_set(&mut w, &[]).unwrap();
+            assert!(w.bit_equal(&base), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn prop_set_transitions_bit_identical_to_rebuild() {
+        // Random sequences of apply_set over colliding rosters, serial
+        // and pooled: the one-wave merged-support refresh must land on
+        // rebuild bytes after every transition.
+        let pool = Arc::new(ThreadPool::new(4));
+        pt::forall(
+            78,
+            20,
+            |r| {
+                let n_members = 2 + r.below(3);
+                let sets: Vec<Vec<(usize, f32)>> = (0..2 + r.below(5))
+                    .map(|_| {
+                        let size = r.below(n_members + 1);
+                        (0..size)
+                            .map(|_| (r.below(n_members), -2.0 + 4.0 * r.uniform_f32()))
+                            .collect()
+                    })
+                    .collect();
+                (r.next_u64(), n_members, sets)
+            },
+            |&(seed, n_members, ref sets)| {
+                let base = store(10, 10, seed);
+                let roster: Vec<Arc<ShiraAdapter>> = (0..n_members)
+                    .map(|m| adapter(seed ^ (m as u64 + 1), &format!("m{m}"), 10, 10, 30))
+                    .collect();
+                for pooled in [false, true] {
+                    let plan = FusionPlan::build(roster.clone()).unwrap();
+                    let mut eng = if pooled {
+                        FusionEngine::with_pool(plan, Some(Arc::clone(&pool)))
+                    } else {
+                        FusionEngine::new(plan)
+                    };
+                    let mut w = base.clone();
+                    eng.activate(&mut w).unwrap();
+                    for set in sets {
+                        // dedup member indices (apply_set rejects dups)
+                        let mut desired: Vec<(String, f32)> = Vec::new();
+                        for &(m, alpha) in set {
+                            let name = format!("m{m}");
+                            if !desired.iter().any(|(n, _)| *n == name) {
+                                desired.push((name, alpha));
+                            }
+                        }
+                        let t = eng.apply_set(&mut w, &desired).unwrap();
+                        if t.waves > 1 {
+                            return false;
+                        }
+                        let ok = match eng.rebuild_reference(&base) {
+                            Some(reference) => w.bit_equal(&reference),
+                            None => w.bit_equal(&base),
+                        };
+                        if !ok {
+                            return false;
+                        }
+                    }
+                    eng.apply_set(&mut w, &[]).unwrap();
+                    if !w.bit_equal(&base) {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
     }
 
     #[test]

@@ -18,6 +18,15 @@ pub struct ServeMetrics {
     pub batch_fill: Moments,
     /// Adapter (or adapter-set) switches performed.
     pub switches: u64,
+    /// Switches that took the one-pass direct transition path (a resident
+    /// pairwise plan walked the A∪B union once, one dispatch wave).
+    pub transitions: u64,
+    /// Switches that fell back to revert+apply (no previous adapter, cold
+    /// pair, or plan mismatch).
+    pub fallbacks: u64,
+    /// Store-built shard-plan sets the engine ignored as mismatched
+    /// (set at end of run via [`Self::set_plan_mismatches`]).
+    pub plan_mismatches: u64,
     /// Batches executed.
     pub batches: u64,
     /// Requests completed.
@@ -36,6 +45,21 @@ impl ServeMetrics {
     /// Capture the adapter store's lifecycle counters for the summary.
     pub fn set_store(&mut self, s: StoreStats) {
         self.store = s;
+    }
+
+    /// Capture the switch engine's ignored-shard-plan count.
+    pub fn set_plan_mismatches(&mut self, n: u64) {
+        self.plan_mismatches = n;
+    }
+
+    /// Record which path one SHiRA adapter switch took (direct transition
+    /// vs revert+apply fallback).
+    pub fn record_switch_path(&mut self, transition: bool) {
+        if transition {
+            self.transitions += 1;
+        } else {
+            self.fallbacks += 1;
+        }
     }
 
     /// Record one executed batch (and its switch, when one happened).
@@ -66,9 +90,12 @@ impl ServeMetrics {
         format!(
             "requests={} batches={} switches={} fill={:.2}\n\
              switch: mean={:.1}us p50={:.1}us | exec: mean={:.1}us\n\
+             paths: transition={} fallback={} plan_mismatch={}\n\
              request latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
              store: hits={} misses={} evictions={} prefetch_hits={} \
              oversized={} resident={} ({} entries)\n\
+             plans: hits={} misses={} evictions={} builds={} \
+             resident={} ({} entries)\n\
              throughput={:.1} req/s",
             self.requests,
             self.batches,
@@ -81,6 +108,9 @@ impl ServeMetrics {
                 self.switch_us.percentile(50.0)
             },
             self.exec_us.mean(),
+            self.transitions,
+            self.fallbacks,
+            self.plan_mismatches,
             self.request_latency.mean_us(),
             self.request_latency.percentile_us(50.0),
             self.request_latency.percentile_us(99.0),
@@ -91,6 +121,12 @@ impl ServeMetrics {
             self.store.oversized_serves,
             fmt_bytes(self.store.resident_bytes),
             self.store.resident_entries,
+            self.store.plan_hits,
+            self.store.plan_misses,
+            self.store.plan_evictions,
+            self.store.plan_builds,
+            fmt_bytes(self.store.plan_resident_bytes),
+            self.store.plan_resident_entries,
             thr
         )
     }
@@ -136,6 +172,12 @@ mod tests {
             oversized_serves: 1,
             resident_bytes: 2048,
             resident_entries: 2,
+            plan_hits: 6,
+            plan_misses: 2,
+            plan_evictions: 1,
+            plan_builds: 8,
+            plan_resident_bytes: 4096,
+            plan_resident_entries: 3,
         });
         let s = m.summary(1.0);
         assert!(s.contains("hits=7"), "{s}");
@@ -143,6 +185,22 @@ mod tests {
         assert!(s.contains("evictions=2"), "{s}");
         assert!(s.contains("prefetch_hits=4"), "{s}");
         assert!(s.contains("2 entries"), "{s}");
+        assert!(s.contains("plans: hits=6 misses=2 evictions=1 builds=8"), "{s}");
         assert!((m.store.hit_rate() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn switch_paths_surface_in_summary() {
+        let mut m = ServeMetrics::new();
+        m.record_batch(4, true, 50.0, 500.0);
+        m.record_switch_path(true);
+        m.record_batch(4, true, 30.0, 500.0);
+        m.record_switch_path(false);
+        m.record_batch(4, true, 40.0, 500.0);
+        m.record_switch_path(true);
+        m.set_plan_mismatches(5);
+        assert_eq!((m.transitions, m.fallbacks), (2, 1));
+        let s = m.summary(1.0);
+        assert!(s.contains("paths: transition=2 fallback=1 plan_mismatch=5"), "{s}");
     }
 }

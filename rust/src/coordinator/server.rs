@@ -19,7 +19,7 @@ use anyhow::{anyhow, Result};
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::fusion_engine::{FusionEngine, FusionPlan, SetSpec};
 use super::metrics::ServeMetrics;
-use super::switch::{Policy, SwitchEngine};
+use super::switch::{Policy, SwitchEngine, SwitchPath};
 use crate::adapter::LoraAdapter;
 use crate::data::trace::Request;
 use crate::model::weights::WeightStore;
@@ -43,6 +43,12 @@ pub struct ServeReport {
     pub batches: u64,
     /// Adapter (or adapter-set) switches performed.
     pub switches: u64,
+    /// Switches that took the one-pass direct transition path.
+    pub transitions: u64,
+    /// Switches that fell back to revert+apply.
+    pub fallbacks: u64,
+    /// Store-built shard-plan sets the engine ignored as mismatched.
+    pub plan_mismatches: u64,
     /// Requests per wall-clock second.
     pub throughput_rps: f64,
     /// Mean weight-mutation time per switch, microseconds.
@@ -345,7 +351,7 @@ impl<'rt> Server<'rt> {
             if self.policy != Policy::ShiraFusion && self.store.prefetch_depth() > 0 {
                 let ahead = self
                     .batcher
-                    .upcoming(self.store.prefetch_depth(), Some(adapter_name.as_str()));
+                    .upcoming(self.store.prefetch_depth(), &[adapter_name.as_str()]);
                 if !ahead.is_empty() {
                     self.store.prefetch(&ahead);
                 }
@@ -392,15 +398,48 @@ impl<'rt> Server<'rt> {
                     let t0 = Instant::now();
                     match (&entry.adapter, self.policy) {
                         (AnyAdapter::Shira(a), Policy::ShiraScatter) => {
-                            // Arc-shared activation: no tensor copy on the
-                            // request path, snapshots land in the engine
-                            // arena, and the store-built shard plans skip
-                            // plan construction (shard-aligned decode).
-                            self.engine.switch_to_shira_planned(
-                                Arc::clone(a),
-                                Some(Arc::clone(&entry.plans)),
-                                self.alpha,
-                            );
+                            // Hot pair with a resident pairwise plan: one
+                            // pass over the A∪B support union, ONE pool
+                            // dispatch wave.  Cold pair (or first switch):
+                            // classic revert+apply.  Bytes are identical
+                            // on both paths; the plan is pinned for the
+                            // duration of the in-flight transition.
+                            let plan = active
+                                .as_deref()
+                                .filter(|prev| *prev != adapter_name.as_str())
+                                .and_then(|prev| {
+                                    self.store.begin_transition(prev, &adapter_name)
+                                });
+                            let path = match plan {
+                                Some(tp) => {
+                                    let (_t, path) = self.engine.transition_to(
+                                        Arc::clone(a),
+                                        Some(Arc::clone(&entry.plans)),
+                                        &tp,
+                                        self.alpha,
+                                    );
+                                    self.store.end_transition(
+                                        active.as_deref().unwrap_or_default(),
+                                        &adapter_name,
+                                    );
+                                    path
+                                }
+                                None => {
+                                    // Arc-shared activation: no tensor
+                                    // copy on the request path, snapshots
+                                    // land in the engine arena, and the
+                                    // store-built shard plans skip plan
+                                    // construction (shard-aligned decode).
+                                    self.engine.switch_to_shira_planned(
+                                        Arc::clone(a),
+                                        Some(Arc::clone(&entry.plans)),
+                                        self.alpha,
+                                    );
+                                    SwitchPath::Fallback
+                                }
+                            };
+                            metrics
+                                .record_switch_path(path == SwitchPath::Transition);
                         }
                         (AnyAdapter::Lora(a), Policy::LoraFuse) => {
                             self.engine.switch_to_lora_shared(Arc::clone(a));
@@ -420,6 +459,26 @@ impl<'rt> Server<'rt> {
                         }
                     }
                     switch_us = t0.elapsed().as_secs_f64() * 1e6;
+                }
+            }
+
+            // ---- transition-plan prefetch -------------------------------
+            // Pairwise plans need both adapters decoded, so this runs
+            // after the switch stage: the now-active adapter is resident
+            // and pinned, and `upcoming` is told to skip names whose pair
+            // is already planned — the lookahead surfaces only pairs the
+            // plan cache is missing.  Builds run off the serving thread;
+            // the switch that needs a still-cold pair just falls back.
+            if self.policy == Policy::ShiraScatter && self.store.prefetch_depth() > 0 {
+                let planned = self.store.planned_to_names(&adapter_name);
+                let mut exclude: Vec<&str> =
+                    planned.iter().map(|s| s.as_str()).collect();
+                exclude.push(adapter_name.as_str());
+                let pair_ahead = self
+                    .batcher
+                    .upcoming(self.store.prefetch_depth(), &exclude);
+                if !pair_ahead.is_empty() {
+                    self.store.prefetch_transitions(&adapter_name, &pair_ahead);
                 }
             }
 
@@ -462,6 +521,7 @@ impl<'rt> Server<'rt> {
         let wall = wall0.elapsed().as_secs_f64();
         let store_stats = self.store.stats();
         metrics.set_store(store_stats.clone());
+        metrics.set_plan_mismatches(self.engine.plan_mismatches);
         let p99 = metrics.request_latency.percentile_us(99.0);
         let (p50_switch, p99_switch) = if metrics.switch_us.is_empty() {
             (0.0, 0.0)
@@ -485,6 +545,9 @@ impl<'rt> Server<'rt> {
             requests: metrics.requests,
             batches: metrics.batches,
             switches: metrics.switches,
+            transitions: metrics.transitions,
+            fallbacks: metrics.fallbacks,
+            plan_mismatches: metrics.plan_mismatches,
             throughput_rps: metrics.requests as f64 / wall.max(1e-9),
             mean_switch_us: metrics.switch_us.mean(),
             p50_switch_us: p50_switch,
@@ -596,6 +659,12 @@ mod tests {
         assert!(rep.store.misses >= 1);
         assert!(rep.store.resident_entries >= 1);
         assert!(rep.summary.contains("store:"));
+        // Every ShiraScatter switch is classified transition-or-fallback
+        // (which one depends on whether the background plan build won the
+        // race — the bytes are identical either way).
+        assert_eq!(rep.transitions + rep.fallbacks, rep.switches);
+        assert!(rep.summary.contains("paths: transition="));
+        assert!(rep.summary.contains("plans: hits="));
     }
 
     #[test]

@@ -34,7 +34,7 @@ use anyhow::{anyhow, Result};
 use super::cache::LruCache;
 use crate::adapter::io::{self, AdapterFamily, Format};
 use crate::adapter::sparse::{shards_for, ShardPlan};
-use crate::adapter::{LoraAdapter, ShiraAdapter};
+use crate::adapter::{AdapterTransition, LoraAdapter, ShiraAdapter};
 use crate::util::threadpool::ThreadPool;
 
 /// A decoded adapter of either family.  Variants hold `Arc`s so a cache
@@ -106,7 +106,8 @@ impl AdapterHandle {
     }
 }
 
-/// Store tunables: decode-cache budget, on-flash format, prefetch depth.
+/// Store tunables: decode-cache budget, on-flash format, prefetch depth,
+/// transition-plan cache budget.
 #[derive(Clone, Debug)]
 pub struct StoreConfig {
     /// Byte budget of the decoded-adapter cache.
@@ -114,8 +115,12 @@ pub struct StoreConfig {
     /// On-flash encoding for adapters added to the store.
     pub format: Format,
     /// How many upcoming adapters one [`AdapterStore::prefetch`] call may
-    /// submit for background decode (0 disables prefetch).
+    /// submit for background decode (0 disables prefetch; the same depth
+    /// bounds [`AdapterStore::prefetch_transitions`]).
     pub prefetch_depth: usize,
+    /// Byte budget of the pairwise transition-plan cache (0 disables
+    /// direct transitions: every switch falls back to revert+apply).
+    pub plan_cache_bytes: usize,
 }
 
 impl Default for StoreConfig {
@@ -124,6 +129,7 @@ impl Default for StoreConfig {
             cache_bytes: 8 << 20,
             format: Format::V2,
             prefetch_depth: 2,
+            plan_cache_bytes: 4 << 20,
         }
     }
 }
@@ -154,6 +160,21 @@ pub struct StoreStats {
     pub resident_bytes: usize,
     /// Decoded adapters currently resident in the cache.
     pub resident_entries: usize,
+    /// Transition-plan lookups ([`AdapterStore::begin_transition`]) that
+    /// found a resident plan — these switches take the one-pass direct
+    /// path.
+    pub plan_hits: u64,
+    /// Transition-plan lookups that missed — these switches fall back to
+    /// revert+apply.
+    pub plan_misses: u64,
+    /// Transition plans evicted to fit the plan-cache byte budget.
+    pub plan_evictions: u64,
+    /// Background transition-plan builds submitted to the pool.
+    pub plan_builds: u64,
+    /// Bytes of transition plans currently resident in the plan cache.
+    pub plan_resident_bytes: usize,
+    /// Transition plans currently resident in the plan cache.
+    pub plan_resident_entries: usize,
 }
 
 impl StoreStats {
@@ -183,20 +204,43 @@ struct PrefetchShared {
     ready: Condvar,
 }
 
+/// What a background transition-plan build has produced for a pair key.
+/// Unlike decode staging there is no waiting: a switch that finds its
+/// plan `Pending` simply falls back to revert+apply — blocking the
+/// request path on an optimization would defeat it.
+enum PlanStaged {
+    /// A build job is submitted or running.
+    Pending,
+    /// The plan is built; it moves into the plan cache on the next drain.
+    Ready(AdapterTransition),
+    /// The pair has mismatched target sets and can never be planned;
+    /// kept as a tombstone so the pair is not re-submitted every batch.
+    Unplannable,
+}
+
+struct PlanShared {
+    slots: Mutex<HashMap<String, PlanStaged>>,
+}
+
 /// Flash-resident encoded adapters + pinned RAM cache of decoded ones,
 /// with shard-aligned decode and background prefetch (module docs).
 pub struct AdapterStore {
     flash: HashMap<String, Arc<Vec<u8>>>,
     cache: LruCache<AdapterHandle>,
+    /// Pairwise A→B transition plans, keyed by [`Self::pair_key`],
+    /// byte-budgeted like the decode cache.
+    plans: LruCache<AdapterTransition>,
     format: Format,
     prefetch_depth: usize,
     /// Shard-plan width for decode (the serving pool's thread count).
     plan_threads: usize,
     pool: Option<Arc<ThreadPool>>,
     staging: Arc<PrefetchShared>,
+    plan_staging: Arc<PlanShared>,
     prefetch_issued: u64,
     prefetch_hits: u64,
     prefetch_waits: u64,
+    plan_builds: u64,
 }
 
 impl AdapterStore {
@@ -219,6 +263,7 @@ impl AdapterStore {
         AdapterStore {
             flash: HashMap::new(),
             cache: LruCache::new(cfg.cache_bytes),
+            plans: LruCache::new(cfg.plan_cache_bytes),
             format: cfg.format,
             prefetch_depth: cfg.prefetch_depth,
             plan_threads,
@@ -227,9 +272,13 @@ impl AdapterStore {
                 slots: Mutex::new(HashMap::new()),
                 ready: Condvar::new(),
             }),
+            plan_staging: Arc::new(PlanShared {
+                slots: Mutex::new(HashMap::new()),
+            }),
             prefetch_issued: 0,
             prefetch_hits: 0,
             prefetch_waits: 0,
+            plan_builds: 0,
         }
     }
 
@@ -341,6 +390,150 @@ impl AdapterStore {
         }
     }
 
+    // -- pairwise transition plans ---------------------------------------
+
+    /// Plan-cache key for the ordered pair `from` → `to` (transitions are
+    /// directional: A→B restores A and applies B).
+    fn pair_key(from: &str, to: &str) -> String {
+        format!("{from}\u{1f}{to}")
+    }
+
+    /// Move finished background plan builds into the byte-budgeted plan
+    /// cache (leaving in-flight builds and unplannable tombstones staged).
+    fn drain_plans(&mut self) {
+        let ready: Vec<(String, AdapterTransition)> = {
+            let mut slots = self.plan_staging.slots.lock().unwrap();
+            let keys: Vec<String> = slots
+                .iter()
+                .filter(|(_, s)| matches!(s, PlanStaged::Ready(_)))
+                .map(|(k, _)| k.clone())
+                .collect();
+            keys.into_iter()
+                .map(|k| match slots.remove(&k) {
+                    Some(PlanStaged::Ready(t)) => (k, t),
+                    _ => unreachable!("key filtered as Ready above"),
+                })
+                .collect()
+        };
+        for (key, plan) in ready {
+            let cost = plan.nbytes();
+            if cost > self.plans.capacity_bytes() {
+                // The plan could never be cached (oversized for the whole
+                // budget).  Tombstone the pair instead of discarding the
+                // build, or prefetch would re-submit the identical build
+                // every batch forever while the pair still falls back.
+                self.plans.oversized += 1;
+                self.plan_staging
+                    .slots
+                    .lock()
+                    .unwrap()
+                    .insert(key, PlanStaged::Unplannable);
+                continue;
+            }
+            self.plans.put(&key, plan, cost);
+        }
+    }
+
+    /// Submit background builds of `from`→`to` transition plans for up to
+    /// `prefetch_depth` of `tos` (skipping self-pairs, already-resident or
+    /// already-staged pairs, unplannable tombstones, and pairs whose
+    /// adapters are not both decoded SHiRA residents yet — the decode
+    /// prefetch fills those in and a later call picks them up).  No-op
+    /// without a pool.  Built plans are admitted to the plan cache by the
+    /// next [`Self::begin_transition`] / `prefetch_transitions` call.
+    pub fn prefetch_transitions(&mut self, from: &str, tos: &[String]) {
+        let Some(pool) = self.pool.clone() else {
+            return;
+        };
+        if self.plans.capacity_bytes() == 0 {
+            return;
+        }
+        self.drain_plans();
+        let Some(from_handle) = self.cache.peek(from) else {
+            return;
+        };
+        let AnyAdapter::Shira(from_arc) = &from_handle.adapter else {
+            return;
+        };
+        for to in tos.iter().take(self.prefetch_depth) {
+            if to == from {
+                continue;
+            }
+            let key = Self::pair_key(from, to);
+            if self.plans.peek(&key).is_some() {
+                continue;
+            }
+            let Some(to_handle) = self.cache.peek(to) else {
+                continue;
+            };
+            let AnyAdapter::Shira(to_arc) = &to_handle.adapter else {
+                continue;
+            };
+            {
+                let mut slots = self.plan_staging.slots.lock().unwrap();
+                if slots.contains_key(&key) {
+                    continue; // pending build or unplannable tombstone
+                }
+                slots.insert(key.clone(), PlanStaged::Pending);
+            }
+            self.plan_builds += 1;
+            let shared = Arc::clone(&self.plan_staging);
+            let plan_threads = self.plan_threads;
+            let a = Arc::clone(from_arc);
+            let b = Arc::clone(to_arc);
+            pool.execute(move || {
+                let built = AdapterTransition::build(&a, &b, plan_threads);
+                let mut slots = shared.slots.lock().unwrap();
+                slots.insert(
+                    key,
+                    match built {
+                        Some(t) => PlanStaged::Ready(t),
+                        None => PlanStaged::Unplannable,
+                    },
+                );
+            });
+        }
+    }
+
+    /// Look up the cached `from`→`to` transition plan for an imminent
+    /// switch.  On a hit the entry is **pinned** until
+    /// [`Self::end_transition`], so plan-cache eviction can never drop the
+    /// plan of the in-flight transition.  A miss (cold pair, build still
+    /// in flight, or unplannable pair) returns `None` and the switch
+    /// falls back to revert+apply.
+    pub fn begin_transition(&mut self, from: &str, to: &str) -> Option<Arc<AdapterTransition>> {
+        self.drain_plans();
+        let key = Self::pair_key(from, to);
+        let plan = self.plans.get(&key)?;
+        self.plans.pin(&key);
+        Some(plan)
+    }
+
+    /// Release the in-flight pin taken by [`Self::begin_transition`].
+    pub fn end_transition(&mut self, from: &str, to: &str) {
+        self.plans.unpin(&Self::pair_key(from, to));
+    }
+
+    /// True when a `from`→`to` plan is resident (no recency or counter
+    /// touch).
+    pub fn has_transition_plan(&self, from: &str, to: &str) -> bool {
+        self.plans.peek(&Self::pair_key(from, to)).is_some()
+    }
+
+    /// Names with a resident `from`→X transition plan — the exclusion set
+    /// for the batcher's `upcoming` lookahead, so plan prefetch is not
+    /// re-suggested pairs it already holds.
+    pub fn planned_to_names(&mut self, from: &str) -> Vec<String> {
+        self.drain_plans();
+        let prefix = Self::pair_key(from, "");
+        self.plans
+            .keys_lru_order()
+            .into_iter()
+            .filter_map(|k| k.strip_prefix(prefix.as_str()))
+            .map(str::to_string)
+            .collect()
+    }
+
     /// Pin `name` in the decode cache (refcounted): pinned entries are
     /// never evicted.  Returns false when the adapter is not resident.
     pub fn pin(&mut self, name: &str) -> bool {
@@ -369,6 +562,12 @@ impl AdapterStore {
             oversized_serves: self.cache.oversized,
             resident_bytes: self.cache.used_bytes(),
             resident_entries: self.cache.len(),
+            plan_hits: self.plans.hits,
+            plan_misses: self.plans.misses,
+            plan_evictions: self.plans.evictions,
+            plan_builds: self.plan_builds,
+            plan_resident_bytes: self.plans.used_bytes(),
+            plan_resident_entries: self.plans.len(),
         }
     }
 
@@ -457,6 +656,7 @@ mod tests {
                     cache_bytes: 1 << 20,
                     format,
                     prefetch_depth: 0,
+                    ..StoreConfig::default()
                 },
                 None,
             );
@@ -478,6 +678,7 @@ mod tests {
                     cache_bytes: 1 << 20,
                     format,
                     prefetch_depth: 0,
+                    ..StoreConfig::default()
                 },
                 None,
             );
@@ -536,6 +737,7 @@ mod tests {
                 cache_bytes: 1 << 20,
                 format: Format::V2,
                 prefetch_depth: 2,
+                ..StoreConfig::default()
             },
             Some(Arc::new(ThreadPool::new(2))),
         );
@@ -568,6 +770,120 @@ mod tests {
         assert_eq!(store.stats().prefetch_hits, 0);
     }
 
+    /// Store + pool wired for transition-plan tests, with the named
+    /// adapters added and fetched resident.
+    fn plan_store(
+        plan_cache_bytes: usize,
+        names: &[&str],
+        rng: &mut Rng,
+    ) -> (AdapterStore, Arc<ThreadPool>) {
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 1 << 20,
+                format: Format::V2,
+                prefetch_depth: 8,
+                plan_cache_bytes,
+            },
+            Some(Arc::clone(&pool)),
+        );
+        for name in names {
+            store.add_shira(&shira(rng, name, 32, 64));
+            store.fetch(name).unwrap();
+        }
+        (store, pool)
+    }
+
+    #[test]
+    fn transition_plans_build_in_background_and_hit() {
+        let mut rng = Rng::new(10);
+        let (mut store, pool) = plan_store(1 << 20, &["a", "b", "c"], &mut rng);
+        // Cold pair: miss, fallback.
+        assert!(store.begin_transition("a", "b").is_none());
+        assert_eq!(store.stats().plan_misses, 1);
+        store.prefetch_transitions("a", &["b".to_string(), "c".to_string()]);
+        assert_eq!(store.stats().plan_builds, 2);
+        pool.join(); // deterministic: wait out the background builds
+        let plan = store.begin_transition("a", "b").expect("plan built");
+        assert_eq!((plan.from.as_str(), plan.to.as_str()), ("a", "b"));
+        store.end_transition("a", "b");
+        assert!(store.has_transition_plan("a", "c"));
+        assert!(!store.has_transition_plan("b", "a"), "plans are directional");
+        let stats = store.stats();
+        assert_eq!(stats.plan_hits, 1);
+        assert_eq!(stats.plan_resident_entries, 2);
+        assert!(stats.plan_resident_bytes > 0);
+        // planned pairs are reported for the upcoming() exclusion set
+        let mut planned = store.planned_to_names("a");
+        planned.sort();
+        assert_eq!(planned, vec!["b".to_string(), "c".to_string()]);
+        // re-prefetching a resident pair (or a self-pair) is a no-op
+        store.prefetch_transitions("a", &["b".to_string(), "a".to_string()]);
+        assert_eq!(store.stats().plan_builds, 2);
+    }
+
+    #[test]
+    fn unplannable_pairs_tombstone_instead_of_respawning() {
+        let mut rng = Rng::new(11);
+        let (mut store, pool) = plan_store(1 << 20, &["a"], &mut rng);
+        // "odd" targets a different tensor set — unplannable with "a".
+        let mut odd = shira(&mut rng, "odd", 32, 64);
+        odd.tensors[0].0 = "other".into();
+        store.add_shira(&odd);
+        store.fetch("odd").unwrap();
+        store.prefetch_transitions("a", &["odd".to_string()]);
+        pool.join();
+        assert!(store.begin_transition("a", "odd").is_none());
+        assert_eq!(store.stats().plan_builds, 1);
+        // the tombstone stops the pair from being re-submitted every batch
+        store.prefetch_transitions("a", &["odd".to_string()]);
+        assert_eq!(store.stats().plan_builds, 1);
+    }
+
+    #[test]
+    fn oversized_plan_tombstones_instead_of_rebuilding_forever() {
+        // A plan bigger than the whole plan budget can never be cached:
+        // it must tombstone like an unplannable pair, not be rebuilt on
+        // the pool every batch while silently never serving a hit.
+        let mut rng = Rng::new(13);
+        let (mut store, pool) = plan_store(256, &["a", "b"], &mut rng); // plan ~2.2 KB > 256 B
+        store.prefetch_transitions("a", &["b".to_string()]);
+        pool.join();
+        assert!(store.begin_transition("a", "b").is_none());
+        assert_eq!(store.stats().plan_builds, 1);
+        assert_eq!(store.stats().plan_resident_entries, 0);
+        // the tombstone stops the pair from being re-submitted
+        store.prefetch_transitions("a", &["b".to_string()]);
+        pool.join();
+        assert_eq!(store.stats().plan_builds, 1, "oversized pair rebuilt");
+    }
+
+    #[test]
+    fn plan_cache_eviction_never_evicts_inflight_plan() {
+        // Satellite: the plan taken by begin_transition is pinned until
+        // end_transition, so cache pressure cannot drop it mid-switch.
+        let mut rng = Rng::new(12);
+        let names = ["a", "b", "c", "d", "e"];
+        // One plan for these adapters costs ~2.2 KB, so a 4 KB budget
+        // cannot hold two: every later build pressures the cache.
+        let (mut store, pool) = plan_store(4096, &names, &mut rng);
+        store.prefetch_transitions("a", &["b".to_string()]);
+        pool.join();
+        let inflight = store.begin_transition("a", "b").expect("plan built");
+        assert_eq!((inflight.from.as_str(), inflight.to.as_str()), ("a", "b"));
+        for other in ["c", "d", "e"] {
+            store.prefetch_transitions(other, &["b".to_string(), "a".to_string()]);
+        }
+        pool.join();
+        store.drain_plans();
+        assert!(store.stats().plan_evictions > 0, "pressure evicted something");
+        assert!(
+            store.has_transition_plan("a", "b"),
+            "in-flight plan survived eviction pressure"
+        );
+        store.end_transition("a", "b");
+    }
+
     #[test]
     fn corrupt_flash_bytes_error_on_fetch_and_prefetch() {
         let mut store = AdapterStore::with_config(
@@ -575,6 +891,7 @@ mod tests {
                 cache_bytes: 1 << 20,
                 format: Format::V2,
                 prefetch_depth: 1,
+                ..StoreConfig::default()
             },
             Some(Arc::new(ThreadPool::new(1))),
         );

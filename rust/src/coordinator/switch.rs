@@ -34,9 +34,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::adapter::sparse::{
-    scatter_restore, scatter_snapshot_apply, shards_for, ShardPlan, PAR_MIN_NNZ,
+    scatter_restore, scatter_snapshot_apply, scatter_transition, shards_for, ShardPlan,
+    PAR_MIN_NNZ,
 };
-use crate::adapter::{LoraAdapter, ShiraAdapter};
+use crate::adapter::{AdapterTransition, LoraAdapter, ShiraAdapter};
 use crate::model::weights::WeightStore;
 use crate::util::threadpool::ThreadPool;
 
@@ -76,6 +77,29 @@ impl Policy {
             "lora-unfused" | "unfused" => Policy::LoraUnfused,
             _ => return None,
         })
+    }
+}
+
+/// Which path a SHiRA adapter-to-adapter switch took (recorded per switch
+/// in `ServeMetrics`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwitchPath {
+    /// One-pass direct transition over the A∪B support union (one pool
+    /// dispatch wave) via a precomputed
+    /// [`AdapterTransition`](crate::adapter::AdapterTransition) plan.
+    Transition,
+    /// Classic revert-then-apply (no usable transition plan: cold pair,
+    /// no previous adapter, or a plan/adapter mismatch).
+    Fallback,
+}
+
+impl SwitchPath {
+    /// Stable report name of the path.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SwitchPath::Transition => "transition",
+            SwitchPath::Fallback => "fallback",
+        }
     }
 }
 
@@ -152,6 +176,51 @@ impl ShardTask {
     }
 }
 
+/// One shard of direct-transition work: raw cursors into the union-walk
+/// arrays of one tensor's [`TransitionPlan`](crate::adapter::sparse::TransitionPlan),
+/// the outgoing adapter's snapshot (read), the incoming adapter's
+/// snapshot buffer (written) and the target tensor.
+///
+/// Pointers are only dereferenced inside the `scoped_for` region of the
+/// transition call that built them; the task list is cleared afterwards.
+#[derive(Clone, Copy)]
+struct TransitionTask {
+    idx: *const u32,
+    a_pos: *const u32,
+    b_pos: *const u32,
+    delta: *const f32,
+    w: *mut f32,
+    snap_a: *const f32,
+    snap_b: *mut f32,
+    lo: usize,
+    hi: usize,
+}
+
+unsafe impl Send for TransitionTask {}
+unsafe impl Sync for TransitionTask {}
+
+impl TransitionTask {
+    /// One-pass union transition over this shard's range — delegates to
+    /// the shared kernel in `adapter::sparse`.
+    ///
+    /// # Safety
+    /// Tasks must cover disjoint union ranges; all pointers must be live.
+    unsafe fn run(&self, alpha: f32) {
+        scatter_transition(
+            self.idx,
+            self.a_pos,
+            self.b_pos,
+            self.delta,
+            self.w,
+            self.snap_a,
+            self.snap_b,
+            alpha,
+            self.lo,
+            self.hi,
+        )
+    }
+}
+
 /// Owns the resident base weights and mutates them per adapter.
 pub struct SwitchEngine {
     /// The resident weight store (one copy of the base model).
@@ -162,8 +231,22 @@ pub struct SwitchEngine {
     pool: Option<Arc<ThreadPool>>,
     /// Reusable per-target snapshot buffers: allocation-free steady state.
     arena: HashMap<String, Vec<f32>>,
+    /// Back buffers for direct transitions: the incoming adapter's
+    /// snapshot is written here while the outgoing adapter's snapshot is
+    /// still being read from `arena`, then the two are swapped per target.
+    /// Retained like the arena, so transitions stay allocation-free too.
+    spare: HashMap<String, Vec<f32>>,
     /// Reusable shard-task scratch for the parallel path.
     tasks: Vec<ShardTask>,
+    /// Reusable transition-task scratch for the one-wave direct path.
+    ttasks: Vec<TransitionTask>,
+    /// Direct one-pass transitions performed (subset of `switches`).
+    pub transitions: u64,
+    /// Store-built shard-plan sets ignored because they did not match the
+    /// adapter (wrong tensor count or per-tensor nnz — typically a
+    /// mis-sized pool width at decode time).  Dispatch silently fell back
+    /// to freshly computed plans; this counter makes that visible.
+    pub plan_mismatches: u64,
 }
 
 impl SwitchEngine {
@@ -181,7 +264,11 @@ impl SwitchEngine {
             switches: 0,
             pool,
             arena: HashMap::new(),
+            spare: HashMap::new(),
             tasks: Vec::new(),
+            ttasks: Vec::new(),
+            transitions: 0,
+            plan_mismatches: 0,
         }
     }
 
@@ -285,6 +372,133 @@ impl SwitchEngine {
         t
     }
 
+    /// Direct adapter-to-adapter switch: one pass over the A∪B support
+    /// union instead of revert+apply's two, dispatched as ONE pool wave.
+    ///
+    /// `tp` is a precomputed [`AdapterTransition`] for (currently-active →
+    /// `b`); `plans` carries `b`'s store-built shard plans for the later
+    /// revert, exactly as in [`Self::switch_to_shira_planned`].  Per union
+    /// slot the kernel restores A's snapshot (A-only), snapshots the base
+    /// and applies B (B-only), or forwards A's snapshot value as B's base
+    /// while applying B (overlap) — leaving the weights AND the snapshot
+    /// arena bit-identical to a `revert` followed by a fresh
+    /// snapshot+apply of `b` (property-tested).
+    ///
+    /// When `tp` does not describe the (active, `b`) pair — no SHiRA
+    /// adapter active, or a name/shape/nnz mismatch — the engine falls
+    /// back to revert+apply and reports [`SwitchPath::Fallback`]; the
+    /// resulting bytes are identical either way.
+    pub fn transition_to(
+        &mut self,
+        b: Arc<ShiraAdapter>,
+        plans: Option<Arc<Vec<ShardPlan>>>,
+        tp: &AdapterTransition,
+        alpha: f32,
+    ) -> (SwitchTiming, SwitchPath) {
+        let valid = match &self.active {
+            Active::Shira { adapter, .. } => tp.matches(adapter, &b),
+            _ => false,
+        };
+        if !valid {
+            let t = self.switch_to_shira_planned(b, plans, alpha);
+            return (t, SwitchPath::Fallback);
+        }
+        let mut t = SwitchTiming::default();
+        let t0 = Instant::now();
+        let pool = match &self.pool {
+            Some(p) if tp.union_nnz() >= PAR_MIN_NNZ && p.threads() > 1 => {
+                Some(Arc::clone(p))
+            }
+            _ => None,
+        };
+        match pool {
+            Some(pool) => {
+                self.build_transition_tasks(&b, tp);
+                let tasks = &self.ttasks;
+                pool.scoped_for(tasks.len(), |i| {
+                    // SAFETY: tasks cover disjoint union ranges (row-
+                    // aligned shards over unique sorted union indices, one
+                    // plan per distinct target tensor), so every W element
+                    // and every incoming-snapshot slot is written by
+                    // exactly one task; outgoing snapshots are read-only.
+                    unsafe { tasks[i].run(alpha) }
+                });
+                self.ttasks.clear();
+            }
+            None => {
+                for (ti, (target, d_b)) in b.tensors.iter().enumerate() {
+                    Self::arena_buf_prepare(&mut self.spare, target, d_b.nnz());
+                    let snap_a = self
+                        .arena
+                        .get(target.as_str())
+                        .expect("snapshot exists for active adapter");
+                    let snap_b = self.spare.get_mut(target.as_str()).unwrap();
+                    let w = self.weights.get_mut(target);
+                    tp.plans()[ti].transition(w, snap_a, snap_b, d_b, alpha);
+                }
+            }
+        }
+        // The incoming adapter's base snapshot landed in the spare
+        // buffers; swap them live.  The outgoing buffers become the next
+        // transition's spares — capacity retained, so steady-state
+        // transitions allocate nothing.
+        for (target, _) in &b.tensors {
+            let live = self
+                .arena
+                .get_mut(target.as_str())
+                .expect("snapshot exists for active adapter");
+            let fresh = self
+                .spare
+                .get_mut(target.as_str())
+                .expect("spare buffer prepared above");
+            std::mem::swap(live, fresh);
+        }
+        t.fuse_us = t0.elapsed().as_secs_f64() * 1e6;
+        self.active = Active::Shira { adapter: b, plans };
+        self.switches += 1;
+        self.transitions += 1;
+        (t, SwitchPath::Transition)
+    }
+
+    /// Build the flat transition-task list spanning every target tensor:
+    /// each task is one row-aligned shard of one tensor's union walk, so
+    /// the whole A→B switch runs under a single `scoped_for` region.
+    fn build_transition_tasks(&mut self, b: &ShiraAdapter, tp: &AdapterTransition) {
+        self.ttasks.clear();
+        for (ti, (target, d_b)) in b.tensors.iter().enumerate() {
+            Self::arena_buf_prepare(&mut self.spare, target, d_b.nnz());
+            let snap_a = self
+                .arena
+                .get(target.as_str())
+                .expect("snapshot exists for active adapter");
+            let snap_b = self.spare.get_mut(target.as_str()).unwrap();
+            let w = self.weights.get_mut(target);
+            let plan = &tp.plans()[ti];
+            debug_assert_eq!((w.rows, w.cols), (plan.rows(), plan.cols()));
+            debug_assert_eq!(snap_a.len(), plan.a_nnz());
+            debug_assert_eq!(snap_b.len(), plan.b_nnz());
+            let (idx, a_pos, b_pos) = plan.raw_parts();
+            let sp = plan.shards();
+            for s in 0..sp.len() {
+                let (lo, hi) = sp.range(s);
+                if lo == hi {
+                    continue;
+                }
+                self.ttasks.push(TransitionTask {
+                    idx,
+                    a_pos,
+                    b_pos,
+                    delta: d_b.delta.as_ptr(),
+                    w: w.data.as_mut_ptr(),
+                    snap_a: snap_a.as_ptr(),
+                    snap_b: snap_b.as_mut_ptr(),
+                    lo,
+                    hi,
+                });
+            }
+        }
+    }
+
     /// Build the flat shard-task list spanning every target tensor.
     /// `fresh` resizes arena buffers for a new snapshot; revert reuses the
     /// buffers exactly as the preceding apply left them.  `plans` carries
@@ -299,6 +513,7 @@ impl SwitchEngine {
     ) {
         self.tasks.clear();
         let prebuilt = plans.filter(|p| p.len() == a.tensors.len());
+        let mut mismatches = u64::from(plans.is_some() && prebuilt.is_none());
         for (ti, (target, delta)) in a.tensors.iter().enumerate() {
             if fresh {
                 Self::arena_buf_prepare(&mut self.arena, target, delta.nnz());
@@ -312,7 +527,11 @@ impl SwitchEngine {
             debug_assert_eq!((w.rows, w.cols), (delta.rows, delta.cols));
             let plan = match prebuilt {
                 Some(p) if p[ti].total() == delta.nnz() => p[ti],
-                _ => delta.shard(shards_for(delta.nnz(), threads)),
+                Some(_) => {
+                    mismatches += 1;
+                    delta.shard(shards_for(delta.nnz(), threads))
+                }
+                None => delta.shard(shards_for(delta.nnz(), threads)),
             };
             for s in 0..plan.len() {
                 let (lo, hi) = plan.range(s);
@@ -329,6 +548,21 @@ impl SwitchEngine {
                 });
             }
         }
+        if mismatches > 0 {
+            self.record_plan_mismatch(mismatches);
+        }
+    }
+
+    /// Count ignored store-built plans (and warn once, so a mis-sized
+    /// pool width is not invisible — bytes are unaffected either way).
+    fn record_plan_mismatch(&mut self, n: u64) {
+        if self.plan_mismatches == 0 {
+            crate::log_warn!(
+                "store-built shard plans did not match the adapter \
+                 (pool-width/nnz mismatch); recomputing row-aligned plans"
+            );
+        }
+        self.plan_mismatches += n;
     }
 
     /// Fuse a LoRA adapter (HF pipeline's fuse stage).  Convenience
@@ -610,6 +844,139 @@ mod tests {
         assert!(eng.weights.bit_equal(&applied));
         eng.revert();
         assert!(eng.weights.bit_equal(&base));
+    }
+
+    /// Adapter with the same targets as [`big_weights_and_adapter`]'s but
+    /// a support overlapping `base_of`'s by roughly `overlap` fraction.
+    fn overlapping_adapter(
+        base_of: &ShiraAdapter,
+        name: &str,
+        overlap: f64,
+        seed: u64,
+    ) -> ShiraAdapter {
+        let mut rng = Rng::new(seed);
+        let tensors = base_of
+            .tensors
+            .iter()
+            .map(|(target, d)| {
+                let k = d.nnz();
+                let shared = (k as f64 * overlap) as usize;
+                let mut seen: std::collections::HashSet<u32> =
+                    d.idx[..shared].iter().copied().collect();
+                while seen.len() < k {
+                    seen.insert(rng.below(d.numel()) as u32);
+                }
+                let mut idx: Vec<u32> = seen.into_iter().collect();
+                idx.sort_unstable();
+                let mut delta = vec![0.0; k];
+                rng.fill_normal(&mut delta, 0.0, 0.5);
+                (target.clone(), SparseDelta::new(d.rows, d.cols, idx, delta))
+            })
+            .collect();
+        ShiraAdapter {
+            name: name.into(),
+            strategy: "rand".into(),
+            tensors,
+        }
+    }
+
+    #[test]
+    fn transition_bit_identical_to_revert_apply_sequences() {
+        // The tentpole acceptance property at the engine level: arbitrary
+        // switch sequences via `transition_to` — including alpha changes,
+        // a self-transition, and disjoint / heavy-overlap supports —
+        // produce bit-identical weights to revert+apply, at 1 and 4
+        // threads, and leave the arena able to revert to base exactly.
+        let (base, a) = big_weights_and_adapter(21);
+        let b = overlapping_adapter(&a, "b", 0.0, 22); // disjoint-ish
+        let c = overlapping_adapter(&a, "c", 0.95, 23); // heavy overlap
+        let seq: Vec<(&ShiraAdapter, f32)> = vec![
+            (&a, 1.0),
+            (&b, 0.7),
+            (&c, 1.3),
+            (&a, 0.5),
+            (&a, 1.1), // self-transition with an alpha change
+            (&c, -0.4),
+        ];
+        for threads in [1usize, 4] {
+            let pool = Arc::new(ThreadPool::new(threads));
+            let mut direct =
+                SwitchEngine::with_pool(base.clone(), Some(Arc::clone(&pool)));
+            let mut reference = SwitchEngine::with_pool(base.clone(), Some(pool));
+            for (step, &(adapter, alpha)) in seq.iter().enumerate() {
+                let shared = Arc::new(adapter.clone());
+                reference.switch_to_shira_shared(Arc::clone(&shared), alpha);
+                if step == 0 {
+                    direct.switch_to_shira_shared(Arc::clone(&shared), alpha);
+                } else {
+                    let prev = seq[step - 1].0;
+                    let tp = AdapterTransition::build(prev, adapter, threads)
+                        .expect("same target sets");
+                    let (_t, path) = direct.transition_to(shared, None, &tp, alpha);
+                    assert_eq!(path, SwitchPath::Transition, "step {step}");
+                }
+                assert!(
+                    direct.weights.bit_equal(&reference.weights),
+                    "step {step} threads={threads}"
+                );
+            }
+            assert_eq!(direct.transitions, (seq.len() - 1) as u64);
+            assert_eq!(direct.switches, seq.len() as u64);
+            // The arena must hold the last adapter's true base snapshot.
+            direct.revert();
+            assert!(direct.weights.bit_equal(&base), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn transition_falls_back_on_mismatched_plan() {
+        let (base, a) = big_weights_and_adapter(24);
+        let b = overlapping_adapter(&a, "b", 0.5, 25);
+        let c = overlapping_adapter(&a, "c", 0.5, 26);
+        let wrong = AdapterTransition::build(&c, &b, 2).unwrap(); // c→b, not a→b
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
+        eng.switch_to_shira(&a, 1.0);
+        let (_t, path) = eng.transition_to(Arc::new(b.clone()), None, &wrong, 1.0);
+        assert_eq!(path, SwitchPath::Fallback);
+        assert_eq!(eng.transitions, 0);
+        // Fallback still produced the correct state.
+        let mut reference = SwitchEngine::new(base.clone());
+        reference.switch_to_shira(&a, 1.0);
+        reference.switch_to_shira(&b, 1.0);
+        assert!(eng.weights.bit_equal(&reference.weights));
+        // No active adapter at all → fallback too.
+        let mut cold = SwitchEngine::new(base.clone());
+        let tp = AdapterTransition::build(&a, &b, 1).unwrap();
+        let (_t, path) = cold.transition_to(Arc::new(b), None, &tp, 1.0);
+        assert_eq!(path, SwitchPath::Fallback);
+    }
+
+    #[test]
+    fn mismatched_store_plans_are_counted() {
+        // Satellite: silently-ignored ShardPlan sets now increment a
+        // visible counter (bytes are unaffected either way).
+        let (base, a) = big_weights_and_adapter(27);
+        let a = Arc::new(a);
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
+        let bogus: Arc<Vec<ShardPlan>> = Arc::new(Vec::new());
+        eng.switch_to_shira_planned(Arc::clone(&a), Some(bogus), 1.0);
+        assert!(eng.plan_mismatches >= 1, "wrong-length plan set counted");
+        let before = eng.plan_mismatches;
+        // A matching plan set adds nothing.
+        let good: Arc<Vec<ShardPlan>> = Arc::new(
+            a.tensors
+                .iter()
+                .map(|(_, d)| d.shard(shards_for(d.nnz(), 2)))
+                .collect(),
+        );
+        eng.switch_to_shira_planned(Arc::clone(&a), Some(good), 1.0);
+        eng.revert();
+        assert!(eng.weights.bit_equal(&base));
+        // the mismatched-plan revert already happened inside the second
+        // switch; only the first (bogus) dispatch should have counted
+        assert_eq!(eng.plan_mismatches, before + 1, "revert of bogus-planned switch");
     }
 
     #[test]

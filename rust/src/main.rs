@@ -48,6 +48,7 @@ USAGE: shira <subcommand> [flags]
   serve --policy <shira|fusion|lora-fuse|unfused> [--pattern bursty|uniform|rr]
         [--trace-len N] [--adapters N] [--cache-bytes N]
         [--prefetch-depth N] [--format v1|v2|v2-f16]
+        [--plan-cache-bytes N]   (0 disables direct A->B transitions)
   fuse  --out <file> <a.shira> <b.shira> ...
   switch-bench [--dims 512,1024,2048,4096] [--frac 0.02] [--rank 32]
   repro --exp <table1..6|fig4|fig5|fig6|fig7|orthogonality|all> [--fast]
@@ -273,7 +274,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             shira::adapter::io::Format::parse(f)
                 .ok_or_else(|| anyhow!("bad --format {f} (expected v1|v2|v2-f16)"))?
         },
+        plan_cache_bytes: args
+            .get_usize("plan-cache-bytes", default_cfg.plan_cache_bytes)?,
     };
+    let plan_cache_bytes = store_cfg.plan_cache_bytes;
     let pool = Arc::new(ThreadPool::host_sized());
     let mut server = Server::with_store_config(&rt, base, policy, "llama", store_cfg, pool)?;
 
@@ -345,12 +349,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .filter_map(|n| server.store.encoded_len(n))
         .sum();
     println!(
-        "flash: {} adapters, {} encoded ({} format), cache budget {}, prefetch depth {}",
+        "flash: {} adapters, {} encoded ({} format), cache budget {}, \
+         prefetch depth {}, plan cache {}",
         names.len(),
         shira::util::alloc::fmt_bytes(flash_bytes),
         server.store.format().name(),
         shira::util::alloc::fmt_bytes(cfg.cache_bytes),
         server.store.prefetch_depth(),
+        shira::util::alloc::fmt_bytes(plan_cache_bytes),
     );
     let trace = generate_trace(&trace_names, cfg.trace_len, pattern, 1e4, cfg.seed);
     println!(

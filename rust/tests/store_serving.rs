@@ -11,7 +11,7 @@ use shira::adapter::sparse::SparseDelta;
 use shira::adapter::ShiraAdapter;
 use shira::coordinator::fusion_engine::{FusionEngine, FusionPlan};
 use shira::coordinator::store::{AdapterStore, AnyAdapter, StoreConfig};
-use shira::coordinator::switch::SwitchEngine;
+use shira::coordinator::switch::{SwitchEngine, SwitchPath};
 use shira::model::weights::WeightStore;
 use shira::util::rng::Rng;
 use shira::util::threadpool::ThreadPool;
@@ -81,6 +81,7 @@ fn run_through_store(
             cache_bytes,
             format,
             prefetch_depth: if prefetch { 2 } else { 0 },
+            ..StoreConfig::default()
         },
         Some(Arc::clone(&pool)),
     );
@@ -163,11 +164,21 @@ fn v2_flash_is_smaller_for_paper_sparsity() {
     let sparse = make_adapter(&mut rng, "sp", (DIM * DIM) / 64);
     for a in adapters().iter().chain(std::iter::once(&sparse)) {
         let mut v1 = AdapterStore::with_config(
-            StoreConfig { cache_bytes: 1 << 20, format: Format::V1, prefetch_depth: 0 },
+            StoreConfig {
+                cache_bytes: 1 << 20,
+                format: Format::V1,
+                prefetch_depth: 0,
+                ..StoreConfig::default()
+            },
             None,
         );
         let mut v2 = AdapterStore::with_config(
-            StoreConfig { cache_bytes: 1 << 20, format: Format::V2, prefetch_depth: 0 },
+            StoreConfig {
+                cache_bytes: 1 << 20,
+                format: Format::V2,
+                prefetch_depth: 0,
+                ..StoreConfig::default()
+            },
             None,
         );
         v1.add_shira(a);
@@ -200,6 +211,7 @@ fn fusion_bit_identical_for_v1_and_v2_store_handles() {
                 cache_bytes: 64 << 20,
                 format,
                 prefetch_depth: 0,
+                ..StoreConfig::default()
             },
             Some(Arc::clone(&pool)),
         );
@@ -251,6 +263,7 @@ fn pinned_roster_survives_cache_pressure_from_switch_traffic() {
             cache_bytes: 2 * one_adapter,
             format: Format::V2,
             prefetch_depth: 0,
+            ..StoreConfig::default()
         },
         None,
     );
@@ -270,4 +283,82 @@ fn pinned_roster_survives_cache_pressure_from_switch_traffic() {
     let before_hits = store.stats().hits;
     store.fetch("ad0").unwrap();
     assert_eq!(store.stats().hits, before_hits + 1, "pinned member decoded again");
+}
+
+#[test]
+fn direct_transitions_bit_identical_through_the_store() {
+    // The PR acceptance path at the lifecycle level: the same switch
+    // sequence served through the store is bit-identical whether every
+    // hot pair takes the one-pass direct transition (plans prefetched in
+    // the background) or every switch falls back to revert+apply (the
+    // reference_states engine) — at 1 and 4 threads.
+    let adapters = adapters();
+    let (want, base) = reference_states(&adapters);
+    for threads in [1usize, 4] {
+        let pool = Arc::new(ThreadPool::new(threads));
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 64 << 20,
+                format: Format::V2,
+                prefetch_depth: 4,
+                ..StoreConfig::default()
+            },
+            Some(Arc::clone(&pool)),
+        );
+        for a in &adapters {
+            store.add_shira(a);
+        }
+        // Decode everything up front so every pair is plannable.
+        for a in &adapters {
+            store.fetch(&a.name).unwrap();
+        }
+        let mut eng = SwitchEngine::with_pool(base.clone(), Some(Arc::clone(&pool)));
+        let seq = switch_sequence();
+        let mut transitions = 0u64;
+        for (step, &i) in seq.iter().enumerate() {
+            let name = adapters[i].name.clone();
+            let prev = eng.active_name().map(|s| s.to_string());
+            if let Some(prev) = prev.as_deref() {
+                // Background plan build; joined so the test is
+                // deterministic (serving just falls back when it loses
+                // the race — same bytes either way).
+                store.prefetch_transitions(prev, std::slice::from_ref(&name));
+                pool.join();
+            }
+            let h = store.fetch(&name).unwrap();
+            let AnyAdapter::Shira(a) = &h.adapter else { panic!("family") };
+            match prev.as_deref().and_then(|p| store.begin_transition(p, &name)) {
+                Some(tp) => {
+                    let (_t, path) = eng.transition_to(
+                        Arc::clone(a),
+                        Some(Arc::clone(&h.plans)),
+                        &tp,
+                        1.0,
+                    );
+                    store.end_transition(prev.as_deref().unwrap(), &name);
+                    assert_eq!(path, SwitchPath::Transition, "step {step}");
+                    transitions += 1;
+                }
+                None => {
+                    eng.switch_to_shira_planned(
+                        Arc::clone(a),
+                        Some(Arc::clone(&h.plans)),
+                        1.0,
+                    );
+                }
+            }
+            assert!(
+                eng.weights.bit_equal(&want[step]),
+                "transition-path weights diverged at step {step} (threads={threads})"
+            );
+        }
+        assert_eq!(
+            transitions,
+            (seq.len() - 1) as u64,
+            "every non-first switch should have transitioned"
+        );
+        assert!(store.stats().plan_hits >= transitions);
+        eng.revert();
+        assert!(eng.weights.bit_equal(&base), "revert after transitions not exact");
+    }
 }
