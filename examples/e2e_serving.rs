@@ -6,17 +6,20 @@
 //! 2. finetunes THREE per-task SHiRA adapters + one LoRA baseline adapter
 //!    (the L1 scatter semantics inside the train-step graphs);
 //! 3. evaluates each adapter fused vs the base (accuracy lift);
-//! 4. serves a 200-request mixed-adapter trace under all three switching
-//!    policies, reporting throughput / p99 / switch overhead.
+//! 4. serves request traces through the unified `Selection` API: one
+//!    SHiRA server handles a trace mixing base, single-adapter and
+//!    fused-set selections per-request; LoRA servers run the fuse and
+//!    unfused baselines — reporting throughput / p99 / switch overhead.
 //!
 //! Run: `cargo run --release --example e2e_serving [--fast]`
 
 use shira::adapter::mask::MaskStrategy;
 use shira::config::RunConfig;
+use shira::coordinator::selection::Selection;
 use shira::coordinator::server::Server;
-use shira::coordinator::switch::{Policy, SwitchEngine};
+use shira::coordinator::switch::SwitchEngine;
 use shira::data::tasks::Task;
-use shira::data::trace::{generate_trace, switch_count, TracePattern};
+use shira::data::trace::{generate_trace, mixed_selections, switch_count, TracePattern};
 use shira::runtime::{HostValue, Runtime};
 use shira::train::eval::eval_task;
 use shira::train::schedule::Schedule;
@@ -32,7 +35,13 @@ fn main() -> anyhow::Result<()> {
         // the E2E driver trains a bit longer than the repro defaults
         cfg.adapter_steps = if args.has("fast") { 40 } else { 300 };
     }
-    let rt = Runtime::with_default_artifacts()?;
+    let rt = match Runtime::with_default_artifacts() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping e2e_serving: artifacts not built (run `make artifacts`): {e}");
+            return Ok(());
+        }
+    };
     println!("=== E2E: layers L1(Pallas)+L2(JAX)+L3(rust) on {} ===", rt.platform());
 
     // ---- phase 1: pretrain base (loss curve logged) ----------------------
@@ -112,9 +121,9 @@ fn main() -> anyhow::Result<()> {
     println!("|---|---|---|---|");
     for (task, adapter) in &adapters {
         let base_acc = 100.0 * eval_task(&rt, &base, *task, cfg.eval_examples, cfg.seed)?;
-        let mut engine = SwitchEngine::new(base.clone());
-        engine.switch_to_shira(adapter, 1.0);
-        let acc = 100.0 * eval_task(&rt, &engine.weights, *task, cfg.eval_examples, cfg.seed)?;
+        let mut weights = base.clone();
+        SwitchEngine::new().switch_to_shira(&mut weights, adapter, 1.0);
+        let acc = 100.0 * eval_task(&rt, &weights, *task, cfg.eval_examples, cfg.seed)?;
         println!(
             "| {} | {base_acc:.1}% | {acc:.1}% | {:+.1} |",
             task.name(),
@@ -122,10 +131,14 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // ---- phase 4: serve a mixed trace under each policy -------------------
+    // ---- phase 4: serve through the unified Selection API -----------------
+    // One SHiRA trace mixing base, singles and rotating fused sets — all
+    // routed per-request through ONE server — plus LoRA fuse/unfused
+    // baselines over the same request pattern.
     let names: Vec<String> = adapters.iter().map(|(_, a)| a.name.clone()).collect();
+    let mixed_sels = mixed_selections(&names);
     let trace = generate_trace(
-        &names,
+        &mixed_sels,
         cfg.trace_len.max(60),
         TracePattern::Bursty { burst: 6 },
         2e4,
@@ -159,27 +172,61 @@ fn main() -> anyhow::Result<()> {
         )?;
         lora_adapters.push(trainer.export_lora(&out, task.name()));
     }
-    println!("| policy | switches | mean switch (us) | mean exec (us) | p99 (us) | req/s |");
-    println!("|---|---|---|---|---|---|");
-    for policy in [Policy::ShiraScatter, Policy::LoraFuse, Policy::LoraUnfused] {
-        let mut server = Server::new(&rt, base.clone(), policy, "llama", cfg.cache_bytes)?;
-        match policy {
-            Policy::ShiraScatter => {
-                for (_, a) in &adapters {
-                    server.store.add_shira(a);
-                }
-            }
-            _ => {
-                for a in &lora_adapters {
-                    server.store.add_lora(a);
-                }
-            }
+    println!("| mode | switches | t/f/fused | mean switch (us) | mean exec (us) | p99 (us) | req/s |");
+    println!("|---|---|---|---|---|---|---|");
+    // SHiRA: ONE server routes the mixed base/single/set trace.
+    {
+        let mut server = Server::builder(&rt, base.clone())
+            .model("llama")
+            .cache_bytes(cfg.cache_bytes)
+            .build()?;
+        for (_, a) in &adapters {
+            server.store.add_shira(a);
         }
         let rep = server.run_trace(&trace)?;
         println!(
-            "| {} | {} | {:.1} | {:.1} | {:.0} | {:.1} |",
-            policy.name(),
+            "| shira mixed ({}b/{}s/{}set) | {} | {}/{}/{} | {:.1} | {:.1} | {:.0} | {:.1} |",
+            rep.base_requests,
+            rep.single_requests,
+            rep.set_requests,
             rep.switches,
+            rep.transitions,
+            rep.fallbacks,
+            rep.fused_switches,
+            rep.mean_switch_us,
+            rep.mean_exec_us,
+            rep.p99_latency_us,
+            rep.throughput_rps
+        );
+        // The same server keeps serving: revert restores base exactly.
+        server.revert_all();
+        assert!(server.weights().bit_equal(&base), "revert_all must be exact");
+    }
+    // LoRA baselines over single-adapter selections of the same names.
+    let lora_trace = generate_trace(
+        &Selection::singles(&names),
+        cfg.trace_len.max(60),
+        TracePattern::Bursty { burst: 6 },
+        2e4,
+        cfg.seed,
+    );
+    for unfused in [false, true] {
+        let mut server = Server::builder(&rt, base.clone())
+            .model("llama")
+            .cache_bytes(cfg.cache_bytes)
+            .unfused_lora(unfused)
+            .build()?;
+        for a in &lora_adapters {
+            server.store.add_lora(a);
+        }
+        let rep = server.run_trace(&lora_trace)?;
+        println!(
+            "| {} | {} | {}/{}/{} | {:.1} | {:.1} | {:.0} | {:.1} |",
+            if unfused { "lora-unfused" } else { "lora-fuse" },
+            rep.switches,
+            rep.transitions,
+            rep.fallbacks,
+            rep.fused_switches,
             rep.mean_switch_us,
             rep.mean_exec_us,
             rep.p99_latency_us,
@@ -187,6 +234,6 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\nE2E complete: pretraining, adapter finetuning, fused eval and");
-    println!("policy-compared serving all ran through the AOT artifacts.");
+    println!("Selection-routed serving all ran through the AOT artifacts.");
     Ok(())
 }

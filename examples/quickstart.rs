@@ -22,7 +22,13 @@ use shira::util::rng::Rng;
 fn main() -> anyhow::Result<()> {
     shira::util::log::init();
     let cfg = RunConfig::fast();
-    let rt = Runtime::with_default_artifacts()?;
+    let rt = match Runtime::with_default_artifacts() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping quickstart: artifacts not built (run `make artifacts`): {e}");
+            return Ok(());
+        }
+    };
     println!("PJRT platform: {}", rt.platform());
 
     // -- base model (pretrained + cached under artifacts/checkpoints) ----
@@ -73,12 +79,13 @@ fn main() -> anyhow::Result<()> {
 
     // -- rapid switch + evaluate ------------------------------------------
     let base_acc = 100.0 * eval_task(&rt, &base, task, cfg.eval_examples, cfg.seed)?;
-    let mut engine = SwitchEngine::new(base.clone());
-    let timing = engine.switch_to_shira(&loaded, 1.0);
+    let mut weights = base.clone();
+    let mut engine = SwitchEngine::new();
+    let timing = engine.switch_to_shira(&mut weights, &loaded, 1.0);
     let fused_acc =
-        100.0 * eval_task(&rt, &engine.weights, task, cfg.eval_examples, cfg.seed)?;
-    engine.revert();
-    assert!(engine.weights.bit_equal(&base), "revert must be exact");
+        100.0 * eval_task(&rt, &weights, task, cfg.eval_examples, cfg.seed)?;
+    engine.revert(&mut weights);
+    assert!(weights.bit_equal(&base), "revert must be exact");
     println!(
         "accuracy on {}: base {base_acc:.1}% -> adapted {fused_acc:.1}% \
          (switch applied in {:.0}us, revert bit-exact)",

@@ -23,7 +23,13 @@ fn main() -> anyhow::Result<()> {
     shira::util::log::init();
     let args = Args::from_env(&[]).map_err(|e| anyhow::anyhow!("{e}"))?;
     let cfg = RunConfig::from_args(&args).map_err(|e| anyhow::anyhow!(e))?;
-    let rt = Runtime::with_default_artifacts()?;
+    let rt = match Runtime::with_default_artifacts() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping style_transfer: artifacts not built (run `make artifacts`): {e}");
+            return Ok(());
+        }
+    };
     let world = shira::repro::style_world(&rt, &cfg);
     let base = shira::repro::ensure_sd_base(&rt, &cfg, &world)?;
     let meta = rt.manifest.model("sd").unwrap();
@@ -78,20 +84,20 @@ fn main() -> anyhow::Result<()> {
     println!("\n| adapter | SPS seen | SPS unseen (koala) |");
     println!("|---|---|---|");
     for (style, adapter) in &shira_adapters {
-        let mut e = SwitchEngine::new(base.clone());
-        e.switch_to_shira(adapter, 1.0);
-        let seen = eval_style(&rt, &e.weights, &world, *style, 1.0,
+        let mut w = base.clone();
+        SwitchEngine::new().switch_to_shira(&mut w, adapter, 1.0);
+        let seen = eval_style(&rt, &w, &world, *style, 1.0,
                               cfg.style_eval_batches, false, cfg.seed)?;
-        let unseen = eval_style(&rt, &e.weights, &world, *style, 1.0,
+        let unseen = eval_style(&rt, &w, &world, *style, 1.0,
                                 cfg.style_eval_batches, true, cfg.seed)?;
         println!("| SHiRA {} | {seen:.1} | {unseen:.1} |", style.name());
     }
     for (style, adapter) in &lora_adapters {
-        let mut e = SwitchEngine::new(base.clone());
-        e.switch_to_lora(adapter);
-        let seen = eval_style(&rt, &e.weights, &world, *style, 1.0,
+        let mut w = base.clone();
+        SwitchEngine::new().switch_to_lora(&mut w, adapter);
+        let seen = eval_style(&rt, &w, &world, *style, 1.0,
                               cfg.style_eval_batches, false, cfg.seed)?;
-        let unseen = eval_style(&rt, &e.weights, &world, *style, 1.0,
+        let unseen = eval_style(&rt, &w, &world, *style, 1.0,
                                 cfg.style_eval_batches, true, cfg.seed)?;
         println!("| LoRA {} | {seen:.1} | {unseen:.1} |", style.name());
     }
@@ -100,9 +106,9 @@ fn main() -> anyhow::Result<()> {
     let (style, adapter) = &shira_adapters[0];
     println!("\nα sweep on {} (SPS vs α-matched target):", style.name());
     for alpha in [0.0f32, 0.5, 1.0, 1.5, 2.0] {
-        let mut e = SwitchEngine::new(base.clone());
-        e.switch_to_shira(adapter, alpha);
-        let s = eval_style(&rt, &e.weights, &world, *style, alpha,
+        let mut w = base.clone();
+        SwitchEngine::new().switch_to_shira(&mut w, adapter, alpha);
+        let s = eval_style(&rt, &w, &world, *style, alpha,
                            cfg.style_eval_batches, false, cfg.seed)?;
         println!("  α={alpha:3.1}  SPS {s:.1}");
     }
@@ -112,9 +118,9 @@ fn main() -> anyhow::Result<()> {
         &[&shira_adapters[0].1, &shira_adapters[1].1],
         "bluefire+paintings",
     )?;
-    let mut e = SwitchEngine::new(base.clone());
-    e.switch_to_shira(&fused, 0.5);
-    let shira_multi = eval_style_multi(&rt, &e.weights, &world,
+    let mut wf = base.clone();
+    SwitchEngine::new().switch_to_shira(&mut wf, &fused, 0.5);
+    let shira_multi = eval_style_multi(&rt, &wf, &world,
                                        cfg.style_eval_batches, cfg.seed)?;
     let mut lw = base.clone();
     for (_, l) in &lora_adapters {

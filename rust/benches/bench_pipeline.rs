@@ -69,10 +69,10 @@ fn build(
 }
 
 fn bench_stage_set(b: &mut Bencher, label: &str, shapes: &[(usize, usize)]) {
-    let (weights, shira, lora) = build(shapes, 0.02, 32, 7);
+    let (mut weights, shira, lora) = build(shapes, 0.02, 32, 7);
     let shira_bytes = io::encode_shira(&shira);
     let lora_bytes = io::encode_lora(&lora);
-    let mut engine = SwitchEngine::new(weights);
+    let mut engine = SwitchEngine::new();
 
     b.group(&format!("table5/{label}/shira"));
     b.bench("load(decode)", || {
@@ -80,14 +80,14 @@ fn bench_stage_set(b: &mut Bencher, label: &str, shapes: &[(usize, usize)]) {
         std::hint::black_box(a.param_count());
     });
     b.bench("fuse(apply)", || {
-        engine.switch_to_shira(&shira, 1.0);
+        engine.switch_to_shira(&mut weights, &shira, 1.0);
     });
     b.bench("unfuse(revert)", || {
-        engine.switch_to_shira(&shira, 1.0);
-        engine.revert();
+        engine.switch_to_shira(&mut weights, &shira, 1.0);
+        engine.revert(&mut weights);
     });
     b.bench("full_pipeline", || {
-        let t = engine.hf_pipeline_shira(&shira_bytes, 1.0);
+        let t = engine.hf_pipeline_shira(&mut weights, &shira_bytes, 1.0);
         std::hint::black_box(t.total_us());
     });
 
@@ -97,17 +97,17 @@ fn bench_stage_set(b: &mut Bencher, label: &str, shapes: &[(usize, usize)]) {
         std::hint::black_box(a.param_count());
     });
     b.bench("fuse", || {
-        engine.switch_to_lora(&lora);
+        engine.switch_to_lora(&mut weights, &lora);
     });
     b.bench("unfuse", || {
-        engine.switch_to_lora(&lora);
-        engine.revert();
+        engine.switch_to_lora(&mut weights, &lora);
+        engine.revert(&mut weights);
     });
     b.bench("full_pipeline", || {
-        let t = engine.hf_pipeline_lora(&lora_bytes);
+        let t = engine.hf_pipeline_lora(&mut weights, &lora_bytes);
         std::hint::black_box(t.total_us());
     });
-    engine.revert();
+    engine.revert(&mut weights);
 }
 
 fn main() {

@@ -1,28 +1,180 @@
-//! End-to-end serving benchmark: throughput / latency / switch overhead of
-//! the three policies (SHiRA-scatter vs LoRA-fuse vs LoRA-unfused) across
-//! trace patterns — the quantitative version of the paper's Appendix A
-//! deployment argument.
+//! End-to-end serving benchmark: throughput / latency / switch overhead
+//! across selection mixes (SHiRA singles vs LoRA-fuse vs LoRA-unfused vs
+//! a mixed base/single/set trace) and trace patterns — the quantitative
+//! version of the paper's Appendix A deployment argument on the unified
+//! `Selection` routing API.
 //!
-//! Run: `cargo bench --bench bench_serving` (requires `make artifacts`).
+//! Run: `cargo bench --bench bench_serving` (tables require
+//! `make artifacts`; the bit-identity gate below runs regardless).
 //! Flags: `--check` compares stage timings against the committed
 //! `rust/BENCH_serving.json`; `--save-baseline` rewrites it.
+//!
+//! ## Bit-identity gate
+//!
+//! Before any timing, a mixed base/single/set selection sequence is
+//! driven through the `Router` (the serving request path) and asserted
+//! bit-identical to the old per-policy engines serving each selection
+//! from base — a scatter apply for singles, a serial `fuse_shira`
+//! rebuild for sets — at 1 and 4 threads.  This is the acceptance gate
+//! for per-request routing: timings below are only meaningful because
+//! the bytes are provably unchanged.
+
+use std::sync::Arc;
 
 use shira::adapter::sparse::SparseDelta;
 use shira::adapter::{LoraAdapter, LoraTensor, ShiraAdapter};
+use shira::coordinator::engine::Router;
+use shira::coordinator::fusion::fuse_shira;
+use shira::coordinator::selection::Selection;
 use shira::coordinator::server::Server;
-use shira::coordinator::switch::Policy;
-use shira::data::trace::{generate_trace, switch_count, TracePattern};
+use shira::coordinator::store::AdapterStore;
+use shira::coordinator::switch::SwitchEngine;
+use shira::data::trace::{generate_trace, mixed_selections, switch_count, TracePattern};
 use shira::model::tensor::Tensor2;
 use shira::model::weights::WeightStore;
 use shira::runtime::Runtime;
 use shira::util::benchlib::{finish_bench, BaselineEntry};
 use shira::util::rng::Rng;
+use shira::util::threadpool::ThreadPool;
+
+/// Engine-level mixed-selection gate (no artifacts needed): Router bytes
+/// == per-policy reference bytes for every step of a base/single/set
+/// sequence, at 1 and 4 threads, with an exact base restore at the end.
+fn mixed_selection_gate() {
+    const DIM: usize = 64;
+    let base = WeightStore::init(
+        &[("wq".into(), vec![DIM, DIM]), ("wk".into(), vec![DIM, DIM])],
+        41,
+    );
+    let mut rng = Rng::new(0x6A7E);
+    let zoo: Vec<ShiraAdapter> = (0..3)
+        .map(|i| {
+            let mk = |rng: &mut Rng| {
+                let idx = rng.sample_indices(DIM * DIM, 200);
+                let mut d = vec![0.0; 200];
+                rng.fill_normal(&mut d, 0.0, 0.3);
+                SparseDelta::new(DIM, DIM, idx, d)
+            };
+            ShiraAdapter {
+                name: format!("g{i}"),
+                strategy: "rand".into(),
+                tensors: vec![("wq".into(), mk(&mut rng)), ("wk".into(), mk(&mut rng))],
+            }
+        })
+        .collect();
+    let seq = vec![
+        Selection::single("g0"),
+        Selection::set(&[("g0", 1.0), ("g1", 0.5)]),
+        Selection::single_at("g2", 0.9),
+        Selection::Base,
+        Selection::set(&[("g1", 2.0), ("g2", 1.0)]),
+        Selection::single_at("g0", 0.5),
+        Selection::set(&[("g0", 1.0), ("g1", 1.0), ("g2", 1.0)]),
+    ];
+    let reference = |sel: &Selection| -> WeightStore {
+        let by_name = |n: &str| zoo.iter().find(|a| a.name == n).unwrap();
+        match sel {
+            Selection::Base => base.clone(),
+            Selection::Single { name, alpha } => {
+                let mut w = base.clone();
+                SwitchEngine::new().switch_to_shira(&mut w, by_name(name), *alpha);
+                w
+            }
+            Selection::Set { members } => {
+                let mut sorted = members.clone();
+                sorted.sort_by(|a, b| a.0.cmp(&b.0));
+                let scaled: Vec<ShiraAdapter> = sorted
+                    .iter()
+                    .map(|(n, wt)| {
+                        let a = by_name(n);
+                        ShiraAdapter {
+                            name: a.name.clone(),
+                            strategy: a.strategy.clone(),
+                            tensors: a
+                                .tensors
+                                .iter()
+                                .map(|(t, d)| (t.clone(), d.scaled(*wt)))
+                                .collect(),
+                        }
+                    })
+                    .collect();
+                let refs: Vec<&ShiraAdapter> = scaled.iter().collect();
+                let fused = fuse_shira(&refs, "gate").unwrap();
+                let mut w = base.clone();
+                SwitchEngine::new().switch_to_shira(&mut w, &fused, 1.0);
+                w
+            }
+        }
+    };
+    for threads in [1usize, 4] {
+        let pool = Arc::new(ThreadPool::new(threads));
+        let mut store = AdapterStore::with_config(
+            shira::coordinator::store::StoreConfig::default(),
+            Some(Arc::clone(&pool)),
+        );
+        for a in &zoo {
+            store.add_shira(a);
+        }
+        let mut router = Router::new(base.clone(), Some(pool), false);
+        for (step, sel) in seq.iter().enumerate() {
+            router.apply(&mut store, sel).unwrap();
+            assert!(
+                router.weights().bit_equal(&reference(sel)),
+                "mixed routing diverged at step {step} ({sel}) threads={threads}"
+            );
+        }
+        router.revert_all(&mut store);
+        assert!(router.weights().bit_equal(&base), "base restore not exact");
+    }
+    println!(
+        "mixed-selection gate: router bytes == per-policy engine bytes \
+         (base/single/set, 1 and 4 threads)"
+    );
+}
+
+/// One serving scenario: which zoo it needs and which selections it
+/// serves.
+enum Scenario {
+    ShiraSingles,
+    LoraFuse,
+    LoraUnfused,
+    Mixed,
+}
+
+impl Scenario {
+    fn name(&self) -> &'static str {
+        match self {
+            Scenario::ShiraSingles => "shira-scatter",
+            Scenario::LoraFuse => "lora-fuse",
+            Scenario::LoraUnfused => "lora-unfused",
+            Scenario::Mixed => "mixed",
+        }
+    }
+
+    fn lora_zoo(&self) -> bool {
+        matches!(self, Scenario::LoraFuse | Scenario::LoraUnfused)
+    }
+
+    fn selections(&self, names: &[String]) -> Vec<Selection> {
+        match self {
+            Scenario::Mixed => mixed_selections(names),
+            _ => Selection::singles(names),
+        }
+    }
+}
 
 fn main() {
+    // Correctness gate first — runs with or without artifacts.
+    mixed_selection_gate();
+
     let rt = match Runtime::with_default_artifacts() {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("skipping bench_serving (no artifacts): {e}");
+            eprintln!("skipping bench_serving tables (no artifacts): {e}");
+            // The gate ran; an empty entry set still exercises --check.
+            if !finish_bench("serving", &[]) {
+                std::process::exit(1);
+            }
             return;
         }
     };
@@ -32,73 +184,83 @@ fn main() {
     let mut rng = Rng::new(0x5E21);
     let names: Vec<String> = (0..n_adapters).map(|i| format!("a{i}")).collect();
 
-    println!("== serving: policy x pattern ({n_requests} requests, {n_adapters} adapters) ==");
-    println!("| policy | pattern | trace switches | engine switches | mean switch (us) | mean exec (us) | p99 lat (us) | req/s |");
-    println!("|---|---|---|---|---|---|---|---|");
+    println!("== serving: scenario x pattern ({n_requests} requests, {n_adapters} adapters) ==");
+    println!("| scenario | pattern | trace switches | engine switches | transition/fallback/fused | mean switch (us) | mean exec (us) | p99 lat (us) | req/s |");
+    println!("|---|---|---|---|---|---|---|---|---|");
     let mut rows = Vec::new();
     let mut entries: Vec<BaselineEntry> = Vec::new();
-    for policy in [Policy::ShiraScatter, Policy::LoraFuse, Policy::LoraUnfused] {
+    for scenario in [
+        Scenario::ShiraSingles,
+        Scenario::LoraFuse,
+        Scenario::LoraUnfused,
+        Scenario::Mixed,
+    ] {
         for (pname, pattern) in [
             ("bursty", TracePattern::Bursty { burst: 8 }),
             ("uniform", TracePattern::UniformMix),
             ("roundrobin", TracePattern::RoundRobin),
         ] {
             let base = WeightStore::init(&meta.params, 3);
-            let mut server = Server::new(&rt, base, policy, "llama", 8 << 20).unwrap();
-            for (i, name) in names.iter().enumerate() {
-                match policy {
-                    Policy::ShiraScatter => {
-                        let tensors = meta
-                            .shira
-                            .iter()
-                            .map(|seg| {
-                                let idx = rng.sample_indices(seg.numel(), seg.k);
-                                let mut d = vec![0.0f32; seg.k];
-                                rng.fill_normal(&mut d, 0.0, 0.01);
-                                (
-                                    seg.name.clone(),
-                                    SparseDelta::new(seg.shape.0, seg.shape.1, idx, d),
-                                )
-                            })
-                            .collect();
-                        server.store.add_shira(&ShiraAdapter {
-                            name: name.clone(),
-                            strategy: "rand".into(),
-                            tensors,
-                        });
-                    }
-                    _ => {
-                        let tensors = meta
-                            .lora
-                            .iter()
-                            .map(|seg| {
-                                let mut a = Tensor2::zeros(seg.shape.0, seg.rank);
-                                let mut b = Tensor2::zeros(seg.rank, seg.shape.1);
-                                rng.fill_normal(&mut a.data, 0.0, 0.01);
-                                rng.fill_normal(&mut b.data, 0.0, 0.01);
-                                LoraTensor {
-                                    target: seg.name.clone(),
-                                    a,
-                                    b,
-                                }
-                            })
-                            .collect();
-                        server.store.add_lora(&LoraAdapter {
-                            name: name.clone(),
-                            scale: rt.manifest.adapter.lora_scale as f32,
-                            tensors,
-                        });
-                    }
+            let mut server = Server::builder(&rt, base)
+                .model("llama")
+                .cache_bytes(8 << 20)
+                .unfused_lora(matches!(scenario, Scenario::LoraUnfused))
+                .build()
+                .unwrap();
+            for name in names.iter() {
+                if scenario.lora_zoo() {
+                    let tensors = meta
+                        .lora
+                        .iter()
+                        .map(|seg| {
+                            let mut a = Tensor2::zeros(seg.shape.0, seg.rank);
+                            let mut b = Tensor2::zeros(seg.rank, seg.shape.1);
+                            rng.fill_normal(&mut a.data, 0.0, 0.01);
+                            rng.fill_normal(&mut b.data, 0.0, 0.01);
+                            LoraTensor {
+                                target: seg.name.clone(),
+                                a,
+                                b,
+                            }
+                        })
+                        .collect();
+                    server.store.add_lora(&LoraAdapter {
+                        name: name.clone(),
+                        scale: rt.manifest.adapter.lora_scale as f32,
+                        tensors,
+                    });
+                } else {
+                    let tensors = meta
+                        .shira
+                        .iter()
+                        .map(|seg| {
+                            let idx = rng.sample_indices(seg.numel(), seg.k);
+                            let mut d = vec![0.0f32; seg.k];
+                            rng.fill_normal(&mut d, 0.0, 0.01);
+                            (
+                                seg.name.clone(),
+                                SparseDelta::new(seg.shape.0, seg.shape.1, idx, d),
+                            )
+                        })
+                        .collect();
+                    server.store.add_shira(&ShiraAdapter {
+                        name: name.clone(),
+                        strategy: "rand".into(),
+                        tensors,
+                    });
                 }
-                let _ = i;
             }
-            let trace = generate_trace(&names, n_requests, pattern, 1e4, 11);
+            let sels = scenario.selections(&names);
+            let trace = generate_trace(&sels, n_requests, pattern, 1e4, 11);
             let ts = switch_count(&trace);
             let rep = server.run_trace(&trace).unwrap();
             println!(
-                "| {} | {pname} | {ts} | {} | {:.1} | {:.1} | {:.0} | {:.1} |",
-                policy.name(),
+                "| {} | {pname} | {ts} | {} | {}/{}/{} | {:.1} | {:.1} | {:.0} | {:.1} |",
+                scenario.name(),
                 rep.switches,
+                rep.transitions,
+                rep.fallbacks,
+                rep.fused_switches,
                 rep.mean_switch_us,
                 rep.mean_exec_us,
                 rep.p99_latency_us,
@@ -106,7 +268,7 @@ fn main() {
             );
             rows.push(format!(
                 "{{\"name\":\"serving/{}/{}\",\"switches\":{},\"mean_switch_us\":{:.1},\"mean_exec_us\":{:.1},\"rps\":{:.2}}}",
-                policy.name(),
+                scenario.name(),
                 pname,
                 rep.switches,
                 rep.mean_switch_us,
@@ -115,21 +277,22 @@ fn main() {
             ));
             // Per-stage mean/p50/p99 for the regression harness (ns).
             entries.push(BaselineEntry {
-                name: format!("serving/{}/{}/switch", policy.name(), pname),
+                name: format!("serving/{}/{}/switch", scenario.name(), pname),
                 mean_ns: rep.mean_switch_us * 1e3,
                 p50_ns: rep.p50_switch_us * 1e3,
                 p99_ns: rep.p99_switch_us * 1e3,
             });
             entries.push(BaselineEntry {
-                name: format!("serving/{}/{}/exec", policy.name(), pname),
+                name: format!("serving/{}/{}/exec", scenario.name(), pname),
                 mean_ns: rep.mean_exec_us * 1e3,
                 p50_ns: rep.p50_exec_us * 1e3,
                 p99_ns: rep.p99_exec_us * 1e3,
             });
         }
     }
-    println!("\npaper shape: shira-scatter's switch cost ≪ lora-fuse's; lora-unfused");
-    println!("avoids switch cost but pays it on every forward (higher exec time).");
+    println!("\npaper shape: shira singles' switch cost ≪ lora-fuse's; lora-unfused");
+    println!("avoids switch cost but pays it on every forward (higher exec time);");
+    println!("the mixed trace routes all three selection kinds through one server.");
     let _ = std::fs::create_dir_all("target/bench-results");
     let _ = std::fs::write(
         "target/bench-results/bench_serving.jsonl",

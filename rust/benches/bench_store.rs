@@ -151,16 +151,17 @@ fn main() {
         );
         store.add_shira(&a0);
         store.fetch("a0").unwrap();
-        let mut eng = SwitchEngine::with_pool(base.clone(), Some(Arc::clone(&pool)));
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::with_pool(Some(Arc::clone(&pool)));
         extra.push(timed_entry("store/fetch_cache_hit_switch", reps, || {
             let t0 = Instant::now();
             let h = store.fetch("a0").unwrap();
             if let AnyAdapter::Shira(a) = &h.adapter {
-                eng.switch_to_shira_planned(Arc::clone(a), Some(Arc::clone(&h.plans)), 1.0);
+                eng.switch_to_shira_planned(&mut w, Arc::clone(a), Some(Arc::clone(&h.plans)), 1.0);
             }
             t0.elapsed().as_nanos() as f64
         }));
-        eng.revert();
+        eng.revert(&mut w);
     }
     {
         // cold miss: alternating pair, one-slot budget → decode every time.
@@ -175,7 +176,8 @@ fn main() {
         );
         store.add_shira(&a0);
         store.add_shira(&a1);
-        let mut eng = SwitchEngine::with_pool(base.clone(), Some(Arc::clone(&pool)));
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::with_pool(Some(Arc::clone(&pool)));
         let mut flip = 0usize;
         extra.push(timed_entry("store/fetch_cold_miss_switch", reps, || {
             flip += 1;
@@ -183,13 +185,13 @@ fn main() {
             let t0 = Instant::now();
             let h = store.fetch(name).unwrap();
             if let AnyAdapter::Shira(a) = &h.adapter {
-                eng.switch_to_shira_planned(Arc::clone(a), Some(Arc::clone(&h.plans)), 1.0);
+                eng.switch_to_shira_planned(&mut w, Arc::clone(a), Some(Arc::clone(&h.plans)), 1.0);
             }
             t0.elapsed().as_nanos() as f64
         }));
         let stats = store.stats();
         assert!(stats.evictions > 0, "cold-miss setup failed to evict");
-        eng.revert();
+        eng.revert(&mut w);
     }
     {
         // prefetch hit: same evicting pair, but the next adapter is decoded
@@ -206,7 +208,8 @@ fn main() {
         );
         store.add_shira(&a0);
         store.add_shira(&a1);
-        let mut eng = SwitchEngine::with_pool(base.clone(), Some(Arc::clone(&pool)));
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::with_pool(Some(Arc::clone(&pool)));
         let mut flip = 0usize;
         let pool_ref = Arc::clone(&pool);
         extra.push(timed_entry("store/fetch_prefetch_hit_switch", reps, || {
@@ -217,13 +220,13 @@ fn main() {
             let t0 = Instant::now();
             let h = store.fetch(&next).unwrap();
             if let AnyAdapter::Shira(a) = &h.adapter {
-                eng.switch_to_shira_planned(Arc::clone(a), Some(Arc::clone(&h.plans)), 1.0);
+                eng.switch_to_shira_planned(&mut w, Arc::clone(a), Some(Arc::clone(&h.plans)), 1.0);
             }
             t0.elapsed().as_nanos() as f64
         }));
         let stats = store.stats();
         assert!(stats.prefetch_hits > 0, "prefetch never hit");
-        eng.revert();
+        eng.revert(&mut w);
     }
     println!(
         "interpretation: prefetch_hit ≈ cache_hit (decode excluded); \

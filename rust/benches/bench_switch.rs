@@ -182,18 +182,20 @@ fn main() {
     {
         // Same Arc-shared entry point as the pooled runs, so serial vs
         // parallel differ only in dispatch — not in adapter cloning.
-        let mut eng = SwitchEngine::new(store.clone());
+        let mut w = store.clone();
+        let mut eng = SwitchEngine::new();
         b.bench("switch_cycle_serial", || {
-            eng.switch_to_shira_shared(Arc::clone(&shared), 1.0);
-            eng.revert();
+            eng.switch_to_shira_shared(&mut w, Arc::clone(&shared), 1.0);
+            eng.revert(&mut w);
         });
     }
     for &threads in threads_sweep {
         let pool = Arc::new(ThreadPool::new(threads));
-        let mut eng = SwitchEngine::with_pool(store.clone(), Some(pool));
+        let mut w = store.clone();
+        let mut eng = SwitchEngine::with_pool(Some(pool));
         b.bench(&format!("switch_cycle_t{threads}"), || {
-            eng.switch_to_shira_shared(Arc::clone(&shared), 1.0);
-            eng.revert();
+            eng.switch_to_shira_shared(&mut w, Arc::clone(&shared), 1.0);
+            eng.revert(&mut w);
         });
     }
 
@@ -227,47 +229,49 @@ fn main() {
             // engines revert to base exactly.
             {
                 let pool = Arc::new(ThreadPool::new(t_threads));
-                let mut direct =
-                    SwitchEngine::with_pool(store.clone(), Some(Arc::clone(&pool)));
-                let mut reference = SwitchEngine::with_pool(store.clone(), Some(pool));
-                direct.switch_to_shira_shared(Arc::clone(&a), 1.0);
-                reference.switch_to_shira_shared(Arc::clone(&a), 1.0);
+                let mut wd = store.clone();
+                let mut wr = store.clone();
+                let mut direct = SwitchEngine::with_pool(Some(Arc::clone(&pool)));
+                let mut reference = SwitchEngine::with_pool(Some(pool));
+                direct.switch_to_shira_shared(&mut wd, Arc::clone(&a), 1.0);
+                reference.switch_to_shira_shared(&mut wr, Arc::clone(&a), 1.0);
                 for (next, tp) in [(&bb, &tp_ab), (&a, &tp_ba), (&bb, &tp_ab)] {
                     let (_t, path) =
-                        direct.transition_to(Arc::clone(next), None, tp, 1.0);
+                        direct.transition_to(&mut wd, Arc::clone(next), None, tp, 1.0);
                     assert_eq!(path, SwitchPath::Transition, "plan rejected");
-                    reference.switch_to_shira_shared(Arc::clone(next), 1.0);
+                    reference.switch_to_shira_shared(&mut wr, Arc::clone(next), 1.0);
                     assert!(
-                        direct.weights.bit_equal(&reference.weights),
+                        wd.bit_equal(&wr),
                         "transition != revert+apply (nnz {nnz}, overlap {ov})"
                     );
                 }
-                direct.revert();
-                reference.revert();
-                assert!(direct.weights.bit_equal(&store));
-                assert!(reference.weights.bit_equal(&store));
+                direct.revert(&mut wd);
+                reference.revert(&mut wr);
+                assert!(wd.bit_equal(&store));
+                assert!(wr.bit_equal(&store));
             }
 
             let pool = Arc::new(ThreadPool::new(t_threads));
-            let mut direct =
-                SwitchEngine::with_pool(store.clone(), Some(Arc::clone(&pool)));
-            direct.switch_to_shira_shared(Arc::clone(&a), 1.0);
+            let mut wd = store.clone();
+            let mut direct = SwitchEngine::with_pool(Some(Arc::clone(&pool)));
+            direct.switch_to_shira_shared(&mut wd, Arc::clone(&a), 1.0);
             let mut flip = false;
             let tr = b.bench("transition_cycle", || {
                 // alternate A→B / B→A so steady state stays a transition
                 let (next, tp) = if flip { (&a, &tp_ba) } else { (&bb, &tp_ab) };
                 flip = !flip;
-                direct.transition_to(Arc::clone(next), None, tp, 1.0);
-                black_box(&direct.weights.get("w").data[0]);
+                direct.transition_to(&mut wd, Arc::clone(next), None, tp, 1.0);
+                black_box(&wd.get("w").data[0]);
             });
-            let mut reference = SwitchEngine::with_pool(store.clone(), Some(pool));
-            reference.switch_to_shira_shared(Arc::clone(&a), 1.0);
+            let mut wr = store.clone();
+            let mut reference = SwitchEngine::with_pool(Some(pool));
+            reference.switch_to_shira_shared(&mut wr, Arc::clone(&a), 1.0);
             let mut flip = false;
             let ra = b.bench("revert_apply_cycle", || {
                 let next = if flip { &a } else { &bb };
                 flip = !flip;
-                reference.switch_to_shira_shared(Arc::clone(next), 1.0);
-                black_box(&reference.weights.get("w").data[0]);
+                reference.switch_to_shira_shared(&mut wr, Arc::clone(next), 1.0);
+                black_box(&wr.get("w").data[0]);
             });
             transition_rows.push((nnz, ov, tr.mean_ns, ra.mean_ns));
         }

@@ -7,6 +7,20 @@
 use crate::util::cli::Args;
 use crate::util::json::{self, Json};
 
+/// One experiment's full configuration: seeds, step counts, learning
+/// rates, serving-trace shape, and the report directory.
+///
+/// # Examples
+///
+/// ```
+/// use shira::config::RunConfig;
+///
+/// let fast = RunConfig::fast();
+/// assert!(fast.adapter_steps < RunConfig::default().adapter_steps);
+/// fast.validate().unwrap();
+/// // JSON roundtrips exactly.
+/// assert_eq!(RunConfig::from_json(&fast.to_json()).unwrap(), fast);
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
     /// Root seed — every stochastic stream derives from it.
@@ -19,11 +33,13 @@ pub struct RunConfig {
     pub eval_examples: usize,
     /// Eval batches per style measurement.
     pub style_eval_batches: usize,
-    /// Adapter LR (paper Table 8: 5e-4 SHiRA LLM, 2e-4 LoRA/DoRA LLM).
+    /// SHiRA adapter learning rate (paper Table 8: 5e-4 SHiRA LLM).
     pub lr_shira: f64,
+    /// LoRA/DoRA adapter learning rate (paper Table 8: 2e-4 LLM).
     pub lr_lora: f64,
-    /// Serving: requests per trace, adapter cache bytes.
+    /// Serving: requests per synthesized trace.
     pub trace_len: usize,
+    /// Serving: decoded-adapter cache budget in bytes.
     pub cache_bytes: usize,
     /// Output directory for reports.
     pub report_dir: String,
@@ -59,6 +75,8 @@ impl RunConfig {
         }
     }
 
+    /// Build a config from parsed JSON, keeping defaults for absent keys
+    /// and validating the result.
     pub fn from_json(j: &Json) -> Result<Self, String> {
         let mut c = RunConfig::default();
         let get_usize = |key: &str, dst: &mut usize| {
@@ -89,6 +107,7 @@ impl RunConfig {
         Ok(c)
     }
 
+    /// Load and validate a JSON config file.
     pub fn load(path: &str) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         let j = json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
@@ -127,6 +146,8 @@ impl RunConfig {
         Ok(c)
     }
 
+    /// Reject configs that cannot run (zero steps/examples, non-positive
+    /// learning rates).
     pub fn validate(&self) -> Result<(), String> {
         if self.adapter_steps == 0 {
             return Err("adapter_steps must be > 0".into());
@@ -140,6 +161,8 @@ impl RunConfig {
         Ok(())
     }
 
+    /// Serialize to JSON (the exact form repro reports embed in their
+    /// headers, so results are reproducible from the report alone).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("seed", Json::num(self.seed as f64)),

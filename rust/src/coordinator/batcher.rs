@@ -1,21 +1,21 @@
-//! Dynamic batching with adapter affinity — the scheduling half of the
+//! Dynamic batching with selection affinity — the scheduling half of the
 //! rapid-switching story.
 //!
-//! Requests are queued per adapter.  The scheduler picks the next batch
-//! with an affinity-plus-aging policy: stay on the active adapter while it
-//! has work (switches are never free, even for SHiRA), but never let
-//! another adapter's head request age beyond `max_wait` picks (starvation
-//! freedom, verified by property test).
+//! Requests are queued per [`Selection`] identity.  The scheduler picks
+//! the next batch with an affinity-plus-aging policy: stay on the active
+//! selection while it has work (switches are never free, even for
+//! SHiRA), but never let another queue's head request age beyond
+//! `max_wait` picks (starvation freedom, verified by property test).
 //!
-//! The batcher keys queues by the request's adapter *string*, so the
-//! affinity policy extends unchanged to fused-mode serving: the server
-//! canonicalizes adapter-set specs
-//! ([`SetSpec::id`](super::fusion_engine::SetSpec::id)) before pushing,
-//! and affinity then keeps consecutive batches on the currently-fused
-//! *set* — two spellings of one set never force a transition.
+//! Queues key on [`Selection::key`] — the canonical identity — so the
+//! affinity policy covers base, single-adapter and fused-set traffic
+//! uniformly: two spellings of one set share a queue and never force a
+//! transition, and a single adapter at two strengths batches separately
+//! (they are different resident states).
 
 use std::collections::{HashMap, VecDeque};
 
+use super::selection::Selection;
 use crate::data::trace::Request;
 
 /// Tunables for [`DynamicBatcher`].
@@ -38,12 +38,16 @@ impl Default for BatcherConfig {
 }
 
 struct Queue {
+    /// The selection every request in this queue carries (one clone kept
+    /// so `next_batch`/`upcoming` can hand selections back without
+    /// re-parsing keys).
+    selection: Selection,
     requests: VecDeque<Request>,
     /// Scheduling round when the current head arrived in the queue.
     head_since_round: u64,
 }
 
-/// Per-adapter request queues with affinity-plus-aging batch selection.
+/// Per-selection request queues with affinity-plus-aging batch selection.
 pub struct DynamicBatcher {
     cfg: BatcherConfig,
     queues: HashMap<String, Queue>,
@@ -62,16 +66,15 @@ impl DynamicBatcher {
         }
     }
 
-    /// Enqueue a request on its adapter's queue.
+    /// Enqueue a request on its selection's queue.
     pub fn push(&mut self, req: Request) {
         let round = self.round;
-        let q = self
-            .queues
-            .entry(req.adapter.clone())
-            .or_insert_with(|| Queue {
-                requests: VecDeque::new(),
-                head_since_round: round,
-            });
+        let key = req.selection.key();
+        let q = self.queues.entry(key).or_insert_with(|| Queue {
+            selection: req.selection.clone(),
+            requests: VecDeque::new(),
+            head_since_round: round,
+        });
         if q.requests.is_empty() {
             q.head_since_round = round;
         }
@@ -89,22 +92,30 @@ impl DynamicBatcher {
         self.pending == 0
     }
 
-    /// Pick the next (adapter, batch).  `active` is the adapter currently
-    /// applied to the weights (affinity target).
+    /// Drop every pending request (the server drains the batcher when a
+    /// trace aborts mid-run, so a later trace cannot replay the failed
+    /// one's tail).
+    pub fn clear(&mut self) {
+        self.queues.clear();
+        self.pending = 0;
+    }
+
+    /// Pick the next (selection, batch).  `active` is the key of the
+    /// selection currently resident on the weights (affinity target).
     ///
     /// Invariants (property-tested):
-    /// * every batch is single-adapter;
-    /// * FIFO within an adapter;
+    /// * every batch is single-selection;
+    /// * FIFO within a selection;
     /// * no queue head waits more than max_wait_rounds once other queues
     ///   are being served.
-    pub fn next_batch(&mut self, active: Option<&str>) -> Option<(String, Vec<Request>)> {
+    pub fn next_batch(&mut self, active: Option<&str>) -> Option<(Selection, Vec<Request>)> {
         if self.pending == 0 {
             return None;
         }
         self.round += 1;
         // 1. starvation guard: oldest head beyond the aging bound wins.
         let mut starving: Option<(&String, u64)> = None;
-        for (name, q) in &self.queues {
+        for (key, q) in &self.queues {
             if q.requests.is_empty() {
                 continue;
             }
@@ -112,14 +123,14 @@ impl DynamicBatcher {
             if waited >= self.cfg.max_wait_rounds {
                 match starving {
                     Some((_, w)) if w >= waited => {}
-                    _ => starving = Some((name, waited)),
+                    _ => starving = Some((key, waited)),
                 }
             }
         }
-        let chosen: String = if let Some((name, _)) = starving {
-            name.clone()
+        let chosen: String = if let Some((key, _)) = starving {
+            key.clone()
         } else if let Some(a) = active {
-            // 2. affinity: stay on the active adapter while it has work.
+            // 2. affinity: stay on the active selection while it has work.
             if self.queues.get(a).map(|q| !q.requests.is_empty()).unwrap_or(false) {
                 a.to_string()
             } else {
@@ -133,43 +144,49 @@ impl DynamicBatcher {
         let batch: Vec<Request> = q.requests.drain(..take).collect();
         q.head_since_round = self.round;
         self.pending -= batch.len();
-        Some((chosen, batch))
+        Some((q.selection.clone(), batch))
     }
 
-    /// Up to `k` adapters likely to be scheduled soon, in scheduling
+    /// Up to `k` selections likely to be scheduled soon, in scheduling
     /// priority order (aging first — a starving head preempts affinity —
-    /// then queue length, then name for determinism), excluding every name
-    /// in `exclude` — typically the adapter the current batch is already
-    /// switching to, plus (for transition-plan prefetch) the adapters
-    /// whose pairwise plan is already resident, so the lookahead never
-    /// re-suggests pairs the plan cache holds.  This is the store's
-    /// prefetch lookahead: decoding these (and planning transitions to
-    /// them) in the background turns upcoming cold misses into hits.
-    pub fn upcoming(&self, k: usize, exclude: &[&str]) -> Vec<String> {
-        let mut cands: Vec<(&str, u64, usize)> = self
+    /// then queue length, then key for determinism), excluding every key
+    /// in `exclude` — typically the selection the current batch is
+    /// already switching to, plus (for transition-plan prefetch) the
+    /// adapters whose pairwise plan is already resident, so the lookahead
+    /// never re-suggests pairs the plan cache holds.  This is the store's
+    /// prefetch lookahead: decoding these selections' adapters (and
+    /// planning transitions to them) in the background turns upcoming
+    /// cold misses into hits.
+    pub fn upcoming(&self, k: usize, exclude: &[&str]) -> Vec<Selection> {
+        let mut cands: Vec<(&str, &Selection, u64, usize)> = self
             .queues
             .iter()
-            .filter(|(name, q)| {
-                !q.requests.is_empty() && !exclude.contains(&name.as_str())
+            .filter(|(key, q)| {
+                !q.requests.is_empty() && !exclude.contains(&key.as_str())
             })
-            .map(|(name, q)| {
+            .map(|(key, q)| {
                 (
-                    name.as_str(),
+                    key.as_str(),
+                    &q.selection,
                     self.round.saturating_sub(q.head_since_round),
                     q.requests.len(),
                 )
             })
             .collect();
-        cands.sort_by(|a, b| b.1.cmp(&a.1).then(b.2.cmp(&a.2)).then(a.0.cmp(b.0)));
-        cands.into_iter().take(k).map(|(n, _, _)| n.to_string()).collect()
+        cands.sort_by(|a, b| b.2.cmp(&a.2).then(b.3.cmp(&a.3)).then(a.0.cmp(b.0)));
+        cands
+            .into_iter()
+            .take(k)
+            .map(|(_, sel, _, _)| sel.clone())
+            .collect()
     }
 
     fn longest_queue(&self) -> Option<String> {
         self.queues
             .iter()
             .filter(|(_, q)| !q.requests.is_empty())
-            .max_by_key(|(name, q)| (q.requests.len(), std::cmp::Reverse(name.as_str())))
-            .map(|(name, _)| name.clone())
+            .max_by_key(|(key, q)| (q.requests.len(), std::cmp::Reverse(key.as_str())))
+            .map(|(key, _)| key.clone())
     }
 }
 
@@ -179,17 +196,17 @@ mod tests {
     use crate::util::proptest as pt;
     use crate::util::rng::Rng;
 
-    fn req(id: u64, adapter: &str) -> Request {
+    fn req(id: u64, spec: &str) -> Request {
         Request {
             id,
-            adapter: adapter.to_string(),
+            selection: Selection::parse(spec).unwrap(),
             arrival_us: id,
             payload_seed: id,
         }
     }
 
     #[test]
-    fn batches_are_single_adapter_and_fifo() {
+    fn batches_are_single_selection_and_fifo() {
         let mut b = DynamicBatcher::new(BatcherConfig {
             max_batch: 4,
             max_wait_rounds: 100,
@@ -198,21 +215,22 @@ mod tests {
             b.push(req(i, if i % 2 == 0 { "a" } else { "b" }));
         }
         let mut seen: HashMap<String, u64> = HashMap::new();
-        while let Some((name, batch)) = b.next_batch(None) {
+        while let Some((sel, batch)) = b.next_batch(None) {
             assert!(batch.len() <= 4);
             for r in &batch {
-                assert_eq!(r.adapter, name);
-                if let Some(&prev) = seen.get(&name) {
-                    assert!(r.id > prev, "FIFO violated in {name}");
+                assert_eq!(r.selection, sel);
+                let key = sel.key();
+                if let Some(&prev) = seen.get(&key) {
+                    assert!(r.id > prev, "FIFO violated in {key}");
                 }
-                seen.insert(name.clone(), r.id);
+                seen.insert(key, r.id);
             }
         }
         assert!(b.is_empty());
     }
 
     #[test]
-    fn affinity_prefers_active_adapter() {
+    fn affinity_prefers_active_selection() {
         let mut b = DynamicBatcher::new(BatcherConfig {
             max_batch: 2,
             max_wait_rounds: 100,
@@ -223,12 +241,12 @@ mod tests {
         for i in 4..12 {
             b.push(req(i, "b")); // longer queue
         }
-        let (name, _) = b.next_batch(Some("a")).unwrap();
-        assert_eq!(name, "a"); // affinity beats queue length
-        let (name, _) = b.next_batch(Some("a")).unwrap();
-        assert_eq!(name, "a");
-        let (name, _) = b.next_batch(Some("a")).unwrap();
-        assert_eq!(name, "b"); // a drained
+        let (sel, _) = b.next_batch(Some("a")).unwrap();
+        assert_eq!(sel.key(), "a"); // affinity beats queue length
+        let (sel, _) = b.next_batch(Some("a")).unwrap();
+        assert_eq!(sel.key(), "a");
+        let (sel, _) = b.next_batch(Some("a")).unwrap();
+        assert_eq!(sel.key(), "b"); // a drained
     }
 
     #[test]
@@ -243,8 +261,8 @@ mod tests {
         b.push(req(100, "cold"));
         let mut served_cold_at = None;
         for round in 0..8 {
-            let (name, _) = b.next_batch(Some("hot")).unwrap();
-            if name == "cold" {
+            let (sel, _) = b.next_batch(Some("hot")).unwrap();
+            if sel.key() == "cold" {
                 served_cold_at = Some(round);
                 break;
             }
@@ -256,26 +274,39 @@ mod tests {
     }
 
     #[test]
-    fn affinity_extends_to_set_identity() {
-        // Fused-mode serving pushes canonical set ids as the adapter key;
-        // affinity then prefers the currently-fused set exactly like a
-        // single adapter.
+    fn affinity_extends_to_selection_identity() {
+        // Mixed base / single / set traffic: base requests get their own
+        // queue (empty key), two spellings of one set share a queue, and
+        // affinity prefers the resident set exactly like a single.
         let mut b = DynamicBatcher::new(BatcherConfig {
             max_batch: 2,
             max_wait_rounds: 100,
         });
-        for i in 0..4 {
-            b.push(req(i, "a@1+b@0.5"));
+        for i in 0..2 {
+            b.push(req(i, "b+a")); // canonicalizes with "a+b@1"
+        }
+        for i in 2..4 {
+            b.push(req(i, "a@1+b"));
         }
         for i in 4..10 {
-            b.push(req(i, "b@1+c@1")); // longer queue
+            b.push(req(i, "c")); // longer queue
         }
-        let (name, _) = b.next_batch(Some("a@1+b@0.5")).unwrap();
-        assert_eq!(name, "a@1+b@0.5"); // set affinity beats queue length
-        let (name, _) = b.next_batch(Some("a@1+b@0.5")).unwrap();
-        assert_eq!(name, "a@1+b@0.5");
-        let (name, _) = b.next_batch(Some("a@1+b@0.5")).unwrap();
-        assert_eq!(name, "b@1+c@1"); // the fused set drained
+        b.push(req(10, ""));
+        let set_key = Selection::parse("b+a").unwrap().key();
+        let (sel, batch) = b.next_batch(Some(&set_key)).unwrap();
+        assert_eq!(sel.key(), set_key); // set affinity beats queue length
+        assert_eq!(batch.len(), 2);
+        let (sel, _) = b.next_batch(Some(&set_key)).unwrap();
+        assert_eq!(sel.key(), set_key); // both spellings shared the queue
+        let (sel, _) = b.next_batch(Some(&set_key)).unwrap();
+        assert_eq!(sel.key(), "c"); // the fused set drained
+        // base requests are schedulable like any other selection
+        while let Some((sel, _)) = b.next_batch(None) {
+            if sel == Selection::Base {
+                return;
+            }
+        }
+        panic!("base request never scheduled");
     }
 
     #[test]
@@ -293,20 +324,21 @@ mod tests {
         for i in 8..12 {
             b.push(req(i, "c"));
         }
+        let keys = |v: Vec<Selection>| -> Vec<String> { v.iter().map(|s| s.key()).collect() };
         // No aging yet: longest queue first, active excluded.
-        assert_eq!(b.upcoming(2, &["b"]), vec!["c", "a"]);
-        assert_eq!(b.upcoming(10, &[]), vec!["b", "c", "a"]);
-        assert_eq!(b.upcoming(0, &[]), Vec::<String>::new());
-        // A multi-name exclusion set (the transition-plan prefetch case:
-        // active adapter + already-planned pairs) filters them all.
-        assert_eq!(b.upcoming(10, &["b", "c"]), vec!["a"]);
+        assert_eq!(keys(b.upcoming(2, &["b"])), vec!["c", "a"]);
+        assert_eq!(keys(b.upcoming(10, &[])), vec!["b", "c", "a"]);
+        assert!(b.upcoming(0, &[]).is_empty());
+        // A multi-key exclusion set (the transition-plan prefetch case:
+        // active selection + already-planned pairs) filters them all.
+        assert_eq!(keys(b.upcoming(10, &["b", "c"])), vec!["a"]);
         assert!(b.upcoming(10, &["a", "b", "c"]).is_empty());
         // Serve "b" for a while: the waiting queues age ahead of it.
         for _ in 0..3 {
-            let (name, _) = b.next_batch(Some("b")).unwrap();
-            assert_eq!(name, "b");
+            let (sel, _) = b.next_batch(Some("b")).unwrap();
+            assert_eq!(sel.key(), "b");
         }
-        let ahead = b.upcoming(3, &["b"]);
+        let ahead = keys(b.upcoming(3, &["b"]));
         assert_eq!(ahead.len(), 2);
         assert!(ahead.contains(&"a".to_string()) && ahead.contains(&"c".to_string()));
         // Drained queues disappear from the lookahead.
@@ -343,9 +375,9 @@ mod tests {
                 let mut served = Vec::new();
                 let mut active: Option<String> = None;
                 let mut guard = 0;
-                while let Some((name, batch)) = b.next_batch(active.as_deref()) {
+                while let Some((sel, batch)) = b.next_batch(active.as_deref()) {
                     served.extend(batch.iter().map(|r| r.id));
-                    active = Some(name);
+                    active = Some(sel.key());
                     guard += 1;
                     if guard > 500 {
                         return false;
@@ -361,7 +393,7 @@ mod tests {
     #[test]
     fn prop_no_head_waits_past_bound_plus_slack() {
         // Once scheduling begins, a nonempty queue's head is served within
-        // max_wait_rounds + (number of adapters) rounds.
+        // max_wait_rounds + (number of selections) rounds.
         pt::forall(
             17,
             20,
@@ -377,14 +409,15 @@ mod tests {
                 }
                 let mut active: Option<String> = None;
                 let mut rounds_since: HashMap<String, u64> = HashMap::new();
-                while let Some((name, _batch)) = b.next_batch(active.as_deref()) {
+                while let Some((sel, _batch)) = b.next_batch(active.as_deref()) {
+                    let key = sel.key();
                     for (k, v) in rounds_since.iter_mut() {
-                        if k != &name {
+                        if k != &key {
                             *v += 1;
                         }
                     }
-                    rounds_since.insert(name.clone(), 0);
-                    active = Some(name);
+                    rounds_since.insert(key.clone(), 0);
+                    active = Some(key);
                     // drop drained queues from the wait ledger
                     rounds_since.retain(|k, _| {
                         b.queues

@@ -1,0 +1,1035 @@
+//! The trait-based engine layer behind `Selection` routing: one uniform
+//! apply/revert/counters surface ([`AdapterEngine`]) implemented by both
+//! the scatter [`SwitchEngine`] and the incremental fused-mode
+//! [`FusionEngine`], plus the [`Router`] — the per-request state machine
+//! that drives base / single / set selections onto ONE resident weight
+//! store (DESIGN.md §12).
+//!
+//! ## Why a trait
+//!
+//! Before this redesign the server forked into per-policy code paths at
+//! construction time (`Policy::ShiraScatter` vs `Policy::ShiraFusion`)
+//! and fused serving was enabled through `enable_fusion` side channels.
+//! Both engines now sit behind [`AdapterEngine`]: the server holds one
+//! boxed engine for the single-adapter path, dispatches every apply
+//! through the same trait call, and the fused-mode engine joins lazily
+//! the first time a `Set` selection arrives.  A custom engine (e.g. a
+//! mock, or a future GPU-resident path) drops in by implementing the
+//! trait and handing [`Router::with_engine`] a box.
+//!
+//! ## The routing state machine (DESIGN.md §12.2)
+//!
+//! The router is in one of three live states — `Base`, `Single` (the
+//! switch engine holds an applied adapter + snapshot arena) or `Fused`
+//! (the fusion engine holds a non-empty fused set).  Transitions:
+//!
+//! * single→single runs through the PR 4 one-pass
+//!   [`transition_to`](SwitchEngine::transition_to) machinery whenever
+//!   the store has the pair plan resident, falling back to revert+apply;
+//! * set→set (and single↔set where the single is a roster member) runs
+//!   through the PR 4 one-wave merged-support
+//!   [`apply_set`](FusionEngine::apply_set) — a single adapter is just a
+//!   one-member set, the paper's core claim;
+//! * crossing between the engines otherwise goes through base: the
+//!   outgoing engine's revert is bit-exact for SHiRA, so the incoming
+//!   engine always starts from true base values.
+//!
+//! Every path lands on bytes bit-identical to serving the same
+//! selection from base under the old per-policy servers
+//! (property-tested below at 1 and 4 threads).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::error::ServeError;
+use super::fusion_engine::{FusionEngine, FusionPlan};
+use super::selection::Selection;
+use super::store::{AdapterHandle, AdapterStore, AnyAdapter};
+use super::switch::{SwitchEngine, SwitchPath};
+use crate::adapter::{AdapterTransition, LoraAdapter};
+use crate::model::weights::WeightStore;
+use crate::util::threadpool::ThreadPool;
+
+/// One engine operation: the selection to make resident, plus whatever
+/// the caller (the router) has already resolved for it — store handles
+/// for the named adapters and, for single→single switches, the resident
+/// pairwise transition plan.
+pub struct EngineOp<'a> {
+    /// What should be resident after this call.
+    pub selection: &'a Selection,
+    /// Decoded store handles for the selection's adapters, positional
+    /// with [`Selection::names`].  Engines that resolve adapters
+    /// themselves (the fusion engine's roster) may be handed an empty
+    /// slice.
+    pub handles: &'a [Arc<AdapterHandle>],
+    /// Resident A→B transition plan for the (currently-active →
+    /// incoming) pair, when the store had one.  `None` falls back to
+    /// revert+apply; bytes are identical either way.
+    pub transition: Option<Arc<AdapterTransition>>,
+}
+
+/// Cumulative counters an engine reports into the serve summary.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineCounters {
+    /// Adapter activations / incremental set updates performed.
+    pub applies: u64,
+    /// One-pass direct A→B transitions among the applies (switch engine).
+    pub direct_transitions: u64,
+    /// Store-built shard-plan sets ignored as mismatched (switch engine).
+    pub plan_mismatches: u64,
+}
+
+/// Uniform apply/revert/report surface over the resident weights — the
+/// one interface the server's request loop talks to, implemented by
+/// [`SwitchEngine`] and [`FusionEngine`].
+///
+/// Engines never own the weights: the caller owns ONE resident copy of
+/// the base model and passes it into every call, so several engines can
+/// cooperate on the same store (the router interleaves them).
+pub trait AdapterEngine {
+    /// Stable name of the engine ("switch" / "fusion") for reports.
+    fn kind(&self) -> &'static str;
+
+    /// Make `op.selection` resident on `weights`, transitioning from
+    /// whatever this engine currently has applied.  Returns the path the
+    /// switch took.
+    fn apply(
+        &mut self,
+        weights: &mut WeightStore,
+        op: &EngineOp<'_>,
+    ) -> Result<SwitchPath, ServeError>;
+
+    /// Restore base values for everything this engine has applied
+    /// (bit-exact for SHiRA state; dense LoRA unfuse leaves float
+    /// drift).  A no-op when nothing is applied.
+    fn revert(&mut self, weights: &mut WeightStore);
+
+    /// Cumulative counters for the serve summary.
+    fn counters(&self) -> EngineCounters;
+}
+
+impl AdapterEngine for SwitchEngine {
+    fn kind(&self) -> &'static str {
+        "switch"
+    }
+
+    /// `Base` reverts; `Single` scatters (SHiRA — through the one-pass
+    /// transition when `op.transition` is resident) or dense-fuses
+    /// (LoRA).  `Set` selections belong to the fusion engine and error.
+    fn apply(
+        &mut self,
+        weights: &mut WeightStore,
+        op: &EngineOp<'_>,
+    ) -> Result<SwitchPath, ServeError> {
+        match op.selection {
+            Selection::Base => {
+                SwitchEngine::revert(self, weights);
+                Ok(SwitchPath::Fallback)
+            }
+            Selection::Single { name, alpha } => {
+                let handle = op
+                    .handles
+                    .first()
+                    .ok_or_else(|| ServeError::UnknownAdapter(name.clone()))?;
+                match &handle.adapter {
+                    AnyAdapter::Shira(a) => match &op.transition {
+                        Some(tp) => {
+                            let (_t, path) = self.transition_to(
+                                weights,
+                                Arc::clone(a),
+                                Some(Arc::clone(&handle.plans)),
+                                tp,
+                                *alpha,
+                            );
+                            Ok(path)
+                        }
+                        None => {
+                            self.switch_to_shira_planned(
+                                weights,
+                                Arc::clone(a),
+                                Some(Arc::clone(&handle.plans)),
+                                *alpha,
+                            );
+                            Ok(SwitchPath::Fallback)
+                        }
+                    },
+                    AnyAdapter::Lora(a) => {
+                        // LoRA strength is baked into the adapter's own
+                        // scale; the selection alpha is ignored.
+                        self.switch_to_lora_shared(weights, Arc::clone(a));
+                        Ok(SwitchPath::Fallback)
+                    }
+                }
+            }
+            Selection::Set { .. } => Err(ServeError::InvalidSelection {
+                spec: op.selection.key(),
+                reason: "set selections route to the fusion engine".into(),
+            }),
+        }
+    }
+
+    fn revert(&mut self, weights: &mut WeightStore) {
+        SwitchEngine::revert(self, weights);
+    }
+
+    fn counters(&self) -> EngineCounters {
+        EngineCounters {
+            applies: self.switches,
+            direct_transitions: self.transitions,
+            plan_mismatches: self.plan_mismatches,
+        }
+    }
+}
+
+impl AdapterEngine for FusionEngine {
+    fn kind(&self) -> &'static str {
+        "fusion"
+    }
+
+    /// Every selection is a fused-set transition: `Base` empties the set,
+    /// `Single` is a one-member set (the paper's claim made literal) and
+    /// `Set` is the general case — all one merged-support wave via
+    /// [`FusionEngine::apply_set`].  Members must be in this engine's
+    /// roster; the router guarantees that by (re)building the plan before
+    /// dispatching here.
+    fn apply(
+        &mut self,
+        weights: &mut WeightStore,
+        op: &EngineOp<'_>,
+    ) -> Result<SwitchPath, ServeError> {
+        let one;
+        let desired: &[(String, f32)] = match op.selection {
+            Selection::Base => &[],
+            Selection::Single { name, alpha } => {
+                one = [(name.clone(), *alpha)];
+                &one
+            }
+            Selection::Set { members } => members,
+        };
+        self.apply_set(weights, desired)?;
+        Ok(SwitchPath::Fused)
+    }
+
+    fn revert(&mut self, weights: &mut WeightStore) {
+        if self.is_active() {
+            // Emptying the set restores base values on the union exactly;
+            // the engine stays active so the snapshot is reusable.
+            self.apply_set(weights, &[])
+                .expect("empty set over an active engine cannot fail");
+        }
+    }
+
+    fn counters(&self) -> EngineCounters {
+        EngineCounters {
+            applies: self.updates(),
+            direct_transitions: 0,
+            plan_mismatches: 0,
+        }
+    }
+}
+
+/// What one [`Router::apply`] did.
+#[derive(Clone, Debug, Default)]
+pub struct Applied {
+    /// Did the resident weights change selection (false when the request
+    /// repeats the active selection)?
+    pub switched: bool,
+    /// The path the apply took, when an engine ran.
+    pub path: Option<SwitchPath>,
+    /// Microseconds of weight mutation (engine reverts + applies) this
+    /// call performed — store fetch/decode and roster (re)builds are
+    /// deliberately excluded, so the serving `switch_us` metric keeps
+    /// its historical meaning (pure switch cost, not cache misses).
+    pub switch_us: f64,
+    /// Set when the selection is an unfused-mode LoRA adapter: the
+    /// weights stay at base and the caller threads this adapter's
+    /// branches through the forward pass instead.
+    pub unfused_lora: Option<Arc<LoraAdapter>>,
+}
+
+impl Applied {
+    fn unchanged() -> Applied {
+        Applied::default()
+    }
+}
+
+/// Which engine currently deviates the weights from base.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Live {
+    Base,
+    Single,
+    Fused,
+}
+
+/// The per-request routing state machine: owns the resident weights,
+/// the boxed single-adapter engine, and the lazily-built fused-mode
+/// engine, and drives any interleaving of base / single / set
+/// selections onto them (module docs; DESIGN.md §12.2).
+///
+/// The router also owns the residency bookkeeping the old server did
+/// through side channels: the active single adapter and the whole
+/// fusion roster stay pinned in the store, so cache pressure can never
+/// evict an adapter an in-flight apply may touch.
+pub struct Router {
+    weights: WeightStore,
+    /// The single-adapter path (normally a [`SwitchEngine`]), behind the
+    /// trait so alternative engines can drop in.
+    single: Box<dyn AdapterEngine>,
+    /// The fused-set path; built on the first `Set` selection and
+    /// rebuilt whenever a set names adapters outside the roster.
+    fused: Option<FusionEngine>,
+    pool: Option<Arc<ThreadPool>>,
+    live: Live,
+    /// Canonical key of the applied selection.
+    active: Option<String>,
+    /// Name of the adapter the single engine holds (for pair-plan
+    /// lookups and pin bookkeeping).
+    single_name: Option<String>,
+    pinned_active: Option<String>,
+    pinned_roster: Vec<String>,
+    /// Serve LoRA singles unfused (branches on the forward pass) instead
+    /// of dense-fusing them into the weights.
+    lora_unfused: bool,
+}
+
+impl Router {
+    /// Router over `weights` with a [`SwitchEngine`] single path sharing
+    /// `pool` (also used for fused-plan dispatch when sets arrive).
+    pub fn new(weights: WeightStore, pool: Option<Arc<ThreadPool>>, lora_unfused: bool) -> Router {
+        let engine: Box<dyn AdapterEngine> =
+            Box::new(SwitchEngine::with_pool(pool.clone()));
+        Self::with_engine(weights, engine, pool, lora_unfused)
+    }
+
+    /// Router with a custom boxed single-adapter engine.
+    pub fn with_engine(
+        weights: WeightStore,
+        single: Box<dyn AdapterEngine>,
+        pool: Option<Arc<ThreadPool>>,
+        lora_unfused: bool,
+    ) -> Router {
+        Router {
+            weights,
+            single,
+            fused: None,
+            pool,
+            live: Live::Base,
+            active: None,
+            single_name: None,
+            pinned_active: None,
+            pinned_roster: Vec::new(),
+            lora_unfused,
+        }
+    }
+
+    /// The resident weights.
+    pub fn weights(&self) -> &WeightStore {
+        &self.weights
+    }
+
+    /// Canonical key of the currently-applied selection (the batcher's
+    /// affinity target).  `None` before the first apply.
+    pub fn active_key(&self) -> Option<&str> {
+        self.active.as_deref()
+    }
+
+    /// The fused-mode engine, once a `Set` selection has built it.
+    pub fn fusion(&self) -> Option<&FusionEngine> {
+        self.fused.as_ref()
+    }
+
+    /// Counters of the single-adapter engine (transitions, mismatches).
+    pub fn single_counters(&self) -> EngineCounters {
+        self.single.counters()
+    }
+
+    /// Counters of the fused-mode engine (incremental updates), zeroed
+    /// when no set has arrived yet.
+    pub fn fused_counters(&self) -> EngineCounters {
+        self.fused
+            .as_ref()
+            .map(|f| f.counters())
+            .unwrap_or_default()
+    }
+
+    /// Make `sel` resident, fetching whatever it names from `store` and
+    /// picking the cheapest machinery for the transition (module docs).
+    /// Repeating the active selection is free (except unfused-LoRA
+    /// selections, which re-surface their adapter every call so each
+    /// batch can thread the branches through the forward pass).
+    pub fn apply(
+        &mut self,
+        store: &mut AdapterStore,
+        sel: &Selection,
+    ) -> Result<Applied, ServeError> {
+        sel.validate()?;
+        let key = sel.key();
+        let same = self.active.as_deref() == Some(key.as_str());
+        match sel {
+            Selection::Base => {
+                let switched = self.live != Live::Base;
+                let t0 = Instant::now();
+                if switched {
+                    self.to_base(store);
+                }
+                self.active = Some(key);
+                Ok(Applied {
+                    switched,
+                    path: None,
+                    switch_us: t0.elapsed().as_secs_f64() * 1e6,
+                    unfused_lora: None,
+                })
+            }
+            Selection::Single { name, .. } => {
+                // Affinity fast path: a repeated selection touches neither
+                // the store nor the engines.  (Unfused-LoRA mode must
+                // re-surface its adapter every call, so it fetches first.)
+                if same && !self.lora_unfused {
+                    return Ok(Applied::unchanged());
+                }
+                let handle = store.fetch(name)?;
+                if self.lora_unfused {
+                    if let AnyAdapter::Lora(a) = &handle.adapter {
+                        // Unfused mode: weights stay at base, branches ride
+                        // the forward pass.  Re-surfaced every call.
+                        let switched = !same;
+                        let t0 = Instant::now();
+                        if self.live != Live::Base {
+                            self.to_base(store);
+                        }
+                        self.active = Some(key);
+                        return Ok(Applied {
+                            switched,
+                            path: None,
+                            switch_us: t0.elapsed().as_secs_f64() * 1e6,
+                            unfused_lora: Some(Arc::clone(a)),
+                        });
+                    }
+                }
+                if same {
+                    return Ok(Applied::unchanged());
+                }
+                // A SHiRA single that is already a member of a live fused
+                // roster is served AS a one-member set: single↔set moves
+                // become one merged-support wave instead of a
+                // revert + activate round-trip.
+                if matches!(&handle.adapter, AnyAdapter::Shira(_)) {
+                    let member = self
+                        .fused
+                        .as_ref()
+                        .map(|f| f.is_active() && f.plan().member_index(name).is_some())
+                        .unwrap_or(false);
+                    if member {
+                        let t0 = Instant::now();
+                        if self.live == Live::Single {
+                            self.single.revert(&mut self.weights);
+                            self.release_single(store);
+                            self.live = Live::Base;
+                            // Keep `active` truthful at every state change
+                            // so an error below cannot leave a stale key.
+                            self.active = Some(String::new());
+                        }
+                        let op = EngineOp {
+                            selection: sel,
+                            handles: &[],
+                            transition: None,
+                        };
+                        let f = self.fused.as_mut().expect("checked above");
+                        let path = f.apply(&mut self.weights, &op)?;
+                        self.live = Live::Fused;
+                        self.active = Some(key);
+                        return Ok(Applied {
+                            switched: true,
+                            path: Some(path),
+                            switch_us: t0.elapsed().as_secs_f64() * 1e6,
+                            unfused_lora: None,
+                        });
+                    }
+                }
+                // Switch-engine path.  Empty a live fused set first so the
+                // engine starts from true base values.
+                let t0 = Instant::now();
+                if self.live == Live::Fused {
+                    if let Some(f) = &mut self.fused {
+                        AdapterEngine::revert(f, &mut self.weights);
+                    }
+                    self.live = Live::Base;
+                    self.active = Some(String::new());
+                }
+                // Pin the incoming adapter before the apply; the previous
+                // active adapter's pin is released after.  An in-flight
+                // switch can therefore never lose its cache entry.
+                store.pin(name);
+                if let Some(prev) = self.pinned_active.replace(name.clone()) {
+                    if prev != *name {
+                        store.unpin(&prev);
+                    }
+                }
+                // Hot pair with a resident pairwise plan: one pass over
+                // the A∪B union, one dispatch wave.  Cold pair (or no
+                // previous single): revert+apply.  Bytes identical.
+                let prev = self
+                    .single_name
+                    .take()
+                    .filter(|p| self.live == Live::Single && p != name);
+                let transition = prev
+                    .as_deref()
+                    .and_then(|p| store.begin_transition(p, name));
+                let op = EngineOp {
+                    selection: sel,
+                    handles: std::slice::from_ref(&handle),
+                    transition,
+                };
+                let took_plan = op.transition.is_some();
+                let path = self.single.apply(&mut self.weights, &op)?;
+                if took_plan {
+                    store.end_transition(prev.as_deref().unwrap_or_default(), name);
+                }
+                self.live = Live::Single;
+                self.single_name = Some(name.clone());
+                self.active = Some(key);
+                Ok(Applied {
+                    switched: true,
+                    path: Some(path),
+                    switch_us: t0.elapsed().as_secs_f64() * 1e6,
+                    unfused_lora: None,
+                })
+            }
+            Selection::Set { members } => {
+                if same {
+                    return Ok(Applied::unchanged());
+                }
+                // The fused set is built from base: revert any single
+                // first (bit-exact for SHiRA).  `active` tracks every
+                // intermediate state so a failed roster build below can
+                // never leave a stale key claiming the single is still
+                // resident.
+                let revert_t0 = Instant::now();
+                if self.live == Live::Single {
+                    self.single.revert(&mut self.weights);
+                    self.release_single(store);
+                    self.live = Live::Base;
+                    self.active = Some(String::new());
+                }
+                let revert_us = revert_t0.elapsed().as_secs_f64() * 1e6;
+                // Roster (re)builds are lifecycle cost, not switch cost:
+                // excluded from the timed window like the store fetch.
+                self.ensure_roster(store, members)?;
+                let op = EngineOp {
+                    selection: sel,
+                    handles: &[],
+                    transition: None,
+                };
+                let t0 = Instant::now();
+                let f = self.fused.as_mut().expect("ensure_roster built it");
+                let path = f.apply(&mut self.weights, &op)?;
+                self.live = Live::Fused;
+                self.active = Some(key);
+                Ok(Applied {
+                    switched: true,
+                    path: Some(path),
+                    switch_us: revert_us + t0.elapsed().as_secs_f64() * 1e6,
+                    unfused_lora: None,
+                })
+            }
+        }
+    }
+
+    /// Restore base weights exactly and release every pin; drops the
+    /// fused-mode engine (the roster shrinks to nothing).  The next set
+    /// selection rebuilds it.
+    pub fn revert_all(&mut self, store: &mut AdapterStore) {
+        self.unpin_roster(store);
+        if let Some(mut f) = self.fused.take() {
+            f.deactivate(&mut self.weights);
+        }
+        self.single.revert(&mut self.weights);
+        self.release_single(store);
+        self.live = Live::Base;
+        self.active = None;
+    }
+
+    fn to_base(&mut self, store: &mut AdapterStore) {
+        match self.live {
+            Live::Base => {}
+            Live::Single => {
+                self.single.revert(&mut self.weights);
+                self.release_single(store);
+            }
+            Live::Fused => {
+                if let Some(f) = &mut self.fused {
+                    AdapterEngine::revert(f, &mut self.weights);
+                }
+            }
+        }
+        self.live = Live::Base;
+    }
+
+    fn release_single(&mut self, store: &mut AdapterStore) {
+        self.single_name = None;
+        if let Some(prev) = self.pinned_active.take() {
+            store.unpin(&prev);
+        }
+    }
+
+    fn unpin_roster(&mut self, store: &mut AdapterStore) {
+        for n in self.pinned_roster.drain(..) {
+            store.unpin(&n);
+        }
+    }
+
+    /// Grow (or build) the fusion roster so it covers `members`.
+    /// Existing roster members are kept so earlier sets stay addressable
+    /// without a rebuild; rosters only shrink via [`Self::revert_all`].
+    fn ensure_roster(
+        &mut self,
+        store: &mut AdapterStore,
+        members: &[(String, f32)],
+    ) -> Result<(), ServeError> {
+        let covered = match &self.fused {
+            None => false,
+            Some(f) => members
+                .iter()
+                .all(|(n, _)| f.plan().member_index(n).is_some()),
+        };
+        if covered {
+            return Ok(());
+        }
+        let mut names: Vec<String> = members.iter().map(|(n, _)| n.clone()).collect();
+        if let Some(f) = &self.fused {
+            for a in f.plan().roster() {
+                if !names.iter().any(|x| x == &a.name) {
+                    names.push(a.name.clone());
+                }
+            }
+        }
+        names.sort();
+        names.dedup();
+        // Release the previous roster's pins up front: the fetch loop
+        // below pins each new member the moment it lands, and stale pins
+        // must neither crowd the new members out of the cache nor leak
+        // when the rosters are disjoint.
+        self.unpin_roster(store);
+        let result = self.build_fusion(store, &names);
+        if result.is_err() {
+            // Don't leave a half-built roster pinned.
+            self.unpin_roster(store);
+        }
+        result
+    }
+
+    fn build_fusion(
+        &mut self,
+        store: &mut AdapterStore,
+        names: &[String],
+    ) -> Result<(), ServeError> {
+        let mut roster = Vec::with_capacity(names.len());
+        for n in names {
+            if n.contains('+') || n.contains('@') {
+                // '+' and '@' are selection metacharacters: such a name
+                // could never be addressed by a set selection.
+                return Err(ServeError::InvalidSelection {
+                    spec: n.clone(),
+                    reason: "roster member name contains a selection metacharacter ('+' or '@')"
+                        .into(),
+                });
+            }
+            match &store.fetch(n)?.adapter {
+                AnyAdapter::Shira(a) => {
+                    roster.push(Arc::clone(a));
+                    // Pin as fetched, so a later member's decode can
+                    // never evict this one mid-build (pin only fails for
+                    // oversized-uncached entries, which were never
+                    // resident to protect).
+                    if store.pin(n) {
+                        self.pinned_roster.push(n.clone());
+                    }
+                }
+                AnyAdapter::Lora(_) => return Err(ServeError::NotShira(n.clone())),
+            }
+        }
+        // Unwind any previous fused state BEFORE snapshotting: a live
+        // engine's writes are invisible to `revert`, and dropping it
+        // without deactivating would bake its deltas into the new base.
+        if let Some(mut f) = self.fused.take() {
+            f.deactivate(&mut self.weights);
+        }
+        self.single.revert(&mut self.weights);
+        self.release_single(store);
+        self.live = Live::Base;
+        // The weights are at base now; record that before the fallible
+        // plan build/activate so an error cannot leave a stale key.
+        self.active = Some(String::new());
+        let plan = FusionPlan::build(roster)?;
+        let mut fusion = FusionEngine::with_pool(plan, self.pool.clone());
+        fusion.activate(&mut self.weights)?;
+        self.fused = Some(fusion);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::sparse::SparseDelta;
+    use crate::adapter::ShiraAdapter;
+    use crate::coordinator::fusion::fuse_shira;
+    use crate::coordinator::store::StoreConfig;
+    use crate::util::proptest as pt;
+    use crate::util::rng::Rng;
+
+    const DIM: usize = 64;
+
+    fn base_weights(seed: u64) -> WeightStore {
+        WeightStore::init(
+            &[("wq".into(), vec![DIM, DIM]), ("wk".into(), vec![DIM, DIM])],
+            seed,
+        )
+    }
+
+    fn make_adapter(rng: &mut Rng, name: &str, k: usize) -> ShiraAdapter {
+        let mk = |rng: &mut Rng| {
+            let idx = rng.sample_indices(DIM * DIM, k);
+            let mut d = vec![0.0; k];
+            rng.fill_normal(&mut d, 0.0, 0.5);
+            SparseDelta::new(DIM, DIM, idx, d)
+        };
+        ShiraAdapter {
+            name: name.into(),
+            strategy: "rand".into(),
+            tensors: vec![("wq".into(), mk(rng)), ("wk".into(), mk(rng))],
+        }
+    }
+
+    fn adapters(k: usize) -> Vec<ShiraAdapter> {
+        let mut rng = Rng::new(0xE1);
+        (0..3)
+            .map(|i| make_adapter(&mut rng, &format!("ad{i}"), k))
+            .collect()
+    }
+
+    fn store_with(adapters: &[ShiraAdapter], pool: Option<Arc<ThreadPool>>) -> AdapterStore {
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 64 << 20,
+                prefetch_depth: 4,
+                ..StoreConfig::default()
+            },
+            pool,
+        );
+        for a in adapters {
+            store.add_shira(a);
+        }
+        store
+    }
+
+    fn scaled(a: &ShiraAdapter, w: f32) -> ShiraAdapter {
+        ShiraAdapter {
+            name: a.name.clone(),
+            strategy: a.strategy.clone(),
+            tensors: a
+                .tensors
+                .iter()
+                .map(|(t, d)| (t.clone(), d.scaled(w)))
+                .collect(),
+        }
+    }
+
+    /// The per-policy reference the acceptance criterion names: what the
+    /// PR 4 servers would make resident for this selection starting from
+    /// base — a scatter apply for singles, a serial `fuse_shira` rebuild
+    /// of the scaled members (sorted by name, the roster order) for sets.
+    fn reference_weights(
+        base: &WeightStore,
+        zoo: &[ShiraAdapter],
+        sel: &Selection,
+    ) -> WeightStore {
+        let by_name = |n: &str| zoo.iter().find(|a| a.name == n).expect("known adapter");
+        match sel {
+            Selection::Base => base.clone(),
+            Selection::Single { name, alpha } => {
+                let mut w = base.clone();
+                for (t, d) in &by_name(name).tensors {
+                    d.apply(w.get_mut(t), *alpha);
+                }
+                w
+            }
+            Selection::Set { members } => {
+                let mut sorted = members.clone();
+                sorted.sort_by(|a, b| a.0.cmp(&b.0));
+                let scaled_members: Vec<ShiraAdapter> = sorted
+                    .iter()
+                    .map(|(n, w)| scaled(by_name(n), *w))
+                    .collect();
+                let refs: Vec<&ShiraAdapter> = scaled_members.iter().collect();
+                let fused = fuse_shira(&refs, "reference").expect("same target sets");
+                let mut w = base.clone();
+                for (t, d) in &fused.tensors {
+                    d.apply(w.get_mut(t), 1.0);
+                }
+                w
+            }
+        }
+    }
+
+    #[test]
+    fn boxed_switch_engine_serves_singles_and_rejects_sets() {
+        let zoo = adapters(40);
+        let base = base_weights(3);
+        let mut store = store_with(&zoo, None);
+        let mut weights = base.clone();
+        let mut eng: Box<dyn AdapterEngine> = Box::new(SwitchEngine::new());
+        let sel = Selection::single_at("ad0", 0.8);
+        let h = store.fetch("ad0").unwrap();
+        let op = EngineOp {
+            selection: &sel,
+            handles: std::slice::from_ref(&h),
+            transition: None,
+        };
+        let path = eng.apply(&mut weights, &op).unwrap();
+        assert_eq!(path, SwitchPath::Fallback);
+        assert!(weights.bit_equal(&reference_weights(&base, &zoo, &sel)));
+        assert_eq!(eng.kind(), "switch");
+        assert_eq!(eng.counters().applies, 1);
+        // Sets are the fusion engine's job.
+        let set = Selection::set(&[("ad0", 1.0), ("ad1", 1.0)]);
+        let op = EngineOp {
+            selection: &set,
+            handles: &[],
+            transition: None,
+        };
+        assert!(matches!(
+            eng.apply(&mut weights, &op),
+            Err(ServeError::InvalidSelection { .. })
+        ));
+        // Base reverts exactly.
+        let op = EngineOp {
+            selection: &Selection::Base,
+            handles: &[],
+            transition: None,
+        };
+        eng.apply(&mut weights, &op).unwrap();
+        assert!(weights.bit_equal(&base));
+    }
+
+    #[test]
+    fn fusion_engine_serves_singles_as_one_member_sets() {
+        // The paper's claim made literal: through the trait, a Single on
+        // the fusion engine is a one-member set — and bit-identical to
+        // the scatter path serving the same single.
+        let zoo = adapters(40);
+        let base = base_weights(5);
+        let roster: Vec<Arc<ShiraAdapter>> =
+            zoo.iter().map(|a| Arc::new(a.clone())).collect();
+        let plan = FusionPlan::build(roster).unwrap();
+        let mut f = FusionEngine::new(plan);
+        let mut weights = base.clone();
+        f.activate(&mut weights).unwrap();
+        for sel in [
+            Selection::single_at("ad1", 0.7),
+            Selection::single("ad0"),
+            Selection::set(&[("ad0", 1.0), ("ad2", -0.5)]),
+            Selection::Base,
+        ] {
+            let op = EngineOp {
+                selection: &sel,
+                handles: &[],
+                transition: None,
+            };
+            let eng: &mut dyn AdapterEngine = &mut f;
+            let path = eng.apply(&mut weights, &op).unwrap();
+            assert_eq!(path, SwitchPath::Fused);
+            assert!(
+                weights.bit_equal(&reference_weights(&base, &zoo, &sel)),
+                "selection {sel} diverged from the per-policy reference"
+            );
+        }
+        assert!(weights.bit_equal(&base));
+        assert_eq!(f.kind(), "fusion");
+        assert!(AdapterEngine::counters(&f).applies > 0);
+    }
+
+    #[test]
+    fn router_routes_mixed_selections_bit_identically() {
+        // The acceptance sequence: one router, selections mixing Base,
+        // Single and Set, every state bit-identical to the per-policy
+        // reference, at 1 and 4 threads.
+        let zoo = adapters(3000); // crosses PAR_MIN_NNZ at 2 tensors
+        let base = base_weights(7);
+        let seq = vec![
+            Selection::single("ad0"),
+            Selection::set(&[("ad0", 1.0), ("ad1", 0.5)]),
+            Selection::single_at("ad2", 0.9), // not in roster: via switch engine
+            Selection::Base,
+            Selection::set(&[("ad1", 2.0), ("ad2", 1.0)]), // roster grows
+            Selection::single_at("ad0", 0.5), // roster member: one-member set
+            Selection::single("ad0"),         // reweight in place
+            Selection::set(&[("ad0", 1.0), ("ad1", 1.0), ("ad2", 1.0)]),
+            Selection::Base,
+            Selection::single("ad1"),
+        ];
+        for threads in [1usize, 4] {
+            let pool = Arc::new(ThreadPool::new(threads));
+            let mut store = store_with(&zoo, Some(Arc::clone(&pool)));
+            let mut router = Router::new(base.clone(), Some(pool), false);
+            for (step, sel) in seq.iter().enumerate() {
+                let applied = router.apply(&mut store, sel).unwrap();
+                assert!(applied.switched, "step {step} should switch");
+                assert!(
+                    router.weights().bit_equal(&reference_weights(&base, &zoo, sel)),
+                    "step {step} ({sel}) diverged (threads={threads})"
+                );
+                assert_eq!(router.active_key(), Some(sel.key().as_str()));
+                // Repeating the active selection is free.
+                let again = router.apply(&mut store, sel).unwrap();
+                assert!(!again.switched, "step {step} repeat should be free");
+            }
+            router.revert_all(&mut store);
+            assert!(router.weights().bit_equal(&base), "threads={threads}");
+            assert!(router.fusion().is_none(), "revert_all drops the roster");
+        }
+    }
+
+    #[test]
+    fn router_takes_direct_transitions_when_plans_are_resident() {
+        let zoo = adapters(3000);
+        let base = base_weights(9);
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut store = store_with(&zoo, Some(Arc::clone(&pool)));
+        // Decode everything, then build the pair plan in the background.
+        for a in &zoo {
+            store.fetch(&a.name).unwrap();
+        }
+        let mut router = Router::new(base.clone(), Some(Arc::clone(&pool)), false);
+        router.apply(&mut store, &Selection::single("ad0")).unwrap();
+        store.prefetch_transitions("ad0", &["ad1".to_string()]);
+        pool.join();
+        let applied = router.apply(&mut store, &Selection::single("ad1")).unwrap();
+        assert_eq!(applied.path, Some(SwitchPath::Transition));
+        assert!(router.weights().bit_equal(&reference_weights(
+            &base,
+            &zoo,
+            &Selection::single("ad1")
+        )));
+        assert!(store.stats().plan_hits >= 1);
+        // Cold pair falls back — same bytes.
+        let applied = router.apply(&mut store, &Selection::single("ad2")).unwrap();
+        assert_eq!(applied.path, Some(SwitchPath::Fallback));
+        router.revert_all(&mut store);
+        assert!(router.weights().bit_equal(&base));
+    }
+
+    #[test]
+    fn router_pins_active_and_roster() {
+        let zoo = adapters(40);
+        let base = base_weights(11);
+        let mut store = store_with(&zoo, None);
+        let mut router = Router::new(base, None, false);
+        router.apply(&mut store, &Selection::single("ad0")).unwrap();
+        assert!(store.is_pinned("ad0"));
+        router
+            .apply(&mut store, &Selection::set(&[("ad1", 1.0), ("ad2", 1.0)]))
+            .unwrap();
+        assert!(!store.is_pinned("ad0"), "single pin released on set switch");
+        assert!(store.is_pinned("ad1") && store.is_pinned("ad2"));
+        router.revert_all(&mut store);
+        assert!(!store.is_pinned("ad1") && !store.is_pinned("ad2"));
+    }
+
+    #[test]
+    fn router_roster_grows_lazily_and_survives_non_member_singles() {
+        let zoo = adapters(40);
+        let base = base_weights(13);
+        let mut store = store_with(&zoo, None);
+        let mut router = Router::new(base.clone(), None, false);
+        router
+            .apply(&mut store, &Selection::set(&[("ad0", 1.0)]))
+            .unwrap();
+        assert_eq!(router.fusion().unwrap().plan().len(), 1);
+        // A non-member single empties the set and scatters — the roster
+        // is NOT grown by singles.
+        router.apply(&mut store, &Selection::single("ad1")).unwrap();
+        assert_eq!(router.fusion().unwrap().plan().len(), 1);
+        assert!(router.weights().bit_equal(&reference_weights(
+            &base,
+            &zoo,
+            &Selection::single("ad1")
+        )));
+        // A set naming new members grows the roster (keeping ad0).
+        router
+            .apply(&mut store, &Selection::set(&[("ad1", 1.0), ("ad2", 0.5)]))
+            .unwrap();
+        let plan = router.fusion().unwrap().plan();
+        assert_eq!(plan.len(), 3);
+        for n in ["ad0", "ad1", "ad2"] {
+            assert!(plan.member_index(n).is_some(), "{n} in roster");
+        }
+        router.revert_all(&mut store);
+        assert!(router.weights().bit_equal(&base));
+    }
+
+    #[test]
+    fn prop_random_mixed_traces_bit_identical_to_reference() {
+        // Property form of the acceptance criterion: any selection
+        // sequence over a 3-adapter zoo, serial and pooled, lands on the
+        // per-policy reference bytes after every apply and reverts to
+        // base exactly.
+        let pool = Arc::new(ThreadPool::new(4));
+        pt::forall(
+            0x5E1EC7,
+            15,
+            |r| {
+                let sels: Vec<(u8, usize, usize, f32, f32)> = (0..3 + r.below(6))
+                    .map(|_| {
+                        (
+                            r.below(3) as u8,
+                            r.below(3),
+                            r.below(3),
+                            -1.5 + 3.0 * r.uniform_f32(),
+                            -1.5 + 3.0 * r.uniform_f32(),
+                        )
+                    })
+                    .collect();
+                (r.next_u64(), sels)
+            },
+            |&(seed, ref sels)| {
+                let mut rng = Rng::new(seed);
+                let zoo: Vec<ShiraAdapter> = (0..3)
+                    .map(|i| make_adapter(&mut rng, &format!("ad{i}"), 60))
+                    .collect();
+                let base = base_weights(seed);
+                for pooled in [false, true] {
+                    let pool = pooled.then(|| Arc::clone(&pool));
+                    let mut store = store_with(&zoo, pool.clone());
+                    let mut router = Router::new(base.clone(), pool, false);
+                    for &(kind, i, j, wa, wb) in sels {
+                        let (na, nb) = (format!("ad{i}"), format!("ad{j}"));
+                        let sel = match kind {
+                            0 => Selection::Base,
+                            1 => Selection::single_at(&na, wa),
+                            _ => {
+                                if i == j {
+                                    Selection::set(&[(na.as_str(), wa)])
+                                } else {
+                                    Selection::set(&[(na.as_str(), wa), (nb.as_str(), wb)])
+                                }
+                            }
+                        };
+                        router.apply(&mut store, &sel).unwrap();
+                        if !router
+                            .weights()
+                            .bit_equal(&reference_weights(&base, &zoo, &sel))
+                        {
+                            return false;
+                        }
+                    }
+                    router.revert_all(&mut store);
+                    if !router.weights().bit_equal(&base) {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+}

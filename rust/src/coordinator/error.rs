@@ -1,0 +1,192 @@
+//! Structured serving errors: the one failure taxonomy of the public
+//! coordinator API.
+//!
+//! Every fallible coordinator call ([`Server`](super::server::Server),
+//! [`Router`](super::engine::Router),
+//! [`AdapterStore`](super::store::AdapterStore), the
+//! [`AdapterEngine`](super::engine::AdapterEngine) trait) returns
+//! [`ServeError`] so callers can *branch on the variant* — retry on a
+//! transient [`ServeError::Runtime`], surface an
+//! [`ServeError::UnknownAdapter`] as HTTP 404, reject an
+//! [`ServeError::InvalidSelection`] as 400 — instead of string-matching
+//! an opaque `anyhow` chain, which is what the coordinator exposed
+//! before this redesign.
+
+use crate::adapter::io::IoError;
+use super::fusion::FusionError;
+
+/// Why a serving operation failed.  See the module docs for the intent;
+/// DESIGN.md §12.4 maps variants to the requests that produce them.
+#[derive(Debug)]
+pub enum ServeError {
+    /// A selection named an adapter the store has never seen.
+    UnknownAdapter(String),
+    /// The manifest has no model under this name.
+    UnknownModel(String),
+    /// A fused-set member (or fusion-roster candidate) is not a SHiRA
+    /// adapter — only sparse adapters compose in fused mode.
+    NotShira(String),
+    /// Two shapes that must agree (an adapter delta and the resident
+    /// tensor, or two set members' deltas) do not.
+    ShapeMismatch {
+        /// Target tensor name.
+        target: String,
+        /// (rows, cols) the reference side carries.
+        expect: (usize, usize),
+        /// (rows, cols) the mismatching side carries.
+        got: (usize, usize),
+    },
+    /// A selection spec failed to parse, or a hand-built [`Selection`]
+    /// violated its invariants (metacharacters, non-finite weights,
+    /// empty sets).
+    ///
+    /// [`Selection`]: super::selection::Selection
+    InvalidSelection {
+        /// The offending spec (canonical form for hand-built selections).
+        spec: String,
+        /// What was wrong with it.
+        reason: String,
+    },
+    /// The same adapter appears more than once in a set or roster.
+    DuplicateMember(String),
+    /// Flash bytes failed to decode (corruption, bad magic, checksum).
+    Io(IoError),
+    /// A fusion-engine failure not covered by a more specific variant
+    /// (mismatched target sets, inactive engine, oversized roster).
+    Fusion(FusionError),
+    /// The PJRT runtime failed (artifact missing, compile or execute
+    /// error).  Stringly: runtime errors originate outside the
+    /// coordinator and carry no stable structure.
+    Runtime(String),
+}
+
+impl ServeError {
+    /// Wrap a runtime-layer error (anything `Display`) as
+    /// [`ServeError::Runtime`].
+    pub fn runtime(e: impl std::fmt::Display) -> ServeError {
+        ServeError::Runtime(e.to_string())
+    }
+
+    /// Short stable label of the variant (for logs and counters).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::UnknownAdapter(_) => "unknown-adapter",
+            ServeError::UnknownModel(_) => "unknown-model",
+            ServeError::NotShira(_) => "not-shira",
+            ServeError::ShapeMismatch { .. } => "shape-mismatch",
+            ServeError::InvalidSelection { .. } => "invalid-selection",
+            ServeError::DuplicateMember(_) => "duplicate-member",
+            ServeError::Io(_) => "io",
+            ServeError::Fusion(_) => "fusion",
+            ServeError::Runtime(_) => "runtime",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownAdapter(n) => write!(f, "unknown adapter {n:?}"),
+            ServeError::UnknownModel(n) => write!(f, "unknown model {n:?}"),
+            ServeError::NotShira(n) => {
+                write!(f, "adapter {n:?} is not a SHiRA adapter (fused sets are SHiRA-only)")
+            }
+            ServeError::ShapeMismatch { target, expect, got } => write!(
+                f,
+                "target {target:?}: adapter shape {got:?} does not match resident {expect:?}"
+            ),
+            ServeError::InvalidSelection { spec, reason } => {
+                write!(f, "invalid selection {spec:?}: {reason}")
+            }
+            ServeError::DuplicateMember(n) => {
+                write!(f, "adapter {n:?} appears more than once")
+            }
+            ServeError::Io(e) => write!(f, "{e}"),
+            ServeError::Fusion(e) => write!(f, "{e}"),
+            ServeError::Runtime(m) => write!(f, "runtime: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::Io(e) => Some(e),
+            ServeError::Fusion(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<IoError> for ServeError {
+    fn from(e: IoError) -> Self {
+        ServeError::Io(e)
+    }
+}
+
+impl From<FusionError> for ServeError {
+    /// Fusion failures with a direct serving meaning map onto the
+    /// matching [`ServeError`] variant; the rest ride along as
+    /// [`ServeError::Fusion`].
+    fn from(e: FusionError) -> Self {
+        match e {
+            FusionError::ShapeMismatch { target, expect, got } => {
+                ServeError::ShapeMismatch { target, expect, got }
+            }
+            FusionError::DuplicateMember(n) => ServeError::DuplicateMember(n),
+            FusionError::UnknownMember(n) => ServeError::UnknownAdapter(n),
+            other => ServeError::Fusion(other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_specific() {
+        let e = ServeError::UnknownAdapter("ghost".into());
+        assert!(e.to_string().contains("ghost"));
+        assert_eq!(e.kind(), "unknown-adapter");
+        let e = ServeError::ShapeMismatch {
+            target: "wq".into(),
+            expect: (4, 4),
+            got: (2, 2),
+        };
+        assert!(e.to_string().contains("wq"));
+        assert_eq!(e.kind(), "shape-mismatch");
+    }
+
+    #[test]
+    fn fusion_errors_map_to_matching_variants() {
+        assert!(matches!(
+            ServeError::from(FusionError::UnknownMember("x".into())),
+            ServeError::UnknownAdapter(n) if n == "x"
+        ));
+        assert!(matches!(
+            ServeError::from(FusionError::DuplicateMember("x".into())),
+            ServeError::DuplicateMember(_)
+        ));
+        assert!(matches!(
+            ServeError::from(FusionError::ShapeMismatch {
+                target: "w".into(),
+                expect: (1, 1),
+                got: (2, 2)
+            }),
+            ServeError::ShapeMismatch { .. }
+        ));
+        assert!(matches!(
+            ServeError::from(FusionError::NotActive),
+            ServeError::Fusion(FusionError::NotActive)
+        ));
+    }
+
+    #[test]
+    fn io_errors_wrap_with_source() {
+        use std::error::Error;
+        let e = ServeError::from(IoError::Format("bad magic".into()));
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("bad magic"));
+    }
+}

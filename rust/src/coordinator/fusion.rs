@@ -44,8 +44,6 @@ pub enum FusionError {
     NotActive,
     /// The weight store is missing a tensor the plan targets.
     MissingTarget(String),
-    /// A fused-set request spec could not be parsed.
-    BadSpec(String),
 }
 
 impl std::fmt::Display for FusionError {
@@ -79,7 +77,6 @@ impl std::fmt::Display for FusionError {
             FusionError::MissingTarget(t) => {
                 write!(f, "weight store has no tensor {t:?}")
             }
-            FusionError::BadSpec(s) => write!(f, "bad fused-set spec {s:?}"),
         }
     }
 }

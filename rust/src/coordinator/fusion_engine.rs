@@ -980,73 +980,6 @@ fn union_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
     out
 }
 
-/// A parsed fused-set request: adapter names with per-adapter strengths,
-/// kept sorted by name so equal sets share one canonical identity (the
-/// batcher's affinity key in fused-serving mode).
-///
-/// Spec grammar: `name[@weight]` joined by `+`; weight defaults to 1.
-/// `"b+a@0.5"` and `"a@0.5+b"` canonicalize to the same [`SetSpec::id`].
-///
-/// # Examples
-///
-/// ```
-/// use shira::coordinator::fusion_engine::SetSpec;
-///
-/// let s = SetSpec::parse("b+a@0.5").unwrap();
-/// assert_eq!(s.members[0], ("a".to_string(), 0.5));
-/// assert_eq!(s.id(), "a@0.5+b@1");
-/// assert_eq!(s.id(), SetSpec::parse("a@0.5+b@1").unwrap().id());
-/// ```
-#[derive(Clone, Debug, PartialEq)]
-pub struct SetSpec {
-    /// (adapter name, strength), sorted by name, no duplicates.
-    pub members: Vec<(String, f32)>,
-}
-
-impl SetSpec {
-    /// Parse a spec string (see type docs for the grammar).
-    pub fn parse(spec: &str) -> Result<SetSpec, FusionError> {
-        let mut members = Vec::new();
-        for part in spec.split('+') {
-            let part = part.trim();
-            if part.is_empty() {
-                return Err(FusionError::BadSpec(spec.to_string()));
-            }
-            let (name, weight) = match part.split_once('@') {
-                Some((n, w)) => {
-                    let n = n.trim();
-                    let w: f32 = w
-                        .trim()
-                        .parse()
-                        .map_err(|_| FusionError::BadSpec(spec.to_string()))?;
-                    if n.is_empty() || !w.is_finite() {
-                        return Err(FusionError::BadSpec(spec.to_string()));
-                    }
-                    (n.to_string(), w)
-                }
-                None => (part.to_string(), 1.0),
-            };
-            members.push((name, weight));
-        }
-        members.sort_by(|a, b| a.0.cmp(&b.0));
-        if let Some(w) = members.windows(2).find(|w| w[0].0 == w[1].0) {
-            return Err(FusionError::DuplicateMember(w[0].0.clone()));
-        }
-        Ok(SetSpec { members })
-    }
-
-    /// Canonical identity string: `name@weight` joined by `+`, sorted by
-    /// name.  Equal sets — regardless of input order — share one id, so
-    /// the affinity batcher keys fused batches by set identity.
-    pub fn id(&self) -> String {
-        self.members
-            .iter()
-            .map(|(n, w)| format!("{n}@{w}"))
-            .collect::<Vec<_>>()
-            .join("+")
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1424,23 +1357,5 @@ mod tests {
                 w.bit_equal(&base)
             },
         );
-    }
-
-    #[test]
-    fn set_spec_parses_and_canonicalizes() {
-        let s = SetSpec::parse("b + a@0.5").unwrap();
-        assert_eq!(
-            s.members,
-            vec![("a".to_string(), 0.5), ("b".to_string(), 1.0)]
-        );
-        assert_eq!(s.id(), "a@0.5+b@1");
-        assert_eq!(SetSpec::parse("a@0.5+b").unwrap().id(), s.id());
-        assert!(SetSpec::parse("").is_err());
-        assert!(SetSpec::parse("a++b").is_err());
-        assert!(SetSpec::parse("a@x").is_err());
-        assert!(matches!(
-            SetSpec::parse("a+a@2"),
-            Err(FusionError::DuplicateMember(_))
-        ));
     }
 }

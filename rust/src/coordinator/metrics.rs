@@ -1,7 +1,10 @@
-//! Serving metrics: stage timers, switch counters, latency distributions,
-//! and the adapter-store lifecycle counters (cache, prefetch, residency).
+//! Serving metrics: stage timers, switch counters, per-kind selection
+//! counters, latency distributions, and the adapter-store lifecycle
+//! counters (cache, prefetch, residency).
 
+use super::selection::SelectionKind;
 use super::store::StoreStats;
+use super::switch::SwitchPath;
 use crate::util::alloc::fmt_bytes;
 use crate::util::stats::{LatencyHist, Moments, Sample};
 
@@ -16,7 +19,7 @@ pub struct ServeMetrics {
     pub request_latency: LatencyHist,
     /// Batch occupancy (requests per executed batch, before padding).
     pub batch_fill: Moments,
-    /// Adapter (or adapter-set) switches performed.
+    /// Selection switches performed (resident state changed).
     pub switches: u64,
     /// Switches that took the one-pass direct transition path (a resident
     /// pairwise plan walked the A∪B union once, one dispatch wave).
@@ -24,6 +27,9 @@ pub struct ServeMetrics {
     /// Switches that fell back to revert+apply (no previous adapter, cold
     /// pair, or plan mismatch).
     pub fallbacks: u64,
+    /// Switches served by the incremental fused-mode engine (set
+    /// transitions and roster-member singles; always one wave).
+    pub fused_switches: u64,
     /// Store-built shard-plan sets the engine ignored as mismatched
     /// (set at end of run via [`Self::set_plan_mismatches`]).
     pub plan_mismatches: u64,
@@ -31,6 +37,12 @@ pub struct ServeMetrics {
     pub batches: u64,
     /// Requests completed.
     pub requests: u64,
+    /// Requests that selected the base model.
+    pub base_requests: u64,
+    /// Requests that selected a single adapter.
+    pub single_requests: u64,
+    /// Requests that selected a fused adapter set.
+    pub set_requests: u64,
     /// Adapter-store lifecycle counters (set once at end of run via
     /// [`Self::set_store`]).
     pub store: StoreStats,
@@ -52,13 +64,22 @@ impl ServeMetrics {
         self.plan_mismatches = n;
     }
 
-    /// Record which path one SHiRA adapter switch took (direct transition
-    /// vs revert+apply fallback).
-    pub fn record_switch_path(&mut self, transition: bool) {
-        if transition {
-            self.transitions += 1;
-        } else {
-            self.fallbacks += 1;
+    /// Record which path one selection switch took (direct transition,
+    /// revert+apply fallback, or the fused-mode engine).
+    pub fn record_switch_path(&mut self, path: SwitchPath) {
+        match path {
+            SwitchPath::Transition => self.transitions += 1,
+            SwitchPath::Fallback => self.fallbacks += 1,
+            SwitchPath::Fused => self.fused_switches += 1,
+        }
+    }
+
+    /// Count one incoming request by its selection kind.
+    pub fn record_selection(&mut self, kind: SelectionKind) {
+        match kind {
+            SelectionKind::Base => self.base_requests += 1,
+            SelectionKind::Single => self.single_requests += 1,
+            SelectionKind::Set => self.set_requests += 1,
         }
     }
 
@@ -89,8 +110,9 @@ impl ServeMetrics {
         let thr = self.requests as f64 / wall_secs.max(1e-9);
         format!(
             "requests={} batches={} switches={} fill={:.2}\n\
+             selections: base={} single={} set={}\n\
              switch: mean={:.1}us p50={:.1}us | exec: mean={:.1}us\n\
-             paths: transition={} fallback={} plan_mismatch={}\n\
+             paths: transition={} fallback={} fused={} plan_mismatch={}\n\
              request latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
              store: hits={} misses={} evictions={} prefetch_hits={} \
              oversized={} resident={} ({} entries)\n\
@@ -101,6 +123,9 @@ impl ServeMetrics {
             self.batches,
             self.switches,
             self.batch_fill.mean(),
+            self.base_requests,
+            self.single_requests,
+            self.set_requests,
             self.switch_us.mean(),
             if self.switch_us.is_empty() {
                 0.0
@@ -110,6 +135,7 @@ impl ServeMetrics {
             self.exec_us.mean(),
             self.transitions,
             self.fallbacks,
+            self.fused_switches,
             self.plan_mismatches,
             self.request_latency.mean_us(),
             self.request_latency.percentile_us(50.0),
@@ -193,14 +219,35 @@ mod tests {
     fn switch_paths_surface_in_summary() {
         let mut m = ServeMetrics::new();
         m.record_batch(4, true, 50.0, 500.0);
-        m.record_switch_path(true);
+        m.record_switch_path(SwitchPath::Transition);
         m.record_batch(4, true, 30.0, 500.0);
-        m.record_switch_path(false);
+        m.record_switch_path(SwitchPath::Fallback);
         m.record_batch(4, true, 40.0, 500.0);
-        m.record_switch_path(true);
+        m.record_switch_path(SwitchPath::Transition);
+        m.record_batch(4, true, 20.0, 500.0);
+        m.record_switch_path(SwitchPath::Fused);
         m.set_plan_mismatches(5);
-        assert_eq!((m.transitions, m.fallbacks), (2, 1));
+        assert_eq!((m.transitions, m.fallbacks, m.fused_switches), (2, 1, 1));
         let s = m.summary(1.0);
-        assert!(s.contains("paths: transition=2 fallback=1 plan_mismatch=5"), "{s}");
+        assert!(
+            s.contains("paths: transition=2 fallback=1 fused=1 plan_mismatch=5"),
+            "{s}"
+        );
+    }
+
+    #[test]
+    fn selection_kinds_surface_in_summary() {
+        let mut m = ServeMetrics::new();
+        m.record_selection(SelectionKind::Base);
+        m.record_selection(SelectionKind::Single);
+        m.record_selection(SelectionKind::Single);
+        m.record_selection(SelectionKind::Set);
+        assert_eq!(
+            (m.base_requests, m.single_requests, m.set_requests),
+            (1, 2, 1)
+        );
+        m.record_batch(4, false, 0.0, 100.0);
+        let s = m.summary(1.0);
+        assert!(s.contains("selections: base=1 single=2 set=1"), "{s}");
     }
 }

@@ -1,14 +1,25 @@
 //! L3 coordinator — the paper's systems contribution: rapid adapter
-//! switching (S13), multi-adapter fusion (S14) with an incremental
-//! fused-mode engine, request routing + dynamic batching (S15), the
-//! adapter lifecycle store (S16: caching, shard-aligned decode, prefetch)
-//! and metrics (S17).
+//! switching (§13), multi-adapter fusion (§14) with an incremental
+//! fused-mode engine, unified per-request `Selection` routing over
+//! trait-based engines (§12), request batching (§15), the adapter
+//! lifecycle store (§16: caching, shard-aligned decode, prefetch) and
+//! metrics (§17).
+//!
+//! Public surface map:
+//! * [`selection`] — the one request surface (`Base | Single | Set`);
+//! * [`error`] — the structured [`error::ServeError`] taxonomy;
+//! * [`engine`] — the [`engine::AdapterEngine`] trait and the
+//!   per-request [`engine::Router`];
+//! * [`server`] — [`server::ServerBuilder`] / [`server::Server`].
 
 pub mod batcher;
 pub mod cache;
+pub mod engine;
+pub mod error;
 pub mod fusion;
 pub mod fusion_engine;
 pub mod metrics;
+pub mod selection;
 pub mod server;
 pub mod store;
 pub mod switch;

@@ -1,0 +1,459 @@
+//! The unified request surface: every [`Request`](crate::data::trace::Request)
+//! carries a [`Selection`] saying what should be resident on the weights
+//! when its batch executes — the base model, one adapter at a strength, or
+//! a weighted adapter *set*.
+//!
+//! This is the API form of the paper's core claim: SHiRA makes
+//! single-adapter switching and multi-adapter fusion the *same* cheap
+//! fused-mode operation, so a serving request should be able to name
+//! either without the server forking into per-policy code paths at
+//! construction time.  A single adapter is just a one-member set; related
+//! sparse-expert work (Arnob et al.) treats every deployment that way.
+//!
+//! ## Spec grammar
+//!
+//! [`Selection::parse`] subsumes the old `SetSpec` grammar:
+//!
+//! ```text
+//! ""                  -> Base
+//! "name"              -> Single { name, alpha: 1.0 }
+//! "name@0.5"          -> Single { name, alpha: 0.5 }
+//! "a@0.5+b"           -> Set { [("a", 0.5), ("b", 1.0)] }   (sorted by name)
+//! "a@0.5+"            -> Set { [("a", 0.5)] }               (one-member set)
+//! ```
+//!
+//! `+` is the *set marker*: any spec containing one is a `Set`, and a
+//! trailing `+` spells a one-member set — distinct from the `Single` of
+//! the same name and strength, because the two route through different
+//! engines (scatter vs fused mode) even though the bytes agree.  `+`
+//! and `@` are metacharacters: adapter names containing them are
+//! rejected (such an adapter could never be addressed by a spec), the
+//! guard the fused-mode roster has enforced since PR 2.
+//!
+//! ## Canonical identity
+//!
+//! [`Selection::key`] (also the `Display` form) is a canonical string:
+//! set members sort by name and equal sets share one key regardless of
+//! input order, so the batcher's affinity policy — and the store's
+//! prefetch lookahead — key on *selection identity* instead of raw
+//! request strings.  `"b+a@0.5"` and `"a@0.5+b@1"` batch together.
+
+use super::error::ServeError;
+
+/// What one request wants resident on the weights: the base model, a
+/// single adapter at a strength, or a weighted adapter set.
+///
+/// # Examples
+///
+/// ```
+/// use shira::coordinator::selection::Selection;
+///
+/// assert_eq!(Selection::parse("").unwrap(), Selection::Base);
+/// let s = Selection::parse("style@0.5").unwrap();
+/// assert_eq!(s, Selection::Single { name: "style".into(), alpha: 0.5 });
+/// let set = Selection::parse("b+a@0.5").unwrap();
+/// assert_eq!(set.key(), "a@0.5+b@1"); // canonical: sorted, equal sets share a key
+/// assert_eq!(set.key(), Selection::parse("a@0.5+b@1").unwrap().key());
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub enum Selection {
+    /// Serve the unmodified base weights.
+    Base,
+    /// Serve one adapter applied at strength `alpha` (SHiRA scatter or
+    /// LoRA fuse, by the adapter's family; `alpha` is ignored for LoRA,
+    /// whose strength is baked into its own scale).
+    Single {
+        /// Adapter name in the store.
+        name: String,
+        /// Application strength (SHiRA: the Fig. 6 α knob; default 1.0).
+        alpha: f32,
+    },
+    /// Serve a weighted adapter set through the incremental fused-mode
+    /// engine.  All members must be SHiRA adapters.
+    Set {
+        /// (adapter name, weight) members.  Canonical form is sorted by
+        /// name with no duplicates; [`Selection::set`] and
+        /// [`Selection::parse`] produce that form.
+        members: Vec<(String, f32)>,
+    },
+}
+
+/// Which arm of [`Selection`] a value is — the per-request routing label
+/// surfaced in serve reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectionKind {
+    /// [`Selection::Base`].
+    Base,
+    /// [`Selection::Single`].
+    Single,
+    /// [`Selection::Set`].
+    Set,
+}
+
+impl SelectionKind {
+    /// Stable report name of the kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectionKind::Base => "base",
+            SelectionKind::Single => "single",
+            SelectionKind::Set => "set",
+        }
+    }
+}
+
+fn bad(spec: &str, reason: impl Into<String>) -> ServeError {
+    ServeError::InvalidSelection {
+        spec: spec.to_string(),
+        reason: reason.into(),
+    }
+}
+
+fn parse_member(spec: &str, part: &str) -> Result<(String, f32), ServeError> {
+    let part = part.trim();
+    if part.is_empty() {
+        return Err(bad(spec, "empty member"));
+    }
+    match part.split_once('@') {
+        Some((n, w)) => {
+            let n = n.trim();
+            let w: f32 = w
+                .trim()
+                .parse()
+                .map_err(|_| bad(spec, format!("bad weight in {part:?}")))?;
+            if n.is_empty() {
+                return Err(bad(spec, "empty adapter name"));
+            }
+            if !w.is_finite() {
+                return Err(bad(spec, format!("non-finite weight in {part:?}")));
+            }
+            if n.contains('@') {
+                return Err(bad(spec, format!("'@' in adapter name {n:?}")));
+            }
+            Ok((n.to_string(), w))
+        }
+        None => Ok((part.to_string(), 1.0)),
+    }
+}
+
+impl Selection {
+    /// Parse a selection spec (see the module docs for the grammar).
+    /// Empty / whitespace-only specs are [`Selection::Base`]; a spec with
+    /// no `+` is a [`Selection::Single`]; anything else is a canonicalized
+    /// [`Selection::Set`] — a trailing `+` spells a one-member set.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use shira::coordinator::selection::Selection;
+    ///
+    /// assert!(Selection::parse("a++b").is_err());   // empty member
+    /// assert!(Selection::parse("a@x").is_err());    // bad weight
+    /// assert!(Selection::parse("a+a@2").is_err());  // duplicate member
+    /// assert_eq!(
+    ///     Selection::parse(" a @ 0.5 ").unwrap(),
+    ///     Selection::Single { name: "a".into(), alpha: 0.5 },
+    /// );
+    /// assert_eq!(
+    ///     Selection::parse("a@0.5+").unwrap(),      // one-member set
+    ///     Selection::set(&[("a", 0.5)]),
+    /// );
+    /// ```
+    pub fn parse(spec: &str) -> Result<Selection, ServeError> {
+        let trimmed = spec.trim();
+        if trimmed.is_empty() {
+            return Ok(Selection::Base);
+        }
+        if !trimmed.contains('+') {
+            let (name, alpha) = parse_member(spec, trimmed)?;
+            return Ok(Selection::Single { name, alpha });
+        }
+        let mut parts: Vec<&str> = trimmed.split('+').collect();
+        // A trailing '+' is the explicit set marker ("a@0.5+" is a
+        // one-member set); any other empty member is malformed.
+        if parts.len() >= 2 && parts.last().map(|p| p.trim().is_empty()) == Some(true) {
+            parts.pop();
+        }
+        let mut members = Vec::new();
+        for part in parts {
+            members.push(parse_member(spec, part)?);
+        }
+        members.sort_by(|a, b| a.0.cmp(&b.0));
+        if let Some(w) = members.windows(2).find(|w| w[0].0 == w[1].0) {
+            return Err(ServeError::DuplicateMember(w[0].0.clone()));
+        }
+        Ok(Selection::Set { members })
+    }
+
+    /// A single-adapter selection at strength 1.0.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use shira::coordinator::selection::Selection;
+    /// assert_eq!(Selection::single("a").key(), "a");
+    /// ```
+    pub fn single(name: &str) -> Selection {
+        Selection::Single {
+            name: name.to_string(),
+            alpha: 1.0,
+        }
+    }
+
+    /// A single-adapter selection at an explicit strength.
+    pub fn single_at(name: &str, alpha: f32) -> Selection {
+        Selection::Single {
+            name: name.to_string(),
+            alpha,
+        }
+    }
+
+    /// A set selection over `(name, weight)` members, canonicalized
+    /// (sorted by name).  Duplicates are caught by [`Self::validate`] /
+    /// the server, not here.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use shira::coordinator::selection::Selection;
+    /// let s = Selection::set(&[("b", 1.0), ("a", 0.5)]);
+    /// assert_eq!(s.key(), "a@0.5+b@1");
+    /// ```
+    pub fn set(members: &[(&str, f32)]) -> Selection {
+        let mut members: Vec<(String, f32)> = members
+            .iter()
+            .map(|(n, w)| (n.to_string(), *w))
+            .collect();
+        members.sort_by(|a, b| a.0.cmp(&b.0));
+        Selection::Set { members }
+    }
+
+    /// Strength-1 [`Selection::single`]s for a list of adapter names —
+    /// the common shape trace generators and tests want.
+    pub fn singles(names: &[String]) -> Vec<Selection> {
+        names.iter().map(|n| Selection::single(n)).collect()
+    }
+
+    /// Which arm this selection is.
+    pub fn kind(&self) -> SelectionKind {
+        match self {
+            Selection::Base => SelectionKind::Base,
+            Selection::Single { .. } => SelectionKind::Single,
+            Selection::Set { .. } => SelectionKind::Set,
+        }
+    }
+
+    /// Every adapter name this selection references (empty for `Base`).
+    pub fn names(&self) -> Vec<&str> {
+        match self {
+            Selection::Base => Vec::new(),
+            Selection::Single { name, .. } => vec![name.as_str()],
+            Selection::Set { members } => members.iter().map(|(n, _)| n.as_str()).collect(),
+        }
+    }
+
+    /// Canonical identity string (the `Display` form): `""` for base,
+    /// `name[@alpha]` for singles (the `@alpha` suffix only when
+    /// `alpha != 1`), and sorted `name@weight` members joined by `+` for
+    /// sets — one-member sets carry a trailing `+` so they can never
+    /// collide with the `Single` of the same name and strength (the two
+    /// route through different engines).  Equal sets share one key
+    /// regardless of member order — the affinity batcher and prefetch
+    /// lookahead key on this.
+    pub fn key(&self) -> String {
+        match self {
+            Selection::Base => String::new(),
+            Selection::Single { name, alpha } => {
+                if *alpha == 1.0 {
+                    name.clone()
+                } else {
+                    format!("{name}@{alpha}")
+                }
+            }
+            Selection::Set { members } => {
+                let mut sorted: Vec<&(String, f32)> = members.iter().collect();
+                sorted.sort_by(|a, b| a.0.cmp(&b.0));
+                let joined = sorted
+                    .iter()
+                    .map(|(n, w)| format!("{n}@{w}"))
+                    .collect::<Vec<_>>()
+                    .join("+");
+                if sorted.len() == 1 {
+                    format!("{joined}+")
+                } else {
+                    joined
+                }
+            }
+        }
+    }
+
+    /// Check a (possibly hand-constructed) selection for the invariants
+    /// `parse` guarantees: non-empty metacharacter-free names, finite
+    /// weights, non-empty sets with no duplicate members.  The server
+    /// validates every request selection on entry.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use shira::coordinator::selection::Selection;
+    /// assert!(Selection::single("a").validate().is_ok());
+    /// assert!(Selection::single("a+b").validate().is_err()); // metacharacter
+    /// assert!(Selection::Set { members: vec![] }.validate().is_err());
+    /// ```
+    pub fn validate(&self) -> Result<(), ServeError> {
+        let spec = self.key();
+        let check_name = |name: &str| -> Result<(), ServeError> {
+            if name.is_empty() {
+                return Err(bad(&spec, "empty adapter name"));
+            }
+            if name.contains('+') || name.contains('@') {
+                return Err(bad(
+                    &spec,
+                    format!("adapter name {name:?} contains a spec metacharacter ('+' or '@')"),
+                ));
+            }
+            Ok(())
+        };
+        match self {
+            Selection::Base => Ok(()),
+            Selection::Single { name, alpha } => {
+                check_name(name)?;
+                if !alpha.is_finite() {
+                    return Err(bad(&spec, "non-finite strength"));
+                }
+                Ok(())
+            }
+            Selection::Set { members } => {
+                if members.is_empty() {
+                    return Err(bad(&spec, "empty adapter set"));
+                }
+                for (i, (name, w)) in members.iter().enumerate() {
+                    check_name(name)?;
+                    if !w.is_finite() {
+                        return Err(bad(&spec, format!("non-finite weight for {name:?}")));
+                    }
+                    if members[..i].iter().any(|(o, _)| o == name) {
+                        return Err(ServeError::DuplicateMember(name.clone()));
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Selection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.key())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_base_single_set() {
+        assert_eq!(Selection::parse("").unwrap(), Selection::Base);
+        assert_eq!(Selection::parse("   ").unwrap(), Selection::Base);
+        assert_eq!(
+            Selection::parse("a").unwrap(),
+            Selection::Single { name: "a".into(), alpha: 1.0 }
+        );
+        assert_eq!(
+            Selection::parse("a@0.5").unwrap(),
+            Selection::Single { name: "a".into(), alpha: 0.5 }
+        );
+        assert_eq!(
+            Selection::parse("b + a@0.5").unwrap(),
+            Selection::Set {
+                members: vec![("a".into(), 0.5), ("b".into(), 1.0)]
+            }
+        );
+        // Trailing '+' is the explicit one-member-set spelling.
+        assert_eq!(
+            Selection::parse("a+").unwrap(),
+            Selection::Set {
+                members: vec![("a".into(), 1.0)]
+            }
+        );
+        assert_eq!(
+            Selection::parse("a@0.5+").unwrap(),
+            Selection::set(&[("a", 0.5)])
+        );
+    }
+
+    #[test]
+    fn keys_are_canonical_and_roundtrip() {
+        let set = Selection::parse("b+a@0.5").unwrap();
+        assert_eq!(set.key(), "a@0.5+b@1");
+        assert_eq!(Selection::parse(&set.key()).unwrap().key(), set.key());
+        let single = Selection::parse("x@2").unwrap();
+        assert_eq!(single.key(), "x@2");
+        assert_eq!(Selection::parse(&single.key()).unwrap(), single);
+        assert_eq!(Selection::single("x").key(), "x");
+        assert_eq!(Selection::Base.key(), "");
+        // Display mirrors key()
+        assert_eq!(format!("{set}"), set.key());
+        // Singles and one-member sets route differently (scatter vs the
+        // fused engine), so their keys must differ at EVERY strength —
+        // the one-member set carries the trailing set marker.
+        assert_eq!(Selection::set(&[("x", 1.0)]).key(), "x@1+");
+        assert_eq!(Selection::set(&[("x", 0.5)]).key(), "x@0.5+");
+        assert_ne!(Selection::set(&[("x", 1.0)]).key(), Selection::single("x").key());
+        assert_ne!(
+            Selection::set(&[("x", 0.5)]).key(),
+            Selection::single_at("x", 0.5).key()
+        );
+        // One-member-set keys roundtrip through parse.
+        let one = Selection::set(&[("x", 0.5)]);
+        assert_eq!(Selection::parse(&one.key()).unwrap(), one);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for spec in ["a++b", "+", "@1", "a@", "a@x", "a@inf", "a@@2+b", "a+ +b"] {
+            assert!(
+                matches!(
+                    Selection::parse(spec),
+                    Err(ServeError::InvalidSelection { .. })
+                ),
+                "{spec:?} should be InvalidSelection"
+            );
+        }
+        assert!(matches!(
+            Selection::parse("a+a@2"),
+            Err(ServeError::DuplicateMember(n)) if n == "a"
+        ));
+    }
+
+    #[test]
+    fn validate_guards_hand_built_selections() {
+        assert!(Selection::Base.validate().is_ok());
+        assert!(Selection::single_at("a", 0.5).validate().is_ok());
+        assert!(Selection::set(&[("a", 1.0), ("b", 2.0)]).validate().is_ok());
+        assert!(Selection::single("a+b").validate().is_err());
+        assert!(Selection::single("a@b").validate().is_err());
+        assert!(Selection::single_at("a", f32::NAN).validate().is_err());
+        assert!(Selection::Set { members: vec![] }.validate().is_err());
+        assert!(matches!(
+            Selection::Set {
+                members: vec![("a".into(), 1.0), ("a".into(), 2.0)]
+            }
+            .validate(),
+            Err(ServeError::DuplicateMember(_))
+        ));
+    }
+
+    #[test]
+    fn names_and_kinds() {
+        assert!(Selection::Base.names().is_empty());
+        assert_eq!(Selection::single("a").names(), vec!["a"]);
+        assert_eq!(
+            Selection::set(&[("b", 1.0), ("a", 0.5)]).names(),
+            vec!["a", "b"]
+        );
+        assert_eq!(Selection::Base.kind().name(), "base");
+        assert_eq!(Selection::single("a").kind().name(), "single");
+        assert_eq!(Selection::set(&[("a", 1.0)]).kind().name(), "set");
+    }
+}

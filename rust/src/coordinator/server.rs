@@ -1,52 +1,65 @@
-//! The serving loop: router → affinity batcher → switch engine → PJRT
-//! executor, with byte-budgeted adapter caching and full metrics.
+//! The serving loop: selection router → affinity batcher → engines →
+//! PJRT executor, with byte-budgeted adapter caching and full metrics.
 //!
 //! This is the deployment the paper argues for (Appendix A): one resident
 //! copy of the base weights, many adapters on "flash" (the encoded-bytes
-//! store), rapid in-place switching on the request path.
+//! store), rapid in-place switching on the request path.  Every
+//! [`Request`] carries a [`Selection`] — base weights, one adapter, or a
+//! weighted adapter set — and one [`Server::run_trace`] routes all three
+//! uniformly per-request through the [`Router`]: there is no
+//! construction-time policy fork and no `enable_fusion` side channel
+//! (fusion rosters grow lazily as set selections arrive).
 //!
-//! Under [`Policy::ShiraFusion`] requests name adapter *sets* (a
-//! [`SetSpec`] string such as `"style@0.5+task"`); set specs are
-//! canonicalized so the batcher's affinity policy extends to set identity,
-//! and transitions between sets run through the incremental
-//! [`FusionEngine`] — touching only the adapters that changed.
+//! Servers are built with [`ServerBuilder`] (replacing the old
+//! `new`/`with_pool`/`with_store_config` constructor trio), and every
+//! fallible call returns the structured
+//! [`ServeError`](super::error::ServeError) so callers can branch on the
+//! failure instead of string-matching.  See `rust/README.md` for the
+//! old-API → new-API migration table.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
 use super::batcher::{BatcherConfig, DynamicBatcher};
-use super::fusion_engine::{FusionEngine, FusionPlan, SetSpec};
+use super::engine::Router;
+use super::fusion_engine::FusionEngine;
 use super::metrics::ServeMetrics;
-use super::switch::{Policy, SwitchEngine, SwitchPath};
+use crate::adapter::io::Format;
 use crate::adapter::LoraAdapter;
 use crate::data::trace::Request;
 use crate::model::weights::WeightStore;
 use crate::runtime::manifest::LoraSeg;
-use crate::runtime::{HostValue, Runtime};
+use crate::runtime::{Executable, HostValue, Runtime};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
+pub use super::error::ServeError;
+pub use super::selection::{Selection, SelectionKind};
 pub use super::store::{AdapterStore, AnyAdapter, StoreConfig, StoreStats};
 
 /// End-of-run report.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
-    /// The policy the trace was served under.
-    pub policy: Policy,
     /// Wall-clock seconds for the whole trace.
     pub wall_secs: f64,
     /// Requests completed.
     pub requests: u64,
+    /// Requests that selected the base model.
+    pub base_requests: u64,
+    /// Requests that selected a single adapter.
+    pub single_requests: u64,
+    /// Requests that selected a fused adapter set.
+    pub set_requests: u64,
     /// Batches executed.
     pub batches: u64,
-    /// Adapter (or adapter-set) switches performed.
+    /// Selection switches performed (resident state changed).
     pub switches: u64,
     /// Switches that took the one-pass direct transition path.
     pub transitions: u64,
     /// Switches that fell back to revert+apply.
     pub fallbacks: u64,
+    /// Switches served by the incremental fused-mode engine.
+    pub fused_switches: u64,
     /// Store-built shard-plan sets the engine ignored as mismatched.
     pub plan_mismatches: u64,
     /// Requests per wall-clock second.
@@ -73,184 +86,178 @@ pub struct ServeReport {
     pub summary: String,
 }
 
-/// The serving coordinator: owns the switch engine (and, in fused mode,
-/// the incremental fusion engine), the adapter store and the batcher, and
-/// drives request traces to completion against a [`Runtime`].
+/// Builder for [`Server`]: model, store tunables, batcher tunables,
+/// thread pool, and the unfused-LoRA serving mode.
+///
+/// Defaults: model `"llama"`, [`StoreConfig::default`] (8 MiB decode
+/// cache, v2 flash format, prefetch depth 2, 4 MiB plan cache), a
+/// host-sized shared pool, batcher sized to the model's batch dim, LoRA
+/// singles dense-fused.
+///
+/// ```no_run
+/// # fn main() -> Result<(), shira::coordinator::error::ServeError> {
+/// use shira::coordinator::server::Server;
+/// use shira::model::weights::WeightStore;
+/// use shira::runtime::Runtime;
+///
+/// let rt = Runtime::with_default_artifacts()
+///     .map_err(shira::coordinator::error::ServeError::runtime)?;
+/// let meta = rt.manifest.model("llama").unwrap();
+/// let base = WeightStore::init(&meta.params, 7);
+/// let server = Server::builder(&rt, base)
+///     .model("llama")
+///     .cache_bytes(8 << 20)
+///     .prefetch_depth(2)
+///     .build()?;
+/// # let _ = server; Ok(()) }
+/// ```
+pub struct ServerBuilder<'rt> {
+    rt: &'rt Runtime,
+    base: WeightStore,
+    model: String,
+    store_cfg: StoreConfig,
+    batcher_cfg: Option<BatcherConfig>,
+    pool: Option<Arc<ThreadPool>>,
+    unfused_lora: bool,
+}
+
+impl<'rt> ServerBuilder<'rt> {
+    /// Builder over a runtime and the resident base weights.
+    pub fn new(rt: &'rt Runtime, base: WeightStore) -> Self {
+        ServerBuilder {
+            rt,
+            base,
+            model: "llama".to_string(),
+            store_cfg: StoreConfig::default(),
+            batcher_cfg: None,
+            pool: None,
+            unfused_lora: false,
+        }
+    }
+
+    /// Model name in the manifest (default `"llama"`).
+    pub fn model(mut self, model: &str) -> Self {
+        self.model = model.to_string();
+        self
+    }
+
+    /// Byte budget of the decoded-adapter cache.
+    pub fn cache_bytes(mut self, bytes: usize) -> Self {
+        self.store_cfg.cache_bytes = bytes;
+        self
+    }
+
+    /// On-flash encoding for adapters added to the store.
+    pub fn format(mut self, format: Format) -> Self {
+        self.store_cfg.format = format;
+        self
+    }
+
+    /// Background-prefetch lookahead depth (0 disables prefetch).
+    pub fn prefetch_depth(mut self, depth: usize) -> Self {
+        self.store_cfg.prefetch_depth = depth;
+        self
+    }
+
+    /// Byte budget of the pairwise transition-plan cache (0 disables
+    /// direct A→B transitions).
+    pub fn plan_cache_bytes(mut self, bytes: usize) -> Self {
+        self.store_cfg.plan_cache_bytes = bytes;
+        self
+    }
+
+    /// Replace the whole store configuration at once.
+    pub fn store_config(mut self, cfg: StoreConfig) -> Self {
+        self.store_cfg = cfg;
+        self
+    }
+
+    /// Batcher tunables (default: max batch = the model's batch dim,
+    /// aging bound 4 rounds).
+    pub fn batcher_config(mut self, cfg: BatcherConfig) -> Self {
+        self.batcher_cfg = Some(cfg);
+        self
+    }
+
+    /// Share an explicit thread pool between the engines (scatter and
+    /// fused-refresh dispatch) and the store (background prefetch
+    /// decode + plan builds).  Default: a host-sized pool.
+    pub fn pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Serve LoRA singles *unfused*: weights stay at base and the
+    /// adapter's branches ride the forward pass through the
+    /// `*_fwd_unfused_lora` artifact (the paper's LoRA-unfused
+    /// baseline).  SHiRA selections are unaffected.
+    pub fn unfused_lora(mut self, on: bool) -> Self {
+        self.unfused_lora = on;
+        self
+    }
+
+    /// Build the server.  Fails with [`ServeError::UnknownModel`] when
+    /// the manifest has no such model.
+    pub fn build(self) -> Result<Server<'rt>, ServeError> {
+        let meta = self
+            .rt
+            .manifest
+            .model(&self.model)
+            .map_err(|_| ServeError::UnknownModel(self.model.clone()))?;
+        let max_batch = meta.dim("batch");
+        let pool = self
+            .pool
+            .unwrap_or_else(|| Arc::new(ThreadPool::host_sized()));
+        let store = AdapterStore::with_config(self.store_cfg, Some(Arc::clone(&pool)));
+        let router = Router::new(self.base, Some(pool), self.unfused_lora);
+        let batcher = DynamicBatcher::new(self.batcher_cfg.unwrap_or(BatcherConfig {
+            max_batch,
+            max_wait_rounds: 4,
+        }));
+        Ok(Server {
+            rt: self.rt,
+            model: self.model,
+            router,
+            store,
+            batcher,
+        })
+    }
+}
+
+/// The serving coordinator: owns the [`Router`] (resident weights + both
+/// engines + pins), the adapter store and the batcher, and drives
+/// request traces to completion against a [`Runtime`].
 pub struct Server<'rt> {
     rt: &'rt Runtime,
-    /// The switch engine holding the resident base weights.
-    pub engine: SwitchEngine,
+    model: String,
+    /// Per-request routing state machine (weights, engines, residency).
+    pub router: Router,
     /// The adapter lifecycle store: flash bytes, decode cache, prefetch.
     pub store: AdapterStore,
     batcher: DynamicBatcher,
-    policy: Policy,
-    model: String,
-    alpha: f32,
-    fusion: Option<FusionEngine>,
-    /// Name pinned in the store for the currently-applied adapter.
-    pinned_active: Option<String>,
-    /// Names pinned in the store for the active fusion roster.
-    pinned_roster: Vec<String>,
 }
 
 impl<'rt> Server<'rt> {
-    /// Server with a host-sized switch-work pool and default store
-    /// settings at the given cache budget.
-    pub fn new(
-        rt: &'rt Runtime,
-        base: WeightStore,
-        policy: Policy,
-        model: &str,
-        cache_bytes: usize,
-    ) -> Result<Self> {
-        let pool = Arc::new(ThreadPool::host_sized());
-        Self::with_pool(rt, base, policy, model, cache_bytes, pool)
+    /// Start building a server over `rt` and the resident base weights.
+    pub fn builder(rt: &'rt Runtime, base: WeightStore) -> ServerBuilder<'rt> {
+        ServerBuilder::new(rt, base)
     }
 
-    /// Server with an explicit switch-work pool; the pool is shared with
-    /// the engine (scatter/restore overlap across target tensors) and the
-    /// store (background prefetch decode).
-    pub fn with_pool(
-        rt: &'rt Runtime,
-        base: WeightStore,
-        policy: Policy,
-        model: &str,
-        cache_bytes: usize,
-        pool: Arc<ThreadPool>,
-    ) -> Result<Self> {
-        Self::with_store_config(
-            rt,
-            base,
-            policy,
-            model,
-            StoreConfig {
-                cache_bytes,
-                ..StoreConfig::default()
-            },
-            pool,
-        )
+    /// The resident weights (base + whatever the active selection
+    /// applied).
+    pub fn weights(&self) -> &WeightStore {
+        self.router.weights()
     }
 
-    /// Server with full adapter-store tunables (cache budget, on-flash
-    /// format, prefetch depth) — the CLI's `--cache-bytes`,
-    /// `--prefetch-depth` and `--format` knobs land here.
-    pub fn with_store_config(
-        rt: &'rt Runtime,
-        base: WeightStore,
-        policy: Policy,
-        model: &str,
-        store_cfg: StoreConfig,
-        pool: Arc<ThreadPool>,
-    ) -> Result<Self> {
-        let meta = rt.manifest.model(model).map_err(|e| anyhow!("{e}"))?;
-        let max_batch = meta.dim("batch");
-        Ok(Server {
-            rt,
-            engine: SwitchEngine::with_pool(base, Some(Arc::clone(&pool))),
-            store: AdapterStore::with_config(store_cfg, Some(pool)),
-            batcher: DynamicBatcher::new(BatcherConfig {
-                max_batch,
-                max_wait_rounds: 4,
-            }),
-            policy,
-            model: model.to_string(),
-            alpha: 1.0,
-            fusion: None,
-            pinned_active: None,
-            pinned_roster: Vec::new(),
-        })
-    }
-
-    /// Strength at which SHiRA adapters are applied (single-adapter mode).
-    pub fn set_alpha(&mut self, alpha: f32) {
-        self.alpha = alpha;
-    }
-
-    /// Build the incremental fused-mode engine over the named adapters
-    /// (the fusion roster) and snapshot the base weights.  All members
-    /// must be SHiRA adapters present in the store; each is pinned there
-    /// for as long as the roster is live, so no cache pressure can evict
-    /// an adapter that fused-mode serving may touch.  Any active
-    /// single-adapter switch is reverted first so the snapshot sees base
-    /// values.  [`Self::run_trace`] calls this lazily under
-    /// [`Policy::ShiraFusion`] with every adapter the trace names.
-    pub fn enable_fusion(&mut self, names: &[String]) -> Result<()> {
-        // Release the previous roster's pins up front: the fetch loop
-        // below pins each new member the moment it lands, and stale pins
-        // must neither crowd the new members out of the cache nor leak
-        // when the rosters are disjoint.
-        self.unpin_roster();
-        let result = self.build_fusion(names);
-        if result.is_err() {
-            // Don't leave a half-built roster pinned.
-            self.unpin_roster();
-        }
-        result
-    }
-
-    fn build_fusion(&mut self, names: &[String]) -> Result<()> {
-        let mut roster = Vec::with_capacity(names.len());
-        for n in names {
-            if n.contains('+') || n.contains('@') {
-                // '+' and '@' are SetSpec metacharacters: such a name
-                // could never be addressed by a fused-set request.
-                return Err(anyhow!(
-                    "fusion roster member {n:?} contains a set-spec \
-                     metacharacter ('+' or '@')"
-                ));
-            }
-            match &self.store.fetch(n)?.adapter {
-                AnyAdapter::Shira(a) => {
-                    roster.push(Arc::clone(a));
-                    // Pin as fetched, so a later member's decode can
-                    // never evict this one mid-build (pin only fails for
-                    // oversized-uncached entries, which were never
-                    // resident to protect).
-                    if self.store.pin(n) {
-                        self.pinned_roster.push(n.clone());
-                    }
-                }
-                AnyAdapter::Lora(_) => {
-                    return Err(anyhow!("fusion roster member {n} is not a SHiRA adapter"))
-                }
-            }
-        }
-        // Unwind any previous fused state BEFORE snapshotting: a live
-        // engine's writes are invisible to `revert`, and dropping it
-        // without deactivating would bake its deltas into the new base.
-        if let Some(mut f) = self.fusion.take() {
-            f.deactivate(&mut self.engine.weights);
-        }
-        self.engine.revert();
-        // The reverted single-adapter switch no longer needs residency.
-        if let Some(prev) = self.pinned_active.take() {
-            self.store.unpin(&prev);
-        }
-        let plan = FusionPlan::build(roster)?;
-        let mut fusion = FusionEngine::with_pool(plan, self.engine.pool().cloned());
-        fusion.activate(&mut self.engine.weights)?;
-        self.fusion = Some(fusion);
-        Ok(())
-    }
-
-    /// Tear down fused-mode serving, restoring base weights exactly and
-    /// releasing the roster's store pins.
-    pub fn disable_fusion(&mut self) {
-        self.unpin_roster();
-        if let Some(mut f) = self.fusion.take() {
-            f.deactivate(&mut self.engine.weights);
-        }
-    }
-
-    fn unpin_roster(&mut self) {
-        for n in self.pinned_roster.drain(..) {
-            self.store.unpin(&n);
-        }
-    }
-
-    /// The fused-mode engine, when enabled.
+    /// The fused-mode engine, once a set selection has built it.
     pub fn fusion(&self) -> Option<&FusionEngine> {
-        self.fusion.as_ref()
+        self.router.fusion()
+    }
+
+    /// Restore base weights exactly and release every residency pin
+    /// (drops the fusion roster; the next set selection rebuilds it).
+    pub fn revert_all(&mut self) {
+        self.router.revert_all(&mut self.store);
     }
 
     /// Pack a LoRA adapter into the flat theta the unfused artifact expects.
@@ -267,223 +274,130 @@ impl<'rt> Server<'rt> {
 
     /// Run a full trace to completion; returns the report.
     ///
-    /// Under [`Policy::ShiraFusion`] each request's `adapter` field is a
-    /// [`SetSpec`] string; it is canonicalized before batching so two
-    /// spellings of the same set batch together, and the batcher's
-    /// affinity keeps consecutive batches on the currently-fused set.
-    pub fn run_trace(&mut self, trace: &[Request]) -> Result<ServeReport> {
-        let meta = self.rt.manifest.model(&self.model).map_err(|e| anyhow!("{e}"))?.clone();
+    /// Each request's [`Selection`] is validated and queued by canonical
+    /// identity (two spellings of one set batch together); per batch the
+    /// router makes the selection resident — scatter, direct transition,
+    /// fused one-wave update, or dense LoRA fuse, whichever the
+    /// selection and adapter family call for — and the executor runs.
+    /// A switch is counted only when the resident selection actually
+    /// changes.
+    pub fn run_trace(&mut self, trace: &[Request]) -> Result<ServeReport, ServeError> {
+        let meta = self
+            .rt
+            .manifest
+            .model(&self.model)
+            .map_err(|_| ServeError::UnknownModel(self.model.clone()))?
+            .clone();
         let (b, t) = (meta.dim("batch"), meta.dim("seq_len"));
         let vocab = meta.dim("vocab");
-        let fwd = self.rt.load(&format!("{}_fwd", self.model))?;
-        let unfused = if self.policy == Policy::LoraUnfused {
-            Some(self.rt.load(&format!("{}_fwd_unfused_lora", self.model))?)
-        } else {
-            None
-        };
+        let fwd = self
+            .rt
+            .load(&format!("{}_fwd", self.model))
+            .map_err(ServeError::runtime)?;
+        // Loaded lazily on the first unfused-LoRA batch.
+        let mut unfused_exe: Option<Arc<Executable>> = None;
         let theta_total = meta.theta_len.get("lora").copied().unwrap_or(0);
 
-        if self.policy == Policy::ShiraFusion {
-            // One parse per request: canonicalize the set id (so "b+a@1"
-            // batches with "a+b") and collect every adapter the trace
-            // names from the same parsed specs.
-            let mut names: Vec<String> = Vec::new();
-            let mut ids = Vec::with_capacity(trace.len());
-            for r in trace {
-                let spec = SetSpec::parse(&r.adapter)?;
-                for (n, _) in &spec.members {
-                    if !names.iter().any(|x| x == n) {
-                        names.push(n.clone());
-                    }
-                }
-                ids.push(spec.id());
-            }
-            // (Re)build the engine when the trace names adapters outside
-            // the current roster — keeping already-enabled members so
-            // earlier sets stay addressable.  An empty trace enables
-            // nothing and returns a zeroed report like the other policies.
-            let needs_roster = match &self.fusion {
-                None => !names.is_empty(),
-                Some(f) => names
-                    .iter()
-                    .any(|n| f.plan().member_index(n).is_none()),
-            };
-            if needs_roster {
-                if let Some(f) = &self.fusion {
-                    for a in f.plan().roster() {
-                        if !names.iter().any(|x| x == &a.name) {
-                            names.push(a.name.clone());
-                        }
-                    }
-                }
-                names.sort();
-                self.enable_fusion(&names)?;
-            }
-            for (r, id) in trace.iter().zip(ids) {
-                let mut req = r.clone();
-                req.adapter = id;
-                self.batcher.push(req);
-            }
-        } else {
-            for r in trace {
-                self.batcher.push(r.clone());
-            }
-        }
-        let mut current_set: Option<String> = None;
-
         let mut metrics = ServeMetrics::new();
+        // Validate every selection before enqueueing any, so a malformed
+        // request rejects the trace without leaving a partial queue.
+        for r in trace {
+            r.selection.validate()?;
+        }
+        for r in trace {
+            metrics.record_selection(r.selection.kind());
+            self.batcher.push(r.clone());
+        }
         let wall0 = Instant::now();
         loop {
-            let active: Option<String> = if self.policy == Policy::ShiraFusion {
-                current_set.clone()
-            } else {
-                self.engine.active_name().map(|s| s.to_string())
-            };
-            let (adapter_name, batch) = match self.batcher.next_batch(active.as_deref()) {
+            let active = self.router.active_key().map(str::to_string);
+            let (sel, batch) = match self.batcher.next_batch(active.as_deref()) {
                 Some(next) => next,
                 None => break,
             };
+            let key = sel.key();
             // ---- prefetch stage -----------------------------------------
-            // Affinity lookahead: decode the adapters the batcher will
-            // schedule next in the background, so their switches hit the
-            // staging area instead of paying decode on the request path.
-            // (Fused mode pins its whole roster resident at enable time.)
-            if self.policy != Policy::ShiraFusion && self.store.prefetch_depth() > 0 {
-                let ahead = self
-                    .batcher
-                    .upcoming(self.store.prefetch_depth(), &[adapter_name.as_str()]);
-                if !ahead.is_empty() {
-                    self.store.prefetch(&ahead);
+            // Affinity lookahead: decode the adapters of the selections
+            // the batcher will schedule next in the background, so their
+            // switches hit the staging area instead of paying decode on
+            // the request path.  The window is wider than the prefetch
+            // depth because Base queues contribute no names; the store
+            // bounds the submissions to its depth.  (Roster members are
+            // pinned resident.)
+            let depth = self.store.prefetch_depth();
+            if depth > 0 {
+                let ahead = self.batcher.upcoming(2 * depth + 1, &[key.as_str()]);
+                let mut names: Vec<String> = Vec::new();
+                for s in &ahead {
+                    for n in s.names() {
+                        if !names.iter().any(|x| x == n) {
+                            names.push(n.to_string());
+                        }
+                    }
+                }
+                if !names.is_empty() {
+                    self.store.prefetch(&names);
                 }
             }
             // ---- switch stage -------------------------------------------
-            let needs_switch;
-            let mut switch_us = 0.0;
-            let mut lora_theta: Option<Vec<f32>> = None;
-            if self.policy == Policy::ShiraFusion {
-                needs_switch = current_set.as_deref() != Some(adapter_name.as_str());
-                if needs_switch {
-                    let spec = SetSpec::parse(&adapter_name)?;
-                    let t0 = Instant::now();
-                    let fusion = self
-                        .fusion
-                        .as_mut()
-                        .expect("fusion engine enabled above");
-                    // Incremental transition: only adapters that changed
-                    // between the sets are touched.
-                    fusion.apply_set(&mut self.engine.weights, &spec.members)?;
-                    switch_us = t0.elapsed().as_secs_f64() * 1e6;
-                    current_set = Some(adapter_name.clone());
+            // The router reports its own weight-mutation time
+            // (`Applied::switch_us`): store fetch/decode and roster builds
+            // stay OUT of the switch metric, as they always have.
+            let applied = match self.router.apply(&mut self.store, &sel) {
+                Ok(applied) => applied,
+                Err(e) => {
+                    // Drain the queue: a later trace must not replay this
+                    // failed trace's tail.
+                    self.batcher.clear();
+                    return Err(e);
                 }
-            } else {
-                needs_switch = self.engine.active_name() != Some(adapter_name.as_str());
-                if needs_switch || self.policy == Policy::LoraUnfused {
-                    let entry = self.store.fetch(&adapter_name)?;
-                    // Pin the adapter we are about to apply; the previous
-                    // active adapter's pin is released.  An in-flight
-                    // switch can therefore never lose its cache entry.
-                    // (Unfused LoRA never mutates the weights — there is
-                    // no applied adapter to keep resident, and its
-                    // `needs_switch` is true every batch, which would
-                    // leak one pin per batch.)
-                    if needs_switch && self.policy != Policy::LoraUnfused {
-                        self.store.pin(&adapter_name);
-                        if let Some(prev) = self.pinned_active.replace(adapter_name.clone())
-                        {
-                            if prev != adapter_name {
-                                self.store.unpin(&prev);
-                            }
-                        }
-                    }
-                    let t0 = Instant::now();
-                    match (&entry.adapter, self.policy) {
-                        (AnyAdapter::Shira(a), Policy::ShiraScatter) => {
-                            // Hot pair with a resident pairwise plan: one
-                            // pass over the A∪B support union, ONE pool
-                            // dispatch wave.  Cold pair (or first switch):
-                            // classic revert+apply.  Bytes are identical
-                            // on both paths; the plan is pinned for the
-                            // duration of the in-flight transition.
-                            let plan = active
-                                .as_deref()
-                                .filter(|prev| *prev != adapter_name.as_str())
-                                .and_then(|prev| {
-                                    self.store.begin_transition(prev, &adapter_name)
-                                });
-                            let path = match plan {
-                                Some(tp) => {
-                                    let (_t, path) = self.engine.transition_to(
-                                        Arc::clone(a),
-                                        Some(Arc::clone(&entry.plans)),
-                                        &tp,
-                                        self.alpha,
-                                    );
-                                    self.store.end_transition(
-                                        active.as_deref().unwrap_or_default(),
-                                        &adapter_name,
-                                    );
-                                    path
-                                }
-                                None => {
-                                    // Arc-shared activation: no tensor
-                                    // copy on the request path, snapshots
-                                    // land in the engine arena, and the
-                                    // store-built shard plans skip plan
-                                    // construction (shard-aligned decode).
-                                    self.engine.switch_to_shira_planned(
-                                        Arc::clone(a),
-                                        Some(Arc::clone(&entry.plans)),
-                                        self.alpha,
-                                    );
-                                    SwitchPath::Fallback
-                                }
-                            };
-                            metrics
-                                .record_switch_path(path == SwitchPath::Transition);
-                        }
-                        (AnyAdapter::Lora(a), Policy::LoraFuse) => {
-                            self.engine.switch_to_lora_shared(Arc::clone(a));
-                        }
-                        (AnyAdapter::Lora(a), Policy::LoraUnfused) => {
-                            // weights stay at base; branches ride the fwd
-                            // pass
-                            lora_theta =
-                                Some(Self::pack_lora_theta(a, &meta.lora, theta_total));
-                        }
-                        (a, p) => {
-                            return Err(anyhow!(
-                                "adapter {} family does not match policy {}",
-                                a.name(),
-                                p.name()
-                            ))
-                        }
-                    }
-                    switch_us = t0.elapsed().as_secs_f64() * 1e6;
+            };
+            let switch_us = if applied.switched { applied.switch_us } else { 0.0 };
+            if applied.switched {
+                if let Some(path) = applied.path {
+                    metrics.record_switch_path(path);
                 }
             }
 
             // ---- transition-plan prefetch -------------------------------
             // Pairwise plans need both adapters decoded, so this runs
-            // after the switch stage: the now-active adapter is resident
-            // and pinned, and `upcoming` is told to skip names whose pair
-            // is already planned — the lookahead surfaces only pairs the
-            // plan cache is missing.  Builds run off the serving thread;
-            // the switch that needs a still-cold pair just falls back.
-            if self.policy == Policy::ShiraScatter && self.store.prefetch_depth() > 0 {
-                let planned = self.store.planned_to_names(&adapter_name);
-                let mut exclude: Vec<&str> =
-                    planned.iter().map(|s| s.as_str()).collect();
-                exclude.push(adapter_name.as_str());
-                let pair_ahead = self
-                    .batcher
-                    .upcoming(self.store.prefetch_depth(), &exclude);
-                if !pair_ahead.is_empty() {
-                    self.store.prefetch_transitions(&adapter_name, &pair_ahead);
+            // after the switch stage: the now-active single is resident
+            // and pinned.  The lookahead window is wider than the depth
+            // and filtered AFTER the fact — base/set queues and adapters
+            // whose pair is already planned must not use up the depth
+            // budget, or mixed traces would starve the plan cache.
+            // Builds run off the serving thread; a switch that needs a
+            // still-cold pair just falls back.
+            if let Selection::Single { name, .. } = &sel {
+                if depth > 0 {
+                    let planned = self.store.planned_to_names(name);
+                    let ahead = self.batcher.upcoming(4 * depth + 2, &[key.as_str()]);
+                    let mut tos: Vec<String> = Vec::new();
+                    for s in &ahead {
+                        if let Selection::Single { name: n, .. } = s {
+                            if n != name
+                                && !planned.iter().any(|p| p == n)
+                                && !tos.iter().any(|x| x == n)
+                            {
+                                tos.push(n.clone());
+                                if tos.len() == depth {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    if !tos.is_empty() {
+                        self.store.prefetch_transitions(name, &tos);
+                    }
                 }
             }
 
             // ---- execute stage ------------------------------------------
             let t0 = Instant::now();
+            let lora_theta = applied
+                .unfused_lora
+                .as_deref()
+                .map(|a| Self::pack_lora_theta(a, &meta.lora, theta_total));
             let mut rng = Rng::new(batch[0].payload_seed);
             let mut tokens = Vec::with_capacity(b * t);
             for r in &batch {
@@ -500,28 +414,47 @@ impl<'rt> Server<'rt> {
                 .params
                 .iter()
                 .map(|(name, shape)| {
-                    HostValue::f32(self.engine.weights.get(name).data.clone(), shape.clone())
+                    HostValue::f32(
+                        self.router.weights().get(name).data.clone(),
+                        shape.clone(),
+                    )
                 })
                 .collect();
+            let unfused_batch = lora_theta.is_some();
             if let Some(theta) = lora_theta {
                 inputs.push(HostValue::f32(theta, vec![theta_total]));
+                if unfused_exe.is_none() {
+                    match self.rt.load(&format!("{}_fwd_unfused_lora", self.model)) {
+                        Ok(exe) => unfused_exe = Some(exe),
+                        Err(e) => {
+                            self.batcher.clear();
+                            return Err(ServeError::runtime(e));
+                        }
+                    }
+                }
             }
             inputs.push(HostValue::i32(tokens, vec![b, t]));
-            let exe = if self.policy == Policy::LoraUnfused {
-                unfused.as_ref().unwrap()
+            let exe = if unfused_batch {
+                unfused_exe.as_ref().expect("loaded above")
             } else {
                 &fwd
             };
-            let out = exe.run(&inputs)?;
+            let out = match exe.run(&inputs) {
+                Ok(out) => out,
+                Err(e) => {
+                    self.batcher.clear();
+                    return Err(ServeError::runtime(e));
+                }
+            };
             debug_assert!(out[0].as_f32().iter().all(|x| x.is_finite()));
             let exec_us = t0.elapsed().as_secs_f64() * 1e6;
 
-            metrics.record_batch(batch.len(), needs_switch, switch_us, exec_us);
+            metrics.record_batch(batch.len(), applied.switched, switch_us, exec_us);
         }
         let wall = wall0.elapsed().as_secs_f64();
         let store_stats = self.store.stats();
         metrics.set_store(store_stats.clone());
-        metrics.set_plan_mismatches(self.engine.plan_mismatches);
+        metrics.set_plan_mismatches(self.router.single_counters().plan_mismatches);
         let p99 = metrics.request_latency.percentile_us(99.0);
         let (p50_switch, p99_switch) = if metrics.switch_us.is_empty() {
             (0.0, 0.0)
@@ -540,13 +473,16 @@ impl<'rt> Server<'rt> {
             )
         };
         Ok(ServeReport {
-            policy: self.policy,
             wall_secs: wall,
             requests: metrics.requests,
+            base_requests: metrics.base_requests,
+            single_requests: metrics.single_requests,
+            set_requests: metrics.set_requests,
             batches: metrics.batches,
             switches: metrics.switches,
             transitions: metrics.transitions,
             fallbacks: metrics.fallbacks,
+            fused_switches: metrics.fused_switches,
             plan_mismatches: metrics.plan_mismatches,
             throughput_rps: metrics.requests as f64 / wall.max(1e-9),
             mean_switch_us: metrics.switch_us.mean(),
@@ -629,28 +565,44 @@ mod tests {
         }
     }
 
-    fn serve(policy: Policy, n: usize) -> Option<ServeReport> {
-        let rt = runtime()?;
+    enum Zoo {
+        Shira,
+        Lora,
+    }
+
+    fn server_with<'rt>(rt: &'rt Runtime, zoo: Zoo, unfused: bool) -> (Server<'rt>, Vec<String>) {
         let meta = rt.manifest.model("llama").unwrap();
         let base = WeightStore::init(&meta.params, 7);
-        let mut server = Server::new(&rt, base, policy, "llama", 1 << 20).unwrap();
+        let mut server = Server::builder(rt, base)
+            .model("llama")
+            .cache_bytes(1 << 20)
+            .unfused_lora(unfused)
+            .build()
+            .unwrap();
         let names: Vec<String> = (0..3).map(|i| format!("ad{i}")).collect();
         for (i, name) in names.iter().enumerate() {
-            match policy {
-                Policy::ShiraScatter | Policy::ShiraFusion => {
-                    server.store.add_shira(&make_shira(&rt, name, i as u64))
-                }
-                _ => server.store.add_lora(&make_lora(&rt, name, i as u64)),
+            match zoo {
+                Zoo::Shira => server.store.add_shira(&make_shira(rt, name, i as u64)),
+                Zoo::Lora => server.store.add_lora(&make_lora(rt, name, i as u64)),
             }
         }
-        let trace = generate_trace(&names, n, TracePattern::Bursty { burst: 6 }, 1e4, 1);
-        Some(server.run_trace(&trace).unwrap())
+        (server, names)
     }
 
     #[test]
-    fn shira_serving_completes_all_requests() {
-        let Some(rep) = serve(Policy::ShiraScatter, 24) else { return };
+    fn shira_single_serving_completes_all_requests() {
+        let Some(rt) = runtime() else { return };
+        let (mut server, names) = server_with(&rt, Zoo::Shira, false);
+        let trace = generate_trace(
+            &Selection::singles(&names),
+            24,
+            TracePattern::Bursty { burst: 6 },
+            1e4,
+            1,
+        );
+        let rep = server.run_trace(&trace).unwrap();
         assert_eq!(rep.requests, 24);
+        assert_eq!(rep.single_requests, 24);
         assert!(rep.batches >= 3);
         assert!(rep.switches >= 1);
         assert!(rep.throughput_rps > 0.0);
@@ -659,7 +611,7 @@ mod tests {
         assert!(rep.store.misses >= 1);
         assert!(rep.store.resident_entries >= 1);
         assert!(rep.summary.contains("store:"));
-        // Every ShiraScatter switch is classified transition-or-fallback
+        // Every single-adapter switch is classified transition-or-fallback
         // (which one depends on whether the background plan build won the
         // race — the bytes are identical either way).
         assert_eq!(rep.transitions + rep.fallbacks, rep.switches);
@@ -669,24 +621,55 @@ mod tests {
 
     #[test]
     fn lora_fuse_serving_completes() {
-        let Some(rep) = serve(Policy::LoraFuse, 16) else { return };
+        let Some(rt) = runtime() else { return };
+        let (mut server, names) = server_with(&rt, Zoo::Lora, false);
+        let trace = generate_trace(
+            &Selection::singles(&names),
+            16,
+            TracePattern::Bursty { burst: 6 },
+            1e4,
+            1,
+        );
+        let rep = server.run_trace(&trace).unwrap();
         assert_eq!(rep.requests, 16);
         assert!(rep.mean_switch_us > 0.0);
     }
 
     #[test]
     fn lora_unfused_serving_completes() {
-        let Some(rep) = serve(Policy::LoraUnfused, 16) else { return };
+        let Some(rt) = runtime() else { return };
+        let (mut server, names) = server_with(&rt, Zoo::Lora, true);
+        let trace = generate_trace(
+            &Selection::singles(&names),
+            16,
+            TracePattern::Bursty { burst: 6 },
+            1e4,
+            1,
+        );
+        let rep = server.run_trace(&trace).unwrap();
         assert_eq!(rep.requests, 16);
+        // Unfused serving never mutates the weights.
+        let meta = rt.manifest.model("llama").unwrap();
+        let base = WeightStore::init(&meta.params, 7);
+        assert!(server.weights().bit_equal(&base));
     }
 
     #[test]
-    fn single_member_sets_serve_under_fusion_policy() {
-        // Plain adapter names are valid one-member set specs, so the
-        // fused-mode server handles single-adapter traces too.
-        let Some(rep) = serve(Policy::ShiraFusion, 16) else { return };
+    fn singleton_sets_serve_through_fusion() {
+        // A single adapter is just a one-member set: set selections over
+        // one member serve through the fused-mode engine.
+        let Some(rt) = runtime() else { return };
+        let (mut server, names) = server_with(&rt, Zoo::Shira, false);
+        let sels: Vec<Selection> = names
+            .iter()
+            .map(|n| Selection::set(&[(n.as_str(), 1.0)]))
+            .collect();
+        let trace = generate_trace(&sels, 16, TracePattern::Bursty { burst: 6 }, 1e4, 1);
+        let rep = server.run_trace(&trace).unwrap();
         assert_eq!(rep.requests, 16);
+        assert_eq!(rep.set_requests, 16);
         assert!(rep.switches >= 1);
+        assert_eq!(rep.fused_switches, rep.switches);
     }
 
     #[test]
@@ -694,73 +677,107 @@ mod tests {
         let Some(rt) = runtime() else { return };
         let meta = rt.manifest.model("llama").unwrap();
         let base = WeightStore::init(&meta.params, 7);
-        let mut server =
-            Server::new(&rt, base.clone(), Policy::ShiraFusion, "llama", 1 << 20).unwrap();
+        let mut server = Server::builder(&rt, base.clone())
+            .cache_bytes(1 << 20)
+            .build()
+            .unwrap();
         for (i, name) in ["ad0", "ad1", "ad2"].iter().enumerate() {
             server.store.add_shira(&make_shira(&rt, name, i as u64));
         }
         // Two spellings of the same set share one canonical identity, so
         // they batch together and cost no extra transition.
-        let sets = vec![
-            "ad0+ad1".to_string(),
-            "ad1+ad0".to_string(),
-            "ad1@0.5+ad2".to_string(),
-            "ad0+ad1+ad2@2".to_string(),
-        ];
-        let trace = generate_trace(&sets, 16, TracePattern::Bursty { burst: 4 }, 1e4, 5);
+        let sels: Vec<Selection> = ["ad0+ad1", "ad1+ad0", "ad1@0.5+ad2", "ad0+ad1+ad2@2"]
+            .iter()
+            .map(|s| Selection::parse(s).unwrap())
+            .collect();
+        let trace = generate_trace(&sels, 16, TracePattern::Bursty { burst: 4 }, 1e4, 5);
         let rep = server.run_trace(&trace).unwrap();
         assert_eq!(rep.requests, 16);
         assert!(rep.switches >= 1);
-        let fusion = server.fusion().expect("fusion enabled lazily");
-        assert_eq!(fusion.plan().len(), 3);
+        assert_eq!(rep.fused_switches, rep.switches);
+        let fusion = server.fusion().expect("fusion built lazily");
+        assert_eq!(fusion.plan().len(), 3, "roster grew to every named member");
         assert!(fusion.updates() > 0);
-        // Re-enabling over a different roster must unwind the live fused
-        // state first, or the new base snapshot would bake it in.
-        server
-            .enable_fusion(&["ad0".to_string(), "ad1".to_string()])
-            .unwrap();
-        assert_eq!(server.fusion().unwrap().plan().len(), 2);
-        server.disable_fusion();
-        server.engine.revert();
-        assert!(server.engine.weights.bit_equal(&base));
+        server.revert_all();
+        assert!(server.weights().bit_equal(&base));
+        assert!(server.fusion().is_none(), "revert_all drops the roster");
     }
 
     #[test]
-    fn base_weights_restored_after_serving_shira() {
+    fn mixed_trace_routes_per_request_and_is_pool_invariant() {
+        // The acceptance shape at the server level: ONE trace mixing
+        // Base, Single and Set selections through one builder-built
+        // server; identical final weights at 1 and 4 threads; exact
+        // base restore afterwards.
         let Some(rt) = runtime() else { return };
         let meta = rt.manifest.model("llama").unwrap();
         let base = WeightStore::init(&meta.params, 7);
-        let mut server =
-            Server::new(&rt, base.clone(), Policy::ShiraScatter, "llama", 1 << 20)
+        let sels = vec![
+            Selection::Base,
+            Selection::single("ad0"),
+            Selection::single_at("ad1", 0.5),
+            Selection::parse("ad0+ad2@0.5").unwrap(),
+            Selection::parse("ad1+ad2").unwrap(),
+        ];
+        let trace = generate_trace(&sels, 24, TracePattern::Bursty { burst: 4 }, 1e4, 9);
+        let mut finals = Vec::new();
+        for threads in [1usize, 4] {
+            let mut server = Server::builder(&rt, base.clone())
+                .cache_bytes(1 << 20)
+                .pool(Arc::new(ThreadPool::new(threads)))
+                .build()
                 .unwrap();
-        server.store.add_shira(&make_shira(&rt, "a", 1));
-        let trace = generate_trace(
-            &["a".to_string()],
-            8,
-            TracePattern::UniformMix,
-            1e4,
-            2,
+            for (i, name) in ["ad0", "ad1", "ad2"].iter().enumerate() {
+                server.store.add_shira(&make_shira(&rt, name, i as u64));
+            }
+            let rep = server.run_trace(&trace).unwrap();
+            assert_eq!(rep.requests, 24);
+            assert_eq!(
+                rep.base_requests + rep.single_requests + rep.set_requests,
+                24
+            );
+            assert!(rep.base_requests > 0, "trace exercised base routing");
+            assert!(rep.single_requests > 0, "trace exercised single routing");
+            assert!(rep.set_requests > 0, "trace exercised set routing");
+            assert!(rep.summary.contains("selections: base="));
+            finals.push(server.weights().clone());
+            server.revert_all();
+            assert!(server.weights().bit_equal(&base), "threads={threads}");
+        }
+        assert!(
+            finals[0].bit_equal(&finals[1]),
+            "mixed-trace serving is pool-width invariant"
         );
-        server.run_trace(&trace).unwrap();
-        server.engine.revert();
-        assert!(server.engine.weights.bit_equal(&base));
     }
 
     #[test]
-    fn policy_family_mismatch_errors() {
+    fn structured_errors_surface_from_run_trace() {
         let Some(rt) = runtime() else { return };
-        let meta = rt.manifest.model("llama").unwrap();
-        let base = WeightStore::init(&meta.params, 7);
-        let mut server =
-            Server::new(&rt, base, Policy::ShiraScatter, "llama", 1 << 20).unwrap();
-        server.store.add_lora(&make_lora(&rt, "l", 1));
+        let (mut server, _names) = server_with(&rt, Zoo::Shira, false);
+        // Unknown adapter → UnknownAdapter, not a string.
         let trace = generate_trace(
-            &["l".to_string()],
+            &[Selection::single("ghost")],
             4,
             TracePattern::UniformMix,
             1e4,
             3,
         );
-        assert!(server.run_trace(&trace).is_err());
+        assert!(matches!(
+            server.run_trace(&trace),
+            Err(ServeError::UnknownAdapter(n)) if n == "ghost"
+        ));
+        // A LoRA member inside a fused set → NotShira.
+        server.store.add_lora(&make_lora(&rt, "lora0", 9));
+        let trace = generate_trace(
+            &[Selection::set(&[("ad0", 1.0), ("lora0", 1.0)])],
+            4,
+            TracePattern::UniformMix,
+            1e4,
+            3,
+        );
+        assert!(matches!(
+            server.run_trace(&trace),
+            Err(ServeError::NotShira(n)) if n == "lora0"
+        ));
     }
 }

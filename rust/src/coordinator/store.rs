@@ -29,10 +29,9 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 
-use anyhow::{anyhow, Result};
-
 use super::cache::LruCache;
-use crate::adapter::io::{self, AdapterFamily, Format};
+use super::error::ServeError;
+use crate::adapter::io::{self, AdapterFamily, Format, IoError};
 use crate::adapter::sparse::{shards_for, ShardPlan};
 use crate::adapter::{AdapterTransition, LoraAdapter, ShiraAdapter};
 use crate::util::threadpool::ThreadPool;
@@ -196,7 +195,7 @@ enum Staged {
     /// Decode finished; the handle moves into the cache on first fetch.
     Ready(AdapterHandle),
     /// Decode failed (corrupt flash bytes); the fetch surfaces the error.
-    Failed(String),
+    Failed(IoError),
 }
 
 struct PrefetchShared {
@@ -325,7 +324,12 @@ impl AdapterStore {
     /// decode, in that order.  An adapter whose decoded size exceeds the
     /// whole cache budget is served as an uncached `Arc` without flushing
     /// resident entries.
-    pub fn fetch(&mut self, name: &str) -> Result<Arc<AdapterHandle>> {
+    ///
+    /// Errors are structured: a name the store has never seen is
+    /// [`ServeError::UnknownAdapter`]; corrupt flash bytes surface as
+    /// [`ServeError::Io`] — callers branch on the variant instead of
+    /// string-matching.
+    pub fn fetch(&mut self, name: &str) -> Result<Arc<AdapterHandle>, ServeError> {
         if let Some(h) = self.cache.get(name) {
             return Ok(h);
         }
@@ -343,9 +347,9 @@ impl AdapterStore {
         let bytes = self
             .flash
             .get(name)
-            .ok_or_else(|| anyhow!("unknown adapter {name}"))?;
-        let handle = AdapterHandle::decode(bytes, self.plan_threads)
-            .map_err(|e| anyhow!("decoding adapter {name}: {e}"))?;
+            .ok_or_else(|| ServeError::UnknownAdapter(name.to_string()))?;
+        let handle =
+            AdapterHandle::decode(bytes, self.plan_threads).map_err(ServeError::Io)?;
         Ok(self.admit(name, handle))
     }
 
@@ -382,7 +386,7 @@ impl AdapterStore {
                     job_name,
                     match res {
                         Ok(h) => Staged::Ready(h),
-                        Err(e) => Staged::Failed(e.to_string()),
+                        Err(e) => Staged::Failed(e),
                     },
                 );
                 shared.ready.notify_all();
@@ -586,7 +590,7 @@ impl AdapterStore {
     /// Remove `name` from staging, waiting out an in-flight decode.
     /// Returns the handle plus whether the fetch had to wait (the decode
     /// was still in flight — part of its cost landed on the request path).
-    fn take_staged(&mut self, name: &str) -> Result<Option<(AdapterHandle, bool)>> {
+    fn take_staged(&mut self, name: &str) -> Result<Option<(AdapterHandle, bool)>, ServeError> {
         let mut slots = self.staging.slots.lock().unwrap();
         let mut waited = false;
         loop {
@@ -603,7 +607,7 @@ impl AdapterStore {
         }
         match slots.remove(name) {
             Some(Staged::Ready(h)) => Ok(Some((h, waited))),
-            Some(Staged::Failed(e)) => Err(anyhow!("prefetch decode of {name}: {e}")),
+            Some(Staged::Failed(e)) => Err(ServeError::Io(e)),
             _ => unreachable!("loop exits only on Ready/Failed"),
         }
     }
@@ -643,7 +647,10 @@ mod tests {
         assert_eq!((hits, misses), (0, 1));
         store.fetch("a").unwrap();
         assert_eq!(store.cache_stats(), (1, 1));
-        assert!(store.fetch("ghost").is_err());
+        assert!(matches!(
+            store.fetch("ghost"),
+            Err(ServeError::UnknownAdapter(n)) if n == "ghost"
+        ));
     }
 
     #[test]
@@ -896,8 +903,8 @@ mod tests {
             Some(Arc::new(ThreadPool::new(1))),
         );
         store.add_encoded("junk", vec![0xAB; 64]);
-        assert!(store.fetch("junk").is_err());
+        assert!(matches!(store.fetch("junk"), Err(ServeError::Io(_))));
         store.prefetch(&["junk".to_string()]);
-        assert!(store.fetch("junk").is_err());
+        assert!(matches!(store.fetch("junk"), Err(ServeError::Io(_))));
     }
 }

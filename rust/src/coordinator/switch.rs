@@ -1,20 +1,27 @@
 //! The switch engine — the paper's rapid-switching contribution (§3.2,
-//! Appendix A/B) implemented over the resident weight store.
+//! Appendix A/B) applied to a caller-owned resident [`WeightStore`].
 //!
-//! Four serving policies are implemented and benchmarked:
+//! Since the `Selection` routing redesign the engine no longer owns the
+//! weights: the server (or any caller) holds ONE resident copy of the
+//! base model and passes it to every operation, so the switch engine and
+//! the fused-mode [`FusionEngine`](super::fusion_engine::FusionEngine)
+//! mutate the *same* store and both sit behind the
+//! [`AdapterEngine`](super::engine::AdapterEngine) trait.  Requests pick
+//! their path per-request via
+//! [`Selection`](super::selection::Selection) — there is no
+//! construction-time policy fork.
 //!
-//! * `ShiraScatter` — snapshot the k base values on the adapter's support,
-//!   scatter the adapter in, infer, scatter the snapshot back.  O(k) work,
-//!   exact revert.
-//! * `ShiraFusion` — fused-mode serving: requests name an adapter *set*
-//!   plus weights, and the incremental
-//!   [`FusionEngine`](super::fusion_engine::FusionEngine) transitions
-//!   between sets by touching only the changed adapters' entries.
-//! * `LoraFuse` — the HF load→fuse→infer→unfuse→unload pipeline: dense
-//!   `W += s·AB` / `W -= s·AB` over every target tensor.  O(n·m·r) work,
-//!   revert accumulates float drift.
-//! * `LoraUnfused` — leave branches on the forward path (handled by the
-//!   server via the `llama_fwd_unfused_lora` artifact; no weight mutation).
+//! Mechanisms (unchanged from PRs 1–4):
+//!
+//! * **SHiRA scatter** — snapshot the k base values on the adapter's
+//!   support, scatter the adapter in, infer, scatter the snapshot back.
+//!   O(k) work, exact revert.
+//! * **Direct transitions** — [`SwitchEngine::transition_to`] walks the
+//!   A∪B support union once and dispatches ONE pool wave instead of
+//!   revert+apply's two passes and two waves.
+//! * **LoRA fuse** — the HF load→fuse→infer→unfuse pipeline baseline:
+//!   dense `W += s·AB` / `W -= s·AB` over every target.  Revert
+//!   accumulates float drift.
 //!
 //! ## Steady-state allocation & parallelism (DESIGN.md §4)
 //!
@@ -28,6 +35,11 @@
 //! switch work overlaps across tensors and across shards of one tensor.
 //! Parallel results are bit-identical to the serial path (each element is
 //! written by exactly one shard; per-element arithmetic unchanged).
+//!
+//! The engine's snapshot arena is keyed by target-tensor name: callers
+//! must pass the *same* weight store (or a bit-identical clone at base)
+//! across an apply/revert pair, exactly as they previously had to leave
+//! the engine-owned store untouched between the two calls.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -41,22 +53,33 @@ use crate::adapter::{AdapterTransition, LoraAdapter, ShiraAdapter};
 use crate::model::weights::WeightStore;
 use crate::util::threadpool::ThreadPool;
 
-/// Serving policy: how the server applies an adapter (or adapter set)
-/// before executing a batch.  See the module docs for the four variants.
+/// Construction-time serving policy of the pre-`Selection` API.
+///
+/// Requests now carry a [`Selection`](super::selection::Selection) and the
+/// server routes base/single/fused traffic per-request; this enum
+/// survives only as the CLI's `--policy` alias, mapped onto default
+/// selections by `shira serve` (a `--policy fusion` trace becomes rotating
+/// `Set` selections, `--policy unfused` sets the server's unfused-LoRA
+/// mode, and so on).
+#[deprecated(
+    since = "0.3.0",
+    note = "requests carry a per-request `coordinator::selection::Selection`; \
+            `Policy` survives only as the deprecated `--policy` CLI alias"
+)]
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
-    /// SHiRA snapshot + sparse scatter, exact revert (the paper's method).
+    /// SHiRA snapshot + sparse scatter → `Selection::Single` (SHiRA).
     ShiraScatter,
-    /// Fused-mode SHiRA serving: requests name adapter *sets* (parsed by
-    /// [`SetSpec`](super::fusion_engine::SetSpec)) and the incremental
-    /// fusion engine moves between sets in O(changed adapters' nnz).
+    /// Fused-mode adapter sets → `Selection::Set`.
     ShiraFusion,
-    /// Dense LoRA fuse/unfuse on the resident weights (HF pipeline).
+    /// Dense LoRA fuse/unfuse → `Selection::Single` (LoRA).
     LoraFuse,
-    /// LoRA branches on the forward path; weights stay at base.
+    /// LoRA branches on the forward path → `Selection::Single` (LoRA)
+    /// with the server's unfused-LoRA mode enabled.
     LoraUnfused,
 }
 
+#[allow(deprecated)]
 impl Policy {
     /// Stable CLI / report name of the policy.
     pub fn name(&self) -> &'static str {
@@ -80,8 +103,8 @@ impl Policy {
     }
 }
 
-/// Which path a SHiRA adapter-to-adapter switch took (recorded per switch
-/// in `ServeMetrics`).
+/// Which path one adapter application took (recorded per switch in
+/// `ServeMetrics`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SwitchPath {
     /// One-pass direct transition over the A∪B support union (one pool
@@ -91,6 +114,10 @@ pub enum SwitchPath {
     /// Classic revert-then-apply (no usable transition plan: cold pair,
     /// no previous adapter, or a plan/adapter mismatch).
     Fallback,
+    /// Served by the incremental fused-mode engine: the set (or
+    /// one-member-set single) transition recomputed only the touched
+    /// members' union slots in one wave.
+    Fused,
 }
 
 impl SwitchPath {
@@ -99,6 +126,7 @@ impl SwitchPath {
         match self {
             SwitchPath::Transition => "transition",
             SwitchPath::Fallback => "fallback",
+            SwitchPath::Fused => "fused",
         }
     }
 }
@@ -221,10 +249,14 @@ impl TransitionTask {
     }
 }
 
-/// Owns the resident base weights and mutates them per adapter.
+/// Applies and reverts adapters on a caller-owned resident weight store.
+///
+/// The engine tracks what is applied (Arc-held), keeps the per-target
+/// snapshot arena, and dispatches scatter work on an optional pool; the
+/// weights themselves belong to the caller and are passed into every
+/// operation — the same store the fused-mode engine mutates, so one
+/// server can route singles and sets onto one resident copy.
 pub struct SwitchEngine {
-    /// The resident weight store (one copy of the base model).
-    pub weights: WeightStore,
     active: Active,
     /// Number of adapter activations performed.
     pub switches: u64,
@@ -249,17 +281,22 @@ pub struct SwitchEngine {
     pub plan_mismatches: u64,
 }
 
+impl Default for SwitchEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl SwitchEngine {
     /// Engine without a thread pool (all scatters serial).
-    pub fn new(weights: WeightStore) -> Self {
-        Self::with_pool(weights, None)
+    pub fn new() -> Self {
+        Self::with_pool(None)
     }
 
     /// Engine with an attached thread pool: scatter/restore and the LoRA
     /// fuse baseline run shard-parallel across all target tensors.
-    pub fn with_pool(weights: WeightStore, pool: Option<Arc<ThreadPool>>) -> Self {
+    pub fn with_pool(pool: Option<Arc<ThreadPool>>) -> Self {
         SwitchEngine {
-            weights,
             active: Active::None,
             switches: 0,
             pool,
@@ -305,23 +342,33 @@ impl SwitchEngine {
         }
     }
 
-    /// Apply a SHiRA adapter at strength `alpha` (reverting whatever was
-    /// active first).  Returns stage timings.
+    /// Apply a SHiRA adapter to `w` at strength `alpha` (reverting
+    /// whatever was active first).  Returns stage timings.
     ///
     /// Convenience wrapper that deep-clones the adapter into an `Arc`
     /// (outside the timed fuse stage).  Hot paths — the server request
     /// loop, switch benchmarks — should hold adapters in `Arc`s and use
     /// [`Self::switch_to_shira_shared`], which copies nothing.
-    pub fn switch_to_shira(&mut self, a: &ShiraAdapter, alpha: f32) -> SwitchTiming {
-        self.switch_to_shira_shared(Arc::new(a.clone()), alpha)
+    pub fn switch_to_shira(
+        &mut self,
+        w: &mut WeightStore,
+        a: &ShiraAdapter,
+        alpha: f32,
+    ) -> SwitchTiming {
+        self.switch_to_shira_shared(w, Arc::new(a.clone()), alpha)
     }
 
     /// Zero-copy variant: the engine keeps the `Arc` (no tensor clone), so
     /// activating a cache-resident adapter performs no O(nnz) allocation
     /// in steady state — only first-visit arena growth, plus one
     /// O(threads) dispatch control block per parallel region.
-    pub fn switch_to_shira_shared(&mut self, a: Arc<ShiraAdapter>, alpha: f32) -> SwitchTiming {
-        self.switch_to_shira_planned(a, None, alpha)
+    pub fn switch_to_shira_shared(
+        &mut self,
+        w: &mut WeightStore,
+        a: Arc<ShiraAdapter>,
+        alpha: f32,
+    ) -> SwitchTiming {
+        self.switch_to_shira_planned(w, a, None, alpha)
     }
 
     /// [`Self::switch_to_shira_shared`] with store-built per-tensor shard
@@ -334,11 +381,12 @@ impl SwitchEngine {
     /// bit-identical either way, plans only affect dispatch.
     pub fn switch_to_shira_planned(
         &mut self,
+        w: &mut WeightStore,
         a: Arc<ShiraAdapter>,
         plans: Option<Arc<Vec<ShardPlan>>>,
         alpha: f32,
     ) -> SwitchTiming {
-        let mut t = self.revert_timing();
+        let mut t = self.revert_timing(w);
         let t0 = Instant::now();
         let total_nnz = a.param_count();
         let pool = match &self.pool {
@@ -347,7 +395,7 @@ impl SwitchEngine {
         };
         match pool {
             Some(pool) => {
-                self.build_shira_tasks(&a, plans.as_deref(), pool.threads(), true);
+                self.build_shira_tasks(w, &a, plans.as_deref(), pool.threads(), true);
                 let tasks = &self.tasks;
                 pool.scoped_for(tasks.len(), |i| {
                     // SAFETY: tasks cover disjoint idx ranges (row-aligned
@@ -361,8 +409,8 @@ impl SwitchEngine {
                 for (target, delta) in &a.tensors {
                     Self::arena_buf_prepare(&mut self.arena, target, delta.nnz());
                     let buf = self.arena.get_mut(target.as_str()).unwrap();
-                    let w = self.weights.get_mut(target);
-                    delta.snapshot_apply(w, alpha, buf);
+                    let wt = w.get_mut(target);
+                    delta.snapshot_apply(wt, alpha, buf);
                 }
             }
         }
@@ -390,6 +438,7 @@ impl SwitchEngine {
     /// resulting bytes are identical either way.
     pub fn transition_to(
         &mut self,
+        w: &mut WeightStore,
         b: Arc<ShiraAdapter>,
         plans: Option<Arc<Vec<ShardPlan>>>,
         tp: &AdapterTransition,
@@ -400,7 +449,7 @@ impl SwitchEngine {
             _ => false,
         };
         if !valid {
-            let t = self.switch_to_shira_planned(b, plans, alpha);
+            let t = self.switch_to_shira_planned(w, b, plans, alpha);
             return (t, SwitchPath::Fallback);
         }
         let mut t = SwitchTiming::default();
@@ -413,7 +462,7 @@ impl SwitchEngine {
         };
         match pool {
             Some(pool) => {
-                self.build_transition_tasks(&b, tp);
+                self.build_transition_tasks(w, &b, tp);
                 let tasks = &self.ttasks;
                 pool.scoped_for(tasks.len(), |i| {
                     // SAFETY: tasks cover disjoint union ranges (row-
@@ -433,8 +482,8 @@ impl SwitchEngine {
                         .get(target.as_str())
                         .expect("snapshot exists for active adapter");
                     let snap_b = self.spare.get_mut(target.as_str()).unwrap();
-                    let w = self.weights.get_mut(target);
-                    tp.plans()[ti].transition(w, snap_a, snap_b, d_b, alpha);
+                    let wt = w.get_mut(target);
+                    tp.plans()[ti].transition(wt, snap_a, snap_b, d_b, alpha);
                 }
             }
         }
@@ -463,7 +512,12 @@ impl SwitchEngine {
     /// Build the flat transition-task list spanning every target tensor:
     /// each task is one row-aligned shard of one tensor's union walk, so
     /// the whole A→B switch runs under a single `scoped_for` region.
-    fn build_transition_tasks(&mut self, b: &ShiraAdapter, tp: &AdapterTransition) {
+    fn build_transition_tasks(
+        &mut self,
+        w: &mut WeightStore,
+        b: &ShiraAdapter,
+        tp: &AdapterTransition,
+    ) {
         self.ttasks.clear();
         for (ti, (target, d_b)) in b.tensors.iter().enumerate() {
             Self::arena_buf_prepare(&mut self.spare, target, d_b.nnz());
@@ -472,9 +526,9 @@ impl SwitchEngine {
                 .get(target.as_str())
                 .expect("snapshot exists for active adapter");
             let snap_b = self.spare.get_mut(target.as_str()).unwrap();
-            let w = self.weights.get_mut(target);
+            let wt = w.get_mut(target);
             let plan = &tp.plans()[ti];
-            debug_assert_eq!((w.rows, w.cols), (plan.rows(), plan.cols()));
+            debug_assert_eq!((wt.rows, wt.cols), (plan.rows(), plan.cols()));
             debug_assert_eq!(snap_a.len(), plan.a_nnz());
             debug_assert_eq!(snap_b.len(), plan.b_nnz());
             let (idx, a_pos, b_pos) = plan.raw_parts();
@@ -489,7 +543,7 @@ impl SwitchEngine {
                     a_pos,
                     b_pos,
                     delta: d_b.delta.as_ptr(),
-                    w: w.data.as_mut_ptr(),
+                    w: wt.data.as_mut_ptr(),
                     snap_a: snap_a.as_ptr(),
                     snap_b: snap_b.as_mut_ptr(),
                     lo,
@@ -506,6 +560,7 @@ impl SwitchEngine {
     /// freshly computed row-aligned plan.
     fn build_shira_tasks(
         &mut self,
+        w: &mut WeightStore,
         a: &ShiraAdapter,
         plans: Option<&Vec<ShardPlan>>,
         threads: usize,
@@ -523,8 +578,8 @@ impl SwitchEngine {
                 .get_mut(target.as_str())
                 .expect("arena buffer exists for active target");
             debug_assert_eq!(buf.len(), delta.nnz());
-            let w = self.weights.get_mut(target);
-            debug_assert_eq!((w.rows, w.cols), (delta.rows, delta.cols));
+            let wt = w.get_mut(target);
+            debug_assert_eq!((wt.rows, wt.cols), (delta.rows, delta.cols));
             let plan = match prebuilt {
                 Some(p) if p[ti].total() == delta.nnz() => p[ti],
                 Some(_) => {
@@ -539,7 +594,7 @@ impl SwitchEngine {
                     continue;
                 }
                 self.tasks.push(ShardTask {
-                    w: w.data.as_mut_ptr(),
+                    w: wt.data.as_mut_ptr(),
                     snap: buf.as_mut_ptr(),
                     idx: delta.idx.as_ptr(),
                     delta: delta.delta.as_ptr(),
@@ -565,25 +620,29 @@ impl SwitchEngine {
         self.plan_mismatches += n;
     }
 
-    /// Fuse a LoRA adapter (HF pipeline's fuse stage).  Convenience
-    /// wrapper that deep-clones; prefer [`Self::switch_to_lora_shared`]
-    /// on hot paths.
-    pub fn switch_to_lora(&mut self, a: &LoraAdapter) -> SwitchTiming {
-        self.switch_to_lora_shared(Arc::new(a.clone()))
+    /// Fuse a LoRA adapter into `w` (HF pipeline's fuse stage).
+    /// Convenience wrapper that deep-clones; prefer
+    /// [`Self::switch_to_lora_shared`] on hot paths.
+    pub fn switch_to_lora(&mut self, w: &mut WeightStore, a: &LoraAdapter) -> SwitchTiming {
+        self.switch_to_lora_shared(w, Arc::new(a.clone()))
     }
 
     /// Zero-copy LoRA fuse: the engine keeps the `Arc` (no tensor clone).
-    pub fn switch_to_lora_shared(&mut self, a: Arc<LoraAdapter>) -> SwitchTiming {
-        let mut t = self.revert_timing();
+    pub fn switch_to_lora_shared(
+        &mut self,
+        w: &mut WeightStore,
+        a: Arc<LoraAdapter>,
+    ) -> SwitchTiming {
+        let mut t = self.revert_timing(w);
         let t0 = Instant::now();
         let pool = self.pool.clone();
         for lt in &a.tensors {
-            let w = self.weights.get_mut(&lt.target);
+            let wt = w.get_mut(&lt.target);
             match &pool {
-                Some(p) if w.numel() >= PAR_MIN_NNZ && p.threads() > 1 => {
-                    w.add_outer_product_par(&lt.a, &lt.b, a.scale, p);
+                Some(p) if wt.numel() >= PAR_MIN_NNZ && p.threads() > 1 => {
+                    wt.add_outer_product_par(&lt.a, &lt.b, a.scale, p);
                 }
-                _ => w.add_outer_product(&lt.a, &lt.b, a.scale),
+                _ => wt.add_outer_product(&lt.a, &lt.b, a.scale),
             }
         }
         t.fuse_us += t0.elapsed().as_secs_f64() * 1e6;
@@ -592,12 +651,13 @@ impl SwitchEngine {
         t
     }
 
-    /// Revert to base weights; returns the time spent (unfuse stage).
-    pub fn revert(&mut self) -> SwitchTiming {
-        self.revert_timing()
+    /// Revert `w` to base values for whatever is applied; returns the
+    /// time spent (unfuse stage).
+    pub fn revert(&mut self, w: &mut WeightStore) -> SwitchTiming {
+        self.revert_timing(w)
     }
 
-    fn revert_timing(&mut self) -> SwitchTiming {
+    fn revert_timing(&mut self, w: &mut WeightStore) -> SwitchTiming {
         let mut t = SwitchTiming::default();
         let t0 = Instant::now();
         match std::mem::replace(&mut self.active, Active::None) {
@@ -612,7 +672,8 @@ impl SwitchEngine {
                 };
                 match pool {
                     Some(pool) => {
-                        self.build_shira_tasks(&adapter, plans.as_deref(), pool.threads(), false);
+                        let threads = pool.threads();
+                        self.build_shira_tasks(w, &adapter, plans.as_deref(), threads, false);
                         let tasks = &self.tasks;
                         pool.scoped_for(tasks.len(), |i| {
                             // SAFETY: same disjointness contract as apply.
@@ -626,7 +687,7 @@ impl SwitchEngine {
                                 .arena
                                 .get(target.as_str())
                                 .expect("snapshot exists for active adapter");
-                            delta.restore(self.weights.get_mut(target), snap);
+                            delta.restore(w.get_mut(target), snap);
                         }
                     }
                 }
@@ -634,12 +695,12 @@ impl SwitchEngine {
             Active::Lora { adapter } => {
                 let pool = self.pool.clone();
                 for lt in &adapter.tensors {
-                    let w = self.weights.get_mut(&lt.target);
+                    let wt = w.get_mut(&lt.target);
                     match &pool {
-                        Some(p) if w.numel() >= PAR_MIN_NNZ && p.threads() > 1 => {
-                            w.sub_outer_product_par(&lt.a, &lt.b, adapter.scale, p);
+                        Some(p) if wt.numel() >= PAR_MIN_NNZ && p.threads() > 1 => {
+                            wt.sub_outer_product_par(&lt.a, &lt.b, adapter.scale, p);
                         }
-                        _ => w.sub_outer_product(&lt.a, &lt.b, adapter.scale),
+                        _ => wt.sub_outer_product(&lt.a, &lt.b, adapter.scale),
                     }
                 }
             }
@@ -651,13 +712,18 @@ impl SwitchEngine {
     /// Full HF-style pipeline for one adapter visit, with per-stage timers
     /// (paper Table 5): load (deserialize) → fuse → [caller infers] is
     /// simulated by apply/revert around a no-op → unfuse → unload (drop).
-    pub fn hf_pipeline_shira(&mut self, bytes: &[u8], alpha: f32) -> SwitchTiming {
+    pub fn hf_pipeline_shira(
+        &mut self,
+        w: &mut WeightStore,
+        bytes: &[u8],
+        alpha: f32,
+    ) -> SwitchTiming {
         let t0 = Instant::now();
         let adapter = crate::adapter::io::decode_shira(bytes).expect("valid adapter");
         let load_us = t0.elapsed().as_secs_f64() * 1e6;
-        let mut t = self.switch_to_shira_shared(Arc::new(adapter), alpha);
+        let mut t = self.switch_to_shira_shared(w, Arc::new(adapter), alpha);
         t.load_us = load_us;
-        let mut t2 = self.revert();
+        let mut t2 = self.revert(w);
         let t1 = Instant::now();
         t2.unload_us = t1.elapsed().as_secs_f64() * 1e6;
         t.unfuse_us = t2.unfuse_us;
@@ -667,13 +733,13 @@ impl SwitchEngine {
 
     /// LoRA version of [`Self::hf_pipeline_shira`]: load → dense fuse →
     /// unfuse → unload, with per-stage timers.
-    pub fn hf_pipeline_lora(&mut self, bytes: &[u8]) -> SwitchTiming {
+    pub fn hf_pipeline_lora(&mut self, w: &mut WeightStore, bytes: &[u8]) -> SwitchTiming {
         let t0 = Instant::now();
         let adapter = crate::adapter::io::decode_lora(bytes).expect("valid adapter");
         let load_us = t0.elapsed().as_secs_f64() * 1e6;
-        let mut t = self.switch_to_lora_shared(Arc::new(adapter));
+        let mut t = self.switch_to_lora_shared(w, Arc::new(adapter));
         t.load_us = load_us;
-        let mut t2 = self.revert();
+        let mut t2 = self.revert(w);
         let t1 = Instant::now();
         t2.unload_us = t1.elapsed().as_secs_f64() * 1e6;
         t.unfuse_us = t2.unfuse_us;
@@ -760,13 +826,14 @@ mod tests {
     fn shira_switch_and_revert_is_bit_exact() {
         let mut rng = Rng::new(1);
         let base = weights();
-        let mut eng = SwitchEngine::new(base.clone());
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::new();
         let a = shira(&mut rng, "a");
-        eng.switch_to_shira(&a, 1.0);
+        eng.switch_to_shira(&mut w, &a, 1.0);
         assert_eq!(eng.active_name(), Some("a"));
-        assert!(eng.weights.max_abs_diff(&base) > 0.0);
-        eng.revert();
-        assert!(eng.weights.bit_equal(&base)); // the SHiRA exactness claim
+        assert!(w.max_abs_diff(&base) > 0.0);
+        eng.revert(&mut w);
+        assert!(w.bit_equal(&base)); // the SHiRA exactness claim
         assert_eq!(eng.active_name(), None);
     }
 
@@ -774,22 +841,24 @@ mod tests {
     fn parallel_engine_bit_identical_to_serial_for_any_thread_count() {
         let (base, a) = big_weights_and_adapter(11);
         // Serial reference.
-        let mut serial = SwitchEngine::new(base.clone());
-        serial.switch_to_shira(&a, 0.9);
-        let applied = serial.weights.clone();
-        serial.revert();
-        assert!(serial.weights.bit_equal(&base));
+        let mut ws = base.clone();
+        let mut serial = SwitchEngine::new();
+        serial.switch_to_shira(&mut ws, &a, 0.9);
+        let applied = ws.clone();
+        serial.revert(&mut ws);
+        assert!(ws.bit_equal(&base));
         for threads in [1usize, 2, 4] {
             let pool = Arc::new(ThreadPool::new(threads));
-            let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
-            eng.switch_to_shira(&a, 0.9);
+            let mut w = base.clone();
+            let mut eng = SwitchEngine::with_pool(Some(pool));
+            eng.switch_to_shira(&mut w, &a, 0.9);
             assert!(
-                eng.weights.bit_equal(&applied),
+                w.bit_equal(&applied),
                 "apply differs at threads={threads}"
             );
-            eng.revert();
+            eng.revert(&mut w);
             assert!(
-                eng.weights.bit_equal(&base),
+                w.bit_equal(&base),
                 "revert differs at threads={threads}"
             );
         }
@@ -801,15 +870,16 @@ mod tests {
         let (_, b) = big_weights_and_adapter(13);
         let b = ShiraAdapter { name: "b".into(), ..b };
         let pool = Arc::new(ThreadPool::new(4));
-        let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::with_pool(Some(pool));
         // Many switches through the same targets: snapshots stay correct.
         for round in 0..6 {
             let (adapter, alpha) = if round % 2 == 0 { (&a, 1.0) } else { (&b, 0.7) };
-            eng.switch_to_shira(adapter, alpha);
+            eng.switch_to_shira(&mut w, adapter, alpha);
             assert_eq!(eng.active_name(), Some(adapter.name.as_str()));
         }
-        eng.revert();
-        assert!(eng.weights.bit_equal(&base));
+        eng.revert(&mut w);
+        assert!(w.bit_equal(&base));
         assert_eq!(eng.switches, 6);
     }
 
@@ -825,25 +895,28 @@ mod tests {
                 .map(|(_, d)| d.shard(shards_for(d.nnz(), 4)))
                 .collect(),
         );
-        let mut reference = SwitchEngine::new(base.clone());
-        reference.switch_to_shira_shared(Arc::clone(&a), 0.8);
-        let applied = reference.weights.clone();
+        let mut wr = base.clone();
+        let mut reference = SwitchEngine::new();
+        reference.switch_to_shira_shared(&mut wr, Arc::clone(&a), 0.8);
+        let applied = wr.clone();
         for threads in [2usize, 4] {
             let pool = Arc::new(ThreadPool::new(threads));
-            let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
-            eng.switch_to_shira_planned(Arc::clone(&a), Some(Arc::clone(&plans)), 0.8);
-            assert!(eng.weights.bit_equal(&applied), "threads={threads}");
-            eng.revert();
-            assert!(eng.weights.bit_equal(&base), "revert threads={threads}");
+            let mut w = base.clone();
+            let mut eng = SwitchEngine::with_pool(Some(pool));
+            eng.switch_to_shira_planned(&mut w, Arc::clone(&a), Some(Arc::clone(&plans)), 0.8);
+            assert!(w.bit_equal(&applied), "threads={threads}");
+            eng.revert(&mut w);
+            assert!(w.bit_equal(&base), "revert threads={threads}");
         }
         // A mismatched plan set is ignored, not trusted.
         let bogus: Arc<Vec<ShardPlan>> = Arc::new(Vec::new());
         let pool = Arc::new(ThreadPool::new(2));
-        let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
-        eng.switch_to_shira_planned(Arc::clone(&a), Some(bogus), 0.8);
-        assert!(eng.weights.bit_equal(&applied));
-        eng.revert();
-        assert!(eng.weights.bit_equal(&base));
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::with_pool(Some(pool));
+        eng.switch_to_shira_planned(&mut w, Arc::clone(&a), Some(bogus), 0.8);
+        assert!(w.bit_equal(&applied));
+        eng.revert(&mut w);
+        assert!(w.bit_equal(&base));
     }
 
     /// Adapter with the same targets as [`big_weights_and_adapter`]'s but
@@ -882,7 +955,7 @@ mod tests {
 
     #[test]
     fn transition_bit_identical_to_revert_apply_sequences() {
-        // The tentpole acceptance property at the engine level: arbitrary
+        // The PR-4 acceptance property at the engine level: arbitrary
         // switch sequences via `transition_to` — including alpha changes,
         // a self-transition, and disjoint / heavy-overlap supports —
         // produce bit-identical weights to revert+apply, at 1 and 4
@@ -900,31 +973,32 @@ mod tests {
         ];
         for threads in [1usize, 4] {
             let pool = Arc::new(ThreadPool::new(threads));
-            let mut direct =
-                SwitchEngine::with_pool(base.clone(), Some(Arc::clone(&pool)));
-            let mut reference = SwitchEngine::with_pool(base.clone(), Some(pool));
+            let mut wd = base.clone();
+            let mut wr = base.clone();
+            let mut direct = SwitchEngine::with_pool(Some(Arc::clone(&pool)));
+            let mut reference = SwitchEngine::with_pool(Some(pool));
             for (step, &(adapter, alpha)) in seq.iter().enumerate() {
                 let shared = Arc::new(adapter.clone());
-                reference.switch_to_shira_shared(Arc::clone(&shared), alpha);
+                reference.switch_to_shira_shared(&mut wr, Arc::clone(&shared), alpha);
                 if step == 0 {
-                    direct.switch_to_shira_shared(Arc::clone(&shared), alpha);
+                    direct.switch_to_shira_shared(&mut wd, Arc::clone(&shared), alpha);
                 } else {
                     let prev = seq[step - 1].0;
                     let tp = AdapterTransition::build(prev, adapter, threads)
                         .expect("same target sets");
-                    let (_t, path) = direct.transition_to(shared, None, &tp, alpha);
+                    let (_t, path) = direct.transition_to(&mut wd, shared, None, &tp, alpha);
                     assert_eq!(path, SwitchPath::Transition, "step {step}");
                 }
                 assert!(
-                    direct.weights.bit_equal(&reference.weights),
+                    wd.bit_equal(&wr),
                     "step {step} threads={threads}"
                 );
             }
             assert_eq!(direct.transitions, (seq.len() - 1) as u64);
             assert_eq!(direct.switches, seq.len() as u64);
             // The arena must hold the last adapter's true base snapshot.
-            direct.revert();
-            assert!(direct.weights.bit_equal(&base), "threads={threads}");
+            direct.revert(&mut wd);
+            assert!(wd.bit_equal(&base), "threads={threads}");
         }
     }
 
@@ -935,33 +1009,37 @@ mod tests {
         let c = overlapping_adapter(&a, "c", 0.5, 26);
         let wrong = AdapterTransition::build(&c, &b, 2).unwrap(); // c→b, not a→b
         let pool = Arc::new(ThreadPool::new(2));
-        let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
-        eng.switch_to_shira(&a, 1.0);
-        let (_t, path) = eng.transition_to(Arc::new(b.clone()), None, &wrong, 1.0);
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::with_pool(Some(pool));
+        eng.switch_to_shira(&mut w, &a, 1.0);
+        let (_t, path) = eng.transition_to(&mut w, Arc::new(b.clone()), None, &wrong, 1.0);
         assert_eq!(path, SwitchPath::Fallback);
         assert_eq!(eng.transitions, 0);
         // Fallback still produced the correct state.
-        let mut reference = SwitchEngine::new(base.clone());
-        reference.switch_to_shira(&a, 1.0);
-        reference.switch_to_shira(&b, 1.0);
-        assert!(eng.weights.bit_equal(&reference.weights));
+        let mut wr = base.clone();
+        let mut reference = SwitchEngine::new();
+        reference.switch_to_shira(&mut wr, &a, 1.0);
+        reference.switch_to_shira(&mut wr, &b, 1.0);
+        assert!(w.bit_equal(&wr));
         // No active adapter at all → fallback too.
-        let mut cold = SwitchEngine::new(base.clone());
+        let mut wc = base.clone();
+        let mut cold = SwitchEngine::new();
         let tp = AdapterTransition::build(&a, &b, 1).unwrap();
-        let (_t, path) = cold.transition_to(Arc::new(b), None, &tp, 1.0);
+        let (_t, path) = cold.transition_to(&mut wc, Arc::new(b), None, &tp, 1.0);
         assert_eq!(path, SwitchPath::Fallback);
     }
 
     #[test]
     fn mismatched_store_plans_are_counted() {
-        // Satellite: silently-ignored ShardPlan sets now increment a
-        // visible counter (bytes are unaffected either way).
+        // Silently-ignored ShardPlan sets increment a visible counter
+        // (bytes are unaffected either way).
         let (base, a) = big_weights_and_adapter(27);
         let a = Arc::new(a);
         let pool = Arc::new(ThreadPool::new(2));
-        let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::with_pool(Some(pool));
         let bogus: Arc<Vec<ShardPlan>> = Arc::new(Vec::new());
-        eng.switch_to_shira_planned(Arc::clone(&a), Some(bogus), 1.0);
+        eng.switch_to_shira_planned(&mut w, Arc::clone(&a), Some(bogus), 1.0);
         assert!(eng.plan_mismatches >= 1, "wrong-length plan set counted");
         let before = eng.plan_mismatches;
         // A matching plan set adds nothing.
@@ -971,9 +1049,9 @@ mod tests {
                 .map(|(_, d)| d.shard(shards_for(d.nnz(), 2)))
                 .collect(),
         );
-        eng.switch_to_shira_planned(Arc::clone(&a), Some(good), 1.0);
-        eng.revert();
-        assert!(eng.weights.bit_equal(&base));
+        eng.switch_to_shira_planned(&mut w, Arc::clone(&a), Some(good), 1.0);
+        eng.revert(&mut w);
+        assert!(w.bit_equal(&base));
         // the mismatched-plan revert already happened inside the second
         // switch; only the first (bogus) dispatch should have counted
         assert_eq!(eng.plan_mismatches, before + 1, "revert of bogus-planned switch");
@@ -983,11 +1061,12 @@ mod tests {
     fn lora_fuse_unfuse_has_float_drift_but_small() {
         let mut rng = Rng::new(2);
         let base = weights();
-        let mut eng = SwitchEngine::new(base.clone());
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::new();
         let l = lora(&mut rng, "l");
-        eng.switch_to_lora(&l);
-        eng.revert();
-        let drift = eng.weights.max_abs_diff(&base);
+        eng.switch_to_lora(&mut w, &l);
+        eng.revert(&mut w);
+        let drift = w.max_abs_diff(&base);
         assert!(drift < 1e-4, "drift={drift}");
     }
 
@@ -1005,14 +1084,16 @@ mod tests {
             scale: 1.5,
             tensors: vec![LoraTensor { target: "w".into(), a, b }],
         };
-        let mut serial = SwitchEngine::new(base.clone());
-        serial.switch_to_lora(&l);
+        let mut ws = base.clone();
+        let mut serial = SwitchEngine::new();
+        serial.switch_to_lora(&mut ws, &l);
         for threads in [2usize, 4] {
             let pool = Arc::new(ThreadPool::new(threads));
-            let mut eng = SwitchEngine::with_pool(base.clone(), Some(pool));
-            eng.switch_to_lora(&l);
-            assert!(eng.weights.bit_equal(&serial.weights), "threads={threads}");
-            eng.revert();
+            let mut w = base.clone();
+            let mut eng = SwitchEngine::with_pool(Some(pool));
+            eng.switch_to_lora(&mut w, &l);
+            assert!(w.bit_equal(&ws), "threads={threads}");
+            eng.revert(&mut w);
         }
     }
 
@@ -1020,15 +1101,16 @@ mod tests {
     fn switching_between_adapters_reverts_previous() {
         let mut rng = Rng::new(3);
         let base = weights();
-        let mut eng = SwitchEngine::new(base.clone());
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::new();
         let a = shira(&mut rng, "a");
         let b = shira(&mut rng, "b");
-        eng.switch_to_shira(&a, 1.0);
-        eng.switch_to_shira(&b, 1.0);
+        eng.switch_to_shira(&mut w, &a, 1.0);
+        eng.switch_to_shira(&mut w, &b, 1.0);
         assert_eq!(eng.active_name(), Some("b"));
         // reverting b restores base exactly (a was reverted on switch)
-        eng.revert();
-        assert!(eng.weights.bit_equal(&base));
+        eng.revert(&mut w);
+        assert!(w.bit_equal(&base));
         assert_eq!(eng.switches, 2);
     }
 
@@ -1036,11 +1118,12 @@ mod tests {
     fn cross_family_switch_shira_then_lora() {
         let mut rng = Rng::new(4);
         let base = weights();
-        let mut eng = SwitchEngine::new(base.clone());
-        eng.switch_to_shira(&shira(&mut rng, "s"), 0.5);
-        eng.switch_to_lora(&lora(&mut rng, "l"));
-        eng.revert();
-        assert!(eng.weights.max_abs_diff(&base) < 1e-4);
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::new();
+        eng.switch_to_shira(&mut w, &shira(&mut rng, "s"), 0.5);
+        eng.switch_to_lora(&mut w, &lora(&mut rng, "l"));
+        eng.revert(&mut w);
+        assert!(w.max_abs_diff(&base) < 1e-4);
     }
 
     #[test]
@@ -1048,12 +1131,14 @@ mod tests {
         let mut rng = Rng::new(5);
         let base = weights();
         let a = shira(&mut rng, "a");
-        let mut e1 = SwitchEngine::new(base.clone());
-        let mut e2 = SwitchEngine::new(base.clone());
-        e1.switch_to_shira(&a, 1.0);
-        e2.switch_to_shira(&a, 0.5);
-        let d1 = e1.weights.max_abs_diff(&base);
-        let d2 = e2.weights.max_abs_diff(&base);
+        let mut w1 = base.clone();
+        let mut w2 = base.clone();
+        let mut e1 = SwitchEngine::new();
+        let mut e2 = SwitchEngine::new();
+        e1.switch_to_shira(&mut w1, &a, 1.0);
+        e2.switch_to_shira(&mut w2, &a, 0.5);
+        let d1 = w1.max_abs_diff(&base);
+        let d2 = w2.max_abs_diff(&base);
         assert!((d2 - d1 * 0.5).abs() < 1e-5, "{d1} {d2}");
     }
 
@@ -1061,20 +1146,29 @@ mod tests {
     fn hf_pipeline_timings_populated() {
         let mut rng = Rng::new(6);
         let base = weights();
-        let mut eng = SwitchEngine::new(base.clone());
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::new();
         let sa = shira(&mut rng, "s");
         let sbytes = io::encode_shira(&sa);
-        let t = eng.hf_pipeline_shira(&sbytes, 1.0);
+        let t = eng.hf_pipeline_shira(&mut w, &sbytes, 1.0);
         assert!(t.load_us > 0.0);
         assert!(t.fuse_us > 0.0);
-        assert!(eng.weights.bit_equal(&base));
+        assert!(w.bit_equal(&base));
         let lbytes = io::encode_lora(&lora(&mut rng, "l"));
-        let t2 = eng.hf_pipeline_lora(&lbytes);
+        let t2 = eng.hf_pipeline_lora(&mut w, &lbytes);
         assert!(t2.fuse_us > 0.0);
         assert!(t2.total_us() >= t2.fuse_us);
     }
 
     #[test]
+    fn switch_path_names() {
+        assert_eq!(SwitchPath::Transition.name(), "transition");
+        assert_eq!(SwitchPath::Fallback.name(), "fallback");
+        assert_eq!(SwitchPath::Fused.name(), "fused");
+    }
+
+    #[test]
+    #[allow(deprecated)]
     fn policy_parse() {
         assert_eq!(Policy::parse("shira"), Some(Policy::ShiraScatter));
         assert_eq!(Policy::parse("fusion"), Some(Policy::ShiraFusion));

@@ -16,15 +16,28 @@ use crate::util::rng::Rng;
 /// Number of distinct content concepts (paper: 9 paintings / 6 bluefire).
 pub const N_CONCEPTS: usize = 9;
 
+/// The two trained styles (paper §4.2's bluefire and paintings LoRAs).
+///
+/// # Examples
+///
+/// ```
+/// use shira::data::style::Style;
+/// assert_eq!(Style::parse("bluefire"), Some(Style::Bluefire));
+/// assert_eq!(Style::Paintings.name(), "paintings");
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Style {
+    /// The "blue fire effect" style.
     Bluefire,
+    /// The "paintings" texture style.
     Paintings,
 }
 
+/// Both styles, in report order.
 pub const ALL_STYLES: [Style; 2] = [Style::Bluefire, Style::Paintings];
 
 impl Style {
+    /// Stable CLI / report name of the style.
     pub fn name(&self) -> &'static str {
         match self {
             Style::Bluefire => "bluefire",
@@ -32,6 +45,7 @@ impl Style {
         }
     }
 
+    /// Parse a style by its [`Self::name`].
     pub fn parse(s: &str) -> Option<Style> {
         ALL_STYLES.iter().copied().find(|x| x.name() == s)
     }
@@ -50,7 +64,9 @@ impl Style {
 /// content renderer, and the two style transforms.
 #[derive(Clone, Debug)]
 pub struct StyleWorld {
+    /// Content-latent dimensionality.
     pub d_z: usize,
+    /// Image-vector dimensionality.
     pub d_img: usize,
     /// concept anchors in z-space, (N_CONCEPTS, d_z)
     anchors: Vec<Vec<f32>>,
@@ -62,6 +78,8 @@ pub struct StyleWorld {
 }
 
 impl StyleWorld {
+    /// Deterministic world from a seed: concept anchors, the ground-truth
+    /// renderer, and both style transforms.
     pub fn new(d_z: usize, d_img: usize, seed: u64) -> Self {
         let root = Rng::new(seed);
         let mut anchors = Vec::with_capacity(N_CONCEPTS);
@@ -191,12 +209,16 @@ impl StyleWorld {
 
 /// A (z, styled target) supervised pair set for adapter finetuning.
 pub struct StyleDataset {
+    /// The style this dataset supervises.
     pub style: Style,
+    /// The world the pairs are rendered in.
     pub world: StyleWorld,
     seed: u64,
 }
 
 impl StyleDataset {
+    /// Dataset for `style` in `world` (seed reserved for future
+    /// subsampling; batches draw from the caller's rng).
     pub fn new(world: StyleWorld, style: Style, seed: u64) -> Self {
         StyleDataset { style, world, seed }
     }

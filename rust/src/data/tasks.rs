@@ -16,27 +16,51 @@
 
 use crate::util::rng::Rng;
 
-/// Fixed special tokens (outside every dialect).
+/// Padding token (outside every dialect).
 pub const PAD: i32 = 0;
+/// Premise/candidates separator token.
 pub const SEP: i32 = 1;
+/// Answer-slot marker: the model predicts at the position before it.
 pub const QUERY: i32 = 2;
+/// Boolean "yes" answer token.
 pub const YES: i32 = 3;
+/// Boolean "no" answer token.
 pub const NO: i32 = 4;
 const DIALECT_BASE: i32 = 16;
 const DIALECT_SIZE: i32 = 28;
 
+/// The eight synthetic task families, standing in for the paper's
+/// commonsense suite (Tables 2-3).
+///
+/// # Examples
+///
+/// ```
+/// use shira::data::tasks::Task;
+/// assert_eq!(Task::parse("arc_e"), Some(Task::ArcEasy));
+/// assert_eq!(Task::ArcEasy.name(), "arc_e");
+/// assert_eq!(Task::parse("nope"), None);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Task {
+    /// Entailment-style probe presence (BoolQ proxy).
     BoolQ,
+    /// Goal/solution pairing (PIQA proxy).
     Piqa,
+    /// Social permutation lookup (SIQA proxy).
     Siqa,
+    /// Fact recall (OpenBookQA proxy).
     Obqa,
+    /// Marker-selected coreference (WinoGrande proxy).
     Winogrande,
+    /// Chain continuation (HellaSwag proxy).
     HellaSwag,
+    /// Single-hop fact lookup (ARC-easy proxy).
     ArcEasy,
+    /// Two-hop fact composition (ARC-challenge proxy).
     ArcChallenge,
 }
 
+/// Every task family, in the canonical report order.
 pub const ALL_TASKS: [Task; 8] = [
     Task::BoolQ,
     Task::Piqa,
@@ -49,6 +73,7 @@ pub const ALL_TASKS: [Task; 8] = [
 ];
 
 impl Task {
+    /// Stable CLI / report name of the task.
     pub fn name(&self) -> &'static str {
         match self {
             Task::BoolQ => "boolq",
@@ -62,6 +87,7 @@ impl Task {
         }
     }
 
+    /// Parse a task by its [`Self::name`].
     pub fn parse(s: &str) -> Option<Task> {
         ALL_TASKS.iter().copied().find(|t| t.name() == s)
     }
@@ -84,6 +110,7 @@ impl Task {
 /// One multiple-choice example.
 #[derive(Clone, Debug)]
 pub struct Example {
+    /// The task family that generated this example.
     pub task: Task,
     /// Input tokens, length = seq_len; the model predicts at the LAST slot.
     pub tokens: Vec<i32>,
@@ -255,9 +282,13 @@ pub fn generate(task: Task, seq_len: usize, seed: u64, rng: &mut Rng) -> Example
 /// A training batch in the shape the AOT train steps expect.
 #[derive(Clone, Debug)]
 pub struct Batch {
-    pub x: Vec<i32>,    // (B, T) inputs
-    pub y: Vec<i32>,    // (B, T) next-token targets
-    pub mask: Vec<f32>, // (B, T) loss mask (answer position only)
+    /// (B, T) input tokens.
+    pub x: Vec<i32>,
+    /// (B, T) next-token targets.
+    pub y: Vec<i32>,
+    /// (B, T) loss mask (answer position only for task batches).
+    pub mask: Vec<f32>,
+    /// The examples the batch was packed from (empty for pretraining).
     pub examples: Vec<Example>,
 }
 

@@ -1,41 +1,68 @@
 //! Request-trace generation for the serving experiments (Appendix A/B):
-//! streams of inference requests tagged with the adapter they need.
+//! streams of inference requests, each carrying the [`Selection`] that
+//! must be resident when its batch executes — base weights, one adapter,
+//! or a weighted adapter set.
 
+use crate::coordinator::selection::Selection;
 use crate::util::rng::Rng;
 
+/// One serving request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Monotonic request id within the trace.
     pub id: u64,
-    /// Adapter name ("bluefire", "task/boolq", ...); empty = base model.
-    pub adapter: String,
+    /// What must be resident on the weights for this request: the base
+    /// model, a single adapter, or a fused set (see [`Selection`]).
+    pub selection: Selection,
     /// Virtual arrival time (microseconds from trace start).
     pub arrival_us: u64,
     /// Seed for the request's payload (tokens / latent).
     pub payload_seed: u64,
 }
 
+/// How a trace interleaves its selections.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TracePattern {
-    /// Each request picks an adapter uniformly — worst case for switching.
+    /// Each request picks a selection uniformly — worst case for switching.
     UniformMix,
-    /// Runs of the same adapter (length ~ `burst`), the mobile-app pattern
-    /// the paper's rapid-switching story targets.
-    Bursty { burst: usize },
-    /// Strict rotation through adapters — adversarial for affinity
+    /// Runs of the same selection (length ~ `burst`), the mobile-app
+    /// pattern the paper's rapid-switching story targets.
+    Bursty {
+        /// Mean run length (actual runs are 1..2·burst).
+        burst: usize,
+    },
+    /// Strict rotation through selections — adversarial for affinity
     /// scheduling, maximal switch count.
     RoundRobin,
 }
 
-/// Generate a trace of `n` requests over `adapters` with Poisson-ish
+/// Generate a trace of `n` requests over `selections` with Poisson-ish
 /// arrivals at `rate_per_sec`.
+///
+/// # Examples
+///
+/// ```
+/// use shira::coordinator::selection::Selection;
+/// use shira::data::trace::{generate_trace, TracePattern};
+///
+/// let sels = vec![
+///     Selection::Base,
+///     Selection::single("style"),
+///     Selection::set(&[("style", 0.5), ("task", 1.0)]),
+/// ];
+/// let trace = generate_trace(&sels, 12, TracePattern::RoundRobin, 1e4, 7);
+/// assert_eq!(trace.len(), 12);
+/// assert_eq!(trace[0].selection, Selection::Base);
+/// assert_eq!(trace[1].selection, Selection::single("style"));
+/// ```
 pub fn generate_trace(
-    adapters: &[String],
+    selections: &[Selection],
     n: usize,
     pattern: TracePattern,
     rate_per_sec: f64,
     seed: u64,
 ) -> Vec<Request> {
-    assert!(!adapters.is_empty());
+    assert!(!selections.is_empty());
     let mut rng = Rng::new(seed).stream("trace");
     let mut out = Vec::with_capacity(n);
     let mut t_us = 0u64;
@@ -44,11 +71,11 @@ pub fn generate_trace(
     let mut run_left = 0usize;
     for id in 0..n {
         let a = match pattern {
-            TracePattern::UniformMix => rng.below(adapters.len()),
-            TracePattern::RoundRobin => id % adapters.len(),
+            TracePattern::UniformMix => rng.below(selections.len()),
+            TracePattern::RoundRobin => id % selections.len(),
             TracePattern::Bursty { burst } => {
                 if run_left == 0 {
-                    current = rng.below(adapters.len());
+                    current = rng.below(selections.len());
                     run_left = 1 + rng.below(2 * burst);
                 }
                 run_left -= 1;
@@ -60,7 +87,7 @@ pub fn generate_trace(
         t_us += gap.max(1.0) as u64;
         out.push(Request {
             id: id as u64,
-            adapter: adapters[a].clone(),
+            selection: selections[a].clone(),
             arrival_us: t_us,
             payload_seed: rng.next_u64(),
         });
@@ -68,12 +95,49 @@ pub fn generate_trace(
     out
 }
 
-/// Number of adapter *switches* an in-order scan of the trace would incur —
-/// the quantity SHiRA's scatter path makes cheap.
+/// Rotating two-member set selections over `names`: member `i` paired
+/// with member `i+1` (wrapping), the first at weight 1 and the second at
+/// `weight` — the canonical synthetic fused-set workload shared by the
+/// serve CLI, the serving bench and the e2e example.
+///
+/// # Examples
+///
+/// ```
+/// use shira::data::trace::rotating_sets;
+/// let names = vec!["a".to_string(), "b".to_string()];
+/// let sets = rotating_sets(&names, 0.5);
+/// assert_eq!(sets.len(), 2);
+/// assert_eq!(sets[0].key(), "a@1+b@0.5");
+/// ```
+pub fn rotating_sets(names: &[String], weight: f32) -> Vec<Selection> {
+    (0..names.len())
+        .map(|i| {
+            Selection::set(&[
+                (names[i].as_str(), 1.0),
+                (names[(i + 1) % names.len()].as_str(), weight),
+            ])
+        })
+        .collect()
+}
+
+/// The canonical mixed-selection workload: base, every single, and
+/// rotating two-member sets at half strength — one list exercising all
+/// three routing arms per-request.
+pub fn mixed_selections(names: &[String]) -> Vec<Selection> {
+    let mut sels = vec![Selection::Base];
+    sels.extend(Selection::singles(names));
+    if names.len() > 1 {
+        sels.extend(rotating_sets(names, 0.5));
+    }
+    sels
+}
+
+/// Number of selection *switches* an in-order scan of the trace would
+/// incur — the quantity SHiRA's scatter path makes cheap.
 pub fn switch_count(trace: &[Request]) -> usize {
     trace
         .windows(2)
-        .filter(|w| w[0].adapter != w[1].adapter)
+        .filter(|w| w[0].selection != w[1].selection)
         .count()
 }
 
@@ -81,28 +145,28 @@ pub fn switch_count(trace: &[Request]) -> usize {
 mod tests {
     use super::*;
 
-    fn names(n: usize) -> Vec<String> {
-        (0..n).map(|i| format!("a{i}")).collect()
+    fn singles(n: usize) -> Vec<Selection> {
+        (0..n).map(|i| Selection::single(&format!("a{i}"))).collect()
     }
 
     #[test]
     fn trace_sorted_and_complete() {
-        let t = generate_trace(&names(3), 100, TracePattern::UniformMix, 1000.0, 1);
+        let t = generate_trace(&singles(3), 100, TracePattern::UniformMix, 1000.0, 1);
         assert_eq!(t.len(), 100);
         assert!(t.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
-        assert!(t.iter().all(|r| r.adapter.starts_with('a')));
+        assert!(t.iter().all(|r| r.selection.key().starts_with('a')));
     }
 
     #[test]
     fn round_robin_maximizes_switches() {
-        let rr = generate_trace(&names(4), 100, TracePattern::RoundRobin, 1e3, 2);
+        let rr = generate_trace(&singles(4), 100, TracePattern::RoundRobin, 1e3, 2);
         assert_eq!(switch_count(&rr), 99);
     }
 
     #[test]
     fn bursty_reduces_switches() {
-        let b = generate_trace(&names(4), 400, TracePattern::Bursty { burst: 16 }, 1e3, 3);
-        let u = generate_trace(&names(4), 400, TracePattern::UniformMix, 1e3, 3);
+        let b = generate_trace(&singles(4), 400, TracePattern::Bursty { burst: 16 }, 1e3, 3);
+        let u = generate_trace(&singles(4), 400, TracePattern::UniformMix, 1e3, 3);
         assert!(
             switch_count(&b) * 2 < switch_count(&u),
             "bursty {} vs uniform {}",
@@ -113,21 +177,35 @@ mod tests {
 
     #[test]
     fn deterministic_per_seed() {
-        let a = generate_trace(&names(2), 50, TracePattern::UniformMix, 1e3, 9);
-        let b = generate_trace(&names(2), 50, TracePattern::UniformMix, 1e3, 9);
+        let a = generate_trace(&singles(2), 50, TracePattern::UniformMix, 1e3, 9);
+        let b = generate_trace(&singles(2), 50, TracePattern::UniformMix, 1e3, 9);
         for (x, y) in a.iter().zip(b.iter()) {
-            assert_eq!(x.adapter, y.adapter);
+            assert_eq!(x.selection, y.selection);
             assert_eq!(x.arrival_us, y.arrival_us);
         }
     }
 
     #[test]
-    fn uniform_mix_covers_all_adapters() {
-        let t = generate_trace(&names(5), 200, TracePattern::UniformMix, 1e3, 4);
+    fn uniform_mix_covers_all_selections() {
+        let t = generate_trace(&singles(5), 200, TracePattern::UniformMix, 1e3, 4);
         let mut seen = std::collections::HashSet::new();
         for r in &t {
-            seen.insert(r.adapter.clone());
+            seen.insert(r.selection.key());
         }
         assert_eq!(seen.len(), 5);
+    }
+
+    #[test]
+    fn mixed_selection_traces_generate() {
+        let sels = vec![
+            Selection::Base,
+            Selection::single("a"),
+            Selection::set(&[("a", 0.5), ("b", 1.0)]),
+        ];
+        let t = generate_trace(&sels, 60, TracePattern::Bursty { burst: 4 }, 1e3, 5);
+        let keys: std::collections::HashSet<String> =
+            t.iter().map(|r| r.selection.key()).collect();
+        assert_eq!(keys.len(), 3, "all three selection kinds appear");
+        assert!(switch_count(&t) >= 2);
     }
 }

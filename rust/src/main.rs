@@ -16,12 +16,17 @@ use anyhow::{anyhow, Result};
 use shira::adapter::io;
 use shira::adapter::mask::MaskStrategy;
 use shira::config::RunConfig;
-use shira::coordinator::switch::{Policy, SwitchEngine};
+#[allow(deprecated)]
+use shira::coordinator::switch::Policy;
+use shira::coordinator::switch::SwitchEngine;
+use shira::coordinator::selection::Selection;
 use shira::coordinator::server::Server;
 use shira::coordinator::store::StoreConfig;
 use shira::util::threadpool::ThreadPool;
 use shira::data::tasks::{Task, ALL_TASKS};
-use shira::data::trace::{generate_trace, switch_count, TracePattern};
+use shira::data::trace::{
+    generate_trace, mixed_selections, rotating_sets, switch_count, TracePattern,
+};
 use shira::model::weights::WeightStore;
 use shira::repro;
 use shira::runtime::Runtime;
@@ -45,10 +50,11 @@ USAGE: shira <subcommand> [flags]
   train --kind <lora|dora|shira-{struct,rand,wm,grad,snip}|shira-wm-dora>
         [--task <name>|mixture] [--steps N] [--out adapter.bin]
   eval  --adapter <file> [--tasks all|t1,t2] [--eval-examples N]
-  serve --policy <shira|fusion|lora-fuse|unfused> [--pattern bursty|uniform|rr]
-        [--trace-len N] [--adapters N] [--cache-bytes N]
-        [--prefetch-depth N] [--format v1|v2|v2-f16]
+  serve [--pattern bursty|uniform|rr] [--trace-len N] [--adapters N]
+        [--cache-bytes N] [--prefetch-depth N] [--format v1|v2|v2-f16]
         [--plan-cache-bytes N]   (0 disables direct A->B transitions)
+        [--policy <shira|fusion|lora-fuse|unfused>]  (DEPRECATED alias:
+        default serves one mixed trace of base/single/set selections)
   fuse  --out <file> <a.shira> <b.shira> ...
   switch-bench [--dims 512,1024,2048,4096] [--frac 0.02] [--rank 32]
   repro --exp <table1..6|fig4|fig5|fig6|fig7|orthogonality|all> [--fast]
@@ -223,16 +229,15 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let mut weights = base.clone();
     if let Some(path) = args.get("adapter") {
         let path = std::path::Path::new(path);
-        let mut engine = SwitchEngine::new(weights);
+        let mut engine = SwitchEngine::new();
         if let Ok(a) = io::load_shira(path) {
             println!("applying SHiRA adapter '{}' ({} nnz)", a.name, a.param_count());
-            engine.switch_to_shira(&a, args.get_f64("alpha", 1.0)? as f32);
+            engine.switch_to_shira(&mut weights, &a, args.get_f64("alpha", 1.0)? as f32);
         } else {
             let a = io::load_lora(path).map_err(|e| anyhow!("{e}"))?;
             println!("fusing LoRA adapter '{}'", a.name);
-            engine.switch_to_lora(&a);
+            engine.switch_to_lora(&mut weights, &a);
         }
-        weights = engine.weights;
     }
     let task_flag = args.get_or("tasks", "all");
     let tasks: Vec<Task> = if task_flag == "all" {
@@ -251,11 +256,27 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[allow(deprecated)]
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args).map_err(|e| anyhow!(e))?;
     let rt = Runtime::with_default_artifacts()?;
-    let policy = Policy::parse(args.get_or("policy", "shira"))
-        .ok_or_else(|| anyhow!("bad --policy"))?;
+    // --policy survives only as a deprecated alias: it maps onto default
+    // per-request selections.  Without it the trace mixes base, single
+    // and set selections through one server — the new default.
+    let policy = match args.get("policy") {
+        Some(p) => {
+            let pol =
+                Policy::parse(p).ok_or_else(|| anyhow!("bad --policy {p}"))?;
+            shira::log_warn!(
+                "--policy is deprecated: requests carry per-request selections \
+                 now; mapping '{}' onto default selections (omit --policy for \
+                 a mixed base/single/set trace)",
+                pol.name()
+            );
+            Some(pol)
+        }
+        None => None,
+    };
     let pattern = match args.get_or("pattern", "bursty") {
         "bursty" => TracePattern::Bursty { burst: 8 },
         "uniform" => TracePattern::UniformMix,
@@ -278,71 +299,72 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .get_usize("plan-cache-bytes", default_cfg.plan_cache_bytes)?,
     };
     let plan_cache_bytes = store_cfg.plan_cache_bytes;
-    let pool = Arc::new(ThreadPool::host_sized());
-    let mut server = Server::with_store_config(&rt, base, policy, "llama", store_cfg, pool)?;
+    let mut server = Server::builder(&rt, base)
+        .model("llama")
+        .store_config(store_cfg)
+        .pool(Arc::new(ThreadPool::host_sized()))
+        .unfused_lora(matches!(policy, Some(Policy::LoraUnfused)))
+        .build()?;
 
-    // synthesize adapters
+    // synthesize adapters: LoRA for the LoRA policy aliases, SHiRA
+    // otherwise (the mixed default exercises scatter + fused sets).
+    let lora_zoo = matches!(policy, Some(Policy::LoraFuse | Policy::LoraUnfused));
     let mut rng = Rng::new(cfg.seed);
     let names: Vec<String> = (0..n_adapters).map(|i| format!("adapter{i}")).collect();
     for name in &names {
-        match policy {
-            Policy::ShiraScatter | Policy::ShiraFusion => {
-                let tensors = meta
-                    .shira
-                    .iter()
-                    .map(|seg| {
-                        let idx = rng.sample_indices(seg.numel(), seg.k);
-                        let mut d = vec![0.0f32; seg.k];
-                        rng.fill_normal(&mut d, 0.0, 0.01);
-                        (
-                            seg.name.clone(),
-                            shira::adapter::sparse::SparseDelta::new(
-                                seg.shape.0,
-                                seg.shape.1,
-                                idx,
-                                d,
-                            ),
-                        )
-                    })
-                    .collect();
-                server.store.add_shira(&shira::adapter::ShiraAdapter {
-                    name: name.clone(),
-                    strategy: "rand".into(),
-                    tensors,
-                });
-            }
-            _ => {
-                let tensors = meta
-                    .lora
-                    .iter()
-                    .map(|seg| {
-                        let mut a = shira::model::tensor::Tensor2::zeros(seg.shape.0, seg.rank);
-                        let mut b = shira::model::tensor::Tensor2::zeros(seg.rank, seg.shape.1);
-                        rng.fill_normal(&mut a.data, 0.0, 0.01);
-                        rng.fill_normal(&mut b.data, 0.0, 0.01);
-                        shira::adapter::LoraTensor {
-                            target: seg.name.clone(),
-                            a,
-                            b,
-                        }
-                    })
-                    .collect();
-                server.store.add_lora(&shira::adapter::LoraAdapter {
-                    name: name.clone(),
-                    scale: rt.manifest.adapter.lora_scale as f32,
-                    tensors,
-                });
-            }
+        if lora_zoo {
+            let tensors = meta
+                .lora
+                .iter()
+                .map(|seg| {
+                    let mut a = shira::model::tensor::Tensor2::zeros(seg.shape.0, seg.rank);
+                    let mut b = shira::model::tensor::Tensor2::zeros(seg.rank, seg.shape.1);
+                    rng.fill_normal(&mut a.data, 0.0, 0.01);
+                    rng.fill_normal(&mut b.data, 0.0, 0.01);
+                    shira::adapter::LoraTensor {
+                        target: seg.name.clone(),
+                        a,
+                        b,
+                    }
+                })
+                .collect();
+            server.store.add_lora(&shira::adapter::LoraAdapter {
+                name: name.clone(),
+                scale: rt.manifest.adapter.lora_scale as f32,
+                tensors,
+            });
+        } else {
+            let tensors = meta
+                .shira
+                .iter()
+                .map(|seg| {
+                    let idx = rng.sample_indices(seg.numel(), seg.k);
+                    let mut d = vec![0.0f32; seg.k];
+                    rng.fill_normal(&mut d, 0.0, 0.01);
+                    (
+                        seg.name.clone(),
+                        shira::adapter::sparse::SparseDelta::new(
+                            seg.shape.0,
+                            seg.shape.1,
+                            idx,
+                            d,
+                        ),
+                    )
+                })
+                .collect();
+            server.store.add_shira(&shira::adapter::ShiraAdapter {
+                name: name.clone(),
+                strategy: "rand".into(),
+                tensors,
+            });
         }
     }
-    // Fused-mode serving batches by adapter *set*: synthesize rotating
-    // two-member set specs ("adapter0+adapter1", ...) over the roster.
-    let trace_names: Vec<String> = if policy == Policy::ShiraFusion && names.len() > 1 {
-        (0..names.len())
-            .map(|i| format!("{}+{}", names[i], names[(i + 1) % names.len()]))
-            .collect()
-    } else {
-        names.clone()
+    let selections: Vec<Selection> = match policy {
+        // Default: one trace mixing base, every single, and rotating
+        // sets — exercising all three routing arms per-request.
+        None => mixed_selections(&names),
+        Some(Policy::ShiraFusion) if names.len() > 1 => rotating_sets(&names, 1.0),
+        Some(_) => Selection::singles(&names),
     };
     let flash_bytes: usize = names
         .iter()
@@ -358,13 +380,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.store.prefetch_depth(),
         shira::util::alloc::fmt_bytes(plan_cache_bytes),
     );
-    let trace = generate_trace(&trace_names, cfg.trace_len, pattern, 1e4, cfg.seed);
+    let trace = generate_trace(&selections, cfg.trace_len, pattern, 1e4, cfg.seed);
     println!(
-        "serving {} requests over {} adapter sets (pattern switches: {}) policy={}",
+        "serving {} requests over {} selections (pattern switches: {}) mode={}",
         trace.len(),
-        trace_names.len(),
+        selections.len(),
         switch_count(&trace),
-        policy.name()
+        policy.map(|p| p.name()).unwrap_or("mixed-selections"),
     );
     let report = server.run_trace(&trace)?;
     println!("{}", report.summary);

@@ -71,15 +71,13 @@ pub fn apply_outcome(
     match kind {
         TrainKind::Shira(s) => {
             let adapter = trainer.export_shira(out, "tmp", s);
-            let mut engine = SwitchEngine::new(w);
-            engine.switch_to_shira(&adapter, 1.0);
-            w = engine.weights;
+            let mut engine = SwitchEngine::new();
+            engine.switch_to_shira(&mut w, &adapter, 1.0);
         }
         TrainKind::Lora => {
             let adapter = trainer.export_lora(out, "tmp");
-            let mut engine = SwitchEngine::new(w);
-            engine.switch_to_lora(&adapter);
-            w = engine.weights;
+            let mut engine = SwitchEngine::new();
+            engine.switch_to_lora(&mut w, &adapter);
         }
         TrainKind::Dora => {
             // W' = mag ⊙_col (W + s·AB)/||W + s·AB||_col
@@ -349,10 +347,10 @@ pub fn table4(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
                 cfg.seed ^ (50 + i as u64),
             )?;
             let adapter = trainer.export_lora(&out, task.name());
-            let mut engine = SwitchEngine::new(base.clone());
-            engine.switch_to_lora(&adapter);
+            let mut w = base.clone();
+            SwitchEngine::new().switch_to_lora(&mut w, &adapter);
             let acc =
-                100.0 * crate::train::eval::eval_task(rt, &engine.weights, task,
+                100.0 * crate::train::eval::eval_task(rt, &w, task,
                                                       cfg.eval_examples, cfg.seed)?;
             single.push(acc);
             adapters.push(adapter);
@@ -392,22 +390,22 @@ pub fn table4(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
             )?;
             let adapter =
                 trainer.export_shira(&out, task.name(), MaskStrategy::WeightMagnitude);
-            let mut engine = SwitchEngine::new(base.clone());
-            engine.switch_to_shira(&adapter, 1.0);
+            let mut w = base.clone();
+            SwitchEngine::new().switch_to_shira(&mut w, &adapter, 1.0);
             let acc =
-                100.0 * crate::train::eval::eval_task(rt, &engine.weights, task,
+                100.0 * crate::train::eval::eval_task(rt, &w, task,
                                                       cfg.eval_examples, cfg.seed)?;
             single.push(acc);
             adapters.push(adapter);
         }
         let refs: Vec<&crate::adapter::ShiraAdapter> = adapters.iter().collect();
         let fused_adapter = fusion::fuse_shira(&refs, "fused3")?;
-        let mut engine = SwitchEngine::new(base.clone());
-        engine.switch_to_shira(&fused_adapter, 1.0);
+        let mut w = base.clone();
+        SwitchEngine::new().switch_to_shira(&mut w, &fused_adapter, 1.0);
         let mut multi = Vec::new();
         for &task in &fusion_tasks {
             multi.push(100.0 * crate::train::eval::eval_task(
-                rt, &engine.weights, task, cfg.eval_examples, cfg.seed,
+                rt, &w, task, cfg.eval_examples, cfg.seed,
             )?);
         }
         // interference stats as a bonus line

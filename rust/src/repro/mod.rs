@@ -22,12 +22,16 @@ use crate::util::rng::Rng;
 /// A rendered experiment report.
 #[derive(Clone, Debug)]
 pub struct Report {
+    /// Report id (also the output filename stem, e.g. "table5").
     pub id: String,
+    /// Human-readable title.
     pub title: String,
+    /// Markdown body lines.
     pub lines: Vec<String>,
 }
 
 impl Report {
+    /// Empty report with an id and title.
     pub fn new(id: &str, title: &str) -> Self {
         Report {
             id: id.to_string(),
@@ -36,10 +40,13 @@ impl Report {
         }
     }
 
+    /// Append one markdown line.
     pub fn line(&mut self, s: impl Into<String>) {
         self.lines.push(s.into());
     }
 
+    /// Render to markdown, embedding the exact config in the header so
+    /// results are reproducible from the report alone.
     pub fn render(&self, cfg: &RunConfig) -> String {
         let mut out = format!("# {} — {}\n\nconfig: `{}`\n\n", self.id, self.title,
                               cfg.to_json().to_string_compact());
@@ -50,6 +57,7 @@ impl Report {
         out
     }
 
+    /// Write the rendered report under `cfg.report_dir`.
     pub fn write(&self, cfg: &RunConfig) -> Result<PathBuf> {
         let dir = PathBuf::from(&cfg.report_dir);
         std::fs::create_dir_all(&dir)?;
@@ -58,6 +66,7 @@ impl Report {
         Ok(path)
     }
 
+    /// Print the rendered report to stdout.
     pub fn print(&self, cfg: &RunConfig) {
         println!("{}", self.render(cfg));
     }

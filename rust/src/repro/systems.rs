@@ -23,9 +23,13 @@ use crate::util::rng::Rng;
 
 /// One scatter-vs-fuse measurement at a given dim (Fig. 5's x-axis).
 pub struct SwitchSample {
+    /// Square tensor dimension measured.
     pub dim: usize,
+    /// Mean SHiRA scatter-apply time, microseconds.
     pub scatter_us: f64,
+    /// Mean dense LoRA fuse time, microseconds.
     pub fuse_us: f64,
+    /// fuse / scatter ratio.
     pub speedup: f64,
 }
 
@@ -139,16 +143,17 @@ pub fn table5(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
 
     let shira_bytes = crate::adapter::io::encode_shira(&shira);
     let lora_bytes = crate::adapter::io::encode_lora(&lora);
-    let mut engine = SwitchEngine::new(base);
+    let mut weights = base;
+    let mut engine = SwitchEngine::new();
     let reps = 20;
     let mut acc = [[0.0f64; 4]; 2];
     for _ in 0..reps {
-        let t = engine.hf_pipeline_shira(&shira_bytes, 1.0);
+        let t = engine.hf_pipeline_shira(&mut weights, &shira_bytes, 1.0);
         acc[0][0] += t.load_us;
         acc[0][1] += t.fuse_us;
         acc[0][2] += t.unfuse_us;
         acc[0][3] += t.unload_us;
-        let t = engine.hf_pipeline_lora(&lora_bytes);
+        let t = engine.hf_pipeline_lora(&mut weights, &lora_bytes);
         acc[1][0] += t.load_us;
         acc[1][1] += t.fuse_us;
         acc[1][2] += t.unfuse_us;

@@ -20,10 +20,28 @@ use crate::util::rng::Rng;
 
 /// All adapters of one style, trained with every method in Table 1.
 pub struct StyleAdapters {
+    /// The style the zoo was trained for.
     pub style: Style,
+    /// The LoRA baseline adapter.
     pub lora: LoraAdapter,
+    /// The LoRA baseline's training outcome.
     pub lora_outcome: TrainOutcome,
+    /// One SHiRA adapter (and outcome) per mask strategy.
     pub shira: Vec<(MaskStrategy, ShiraAdapter, TrainOutcome)>,
+}
+
+/// A fresh copy of the base with a SHiRA adapter applied at `alpha`.
+fn applied_shira(base: &WeightStore, a: &ShiraAdapter, alpha: f32) -> WeightStore {
+    let mut w = base.clone();
+    SwitchEngine::new().switch_to_shira(&mut w, a, alpha);
+    w
+}
+
+/// A fresh copy of the base with a LoRA adapter fused in.
+fn applied_lora(base: &WeightStore, a: &LoraAdapter) -> WeightStore {
+    let mut w = base.clone();
+    SwitchEngine::new().switch_to_lora(&mut w, a);
+    w
 }
 
 fn sd_data<'a>(
@@ -127,11 +145,10 @@ pub fn table1(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
             let pct = pct_params(zoo.lora_outcome.trainable_params, total);
             let mut scores = Vec::new();
             for &alpha in &[1.0f32, 0.5] {
-                let mut engine = SwitchEngine::new(base.clone());
                 let mut scaled = zoo.lora.clone();
                 scaled.scale *= alpha;
-                engine.switch_to_lora(&scaled);
-                scores.push(sps_at(rt, &engine.weights, &world, style, alpha, cfg)?);
+                let w = applied_lora(&base, &scaled);
+                scores.push(sps_at(rt, &w, &world, style, alpha, cfg)?);
             }
             rep.line(format!(
                 "| {} | LoRA | {pct:.2} | {:.1} | {:.1} |",
@@ -143,9 +160,8 @@ pub fn table1(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
         for (strategy, adapter, out) in &zoo.shira {
             let mut scores = Vec::new();
             for &alpha in &[1.0f32, 0.5] {
-                let mut engine = SwitchEngine::new(base.clone());
-                engine.switch_to_shira(adapter, alpha);
-                scores.push(sps_at(rt, &engine.weights, &world, style, alpha, cfg)?);
+                let w = applied_shira(&base, adapter, alpha);
+                scores.push(sps_at(rt, &w, &world, style, alpha, cfg)?);
             }
             rep.line(format!(
                 "| {} | SHiRA-{} | {:.2} | {:.1} | {:.1} |",
@@ -180,12 +196,10 @@ pub fn fig4(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
     // LoRA: multi = fuse both AB products into the base (half strength each,
     // the standard multi-LoRA recipe).
     {
-        let mut e1 = SwitchEngine::new(base.clone());
-        e1.switch_to_lora(&bf.lora);
-        let s_bf = sps_at(rt, &e1.weights, &world, Style::Bluefire, 1.0, cfg)?;
-        let mut e2 = SwitchEngine::new(base.clone());
-        e2.switch_to_lora(&pt.lora);
-        let s_pt = sps_at(rt, &e2.weights, &world, Style::Paintings, 1.0, cfg)?;
+        let w_bf = applied_lora(&base, &bf.lora);
+        let s_bf = sps_at(rt, &w_bf, &world, Style::Bluefire, 1.0, cfg)?;
+        let w_pt = applied_lora(&base, &pt.lora);
+        let s_pt = sps_at(rt, &w_pt, &world, Style::Paintings, 1.0, cfg)?;
         let mut both = base.clone();
         for l in [&bf.lora, &pt.lora] {
             for t in &l.tensors {
@@ -201,18 +215,15 @@ pub fn fig4(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
     for (i, strategy) in MaskStrategy::all().into_iter().enumerate() {
         let (_, a_bf, _) = &bf.shira[i];
         let (_, a_pt, _) = &pt.shira[i];
-        let mut e1 = SwitchEngine::new(base.clone());
-        e1.switch_to_shira(a_bf, 1.0);
-        let s_bf = sps_at(rt, &e1.weights, &world, Style::Bluefire, 1.0, cfg)?;
-        let mut e2 = SwitchEngine::new(base.clone());
-        e2.switch_to_shira(a_pt, 1.0);
-        let s_pt = sps_at(rt, &e2.weights, &world, Style::Paintings, 1.0, cfg)?;
+        let w_bf = applied_shira(&base, a_bf, 1.0);
+        let s_bf = sps_at(rt, &w_bf, &world, Style::Bluefire, 1.0, cfg)?;
+        let w_pt = applied_shira(&base, a_pt, 1.0);
+        let s_pt = sps_at(rt, &w_pt, &world, Style::Paintings, 1.0, cfg)?;
         // naive multi-adapter fusion at half strength each
         let fused = fusion::fuse_shira(&[a_bf, a_pt], "both")?;
-        let mut e3 = SwitchEngine::new(base.clone());
-        e3.switch_to_shira(&fused, 0.5);
+        let w_multi = applied_shira(&base, &fused, 0.5);
         let s_multi =
-            eval_style_multi(rt, &e3.weights, &world, cfg.style_eval_batches, cfg.seed)?;
+            eval_style_multi(rt, &w_multi, &world, cfg.style_eval_batches, cfg.seed)?;
         rep.line(format!(
             "| SHiRA-{} | {s_bf:.1} | {s_pt:.1} | {s_multi:.1} |",
             strategy.name()
@@ -245,14 +256,13 @@ pub fn fig6(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
     rep.line("| α | SPS vs α-target | SPS vs base (α=0 target) |");
     rep.line("|---|---|---|");
     for alpha in [0.0f32, 0.25, 0.5, 0.75, 1.0, 1.5, 2.0] {
-        let mut engine = SwitchEngine::new(base.clone());
-        engine.switch_to_shira(&adapter, alpha);
+        let w = applied_shira(&base, &adapter, alpha);
         let vs_target = eval_style(
-            rt, &engine.weights, &world, Style::Bluefire, alpha,
+            rt, &w, &world, Style::Bluefire, alpha,
             cfg.style_eval_batches, false, cfg.seed,
         )?;
         let vs_base = eval_style(
-            rt, &engine.weights, &world, Style::Bluefire, 0.0,
+            rt, &w, &world, Style::Bluefire, 0.0,
             cfg.style_eval_batches, false, cfg.seed,
         )?;
         rep.line(format!("| {alpha:.2} | {vs_target:.1} | {vs_base:.1} |"));
@@ -278,13 +288,11 @@ pub fn fig7(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
     rep.line("| Method | bluefire unseen | paintings unseen | multi unseen |");
     rep.line("|---|---|---|---|");
     {
-        let mut e1 = SwitchEngine::new(base.clone());
-        e1.switch_to_lora(&bf.lora);
-        let s1 = eval_style(rt, &e1.weights, &world, Style::Bluefire, 1.0,
+        let w_bf = applied_lora(&base, &bf.lora);
+        let s1 = eval_style(rt, &w_bf, &world, Style::Bluefire, 1.0,
                             cfg.style_eval_batches, true, cfg.seed)?;
-        let mut e2 = SwitchEngine::new(base.clone());
-        e2.switch_to_lora(&pt.lora);
-        let s2 = eval_style(rt, &e2.weights, &world, Style::Paintings, 1.0,
+        let w_pt = applied_lora(&base, &pt.lora);
+        let s2 = eval_style(rt, &w_pt, &world, Style::Paintings, 1.0,
                             cfg.style_eval_batches, true, cfg.seed)?;
         let mut both = base.clone();
         for l in [&bf.lora, &pt.lora] {
@@ -301,18 +309,15 @@ pub fn fig7(rt: &Runtime, cfg: &RunConfig) -> Result<Vec<Report>> {
         let i = MaskStrategy::all().iter().position(|s| *s == strategy).unwrap();
         let (_, a_bf, _) = &bf.shira[i];
         let (_, a_pt, _) = &pt.shira[i];
-        let mut e1 = SwitchEngine::new(base.clone());
-        e1.switch_to_shira(a_bf, 1.0);
-        let s1 = eval_style(rt, &e1.weights, &world, Style::Bluefire, 1.0,
+        let w_bf = applied_shira(&base, a_bf, 1.0);
+        let s1 = eval_style(rt, &w_bf, &world, Style::Bluefire, 1.0,
                             cfg.style_eval_batches, true, cfg.seed)?;
-        let mut e2 = SwitchEngine::new(base.clone());
-        e2.switch_to_shira(a_pt, 1.0);
-        let s2 = eval_style(rt, &e2.weights, &world, Style::Paintings, 1.0,
+        let w_pt = applied_shira(&base, a_pt, 1.0);
+        let s2 = eval_style(rt, &w_pt, &world, Style::Paintings, 1.0,
                             cfg.style_eval_batches, true, cfg.seed)?;
         let fused = fusion::fuse_shira(&[a_bf, a_pt], "both")?;
-        let mut e3 = SwitchEngine::new(base.clone());
-        e3.switch_to_shira(&fused, 0.5);
-        let s3 = eval_style_multi(rt, &e3.weights, &world, cfg.style_eval_batches, cfg.seed)?;
+        let w_multi = applied_shira(&base, &fused, 0.5);
+        let s3 = eval_style_multi(rt, &w_multi, &world, cfg.style_eval_batches, cfg.seed)?;
         rep.line(format!(
             "| SHiRA-{} | {s1:.1} | {s2:.1} | {s3:.1} |",
             strategy.name()

@@ -6,9 +6,12 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::{self, Json};
 
+/// Element dtype of an artifact input/output.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -22,36 +25,51 @@ impl DType {
     }
 }
 
+/// One input or output of a compiled artifact.
 #[derive(Clone, Debug)]
 pub struct IoSpec {
+    /// Parameter name as lowered.
     pub name: String,
+    /// Element dtype.
     pub dtype: DType,
+    /// Row-major shape (empty = scalar).
     pub shape: Vec<usize>,
 }
 
 impl IoSpec {
+    /// Number of elements (1 for scalars).
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
+/// One AOT-lowered artifact: its HLO-text file and typed I/O contract.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Artifact name (the `Runtime::load` key).
     pub name: String,
+    /// Path of the HLO text file.
     pub file: PathBuf,
+    /// Input specs, in call order.
     pub inputs: Vec<IoSpec>,
+    /// Output specs, in tuple order.
     pub outputs: Vec<IoSpec>,
 }
 
 /// One target's segment of the SHiRA theta/idx vectors.
 #[derive(Clone, Debug)]
 pub struct ShiraSeg {
+    /// Target tensor name.
     pub name: String,
+    /// Target tensor shape (rows, cols).
     pub shape: (usize, usize),
+    /// Sparse entries trained for this target.
     pub k: usize,
+    /// Offset of this segment in the concatenated theta/idx vectors.
     pub off: usize,
-    /// SHiRA-DoRA only: offset/length of the magnitude block.
+    /// SHiRA-DoRA only: offset of the magnitude block.
     pub mag_off: Option<usize>,
+    /// SHiRA-DoRA only: length of the magnitude block.
     pub mag_len: Option<usize>,
 }
 
@@ -66,46 +84,75 @@ impl ShiraSeg {
 /// One target's segment of the LoRA/DoRA theta vector.
 #[derive(Clone, Debug)]
 pub struct LoraSeg {
+    /// Target tensor name.
     pub name: String,
+    /// Target tensor shape (rows, cols).
     pub shape: (usize, usize),
+    /// Adapter rank r.
     pub rank: usize,
+    /// Offset of the A factor (rows × r) in theta.
     pub a_off: usize,
+    /// Length of the A factor.
     pub a_len: usize,
+    /// Offset of the B factor (r × cols) in theta.
     pub b_off: usize,
+    /// Length of the B factor.
     pub b_len: usize,
+    /// DoRA only: offset of the magnitude block.
     pub mag_off: Option<usize>,
+    /// DoRA only: length of the magnitude block.
     pub mag_len: Option<usize>,
 }
 
 /// Dense layout entry (grad probe / full finetune).
 #[derive(Clone, Debug)]
 pub struct DenseSeg {
+    /// Tensor name.
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Offset in the dense layout vector.
     pub off: usize,
+    /// Element count in the dense layout vector.
     pub len: usize,
 }
 
+/// One model's manifest entry: parameter list, adapter layouts, and
+/// named dimensions.
 #[derive(Clone, Debug)]
 pub struct ModelMeta {
+    /// Model name ("llama", "sd").
     pub name: String,
+    /// (parameter name, shape) in artifact input order.
     pub params: Vec<(String, Vec<usize>)>,
+    /// Adapter target tensor names.
     pub targets: Vec<String>,
+    /// SHiRA theta/idx layout, one segment per target.
     pub shira: Vec<ShiraSeg>,
+    /// LoRA theta layout.
     pub lora: Vec<LoraSeg>,
+    /// DoRA theta layout (LoRA + magnitudes).
     pub dora: Vec<LoraSeg>,
+    /// SHiRA-DoRA theta layout (sparse + magnitudes).
     pub shira_dora: Vec<ShiraSeg>,
+    /// Dense grad-probe layout.
     pub probe: Vec<DenseSeg>,
+    /// Dense full-finetune layout.
     pub full: Vec<DenseSeg>,
+    /// Total theta length per adapter kind ("shira", "lora", ...).
     pub theta_len: HashMap<String, usize>,
-    pub extra: HashMap<String, usize>, // vocab/d_model/batch/seq_len/...
+    /// Named scalar dims (vocab / d_model / batch / seq_len / ...).
+    pub extra: HashMap<String, usize>,
 }
 
 impl ModelMeta {
+    /// Total base-model parameters.
     pub fn total_params(&self) -> usize {
         self.params.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
     }
 
+    /// Look up a named dimension; panics when the manifest lacks it
+    /// (a build-time contract violation, not a runtime condition).
     pub fn dim(&self, key: &str) -> usize {
         *self
             .extra
@@ -114,26 +161,43 @@ impl ModelMeta {
     }
 }
 
+/// Global adapter hyperparameters the artifacts were lowered with.
 #[derive(Clone, Debug)]
 pub struct AdapterMeta {
+    /// SHiRA trainable fraction (paper: 1-2% of weights).
     pub shira_frac: f64,
+    /// LoRA rank r.
     pub lora_rank: usize,
+    /// LoRA alpha.
     pub lora_alpha: f64,
+    /// Effective LoRA fuse scale (= alpha / rank).
     pub lora_scale: f64,
 }
 
+/// Typed view of `artifacts/manifest.json` — the contract between the
+/// build-time python AOT pipeline and the rust runtime.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// The artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Every artifact by name.
     pub artifacts: HashMap<String, ArtifactMeta>,
+    /// Every model by name.
     pub models: HashMap<String, ModelMeta>,
+    /// Global adapter hyperparameters.
     pub adapter: AdapterMeta,
+    /// Pallas demo kernel dimension (0 when absent).
     pub pallas_dim: usize,
+    /// Pallas demo kernel sparse count (0 when absent).
     pub pallas_k: usize,
 }
 
+/// A malformed or unreadable manifest.
 #[derive(Debug)]
-pub struct ManifestError(pub String);
+pub struct ManifestError(
+    /// What was wrong.
+    pub String,
+);
 
 impl std::fmt::Display for ManifestError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -339,6 +403,7 @@ fn model_meta(name: &str, j: &Json) -> Result<ModelMeta, ManifestError> {
 }
 
 impl Manifest {
+    /// Load and type-check `dir/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -411,12 +476,14 @@ impl Manifest {
         })
     }
 
+    /// Look up an artifact by name.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta, ManifestError> {
         self.artifacts
             .get(name)
             .ok_or_else(|| err(format!("unknown artifact {name}")))
     }
 
+    /// Look up a model by name.
     pub fn model(&self, name: &str) -> Result<&ModelMeta, ManifestError> {
         self.models
             .get(name)

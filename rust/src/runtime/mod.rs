@@ -17,37 +17,57 @@ use anyhow::{anyhow, Context, Result};
 use manifest::{ArtifactMeta, DType, Manifest};
 
 /// Host-side value marshalled into / out of an executable.
+///
+/// # Examples
+///
+/// ```
+/// use shira::runtime::HostValue;
+///
+/// let v = HostValue::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+/// assert_eq!(v.shape(), &[2, 2]);
+/// assert_eq!(v.numel(), 4);
+/// assert_eq!(v.nbytes(), 16);
+/// assert_eq!(HostValue::scalar_i32(7).as_i32(), &[7]);
+/// ```
 #[derive(Clone, Debug)]
 pub enum HostValue {
+    /// f32 data with its shape (row-major).
     F32(Vec<f32>, Vec<usize>),
+    /// i32 data with its shape (row-major).
     I32(Vec<i32>, Vec<usize>),
 }
 
 impl HostValue {
+    /// A shapeless f32 scalar.
     pub fn scalar_f32(x: f32) -> Self {
         HostValue::F32(vec![x], vec![])
     }
 
+    /// A shapeless i32 scalar.
     pub fn scalar_i32(x: i32) -> Self {
         HostValue::I32(vec![x], vec![])
     }
 
+    /// An f32 tensor (`data.len()` must equal the shape product).
     pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
         HostValue::F32(data, shape)
     }
 
+    /// An i32 tensor (`data.len()` must equal the shape product).
     pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
         HostValue::I32(data, shape)
     }
 
+    /// The value's shape (empty for scalars).
     pub fn shape(&self) -> &[usize] {
         match self {
             HostValue::F32(_, s) | HostValue::I32(_, s) => s,
         }
     }
 
+    /// Number of elements.
     pub fn numel(&self) -> usize {
         match self {
             HostValue::F32(d, _) => d.len(),
@@ -55,10 +75,12 @@ impl HostValue {
         }
     }
 
+    /// Host bytes held (both dtypes are 4 bytes wide).
     pub fn nbytes(&self) -> usize {
         self.numel() * 4
     }
 
+    /// Borrow the f32 data (panics on an i32 value).
     pub fn as_f32(&self) -> &[f32] {
         match self {
             HostValue::F32(d, _) => d,
@@ -66,6 +88,7 @@ impl HostValue {
         }
     }
 
+    /// Borrow the i32 data (panics on an f32 value).
     pub fn as_i32(&self) -> &[i32] {
         match self {
             HostValue::I32(d, _) => d,
@@ -73,6 +96,7 @@ impl HostValue {
         }
     }
 
+    /// Take the f32 data (panics on an i32 value).
     pub fn into_f32(self) -> Vec<f32> {
         match self {
             HostValue::F32(d, _) => d,
@@ -106,6 +130,7 @@ impl HostValue {
 
 /// One compiled artifact.
 pub struct Executable {
+    /// The artifact's manifest entry (name, input/output specs).
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -158,12 +183,15 @@ impl Executable {
 
 /// The PJRT runtime: one CPU client + lazily compiled artifact cache.
 pub struct Runtime {
+    /// The typed view of `artifacts/manifest.json`.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
 }
 
 impl Runtime {
+    /// Runtime over an artifacts directory (must contain
+    /// `manifest.json` and the HLO-text files it names).
     pub fn new(artifacts_dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)
             .map_err(|e| anyhow!("loading manifest: {e}"))?;
@@ -175,10 +203,13 @@ impl Runtime {
         })
     }
 
+    /// Runtime over [`Manifest::default_dir`] (`$SHIRA_ARTIFACTS` or
+    /// `./artifacts`).
     pub fn with_default_artifacts() -> Result<Self> {
         Runtime::new(&Manifest::default_dir())
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

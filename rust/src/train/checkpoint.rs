@@ -24,6 +24,7 @@ fn fnv64(b: &[u8]) -> u64 {
     h
 }
 
+/// Serialize a weight store (magic, version, tensors, FNV-64 trailer).
 pub fn encode(store: &WeightStore) -> Vec<u8> {
     let mut buf = Vec::new();
     buf.extend_from_slice(&MAGIC.to_le_bytes());
@@ -43,6 +44,8 @@ pub fn encode(store: &WeightStore) -> Vec<u8> {
     buf
 }
 
+/// Decode [`encode`]d bytes, rejecting truncation and corruption via the
+/// checksum trailer.
 pub fn decode(bytes: &[u8]) -> Result<WeightStore> {
     if bytes.len() < 20 {
         return Err(anyhow!("checkpoint too short"));
@@ -93,6 +96,7 @@ pub fn decode(bytes: &[u8]) -> Result<WeightStore> {
     Ok(store)
 }
 
+/// Write a checkpoint file (creating parent directories).
 pub fn save(path: &Path, store: &WeightStore) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
@@ -101,6 +105,7 @@ pub fn save(path: &Path, store: &WeightStore) -> Result<()> {
     Ok(())
 }
 
+/// Read and [`decode`] a checkpoint file.
 pub fn load(path: &Path) -> Result<WeightStore> {
     let mut bytes = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut bytes)?;

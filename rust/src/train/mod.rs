@@ -26,9 +26,13 @@ use schedule::Schedule;
 /// Which adapter formulation to train.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TrainKind {
+    /// Sparse high-rank adapter with the given mask strategy.
     Shira(MaskStrategy),
+    /// Low-rank adapter baseline.
     Lora,
+    /// Weight-decomposed low-rank adapter baseline.
     Dora,
+    /// SHiRA with DoRA-style magnitude columns.
     ShiraDora(MaskStrategy),
     /// Full finetuning (used for base-model pretraining).
     Full,
@@ -37,6 +41,7 @@ pub enum TrainKind {
 }
 
 impl TrainKind {
+    /// Suffix of this kind's `*_train_*` artifact name.
     pub fn artifact_suffix(&self) -> &'static str {
         match self {
             TrainKind::Shira(_) => "shira",
@@ -48,6 +53,7 @@ impl TrainKind {
         }
     }
 
+    /// Human-readable label ("shira-snip", "lora", ...).
     pub fn label(&self) -> String {
         match self {
             TrainKind::Shira(s) => format!("shira-{}", s.name()),
@@ -59,6 +65,7 @@ impl TrainKind {
         }
     }
 
+    /// The mask strategy, for sparse kinds.
     pub fn mask_strategy(&self) -> Option<MaskStrategy> {
         match self {
             TrainKind::Shira(s) | TrainKind::ShiraDora(s) | TrainKind::ShiraDense(s) => {
@@ -68,6 +75,7 @@ impl TrainKind {
         }
     }
 
+    /// Does this kind's train step take the sparse idx vector as input?
     pub fn needs_idx_input(&self) -> bool {
         matches!(self, TrainKind::Shira(_) | TrainKind::ShiraDora(_))
     }
@@ -76,22 +84,29 @@ impl TrainKind {
 /// Result of one training run.
 #[derive(Clone, Debug)]
 pub struct TrainOutcome {
+    /// The trained kind's [`TrainKind::label`].
     pub kind_label: String,
+    /// Final trainable vector, in the kind's theta layout.
     pub theta: Vec<f32>,
     /// Mask indices (sparse kinds; local flat indices per target segment).
     pub idx: Vec<i32>,
+    /// Per-step training losses.
     pub losses: Vec<f32>,
+    /// Training throughput.
     pub steps_per_sec: f64,
     /// Peak logical training memory (params + trainable + optimizer + batch).
     pub peak_bytes: usize,
+    /// Trainable parameter count (= theta length).
     pub trainable_params: usize,
 }
 
 impl TrainOutcome {
+    /// Loss at step 0 (NaN for an empty run).
     pub fn first_loss(&self) -> f32 {
         *self.losses.first().unwrap_or(&f32::NAN)
     }
 
+    /// Loss at the final step (NaN for an empty run).
     pub fn last_loss(&self) -> f32 {
         *self.losses.last().unwrap_or(&f32::NAN)
     }
@@ -100,14 +115,22 @@ impl TrainOutcome {
 /// Provides batches in artifact input order (llama: x,y,mask; sd: z,target).
 pub type BatchFn<'a> = dyn FnMut(usize, &mut Rng) -> Vec<HostValue> + 'a;
 
+/// Drives the AOT train-step executables: mask calibration, theta
+/// initialization, the step loop, checkpoint-compatible export, and the
+/// Table-6 memory accounting.
 pub struct Trainer<'rt> {
+    /// The runtime executing the train-step artifacts.
     pub rt: &'rt Runtime,
+    /// The model's manifest entry.
     pub model: ModelMeta,
+    /// Base weights the adapter trains against.
     pub base: WeightStore,
+    /// Logical-memory ledger (Table 6 accounting).
     pub ledger: MemLedger,
 }
 
 impl<'rt> Trainer<'rt> {
+    /// Trainer for `model_name` over `base` weights.
     pub fn new(rt: &'rt Runtime, model_name: &str, base: WeightStore) -> Result<Self> {
         let model = rt
             .manifest
@@ -304,6 +327,9 @@ impl<'rt> Trainer<'rt> {
     // The training loop
     // ---------------------------------------------------------------
 
+    /// Full training run for `kind`: calibrate masks (gradient-based
+    /// strategies probe first), initialize theta, then drive the AOT
+    /// train-step artifact for `steps` steps.
     pub fn train(
         &self,
         kind: TrainKind,

@@ -1,15 +1,37 @@
 //! Learning-rate schedules (paper Table 8: linear for LLM, cosine for LVM).
 
+/// A learning-rate schedule over a fixed-length run.
+///
+/// # Examples
+///
+/// ```
+/// use shira::train::schedule::Schedule;
+///
+/// let s = Schedule::Linear { lr: 1.0, floor_frac: 0.1 };
+/// assert_eq!(s.at(0, 101), 1.0);
+/// assert!((s.at(100, 101) - 0.1).abs() < 1e-6);
+/// assert_eq!(s.peak(), 1.0);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Schedule {
+    /// Constant learning rate.
     Const(f32),
     /// Linear decay from lr to `floor_frac`·lr over the run.
-    Linear { lr: f32, floor_frac: f32 },
+    Linear {
+        /// Peak (initial) learning rate.
+        lr: f32,
+        /// Final lr as a fraction of the peak.
+        floor_frac: f32,
+    },
     /// Cosine decay from lr to ~0 over the run.
-    Cosine { lr: f32 },
+    Cosine {
+        /// Peak (initial) learning rate.
+        lr: f32,
+    },
 }
 
 impl Schedule {
+    /// Learning rate at `step` of a `total`-step run.
     pub fn at(&self, step: usize, total: usize) -> f32 {
         let t = if total <= 1 {
             0.0
@@ -27,6 +49,7 @@ impl Schedule {
         }
     }
 
+    /// The schedule's peak learning rate.
     pub fn peak(&self) -> f32 {
         match *self {
             Schedule::Const(lr) => lr,

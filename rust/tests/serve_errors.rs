@@ -1,0 +1,224 @@
+//! Error-path coverage for the structured `ServeError` taxonomy: every
+//! variant is constructible through a *real* bad request driven down the
+//! serving path (the router — the same code `Server::run_trace` uses per
+//! batch), and tests assert the VARIANT, not message text — the point of
+//! replacing `anyhow` in the public coordinator API.
+
+use shira::adapter::sparse::SparseDelta;
+use shira::adapter::{LoraAdapter, LoraTensor, ShiraAdapter};
+use shira::coordinator::engine::Router;
+use shira::coordinator::error::ServeError;
+use shira::coordinator::selection::Selection;
+use shira::coordinator::store::AdapterStore;
+use shira::model::tensor::Tensor2;
+use shira::model::weights::WeightStore;
+use shira::util::rng::Rng;
+
+const DIM: usize = 16;
+
+fn base_weights() -> WeightStore {
+    WeightStore::init(&[("wq".into(), vec![DIM, DIM])], 3)
+}
+
+fn shira(name: &str, target: &str, dim: usize) -> ShiraAdapter {
+    let mut rng = Rng::new(7);
+    let idx = rng.sample_indices(dim * dim, 8);
+    let mut d = vec![0.0; 8];
+    rng.fill_normal(&mut d, 0.0, 0.5);
+    ShiraAdapter {
+        name: name.into(),
+        strategy: "rand".into(),
+        tensors: vec![(target.into(), SparseDelta::new(dim, dim, idx, d))],
+    }
+}
+
+fn lora(name: &str) -> LoraAdapter {
+    let mut rng = Rng::new(9);
+    let mut a = Tensor2::zeros(DIM, 2);
+    let mut b = Tensor2::zeros(2, DIM);
+    rng.fill_normal(&mut a.data, 0.0, 0.1);
+    rng.fill_normal(&mut b.data, 0.0, 0.1);
+    LoraAdapter {
+        name: name.into(),
+        scale: 1.0,
+        tensors: vec![LoraTensor { target: "wq".into(), a, b }],
+    }
+}
+
+fn setup() -> (AdapterStore, Router) {
+    let mut store = AdapterStore::new(1 << 20);
+    store.add_shira(&shira("good", "wq", DIM));
+    store.add_shira(&shira("good2", "wq", DIM));
+    store.add_lora(&lora("lowrank"));
+    (store, Router::new(base_weights(), None, false))
+}
+
+#[test]
+fn unknown_adapter_single_and_set() {
+    let (mut store, mut router) = setup();
+    assert!(matches!(
+        router.apply(&mut store, &Selection::single("ghost")),
+        Err(ServeError::UnknownAdapter(n)) if n == "ghost"
+    ));
+    assert!(matches!(
+        router.apply(
+            &mut store,
+            &Selection::set(&[("good", 1.0), ("ghost", 1.0)])
+        ),
+        Err(ServeError::UnknownAdapter(n)) if n == "ghost"
+    ));
+    // The router stays serviceable after an error.
+    router.apply(&mut store, &Selection::single("good")).unwrap();
+}
+
+#[test]
+fn lora_in_a_fused_set_is_not_shira() {
+    let (mut store, mut router) = setup();
+    assert!(matches!(
+        router.apply(
+            &mut store,
+            &Selection::set(&[("good", 1.0), ("lowrank", 0.5)])
+        ),
+        Err(ServeError::NotShira(n)) if n == "lowrank"
+    ));
+    // LoRA is fine as a single (dense fuse) — only fused sets are
+    // SHiRA-only.
+    router
+        .apply(&mut store, &Selection::single("lowrank"))
+        .unwrap();
+}
+
+#[test]
+fn malformed_specs_are_invalid_selection() {
+    for spec in ["a++b", "a@x", "@1", "a@", "+"] {
+        assert!(
+            matches!(
+                Selection::parse(spec),
+                Err(ServeError::InvalidSelection { .. })
+            ),
+            "{spec:?}"
+        );
+    }
+    // Hand-built selections with metacharacter names are rejected on the
+    // request path too (the fused-roster guard).
+    let (mut store, mut router) = setup();
+    assert!(matches!(
+        router.apply(&mut store, &Selection::single("a+b")),
+        Err(ServeError::InvalidSelection { .. })
+    ));
+    assert!(matches!(
+        router.apply(&mut store, &Selection::Set { members: vec![] }),
+        Err(ServeError::InvalidSelection { .. })
+    ));
+}
+
+#[test]
+fn duplicate_members_are_their_own_variant() {
+    assert!(matches!(
+        Selection::parse("a+a@2"),
+        Err(ServeError::DuplicateMember(n)) if n == "a"
+    ));
+    let (mut store, mut router) = setup();
+    assert!(matches!(
+        router.apply(
+            &mut store,
+            &Selection::Set {
+                members: vec![("good".into(), 1.0), ("good".into(), 2.0)]
+            }
+        ),
+        Err(ServeError::DuplicateMember(n)) if n == "good"
+    ));
+}
+
+#[test]
+fn shape_mismatch_surfaces_structured() {
+    // An adapter whose delta shape disagrees with the resident tensor:
+    // the fused-mode activation reports target + both shapes.
+    let (mut store, mut router) = setup();
+    store.add_shira(&shira("tiny", "wq", DIM / 2));
+    match router.apply(&mut store, &Selection::set(&[("tiny", 1.0)])) {
+        Err(ServeError::ShapeMismatch { target, expect, got }) => {
+            assert_eq!(target, "wq");
+            assert_eq!(expect, (DIM / 2, DIM / 2)); // the plan's shape
+            assert_eq!(got, (DIM, DIM)); // the resident tensor
+        }
+        other => panic!("expected ShapeMismatch, got {other:?}"),
+    }
+}
+
+#[test]
+fn missing_target_rides_the_fusion_variant() {
+    let (mut store, mut router) = setup();
+    store.add_shira(&shira("offtarget", "nope", DIM));
+    assert!(matches!(
+        router.apply(&mut store, &Selection::set(&[("offtarget", 1.0)])),
+        Err(ServeError::Fusion(
+            shira::coordinator::fusion::FusionError::MissingTarget(t)
+        )) if t == "nope"
+    ));
+}
+
+#[test]
+fn failed_set_apply_does_not_leave_a_stale_active_key() {
+    // Regression: a Set apply that reverts the live single and THEN
+    // fails (unknown member) must not leave the router believing the
+    // single is still resident — the next request for that single has
+    // to actually re-apply it, not no-op against base weights.
+    let (mut store, mut router) = setup();
+    let base = base_weights();
+    router.apply(&mut store, &Selection::single("good")).unwrap();
+    let applied = router.weights().clone();
+    assert!(applied.max_abs_diff(&base) > 0.0, "single visibly applied");
+    assert!(matches!(
+        router.apply(
+            &mut store,
+            &Selection::set(&[("good", 1.0), ("ghost", 1.0)])
+        ),
+        Err(ServeError::UnknownAdapter(_))
+    ));
+    // The failed set reverted the single; the router must know that.
+    assert!(router.weights().bit_equal(&base));
+    let again = router.apply(&mut store, &Selection::single("good")).unwrap();
+    assert!(again.switched, "stale active key suppressed the re-apply");
+    assert!(router.weights().bit_equal(&applied));
+}
+
+#[test]
+fn corrupt_flash_bytes_are_io() {
+    let (mut store, mut router) = setup();
+    store.add_encoded("junk", vec![0xAB; 64]);
+    assert!(matches!(
+        router.apply(&mut store, &Selection::single("junk")),
+        Err(ServeError::Io(_))
+    ));
+}
+
+#[test]
+fn every_error_kind_has_a_stable_label() {
+    // kind() gives callers a stable log/counter key per variant.
+    assert_eq!(ServeError::UnknownAdapter("x".into()).kind(), "unknown-adapter");
+    assert_eq!(ServeError::NotShira("x".into()).kind(), "not-shira");
+    assert_eq!(
+        ServeError::InvalidSelection { spec: "a@".into(), reason: "w".into() }.kind(),
+        "invalid-selection"
+    );
+    assert_eq!(ServeError::Runtime("x".into()).kind(), "runtime");
+}
+
+/// Artifact-gated: builder-level UnknownModel through the real Server.
+#[test]
+fn unknown_model_from_the_builder() {
+    use shira::coordinator::server::Server;
+    use shira::runtime::manifest::Manifest;
+    use shira::runtime::Runtime;
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let base = WeightStore::new();
+    assert!(matches!(
+        Server::builder(&rt, base).model("nonexistent").build(),
+        Err(ServeError::UnknownModel(n)) if n == "nonexistent"
+    ));
+}

@@ -57,14 +57,15 @@ fn switch_sequence() -> Vec<usize> {
 /// the weight bytes after every switch.
 fn reference_states(adapters: &[ShiraAdapter]) -> (Vec<WeightStore>, WeightStore) {
     let base = base_weights(7);
-    let mut eng = SwitchEngine::new(base.clone());
+    let mut w = base.clone();
+    let mut eng = SwitchEngine::new();
     let mut states = Vec::new();
     for &i in &switch_sequence() {
-        eng.switch_to_shira(&adapters[i], 1.0);
-        states.push(eng.weights.clone());
+        eng.switch_to_shira(&mut w, &adapters[i], 1.0);
+        states.push(w.clone());
     }
-    eng.revert();
-    assert!(eng.weights.bit_equal(&base));
+    eng.revert(&mut w);
+    assert!(w.bit_equal(&base));
     (states, base)
 }
 
@@ -88,8 +89,8 @@ fn run_through_store(
     for a in adapters {
         store.add_shira(a);
     }
-    let base = base_weights(7);
-    let mut eng = SwitchEngine::with_pool(base, Some(pool));
+    let mut w = base_weights(7);
+    let mut eng = SwitchEngine::with_pool(Some(pool));
     let seq = switch_sequence();
     let mut states = Vec::new();
     for (step, &i) in seq.iter().enumerate() {
@@ -105,15 +106,19 @@ fn run_through_store(
         let h = store.fetch(&adapters[i].name).unwrap();
         match &h.adapter {
             AnyAdapter::Shira(a) => {
-                eng.switch_to_shira_planned(Arc::clone(a), Some(Arc::clone(&h.plans)), 1.0);
+                eng.switch_to_shira_planned(
+                    &mut w,
+                    Arc::clone(a),
+                    Some(Arc::clone(&h.plans)),
+                    1.0,
+                );
             }
             AnyAdapter::Lora(_) => panic!("family"),
         }
-        states.push(eng.weights.clone());
+        states.push(w.clone());
     }
-    eng.revert();
-    let final_weights = eng.weights.clone();
-    (states, final_weights, store)
+    eng.revert(&mut w);
+    (states, w, store)
 }
 
 #[test]
@@ -312,7 +317,8 @@ fn direct_transitions_bit_identical_through_the_store() {
         for a in &adapters {
             store.fetch(&a.name).unwrap();
         }
-        let mut eng = SwitchEngine::with_pool(base.clone(), Some(Arc::clone(&pool)));
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::with_pool(Some(Arc::clone(&pool)));
         let seq = switch_sequence();
         let mut transitions = 0u64;
         for (step, &i) in seq.iter().enumerate() {
@@ -330,6 +336,7 @@ fn direct_transitions_bit_identical_through_the_store() {
             match prev.as_deref().and_then(|p| store.begin_transition(p, &name)) {
                 Some(tp) => {
                     let (_t, path) = eng.transition_to(
+                        &mut w,
                         Arc::clone(a),
                         Some(Arc::clone(&h.plans)),
                         &tp,
@@ -341,6 +348,7 @@ fn direct_transitions_bit_identical_through_the_store() {
                 }
                 None => {
                     eng.switch_to_shira_planned(
+                        &mut w,
                         Arc::clone(a),
                         Some(Arc::clone(&h.plans)),
                         1.0,
@@ -348,7 +356,7 @@ fn direct_transitions_bit_identical_through_the_store() {
                 }
             }
             assert!(
-                eng.weights.bit_equal(&want[step]),
+                w.bit_equal(&want[step]),
                 "transition-path weights diverged at step {step} (threads={threads})"
             );
         }
@@ -358,7 +366,7 @@ fn direct_transitions_bit_identical_through_the_store() {
             "every non-first switch should have transitioned"
         );
         assert!(store.stats().plan_hits >= transitions);
-        eng.revert();
-        assert!(eng.weights.bit_equal(&base), "revert after transitions not exact");
+        eng.revert(&mut w);
+        assert!(w.bit_equal(&base), "revert after transitions not exact");
     }
 }
