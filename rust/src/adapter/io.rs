@@ -125,6 +125,25 @@ pub enum IoError {
     Format(String),
 }
 
+impl IoError {
+    /// True for failures that plausibly resolve on retry (interrupted or
+    /// timed-out reads, transient unavailability).  Structural problems
+    /// ([`IoError::Format`]: bad magic, CRC, truncation) are permanent —
+    /// the bytes themselves are wrong, so retrying re-reads the same
+    /// corruption; those feed the store's quarantine instead.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            IoError::Io(e) => matches!(
+                e.kind(),
+                io::ErrorKind::Interrupted
+                    | io::ErrorKind::TimedOut
+                    | io::ErrorKind::WouldBlock
+            ),
+            IoError::Format(_) => false,
+        }
+    }
+}
+
 impl std::fmt::Display for IoError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {

@@ -212,6 +212,16 @@ impl<T> LruCache<T> {
             .unwrap_or(false)
     }
 
+    /// Number of resident entries holding at least one pin — the leak
+    /// audit probe: after any failed request this must return to its
+    /// pre-request baseline.
+    pub fn pinned_entries(&self) -> usize {
+        self.map
+            .values()
+            .filter(|&&i| self.node(i).pins > 0)
+            .count()
+    }
+
     /// Insert, evicting unpinned LRU entries until the budget fits.
     ///
     /// * **Oversized** (`bytes > capacity`): the value is returned as an
@@ -391,6 +401,23 @@ mod tests {
         assert!(c.is_pinned("a")); // one pin still held
         assert!(c.unpin("a"));
         assert!(!c.unpin("a"));
+    }
+
+    #[test]
+    fn pinned_entries_counts_distinct_pinned_keys() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        c.put("a", 1, 10);
+        c.put("b", 2, 10);
+        assert_eq!(c.pinned_entries(), 0);
+        c.pin("a");
+        c.pin("a"); // refcount, same entry
+        c.pin("b");
+        assert_eq!(c.pinned_entries(), 2);
+        c.unpin("a");
+        assert_eq!(c.pinned_entries(), 2); // "a" still holds one pin
+        c.unpin("a");
+        c.unpin("b");
+        assert_eq!(c.pinned_entries(), 0);
     }
 
     #[test]

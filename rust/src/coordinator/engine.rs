@@ -38,10 +38,12 @@
 //! selection from base under the old per-policy servers
 //! (property-tested below at 1 and 4 threads).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
 
 use super::error::ServeError;
+use super::fault::FaultInjector;
 use super::fusion_engine::{FusionEngine, FusionPlan};
 use super::selection::Selection;
 use super::store::{AdapterHandle, AdapterStore, AnyAdapter};
@@ -66,6 +68,21 @@ pub struct EngineOp<'a> {
     /// incoming) pair, when the store had one.  `None` falls back to
     /// revert+apply; bytes are identical either way.
     pub transition: Option<Arc<AdapterTransition>>,
+}
+
+/// Pure-data description of how to put BASE values back on everything an
+/// engine currently deviates from base — the engine's half of the
+/// router's transactional guard (DESIGN.md §13.1).  Captured BEFORE a
+/// mutation dispatches, from engine state that no mutation wave
+/// overwrites, so it stays valid even when the wave panics halfway.
+pub struct RollbackPlan {
+    /// Per target tensor: support indices and the base values to scatter
+    /// back onto them (SHiRA state — bit-exact restore).
+    pub sparse: Vec<(String, Vec<u32>, Vec<f32>)>,
+    /// A dense-fused LoRA adapter whose unfuse must be replayed (after
+    /// the router restores the captured pre-images of its targets).
+    /// Carries the engine-documented unfuse float drift.
+    pub lora: Option<Arc<LoraAdapter>>,
 }
 
 /// Cumulative counters an engine reports into the serve summary.
@@ -106,6 +123,26 @@ pub trait AdapterEngine {
 
     /// Cumulative counters for the serve summary.
     fn counters(&self) -> EngineCounters;
+
+    /// Rollback description for whatever this engine currently has
+    /// applied, or `None` when it deviates nothing from base.  Must read
+    /// only state that mutation waves never overwrite (so it is valid to
+    /// call this before dispatch and trust it after a mid-wave panic).
+    /// Engines that cannot describe a rollback return `None` and forfeit
+    /// transactional protection (the default).
+    fn rollback(&self) -> Option<RollbackPlan> {
+        None
+    }
+
+    /// Forget all applied state WITHOUT touching the weights — called by
+    /// the router's recovery after it has restored base values itself.
+    /// Default: no-op (an engine without rollback support keeps its
+    /// state).
+    fn clear_applied(&mut self) {}
+
+    /// Arm a deterministic fault injector (chaos tests).  Default: no-op
+    /// — engines without fault hooks simply never fire.
+    fn set_fault(&mut self, _fault: Arc<FaultInjector>) {}
 }
 
 impl AdapterEngine for SwitchEngine {
@@ -179,6 +216,26 @@ impl AdapterEngine for SwitchEngine {
             plan_mismatches: self.plan_mismatches,
         }
     }
+
+    /// SHiRA state rolls back by scattering the arena's base snapshot;
+    /// LoRA state by replaying the dense unfuse over restored pre-images.
+    fn rollback(&self) -> Option<RollbackPlan> {
+        if let Some(sparse) = self.shira_rollback() {
+            return Some(RollbackPlan { sparse, lora: None });
+        }
+        self.lora_rollback().map(|lora| RollbackPlan {
+            sparse: Vec::new(),
+            lora: Some(lora),
+        })
+    }
+
+    fn clear_applied(&mut self) {
+        self.clear_active();
+    }
+
+    fn set_fault(&mut self, fault: Arc<FaultInjector>) {
+        SwitchEngine::set_fault(self, fault);
+    }
 }
 
 impl AdapterEngine for FusionEngine {
@@ -226,6 +283,22 @@ impl AdapterEngine for FusionEngine {
             plan_mismatches: 0,
         }
     }
+
+    /// An activated engine rolls back by scattering `base_snap` over the
+    /// whole union support — base values captured at activation time,
+    /// never overwritten by refresh waves.
+    fn rollback(&self) -> Option<RollbackPlan> {
+        self.snapshot_parts()
+            .map(|sparse| RollbackPlan { sparse, lora: None })
+    }
+
+    fn clear_applied(&mut self) {
+        self.clear_active();
+    }
+
+    fn set_fault(&mut self, fault: Arc<FaultInjector>) {
+        FusionEngine::set_fault(self, fault);
+    }
 }
 
 /// What one [`Router::apply`] did.
@@ -261,6 +334,76 @@ enum Live {
     Fused,
 }
 
+/// Pre-mutation capture of everything one [`Router::apply`] could
+/// clobber — the write-ahead half of the transactional switch guard
+/// (DESIGN.md §13.1).  Captures run lazily at the first-mutation choke
+/// point of each apply arm (affinity fast paths never pay for them); on
+/// failure [`Router`] recovery replays them in a fixed order that lands
+/// every touched slot back on base values.
+#[derive(Default)]
+struct WeightTxn {
+    /// Sparse pre-images of the incoming selection's support, captured
+    /// from the live weights before any wave ran.  Overlap slots still
+    /// hold the OUTGOING adapter's contributions, so recovery restores
+    /// these first and lets the base scatters below overwrite them.
+    incoming: Vec<(String, Vec<u32>, Vec<f32>)>,
+    /// Dense pre-images of whole target tensors (LoRA targets, incoming
+    /// or outgoing) — restored before everything else.
+    dense: Vec<(String, Vec<f32>)>,
+    /// Outgoing single-engine rollback: base values at the active
+    /// adapter's support, or the LoRA adapter whose unfuse to replay.
+    single_out: Option<RollbackPlan>,
+    /// Outgoing fused-engine rollback: base values at the union support.
+    fused_out: Option<RollbackPlan>,
+    /// The REBUILT fusion engine's base snapshot, captured when
+    /// `ensure_roster` replaced the plan mid-apply (covers slots of the
+    /// new union that the old plans never knew).
+    rebuilt: Option<Vec<(String, Vec<u32>, Vec<f32>)>>,
+    /// True once the outgoing state has been captured — i.e. the apply
+    /// arm reached its first weight mutation.
+    outgoing_captured: bool,
+    /// True once an engine apply was dispatched on the weights: an `Err`
+    /// after this point is a mutation failure and recovers; pre-dispatch
+    /// errors (validate, fetch, quarantine, roster build) pass through
+    /// untouched, preserving the legacy error semantics.
+    dispatched: bool,
+}
+
+impl WeightTxn {
+    /// Record sparse/dense pre-images of the incoming selection's
+    /// support, read from the live weights (call before any wave runs).
+    fn capture_incoming(&mut self, w: &WeightStore, handle: &AdapterHandle) {
+        match &handle.adapter {
+            AnyAdapter::Shira(a) => {
+                for (target, delta) in &a.tensors {
+                    self.incoming.push((
+                        target.clone(),
+                        delta.idx.clone(),
+                        w.gather(target, &delta.idx),
+                    ));
+                }
+            }
+            AnyAdapter::Lora(a) => {
+                for lt in &a.tensors {
+                    self.dense
+                        .push((lt.target.clone(), w.get(&lt.target).data.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// Stringify a caught panic payload for [`ServeError::MutationRolledBack`].
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// The per-request routing state machine: owns the resident weights,
 /// the boxed single-adapter engine, and the lazily-built fused-mode
 /// engine, and drives any interleaving of base / single / set
@@ -290,6 +433,15 @@ pub struct Router {
     /// Serve LoRA singles unfused (branches on the forward pass) instead
     /// of dense-fusing them into the weights.
     lora_unfused: bool,
+    /// Failed mutations rolled back to base by the transactional guard.
+    rollbacks: u64,
+    /// Deterministic fault injector, forwarded into every engine this
+    /// router builds (chaos tests).
+    fault: Option<Arc<FaultInjector>>,
+    /// A `begin_transition` the store has open for an in-flight
+    /// single→single switch; recovery must close it so the plan's
+    /// refcount cannot leak when the dispatch dies.
+    inflight_plan: Option<(String, String)>,
 }
 
 impl Router {
@@ -319,7 +471,26 @@ impl Router {
             pinned_active: None,
             pinned_roster: Vec::new(),
             lora_unfused,
+            rollbacks: 0,
+            fault: None,
+            inflight_plan: None,
         }
+    }
+
+    /// Failed mutations this router has rolled back to base.
+    pub fn rollbacks(&self) -> u64 {
+        self.rollbacks
+    }
+
+    /// Arm a deterministic fault injector on this router's engines — the
+    /// current single engine, any live fused engine, and every fused
+    /// engine built later.
+    pub fn set_fault(&mut self, fault: Arc<FaultInjector>) {
+        self.single.set_fault(Arc::clone(&fault));
+        if let Some(f) = &mut self.fused {
+            AdapterEngine::set_fault(f, Arc::clone(&fault));
+        }
+        self.fault = Some(fault);
     }
 
     /// The resident weights.
@@ -357,12 +528,54 @@ impl Router {
     /// Repeating the active selection is free (except unfused-LoRA
     /// selections, which re-surface their adapter every call so each
     /// batch can thread the branches through the forward pass).
+    ///
+    /// Every apply runs inside a weight transaction (DESIGN.md §13.1):
+    /// pre-images of everything the arm will touch are captured right
+    /// before its first mutation, and a panic out of any engine wave —
+    /// or an engine error after dispatch — rolls the resident weights
+    /// back to base, releases every pin the apply took, and surfaces
+    /// [`ServeError::MutationRolledBack`] (panics) or the original error
+    /// (post-dispatch `Err`s).  Pre-dispatch errors (validation, store
+    /// fetch, quarantine, roster build) never mutated the weights and
+    /// pass through untouched.
     pub fn apply(
         &mut self,
         store: &mut AdapterStore,
         sel: &Selection,
     ) -> Result<Applied, ServeError> {
         sel.validate()?;
+        let mut txn = WeightTxn::default();
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            self.apply_guarded(store, sel, &mut txn)
+        }));
+        match outcome {
+            Ok(Ok(applied)) => Ok(applied),
+            Ok(Err(e)) => {
+                if txn.dispatched {
+                    self.recover(store, &mut txn);
+                }
+                Err(e)
+            }
+            Err(payload) => {
+                self.recover(store, &mut txn);
+                Err(ServeError::MutationRolledBack {
+                    selection: sel.key(),
+                    cause: panic_message(payload),
+                })
+            }
+        }
+    }
+
+    /// The routing state machine proper — [`Self::apply`] without the
+    /// transactional wrapper.  Each arm records pre-images into `txn` at
+    /// the choke point right before its first weight mutation (the
+    /// affinity fast paths above those points never pay for a capture).
+    fn apply_guarded(
+        &mut self,
+        store: &mut AdapterStore,
+        sel: &Selection,
+        txn: &mut WeightTxn,
+    ) -> Result<Applied, ServeError> {
         let key = sel.key();
         let same = self.active.as_deref() == Some(key.as_str());
         match sel {
@@ -370,6 +583,7 @@ impl Router {
                 let switched = self.live != Live::Base;
                 let t0 = Instant::now();
                 if switched {
+                    self.capture_outgoing(txn);
                     self.to_base(store);
                 }
                 self.active = Some(key);
@@ -395,6 +609,7 @@ impl Router {
                         let switched = !same;
                         let t0 = Instant::now();
                         if self.live != Live::Base {
+                            self.capture_outgoing(txn);
                             self.to_base(store);
                         }
                         self.active = Some(key);
@@ -421,6 +636,10 @@ impl Router {
                         .unwrap_or(false);
                     if member {
                         let t0 = Instant::now();
+                        // The roster member's support is inside the fused
+                        // union, so the fused snapshot below covers the
+                        // incoming slots too — no separate incoming capture.
+                        self.capture_outgoing(txn);
                         if self.live == Live::Single {
                             self.single.revert(&mut self.weights);
                             self.release_single(store);
@@ -449,6 +668,8 @@ impl Router {
                 // Switch-engine path.  Empty a live fused set first so the
                 // engine starts from true base values.
                 let t0 = Instant::now();
+                txn.capture_incoming(&self.weights, &handle);
+                self.capture_outgoing(txn);
                 if self.live == Live::Fused {
                     if let Some(f) = &mut self.fused {
                         AdapterEngine::revert(f, &mut self.weights);
@@ -480,10 +701,18 @@ impl Router {
                     handles: std::slice::from_ref(&handle),
                     transition,
                 };
-                let took_plan = op.transition.is_some();
+                if op.transition.is_some() {
+                    // Track the open transition so recovery can close it
+                    // if the dispatch below dies.
+                    self.inflight_plan =
+                        Some((prev.clone().unwrap_or_default(), name.clone()));
+                }
+                // Past this point an `Err` means the engine touched the
+                // weights: route it through recovery.
+                txn.dispatched = true;
                 let path = self.single.apply(&mut self.weights, &op)?;
-                if took_plan {
-                    store.end_transition(prev.as_deref().unwrap_or_default(), name);
+                if let Some((from, to)) = self.inflight_plan.take() {
+                    store.end_transition(&from, &to);
                 }
                 self.live = Live::Single;
                 self.single_name = Some(name.clone());
@@ -505,6 +734,7 @@ impl Router {
                 // never leave a stale key claiming the single is still
                 // resident.
                 let revert_t0 = Instant::now();
+                self.capture_outgoing(txn);
                 if self.live == Live::Single {
                     self.single.revert(&mut self.weights);
                     self.release_single(store);
@@ -514,7 +744,13 @@ impl Router {
                 let revert_us = revert_t0.elapsed().as_secs_f64() * 1e6;
                 // Roster (re)builds are lifecycle cost, not switch cost:
                 // excluded from the timed window like the store fetch.
-                self.ensure_roster(store, members)?;
+                let rebuilt = self.ensure_roster(store, members)?;
+                if rebuilt {
+                    // A rebuilt plan's union may cover slots the captured
+                    // outgoing snapshots never knew; snapshot it so a
+                    // failed activate wave below restores the NEW union.
+                    txn.rebuilt = self.fused.as_ref().and_then(|f| f.snapshot_parts());
+                }
                 let op = EngineOp {
                     selection: sel,
                     handles: &[],
@@ -565,6 +801,93 @@ impl Router {
         self.live = Live::Base;
     }
 
+    /// Capture the outgoing engines' rollback state into `txn` — called
+    /// at the choke point right before an apply arm's first weight
+    /// mutation (idempotent; later calls are no-ops).  Also records
+    /// dense pre-images of any outgoing LoRA's targets so the unfuse
+    /// replay during recovery starts from the exact bytes the engine's
+    /// own revert would have seen.
+    fn capture_outgoing(&self, txn: &mut WeightTxn) {
+        if txn.outgoing_captured {
+            return;
+        }
+        txn.outgoing_captured = true;
+        txn.single_out = self.single.rollback();
+        txn.fused_out = self.fused.as_ref().and_then(|f| AdapterEngine::rollback(f));
+        if let Some(plan) = &txn.single_out {
+            if let Some(lora) = &plan.lora {
+                for lt in &lora.tensors {
+                    txn.dense.push((
+                        lt.target.clone(),
+                        self.weights.get(&lt.target).data.clone(),
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Put the resident weights back on base values and the router back
+    /// in a truthful `Base` state after a failed mutation (DESIGN.md
+    /// §13.1).  Restore order matters:
+    ///
+    /// 1. dense pre-images (LoRA targets) — whole-tensor restore;
+    /// 2. the incoming selection's sparse pre-images — overlap slots
+    ///    return to their pre-dispatch (outgoing-adapter) values;
+    /// 3. outgoing LoRA unfuse replay over the restored pre-images
+    ///    (engine-documented float drift, same class as a normal revert);
+    /// 4. base scatters LAST — outgoing single, outgoing fused, and any
+    ///    rebuilt fusion snapshot — so every slot an engine deviated
+    ///    lands on true base bytes (bit-exact for pure-SHiRA state).
+    ///
+    /// The engines then forget their applied state without touching the
+    /// weights, every pin and in-flight transition this apply held is
+    /// released, and the active key becomes the base key — truthful,
+    /// because base really is resident again.
+    fn recover(&mut self, store: &mut AdapterStore, txn: &mut WeightTxn) {
+        // A panic before the arm's choke point means nothing has mutated
+        // yet and the engines' rollback state is still current: capture
+        // it now so the scatters below restore rather than corrupt.
+        self.capture_outgoing(txn);
+        for (name, vals) in &txn.dense {
+            self.weights.get_mut(name).data.copy_from_slice(vals);
+        }
+        for (name, idx, vals) in &txn.incoming {
+            self.weights.scatter(name, idx, vals);
+        }
+        if let Some(plan) = &txn.single_out {
+            if let Some(lora) = &plan.lora {
+                for lt in &lora.tensors {
+                    self.weights
+                        .get_mut(&lt.target)
+                        .sub_outer_product(&lt.a, &lt.b, lora.scale);
+                }
+            }
+        }
+        for plan in [txn.single_out.as_ref(), txn.fused_out.as_ref()]
+            .into_iter()
+            .flatten()
+        {
+            for (name, idx, vals) in &plan.sparse {
+                self.weights.scatter(name, idx, vals);
+            }
+        }
+        if let Some(parts) = &txn.rebuilt {
+            for (name, idx, vals) in parts {
+                self.weights.scatter(name, idx, vals);
+            }
+        }
+        self.single.clear_applied();
+        self.fused = None;
+        if let Some((from, to)) = self.inflight_plan.take() {
+            store.end_transition(&from, &to);
+        }
+        self.unpin_roster(store);
+        self.release_single(store);
+        self.live = Live::Base;
+        self.active = Some(String::new());
+        self.rollbacks += 1;
+    }
+
     fn release_single(&mut self, store: &mut AdapterStore) {
         self.single_name = None;
         if let Some(prev) = self.pinned_active.take() {
@@ -585,7 +908,7 @@ impl Router {
         &mut self,
         store: &mut AdapterStore,
         members: &[(String, f32)],
-    ) -> Result<(), ServeError> {
+    ) -> Result<bool, ServeError> {
         let covered = match &self.fused {
             None => false,
             Some(f) => members
@@ -593,7 +916,7 @@ impl Router {
                 .all(|(n, _)| f.plan().member_index(n).is_some()),
         };
         if covered {
-            return Ok(());
+            return Ok(false);
         }
         let mut names: Vec<String> = members.iter().map(|(n, _)| n.clone()).collect();
         if let Some(f) = &self.fused {
@@ -615,7 +938,7 @@ impl Router {
             // Don't leave a half-built roster pinned.
             self.unpin_roster(store);
         }
-        result
+        result.map(|_| true)
     }
 
     fn build_fusion(
@@ -662,6 +985,9 @@ impl Router {
         self.active = Some(String::new());
         let plan = FusionPlan::build(roster)?;
         let mut fusion = FusionEngine::with_pool(plan, self.pool.clone());
+        if let Some(fault) = &self.fault {
+            FusionEngine::set_fault(&mut fusion, Arc::clone(fault));
+        }
         fusion.activate(&mut self.weights)?;
         self.fused = Some(fusion);
         Ok(())
@@ -673,6 +999,7 @@ mod tests {
     use super::*;
     use crate::adapter::sparse::SparseDelta;
     use crate::adapter::ShiraAdapter;
+    use crate::coordinator::fault::FaultPlan;
     use crate::coordinator::fusion::fuse_shira;
     use crate::coordinator::store::StoreConfig;
     use crate::util::proptest as pt;
@@ -966,6 +1293,172 @@ mod tests {
         }
         router.revert_all(&mut store);
         assert!(router.weights().bit_equal(&base));
+    }
+
+    #[test]
+    fn wave_panic_during_single_apply_rolls_back_to_base() {
+        // Tentpole invariant: a panic out of the apply wave (serial and
+        // pooled) surfaces as MutationRolledBack, the resident weights
+        // land back on base bit-exactly, every pin is released, and the
+        // router keeps serving afterwards.
+        let zoo = adapters(3000); // crosses PAR_MIN_NNZ when pooled
+        let base = base_weights(21);
+        for threads in [None, Some(4usize)] {
+            let pool = threads.map(|t| Arc::new(ThreadPool::new(t)));
+            let mut store = store_with(&zoo, pool.clone());
+            let mut router = Router::new(base.clone(), pool, false);
+            router.set_fault(FaultPlan::new().panic_wave_at(1).injector());
+            let err = router
+                .apply(&mut store, &Selection::single("ad0"))
+                .unwrap_err();
+            match err {
+                ServeError::MutationRolledBack { selection, cause } => {
+                    assert_eq!(selection, "ad0");
+                    assert!(cause.contains("injected fault: wave panic"), "{cause}");
+                }
+                other => panic!("expected MutationRolledBack, got {other}"),
+            }
+            assert!(router.weights().bit_equal(&base), "rollback is bit-exact");
+            assert_eq!(router.rollbacks(), 1);
+            // Truthful key: base IS resident (= Selection::Base.key()).
+            assert_eq!(router.active_key(), Some(""));
+            assert!(!store.is_pinned("ad0"), "failed apply releases its pin");
+            assert_eq!(store.pinned_count(), 0);
+            // The injector is spent; the router still serves.
+            let sel = Selection::single("ad1");
+            let applied = router.apply(&mut store, &sel).unwrap();
+            assert!(applied.switched);
+            assert!(router
+                .weights()
+                .bit_equal(&reference_weights(&base, &zoo, &sel)));
+        }
+    }
+
+    #[test]
+    fn wave_panic_during_set_apply_rolls_back_to_base() {
+        // From a live single, a set apply panicking in the fused refresh
+        // wave must restore base (single support AND the new union),
+        // drop the half-built fusion engine, and release roster pins.
+        let zoo = adapters(3000);
+        let base = base_weights(23);
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut store = store_with(&zoo, Some(Arc::clone(&pool)));
+        let mut router = Router::new(base.clone(), Some(pool), false);
+        router.apply(&mut store, &Selection::single("ad0")).unwrap();
+        // Wave 1 is the outgoing single's revert; wave 2 the fused refresh.
+        router.set_fault(FaultPlan::new().panic_wave_at(2).injector());
+        let set = Selection::set(&[("ad1", 1.0), ("ad2", 0.5)]);
+        let err = router.apply(&mut store, &set).unwrap_err();
+        assert!(matches!(err, ServeError::MutationRolledBack { .. }), "{err}");
+        assert!(router.weights().bit_equal(&base));
+        assert!(router.fusion().is_none(), "half-built engine dropped");
+        assert_eq!(router.rollbacks(), 1);
+        for n in ["ad0", "ad1", "ad2"] {
+            assert!(!store.is_pinned(n), "{n} unpinned after rollback");
+        }
+        // Same set succeeds once the injector is spent.
+        let applied = router.apply(&mut store, &set).unwrap();
+        assert!(applied.switched);
+        assert!(router
+            .weights()
+            .bit_equal(&reference_weights(&base, &zoo, &set)));
+    }
+
+    #[test]
+    fn wave_panic_during_direct_transition_rolls_back_and_closes_plan() {
+        // A panic inside the one-pass A→B transition wave: both
+        // adapters' slots restore to base and the in-flight pair plan's
+        // pin is closed (no plan refcount leak).
+        let zoo = adapters(3000);
+        let base = base_weights(25);
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut store = store_with(&zoo, Some(Arc::clone(&pool)));
+        for a in &zoo {
+            store.fetch(&a.name).unwrap();
+        }
+        let mut router = Router::new(base.clone(), Some(Arc::clone(&pool)), false);
+        router.apply(&mut store, &Selection::single("ad0")).unwrap();
+        store.prefetch_transitions("ad0", &["ad1".to_string()]);
+        pool.join();
+        router.set_fault(FaultPlan::new().panic_wave_at(1).injector());
+        let err = router
+            .apply(&mut store, &Selection::single("ad1"))
+            .unwrap_err();
+        assert!(matches!(err, ServeError::MutationRolledBack { .. }), "{err}");
+        assert!(router.weights().bit_equal(&base));
+        assert_eq!(store.pinned_plan_count(), 0, "in-flight plan closed");
+        assert_eq!(store.pinned_count(), 0);
+        assert_eq!(router.rollbacks(), 1);
+        let sel = Selection::single("ad1");
+        router.apply(&mut store, &sel).unwrap();
+        assert!(router
+            .weights()
+            .bit_equal(&reference_weights(&base, &zoo, &sel)));
+    }
+
+    #[test]
+    fn wave_panic_while_leaving_fused_state_rolls_back_to_base() {
+        // Outgoing-fused coverage: a non-member single whose fused-revert
+        // wave panics must restore the union from the fused snapshot —
+        // including slots the incoming capture saw at FUSED values.
+        let zoo = adapters(3000);
+        let base = base_weights(27);
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut store = store_with(&zoo, Some(Arc::clone(&pool)));
+        let mut router = Router::new(base.clone(), Some(pool), false);
+        router
+            .apply(&mut store, &Selection::set(&[("ad0", 1.0), ("ad1", 0.7)]))
+            .unwrap();
+        router.set_fault(FaultPlan::new().panic_wave_at(1).injector());
+        let err = router
+            .apply(&mut store, &Selection::single("ad2"))
+            .unwrap_err();
+        assert!(matches!(err, ServeError::MutationRolledBack { .. }), "{err}");
+        assert!(router.weights().bit_equal(&base));
+        assert_eq!(router.rollbacks(), 1);
+        let sel = Selection::single("ad2");
+        router.apply(&mut store, &sel).unwrap();
+        assert!(router
+            .weights()
+            .bit_equal(&reference_weights(&base, &zoo, &sel)));
+    }
+
+    #[test]
+    fn lora_outgoing_rollback_lands_in_revert_drift_class() {
+        // An active dense-fused LoRA rolled back by a failed SHiRA apply
+        // replays the unfuse — float drift in the same class as the
+        // engine's own revert (switch.rs drift tests), never bit garbage.
+        use crate::adapter::LoraTensor;
+        use crate::model::tensor::Tensor2;
+        let zoo = adapters(60);
+        let base = base_weights(29);
+        let mut store = store_with(&zoo, None);
+        let mut rng = Rng::new(0x10AD);
+        let mk = |rng: &mut Rng, rows: usize, cols: usize| {
+            let mut t = Tensor2::zeros(rows, cols);
+            rng.fill_normal(&mut t.data, 0.0, 0.1);
+            t
+        };
+        store.add_lora(&LoraAdapter {
+            name: "lo".into(),
+            scale: 0.5,
+            tensors: vec![LoraTensor {
+                target: "wq".into(),
+                a: mk(&mut rng, DIM, 4),
+                b: mk(&mut rng, 4, DIM),
+            }],
+        });
+        let mut router = Router::new(base.clone(), None, false);
+        router.apply(&mut store, &Selection::single("lo")).unwrap();
+        router.set_fault(FaultPlan::new().panic_wave_at(1).injector());
+        let err = router
+            .apply(&mut store, &Selection::single("ad0"))
+            .unwrap_err();
+        assert!(matches!(err, ServeError::MutationRolledBack { .. }), "{err}");
+        let drift = router.weights().max_abs_diff(&base);
+        assert!(drift < 1e-4, "unfuse-replay drift too large: {drift}");
+        assert_eq!(router.rollbacks(), 1);
+        router.apply(&mut store, &Selection::single("ad1")).unwrap();
     }
 
     #[test]

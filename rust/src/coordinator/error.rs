@@ -54,6 +54,27 @@ pub enum ServeError {
     /// A fusion-engine failure not covered by a more specific variant
     /// (mismatched target sets, inactive engine, oversized roster).
     Fusion(FusionError),
+    /// The adapter is quarantined: it failed decode/CRC too many times in
+    /// a row and the store refuses to serve it until the re-probe TTL
+    /// expires (DESIGN.md §13.3).
+    Quarantined {
+        /// The quarantined adapter.
+        name: String,
+        /// Consecutive failures that tripped the quarantine.
+        failures: u32,
+        /// Milliseconds until the store re-probes the adapter.
+        retry_in_ms: u64,
+    },
+    /// A weight mutation failed mid-flight (a pool wave panicked or an
+    /// engine errored after dispatch) and the transactional guard rolled
+    /// the resident weights back to base bit-exactly.  The router is
+    /// serving base and stays serviceable (DESIGN.md §13.1).
+    MutationRolledBack {
+        /// What the router was applying when the fault hit.
+        selection: String,
+        /// First panic/error message captured from the failed wave.
+        cause: String,
+    },
     /// The PJRT runtime failed (artifact missing, compile or execute
     /// error).  Stringly: runtime errors originate outside the
     /// coordinator and carry no stable structure.
@@ -78,6 +99,8 @@ impl ServeError {
             ServeError::DuplicateMember(_) => "duplicate-member",
             ServeError::Io(_) => "io",
             ServeError::Fusion(_) => "fusion",
+            ServeError::Quarantined { .. } => "quarantined",
+            ServeError::MutationRolledBack { .. } => "mutation-rolled-back",
             ServeError::Runtime(_) => "runtime",
         }
     }
@@ -103,6 +126,16 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::Io(e) => write!(f, "{e}"),
             ServeError::Fusion(e) => write!(f, "{e}"),
+            ServeError::Quarantined { name, failures, retry_in_ms } => write!(
+                f,
+                "adapter {name:?} quarantined after {failures} consecutive \
+                 failures (re-probe in {retry_in_ms}ms)"
+            ),
+            ServeError::MutationRolledBack { selection, cause } => write!(
+                f,
+                "mutation for {selection:?} failed and was rolled back to \
+                 base weights: {cause}"
+            ),
             ServeError::Runtime(m) => write!(f, "runtime: {m}"),
         }
     }
@@ -180,6 +213,25 @@ mod tests {
             ServeError::from(FusionError::NotActive),
             ServeError::Fusion(FusionError::NotActive)
         ));
+    }
+
+    #[test]
+    fn robustness_variants_have_stable_kinds() {
+        let q = ServeError::Quarantined {
+            name: "bad".into(),
+            failures: 3,
+            retry_in_ms: 250,
+        };
+        assert_eq!(q.kind(), "quarantined");
+        assert!(q.to_string().contains("bad"));
+        assert!(q.to_string().contains("3 consecutive"));
+        let r = ServeError::MutationRolledBack {
+            selection: "a+b@2".into(),
+            cause: "injected fault: wave panic".into(),
+        };
+        assert_eq!(r.kind(), "mutation-rolled-back");
+        assert!(r.to_string().contains("a+b@2"));
+        assert!(r.to_string().contains("wave panic"));
     }
 
     #[test]

@@ -1,0 +1,282 @@
+//! Deterministic fault injection for the serving core (DESIGN.md §13).
+//!
+//! A [`FaultPlan`] names *which* events fail — "the 3rd flash read errors",
+//! "the 2nd decode sees a flipped byte", "the 5th dispatch wave panics
+//! mid-flight" — and a shared [`FaultInjector`] counts events at each hook
+//! site and fires exactly at the planned ordinals.  Plans are either built
+//! explicitly (one method per fault kind) or generated from a seed
+//! ([`FaultPlan::seeded`]), so a chaos run is reproducible from a single
+//! `u64` and every recovery path in the store, the engines, and the router
+//! is property-testable.
+//!
+//! The injector is plain runtime state (not `cfg(test)`-gated) so
+//! integration tests and the chaos suite can thread it through the public
+//! builders; production simply never installs one, and every hook is a
+//! no-op behind an `Option` that defaults to `None`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::rng::Rng;
+
+/// A hook site where a planned fault can fire.  Each site keeps its own
+/// event counter; ordinals in a [`FaultSpec`] are 1-based per site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// A flash read in `AdapterStore::fetch`/`prefetch` — fires as a
+    /// transient I/O error (exercises retry-with-backoff).
+    Fetch,
+    /// An adapter decode — the encoded bytes get one byte flipped before
+    /// decoding, so the CRC genuinely fails (exercises quarantine).
+    Decode,
+    /// An engine dispatch wave — one task panics mid-wave, leaving the
+    /// resident weights partially mutated (exercises rollback).
+    Wave,
+    /// A flash read that completes but slowly (exercises latency paths;
+    /// never an error).
+    SlowFetch,
+}
+
+const N_SITES: usize = 4;
+
+impl FaultSite {
+    fn index(self) -> usize {
+        match self {
+            FaultSite::Fetch => 0,
+            FaultSite::Decode => 1,
+            FaultSite::Wave => 2,
+            FaultSite::SlowFetch => 3,
+        }
+    }
+
+    /// Stable label for logs and test output.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Fetch => "fetch",
+            FaultSite::Decode => "decode",
+            FaultSite::Wave => "wave",
+            FaultSite::SlowFetch => "slow-fetch",
+        }
+    }
+}
+
+/// One planned fault: fire at the `at`-th event (1-based) on `site`.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    /// Which hook site fails.
+    pub site: FaultSite,
+    /// 1-based event ordinal at that site.
+    pub at: u64,
+}
+
+/// A reproducible set of planned faults plus injection parameters.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+    /// Injected latency for [`FaultSite::SlowFetch`] hits, microseconds.
+    pub slow_us: u64,
+}
+
+impl FaultPlan {
+    /// Empty plan (no faults ever fire).
+    pub fn new() -> Self {
+        FaultPlan { specs: Vec::new(), slow_us: 200 }
+    }
+
+    /// A random plan: `n_faults` faults spread over the first `horizon`
+    /// events of uniformly chosen sites.  Same seed, same plan.
+    pub fn seeded(seed: u64, n_faults: usize, horizon: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let sites = [
+            FaultSite::Fetch,
+            FaultSite::Decode,
+            FaultSite::Wave,
+            FaultSite::SlowFetch,
+        ];
+        let mut plan = FaultPlan::new();
+        for _ in 0..n_faults {
+            let site = *rng.choose(&sites);
+            let at = 1 + rng.next_u64() % horizon.max(1);
+            plan.specs.push(FaultSpec { site, at });
+        }
+        plan
+    }
+
+    /// Plan a transient I/O error on the `n`-th flash read.
+    pub fn fail_fetch_at(mut self, n: u64) -> Self {
+        self.specs.push(FaultSpec { site: FaultSite::Fetch, at: n });
+        self
+    }
+
+    /// Plan a one-byte corruption on the `n`-th decode.
+    pub fn corrupt_decode_at(mut self, n: u64) -> Self {
+        self.specs.push(FaultSpec { site: FaultSite::Decode, at: n });
+        self
+    }
+
+    /// Plan a mid-wave panic on the `n`-th engine dispatch wave.
+    pub fn panic_wave_at(mut self, n: u64) -> Self {
+        self.specs.push(FaultSpec { site: FaultSite::Wave, at: n });
+        self
+    }
+
+    /// Plan an injected latency stall on the `n`-th flash read.
+    pub fn slow_fetch_at(mut self, n: u64) -> Self {
+        self.specs.push(FaultSpec { site: FaultSite::SlowFetch, at: n });
+        self
+    }
+
+    /// Override the [`FaultSite::SlowFetch`] stall duration.
+    pub fn slow_us(mut self, us: u64) -> Self {
+        self.slow_us = us;
+        self
+    }
+
+    /// Planned faults (site, ordinal) in insertion order.
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    /// Freeze the plan into a shareable injector.
+    pub fn injector(self) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector {
+            plan: self,
+            counts: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+            fired: AtomicU64::new(0),
+        })
+    }
+}
+
+/// Shared event counter that fires the faults a [`FaultPlan`] names.
+/// Cloned (via `Arc`) into the store and both engines so ordinals count
+/// global events, not per-component ones.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    counts: [AtomicU64; N_SITES],
+    fired: AtomicU64,
+}
+
+impl FaultInjector {
+    /// Count one event at `site`; true when the plan says this ordinal
+    /// fails.  Thread-safe: ordinals are claimed atomically, so exactly
+    /// one caller observes each planned fault.
+    pub fn should_fire(&self, site: FaultSite) -> bool {
+        let n = self.counts[site.index()].fetch_add(1, Ordering::SeqCst) + 1;
+        let hit = self
+            .plan
+            .specs
+            .iter()
+            .any(|s| s.site == site && s.at == n);
+        if hit {
+            self.fired.fetch_add(1, Ordering::SeqCst);
+        }
+        hit
+    }
+
+    /// Events counted so far at `site`.
+    pub fn count(&self, site: FaultSite) -> u64 {
+        self.counts[site.index()].load(Ordering::SeqCst)
+    }
+
+    /// Total faults that actually fired.
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::SeqCst)
+    }
+
+    /// Flip one byte of an encoded adapter image so its CRC check fails.
+    /// Deterministic: always the middle byte, XORed with a fixed mask.
+    pub fn corrupt(&self, bytes: &mut [u8]) {
+        if let Some(b) = bytes.len().checked_sub(1).map(|n| n / 2) {
+            bytes[b] ^= 0x5A;
+        }
+    }
+
+    /// The configured slow-fetch stall, microseconds.
+    pub fn slow_stall_us(&self) -> u64 {
+        self.plan.slow_us
+    }
+
+    /// Panic message used by injected wave faults (tests match on it).
+    pub const WAVE_PANIC_MSG: &'static str = "injected fault: wave panic";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_exactly_at_planned_ordinals() {
+        let inj = FaultPlan::new()
+            .fail_fetch_at(3)
+            .corrupt_decode_at(1)
+            .injector();
+        assert!(!inj.should_fire(FaultSite::Fetch)); // 1
+        assert!(!inj.should_fire(FaultSite::Fetch)); // 2
+        assert!(inj.should_fire(FaultSite::Fetch)); // 3 — planned
+        assert!(!inj.should_fire(FaultSite::Fetch)); // 4
+        assert!(inj.should_fire(FaultSite::Decode)); // 1 — planned
+        assert!(!inj.should_fire(FaultSite::Decode)); // 2
+        assert_eq!(inj.fired(), 2);
+        assert_eq!(inj.count(FaultSite::Fetch), 4);
+        assert_eq!(inj.count(FaultSite::Wave), 0);
+    }
+
+    #[test]
+    fn sites_count_independently() {
+        let inj = FaultPlan::new().panic_wave_at(2).injector();
+        assert!(!inj.should_fire(FaultSite::Fetch));
+        assert!(!inj.should_fire(FaultSite::Wave)); // wave 1
+        assert!(!inj.should_fire(FaultSite::Fetch));
+        assert!(inj.should_fire(FaultSite::Wave)); // wave 2 — planned
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        let a = FaultPlan::seeded(42, 8, 20);
+        let b = FaultPlan::seeded(42, 8, 20);
+        let c = FaultPlan::seeded(43, 8, 20);
+        let key = |p: &FaultPlan| {
+            p.specs().iter().map(|s| (s.site.name(), s.at)).collect::<Vec<_>>()
+        };
+        assert_eq!(key(&a), key(&b));
+        assert_ne!(key(&a), key(&c));
+        assert_eq!(a.specs().len(), 8);
+        assert!(a.specs().iter().all(|s| s.at >= 1 && s.at <= 20));
+    }
+
+    #[test]
+    fn corruption_flips_one_byte_deterministically() {
+        let inj = FaultPlan::new().injector();
+        let orig: Vec<u8> = (0u8..64).collect();
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        inj.corrupt(&mut a);
+        inj.corrupt(&mut b);
+        assert_eq!(a, b);
+        let diffs: Vec<usize> =
+            (0..64).filter(|&i| a[i] != orig[i]).collect();
+        assert_eq!(diffs.len(), 1);
+        inj.corrupt(&mut []); // empty image: no-op, no panic
+    }
+
+    #[test]
+    fn concurrent_ordinal_claims_fire_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        let inj = FaultPlan::new().fail_fetch_at(50).injector();
+        let hits = AtomicUsize::new(0);
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        pool.scoped_for(100, |_| {
+            if inj.should_fire(FaultSite::Fetch) {
+                hits.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        assert_eq!(inj.count(FaultSite::Fetch), 100);
+    }
+}

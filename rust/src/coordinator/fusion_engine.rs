@@ -43,6 +43,7 @@
 
 use std::sync::Arc;
 
+use super::fault::{FaultInjector, FaultSite};
 use super::fusion::{fuse_shira, validate_target_sets, FusionError, PairInterference};
 use crate::adapter::sparse::{shard_sorted, shards_for, SparseDelta, PAR_MIN_NNZ};
 use crate::adapter::ShiraAdapter;
@@ -398,6 +399,9 @@ pub struct FusionEngine {
     utasks: Vec<UnionTask>,
     /// Reusable per-target merged-slot scratch.
     union_scratch: Vec<UnionScratch>,
+    /// Deterministic fault injector (chaos tests, DESIGN.md §13.2):
+    /// when armed, one planned refresh wave panics mid-dispatch.
+    fault: Option<Arc<FaultInjector>>,
 }
 
 impl FusionEngine {
@@ -421,7 +425,56 @@ impl FusionEngine {
             tasks: Vec::new(),
             utasks: Vec::new(),
             union_scratch: Vec::new(),
+            fault: None,
         }
+    }
+
+    /// Arm a deterministic fault injector: planned
+    /// [`FaultSite::Wave`] ordinals make the matching refresh wave
+    /// panic mid-dispatch (after partial writes), exercising the
+    /// router's transactional rollback.
+    pub fn set_fault(&mut self, fault: Arc<FaultInjector>) {
+        self.fault = Some(fault);
+    }
+
+    /// Claim the next wave ordinal; true when this wave must panic.
+    fn wave_fault_armed(&self) -> bool {
+        match &self.fault {
+            Some(f) => f.should_fire(FaultSite::Wave),
+            None => false,
+        }
+    }
+
+    /// Pure-data rollback snapshot: per plan target, the union support
+    /// indices and the base values `activate` captured for them.  `None`
+    /// until activated.  `base_snap` is written once at activation and
+    /// never touched by refresh waves, so it survives a mid-wave panic
+    /// intact — the router's transaction scatters it back to restore
+    /// base on the whole union.
+    pub fn snapshot_parts(&self) -> Option<Vec<(String, Vec<u32>, Vec<f32>)>> {
+        if !self.active {
+            return None;
+        }
+        Some(
+            self.plan
+                .targets
+                .iter()
+                .enumerate()
+                .map(|(t, pt)| {
+                    (pt.name.clone(), pt.union_idx.clone(), self.base_snap[t].clone())
+                })
+                .collect(),
+        )
+    }
+
+    /// Forget all fused members and deactivate WITHOUT touching the
+    /// weights — the rollback path's final step after the router has
+    /// restored the resident store itself.  Never call this outside
+    /// failure recovery: it desynchronizes the engine from the weights.
+    pub fn clear_active(&mut self) {
+        self.fused.iter_mut().for_each(|f| *f = false);
+        self.weights.iter_mut().for_each(|w| *w = 0.0);
+        self.active = false;
     }
 
     /// The plan this engine operates over.
@@ -636,6 +689,8 @@ impl FusionEngine {
             return;
         }
         self.updates += members.len() as u64;
+        // Claim this refresh wave's fault ordinal (chaos injection).
+        let boom = self.wave_fault_armed();
         let total_nnz: usize = members
             .iter()
             .map(|&m| self.plan.roster[m].param_count())
@@ -675,47 +730,39 @@ impl FusionEngine {
         let weights = &self.weights;
         let snaps = &self.base_snap;
         let tasks = &self.tasks;
+        let n = tasks.len();
+        let run = |i: usize| {
+            if boom && i == n / 2 {
+                panic!("{}", FaultInjector::WAVE_PANIC_MSG);
+            }
+            let task = tasks[i];
+            // SAFETY: tasks cover disjoint local ranges of each
+            // member's unique sorted support; members in one call
+            // are conflict-free (no shared slots), so every weight
+            // element is written by exactly one task.
+            unsafe {
+                refresh_range(
+                    plan,
+                    snaps,
+                    fused,
+                    weights,
+                    wptrs[task.t].get(),
+                    task.t,
+                    task.m,
+                    task.lo,
+                    task.hi,
+                )
+            }
+        };
         match pool {
             Some(pool) => {
-                pool.scoped_for(tasks.len(), |i| {
-                    let task = tasks[i];
-                    // SAFETY: tasks cover disjoint local ranges of each
-                    // member's unique sorted support; members in one call
-                    // are conflict-free (no shared slots), so every weight
-                    // element is written by exactly one task.
-                    unsafe {
-                        refresh_range(
-                            plan,
-                            snaps,
-                            fused,
-                            weights,
-                            wptrs[task.t].get(),
-                            task.t,
-                            task.m,
-                            task.lo,
-                            task.hi,
-                        )
-                    }
-                });
-            }
-            None => {
-                for &task in tasks {
-                    // SAFETY: serial — trivially disjoint.
-                    unsafe {
-                        refresh_range(
-                            plan,
-                            snaps,
-                            fused,
-                            weights,
-                            wptrs[task.t].get(),
-                            task.t,
-                            task.m,
-                            task.lo,
-                            task.hi,
-                        )
-                    }
+                if let Err(fault) = pool.try_scoped_for(n, run) {
+                    // The pool has fully quiesced: no worker still holds
+                    // a cursor into W, so the router's rollback may run.
+                    panic!("pool wave failed: {fault}");
                 }
             }
+            None => (0..n).for_each(run),
         }
         self.tasks.clear();
     }
@@ -732,6 +779,8 @@ impl FusionEngine {
     fn refresh_union(&mut self, store: &mut WeightStore, members: &[usize]) {
         debug_assert!(members.len() > 1, "single members take refresh_members");
         self.updates += members.len() as u64;
+        // Claim this refresh wave's fault ordinal (chaos injection).
+        let boom = self.wave_fault_armed();
         let n_targets = self.plan.targets.len();
         if self.union_scratch.len() < n_targets {
             self.union_scratch
@@ -790,7 +839,11 @@ impl FusionEngine {
         let snaps = &self.base_snap;
         let scratch = &self.union_scratch;
         let tasks = &self.utasks;
+        let n = tasks.len();
         let run = |i: usize| {
+            if boom && i == n / 2 {
+                panic!("{}", FaultInjector::WAVE_PANIC_MSG);
+            }
             let task = tasks[i];
             let sc = &scratch[task.t];
             // SAFETY: merged slot lists are deduped and shards cover
@@ -812,8 +865,13 @@ impl FusionEngine {
             }
         };
         match pool {
-            Some(pool) => pool.scoped_for(tasks.len(), run),
-            None => (0..tasks.len()).for_each(run),
+            Some(pool) => {
+                if let Err(fault) = pool.try_scoped_for(n, run) {
+                    // Fully quiesced (see refresh_members): rollback-safe.
+                    panic!("pool wave failed: {fault}");
+                }
+            }
+            None => (0..n).for_each(run),
         }
         self.utasks.clear();
     }

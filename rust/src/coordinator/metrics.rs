@@ -43,8 +43,17 @@ pub struct ServeMetrics {
     pub single_requests: u64,
     /// Requests that selected a fused adapter set.
     pub set_requests: u64,
+    /// Failed weight mutations rolled back to base by the transactional
+    /// guard (DESIGN.md §13.1).
+    pub rollbacks: u64,
+    /// Requests served with base weights after their selection failed
+    /// under the `DegradeToBase` policy.
+    pub degraded: u64,
+    /// Requests dropped after their selection failed under the
+    /// `SkipRequest` policy.
+    pub skipped: u64,
     /// Adapter-store lifecycle counters (set once at end of run via
-    /// [`Self::set_store`]).
+    /// [`Self::set_store`]; includes retry/quarantine counts).
     pub store: StoreStats,
 }
 
@@ -72,6 +81,22 @@ impl ServeMetrics {
             SwitchPath::Fallback => self.fallbacks += 1,
             SwitchPath::Fused => self.fused_switches += 1,
         }
+    }
+
+    /// Record one transactional rollback (a mutation failed and the
+    /// resident weights were restored to base).
+    pub fn record_rollback(&mut self) {
+        self.rollbacks += 1;
+    }
+
+    /// Record `n` requests served with base weights under degraded mode.
+    pub fn record_degraded(&mut self, n: u64) {
+        self.degraded += n;
+    }
+
+    /// Record `n` requests dropped under the skip policy.
+    pub fn record_skipped(&mut self, n: u64) {
+        self.skipped += n;
     }
 
     /// Count one incoming request by its selection kind.
@@ -118,6 +143,8 @@ impl ServeMetrics {
              oversized={} resident={} ({} entries)\n\
              plans: hits={} misses={} evictions={} builds={} \
              resident={} ({} entries)\n\
+             resilience: retries={} quarantines={} rollbacks={} \
+             degraded={} skipped={}\n\
              throughput={:.1} req/s",
             self.requests,
             self.batches,
@@ -153,6 +180,11 @@ impl ServeMetrics {
             self.store.plan_builds,
             fmt_bytes(self.store.plan_resident_bytes),
             self.store.plan_resident_entries,
+            self.store.retries,
+            self.store.quarantines,
+            self.rollbacks,
+            self.degraded,
+            self.skipped,
             thr
         )
     }
@@ -204,6 +236,8 @@ mod tests {
             plan_builds: 8,
             plan_resident_bytes: 4096,
             plan_resident_entries: 3,
+            retries: 4,
+            quarantines: 1,
         });
         let s = m.summary(1.0);
         assert!(s.contains("hits=7"), "{s}");
@@ -212,7 +246,26 @@ mod tests {
         assert!(s.contains("prefetch_hits=4"), "{s}");
         assert!(s.contains("2 entries"), "{s}");
         assert!(s.contains("plans: hits=6 misses=2 evictions=1 builds=8"), "{s}");
+        assert!(s.contains("retries=4 quarantines=1"), "{s}");
         assert!((m.store.hit_rate() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resilience_counters_surface_in_summary() {
+        let mut m = ServeMetrics::new();
+        m.record_batch(4, false, 0.0, 100.0);
+        m.record_rollback();
+        m.record_rollback();
+        m.record_degraded(3);
+        m.record_skipped(1);
+        assert_eq!((m.rollbacks, m.degraded, m.skipped), (2, 3, 1));
+        let s = m.summary(1.0);
+        assert!(
+            s.contains(
+                "resilience: retries=0 quarantines=0 rollbacks=2 degraded=3 skipped=1"
+            ),
+            "{s}"
+        );
     }
 
     #[test]

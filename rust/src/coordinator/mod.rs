@@ -10,12 +10,15 @@
 //! * [`error`] — the structured [`error::ServeError`] taxonomy;
 //! * [`engine`] — the [`engine::AdapterEngine`] trait and the
 //!   per-request [`engine::Router`];
-//! * [`server`] — [`server::ServerBuilder`] / [`server::Server`].
+//! * [`server`] — [`server::ServerBuilder`] / [`server::Server`];
+//! * [`fault`] — deterministic fault injection ([`fault::FaultPlan`])
+//!   for chaos-testing every recovery path.
 
 pub mod batcher;
 pub mod cache;
 pub mod engine;
 pub mod error;
+pub mod fault;
 pub mod fusion;
 pub mod fusion_engine;
 pub mod metrics;

@@ -22,6 +22,7 @@ use std::time::Instant;
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::engine::Router;
+use super::fault::FaultPlan;
 use super::fusion_engine::FusionEngine;
 use super::metrics::ServeMetrics;
 use crate::adapter::io::Format;
@@ -36,6 +37,44 @@ use crate::util::threadpool::ThreadPool;
 pub use super::error::ServeError;
 pub use super::selection::{Selection, SelectionKind};
 pub use super::store::{AdapterStore, AnyAdapter, StoreConfig, StoreStats};
+
+/// What to do with a batch whose selection cannot be made resident
+/// (store failure, quarantine, or a rolled-back mutation) — the
+/// degraded-mode half of the failure model (DESIGN.md §13.4).
+///
+/// Whatever the policy, the router has already restored a consistent
+/// state before it surfaces the error: pre-dispatch failures never
+/// touched the weights and mutation failures rolled back to base.  The
+/// policy only decides what happens to the REQUESTS.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FailurePolicy {
+    /// Abort the trace on the first failed selection, draining the
+    /// queue and returning the error (the legacy behavior, and the
+    /// default).
+    #[default]
+    FailFast,
+    /// Serve the failed batch on base weights and keep going — requests
+    /// complete, degraded; counted in [`ServeMetrics::degraded`] and
+    /// recorded in [`ServeReport::outcomes`].
+    DegradeToBase,
+    /// Drop the failed batch (its requests never execute) and keep
+    /// going; counted in [`ServeMetrics::skipped`] and recorded in
+    /// [`ServeReport::outcomes`].
+    SkipRequest,
+}
+
+/// How one failed selection batch was handled under the failure policy.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    /// Canonical key of the selection that failed.
+    pub selection: String,
+    /// Requests in the affected batch.
+    pub requests: u64,
+    /// `"degraded-to-base"` or `"skipped"`.
+    pub action: &'static str,
+    /// Display form of the error that triggered the policy.
+    pub error: String,
+}
 
 /// End-of-run report.
 #[derive(Clone, Debug)]
@@ -82,6 +121,15 @@ pub struct ServeReport {
     pub cache_hit_rate: f64,
     /// Adapter-store lifecycle counters (cache, prefetch, residency).
     pub store: StoreStats,
+    /// Failed mutations rolled back to base during this trace.
+    pub rollbacks: u64,
+    /// Requests served on base weights under `DegradeToBase`.
+    pub degraded: u64,
+    /// Requests dropped under `SkipRequest`.
+    pub skipped: u64,
+    /// One entry per failed batch the failure policy handled (empty
+    /// under `FailFast`, which returns the error instead).
+    pub outcomes: Vec<RequestOutcome>,
     /// Human-readable multi-line summary (see `ServeMetrics::summary`).
     pub summary: String,
 }
@@ -119,6 +167,8 @@ pub struct ServerBuilder<'rt> {
     batcher_cfg: Option<BatcherConfig>,
     pool: Option<Arc<ThreadPool>>,
     unfused_lora: bool,
+    failure_policy: FailurePolicy,
+    fault_plan: Option<FaultPlan>,
 }
 
 impl<'rt> ServerBuilder<'rt> {
@@ -132,7 +182,25 @@ impl<'rt> ServerBuilder<'rt> {
             batcher_cfg: None,
             pool: None,
             unfused_lora: false,
+            failure_policy: FailurePolicy::default(),
+            fault_plan: None,
         }
+    }
+
+    /// What to do with batches whose selection cannot be made resident
+    /// (default [`FailurePolicy::FailFast`], the legacy behavior).
+    pub fn failure_policy(mut self, policy: FailurePolicy) -> Self {
+        self.failure_policy = policy;
+        self
+    }
+
+    /// Arm a deterministic fault plan: ONE injector is built from it
+    /// and threaded into both the adapter store (fetch/decode faults,
+    /// slow fetches) and the router's engines (wave panics), so a
+    /// chaos scenario shares one ordinal space end to end.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
     }
 
     /// Model name in the manifest (default `"llama"`).
@@ -208,8 +276,13 @@ impl<'rt> ServerBuilder<'rt> {
         let pool = self
             .pool
             .unwrap_or_else(|| Arc::new(ThreadPool::host_sized()));
-        let store = AdapterStore::with_config(self.store_cfg, Some(Arc::clone(&pool)));
-        let router = Router::new(self.base, Some(pool), self.unfused_lora);
+        let mut store = AdapterStore::with_config(self.store_cfg, Some(Arc::clone(&pool)));
+        let mut router = Router::new(self.base, Some(pool), self.unfused_lora);
+        if let Some(plan) = &self.fault_plan {
+            let injector = plan.injector();
+            store.set_fault(Arc::clone(&injector));
+            router.set_fault(injector);
+        }
         let batcher = DynamicBatcher::new(self.batcher_cfg.unwrap_or(BatcherConfig {
             max_batch,
             max_wait_rounds: 4,
@@ -220,6 +293,7 @@ impl<'rt> ServerBuilder<'rt> {
             router,
             store,
             batcher,
+            policy: self.failure_policy,
         })
     }
 }
@@ -235,6 +309,7 @@ pub struct Server<'rt> {
     /// The adapter lifecycle store: flash bytes, decode cache, prefetch.
     pub store: AdapterStore,
     batcher: DynamicBatcher,
+    policy: FailurePolicy,
 }
 
 impl<'rt> Server<'rt> {
@@ -299,6 +374,9 @@ impl<'rt> Server<'rt> {
         let theta_total = meta.theta_len.get("lora").copied().unwrap_or(0);
 
         let mut metrics = ServeMetrics::new();
+        let mut outcomes: Vec<RequestOutcome> = Vec::new();
+        // Rollbacks are cumulative on the router; report this trace's share.
+        let rollbacks0 = self.router.rollbacks();
         // Validate every selection before enqueueing any, so a malformed
         // request rejects the trace without leaving a partial queue.
         for r in trace {
@@ -343,14 +421,46 @@ impl<'rt> Server<'rt> {
             // The router reports its own weight-mutation time
             // (`Applied::switch_us`): store fetch/decode and roster builds
             // stay OUT of the switch metric, as they always have.
+            // Whatever the failure policy, a failed apply left the router
+            // consistent: pre-dispatch errors never touched the weights
+            // and mutation failures rolled back to base (engine.rs).
             let applied = match self.router.apply(&mut self.store, &sel) {
                 Ok(applied) => applied,
-                Err(e) => {
-                    // Drain the queue: a later trace must not replay this
-                    // failed trace's tail.
-                    self.batcher.clear();
-                    return Err(e);
-                }
+                Err(e) => match self.policy {
+                    FailurePolicy::FailFast => {
+                        // Drain the queue: a later trace must not replay
+                        // this failed trace's tail.
+                        self.batcher.clear();
+                        return Err(e);
+                    }
+                    FailurePolicy::SkipRequest => {
+                        metrics.record_skipped(batch.len() as u64);
+                        outcomes.push(RequestOutcome {
+                            selection: key.clone(),
+                            requests: batch.len() as u64,
+                            action: "skipped",
+                            error: e.to_string(),
+                        });
+                        continue;
+                    }
+                    FailurePolicy::DegradeToBase => {
+                        metrics.record_degraded(batch.len() as u64);
+                        outcomes.push(RequestOutcome {
+                            selection: key.clone(),
+                            requests: batch.len() as u64,
+                            action: "degraded-to-base",
+                            error: e.to_string(),
+                        });
+                        match self.router.apply(&mut self.store, &Selection::Base) {
+                            Ok(applied) => applied,
+                            Err(e) => {
+                                // Even base is unservable: fail the trace.
+                                self.batcher.clear();
+                                return Err(e);
+                            }
+                        }
+                    }
+                },
             };
             let switch_us = if applied.switched { applied.switch_us } else { 0.0 };
             if applied.switched {
@@ -455,6 +565,7 @@ impl<'rt> Server<'rt> {
         let store_stats = self.store.stats();
         metrics.set_store(store_stats.clone());
         metrics.set_plan_mismatches(self.router.single_counters().plan_mismatches);
+        metrics.rollbacks = self.router.rollbacks() - rollbacks0;
         let p99 = metrics.request_latency.percentile_us(99.0);
         let (p50_switch, p99_switch) = if metrics.switch_us.is_empty() {
             (0.0, 0.0)
@@ -494,6 +605,10 @@ impl<'rt> Server<'rt> {
             p99_latency_us: p99,
             cache_hit_rate: store_stats.hit_rate(),
             store: store_stats,
+            rollbacks: metrics.rollbacks,
+            degraded: metrics.degraded,
+            skipped: metrics.skipped,
+            outcomes,
             summary: metrics.summary(wall),
         })
     }
@@ -779,5 +894,83 @@ mod tests {
             server.run_trace(&trace),
             Err(ServeError::NotShira(n)) if n == "lora0"
         ));
+    }
+
+    #[test]
+    fn degrade_to_base_serves_failed_selections_on_base() {
+        let Some(rt) = runtime() else { return };
+        let meta = rt.manifest.model("llama").unwrap();
+        let base = WeightStore::init(&meta.params, 7);
+        let mut server = Server::builder(&rt, base.clone())
+            .cache_bytes(1 << 20)
+            .failure_policy(FailurePolicy::DegradeToBase)
+            .build()
+            .unwrap();
+        for (i, name) in ["ad0", "ad1"].iter().enumerate() {
+            server.store.add_shira(&make_shira(&rt, name, i as u64));
+        }
+        // "ghost" is unknown: its batches degrade to base, the rest serve.
+        let sels = vec![
+            Selection::single("ad0"),
+            Selection::single("ghost"),
+            Selection::single("ad1"),
+        ];
+        let trace = generate_trace(&sels, 12, TracePattern::Bursty { burst: 4 }, 1e4, 11);
+        let rep = server.run_trace(&trace).unwrap();
+        assert_eq!(rep.requests, 12, "degraded requests still complete");
+        assert!(rep.degraded > 0, "ghost batches served degraded");
+        assert!(!rep.outcomes.is_empty());
+        assert!(rep
+            .outcomes
+            .iter()
+            .all(|o| o.action == "degraded-to-base" && o.selection == "ghost"));
+        assert!(rep.summary.contains("degraded="), "{}", rep.summary);
+        server.revert_all();
+        assert!(server.weights().bit_equal(&base));
+    }
+
+    #[test]
+    fn skip_request_drops_failed_batches_and_keeps_serving() {
+        let Some(rt) = runtime() else { return };
+        let (mut server, _names) = server_with(&rt, Zoo::Shira, false);
+        server.policy = FailurePolicy::SkipRequest;
+        let sels = vec![Selection::single("ad0"), Selection::single("ghost")];
+        let trace = generate_trace(&sels, 12, TracePattern::Bursty { burst: 4 }, 1e4, 13);
+        let rep = server.run_trace(&trace).unwrap();
+        assert!(rep.skipped > 0, "ghost batches dropped");
+        assert_eq!(rep.requests + rep.skipped, 12);
+        assert!(rep.outcomes.iter().all(|o| o.action == "skipped"));
+    }
+
+    #[test]
+    fn fault_plan_wave_panic_rolls_back_and_degrades() {
+        // End-to-end chaos smoke: one injected wave panic under
+        // DegradeToBase — the mutation rolls back, the batch serves on
+        // base, and the report carries the resilience counters.
+        let Some(rt) = runtime() else { return };
+        let meta = rt.manifest.model("llama").unwrap();
+        let base = WeightStore::init(&meta.params, 7);
+        let mut server = Server::builder(&rt, base.clone())
+            .cache_bytes(1 << 20)
+            .failure_policy(FailurePolicy::DegradeToBase)
+            .fault_plan(FaultPlan::new().panic_wave_at(1))
+            .build()
+            .unwrap();
+        for (i, name) in ["ad0", "ad1"].iter().enumerate() {
+            server.store.add_shira(&make_shira(&rt, name, i as u64));
+        }
+        let sels = vec![Selection::single("ad0"), Selection::single("ad1")];
+        let trace = generate_trace(&sels, 8, TracePattern::Bursty { burst: 4 }, 1e4, 17);
+        let rep = server.run_trace(&trace).unwrap();
+        assert_eq!(rep.requests, 8, "rolled-back batch still serves (degraded)");
+        assert_eq!(rep.rollbacks, 1, "exactly the planned wave panic");
+        assert!(rep.degraded > 0);
+        assert!(rep
+            .outcomes
+            .iter()
+            .any(|o| o.error.contains("rolled back")), "{:?}", rep.outcomes);
+        assert!(rep.summary.contains("rollbacks=1"), "{}", rep.summary);
+        server.revert_all();
+        assert!(server.weights().bit_equal(&base));
     }
 }

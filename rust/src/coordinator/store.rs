@@ -28,9 +28,11 @@
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::cache::LruCache;
 use super::error::ServeError;
+use super::fault::{FaultInjector, FaultSite};
 use crate::adapter::io::{self, AdapterFamily, Format, IoError};
 use crate::adapter::sparse::{shards_for, ShardPlan};
 use crate::adapter::{AdapterTransition, LoraAdapter, ShiraAdapter};
@@ -120,6 +122,18 @@ pub struct StoreConfig {
     /// Byte budget of the pairwise transition-plan cache (0 disables
     /// direct transitions: every switch falls back to revert+apply).
     pub plan_cache_bytes: usize,
+    /// Retries after a transient I/O failure on the inline fetch path
+    /// (0 disables retry; permanent failures never retry).
+    pub retry_max: u32,
+    /// Base backoff between retries, microseconds; doubles per attempt
+    /// (0 retries immediately — what tests use).
+    pub retry_backoff_us: u64,
+    /// Consecutive terminal fetch failures (post-retry) before an adapter
+    /// is quarantined and refused with [`ServeError::Quarantined`].
+    pub quarantine_threshold: u32,
+    /// How long a quarantine refuses fetches before letting one re-probe
+    /// through, milliseconds (0 re-probes immediately).
+    pub quarantine_ttl_ms: u64,
 }
 
 impl Default for StoreConfig {
@@ -129,6 +143,10 @@ impl Default for StoreConfig {
             format: Format::V2,
             prefetch_depth: 2,
             plan_cache_bytes: 4 << 20,
+            retry_max: 2,
+            retry_backoff_us: 100,
+            quarantine_threshold: 3,
+            quarantine_ttl_ms: 250,
         }
     }
 }
@@ -174,6 +192,11 @@ pub struct StoreStats {
     pub plan_resident_bytes: usize,
     /// Transition plans currently resident in the plan cache.
     pub plan_resident_entries: usize,
+    /// Transient-I/O fetch attempts retried (DESIGN.md §13.3).
+    pub retries: u64,
+    /// Quarantine trips: an adapter crossed the consecutive-failure
+    /// threshold and was refused until its TTL re-probe.
+    pub quarantines: u64,
 }
 
 impl StoreStats {
@@ -221,6 +244,14 @@ struct PlanShared {
     slots: Mutex<HashMap<String, PlanStaged>>,
 }
 
+/// Per-adapter fetch-failure bookkeeping (DESIGN.md §13.3): consecutive
+/// terminal failures, and when the quarantine (if any) was tripped.
+#[derive(Default)]
+struct Health {
+    consecutive: u32,
+    quarantined_at: Option<Instant>,
+}
+
 /// Flash-resident encoded adapters + pinned RAM cache of decoded ones,
 /// with shard-aligned decode and background prefetch (module docs).
 pub struct AdapterStore {
@@ -240,6 +271,17 @@ pub struct AdapterStore {
     prefetch_hits: u64,
     prefetch_waits: u64,
     plan_builds: u64,
+    /// Retry/quarantine tunables (see [`StoreConfig`]).
+    retry_max: u32,
+    retry_backoff_us: u64,
+    quarantine_threshold: u32,
+    quarantine_ttl_ms: u64,
+    /// Per-adapter consecutive-failure / quarantine state.
+    health: HashMap<String, Health>,
+    retries: u64,
+    quarantines: u64,
+    /// Optional deterministic fault injector (chaos tests only).
+    fault: Option<Arc<FaultInjector>>,
 }
 
 impl AdapterStore {
@@ -278,7 +320,21 @@ impl AdapterStore {
             prefetch_hits: 0,
             prefetch_waits: 0,
             plan_builds: 0,
+            retry_max: cfg.retry_max,
+            retry_backoff_us: cfg.retry_backoff_us,
+            quarantine_threshold: cfg.quarantine_threshold.max(1),
+            quarantine_ttl_ms: cfg.quarantine_ttl_ms,
+            health: HashMap::new(),
+            retries: 0,
+            quarantines: 0,
+            fault: None,
         }
+    }
+
+    /// Install a deterministic fault injector (chaos tests).  Production
+    /// never calls this; every hook is a no-op without one.
+    pub fn set_fault(&mut self, fault: Arc<FaultInjector>) {
+        self.fault = Some(fault);
     }
 
     /// The on-flash encoding this store writes.
@@ -321,17 +377,30 @@ impl AdapterStore {
     }
 
     /// Fetch a decoded handle: cache hit → prefetch staging → inline
-    /// decode, in that order.  An adapter whose decoded size exceeds the
-    /// whole cache budget is served as an uncached `Arc` without flushing
-    /// resident entries.
+    /// decode (with transient-I/O retry), in that order.  An adapter whose
+    /// decoded size exceeds the whole cache budget is served as an
+    /// uncached `Arc` without flushing resident entries.
     ///
     /// Errors are structured: a name the store has never seen is
     /// [`ServeError::UnknownAdapter`]; corrupt flash bytes surface as
-    /// [`ServeError::Io`] — callers branch on the variant instead of
-    /// string-matching.
+    /// [`ServeError::Io`]; a quarantined adapter is refused with
+    /// [`ServeError::Quarantined`] — callers branch on the variant
+    /// instead of string-matching.
+    ///
+    /// Resilience (DESIGN.md §13.3): transient I/O failures retry with
+    /// exponential backoff before counting as terminal; terminal failures
+    /// feed a per-adapter consecutive-failure streak that quarantines the
+    /// adapter at the threshold, with a TTL that lets one re-probe
+    /// through.  A failed *background* decode no longer poisons the
+    /// adapter: the fetch records the failure and falls through to an
+    /// inline decode of the current flash bytes, so transient staging
+    /// failures are retryable.
     pub fn fetch(&mut self, name: &str) -> Result<Arc<AdapterHandle>, ServeError> {
         if let Some(h) = self.cache.get(name) {
             return Ok(h);
+        }
+        if let Some(refused) = self.quarantine_gate(name) {
+            return Err(refused);
         }
         match self.take_staged(name) {
             Ok(Some((handle, waited))) => {
@@ -339,18 +408,130 @@ impl AdapterStore {
                 if waited {
                     self.prefetch_waits += 1;
                 }
+                self.note_success(name);
                 return Ok(self.admit(name, handle));
             }
             Ok(None) => {}
-            Err(e) => return Err(e),
+            Err(_stale) => {
+                // Regression fix: a `Staged::Failed` entry used to
+                // surface here as the fetch's terminal error, poisoning
+                // the adapter even after its flash bytes were replaced.
+                // The stale background failure is dropped (the inline
+                // decode below gives ground truth on the CURRENT bytes);
+                // only the inline outcome feeds the failure streak, so
+                // one fetch never counts twice.
+            }
         }
-        let bytes = self
-            .flash
-            .get(name)
-            .ok_or_else(|| ServeError::UnknownAdapter(name.to_string()))?;
-        let handle =
-            AdapterHandle::decode(bytes, self.plan_threads).map_err(ServeError::Io)?;
-        Ok(self.admit(name, handle))
+        let bytes = Arc::clone(
+            self.flash
+                .get(name)
+                .ok_or_else(|| ServeError::UnknownAdapter(name.to_string()))?,
+        );
+        match self.read_and_decode(&bytes) {
+            Ok(handle) => {
+                self.note_success(name);
+                Ok(self.admit(name, handle))
+            }
+            Err(e) => {
+                if let Some(refused) = self.note_failure(name) {
+                    return Err(refused);
+                }
+                Err(ServeError::Io(e))
+            }
+        }
+    }
+
+    /// Inline read+decode with transient-I/O retry: up to `retry_max`
+    /// retries with exponential backoff (base `retry_backoff_us`,
+    /// doubling); permanent failures (bad magic, CRC) never retry.
+    fn read_and_decode(&mut self, bytes: &[u8]) -> Result<AdapterHandle, IoError> {
+        let mut attempt = 0u32;
+        loop {
+            match self.try_read_decode(bytes) {
+                Ok(h) => return Ok(h),
+                Err(e) if e.is_transient() && attempt < self.retry_max => {
+                    attempt += 1;
+                    self.retries += 1;
+                    let backoff = self.retry_backoff_us << (attempt - 1).min(16);
+                    if backoff > 0 {
+                        std::thread::sleep(Duration::from_micros(backoff));
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// One read+decode attempt, applying any planned faults: a slow-fetch
+    /// stall, a transient read error, or a one-byte decode corruption.
+    fn try_read_decode(&self, bytes: &[u8]) -> Result<AdapterHandle, IoError> {
+        if let Some(f) = &self.fault {
+            if f.should_fire(FaultSite::SlowFetch) {
+                std::thread::sleep(Duration::from_micros(f.slow_stall_us()));
+            }
+            if f.should_fire(FaultSite::Fetch) {
+                return Err(IoError::Io(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "injected fault: transient flash read",
+                )));
+            }
+        }
+        decode_with_fault(bytes, self.plan_threads, self.fault.as_deref())
+    }
+
+    /// Refuse fetches of a quarantined adapter until the TTL lets one
+    /// re-probe through (the probe's outcome then re-trips or clears it).
+    fn quarantine_gate(&mut self, name: &str) -> Option<ServeError> {
+        let ttl = Duration::from_millis(self.quarantine_ttl_ms);
+        let h = self.health.get_mut(name)?;
+        let since = h.quarantined_at?.elapsed();
+        if since < ttl {
+            return Some(ServeError::Quarantined {
+                name: name.to_string(),
+                failures: h.consecutive,
+                retry_in_ms: ((ttl - since).as_millis() as u64).max(1),
+            });
+        }
+        h.quarantined_at = None; // TTL expired: let this probe through
+        None
+    }
+
+    /// Record a terminal fetch failure for `name`; returns the quarantine
+    /// refusal when this failure crossed the consecutive-failure
+    /// threshold (re-probe failures re-trip immediately).
+    fn note_failure(&mut self, name: &str) -> Option<ServeError> {
+        let threshold = self.quarantine_threshold;
+        let ttl_ms = self.quarantine_ttl_ms;
+        let h = self.health.entry(name.to_string()).or_default();
+        h.consecutive += 1;
+        if h.consecutive >= threshold {
+            h.quarantined_at = Some(Instant::now());
+            self.quarantines += 1;
+            return Some(ServeError::Quarantined {
+                name: name.to_string(),
+                failures: h.consecutive,
+                retry_in_ms: ttl_ms.max(1),
+            });
+        }
+        None
+    }
+
+    /// A successful fetch clears the failure streak and any quarantine.
+    fn note_success(&mut self, name: &str) {
+        self.health.remove(name);
+    }
+
+    fn quarantine_active(&self, name: &str) -> bool {
+        let ttl = Duration::from_millis(self.quarantine_ttl_ms);
+        match self.health.get(name).and_then(|h| h.quarantined_at) {
+            Some(t0) => t0.elapsed() < ttl,
+            None => false,
+        }
+    }
+
+    /// True when `name` is currently refused by quarantine.
+    pub fn is_quarantined(&self, name: &str) -> bool {
+        self.quarantine_active(name)
     }
 
     /// Submit background decode jobs for up to `prefetch_depth` of
@@ -363,6 +544,9 @@ impl AdapterStore {
         for name in names.iter().take(self.prefetch_depth) {
             if self.cache.peek(name).is_some() {
                 continue;
+            }
+            if self.quarantine_active(name) {
+                continue; // don't burn pool time on a refused adapter
             }
             let Some(bytes) = self.flash.get(name) else {
                 continue;
@@ -379,8 +563,9 @@ impl AdapterStore {
             let shared = Arc::clone(&self.staging);
             let plan_threads = self.plan_threads;
             let job_name = name.clone();
+            let fault = self.fault.clone();
             pool.execute(move || {
-                let res = AdapterHandle::decode(&bytes, plan_threads);
+                let res = decode_with_fault(&bytes, plan_threads, fault.as_deref());
                 let mut slots = shared.slots.lock().unwrap();
                 slots.insert(
                     job_name,
@@ -554,6 +739,19 @@ impl AdapterStore {
         self.cache.is_pinned(name)
     }
 
+    /// Resident decoded adapters currently holding at least one pin — the
+    /// pin-leak audit probe: after any failed request this must return to
+    /// its pre-request baseline.
+    pub fn pinned_count(&self) -> usize {
+        self.cache.pinned_entries()
+    }
+
+    /// Resident transition plans currently holding at least one pin (the
+    /// matching probe for [`Self::begin_transition`] pins).
+    pub fn pinned_plan_count(&self) -> usize {
+        self.plans.pinned_entries()
+    }
+
     /// Lifecycle counters so far.
     pub fn stats(&self) -> StoreStats {
         StoreStats {
@@ -572,6 +770,8 @@ impl AdapterStore {
             plan_builds: self.plan_builds,
             plan_resident_bytes: self.plans.used_bytes(),
             plan_resident_entries: self.plans.len(),
+            retries: self.retries,
+            quarantines: self.quarantines,
         }
     }
 
@@ -590,7 +790,9 @@ impl AdapterStore {
     /// Remove `name` from staging, waiting out an in-flight decode.
     /// Returns the handle plus whether the fetch had to wait (the decode
     /// was still in flight — part of its cost landed on the request path).
-    fn take_staged(&mut self, name: &str) -> Result<Option<(AdapterHandle, bool)>, ServeError> {
+    /// A staged failure is returned as the raw [`IoError`] so the fetch
+    /// can record it and still retry inline.
+    fn take_staged(&mut self, name: &str) -> Result<Option<(AdapterHandle, bool)>, IoError> {
         let mut slots = self.staging.slots.lock().unwrap();
         let mut waited = false;
         loop {
@@ -607,10 +809,28 @@ impl AdapterStore {
         }
         match slots.remove(name) {
             Some(Staged::Ready(h)) => Ok(Some((h, waited))),
-            Some(Staged::Failed(e)) => Err(ServeError::Io(e)),
+            Some(Staged::Failed(e)) => Err(e),
             _ => unreachable!("loop exits only on Ready/Failed"),
         }
     }
+}
+
+/// Decode `bytes`, flipping one byte first when a decode fault is
+/// planned — the CRC check then genuinely fails, so corruption detection
+/// is exercised by the real verifier, not simulated.
+fn decode_with_fault(
+    bytes: &[u8],
+    plan_threads: usize,
+    fault: Option<&FaultInjector>,
+) -> Result<AdapterHandle, IoError> {
+    if let Some(f) = fault {
+        if f.should_fire(FaultSite::Decode) {
+            let mut corrupted = bytes.to_vec();
+            f.corrupt(&mut corrupted);
+            return AdapterHandle::decode(&corrupted, plan_threads);
+        }
+    }
+    AdapterHandle::decode(bytes, plan_threads)
 }
 
 #[cfg(test)]
@@ -791,6 +1011,7 @@ mod tests {
                 format: Format::V2,
                 prefetch_depth: 8,
                 plan_cache_bytes,
+                ..StoreConfig::default()
             },
             Some(Arc::clone(&pool)),
         );
@@ -906,5 +1127,117 @@ mod tests {
         assert!(matches!(store.fetch("junk"), Err(ServeError::Io(_))));
         store.prefetch(&["junk".to_string()]);
         assert!(matches!(store.fetch("junk"), Err(ServeError::Io(_))));
+    }
+
+    /// Store with retry/quarantine tunables for resilience tests (no
+    /// backoff sleeps; quarantine trips at 2 consecutive failures).
+    fn resilient_store(
+        quarantine_ttl_ms: u64,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> AdapterStore {
+        AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 1 << 20,
+                prefetch_depth: 2,
+                retry_max: 2,
+                retry_backoff_us: 0,
+                quarantine_threshold: 2,
+                quarantine_ttl_ms,
+                ..StoreConfig::default()
+            },
+            pool,
+        )
+    }
+
+    #[test]
+    fn stale_staged_failure_does_not_poison_the_adapter() {
+        // Satellite regression: a failed background decode used to
+        // surface as every later fetch's terminal error — the adapter
+        // was poisoned even after its flash bytes were replaced.
+        let pool = Arc::new(ThreadPool::new(1));
+        let mut store = resilient_store(60_000, Some(Arc::clone(&pool)));
+        store.add_encoded("a", vec![0xAB; 64]); // corrupt flash image
+        store.prefetch(&["a".to_string()]);
+        pool.join(); // background decode has failed and staged the error
+        let mut rng = Rng::new(21);
+        store.add_shira(&shira(&mut rng, "a", 16, 10)); // flash repaired
+        let h = store.fetch("a").expect("repaired adapter must fetch");
+        assert_eq!(h.adapter.name(), "a");
+        let stats = store.stats();
+        assert_eq!(stats.quarantines, 0);
+        assert!(!store.is_quarantined("a"));
+    }
+
+    #[test]
+    fn transient_fetch_faults_are_retried_and_counted() {
+        use crate::coordinator::fault::FaultPlan;
+        let mut rng = Rng::new(22);
+        let mut store = resilient_store(60_000, None);
+        store.add_shira(&shira(&mut rng, "a", 16, 10));
+        // Attempt 1 fails transiently and stalls; the retry succeeds.
+        store.set_fault(
+            FaultPlan::new().fail_fetch_at(1).slow_fetch_at(1).slow_us(1).injector(),
+        );
+        let h = store.fetch("a").expect("retry must recover");
+        assert_eq!(h.adapter.name(), "a");
+        let stats = store.stats();
+        assert_eq!(stats.retries, 1);
+        assert_eq!(stats.quarantines, 0, "a recovered fetch is not a failure");
+    }
+
+    #[test]
+    fn exhausted_retries_surface_io_then_quarantine() {
+        use crate::coordinator::fault::FaultPlan;
+        let mut rng = Rng::new(23);
+        let mut store = resilient_store(60_000, None);
+        store.add_shira(&shira(&mut rng, "a", 16, 10));
+        // 6 consecutive read attempts fail: fetch #1 burns attempts 1-3
+        // (2 retries) and is terminal; fetch #2 burns 4-6, terminal too,
+        // crossing the threshold of 2 → quarantine.
+        let mut plan = FaultPlan::new();
+        for n in 1..=6 {
+            plan = plan.fail_fetch_at(n);
+        }
+        store.set_fault(plan.injector());
+        assert!(matches!(store.fetch("a"), Err(ServeError::Io(_))));
+        assert!(matches!(
+            store.fetch("a"),
+            Err(ServeError::Quarantined { failures: 2, .. })
+        ));
+        assert!(store.is_quarantined("a"));
+        let stats = store.stats();
+        assert_eq!(stats.retries, 4);
+        assert_eq!(stats.quarantines, 1);
+        // While quarantined: refused without touching flash, and
+        // prefetch skips the adapter entirely.
+        assert!(matches!(
+            store.fetch("a"),
+            Err(ServeError::Quarantined { .. })
+        ));
+        store.prefetch(&["a".to_string()]);
+        assert_eq!(store.stats().prefetch_issued, 0);
+    }
+
+    #[test]
+    fn quarantine_ttl_reprobe_recovers_a_healthy_adapter() {
+        use crate::coordinator::fault::FaultPlan;
+        let mut rng = Rng::new(24);
+        // TTL 0: the re-probe is allowed immediately after the trip.
+        let mut store = resilient_store(0, None);
+        store.add_shira(&shira(&mut rng, "a", 16, 10));
+        store.set_fault(
+            FaultPlan::new().corrupt_decode_at(1).corrupt_decode_at(2).injector(),
+        );
+        assert!(matches!(store.fetch("a"), Err(ServeError::Io(_))));
+        assert!(matches!(
+            store.fetch("a"),
+            Err(ServeError::Quarantined { .. })
+        ));
+        // The fault plan is exhausted: the TTL-expired re-probe decodes
+        // the (healthy) bytes and clears the streak.
+        let h = store.fetch("a").expect("re-probe must recover");
+        assert_eq!(h.adapter.name(), "a");
+        assert!(!store.is_quarantined("a"));
+        assert_eq!(store.stats().quarantines, 1);
     }
 }

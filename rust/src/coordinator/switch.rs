@@ -49,6 +49,7 @@ use crate::adapter::sparse::{
     scatter_restore, scatter_snapshot_apply, scatter_transition, shards_for, ShardPlan,
     PAR_MIN_NNZ,
 };
+use super::fault::{FaultInjector, FaultSite};
 use crate::adapter::{AdapterTransition, LoraAdapter, ShiraAdapter};
 use crate::model::weights::WeightStore;
 use crate::util::threadpool::ThreadPool;
@@ -279,6 +280,9 @@ pub struct SwitchEngine {
     /// mis-sized pool width at decode time).  Dispatch silently fell back
     /// to freshly computed plans; this counter makes that visible.
     pub plan_mismatches: u64,
+    /// Deterministic fault injector (chaos tests, DESIGN.md §13.2):
+    /// when armed, one planned mutation wave panics mid-dispatch.
+    fault: Option<Arc<FaultInjector>>,
 }
 
 impl Default for SwitchEngine {
@@ -306,6 +310,23 @@ impl SwitchEngine {
             ttasks: Vec::new(),
             transitions: 0,
             plan_mismatches: 0,
+            fault: None,
+        }
+    }
+
+    /// Arm a deterministic fault injector: planned
+    /// [`FaultSite::Wave`] ordinals make the matching mutation wave
+    /// panic mid-dispatch (after partial writes), exercising the
+    /// router's transactional rollback.
+    pub fn set_fault(&mut self, fault: Arc<FaultInjector>) {
+        self.fault = Some(fault);
+    }
+
+    /// Claim the next wave ordinal; true when this wave must panic.
+    fn wave_fault_armed(&self) -> bool {
+        match &self.fault {
+            Some(f) => f.should_fire(FaultSite::Wave),
+            None => false,
         }
     }
 
@@ -326,6 +347,49 @@ impl SwitchEngine {
             Active::Shira { adapter, .. } => Some(adapter.name.as_str()),
             Active::Lora { adapter } => Some(adapter.name.as_str()),
         }
+    }
+
+    /// Pure-data rollback snapshot of the active SHiRA adapter: per
+    /// target tensor, the support indices and the arena's base values
+    /// for them.  `None` unless a SHiRA adapter is active.  Reads only
+    /// engine state untouched by a mid-wave panic (the arena is only
+    /// overwritten by *apply* waves, which the router pre-captures
+    /// around), so the router can use this to restore base after a
+    /// failed transition or revert wave.
+    pub fn shira_rollback(&self) -> Option<Vec<(String, Vec<u32>, Vec<f32>)>> {
+        match &self.active {
+            Active::Shira { adapter, .. } => Some(
+                adapter
+                    .tensors
+                    .iter()
+                    .map(|(target, delta)| {
+                        let snap = self
+                            .arena
+                            .get(target.as_str())
+                            .expect("snapshot exists for active adapter");
+                        (target.clone(), delta.idx.clone(), snap.clone())
+                    })
+                    .collect(),
+            ),
+            _ => None,
+        }
+    }
+
+    /// The active LoRA adapter, if one is fused in (`None` otherwise).
+    /// The router's rollback replays a dense unfuse from it.
+    pub fn lora_rollback(&self) -> Option<Arc<LoraAdapter>> {
+        match &self.active {
+            Active::Lora { adapter } => Some(Arc::clone(adapter)),
+            _ => None,
+        }
+    }
+
+    /// Forget the active adapter WITHOUT touching the weights — the
+    /// rollback path's final step after the router has restored the
+    /// resident store itself.  Never call this outside failure
+    /// recovery: it desynchronizes the engine from the weights.
+    pub fn clear_active(&mut self) {
+        self.active = Active::None;
     }
 
     /// Ensure the arena buffer for `target` exists and has length `len`
@@ -388,6 +452,9 @@ impl SwitchEngine {
     ) -> SwitchTiming {
         let mut t = self.revert_timing(w);
         let t0 = Instant::now();
+        // Claim this apply wave's fault ordinal (chaos injection): when it
+        // fires, the wave panics after partial writes to W and the arena.
+        let boom = self.wave_fault_armed();
         let total_nnz = a.param_count();
         let pool = match &self.pool {
             Some(p) if total_nnz >= PAR_MIN_NNZ && p.threads() > 1 => Some(Arc::clone(p)),
@@ -397,20 +464,31 @@ impl SwitchEngine {
             Some(pool) => {
                 self.build_shira_tasks(w, &a, plans.as_deref(), pool.threads(), true);
                 let tasks = &self.tasks;
-                pool.scoped_for(tasks.len(), |i| {
+                let n = tasks.len();
+                if let Err(fault) = pool.try_scoped_for(n, |i| {
+                    if boom && i == n / 2 {
+                        panic!("{}", FaultInjector::WAVE_PANIC_MSG);
+                    }
                     // SAFETY: tasks cover disjoint idx ranges (row-aligned
                     // shard plans over unique sorted indices, one plan per
                     // distinct target tensor with its own arena buffer).
                     unsafe { tasks[i].snapshot_apply(alpha) }
-                });
+                }) {
+                    // The pool has fully quiesced: no worker still holds a
+                    // cursor into W, so the router's rollback may run.
+                    panic!("pool wave failed: {fault}");
+                }
                 self.tasks.clear();
             }
             None => {
-                for (target, delta) in &a.tensors {
+                for (ti, (target, delta)) in a.tensors.iter().enumerate() {
                     Self::arena_buf_prepare(&mut self.arena, target, delta.nnz());
                     let buf = self.arena.get_mut(target.as_str()).unwrap();
                     let wt = w.get_mut(target);
                     delta.snapshot_apply(wt, alpha, buf);
+                    if boom && ti == 0 {
+                        panic!("{}", FaultInjector::WAVE_PANIC_MSG);
+                    }
                 }
             }
         }
@@ -454,6 +532,10 @@ impl SwitchEngine {
         }
         let mut t = SwitchTiming::default();
         let t0 = Instant::now();
+        // Claim this transition wave's fault ordinal (chaos injection).  A
+        // mid-wave panic here leaves the OUTGOING adapter still active
+        // (the swap below never ran), with W partially transitioned.
+        let boom = self.wave_fault_armed();
         let pool = match &self.pool {
             Some(p) if tp.union_nnz() >= PAR_MIN_NNZ && p.threads() > 1 => {
                 Some(Arc::clone(p))
@@ -464,14 +546,20 @@ impl SwitchEngine {
             Some(pool) => {
                 self.build_transition_tasks(w, &b, tp);
                 let tasks = &self.ttasks;
-                pool.scoped_for(tasks.len(), |i| {
+                let n = tasks.len();
+                if let Err(fault) = pool.try_scoped_for(n, |i| {
+                    if boom && i == n / 2 {
+                        panic!("{}", FaultInjector::WAVE_PANIC_MSG);
+                    }
                     // SAFETY: tasks cover disjoint union ranges (row-
                     // aligned shards over unique sorted union indices, one
                     // plan per distinct target tensor), so every W element
                     // and every incoming-snapshot slot is written by
                     // exactly one task; outgoing snapshots are read-only.
                     unsafe { tasks[i].run(alpha) }
-                });
+                }) {
+                    panic!("pool wave failed: {fault}");
+                }
                 self.ttasks.clear();
             }
             None => {
@@ -484,6 +572,9 @@ impl SwitchEngine {
                     let snap_b = self.spare.get_mut(target.as_str()).unwrap();
                     let wt = w.get_mut(target);
                     tp.plans()[ti].transition(wt, snap_a, snap_b, d_b, alpha);
+                    if boom && ti == 0 {
+                        panic!("{}", FaultInjector::WAVE_PANIC_MSG);
+                    }
                 }
             }
         }
@@ -663,6 +754,11 @@ impl SwitchEngine {
         match std::mem::replace(&mut self.active, Active::None) {
             Active::None => {}
             Active::Shira { adapter, plans } => {
+                // Claim this revert wave's fault ordinal (chaos
+                // injection).  A mid-wave panic leaves W partially
+                // restored with `active` already taken (None) — the
+                // router's pre-captured transaction restores base.
+                let boom = self.wave_fault_armed();
                 let total_nnz = adapter.param_count();
                 let pool = match &self.pool {
                     Some(p) if total_nnz >= PAR_MIN_NNZ && p.threads() > 1 => {
@@ -675,19 +771,28 @@ impl SwitchEngine {
                         let threads = pool.threads();
                         self.build_shira_tasks(w, &adapter, plans.as_deref(), threads, false);
                         let tasks = &self.tasks;
-                        pool.scoped_for(tasks.len(), |i| {
+                        let n = tasks.len();
+                        if let Err(fault) = pool.try_scoped_for(n, |i| {
+                            if boom && i == n / 2 {
+                                panic!("{}", FaultInjector::WAVE_PANIC_MSG);
+                            }
                             // SAFETY: same disjointness contract as apply.
                             unsafe { tasks[i].restore() }
-                        });
+                        }) {
+                            panic!("pool wave failed: {fault}");
+                        }
                         self.tasks.clear();
                     }
                     None => {
-                        for (target, delta) in &adapter.tensors {
+                        for (ti, (target, delta)) in adapter.tensors.iter().enumerate() {
                             let snap = self
                                 .arena
                                 .get(target.as_str())
                                 .expect("snapshot exists for active adapter");
                             delta.restore(w.get_mut(target), snap);
+                            if boom && ti == 0 {
+                                panic!("{}", FaultInjector::WAVE_PANIC_MSG);
+                            }
                         }
                     }
                 }

@@ -297,6 +297,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         plan_cache_bytes: args
             .get_usize("plan-cache-bytes", default_cfg.plan_cache_bytes)?,
+        ..default_cfg
     };
     let plan_cache_bytes = store_cfg.plan_cache_bytes;
     let mut server = Server::builder(&rt, base)

@@ -108,6 +108,26 @@ impl WeightStore {
         self.total_params() * 4
     }
 
+    /// Values at flat indices `idx` of tensor `name` — the sparse capture
+    /// half of the transactional switch guard (DESIGN.md §13.1): the
+    /// router gathers a selection's support before any mutation wave so a
+    /// mid-wave failure can be rolled back bit-exactly.
+    pub fn gather(&self, name: &str, idx: &[u32]) -> Vec<f32> {
+        let t = self.get(name);
+        idx.iter().map(|&i| t.data[i as usize]).collect()
+    }
+
+    /// Write `vals[j]` to flat index `idx[j]` of tensor `name` — the
+    /// sparse restore half of the transactional switch guard.  `idx` and
+    /// `vals` must be the same length (as produced by [`Self::gather`]).
+    pub fn scatter(&mut self, name: &str, idx: &[u32], vals: &[f32]) {
+        assert_eq!(idx.len(), vals.len(), "scatter idx/vals length mismatch");
+        let t = self.get_mut(name);
+        for (&i, &v) in idx.iter().zip(vals.iter()) {
+            t.data[i as usize] = v;
+        }
+    }
+
     /// Bit-exact equality — the serving invariant check after revert.
     pub fn bit_equal(&self, other: &WeightStore) -> bool {
         self.names == other.names
@@ -171,6 +191,27 @@ mod tests {
         let mut s = WeightStore::init(&specs(), 1);
         s.get_mut("l0.wq").data[0] = 42.0;
         assert_eq!(s.get("l0.wq").data[0], 42.0);
+    }
+
+    #[test]
+    fn gather_scatter_round_trips_bit_exactly() {
+        let base = WeightStore::init(&specs(), 3);
+        let mut w = base.clone();
+        let idx = [0u32, 5, 17, 63];
+        let pre = w.gather("l0.wq", &idx);
+        for &i in &idx {
+            w.get_mut("l0.wq").data[i as usize] = f32::NAN;
+        }
+        assert!(!w.bit_equal(&base));
+        w.scatter("l0.wq", &idx, &pre);
+        assert!(w.bit_equal(&base), "scatter restores gathered bytes");
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn scatter_rejects_mismatched_lengths() {
+        let mut s = WeightStore::init(&specs(), 1);
+        s.scatter("l0.wq", &[0, 1], &[0.0]);
     }
 
     #[test]

@@ -78,9 +78,53 @@ struct ScopeCtl {
     closed: AtomicBool,
     /// A task body panicked (on any thread); re-raised by the caller.
     panicked: AtomicBool,
+    /// Stringified payload of the first captured panic (for [`ScopeFault`]).
+    fault: Mutex<Option<String>>,
     exit_mtx: Mutex<()>,
     exit_cv: Condvar,
 }
+
+impl ScopeCtl {
+    /// Record a panic payload (first writer wins) and raise the flag.
+    fn record_panic(&self, payload: &(dyn std::any::Any + Send)) {
+        self.panicked.store(true, Ordering::SeqCst);
+        let mut g = self.fault.lock().unwrap_or_else(|p| p.into_inner());
+        if g.is_none() {
+            *g = Some(payload_message(payload));
+        }
+    }
+}
+
+/// Best-effort stringification of a panic payload (`&str` and `String`
+/// payloads — the overwhelmingly common cases — pass through verbatim).
+fn payload_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Failure report from [`ThreadPool::try_scoped_for`]: at least one task
+/// body panicked.  The region has still waited for every in-flight task
+/// before returning, so caller-borrowed state is safe to inspect and
+/// repair — this is the contract the coordinator's transactional weight
+/// rollback is built on.
+#[derive(Debug)]
+pub struct ScopeFault {
+    /// Stringified payload of the first captured panic.
+    pub message: String,
+}
+
+impl std::fmt::Display for ScopeFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "scoped task panicked: {}", self.message)
+    }
+}
+
+impl std::error::Error for ScopeFault {}
 
 impl ScopeCtl {
     fn notify_exit(&self) {
@@ -209,17 +253,43 @@ impl ThreadPool {
     ///   (or the pool is saturated by other scopes), the region still
     ///   completes — helpers that start late simply find no work.
     ///
-    /// Returns only after every claimed task has finished.
+    /// Returns only after every claimed task has finished.  Panics with a
+    /// fixed message when any task body panicked (on a worker or on the
+    /// calling thread); use [`Self::try_scoped_for`] to observe the
+    /// failure as a value instead.
     pub fn scoped_for<F: Fn(usize) + Sync>(&self, n_tasks: usize, f: F) {
+        if self.try_scoped_for(n_tasks, f).is_err() {
+            panic!("scoped_for: a task panicked on a pool worker");
+        }
+    }
+
+    /// Fallible [`Self::scoped_for`]: identical dispatch and borrowing
+    /// rules, but a panicking task body surfaces as `Err(ScopeFault)`
+    /// (carrying the first panic's message) instead of unwinding the
+    /// caller.  On `Err`, some task indices may never have run — but the
+    /// region has fully quiesced: no worker still borrows the closure or
+    /// any caller-owned buffer, so the caller can roll back shared state
+    /// mid-mutation safely.
+    pub fn try_scoped_for<F: Fn(usize) + Sync>(
+        &self,
+        n_tasks: usize,
+        f: F,
+    ) -> Result<(), ScopeFault> {
         if n_tasks == 0 {
-            return;
+            return Ok(());
         }
         let helpers = self.threads().min(n_tasks.saturating_sub(1));
         if helpers == 0 {
-            for i in 0..n_tasks {
-                f(i);
-            }
-            return;
+            return match catch_unwind(AssertUnwindSafe(|| {
+                for i in 0..n_tasks {
+                    f(i);
+                }
+            })) {
+                Ok(()) => Ok(()),
+                Err(payload) => Err(ScopeFault {
+                    message: payload_message(payload.as_ref()),
+                }),
+            };
         }
 
         let wide: &(dyn Fn(usize) + Sync) = &f;
@@ -238,6 +308,7 @@ impl ThreadPool {
             borrowers: AtomicUsize::new(0),
             closed: AtomicBool::new(false),
             panicked: AtomicBool::new(false),
+            fault: Mutex::new(None),
             exit_mtx: Mutex::new(()),
             exit_cv: Condvar::new(),
         });
@@ -256,10 +327,10 @@ impl ThreadPool {
                 if !ctl.closed.load(Ordering::SeqCst) {
                     // Catch panics so a failing task neither kills the
                     // worker nor strands the caller's borrower wait.
-                    if catch_unwind(AssertUnwindSafe(|| drive(body, &ctl.next, n_tasks)))
-                        .is_err()
+                    if let Err(payload) =
+                        catch_unwind(AssertUnwindSafe(|| drive(body, &ctl.next, n_tasks)))
                     {
-                        ctl.panicked.store(true, Ordering::SeqCst);
+                        ctl.record_panic(payload.as_ref());
                     }
                 }
                 drop(exit);
@@ -272,14 +343,19 @@ impl ThreadPool {
         let guard = CallerExit(Arc::clone(&ctl));
         let caller_result = catch_unwind(AssertUnwindSafe(|| drive(body, &ctl.next, n_tasks)));
         drop(guard);
-        match caller_result {
-            Err(payload) => std::panic::resume_unwind(payload),
-            Ok(()) => {
-                if ctl.panicked.load(Ordering::SeqCst) {
-                    panic!("scoped_for: a task panicked on a pool worker");
-                }
-            }
+        if let Err(payload) = caller_result {
+            ctl.record_panic(payload.as_ref());
         }
+        if ctl.panicked.load(Ordering::SeqCst) {
+            let msg = ctl
+                .fault
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .take()
+                .unwrap_or_else(|| "unknown panic".to_string());
+            return Err(ScopeFault { message: msg });
+        }
+        Ok(())
     }
 
     /// Run `f` over items in parallel, preserving order of results.
@@ -488,6 +564,50 @@ mod tests {
         });
         assert_eq!(done.load(Ordering::SeqCst), 16);
         pool.join();
+    }
+
+    #[test]
+    fn try_scoped_for_ok_on_success() {
+        let pool = ThreadPool::new(3);
+        let done = AtomicUsize::new(0);
+        assert!(pool
+            .try_scoped_for(64, |_| {
+                done.fetch_add(1, Ordering::SeqCst);
+            })
+            .is_ok());
+        assert_eq!(done.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn try_scoped_for_reports_panics_without_unwinding() {
+        for threads in [1, 4] {
+            let pool = ThreadPool::new(threads);
+            let err = pool
+                .try_scoped_for(64, |i| {
+                    if i == 21 {
+                        panic!("chaos at {i}");
+                    }
+                })
+                .expect_err("a task panicked");
+            assert!(err.message.contains("chaos at 21"), "{}", err.message);
+            // The region quiesced and the pool still works afterwards.
+            let done = AtomicUsize::new(0);
+            pool.scoped_for(16, |_| {
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(done.load(Ordering::SeqCst), 16);
+        }
+    }
+
+    #[test]
+    fn try_scoped_for_serial_path_reports_panics() {
+        // n_tasks == 1 takes the no-helper serial path; it must report,
+        // not unwind, too.
+        let pool = ThreadPool::new(4);
+        let err = pool
+            .try_scoped_for(1, |_| panic!("serial boom"))
+            .expect_err("serial task panicked");
+        assert!(err.message.contains("serial boom"));
     }
 
     #[test]

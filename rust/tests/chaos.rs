@@ -1,0 +1,233 @@
+//! Chaos property test (DESIGN.md §13): random mixed selection traces
+//! driven through the [`Router`] with a seeded deterministic
+//! [`FaultPlan`], at 1 and 4 threads.  Whatever faults fire — injected
+//! I/O errors, decode corruption, mid-wave panics, latency stalls — the
+//! resident weights must stay bit-identical to a fault-free reference:
+//!
+//! * a successful apply lands on the same bytes as serving that
+//!   selection from base on a fault-free router;
+//! * a rolled-back mutation lands on base bytes exactly (the zoo is
+//!   pure SHiRA, so rollback is bit-exact);
+//! * a pre-dispatch store error leaves either the pre-apply bytes or
+//!   base (set applies legally revert the outgoing single before the
+//!   fallible roster build);
+//! * transition-plan pins never outlive an apply, and the router keeps
+//!   serving after every failure.
+//!
+//! The CI chaos job runs this file under a fixed seed matrix via
+//! `CHAOS_SEED` (see .github/workflows/ci.yml).
+
+use std::sync::Arc;
+
+use shira::adapter::sparse::SparseDelta;
+use shira::adapter::ShiraAdapter;
+use shira::coordinator::engine::Router;
+use shira::coordinator::error::ServeError;
+use shira::coordinator::fault::FaultPlan;
+use shira::coordinator::fusion::fuse_shira;
+use shira::coordinator::selection::Selection;
+use shira::coordinator::store::{AdapterStore, StoreConfig};
+use shira::model::weights::WeightStore;
+use shira::util::rng::Rng;
+use shira::util::threadpool::ThreadPool;
+
+const DIM: usize = 64;
+/// Crosses the engines' parallel threshold so pooled runs really wave.
+const NNZ: usize = 3000;
+
+fn base_weights(seed: u64) -> WeightStore {
+    WeightStore::init(
+        &[("wq".into(), vec![DIM, DIM]), ("wk".into(), vec![DIM, DIM])],
+        seed,
+    )
+}
+
+fn make_adapter(rng: &mut Rng, name: &str, k: usize) -> ShiraAdapter {
+    let mk = |rng: &mut Rng| {
+        let idx = rng.sample_indices(DIM * DIM, k);
+        let mut d = vec![0.0; k];
+        rng.fill_normal(&mut d, 0.0, 0.5);
+        SparseDelta::new(DIM, DIM, idx, d)
+    };
+    ShiraAdapter {
+        name: name.into(),
+        strategy: "rand".into(),
+        tensors: vec![("wq".into(), mk(rng)), ("wk".into(), mk(rng))],
+    }
+}
+
+fn store_with(zoo: &[ShiraAdapter]) -> AdapterStore {
+    // No store pool and no prefetch: fetch/decode fault ordinals then
+    // depend only on the apply sequence, so the 1- and 4-thread runs
+    // claim identical fault schedules.
+    let mut store = AdapterStore::with_config(
+        StoreConfig {
+            cache_bytes: 64 << 20,
+            prefetch_depth: 0,
+            ..StoreConfig::default()
+        },
+        None,
+    );
+    for a in zoo {
+        store.add_shira(a);
+    }
+    store
+}
+
+/// Fault-free reference: what serving `sel` from base makes resident.
+fn reference_weights(base: &WeightStore, zoo: &[ShiraAdapter], sel: &Selection) -> WeightStore {
+    let by_name = |n: &str| zoo.iter().find(|a| a.name == n).expect("known adapter");
+    let scaled = |a: &ShiraAdapter, w: f32| ShiraAdapter {
+        name: a.name.clone(),
+        strategy: a.strategy.clone(),
+        tensors: a
+            .tensors
+            .iter()
+            .map(|(t, d)| (t.clone(), d.scaled(w)))
+            .collect(),
+    };
+    match sel {
+        Selection::Base => base.clone(),
+        Selection::Single { name, alpha } => {
+            let mut w = base.clone();
+            for (t, d) in &by_name(name).tensors {
+                d.apply(w.get_mut(t), *alpha);
+            }
+            w
+        }
+        Selection::Set { members } => {
+            let mut sorted = members.clone();
+            sorted.sort_by(|a, b| a.0.cmp(&b.0));
+            let scaled_members: Vec<ShiraAdapter> = sorted
+                .iter()
+                .map(|(n, w)| scaled(by_name(n), *w))
+                .collect();
+            let refs: Vec<&ShiraAdapter> = scaled_members.iter().collect();
+            let fused = fuse_shira(&refs, "reference").expect("same target sets");
+            let mut w = base.clone();
+            for (t, d) in &fused.tensors {
+                d.apply(w.get_mut(t), 1.0);
+            }
+            w
+        }
+    }
+}
+
+/// Deterministic random trace over the 3-adapter zoo.
+fn make_trace(seed: u64) -> Vec<Selection> {
+    let mut r = Rng::new(seed);
+    (0..6 + r.below(6))
+        .map(|_| {
+            let (i, j) = (r.below(3), r.below(3));
+            let (na, nb) = (format!("ad{i}"), format!("ad{j}"));
+            let (wa, wb) = (
+                -1.5 + 3.0 * r.uniform_f32(),
+                -1.5 + 3.0 * r.uniform_f32(),
+            );
+            match r.below(4) {
+                0 => Selection::Base,
+                1 | 2 => Selection::single_at(&na, wa),
+                _ => {
+                    if i == j {
+                        Selection::set(&[(na.as_str(), wa)])
+                    } else {
+                        Selection::set(&[(na.as_str(), wa), (nb.as_str(), wb)])
+                    }
+                }
+            }
+        })
+        .collect()
+}
+
+/// Drive one trace against a fault-armed router and check every
+/// invariant after every apply.  Returns (rollbacks, store retries).
+fn run_chaos(seed: u64, plan: FaultPlan, threads: usize) -> (u64, u64) {
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let zoo: Vec<ShiraAdapter> = (0..3)
+        .map(|i| make_adapter(&mut rng, &format!("ad{i}"), NNZ))
+        .collect();
+    let base = base_weights(seed);
+    let pool = (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
+    let mut store = store_with(&zoo);
+    let mut router = Router::new(base.clone(), pool, false);
+    let injector = plan.injector();
+    store.set_fault(Arc::clone(&injector));
+    router.set_fault(injector);
+
+    let mut pre_apply = base.clone();
+    for (step, sel) in make_trace(seed).iter().enumerate() {
+        match router.apply(&mut store, sel) {
+            Ok(_) => {
+                assert!(
+                    router.weights().bit_equal(&reference_weights(&base, &zoo, sel)),
+                    "seed {seed:#x} step {step} ({sel}) diverged from the \
+                     fault-free reference (threads={threads})"
+                );
+            }
+            Err(ServeError::MutationRolledBack { .. }) => {
+                assert!(
+                    router.weights().bit_equal(&base),
+                    "seed {seed:#x} step {step}: rollback not bit-exact \
+                     (threads={threads})"
+                );
+            }
+            Err(_) => {
+                // Pre-dispatch failure: nothing mutated beyond the legal
+                // outgoing revert — bytes are the pre-apply state or base.
+                let w = router.weights();
+                assert!(
+                    w.bit_equal(&pre_apply) || w.bit_equal(&base),
+                    "seed {seed:#x} step {step}: pre-dispatch error left \
+                     torn bytes (threads={threads})"
+                );
+            }
+        }
+        assert_eq!(
+            store.pinned_plan_count(),
+            0,
+            "seed {seed:#x} step {step}: transition-plan pin outlived apply"
+        );
+        pre_apply = router.weights().clone();
+    }
+    router.revert_all(&mut store);
+    assert!(
+        router.weights().bit_equal(&base),
+        "seed {seed:#x}: final revert_all not bit-exact (threads={threads})"
+    );
+    assert_eq!(store.pinned_count(), 0, "seed {seed:#x}: pins leaked");
+    (router.rollbacks(), store.stats().retries)
+}
+
+#[test]
+fn seeded_fault_plans_never_tear_the_weights() {
+    // Fixed seed matrix, extendable from the environment (the CI chaos
+    // job runs one seed per matrix entry via CHAOS_SEED).
+    let mut seeds: Vec<u64> = vec![0xC0A51, 0xC0A52, 0xC0A53];
+    if let Ok(s) = std::env::var("CHAOS_SEED") {
+        if let Ok(n) = s.trim().parse::<u64>() {
+            seeds.push(n);
+        }
+    }
+    for seed in seeds {
+        for threads in [1usize, 4] {
+            run_chaos(seed, FaultPlan::seeded(seed, 6, 20), threads);
+        }
+    }
+}
+
+#[test]
+fn planned_faults_hit_every_resilience_counter() {
+    // One deterministic scenario per counter: a transient fetch error is
+    // absorbed by the store's retry, and a wave panic rolls back.
+    for threads in [1usize, 4] {
+        let plan = FaultPlan::new()
+            .fail_fetch_at(1)
+            .corrupt_decode_at(2)
+            .panic_wave_at(2)
+            .slow_fetch_at(3)
+            .slow_us(50);
+        let (rollbacks, retries) = run_chaos(0xFA117, plan, threads);
+        assert!(rollbacks >= 1, "planned wave panic never rolled back");
+        assert!(retries >= 1, "planned fetch fault never retried");
+    }
+}

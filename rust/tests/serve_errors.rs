@@ -184,6 +184,72 @@ fn failed_set_apply_does_not_leave_a_stale_active_key() {
 }
 
 #[test]
+fn error_paths_release_every_pin() {
+    // Pin-leak audit (DESIGN.md §13): after ANY failed apply the store
+    // must hold pins only for what is actually resident — the active
+    // single, or nothing — and never an in-flight transition plan.
+    // Each case drives one ServeError variant down the router and
+    // checks the pinned counts return to the live-single baseline.
+    use shira::coordinator::fault::FaultPlan;
+    let (mut store, mut router) = setup();
+    store.add_shira(&shira("tiny", "wq", DIM / 2));
+    store.add_shira(&shira("offtarget", "nope", DIM));
+    store.add_encoded("junk", vec![0xAB; 64]);
+    router.apply(&mut store, &Selection::single("good")).unwrap();
+    assert_eq!(store.pinned_count(), 1, "baseline: the active single");
+    let cases: Vec<(&str, Selection)> = vec![
+        ("unknown-adapter", Selection::single("ghost")),
+        (
+            "unknown-adapter",
+            Selection::set(&[("good", 1.0), ("ghost", 1.0)]),
+        ),
+        (
+            "not-shira",
+            Selection::set(&[("good", 1.0), ("lowrank", 1.0)]),
+        ),
+        ("invalid-selection", Selection::single("a+b")),
+        (
+            "duplicate-member",
+            Selection::Set {
+                members: vec![("good".into(), 1.0), ("good".into(), 2.0)],
+            },
+        ),
+        ("shape-mismatch", Selection::set(&[("tiny", 1.0)])),
+        ("fusion", Selection::set(&[("offtarget", 1.0)])),
+        ("io", Selection::single("junk")),
+    ];
+    for (kind, sel) in &cases {
+        let err = router.apply(&mut store, sel).unwrap_err();
+        assert_eq!(err.kind(), *kind, "case drives the intended variant");
+        assert!(
+            store.pinned_count() <= 1,
+            "{kind}: error path leaked pins ({} pinned)",
+            store.pinned_count()
+        );
+        assert_eq!(
+            store.pinned_plan_count(),
+            0,
+            "{kind}: error path leaked a transition-plan pin"
+        );
+        // Re-establish the live single; the count must come back to the
+        // baseline exactly (a leak would grow it monotonically).
+        router.apply(&mut store, &Selection::single("good")).unwrap();
+        assert_eq!(store.pinned_count(), 1, "{kind}: baseline restored");
+        assert!(store.is_pinned("good"));
+    }
+    // MutationRolledBack: a rolled-back apply pins nothing at all.
+    router.set_fault(FaultPlan::new().panic_wave_at(1).injector());
+    let err = router
+        .apply(&mut store, &Selection::single("good2"))
+        .unwrap_err();
+    assert_eq!(err.kind(), "mutation-rolled-back");
+    assert_eq!(store.pinned_count(), 0, "rollback releases every pin");
+    assert_eq!(store.pinned_plan_count(), 0);
+    router.apply(&mut store, &Selection::single("good")).unwrap();
+    assert_eq!(store.pinned_count(), 1);
+}
+
+#[test]
 fn corrupt_flash_bytes_are_io() {
     let (mut store, mut router) = setup();
     store.add_encoded("junk", vec![0xAB; 64]);
