@@ -5,9 +5,18 @@
 //! `Selection` routing API.
 //!
 //! Run: `cargo bench --bench bench_serving` (tables require
-//! `make artifacts`; the bit-identity gate below runs regardless).
-//! Flags: `--check` compares stage timings against the committed
-//! `rust/BENCH_serving.json`; `--save-baseline` rewrites it.
+//! `make artifacts`; the bit-identity gates and the artifact-free fleet
+//! scenario below run regardless).  Flags: `--check` compares stage
+//! timings against the committed `rust/BENCH_serving.json` and
+//! `rust/BENCH_fleet.json`; `--save-baseline` rewrites them.
+//! `SHIRA_BENCH_FAST=1` shrinks the fleet grid for CI smoke runs.
+//!
+//! ## Fleet scenario (DESIGN.md §14)
+//!
+//! A replicas x burstiness grid over the canonical seeded 10k-user
+//! Zipf trace from `data::synth` — throughput plus p50/p99 queueing
+//! tails — gated on bit-identity against the 1-replica serial
+//! reference before any timing.
 //!
 //! ## Bit-identity gate
 //!
@@ -20,17 +29,21 @@
 //! the bytes are provably unchanged.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use shira::adapter::sparse::SparseDelta;
-use shira::adapter::{LoraAdapter, LoraTensor, ShiraAdapter};
+use shira::adapter::ShiraAdapter;
 use shira::coordinator::engine::Router;
+use shira::coordinator::fleet::Fleet;
 use shira::coordinator::fusion::fuse_shira;
 use shira::coordinator::selection::Selection;
 use shira::coordinator::server::Server;
-use shira::coordinator::store::AdapterStore;
+use shira::coordinator::store::{AdapterStore, StoreConfig};
 use shira::coordinator::switch::SwitchEngine;
+use shira::data::synth::{
+    adapter_names, fleet_trace, synth_lora_adapter, synth_shira_adapter, toy_base, toy_shira_zoo,
+};
 use shira::data::trace::{generate_trace, mixed_selections, switch_count, TracePattern};
-use shira::model::tensor::Tensor2;
 use shira::model::weights::WeightStore;
 use shira::runtime::Runtime;
 use shira::util::benchlib::{finish_bench, BaselineEntry};
@@ -132,6 +145,99 @@ fn mixed_selection_gate() {
     );
 }
 
+/// Fleet scenario (DESIGN.md §14): replicas x burstiness grid over the
+/// canonical seeded 10k-user Zipf trace — artifact-free, so it always
+/// runs.  Before anything is timed, EVERY grid cell is gated on
+/// bit-identity: the oracle must stay green and per-request outcomes
+/// must equal the 1-replica serial reference.  Timed runs then disable
+/// the oracle.  Returns the `--check` verdict against
+/// `rust/BENCH_fleet.json`.
+fn fleet_bench() -> bool {
+    const DIM: usize = 48;
+    const NNZ: usize = 200;
+    const SEED: u64 = 0xF1EE7;
+    let fast = std::env::var("SHIRA_BENCH_FAST").is_ok();
+    let (grid, bursts, n_requests): (&[usize], &[usize], usize) = if fast {
+        (&[1, 2], &[4], 120)
+    } else {
+        (&[1, 2, 4, 8], &[2, 16], 400)
+    };
+    let names = adapter_names(6);
+    let sels = mixed_selections(&names);
+    let cfg = StoreConfig {
+        cache_bytes: 64 << 20,
+        prefetch_depth: 0,
+        plan_cache_bytes: 0,
+        ..StoreConfig::default()
+    };
+    let build = |replicas: usize, oracle: bool| {
+        Fleet::builder(toy_base(DIM, SEED))
+            .replicas(replicas)
+            .queue_depth(512)
+            .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, SEED))
+            .store_config(cfg.clone())
+            .oracle(oracle)
+            .build()
+    };
+    // Bit-identity gate first: timings below are only meaningful
+    // because the outcomes and bytes are provably unchanged.
+    for &burst in bursts {
+        let trace = fleet_trace(&sels, n_requests, burst, SEED);
+        let mut serial_fleet = build(1, true);
+        let serial = serial_fleet.run_trace(&trace, SEED).unwrap();
+        assert!(
+            serial.oracle_failures.is_empty(),
+            "fleet gate (serial, burst {burst}): {:?}",
+            serial.oracle_failures
+        );
+        for &r in grid {
+            let mut fleet = build(r, true);
+            let rep = fleet.run_trace(&trace, SEED).unwrap();
+            assert!(
+                rep.oracle_failures.is_empty(),
+                "fleet gate (replicas {r}, burst {burst}): {:?}",
+                rep.oracle_failures
+            );
+            assert_eq!(
+                rep.actions, serial.actions,
+                "fleet gate: outcomes at {r} replicas diverge from the \
+                 serial reference (burst {burst})"
+            );
+        }
+    }
+    println!(
+        "fleet gate: outcomes and resident bytes bit-identical to the \
+         serial reference at every replica count"
+    );
+
+    println!("\n== fleet: replicas x burstiness ({n_requests} requests, 6 adapters, zipf 10k users) ==");
+    println!("| replicas | burst | served | switches | req/s (wall) | p50 wait (us) | p99 wait (us) |");
+    println!("|---|---|---|---|---|---|---|");
+    let mut entries: Vec<BaselineEntry> = Vec::new();
+    for &r in grid {
+        for &burst in bursts {
+            let trace = fleet_trace(&sels, n_requests, burst, SEED);
+            let mut fleet = build(r, false);
+            let t0 = Instant::now();
+            let rep = fleet.run_trace(&trace, SEED).unwrap();
+            let wall = t0.elapsed();
+            let rps = n_requests as f64 / wall.as_secs_f64();
+            println!(
+                "| {r} | {burst} | {} | {} | {rps:.0} | {:.1} | {:.1} |",
+                rep.served, rep.switches, rep.p50_wait_us, rep.p99_wait_us
+            );
+            // Wall mean per request; deterministic virtual-time tails.
+            entries.push(BaselineEntry {
+                name: format!("fleet/r{r}/b{burst}"),
+                mean_ns: wall.as_nanos() as f64 / n_requests as f64,
+                p50_ns: rep.p50_wait_us * 1e3,
+                p99_ns: rep.p99_wait_us * 1e3,
+            });
+        }
+    }
+    finish_bench("fleet", &entries)
+}
+
 /// One serving scenario: which zoo it needs and which selections it
 /// serves.
 enum Scenario {
@@ -164,15 +270,16 @@ impl Scenario {
 }
 
 fn main() {
-    // Correctness gate first — runs with or without artifacts.
+    // Correctness gates first — both run with or without artifacts.
     mixed_selection_gate();
+    let fleet_ok = fleet_bench();
 
     let rt = match Runtime::with_default_artifacts() {
         Ok(rt) => rt,
         Err(e) => {
             eprintln!("skipping bench_serving tables (no artifacts): {e}");
-            // The gate ran; an empty entry set still exercises --check.
-            if !finish_bench("serving", &[]) {
+            // The gates ran; an empty entry set still exercises --check.
+            if !finish_bench("serving", &[]) || !fleet_ok {
                 std::process::exit(1);
             }
             return;
@@ -181,8 +288,7 @@ fn main() {
     let meta = rt.manifest.model("llama").unwrap().clone();
     let n_adapters = 6;
     let n_requests = 96;
-    let mut rng = Rng::new(0x5E21);
-    let names: Vec<String> = (0..n_adapters).map(|i| format!("a{i}")).collect();
+    let names = adapter_names(n_adapters);
 
     println!("== serving: scenario x pattern ({n_requests} requests, {n_adapters} adapters) ==");
     println!("| scenario | pattern | trace switches | engine switches | transition/fallback/fused | mean switch (us) | mean exec (us) | p99 lat (us) | req/s |");
@@ -207,47 +313,18 @@ fn main() {
                 .unfused_lora(matches!(scenario, Scenario::LoraUnfused))
                 .build()
                 .unwrap();
+            // Seeded zoo shared with `shira serve` and the fleet tests
+            // (data::synth): same (seed, name) pair, same adapter.
             for name in names.iter() {
                 if scenario.lora_zoo() {
-                    let tensors = meta
-                        .lora
-                        .iter()
-                        .map(|seg| {
-                            let mut a = Tensor2::zeros(seg.shape.0, seg.rank);
-                            let mut b = Tensor2::zeros(seg.rank, seg.shape.1);
-                            rng.fill_normal(&mut a.data, 0.0, 0.01);
-                            rng.fill_normal(&mut b.data, 0.0, 0.01);
-                            LoraTensor {
-                                target: seg.name.clone(),
-                                a,
-                                b,
-                            }
-                        })
-                        .collect();
-                    server.store.add_lora(&LoraAdapter {
-                        name: name.clone(),
-                        scale: rt.manifest.adapter.lora_scale as f32,
-                        tensors,
-                    });
+                    server.store.add_lora(&synth_lora_adapter(
+                        &meta,
+                        name,
+                        rt.manifest.adapter.lora_scale as f32,
+                        0x5E21,
+                    ));
                 } else {
-                    let tensors = meta
-                        .shira
-                        .iter()
-                        .map(|seg| {
-                            let idx = rng.sample_indices(seg.numel(), seg.k);
-                            let mut d = vec![0.0f32; seg.k];
-                            rng.fill_normal(&mut d, 0.0, 0.01);
-                            (
-                                seg.name.clone(),
-                                SparseDelta::new(seg.shape.0, seg.shape.1, idx, d),
-                            )
-                        })
-                        .collect();
-                    server.store.add_shira(&ShiraAdapter {
-                        name: name.clone(),
-                        strategy: "rand".into(),
-                        tensors,
-                    });
+                    server.store.add_shira(&synth_shira_adapter(&meta, name, 0x5E21));
                 }
             }
             let sels = scenario.selections(&names);
@@ -298,7 +375,7 @@ fn main() {
         "target/bench-results/bench_serving.jsonl",
         rows.join("\n") + "\n",
     );
-    if !finish_bench("serving", &entries) {
+    if !finish_bench("serving", &entries) || !fleet_ok {
         std::process::exit(1);
     }
 }

@@ -103,7 +103,13 @@ pub struct EngineCounters {
 /// Engines never own the weights: the caller owns ONE resident copy of
 /// the base model and passes it into every call, so several engines can
 /// cooperate on the same store (the router interleaves them).
-pub trait AdapterEngine {
+///
+/// `Send` is a supertrait so a boxed engine — and therefore the
+/// [`Router`] that owns it — can move into a fleet replica worker
+/// thread (`coordinator::fleet`).  Engines hold only owned state plus
+/// `Arc`s of `Sync` substrates (pool, fault injector), so the bound is
+/// free for the in-tree implementations.
+pub trait AdapterEngine: Send {
     /// Stable name of the engine ("switch" / "fusion") for reports.
     fn kind(&self) -> &'static str;
 
@@ -502,6 +508,19 @@ impl Router {
     /// affinity target).  `None` before the first apply.
     pub fn active_key(&self) -> Option<&str> {
         self.active.as_deref()
+    }
+
+    /// Name of the single adapter the switch path currently holds, when
+    /// the router is live in single mode — the `from` side a pairwise
+    /// transition plan would depart from.  `None` in base/fused mode, so
+    /// the fleet's affinity ladder only probes plan residency for
+    /// replicas that could actually take the one-pass path.
+    pub fn active_single(&self) -> Option<&str> {
+        if self.live == Live::Single {
+            self.single_name.as_deref()
+        } else {
+            None
+        }
     }
 
     /// The fused-mode engine, once a `Set` selection has built it.

@@ -75,6 +75,19 @@ pub enum ServeError {
         /// First panic/error message captured from the failed wave.
         cause: String,
     },
+    /// Fleet admission control shed the request: every eligible replica's
+    /// bounded queue was full (or every replica was quarantined), and the
+    /// fleet's failure policy was `FailFast` (`coordinator::fleet`;
+    /// DESIGN.md §14.3).  Under the other policies shedding degrades or
+    /// skips instead of surfacing this.
+    Overloaded {
+        /// Canonical key of the selection that was shed.
+        selection: String,
+        /// Worker replicas in the fleet.
+        replicas: usize,
+        /// Per-replica queue bound that was exhausted.
+        queue_depth: usize,
+    },
     /// The PJRT runtime failed (artifact missing, compile or execute
     /// error).  Stringly: runtime errors originate outside the
     /// coordinator and carry no stable structure.
@@ -101,6 +114,7 @@ impl ServeError {
             ServeError::Fusion(_) => "fusion",
             ServeError::Quarantined { .. } => "quarantined",
             ServeError::MutationRolledBack { .. } => "mutation-rolled-back",
+            ServeError::Overloaded { .. } => "overloaded",
             ServeError::Runtime(_) => "runtime",
         }
     }
@@ -135,6 +149,11 @@ impl std::fmt::Display for ServeError {
                 f,
                 "mutation for {selection:?} failed and was rolled back to \
                  base weights: {cause}"
+            ),
+            ServeError::Overloaded { selection, replicas, queue_depth } => write!(
+                f,
+                "fleet overloaded: request for {selection:?} shed — all \
+                 {replicas} replica queue(s) full (depth {queue_depth})"
             ),
             ServeError::Runtime(m) => write!(f, "runtime: {m}"),
         }
@@ -232,6 +251,14 @@ mod tests {
         assert_eq!(r.kind(), "mutation-rolled-back");
         assert!(r.to_string().contains("a+b@2"));
         assert!(r.to_string().contains("wave panic"));
+        let o = ServeError::Overloaded {
+            selection: "hot@1".into(),
+            replicas: 4,
+            queue_depth: 8,
+        };
+        assert_eq!(o.kind(), "overloaded");
+        assert!(o.to_string().contains("hot@1"));
+        assert!(o.to_string().contains("4 replica"));
     }
 
     #[test]

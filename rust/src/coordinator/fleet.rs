@@ -1,0 +1,1738 @@
+//! Fleet serving (DESIGN.md §14): N worker replicas behind one
+//! affinity-routing front end.
+//!
+//! Each replica owns its own resident [`WeightStore`] and [`Router`] —
+//! the PR 5 per-request machinery unchanged — while all replicas share
+//! ONE [`AdapterStore`] (so an adapter decodes once fleet-wide, and one
+//! plan cache serves every replica) and one [`ThreadPool`], both behind
+//! `Arc`.  A request is routed to the replica where its [`Selection`]
+//! is cheapest to reach, down the affinity cost ladder:
+//!
+//! 1. **exact** — the selection is already resident on the replica;
+//! 2. **plan** — the replica is live on a single adapter with a
+//!    resident pairwise transition plan to the incoming single
+//!    (the PR 4 one-pass path);
+//! 3. **warm** — every adapter the selection names is decoded in the
+//!    shared cache (base counts as warm everywhere: zero names);
+//! 4. **cold** — somebody has to fetch.
+//!
+//! Ties break deterministically on (cost, queue length, replica id).
+//! Quarantined replicas and replicas at their queue bound are excluded;
+//! when no replica can take the request, admission control sheds it to
+//! the configured [`FailurePolicy`].
+//!
+//! ## Determinism harness
+//!
+//! [`Fleet::run_trace`] is the seeded deterministic scheduler: a
+//! single-threaded virtual-time loop in which every nondeterministic
+//! choice (how many queue-drain steps run after each ingest, which busy
+//! replica drains next) comes from one [`Rng`] stream, on top of the
+//! PR 6 fault-injection ordinal mechanism — one shared
+//! [`FaultInjector`](super::fault::FaultInjector) is armed across the
+//! store and every replica, so its per-site ordinals fire at the same
+//! global points on every replay.  Any interleaving therefore replays
+//! from `(trace seed, schedule seed, fault seed)` alone.
+//!
+//! A per-request **bit-identity oracle** rides along: a fault-free
+//! serial reference (its own [`Router`] over a
+//! [`fork_reference`](AdapterStore::fork_reference) of the shared
+//! store) materializes the reference bytes for every selection key, and
+//! after every apply the harness checks EVERY replica's resident
+//! weights against the reference for its active key — which is exactly
+//! the rollback-isolation assertion: a fault on one replica can never
+//! perturb another replica's resident bytes.
+//!
+//! [`Fleet::run_trace_concurrent`] runs the same components for real:
+//! bounded `sync_channel` queues into `std::thread::scope` workers.
+//! Scheduling there is OS-nondeterministic, so the oracle checks each
+//! replica against the serial reference after its own applies and
+//! cross-checks the whole fleet once the workers join.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::engine::Router;
+use super::error::ServeError;
+use super::fault::FaultPlan;
+use super::metrics::FairnessLedger;
+use super::selection::Selection;
+use super::server::FailurePolicy;
+use super::store::{AdapterStore, StoreConfig, StoreStats};
+use super::switch::SwitchPath;
+use crate::adapter::{LoraAdapter, ShiraAdapter};
+use crate::data::trace::Request;
+use crate::model::weights::WeightStore;
+use crate::util::rng::Rng;
+use crate::util::stats::Sample;
+use crate::util::threadpool::ThreadPool;
+
+/// Lock a mutex, adopting the data even when a peer holding it
+/// panicked.  Fleet state is re-validated by the oracle after every
+/// apply and the routers keep their own transactional guard, so a
+/// poisoned lock carries no information a recovery path needs.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Affinity cost: the selection is already resident on the replica.
+const COST_EXACT: u8 = 0;
+/// Affinity cost: a resident pairwise transition plan reaches it.
+const COST_PLAN: u8 = 1;
+/// Affinity cost: every named adapter is decoded in the shared cache.
+const COST_WARM: u8 = 2;
+/// Affinity cost: at least one adapter must be fetched cold.
+const COST_COLD: u8 = 3;
+
+/// One replica's scheduler-visible state: what the affinity router
+/// needs to cost a placement, nothing more.  Snapshots are cheap to
+/// build from either the deterministic harness (direct field reads) or
+/// the concurrent front end (atomics + a small mutex).
+#[derive(Clone, Debug)]
+pub struct ReplicaView {
+    /// Replica index (stable tie-breaker).
+    pub id: usize,
+    /// Requests queued on the replica (channel + batcher backlog).
+    pub queued: usize,
+    /// Canonical key of the selection resident on the replica, when one
+    /// has been applied.
+    pub active_key: Option<String>,
+    /// Name of the single adapter the replica's switch path holds, when
+    /// it is live in single mode — the `from` side of a pairwise
+    /// transition plan.
+    pub active_single: Option<String>,
+    /// Sticky health flag: the replica failed too many applies in a row
+    /// and no longer receives new requests.
+    pub quarantined: bool,
+}
+
+/// Cost of making `sel` resident on the replica `view` describes, down
+/// the module-level ladder (exact > plan > warm > cold).
+fn affinity_cost(view: &ReplicaView, sel: &Selection, key: &str, store: &AdapterStore) -> u8 {
+    if view.active_key.as_deref() == Some(key) {
+        return COST_EXACT;
+    }
+    if let Selection::Single { name, .. } = sel {
+        if let Some(from) = view.active_single.as_deref() {
+            if from != name && store.has_transition_plan(from, name) {
+                return COST_PLAN;
+            }
+        }
+    }
+    if sel.names().iter().all(|n| store.is_resident(n)) {
+        return COST_WARM;
+    }
+    COST_COLD
+}
+
+/// Pick the replica where `sel` is cheapest to reach, or `None` when
+/// every replica is quarantined or at its queue bound (the admission
+/// decision).  Pure over its inputs, so every scheduling decision is
+/// replayable and directly property-testable.
+///
+/// Ties break on `(cost, queued, id)` — strictly deterministic.  With
+/// `force_cold` every candidate costs [`COST_COLD`], collapsing the
+/// ladder: placement degenerates to least-loaded/lowest-id, which must
+/// change only WHERE requests run, never their results.
+pub fn pick_replica(
+    views: &[ReplicaView],
+    sel: &Selection,
+    store: &AdapterStore,
+    queue_depth: usize,
+    force_cold: bool,
+) -> Option<usize> {
+    let key = sel.key();
+    let mut best: Option<(u8, usize, usize)> = None;
+    for v in views {
+        if v.quarantined || v.queued >= queue_depth {
+            continue;
+        }
+        let cost = if force_cold {
+            COST_COLD
+        } else {
+            affinity_cost(v, sel, &key, store)
+        };
+        let cand = (cost, v.queued, v.id);
+        if best.map(|b| cand < b).unwrap_or(true) {
+            best = Some(cand);
+        }
+    }
+    best.map(|(_, _, id)| id)
+}
+
+/// The fault-free serial reference the determinism harness checks
+/// against: its own [`Router`] over a fork of the shared store's flash
+/// (no faults, no cache coupling), materializing reference bytes once
+/// per selection key.  The engines' property-tested invariant — serving
+/// a selection from ANY prior state lands identical bytes — is what
+/// makes a by-key cache sound.
+struct BitOracle {
+    store: AdapterStore,
+    router: Router,
+    refs: HashMap<String, WeightStore>,
+    base: WeightStore,
+    checks: u64,
+    failures: Vec<String>,
+}
+
+impl BitOracle {
+    /// Materialize (or recall) the reference weights for `sel`.
+    fn reference(&mut self, sel: &Selection) {
+        let key = sel.key();
+        if self.refs.contains_key(&key) {
+            return;
+        }
+        match self.router.apply(&mut self.store, sel) {
+            Ok(_) => {
+                self.refs.insert(key, self.router.weights().clone());
+            }
+            Err(e) => self
+                .failures
+                .push(format!("reference apply failed for {key:?}: {e}")),
+        }
+    }
+
+    /// Check one replica's resident weights against the reference for
+    /// its active key (no key, or the empty base key, checks against
+    /// base bytes).
+    fn check_replica(&mut self, id: usize, active_key: Option<&str>, weights: &WeightStore) {
+        self.checks += 1;
+        let key = match active_key {
+            None | Some("") => {
+                if !weights.bit_equal(&self.base) {
+                    self.failures
+                        .push(format!("replica {id}: base-state bytes diverge from base"));
+                }
+                return;
+            }
+            Some(k) => k,
+        };
+        match self.refs.get(key) {
+            Some(r) if weights.bit_equal(r) => {}
+            Some(_) => self.failures.push(format!(
+                "replica {id}: resident bytes diverge from the fault-free reference for {key:?}"
+            )),
+            None => self
+                .failures
+                .push(format!("replica {id}: no reference for active key {key:?}")),
+        }
+    }
+}
+
+/// One worker replica: its own router (owning its resident weights) and
+/// its own affinity batcher, plus virtual-time and health bookkeeping.
+struct Replica {
+    id: usize,
+    router: Router,
+    batcher: DynamicBatcher,
+    /// Virtual clock, microseconds: when this replica next becomes free.
+    clock_us: u64,
+    served: u64,
+    failures_in_row: u32,
+    quarantined: bool,
+}
+
+/// Mutable run-wide accounting shared by both execution modes.
+struct Accum {
+    fairness: FairnessLedger,
+    waits: Sample,
+    /// Terminal disposition per request id ("served",
+    /// "degraded-to-base", "skipped", "shed-degraded", "shed-skipped")
+    /// — the per-request outcome record the acceptance criterion
+    /// compares across replica counts.
+    actions: BTreeMap<u64, &'static str>,
+    outcomes: Vec<FleetOutcome>,
+    served: u64,
+    shed: u64,
+    degraded: u64,
+    skipped: u64,
+    switches: u64,
+    transitions: u64,
+    fallbacks: u64,
+    fused: u64,
+    oracle: Option<BitOracle>,
+}
+
+impl Accum {
+    fn new(slo_us: u64, oracle: Option<BitOracle>) -> Accum {
+        Accum {
+            fairness: FairnessLedger::new(slo_us),
+            waits: Sample::new(),
+            actions: BTreeMap::new(),
+            outcomes: Vec::new(),
+            served: 0,
+            shed: 0,
+            degraded: 0,
+            skipped: 0,
+            switches: 0,
+            transitions: 0,
+            fallbacks: 0,
+            fused: 0,
+            oracle,
+        }
+    }
+
+    fn record_path(&mut self, path: Option<SwitchPath>) {
+        match path {
+            Some(SwitchPath::Transition) => self.transitions += 1,
+            Some(SwitchPath::Fallback) => self.fallbacks += 1,
+            Some(SwitchPath::Fused) => self.fused += 1,
+            None => {}
+        }
+    }
+}
+
+/// How one failed or shed batch was handled under the failure policy —
+/// the fleet's analogue of
+/// [`RequestOutcome`](super::server::RequestOutcome).
+#[derive(Clone, Debug)]
+pub struct FleetOutcome {
+    /// Canonical key of the affected selection.
+    pub selection: String,
+    /// Requests in the affected batch (1 for admission sheds).
+    pub requests: u64,
+    /// Replica involved, or `None` for admission-control sheds.
+    pub replica: Option<usize>,
+    /// `"degraded-to-base"`, `"skipped"`, `"shed-degraded"` or
+    /// `"shed-skipped"`.
+    pub action: &'static str,
+    /// Display form of the triggering error.
+    pub error: String,
+}
+
+/// End-of-run report for one fleet trace.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// Worker replicas in the fleet.
+    pub replicas: usize,
+    /// Requests in the trace.
+    pub requests: u64,
+    /// Requests served (including degraded ones).
+    pub served: u64,
+    /// Requests shed by admission control.
+    pub shed: u64,
+    /// Requests served on base weights after their selection failed.
+    pub degraded: u64,
+    /// Requests dropped.
+    pub skipped: u64,
+    /// Selection switches across all replicas.
+    pub switches: u64,
+    /// Switches that took the one-pass direct transition path.
+    pub transitions: u64,
+    /// Switches that fell back to revert+apply.
+    pub fallbacks: u64,
+    /// Switches served by the incremental fused-mode engine.
+    pub fused_switches: u64,
+    /// Failed mutations rolled back to base across all replicas.
+    pub rollbacks: u64,
+    /// Replicas quarantined by consecutive failures.
+    pub quarantined_replicas: usize,
+    /// Requests served per replica (placement distribution).
+    pub per_replica_served: Vec<u64>,
+    /// Bit-identity oracle comparisons performed.
+    pub oracle_checks: u64,
+    /// Oracle divergences (one line each; empty = bit-identical).
+    pub oracle_failures: Vec<String>,
+    /// Median queueing wait (virtual time), microseconds.
+    pub p50_wait_us: f64,
+    /// 99th-percentile queueing wait (virtual time), microseconds.
+    pub p99_wait_us: f64,
+    /// Largest replica virtual clock at end of run, microseconds.
+    pub makespan_us: u64,
+    /// Terminal disposition per request id — the per-request outcome
+    /// record compared bit-for-bit across replica counts.
+    pub actions: BTreeMap<u64, &'static str>,
+    /// One entry per failed or shed batch the policy handled.
+    pub outcomes: Vec<FleetOutcome>,
+    /// Per-selection fairness/SLO ledger.
+    pub fairness: FairnessLedger,
+    /// Shared adapter-store lifecycle counters.
+    pub store: StoreStats,
+    /// Human-readable multi-line summary.
+    pub summary: String,
+}
+
+/// Builder for [`Fleet`], mirroring
+/// [`ServerBuilder`](super::server::ServerBuilder) — but runtime-free:
+/// a fleet operates at the routing/weights level (no PJRT artifacts),
+/// so the determinism harness, the chaos tests and the bench gate all
+/// run in CI.
+///
+/// Defaults: 2 replicas, queue depth 16, [`StoreConfig::default`],
+/// [`BatcherConfig::default`], no pool, fail-fast policy, SLO
+/// disabled, 50us virtual service time, quarantine after 3 consecutive
+/// failures, oracle on, force-cold off.
+pub struct FleetBuilder {
+    base: WeightStore,
+    replicas: usize,
+    queue_depth: usize,
+    store_cfg: StoreConfig,
+    batcher_cfg: BatcherConfig,
+    pool: Option<Arc<ThreadPool>>,
+    shira: Vec<ShiraAdapter>,
+    lora: Vec<LoraAdapter>,
+    unfused_lora: bool,
+    failure_policy: FailurePolicy,
+    fault_plan: Option<FaultPlan>,
+    slo_us: u64,
+    service_us: u64,
+    quarantine_after: u32,
+    oracle: bool,
+    force_cold: bool,
+}
+
+impl FleetBuilder {
+    /// Worker replicas (clamped to at least 1).
+    pub fn replicas(mut self, n: usize) -> Self {
+        self.replicas = n;
+        self
+    }
+
+    /// Per-replica queue bound (clamped to at least 1): requests beyond
+    /// it are shed to the failure policy.
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.queue_depth = n;
+        self
+    }
+
+    /// Full shared-store configuration (cache budgets, format, prefetch
+    /// depth, retry/quarantine tunables).
+    pub fn store_config(mut self, cfg: StoreConfig) -> Self {
+        self.store_cfg = cfg;
+        self
+    }
+
+    /// Per-replica batcher tunables.
+    pub fn batcher_config(mut self, cfg: BatcherConfig) -> Self {
+        self.batcher_cfg = cfg;
+        self
+    }
+
+    /// Thread pool shared by the store's prefetch and every replica's
+    /// engine waves.
+    pub fn pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Register SHiRA adapters on the shared store's flash tier.
+    pub fn shira_adapters(mut self, zoo: &[ShiraAdapter]) -> Self {
+        self.shira.extend(zoo.iter().cloned());
+        self
+    }
+
+    /// Register LoRA adapters on the shared store's flash tier.
+    pub fn lora_adapters(mut self, zoo: &[LoraAdapter]) -> Self {
+        self.lora.extend(zoo.iter().cloned());
+        self
+    }
+
+    /// Serve LoRA singles unfused (branches on the forward pass).
+    pub fn unfused_lora(mut self, on: bool) -> Self {
+        self.unfused_lora = on;
+        self
+    }
+
+    /// What to do with failed batches and shed requests.
+    pub fn failure_policy(mut self, policy: FailurePolicy) -> Self {
+        self.failure_policy = policy;
+        self
+    }
+
+    /// Arm ONE deterministic fault plan across the shared store and
+    /// every replica's engines: per-site ordinals count fleet-wide, so
+    /// a seeded plan fires at the same global points on every replay.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
+    /// Queueing-wait SLO for the fairness ledger, microseconds (0
+    /// disables violation counting).
+    pub fn slo_us(mut self, us: u64) -> Self {
+        self.slo_us = us;
+        self
+    }
+
+    /// Virtual service time per request, microseconds (clamped to at
+    /// least 1) — what the deterministic harness charges a replica's
+    /// clock for each served request.
+    pub fn service_us(mut self, us: u64) -> Self {
+        self.service_us = us;
+        self
+    }
+
+    /// Consecutive failed applies before a replica is quarantined
+    /// (clamped to at least 1).
+    pub fn quarantine_after(mut self, n: u32) -> Self {
+        self.quarantine_after = n;
+        self
+    }
+
+    /// Enable/disable the per-request bit-identity oracle (on by
+    /// default; benches disable it for timed runs after gating).
+    pub fn oracle(mut self, on: bool) -> Self {
+        self.oracle = on;
+        self
+    }
+
+    /// Treat every placement as cold: collapses the affinity ladder so
+    /// routing degenerates to least-loaded/lowest-id.  Placement
+    /// changes; per-request results must not (property-tested).
+    pub fn force_cold(mut self, on: bool) -> Self {
+        self.force_cold = on;
+        self
+    }
+
+    /// Assemble the fleet: one shared store, N replica routers over
+    /// clones of the base weights, one optional fault injector armed
+    /// across all of them.
+    pub fn build(self) -> Fleet {
+        let n = self.replicas.max(1);
+        let mut store = AdapterStore::with_config(self.store_cfg, self.pool.clone());
+        for a in &self.shira {
+            store.add_shira(a);
+        }
+        for a in &self.lora {
+            store.add_lora(a);
+        }
+        let injector = self.fault_plan.map(FaultPlan::injector);
+        if let Some(f) = &injector {
+            store.set_fault(Arc::clone(f));
+        }
+        let mut replicas = Vec::with_capacity(n);
+        for id in 0..n {
+            let mut router = Router::new(self.base.clone(), self.pool.clone(), self.unfused_lora);
+            if let Some(f) = &injector {
+                router.set_fault(Arc::clone(f));
+            }
+            replicas.push(Replica {
+                id,
+                router,
+                batcher: DynamicBatcher::new(self.batcher_cfg.clone()),
+                clock_us: 0,
+                served: 0,
+                failures_in_row: 0,
+                quarantined: false,
+            });
+        }
+        Fleet {
+            store: Arc::new(Mutex::new(store)),
+            replicas,
+            base: self.base,
+            queue_depth: self.queue_depth.max(1),
+            failure_policy: self.failure_policy,
+            slo_us: self.slo_us,
+            service_us: self.service_us.max(1),
+            quarantine_after: self.quarantine_after.max(1),
+            oracle: self.oracle,
+            force_cold: self.force_cold,
+            unfused_lora: self.unfused_lora,
+        }
+    }
+}
+
+/// A concurrent serving front end over N worker replicas (module docs;
+/// DESIGN.md §14).  Built with [`Fleet::builder`]; driven either by the
+/// seeded deterministic harness ([`Fleet::run_trace`]) or for real
+/// through MPSC queues and scoped threads
+/// ([`Fleet::run_trace_concurrent`]).
+pub struct Fleet {
+    store: Arc<Mutex<AdapterStore>>,
+    replicas: Vec<Replica>,
+    base: WeightStore,
+    queue_depth: usize,
+    failure_policy: FailurePolicy,
+    slo_us: u64,
+    service_us: u64,
+    quarantine_after: u32,
+    oracle: bool,
+    force_cold: bool,
+    unfused_lora: bool,
+}
+
+impl Fleet {
+    /// Builder over `base` weights (each replica serves its own clone).
+    pub fn builder(base: WeightStore) -> FleetBuilder {
+        FleetBuilder {
+            base,
+            replicas: 2,
+            queue_depth: 16,
+            store_cfg: StoreConfig::default(),
+            batcher_cfg: BatcherConfig::default(),
+            pool: None,
+            shira: Vec::new(),
+            lora: Vec::new(),
+            unfused_lora: false,
+            failure_policy: FailurePolicy::default(),
+            fault_plan: None,
+            slo_us: 0,
+            service_us: 50,
+            quarantine_after: 3,
+            oracle: true,
+            force_cold: false,
+        }
+    }
+
+    /// Worker replicas in the fleet.
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// The replicas' routers, in id order — each exposes its resident
+    /// weights and active key for end-state assertions.
+    pub fn routers(&self) -> impl Iterator<Item = &Router> {
+        self.replicas.iter().map(|r| &r.router)
+    }
+
+    /// Handle on the shared adapter store (pin audits, stats).
+    pub fn store(&self) -> Arc<Mutex<AdapterStore>> {
+        Arc::clone(&self.store)
+    }
+
+    /// Restore every replica to base weights, release every pin, and
+    /// drop all queued requests.
+    pub fn revert_all(&mut self) {
+        let mut store = relock(&self.store);
+        for rep in &mut self.replicas {
+            rep.router.revert_all(&mut store);
+            rep.batcher.clear();
+        }
+    }
+
+    /// Scheduler-visible snapshot of every replica (deterministic mode
+    /// reads the live structs directly).
+    fn views(&self) -> Vec<ReplicaView> {
+        self.replicas
+            .iter()
+            .map(|r| ReplicaView {
+                id: r.id,
+                queued: r.batcher.pending(),
+                active_key: r.router.active_key().map(str::to_string),
+                active_single: r.router.active_single().map(str::to_string),
+                quarantined: r.quarantined,
+            })
+            .collect()
+    }
+
+    /// Build the fault-free serial reference for the oracle.
+    fn make_oracle(&self) -> BitOracle {
+        let store = relock(&self.store).fork_reference();
+        BitOracle {
+            store,
+            router: Router::new(self.base.clone(), None, self.unfused_lora),
+            refs: HashMap::new(),
+            base: self.base.clone(),
+            checks: 0,
+            failures: Vec::new(),
+        }
+    }
+
+    /// Run `trace` through the seeded deterministic scheduler (module
+    /// docs): single-threaded, virtual-time, every interleaving choice
+    /// drawn from `seed`'s stream — so any failing seed replays its
+    /// exact interleaving, and the bit-identity oracle checks every
+    /// replica after every apply.
+    pub fn run_trace(&mut self, trace: &[Request], seed: u64) -> Result<FleetReport, ServeError> {
+        for q in trace {
+            q.selection.validate()?;
+        }
+        let mut rng = Rng::new(seed).stream("fleet/schedule");
+        let oracle = if self.oracle {
+            Some(self.make_oracle())
+        } else {
+            None
+        };
+        let mut acc = Accum::new(self.slo_us, oracle);
+        for q in trace {
+            self.ingest(q, &mut acc)?;
+            let steps = rng.below(self.replicas.len() + 1);
+            for _ in 0..steps {
+                if !self.drain_one(&mut rng, &mut acc)? {
+                    break;
+                }
+            }
+        }
+        while self.drain_one(&mut rng, &mut acc)? {}
+        Ok(self.finish(acc, trace.len() as u64))
+    }
+
+    /// Route one arriving request, shedding to the failure policy when
+    /// no replica can take it.
+    fn ingest(&mut self, req: &Request, acc: &mut Accum) -> Result<(), ServeError> {
+        let target = {
+            let store = relock(&self.store);
+            pick_replica(
+                &self.views(),
+                &req.selection,
+                &store,
+                self.queue_depth,
+                self.force_cold,
+            )
+        };
+        match target {
+            Some(r) => {
+                self.replicas[r].batcher.push(req.clone());
+                Ok(())
+            }
+            None => self.shed(req, acc),
+        }
+    }
+
+    /// Admission control: apply the failure policy to a request no
+    /// replica can accept.
+    fn shed(&mut self, req: &Request, acc: &mut Accum) -> Result<(), ServeError> {
+        let key = req.selection.key();
+        match self.failure_policy {
+            FailurePolicy::FailFast => Err(ServeError::Overloaded {
+                selection: key,
+                replicas: self.replicas.len(),
+                queue_depth: self.queue_depth,
+            }),
+            FailurePolicy::DegradeToBase => {
+                // Retry the placement as a base request: base is the
+                // cheapest selection to make resident anywhere, so this
+                // only fails when every queue is genuinely full.
+                let target = {
+                    let store = relock(&self.store);
+                    pick_replica(
+                        &self.views(),
+                        &Selection::Base,
+                        &store,
+                        self.queue_depth,
+                        self.force_cold,
+                    )
+                };
+                acc.shed += 1;
+                acc.fairness.record_shed(&key);
+                match target {
+                    Some(r) => {
+                        acc.degraded += 1;
+                        acc.actions.insert(req.id, "shed-degraded");
+                        acc.outcomes.push(FleetOutcome {
+                            selection: key,
+                            requests: 1,
+                            replica: Some(r),
+                            action: "shed-degraded",
+                            error: "admission: no replica can take the selection".into(),
+                        });
+                        let mut base_req = req.clone();
+                        base_req.selection = Selection::Base;
+                        self.replicas[r].batcher.push(base_req);
+                    }
+                    None => {
+                        acc.skipped += 1;
+                        acc.actions.insert(req.id, "shed-skipped");
+                        acc.outcomes.push(FleetOutcome {
+                            selection: key,
+                            requests: 1,
+                            replica: None,
+                            action: "shed-skipped",
+                            error: "admission: all replica queues full".into(),
+                        });
+                    }
+                }
+                Ok(())
+            }
+            FailurePolicy::SkipRequest => {
+                acc.shed += 1;
+                acc.skipped += 1;
+                acc.fairness.record_shed(&key);
+                acc.actions.insert(req.id, "shed-skipped");
+                acc.outcomes.push(FleetOutcome {
+                    selection: key,
+                    requests: 1,
+                    replica: None,
+                    action: "shed-skipped",
+                    error: "admission: all replica queues full".into(),
+                });
+                Ok(())
+            }
+        }
+    }
+
+    /// Serve one batch on one seeded-randomly-chosen busy replica.
+    /// Returns false when the whole fleet is idle.
+    fn drain_one(&mut self, rng: &mut Rng, acc: &mut Accum) -> Result<bool, ServeError> {
+        let busy: Vec<usize> = self
+            .replicas
+            .iter()
+            .filter(|r| !r.batcher.is_empty())
+            .map(|r| r.id)
+            .collect();
+        if busy.is_empty() {
+            return Ok(false);
+        }
+        let r = busy[rng.below(busy.len())];
+        self.serve_one(r, acc)?;
+        Ok(true)
+    }
+
+    /// Take the next batch on replica `r`, make its selection resident,
+    /// account virtual time and fairness, and run the oracle over the
+    /// WHOLE fleet (rollback isolation: no other replica's bytes may
+    /// have moved).
+    fn serve_one(&mut self, r: usize, acc: &mut Accum) -> Result<(), ServeError> {
+        let rep = &mut self.replicas[r];
+        let active = rep.router.active_key().map(str::to_string);
+        let Some((sel, batch)) = rep.batcher.next_batch(active.as_deref()) else {
+            return Ok(());
+        };
+        let key = sel.key();
+        let result = {
+            let mut store = relock(&self.store);
+            let depth = store.prefetch_depth();
+            if depth > 0 {
+                let mut names: Vec<String> = Vec::new();
+                for s in rep.batcher.upcoming(depth, &[key.as_str()]) {
+                    for n in s.names() {
+                        if !names.iter().any(|x| x == n) {
+                            names.push(n.to_string());
+                        }
+                    }
+                }
+                store.prefetch(&names);
+            }
+            rep.router.apply(&mut store, &sel)
+        };
+        match result {
+            Ok(applied) => {
+                rep.failures_in_row = 0;
+                if applied.switched {
+                    acc.switches += 1;
+                    acc.record_path(applied.path);
+                }
+                let newest = batch.iter().map(|q| q.arrival_us).max().unwrap_or(0);
+                let start = rep.clock_us.max(newest);
+                for q in &batch {
+                    let wait = start.saturating_sub(q.arrival_us);
+                    acc.fairness.record_wait(&key, wait);
+                    acc.waits.push(wait as f64);
+                    acc.actions.entry(q.id).or_insert("served");
+                }
+                rep.clock_us = start + self.service_us * batch.len() as u64;
+                rep.served += batch.len() as u64;
+                acc.served += batch.len() as u64;
+                self.check_fleet(acc, Some(&sel));
+                Ok(())
+            }
+            Err(e) => self.handle_failure(r, &sel, &batch, e, acc),
+        }
+    }
+
+    /// Oracle sweep over every replica (plus the fleet-wide plan-pin
+    /// audit) after an apply — in the deterministic harness this runs
+    /// after failures too, which is exactly the rollback-isolation
+    /// assertion.
+    fn check_fleet(&mut self, acc: &mut Accum, incoming: Option<&Selection>) {
+        let Some(oracle) = acc.oracle.as_mut() else {
+            return;
+        };
+        if let Some(sel) = incoming {
+            oracle.reference(sel);
+        }
+        for rep in &self.replicas {
+            oracle.check_replica(rep.id, rep.router.active_key(), rep.router.weights());
+        }
+        let store = relock(&self.store);
+        if store.pinned_plan_count() != 0 {
+            oracle
+                .failures
+                .push("transition-plan pin leaked across an apply".to_string());
+        }
+    }
+
+    /// Apply the failure policy to a batch whose selection could not be
+    /// made resident, then re-run the fleet oracle: the failing
+    /// replica must be back on base bytes and every OTHER replica's
+    /// resident bytes must be untouched.
+    fn handle_failure(
+        &mut self,
+        r: usize,
+        sel: &Selection,
+        batch: &[Request],
+        e: ServeError,
+        acc: &mut Accum,
+    ) -> Result<(), ServeError> {
+        let key = sel.key();
+        let n = batch.len() as u64;
+        let rep = &mut self.replicas[r];
+        rep.failures_in_row += 1;
+        if rep.failures_in_row >= self.quarantine_after {
+            rep.quarantined = true;
+        }
+        match self.failure_policy {
+            FailurePolicy::FailFast => {
+                for rp in &mut self.replicas {
+                    rp.batcher.clear();
+                }
+                Err(e)
+            }
+            FailurePolicy::DegradeToBase => {
+                let ok = {
+                    let mut store = relock(&self.store);
+                    rep.router.apply(&mut store, &Selection::Base).is_ok()
+                };
+                if ok {
+                    let newest = batch.iter().map(|q| q.arrival_us).max().unwrap_or(0);
+                    let start = rep.clock_us.max(newest);
+                    for q in batch {
+                        let wait = start.saturating_sub(q.arrival_us);
+                        acc.fairness.record_wait(&key, wait);
+                        acc.waits.push(wait as f64);
+                        acc.actions.insert(q.id, "degraded-to-base");
+                    }
+                    rep.clock_us = start + self.service_us * n;
+                    rep.served += n;
+                    acc.served += n;
+                    acc.degraded += n;
+                } else {
+                    for q in batch {
+                        acc.actions.insert(q.id, "skipped");
+                    }
+                    acc.skipped += n;
+                }
+                acc.outcomes.push(FleetOutcome {
+                    selection: key,
+                    requests: n,
+                    replica: Some(r),
+                    action: if ok { "degraded-to-base" } else { "skipped" },
+                    error: e.to_string(),
+                });
+                self.check_fleet(acc, None);
+                Ok(())
+            }
+            FailurePolicy::SkipRequest => {
+                for q in batch {
+                    acc.actions.insert(q.id, "skipped");
+                }
+                acc.skipped += n;
+                acc.outcomes.push(FleetOutcome {
+                    selection: key,
+                    requests: n,
+                    replica: Some(r),
+                    action: "skipped",
+                    error: e.to_string(),
+                });
+                self.check_fleet(acc, None);
+                Ok(())
+            }
+        }
+    }
+
+    /// Assemble the end-of-run report.
+    fn finish(&mut self, mut acc: Accum, requests: u64) -> FleetReport {
+        let store = relock(&self.store).stats();
+        let makespan_us = self.replicas.iter().map(|r| r.clock_us).max().unwrap_or(0);
+        let rollbacks: u64 = self.replicas.iter().map(|r| r.router.rollbacks()).sum();
+        let quarantined = self.replicas.iter().filter(|r| r.quarantined).count();
+        let per_replica_served: Vec<u64> = self.replicas.iter().map(|r| r.served).collect();
+        let (oracle_checks, oracle_failures) = match &acc.oracle {
+            Some(o) => (o.checks, o.failures.clone()),
+            None => (0, Vec::new()),
+        };
+        let (p50, p99) = if acc.waits.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (acc.waits.percentile(50.0), acc.waits.percentile(99.0))
+        };
+        let mut summary = format!(
+            "fleet: replicas={} requests={} served={} shed={} degraded={} \
+             skipped={} quarantined={}\n\
+             switches={} (transition={} fallback={} fused={}) rollbacks={}\n\
+             wait: p50={:.1}us p99={:.1}us makespan={}us\n\
+             oracle: checks={} failures={}",
+            self.replicas.len(),
+            requests,
+            acc.served,
+            acc.shed,
+            acc.degraded,
+            acc.skipped,
+            quarantined,
+            acc.switches,
+            acc.transitions,
+            acc.fallbacks,
+            acc.fused,
+            rollbacks,
+            p50,
+            p99,
+            makespan_us,
+            oracle_checks,
+            oracle_failures.len(),
+        );
+        if !acc.fairness.is_empty() {
+            summary.push('\n');
+            summary.push_str(&acc.fairness.summary_lines());
+        }
+        FleetReport {
+            replicas: self.replicas.len(),
+            requests,
+            served: acc.served,
+            shed: acc.shed,
+            degraded: acc.degraded,
+            skipped: acc.skipped,
+            switches: acc.switches,
+            transitions: acc.transitions,
+            fallbacks: acc.fallbacks,
+            fused_switches: acc.fused,
+            rollbacks,
+            quarantined_replicas: quarantined,
+            per_replica_served,
+            oracle_checks,
+            oracle_failures,
+            p50_wait_us: p50,
+            p99_wait_us: p99,
+            makespan_us,
+            actions: acc.actions,
+            outcomes: acc.outcomes,
+            fairness: acc.fairness,
+            store,
+            summary,
+        }
+    }
+
+    /// Run `trace` through real MPSC queues and one scoped worker
+    /// thread per replica (module docs).  The front end routes each
+    /// request off live replica snapshots and sheds to the failure
+    /// policy when the chosen queue is full; workers drain their
+    /// channels into their own affinity batchers and serve batch by
+    /// batch against the shared store.  The oracle (when enabled)
+    /// checks each replica after its own applies and cross-checks the
+    /// whole fleet after the workers join.
+    pub fn run_trace_concurrent(&mut self, trace: &[Request]) -> Result<FleetReport, ServeError> {
+        for q in trace {
+            q.selection.validate()?;
+        }
+        let oracle = if self.oracle {
+            Some(self.make_oracle())
+        } else {
+            None
+        };
+        let shared = Mutex::new(Accum::new(self.slo_us, oracle));
+        let slots: Vec<Slot> = (0..self.replicas.len()).map(|_| Slot::default()).collect();
+        let stop = AtomicBool::new(false);
+        let first_error: Mutex<Option<ServeError>> = Mutex::new(None);
+        let ctx = WorkerCtx {
+            slots: &slots,
+            store: &*self.store,
+            shared: &shared,
+            stop: &stop,
+            first_error: &first_error,
+            policy: self.failure_policy,
+            service_us: self.service_us,
+            quarantine_after: self.quarantine_after,
+            queue_depth: self.queue_depth,
+            force_cold: self.force_cold,
+        };
+        let mut senders: Vec<SyncSender<Request>> = Vec::with_capacity(self.replicas.len());
+        let mut receivers: Vec<Receiver<Request>> = Vec::with_capacity(self.replicas.len());
+        for _ in 0..self.replicas.len() {
+            let (tx, rx) = sync_channel::<Request>(self.queue_depth);
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        std::thread::scope(|scope| {
+            for (rep, rx) in self.replicas.iter_mut().zip(receivers) {
+                let ctx = &ctx;
+                scope.spawn(move || replica_worker(rep, rx, ctx));
+            }
+            for q in trace {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                front_route(q, &senders, &ctx);
+            }
+            drop(senders);
+        });
+        let mut acc = shared.into_inner().unwrap_or_else(|p| p.into_inner());
+        // End-of-run cross-replica sweep: with the workers joined it is
+        // safe to read every replica's weights again.
+        self.check_fleet(&mut acc, None);
+        if let Some(e) = relock(&first_error).take() {
+            for rep in &mut self.replicas {
+                rep.batcher.clear();
+            }
+            return Err(e);
+        }
+        Ok(self.finish(acc, trace.len() as u64))
+    }
+}
+
+/// Live per-replica scheduler state shared between the concurrent
+/// front end and its worker.
+#[derive(Default)]
+struct Slot {
+    /// Requests outstanding on the replica (channel + batcher).
+    queued: AtomicUsize,
+    /// Mirror of the replica's sticky quarantine flag.
+    quarantined: AtomicBool,
+    /// Mirror of the replica's (active key, active single) pair.
+    active: Mutex<(Option<String>, Option<String>)>,
+}
+
+/// Everything a concurrent worker or the front end needs by reference —
+/// one struct so the call graph stays narrow.
+struct WorkerCtx<'a> {
+    slots: &'a [Slot],
+    store: &'a Mutex<AdapterStore>,
+    shared: &'a Mutex<Accum>,
+    stop: &'a AtomicBool,
+    first_error: &'a Mutex<Option<ServeError>>,
+    policy: FailurePolicy,
+    service_us: u64,
+    quarantine_after: u32,
+    queue_depth: usize,
+    force_cold: bool,
+}
+
+/// Snapshot every slot into scheduler views for the front end.
+fn slot_views(slots: &[Slot]) -> Vec<ReplicaView> {
+    slots
+        .iter()
+        .enumerate()
+        .map(|(id, s)| {
+            let (active_key, active_single) = relock(&s.active).clone();
+            ReplicaView {
+                id,
+                queued: s.queued.load(Ordering::SeqCst),
+                active_key,
+                active_single,
+                quarantined: s.quarantined.load(Ordering::SeqCst),
+            }
+        })
+        .collect()
+}
+
+/// Route one request from the concurrent front end, shedding to the
+/// failure policy when no replica can take it (or the chosen queue
+/// filled in the race window).
+fn front_route(req: &Request, senders: &[SyncSender<Request>], ctx: &WorkerCtx<'_>) {
+    let key = req.selection.key();
+    let target = {
+        let store = relock(ctx.store);
+        pick_replica(
+            &slot_views(ctx.slots),
+            &req.selection,
+            &store,
+            ctx.queue_depth,
+            ctx.force_cold,
+        )
+    };
+    if let Some(r) = target {
+        ctx.slots[r].queued.fetch_add(1, Ordering::SeqCst);
+        if senders[r].try_send(req.clone()).is_ok() {
+            return;
+        }
+        ctx.slots[r].queued.fetch_sub(1, Ordering::SeqCst);
+    }
+    match ctx.policy {
+        FailurePolicy::FailFast => {
+            let mut fe = relock(ctx.first_error);
+            if fe.is_none() {
+                *fe = Some(ServeError::Overloaded {
+                    selection: key,
+                    replicas: ctx.slots.len(),
+                    queue_depth: ctx.queue_depth,
+                });
+            }
+            drop(fe);
+            ctx.stop.store(true, Ordering::SeqCst);
+        }
+        FailurePolicy::DegradeToBase => {
+            let target = {
+                let store = relock(ctx.store);
+                pick_replica(
+                    &slot_views(ctx.slots),
+                    &Selection::Base,
+                    &store,
+                    ctx.queue_depth,
+                    ctx.force_cold,
+                )
+            };
+            let mut sent_to = None;
+            if let Some(r) = target {
+                ctx.slots[r].queued.fetch_add(1, Ordering::SeqCst);
+                let mut base_req = req.clone();
+                base_req.selection = Selection::Base;
+                if senders[r].try_send(base_req).is_ok() {
+                    sent_to = Some(r);
+                } else {
+                    ctx.slots[r].queued.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            let mut acc = relock(ctx.shared);
+            acc.shed += 1;
+            acc.fairness.record_shed(&key);
+            match sent_to {
+                Some(r) => {
+                    acc.degraded += 1;
+                    acc.actions.insert(req.id, "shed-degraded");
+                    acc.outcomes.push(FleetOutcome {
+                        selection: key,
+                        requests: 1,
+                        replica: Some(r),
+                        action: "shed-degraded",
+                        error: "admission: no replica can take the selection".into(),
+                    });
+                }
+                None => {
+                    acc.skipped += 1;
+                    acc.actions.insert(req.id, "shed-skipped");
+                    acc.outcomes.push(FleetOutcome {
+                        selection: key,
+                        requests: 1,
+                        replica: None,
+                        action: "shed-skipped",
+                        error: "admission: all replica queues full".into(),
+                    });
+                }
+            }
+        }
+        FailurePolicy::SkipRequest => {
+            let mut acc = relock(ctx.shared);
+            acc.shed += 1;
+            acc.skipped += 1;
+            acc.fairness.record_shed(&key);
+            acc.actions.insert(req.id, "shed-skipped");
+            acc.outcomes.push(FleetOutcome {
+                selection: key,
+                requests: 1,
+                replica: None,
+                action: "shed-skipped",
+                error: "admission: all replica queues full".into(),
+            });
+        }
+    }
+}
+
+/// One concurrent worker: drain the channel into the replica's affinity
+/// batcher, serve batch by batch, exit when the channel disconnects and
+/// the backlog is empty (or a fleet-wide stop is flagged).
+fn replica_worker(rep: &mut Replica, rx: Receiver<Request>, ctx: &WorkerCtx<'_>) {
+    loop {
+        if ctx.stop.load(Ordering::SeqCst) {
+            rep.batcher.clear();
+            ctx.slots[rep.id].queued.store(0, Ordering::SeqCst);
+            return;
+        }
+        let mut disconnected = false;
+        loop {
+            match rx.try_recv() {
+                Ok(q) => rep.batcher.push(q),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if rep.batcher.is_empty() {
+            if disconnected {
+                return;
+            }
+            match rx.recv() {
+                Ok(q) => {
+                    rep.batcher.push(q);
+                    continue;
+                }
+                Err(_) => return,
+            }
+        }
+        serve_batch_concurrent(rep, ctx);
+    }
+}
+
+/// Publish a replica's post-apply routing state to its slot.
+fn publish_slot(rep: &Replica, ctx: &WorkerCtx<'_>) {
+    *relock(&ctx.slots[rep.id].active) = (
+        rep.router.active_key().map(str::to_string),
+        rep.router.active_single().map(str::to_string),
+    );
+}
+
+/// Serve one batch inside a concurrent worker (the worker-thread twin
+/// of [`Fleet::serve_one`]): apply under the store lock, account
+/// virtual time and fairness under the accumulator lock, and run the
+/// oracle on this replica's own bytes.
+fn serve_batch_concurrent(rep: &mut Replica, ctx: &WorkerCtx<'_>) {
+    let active = rep.router.active_key().map(str::to_string);
+    let Some((sel, batch)) = rep.batcher.next_batch(active.as_deref()) else {
+        return;
+    };
+    let key = sel.key();
+    let n = batch.len() as u64;
+    let result = {
+        let mut store = relock(ctx.store);
+        let depth = store.prefetch_depth();
+        if depth > 0 {
+            let mut names: Vec<String> = Vec::new();
+            for s in rep.batcher.upcoming(depth, &[key.as_str()]) {
+                for nm in s.names() {
+                    if !names.iter().any(|x| x == nm) {
+                        names.push(nm.to_string());
+                    }
+                }
+            }
+            store.prefetch(&names);
+        }
+        rep.router.apply(&mut store, &sel)
+    };
+    match result {
+        Ok(applied) => {
+            rep.failures_in_row = 0;
+            let newest = batch.iter().map(|q| q.arrival_us).max().unwrap_or(0);
+            let start = rep.clock_us.max(newest);
+            rep.clock_us = start + ctx.service_us * n;
+            rep.served += n;
+            publish_slot(rep, ctx);
+            ctx.slots[rep.id]
+                .queued
+                .fetch_sub(batch.len(), Ordering::SeqCst);
+            let mut acc = relock(ctx.shared);
+            if applied.switched {
+                acc.switches += 1;
+                acc.record_path(applied.path);
+            }
+            for q in &batch {
+                let wait = start.saturating_sub(q.arrival_us);
+                acc.fairness.record_wait(&key, wait);
+                acc.waits.push(wait as f64);
+                acc.actions.entry(q.id).or_insert("served");
+            }
+            acc.served += n;
+            if let Some(oracle) = acc.oracle.as_mut() {
+                oracle.reference(&sel);
+                oracle.check_replica(rep.id, rep.router.active_key(), rep.router.weights());
+            }
+        }
+        Err(e) => {
+            rep.failures_in_row += 1;
+            if rep.failures_in_row >= ctx.quarantine_after {
+                rep.quarantined = true;
+                ctx.slots[rep.id].quarantined.store(true, Ordering::SeqCst);
+            }
+            match ctx.policy {
+                FailurePolicy::FailFast => {
+                    let mut fe = relock(ctx.first_error);
+                    if fe.is_none() {
+                        *fe = Some(e);
+                    }
+                    drop(fe);
+                    ctx.stop.store(true, Ordering::SeqCst);
+                    rep.batcher.clear();
+                    publish_slot(rep, ctx);
+                    ctx.slots[rep.id].queued.store(0, Ordering::SeqCst);
+                }
+                FailurePolicy::DegradeToBase => {
+                    let ok = {
+                        let mut store = relock(ctx.store);
+                        rep.router.apply(&mut store, &Selection::Base).is_ok()
+                    };
+                    if ok {
+                        let newest = batch.iter().map(|q| q.arrival_us).max().unwrap_or(0);
+                        let start = rep.clock_us.max(newest);
+                        rep.clock_us = start + ctx.service_us * n;
+                        rep.served += n;
+                    }
+                    publish_slot(rep, ctx);
+                    ctx.slots[rep.id]
+                        .queued
+                        .fetch_sub(batch.len(), Ordering::SeqCst);
+                    let mut acc = relock(ctx.shared);
+                    if ok {
+                        for q in &batch {
+                            acc.actions.insert(q.id, "degraded-to-base");
+                        }
+                        acc.served += n;
+                        acc.degraded += n;
+                    } else {
+                        for q in &batch {
+                            acc.actions.insert(q.id, "skipped");
+                        }
+                        acc.skipped += n;
+                    }
+                    acc.outcomes.push(FleetOutcome {
+                        selection: key,
+                        requests: n,
+                        replica: Some(rep.id),
+                        action: if ok { "degraded-to-base" } else { "skipped" },
+                        error: e.to_string(),
+                    });
+                    if let Some(oracle) = acc.oracle.as_mut() {
+                        oracle.check_replica(
+                            rep.id,
+                            rep.router.active_key(),
+                            rep.router.weights(),
+                        );
+                    }
+                }
+                FailurePolicy::SkipRequest => {
+                    publish_slot(rep, ctx);
+                    ctx.slots[rep.id]
+                        .queued
+                        .fetch_sub(batch.len(), Ordering::SeqCst);
+                    let mut acc = relock(ctx.shared);
+                    for q in &batch {
+                        acc.actions.insert(q.id, "skipped");
+                    }
+                    acc.skipped += n;
+                    acc.outcomes.push(FleetOutcome {
+                        selection: key,
+                        requests: n,
+                        replica: Some(rep.id),
+                        action: "skipped",
+                        error: e.to_string(),
+                    });
+                    if let Some(oracle) = acc.oracle.as_mut() {
+                        oracle.check_replica(
+                            rep.id,
+                            rep.router.active_key(),
+                            rep.router.weights(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{adapter_names, fleet_trace, toy_base, toy_shira_zoo};
+    use crate::util::proptest as pt;
+
+    const DIM: usize = 32;
+    const NNZ: usize = 60;
+
+    fn zoo_names(n: usize) -> Vec<String> {
+        adapter_names(n)
+    }
+
+    fn small_fleet(replicas: usize, seed: u64) -> Fleet {
+        let names = zoo_names(4);
+        Fleet::builder(toy_base(DIM, seed))
+            .replicas(replicas)
+            .queue_depth(64)
+            .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, seed))
+            .store_config(StoreConfig {
+                cache_bytes: 64 << 20,
+                prefetch_depth: 0,
+                plan_cache_bytes: 0,
+                ..StoreConfig::default()
+            })
+            .build()
+    }
+
+    fn view(id: usize, queued: usize, key: Option<&str>, single: Option<&str>) -> ReplicaView {
+        ReplicaView {
+            id,
+            queued,
+            active_key: key.map(str::to_string),
+            active_single: single.map(str::to_string),
+            quarantined: false,
+        }
+    }
+
+    #[test]
+    fn cost_ladder_orders_exact_plan_warm_cold() {
+        let names = zoo_names(3);
+        let pool = Arc::new(crate::util::threadpool::ThreadPool::new(2));
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 64 << 20,
+                prefetch_depth: 2,
+                ..StoreConfig::default()
+            },
+            Some(Arc::clone(&pool)),
+        );
+        for a in &toy_shira_zoo(DIM, &names, NNZ, 7) {
+            store.add_shira(a);
+        }
+        // adapter0/adapter1 resident with an adapter0->adapter1 plan;
+        // adapter2 cold.  Plan builds are async: join the pool, then let
+        // the next prefetch call drain the staged build into the cache.
+        store.fetch("adapter0").unwrap();
+        store.fetch("adapter1").unwrap();
+        store.prefetch_transitions("adapter0", &["adapter1".to_string()]);
+        pool.join();
+        store.prefetch_transitions("adapter0", &[]);
+        assert!(store.has_transition_plan("adapter0", "adapter1"));
+        let sel = Selection::single("adapter1");
+        let key = sel.key();
+        assert_eq!(
+            affinity_cost(&view(0, 0, Some(&key), Some("adapter1")), &sel, &key, &store),
+            COST_EXACT
+        );
+        assert_eq!(
+            affinity_cost(&view(1, 0, Some("adapter0@1"), Some("adapter0")), &sel, &key, &store),
+            COST_PLAN
+        );
+        assert_eq!(
+            affinity_cost(&view(2, 0, None, None), &sel, &key, &store),
+            COST_WARM
+        );
+        let cold = Selection::single("adapter2");
+        assert_eq!(
+            affinity_cost(&view(3, 0, None, None), &cold, &cold.key(), &store),
+            COST_COLD
+        );
+        // Base is warm anywhere (no names to fetch), exact on a base
+        // replica.
+        assert_eq!(
+            affinity_cost(&view(4, 0, Some(""), None), &Selection::Base, "", &store),
+            COST_EXACT
+        );
+        assert_eq!(
+            affinity_cost(&view(5, 0, None, None), &Selection::Base, "", &store),
+            COST_WARM
+        );
+        // pick_replica prefers the exact replica over the plan replica
+        // over warm over cold, regardless of ordering in the slice.
+        let views = vec![
+            view(0, 3, None, None),                            // warm
+            view(1, 3, Some("adapter0@1"), Some("adapter0")), // plan
+            view(2, 3, Some(&key), Some("adapter1")),         // exact
+        ];
+        assert_eq!(pick_replica(&views, &sel, &store, 8, false), Some(2));
+        assert_eq!(pick_replica(&views[..2], &sel, &store, 8, false), Some(1));
+        assert_eq!(pick_replica(&views[..1], &sel, &store, 8, false), Some(0));
+        // force_cold collapses the ladder: least-loaded wins.
+        let views = vec![
+            view(0, 5, Some(&key), Some("adapter1")),
+            view(1, 2, None, None),
+        ];
+        assert_eq!(pick_replica(&views, &sel, &store, 8, true), Some(1));
+    }
+
+    #[test]
+    fn prop_scheduler_respects_quarantine_bounds_and_ties() {
+        // Satellite 2: over random replica states the scheduler never
+        // selects a quarantined replica, never exceeds the queue bound,
+        // and breaks ties deterministically (same inputs, same pick;
+        // equal-cost candidates resolve to the lowest (queued, id)).
+        let names = zoo_names(3);
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 64 << 20,
+                prefetch_depth: 0,
+                ..StoreConfig::default()
+            },
+            None,
+        );
+        for a in &toy_shira_zoo(DIM, &names, NNZ, 3) {
+            store.add_shira(a);
+        }
+        store.fetch("adapter0").unwrap();
+        pt::forall(
+            0xF1EE7,
+            60,
+            |r: &mut Rng| {
+                let depth = 1 + r.below(6);
+                let views: Vec<(usize, bool, u8)> = (0..1 + r.below(6))
+                    .map(|_| (r.below(8), r.below(4) == 0, r.below(3) as u8))
+                    .collect();
+                (depth, views, r.below(3))
+            },
+            |&(depth, ref raw, which)| {
+                let views: Vec<ReplicaView> = raw
+                    .iter()
+                    .enumerate()
+                    .map(|(id, &(queued, quarantined, state))| ReplicaView {
+                        id,
+                        queued,
+                        active_key: (state == 1).then(|| "adapter0@1".to_string()),
+                        active_single: (state == 1).then(|| "adapter0".to_string()),
+                        quarantined,
+                    })
+                    .collect();
+                let sel = match which {
+                    0 => Selection::Base,
+                    1 => Selection::single("adapter0"),
+                    _ => Selection::single("adapter2"),
+                };
+                let pick = pick_replica(&views, &sel, &store, depth, false);
+                // Determinism: the same inputs pick the same replica.
+                if pick != pick_replica(&views, &sel, &store, depth, false) {
+                    return false;
+                }
+                match pick {
+                    None => views.iter().all(|v| v.quarantined || v.queued >= depth),
+                    Some(id) => {
+                        let v = &views[id];
+                        if v.quarantined || v.queued >= depth {
+                            return false;
+                        }
+                        // No strictly better candidate was skipped.
+                        let key = sel.key();
+                        let cost = affinity_cost(v, &sel, &key, &store);
+                        views
+                            .iter()
+                            .filter(|w| !w.quarantined && w.queued < depth)
+                            .all(|w| {
+                                (affinity_cost(w, &sel, &key, &store), w.queued, w.id)
+                                    >= (cost, v.queued, v.id)
+                            })
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_run_replays_bit_identically_from_one_seed() {
+        let names = zoo_names(4);
+        let sels = Selection::singles(&names);
+        let trace = fleet_trace(&sels, 120, 4, 0xAB);
+        let run = |schedule_seed: u64| {
+            let mut fleet = small_fleet(3, 5);
+            let report = fleet.run_trace(&trace, schedule_seed).unwrap();
+            let finals: Vec<Option<String>> = fleet
+                .routers()
+                .map(|r| r.active_key().map(str::to_string))
+                .collect();
+            (report, finals)
+        };
+        let (a, fa) = run(0xD5);
+        let (b, fb) = run(0xD5);
+        assert_eq!(a.actions, b.actions);
+        assert_eq!(a.per_replica_served, b.per_replica_served);
+        assert_eq!(a.summary, b.summary);
+        assert_eq!(fa, fb);
+        assert!(a.oracle_failures.is_empty(), "{:?}", a.oracle_failures);
+        assert_eq!(a.served, 120);
+        // A different schedule seed may place work differently but every
+        // request still lands "served" with the oracle green.
+        let (c, _) = run(0xE6);
+        assert_eq!(a.actions, c.actions);
+        assert!(c.oracle_failures.is_empty(), "{:?}", c.oracle_failures);
+    }
+
+    #[test]
+    fn force_cold_changes_placement_only() {
+        // Satellite 2 (second half): force-cold routing may move work
+        // between replicas but never changes per-request results.
+        let names = zoo_names(4);
+        let sels = Selection::singles(&names);
+        let trace = fleet_trace(&sels, 100, 6, 0xCC);
+        let run = |force: bool| {
+            let names = zoo_names(4);
+            let mut fleet = Fleet::builder(toy_base(DIM, 9))
+                .replicas(3)
+                .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, 9))
+                .store_config(StoreConfig {
+                    cache_bytes: 64 << 20,
+                    prefetch_depth: 0,
+                    plan_cache_bytes: 0,
+                    ..StoreConfig::default()
+                })
+                .force_cold(force)
+                .build();
+            let report = fleet.run_trace(&trace, 0x11).unwrap();
+            assert!(report.oracle_failures.is_empty(), "{:?}", report.oracle_failures);
+            report
+        };
+        let warm = run(false);
+        let cold = run(true);
+        assert_eq!(warm.actions, cold.actions, "results must not change");
+        assert_eq!(warm.served, cold.served);
+        // Affinity routing must beat cold routing on switches for a
+        // bursty trace (that is the point of the ladder).
+        assert!(
+            warm.switches <= cold.switches,
+            "affinity {} vs cold {}",
+            warm.switches,
+            cold.switches
+        );
+    }
+
+    #[test]
+    fn admission_control_sheds_to_policy() {
+        let names = zoo_names(4);
+        let sels = Selection::singles(&names);
+        let trace = fleet_trace(&sels, 40, 2, 0x5EED);
+        // Tiny queue, no draining headroom: 1 replica, depth 1.
+        let build = |policy: FailurePolicy| {
+            let names = zoo_names(4);
+            Fleet::builder(toy_base(DIM, 3))
+                .replicas(1)
+                .queue_depth(1)
+                .failure_policy(policy)
+                .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, 3))
+                .store_config(StoreConfig {
+                    cache_bytes: 64 << 20,
+                    prefetch_depth: 0,
+                    plan_cache_bytes: 0,
+                    ..StoreConfig::default()
+                })
+                .build()
+        };
+        // Zero drain steps ever happening is not guaranteed by the rng,
+        // so force the overload deterministically: seed 0 gives some
+        // ingests with no drain in between for a depth-1 queue.
+        let mut fleet = build(FailurePolicy::FailFast);
+        let err = fleet.run_trace(&trace, 0).unwrap_err();
+        match err {
+            ServeError::Overloaded {
+                replicas, queue_depth, ..
+            } => {
+                assert_eq!((replicas, queue_depth), (1, 1));
+            }
+            other => panic!("expected Overloaded, got {other}"),
+        }
+        let mut fleet = build(FailurePolicy::SkipRequest);
+        let report = fleet.run_trace(&trace, 0).unwrap();
+        assert!(report.shed > 0);
+        assert_eq!(report.shed, report.fairness.total_shed());
+        assert_eq!(report.served + report.skipped, 40);
+        assert!(report
+            .outcomes
+            .iter()
+            .all(|o| o.action == "shed-skipped" && o.replica.is_none()));
+        assert!(report.oracle_failures.is_empty(), "{:?}", report.oracle_failures);
+    }
+
+    #[test]
+    fn concurrent_mode_serves_everything_with_green_oracle() {
+        let names = zoo_names(4);
+        let sels = Selection::singles(&names);
+        let trace = fleet_trace(&sels, 80, 4, 0xC0);
+        let mut fleet = Fleet::builder(toy_base(DIM, 11))
+            .replicas(2)
+            .queue_depth(128)
+            .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, 11))
+            .store_config(StoreConfig {
+                cache_bytes: 64 << 20,
+                prefetch_depth: 0,
+                plan_cache_bytes: 0,
+                ..StoreConfig::default()
+            })
+            .build();
+        let report = fleet.run_trace_concurrent(&trace).unwrap();
+        assert_eq!(report.served, 80);
+        assert!(report.oracle_failures.is_empty(), "{:?}", report.oracle_failures);
+        assert!(report.actions.values().all(|&a| a == "served"));
+        // Fleet-wide pin audit: after revert_all nothing stays pinned.
+        fleet.revert_all();
+        let store = fleet.store();
+        let guard = store.lock().unwrap();
+        assert_eq!(guard.pinned_count(), 0);
+        assert_eq!(guard.pinned_plan_count(), 0);
+    }
+
+    #[test]
+    fn builder_clamps_and_defaults() {
+        let fleet = Fleet::builder(toy_base(DIM, 1))
+            .replicas(0)
+            .queue_depth(0)
+            .build();
+        assert_eq!(fleet.replica_count(), 1);
+        assert_eq!(fleet.queue_depth, 1);
+        let fleet = Fleet::builder(toy_base(DIM, 1)).build();
+        assert_eq!(fleet.replica_count(), 2);
+        assert_eq!(fleet.queue_depth, 16);
+        assert!(fleet.oracle);
+    }
+}

@@ -1,12 +1,131 @@
 //! Serving metrics: stage timers, switch counters, per-kind selection
-//! counters, latency distributions, and the adapter-store lifecycle
-//! counters (cache, prefetch, residency).
+//! counters, latency distributions, the adapter-store lifecycle counters
+//! (cache, prefetch, residency), and the fleet's per-selection
+//! fairness/SLO ledger.
+
+use std::collections::BTreeMap;
 
 use super::selection::SelectionKind;
 use super::store::StoreStats;
 use super::switch::SwitchPath;
 use crate::util::alloc::fmt_bytes;
 use crate::util::stats::{LatencyHist, Moments, Sample};
+
+/// Per-selection fairness counters: how one canonical selection key
+/// fared under fleet scheduling (queueing waits, SLO violations, sheds).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SelectionFairness {
+    /// Requests of this selection that were served.
+    pub requests: u64,
+    /// Requests of this selection shed by admission control.
+    pub shed: u64,
+    /// Sum of queueing waits (arrival → service start), microseconds.
+    pub total_wait_us: u64,
+    /// Largest single queueing wait, microseconds.
+    pub max_wait_us: u64,
+    /// Served requests whose wait exceeded the ledger's SLO.
+    pub slo_violations: u64,
+}
+
+impl SelectionFairness {
+    /// Mean queueing wait of served requests, microseconds.
+    pub fn mean_wait_us(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.total_wait_us as f64 / self.requests as f64
+        }
+    }
+}
+
+/// Per-selection fairness/SLO accounting for a fleet run (DESIGN.md
+/// §14.4): one [`SelectionFairness`] row per canonical selection key, in
+/// deterministic (sorted) order.  An SLO of 0 disables violation
+/// counting (every wait is within a zero-SLO only when it is zero, so 0
+/// means "not configured", not "impossible").
+#[derive(Clone, Debug, Default)]
+pub struct FairnessLedger {
+    slo_us: u64,
+    rows: BTreeMap<String, SelectionFairness>,
+}
+
+impl FairnessLedger {
+    /// Ledger with a queueing-wait SLO of `slo_us` microseconds (0
+    /// disables violation counting).
+    pub fn new(slo_us: u64) -> Self {
+        FairnessLedger {
+            slo_us,
+            rows: BTreeMap::new(),
+        }
+    }
+
+    /// The configured queueing-wait SLO, microseconds.
+    pub fn slo_us(&self) -> u64 {
+        self.slo_us
+    }
+
+    /// Record one served request of selection `key` that waited
+    /// `wait_us` between arrival and service start.
+    pub fn record_wait(&mut self, key: &str, wait_us: u64) {
+        let row = self.rows.entry(key.to_string()).or_default();
+        row.requests += 1;
+        row.total_wait_us += wait_us;
+        row.max_wait_us = row.max_wait_us.max(wait_us);
+        if self.slo_us > 0 && wait_us > self.slo_us {
+            row.slo_violations += 1;
+        }
+    }
+
+    /// Record one request of selection `key` shed by admission control.
+    pub fn record_shed(&mut self, key: &str) {
+        self.rows.entry(key.to_string()).or_default().shed += 1;
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Rows in sorted selection-key order (deterministic across runs).
+    pub fn rows(&self) -> impl Iterator<Item = (&str, &SelectionFairness)> {
+        self.rows.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Sum of SLO violations across all selections.
+    pub fn total_violations(&self) -> u64 {
+        self.rows.values().map(|r| r.slo_violations).sum()
+    }
+
+    /// Sum of sheds across all selections.
+    pub fn total_shed(&self) -> u64 {
+        self.rows.values().map(|r| r.shed).sum()
+    }
+
+    /// Largest queueing wait any selection saw, microseconds.
+    pub fn max_wait_us(&self) -> u64 {
+        self.rows.values().map(|r| r.max_wait_us).max().unwrap_or(0)
+    }
+
+    /// One summary line per selection (key, served, mean/max wait, SLO
+    /// violations, sheds), sorted by key.
+    pub fn summary_lines(&self) -> String {
+        let mut out = String::new();
+        for (key, r) in self.rows() {
+            let shown = if key.is_empty() { "<base>" } else { key };
+            out.push_str(&format!(
+                "fairness[{shown}]: served={} wait mean={:.1}us max={}us \
+                 slo_violations={} shed={}\n",
+                r.requests,
+                r.mean_wait_us(),
+                r.max_wait_us,
+                r.slo_violations,
+                r.shed
+            ));
+        }
+        out.pop(); // trailing newline
+        out
+    }
+}
 
 /// Accumulating counters and distributions for one serving run.
 #[derive(Debug, Default)]
@@ -55,6 +174,9 @@ pub struct ServeMetrics {
     /// Adapter-store lifecycle counters (set once at end of run via
     /// [`Self::set_store`]; includes retry/quarantine counts).
     pub store: StoreStats,
+    /// Per-selection fairness/SLO ledger (fleet runs; empty — and absent
+    /// from the summary — for single-server runs).
+    pub fairness: FairnessLedger,
 }
 
 impl ServeMetrics {
@@ -130,10 +252,16 @@ impl ServeMetrics {
         }
     }
 
+    /// Record one served request's queueing wait into the fairness
+    /// ledger (fleet runs; see [`FairnessLedger::record_wait`]).
+    pub fn record_wait(&mut self, key: &str, wait_us: u64) {
+        self.fairness.record_wait(key, wait_us);
+    }
+
     /// Multi-line human-readable summary of the run so far.
     pub fn summary(&mut self, wall_secs: f64) -> String {
         let thr = self.requests as f64 / wall_secs.max(1e-9);
-        format!(
+        let mut s = format!(
             "requests={} batches={} switches={} fill={:.2}\n\
              selections: base={} single={} set={}\n\
              switch: mean={:.1}us p50={:.1}us | exec: mean={:.1}us\n\
@@ -186,7 +314,12 @@ impl ServeMetrics {
             self.degraded,
             self.skipped,
             thr
-        )
+        );
+        if !self.fairness.is_empty() {
+            s.push('\n');
+            s.push_str(&self.fairness.summary_lines());
+        }
+        s
     }
 }
 
@@ -286,6 +419,45 @@ mod tests {
             s.contains("paths: transition=2 fallback=1 fused=1 plan_mismatch=5"),
             "{s}"
         );
+    }
+
+    #[test]
+    fn fairness_ledger_accumulates_and_surfaces() {
+        let mut m = ServeMetrics::new();
+        m.fairness = FairnessLedger::new(100);
+        m.record_wait("a@1", 40);
+        m.record_wait("a@1", 160); // violation
+        m.record_wait("b@1", 90);
+        m.fairness.record_shed("b@1");
+        m.record_wait("", 10); // base key renders as <base>
+        let a = m.fairness.rows().find(|(k, _)| *k == "a@1").unwrap().1;
+        assert_eq!(a.requests, 2);
+        assert_eq!(a.max_wait_us, 160);
+        assert_eq!(a.slo_violations, 1);
+        assert!((a.mean_wait_us() - 100.0).abs() < 1e-9);
+        assert_eq!(m.fairness.total_violations(), 1);
+        assert_eq!(m.fairness.total_shed(), 1);
+        assert_eq!(m.fairness.max_wait_us(), 160);
+        m.record_batch(4, false, 0.0, 100.0);
+        let s = m.summary(1.0);
+        assert!(s.contains("fairness[a@1]: served=2"), "{s}");
+        assert!(s.contains("slo_violations=1"), "{s}");
+        assert!(s.contains("fairness[<base>]"), "{s}");
+        assert!(s.contains("shed=1"), "{s}");
+    }
+
+    #[test]
+    fn fairness_rows_sorted_and_zero_slo_disables_violations() {
+        let mut l = FairnessLedger::new(0);
+        l.record_wait("z", 1_000_000);
+        l.record_wait("a", 5);
+        assert_eq!(l.total_violations(), 0, "slo 0 = not configured");
+        let keys: Vec<&str> = l.rows().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["a", "z"], "deterministic sorted order");
+        // Empty ledger stays out of the serve summary entirely.
+        let mut m = ServeMetrics::new();
+        m.record_batch(1, false, 0.0, 10.0);
+        assert!(!m.summary(1.0).contains("fairness["));
     }
 
     #[test]

@@ -12,13 +12,17 @@
 //!   per-request [`engine::Router`];
 //! * [`server`] — [`server::ServerBuilder`] / [`server::Server`];
 //! * [`fault`] — deterministic fault injection ([`fault::FaultPlan`])
-//!   for chaos-testing every recovery path.
+//!   for chaos-testing every recovery path;
+//! * [`fleet`] — N-replica fleet serving (DESIGN.md §14): affinity
+//!   routing over a shared store, admission control, and the seeded
+//!   determinism harness with its bit-identity oracle.
 
 pub mod batcher;
 pub mod cache;
 pub mod engine;
 pub mod error;
 pub mod fault;
+pub mod fleet;
 pub mod fusion;
 pub mod fusion_engine;
 pub mod metrics;

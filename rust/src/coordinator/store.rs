@@ -534,14 +534,56 @@ impl AdapterStore {
         self.quarantine_active(name)
     }
 
+    /// True when `name` is decoded and resident in the cache, without
+    /// touching recency or counters — the warm-cache rung of the fleet's
+    /// affinity cost ladder (`coordinator::fleet`).
+    pub fn is_resident(&self, name: &str) -> bool {
+        self.cache.peek(name).is_some()
+    }
+
+    /// A fault-free serial fork of this store for a bit-identity oracle:
+    /// it shares the same `Arc`'d flash bytes (no copy of the encoded
+    /// adapters) but starts with a fresh decode/plan cache, no pool, no
+    /// prefetch, no fault injector, and default retry/quarantine
+    /// tunables.  Serving a selection through a router backed by the
+    /// fork yields the fault-free reference bytes the fleet's replicas
+    /// are checked against.
+    pub fn fork_reference(&self) -> AdapterStore {
+        let mut fork = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: self.cache.capacity_bytes(),
+                format: self.format,
+                prefetch_depth: 0,
+                plan_cache_bytes: 0,
+                ..StoreConfig::default()
+            },
+            None,
+        );
+        for (name, bytes) in &self.flash {
+            fork.flash.insert(name.clone(), Arc::clone(bytes));
+        }
+        fork
+    }
+
     /// Submit background decode jobs for up to `prefetch_depth` of
     /// `names` (skipping resident, already-staged and unknown names).
     /// No-op without a pool.  Results are picked up by later fetches.
+    ///
+    /// The depth bounds *submissions*, not names examined: skipped names
+    /// (already resident, already staged by this or another replica
+    /// sharing the store, quarantined, unknown) do not consume the
+    /// budget, so a lookahead whose head is warm still prefetches the
+    /// cold tail — and N fleet replicas prefetching overlapping
+    /// lookaheads submit one decode per adapter, not N.
     pub fn prefetch(&mut self, names: &[String]) {
         let Some(pool) = self.pool.clone() else {
             return;
         };
-        for name in names.iter().take(self.prefetch_depth) {
+        let mut submitted = 0usize;
+        for name in names {
+            if submitted == self.prefetch_depth {
+                break;
+            }
             if self.cache.peek(name).is_some() {
                 continue;
             }
@@ -560,6 +602,7 @@ impl AdapterStore {
                 slots.insert(name.clone(), Staged::Pending);
             }
             self.prefetch_issued += 1;
+            submitted += 1;
             let shared = Arc::clone(&self.staging);
             let plan_threads = self.plan_threads;
             let job_name = name.clone();
@@ -644,7 +687,14 @@ impl AdapterStore {
         let AnyAdapter::Shira(from_arc) = &from_handle.adapter else {
             return;
         };
-        for to in tos.iter().take(self.prefetch_depth) {
+        // Like decode prefetch: the depth bounds build *submissions*;
+        // self-pairs, resident plans, staged builds and tombstones do not
+        // consume the budget.
+        let mut submitted = 0usize;
+        for to in tos {
+            if submitted == self.prefetch_depth {
+                break;
+            }
             if to == from {
                 continue;
             }
@@ -666,6 +716,7 @@ impl AdapterStore {
                 slots.insert(key.clone(), PlanStaged::Pending);
             }
             self.plan_builds += 1;
+            submitted += 1;
             let shared = Arc::clone(&self.plan_staging);
             let plan_threads = self.plan_threads;
             let a = Arc::clone(from_arc);
@@ -1239,5 +1290,108 @@ mod tests {
         assert_eq!(h.adapter.name(), "a");
         assert!(!store.is_quarantined("a"));
         assert_eq!(store.stats().quarantines, 1);
+    }
+
+    #[test]
+    fn prefetch_depth_bounds_submissions_not_names() {
+        // Regression (fleet satellite): resident/staged names at the head
+        // of the lookahead used to consume the depth budget, so a warm
+        // head starved the cold tail of any prefetch at all.
+        let mut rng = Rng::new(30);
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 1 << 20,
+                prefetch_depth: 2,
+                ..StoreConfig::default()
+            },
+            Some(pool),
+        );
+        for name in ["warm0", "warm1", "cold0", "cold1", "cold2"] {
+            store.add_shira(&shira(&mut rng, name, 16, 10));
+        }
+        store.fetch("warm0").unwrap();
+        store.fetch("warm1").unwrap();
+        let names: Vec<String> = ["warm0", "warm1", "cold0", "cold1", "cold2"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        store.prefetch(&names);
+        // Two submissions land on the cold tail; the third cold name is
+        // beyond the depth and the warm head burned nothing.
+        assert_eq!(store.stats().prefetch_issued, 2);
+        store.fetch("cold0").unwrap();
+        store.fetch("cold1").unwrap();
+        assert_eq!(store.stats().prefetch_hits, 2);
+        // Re-prefetching the same list re-submits nothing for the now
+        // resident names but still has budget for the last cold one.
+        store.prefetch(&names);
+        assert_eq!(store.stats().prefetch_issued, 3);
+        store.fetch("cold2").unwrap();
+        assert_eq!(store.stats().prefetch_hits, 3);
+    }
+
+    #[test]
+    fn shared_store_decodes_each_adapter_once_across_replicas() {
+        // Fleet dedupe regression: N replicas sharing one AdapterStore
+        // behind a Mutex must decode each adapter once fleet-wide — the
+        // staging table dedupes overlapping prefetch lookaheads and the
+        // cache serves every later fetch.
+        let mut rng = Rng::new(31);
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 1 << 20,
+                prefetch_depth: 4,
+                ..StoreConfig::default()
+            },
+            Some(pool),
+        );
+        let names: Vec<String> = (0..4).map(|i| format!("ad{i}")).collect();
+        for n in &names {
+            store.add_shira(&shira(&mut rng, n, 16, 10));
+        }
+        let shared = Arc::new(Mutex::new(store));
+        let n_replicas = 8;
+        std::thread::scope(|s| {
+            for _ in 0..n_replicas {
+                let shared = Arc::clone(&shared);
+                let names = names.clone();
+                s.spawn(move || {
+                    // Every replica prefetches the same lookahead, then
+                    // fetches every adapter — the concurrent-fetch shape
+                    // of a fleet serving one hot selection mix.
+                    shared.lock().unwrap().prefetch(&names);
+                    for n in &names {
+                        shared.lock().unwrap().fetch(n).unwrap();
+                    }
+                });
+            }
+        });
+        let store = shared.lock().unwrap();
+        let stats = store.stats();
+        // One decode per adapter fleet-wide: every background submission
+        // is deduped by the staging table (at most one per name), and no
+        // inline fetch re-decoded a staged or resident adapter.
+        assert!(
+            stats.prefetch_issued <= names.len() as u64,
+            "staging dedupe failed: {} decode submissions for {} adapters",
+            stats.prefetch_issued,
+            names.len()
+        );
+        // Total decodes = prefetch submissions + inline decodes.  Inline
+        // decodes happen only when a fetch misses both cache and staging:
+        // misses counts those *plus* staged pickups, so subtract them.
+        let inline_decodes = stats.misses - stats.prefetch_hits;
+        assert_eq!(
+            stats.prefetch_issued + inline_decodes,
+            names.len() as u64,
+            "each adapter decoded exactly once (stats: {stats:?})"
+        );
+        assert_eq!(
+            stats.hits + stats.misses,
+            (n_replicas * names.len()) as u64,
+            "every fetch accounted for"
+        );
     }
 }

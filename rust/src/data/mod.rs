@@ -1,6 +1,8 @@
 //! Synthetic workloads: commonsense-proxy tasks (S11), style-transfer proxy
-//! (S12), and serving request traces.
+//! (S12), serving request traces, and the seeded zoo/trace synthesis
+//! shared by the CLI, benches and tests.
 
 pub mod style;
+pub mod synth;
 pub mod tasks;
 pub mod trace;

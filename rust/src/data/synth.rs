@@ -1,0 +1,181 @@
+//! Seeded synthetic workload construction shared by the CLI (`shira
+//! serve`), the serving/fleet benches, and the fleet/chaos tests — one
+//! implementation so every consumer replays the *identical* adapters and
+//! trace from one seed instead of each re-rolling its own zoo inline.
+//!
+//! Two zoo flavors:
+//!
+//! * **Manifest-backed** ([`synth_shira_adapter`] / [`synth_lora_adapter`]):
+//!   adapters shaped by a model's [`ModelMeta`] segments, for serving
+//!   against real PJRT artifacts.
+//! * **Toy** ([`toy_base`] / [`toy_shira_zoo`]): square `wq`/`wk`
+//!   tensors of a given dim, artifact-free — what the fleet determinism
+//!   harness, the fleet bench gate, and the chaos tests drive in CI.
+//!
+//! Adapter content depends only on `(seed, name)` — each adapter draws
+//! from its own named [`Rng`] stream — so adding or reordering zoo
+//! members never perturbs the others.
+
+use crate::adapter::sparse::SparseDelta;
+use crate::adapter::{LoraAdapter, LoraTensor, ShiraAdapter};
+use crate::coordinator::selection::Selection;
+use crate::data::trace::{generate_trace, Request, TracePattern};
+use crate::model::tensor::Tensor2;
+use crate::model::weights::WeightStore;
+use crate::runtime::manifest::ModelMeta;
+use crate::util::rng::Rng;
+
+/// User-population size of the canonical fleet trace ([`fleet_trace`]) —
+/// the "10k concurrent users" regime the affinity scheduler targets.
+pub const FLEET_TRACE_USERS: usize = 10_000;
+
+/// Names `adapter0..adapterN-1` — the zoo naming every consumer shares.
+pub fn adapter_names(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("adapter{i}")).collect()
+}
+
+/// Per-adapter RNG: one named stream per `(seed, name)` pair.
+fn adapter_rng(seed: u64, name: &str) -> Rng {
+    Rng::new(seed).stream(&format!("synth/{name}"))
+}
+
+/// One synthetic SHiRA adapter shaped by `meta`'s SHiRA segments: `k`
+/// random sparse entries per target, N(0, 0.01) values.
+pub fn synth_shira_adapter(meta: &ModelMeta, name: &str, seed: u64) -> ShiraAdapter {
+    let mut rng = adapter_rng(seed, name);
+    let tensors = meta
+        .shira
+        .iter()
+        .map(|seg| {
+            let idx = rng.sample_indices(seg.numel(), seg.k);
+            let mut d = vec![0.0f32; seg.k];
+            rng.fill_normal(&mut d, 0.0, 0.01);
+            (
+                seg.name.clone(),
+                SparseDelta::new(seg.shape.0, seg.shape.1, idx, d),
+            )
+        })
+        .collect();
+    ShiraAdapter {
+        name: name.to_string(),
+        strategy: "rand".into(),
+        tensors,
+    }
+}
+
+/// One synthetic LoRA adapter shaped by `meta`'s LoRA segments: rank-r
+/// factors with N(0, 0.01) entries at `scale` (the manifest's
+/// `lora_scale`).
+pub fn synth_lora_adapter(meta: &ModelMeta, name: &str, scale: f32, seed: u64) -> LoraAdapter {
+    let mut rng = adapter_rng(seed, name);
+    let tensors = meta
+        .lora
+        .iter()
+        .map(|seg| {
+            let mut a = Tensor2::zeros(seg.shape.0, seg.rank);
+            let mut b = Tensor2::zeros(seg.rank, seg.shape.1);
+            rng.fill_normal(&mut a.data, 0.0, 0.01);
+            rng.fill_normal(&mut b.data, 0.0, 0.01);
+            LoraTensor {
+                target: seg.name.clone(),
+                a,
+                b,
+            }
+        })
+        .collect();
+    LoraAdapter {
+        name: name.to_string(),
+        scale,
+        tensors,
+    }
+}
+
+/// Artifact-free base weights: square `wq`/`wk` tensors of `dim`.
+pub fn toy_base(dim: usize, seed: u64) -> WeightStore {
+    WeightStore::init(
+        &[("wq".into(), vec![dim, dim]), ("wk".into(), vec![dim, dim])],
+        seed,
+    )
+}
+
+/// Artifact-free SHiRA zoo over [`toy_base`]'s targets: `nnz` sparse
+/// entries per target with N(0, 0.5) values — visible deviations, so
+/// bit-identity checks catch any torn byte.
+pub fn toy_shira_zoo(dim: usize, names: &[String], nnz: usize, seed: u64) -> Vec<ShiraAdapter> {
+    names
+        .iter()
+        .map(|name| {
+            let mut rng = adapter_rng(seed, name);
+            let mut mk = |rng: &mut Rng| {
+                let idx = rng.sample_indices(dim * dim, nnz);
+                let mut d = vec![0.0; nnz];
+                rng.fill_normal(&mut d, 0.0, 0.5);
+                SparseDelta::new(dim, dim, idx, d)
+            };
+            ShiraAdapter {
+                name: name.clone(),
+                strategy: "rand".into(),
+                tensors: vec![("wq".into(), mk(&mut rng)), ("wk".into(), mk(&mut rng))],
+            }
+        })
+        .collect()
+}
+
+/// The canonical bursty 10k-user Zipf trace
+/// ([`TracePattern::ZipfUsers`], [`FLEET_TRACE_USERS`] users, 10k req/s)
+/// over `selections` — the ONE trace constructor the fleet tests, the
+/// `bench_serving` fleet scenario, and `shira serve --pattern zipf` all
+/// call, so a seed printed by any of them replays bit-identically in the
+/// others.
+pub fn fleet_trace(
+    selections: &[Selection],
+    n: usize,
+    burst: usize,
+    seed: u64,
+) -> Vec<Request> {
+    generate_trace(
+        selections,
+        n,
+        TracePattern::ZipfUsers {
+            users: FLEET_TRACE_USERS,
+            burst,
+        },
+        1e4,
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_content_depends_only_on_seed_and_name() {
+        let names = adapter_names(3);
+        let a = toy_shira_zoo(32, &names, 50, 7);
+        // Same (seed, name) → same adapter, regardless of zoo shape.
+        let solo = toy_shira_zoo(32, &names[1..2], 50, 7);
+        assert_eq!(a[1], solo[0]);
+        // Different seed → different content.
+        let b = toy_shira_zoo(32, &names, 50, 8);
+        assert_ne!(a[0], b[0]);
+    }
+
+    #[test]
+    fn fleet_trace_replays_from_one_seed() {
+        let sels = Selection::singles(&adapter_names(4));
+        let t1 = fleet_trace(&sels, 200, 4, 0xABCD);
+        let t2 = fleet_trace(&sels, 200, 4, 0xABCD);
+        assert_eq!(t1.len(), t2.len());
+        for (x, y) in t1.iter().zip(t2.iter()) {
+            assert_eq!(x.selection, y.selection);
+            assert_eq!(x.arrival_us, y.arrival_us);
+            assert_eq!(x.payload_seed, y.payload_seed);
+        }
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(adapter_names(2), vec!["adapter0", "adapter1"]);
+    }
+}

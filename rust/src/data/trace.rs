@@ -34,6 +34,48 @@ pub enum TracePattern {
     /// Strict rotation through selections — adversarial for affinity
     /// scheduling, maximal switch count.
     RoundRobin,
+    /// Bursty traffic from a large Zipf-popularity user population: each
+    /// new burst belongs to one of `users` users drawn with probability
+    /// ∝ 1/rankᔆ (s = [`ZIPF_EXPONENT`]), and every user maps to a fixed
+    /// selection by a stable hash — the 10k-user serving regime the
+    /// fleet scheduler targets.  A handful of head users dominate, so
+    /// affinity routing has real structure to exploit while the long
+    /// tail keeps cold switches coming.
+    ZipfUsers {
+        /// Distinct users (popularity ranks 1..=users).
+        users: usize,
+        /// Mean run length of one user's burst (runs are 1..2·burst).
+        burst: usize,
+    },
+}
+
+/// Zipf popularity exponent of [`TracePattern::ZipfUsers`].  Fixed (not a
+/// field) so the pattern stays `Copy + Eq`; 1.1 is the classic web/cache
+/// workload shape — a heavy head with a fat tail.
+pub const ZIPF_EXPONENT: f64 = 1.1;
+
+/// Cumulative Zipf distribution over ranks 1..=users (last entry 1.0).
+fn zipf_cdf(users: usize) -> Vec<f64> {
+    let mut cdf: Vec<f64> = Vec::with_capacity(users);
+    let mut acc = 0.0f64;
+    for rank in 1..=users {
+        acc += 1.0 / (rank as f64).powf(ZIPF_EXPONENT);
+        cdf.push(acc);
+    }
+    for c in &mut cdf {
+        *c /= acc;
+    }
+    cdf
+}
+
+/// Stable 64-bit mix (splitmix64 finalizer) — maps a user id to its
+/// fixed selection independent of trace length or seed.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
 }
 
 /// Generate a trace of `n` requests over `selections` with Poisson-ish
@@ -69,6 +111,10 @@ pub fn generate_trace(
     let mean_gap_us = 1e6 / rate_per_sec;
     let mut current = 0usize;
     let mut run_left = 0usize;
+    let cdf: Vec<f64> = match pattern {
+        TracePattern::ZipfUsers { users, .. } => zipf_cdf(users.max(1)),
+        _ => Vec::new(),
+    };
     for id in 0..n {
         let a = match pattern {
             TracePattern::UniformMix => rng.below(selections.len()),
@@ -77,6 +123,18 @@ pub fn generate_trace(
                 if run_left == 0 {
                     current = rng.below(selections.len());
                     run_left = 1 + rng.below(2 * burst);
+                }
+                run_left -= 1;
+                current
+            }
+            TracePattern::ZipfUsers { burst, .. } => {
+                if run_left == 0 {
+                    // Draw a user by popularity rank, then map it to its
+                    // fixed selection by a stable hash of the user id.
+                    let u = rng.uniform();
+                    let user = cdf.partition_point(|&c| c < u);
+                    current = (mix64(user as u64 + 1) % selections.len() as u64) as usize;
+                    run_left = 1 + rng.below(2 * burst.max(1));
                 }
                 run_left -= 1;
                 current
@@ -193,6 +251,57 @@ mod tests {
             seen.insert(r.selection.key());
         }
         assert_eq!(seen.len(), 5);
+    }
+
+    #[test]
+    fn zipf_users_is_deterministic_and_head_heavy() {
+        let sels = singles(8);
+        let pat = TracePattern::ZipfUsers { users: 10_000, burst: 4 };
+        let a = generate_trace(&sels, 500, pat, 1e4, 0xF1EE7);
+        let b = generate_trace(&sels, 500, pat, 1e4, 0xF1EE7);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.selection, y.selection);
+            assert_eq!(x.arrival_us, y.arrival_us);
+            assert_eq!(x.payload_seed, y.payload_seed);
+        }
+        // Zipf head: the most popular selection dominates a uniform share.
+        let mut counts = std::collections::HashMap::new();
+        for r in &a {
+            *counts.entry(r.selection.key()).or_insert(0usize) += 1;
+        }
+        let top = counts.values().copied().max().unwrap();
+        assert!(
+            top * sels.len() > 2 * a.len(),
+            "head selection {top}/{} not dominant over uniform share",
+            a.len()
+        );
+        // ...but the tail still shows up: several distinct selections.
+        assert!(counts.len() >= 3, "only {} selections seen", counts.len());
+    }
+
+    #[test]
+    fn zipf_users_bursts_reduce_switches() {
+        let sels = singles(8);
+        let bursty = generate_trace(
+            &sels,
+            400,
+            TracePattern::ZipfUsers { users: 10_000, burst: 16 },
+            1e4,
+            11,
+        );
+        let choppy = generate_trace(
+            &sels,
+            400,
+            TracePattern::ZipfUsers { users: 10_000, burst: 1 },
+            1e4,
+            11,
+        );
+        assert!(
+            switch_count(&bursty) < switch_count(&choppy),
+            "bursty {} vs choppy {}",
+            switch_count(&bursty),
+            switch_count(&choppy)
+        );
     }
 
     #[test]

@@ -19,10 +19,15 @@ use shira::config::RunConfig;
 #[allow(deprecated)]
 use shira::coordinator::switch::Policy;
 use shira::coordinator::switch::SwitchEngine;
+use shira::coordinator::fleet::Fleet;
 use shira::coordinator::selection::Selection;
-use shira::coordinator::server::Server;
+use shira::coordinator::server::{FailurePolicy, Server};
 use shira::coordinator::store::StoreConfig;
 use shira::util::threadpool::ThreadPool;
+use shira::data::synth::{
+    adapter_names, fleet_trace, synth_lora_adapter, synth_shira_adapter, toy_base,
+    toy_shira_zoo, FLEET_TRACE_USERS,
+};
 use shira::data::tasks::{Task, ALL_TASKS};
 use shira::data::trace::{
     generate_trace, mixed_selections, rotating_sets, switch_count, TracePattern,
@@ -50,9 +55,12 @@ USAGE: shira <subcommand> [flags]
   train --kind <lora|dora|shira-{struct,rand,wm,grad,snip}|shira-wm-dora>
         [--task <name>|mixture] [--steps N] [--out adapter.bin]
   eval  --adapter <file> [--tasks all|t1,t2] [--eval-examples N]
-  serve [--pattern bursty|uniform|rr] [--trace-len N] [--adapters N]
+  serve [--pattern bursty|uniform|rr|zipf] [--trace-len N] [--adapters N]
         [--cache-bytes N] [--prefetch-depth N] [--format v1|v2|v2-f16]
         [--plan-cache-bytes N]   (0 disables direct A->B transitions)
+        [--replicas N] [--queue-depth N] [--burst N] [--concurrent]
+        (--replicas selects the artifact-free N-replica fleet over the
+        seeded 10k-user zipf trace; otherwise one server, one replica)
         [--policy <shira|fusion|lora-fuse|unfused>]  (DEPRECATED alias:
         default serves one mixed trace of base/single/set selections)
   fuse  --out <file> <a.shira> <b.shira> ...
@@ -256,9 +264,63 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --replicas N`: the artifact-free fleet path (DESIGN.md §14).
+/// Toy base weights and the seeded synth zoo — the same construction
+/// the fleet tests and the bench gate replay — so it runs anywhere.
+fn cmd_serve_fleet(args: &Args, cfg: &RunConfig) -> Result<()> {
+    const DIM: usize = 64;
+    const NNZ: usize = 400;
+    let replicas = args.get_usize("replicas", 2)?;
+    let queue_depth = args.get_usize("queue-depth", 16)?;
+    let n_adapters = args.get_usize("adapters", 4)?;
+    let burst = args.get_usize("burst", 8)?;
+    let default_cfg = StoreConfig::default();
+    let names = adapter_names(n_adapters);
+    let mut fleet = Fleet::builder(toy_base(DIM, cfg.seed))
+        .replicas(replicas)
+        .queue_depth(queue_depth)
+        .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, cfg.seed))
+        .store_config(StoreConfig {
+            cache_bytes: cfg.cache_bytes,
+            prefetch_depth: args.get_usize("prefetch-depth", default_cfg.prefetch_depth)?,
+            plan_cache_bytes: args
+                .get_usize("plan-cache-bytes", default_cfg.plan_cache_bytes)?,
+            ..default_cfg
+        })
+        .pool(Arc::new(ThreadPool::host_sized()))
+        .failure_policy(FailurePolicy::DegradeToBase)
+        .build();
+    let sels = mixed_selections(&names);
+    let trace = fleet_trace(&sels, cfg.trace_len, burst, cfg.seed);
+    println!(
+        "fleet: {replicas} replicas, queue depth {queue_depth}, {} adapters, \
+         {} requests (zipf {FLEET_TRACE_USERS} users, burst {burst}, seed {}) \
+         mode={}",
+        n_adapters,
+        trace.len(),
+        cfg.seed,
+        if args.has("concurrent") {
+            "concurrent"
+        } else {
+            "deterministic"
+        },
+    );
+    let report = if args.has("concurrent") {
+        fleet.run_trace_concurrent(&trace)?
+    } else {
+        fleet.run_trace(&trace, cfg.seed)?
+    };
+    println!("{}", report.summary);
+    Ok(())
+}
+
 #[allow(deprecated)]
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args).map_err(|e| anyhow!(e))?;
+    // The fleet path is runtime-free: no artifacts needed.
+    if args.has("replicas") {
+        return cmd_serve_fleet(args, &cfg);
+    }
     let rt = Runtime::with_default_artifacts()?;
     // --policy survives only as a deprecated alias: it maps onto default
     // per-request selections.  Without it the trace mixes base, single
@@ -281,6 +343,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "bursty" => TracePattern::Bursty { burst: 8 },
         "uniform" => TracePattern::UniformMix,
         "rr" => TracePattern::RoundRobin,
+        "zipf" => TracePattern::ZipfUsers {
+            users: FLEET_TRACE_USERS,
+            burst: args.get_usize("burst", 8)?,
+        },
         p => return Err(anyhow!("unknown pattern {p}")),
     };
     let n_adapters = args.get_usize("adapters", 4)?;
@@ -307,57 +373,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .unfused_lora(matches!(policy, Some(Policy::LoraUnfused)))
         .build()?;
 
-    // synthesize adapters: LoRA for the LoRA policy aliases, SHiRA
+    // Seeded synth zoo shared with the serving bench and the fleet
+    // tests (data::synth): LoRA for the LoRA policy aliases, SHiRA
     // otherwise (the mixed default exercises scatter + fused sets).
     let lora_zoo = matches!(policy, Some(Policy::LoraFuse | Policy::LoraUnfused));
-    let mut rng = Rng::new(cfg.seed);
-    let names: Vec<String> = (0..n_adapters).map(|i| format!("adapter{i}")).collect();
+    let names = adapter_names(n_adapters);
     for name in &names {
         if lora_zoo {
-            let tensors = meta
-                .lora
-                .iter()
-                .map(|seg| {
-                    let mut a = shira::model::tensor::Tensor2::zeros(seg.shape.0, seg.rank);
-                    let mut b = shira::model::tensor::Tensor2::zeros(seg.rank, seg.shape.1);
-                    rng.fill_normal(&mut a.data, 0.0, 0.01);
-                    rng.fill_normal(&mut b.data, 0.0, 0.01);
-                    shira::adapter::LoraTensor {
-                        target: seg.name.clone(),
-                        a,
-                        b,
-                    }
-                })
-                .collect();
-            server.store.add_lora(&shira::adapter::LoraAdapter {
-                name: name.clone(),
-                scale: rt.manifest.adapter.lora_scale as f32,
-                tensors,
-            });
+            server.store.add_lora(&synth_lora_adapter(
+                meta,
+                name,
+                rt.manifest.adapter.lora_scale as f32,
+                cfg.seed,
+            ));
         } else {
-            let tensors = meta
-                .shira
-                .iter()
-                .map(|seg| {
-                    let idx = rng.sample_indices(seg.numel(), seg.k);
-                    let mut d = vec![0.0f32; seg.k];
-                    rng.fill_normal(&mut d, 0.0, 0.01);
-                    (
-                        seg.name.clone(),
-                        shira::adapter::sparse::SparseDelta::new(
-                            seg.shape.0,
-                            seg.shape.1,
-                            idx,
-                            d,
-                        ),
-                    )
-                })
-                .collect();
-            server.store.add_shira(&shira::adapter::ShiraAdapter {
-                name: name.clone(),
-                strategy: "rand".into(),
-                tensors,
-            });
+            server
+                .store
+                .add_shira(&synth_shira_adapter(meta, name, cfg.seed));
         }
     }
     let selections: Vec<Selection> = match policy {

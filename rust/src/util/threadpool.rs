@@ -405,7 +405,15 @@ fn worker_loop(sh: Arc<Shared>) {
         match job {
             None => return,
             Some(job) => {
-                job();
+                // A panicking job must neither kill this worker (the pool
+                // would silently shrink for the rest of its life) nor skip
+                // the pending decrement below (`join` would wait forever).
+                // Fleet replica workers run fault-injection chaos jobs
+                // through `execute`, so this is load-bearing, not
+                // defensive.  The payload is dropped: fire-and-forget jobs
+                // have no return channel; jobs that need panic reporting
+                // use `try_scoped_for`.
+                let _ = catch_unwind(AssertUnwindSafe(job));
                 if sh.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
                     let _q = sh.queue.lock().unwrap();
                     sh.idle.notify_all();
@@ -442,6 +450,37 @@ mod tests {
         }
         pool.join();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn panicking_execute_jobs_kill_neither_workers_nor_join() {
+        // Regression: `execute` jobs used to run unguarded, so one panic
+        // unwound a worker thread (shrinking the pool) and stranded the
+        // `pending` count (deadlocking `join`).  After the guard, every
+        // panicking job still completes for accounting purposes and all
+        // workers keep draining the queue.
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicU64::new(0));
+        for i in 0..20 {
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                if i % 3 == 0 {
+                    panic!("injected job panic");
+                }
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join(); // would deadlock before the fix
+        assert_eq!(done.load(Ordering::SeqCst), 13);
+        // Both workers survived: 100 follow-up jobs all run.
+        for _ in 0..100 {
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(done.load(Ordering::SeqCst), 113);
     }
 
     #[test]

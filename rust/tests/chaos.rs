@@ -24,9 +24,13 @@ use shira::adapter::ShiraAdapter;
 use shira::coordinator::engine::Router;
 use shira::coordinator::error::ServeError;
 use shira::coordinator::fault::FaultPlan;
+use shira::coordinator::fleet::Fleet;
 use shira::coordinator::fusion::fuse_shira;
 use shira::coordinator::selection::Selection;
+use shira::coordinator::server::FailurePolicy;
 use shira::coordinator::store::{AdapterStore, StoreConfig};
+use shira::data::synth::{adapter_names, fleet_trace, toy_base, toy_shira_zoo};
+use shira::data::trace::mixed_selections;
 use shira::model::weights::WeightStore;
 use shira::util::rng::Rng;
 use shira::util::threadpool::ThreadPool;
@@ -212,6 +216,132 @@ fn seeded_fault_plans_never_tear_the_weights() {
         for threads in [1usize, 4] {
             run_chaos(seed, FaultPlan::seeded(seed, 6, 20), threads);
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fleet chaos (DESIGN.md §14): the same seeded fault plans armed across
+// an N-replica fleet — one shared injector, fleet-global ordinals.
+
+/// Build a chaos fleet: seeded zoo, shared store without prefetch (so
+/// fault ordinals depend only on the apply sequence), policy under test.
+fn chaos_fleet(replicas: usize, seed: u64, policy: FailurePolicy, faults: u64) -> Fleet {
+    let names = adapter_names(4);
+    Fleet::builder(toy_base(32, seed))
+        .replicas(replicas)
+        .queue_depth(64)
+        .shira_adapters(&toy_shira_zoo(32, &names, 80, seed))
+        .store_config(StoreConfig {
+            cache_bytes: 64 << 20,
+            prefetch_depth: 0,
+            plan_cache_bytes: 0,
+            ..StoreConfig::default()
+        })
+        .failure_policy(policy)
+        .fault_plan(FaultPlan::seeded(seed, faults, 20))
+        .build()
+}
+
+fn chaos_trace(seed: u64) -> Vec<shira::data::trace::Request> {
+    let sels = mixed_selections(&adapter_names(4));
+    fleet_trace(&sels, 160, 4, seed)
+}
+
+#[test]
+fn fleet_chaos_isolates_faults_between_replicas() {
+    // Satellite: at 2 and 8 replicas, seeded fault plans fire inside
+    // replica workers.  The fleet oracle checks EVERY replica after
+    // every apply and after every handled failure — so a green oracle
+    // IS the rollback-isolation assertion: a fault on one replica never
+    // perturbed another replica's resident bytes.  Afterwards the
+    // fleet-wide pin audit must come back clean.
+    let mut seeds: Vec<u64> = vec![0xF1EE1, 0xF1EE2];
+    if let Ok(s) = std::env::var("CHAOS_SEED") {
+        if let Ok(n) = s.trim().parse::<u64>() {
+            seeds.push(n);
+        }
+    }
+    for seed in seeds {
+        for replicas in [2usize, 8] {
+            for policy in [FailurePolicy::DegradeToBase, FailurePolicy::SkipRequest] {
+                let trace = chaos_trace(seed);
+                let mut fleet = chaos_fleet(replicas, seed, policy, 6);
+                let report = fleet.run_trace(&trace, seed ^ 0xD5).unwrap();
+                assert!(
+                    report.oracle_failures.is_empty(),
+                    "seed {seed:#x} replicas={replicas} {policy:?}: \
+                     {:?}",
+                    report.oracle_failures
+                );
+                // Every request reached exactly one terminal action.
+                assert_eq!(
+                    report.actions.len(),
+                    trace.len(),
+                    "seed {seed:#x} replicas={replicas}: requests lost"
+                );
+                // Fleet-wide pin-leak audit.
+                fleet.revert_all();
+                let store = fleet.store();
+                let guard = store.lock().unwrap();
+                assert_eq!(guard.pinned_count(), 0, "seed {seed:#x}: pins leaked");
+                assert_eq!(
+                    guard.pinned_plan_count(),
+                    0,
+                    "seed {seed:#x}: plan pins leaked"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_chaos_replays_identically_and_faults_really_fire() {
+    // The determinism harness holds under injected faults: one shared
+    // injector means fleet-global ordinals, so the same (trace seed,
+    // schedule seed, fault seed) triple replays the exact interleaving
+    // — failures, quarantines and all.
+    let seed = 0xF1EE3;
+    let run = || {
+        let trace = chaos_trace(seed);
+        let mut fleet = chaos_fleet(4, seed, FailurePolicy::DegradeToBase, 8);
+        fleet.run_trace(&trace, seed ^ 0xD5).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.actions, b.actions);
+    assert_eq!(a.per_replica_served, b.per_replica_served);
+    assert_eq!(a.summary, b.summary);
+    assert!(a.oracle_failures.is_empty(), "{:?}", a.oracle_failures);
+    // The plan must have actually perturbed the run somewhere: handled
+    // failures, rollbacks or store retries.
+    assert!(
+        !a.outcomes.is_empty() || a.rollbacks > 0 || a.store.retries > 0,
+        "seeded fault plan never fired: {}",
+        a.summary
+    );
+}
+
+#[test]
+fn fleet_chaos_concurrent_workers_stay_isolated() {
+    // Same fault plans through real worker threads: the oracle checks
+    // each replica after its own applies and sweeps the whole fleet
+    // after the workers join.
+    for replicas in [2usize, 8] {
+        let seed = 0xF1EE4 + replicas as u64;
+        let trace = chaos_trace(seed);
+        let mut fleet = chaos_fleet(replicas, seed, FailurePolicy::SkipRequest, 6);
+        let report = fleet.run_trace_concurrent(&trace).unwrap();
+        assert!(
+            report.oracle_failures.is_empty(),
+            "replicas={replicas}: {:?}",
+            report.oracle_failures
+        );
+        assert_eq!(report.actions.len(), trace.len());
+        fleet.revert_all();
+        let store = fleet.store();
+        let guard = store.lock().unwrap();
+        assert_eq!(guard.pinned_count(), 0);
+        assert_eq!(guard.pinned_plan_count(), 0);
     }
 }
 

@@ -1,0 +1,196 @@
+//! Fleet acceptance tests (DESIGN.md §14): a seeded bursty 10k-user
+//! trace served by 2- and 8-replica fleets must produce per-request
+//! outcomes AND final resident weights bit-identical to the
+//! single-replica serial reference — verified three ways:
+//!
+//! * the fleet's own bit-identity oracle (every replica checked against
+//!   a fault-free serial [`Router`] after every apply) stays green;
+//! * the per-request terminal-disposition record (`FleetReport.actions`)
+//!   is equal across replica counts;
+//! * each replica's final resident weights are re-derived here from an
+//!   independent serial router and compared byte-for-byte.
+//!
+//! Any failing configuration replays its exact interleaving from
+//! `(trace seed, schedule seed)` alone — asserted by the replay test.
+//!
+//! The CI replica-matrix job runs this file once per replica count via
+//! `FLEET_REPLICAS` (see .github/workflows/ci.yml).
+
+use shira::coordinator::engine::Router;
+use shira::coordinator::fleet::{Fleet, FleetReport};
+use shira::coordinator::selection::Selection;
+use shira::coordinator::store::{AdapterStore, StoreConfig};
+use shira::data::synth::{adapter_names, fleet_trace, toy_base, toy_shira_zoo};
+use shira::data::trace::{mixed_selections, Request};
+
+const DIM: usize = 32;
+const NNZ: usize = 80;
+const ZOO: usize = 6;
+const TRACE_SEED: u64 = 0xF1EE7;
+const SCHEDULE_SEED: u64 = 0x5EED;
+
+fn store_cfg() -> StoreConfig {
+    StoreConfig {
+        cache_bytes: 64 << 20,
+        prefetch_depth: 0,
+        plan_cache_bytes: 0,
+        ..StoreConfig::default()
+    }
+}
+
+fn fleet(replicas: usize) -> Fleet {
+    let names = adapter_names(ZOO);
+    Fleet::builder(toy_base(DIM, TRACE_SEED))
+        .replicas(replicas)
+        .queue_depth(256)
+        .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, TRACE_SEED))
+        .store_config(store_cfg())
+        .build()
+}
+
+fn trace(n: usize, burst: usize) -> Vec<Request> {
+    let sels = mixed_selections(&adapter_names(ZOO));
+    fleet_trace(&sels, n, burst, TRACE_SEED)
+}
+
+/// Run the trace at `replicas` and return the report plus each
+/// replica's final active key.
+fn run(replicas: usize, trace: &[Request]) -> (FleetReport, Vec<Option<String>>) {
+    let mut f = fleet(replicas);
+    let report = f.run_trace(trace, SCHEDULE_SEED).unwrap();
+    assert!(
+        report.oracle_failures.is_empty(),
+        "replicas={replicas}: {:?}",
+        report.oracle_failures
+    );
+    let finals = f
+        .routers()
+        .map(|r| r.active_key().map(str::to_string))
+        .collect();
+    (report, finals)
+}
+
+/// Independently re-derive the reference weights for `key` with a
+/// fresh serial router (no fleet machinery at all) and assert `got`
+/// matches byte-for-byte.
+fn assert_final_weights(replica: usize, key: Option<&str>, got: &shira::model::weights::WeightStore) {
+    let names = adapter_names(ZOO);
+    let mut store = AdapterStore::with_config(store_cfg(), None);
+    for a in &toy_shira_zoo(DIM, &names, NNZ, TRACE_SEED) {
+        store.add_shira(a);
+    }
+    let mut router = Router::new(toy_base(DIM, TRACE_SEED), None, false);
+    let sel = match key {
+        None | Some("") => Selection::Base,
+        Some(k) => Selection::parse(k).unwrap(),
+    };
+    router.apply(&mut store, &sel).unwrap();
+    assert!(
+        got.bit_equal(router.weights()),
+        "replica {replica}: final resident weights diverge from the serial \
+         reference for key {key:?}"
+    );
+}
+
+#[test]
+fn multi_replica_outcomes_match_serial_reference() {
+    // The acceptance criterion: 2- and 8-replica fleets on the seeded
+    // bursty trace land the same per-request outcomes as the 1-replica
+    // serial reference, and every replica's final weights re-derive
+    // bit-identically from a standalone serial router.
+    let t = trace(300, 8);
+    let mut serial_fleet = fleet(1);
+    let serial = serial_fleet.run_trace(&t, SCHEDULE_SEED).unwrap();
+    assert!(serial.oracle_failures.is_empty(), "{:?}", serial.oracle_failures);
+    assert_eq!(serial.served, 300, "serial reference must serve everything");
+    assert!(serial.actions.values().all(|&a| a == "served"));
+    for (id, r) in serial_fleet.routers().enumerate() {
+        assert_final_weights(id, r.active_key(), r.weights());
+    }
+    for replicas in [2usize, 8] {
+        let mut f = fleet(replicas);
+        let report = f.run_trace(&t, SCHEDULE_SEED).unwrap();
+        assert!(
+            report.oracle_failures.is_empty(),
+            "replicas={replicas}: {:?}",
+            report.oracle_failures
+        );
+        assert_eq!(
+            report.actions, serial.actions,
+            "per-request outcomes diverge from the serial reference at \
+             {replicas} replicas"
+        );
+        assert_eq!(report.served, serial.served);
+        assert!(report.oracle_checks > 0);
+        for (id, r) in f.routers().enumerate() {
+            assert_final_weights(id, r.active_key(), r.weights());
+        }
+        // Work actually spread: with a bursty multi-selection trace at
+        // least two replicas must have served something.
+        assert!(
+            report.per_replica_served.iter().filter(|&&s| s > 0).count() >= 2,
+            "affinity router starved all but one replica: {:?}",
+            report.per_replica_served
+        );
+    }
+}
+
+#[test]
+fn failing_seed_replays_exact_interleaving() {
+    // Determinism harness: the same (trace seed, schedule seed) pair
+    // reproduces the run bit-for-bit — actions, placement, summary and
+    // final weights — so any red configuration replays from its seeds.
+    let t = trace(160, 4);
+    let (a, fa) = run(2, &t);
+    let (b, fb) = run(2, &t);
+    assert_eq!(a.actions, b.actions);
+    assert_eq!(a.per_replica_served, b.per_replica_served);
+    assert_eq!(a.summary, b.summary);
+    assert_eq!(fa, fb);
+}
+
+#[test]
+fn concurrent_mode_matches_serial_outcomes() {
+    // Real threads, OS scheduling: placement is nondeterministic but
+    // with headroom every request is served, outcomes match the serial
+    // reference, the oracle stays green, and final weights re-derive.
+    let t = trace(200, 6);
+    let (serial, _) = run(1, &t);
+    for replicas in [2usize, 8] {
+        let mut f = fleet(replicas);
+        let report = f.run_trace_concurrent(&t).unwrap();
+        assert!(
+            report.oracle_failures.is_empty(),
+            "replicas={replicas}: {:?}",
+            report.oracle_failures
+        );
+        assert_eq!(report.actions, serial.actions);
+        assert_eq!(report.served, serial.served);
+        for (id, r) in f.routers().enumerate() {
+            assert_final_weights(id, r.active_key(), r.weights());
+        }
+    }
+}
+
+#[test]
+fn replica_matrix_from_env() {
+    // CI matrix hook: FLEET_REPLICAS picks one fleet size; unset runs a
+    // small default sweep so the test is meaningful locally too.
+    let counts: Vec<usize> = match std::env::var("FLEET_REPLICAS") {
+        Ok(s) => vec![s.parse().expect("FLEET_REPLICAS must be an integer")],
+        Err(_) => vec![1, 2, 8],
+    };
+    let t = trace(120, 4);
+    let (serial, _) = run(1, &t);
+    for replicas in counts {
+        let (report, finals) = run(replicas, &t);
+        assert_eq!(report.actions, serial.actions, "replicas={replicas}");
+        assert_eq!(report.requests, 120);
+        let mut f = fleet(replicas);
+        f.run_trace(&t, SCHEDULE_SEED).unwrap();
+        for ((id, r), key) in f.routers().enumerate().zip(&finals) {
+            assert_eq!(r.active_key().map(str::to_string), *key);
+            assert_final_weights(id, r.active_key(), r.weights());
+        }
+    }
+}

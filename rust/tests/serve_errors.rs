@@ -269,6 +269,15 @@ fn every_error_kind_has_a_stable_label() {
         "invalid-selection"
     );
     assert_eq!(ServeError::Runtime("x".into()).kind(), "runtime");
+    assert_eq!(
+        ServeError::Overloaded {
+            selection: "a".into(),
+            replicas: 2,
+            queue_depth: 4
+        }
+        .kind(),
+        "overloaded"
+    );
 }
 
 /// Artifact-gated: builder-level UnknownModel through the real Server.
