@@ -14,17 +14,27 @@
 //! bit-identity before timing.  These stages land in their own baseline
 //! document, `rust/BENCH_transition.json`.
 //!
+//! Part 4 (kernel dispatch, DESIGN.md §15): the SIMD span kernels vs the
+//! scalar ladder across run-length distributions (fully-contiguous block /
+//! ~1.5% uniform singletons / 16-wide clusters), plus f16-resident vs
+//! f32-resident serving under SIMD — every (dispatch × residency ×
+//! pooling) combination gated on bit-identity before timing.  These
+//! stages land in `rust/BENCH_kernel.json`.
+//!
 //! Run: `cargo bench --bench bench_switch`.  Flags:
 //!   --check           compare against the committed rust/BENCH_switch.json
-//!                     AND rust/BENCH_transition.json
+//!                     AND rust/BENCH_transition.json + rust/BENCH_kernel.json
 //!   --tolerance 0.5   fractional slowdown allowed by --check (default 0.5)
-//!   --save-baseline   rewrite both committed baselines from this run
+//!   --save-baseline   rewrite the committed baselines from this run
+//!   --require-entries fail instead of trivially passing on empty baselines
+//!   --baseline-dir D  read/write baselines under D instead of the repo
 //! `SHIRA_BENCH_FAST=1` shrinks the protocol and dims for CI smoke runs.
 
 use std::sync::Arc;
 
-use shira::adapter::sparse::SparseDelta;
-use shira::adapter::{AdapterTransition, ShiraAdapter};
+use shira::adapter::kernel::{self, KernelDispatch};
+use shira::adapter::sparse::{SparseDelta, SparseDeltaF16};
+use shira::adapter::{AdapterTransition, ShiraAdapter, ShiraF16Adapter};
 use shira::coordinator::switch::{SwitchEngine, SwitchPath};
 use shira::model::tensor::Tensor2;
 use shira::model::weights::WeightStore;
@@ -61,6 +71,36 @@ fn overlapping_sparse(rng: &mut Rng, base: &SparseDelta, overlap: f64) -> Sparse
     let mut delta = vec![0.0f32; k];
     rng.fill_normal(&mut delta, 0.0, 0.1);
     SparseDelta::new(base.rows, base.cols, idx, delta)
+}
+
+/// A fully-contiguous block of `k` flat indices — one maximal row run per
+/// row crossed, the kernel layer's best case.
+fn contiguous_sparse(rng: &mut Rng, dim: usize, k: usize) -> SparseDelta {
+    let start = rng.below(dim * dim - k);
+    let idx: Vec<u32> = (start as u32..(start + k) as u32).collect();
+    let mut delta = vec![0.0f32; k];
+    rng.fill_normal(&mut delta, 0.0, 0.1);
+    SparseDelta::new(dim, dim, idx, delta)
+}
+
+/// `k` indices in contiguous 16-wide clusters — short runs, the middle of
+/// the run-length spectrum between a single block and uniform singletons.
+fn clustered_sparse(rng: &mut Rng, dim: usize, k: usize) -> SparseDelta {
+    use std::collections::HashSet;
+    const CLUSTER: usize = 16;
+    let mut seen: HashSet<u32> = HashSet::with_capacity(k + CLUSTER);
+    while seen.len() < k {
+        let start = rng.below(dim * dim - CLUSTER) as u32;
+        for o in 0..CLUSTER as u32 {
+            seen.insert(start + o);
+        }
+    }
+    let mut idx: Vec<u32> = seen.into_iter().collect();
+    idx.sort_unstable();
+    idx.truncate(k);
+    let mut delta = vec![0.0f32; k];
+    rng.fill_normal(&mut delta, 0.0, 0.1);
+    SparseDelta::new(dim, dim, idx, delta)
 }
 
 fn shira_of(name: &str, delta: SparseDelta) -> ShiraAdapter {
@@ -277,6 +317,120 @@ fn main() {
         }
     }
 
+    // -- Part 4: kernel dispatch (scalar vs simd) across run shapes -------
+    // The tentpole claim in numbers (DESIGN.md §15): the SIMD span kernels
+    // against the scalar ladder across run-length distributions — one
+    // maximal contiguous block / ~1.5% uniform singletons / 16-wide
+    // clusters — plus f16-resident vs f32-resident serving under SIMD.
+    // Every (dispatch × residency × pooling) combination is asserted
+    // bit-identical to the scalar-serial f32 reference before any timing.
+    // Serial one-shot paths read the process-global dispatch at call time,
+    // so the override here is `force_dispatch` (safe: this binary is
+    // single-threaded outside the pools it builds itself); engines are
+    // constructed after each force so their wave paths capture it too.
+    let entry_dispatch = kernel::active_dispatch();
+    let k_dim = if fast { 1024 } else { 2048 };
+    let k_frac = 0.015;
+    let kk = ((k_dim * k_dim) as f64 * k_frac) as usize;
+    let k_threads = 4usize;
+    let dists: Vec<(&str, SparseDelta)> = vec![
+        ("contig", contiguous_sparse(&mut rng, k_dim, kk)),
+        ("uniform", random_sparse(&mut rng, k_dim, k_frac)),
+        ("clustered", clustered_sparse(&mut rng, k_dim, kk)),
+    ];
+    let kw0 = random_weight(&mut rng, k_dim);
+    let mut kernel_rows = Vec::new();
+    for (dist, d) in &dists {
+        b.group(&format!("kernel/{dist}"));
+        let adapter = Arc::new(shira_of("k", d.clone()));
+        let f16 = Arc::new(ShiraF16Adapter {
+            name: "k16".into(),
+            strategy: "rand".into(),
+            tensors: vec![("w".into(), SparseDeltaF16::from_f32(d))],
+        });
+        let mut kstore = WeightStore::new();
+        kstore.insert("w", kw0.clone());
+
+        // Bit-identity gates: every dispatch × pooling combination lands
+        // on the scalar-serial bytes; f16-resident lands on the bytes of
+        // an f32 apply of the widened values; every revert is exact.
+        {
+            kernel::force_dispatch(KernelDispatch::Scalar);
+            let mut w_ref = kstore.clone();
+            let mut eng_ref = SwitchEngine::new();
+            eng_ref.switch_to_shira_shared(&mut w_ref, Arc::clone(&adapter), 1.0);
+            let decoded = Arc::new(f16.to_shira());
+            let mut w16_ref = kstore.clone();
+            let mut eng16_ref = SwitchEngine::new();
+            eng16_ref.switch_to_shira_shared(&mut w16_ref, decoded, 1.0);
+            for dispatch in [KernelDispatch::Scalar, KernelDispatch::Simd] {
+                kernel::force_dispatch(dispatch);
+                for pooled in [false, true] {
+                    let pool = if pooled {
+                        Some(Arc::new(ThreadPool::new(k_threads)))
+                    } else {
+                        None
+                    };
+                    let mut eng = SwitchEngine::with_pool(pool.clone());
+                    let mut w = kstore.clone();
+                    eng.switch_to_shira_shared(&mut w, Arc::clone(&adapter), 1.0);
+                    assert!(
+                        w.bit_equal(&w_ref),
+                        "kernel/{dist}: {} pooled={pooled} != scalar serial",
+                        dispatch.name()
+                    );
+                    eng.revert(&mut w);
+                    assert!(w.bit_equal(&kstore), "kernel/{dist}: revert not exact");
+                    let mut eng = SwitchEngine::with_pool(pool);
+                    let mut w = kstore.clone();
+                    eng.switch_to_shira_f16(&mut w, Arc::clone(&f16), None, 1.0);
+                    assert!(
+                        w.bit_equal(&w16_ref),
+                        "kernel/{dist}: f16 {} pooled={pooled} != widened f32",
+                        dispatch.name()
+                    );
+                    eng.revert(&mut w);
+                    assert!(w.bit_equal(&kstore), "kernel/{dist}: f16 revert not exact");
+                }
+            }
+        }
+
+        // Timed switch+revert cycles at 4 threads, dispatch forced per run.
+        let mut cell = [0.0f64; 3];
+        for (ci, dispatch) in [KernelDispatch::Scalar, KernelDispatch::Simd]
+            .into_iter()
+            .enumerate()
+        {
+            kernel::force_dispatch(dispatch);
+            let pool = Arc::new(ThreadPool::new(k_threads));
+            let mut eng = SwitchEngine::with_pool(Some(pool));
+            let mut w = kstore.clone();
+            let r = b.bench(&format!("cycle_f32_{}", dispatch.name()), || {
+                eng.switch_to_shira_shared(&mut w, Arc::clone(&adapter), 1.0);
+                eng.revert(&mut w);
+                black_box(&w.get("w").data[0]);
+            });
+            cell[ci] = r.mean_ns;
+        }
+        {
+            kernel::force_dispatch(KernelDispatch::Simd);
+            let pool = Arc::new(ThreadPool::new(k_threads));
+            let mut eng = SwitchEngine::with_pool(Some(pool));
+            let mut w = kstore.clone();
+            let r = b.bench("cycle_f16_simd", || {
+                eng.switch_to_shira_f16(&mut w, Arc::clone(&f16), None, 1.0);
+                eng.revert(&mut w);
+                black_box(&w.get("w").data[0]);
+            });
+            cell[2] = r.mean_ns;
+        }
+        kernel_rows.push((*dist, cell[0], cell[1], cell[2]));
+    }
+    // Hand the process back to whatever the env/default probe selected, so
+    // the forced runs above don't leak into anything after us.
+    kernel::force_dispatch(entry_dispatch);
+    println!("kernel gates: scalar/simd × serial/pooled × f32/f16 all bit-identical");
+
     // -- summaries --------------------------------------------------------
     println!("\n== Fig. 5 summary (fuse / scatter) ==");
     println!("| dim | speedup |");
@@ -310,16 +464,40 @@ fn main() {
     println!("expectation: transition wins at every overlap ratio (one union \
               pass + one dispatch wave vs two passes + two waves)");
 
+    println!("\n== kernel dispatch (dim {k_dim}, t{k_threads}, switch+revert cycle) ==");
+    println!("| distribution | scalar (us) | simd (us) | speedup | f16 simd (us) |");
+    println!("|---|---|---|---|---|");
+    for (dist, sc, si, f16ns) in &kernel_rows {
+        println!(
+            "| {dist} | {:.1} | {:.1} | {:.2}x | {:.1} |",
+            sc / 1e3,
+            si / 1e3,
+            sc / si,
+            f16ns / 1e3
+        );
+    }
+    println!("expectation: simd wins most on the contiguous block (long runs), \
+              least on singleton-dominated uniform supports");
+
     b.write_results("bench_switch");
-    // Part-3 stages gate against their own committed baseline so the
-    // transition-vs-revert+apply table can be regenerated independently.
-    let (transition_entries, switch_entries): (Vec<_>, Vec<_>) =
-        results_to_entries(b.results())
-            .into_iter()
-            .partition(|e| e.name.starts_with("transition/"));
+    // Part-3 and Part-4 stages gate against their own committed baselines
+    // so each table can be regenerated independently of the Fig. 5 sweep.
+    let mut switch_entries = Vec::new();
+    let mut transition_entries = Vec::new();
+    let mut kernel_entries = Vec::new();
+    for e in results_to_entries(b.results()) {
+        if e.name.starts_with("transition/") {
+            transition_entries.push(e);
+        } else if e.name.starts_with("kernel/") {
+            kernel_entries.push(e);
+        } else {
+            switch_entries.push(e);
+        }
+    }
     let ok_switch = finish_bench("switch", &switch_entries);
     let ok_transition = finish_bench("transition", &transition_entries);
-    if !(ok_switch && ok_transition) {
+    let ok_kernel = finish_bench("kernel", &kernel_entries);
+    if !(ok_switch && ok_transition && ok_kernel) {
         std::process::exit(1);
     }
 }

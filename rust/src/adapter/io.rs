@@ -44,8 +44,8 @@
 use std::io::{self, Read, Write};
 use std::path::Path;
 
-use super::sparse::SparseDelta;
-use super::{LoraAdapter, LoraTensor, ShiraAdapter};
+use super::sparse::{SparseDelta, SparseDeltaF16};
+use super::{LoraAdapter, LoraTensor, ShiraAdapter, ShiraF16Adapter};
 use crate::model::tensor::Tensor2;
 use crate::util::json::{self, Json};
 
@@ -405,6 +405,15 @@ impl<'a> Reader<'a> {
         }
     }
 
+    /// Raw binary16 bits, NOT widened (the f16-resident decode path).
+    fn u16s(&mut self, n: usize) -> Result<Vec<u16>, IoError> {
+        let raw = self.take(n * 2)?;
+        Ok(raw
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
     fn u32s(&mut self, n: usize) -> Result<Vec<u32>, IoError> {
         let raw = self.take(n * 4)?;
         Ok(raw
@@ -568,6 +577,66 @@ fn decode_shira_v1(r: &mut Reader) -> Result<ShiraAdapter, IoError> {
     })
 }
 
+/// The shared v2 per-tensor prefix: name, shape, nnz, and the varint
+/// gap-encoded index list (validated sorted-unique and in-range). The
+/// caller reads the values in whichever representation it keeps resident,
+/// then checks the tensor CRC from `start`.
+struct V2TensorHead {
+    start: usize,
+    tname: String,
+    rows: usize,
+    cols: usize,
+    idx: Vec<u32>,
+}
+
+fn decode_v2_tensor_head(r: &mut Reader) -> Result<V2TensorHead, IoError> {
+    let start = r.pos();
+    let tname = r.str()?;
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let k = r.u32()? as usize;
+    let numel = checked_numel(rows, cols, &tname)?;
+    if k > numel {
+        return Err(IoError::Format(format!("{tname}: k > numel")));
+    }
+    let gap_bytes = r.u32()? as usize;
+    if k > gap_bytes {
+        // every gap takes at least one byte
+        return Err(IoError::Format(format!("{tname}: gap bytes < k")));
+    }
+    let graw = r.take(gap_bytes)?;
+    let mut idx = Vec::with_capacity(k);
+    let mut cursor = 0usize;
+    let mut prev = 0u64;
+    for j in 0..k {
+        let (gap, used) = varint_at(graw, cursor)?;
+        cursor += used;
+        let next = if j == 0 {
+            gap as u64
+        } else {
+            if gap == 0 {
+                return Err(IoError::Format(format!("{tname}: indices not sorted")));
+            }
+            prev + gap as u64
+        };
+        if next >= numel as u64 {
+            return Err(IoError::Format(format!("{tname}: index out of range")));
+        }
+        idx.push(next as u32);
+        prev = next;
+    }
+    if cursor != graw.len() {
+        return Err(IoError::Format(format!("{tname}: trailing gap bytes")));
+    }
+    Ok(V2TensorHead {
+        start,
+        tname,
+        rows,
+        cols,
+        idx,
+    })
+}
+
 fn decode_shira_v2(r: &mut Reader) -> Result<ShiraAdapter, IoError> {
     let flags = r.u8()?;
     if flags & !FLAG_F16 != 0 {
@@ -578,51 +647,69 @@ fn decode_shira_v2(r: &mut Reader) -> Result<ShiraAdapter, IoError> {
     let count = r.u32()? as usize;
     let mut tensors = Vec::new();
     for _ in 0..count {
-        let start = r.pos();
-        let tname = r.str()?;
-        let rows = r.u32()? as usize;
-        let cols = r.u32()? as usize;
-        let k = r.u32()? as usize;
-        let numel = checked_numel(rows, cols, &tname)?;
-        if k > numel {
-            return Err(IoError::Format(format!("{tname}: k > numel")));
-        }
-        let gap_bytes = r.u32()? as usize;
-        if k > gap_bytes {
-            // every gap takes at least one byte
-            return Err(IoError::Format(format!("{tname}: gap bytes < k")));
-        }
-        let graw = r.take(gap_bytes)?;
-        let mut idx = Vec::with_capacity(k);
-        let mut cursor = 0usize;
-        let mut prev = 0u64;
-        for j in 0..k {
-            let (gap, used) = varint_at(graw, cursor)?;
-            cursor += used;
-            let next = if j == 0 {
-                gap as u64
-            } else {
-                if gap == 0 {
-                    return Err(IoError::Format(format!(
-                        "{tname}: indices not sorted"
-                    )));
-                }
-                prev + gap as u64
-            };
-            if next >= numel as u64 {
-                return Err(IoError::Format(format!("{tname}: index out of range")));
-            }
-            idx.push(next as u32);
-            prev = next;
-        }
-        if cursor != graw.len() {
-            return Err(IoError::Format(format!("{tname}: trailing gap bytes")));
-        }
-        let delta = r.vals(k, f16)?;
-        r.check_tensor_crc(start, &tname)?;
-        tensors.push((tname, SparseDelta::new(rows, cols, idx, delta)));
+        let h = decode_v2_tensor_head(r)?;
+        let delta = r.vals(h.idx.len(), f16)?;
+        r.check_tensor_crc(h.start, &h.tname)?;
+        tensors.push((h.tname, SparseDelta::new(h.rows, h.cols, h.idx, delta)));
     }
     Ok(ShiraAdapter {
+        name,
+        strategy,
+        tensors,
+    })
+}
+
+/// Decode a `v2-f16` SHiRA file **keeping the raw binary16 delta bits**
+/// (the store's f16-resident mode).
+///
+/// Only `v2-f16` files are accepted: for any other format the resident
+/// `u16` bits would be a lossy re-quantization of the file, breaking the
+/// invariant that f16-resident serving is bit-identical to f32 serving of
+/// the same decoded file. Performs the same checksum, magic, version and
+/// index validation as [`decode_shira`].
+/// Cheap header sniff: is `bytes` a SHiRA `v2-f16` file? Inspects only
+/// magic, version, and the f16 flag byte — no checksum or body validation,
+/// so a `true` answer still requires a full [`decode_shira_f16`] to trust
+/// the contents. Used by the store to route f16-resident decodes.
+pub fn is_v2_f16(bytes: &[u8]) -> bool {
+    bytes.len() > 8
+        && u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) == MAGIC_SHIRA
+        && u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) == VERSION_V2
+        && bytes[8] & FLAG_F16 != 0
+}
+
+pub fn decode_shira_f16(bytes: &[u8]) -> Result<ShiraF16Adapter, IoError> {
+    let mut r = Reader::new(bytes)?;
+    if r.u32()? != MAGIC_SHIRA {
+        return Err(IoError::Format("not a SHiRA adapter file".into()));
+    }
+    match r.u32()? {
+        VERSION_V2 => {}
+        ver => {
+            return Err(IoError::Format(format!(
+                "f16-resident decode requires v2-f16, got version {ver}"
+            )));
+        }
+    }
+    let flags = r.u8()?;
+    if flags & !FLAG_F16 != 0 {
+        return Err(IoError::Format(format!("unknown flags {flags:#04x}")));
+    }
+    if flags & FLAG_F16 == 0 {
+        return Err(IoError::Format(
+            "f16-resident decode requires v2-f16 values (file stores f32)".into(),
+        ));
+    }
+    let (name, strategy) = parse_shira_meta(&mut r)?;
+    let count = r.u32()? as usize;
+    let mut tensors = Vec::new();
+    for _ in 0..count {
+        let h = decode_v2_tensor_head(&mut r)?;
+        let bits = r.u16s(h.idx.len())?;
+        r.check_tensor_crc(h.start, &h.tname)?;
+        tensors.push((h.tname, SparseDeltaF16::new(h.rows, h.cols, h.idx, bits)));
+    }
+    Ok(ShiraF16Adapter {
         name,
         strategy,
         tensors,
@@ -911,6 +998,60 @@ mod tests {
         let ldec = decode_lora(&encode_lora_as(&l, Format::V2F16)).unwrap();
         assert_eq!(l.tensors[0].target, ldec.tensors[0].target);
         assert_eq!(l.scale, ldec.scale);
+    }
+
+    #[test]
+    fn f16_resident_decode_matches_f32_decode() {
+        // The store's f16-resident path must see exactly the values the
+        // f32 decode of the same v2-f16 file sees: same indices, and bits
+        // that widen to bit-identical f32s.
+        let mut rng = Rng::new(93);
+        for _ in 0..8 {
+            let a = random_shira(&mut rng, 1 + rng.below(3));
+            let bytes = encode_shira_as(&a, Format::V2F16);
+            let f32d = decode_shira(&bytes).unwrap();
+            let f16d = decode_shira_f16(&bytes).unwrap();
+            assert_eq!(f16d.name, f32d.name);
+            assert_eq!(f16d.tensors.len(), f32d.tensors.len());
+            for ((n16, d16), (n32, d32)) in f16d.tensors.iter().zip(&f32d.tensors) {
+                assert_eq!(n16, n32);
+                assert_eq!(d16.idx, d32.idx);
+                assert_eq!(d16.nnz(), d32.nnz());
+                for (b, v) in d16.bits.iter().zip(&d32.delta) {
+                    assert_eq!(f16_bits_to_f32(*b).to_bits(), v.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn f16_resident_decode_rejects_non_f16() {
+        let a = sample_shira();
+        for f in [Format::V1, Format::V2] {
+            assert!(
+                matches!(
+                    decode_shira_f16(&encode_shira_as(&a, f)),
+                    Err(IoError::Format(_))
+                ),
+                "{} accepted by f16-resident decode",
+                f.name()
+            );
+        }
+        assert!(decode_shira_f16(&encode_lora(&sample_lora())).is_err());
+        let mut bytes = encode_shira_as(&a, Format::V2F16);
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(decode_shira_f16(&bytes).is_err());
+    }
+
+    #[test]
+    fn v2_f16_sniff() {
+        let a = sample_shira();
+        assert!(is_v2_f16(&encode_shira_as(&a, Format::V2F16)));
+        assert!(!is_v2_f16(&encode_shira_as(&a, Format::V2)));
+        assert!(!is_v2_f16(&encode_shira_as(&a, Format::V1)));
+        assert!(!is_v2_f16(&encode_lora(&sample_lora())));
+        assert!(!is_v2_f16(&[]));
     }
 
     #[test]

@@ -1,0 +1,987 @@
+//! The vectorized scatter kernel layer (DESIGN.md §15).
+//!
+//! Every scatter in the crate — apply, snapshot+apply, restore, gather and
+//! the one-pass A→B transition — bottoms out in the span kernels defined
+//! here.  Each kernel has two executions selected by [`KernelDispatch`]:
+//!
+//! * **Scalar** — the exact loops the crate shipped with (one indexed
+//!   load/store per slot).  This is the reference semantics.
+//! * **Simd** — a portable fixed-width abstraction: sorted SHiRA supports
+//!   decompose into *row runs* of consecutive flat indices, and within a
+//!   run the target slots are contiguous, so the kernel sweeps
+//!   [`LANES`]-wide `[f32; LANES]` chunks (load–FMA–store over plain
+//!   arrays the autovectorizer lowers to vector registers — no nightly
+//!   `std::simd`, no intrinsics) with a scalar tail.  Isolated slots
+//!   (runs shorter than a chunk) take the same scalar gather path as
+//!   before.
+//!
+//! Per-lane arithmetic is the *same expression* as the scalar loop
+//! (`base + alpha * delta`, never a fused multiply-add the scalar path
+//! wouldn't use), so for f32-resident deltas the two dispatches are
+//! bit-identical on every path — property-tested here and gated before
+//! timing in `bench_switch` Part 4.
+//!
+//! Run boundaries come either precomputed (a [`crate::adapter::sparse::RunPlan`]
+//! built once per adapter alongside its `ShardPlan`, handed in as
+//! [`Runs::Cuts`]) or detected on the fly ([`Runs::Detect`]) on paths that
+//! have no plan in hand.  Both describe the same decomposition, so the
+//! choice is purely a build-time-vs-scan-time tradeoff.
+//!
+//! Deltas are read through [`DeltaSource`], which abstracts f32-resident
+//! (`F32Src`) and f16-resident (`F16Src`, dequantized lane-wise via the
+//! exact `f16 → f32` widening in `adapter::io`) storage.  f16 residency
+//! halves resident delta bytes; because widening is exact, serving an
+//! f16-resident adapter is bit-identical to serving the f32 decode of the
+//! same `v2-f16` file.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::adapter::io::f16_bits_to_f32;
+use crate::adapter::sparse::{MAX_SHARDS, NONE_POS};
+
+/// SIMD chunk width (f32 lanes per sweep step).  8 × f32 = one AVX2
+/// register / two NEON registers; the `[f32; LANES]` chunk form lets the
+/// autovectorizer pick the widest unit the target actually has.
+pub const LANES: usize = 8;
+
+/// Which execution of the span kernels to run.
+///
+/// Probed once per process (at the first [`ThreadPool`] construction —
+/// see `util::threadpool`) from the `SHIRA_KERNEL` env var, overridable
+/// with the `--kernel scalar|simd` CLI knob via [`force_dispatch`].
+///
+/// [`ThreadPool`]: crate::util::threadpool::ThreadPool
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelDispatch {
+    /// Reference scalar loops (bit-identical twin of `Simd` for f32).
+    Scalar,
+    /// Row-run chunked sweeps with a scalar tail (the default).
+    Simd,
+}
+
+impl KernelDispatch {
+    /// Parse a CLI/env spelling (`"scalar"` / `"simd"`).
+    pub fn parse(s: &str) -> Option<KernelDispatch> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelDispatch::Scalar),
+            "simd" => Some(KernelDispatch::Simd),
+            _ => None,
+        }
+    }
+
+    /// Stable display name (`"scalar"` / `"simd"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelDispatch::Scalar => "scalar",
+            KernelDispatch::Simd => "simd",
+        }
+    }
+}
+
+/// 0 = unset, 1 = scalar, 2 = simd.
+static DISPATCH: AtomicU8 = AtomicU8::new(0);
+
+fn code_of(d: KernelDispatch) -> u8 {
+    match d {
+        KernelDispatch::Scalar => 1,
+        KernelDispatch::Simd => 2,
+    }
+}
+
+fn probe() -> KernelDispatch {
+    match std::env::var("SHIRA_KERNEL") {
+        Ok(v) => KernelDispatch::parse(&v).unwrap_or(KernelDispatch::Simd),
+        Err(_) => KernelDispatch::Simd,
+    }
+}
+
+/// The process-wide dispatch mode.  First call probes `SHIRA_KERNEL`
+/// (default [`KernelDispatch::Simd`]); later calls return the settled
+/// value.  Engines read this once at construction and keep their own
+/// copy, so a late [`force_dispatch`] never changes a live engine.
+pub fn active_dispatch() -> KernelDispatch {
+    match DISPATCH.load(Ordering::Relaxed) {
+        1 => KernelDispatch::Scalar,
+        2 => KernelDispatch::Simd,
+        _ => {
+            let probed = probe();
+            // Keep whichever write (probe or a racing force) lands first.
+            let _ = DISPATCH.compare_exchange(
+                0,
+                code_of(probed),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            if DISPATCH.load(Ordering::Relaxed) == 1 {
+                KernelDispatch::Scalar
+            } else {
+                KernelDispatch::Simd
+            }
+        }
+    }
+}
+
+/// Override the process-wide dispatch (the `--kernel` CLI knob).  Takes
+/// effect for engines constructed afterwards.
+pub fn force_dispatch(d: KernelDispatch) {
+    DISPATCH.store(code_of(d), Ordering::Relaxed);
+}
+
+/// The one home of the scalar/parallel dispatch thresholds shared by the
+/// switch and fusion engines (satellite of ISSUE 8: previously duplicated
+/// as loose constants in `adapter::sparse`, which are now deprecated
+/// aliases of these fields).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Below this many touched entries per operation, shard dispatch
+    /// overhead exceeds the scatter itself and engines stay serial.
+    pub par_min_nnz: usize,
+    /// Target entries per shard (≈ a few cache-resident strides of work).
+    pub nnz_per_shard: usize,
+    /// Hard cap on shards per tensor (`ShardPlan` is fixed-size).
+    pub max_shards: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig {
+            par_min_nnz: 4096,
+            nnz_per_shard: 2048,
+            max_shards: MAX_SHARDS,
+        }
+    }
+}
+
+impl KernelConfig {
+    /// Shard count for an `nnz`-entry scatter on a `threads`-wide pool.
+    pub fn shards_for(&self, nnz: usize, threads: usize) -> usize {
+        (nnz / self.nnz_per_shard)
+            .max(1)
+            .min(threads * 2)
+            .min(self.max_shards)
+    }
+
+    /// True when an `nnz`-entry operation should dispatch parallel.
+    pub fn parallel_worthwhile(&self, nnz: usize) -> bool {
+        nnz >= self.par_min_nnz
+    }
+}
+
+/// The crate-wide [`KernelConfig`] (one definition, so the switch and
+/// fusion engines' cutoffs cannot drift apart).
+pub fn config() -> KernelConfig {
+    KernelConfig::default()
+}
+
+// ---------------------------------------------------------------------------
+// Delta sources
+// ---------------------------------------------------------------------------
+
+/// Abstraction over where delta values live: f32-resident (`F32Src`) or
+/// f16-resident (`F16Src`, widened lane-wise on read).  `Copy` raw-pointer
+/// wrappers so span kernels stay monomorphized and allocation-free.
+pub(crate) trait DeltaSource: Copy {
+    /// Read delta value `j` as f32.
+    ///
+    /// # Safety
+    /// `j` must be in-bounds for the underlying array.
+    unsafe fn get(self, j: usize) -> f32;
+}
+
+/// f32-resident delta values.
+#[derive(Clone, Copy)]
+pub(crate) struct F32Src(pub *const f32);
+
+// SAFETY: plain read-only pointer into a buffer the caller keeps alive
+// and does not mutate for the duration of the scoped dispatch.
+unsafe impl Send for F32Src {}
+unsafe impl Sync for F32Src {}
+
+impl DeltaSource for F32Src {
+    #[inline(always)]
+    unsafe fn get(self, j: usize) -> f32 {
+        *self.0.add(j)
+    }
+}
+
+/// f16-resident delta values (raw IEEE 754 binary16 bits), dequantized on
+/// read with the exact widening conversion — so every kernel result is
+/// bit-identical to running the f32 decode of the same file.
+#[derive(Clone, Copy)]
+pub(crate) struct F16Src(pub *const u16);
+
+// SAFETY: as for `F32Src`.
+unsafe impl Send for F16Src {}
+unsafe impl Sync for F16Src {}
+
+impl DeltaSource for F16Src {
+    #[inline(always)]
+    unsafe fn get(self, j: usize) -> f32 {
+        f16_bits_to_f32(*self.0.add(j))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run decomposition
+// ---------------------------------------------------------------------------
+
+/// How a span kernel learns the row-run decomposition of its `[lo, hi)`
+/// index range.
+#[derive(Clone, Copy)]
+pub(crate) enum Runs {
+    /// Detect maximal consecutive-index runs on the fly (paths with no
+    /// precomputed plan in hand: serial one-shots, plan-mismatch
+    /// fallbacks).
+    Detect,
+    /// Precomputed cut array covering exactly `[lo, hi)`:
+    /// `cuts[0] == lo`, `cuts[len-1] == hi`, and indices are consecutive
+    /// within each `[cuts[r], cuts[r+1])` (see `sparse::RunPlan::span`).
+    Cuts {
+        /// First cut (== `lo`).
+        ptr: *const u32,
+        /// Number of cuts (runs + 1; `len == 1` means an empty span).
+        len: usize,
+    },
+}
+
+// SAFETY: the cut array is owned by a plan the caller keeps alive across
+// the scoped dispatch and is read-only.
+unsafe impl Send for Runs {}
+unsafe impl Sync for Runs {}
+
+/// Internal iterator over maximal consecutive runs of `idx[lo..hi)`.
+/// Plain struct (not `Iterator`) so `next_run` can be an `unsafe fn`
+/// inside the kernels' existing unsafe contract.
+struct RunIter {
+    idx: *const u32,
+    pos: usize,
+    hi: usize,
+    /// Null ⇒ detect mode.
+    cuts: *const u32,
+    cut_i: usize,
+}
+
+impl RunIter {
+    #[inline(always)]
+    fn new(idx: *const u32, lo: usize, hi: usize, runs: Runs) -> RunIter {
+        match runs {
+            Runs::Detect => RunIter {
+                idx,
+                pos: lo,
+                hi,
+                cuts: std::ptr::null(),
+                cut_i: 0,
+            },
+            Runs::Cuts { ptr, len } => {
+                debug_assert!(len >= 1);
+                RunIter {
+                    idx,
+                    pos: lo,
+                    hi,
+                    cuts: ptr,
+                    cut_i: 1,
+                }
+            }
+        }
+    }
+
+    /// Next run `[s, e)`, or `None` when the span is exhausted.
+    ///
+    /// # Safety
+    /// `idx[lo..hi)` (detect mode) / the cut array (cuts mode) must be
+    /// live and in-bounds.
+    #[inline(always)]
+    unsafe fn next_run(&mut self) -> Option<(usize, usize)> {
+        if self.pos >= self.hi {
+            return None;
+        }
+        let s = self.pos;
+        let e = if self.cuts.is_null() {
+            let first = *self.idx.add(s) as usize;
+            let mut e = s + 1;
+            while e < self.hi && *self.idx.add(e) as usize == first + (e - s) {
+                e += 1;
+            }
+            e
+        } else {
+            let e = *self.cuts.add(self.cut_i) as usize;
+            self.cut_i += 1;
+            debug_assert!(e > s && e <= self.hi);
+            e
+        };
+        self.pos = e;
+        Some((s, e))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Span kernels
+// ---------------------------------------------------------------------------
+
+/// `W.flat[idx[j]] += α·δ(j)` over `[lo, hi)`.
+///
+/// # Safety
+/// `idx[lo..hi)` must be unique, in-bounds for `w` and for the delta
+/// source; ranges handed to concurrent callers must be disjoint; in cuts
+/// mode `runs` must describe exactly `[lo, hi)`.
+#[allow(clippy::needless_range_loop)]
+pub(crate) unsafe fn apply_span<D: DeltaSource>(
+    dispatch: KernelDispatch,
+    idx: *const u32,
+    delta: D,
+    w: *mut f32,
+    alpha: f32,
+    lo: usize,
+    hi: usize,
+    runs: Runs,
+) {
+    match dispatch {
+        KernelDispatch::Scalar => {
+            for j in lo..hi {
+                let i = *idx.add(j) as usize;
+                *w.add(i) += alpha * delta.get(j);
+            }
+        }
+        KernelDispatch::Simd => {
+            let mut it = RunIter::new(idx, lo, hi, runs);
+            while let Some((s, e)) = it.next_run() {
+                let wp = w.add(*idx.add(s) as usize);
+                let n = e - s;
+                let chunks = n / LANES;
+                for c in 0..chunks {
+                    let o = c * LANES;
+                    let mut wv = [0f32; LANES];
+                    let mut dv = [0f32; LANES];
+                    for l in 0..LANES {
+                        wv[l] = *wp.add(o + l);
+                        dv[l] = delta.get(s + o + l);
+                    }
+                    for l in 0..LANES {
+                        // Same expression as the scalar loop — no FMA
+                        // contraction, so the dispatches stay bit-equal.
+                        wv[l] += alpha * dv[l];
+                    }
+                    for l in 0..LANES {
+                        *wp.add(o + l) = wv[l];
+                    }
+                }
+                for t in (chunks * LANES)..n {
+                    *wp.add(t) += alpha * delta.get(s + t);
+                }
+            }
+        }
+    }
+}
+
+/// Fused snapshot-then-apply over `[lo, hi)`: `snap[j] = W.flat[idx[j]]`,
+/// then `W.flat[idx[j]] = snap[j] + α·δ(j)`.
+///
+/// # Safety
+/// As [`apply_span`]; additionally `snap` slot `j` must be valid and
+/// written by exactly one caller.
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+pub(crate) unsafe fn snapshot_apply_span<D: DeltaSource>(
+    dispatch: KernelDispatch,
+    idx: *const u32,
+    delta: D,
+    w: *mut f32,
+    snap: *mut f32,
+    alpha: f32,
+    lo: usize,
+    hi: usize,
+    runs: Runs,
+) {
+    match dispatch {
+        KernelDispatch::Scalar => {
+            for j in lo..hi {
+                let i = *idx.add(j) as usize;
+                let wp = w.add(i);
+                let base = *wp;
+                *snap.add(j) = base;
+                *wp = base + alpha * delta.get(j);
+            }
+        }
+        KernelDispatch::Simd => {
+            let mut it = RunIter::new(idx, lo, hi, runs);
+            while let Some((s, e)) = it.next_run() {
+                let wp = w.add(*idx.add(s) as usize);
+                let sp = snap.add(s);
+                let n = e - s;
+                let chunks = n / LANES;
+                for c in 0..chunks {
+                    let o = c * LANES;
+                    let mut bv = [0f32; LANES];
+                    let mut dv = [0f32; LANES];
+                    for l in 0..LANES {
+                        bv[l] = *wp.add(o + l);
+                        dv[l] = delta.get(s + o + l);
+                    }
+                    for l in 0..LANES {
+                        *sp.add(o + l) = bv[l];
+                    }
+                    for l in 0..LANES {
+                        *wp.add(o + l) = bv[l] + alpha * dv[l];
+                    }
+                }
+                for t in (chunks * LANES)..n {
+                    let wpt = wp.add(t);
+                    let base = *wpt;
+                    *sp.add(t) = base;
+                    *wpt = base + alpha * delta.get(s + t);
+                }
+            }
+        }
+    }
+}
+
+/// Snapshot restore over `[lo, hi)`: `W.flat[idx[j]] = snap[j]`.
+///
+/// # Safety
+/// As [`apply_span`]; `snap[lo..hi)` must be live.
+pub(crate) unsafe fn restore_span(
+    dispatch: KernelDispatch,
+    idx: *const u32,
+    w: *mut f32,
+    snap: *const f32,
+    lo: usize,
+    hi: usize,
+    runs: Runs,
+) {
+    match dispatch {
+        KernelDispatch::Scalar => {
+            for j in lo..hi {
+                *w.add(*idx.add(j) as usize) = *snap.add(j);
+            }
+        }
+        KernelDispatch::Simd => {
+            let mut it = RunIter::new(idx, lo, hi, runs);
+            while let Some((s, e)) = it.next_run() {
+                // A run is a straight contiguous copy (pure stores of the
+                // snapshotted bits — trivially bit-identical).
+                let wp = w.add(*idx.add(s) as usize);
+                std::ptr::copy_nonoverlapping(snap.add(s), wp, e - s);
+            }
+        }
+    }
+}
+
+/// Gather over `[lo, hi)`: `out[j] = W.flat[idx[j]]`.
+///
+/// # Safety
+/// `idx[lo..hi)` in-bounds for `w`; `out` slot `j` valid and written by
+/// exactly one caller.
+pub(crate) unsafe fn gather_span(
+    dispatch: KernelDispatch,
+    idx: *const u32,
+    w: *const f32,
+    out: *mut f32,
+    lo: usize,
+    hi: usize,
+    runs: Runs,
+) {
+    match dispatch {
+        KernelDispatch::Scalar => {
+            for j in lo..hi {
+                *out.add(j) = *w.add(*idx.add(j) as usize);
+            }
+        }
+        KernelDispatch::Simd => {
+            let mut it = RunIter::new(idx, lo, hi, runs);
+            while let Some((s, e)) = it.next_run() {
+                let wp = w.add(*idx.add(s) as usize);
+                std::ptr::copy_nonoverlapping(wp, out.add(s), e - s);
+            }
+        }
+    }
+}
+
+/// One-pass A→B transition over union slots `[lo, hi)` (the three-class
+/// walk documented on `sparse::TransitionPlan`):
+///
+/// * A-only: `W = snap_a[ap]` (restore)
+/// * B-only: `snap_b[bp] = W; W += α·δ_B(bp)`
+/// * overlap: `snap_b[bp] = snap_a[ap]; W = snap_a[ap] + α·δ_B(bp)`
+///
+/// The SIMD execution additionally segments each consecutive union run by
+/// slot class: within a uniform-class segment `a_pos`/`b_pos` advance by
+/// one per slot, so A-only segments are contiguous copies from `snap_a`,
+/// B-only segments are contiguous snapshot+apply sweeps, and overlap
+/// segments are contiguous `snap_a`-sourced sweeps.
+///
+/// # Safety
+/// `union_idx[lo..hi)` unique and in-bounds for `w`; `a_pos`/`b_pos`
+/// entries `NONE_POS` or in-bounds for `snap_a` / (`snap_b`, `delta_b`);
+/// concurrent ranges disjoint; in cuts mode `runs` must describe exactly
+/// `[lo, hi)` of `union_idx`.
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+pub(crate) unsafe fn transition_span<D: DeltaSource>(
+    dispatch: KernelDispatch,
+    union_idx: *const u32,
+    a_pos: *const u32,
+    b_pos: *const u32,
+    delta_b: D,
+    w: *mut f32,
+    snap_a: *const f32,
+    snap_b: *mut f32,
+    alpha: f32,
+    lo: usize,
+    hi: usize,
+    runs: Runs,
+) {
+    match dispatch {
+        KernelDispatch::Scalar => {
+            for s in lo..hi {
+                let i = *union_idx.add(s) as usize;
+                let ap = *a_pos.add(s);
+                let bp = *b_pos.add(s);
+                if bp != NONE_POS {
+                    let base = if ap != NONE_POS {
+                        *snap_a.add(ap as usize)
+                    } else {
+                        *w.add(i)
+                    };
+                    *snap_b.add(bp as usize) = base;
+                    *w.add(i) = base + alpha * delta_b.get(bp as usize);
+                } else {
+                    *w.add(i) = *snap_a.add(ap as usize);
+                }
+            }
+        }
+        KernelDispatch::Simd => {
+            let mut it = RunIter::new(union_idx, lo, hi, runs);
+            while let Some((rs, re)) = it.next_run() {
+                let mut s = rs;
+                while s < re {
+                    // Extend the uniform-class segment [s, e).
+                    let has_a = *a_pos.add(s) != NONE_POS;
+                    let has_b = *b_pos.add(s) != NONE_POS;
+                    let mut e = s + 1;
+                    while e < re
+                        && (*a_pos.add(e) != NONE_POS) == has_a
+                        && (*b_pos.add(e) != NONE_POS) == has_b
+                    {
+                        e += 1;
+                    }
+                    let n = e - s;
+                    let wp = w.add(*union_idx.add(s) as usize);
+                    if !has_b {
+                        // A-only: contiguous restore from snap_a.
+                        let ap0 = *a_pos.add(s) as usize;
+                        std::ptr::copy_nonoverlapping(snap_a.add(ap0), wp, n);
+                    } else if !has_a {
+                        // B-only: live values are the base.
+                        let bp0 = *b_pos.add(s) as usize;
+                        let sb = snap_b.add(bp0);
+                        let chunks = n / LANES;
+                        for c in 0..chunks {
+                            let o = c * LANES;
+                            let mut bv = [0f32; LANES];
+                            let mut dv = [0f32; LANES];
+                            for l in 0..LANES {
+                                bv[l] = *wp.add(o + l);
+                                dv[l] = delta_b.get(bp0 + o + l);
+                            }
+                            for l in 0..LANES {
+                                *sb.add(o + l) = bv[l];
+                            }
+                            for l in 0..LANES {
+                                *wp.add(o + l) = bv[l] + alpha * dv[l];
+                            }
+                        }
+                        for t in (chunks * LANES)..n {
+                            let wpt = wp.add(t);
+                            let base = *wpt;
+                            *sb.add(t) = base;
+                            *wpt = base + alpha * delta_b.get(bp0 + t);
+                        }
+                    } else {
+                        // Overlap: the base is A's snapshot, not the live
+                        // value.
+                        let ap0 = *a_pos.add(s) as usize;
+                        let bp0 = *b_pos.add(s) as usize;
+                        let sa = snap_a.add(ap0);
+                        let sb = snap_b.add(bp0);
+                        let chunks = n / LANES;
+                        for c in 0..chunks {
+                            let o = c * LANES;
+                            let mut bv = [0f32; LANES];
+                            let mut dv = [0f32; LANES];
+                            for l in 0..LANES {
+                                bv[l] = *sa.add(o + l);
+                                dv[l] = delta_b.get(bp0 + o + l);
+                            }
+                            for l in 0..LANES {
+                                *sb.add(o + l) = bv[l];
+                            }
+                            for l in 0..LANES {
+                                *wp.add(o + l) = bv[l] + alpha * dv[l];
+                            }
+                        }
+                        for t in (chunks * LANES)..n {
+                            let base = *sa.add(t);
+                            *sb.add(t) = base;
+                            *wp.add(t) = base + alpha * delta_b.get(bp0 + t);
+                        }
+                    }
+                    s = e;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapter::io::f32_to_f16_bits;
+    use crate::adapter::sparse::{RunPlan, SparseDelta, TransitionPlan};
+    use crate::util::proptest as pt;
+    use crate::util::rng::Rng;
+
+    fn both() -> [KernelDispatch; 2] {
+        [KernelDispatch::Scalar, KernelDispatch::Simd]
+    }
+
+    /// Random sorted unique support with tunable run structure:
+    /// `style` 0 = one fully-contiguous block, 1 = uniform scatter,
+    /// 2 = clustered short runs.
+    fn support(rng: &mut Rng, numel: usize, k: usize, style: usize) -> Vec<u32> {
+        match style {
+            0 => {
+                let start = rng.below(numel - k + 1);
+                (start as u32..(start + k) as u32).collect()
+            }
+            1 => rng.sample_indices(numel, k),
+            _ => {
+                let mut set = std::collections::BTreeSet::new();
+                while set.len() < k {
+                    let start = rng.below(numel);
+                    let run = 1 + rng.below(2 * LANES);
+                    for i in start..(start + run).min(numel) {
+                        if set.len() >= k {
+                            break;
+                        }
+                        set.insert(i as u32);
+                    }
+                }
+                set.into_iter().collect()
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_parse_and_name_roundtrip() {
+        for d in both() {
+            assert_eq!(KernelDispatch::parse(d.name()), Some(d));
+        }
+        assert_eq!(KernelDispatch::parse("SIMD"), Some(KernelDispatch::Simd));
+        assert_eq!(KernelDispatch::parse("nope"), None);
+    }
+
+    #[test]
+    fn config_matches_legacy_constants() {
+        let c = config();
+        assert_eq!(c.par_min_nnz, 4096);
+        assert_eq!(c.nnz_per_shard, 2048);
+        assert_eq!(c.max_shards, MAX_SHARDS);
+        assert!(c.parallel_worthwhile(4096));
+        assert!(!c.parallel_worthwhile(4095));
+        assert_eq!(c.shards_for(0, 4), 1);
+        assert_eq!(c.shards_for(100_000, 4), 8);
+        assert_eq!(c.shards_for(1 << 30, 1024), MAX_SHARDS);
+    }
+
+    #[test]
+    fn run_iter_detect_finds_maximal_runs() {
+        let idx: Vec<u32> = vec![3, 4, 5, 9, 10, 20, 31, 32, 33, 34];
+        let mut it = RunIter::new(idx.as_ptr(), 0, idx.len(), Runs::Detect);
+        let mut got = Vec::new();
+        unsafe {
+            while let Some(r) = it.next_run() {
+                got.push(r);
+            }
+        }
+        assert_eq!(got, vec![(0, 3), (3, 5), (5, 6), (6, 10)]);
+    }
+
+    #[test]
+    fn run_iter_cuts_matches_detect() {
+        let mut rng = Rng::new(101);
+        for style in 0..3 {
+            for &k in &[1usize, 7, 8, 9, 40, 200] {
+                let idx = support(&mut rng, 4096, k, style);
+                let d = SparseDelta::new(64, 64, idx.clone(), vec![0.0; k]);
+                let plan = d.shard(1);
+                let runs = RunPlan::build(&idx, &plan);
+                let (ptr, len) = runs.span(0, k);
+                let mut a = RunIter::new(idx.as_ptr(), 0, k, Runs::Detect);
+                let mut b = RunIter::new(idx.as_ptr(), 0, k, Runs::Cuts { ptr, len });
+                unsafe {
+                    loop {
+                        let (x, y) = (a.next_run(), b.next_run());
+                        assert_eq!(x, y, "style={style} k={k}");
+                        if x.is_none() {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_simd_bit_identical_to_scalar_all_kernels() {
+        // The tentpole invariant, at the kernel level: for random supports
+        // across run-structure styles, lane remainders, and shard cuts,
+        // every SIMD span kernel produces the bytes of its scalar twin.
+        pt::forall(
+            201,
+            40,
+            |r| {
+                let style = r.below(3);
+                let k = 1 + r.below(600);
+                let alpha = -2.0 + 4.0 * r.uniform_f32();
+                let shards = 1 + r.below(6);
+                (r.next_u64(), style, k, alpha, shards)
+            },
+            |&(seed, style, k, alpha, shards)| {
+                let mut rng = Rng::new(seed);
+                let (rows, cols) = (64usize, 64usize);
+                let idx = support(&mut rng, rows * cols, k, style);
+                let k = idx.len();
+                let mut delta = vec![0.0f32; k];
+                rng.fill_normal(&mut delta, 0.0, 1.0);
+                let d = SparseDelta::new(rows, cols, idx, delta);
+                let mut w0 = vec![0.0f32; rows * cols];
+                rng.fill_normal(&mut w0, 0.0, 1.0);
+                let plan = d.shard(shards);
+                let runs = RunPlan::build(&d.idx, &plan);
+
+                // scalar reference for each kernel
+                let mut w_ref = w0.clone();
+                let mut snap_ref = vec![0.0f32; k];
+                let mut gat_ref = vec![0.0f32; k];
+                unsafe {
+                    snapshot_apply_span(
+                        KernelDispatch::Scalar,
+                        d.idx.as_ptr(),
+                        F32Src(d.delta.as_ptr()),
+                        w_ref.as_mut_ptr(),
+                        snap_ref.as_mut_ptr(),
+                        alpha,
+                        0,
+                        k,
+                        Runs::Detect,
+                    );
+                    gather_span(
+                        KernelDispatch::Scalar,
+                        d.idx.as_ptr(),
+                        w_ref.as_ptr(),
+                        gat_ref.as_mut_ptr(),
+                        0,
+                        k,
+                        Runs::Detect,
+                    );
+                }
+
+                // SIMD over the sharded spans with precomputed cuts, plus
+                // apply/restore round-trip.
+                let mut w = w0.clone();
+                let mut snap = vec![0.0f32; k];
+                let mut gat = vec![0.0f32; k];
+                for s in 0..plan.len() {
+                    let (lo, hi) = plan.range(s);
+                    let (ptr, len) = runs.span(lo, hi);
+                    let rc = Runs::Cuts { ptr, len };
+                    unsafe {
+                        snapshot_apply_span(
+                            KernelDispatch::Simd,
+                            d.idx.as_ptr(),
+                            F32Src(d.delta.as_ptr()),
+                            w.as_mut_ptr(),
+                            snap.as_mut_ptr(),
+                            alpha,
+                            lo,
+                            hi,
+                            rc,
+                        );
+                        gather_span(
+                            KernelDispatch::Simd,
+                            d.idx.as_ptr(),
+                            w.as_ptr(),
+                            gat.as_mut_ptr(),
+                            lo,
+                            hi,
+                            rc,
+                        );
+                    }
+                }
+                if w != w_ref || snap != snap_ref || gat != gat_ref {
+                    return false;
+                }
+
+                // restore (SIMD, detect mode) must return w0 exactly, and
+                // apply_span must equal snapshot_apply's weight effect.
+                let mut w2 = w0.clone();
+                unsafe {
+                    apply_span(
+                        KernelDispatch::Simd,
+                        d.idx.as_ptr(),
+                        F32Src(d.delta.as_ptr()),
+                        w2.as_mut_ptr(),
+                        alpha,
+                        0,
+                        k,
+                        Runs::Detect,
+                    );
+                    restore_span(
+                        KernelDispatch::Simd,
+                        d.idx.as_ptr(),
+                        w.as_mut_ptr(),
+                        snap.as_ptr(),
+                        0,
+                        k,
+                        Runs::Detect,
+                    );
+                }
+                w2 == w_ref && w == w0
+            },
+        );
+    }
+
+    #[test]
+    fn prop_transition_span_simd_matches_scalar_all_overlap_classes() {
+        pt::forall(
+            202,
+            30,
+            |r| {
+                let style_a = r.below(3);
+                let style_b = r.below(3);
+                let ka = 1 + r.below(400);
+                let kb = 1 + r.below(400);
+                let alpha = -2.0 + 4.0 * r.uniform_f32();
+                (r.next_u64(), style_a, style_b, ka, kb, alpha)
+            },
+            |&(seed, style_a, style_b, ka, kb, alpha)| {
+                let mut rng = Rng::new(seed);
+                let (rows, cols) = (48usize, 48usize);
+                let numel = rows * cols;
+                let ia = support(&mut rng, numel, ka, style_a);
+                let ib = support(&mut rng, numel, kb, style_b);
+                let mut da = vec![0.0f32; ia.len()];
+                let mut db = vec![0.0f32; ib.len()];
+                rng.fill_normal(&mut da, 0.0, 1.0);
+                rng.fill_normal(&mut db, 0.0, 1.0);
+                let a = SparseDelta::new(rows, cols, ia, da);
+                let b = SparseDelta::new(rows, cols, ib, db);
+                let tp = TransitionPlan::build(&a, &b, 3);
+                let mut w0 = vec![0.0f32; numel];
+                rng.fill_normal(&mut w0, 0.0, 1.0);
+                let mut wt = crate::model::tensor::Tensor2::zeros(rows, cols);
+                wt.data.copy_from_slice(&w0);
+                let snap_a = a.snapshot(&wt);
+                a.apply(&mut wt, 0.9);
+
+                let (ui, ap, bp) = tp.raw_parts();
+                let un = tp.union_nnz();
+                let run = |disp: KernelDispatch| {
+                    let mut w = wt.data.clone();
+                    let mut snap_b = vec![0.0f32; b.nnz()];
+                    unsafe {
+                        transition_span(
+                            disp,
+                            ui,
+                            ap,
+                            bp,
+                            F32Src(b.delta.as_ptr()),
+                            w.as_mut_ptr(),
+                            snap_a.as_ptr(),
+                            snap_b.as_mut_ptr(),
+                            alpha,
+                            0,
+                            un,
+                            Runs::Detect,
+                        );
+                    }
+                    (w, snap_b)
+                };
+                let (w_s, sb_s) = run(KernelDispatch::Scalar);
+                let (w_v, sb_v) = run(KernelDispatch::Simd);
+                w_s == w_v && sb_s == sb_v
+            },
+        );
+    }
+
+    #[test]
+    fn prop_f16_source_matches_f32_of_decoded_bits() {
+        // f16-resident apply ≡ f32-apply of the decoded (widened) values:
+        // the widening is exact, so both dispatches and both sources agree
+        // bit for bit.
+        pt::forall(
+            203,
+            30,
+            |r| {
+                let style = r.below(3);
+                let k = 1 + r.below(300);
+                let alpha = -2.0 + 4.0 * r.uniform_f32();
+                (r.next_u64(), style, k, alpha)
+            },
+            |&(seed, style, k, alpha)| {
+                let mut rng = Rng::new(seed);
+                let numel = 2048usize;
+                let idx = support(&mut rng, numel, k, style);
+                let k = idx.len();
+                let mut vals = vec![0.0f32; k];
+                rng.fill_normal(&mut vals, 0.0, 1.0);
+                let bits: Vec<u16> = vals.iter().map(|&v| f32_to_f16_bits(v)).collect();
+                let decoded: Vec<f32> = bits.iter().map(|&b| f16_bits_to_f32(b)).collect();
+                let mut w0 = vec![0.0f32; numel];
+                rng.fill_normal(&mut w0, 0.0, 1.0);
+                both().iter().all(|&disp| {
+                    let mut w16 = w0.clone();
+                    let mut s16 = vec![0.0f32; k];
+                    let mut w32 = w0.clone();
+                    let mut s32 = vec![0.0f32; k];
+                    unsafe {
+                        snapshot_apply_span(
+                            disp,
+                            idx.as_ptr(),
+                            F16Src(bits.as_ptr()),
+                            w16.as_mut_ptr(),
+                            s16.as_mut_ptr(),
+                            alpha,
+                            0,
+                            k,
+                            Runs::Detect,
+                        );
+                        snapshot_apply_span(
+                            disp,
+                            idx.as_ptr(),
+                            F32Src(decoded.as_ptr()),
+                            w32.as_mut_ptr(),
+                            s32.as_mut_ptr(),
+                            alpha,
+                            0,
+                            k,
+                            Runs::Detect,
+                        );
+                    }
+                    w16 == w32 && s16 == s32
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn force_dispatch_round_trips() {
+        // Note: other tests read `active_dispatch()` only through engine
+        // constructors that tolerate either mode (both are bit-identical
+        // for f32), so flipping the global here is safe.
+        let before = active_dispatch();
+        force_dispatch(KernelDispatch::Scalar);
+        assert_eq!(active_dispatch(), KernelDispatch::Scalar);
+        force_dispatch(KernelDispatch::Simd);
+        assert_eq!(active_dispatch(), KernelDispatch::Simd);
+        force_dispatch(before);
+    }
+}

@@ -2,11 +2,12 @@
 //! coordinator trains, stores, switches and fuses.
 
 pub mod io;
+pub mod kernel;
 pub mod mask;
 pub mod sparse;
 
 use crate::model::tensor::Tensor2;
-use sparse::SparseDelta;
+use sparse::{SparseDelta, SparseDeltaF16};
 
 /// One LoRA target: W' = W + scale · A @ B.
 #[derive(Clone, Debug, PartialEq)]
@@ -141,6 +142,56 @@ impl ShiraAdapter {
             0.0
         } else {
             inter as f64 / denom as f64
+        }
+    }
+}
+
+/// A SHiRA adapter whose delta values stay f16-resident (raw binary16
+/// bits) — the store's halved-footprint residency mode (DESIGN.md §15).
+/// Same sorted supports as [`ShiraAdapter`]; values are widened to f32
+/// lane-wise inside the kernel on apply.  Widening is exact, so serving
+/// this is bit-identical to serving [`ShiraF16Adapter::to_shira`]'s f32
+/// materialization.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShiraF16Adapter {
+    /// Adapter name (unique within a store).
+    pub name: String,
+    /// Strategy used to build the mask (metadata).
+    pub strategy: String,
+    /// (target tensor name, f16-resident sparse delta) pairs.
+    pub tensors: Vec<(String, SparseDeltaF16)>,
+}
+
+impl ShiraF16Adapter {
+    /// Trainable parameters = total nnz across targets.
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|(_, d)| d.nnz()).sum()
+    }
+
+    /// Resident bytes: idx (u32) + bits (u16) per entry.
+    pub fn nbytes(&self) -> usize {
+        self.tensors.iter().map(|(_, d)| d.nbytes()).sum()
+    }
+
+    /// The f16-resident delta for `target`, if this adapter touches it.
+    pub fn find(&self, target: &str) -> Option<&SparseDeltaF16> {
+        self.tensors
+            .iter()
+            .find(|(n, _)| n == target)
+            .map(|(_, d)| d)
+    }
+
+    /// Exact f32 materialization (used when an f16-resident member joins
+    /// a fused set, where the fusion engine folds f32 contributor values).
+    pub fn to_shira(&self) -> ShiraAdapter {
+        ShiraAdapter {
+            name: self.name.clone(),
+            strategy: self.strategy.clone(),
+            tensors: self
+                .tensors
+                .iter()
+                .map(|(n, d)| (n.clone(), d.to_f32()))
+                .collect(),
         }
     }
 }
@@ -341,6 +392,35 @@ mod tests {
     fn pct_math() {
         assert_eq!(pct(1, 100), 1.0);
         assert_eq!(pct(0, 5), 0.0);
+    }
+
+    #[test]
+    fn shira_f16_adapter_counts_and_materializes() {
+        let mut rng = Rng::new(5);
+        let a = shira(&mut rng, "a");
+        let q = ShiraF16Adapter {
+            name: a.name.clone(),
+            strategy: a.strategy.clone(),
+            tensors: a
+                .tensors
+                .iter()
+                .map(|(n, d)| (n.clone(), SparseDeltaF16::from_f32(d)))
+                .collect(),
+        };
+        assert_eq!(q.param_count(), a.param_count());
+        assert_eq!(q.nbytes(), a.param_count() * 6);
+        assert!(q.find("l0.wq").is_some());
+        assert!(q.find("nope").is_none());
+        let m = q.to_shira();
+        assert_eq!(m.name, a.name);
+        assert_eq!(m.param_count(), a.param_count());
+        // values round-trip through f16 narrow+widen within quantization
+        for ((_, md), (_, ad)) in m.tensors.iter().zip(&a.tensors) {
+            assert_eq!(md.idx, ad.idx);
+            for (x, y) in md.delta.iter().zip(&ad.delta) {
+                assert!((x - y).abs() < 1e-2);
+            }
+        }
     }
 
     #[test]

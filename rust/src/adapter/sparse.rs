@@ -13,7 +13,15 @@
 //! Every parallel path is bit-identical to its serial counterpart: each
 //! element is touched by exactly one shard and the per-element arithmetic
 //! is unchanged.
+//!
+//! The per-element loops themselves live in [`crate::adapter::kernel`]
+//! (DESIGN.md §15): every scatter here hands its span to a dispatch-
+//! selected kernel (scalar reference or row-run SIMD sweeps).  A
+//! [`RunPlan`] precomputes the consecutive-index run cuts alongside each
+//! [`ShardPlan`] (the pair is a [`TensorPlan`]) so the hot engine paths
+//! sweep contiguous runs without a detection pass.
 
+use crate::adapter::kernel::{self, F16Src, F32Src, Runs};
 use crate::model::tensor::Tensor2;
 use crate::util::threadpool::{SendPtr, ThreadPool};
 
@@ -21,20 +29,21 @@ use crate::util::threadpool::{SendPtr, ThreadPool};
 /// allocation-free) value, which the zero-alloc switch path relies on.
 pub const MAX_SHARDS: usize = 64;
 
-/// Below this many touched entries per operation, shard dispatch overhead
-/// exceeds the scatter itself and engines stay serial (shared by the
-/// switch and fusion engines so the thresholds cannot drift apart).
+/// Deprecated alias of [`kernel::KernelConfig::par_min_nnz`] — the
+/// threshold now has one home shared by both engines.
+#[deprecated(note = "read kernel::config().par_min_nnz instead")]
+#[allow(dead_code)]
 pub(crate) const PAR_MIN_NNZ: usize = 4096;
 
-/// Target entries per shard (≈ a few cache-resident strides of work).
+/// Deprecated alias of [`kernel::KernelConfig::nnz_per_shard`].
+#[deprecated(note = "read kernel::config().nnz_per_shard instead")]
+#[allow(dead_code)]
 pub(crate) const NNZ_PER_SHARD: usize = 2048;
 
-/// Shard count for an `nnz`-entry scatter on a `threads`-wide pool.
+/// Shard count for an `nnz`-entry scatter on a `threads`-wide pool
+/// (delegates to the crate-wide [`kernel::KernelConfig`]).
 pub(crate) fn shards_for(nnz: usize, threads: usize) -> usize {
-    (nnz / NNZ_PER_SHARD)
-        .max(1)
-        .min(threads * 2)
-        .min(MAX_SHARDS)
+    kernel::config().shards_for(nnz, threads)
 }
 
 /// Row-aligned partition of a sorted index array into `n` contiguous
@@ -66,6 +75,106 @@ impl ShardPlan {
     /// Total entries covered (== nnz of the delta the plan was built for).
     pub fn total(&self) -> usize {
         self.bounds[self.n_shards]
+    }
+}
+
+/// Precomputed row-run decomposition of a sorted support: the positions
+/// where consecutive-index runs break, merged with the boundaries of the
+/// [`ShardPlan`] it was built against, as one strictly increasing cut
+/// array `[0, …, nnz]`.  [`RunPlan::span`] hands any shard range its cut
+/// sub-array in O(log n), so the SIMD kernels sweep contiguous runs
+/// without an on-the-fly detection pass (DESIGN.md §15).
+#[derive(Clone, Debug)]
+pub struct RunPlan {
+    /// Strictly increasing; `cuts[0] == 0`, `cuts[last] == nnz` (empty
+    /// support ⇒ just `[0]`), and every shard boundary appears.
+    cuts: Vec<u32>,
+}
+
+impl RunPlan {
+    /// Decompose `idx` (sorted unique) into maximal consecutive runs,
+    /// cutting additionally at every boundary of `shards` so each shard's
+    /// range is exactly covered by whole cut intervals.
+    pub fn build(idx: &[u32], shards: &ShardPlan) -> RunPlan {
+        debug_assert_eq!(shards.total(), idx.len());
+        let nnz = idx.len();
+        let mut cuts: Vec<u32> = Vec::with_capacity(shards.len() + 1);
+        cuts.push(0);
+        for p in 1..nnz {
+            if idx[p] != idx[p - 1] + 1 {
+                cuts.push(p as u32);
+            }
+        }
+        if nnz > 0 {
+            cuts.push(nnz as u32);
+        }
+        for s in 1..shards.len() {
+            let b = shards.range(s).0 as u32;
+            if let Err(i) = cuts.binary_search(&b) {
+                cuts.insert(i, b);
+            }
+        }
+        cuts.shrink_to_fit();
+        RunPlan { cuts }
+    }
+
+    /// Number of cut intervals (runs after shard splitting).
+    pub fn n_runs(&self) -> usize {
+        self.cuts.len().saturating_sub(1)
+    }
+
+    /// Heap bytes held (plan-cache accounting).
+    pub fn nbytes(&self) -> usize {
+        self.cuts.len() * 4
+    }
+
+    /// The cut sub-array covering `[lo, hi)` as a `(first_cut, n_cuts)`
+    /// pair for [`kernel::Runs::Cuts`].  `lo` and `hi` must be cut
+    /// positions of this plan — shard boundaries of the plan it was built
+    /// against always are.
+    pub(crate) fn span(&self, lo: usize, hi: usize) -> (*const u32, usize) {
+        let lo_i = self.cuts.partition_point(|&c| (c as usize) < lo);
+        let hi_i = self.cuts.partition_point(|&c| (c as usize) < hi);
+        debug_assert_eq!(self.cuts.get(lo_i).map(|&c| c as usize), Some(lo));
+        debug_assert_eq!(self.cuts.get(hi_i).map(|&c| c as usize), Some(hi));
+        // SAFETY: partition_point ≤ len, so the pointer stays inside (or
+        // one past) the Vec's buffer.
+        (unsafe { self.cuts.as_ptr().add(lo_i) }, hi_i - lo_i + 1)
+    }
+}
+
+/// Everything the engines precompute per tensor for dispatch: the
+/// row-aligned [`ShardPlan`] plus the [`RunPlan`] the SIMD kernels sweep.
+#[derive(Clone, Debug)]
+pub struct TensorPlan {
+    /// Row-aligned shard partition (one wave slot per shard).
+    pub shards: ShardPlan,
+    /// Run cuts over the same support, aligned to the shard boundaries.
+    pub runs: RunPlan,
+}
+
+impl TensorPlan {
+    /// Build both plans for `d` at `n_shards`-wide dispatch.
+    pub fn build(d: &SparseDelta, n_shards: usize) -> TensorPlan {
+        TensorPlan::from_idx(&d.idx, d.cols, n_shards)
+    }
+
+    /// Build from any sorted unique support (shared with the f16-resident
+    /// decode path, which never materializes a [`SparseDelta`]).
+    pub fn from_idx(idx: &[u32], cols: usize, n_shards: usize) -> TensorPlan {
+        let shards = shard_sorted(idx, cols, n_shards);
+        let runs = RunPlan::build(idx, &shards);
+        TensorPlan { shards, runs }
+    }
+
+    /// nnz covered (== support length both plans were built for).
+    pub fn total(&self) -> usize {
+        self.shards.total()
+    }
+
+    /// Heap bytes held (plan-cache accounting).
+    pub fn nbytes(&self) -> usize {
+        self.runs.nbytes() + std::mem::size_of::<TensorPlan>()
     }
 }
 
@@ -198,10 +307,16 @@ impl SparseDelta {
 
     #[inline]
     unsafe fn apply_raw(&self, w: *mut f32, alpha: f32, lo: usize, hi: usize) {
-        for j in lo..hi {
-            let i = *self.idx.get_unchecked(j) as usize;
-            *w.add(i) += alpha * *self.delta.get_unchecked(j);
-        }
+        kernel::apply_span(
+            kernel::active_dispatch(),
+            self.idx.as_ptr(),
+            F32Src(self.delta.as_ptr()),
+            w,
+            alpha,
+            lo,
+            hi,
+            Runs::Detect,
+        )
     }
 
     // -- snapshot / restore ----------------------------------------------
@@ -274,7 +389,17 @@ impl SparseDelta {
         lo: usize,
         hi: usize,
     ) {
-        scatter_snapshot_apply(self.idx.as_ptr(), self.delta.as_ptr(), w, snap, alpha, lo, hi)
+        kernel::snapshot_apply_span(
+            kernel::active_dispatch(),
+            self.idx.as_ptr(),
+            F32Src(self.delta.as_ptr()),
+            w,
+            snap,
+            alpha,
+            lo,
+            hi,
+            Runs::Detect,
+        )
     }
 
     /// Exact revert: write back a snapshot taken before `apply`.
@@ -307,7 +432,15 @@ impl SparseDelta {
 
     #[inline]
     unsafe fn restore_raw(&self, w: *mut f32, snap: *const f32, lo: usize, hi: usize) {
-        scatter_restore(self.idx.as_ptr(), w, snap, lo, hi)
+        kernel::restore_span(
+            kernel::active_dispatch(),
+            self.idx.as_ptr(),
+            w,
+            snap,
+            lo,
+            hi,
+            Runs::Detect,
+        )
     }
 
     // -- gather -----------------------------------------------------------
@@ -332,11 +465,17 @@ impl SparseDelta {
         let plan = *plan;
         pool.scoped_for(plan.len(), move |s| {
             let (lo, hi) = plan.range(s);
-            for j in lo..hi {
-                // SAFETY: disjoint out slots per shard; idx validated.
-                unsafe {
-                    *op.get().add(j) = wd[*self.idx.get_unchecked(j) as usize];
-                }
+            // SAFETY: disjoint out slots per shard; idx validated.
+            unsafe {
+                kernel::gather_span(
+                    kernel::active_dispatch(),
+                    self.idx.as_ptr(),
+                    wd.as_ptr(),
+                    op.get(),
+                    lo,
+                    hi,
+                    Runs::Detect,
+                )
             }
         });
     }
@@ -510,47 +649,129 @@ impl SparseDelta {
     }
 }
 
-/// The fused snapshot-then-apply scatter kernel over `[lo, hi)` — the one
-/// definition shared by the serial path, the shard-parallel path, and the
-/// switch engine's task list (so the bit-identity argument has a single
-/// code location).
+/// f16-resident sparse delta: the same sorted support as [`SparseDelta`]
+/// with values held as raw IEEE 754 binary16 bits — 2 bytes per entry
+/// instead of 4, halving resident delta bytes and apply-time cache
+/// traffic (the store's f16-resident mode, DESIGN.md §15).  Values are
+/// widened to f32 lane-wise inside the kernel on apply; widening is
+/// exact, so serving an f16-resident adapter is bit-identical to serving
+/// the f32 decode of the same `v2-f16` file.
 ///
-/// # Safety
-/// `idx[lo..hi)` must be unique, in-bounds for `w`, and valid for `snap`
-/// slot `j`; ranges handed to concurrent callers must be disjoint.
-#[inline]
-pub(crate) unsafe fn scatter_snapshot_apply(
-    idx: *const u32,
-    delta: *const f32,
-    w: *mut f32,
-    snap: *mut f32,
-    alpha: f32,
-    lo: usize,
-    hi: usize,
-) {
-    for j in lo..hi {
-        let i = *idx.add(j) as usize;
-        let wp = w.add(i);
-        let base = *wp;
-        *snap.add(j) = base;
-        *wp = base + alpha * *delta.add(j);
-    }
+/// # Examples
+///
+/// ```
+/// use shira::adapter::sparse::{SparseDelta, SparseDeltaF16};
+///
+/// let d = SparseDelta::new(2, 4, vec![1, 6], vec![0.5, -2.0]);
+/// let q = SparseDeltaF16::from_f32(&d); // lossy narrowing (RNE)
+/// assert_eq!(q.to_f32(), d); // 0.5 and -2.0 are f16-representable
+/// assert_eq!(q.nbytes(), 12); // 6 B/entry vs SparseDelta's 8
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseDeltaF16 {
+    /// Rows of the target tensor.
+    pub rows: usize,
+    /// Columns of the target tensor.
+    pub cols: usize,
+    /// Sorted, unique flat indices (row-major).
+    pub idx: Vec<u32>,
+    /// Raw binary16 bits of delta[i].
+    pub bits: Vec<u16>,
 }
 
-/// Snapshot-restore kernel over `[lo, hi)` (see [`scatter_snapshot_apply`]).
-///
-/// # Safety
-/// Same contract as [`scatter_snapshot_apply`].
-#[inline]
-pub(crate) unsafe fn scatter_restore(
-    idx: *const u32,
-    w: *mut f32,
-    snap: *const f32,
-    lo: usize,
-    hi: usize,
-) {
-    for j in lo..hi {
-        *w.add(*idx.add(j) as usize) = *snap.add(j);
+impl SparseDeltaF16 {
+    /// Build from sorted unique flat indices and raw binary16 values.
+    pub fn new(rows: usize, cols: usize, idx: Vec<u32>, bits: Vec<u16>) -> Self {
+        assert_eq!(idx.len(), bits.len());
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices sorted+unique");
+        debug_assert!(idx.iter().all(|&i| (i as usize) < rows * cols));
+        SparseDeltaF16 {
+            rows,
+            cols,
+            idx,
+            bits,
+        }
+    }
+
+    /// Number of nonzero entries.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Elements of the target tensor (rows × cols).
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Resident bytes (idx u32 + bits u16 — 6 B/entry vs f32's 8).
+    pub fn nbytes(&self) -> usize {
+        self.nnz() * 6
+    }
+
+    /// Row-aligned shard partition (see [`SparseDelta::shard`]).
+    pub fn shard(&self, n_shards: usize) -> ShardPlan {
+        shard_sorted(&self.idx, self.cols, n_shards)
+    }
+
+    /// Exact widening to an f32-resident delta (every binary16 value is
+    /// representable in f32, so this is lossless and `to_f32().apply` is
+    /// bit-identical to the kernel's lane-wise dequantized apply).
+    pub fn to_f32(&self) -> SparseDelta {
+        let delta = self
+            .bits
+            .iter()
+            .map(|&b| crate::adapter::io::f16_bits_to_f32(b))
+            .collect();
+        SparseDelta::new(self.rows, self.cols, self.idx.clone(), delta)
+    }
+
+    /// Lossy narrowing (round-to-nearest-even) — the quantization step.
+    /// `from_f32(d).to_f32() == d` only when every value of `d` is
+    /// f16-representable (always true for values decoded from `v2-f16`).
+    pub fn from_f32(d: &SparseDelta) -> SparseDeltaF16 {
+        let bits = d
+            .delta
+            .iter()
+            .map(|&v| crate::adapter::io::f32_to_f16_bits(v))
+            .collect();
+        SparseDeltaF16::new(d.rows, d.cols, d.idx.clone(), bits)
+    }
+
+    /// Serial fused snapshot+apply (the reference twin of the switch
+    /// engine's f16 task path).
+    pub fn snapshot_apply(&self, w: &mut Tensor2, alpha: f32, snap: &mut [f32]) {
+        assert_eq!(snap.len(), self.nnz());
+        debug_assert_eq!((w.rows, w.cols), (self.rows, self.cols));
+        unsafe {
+            kernel::snapshot_apply_span(
+                kernel::active_dispatch(),
+                self.idx.as_ptr(),
+                F16Src(self.bits.as_ptr()),
+                w.data.as_mut_ptr(),
+                snap.as_mut_ptr(),
+                alpha,
+                0,
+                self.nnz(),
+                Runs::Detect,
+            )
+        }
+    }
+
+    /// Exact revert: write back a snapshot taken before apply (bit-wise
+    /// identical to [`SparseDelta::restore`] — only indices are read).
+    pub fn restore(&self, w: &mut Tensor2, snapshot: &[f32]) {
+        assert_eq!(snapshot.len(), self.nnz());
+        unsafe {
+            kernel::restore_span(
+                kernel::active_dispatch(),
+                self.idx.as_ptr(),
+                w.data.as_mut_ptr(),
+                snapshot.as_ptr(),
+                0,
+                self.nnz(),
+                Runs::Detect,
+            )
+        }
     }
 }
 
@@ -589,8 +810,8 @@ pub(crate) const NONE_POS: u32 = u32::MAX;
 /// merged union of A's and B's sorted supports with each union slot
 /// classified by which sides carry it.
 ///
-/// Slot classification (the three cases of the `scatter_transition`
-/// kernel):
+/// Slot classification (the three cases of the transition kernel,
+/// [`kernel::transition_span`]):
 ///
 /// * **A-only** (`a_pos` set, `b_pos` absent): restore A's snapshot value —
 ///   exactly what `revert` would have written, and B leaves it alone.
@@ -646,6 +867,9 @@ pub struct TransitionPlan {
     overlap: usize,
     /// Row-aligned shards over the union walk (one-wave dispatch).
     shards: ShardPlan,
+    /// Run cuts over the union walk, aligned to the shard boundaries
+    /// (lets the SIMD kernel sweep consecutive union slots).
+    runs: RunPlan,
 }
 
 impl TransitionPlan {
@@ -689,6 +913,7 @@ impl TransitionPlan {
         a_pos.shrink_to_fit();
         b_pos.shrink_to_fit();
         let shards = shard_sorted(&union_idx, a.cols, n_shards);
+        let runs = RunPlan::build(&union_idx, &shards);
         TransitionPlan {
             rows: a.rows,
             cols: a.cols,
@@ -699,6 +924,7 @@ impl TransitionPlan {
             b_nnz: b.nnz(),
             overlap,
             shards,
+            runs,
         }
     }
 
@@ -737,9 +963,14 @@ impl TransitionPlan {
         &self.shards
     }
 
+    /// The embedded run cuts over the union walk.
+    pub(crate) fn runs(&self) -> &RunPlan {
+        &self.runs
+    }
+
     /// Heap bytes held by the plan (the plan-cache accounting unit).
     pub fn nbytes(&self) -> usize {
-        self.union_idx.len() * 12 + std::mem::size_of::<TransitionPlan>()
+        self.union_idx.len() * 12 + self.runs.nbytes() + std::mem::size_of::<TransitionPlan>()
     }
 
     /// Raw array pointers for the engine's flat task list:
@@ -771,18 +1002,22 @@ impl TransitionPlan {
         assert_eq!(snap_a.len(), self.a_nnz);
         assert_eq!(snap_b.len(), self.b_nnz);
         assert_eq!(b.nnz(), self.b_nnz);
+        let un = self.union_idx.len();
+        let (rp, rn) = self.runs.span(0, un);
         unsafe {
-            scatter_transition(
+            kernel::transition_span(
+                kernel::active_dispatch(),
                 self.union_idx.as_ptr(),
                 self.a_pos.as_ptr(),
                 self.b_pos.as_ptr(),
-                b.delta.as_ptr(),
+                F32Src(b.delta.as_ptr()),
                 w.data.as_mut_ptr(),
                 snap_a.as_ptr(),
                 snap_b.as_mut_ptr(),
                 alpha,
                 0,
-                self.union_idx.len(),
+                un,
+                Runs::Cuts { ptr: rp, len: rn },
             )
         }
     }
@@ -807,70 +1042,29 @@ impl TransitionPlan {
         let wp = SendPtr::new(w.data.as_mut_ptr());
         let sb = SendPtr::new(snap_b.as_mut_ptr());
         let plan = self.shards;
+        let dispatch = kernel::active_dispatch();
         pool.scoped_for(plan.len(), move |s| {
             let (lo, hi) = plan.range(s);
+            let (rp, rn) = self.runs.span(lo, hi);
             // SAFETY: shards cover disjoint union ranges; union indices
             // are unique, so W and snap_b slots are written exactly once.
             unsafe {
-                scatter_transition(
+                kernel::transition_span(
+                    dispatch,
                     self.union_idx.as_ptr(),
                     self.a_pos.as_ptr(),
                     self.b_pos.as_ptr(),
-                    b.delta.as_ptr(),
+                    F32Src(b.delta.as_ptr()),
                     wp.get(),
                     snap_a.as_ptr(),
                     sb.get(),
                     alpha,
                     lo,
                     hi,
+                    Runs::Cuts { ptr: rp, len: rn },
                 )
             }
         });
-    }
-}
-
-/// The fused one-pass transition kernel over union slots `[lo, hi)` — the
-/// one definition shared by [`TransitionPlan::transition`], its parallel
-/// twin, and the switch engine's flat task list.  Per slot it performs the
-/// A-only / B-only / overlap action described on [`TransitionPlan`].
-///
-/// # Safety
-/// `union_idx[lo..hi)` must be unique and in-bounds for `w`; `a_pos` /
-/// `b_pos` entries must be `NONE_POS` or in-bounds for `snap_a` /
-/// (`snap_b`, `delta_b`); ranges handed to concurrent callers must be
-/// disjoint.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-pub(crate) unsafe fn scatter_transition(
-    union_idx: *const u32,
-    a_pos: *const u32,
-    b_pos: *const u32,
-    delta_b: *const f32,
-    w: *mut f32,
-    snap_a: *const f32,
-    snap_b: *mut f32,
-    alpha: f32,
-    lo: usize,
-    hi: usize,
-) {
-    for s in lo..hi {
-        let i = *union_idx.add(s) as usize;
-        let ap = *a_pos.add(s);
-        let bp = *b_pos.add(s);
-        if bp != NONE_POS {
-            let base = if ap != NONE_POS {
-                // overlap: the base is A's snapshot, not the live value
-                *snap_a.add(ap as usize)
-            } else {
-                // B-only: A never touched this slot, live value IS base
-                *w.add(i)
-            };
-            *snap_b.add(bp as usize) = base;
-            *w.add(i) = base + alpha * *delta_b.add(bp as usize);
-        } else {
-            // A-only: plain restore
-            *w.add(i) = *snap_a.add(ap as usize);
-        }
     }
 }
 
@@ -1511,5 +1705,97 @@ mod tests {
         let mut w = Tensor2::zeros(8, 8);
         d.apply(&mut w, 1.0);
         assert_eq!(w, d.to_dense());
+    }
+
+    #[test]
+    fn run_plan_cuts_cover_runs_and_shard_bounds() {
+        let mut rng = Rng::new(70);
+        for &(rows, cols, k, n) in
+            &[(64usize, 64usize, 900usize, 6usize), (8, 128, 300, 8), (4, 4, 0, 3), (16, 16, 1, 2)]
+        {
+            let d = random_delta(&mut rng, rows, cols, k);
+            let shards = d.shard(n);
+            let rp = RunPlan::build(&d.idx, &shards);
+            // every shard bound must be a cut, and span() must find it
+            for s in 0..shards.len() {
+                let (lo, hi) = shards.range(s);
+                let (_, len) = rp.span(lo, hi);
+                assert!(len >= 1);
+            }
+            // walk the full span: cuts strictly increasing, runs truly
+            // consecutive inside, breaks real at boundaries
+            let (ptr, len) = rp.span(0, d.nnz());
+            let cuts: Vec<u32> =
+                (0..len).map(|i| unsafe { *ptr.add(i) }).collect();
+            assert_eq!(cuts.first().copied(), Some(0));
+            if d.nnz() > 0 {
+                assert_eq!(cuts.last().copied(), Some(d.nnz() as u32));
+            }
+            assert!(cuts.windows(2).all(|w| w[0] < w[1]));
+            for w2 in cuts.windows(2) {
+                let (s, e) = (w2[0] as usize, w2[1] as usize);
+                for p in s + 1..e {
+                    assert_eq!(d.idx[p], d.idx[p - 1] + 1, "run not consecutive");
+                }
+            }
+            assert_eq!(rp.n_runs(), cuts.len() - 1);
+        }
+    }
+
+    #[test]
+    fn tensor_plan_matches_shard_plan() {
+        let mut rng = Rng::new(71);
+        let d = random_delta(&mut rng, 32, 32, 400);
+        let tp = TensorPlan::build(&d, 5);
+        assert_eq!(tp.total(), d.nnz());
+        assert_eq!(tp.shards.total(), d.shard(5).total());
+        assert!(tp.nbytes() >= std::mem::size_of::<TensorPlan>());
+    }
+
+    #[test]
+    fn prop_f16_resident_apply_matches_f32_of_decoded() {
+        // Satellite (ISSUE 8): f16-resident apply ≡ f32-apply of the
+        // decoded values, for random SHiRA adapters — weights, snapshot
+        // and revert all bit-identical.
+        pt::forall(
+            72,
+            30,
+            |r| {
+                let rows = 2 + r.below(24);
+                let cols = 2 + r.below(24);
+                let k = 1 + r.below(rows * cols);
+                let alpha = -2.0 + 4.0 * r.uniform_f32();
+                (r.next_u64(), rows, cols, k, alpha)
+            },
+            |&(seed, rows, cols, k, alpha)| {
+                let mut rng = Rng::new(seed);
+                let d = random_delta(&mut rng, rows, cols, k);
+                let q = SparseDeltaF16::from_f32(&d);
+                let dec = q.to_f32(); // exact widening of the quantized bits
+                let w0 = random_w(&mut rng, rows, cols);
+                let mut w16 = w0.clone();
+                let mut s16 = vec![0.0f32; k];
+                q.snapshot_apply(&mut w16, alpha, &mut s16);
+                let mut w32 = w0.clone();
+                let mut s32 = vec![0.0f32; k];
+                dec.snapshot_apply(&mut w32, alpha, &mut s32);
+                if w16.data != w32.data || s16 != s32 {
+                    return false;
+                }
+                q.restore(&mut w16, &s16);
+                w16.data == w0.data
+            },
+        );
+    }
+
+    #[test]
+    fn f16_from_f32_roundtrips_representable_values() {
+        let d = SparseDelta::new(2, 4, vec![0, 5], vec![1.5, -0.25]);
+        let q = SparseDeltaF16::from_f32(&d);
+        assert_eq!(q.to_f32(), d);
+        assert_eq!(q.nnz(), 2);
+        assert_eq!(q.numel(), 8);
+        assert_eq!(q.nbytes(), 12);
+        assert_eq!(q.shard(2).total(), 2);
     }
 }

@@ -196,6 +196,20 @@ impl AdapterEngine for SwitchEngine {
                             Ok(SwitchPath::Fallback)
                         }
                     },
+                    AnyAdapter::ShiraF16(a) => {
+                        // f16-resident singles always revert+apply: the
+                        // one-pass transition machinery is f32-active-only,
+                        // so a resident pair plan is deliberately ignored
+                        // (DESIGN.md §15.4).  Bytes are identical either
+                        // way — binary16 → f32 widening is exact.
+                        self.switch_to_shira_f16(
+                            weights,
+                            Arc::clone(a),
+                            Some(Arc::clone(&handle.plans)),
+                            *alpha,
+                        );
+                        Ok(SwitchPath::Fallback)
+                    }
                     AnyAdapter::Lora(a) => {
                         // LoRA strength is baked into the adapter's own
                         // scale; the selection alpha is ignored.
@@ -381,6 +395,15 @@ impl WeightTxn {
     fn capture_incoming(&mut self, w: &WeightStore, handle: &AdapterHandle) {
         match &handle.adapter {
             AnyAdapter::Shira(a) => {
+                for (target, delta) in &a.tensors {
+                    self.incoming.push((
+                        target.clone(),
+                        delta.idx.clone(),
+                        w.gather(target, &delta.idx),
+                    ));
+                }
+            }
+            AnyAdapter::ShiraF16(a) => {
                 for (target, delta) in &a.tensors {
                     self.incoming.push((
                         target.clone(),
@@ -647,7 +670,10 @@ impl Router {
                 // roster is served AS a one-member set: single↔set moves
                 // become one merged-support wave instead of a
                 // revert + activate round-trip.
-                if matches!(&handle.adapter, AnyAdapter::Shira(_)) {
+                if matches!(
+                    &handle.adapter,
+                    AnyAdapter::Shira(_) | AnyAdapter::ShiraF16(_)
+                ) {
                     let member = self
                         .fused
                         .as_ref()
@@ -987,6 +1013,15 @@ impl Router {
                         self.pinned_roster.push(n.clone());
                     }
                 }
+                AnyAdapter::ShiraF16(a) => {
+                    // Fused-mode rosters are f32: materialize the exact
+                    // f32 values (binary16 → f32 widening is lossless),
+                    // so fused bytes match f32-resident serving bit-for-bit.
+                    roster.push(Arc::new(a.to_shira()));
+                    if store.pin(n) {
+                        self.pinned_roster.push(n.clone());
+                    }
+                }
                 AnyAdapter::Lora(_) => return Err(ServeError::NotShira(n.clone())),
             }
         }
@@ -1200,7 +1235,7 @@ mod tests {
         // The acceptance sequence: one router, selections mixing Base,
         // Single and Set, every state bit-identical to the per-policy
         // reference, at 1 and 4 threads.
-        let zoo = adapters(3000); // crosses PAR_MIN_NNZ at 2 tensors
+        let zoo = adapters(3000); // crosses the parallel cutoff at 2 tensors
         let base = base_weights(7);
         let seq = vec![
             Selection::single("ad0"),
@@ -1320,7 +1355,7 @@ mod tests {
         // pooled) surfaces as MutationRolledBack, the resident weights
         // land back on base bit-exactly, every pin is released, and the
         // router keeps serving afterwards.
-        let zoo = adapters(3000); // crosses PAR_MIN_NNZ when pooled
+        let zoo = adapters(3000); // crosses the parallel cutoff when pooled
         let base = base_weights(21);
         for threads in [None, Some(4usize)] {
             let pool = threads.map(|t| Arc::new(ThreadPool::new(t)));

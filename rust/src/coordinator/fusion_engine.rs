@@ -45,7 +45,8 @@ use std::sync::Arc;
 
 use super::fault::{FaultInjector, FaultSite};
 use super::fusion::{fuse_shira, validate_target_sets, FusionError, PairInterference};
-use crate::adapter::sparse::{shard_sorted, shards_for, SparseDelta, PAR_MIN_NNZ};
+use crate::adapter::kernel;
+use crate::adapter::sparse::{shard_sorted, shards_for, SparseDelta};
 use crate::adapter::ShiraAdapter;
 use crate::model::weights::WeightStore;
 use crate::util::threadpool::{SendPtr, ThreadPool};
@@ -695,8 +696,9 @@ impl FusionEngine {
             .iter()
             .map(|&m| self.plan.roster[m].param_count())
             .sum();
+        let par = kernel::config().parallel_worthwhile(total_nnz);
         let pool = match &self.pool {
-            Some(p) if total_nnz >= PAR_MIN_NNZ && p.threads() > 1 => Some(Arc::clone(p)),
+            Some(p) if par && p.threads() > 1 => Some(Arc::clone(p)),
             _ => None,
         };
         // Raw weight cursors per target.  SAFETY: pointers are only used
@@ -801,8 +803,9 @@ impl FusionEngine {
                 .extend(sc.slots.iter().map(|&s| pt.union_idx[s as usize]));
             total += sc.slots.len();
         }
+        let par = kernel::config().parallel_worthwhile(total);
         let pool = match &self.pool {
-            Some(p) if total >= PAR_MIN_NNZ && p.threads() > 1 => Some(Arc::clone(p)),
+            Some(p) if par && p.threads() > 1 => Some(Arc::clone(p)),
             _ => None,
         };
         // Raw weight cursors per target.  SAFETY: pointers are only used
@@ -1225,7 +1228,7 @@ mod tests {
         // a and b collide.  The swap (unfuse a + fuse b) must be ONE
         // wave and bit-identical to a rebuild, at any thread count.
         let dim = 96usize;
-        let k = 4000usize; // crosses PAR_MIN_NNZ so pooled runs dispatch
+        let k = 4000usize; // crosses the parallel cutoff so pooled runs dispatch
         let base = store(dim, dim, 17);
         let roster = vec![adapter(70, "a", dim, dim, k), adapter(71, "b", dim, dim, k)];
         for threads in [1usize, 2, 4] {
@@ -1333,9 +1336,9 @@ mod tests {
 
     #[test]
     fn pooled_engine_bit_identical_to_serial_above_threshold() {
-        // Big enough to cross PAR_MIN_NNZ so the parallel path runs.
+        // Big enough to cross the parallel cutoff so the parallel path runs.
         let dim = 96usize;
-        let k = 4000usize; // 2 targets × 4000 nnz ≫ PAR_MIN_NNZ
+        let k = 4000usize; // 2 targets × 4000 nnz ≫ the parallel cutoff
         let base = store(dim, dim, 13);
         let roster = vec![
             adapter(50, "a", dim, dim, k),

@@ -221,6 +221,17 @@ impl<'rt> ServerBuilder<'rt> {
         self
     }
 
+    /// Keep SHiRA deltas binary16-resident in the decode cache when the
+    /// flash image is `v2-f16`: values stay `u16` bits and are widened
+    /// lane-wise inside the scatter kernels at apply time, halving the
+    /// resident delta bytes (DESIGN.md §15).  Serving bytes are
+    /// bit-identical to f32-resident serving of the same file, because
+    /// binary16 → f32 widening is exact.
+    pub fn f16_resident(mut self, on: bool) -> Self {
+        self.store_cfg.f16_resident = on;
+        self
+    }
+
     /// Background-prefetch lookahead depth (0 disables prefetch).
     pub fn prefetch_depth(mut self, depth: usize) -> Self {
         self.store_cfg.prefetch_depth = depth;

@@ -34,8 +34,8 @@ use super::cache::LruCache;
 use super::error::ServeError;
 use super::fault::{FaultInjector, FaultSite};
 use crate::adapter::io::{self, AdapterFamily, Format, IoError};
-use crate::adapter::sparse::{shards_for, ShardPlan};
-use crate::adapter::{AdapterTransition, LoraAdapter, ShiraAdapter};
+use crate::adapter::sparse::{shards_for, TensorPlan};
+use crate::adapter::{AdapterTransition, LoraAdapter, ShiraAdapter, ShiraF16Adapter};
 use crate::util::threadpool::ThreadPool;
 
 /// A decoded adapter of either family.  Variants hold `Arc`s so a cache
@@ -44,6 +44,10 @@ use crate::util::threadpool::ThreadPool;
 pub enum AnyAdapter {
     /// A sparse high-rank adapter.
     Shira(Arc<ShiraAdapter>),
+    /// A sparse high-rank adapter kept f16-resident: delta values stay
+    /// raw binary16 bits in cache (half the resident bytes) and are
+    /// dequantized lane-wise inside the kernel on apply (DESIGN.md §15).
+    ShiraF16(Arc<ShiraF16Adapter>),
     /// A low-rank (LoRA) adapter.
     Lora(Arc<LoraAdapter>),
 }
@@ -53,6 +57,7 @@ impl AnyAdapter {
     pub fn name(&self) -> &str {
         match self {
             AnyAdapter::Shira(a) => &a.name,
+            AnyAdapter::ShiraF16(a) => &a.name,
             AnyAdapter::Lora(a) => &a.name,
         }
     }
@@ -61,32 +66,55 @@ impl AnyAdapter {
     pub fn nbytes(&self) -> usize {
         match self {
             AnyAdapter::Shira(a) => a.nbytes(),
+            AnyAdapter::ShiraF16(a) => a.nbytes(),
             AnyAdapter::Lora(a) => a.nbytes(),
         }
     }
 }
 
-/// A decoded adapter plus its shard-aligned layout: one row-aligned
-/// [`ShardPlan`] per SHiRA tensor, built once at decode time for the
-/// store's pool width so the switch engine's first apply skips plan
-/// construction (empty for LoRA).
+/// A decoded adapter plus its shard-aligned layout: one [`TensorPlan`]
+/// (row-aligned shard bounds + row-run cuts, DESIGN.md §15) per SHiRA
+/// tensor, built once at decode time for the store's pool width so the
+/// switch engine's first apply skips both plan and run construction
+/// (empty for LoRA).
 #[derive(Clone, Debug)]
 pub struct AdapterHandle {
     /// The decoded adapter.
     pub adapter: AnyAdapter,
-    /// Per-tensor shard plans in `tensors` order (SHiRA only).
-    pub plans: Arc<Vec<ShardPlan>>,
+    /// Per-tensor shard/run plans in `tensors` order (SHiRA only).
+    pub plans: Arc<Vec<TensorPlan>>,
 }
 
 impl AdapterHandle {
-    fn decode(bytes: &[u8], plan_threads: usize) -> Result<AdapterHandle, io::IoError> {
+    fn decode(
+        bytes: &[u8],
+        plan_threads: usize,
+        f16_resident: bool,
+    ) -> Result<AdapterHandle, io::IoError> {
         match io::sniff_family(bytes) {
             Some(AdapterFamily::Shira) => {
+                // f16 residency only applies to v2-f16 flash images: for
+                // any other format the resident bits would be a lossy
+                // re-quantization, so those decode to f32 as before.
+                if f16_resident && io::is_v2_f16(bytes) {
+                    let a = io::decode_shira_f16(bytes)?;
+                    let plans = a
+                        .tensors
+                        .iter()
+                        .map(|(_, d)| {
+                            TensorPlan::from_idx(&d.idx, d.cols, shards_for(d.nnz(), plan_threads))
+                        })
+                        .collect();
+                    return Ok(AdapterHandle {
+                        adapter: AnyAdapter::ShiraF16(Arc::new(a)),
+                        plans: Arc::new(plans),
+                    });
+                }
                 let a = io::decode_shira(bytes)?;
                 let plans = a
                     .tensors
                     .iter()
-                    .map(|(_, d)| d.shard(shards_for(d.nnz(), plan_threads)))
+                    .map(|(_, d)| TensorPlan::build(d, shards_for(d.nnz(), plan_threads)))
                     .collect();
                 Ok(AdapterHandle {
                     adapter: AnyAdapter::Shira(Arc::new(a)),
@@ -134,6 +162,11 @@ pub struct StoreConfig {
     /// How long a quarantine refuses fetches before letting one re-probe
     /// through, milliseconds (0 re-probes immediately).
     pub quarantine_ttl_ms: u64,
+    /// Keep SHiRA deltas decoded from `v2-f16` flash images resident as
+    /// raw binary16 bits (half the cache bytes); the kernel dequantizes
+    /// lane-wise on apply, bit-identical to serving the f32 decode of the
+    /// same file (DESIGN.md §15).  Non-f16 flash images are unaffected.
+    pub f16_resident: bool,
 }
 
 impl Default for StoreConfig {
@@ -147,6 +180,7 @@ impl Default for StoreConfig {
             retry_backoff_us: 100,
             quarantine_threshold: 3,
             quarantine_ttl_ms: 250,
+            f16_resident: false,
         }
     }
 }
@@ -175,6 +209,11 @@ pub struct StoreStats {
     pub oversized_serves: u64,
     /// Bytes of decoded adapters currently resident in the cache.
     pub resident_bytes: usize,
+    /// Subset of `resident_bytes` held by f16-resident adapters (raw
+    /// binary16 deltas; roughly half what the same adapters would cost
+    /// decoded to f32).  Zero unless [`StoreConfig::f16_resident`] is on
+    /// and v2-f16 flash images were fetched.
+    pub f16_resident_bytes: usize,
     /// Decoded adapters currently resident in the cache.
     pub resident_entries: usize,
     /// Transition-plan lookups ([`AdapterStore::begin_transition`]) that
@@ -280,6 +319,12 @@ pub struct AdapterStore {
     health: HashMap<String, Health>,
     retries: u64,
     quarantines: u64,
+    /// Decode v2-f16 flash images to f16-resident handles.
+    f16_resident: bool,
+    /// Cache cost of every f16-resident handle admitted so far, by name;
+    /// `stats()` sums the still-resident subset into
+    /// [`StoreStats::f16_resident_bytes`].
+    f16_costs: HashMap<String, usize>,
     /// Optional deterministic fault injector (chaos tests only).
     fault: Option<Arc<FaultInjector>>,
 }
@@ -327,6 +372,8 @@ impl AdapterStore {
             health: HashMap::new(),
             retries: 0,
             quarantines: 0,
+            f16_resident: cfg.f16_resident,
+            f16_costs: HashMap::new(),
             fault: None,
         }
     }
@@ -476,7 +523,12 @@ impl AdapterStore {
                 )));
             }
         }
-        decode_with_fault(bytes, self.plan_threads, self.fault.as_deref())
+        decode_with_fault(
+            bytes,
+            self.plan_threads,
+            self.f16_resident,
+            self.fault.as_deref(),
+        )
     }
 
     /// Refuse fetches of a quarantined adapter until the TTL lets one
@@ -605,10 +657,11 @@ impl AdapterStore {
             submitted += 1;
             let shared = Arc::clone(&self.staging);
             let plan_threads = self.plan_threads;
+            let f16_resident = self.f16_resident;
             let job_name = name.clone();
             let fault = self.fault.clone();
             pool.execute(move || {
-                let res = decode_with_fault(&bytes, plan_threads, fault.as_deref());
+                let res = decode_with_fault(&bytes, plan_threads, f16_resident, fault.as_deref());
                 let mut slots = shared.slots.lock().unwrap();
                 slots.insert(
                     job_name,
@@ -814,6 +867,12 @@ impl AdapterStore {
             prefetch_waits: self.prefetch_waits,
             oversized_serves: self.cache.oversized,
             resident_bytes: self.cache.used_bytes(),
+            f16_resident_bytes: self
+                .f16_costs
+                .iter()
+                .filter(|(n, _)| self.cache.peek(n).is_some())
+                .map(|(_, c)| c)
+                .sum(),
             resident_entries: self.cache.len(),
             plan_hits: self.plans.hits,
             plan_misses: self.plans.misses,
@@ -835,6 +894,11 @@ impl AdapterStore {
     /// when it could never fit the budget (and counts it as oversized).
     fn admit(&mut self, name: &str, handle: AdapterHandle) -> Arc<AdapterHandle> {
         let cost = handle.nbytes();
+        if matches!(handle.adapter, AnyAdapter::ShiraF16(_)) {
+            self.f16_costs.insert(name.to_string(), cost);
+        } else {
+            self.f16_costs.remove(name);
+        }
         self.cache.put(name, handle, cost)
     }
 
@@ -872,16 +936,17 @@ impl AdapterStore {
 fn decode_with_fault(
     bytes: &[u8],
     plan_threads: usize,
+    f16_resident: bool,
     fault: Option<&FaultInjector>,
 ) -> Result<AdapterHandle, IoError> {
     if let Some(f) = fault {
         if f.should_fire(FaultSite::Decode) {
             let mut corrupted = bytes.to_vec();
             f.corrupt(&mut corrupted);
-            return AdapterHandle::decode(&corrupted, plan_threads);
+            return AdapterHandle::decode(&corrupted, plan_threads, f16_resident);
         }
     }
-    AdapterHandle::decode(bytes, plan_threads)
+    AdapterHandle::decode(bytes, plan_threads, f16_resident)
 }
 
 #[cfg(test)]
@@ -964,6 +1029,73 @@ mod tests {
             s.encoded_len("a").unwrap()
         };
         assert!(mk(Format::V2) < mk(Format::V1));
+    }
+
+    #[test]
+    fn f16_resident_fetch_keeps_bits_and_counts_bytes() {
+        let mut rng = Rng::new(40);
+        let a = shira(&mut rng, "a", 32, 100);
+        let mk = |f16_resident| {
+            AdapterStore::with_config(
+                StoreConfig {
+                    cache_bytes: 1 << 20,
+                    format: Format::V2F16,
+                    prefetch_depth: 0,
+                    f16_resident,
+                    ..StoreConfig::default()
+                },
+                None,
+            )
+        };
+        let mut store = mk(true);
+        store.add_shira(&a);
+        let h = store.fetch("a").unwrap();
+        let AnyAdapter::ShiraF16(f) = &h.adapter else {
+            panic!("expected an f16-resident handle");
+        };
+        assert_eq!(h.plans.len(), 1);
+        assert_eq!(h.plans[0].total(), 100);
+        // Materializing the resident bits gives exactly the f32 decode of
+        // the same flash bytes (the bit-identity invariant).
+        let mut oracle = mk(false);
+        oracle.add_shira(&a);
+        let oh = oracle.fetch("a").unwrap();
+        let AnyAdapter::Shira(g) = &oh.adapter else {
+            panic!("oracle must decode to f32");
+        };
+        assert_eq!(f.to_shira(), **g);
+        // f16 residency roughly halves the cache bytes and is counted
+        // separately in the stats.
+        assert!(h.nbytes() < oh.nbytes());
+        let stats = store.stats();
+        assert_eq!(stats.f16_resident_bytes, h.nbytes());
+        assert!(stats.f16_resident_bytes <= stats.resident_bytes);
+        assert_eq!(oracle.stats().f16_resident_bytes, 0);
+    }
+
+    #[test]
+    fn f16_residency_ignores_non_f16_flash() {
+        // f16_resident on, but the flash image stores f32 values: the
+        // resident bits would be a lossy re-quantization, so the decode
+        // falls back to f32.
+        let mut rng = Rng::new(41);
+        let a = shira(&mut rng, "a", 16, 20);
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 1 << 20,
+                format: Format::V2,
+                prefetch_depth: 0,
+                f16_resident: true,
+                ..StoreConfig::default()
+            },
+            None,
+        );
+        store.add_shira(&a);
+        match &store.fetch("a").unwrap().adapter {
+            AnyAdapter::Shira(s) => assert_eq!(**s, a),
+            _ => panic!("v2 (f32) flash must decode to f32"),
+        }
+        assert_eq!(store.stats().f16_resident_bytes, 0);
     }
 
     #[test]

@@ -40,17 +40,22 @@
 //! must pass the *same* weight store (or a bit-identical clone at base)
 //! across an apply/revert pair, exactly as they previously had to leave
 //! the engine-owned store untouched between the two calls.
+//!
+//! Since PR 8 every scatter bottoms out in the dispatch-selected span
+//! kernels of [`crate::adapter::kernel`] (DESIGN.md §15): store-built
+//! [`TensorPlan`]s hand each shard its precomputed run cuts so the SIMD
+//! execution sweeps contiguous runs, and f16-resident adapters
+//! ([`ShiraF16Adapter`]) are applied by dequantizing lane-wise inside the
+//! kernel — both bit-identical to the scalar / f32 reference paths.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::adapter::sparse::{
-    scatter_restore, scatter_snapshot_apply, scatter_transition, shards_for, ShardPlan,
-    PAR_MIN_NNZ,
-};
+use crate::adapter::kernel::{self, F16Src, F32Src, KernelDispatch, Runs};
+use crate::adapter::sparse::{shard_sorted, shards_for, TensorPlan};
 use super::fault::{FaultInjector, FaultSite};
-use crate::adapter::{AdapterTransition, LoraAdapter, ShiraAdapter};
+use crate::adapter::{AdapterTransition, LoraAdapter, ShiraAdapter, ShiraF16Adapter};
 use crate::model::weights::WeightStore;
 use crate::util::threadpool::ThreadPool;
 
@@ -154,33 +159,55 @@ impl SwitchTiming {
 
 /// What is currently applied to the resident weights.  Adapters are held
 /// by `Arc`, so activating a cached adapter copies no tensor data.  An
-/// active SHiRA adapter may carry store-built per-tensor shard plans
-/// (shard-aligned decode) so revert reuses them too.
+/// active SHiRA adapter may carry store-built per-tensor [`TensorPlan`]s
+/// (shard-aligned decode + precomputed run cuts) so revert reuses them
+/// too.
 #[derive(Debug)]
 enum Active {
     None,
     Shira {
         adapter: Arc<ShiraAdapter>,
-        plans: Option<Arc<Vec<ShardPlan>>>,
+        plans: Option<Arc<Vec<TensorPlan>>>,
+    },
+    /// f16-resident SHiRA adapter (raw binary16 delta bits, dequantized
+    /// lane-wise in the kernel on apply — DESIGN.md §15).
+    ShiraF16 {
+        adapter: Arc<ShiraF16Adapter>,
+        plans: Option<Arc<Vec<TensorPlan>>>,
     },
     Lora {
         adapter: Arc<LoraAdapter>,
     },
 }
 
+/// Where a task's delta values live — mirrors the kernel layer's
+/// `DeltaSource` at the task level, so one task list serves f32- and
+/// f16-resident adapters through the same wave dispatch.
+#[derive(Clone, Copy)]
+enum TaskDelta {
+    /// f32-resident delta values.
+    F32(*const f32),
+    /// f16-resident delta bits, dequantized lane-wise in the kernel.
+    F16(*const u16),
+}
+
 /// One shard's worth of scatter work: raw cursors into a target tensor,
-/// its snapshot arena buffer, and the adapter's idx/delta arrays.
+/// its snapshot arena buffer, and the adapter's idx/delta arrays, plus
+/// the shard's precomputed run cuts when a [`TensorPlan`] is in hand.
 ///
 /// Pointers are only dereferenced inside the `scoped_for` region of the
 /// switch call that built them; the task list is cleared afterwards.
+/// Run-cut pointers point into plan storage (`Arc`-held) that the same
+/// call keeps alive across the wave.
 #[derive(Clone, Copy)]
 struct ShardTask {
     w: *mut f32,
     snap: *mut f32,
     idx: *const u32,
-    delta: *const f32,
+    delta: TaskDelta,
     lo: usize,
     hi: usize,
+    runs: Runs,
 }
 
 unsafe impl Send for ShardTask {}
@@ -188,20 +215,43 @@ unsafe impl Sync for ShardTask {}
 
 impl ShardTask {
     /// Fused snapshot + scatter-apply over this shard's range — delegates
-    /// to the one shared kernel in `adapter::sparse`.
+    /// to the span kernels in `adapter::kernel`.
     ///
     /// # Safety
     /// Tasks must cover disjoint idx ranges; all pointers must be live.
-    unsafe fn snapshot_apply(&self, alpha: f32) {
-        scatter_snapshot_apply(self.idx, self.delta, self.w, self.snap, alpha, self.lo, self.hi)
+    unsafe fn snapshot_apply(&self, dispatch: KernelDispatch, alpha: f32) {
+        match self.delta {
+            TaskDelta::F32(d) => kernel::snapshot_apply_span(
+                dispatch,
+                self.idx,
+                F32Src(d),
+                self.w,
+                self.snap,
+                alpha,
+                self.lo,
+                self.hi,
+                self.runs,
+            ),
+            TaskDelta::F16(d) => kernel::snapshot_apply_span(
+                dispatch,
+                self.idx,
+                F16Src(d),
+                self.w,
+                self.snap,
+                alpha,
+                self.lo,
+                self.hi,
+                self.runs,
+            ),
+        }
     }
 
     /// Snapshot-restore over this shard's range.
     ///
     /// # Safety
     /// Same contract as [`Self::snapshot_apply`].
-    unsafe fn restore(&self) {
-        scatter_restore(self.idx, self.w, self.snap, self.lo, self.hi)
+    unsafe fn restore(&self, dispatch: KernelDispatch) {
+        kernel::restore_span(dispatch, self.idx, self.w, self.snap, self.lo, self.hi, self.runs)
     }
 }
 
@@ -223,6 +273,7 @@ struct TransitionTask {
     snap_b: *mut f32,
     lo: usize,
     hi: usize,
+    runs: Runs,
 }
 
 unsafe impl Send for TransitionTask {}
@@ -230,22 +281,24 @@ unsafe impl Sync for TransitionTask {}
 
 impl TransitionTask {
     /// One-pass union transition over this shard's range — delegates to
-    /// the shared kernel in `adapter::sparse`.
+    /// the transition span kernel in `adapter::kernel`.
     ///
     /// # Safety
     /// Tasks must cover disjoint union ranges; all pointers must be live.
-    unsafe fn run(&self, alpha: f32) {
-        scatter_transition(
+    unsafe fn run(&self, dispatch: KernelDispatch, alpha: f32) {
+        kernel::transition_span(
+            dispatch,
             self.idx,
             self.a_pos,
             self.b_pos,
-            self.delta,
+            F32Src(self.delta),
             self.w,
             self.snap_a,
             self.snap_b,
             alpha,
             self.lo,
             self.hi,
+            self.runs,
         )
     }
 }
@@ -262,6 +315,12 @@ pub struct SwitchEngine {
     /// Number of adapter activations performed.
     pub switches: u64,
     pool: Option<Arc<ThreadPool>>,
+    /// Kernel dispatch mode for the engine's sharded waves, captured from
+    /// [`kernel::active_dispatch`] at construction.  (Serial one-shots go
+    /// through the `SparseDelta` methods, which read the process-wide mode
+    /// at call time — both modes are bit-identical for f32 deltas, so the
+    /// split is invisible in bytes.)
+    dispatch: KernelDispatch,
     /// Reusable per-target snapshot buffers: allocation-free steady state.
     arena: HashMap<String, Vec<f32>>,
     /// Back buffers for direct transitions: the incoming adapter's
@@ -304,6 +363,7 @@ impl SwitchEngine {
             active: Active::None,
             switches: 0,
             pool,
+            dispatch: kernel::active_dispatch(),
             arena: HashMap::new(),
             spare: HashMap::new(),
             tasks: Vec::new(),
@@ -340,11 +400,24 @@ impl SwitchEngine {
         self.pool.as_ref()
     }
 
+    /// Override the kernel dispatch mode used by this engine's sharded
+    /// waves (the scalar/SIMD bit-identity harness hook; production
+    /// engines inherit the process-wide mode at construction).
+    pub fn set_dispatch(&mut self, d: KernelDispatch) {
+        self.dispatch = d;
+    }
+
+    /// The engine's kernel dispatch mode.
+    pub fn dispatch(&self) -> KernelDispatch {
+        self.dispatch
+    }
+
     /// Name of the adapter currently applied to the weights.
     pub fn active_name(&self) -> Option<&str> {
         match &self.active {
             Active::None => None,
             Active::Shira { adapter, .. } => Some(adapter.name.as_str()),
+            Active::ShiraF16 { adapter, .. } => Some(adapter.name.as_str()),
             Active::Lora { adapter } => Some(adapter.name.as_str()),
         }
     }
@@ -357,22 +430,34 @@ impl SwitchEngine {
     /// around), so the router can use this to restore base after a
     /// failed transition or revert wave.
     pub fn shira_rollback(&self) -> Option<Vec<(String, Vec<u32>, Vec<f32>)>> {
-        match &self.active {
-            Active::Shira { adapter, .. } => Some(
-                adapter
-                    .tensors
-                    .iter()
-                    .map(|(target, delta)| {
-                        let snap = self
-                            .arena
-                            .get(target.as_str())
-                            .expect("snapshot exists for active adapter");
-                        (target.clone(), delta.idx.clone(), snap.clone())
-                    })
-                    .collect(),
-            ),
-            _ => None,
-        }
+        // Rollback data is residency-agnostic: support indices plus the
+        // arena's f32 base snapshot — so f16-resident singles are covered
+        // by the exact same transaction machinery.
+        let supports: Vec<(&String, &Vec<u32>)> = match &self.active {
+            Active::Shira { adapter, .. } => adapter
+                .tensors
+                .iter()
+                .map(|(target, delta)| (target, &delta.idx))
+                .collect(),
+            Active::ShiraF16 { adapter, .. } => adapter
+                .tensors
+                .iter()
+                .map(|(target, delta)| (target, &delta.idx))
+                .collect(),
+            _ => return None,
+        };
+        Some(
+            supports
+                .into_iter()
+                .map(|(target, idx)| {
+                    let snap = self
+                        .arena
+                        .get(target.as_str())
+                        .expect("snapshot exists for active adapter");
+                    (target.clone(), idx.clone(), snap.clone())
+                })
+                .collect(),
+        )
     }
 
     /// The active LoRA adapter, if one is fused in (`None` otherwise).
@@ -392,18 +477,24 @@ impl SwitchEngine {
         self.active = Active::None;
     }
 
-    /// Ensure the arena buffer for `target` exists and has length `len`
-    /// (allocates only on first growth; steady state reuses capacity).
-    /// No clear(): stale contents are fine — the fused snapshot+apply
-    /// pass overwrites every slot, so only genuinely new capacity is
-    /// zero-filled by `resize`.
-    fn arena_buf_prepare(arena: &mut HashMap<String, Vec<f32>>, target: &str, len: usize) {
-        match arena.get_mut(target) {
-            Some(buf) => buf.resize(len, 0.0),
-            None => {
-                arena.insert(target.to_string(), vec![0.0; len]);
-            }
+    /// Ensure the arena buffer for `target` exists and has length `len`,
+    /// returning it (allocates only on first growth; steady state reuses
+    /// capacity).  No clear(): stale contents are fine — the fused
+    /// snapshot+apply pass overwrites every slot, so only genuinely new
+    /// capacity is zero-filled by `resize`.
+    fn arena_buf_prepare<'a>(
+        arena: &'a mut HashMap<String, Vec<f32>>,
+        target: &str,
+        len: usize,
+    ) -> &'a mut Vec<f32> {
+        if !arena.contains_key(target) {
+            arena.insert(target.to_string(), Vec::new());
         }
+        let Some(buf) = arena.get_mut(target) else {
+            unreachable!("inserted above");
+        };
+        buf.resize(len, 0.0);
+        buf
     }
 
     /// Apply a SHiRA adapter to `w` at strength `alpha` (reverting
@@ -435,19 +526,21 @@ impl SwitchEngine {
         self.switch_to_shira_planned(w, a, None, alpha)
     }
 
-    /// [`Self::switch_to_shira_shared`] with store-built per-tensor shard
-    /// plans (shard-aligned decode, DESIGN.md §10): the parallel dispatch
-    /// reuses `plans` instead of recomputing row-aligned partitions, so
+    /// [`Self::switch_to_shira_shared`] with store-built per-tensor
+    /// [`TensorPlan`]s (shard-aligned decode, DESIGN.md §10/§15): the
+    /// parallel dispatch reuses `plans` — both the row-aligned shard
+    /// partition and the precomputed run cuts the SIMD kernels sweep — so
     /// the first switch through a store-decoded adapter skips plan
-    /// construction.  Plans are positional with `a.tensors`; a plan set
-    /// that does not match (wrong length or totals) is ignored and the
-    /// engine falls back to computing its own — the result is
-    /// bit-identical either way, plans only affect dispatch.
+    /// construction AND run detection.  Plans are positional with
+    /// `a.tensors`; a plan set that does not match (wrong length or
+    /// totals) is ignored and the engine falls back to computing its own
+    /// shards (runs detected on the fly) — the result is bit-identical
+    /// either way, plans only affect dispatch.
     pub fn switch_to_shira_planned(
         &mut self,
         w: &mut WeightStore,
         a: Arc<ShiraAdapter>,
-        plans: Option<Arc<Vec<ShardPlan>>>,
+        plans: Option<Arc<Vec<TensorPlan>>>,
         alpha: f32,
     ) -> SwitchTiming {
         let mut t = self.revert_timing(w);
@@ -455,14 +548,15 @@ impl SwitchEngine {
         // Claim this apply wave's fault ordinal (chaos injection): when it
         // fires, the wave panics after partial writes to W and the arena.
         let boom = self.wave_fault_armed();
-        let total_nnz = a.param_count();
+        let par = kernel::config().parallel_worthwhile(a.param_count());
         let pool = match &self.pool {
-            Some(p) if total_nnz >= PAR_MIN_NNZ && p.threads() > 1 => Some(Arc::clone(p)),
+            Some(p) if par && p.threads() > 1 => Some(Arc::clone(p)),
             _ => None,
         };
         match pool {
             Some(pool) => {
                 self.build_shira_tasks(w, &a, plans.as_deref(), pool.threads(), true);
+                let dispatch = self.dispatch;
                 let tasks = &self.tasks;
                 let n = tasks.len();
                 if let Err(fault) = pool.try_scoped_for(n, |i| {
@@ -472,7 +566,7 @@ impl SwitchEngine {
                     // SAFETY: tasks cover disjoint idx ranges (row-aligned
                     // shard plans over unique sorted indices, one plan per
                     // distinct target tensor with its own arena buffer).
-                    unsafe { tasks[i].snapshot_apply(alpha) }
+                    unsafe { tasks[i].snapshot_apply(dispatch, alpha) }
                 }) {
                     // The pool has fully quiesced: no worker still holds a
                     // cursor into W, so the router's rollback may run.
@@ -482,8 +576,7 @@ impl SwitchEngine {
             }
             None => {
                 for (ti, (target, delta)) in a.tensors.iter().enumerate() {
-                    Self::arena_buf_prepare(&mut self.arena, target, delta.nnz());
-                    let buf = self.arena.get_mut(target.as_str()).unwrap();
+                    let buf = Self::arena_buf_prepare(&mut self.arena, target, delta.nnz());
                     let wt = w.get_mut(target);
                     delta.snapshot_apply(wt, alpha, buf);
                     if boom && ti == 0 {
@@ -494,6 +587,64 @@ impl SwitchEngine {
         }
         t.fuse_us += t0.elapsed().as_secs_f64() * 1e6;
         self.active = Active::Shira { adapter: a, plans };
+        self.switches += 1;
+        t
+    }
+
+    /// Apply an f16-resident SHiRA adapter (reverting whatever was active
+    /// first).  Delta bits stay binary16 end-to-end: the wave dequantizes
+    /// lane-wise inside the kernel, so no f32 materialization of the
+    /// delta ever exists.  Because the widening is exact, serving this is
+    /// bit-identical to [`Self::switch_to_shira_planned`] on the f32
+    /// decode of the same `v2-f16` file (property-tested).
+    ///
+    /// f16 singles always take this revert+apply path — direct
+    /// transitions ([`Self::transition_to`]) remain f32-only.
+    pub fn switch_to_shira_f16(
+        &mut self,
+        w: &mut WeightStore,
+        a: Arc<ShiraF16Adapter>,
+        plans: Option<Arc<Vec<TensorPlan>>>,
+        alpha: f32,
+    ) -> SwitchTiming {
+        let mut t = self.revert_timing(w);
+        let t0 = Instant::now();
+        let boom = self.wave_fault_armed();
+        let par = kernel::config().parallel_worthwhile(a.param_count());
+        let pool = match &self.pool {
+            Some(p) if par && p.threads() > 1 => Some(Arc::clone(p)),
+            _ => None,
+        };
+        match pool {
+            Some(pool) => {
+                self.build_shira_tasks_f16(w, &a, plans.as_deref(), pool.threads(), true);
+                let dispatch = self.dispatch;
+                let tasks = &self.tasks;
+                let n = tasks.len();
+                if let Err(fault) = pool.try_scoped_for(n, |i| {
+                    if boom && i == n / 2 {
+                        panic!("{}", FaultInjector::WAVE_PANIC_MSG);
+                    }
+                    // SAFETY: same disjointness contract as the f32 path.
+                    unsafe { tasks[i].snapshot_apply(dispatch, alpha) }
+                }) {
+                    panic!("pool wave failed: {fault}");
+                }
+                self.tasks.clear();
+            }
+            None => {
+                for (ti, (target, delta)) in a.tensors.iter().enumerate() {
+                    let buf = Self::arena_buf_prepare(&mut self.arena, target, delta.nnz());
+                    let wt = w.get_mut(target);
+                    delta.snapshot_apply(wt, alpha, buf);
+                    if boom && ti == 0 {
+                        panic!("{}", FaultInjector::WAVE_PANIC_MSG);
+                    }
+                }
+            }
+        }
+        t.fuse_us += t0.elapsed().as_secs_f64() * 1e6;
+        self.active = Active::ShiraF16 { adapter: a, plans };
         self.switches += 1;
         t
     }
@@ -518,7 +669,7 @@ impl SwitchEngine {
         &mut self,
         w: &mut WeightStore,
         b: Arc<ShiraAdapter>,
-        plans: Option<Arc<Vec<ShardPlan>>>,
+        plans: Option<Arc<Vec<TensorPlan>>>,
         tp: &AdapterTransition,
         alpha: f32,
     ) -> (SwitchTiming, SwitchPath) {
@@ -536,15 +687,15 @@ impl SwitchEngine {
         // mid-wave panic here leaves the OUTGOING adapter still active
         // (the swap below never ran), with W partially transitioned.
         let boom = self.wave_fault_armed();
+        let par = kernel::config().parallel_worthwhile(tp.union_nnz());
         let pool = match &self.pool {
-            Some(p) if tp.union_nnz() >= PAR_MIN_NNZ && p.threads() > 1 => {
-                Some(Arc::clone(p))
-            }
+            Some(p) if par && p.threads() > 1 => Some(Arc::clone(p)),
             _ => None,
         };
         match pool {
             Some(pool) => {
                 self.build_transition_tasks(w, &b, tp);
+                let dispatch = self.dispatch;
                 let tasks = &self.ttasks;
                 let n = tasks.len();
                 if let Err(fault) = pool.try_scoped_for(n, |i| {
@@ -556,7 +707,7 @@ impl SwitchEngine {
                     // plan per distinct target tensor), so every W element
                     // and every incoming-snapshot slot is written by
                     // exactly one task; outgoing snapshots are read-only.
-                    unsafe { tasks[i].run(alpha) }
+                    unsafe { tasks[i].run(dispatch, alpha) }
                 }) {
                     panic!("pool wave failed: {fault}");
                 }
@@ -564,12 +715,11 @@ impl SwitchEngine {
             }
             None => {
                 for (ti, (target, d_b)) in b.tensors.iter().enumerate() {
-                    Self::arena_buf_prepare(&mut self.spare, target, d_b.nnz());
+                    let snap_b = Self::arena_buf_prepare(&mut self.spare, target, d_b.nnz());
                     let snap_a = self
                         .arena
                         .get(target.as_str())
                         .expect("snapshot exists for active adapter");
-                    let snap_b = self.spare.get_mut(target.as_str()).unwrap();
                     let wt = w.get_mut(target);
                     tp.plans()[ti].transition(wt, snap_a, snap_b, d_b, alpha);
                     if boom && ti == 0 {
@@ -611,12 +761,11 @@ impl SwitchEngine {
     ) {
         self.ttasks.clear();
         for (ti, (target, d_b)) in b.tensors.iter().enumerate() {
-            Self::arena_buf_prepare(&mut self.spare, target, d_b.nnz());
+            let snap_b = Self::arena_buf_prepare(&mut self.spare, target, d_b.nnz());
             let snap_a = self
                 .arena
                 .get(target.as_str())
                 .expect("snapshot exists for active adapter");
-            let snap_b = self.spare.get_mut(target.as_str()).unwrap();
             let wt = w.get_mut(target);
             let plan = &tp.plans()[ti];
             debug_assert_eq!((wt.rows, wt.cols), (plan.rows(), plan.cols()));
@@ -624,11 +773,15 @@ impl SwitchEngine {
             debug_assert_eq!(snap_b.len(), plan.b_nnz());
             let (idx, a_pos, b_pos) = plan.raw_parts();
             let sp = plan.shards();
+            let runs = plan.runs();
             for s in 0..sp.len() {
                 let (lo, hi) = sp.range(s);
                 if lo == hi {
                     continue;
                 }
+                // Precomputed union run cuts for this shard: the SIMD
+                // execution sweeps them without a detection pass.
+                let (ptr, len) = runs.span(lo, hi);
                 self.ttasks.push(TransitionTask {
                     idx,
                     a_pos,
@@ -639,7 +792,65 @@ impl SwitchEngine {
                     snap_b: snap_b.as_mut_ptr(),
                     lo,
                     hi,
+                    runs: Runs::Cuts { ptr, len },
                 });
+            }
+        }
+    }
+
+    /// Append one tensor's shard tasks.  A prebuilt [`TensorPlan`]
+    /// contributes its shard ranges AND its run cuts ([`Runs::Cuts`] — no
+    /// detection pass inside the wave); the fallback computes a fresh
+    /// row-aligned shard split and lets the kernel detect runs on the fly
+    /// (a freshly built `RunPlan` would be a temporary the tasks cannot
+    /// borrow).
+    #[allow(clippy::too_many_arguments)]
+    fn push_tensor_tasks(
+        tasks: &mut Vec<ShardTask>,
+        plan: Option<&TensorPlan>,
+        idx: &[u32],
+        delta: TaskDelta,
+        cols: usize,
+        w: *mut f32,
+        snap: *mut f32,
+        threads: usize,
+    ) {
+        match plan {
+            Some(p) => {
+                for s in 0..p.shards.len() {
+                    let (lo, hi) = p.shards.range(s);
+                    if lo == hi {
+                        continue;
+                    }
+                    let (ptr, len) = p.runs.span(lo, hi);
+                    tasks.push(ShardTask {
+                        w,
+                        snap,
+                        idx: idx.as_ptr(),
+                        delta,
+                        lo,
+                        hi,
+                        runs: Runs::Cuts { ptr, len },
+                    });
+                }
+            }
+            None => {
+                let sp = shard_sorted(idx, cols, shards_for(idx.len(), threads));
+                for s in 0..sp.len() {
+                    let (lo, hi) = sp.range(s);
+                    if lo == hi {
+                        continue;
+                    }
+                    tasks.push(ShardTask {
+                        w,
+                        snap,
+                        idx: idx.as_ptr(),
+                        delta,
+                        lo,
+                        hi,
+                        runs: Runs::Detect,
+                    });
+                }
             }
         }
     }
@@ -647,13 +858,13 @@ impl SwitchEngine {
     /// Build the flat shard-task list spanning every target tensor.
     /// `fresh` resizes arena buffers for a new snapshot; revert reuses the
     /// buffers exactly as the preceding apply left them.  `plans` carries
-    /// store-built per-tensor shard plans; any mismatch falls back to a
-    /// freshly computed row-aligned plan.
+    /// store-built per-tensor [`TensorPlan`]s; any mismatch falls back to
+    /// a freshly computed row-aligned shard split.
     fn build_shira_tasks(
         &mut self,
         w: &mut WeightStore,
         a: &ShiraAdapter,
-        plans: Option<&Vec<ShardPlan>>,
+        plans: Option<&Vec<TensorPlan>>,
         threads: usize,
         fresh: bool,
     ) {
@@ -661,38 +872,86 @@ impl SwitchEngine {
         let prebuilt = plans.filter(|p| p.len() == a.tensors.len());
         let mut mismatches = u64::from(plans.is_some() && prebuilt.is_none());
         for (ti, (target, delta)) in a.tensors.iter().enumerate() {
-            if fresh {
-                Self::arena_buf_prepare(&mut self.arena, target, delta.nnz());
-            }
-            let buf = self
-                .arena
-                .get_mut(target.as_str())
-                .expect("arena buffer exists for active target");
+            let buf = if fresh {
+                Self::arena_buf_prepare(&mut self.arena, target, delta.nnz())
+            } else {
+                let Some(buf) = self.arena.get_mut(target.as_str()) else {
+                    unreachable!("arena buffer exists for active target");
+                };
+                buf
+            };
             debug_assert_eq!(buf.len(), delta.nnz());
             let wt = w.get_mut(target);
             debug_assert_eq!((wt.rows, wt.cols), (delta.rows, delta.cols));
             let plan = match prebuilt {
-                Some(p) if p[ti].total() == delta.nnz() => p[ti],
+                Some(p) if p[ti].total() == delta.nnz() => Some(&p[ti]),
                 Some(_) => {
                     mismatches += 1;
-                    delta.shard(shards_for(delta.nnz(), threads))
+                    None
                 }
-                None => delta.shard(shards_for(delta.nnz(), threads)),
+                None => None,
             };
-            for s in 0..plan.len() {
-                let (lo, hi) = plan.range(s);
-                if lo == hi {
-                    continue;
+            Self::push_tensor_tasks(
+                &mut self.tasks,
+                plan,
+                &delta.idx,
+                TaskDelta::F32(delta.delta.as_ptr()),
+                delta.cols,
+                wt.data.as_mut_ptr(),
+                buf.as_mut_ptr(),
+                threads,
+            );
+        }
+        if mismatches > 0 {
+            self.record_plan_mismatch(mismatches);
+        }
+    }
+
+    /// f16-resident twin of [`Self::build_shira_tasks`]: identical shard
+    /// and run layout (plans are built from the idx array alone), with
+    /// tasks carrying [`TaskDelta::F16`] so the kernel dequantizes
+    /// lane-wise on apply.
+    fn build_shira_tasks_f16(
+        &mut self,
+        w: &mut WeightStore,
+        a: &ShiraF16Adapter,
+        plans: Option<&Vec<TensorPlan>>,
+        threads: usize,
+        fresh: bool,
+    ) {
+        self.tasks.clear();
+        let prebuilt = plans.filter(|p| p.len() == a.tensors.len());
+        let mut mismatches = u64::from(plans.is_some() && prebuilt.is_none());
+        for (ti, (target, delta)) in a.tensors.iter().enumerate() {
+            let buf = if fresh {
+                Self::arena_buf_prepare(&mut self.arena, target, delta.nnz())
+            } else {
+                let Some(buf) = self.arena.get_mut(target.as_str()) else {
+                    unreachable!("arena buffer exists for active target");
+                };
+                buf
+            };
+            debug_assert_eq!(buf.len(), delta.nnz());
+            let wt = w.get_mut(target);
+            debug_assert_eq!((wt.rows, wt.cols), (delta.rows, delta.cols));
+            let plan = match prebuilt {
+                Some(p) if p[ti].total() == delta.nnz() => Some(&p[ti]),
+                Some(_) => {
+                    mismatches += 1;
+                    None
                 }
-                self.tasks.push(ShardTask {
-                    w: wt.data.as_mut_ptr(),
-                    snap: buf.as_mut_ptr(),
-                    idx: delta.idx.as_ptr(),
-                    delta: delta.delta.as_ptr(),
-                    lo,
-                    hi,
-                });
-            }
+                None => None,
+            };
+            Self::push_tensor_tasks(
+                &mut self.tasks,
+                plan,
+                &delta.idx,
+                TaskDelta::F16(delta.bits.as_ptr()),
+                delta.cols,
+                wt.data.as_mut_ptr(),
+                buf.as_mut_ptr(),
+                threads,
+            );
         }
         if mismatches > 0 {
             self.record_plan_mismatch(mismatches);
@@ -727,10 +986,11 @@ impl SwitchEngine {
         let mut t = self.revert_timing(w);
         let t0 = Instant::now();
         let pool = self.pool.clone();
+        let cfg = kernel::config();
         for lt in &a.tensors {
             let wt = w.get_mut(&lt.target);
             match &pool {
-                Some(p) if wt.numel() >= PAR_MIN_NNZ && p.threads() > 1 => {
+                Some(p) if cfg.parallel_worthwhile(wt.numel()) && p.threads() > 1 => {
                     wt.add_outer_product_par(&lt.a, &lt.b, a.scale, p);
                 }
                 _ => wt.add_outer_product(&lt.a, &lt.b, a.scale),
@@ -748,6 +1008,25 @@ impl SwitchEngine {
         self.revert_timing(w)
     }
 
+    /// Dispatch the prepared restore wave over the task list, then clear
+    /// it.  Shared by the f32- and f16-resident revert paths (restore
+    /// only reads indices and the snapshot — residency never matters).
+    fn run_restore_wave(&mut self, pool: &ThreadPool, boom: bool) {
+        let dispatch = self.dispatch;
+        let tasks = &self.tasks;
+        let n = tasks.len();
+        if let Err(fault) = pool.try_scoped_for(n, |i| {
+            if boom && i == n / 2 {
+                panic!("{}", FaultInjector::WAVE_PANIC_MSG);
+            }
+            // SAFETY: same disjointness contract as apply.
+            unsafe { tasks[i].restore(dispatch) }
+        }) {
+            panic!("pool wave failed: {fault}");
+        }
+        self.tasks.clear();
+    }
+
     fn revert_timing(&mut self, w: &mut WeightStore) -> SwitchTiming {
         let mut t = SwitchTiming::default();
         let t0 = Instant::now();
@@ -759,29 +1038,16 @@ impl SwitchEngine {
                 // restored with `active` already taken (None) — the
                 // router's pre-captured transaction restores base.
                 let boom = self.wave_fault_armed();
-                let total_nnz = adapter.param_count();
+                let par = kernel::config().parallel_worthwhile(adapter.param_count());
                 let pool = match &self.pool {
-                    Some(p) if total_nnz >= PAR_MIN_NNZ && p.threads() > 1 => {
-                        Some(Arc::clone(p))
-                    }
+                    Some(p) if par && p.threads() > 1 => Some(Arc::clone(p)),
                     _ => None,
                 };
                 match pool {
                     Some(pool) => {
                         let threads = pool.threads();
                         self.build_shira_tasks(w, &adapter, plans.as_deref(), threads, false);
-                        let tasks = &self.tasks;
-                        let n = tasks.len();
-                        if let Err(fault) = pool.try_scoped_for(n, |i| {
-                            if boom && i == n / 2 {
-                                panic!("{}", FaultInjector::WAVE_PANIC_MSG);
-                            }
-                            // SAFETY: same disjointness contract as apply.
-                            unsafe { tasks[i].restore() }
-                        }) {
-                            panic!("pool wave failed: {fault}");
-                        }
-                        self.tasks.clear();
+                        self.run_restore_wave(&pool, boom);
                     }
                     None => {
                         for (ti, (target, delta)) in adapter.tensors.iter().enumerate() {
@@ -797,12 +1063,39 @@ impl SwitchEngine {
                     }
                 }
             }
+            Active::ShiraF16 { adapter, plans } => {
+                let boom = self.wave_fault_armed();
+                let par = kernel::config().parallel_worthwhile(adapter.param_count());
+                let pool = match &self.pool {
+                    Some(p) if par && p.threads() > 1 => Some(Arc::clone(p)),
+                    _ => None,
+                };
+                match pool {
+                    Some(pool) => {
+                        let threads = pool.threads();
+                        self.build_shira_tasks_f16(w, &adapter, plans.as_deref(), threads, false);
+                        self.run_restore_wave(&pool, boom);
+                    }
+                    None => {
+                        for (ti, (target, delta)) in adapter.tensors.iter().enumerate() {
+                            let Some(snap) = self.arena.get(target.as_str()) else {
+                                unreachable!("snapshot exists for active adapter");
+                            };
+                            delta.restore(w.get_mut(target), snap);
+                            if boom && ti == 0 {
+                                panic!("{}", FaultInjector::WAVE_PANIC_MSG);
+                            }
+                        }
+                    }
+                }
+            }
             Active::Lora { adapter } => {
                 let pool = self.pool.clone();
+                let cfg = kernel::config();
                 for lt in &adapter.tensors {
                     let wt = w.get_mut(&lt.target);
                     match &pool {
-                        Some(p) if wt.numel() >= PAR_MIN_NNZ && p.threads() > 1 => {
+                        Some(p) if cfg.parallel_worthwhile(wt.numel()) && p.threads() > 1 => {
                             wt.sub_outer_product_par(&lt.a, &lt.b, adapter.scale, p);
                         }
                         _ => wt.sub_outer_product(&lt.a, &lt.b, adapter.scale),
@@ -904,7 +1197,7 @@ mod tests {
     /// A weight store + adapter big enough to cross the parallel threshold.
     fn big_weights_and_adapter(seed: u64) -> (WeightStore, ShiraAdapter) {
         let dim = 128usize;
-        let k = 6000usize; // 2 tensors * 6000 nnz > PAR_MIN_NNZ
+        let k = 6000usize; // 2 tensors * 6000 nnz > the parallel cutoff
         let store = WeightStore::init(
             &[
                 ("big.wq".into(), vec![dim, dim]),
@@ -990,14 +1283,15 @@ mod tests {
 
     #[test]
     fn planned_switch_bit_identical_to_unplanned() {
-        // Store-built shard plans (shard-aligned decode) only change
-        // dispatch, never bytes — including revert, which reuses them.
+        // Store-built tensor plans (shard-aligned decode + run cuts) only
+        // change dispatch, never bytes — including revert, which reuses
+        // them.
         let (base, a) = big_weights_and_adapter(14);
         let a = Arc::new(a);
-        let plans: Arc<Vec<ShardPlan>> = Arc::new(
+        let plans: Arc<Vec<TensorPlan>> = Arc::new(
             a.tensors
                 .iter()
-                .map(|(_, d)| d.shard(shards_for(d.nnz(), 4)))
+                .map(|(_, d)| TensorPlan::build(d, shards_for(d.nnz(), 4)))
                 .collect(),
         );
         let mut wr = base.clone();
@@ -1014,7 +1308,7 @@ mod tests {
             assert!(w.bit_equal(&base), "revert threads={threads}");
         }
         // A mismatched plan set is ignored, not trusted.
-        let bogus: Arc<Vec<ShardPlan>> = Arc::new(Vec::new());
+        let bogus: Arc<Vec<TensorPlan>> = Arc::new(Vec::new());
         let pool = Arc::new(ThreadPool::new(2));
         let mut w = base.clone();
         let mut eng = SwitchEngine::with_pool(Some(pool));
@@ -1136,22 +1430,22 @@ mod tests {
 
     #[test]
     fn mismatched_store_plans_are_counted() {
-        // Silently-ignored ShardPlan sets increment a visible counter
+        // Silently-ignored TensorPlan sets increment a visible counter
         // (bytes are unaffected either way).
         let (base, a) = big_weights_and_adapter(27);
         let a = Arc::new(a);
         let pool = Arc::new(ThreadPool::new(2));
         let mut w = base.clone();
         let mut eng = SwitchEngine::with_pool(Some(pool));
-        let bogus: Arc<Vec<ShardPlan>> = Arc::new(Vec::new());
+        let bogus: Arc<Vec<TensorPlan>> = Arc::new(Vec::new());
         eng.switch_to_shira_planned(&mut w, Arc::clone(&a), Some(bogus), 1.0);
         assert!(eng.plan_mismatches >= 1, "wrong-length plan set counted");
         let before = eng.plan_mismatches;
         // A matching plan set adds nothing.
-        let good: Arc<Vec<ShardPlan>> = Arc::new(
+        let good: Arc<Vec<TensorPlan>> = Arc::new(
             a.tensors
                 .iter()
-                .map(|(_, d)| d.shard(shards_for(d.nnz(), 2)))
+                .map(|(_, d)| TensorPlan::build(d, shards_for(d.nnz(), 2)))
                 .collect(),
         );
         eng.switch_to_shira_planned(&mut w, Arc::clone(&a), Some(good), 1.0);
@@ -1160,6 +1454,167 @@ mod tests {
         // the mismatched-plan revert already happened inside the second
         // switch; only the first (bogus) dispatch should have counted
         assert_eq!(eng.plan_mismatches, before + 1, "revert of bogus-planned switch");
+    }
+
+    #[test]
+    fn forced_dispatch_engines_bit_identical_across_paths() {
+        // The tentpole acceptance property at the engine level: scalar and
+        // SIMD engines produce identical bytes on apply, direct
+        // transitions and revert — with and without prebuilt TensorPlans,
+        // at 1 and 4 threads, across scattered and fully-contiguous
+        // supports (long runs are the SIMD sweet spot).
+        let (base, a) = big_weights_and_adapter(31);
+        let b = overlapping_adapter(&a, "b", 0.6, 32);
+        // Fully-contiguous support: one solid block per tensor.
+        let c = ShiraAdapter {
+            name: "c".into(),
+            strategy: "rand".into(),
+            tensors: a
+                .tensors
+                .iter()
+                .map(|(t, d)| {
+                    let k = d.nnz();
+                    let idx: Vec<u32> = (100..100 + k as u32).collect();
+                    let mut delta = vec![0.0; k];
+                    Rng::new(33).fill_normal(&mut delta, 0.0, 0.5);
+                    (t.clone(), SparseDelta::new(d.rows, d.cols, idx, delta))
+                })
+                .collect(),
+        };
+        let plans: Arc<Vec<TensorPlan>> = Arc::new(
+            a.tensors
+                .iter()
+                .map(|(_, d)| TensorPlan::build(d, shards_for(d.nnz(), 4)))
+                .collect(),
+        );
+        // Serial reference (no pool).
+        let mut wr = base.clone();
+        let mut reference = SwitchEngine::new();
+        reference.switch_to_shira(&mut wr, &a, 0.8);
+        let applied_a = wr.clone();
+        reference.switch_to_shira(&mut wr, &b, 1.2);
+        let applied_b = wr.clone();
+        reference.switch_to_shira(&mut wr, &c, -0.6);
+        let applied_c = wr.clone();
+        reference.revert(&mut wr);
+        assert!(wr.bit_equal(&base));
+        for threads in [1usize, 4] {
+            for disp in [KernelDispatch::Scalar, KernelDispatch::Simd] {
+                let pool = Arc::new(ThreadPool::new(threads));
+                let mut w = base.clone();
+                let mut eng = SwitchEngine::with_pool(Some(pool));
+                eng.set_dispatch(disp);
+                assert_eq!(eng.dispatch(), disp);
+                eng.switch_to_shira_planned(
+                    &mut w,
+                    Arc::new(a.clone()),
+                    Some(Arc::clone(&plans)),
+                    0.8,
+                );
+                assert!(w.bit_equal(&applied_a), "{} t={threads} a", disp.name());
+                let tab = AdapterTransition::build(&a, &b, threads).expect("same targets");
+                let (_t, path) = eng.transition_to(&mut w, Arc::new(b.clone()), None, &tab, 1.2);
+                assert_eq!(path, SwitchPath::Transition);
+                assert!(w.bit_equal(&applied_b), "{} t={threads} b", disp.name());
+                let tbc = AdapterTransition::build(&b, &c, threads).expect("same targets");
+                let (_t, path) = eng.transition_to(&mut w, Arc::new(c.clone()), None, &tbc, -0.6);
+                assert_eq!(path, SwitchPath::Transition);
+                assert!(w.bit_equal(&applied_c), "{} t={threads} c", disp.name());
+                eng.revert(&mut w);
+                assert!(w.bit_equal(&base), "{} t={threads} revert", disp.name());
+            }
+        }
+    }
+
+    #[test]
+    fn f16_resident_switch_bit_identical_to_f32_of_decoded_values() {
+        use crate::adapter::sparse::SparseDeltaF16;
+        // Narrow a random adapter to binary16 and serve the f16-resident
+        // form; the reference is its EXACT f32 widening (what an f32
+        // decode of the same v2-f16 file yields).  Bytes must match under
+        // both dispatches at 1 and 4 threads, and revert to base exactly.
+        let (base, a32) = big_weights_and_adapter(33);
+        let f16 = ShiraF16Adapter {
+            name: a32.name.clone(),
+            strategy: a32.strategy.clone(),
+            tensors: a32
+                .tensors
+                .iter()
+                .map(|(t, d)| (t.clone(), SparseDeltaF16::from_f32(d)))
+                .collect(),
+        };
+        let decoded = f16.to_shira(); // exact widening — the f32 oracle
+        let mut wr = base.clone();
+        let mut reference = SwitchEngine::new();
+        reference.switch_to_shira(&mut wr, &decoded, 0.9);
+        let applied = wr.clone();
+        let f16 = Arc::new(f16);
+        for threads in [1usize, 4] {
+            for disp in [KernelDispatch::Scalar, KernelDispatch::Simd] {
+                let pool = Arc::new(ThreadPool::new(threads));
+                let mut w = base.clone();
+                let mut eng = SwitchEngine::with_pool(Some(pool));
+                eng.set_dispatch(disp);
+                eng.switch_to_shira_f16(&mut w, Arc::clone(&f16), None, 0.9);
+                assert_eq!(eng.active_name(), Some("big"));
+                // Rollback data is available for f16 singles too.
+                assert!(eng.shira_rollback().is_some());
+                assert!(w.bit_equal(&applied), "{} t={threads}", disp.name());
+                eng.revert(&mut w);
+                assert!(w.bit_equal(&base), "{} t={threads} revert", disp.name());
+            }
+        }
+        // With store-built plans (the f16-resident decode path builds
+        // TensorPlans from the idx array alone).
+        let plans: Arc<Vec<TensorPlan>> = Arc::new(
+            f16.tensors
+                .iter()
+                .map(|(_, d)| TensorPlan::from_idx(&d.idx, d.cols, shards_for(d.nnz(), 4)))
+                .collect(),
+        );
+        let pool = Arc::new(ThreadPool::new(4));
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::with_pool(Some(pool));
+        eng.switch_to_shira_f16(&mut w, Arc::clone(&f16), Some(plans), 0.9);
+        assert!(w.bit_equal(&applied));
+        eng.revert(&mut w);
+        assert!(w.bit_equal(&base));
+    }
+
+    #[test]
+    fn transition_from_f16_active_falls_back() {
+        use crate::adapter::sparse::SparseDeltaF16;
+        // Direct transitions are f32-only: with an f16-resident adapter
+        // active, transition_to must take the (bit-identical) fallback —
+        // which exercises the f16 revert inside a switch.
+        let (base, a32) = big_weights_and_adapter(34);
+        let f16 = Arc::new(ShiraF16Adapter {
+            name: a32.name.clone(),
+            strategy: a32.strategy.clone(),
+            tensors: a32
+                .tensors
+                .iter()
+                .map(|(t, d)| (t.clone(), SparseDeltaF16::from_f32(d)))
+                .collect(),
+        });
+        let decoded = f16.to_shira();
+        let b = overlapping_adapter(&decoded, "b", 0.5, 35);
+        let pool = Arc::new(ThreadPool::new(2));
+        let mut w = base.clone();
+        let mut eng = SwitchEngine::with_pool(Some(pool));
+        eng.switch_to_shira_f16(&mut w, Arc::clone(&f16), None, 1.0);
+        let tp = AdapterTransition::build(&decoded, &b, 2).expect("same targets");
+        let (_t, path) = eng.transition_to(&mut w, Arc::new(b.clone()), None, &tp, 1.0);
+        assert_eq!(path, SwitchPath::Fallback);
+        assert_eq!(eng.transitions, 0);
+        // Fallback still produced the correct state.
+        let mut wr = base.clone();
+        let mut reference = SwitchEngine::new();
+        reference.switch_to_shira(&mut wr, &decoded, 1.0);
+        reference.switch_to_shira(&mut wr, &b, 1.0);
+        assert!(w.bit_equal(&wr));
+        eng.revert(&mut w);
+        assert!(w.bit_equal(&base));
     }
 
     #[test]

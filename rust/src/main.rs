@@ -14,6 +14,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use shira::adapter::io;
+use shira::adapter::kernel;
 use shira::adapter::mask::MaskStrategy;
 use shira::config::RunConfig;
 #[allow(deprecated)]
@@ -58,6 +59,9 @@ USAGE: shira <subcommand> [flags]
   serve [--pattern bursty|uniform|rr|zipf] [--trace-len N] [--adapters N]
         [--cache-bytes N] [--prefetch-depth N] [--format v1|v2|v2-f16]
         [--plan-cache-bytes N]   (0 disables direct A->B transitions)
+        [--kernel scalar|simd]   (force the scatter kernel dispatch)
+        [--f16-resident]         (keep v2-f16 deltas binary16 in cache)
+        [--affinity]             (striped shard->worker affinity hints)
         [--replicas N] [--queue-depth N] [--burst N] [--concurrent]
         (--replicas selects the artifact-free N-replica fleet over the
         seeded 10k-user zipf trace; otherwise one server, one replica)
@@ -264,6 +268,18 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Apply the `--kernel scalar|simd` override: forces the process-wide
+/// scatter-kernel dispatch before any pool or engine probes it
+/// (DESIGN.md §15.2).  Bytes are identical under either mode.
+fn apply_kernel_flag(args: &Args) -> Result<()> {
+    if let Some(k) = args.get("kernel") {
+        let d = kernel::KernelDispatch::parse(k)
+            .ok_or_else(|| anyhow!("bad --kernel {k} (expected scalar|simd)"))?;
+        kernel::force_dispatch(d);
+    }
+    Ok(())
+}
+
 /// `serve --replicas N`: the artifact-free fleet path (DESIGN.md §14).
 /// Toy base weights and the seeded synth zoo — the same construction
 /// the fleet tests and the bench gate replay — so it runs anywhere.
@@ -276,6 +292,10 @@ fn cmd_serve_fleet(args: &Args, cfg: &RunConfig) -> Result<()> {
     let burst = args.get_usize("burst", 8)?;
     let default_cfg = StoreConfig::default();
     let names = adapter_names(n_adapters);
+    let pool = Arc::new(ThreadPool::host_sized());
+    if args.has("affinity") {
+        pool.set_affinity_hints(true);
+    }
     let mut fleet = Fleet::builder(toy_base(DIM, cfg.seed))
         .replicas(replicas)
         .queue_depth(queue_depth)
@@ -285,9 +305,10 @@ fn cmd_serve_fleet(args: &Args, cfg: &RunConfig) -> Result<()> {
             prefetch_depth: args.get_usize("prefetch-depth", default_cfg.prefetch_depth)?,
             plan_cache_bytes: args
                 .get_usize("plan-cache-bytes", default_cfg.plan_cache_bytes)?,
+            f16_resident: args.has("f16-resident"),
             ..default_cfg
         })
-        .pool(Arc::new(ThreadPool::host_sized()))
+        .pool(pool)
         .failure_policy(FailurePolicy::DegradeToBase)
         .build();
     let sels = mixed_selections(&names);
@@ -295,7 +316,7 @@ fn cmd_serve_fleet(args: &Args, cfg: &RunConfig) -> Result<()> {
     println!(
         "fleet: {replicas} replicas, queue depth {queue_depth}, {} adapters, \
          {} requests (zipf {FLEET_TRACE_USERS} users, burst {burst}, seed {}) \
-         mode={}",
+         mode={} kernel={}",
         n_adapters,
         trace.len(),
         cfg.seed,
@@ -304,6 +325,7 @@ fn cmd_serve_fleet(args: &Args, cfg: &RunConfig) -> Result<()> {
         } else {
             "deterministic"
         },
+        kernel::active_dispatch().name(),
     );
     let report = if args.has("concurrent") {
         fleet.run_trace_concurrent(&trace)?
@@ -317,6 +339,8 @@ fn cmd_serve_fleet(args: &Args, cfg: &RunConfig) -> Result<()> {
 #[allow(deprecated)]
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args).map_err(|e| anyhow!(e))?;
+    // Force the kernel dispatch FIRST, before any pool/engine probes it.
+    apply_kernel_flag(args)?;
     // The fleet path is runtime-free: no artifacts needed.
     if args.has("replicas") {
         return cmd_serve_fleet(args, &cfg);
@@ -363,13 +387,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         plan_cache_bytes: args
             .get_usize("plan-cache-bytes", default_cfg.plan_cache_bytes)?,
+        f16_resident: args.has("f16-resident"),
         ..default_cfg
     };
     let plan_cache_bytes = store_cfg.plan_cache_bytes;
+    let pool = Arc::new(ThreadPool::host_sized());
+    if args.has("affinity") {
+        pool.set_affinity_hints(true);
+    }
     let mut server = Server::builder(&rt, base)
         .model("llama")
         .store_config(store_cfg)
-        .pool(Arc::new(ThreadPool::host_sized()))
+        .pool(pool)
         .unfused_lora(matches!(policy, Some(Policy::LoraUnfused)))
         .build()?;
 
@@ -415,11 +444,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let trace = generate_trace(&selections, cfg.trace_len, pattern, 1e4, cfg.seed);
     println!(
-        "serving {} requests over {} selections (pattern switches: {}) mode={}",
+        "serving {} requests over {} selections (pattern switches: {}) \
+         mode={} kernel={}",
         trace.len(),
         selections.len(),
         switch_count(&trace),
         policy.map(|p| p.name()).unwrap_or("mixed-selections"),
+        kernel::active_dispatch().name(),
     );
     let report = server.run_trace(&trace)?;
     println!("{}", report.summary);

@@ -361,20 +361,43 @@ pub fn check_regression(
     report
 }
 
-/// Shared CLI plumbing for bench mains: handles `--check`, `--tolerance`
-/// and `--save-baseline` against the committed `rust/BENCH_<stem>.json`.
-/// Always also writes the fresh document under `target/bench-results/`.
-/// Returns `false` when `--check` found a regression (caller should exit
-/// nonzero).
+/// Shared CLI plumbing for bench mains: handles `--check`, `--tolerance`,
+/// `--save-baseline`, `--baseline-dir <dir>` and `--require-entries`
+/// against the baseline `BENCH_<stem>.json` (committed under the crate
+/// root by default; `--baseline-dir` points both save and check at
+/// another directory, which is how CI exercises the full compare path
+/// without touching the committed placeholders).  Always also writes the
+/// fresh document under `target/bench-results/`.  Returns `false` when
+/// `--check` found a regression (caller should exit nonzero).
+///
+/// `--require-entries` hardens `--check`: an empty run, an unusable or
+/// missing baseline, or zero compared stages — all of which plain
+/// `--check` treats as a pass so committed placeholders stay green —
+/// become failures.  CI pairs it with a `--save-baseline --baseline-dir`
+/// run of the same bench so the gate is exercised non-trivially.
 pub fn finish_bench(stem: &str, entries: &[BaselineEntry]) -> bool {
     let args: Vec<String> = std::env::args().collect();
+    finish_bench_with(stem, entries, &args)
+}
+
+/// Testable core of [`finish_bench`]: identical flag handling with the
+/// argument list injected instead of read from the process environment.
+pub fn finish_bench_with(stem: &str, entries: &[BaselineEntry], args: &[String]) -> bool {
     let tolerance = args
         .iter()
         .position(|a| a == "--tolerance")
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse::<f64>().ok())
         .unwrap_or(0.5);
-    let committed = Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{stem}.json"));
+    let baseline_path = match args
+        .iter()
+        .position(|a| a == "--baseline-dir")
+        .and_then(|i| args.get(i + 1))
+    {
+        Some(dir) => Path::new(dir).join(format!("BENCH_{stem}.json")),
+        None => Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{stem}.json")),
+    };
+    let require = args.iter().any(|a| a == "--require-entries");
     let fresh = Path::new("target/bench-results").join(format!("BENCH_{stem}.json"));
     write_baseline(
         &fresh,
@@ -384,30 +407,44 @@ pub fn finish_bench(stem: &str, entries: &[BaselineEntry]) -> bool {
     );
     if args.iter().any(|a| a == "--save-baseline") {
         write_baseline(
-            &committed,
+            &baseline_path,
             &format!("bench_{stem}"),
             "committed baseline; regenerate with --save-baseline",
             entries,
         );
     }
     if args.iter().any(|a| a == "--check") {
-        match load_baseline(&committed) {
+        if require && entries.is_empty() {
+            eprintln!("--check --require-entries: bench produced no entries");
+            return false;
+        }
+        match load_baseline(&baseline_path) {
+            Err(e) if require => {
+                eprintln!("--check --require-entries: no usable baseline ({e})");
+                false
+            }
             Err(e) => {
                 eprintln!("--check: no usable baseline ({e}); treating as pass");
                 true
             }
             Ok(base) => {
                 let report = check_regression(entries, &base, tolerance);
-                if report.passed() {
+                if require && report.compared == 0 {
+                    eprintln!(
+                        "--check --require-entries: no stages matched {}",
+                        baseline_path.display()
+                    );
+                    false
+                } else if report.passed() {
                     println!(
                         "--check: OK ({} stages within {:.0}% of {})",
                         report.compared,
                         tolerance * 100.0,
-                        committed.display()
+                        baseline_path.display()
                     );
                     true
                 } else {
-                    eprintln!("--check: REGRESSION vs {}", committed.display());
+                    eprintln!("--check: REGRESSION vs {}", baseline_path.display());
                     for r in &report.regressions {
                         eprintln!("  {r}");
                     }
@@ -508,5 +545,77 @@ mod tests {
     #[test]
     fn missing_baseline_is_an_error() {
         assert!(load_baseline(std::path::Path::new("/nonexistent/BENCH_x.json")).is_err());
+    }
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn save_then_check_with_baseline_dir_roundtrips() {
+        // The CI flow: --save-baseline into a temp dir, then --check
+        // --require-entries against it — must pass non-trivially.
+        let dir = std::env::temp_dir().join("shira-benchlib-savecheck");
+        let _ = std::fs::create_dir_all(&dir);
+        let d = dir.to_string_lossy().to_string();
+        let entries = vec![entry("k/a", 100.0), entry("k/b", 50.0)];
+        assert!(finish_bench_with(
+            "savecheck",
+            &entries,
+            &argv(&["bench", "--save-baseline", "--baseline-dir", &d]),
+        ));
+        assert!(finish_bench_with(
+            "savecheck",
+            &entries,
+            &argv(&["bench", "--check", "--require-entries", "--baseline-dir", &d]),
+        ));
+        // A real regression against the saved baseline still fails.
+        let slow = vec![entry("k/a", 1000.0), entry("k/b", 50.0)];
+        assert!(!finish_bench_with(
+            "savecheck",
+            &slow,
+            &argv(&["bench", "--check", "--require-entries", "--baseline-dir", &d]),
+        ));
+        let _ = std::fs::remove_file(dir.join("BENCH_savecheck.json"));
+    }
+
+    #[test]
+    fn require_entries_rejects_trivial_passes() {
+        let dir = std::env::temp_dir().join("shira-benchlib-require");
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::remove_file(dir.join("BENCH_req.json"));
+        let d = dir.to_string_lossy().to_string();
+        // No entries at all.
+        assert!(!finish_bench_with(
+            "req",
+            &[],
+            &argv(&["bench", "--check", "--require-entries", "--baseline-dir", &d]),
+        ));
+        // No baseline file to compare against.
+        let entries = vec![entry("k/a", 100.0)];
+        assert!(!finish_bench_with(
+            "req",
+            &entries,
+            &argv(&["bench", "--check", "--require-entries", "--baseline-dir", &d]),
+        ));
+        // Baseline exists but shares no stage names: compared == 0.
+        std::fs::write(
+            dir.join("BENCH_req.json"),
+            baseline_json("bench_req", "t", &[entry("other/name", 5.0)]),
+        )
+        .unwrap();
+        assert!(!finish_bench_with(
+            "req",
+            &entries,
+            &argv(&["bench", "--check", "--require-entries", "--baseline-dir", &d]),
+        ));
+        // Plain --check still treats all three as a pass (placeholder
+        // behaviour, unchanged).
+        assert!(finish_bench_with(
+            "req",
+            &entries,
+            &argv(&["bench", "--check", "--baseline-dir", &d]),
+        ));
+        let _ = std::fs::remove_file(dir.join("BENCH_req.json"));
     }
 }

@@ -65,12 +65,28 @@ struct Shared {
 pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
+    /// Per-shard affinity hints for `scoped_for` (see
+    /// [`Self::set_affinity_hints`]).  Default off.
+    affinity: AtomicBool,
+}
+
+/// One contiguous stripe of task indices `[next₀, hi)` owned by one
+/// region participant in affinity mode.  Claims use the same
+/// fetch-add-and-overshoot protocol as the single shared counter.
+struct StripeCtl {
+    next: AtomicUsize,
+    hi: usize,
 }
 
 /// Control block for one `scoped_for` region.
 struct ScopeCtl {
     /// Next unclaimed task index (claims may overshoot `n`).
     next: AtomicUsize,
+    /// Affinity mode: one contiguous stripe per participant; empty means
+    /// single-counter mode.  Participant `p` drains stripe `p` first,
+    /// then steals from `(p+1) % len`, `(p+2) % len`, … — exactly-once
+    /// holds because every index belongs to exactly one stripe.
+    stripes: Vec<StripeCtl>,
     /// Workers currently inside the region body (borrowing the closure).
     borrowers: AtomicUsize,
     /// Set by the caller once its own drive loop exits; late-starting
@@ -174,22 +190,43 @@ struct BodyPtr(*const (dyn Fn(usize) + Sync + 'static));
 unsafe impl Send for BodyPtr {}
 unsafe impl Sync for BodyPtr {}
 
-fn drive(body: BodyPtr, next: &AtomicUsize, n: usize) {
+fn drive(body: BodyPtr, ctl: &ScopeCtl, me: usize, n: usize) {
     // SAFETY: the scoped_for caller keeps the closure alive until all
     // borrowers exit; borrower registration guards this call.
     let f = unsafe { &*body.0 };
-    loop {
-        let i = next.fetch_add(1, Ordering::Relaxed);
-        if i >= n {
-            break;
+    if ctl.stripes.is_empty() {
+        loop {
+            let i = ctl.next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
         }
-        f(i);
+    } else {
+        // Affinity mode: drain our own stripe, then steal from the others
+        // in ring order so finished participants still help stragglers.
+        let len = ctl.stripes.len();
+        for off in 0..len {
+            let s = &ctl.stripes[(me + off) % len];
+            loop {
+                let i = s.next.fetch_add(1, Ordering::Relaxed);
+                if i >= s.hi {
+                    break;
+                }
+                f(i);
+            }
+        }
     }
 }
 
 impl ThreadPool {
     /// Pool with `n_threads` workers (minimum 1).
     pub fn new(n_threads: usize) -> Self {
+        // Probe the kernel dispatch ladder once, at pool construction, so
+        // the first hot-path apply never pays the env lookup and every
+        // engine built over this pool sees one settled answer
+        // (DESIGN.md §15).
+        crate::adapter::kernel::active_dispatch();
         let n = n_threads.max(1);
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
@@ -208,7 +245,11 @@ impl ThreadPool {
                     .expect("spawn worker"),
             );
         }
-        ThreadPool { shared, workers }
+        ThreadPool {
+            shared,
+            workers,
+            affinity: AtomicBool::new(false),
+        }
     }
 
     /// A pool sized to the host (`available_parallelism`, min 1).
@@ -222,6 +263,23 @@ impl ThreadPool {
     /// Number of worker threads.
     pub fn threads(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Enable or disable per-shard affinity hints.  When on, `scoped_for`
+    /// partitions task indices into one contiguous stripe per participant
+    /// and each participant drains its own stripe before stealing from the
+    /// others in ring order, so repeated regions tend to revisit the same
+    /// weight rows on the same thread (warmer caches) at the cost of
+    /// slightly less even load when task costs are skewed.  Purely a
+    /// scheduling hint: exactly-once execution and bit-identical results
+    /// hold either way.  Default off; flip with `--affinity`.
+    pub fn set_affinity_hints(&self, on: bool) {
+        self.affinity.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether per-shard affinity hints are enabled.
+    pub fn affinity_hints(&self) -> bool {
+        self.affinity.load(Ordering::Relaxed)
     }
 
     /// Enqueue a job.
@@ -303,8 +361,24 @@ impl ThreadPool {
             >(wide)
         });
 
+        // Affinity mode: one contiguous stripe per participant (caller is
+        // participant 0, helper `h` is `h + 1`).  Only worthwhile when
+        // every participant gets at least a couple of tasks.
+        let parts = helpers + 1;
+        let stripes = if self.affinity_hints() && n_tasks >= parts * 2 {
+            let per = n_tasks.div_ceil(parts);
+            (0..parts)
+                .map(|p| StripeCtl {
+                    next: AtomicUsize::new((p * per).min(n_tasks)),
+                    hi: ((p + 1) * per).min(n_tasks),
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         let ctl = Arc::new(ScopeCtl {
             next: AtomicUsize::new(0),
+            stripes,
             borrowers: AtomicUsize::new(0),
             closed: AtomicBool::new(false),
             panicked: AtomicBool::new(false),
@@ -312,7 +386,8 @@ impl ThreadPool {
             exit_mtx: Mutex::new(()),
             exit_cv: Condvar::new(),
         });
-        for _ in 0..helpers {
+        for h in 0..helpers {
+            let me = h + 1;
             let ctl = Arc::clone(&ctl);
             self.execute(move || {
                 // Register as a borrower BEFORE touching the closure, and
@@ -328,7 +403,7 @@ impl ThreadPool {
                     // Catch panics so a failing task neither kills the
                     // worker nor strands the caller's borrower wait.
                     if let Err(payload) =
-                        catch_unwind(AssertUnwindSafe(|| drive(body, &ctl.next, n_tasks)))
+                        catch_unwind(AssertUnwindSafe(|| drive(body, &ctl, me, n_tasks)))
                     {
                         ctl.record_panic(payload.as_ref());
                     }
@@ -341,7 +416,7 @@ impl ThreadPool {
         // fences off late helpers and waits for in-flight ones on every
         // exit path, including unwinding out of a panicking body.
         let guard = CallerExit(Arc::clone(&ctl));
-        let caller_result = catch_unwind(AssertUnwindSafe(|| drive(body, &ctl.next, n_tasks)));
+        let caller_result = catch_unwind(AssertUnwindSafe(|| drive(body, &ctl, 0, n_tasks)));
         drop(guard);
         if let Err(payload) = caller_result {
             ctl.record_panic(payload.as_ref());
@@ -647,6 +722,63 @@ mod tests {
             .try_scoped_for(1, |_| panic!("serial boom"))
             .expect_err("serial task panicked");
         assert!(err.message.contains("serial boom"));
+    }
+
+    #[test]
+    fn affinity_scoped_for_runs_every_index_once() {
+        // Striped claiming must preserve the exactly-once contract across
+        // thread counts, uneven stripe sizes (odd n) and tiny regions that
+        // fall back to the single counter.
+        for threads in [1, 2, 4, 8] {
+            let pool = ThreadPool::new(threads);
+            pool.set_affinity_hints(true);
+            assert!(pool.affinity_hints());
+            for n in [1, 3, 7, 100, 1001] {
+                let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                pool.scoped_for(n, |i| {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                    "threads={threads} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_scoped_for_completes_when_all_workers_are_starved() {
+        // With every helper pinned, the caller must steal through all
+        // stripes itself — ring-order stealing is load-bearing, not an
+        // optimization.
+        let pool = ThreadPool::new(2);
+        pool.set_affinity_hints(true);
+        let gate = Arc::new(AtomicBool::new(false));
+        for _ in 0..2 {
+            let g = Arc::clone(&gate);
+            pool.execute(move || {
+                while !g.load(Ordering::SeqCst) {
+                    std::thread::yield_now();
+                }
+            });
+        }
+        let done = AtomicUsize::new(0);
+        pool.scoped_for(100, |_| {
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 100);
+        gate.store(true, Ordering::SeqCst);
+        pool.join();
+    }
+
+    #[test]
+    fn affinity_hints_toggle() {
+        let pool = ThreadPool::new(2);
+        assert!(!pool.affinity_hints());
+        pool.set_affinity_hints(true);
+        assert!(pool.affinity_hints());
+        pool.set_affinity_hints(false);
+        assert!(!pool.affinity_hints());
     }
 
     #[test]
