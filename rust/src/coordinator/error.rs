@@ -88,6 +88,21 @@ pub enum ServeError {
         /// Per-replica queue bound that was exhausted.
         queue_depth: usize,
     },
+    /// The request's end-to-end deadline elapsed before any replica
+    /// served it: admission and failover kept re-dispatching (bounded by
+    /// the per-request retry budget) but the deadline ran out first
+    /// (`coordinator::fleet`; DESIGN.md §16.3).  Requests that end here
+    /// are accounted, not silently lost.
+    DeadlineExceeded {
+        /// Canonical key of the selection whose request timed out.
+        selection: String,
+        /// Configured end-to-end deadline, microseconds.
+        deadline_us: u64,
+        /// How long the request had waited when it was declared dead.
+        waited_us: u64,
+        /// Re-dispatch attempts it consumed before timing out.
+        attempts: u32,
+    },
     /// The PJRT runtime failed (artifact missing, compile or execute
     /// error).  Stringly: runtime errors originate outside the
     /// coordinator and carry no stable structure.
@@ -115,6 +130,7 @@ impl ServeError {
             ServeError::Quarantined { .. } => "quarantined",
             ServeError::MutationRolledBack { .. } => "mutation-rolled-back",
             ServeError::Overloaded { .. } => "overloaded",
+            ServeError::DeadlineExceeded { .. } => "deadline-exceeded",
             ServeError::Runtime(_) => "runtime",
         }
     }
@@ -155,6 +171,14 @@ impl std::fmt::Display for ServeError {
                 "fleet overloaded: request for {selection:?} shed — all \
                  {replicas} replica queue(s) full (depth {queue_depth})"
             ),
+            ServeError::DeadlineExceeded { selection, deadline_us, waited_us, attempts } => {
+                write!(
+                    f,
+                    "request for {selection:?} exceeded its {deadline_us}us \
+                     deadline (waited {waited_us}us, {attempts} re-dispatch \
+                     attempt(s))"
+                )
+            }
             ServeError::Runtime(m) => write!(f, "runtime: {m}"),
         }
     }
@@ -259,6 +283,16 @@ mod tests {
         assert_eq!(o.kind(), "overloaded");
         assert!(o.to_string().contains("hot@1"));
         assert!(o.to_string().contains("4 replica"));
+        let d = ServeError::DeadlineExceeded {
+            selection: "slow@1".into(),
+            deadline_us: 5_000,
+            waited_us: 7_250,
+            attempts: 3,
+        };
+        assert_eq!(d.kind(), "deadline-exceeded");
+        assert!(d.to_string().contains("slow@1"));
+        assert!(d.to_string().contains("5000us"));
+        assert!(d.to_string().contains("7250us"));
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! no-op behind an `Option` that defaults to `None`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::util::rng::Rng;
 
@@ -35,9 +35,14 @@ pub enum FaultSite {
     /// A flash read that completes but slowly (exercises latency paths;
     /// never an error).
     SlowFetch,
+    /// A replica apply stalls and the replica is declared crashed before
+    /// the mutation lands — fired by the fleet just before
+    /// `Router::apply`, so the failure looks like a dead worker, not a
+    /// torn mutation (exercises quarantine → probe → recover).
+    Apply,
 }
 
-const N_SITES: usize = 4;
+const N_SITES: usize = 5;
 
 impl FaultSite {
     fn index(self) -> usize {
@@ -46,6 +51,7 @@ impl FaultSite {
             FaultSite::Decode => 1,
             FaultSite::Wave => 2,
             FaultSite::SlowFetch => 3,
+            FaultSite::Apply => 4,
         }
     }
 
@@ -56,6 +62,7 @@ impl FaultSite {
             FaultSite::Decode => "decode",
             FaultSite::Wave => "wave",
             FaultSite::SlowFetch => "slow-fetch",
+            FaultSite::Apply => "apply",
         }
     }
 }
@@ -73,6 +80,11 @@ pub struct FaultSpec {
 #[derive(Clone, Debug, Default)]
 pub struct FaultPlan {
     specs: Vec<FaultSpec>,
+    /// Per-replica crash plans: `(replica, nth_apply_on_that_replica)`,
+    /// 1-based like [`FaultSpec::at`] but counted per replica so a plan
+    /// can deterministically crash *every* replica regardless of how the
+    /// scheduler spreads applies across them.
+    replica_crashes: Vec<(usize, u64)>,
     /// Injected latency for [`FaultSite::SlowFetch`] hits, microseconds.
     pub slow_us: u64,
 }
@@ -80,7 +92,11 @@ pub struct FaultPlan {
 impl FaultPlan {
     /// Empty plan (no faults ever fire).
     pub fn new() -> Self {
-        FaultPlan { specs: Vec::new(), slow_us: 200 }
+        FaultPlan {
+            specs: Vec::new(),
+            replica_crashes: Vec::new(),
+            slow_us: 200,
+        }
     }
 
     /// A random plan: `n_faults` faults spread over the first `horizon`
@@ -92,6 +108,7 @@ impl FaultPlan {
             FaultSite::Decode,
             FaultSite::Wave,
             FaultSite::SlowFetch,
+            FaultSite::Apply,
         ];
         let mut plan = FaultPlan::new();
         for _ in 0..n_faults {
@@ -126,6 +143,22 @@ impl FaultPlan {
         self
     }
 
+    /// Plan a replica crash on the `n`-th apply *globally* (any replica).
+    pub fn crash_apply_at(mut self, n: u64) -> Self {
+        self.specs.push(FaultSpec { site: FaultSite::Apply, at: n });
+        self
+    }
+
+    /// Plan a replica crash on the `n`-th apply *on replica `replica`*
+    /// (per-replica ordinal).  Global [`FaultSite::Apply`] ordinals
+    /// cannot guarantee a specific replica faults — which one claims the
+    /// n-th global apply depends on placement — so recovery tests that
+    /// must quarantine every replica use this instead.
+    pub fn crash_replica_at(mut self, replica: usize, n: u64) -> Self {
+        self.replica_crashes.push((replica, n));
+        self
+    }
+
     /// Override the [`FaultSite::SlowFetch`] stall duration.
     pub fn slow_us(mut self, us: u64) -> Self {
         self.slow_us = us;
@@ -146,8 +179,10 @@ impl FaultPlan {
                 AtomicU64::new(0),
                 AtomicU64::new(0),
                 AtomicU64::new(0),
+                AtomicU64::new(0),
             ],
             fired: AtomicU64::new(0),
+            apply_counts: Mutex::new(Vec::new()),
         })
     }
 }
@@ -160,6 +195,9 @@ pub struct FaultInjector {
     plan: FaultPlan,
     counts: [AtomicU64; N_SITES],
     fired: AtomicU64,
+    /// Per-replica apply ordinals for [`FaultPlan::crash_replica_at`],
+    /// indexed by replica id (grown on demand).
+    apply_counts: Mutex<Vec<u64>>,
 }
 
 impl FaultInjector {
@@ -177,6 +215,31 @@ impl FaultInjector {
             self.fired.fetch_add(1, Ordering::SeqCst);
         }
         hit
+    }
+
+    /// Count one apply on `replica`; true when either the global
+    /// [`FaultSite::Apply`] plan or a per-replica crash plan says this
+    /// apply dies.  The global site is counted on every call so seeded
+    /// plans fire here with the same ordinal discipline as other sites.
+    pub fn should_crash_apply(&self, replica: usize) -> bool {
+        let global = self.should_fire(FaultSite::Apply);
+        let per_replica = {
+            let mut counts =
+                self.apply_counts.lock().unwrap_or_else(|p| p.into_inner());
+            if counts.len() <= replica {
+                counts.resize(replica + 1, 0);
+            }
+            counts[replica] += 1;
+            let n = counts[replica];
+            self.plan
+                .replica_crashes
+                .iter()
+                .any(|&(r, at)| r == replica && at == n)
+        };
+        if per_replica {
+            self.fired.fetch_add(1, Ordering::SeqCst);
+        }
+        global || per_replica
     }
 
     /// Events counted so far at `site`.
@@ -204,6 +267,10 @@ impl FaultInjector {
 
     /// Panic message used by injected wave faults (tests match on it).
     pub const WAVE_PANIC_MSG: &'static str = "injected fault: wave panic";
+
+    /// Error message used by injected apply crashes (tests match on it).
+    pub const APPLY_CRASH_MSG: &'static str =
+        "injected fault: replica apply crash";
 }
 
 #[cfg(test)]
@@ -263,6 +330,26 @@ mod tests {
             (0..64).filter(|&i| a[i] != orig[i]).collect();
         assert_eq!(diffs.len(), 1);
         inj.corrupt(&mut []); // empty image: no-op, no panic
+    }
+
+    #[test]
+    fn per_replica_crash_plans_count_independently_of_global_ordinals() {
+        let inj = FaultPlan::new()
+            .crash_replica_at(1, 2)
+            .crash_apply_at(5)
+            .injector();
+        // Replica 0 applies three times: never crashes (no plan for it,
+        // and the global ordinal 5 is not reached yet).
+        assert!(!inj.should_crash_apply(0)); // global 1, r0 #1
+        assert!(!inj.should_crash_apply(0)); // global 2, r0 #2
+        assert!(!inj.should_crash_apply(0)); // global 3, r0 #3
+        // Replica 1's 2nd apply crashes per plan even though the global
+        // ordinal (5) has not fired.
+        assert!(!inj.should_crash_apply(1)); // global 4, r1 #1
+        assert!(inj.should_crash_apply(1)); // global 5 fires AND r1 #2
+        assert!(!inj.should_crash_apply(1)); // global 6, r1 #3
+        assert_eq!(inj.count(FaultSite::Apply), 6);
+        assert!(inj.fired() >= 1);
     }
 
     #[test]

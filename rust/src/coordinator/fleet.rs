@@ -18,8 +18,22 @@
 //!
 //! Ties break deterministically on (cost, queue length, replica id).
 //! Quarantined replicas and replicas at their queue bound are excluded;
-//! when no replica can take the request, admission control sheds it to
-//! the configured [`FailurePolicy`].
+//! when every replica with queue room is health-excluded the request
+//! backoff-requeues until a quarantine TTL expires
+//! ([`Placement::AllQuarantined`]), and only a genuinely full fleet
+//! ([`Placement::Full`]) sheds to the configured [`FailurePolicy`].
+//!
+//! ## Self-healing (DESIGN.md §16)
+//!
+//! Replica health is a state machine, not a sticky flag:
+//! Healthy → Suspect (failures below the threshold) → Quarantined
+//! (TTL with exponential backoff per re-quarantine) → Probation (one
+//! canary request after a bit-verified recovery pass) → Healthy.  On
+//! quarantine the replica's queue is drained and re-dispatched to
+//! healthy replicas under a per-request deadline + retry budget; when
+//! the TTL expires the replica reverts to base, re-syncs its resident
+//! weights, and must pass the BitOracle's bit-identity gate before the
+//! scheduler offers it a canary.
 //!
 //! ## Determinism harness
 //!
@@ -49,14 +63,15 @@
 //! cross-checks the whole fleet once the workers join.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::engine::Router;
 use super::error::ServeError;
-use super::fault::FaultPlan;
+use super::fault::{FaultInjector, FaultPlan};
 use super::metrics::FairnessLedger;
 use super::selection::Selection;
 use super::server::FailurePolicy;
@@ -75,6 +90,153 @@ use crate::util::threadpool::ThreadPool;
 /// poisoned lock carries no information a recovery path needs.
 fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Replica health states (DESIGN.md §16).  The legal transitions are
+/// Healthy → Suspect (a failure below the quarantine threshold),
+/// Suspect → Quarantined (threshold reached), Quarantined → Probation
+/// (TTL expired and the recovery pass landed bit-verified base
+/// weights), Probation → Healthy (canary served, or a failure-free
+/// probation window elapsed) and Probation → Quarantined (the canary
+/// failed; the TTL doubles per re-quarantine, capped at 2^6x).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Serving normally.
+    Healthy,
+    /// One or more recent failures, still below the quarantine
+    /// threshold; routes normally.
+    Suspect,
+    /// Refusing all traffic until the quarantine TTL expires.
+    Quarantined,
+    /// Recovered and bit-verified; admitted one canary request at a
+    /// time until a success (or a quiet probation window) re-promotes.
+    Probation,
+}
+
+impl HealthState {
+    /// Stable label for reports and summaries.
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Suspect => "suspect",
+            HealthState::Quarantined => "quarantined",
+            HealthState::Probation => "probation",
+        }
+    }
+}
+
+/// Backoff hint the scheduler returns when only probation-capped
+/// replicas were excluded (no quarantine TTL to wait out — just the
+/// in-flight canary), microseconds.
+const PROBATION_RETRY_US: u64 = 50;
+
+/// Largest exponent the quarantine-TTL backoff may reach (TTL << 6 =
+/// 64x the base TTL); keeps repeated re-quarantines from overflowing
+/// the virtual clock.
+const MAX_TTL_SHIFT: u32 = 6;
+
+/// Per-replica health state machine (DESIGN.md §16): consecutive
+/// failures, quarantine trips with exponential TTL backoff, and the
+/// probe/recovery counters the report surfaces.
+#[derive(Clone, Debug)]
+struct ReplicaHealth {
+    state: HealthState,
+    failures_in_row: u32,
+    /// Quarantine trips so far — drives the exponential TTL backoff.
+    trips: u64,
+    /// Clock (us) at which the current quarantine expires into a probe.
+    until_us: u64,
+    /// Clock (us) at which the current probation began.
+    probation_since_us: u64,
+    /// Probes: quarantine TTLs that expired into a recovery pass.
+    probes: u64,
+    /// Recoveries: probations promoted back to Healthy.
+    recoveries: u64,
+}
+
+impl ReplicaHealth {
+    fn new() -> Self {
+        ReplicaHealth {
+            state: HealthState::Healthy,
+            failures_in_row: 0,
+            trips: 0,
+            until_us: 0,
+            probation_since_us: 0,
+            probes: 0,
+            recoveries: 0,
+        }
+    }
+
+    /// Remaining quarantine TTL at `now_us` (0 unless quarantined).
+    fn retry_in_us(&self, now_us: u64) -> u64 {
+        if self.state == HealthState::Quarantined {
+            self.until_us.saturating_sub(now_us).max(1)
+        } else {
+            0
+        }
+    }
+
+    /// Record a failed apply at `now_us`.  Returns true when this
+    /// failure newly quarantined the replica (threshold crossed, or a
+    /// probation canary failed) — the caller then drains its queue.
+    fn note_failure(&mut self, now_us: u64, threshold: u32, ttl_us: u64) -> bool {
+        self.failures_in_row += 1;
+        let trip = match self.state {
+            // A failed canary re-quarantines immediately.
+            HealthState::Probation => true,
+            HealthState::Quarantined => false,
+            HealthState::Healthy | HealthState::Suspect => {
+                self.state = HealthState::Suspect;
+                self.failures_in_row >= threshold
+            }
+        };
+        if trip {
+            let shift = self.trips.min(u64::from(MAX_TTL_SHIFT));
+            self.state = HealthState::Quarantined;
+            self.until_us = now_us.saturating_add(ttl_us.max(1) << shift);
+            self.trips += 1;
+        }
+        trip
+    }
+
+    /// Record a successful apply: clears the failure streak, and a
+    /// probation canary success completes the recovery.
+    fn note_success(&mut self) {
+        self.failures_in_row = 0;
+        if self.state == HealthState::Probation {
+            self.recoveries += 1;
+        }
+        if self.state != HealthState::Quarantined {
+            self.state = HealthState::Healthy;
+        }
+    }
+
+    /// True when the quarantine TTL has expired: the replica may run its
+    /// recovery pass and enter probation.
+    fn probe_due(&self, now_us: u64) -> bool {
+        self.state == HealthState::Quarantined && now_us >= self.until_us
+    }
+
+    /// Enter probation at `now_us` (after the recovery pass verified).
+    fn begin_probation(&mut self, now_us: u64) {
+        self.state = HealthState::Probation;
+        self.probation_since_us = now_us;
+        self.failures_in_row = 0;
+        self.probes += 1;
+    }
+
+    /// Promote a failure-free probation back to Healthy once a full
+    /// probation window (`window_us`) passed without a canary — so a
+    /// recovered replica converges to Healthy even when no more traffic
+    /// arrives to serve as the canary.
+    fn poll_probation(&mut self, now_us: u64, window_us: u64) {
+        if self.state == HealthState::Probation
+            && now_us.saturating_sub(self.probation_since_us) >= window_us.max(1)
+        {
+            self.recoveries += 1;
+            self.state = HealthState::Healthy;
+        }
+    }
 }
 
 /// Affinity cost: the selection is already resident on the replica.
@@ -103,9 +265,13 @@ pub struct ReplicaView {
     /// it is live in single mode — the `from` side of a pairwise
     /// transition plan.
     pub active_single: Option<String>,
-    /// Sticky health flag: the replica failed too many applies in a row
-    /// and no longer receives new requests.
-    pub quarantined: bool,
+    /// Health state the scheduler must respect: Quarantined replicas
+    /// are excluded outright; Probation replicas admit one canary.
+    pub health: HealthState,
+    /// Remaining quarantine TTL at snapshot time, microseconds (0
+    /// unless quarantined) — the backoff hint a health-excluded
+    /// placement carries back to the caller.
+    pub retry_in_us: u64,
 }
 
 /// Cost of making `sel` resident on the replica `view` describes, down
@@ -127,10 +293,31 @@ fn affinity_cost(view: &ReplicaView, sel: &Selection, key: &str, store: &Adapter
     COST_COLD
 }
 
-/// Pick the replica where `sel` is cheapest to reach, or `None` when
-/// every replica is quarantined or at its queue bound (the admission
-/// decision).  Pure over its inputs, so every scheduling decision is
-/// replayable and directly property-testable.
+/// Where the scheduler placed (or refused) a request — the admission
+/// decision, with the transient case distinguished from genuine
+/// overload so the two are never shed identically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Route to this replica.
+    Replica(usize),
+    /// Every replica with queue room is health-excluded (waiting out a
+    /// quarantine TTL, or probation-capped by its in-flight canary):
+    /// transient — backoff-requeue and retry once the earliest TTL
+    /// expires, instead of shedding.
+    AllQuarantined {
+        /// Smallest remaining TTL among the excluding replicas,
+        /// microseconds (at least 1).
+        retry_in_us: u64,
+    },
+    /// Every replica's bounded queue is genuinely full: overload —
+    /// shed to the configured failure policy.
+    Full,
+}
+
+/// Pick the replica where `sel` is cheapest to reach, or classify why
+/// no replica can take it ([`Placement`]).  Pure over its inputs, so
+/// every scheduling decision is replayable and directly
+/// property-testable.
 ///
 /// Ties break on `(cost, queued, id)` — strictly deterministic.  With
 /// `force_cold` every candidate costs [`COST_COLD`], collapsing the
@@ -142,11 +329,27 @@ pub fn pick_replica(
     store: &AdapterStore,
     queue_depth: usize,
     force_cold: bool,
-) -> Option<usize> {
+) -> Placement {
     let key = sel.key();
     let mut best: Option<(u8, usize, usize)> = None;
+    let mut health_excluded = false;
+    let mut min_retry = u64::MAX;
     for v in views {
-        if v.quarantined || v.queued >= queue_depth {
+        match v.health {
+            HealthState::Quarantined => {
+                health_excluded = true;
+                min_retry = min_retry.min(v.retry_in_us.max(1));
+                continue;
+            }
+            // Probation admits exactly one in-flight canary request.
+            HealthState::Probation if v.queued >= 1 => {
+                health_excluded = true;
+                min_retry = min_retry.min(PROBATION_RETRY_US);
+                continue;
+            }
+            _ => {}
+        }
+        if v.queued >= queue_depth {
             continue;
         }
         let cost = if force_cold {
@@ -159,7 +362,13 @@ pub fn pick_replica(
             best = Some(cand);
         }
     }
-    best.map(|(_, _, id)| id)
+    match best {
+        Some((_, _, id)) => Placement::Replica(id),
+        None if health_excluded => Placement::AllQuarantined {
+            retry_in_us: if min_retry == u64::MAX { 1 } else { min_retry },
+        },
+        None => Placement::Full,
+    }
 }
 
 /// The fault-free serial reference the determinism harness checks
@@ -230,8 +439,7 @@ struct Replica {
     /// Virtual clock, microseconds: when this replica next becomes free.
     clock_us: u64,
     served: u64,
-    failures_in_row: u32,
-    quarantined: bool,
+    health: ReplicaHealth,
 }
 
 /// Mutable run-wide accounting shared by both execution modes.
@@ -239,15 +447,19 @@ struct Accum {
     fairness: FairnessLedger,
     waits: Sample,
     /// Terminal disposition per request id ("served",
-    /// "degraded-to-base", "skipped", "shed-degraded", "shed-skipped")
-    /// — the per-request outcome record the acceptance criterion
-    /// compares across replica counts.
+    /// "degraded-to-base", "skipped", "shed-degraded", "shed-skipped",
+    /// "deadline-exceeded") — the per-request outcome record the
+    /// acceptance criterion compares across replica counts.  Every
+    /// request lands exactly one terminal action: nothing is silently
+    /// lost on a drain.
     actions: BTreeMap<u64, &'static str>,
     outcomes: Vec<FleetOutcome>,
     served: u64,
     shed: u64,
     degraded: u64,
     skipped: u64,
+    requeues: u64,
+    deadline_exceeded: u64,
     switches: u64,
     transitions: u64,
     fallbacks: u64,
@@ -266,6 +478,8 @@ impl Accum {
             shed: 0,
             degraded: 0,
             skipped: 0,
+            requeues: 0,
+            deadline_exceeded: 0,
             switches: 0,
             transitions: 0,
             fallbacks: 0,
@@ -284,6 +498,29 @@ impl Accum {
     }
 }
 
+/// A request waiting out a retry/requeue backoff in the deterministic
+/// harness's virtual time.
+struct PendingRetry {
+    /// Virtual instant at which the request re-dispatches.
+    ready_us: u64,
+    /// Re-dispatch attempts already consumed.
+    attempts: u32,
+    req: Request,
+}
+
+/// Deterministic-mode run state: the virtual front-end clock plus the
+/// drain-and-requeue bookkeeping (DESIGN.md §16).
+struct DetState {
+    /// Virtual front-end clock, microseconds: the max of arrivals seen
+    /// and replica completion times — what deadlines, backoffs and
+    /// quarantine TTLs measure against.
+    now_us: u64,
+    /// Requests parked behind a backoff, awaiting re-dispatch.
+    pending: Vec<PendingRetry>,
+    /// Re-dispatch attempts consumed per queued request id.
+    attempts: HashMap<u64, u32>,
+}
+
 /// How one failed or shed batch was handled under the failure policy —
 /// the fleet's analogue of
 /// [`RequestOutcome`](super::server::RequestOutcome).
@@ -293,10 +530,13 @@ pub struct FleetOutcome {
     pub selection: String,
     /// Requests in the affected batch (1 for admission sheds).
     pub requests: u64,
-    /// Replica involved, or `None` for admission-control sheds.
+    /// Replica involved, or `None` for admission-control sheds and
+    /// deadline expiries.
     pub replica: Option<usize>,
-    /// `"degraded-to-base"`, `"skipped"`, `"shed-degraded"` or
-    /// `"shed-skipped"`.
+    /// Terminal: `"degraded-to-base"`, `"skipped"`, `"shed-degraded"`,
+    /// `"shed-skipped"` or `"deadline-exceeded"`.  Non-terminal:
+    /// `"requeued"` (the requests re-dispatch and land a later terminal
+    /// outcome).
     pub action: &'static str,
     /// Display form of the triggering error.
     pub error: String,
@@ -325,9 +565,25 @@ pub struct FleetReport {
     pub fallbacks: u64,
     /// Switches served by the incremental fused-mode engine.
     pub fused_switches: u64,
-    /// Failed mutations rolled back to base across all replicas.
+    /// Failed mutations rolled back to base across all replicas
+    /// (including routers rebuilt during recovery).
     pub rollbacks: u64,
-    /// Replicas quarantined by consecutive failures.
+    /// Requests re-dispatched after a failure, a quarantine drain, or
+    /// an all-quarantined backoff.
+    pub requeues: u64,
+    /// Requests whose end-to-end deadline elapsed unserved.
+    pub deadline_exceeded: u64,
+    /// Quarantine trips across all replicas (a replica re-quarantined
+    /// twice counts twice).
+    pub quarantine_trips: u64,
+    /// Quarantine TTL expiries that ran a recovery pass.
+    pub probes: u64,
+    /// Probations promoted back to Healthy.
+    pub recoveries: u64,
+    /// Final health state per replica, in id order (names from
+    /// [`HealthState::name`]).
+    pub replica_health: Vec<&'static str>,
+    /// Replicas still quarantined at end of run.
     pub quarantined_replicas: usize,
     /// Requests served per replica (placement distribution).
     pub per_replica_served: Vec<u64>,
@@ -363,7 +619,8 @@ pub struct FleetReport {
 /// Defaults: 2 replicas, queue depth 16, [`StoreConfig::default`],
 /// [`BatcherConfig::default`], no pool, fail-fast policy, SLO
 /// disabled, 50us virtual service time, quarantine after 3 consecutive
-/// failures, oracle on, force-cold off.
+/// failures, 250ms base quarantine TTL, retry budget 3 with 100us base
+/// backoff, deadline disabled, oracle on, force-cold off.
 pub struct FleetBuilder {
     base: WeightStore,
     replicas: usize,
@@ -379,6 +636,10 @@ pub struct FleetBuilder {
     slo_us: u64,
     service_us: u64,
     quarantine_after: u32,
+    quarantine_ttl_us: u64,
+    deadline_us: u64,
+    retry_budget: u32,
+    retry_backoff_us: u64,
     oracle: bool,
     force_cold: bool,
 }
@@ -471,6 +732,40 @@ impl FleetBuilder {
         self
     }
 
+    /// Base replica-quarantine TTL, microseconds (clamped to at least
+    /// 1): how long a quarantined replica sits out before its recovery
+    /// pass and probation.  Doubles per re-quarantine up to 64x, and
+    /// doubles as the failure-free probation window.
+    pub fn replica_quarantine_ttl_us(mut self, us: u64) -> Self {
+        self.quarantine_ttl_us = us;
+        self
+    }
+
+    /// End-to-end request deadline, microseconds (0 disables): a
+    /// request still unserved this long after arrival is declared
+    /// [`ServeError::DeadlineExceeded`] instead of retrying forever —
+    /// virtual time under [`Fleet::run_trace`], wall time under
+    /// [`Fleet::run_trace_concurrent`].
+    pub fn deadline_us(mut self, us: u64) -> Self {
+        self.deadline_us = us;
+        self
+    }
+
+    /// Re-dispatch attempts one request may consume (after apply
+    /// failures or quarantine drains) before the failure policy takes
+    /// over.  Backoff between attempts is exponential.
+    pub fn retry_budget(mut self, n: u32) -> Self {
+        self.retry_budget = n;
+        self
+    }
+
+    /// Base backoff between re-dispatch attempts, microseconds
+    /// (clamped to at least 1; doubles per attempt already consumed).
+    pub fn retry_backoff_us(mut self, us: u64) -> Self {
+        self.retry_backoff_us = us;
+        self
+    }
+
     /// Enable/disable the per-request bit-identity oracle (on by
     /// default; benches disable it for timed runs after gating).
     pub fn oracle(mut self, on: bool) -> Self {
@@ -514,19 +809,25 @@ impl FleetBuilder {
                 batcher: DynamicBatcher::new(self.batcher_cfg.clone()),
                 clock_us: 0,
                 served: 0,
-                failures_in_row: 0,
-                quarantined: false,
+                health: ReplicaHealth::new(),
             });
         }
         Fleet {
             store: Arc::new(Mutex::new(store)),
             replicas,
             base: self.base,
+            pool: self.pool,
+            injector,
             queue_depth: self.queue_depth.max(1),
             failure_policy: self.failure_policy,
             slo_us: self.slo_us,
             service_us: self.service_us.max(1),
             quarantine_after: self.quarantine_after.max(1),
+            quarantine_ttl_us: self.quarantine_ttl_us.max(1),
+            deadline_us: self.deadline_us,
+            retry_budget: self.retry_budget,
+            retry_backoff_us: self.retry_backoff_us.max(1),
+            carried_rollbacks: 0,
             oracle: self.oracle,
             force_cold: self.force_cold,
             unfused_lora: self.unfused_lora,
@@ -543,11 +844,23 @@ pub struct Fleet {
     store: Arc<Mutex<AdapterStore>>,
     replicas: Vec<Replica>,
     base: WeightStore,
+    /// Retained so recovery can rebuild a wedged replica's router.
+    pool: Option<Arc<ThreadPool>>,
+    /// Retained so a rebuilt router re-arms the SAME injector (per-site
+    /// ordinals stay fleet-global across rebuilds).
+    injector: Option<Arc<FaultInjector>>,
     queue_depth: usize,
     failure_policy: FailurePolicy,
     slo_us: u64,
     service_us: u64,
     quarantine_after: u32,
+    quarantine_ttl_us: u64,
+    deadline_us: u64,
+    retry_budget: u32,
+    retry_backoff_us: u64,
+    /// Rollback counts carried over from routers replaced during
+    /// recovery, so the report never undercounts.
+    carried_rollbacks: u64,
     oracle: bool,
     force_cold: bool,
     unfused_lora: bool,
@@ -571,6 +884,10 @@ impl Fleet {
             slo_us: 0,
             service_us: 50,
             quarantine_after: 3,
+            quarantine_ttl_us: 250_000,
+            deadline_us: 0,
+            retry_budget: 3,
+            retry_backoff_us: 100,
             oracle: true,
             force_cold: false,
         }
@@ -603,8 +920,8 @@ impl Fleet {
     }
 
     /// Scheduler-visible snapshot of every replica (deterministic mode
-    /// reads the live structs directly).
-    fn views(&self) -> Vec<ReplicaView> {
+    /// reads the live structs directly) at virtual time `now_us`.
+    fn views(&self, now_us: u64) -> Vec<ReplicaView> {
         self.replicas
             .iter()
             .map(|r| ReplicaView {
@@ -612,7 +929,8 @@ impl Fleet {
                 queued: r.batcher.pending(),
                 active_key: r.router.active_key().map(str::to_string),
                 active_single: r.router.active_single().map(str::to_string),
-                quarantined: r.quarantined,
+                health: r.health.state,
+                retry_in_us: r.health.retry_in_us(now_us),
             })
             .collect()
     }
@@ -646,44 +964,245 @@ impl Fleet {
             None
         };
         let mut acc = Accum::new(self.slo_us, oracle);
+        let mut rs = DetState {
+            now_us: 0,
+            pending: Vec::new(),
+            attempts: HashMap::new(),
+        };
         for q in trace {
-            self.ingest(q, &mut acc)?;
+            rs.now_us = rs.now_us.max(q.arrival_us);
+            self.poll_health(&mut rs, &mut acc);
+            self.flush_due(&mut rs, &mut acc)?;
+            self.dispatch(q.clone(), 0, &mut rs, &mut acc)?;
             let steps = rng.below(self.replicas.len() + 1);
             for _ in 0..steps {
-                if !self.drain_one(&mut rng, &mut acc)? {
+                if !self.drain_one(&mut rng, &mut rs, &mut acc)? {
                     break;
                 }
             }
         }
-        while self.drain_one(&mut rng, &mut acc)? {}
+        // Settle: serve the backlog, re-dispatch requeued requests, and
+        // walk every quarantined replica through probe → probation →
+        // healthy, warping virtual time to the next due event whenever
+        // the fleet would otherwise stall.  Terminates because every
+        // failure-requeue consumes finite retry budget, every backoff
+        // is strictly in the future, and probation idle-promotes.
+        loop {
+            while self.drain_one(&mut rng, &mut rs, &mut acc)? {}
+            self.poll_health(&mut rs, &mut acc);
+            self.flush_due(&mut rs, &mut acc)?;
+            if self.replicas.iter().any(|r| !r.batcher.is_empty()) {
+                continue;
+            }
+            let settled = rs.pending.is_empty()
+                && self.replicas.iter().all(|r| {
+                    matches!(r.health.state, HealthState::Healthy | HealthState::Suspect)
+                });
+            if settled {
+                break;
+            }
+            rs.now_us = self.next_event_us(&rs).max(rs.now_us + 1);
+        }
         Ok(self.finish(acc, trace.len() as u64))
     }
 
-    /// Route one arriving request, shedding to the failure policy when
-    /// no replica can take it.
-    fn ingest(&mut self, req: &Request, acc: &mut Accum) -> Result<(), ServeError> {
-        let target = {
+    /// Earliest virtual instant at which anything can change: a retry
+    /// backoff elapses, a quarantine TTL expires, or a probation window
+    /// closes.
+    fn next_event_us(&self, rs: &DetState) -> u64 {
+        let mut next = u64::MAX;
+        for p in &rs.pending {
+            next = next.min(p.ready_us);
+        }
+        for rep in &self.replicas {
+            match rep.health.state {
+                HealthState::Quarantined => next = next.min(rep.health.until_us),
+                HealthState::Probation => {
+                    next = next.min(
+                        rep.health
+                            .probation_since_us
+                            .saturating_add(self.quarantine_ttl_us.max(1)),
+                    );
+                }
+                _ => {}
+            }
+        }
+        if next == u64::MAX {
+            0
+        } else {
+            next
+        }
+    }
+
+    /// Probe every replica whose quarantine TTL expired (running its
+    /// recovery pass) and promote failure-free probations.
+    fn poll_health(&mut self, rs: &mut DetState, acc: &mut Accum) {
+        for r in 0..self.replicas.len() {
+            if self.replicas[r].health.probe_due(rs.now_us) {
+                self.recover_replica(r, rs.now_us, acc);
+            }
+            self.replicas[r]
+                .health
+                .poll_probation(rs.now_us, self.quarantine_ttl_us);
+        }
+    }
+
+    /// Recovery pass (DESIGN.md §16): the quarantine TTL expired, so
+    /// revert the replica to base via its transactional router, re-sync
+    /// its resident weights from the shared store, and verify the
+    /// result bit-identical before probation admits a canary.  A router
+    /// whose bytes still diverge is rebuilt from pristine base weights
+    /// (its rollback count carries into the report) with the SAME fault
+    /// injector re-armed.
+    fn recover_replica(&mut self, r: usize, now_us: u64, acc: &mut Accum) {
+        {
+            let mut store = relock(&self.store);
+            let rep = &mut self.replicas[r];
+            if rep.router.apply(&mut store, &Selection::Base).is_err() {
+                // The transactional guard already rolled the weights
+                // back; revert_all additionally releases every pin the
+                // wedged apply may still hold.
+                rep.router.revert_all(&mut store);
+            }
+        }
+        if !self.replicas[r].router.weights().bit_equal(&self.base) {
+            self.carried_rollbacks += self.replicas[r].router.rollbacks();
+            let mut router = Router::new(self.base.clone(), self.pool.clone(), self.unfused_lora);
+            if let Some(f) = &self.injector {
+                router.set_fault(Arc::clone(f));
+            }
+            self.replicas[r].router = router;
+        }
+        self.replicas[r].health.begin_probation(now_us);
+        // The bit-identity gate: a recovered replica may not rejoin the
+        // rotation unless its resident bytes match the fault-free
+        // reference.
+        if let Some(oracle) = acc.oracle.as_mut() {
+            let rep = &self.replicas[r];
+            oracle.check_replica(rep.id, rep.router.active_key(), rep.router.weights());
+        }
+    }
+
+    /// Re-dispatch every pending retry whose backoff elapsed, in
+    /// deterministic (ready time, request id) order.
+    fn flush_due(&mut self, rs: &mut DetState, acc: &mut Accum) -> Result<(), ServeError> {
+        loop {
+            let due = rs
+                .pending
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.ready_us <= rs.now_us)
+                .min_by_key(|(_, p)| (p.ready_us, p.req.id))
+                .map(|(i, _)| i);
+            let Some(i) = due else { return Ok(()) };
+            let p = rs.pending.swap_remove(i);
+            self.dispatch(p.req, p.attempts, rs, acc)?;
+        }
+    }
+
+    /// Route one request (fresh from the trace, or re-dispatched after
+    /// a failure or backoff) with `attempts` re-dispatch attempts
+    /// already consumed: enforce the end-to-end deadline, backoff-
+    /// requeue on a health-excluded fleet, and shed to the failure
+    /// policy only on genuine overload.
+    fn dispatch(
+        &mut self,
+        req: Request,
+        attempts: u32,
+        rs: &mut DetState,
+        acc: &mut Accum,
+    ) -> Result<(), ServeError> {
+        if self.deadline_us > 0
+            && rs.now_us >= req.arrival_us.saturating_add(self.deadline_us)
+        {
+            return self.expire(req, attempts, rs, acc);
+        }
+        let placement = {
             let store = relock(&self.store);
             pick_replica(
-                &self.views(),
+                &self.views(rs.now_us),
                 &req.selection,
                 &store,
                 self.queue_depth,
                 self.force_cold,
             )
         };
-        match target {
-            Some(r) => {
-                self.replicas[r].batcher.push(req.clone());
+        match placement {
+            Placement::Replica(r) => {
+                rs.attempts.insert(req.id, attempts);
+                self.replicas[r].batcher.push(req);
                 Ok(())
             }
-            None => self.shed(req, acc),
+            Placement::AllQuarantined { retry_in_us } => {
+                // Transient: every queue-room replica is waiting out a
+                // TTL (or its canary).  Park without consuming retry
+                // budget — the fleet, not the request, is at fault.
+                acc.requeues += 1;
+                rs.pending.push(PendingRetry {
+                    ready_us: rs.now_us.saturating_add(retry_in_us.max(1)),
+                    attempts,
+                    req,
+                });
+                Ok(())
+            }
+            Placement::Full => self.shed(&req, rs.now_us, acc),
         }
+    }
+
+    /// Declare a request dead: its end-to-end deadline elapsed before
+    /// any replica served it.  Terminal and accounted — never silently
+    /// lost.
+    fn expire(
+        &mut self,
+        req: Request,
+        attempts: u32,
+        rs: &mut DetState,
+        acc: &mut Accum,
+    ) -> Result<(), ServeError> {
+        let key = req.selection.key();
+        let err = ServeError::DeadlineExceeded {
+            selection: key.clone(),
+            deadline_us: self.deadline_us,
+            waited_us: rs.now_us.saturating_sub(req.arrival_us),
+            attempts,
+        };
+        if matches!(self.failure_policy, FailurePolicy::FailFast) {
+            for rp in &mut self.replicas {
+                rp.batcher.clear();
+            }
+            rs.pending.clear();
+            return Err(err);
+        }
+        acc.deadline_exceeded += 1;
+        acc.fairness.record_deadline_exceeded(&key);
+        acc.actions.insert(req.id, "deadline-exceeded");
+        acc.outcomes.push(FleetOutcome {
+            selection: key,
+            requests: 1,
+            replica: None,
+            action: "deadline-exceeded",
+            error: err.to_string(),
+        });
+        Ok(())
+    }
+
+    /// Park one request on the deterministic retry queue with the
+    /// exponential backoff its attempt count earns (consumes one
+    /// attempt).
+    fn requeue(&self, req: Request, attempts: u32, key: &str, rs: &mut DetState, acc: &mut Accum) {
+        let backoff = self.retry_backoff_us.max(1) << u64::from(attempts.min(16));
+        acc.requeues += 1;
+        acc.fairness.record_retry(key);
+        rs.pending.push(PendingRetry {
+            ready_us: rs.now_us.saturating_add(backoff),
+            attempts: attempts + 1,
+            req,
+        });
     }
 
     /// Admission control: apply the failure policy to a request no
     /// replica can accept.
-    fn shed(&mut self, req: &Request, acc: &mut Accum) -> Result<(), ServeError> {
+    fn shed(&mut self, req: &Request, now_us: u64, acc: &mut Accum) -> Result<(), ServeError> {
         let key = req.selection.key();
         match self.failure_policy {
             FailurePolicy::FailFast => Err(ServeError::Overloaded {
@@ -694,11 +1213,12 @@ impl Fleet {
             FailurePolicy::DegradeToBase => {
                 // Retry the placement as a base request: base is the
                 // cheapest selection to make resident anywhere, so this
-                // only fails when every queue is genuinely full.
+                // only fails when every queue is genuinely full (a
+                // health-excluded replica cannot take base either).
                 let target = {
                     let store = relock(&self.store);
                     pick_replica(
-                        &self.views(),
+                        &self.views(now_us),
                         &Selection::Base,
                         &store,
                         self.queue_depth,
@@ -708,7 +1228,7 @@ impl Fleet {
                 acc.shed += 1;
                 acc.fairness.record_shed(&key);
                 match target {
-                    Some(r) => {
+                    Placement::Replica(r) => {
                         acc.degraded += 1;
                         acc.actions.insert(req.id, "shed-degraded");
                         acc.outcomes.push(FleetOutcome {
@@ -722,7 +1242,7 @@ impl Fleet {
                         base_req.selection = Selection::Base;
                         self.replicas[r].batcher.push(base_req);
                     }
-                    None => {
+                    Placement::AllQuarantined { .. } | Placement::Full => {
                         acc.skipped += 1;
                         acc.actions.insert(req.id, "shed-skipped");
                         acc.outcomes.push(FleetOutcome {
@@ -755,7 +1275,12 @@ impl Fleet {
 
     /// Serve one batch on one seeded-randomly-chosen busy replica.
     /// Returns false when the whole fleet is idle.
-    fn drain_one(&mut self, rng: &mut Rng, acc: &mut Accum) -> Result<bool, ServeError> {
+    fn drain_one(
+        &mut self,
+        rng: &mut Rng,
+        rs: &mut DetState,
+        acc: &mut Accum,
+    ) -> Result<bool, ServeError> {
         let busy: Vec<usize> = self
             .replicas
             .iter()
@@ -766,7 +1291,7 @@ impl Fleet {
             return Ok(false);
         }
         let r = busy[rng.below(busy.len())];
-        self.serve_one(r, acc)?;
+        self.serve_one(r, rs, acc)?;
         Ok(true)
     }
 
@@ -774,19 +1299,28 @@ impl Fleet {
     /// account virtual time and fairness, and run the oracle over the
     /// WHOLE fleet (rollback isolation: no other replica's bytes may
     /// have moved).
-    fn serve_one(&mut self, r: usize, acc: &mut Accum) -> Result<(), ServeError> {
-        let rep = &mut self.replicas[r];
-        let active = rep.router.active_key().map(str::to_string);
-        let Some((sel, batch)) = rep.batcher.next_batch(active.as_deref()) else {
+    fn serve_one(&mut self, r: usize, rs: &mut DetState, acc: &mut Accum) -> Result<(), ServeError> {
+        let active = self.replicas[r].router.active_key().map(str::to_string);
+        let Some((sel, batch)) = self.replicas[r].batcher.next_batch(active.as_deref()) else {
             return Ok(());
         };
         let key = sel.key();
-        let result = {
+        // The Apply fault site: a planned replica crash fails the whole
+        // apply before it reaches the store — the coarsest failure the
+        // self-healing machinery must absorb.
+        let crash = self
+            .injector
+            .as_ref()
+            .map(|f| f.should_crash_apply(r))
+            .unwrap_or(false);
+        let result = if crash {
+            Err(ServeError::Runtime(FaultInjector::APPLY_CRASH_MSG.into()))
+        } else {
             let mut store = relock(&self.store);
             let depth = store.prefetch_depth();
             if depth > 0 {
                 let mut names: Vec<String> = Vec::new();
-                for s in rep.batcher.upcoming(depth, &[key.as_str()]) {
+                for s in self.replicas[r].batcher.upcoming(depth, &[key.as_str()]) {
                     for n in s.names() {
                         if !names.iter().any(|x| x == n) {
                             names.push(n.to_string());
@@ -795,11 +1329,12 @@ impl Fleet {
                 }
                 store.prefetch(&names);
             }
-            rep.router.apply(&mut store, &sel)
+            self.replicas[r].router.apply(&mut store, &sel)
         };
         match result {
             Ok(applied) => {
-                rep.failures_in_row = 0;
+                let rep = &mut self.replicas[r];
+                rep.health.note_success();
                 if applied.switched {
                     acc.switches += 1;
                     acc.record_path(applied.path);
@@ -814,11 +1349,14 @@ impl Fleet {
                 }
                 rep.clock_us = start + self.service_us * batch.len() as u64;
                 rep.served += batch.len() as u64;
+                // Serving advances the front-end clock: deadlines are
+                // end-to-end, so queueing delay counts against them.
+                rs.now_us = rs.now_us.max(rep.clock_us);
                 acc.served += batch.len() as u64;
                 self.check_fleet(acc, Some(&sel));
                 Ok(())
             }
-            Err(e) => self.handle_failure(r, &sel, &batch, e, acc),
+            Err(e) => self.handle_failure(r, &sel, &batch, e, rs, acc),
         }
     }
 
@@ -844,8 +1382,13 @@ impl Fleet {
         }
     }
 
-    /// Apply the failure policy to a batch whose selection could not be
-    /// made resident, then re-run the fleet oracle: the failing
+    /// Handle a batch whose selection could not be made resident:
+    /// advance the replica's health state machine, failover-requeue
+    /// every request with retry budget left (exponential backoff,
+    /// re-dispatched across replicas), terminate the budget-exhausted
+    /// leftovers under the failure policy, and — when this failure
+    /// newly quarantined the replica — drain its queue so nothing waits
+    /// on a dead replica.  Then re-run the fleet oracle: the failing
     /// replica must be back on base bytes and every OTHER replica's
     /// resident bytes must be untouched.
     fn handle_failure(
@@ -854,33 +1397,68 @@ impl Fleet {
         sel: &Selection,
         batch: &[Request],
         e: ServeError,
+        rs: &mut DetState,
         acc: &mut Accum,
     ) -> Result<(), ServeError> {
         let key = sel.key();
-        let n = batch.len() as u64;
-        let rep = &mut self.replicas[r];
-        rep.failures_in_row += 1;
-        if rep.failures_in_row >= self.quarantine_after {
-            rep.quarantined = true;
-        }
-        match self.failure_policy {
-            FailurePolicy::FailFast => {
-                for rp in &mut self.replicas {
-                    rp.batcher.clear();
-                }
-                Err(e)
+        let newly_quarantined = self.replicas[r].health.note_failure(
+            rs.now_us,
+            self.quarantine_after,
+            self.quarantine_ttl_us,
+        );
+        if matches!(self.failure_policy, FailurePolicy::FailFast) {
+            for rp in &mut self.replicas {
+                rp.batcher.clear();
             }
+            rs.pending.clear();
+            return Err(e);
+        }
+        let mut leftover: Vec<Request> = Vec::new();
+        for q in batch {
+            let attempts = rs.attempts.get(&q.id).copied().unwrap_or(0);
+            if attempts < self.retry_budget {
+                self.requeue(q.clone(), attempts, &key, rs, acc);
+            } else {
+                leftover.push(q.clone());
+            }
+        }
+        let requeued = (batch.len() - leftover.len()) as u64;
+        if requeued > 0 {
+            acc.outcomes.push(FleetOutcome {
+                selection: key.clone(),
+                requests: requeued,
+                replica: Some(r),
+                action: "requeued",
+                error: e.to_string(),
+            });
+        }
+        if !leftover.is_empty() {
+            self.exhaust(r, &key, &leftover, &e, acc);
+        }
+        if newly_quarantined {
+            self.drain_replica(r, rs, acc);
+        }
+        self.check_fleet(acc, None);
+        Ok(())
+    }
+
+    /// Terminal handling for requests whose retry budget is spent: the
+    /// pre-§16 policy arms (degrade to base on this replica, or skip).
+    fn exhaust(&mut self, r: usize, key: &str, batch: &[Request], e: &ServeError, acc: &mut Accum) {
+        let n = batch.len() as u64;
+        match self.failure_policy {
             FailurePolicy::DegradeToBase => {
                 let ok = {
                     let mut store = relock(&self.store);
-                    rep.router.apply(&mut store, &Selection::Base).is_ok()
+                    self.replicas[r].router.apply(&mut store, &Selection::Base).is_ok()
                 };
+                let rep = &mut self.replicas[r];
                 if ok {
                     let newest = batch.iter().map(|q| q.arrival_us).max().unwrap_or(0);
                     let start = rep.clock_us.max(newest);
                     for q in batch {
                         let wait = start.saturating_sub(q.arrival_us);
-                        acc.fairness.record_wait(&key, wait);
+                        acc.fairness.record_wait(key, wait);
                         acc.waits.push(wait as f64);
                         acc.actions.insert(q.id, "degraded-to-base");
                     }
@@ -895,29 +1473,57 @@ impl Fleet {
                     acc.skipped += n;
                 }
                 acc.outcomes.push(FleetOutcome {
-                    selection: key,
+                    selection: key.to_string(),
                     requests: n,
                     replica: Some(r),
                     action: if ok { "degraded-to-base" } else { "skipped" },
                     error: e.to_string(),
                 });
-                self.check_fleet(acc, None);
-                Ok(())
             }
-            FailurePolicy::SkipRequest => {
+            // FailFast exits handle_failure before reaching here; treat
+            // it like SkipRequest for safety.
+            FailurePolicy::FailFast | FailurePolicy::SkipRequest => {
                 for q in batch {
                     acc.actions.insert(q.id, "skipped");
                 }
                 acc.skipped += n;
                 acc.outcomes.push(FleetOutcome {
-                    selection: key,
+                    selection: key.to_string(),
                     requests: n,
                     replica: Some(r),
                     action: "skipped",
                     error: e.to_string(),
                 });
-                self.check_fleet(acc, None);
-                Ok(())
+            }
+        }
+    }
+
+    /// Drain a newly quarantined replica's queue: every queued request
+    /// re-dispatches to the healthy remainder of the fleet (consuming
+    /// one attempt), and budget-exhausted ones terminate as skipped —
+    /// accounted, never silently lost.
+    fn drain_replica(&mut self, r: usize, rs: &mut DetState, acc: &mut Accum) {
+        loop {
+            let Some((sel, batch)) = self.replicas[r].batcher.next_batch(None) else {
+                break;
+            };
+            let key = sel.key();
+            for q in batch {
+                let attempts = rs.attempts.get(&q.id).copied().unwrap_or(0);
+                if attempts < self.retry_budget {
+                    self.requeue(q, attempts, &key, rs, acc);
+                } else {
+                    acc.skipped += 1;
+                    acc.actions.insert(q.id, "skipped");
+                    acc.outcomes.push(FleetOutcome {
+                        selection: key.clone(),
+                        requests: 1,
+                        replica: Some(r),
+                        action: "skipped",
+                        error: "drained from a quarantined replica with no retry budget left"
+                            .into(),
+                    });
+                }
             }
         }
     }
@@ -926,8 +1532,25 @@ impl Fleet {
     fn finish(&mut self, mut acc: Accum, requests: u64) -> FleetReport {
         let store = relock(&self.store).stats();
         let makespan_us = self.replicas.iter().map(|r| r.clock_us).max().unwrap_or(0);
-        let rollbacks: u64 = self.replicas.iter().map(|r| r.router.rollbacks()).sum();
-        let quarantined = self.replicas.iter().filter(|r| r.quarantined).count();
+        let rollbacks: u64 = self.carried_rollbacks
+            + self
+                .replicas
+                .iter()
+                .map(|r| r.router.rollbacks())
+                .sum::<u64>();
+        let quarantined = self
+            .replicas
+            .iter()
+            .filter(|r| r.health.state == HealthState::Quarantined)
+            .count();
+        let quarantine_trips: u64 = self.replicas.iter().map(|r| r.health.trips).sum();
+        let probes: u64 = self.replicas.iter().map(|r| r.health.probes).sum();
+        let recoveries: u64 = self.replicas.iter().map(|r| r.health.recoveries).sum();
+        let replica_health: Vec<&'static str> = self
+            .replicas
+            .iter()
+            .map(|r| r.health.state.name())
+            .collect();
         let per_replica_served: Vec<u64> = self.replicas.iter().map(|r| r.served).collect();
         let (oracle_checks, oracle_failures) = match &acc.oracle {
             Some(o) => (o.checks, o.failures.clone()),
@@ -940,8 +1563,9 @@ impl Fleet {
         };
         let mut summary = format!(
             "fleet: replicas={} requests={} served={} shed={} degraded={} \
-             skipped={} quarantined={}\n\
+             skipped={} deadline_exceeded={} quarantined={}\n\
              switches={} (transition={} fallback={} fused={}) rollbacks={}\n\
+             health: trips={} probes={} recoveries={} requeues={} states=[{}]\n\
              wait: p50={:.1}us p99={:.1}us makespan={}us\n\
              oracle: checks={} failures={}",
             self.replicas.len(),
@@ -950,12 +1574,18 @@ impl Fleet {
             acc.shed,
             acc.degraded,
             acc.skipped,
+            acc.deadline_exceeded,
             quarantined,
             acc.switches,
             acc.transitions,
             acc.fallbacks,
             acc.fused,
             rollbacks,
+            quarantine_trips,
+            probes,
+            recoveries,
+            acc.requeues,
+            replica_health.join(","),
             p50,
             p99,
             makespan_us,
@@ -978,6 +1608,12 @@ impl Fleet {
             fallbacks: acc.fallbacks,
             fused_switches: acc.fused,
             rollbacks,
+            requeues: acc.requeues,
+            deadline_exceeded: acc.deadline_exceeded,
+            quarantine_trips,
+            probes,
+            recoveries,
+            replica_health,
             quarantined_replicas: quarantined,
             per_replica_served,
             oracle_checks,
@@ -1014,15 +1650,30 @@ impl Fleet {
         let slots: Vec<Slot> = (0..self.replicas.len()).map(|_| Slot::default()).collect();
         let stop = AtomicBool::new(false);
         let first_error: Mutex<Option<ServeError>> = Mutex::new(None);
+        let requeue: Mutex<Vec<(u64, u32, Request)>> = Mutex::new(Vec::new());
+        let meta: Mutex<HashMap<u64, (u64, u32)>> = Mutex::new(HashMap::new());
+        let carried = AtomicU64::new(0);
         let ctx = WorkerCtx {
             slots: &slots,
             store: &*self.store,
             shared: &shared,
             stop: &stop,
             first_error: &first_error,
+            epoch: Instant::now(),
+            requeue: &requeue,
+            meta: &meta,
+            base: &self.base,
+            pool: self.pool.clone(),
+            injector: self.injector.clone(),
+            carried_rollbacks: &carried,
+            unfused_lora: self.unfused_lora,
             policy: self.failure_policy,
             service_us: self.service_us,
             quarantine_after: self.quarantine_after,
+            quarantine_ttl_us: self.quarantine_ttl_us,
+            deadline_us: self.deadline_us,
+            retry_budget: self.retry_budget,
+            retry_backoff_us: self.retry_backoff_us,
             queue_depth: self.queue_depth,
             force_cold: self.force_cold,
         };
@@ -1042,10 +1693,30 @@ impl Fleet {
                 if stop.load(Ordering::SeqCst) {
                     break;
                 }
-                front_route(q, &senders, &ctx);
+                front_drain_requeue(&senders, &ctx);
+                front_route(q, 0, &senders, &ctx);
+            }
+            // Settle: keep re-dispatching the requeue until every
+            // displaced request reaches a terminal disposition and the
+            // fleet heals, then hang up so the workers exit.
+            while !stop.load(Ordering::SeqCst) {
+                front_drain_requeue(&senders, &ctx);
+                let queued: usize = slots.iter().map(|s| s.queued.load(Ordering::SeqCst)).sum();
+                let parked = relock(&requeue).len();
+                let healed = slots.iter().all(|s| {
+                    matches!(
+                        health_from_u8(s.health.load(Ordering::SeqCst)),
+                        HealthState::Healthy | HealthState::Suspect
+                    )
+                });
+                if queued == 0 && parked == 0 && healed {
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(200));
             }
             drop(senders);
         });
+        self.carried_rollbacks += carried.load(Ordering::SeqCst);
         let mut acc = shared.into_inner().unwrap_or_else(|p| p.into_inner());
         // End-of-run cross-replica sweep: with the workers joined it is
         // safe to read every replica's weights again.
@@ -1060,14 +1731,41 @@ impl Fleet {
     }
 }
 
+/// Wire encoding of [`HealthState`] for the slot atomics.
+const HEALTH_HEALTHY: u8 = 0;
+const HEALTH_SUSPECT: u8 = 1;
+const HEALTH_QUARANTINED: u8 = 2;
+const HEALTH_PROBATION: u8 = 3;
+
+fn health_to_u8(s: HealthState) -> u8 {
+    match s {
+        HealthState::Healthy => HEALTH_HEALTHY,
+        HealthState::Suspect => HEALTH_SUSPECT,
+        HealthState::Quarantined => HEALTH_QUARANTINED,
+        HealthState::Probation => HEALTH_PROBATION,
+    }
+}
+
+fn health_from_u8(v: u8) -> HealthState {
+    match v {
+        HEALTH_SUSPECT => HealthState::Suspect,
+        HEALTH_QUARANTINED => HealthState::Quarantined,
+        HEALTH_PROBATION => HealthState::Probation,
+        _ => HealthState::Healthy,
+    }
+}
+
 /// Live per-replica scheduler state shared between the concurrent
 /// front end and its worker.
 #[derive(Default)]
 struct Slot {
     /// Requests outstanding on the replica (channel + batcher).
     queued: AtomicUsize,
-    /// Mirror of the replica's sticky quarantine flag.
-    quarantined: AtomicBool,
+    /// Mirror of the replica's health state (`HEALTH_*` encoding).
+    health: AtomicU8,
+    /// Mirror of the quarantine expiry, microseconds since the run
+    /// epoch (meaningful while quarantined).
+    until_us: AtomicU64,
     /// Mirror of the replica's (active key, active single) pair.
     active: Mutex<(Option<String>, Option<String>)>,
 }
@@ -1080,53 +1778,165 @@ struct WorkerCtx<'a> {
     shared: &'a Mutex<Accum>,
     stop: &'a AtomicBool,
     first_error: &'a Mutex<Option<ServeError>>,
+    /// Wall-clock epoch of the run: health TTLs, backoffs and deadlines
+    /// measure microseconds since this instant.
+    epoch: Instant,
+    /// Requests displaced by failures, drains or an all-quarantined
+    /// fleet, parked for front-end re-dispatch:
+    /// (re-dispatch instant us, attempts consumed, request).
+    requeue: &'a Mutex<Vec<(u64, u32, Request)>>,
+    /// Per request id: (first-seen wall instant us, attempts consumed)
+    /// — what the end-to-end deadline and retry budget measure.
+    meta: &'a Mutex<HashMap<u64, (u64, u32)>>,
+    /// Pristine base weights for recovery rebuilds.
+    base: &'a WeightStore,
+    pool: Option<Arc<ThreadPool>>,
+    injector: Option<Arc<FaultInjector>>,
+    /// Rollback counts of routers replaced during recovery.
+    carried_rollbacks: &'a AtomicU64,
+    unfused_lora: bool,
     policy: FailurePolicy,
     service_us: u64,
     quarantine_after: u32,
+    quarantine_ttl_us: u64,
+    deadline_us: u64,
+    retry_budget: u32,
+    retry_backoff_us: u64,
     queue_depth: usize,
     force_cold: bool,
 }
 
+/// Microseconds since the run epoch (the concurrent mode's clock).
+fn wall_us(ctx: &WorkerCtx<'_>) -> u64 {
+    ctx.epoch.elapsed().as_micros() as u64
+}
+
 /// Snapshot every slot into scheduler views for the front end.
-fn slot_views(slots: &[Slot]) -> Vec<ReplicaView> {
+fn slot_views(slots: &[Slot], now_us: u64) -> Vec<ReplicaView> {
     slots
         .iter()
         .enumerate()
         .map(|(id, s)| {
             let (active_key, active_single) = relock(&s.active).clone();
+            let health = health_from_u8(s.health.load(Ordering::SeqCst));
+            let retry_in_us = if health == HealthState::Quarantined {
+                s.until_us
+                    .load(Ordering::SeqCst)
+                    .saturating_sub(now_us)
+                    .max(1)
+            } else {
+                0
+            };
             ReplicaView {
                 id,
                 queued: s.queued.load(Ordering::SeqCst),
                 active_key,
                 active_single,
-                quarantined: s.quarantined.load(Ordering::SeqCst),
+                health,
+                retry_in_us,
             }
         })
         .collect()
 }
 
-/// Route one request from the concurrent front end, shedding to the
-/// failure policy when no replica can take it (or the chosen queue
-/// filled in the race window).
-fn front_route(req: &Request, senders: &[SyncSender<Request>], ctx: &WorkerCtx<'_>) {
+/// Re-dispatch every parked request whose backoff elapsed.
+fn front_drain_requeue(senders: &[SyncSender<Request>], ctx: &WorkerCtx<'_>) {
+    loop {
+        let now = wall_us(ctx);
+        let next = {
+            let mut rq = relock(ctx.requeue);
+            let due = rq.iter().position(|(ready, _, _)| *ready <= now);
+            due.map(|i| rq.swap_remove(i))
+        };
+        let Some((_, attempts, req)) = next else { return };
+        front_route(&req, attempts, senders, ctx);
+    }
+}
+
+/// Terminal deadline-exceeded handling for the concurrent front end.
+fn expire_concurrent(req: &Request, key: &str, waited_us: u64, attempts: u32, ctx: &WorkerCtx<'_>) {
+    let err = ServeError::DeadlineExceeded {
+        selection: key.to_string(),
+        deadline_us: ctx.deadline_us,
+        waited_us,
+        attempts,
+    };
+    if let FailurePolicy::FailFast = ctx.policy {
+        let mut fe = relock(ctx.first_error);
+        if fe.is_none() {
+            *fe = Some(err);
+        }
+        drop(fe);
+        ctx.stop.store(true, Ordering::SeqCst);
+        return;
+    }
+    let mut acc = relock(ctx.shared);
+    acc.deadline_exceeded += 1;
+    acc.fairness.record_deadline_exceeded(key);
+    acc.actions.insert(req.id, "deadline-exceeded");
+    acc.outcomes.push(FleetOutcome {
+        selection: key.to_string(),
+        requests: 1,
+        replica: None,
+        action: "deadline-exceeded",
+        error: err.to_string(),
+    });
+}
+
+/// Route one request from the concurrent front end: enforce the
+/// end-to-end (wall-clock) deadline, park on an all-quarantined fleet,
+/// and shed to the failure policy only on genuine overload (or when the
+/// chosen queue filled in the race window).
+fn front_route(req: &Request, attempts: u32, senders: &[SyncSender<Request>], ctx: &WorkerCtx<'_>) {
     let key = req.selection.key();
-    let target = {
+    let now = wall_us(ctx);
+    let first_seen = {
+        let mut meta = relock(ctx.meta);
+        meta.entry(req.id).or_insert((now, attempts)).0
+    };
+    if ctx.deadline_us > 0 && now >= first_seen.saturating_add(ctx.deadline_us) {
+        expire_concurrent(req, &key, now.saturating_sub(first_seen), attempts, ctx);
+        return;
+    }
+    let placement = {
         let store = relock(ctx.store);
         pick_replica(
-            &slot_views(ctx.slots),
+            &slot_views(ctx.slots, now),
             &req.selection,
             &store,
             ctx.queue_depth,
             ctx.force_cold,
         )
     };
-    if let Some(r) = target {
-        ctx.slots[r].queued.fetch_add(1, Ordering::SeqCst);
-        if senders[r].try_send(req.clone()).is_ok() {
-            return;
+    match placement {
+        Placement::Replica(r) => {
+            ctx.slots[r].queued.fetch_add(1, Ordering::SeqCst);
+            if senders[r].try_send(req.clone()).is_ok() {
+                return;
+            }
+            ctx.slots[r].queued.fetch_sub(1, Ordering::SeqCst);
+            // Race: the chosen queue filled first — genuine overload.
+            front_shed(req, &key, senders, ctx);
         }
-        ctx.slots[r].queued.fetch_sub(1, Ordering::SeqCst);
+        Placement::AllQuarantined { retry_in_us } => {
+            // Transient: park for re-dispatch once a TTL expires (no
+            // retry budget consumed — the fleet, not the request, is
+            // at fault).
+            relock(ctx.requeue).push((
+                now.saturating_add(retry_in_us.max(1)),
+                attempts,
+                req.clone(),
+            ));
+            relock(ctx.shared).requeues += 1;
+        }
+        Placement::Full => front_shed(req, &key, senders, ctx),
     }
+}
+
+/// Shed one request the front end could not place (genuine overload)
+/// to the failure policy.
+fn front_shed(req: &Request, key: &str, senders: &[SyncSender<Request>], ctx: &WorkerCtx<'_>) {
+    let key = key.to_string();
     match ctx.policy {
         FailurePolicy::FailFast => {
             let mut fe = relock(ctx.first_error);
@@ -1144,7 +1954,7 @@ fn front_route(req: &Request, senders: &[SyncSender<Request>], ctx: &WorkerCtx<'
             let target = {
                 let store = relock(ctx.store);
                 pick_replica(
-                    &slot_views(ctx.slots),
+                    &slot_views(ctx.slots, wall_us(ctx)),
                     &Selection::Base,
                     &store,
                     ctx.queue_depth,
@@ -1152,7 +1962,7 @@ fn front_route(req: &Request, senders: &[SyncSender<Request>], ctx: &WorkerCtx<'
                 )
             };
             let mut sent_to = None;
-            if let Some(r) = target {
+            if let Placement::Replica(r) = target {
                 ctx.slots[r].queued.fetch_add(1, Ordering::SeqCst);
                 let mut base_req = req.clone();
                 base_req.selection = Selection::Base;
@@ -1208,8 +2018,11 @@ fn front_route(req: &Request, senders: &[SyncSender<Request>], ctx: &WorkerCtx<'
 }
 
 /// One concurrent worker: drain the channel into the replica's affinity
-/// batcher, serve batch by batch, exit when the channel disconnects and
-/// the backlog is empty (or a fleet-wide stop is flagged).
+/// batcher, serve batch by batch, poll the health state machine on a
+/// short timeout so quarantine TTLs expire into recovery even with no
+/// traffic, and exit when the channel disconnects, the backlog is
+/// empty, AND the replica has converged to a steady health state (so
+/// the run always ends fully healed).
 fn replica_worker(rep: &mut Replica, rx: Receiver<Request>, ctx: &WorkerCtx<'_>) {
     loop {
         if ctx.stop.load(Ordering::SeqCst) {
@@ -1217,6 +2030,7 @@ fn replica_worker(rep: &mut Replica, rx: Receiver<Request>, ctx: &WorkerCtx<'_>)
             ctx.slots[rep.id].queued.store(0, Ordering::SeqCst);
             return;
         }
+        worker_poll_health(rep, ctx);
         let mut disconnected = false;
         loop {
             match rx.try_recv() {
@@ -1230,15 +2044,29 @@ fn replica_worker(rep: &mut Replica, rx: Receiver<Request>, ctx: &WorkerCtx<'_>)
         }
         if rep.batcher.is_empty() {
             if disconnected {
-                return;
+                if matches!(
+                    rep.health.state,
+                    HealthState::Healthy | HealthState::Suspect
+                ) {
+                    return;
+                }
+                // Still quarantined/probation: keep polling the TTL.
+                std::thread::sleep(Duration::from_micros(200));
+                continue;
             }
-            match rx.recv() {
+            match rx.recv_timeout(Duration::from_micros(500)) {
                 Ok(q) => {
                     rep.batcher.push(q);
                     continue;
                 }
-                Err(_) => return,
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => continue,
             }
+        }
+        if rep.health.state == HealthState::Quarantined {
+            // Traffic raced in before the front saw the quarantine:
+            // drain it back for failover instead of serving it here.
+            worker_drain(rep, ctx);
+            continue;
         }
         serve_batch_concurrent(rep, ctx);
     }
@@ -1252,6 +2080,140 @@ fn publish_slot(rep: &Replica, ctx: &WorkerCtx<'_>) {
     );
 }
 
+/// Publish a replica's health state (and quarantine expiry) to its
+/// slot so the front end's scheduler sees it.
+fn publish_health(rep: &Replica, ctx: &WorkerCtx<'_>) {
+    ctx.slots[rep.id]
+        .until_us
+        .store(rep.health.until_us, Ordering::SeqCst);
+    ctx.slots[rep.id]
+        .health
+        .store(health_to_u8(rep.health.state), Ordering::SeqCst);
+}
+
+/// Walk the replica's health state machine against the wall clock:
+/// an expired quarantine TTL runs the recovery pass, and a failure-free
+/// probation window promotes back to Healthy.
+fn worker_poll_health(rep: &mut Replica, ctx: &WorkerCtx<'_>) {
+    let now = wall_us(ctx);
+    if rep.health.probe_due(now) {
+        worker_recover(rep, ctx, now);
+    }
+    rep.health.poll_probation(now, ctx.quarantine_ttl_us);
+    publish_health(rep, ctx);
+}
+
+/// Concurrent twin of [`Fleet::recover_replica`]: revert to base via
+/// the transactional router (rebuilding it from pristine base weights
+/// if its bytes still diverge), verify bit-identity against the oracle,
+/// and enter probation.
+fn worker_recover(rep: &mut Replica, ctx: &WorkerCtx<'_>, now_us: u64) {
+    {
+        let mut store = relock(ctx.store);
+        if rep.router.apply(&mut store, &Selection::Base).is_err() {
+            rep.router.revert_all(&mut store);
+        }
+    }
+    if !rep.router.weights().bit_equal(ctx.base) {
+        ctx.carried_rollbacks
+            .fetch_add(rep.router.rollbacks(), Ordering::SeqCst);
+        let mut router = Router::new(ctx.base.clone(), ctx.pool.clone(), ctx.unfused_lora);
+        if let Some(f) = &ctx.injector {
+            router.set_fault(Arc::clone(f));
+        }
+        rep.router = router;
+    }
+    rep.health.begin_probation(now_us);
+    publish_slot(rep, ctx);
+    let mut acc = relock(ctx.shared);
+    if let Some(oracle) = acc.oracle.as_mut() {
+        oracle.check_replica(rep.id, rep.router.active_key(), rep.router.weights());
+    }
+}
+
+/// Requeue each request in `batch` for front-end re-dispatch (budget
+/// permitting) and return the budget-exhausted leftovers for the
+/// caller to terminate under the policy.  Accounts the requeue
+/// counters and one "requeued" outcome.
+fn requeue_batch(
+    key: &str,
+    batch: Vec<Request>,
+    replica: usize,
+    why: &str,
+    ctx: &WorkerCtx<'_>,
+    now_us: u64,
+) -> Vec<Request> {
+    let mut requeued = 0u64;
+    let mut exhausted: Vec<Request> = Vec::new();
+    {
+        let mut meta = relock(ctx.meta);
+        let mut rq = relock(ctx.requeue);
+        for q in batch {
+            let entry = meta.entry(q.id).or_insert((now_us, 0));
+            if entry.1 < ctx.retry_budget {
+                let backoff = ctx.retry_backoff_us.max(1) << u64::from(entry.1.min(16));
+                entry.1 += 1;
+                rq.push((now_us.saturating_add(backoff), entry.1, q));
+                requeued += 1;
+            } else {
+                exhausted.push(q);
+            }
+        }
+    }
+    if requeued > 0 {
+        let mut acc = relock(ctx.shared);
+        acc.requeues += requeued;
+        for _ in 0..requeued {
+            acc.fairness.record_retry(key);
+        }
+        acc.outcomes.push(FleetOutcome {
+            selection: key.to_string(),
+            requests: requeued,
+            replica: Some(replica),
+            action: "requeued",
+            error: why.to_string(),
+        });
+    }
+    exhausted
+}
+
+/// Drain a quarantined replica's backlog back to the front end's
+/// requeue; budget-exhausted requests terminate as skipped (accounted,
+/// never silently lost).
+fn worker_drain(rep: &mut Replica, ctx: &WorkerCtx<'_>) {
+    let now = wall_us(ctx);
+    loop {
+        let Some((sel, batch)) = rep.batcher.next_batch(None) else {
+            return;
+        };
+        let key = sel.key();
+        let n = batch.len();
+        let exhausted = requeue_batch(
+            &key,
+            batch,
+            rep.id,
+            "drained from a quarantined replica",
+            ctx,
+            now,
+        );
+        ctx.slots[rep.id].queued.fetch_sub(n, Ordering::SeqCst);
+        if !exhausted.is_empty() {
+            let mut acc = relock(ctx.shared);
+            acc.skipped += exhausted.len() as u64;
+            for q in &exhausted {
+                acc.actions.insert(q.id, "skipped");
+            }
+            acc.outcomes.push(FleetOutcome {
+                selection: key,
+                requests: exhausted.len() as u64,
+                replica: Some(rep.id),
+                action: "skipped",
+                error: "drained from a quarantined replica with no retry budget left".into(),
+            });
+        }
+    }
+}
+
 /// Serve one batch inside a concurrent worker (the worker-thread twin
 /// of [`Fleet::serve_one`]): apply under the store lock, account
 /// virtual time and fairness under the accumulator lock, and run the
@@ -1263,7 +2225,17 @@ fn serve_batch_concurrent(rep: &mut Replica, ctx: &WorkerCtx<'_>) {
     };
     let key = sel.key();
     let n = batch.len() as u64;
-    let result = {
+    let n_reqs = batch.len();
+    // The Apply fault site: a planned replica crash fails the whole
+    // apply before it reaches the store.
+    let crash = ctx
+        .injector
+        .as_ref()
+        .map(|f| f.should_crash_apply(rep.id))
+        .unwrap_or(false);
+    let result = if crash {
+        Err(ServeError::Runtime(FaultInjector::APPLY_CRASH_MSG.into()))
+    } else {
         let mut store = relock(ctx.store);
         let depth = store.prefetch_depth();
         if depth > 0 {
@@ -1281,15 +2253,14 @@ fn serve_batch_concurrent(rep: &mut Replica, ctx: &WorkerCtx<'_>) {
     };
     match result {
         Ok(applied) => {
-            rep.failures_in_row = 0;
+            rep.health.note_success();
+            publish_health(rep, ctx);
             let newest = batch.iter().map(|q| q.arrival_us).max().unwrap_or(0);
             let start = rep.clock_us.max(newest);
             rep.clock_us = start + ctx.service_us * n;
             rep.served += n;
             publish_slot(rep, ctx);
-            ctx.slots[rep.id]
-                .queued
-                .fetch_sub(batch.len(), Ordering::SeqCst);
+            ctx.slots[rep.id].queued.fetch_sub(n_reqs, Ordering::SeqCst);
             let mut acc = relock(ctx.shared);
             if applied.switched {
                 acc.switches += 1;
@@ -1308,91 +2279,73 @@ fn serve_batch_concurrent(rep: &mut Replica, ctx: &WorkerCtx<'_>) {
             }
         }
         Err(e) => {
-            rep.failures_in_row += 1;
-            if rep.failures_in_row >= ctx.quarantine_after {
-                rep.quarantined = true;
-                ctx.slots[rep.id].quarantined.store(true, Ordering::SeqCst);
-            }
-            match ctx.policy {
-                FailurePolicy::FailFast => {
-                    let mut fe = relock(ctx.first_error);
-                    if fe.is_none() {
-                        *fe = Some(e);
-                    }
-                    drop(fe);
-                    ctx.stop.store(true, Ordering::SeqCst);
-                    rep.batcher.clear();
-                    publish_slot(rep, ctx);
-                    ctx.slots[rep.id].queued.store(0, Ordering::SeqCst);
+            let now = wall_us(ctx);
+            let newly_quarantined =
+                rep.health
+                    .note_failure(now, ctx.quarantine_after, ctx.quarantine_ttl_us);
+            publish_health(rep, ctx);
+            if let FailurePolicy::FailFast = ctx.policy {
+                let mut fe = relock(ctx.first_error);
+                if fe.is_none() {
+                    *fe = Some(e);
                 }
-                FailurePolicy::DegradeToBase => {
-                    let ok = {
+                drop(fe);
+                ctx.stop.store(true, Ordering::SeqCst);
+                rep.batcher.clear();
+                publish_slot(rep, ctx);
+                ctx.slots[rep.id].queued.store(0, Ordering::SeqCst);
+                return;
+            }
+            // Failover: requeue what still has retry budget; the
+            // leftovers terminate under the policy.
+            let exhausted = requeue_batch(&key, batch, rep.id, &e.to_string(), ctx, now);
+            let n_left = exhausted.len() as u64;
+            let mut degraded_ok = false;
+            if !exhausted.is_empty() {
+                if let FailurePolicy::DegradeToBase = ctx.policy {
+                    degraded_ok = {
                         let mut store = relock(ctx.store);
                         rep.router.apply(&mut store, &Selection::Base).is_ok()
                     };
-                    if ok {
-                        let newest = batch.iter().map(|q| q.arrival_us).max().unwrap_or(0);
+                    if degraded_ok {
+                        let newest = exhausted.iter().map(|q| q.arrival_us).max().unwrap_or(0);
                         let start = rep.clock_us.max(newest);
-                        rep.clock_us = start + ctx.service_us * n;
-                        rep.served += n;
+                        rep.clock_us = start + ctx.service_us * n_left;
+                        rep.served += n_left;
                     }
-                    publish_slot(rep, ctx);
-                    ctx.slots[rep.id]
-                        .queued
-                        .fetch_sub(batch.len(), Ordering::SeqCst);
-                    let mut acc = relock(ctx.shared);
-                    if ok {
-                        for q in &batch {
+                }
+            }
+            publish_slot(rep, ctx);
+            ctx.slots[rep.id].queued.fetch_sub(n_reqs, Ordering::SeqCst);
+            {
+                let mut acc = relock(ctx.shared);
+                if !exhausted.is_empty() {
+                    if degraded_ok {
+                        for q in &exhausted {
                             acc.actions.insert(q.id, "degraded-to-base");
                         }
-                        acc.served += n;
-                        acc.degraded += n;
+                        acc.served += n_left;
+                        acc.degraded += n_left;
                     } else {
-                        for q in &batch {
+                        for q in &exhausted {
                             acc.actions.insert(q.id, "skipped");
                         }
-                        acc.skipped += n;
+                        acc.skipped += n_left;
                     }
                     acc.outcomes.push(FleetOutcome {
-                        selection: key,
-                        requests: n,
+                        selection: key.clone(),
+                        requests: n_left,
                         replica: Some(rep.id),
-                        action: if ok { "degraded-to-base" } else { "skipped" },
+                        action: if degraded_ok { "degraded-to-base" } else { "skipped" },
                         error: e.to_string(),
                     });
-                    if let Some(oracle) = acc.oracle.as_mut() {
-                        oracle.check_replica(
-                            rep.id,
-                            rep.router.active_key(),
-                            rep.router.weights(),
-                        );
-                    }
                 }
-                FailurePolicy::SkipRequest => {
-                    publish_slot(rep, ctx);
-                    ctx.slots[rep.id]
-                        .queued
-                        .fetch_sub(batch.len(), Ordering::SeqCst);
-                    let mut acc = relock(ctx.shared);
-                    for q in &batch {
-                        acc.actions.insert(q.id, "skipped");
-                    }
-                    acc.skipped += n;
-                    acc.outcomes.push(FleetOutcome {
-                        selection: key,
-                        requests: n,
-                        replica: Some(rep.id),
-                        action: "skipped",
-                        error: e.to_string(),
-                    });
-                    if let Some(oracle) = acc.oracle.as_mut() {
-                        oracle.check_replica(
-                            rep.id,
-                            rep.router.active_key(),
-                            rep.router.weights(),
-                        );
-                    }
+                if let Some(oracle) = acc.oracle.as_mut() {
+                    oracle.check_replica(rep.id, rep.router.active_key(), rep.router.weights());
                 }
+            }
+            if newly_quarantined {
+                worker_drain(rep, ctx);
             }
         }
     }
@@ -1432,7 +2385,8 @@ mod tests {
             queued,
             active_key: key.map(str::to_string),
             active_single: single.map(str::to_string),
-            quarantined: false,
+            health: HealthState::Healthy,
+            retry_in_us: 0,
         }
     }
 
@@ -1496,23 +2450,31 @@ mod tests {
             view(1, 3, Some("adapter0@1"), Some("adapter0")), // plan
             view(2, 3, Some(&key), Some("adapter1")),         // exact
         ];
-        assert_eq!(pick_replica(&views, &sel, &store, 8, false), Some(2));
-        assert_eq!(pick_replica(&views[..2], &sel, &store, 8, false), Some(1));
-        assert_eq!(pick_replica(&views[..1], &sel, &store, 8, false), Some(0));
+        assert_eq!(pick_replica(&views, &sel, &store, 8, false), Placement::Replica(2));
+        assert_eq!(
+            pick_replica(&views[..2], &sel, &store, 8, false),
+            Placement::Replica(1)
+        );
+        assert_eq!(
+            pick_replica(&views[..1], &sel, &store, 8, false),
+            Placement::Replica(0)
+        );
         // force_cold collapses the ladder: least-loaded wins.
         let views = vec![
             view(0, 5, Some(&key), Some("adapter1")),
             view(1, 2, None, None),
         ];
-        assert_eq!(pick_replica(&views, &sel, &store, 8, true), Some(1));
+        assert_eq!(pick_replica(&views, &sel, &store, 8, true), Placement::Replica(1));
     }
 
     #[test]
-    fn prop_scheduler_respects_quarantine_bounds_and_ties() {
-        // Satellite 2: over random replica states the scheduler never
-        // selects a quarantined replica, never exceeds the queue bound,
-        // and breaks ties deterministically (same inputs, same pick;
-        // equal-cost candidates resolve to the lowest (queued, id)).
+    fn prop_scheduler_respects_health_bounds_and_ties() {
+        // Over random replica states the scheduler never selects a
+        // quarantined replica or a probation replica with its canary in
+        // flight, never exceeds the queue bound, breaks ties
+        // deterministically, and classifies the no-candidate case
+        // correctly: AllQuarantined iff at least one replica was
+        // health-excluded, Full iff every replica was queue-full.
         let names = zoo_names(3);
         let mut store = AdapterStore::with_config(
             StoreConfig {
@@ -1526,13 +2488,23 @@ mod tests {
             store.add_shira(a);
         }
         store.fetch("adapter0").unwrap();
+        let healths = [
+            HealthState::Healthy,
+            HealthState::Suspect,
+            HealthState::Quarantined,
+            HealthState::Probation,
+        ];
+        let excluded = |v: &ReplicaView| {
+            v.health == HealthState::Quarantined
+                || (v.health == HealthState::Probation && v.queued >= 1)
+        };
         pt::forall(
             0xF1EE7,
             60,
             |r: &mut Rng| {
                 let depth = 1 + r.below(6);
-                let views: Vec<(usize, bool, u8)> = (0..1 + r.below(6))
-                    .map(|_| (r.below(8), r.below(4) == 0, r.below(3) as u8))
+                let views: Vec<(usize, usize, u8)> = (0..1 + r.below(6))
+                    .map(|_| (r.below(8), r.below(4), r.below(3) as u8))
                     .collect();
                 (depth, views, r.below(3))
             },
@@ -1540,12 +2512,17 @@ mod tests {
                 let views: Vec<ReplicaView> = raw
                     .iter()
                     .enumerate()
-                    .map(|(id, &(queued, quarantined, state))| ReplicaView {
+                    .map(|(id, &(queued, health, state))| ReplicaView {
                         id,
                         queued,
                         active_key: (state == 1).then(|| "adapter0@1".to_string()),
                         active_single: (state == 1).then(|| "adapter0".to_string()),
-                        quarantined,
+                        health: healths[health],
+                        retry_in_us: if healths[health] == HealthState::Quarantined {
+                            500
+                        } else {
+                            0
+                        },
                     })
                     .collect();
                 let sel = match which {
@@ -1559,10 +2536,18 @@ mod tests {
                     return false;
                 }
                 match pick {
-                    None => views.iter().all(|v| v.quarantined || v.queued >= depth),
-                    Some(id) => {
+                    Placement::AllQuarantined { retry_in_us } => {
+                        retry_in_us >= 1
+                            && views.iter().any(|v| excluded(v))
+                            && views.iter().all(|v| excluded(v) || v.queued >= depth)
+                    }
+                    Placement::Full => {
+                        !views.iter().any(|v| excluded(v))
+                            && views.iter().all(|v| v.queued >= depth)
+                    }
+                    Placement::Replica(id) => {
                         let v = &views[id];
-                        if v.quarantined || v.queued >= depth {
+                        if excluded(v) || v.queued >= depth {
                             return false;
                         }
                         // No strictly better candidate was skipped.
@@ -1570,7 +2555,7 @@ mod tests {
                         let cost = affinity_cost(v, &sel, &key, &store);
                         views
                             .iter()
-                            .filter(|w| !w.quarantined && w.queued < depth)
+                            .filter(|w| !excluded(w) && w.queued < depth)
                             .all(|w| {
                                 (affinity_cost(w, &sel, &key, &store), w.queued, w.id)
                                     >= (cost, v.queued, v.id)
@@ -1734,5 +2719,232 @@ mod tests {
         assert_eq!(fleet.replica_count(), 2);
         assert_eq!(fleet.queue_depth, 16);
         assert!(fleet.oracle);
+        assert_eq!(fleet.quarantine_ttl_us, 250_000);
+        assert_eq!(fleet.deadline_us, 0);
+        assert_eq!(fleet.retry_budget, 3);
+        assert_eq!(fleet.retry_backoff_us, 100);
+        // Zero TTL/backoff clamp to 1 so backoff shifts stay nonzero.
+        let fleet = Fleet::builder(toy_base(DIM, 1))
+            .replica_quarantine_ttl_us(0)
+            .retry_backoff_us(0)
+            .build();
+        assert_eq!(fleet.quarantine_ttl_us, 1);
+        assert_eq!(fleet.retry_backoff_us, 1);
+    }
+
+    #[test]
+    fn replica_health_state_machine_trips_probes_and_recovers() {
+        let mut h = ReplicaHealth::new();
+        assert_eq!(h.state, HealthState::Healthy);
+        assert_eq!(h.retry_in_us(0), 0);
+        // Below the threshold failures only mark the replica Suspect.
+        assert!(!h.note_failure(1_000, 3, 250));
+        assert!(!h.note_failure(1_000, 3, 250));
+        assert_eq!(h.state, HealthState::Suspect);
+        // The threshold failure trips a quarantine with the base TTL.
+        assert!(h.note_failure(1_000, 3, 250));
+        assert_eq!(h.state, HealthState::Quarantined);
+        assert_eq!(h.trips, 1);
+        assert_eq!(h.until_us, 1_250);
+        assert_eq!(h.retry_in_us(1_000), 250);
+        // Further failures while quarantined do not re-trip.
+        assert!(!h.note_failure(1_100, 3, 250));
+        assert!(!h.probe_due(1_249));
+        assert!(h.probe_due(1_250));
+        // A failed probation canary re-quarantines immediately with a
+        // doubled TTL (exponential backoff per re-quarantine).
+        h.begin_probation(1_250);
+        assert_eq!(h.state, HealthState::Probation);
+        assert_eq!(h.probes, 1);
+        assert!(h.note_failure(1_300, 3, 250));
+        assert_eq!(h.state, HealthState::Quarantined);
+        assert_eq!(h.trips, 2);
+        assert_eq!(h.until_us, 1_300 + 500);
+        // A canary success completes the recovery.
+        h.begin_probation(1_800);
+        h.note_success();
+        assert_eq!(h.state, HealthState::Healthy);
+        assert_eq!(h.recoveries, 1);
+        assert_eq!(h.failures_in_row, 0);
+        // A quiet probation window self-promotes (no traffic needed);
+        // trips is 2 now so the next TTL is base << 2.
+        assert!(h.note_failure(2_000, 1, 250));
+        assert_eq!(h.until_us, 2_000 + 1_000);
+        h.begin_probation(5_000);
+        h.poll_probation(5_400, 500);
+        assert_eq!(h.state, HealthState::Probation);
+        h.poll_probation(5_500, 500);
+        assert_eq!(h.state, HealthState::Healthy);
+        assert_eq!(h.recoveries, 2);
+        // The TTL backoff shift saturates at MAX_TTL_SHIFT.
+        let mut h = ReplicaHealth::new();
+        h.trips = 40;
+        h.note_failure(0, 1, 100);
+        assert_eq!(h.until_us, 100 << MAX_TTL_SHIFT);
+    }
+
+    #[test]
+    fn scheduler_distinguishes_all_quarantined_from_full() {
+        let names = zoo_names(2);
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 64 << 20,
+                prefetch_depth: 0,
+                ..StoreConfig::default()
+            },
+            None,
+        );
+        for a in &toy_shira_zoo(DIM, &names, NNZ, 2) {
+            store.add_shira(a);
+        }
+        let sel = Selection::single("adapter0");
+        let mk = |id: usize, queued: usize, health: HealthState, retry: u64| ReplicaView {
+            id,
+            queued,
+            active_key: None,
+            active_single: None,
+            health,
+            retry_in_us: retry,
+        };
+        // Every replica quarantined: transient — report the soonest
+        // TTL expiry so the front end can requeue with a backoff.
+        let views = vec![
+            mk(0, 0, HealthState::Quarantined, 700),
+            mk(1, 0, HealthState::Quarantined, 300),
+        ];
+        assert_eq!(
+            pick_replica(&views, &sel, &store, 8, false),
+            Placement::AllQuarantined { retry_in_us: 300 }
+        );
+        // Health-excluded plus queue-full still reads as transient: the
+        // quarantined replica will come back.
+        let views = vec![
+            mk(0, 8, HealthState::Healthy, 0),
+            mk(1, 0, HealthState::Quarantined, 300),
+        ];
+        assert_eq!(
+            pick_replica(&views, &sel, &store, 8, false),
+            Placement::AllQuarantined { retry_in_us: 300 }
+        );
+        // Genuinely full (all healthy, all at the bound): Overloaded
+        // territory — shedding, not waiting, is correct.
+        let views = vec![
+            mk(0, 8, HealthState::Healthy, 0),
+            mk(1, 8, HealthState::Suspect, 0),
+        ];
+        assert_eq!(pick_replica(&views, &sel, &store, 8, false), Placement::Full);
+        // A probation replica admits exactly one canary at a time.
+        let views = vec![mk(0, 0, HealthState::Probation, 0)];
+        assert_eq!(pick_replica(&views, &sel, &store, 8, false), Placement::Replica(0));
+        let views = vec![mk(0, 1, HealthState::Probation, 0)];
+        assert_eq!(
+            pick_replica(&views, &sel, &store, 8, false),
+            Placement::AllQuarantined { retry_in_us: PROBATION_RETRY_US }
+        );
+    }
+
+    #[test]
+    fn crash_quarantine_probe_recover_round_trip() {
+        // Tentpole gate in miniature: crash every replica's first apply,
+        // watch each one trip quarantine, drain, probe, pass the
+        // bit-identity gate, and end Healthy — with every request
+        // terminally accounted and the run replay-identical.
+        let names = zoo_names(4);
+        let sels = Selection::singles(&names);
+        let trace = fleet_trace(&sels, 60, 4, 0x9E);
+        let run = || {
+            let names = zoo_names(4);
+            let mut fleet = Fleet::builder(toy_base(DIM, 13))
+                .replicas(2)
+                .queue_depth(64)
+                .failure_policy(FailurePolicy::DegradeToBase)
+                .quarantine_after(1)
+                .replica_quarantine_ttl_us(400)
+                .retry_backoff_us(50)
+                .fault_plan(
+                    FaultPlan::new().crash_replica_at(0, 1).crash_replica_at(1, 1),
+                )
+                .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, 13))
+                .store_config(StoreConfig {
+                    cache_bytes: 64 << 20,
+                    prefetch_depth: 0,
+                    plan_cache_bytes: 0,
+                    ..StoreConfig::default()
+                })
+                .build();
+            fleet.run_trace(&trace, 0x77).unwrap()
+        };
+        let a = run();
+        assert!(a.quarantine_trips >= 2, "{}", a.summary);
+        assert!(a.probes >= 2, "{}", a.summary);
+        assert!(a.recoveries >= 2, "{}", a.summary);
+        assert!(a.requeues >= 1, "{}", a.summary);
+        assert_eq!(a.deadline_exceeded, 0);
+        assert!(
+            a.replica_health.iter().all(|&h| h == "healthy"),
+            "end states {:?}",
+            a.replica_health
+        );
+        assert_eq!(a.quarantined_replicas, 0);
+        // Nothing silently lost on the drain: every request has a
+        // terminal disposition and the counters add back up.
+        assert_eq!(a.actions.len(), trace.len());
+        assert_eq!(a.served + a.shed + a.skipped + a.deadline_exceeded, 60);
+        // Recovered replicas passed the bit-identity gate and kept it
+        // green for the rest of the run.
+        assert!(a.oracle_checks > 0);
+        assert!(a.oracle_failures.is_empty(), "{:?}", a.oracle_failures);
+        // Replay-identical from the same (trace, schedule, fault) seeds.
+        let b = run();
+        assert_eq!(a.actions, b.actions);
+        assert_eq!(a.summary, b.summary);
+        assert_eq!(a.per_replica_served, b.per_replica_served);
+    }
+
+    #[test]
+    fn deadline_expires_requests_instead_of_retrying_forever() {
+        // One replica, quarantined on its first apply with a TTL far
+        // past every request's deadline: the retry path must give up at
+        // the deadline and account the requests, not spin.
+        let names = zoo_names(4);
+        let sels = Selection::singles(&names);
+        let trace = fleet_trace(&sels, 20, 1, 0x41);
+        let mut fleet = Fleet::builder(toy_base(DIM, 5))
+            .replicas(1)
+            .queue_depth(64)
+            .failure_policy(FailurePolicy::SkipRequest)
+            .quarantine_after(1)
+            .replica_quarantine_ttl_us(10_000_000)
+            .deadline_us(5_000)
+            .fault_plan(FaultPlan::new().crash_replica_at(0, 1))
+            .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, 5))
+            .store_config(StoreConfig {
+                cache_bytes: 64 << 20,
+                prefetch_depth: 0,
+                plan_cache_bytes: 0,
+                ..StoreConfig::default()
+            })
+            .build();
+        let report = fleet.run_trace(&trace, 0x3).unwrap();
+        assert!(report.deadline_exceeded > 0, "{}", report.summary);
+        assert_eq!(report.deadline_exceeded, report.fairness.total_deadline_exceeded());
+        assert_eq!(report.actions.len(), trace.len());
+        assert_eq!(
+            report.served + report.shed + report.skipped + report.deadline_exceeded,
+            20
+        );
+        // Expired requests carry no replica and a real deadline error.
+        assert!(report
+            .outcomes
+            .iter()
+            .filter(|o| o.action == "deadline-exceeded")
+            .all(|o| o.replica.is_none() && o.error.contains("deadline")));
+        // The replica still recovers once its TTL expires, so the run
+        // ends all-Healthy even though its traffic timed out.
+        assert!(
+            report.replica_health.iter().all(|&h| h == "healthy"),
+            "end states {:?}",
+            report.replica_health
+        );
     }
 }

@@ -25,6 +25,11 @@ pub struct SelectionFairness {
     pub max_wait_us: u64,
     /// Served requests whose wait exceeded the ledger's SLO.
     pub slo_violations: u64,
+    /// Re-dispatch attempts this selection consumed (failover retries
+    /// plus drain requeues off a quarantined replica).
+    pub retries: u64,
+    /// Requests of this selection that died on their end-to-end deadline.
+    pub deadline_exceeded: u64,
 }
 
 impl SelectionFairness {
@@ -81,6 +86,17 @@ impl FairnessLedger {
         self.rows.entry(key.to_string()).or_default().shed += 1;
     }
 
+    /// Record one re-dispatch attempt (failover retry or drain requeue)
+    /// for selection `key`.
+    pub fn record_retry(&mut self, key: &str) {
+        self.rows.entry(key.to_string()).or_default().retries += 1;
+    }
+
+    /// Record one request of selection `key` that exceeded its deadline.
+    pub fn record_deadline_exceeded(&mut self, key: &str) {
+        self.rows.entry(key.to_string()).or_default().deadline_exceeded += 1;
+    }
+
     /// True when nothing has been recorded.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
@@ -101,6 +117,16 @@ impl FairnessLedger {
         self.rows.values().map(|r| r.shed).sum()
     }
 
+    /// Sum of re-dispatch attempts across all selections.
+    pub fn total_retries(&self) -> u64 {
+        self.rows.values().map(|r| r.retries).sum()
+    }
+
+    /// Sum of deadline-exceeded requests across all selections.
+    pub fn total_deadline_exceeded(&self) -> u64 {
+        self.rows.values().map(|r| r.deadline_exceeded).sum()
+    }
+
     /// Largest queueing wait any selection saw, microseconds.
     pub fn max_wait_us(&self) -> u64 {
         self.rows.values().map(|r| r.max_wait_us).max().unwrap_or(0)
@@ -114,12 +140,14 @@ impl FairnessLedger {
             let shown = if key.is_empty() { "<base>" } else { key };
             out.push_str(&format!(
                 "fairness[{shown}]: served={} wait mean={:.1}us max={}us \
-                 slo_violations={} shed={}\n",
+                 slo_violations={} shed={} retries={} deadline_exceeded={}\n",
                 r.requests,
                 r.mean_wait_us(),
                 r.max_wait_us,
                 r.slo_violations,
-                r.shed
+                r.shed,
+                r.retries,
+                r.deadline_exceeded
             ));
         }
         out.pop(); // trailing newline
@@ -171,6 +199,17 @@ pub struct ServeMetrics {
     /// Requests dropped after their selection failed under the
     /// `SkipRequest` policy.
     pub skipped: u64,
+    /// Requests re-dispatched to another replica (drained off a
+    /// quarantined replica's queue or retried after a failed apply).
+    pub requeues: u64,
+    /// Requests that died on their end-to-end deadline before any
+    /// replica served them.
+    pub deadline_exceeded: u64,
+    /// Probation canaries admitted to quarantined replicas whose TTL
+    /// expired (each runs a recovery pass first).
+    pub probes: u64,
+    /// Replicas restored to Healthy after a bit-verified recovery pass.
+    pub recoveries: u64,
     /// Adapter-store lifecycle counters (set once at end of run via
     /// [`Self::set_store`]; includes retry/quarantine counts).
     pub store: StoreStats,
@@ -219,6 +258,27 @@ impl ServeMetrics {
     /// Record `n` requests dropped under the skip policy.
     pub fn record_skipped(&mut self, n: u64) {
         self.skipped += n;
+    }
+
+    /// Record `n` requests re-dispatched to another replica.
+    pub fn record_requeues(&mut self, n: u64) {
+        self.requeues += n;
+    }
+
+    /// Record `n` requests that exceeded their end-to-end deadline.
+    pub fn record_deadline_exceeded(&mut self, n: u64) {
+        self.deadline_exceeded += n;
+    }
+
+    /// Record one probation canary admitted after a quarantine TTL
+    /// expired.
+    pub fn record_probe(&mut self) {
+        self.probes += 1;
+    }
+
+    /// Record one replica restored to Healthy after a verified recovery.
+    pub fn record_recovery(&mut self) {
+        self.recoveries += 1;
     }
 
     /// Count one incoming request by its selection kind.
@@ -272,7 +332,9 @@ impl ServeMetrics {
              plans: hits={} misses={} evictions={} builds={} \
              resident={} ({} entries)\n\
              resilience: retries={} quarantines={} rollbacks={} \
-             degraded={} skipped={}\n\
+             degraded={} skipped={} requeues={} deadline_exceeded={} \
+             fetch_timeouts={}\n\
+             recovery: probes={} recoveries={}\n\
              throughput={:.1} req/s",
             self.requests,
             self.batches,
@@ -313,6 +375,11 @@ impl ServeMetrics {
             self.rollbacks,
             self.degraded,
             self.skipped,
+            self.requeues,
+            self.deadline_exceeded,
+            self.store.fetch_timeouts,
+            self.probes,
+            self.recoveries,
             thr
         );
         if !self.fairness.is_empty() {
@@ -371,6 +438,7 @@ mod tests {
             plan_resident_entries: 3,
             retries: 4,
             quarantines: 1,
+            ..StoreStats::default()
         });
         let s = m.summary(1.0);
         assert!(s.contains("hits=7"), "{s}");
@@ -399,6 +467,38 @@ mod tests {
             ),
             "{s}"
         );
+    }
+
+    #[test]
+    fn recovery_counters_surface_in_summary() {
+        let mut m = ServeMetrics::new();
+        m.record_batch(4, false, 0.0, 100.0);
+        m.record_requeues(5);
+        m.record_deadline_exceeded(2);
+        m.record_probe();
+        m.record_probe();
+        m.record_recovery();
+        assert_eq!(
+            (m.requeues, m.deadline_exceeded, m.probes, m.recoveries),
+            (5, 2, 2, 1)
+        );
+        let s = m.summary(1.0);
+        assert!(s.contains("requeues=5 deadline_exceeded=2"), "{s}");
+        assert!(s.contains("recovery: probes=2 recoveries=1"), "{s}");
+    }
+
+    #[test]
+    fn fairness_retry_and_deadline_columns_accumulate() {
+        let mut l = FairnessLedger::new(0);
+        l.record_retry("a@1");
+        l.record_retry("a@1");
+        l.record_deadline_exceeded("a@1");
+        l.record_retry("b@1");
+        assert_eq!(l.total_retries(), 3);
+        assert_eq!(l.total_deadline_exceeded(), 1);
+        let a = l.rows().find(|(k, _)| *k == "a@1").unwrap().1;
+        assert_eq!((a.retries, a.deadline_exceeded), (2, 1));
+        assert!(l.summary_lines().contains("retries=2 deadline_exceeded=1"));
     }
 
     #[test]

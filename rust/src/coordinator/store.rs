@@ -156,6 +156,12 @@ pub struct StoreConfig {
     /// Base backoff between retries, microseconds; doubles per attempt
     /// (0 retries immediately — what tests use).
     pub retry_backoff_us: u64,
+    /// Upper bound on how long one flash read may stall before the fetch
+    /// is failed with a transient timeout (microseconds; 0 disables the
+    /// bound).  Without it an injected [`FaultSite::SlowFetch`] stall
+    /// inflates latency unobserved; with it the stall trips the same
+    /// retry/quarantine machinery as any other transient fault.
+    pub fetch_deadline_us: u64,
     /// Consecutive terminal fetch failures (post-retry) before an adapter
     /// is quarantined and refused with [`ServeError::Quarantined`].
     pub quarantine_threshold: u32,
@@ -178,6 +184,7 @@ impl Default for StoreConfig {
             plan_cache_bytes: 4 << 20,
             retry_max: 2,
             retry_backoff_us: 100,
+            fetch_deadline_us: 100_000,
             quarantine_threshold: 3,
             quarantine_ttl_ms: 250,
             f16_resident: false,
@@ -231,6 +238,10 @@ pub struct StoreStats {
     pub plan_resident_bytes: usize,
     /// Transition plans currently resident in the plan cache.
     pub plan_resident_entries: usize,
+    /// Flash reads failed because an injected stall exceeded
+    /// [`StoreConfig::fetch_deadline_us`] (each surfaces as a transient
+    /// timeout and rides the retry path).
+    pub fetch_timeouts: u64,
     /// Transient-I/O fetch attempts retried (DESIGN.md §13.3).
     pub retries: u64,
     /// Quarantine trips: an adapter crossed the consecutive-failure
@@ -313,12 +324,14 @@ pub struct AdapterStore {
     /// Retry/quarantine tunables (see [`StoreConfig`]).
     retry_max: u32,
     retry_backoff_us: u64,
+    fetch_deadline_us: u64,
     quarantine_threshold: u32,
     quarantine_ttl_ms: u64,
     /// Per-adapter consecutive-failure / quarantine state.
     health: HashMap<String, Health>,
     retries: u64,
     quarantines: u64,
+    fetch_timeouts: u64,
     /// Decode v2-f16 flash images to f16-resident handles.
     f16_resident: bool,
     /// Cache cost of every f16-resident handle admitted so far, by name;
@@ -367,11 +380,13 @@ impl AdapterStore {
             plan_builds: 0,
             retry_max: cfg.retry_max,
             retry_backoff_us: cfg.retry_backoff_us,
+            fetch_deadline_us: cfg.fetch_deadline_us,
             quarantine_threshold: cfg.quarantine_threshold.max(1),
             quarantine_ttl_ms: cfg.quarantine_ttl_ms,
             health: HashMap::new(),
             retries: 0,
             quarantines: 0,
+            fetch_timeouts: 0,
             f16_resident: cfg.f16_resident,
             f16_costs: HashMap::new(),
             fault: None,
@@ -510,11 +525,23 @@ impl AdapterStore {
     }
 
     /// One read+decode attempt, applying any planned faults: a slow-fetch
-    /// stall, a transient read error, or a one-byte decode corruption.
-    fn try_read_decode(&self, bytes: &[u8]) -> Result<AdapterHandle, IoError> {
-        if let Some(f) = &self.fault {
+    /// stall (bounded by the fetch deadline), a transient read error, or
+    /// a one-byte decode corruption.
+    fn try_read_decode(&mut self, bytes: &[u8]) -> Result<AdapterHandle, IoError> {
+        if let Some(f) = self.fault.clone() {
             if f.should_fire(FaultSite::SlowFetch) {
-                std::thread::sleep(Duration::from_micros(f.slow_stall_us()));
+                let stall = f.slow_stall_us();
+                let timed_out =
+                    self.fetch_deadline_us > 0 && stall > self.fetch_deadline_us;
+                let bound = if timed_out { self.fetch_deadline_us } else { stall };
+                std::thread::sleep(Duration::from_micros(bound));
+                if timed_out {
+                    self.fetch_timeouts += 1;
+                    return Err(IoError::Io(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "injected stall exceeded the fetch deadline",
+                    )));
+                }
             }
             if f.should_fire(FaultSite::Fetch) {
                 return Err(IoError::Io(std::io::Error::new(
@@ -880,6 +907,7 @@ impl AdapterStore {
             plan_builds: self.plan_builds,
             plan_resident_bytes: self.plans.used_bytes(),
             plan_resident_entries: self.plans.len(),
+            fetch_timeouts: self.fetch_timeouts,
             retries: self.retries,
             quarantines: self.quarantines,
         }

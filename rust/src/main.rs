@@ -65,6 +65,10 @@ USAGE: shira <subcommand> [flags]
         [--replicas N] [--queue-depth N] [--burst N] [--concurrent]
         (--replicas selects the artifact-free N-replica fleet over the
         seeded 10k-user zipf trace; otherwise one server, one replica)
+        [--deadline-ms N]     (end-to-end request deadline, 0 disables)
+        [--retry-budget N]    (re-dispatch attempts per request)
+        [--replica-quarantine-ttl-ms N]  (base replica-quarantine TTL;
+        doubles per re-quarantine, probation + recovery on expiry)
         [--policy <shira|fusion|lora-fuse|unfused>]  (DEPRECATED alias:
         default serves one mixed trace of base/single/set selections)
   fuse  --out <file> <a.shira> <b.shira> ...
@@ -290,6 +294,9 @@ fn cmd_serve_fleet(args: &Args, cfg: &RunConfig) -> Result<()> {
     let queue_depth = args.get_usize("queue-depth", 16)?;
     let n_adapters = args.get_usize("adapters", 4)?;
     let burst = args.get_usize("burst", 8)?;
+    let deadline_ms = args.get_u64("deadline-ms", 0)?;
+    let retry_budget = args.get_usize("retry-budget", 3)?;
+    let quarantine_ttl_ms = args.get_u64("replica-quarantine-ttl-ms", 250)?;
     let default_cfg = StoreConfig::default();
     let names = adapter_names(n_adapters);
     let pool = Arc::new(ThreadPool::host_sized());
@@ -310,6 +317,9 @@ fn cmd_serve_fleet(args: &Args, cfg: &RunConfig) -> Result<()> {
         })
         .pool(pool)
         .failure_policy(FailurePolicy::DegradeToBase)
+        .deadline_us(deadline_ms.saturating_mul(1_000))
+        .retry_budget(retry_budget as u32)
+        .replica_quarantine_ttl_us(quarantine_ttl_ms.saturating_mul(1_000).max(1))
         .build();
     let sels = mixed_selections(&names);
     let trace = fleet_trace(&sels, cfg.trace_len, burst, cfg.seed);

@@ -345,6 +345,177 @@ fn fleet_chaos_concurrent_workers_stay_isolated() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Replica recovery (DESIGN.md §16): crash every replica's first apply
+// and require the full quarantine -> drain -> probe -> recover cycle.
+
+/// Build a fleet whose fault plan crashes the FIRST apply on every
+/// replica: each one must trip quarantine, drain its queue into the
+/// requeue path, pass the recovery bit-gate and end Healthy.
+fn recovery_fleet(replicas: usize, seed: u64, ttl_us: u64) -> Fleet {
+    let names = adapter_names(4);
+    let mut plan = FaultPlan::new();
+    for r in 0..replicas {
+        plan = plan.crash_replica_at(r, 1);
+    }
+    Fleet::builder(toy_base(32, seed))
+        .replicas(replicas)
+        .queue_depth(64)
+        .shira_adapters(&toy_shira_zoo(32, &names, 80, seed))
+        .store_config(StoreConfig {
+            cache_bytes: 64 << 20,
+            prefetch_depth: 0,
+            plan_cache_bytes: 0,
+            ..StoreConfig::default()
+        })
+        .failure_policy(FailurePolicy::DegradeToBase)
+        .quarantine_after(1)
+        .replica_quarantine_ttl_us(ttl_us)
+        .retry_backoff_us(50)
+        .fault_plan(plan)
+        .build()
+}
+
+#[test]
+fn every_replica_recovers_through_quarantine_deterministic() {
+    // Tentpole gate: at 2 and 8 replicas every replica is quarantined at
+    // least once, every drained request is re-dispatched or terminally
+    // accounted (nothing silently lost), every recovered replica passes
+    // the bit-identity gate, and the run ends all-Healthy — replay-
+    // identical from the same (trace, schedule, fault) seeds.  The CI
+    // chaos job re-runs this under its replica-recovery seed matrix via
+    // CHAOS_SEED.
+    let mut seeds: Vec<u64> = vec![0x5E1F];
+    if let Ok(s) = std::env::var("CHAOS_SEED") {
+        if let Ok(n) = s.trim().parse::<u64>() {
+            seeds.push(n);
+        }
+    }
+    for seed in seeds {
+        for replicas in [2usize, 8] {
+            let trace = chaos_trace(seed);
+            let run = || {
+                let mut fleet = recovery_fleet(replicas, seed, 50_000);
+                fleet.run_trace(&trace, seed ^ 0xD5).unwrap()
+            };
+            let a = run();
+            assert!(
+                a.quarantine_trips >= replicas as u64,
+                "seed {seed:#x} replicas={replicas}: only {} trips\n{}",
+                a.quarantine_trips,
+                a.summary
+            );
+            assert!(a.probes >= replicas as u64, "{}", a.summary);
+            assert!(a.recoveries >= replicas as u64, "{}", a.summary);
+            assert!(
+                a.replica_health.iter().all(|&h| h == "healthy"),
+                "seed {seed:#x} replicas={replicas}: end states {:?}",
+                a.replica_health
+            );
+            assert_eq!(a.quarantined_replicas, 0);
+            // Drain accounting: every request reached a terminal action
+            // and the dispositions add back up to the trace.
+            assert_eq!(a.actions.len(), trace.len());
+            assert_eq!(
+                a.served + a.shed + a.skipped + a.deadline_exceeded,
+                trace.len() as u64
+            );
+            assert!(a.requeues >= replicas as u64, "{}", a.summary);
+            // Recovery bit-gate stayed green across every re-admission.
+            assert!(
+                a.oracle_failures.is_empty(),
+                "seed {seed:#x} replicas={replicas}: {:?}",
+                a.oracle_failures
+            );
+            let b = run();
+            assert_eq!(a.actions, b.actions);
+            assert_eq!(a.summary, b.summary);
+            assert_eq!(a.per_replica_served, b.per_replica_served);
+        }
+    }
+}
+
+#[test]
+fn every_replica_recovers_through_quarantine_concurrent() {
+    // Same crash-on-first-apply plan through real worker threads and
+    // wall-clock TTLs.  Quarantines cascade: while earlier replicas sit
+    // out their TTL, traffic lands on the next healthy replica and trips
+    // its planned crash too — so every replica really cycles through
+    // quarantine -> probe -> probation before the run settles.
+    for replicas in [2usize, 8] {
+        let seed = 0x5E2F + replicas as u64;
+        let trace = chaos_trace(seed);
+        let mut fleet = recovery_fleet(replicas, seed, 20_000);
+        let report = fleet.run_trace_concurrent(&trace).unwrap();
+        assert!(
+            report.quarantine_trips >= replicas as u64,
+            "replicas={replicas}: only {} trips\n{}",
+            report.quarantine_trips,
+            report.summary
+        );
+        assert!(report.probes >= replicas as u64, "{}", report.summary);
+        assert!(
+            report.replica_health.iter().all(|&h| h == "healthy"),
+            "replicas={replicas}: end states {:?}",
+            report.replica_health
+        );
+        assert_eq!(report.actions.len(), trace.len(), "requests lost");
+        assert_eq!(
+            report.served + report.shed + report.skipped + report.deadline_exceeded,
+            trace.len() as u64
+        );
+        assert!(
+            report.oracle_failures.is_empty(),
+            "replicas={replicas}: {:?}",
+            report.oracle_failures
+        );
+        fleet.revert_all();
+        let store = fleet.store();
+        let guard = store.lock().unwrap();
+        assert_eq!(guard.pinned_count(), 0);
+        assert_eq!(guard.pinned_plan_count(), 0);
+    }
+}
+
+#[test]
+fn slow_fetch_stalls_are_bounded_by_the_fetch_deadline() {
+    // Satellite: an injected SlowFetch stall far past the fetch deadline
+    // must trip the timeout path (bounded wall time), surface as a
+    // transient fault and ride the store's retry — not inflate latency
+    // unobserved.
+    let mut rng = Rng::new(0x51_0F);
+    let zoo: Vec<ShiraAdapter> = (0..3)
+        .map(|i| make_adapter(&mut rng, &format!("ad{i}"), NNZ))
+        .collect();
+    let mut store = AdapterStore::with_config(
+        StoreConfig {
+            cache_bytes: 64 << 20,
+            prefetch_depth: 0,
+            fetch_deadline_us: 500,
+            retry_backoff_us: 0,
+            ..StoreConfig::default()
+        },
+        None,
+    );
+    for a in &zoo {
+        store.add_shira(a);
+    }
+    // A 5-second stall against a 500us deadline: without the bound this
+    // test would take seconds; with it the stall is clipped and retried.
+    let plan = FaultPlan::new().slow_fetch_at(1).slow_us(5_000_000);
+    store.set_fault(plan.injector());
+    let started = std::time::Instant::now();
+    store.fetch("ad0").expect("retry absorbs the timed-out stall");
+    assert!(
+        started.elapsed() < std::time::Duration::from_secs(2),
+        "stall was not clipped by the fetch deadline ({:?})",
+        started.elapsed()
+    );
+    let stats = store.stats();
+    assert!(stats.fetch_timeouts >= 1, "timeout never recorded");
+    assert!(stats.retries >= 1, "timed-out fetch never retried");
+}
+
 #[test]
 fn planned_faults_hit_every_resilience_counter() {
     // One deterministic scenario per counter: a transient fetch error is

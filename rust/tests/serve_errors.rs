@@ -250,6 +250,91 @@ fn error_paths_release_every_pin() {
 }
 
 #[test]
+fn adapter_quarantine_ttl_lifecycle_through_the_router() {
+    // End-to-end adapter-quarantine lifecycle (DESIGN.md §13.3) driven
+    // down the REAL serving path — the router, not store unit calls:
+    // a terminal fetch failure quarantines the adapter; while the TTL
+    // runs the store refuses with a retry_in_ms hint and never touches
+    // flash; after expiry one re-probe goes through — a failed probe
+    // re-quarantines, a clean probe fully recovers the adapter.
+    use shira::coordinator::fault::FaultPlan;
+    use shira::coordinator::store::StoreConfig;
+    use std::time::Duration;
+    const TTL_MS: u64 = 40;
+    let mut store = AdapterStore::with_config(
+        StoreConfig {
+            cache_bytes: 1 << 20,
+            prefetch_depth: 0,
+            retry_max: 0, // every injected fetch failure is terminal
+            retry_backoff_us: 0,
+            quarantine_threshold: 1,
+            quarantine_ttl_ms: TTL_MS,
+            ..StoreConfig::default()
+        },
+        None,
+    );
+    store.add_shira(&shira("flaky", "wq", DIM));
+    store.add_shira(&shira("good", "wq", DIM));
+    let mut router = Router::new(base_weights(), None, false);
+    // Flash-read ordinals: 1 = flaky's first fetch (fails, quarantines),
+    // 2 = good's fetch (clean), 3 = flaky's first re-probe (fails,
+    // re-quarantines), 4 = flaky's second re-probe (clean).  Refused
+    // fetches never reach flash, so they consume no ordinal.
+    store.set_fault(FaultPlan::new().fail_fetch_at(1).fail_fetch_at(3).injector());
+
+    // 1) Terminal failure trips the quarantine at threshold 1.
+    match router.apply(&mut store, &Selection::single("flaky")) {
+        Err(ServeError::Quarantined { name, failures, retry_in_ms }) => {
+            assert_eq!(name, "flaky");
+            assert_eq!(failures, 1);
+            assert!(retry_in_ms <= TTL_MS);
+        }
+        other => panic!("expected Quarantined, got {other:?}"),
+    }
+    assert!(store.is_quarantined("flaky"));
+    assert_eq!(store.stats().quarantines, 1);
+
+    // 2) While the TTL runs: refused with a hint, flash untouched.
+    match router.apply(&mut store, &Selection::single("flaky")) {
+        Err(ServeError::Quarantined { failures, retry_in_ms, .. }) => {
+            assert_eq!(failures, 1, "a refused fetch is not a new failure");
+            assert!(retry_in_ms <= TTL_MS);
+        }
+        other => panic!("expected Quarantined refusal, got {other:?}"),
+    }
+    // The router stays serviceable for everything else meanwhile.
+    router.apply(&mut store, &Selection::single("good")).unwrap();
+
+    // 3) TTL expiry lets one probe through — and this probe fails, so
+    // the adapter is re-quarantined with a grown failure streak.
+    std::thread::sleep(Duration::from_millis(TTL_MS + 15));
+    match router.apply(&mut store, &Selection::single("flaky")) {
+        Err(ServeError::Quarantined { failures, .. }) => {
+            assert_eq!(failures, 2, "failed probe re-quarantines");
+        }
+        other => panic!("expected re-quarantine, got {other:?}"),
+    }
+    assert!(store.is_quarantined("flaky"));
+    assert_eq!(store.stats().quarantines, 2);
+
+    // 4) Second expiry, clean probe: the adapter fully recovers and the
+    // apply lands bit-identically to a never-quarantined serve.
+    std::thread::sleep(Duration::from_millis(TTL_MS + 15));
+    let res = router.apply(&mut store, &Selection::single("flaky"));
+    assert!(res.is_ok(), "clean probe must recover: {res:?}");
+    assert!(!store.is_quarantined("flaky"));
+    let mut reference = base_weights();
+    for (t, d) in &shira("flaky", "wq", DIM).tensors {
+        d.apply(reference.get_mut(t), 1.0);
+    }
+    assert!(router.weights().bit_equal(&reference));
+    // Fully healthy again: the next switch needs no probe at all.
+    router.apply(&mut store, &Selection::single("good")).unwrap();
+    router.apply(&mut store, &Selection::single("flaky")).unwrap();
+    assert_eq!(store.stats().quarantines, 2, "no further trips");
+}
+
+#[test]
 fn corrupt_flash_bytes_are_io() {
     let (mut store, mut router) = setup();
     store.add_encoded("junk", vec![0xAB; 64]);
