@@ -222,6 +222,11 @@ impl AdapterEngine for SwitchEngine {
                 spec: op.selection.key(),
                 reason: "set selections route to the fusion engine".into(),
             }),
+            Selection::Auto => Err(ServeError::Gate {
+                reason: "unresolved auto selection reached the switch engine \
+                         (the front end must gate-resolve it first)"
+                    .into(),
+            }),
         }
     }
 
@@ -282,6 +287,13 @@ impl AdapterEngine for FusionEngine {
                 &one
             }
             Selection::Set { members } => members,
+            Selection::Auto => {
+                return Err(ServeError::Gate {
+                    reason: "unresolved auto selection reached the fusion \
+                             engine (the front end must gate-resolve it first)"
+                        .into(),
+                })
+            }
         };
         self.apply_set(weights, desired)?;
         Ok(SwitchPath::Fused)
@@ -813,6 +825,11 @@ impl Router {
                     unfused_lora: None,
                 })
             }
+            Selection::Auto => Err(ServeError::Gate {
+                reason: "unresolved auto selection reached the router (the \
+                         front end must gate-resolve it first)"
+                    .into(),
+            }),
         }
     }
 
@@ -1149,6 +1166,9 @@ mod tests {
                     d.apply(w.get_mut(t), 1.0);
                 }
                 w
+            }
+            Selection::Auto => {
+                unreachable!("engine tests never dispatch unresolved autos")
             }
         }
     }

@@ -103,6 +103,18 @@ pub enum ServeError {
         /// Re-dispatch attempts it consumed before timing out.
         attempts: u32,
     },
+    /// Gate resolution of a [`Selection::Auto`] request failed: no gate
+    /// is configured, the expert pool has no active expert the gate can
+    /// score, or an injected gate fault fired
+    /// (`coordinator::gate`; DESIGN.md §17).  Under
+    /// `FailurePolicy::DegradeToBase`/`SkipRequest` the front end
+    /// degrades or skips instead of surfacing this.
+    ///
+    /// [`Selection::Auto`]: super::selection::Selection::Auto
+    Gate {
+        /// What went wrong resolving the selection.
+        reason: String,
+    },
     /// The PJRT runtime failed (artifact missing, compile or execute
     /// error).  Stringly: runtime errors originate outside the
     /// coordinator and carry no stable structure.
@@ -131,6 +143,7 @@ impl ServeError {
             ServeError::MutationRolledBack { .. } => "mutation-rolled-back",
             ServeError::Overloaded { .. } => "overloaded",
             ServeError::DeadlineExceeded { .. } => "deadline-exceeded",
+            ServeError::Gate { .. } => "gate",
             ServeError::Runtime(_) => "runtime",
         }
     }
@@ -178,6 +191,9 @@ impl std::fmt::Display for ServeError {
                      deadline (waited {waited_us}us, {attempts} re-dispatch \
                      attempt(s))"
                 )
+            }
+            ServeError::Gate { reason } => {
+                write!(f, "gate resolution failed: {reason}")
             }
             ServeError::Runtime(m) => write!(f, "runtime: {m}"),
         }
@@ -293,6 +309,11 @@ mod tests {
         assert!(d.to_string().contains("slow@1"));
         assert!(d.to_string().contains("5000us"));
         assert!(d.to_string().contains("7250us"));
+        let g = ServeError::Gate {
+            reason: "no active expert to gate over".into(),
+        };
+        assert_eq!(g.kind(), "gate");
+        assert!(g.to_string().contains("no active expert"));
     }
 
     #[test]

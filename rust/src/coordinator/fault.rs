@@ -40,9 +40,14 @@ pub enum FaultSite {
     /// `Router::apply`, so the failure looks like a dead worker, not a
     /// torn mutation (exercises quarantine → probe → recover).
     Apply,
+    /// A gate resolution of a `Selection::Auto` request fails — fired by
+    /// the front end while rewriting autos into explicit sets, before
+    /// any placement happens (exercises `FailurePolicy` degradation to
+    /// base / skip; DESIGN.md §17.4).
+    Gate,
 }
 
-const N_SITES: usize = 5;
+const N_SITES: usize = 6;
 
 impl FaultSite {
     fn index(self) -> usize {
@@ -52,6 +57,7 @@ impl FaultSite {
             FaultSite::Wave => 2,
             FaultSite::SlowFetch => 3,
             FaultSite::Apply => 4,
+            FaultSite::Gate => 5,
         }
     }
 
@@ -63,6 +69,7 @@ impl FaultSite {
             FaultSite::Wave => "wave",
             FaultSite::SlowFetch => "slow-fetch",
             FaultSite::Apply => "apply",
+            FaultSite::Gate => "gate",
         }
     }
 }
@@ -103,6 +110,9 @@ impl FaultPlan {
     /// events of uniformly chosen sites.  Same seed, same plan.
     pub fn seeded(seed: u64, n_faults: usize, horizon: u64) -> Self {
         let mut rng = Rng::new(seed);
+        // Deliberately the original five sites: adding `Gate` here would
+        // shift every existing seeded chaos schedule.  Gate faults are
+        // planned explicitly via [`FaultPlan::fail_gate_at`].
         let sites = [
             FaultSite::Fetch,
             FaultSite::Decode,
@@ -149,6 +159,12 @@ impl FaultPlan {
         self
     }
 
+    /// Plan a gate-resolution failure on the `n`-th auto request.
+    pub fn fail_gate_at(mut self, n: u64) -> Self {
+        self.specs.push(FaultSpec { site: FaultSite::Gate, at: n });
+        self
+    }
+
     /// Plan a replica crash on the `n`-th apply *on replica `replica`*
     /// (per-replica ordinal).  Global [`FaultSite::Apply`] ordinals
     /// cannot guarantee a specific replica faults — which one claims the
@@ -175,6 +191,7 @@ impl FaultPlan {
         Arc::new(FaultInjector {
             plan: self,
             counts: [
+                AtomicU64::new(0),
                 AtomicU64::new(0),
                 AtomicU64::new(0),
                 AtomicU64::new(0),
@@ -271,6 +288,10 @@ impl FaultInjector {
     /// Error message used by injected apply crashes (tests match on it).
     pub const APPLY_CRASH_MSG: &'static str =
         "injected fault: replica apply crash";
+
+    /// Error message used by injected gate faults (tests match on it).
+    pub const GATE_FAULT_MSG: &'static str =
+        "injected fault: gate resolution failure";
 }
 
 #[cfg(test)]

@@ -71,8 +71,10 @@ use std::time::{Duration, Instant};
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::engine::Router;
 use super::error::ServeError;
-use super::fault::{FaultInjector, FaultPlan};
+use super::fault::{FaultInjector, FaultPlan, FaultSite};
+use super::gate::{request_features, Gate};
 use super::metrics::FairnessLedger;
+use super::pool::{lock_pool, SharedExpertPool};
 use super::selection::Selection;
 use super::server::FailurePolicy;
 use super::store::{AdapterStore, StoreConfig, StoreStats};
@@ -458,6 +460,7 @@ struct Accum {
     shed: u64,
     degraded: u64,
     skipped: u64,
+    gated: u64,
     requeues: u64,
     deadline_exceeded: u64,
     switches: u64,
@@ -478,6 +481,7 @@ impl Accum {
             shed: 0,
             degraded: 0,
             skipped: 0,
+            gated: 0,
             requeues: 0,
             deadline_exceeded: 0,
             switches: 0,
@@ -496,6 +500,36 @@ impl Accum {
             None => {}
         }
     }
+
+    /// Fold the gate-resolution pass's accounting in before placement
+    /// starts.  Pre-assigned actions are terminal for gate-skipped
+    /// requests; "gate-degraded-to-base" survives serving because the
+    /// serve paths only `or_insert` their "served" label.
+    fn fold_resolution(&mut self, res: &GateResolution) {
+        self.gated += res.gated;
+        self.degraded += res.degraded;
+        self.skipped += res.skipped;
+        for &(id, action) in &res.actions {
+            self.actions.insert(id, action);
+        }
+        self.outcomes.extend(res.outcomes.iter().cloned());
+    }
+}
+
+/// Outcome of the gate-resolution pass.  Both execution modes run it up
+/// front on the ingest thread — before any batching, placement or
+/// worker spawns — so gating is deterministic regardless of thread
+/// count and the placed trace never contains a [`Selection::Auto`].
+struct GateResolution {
+    /// The trace with every auto rewritten explicit (gate-skipped
+    /// requests removed).
+    requests: Vec<Request>,
+    gated: u64,
+    degraded: u64,
+    skipped: u64,
+    /// Dispositions assigned at resolution time, per request id.
+    actions: Vec<(u64, &'static str)>,
+    outcomes: Vec<FleetOutcome>,
 }
 
 /// A request waiting out a retry/requeue backoff in the deterministic
@@ -534,9 +568,10 @@ pub struct FleetOutcome {
     /// deadline expiries.
     pub replica: Option<usize>,
     /// Terminal: `"degraded-to-base"`, `"skipped"`, `"shed-degraded"`,
-    /// `"shed-skipped"` or `"deadline-exceeded"`.  Non-terminal:
-    /// `"requeued"` (the requests re-dispatch and land a later terminal
-    /// outcome).
+    /// `"shed-skipped"`, `"gate-skipped"` or `"deadline-exceeded"`.
+    /// Non-terminal: `"requeued"` (the requests re-dispatch and land a
+    /// later terminal outcome) and `"gate-degraded-to-base"` (the
+    /// request continues on base weights).
     pub action: &'static str,
     /// Display form of the triggering error.
     pub error: String,
@@ -557,6 +592,13 @@ pub struct FleetReport {
     pub degraded: u64,
     /// Requests dropped.
     pub skipped: u64,
+    /// [`Selection::Auto`] requests the gate resolved into explicit
+    /// selections before placement.
+    pub gated: u64,
+    /// Lifetime served counts per expert from the shared
+    /// [`ExpertPool`](super::pool::ExpertPool), sorted by name (empty
+    /// when the fleet has no pool).
+    pub expert_utilization: Vec<(String, u64)>,
     /// Selection switches across all replicas.
     pub switches: u64,
     /// Switches that took the one-pass direct transition path.
@@ -642,6 +684,8 @@ pub struct FleetBuilder {
     retry_backoff_us: u64,
     oracle: bool,
     force_cold: bool,
+    gate: Option<Arc<dyn Gate>>,
+    expert_pool: Option<SharedExpertPool>,
 }
 
 impl FleetBuilder {
@@ -781,6 +825,24 @@ impl FleetBuilder {
         self
     }
 
+    /// Gate that resolves [`Selection::Auto`] requests into explicit
+    /// selections before placement (see
+    /// [`gate`](super::gate)).  Without one, auto requests fail with a
+    /// `"gate"`-kind error under the failure policy.
+    pub fn gate(mut self, gate: Arc<dyn Gate>) -> Self {
+        self.gate = Some(gate);
+        self
+    }
+
+    /// Expert pool whose active roster the gate scores over; resolved
+    /// selections count per-expert utilization on it.  Shareable with a
+    /// [`Server`](super::server::Server) and with management code that
+    /// registers/retires experts while traffic flows.
+    pub fn expert_pool(mut self, pool: SharedExpertPool) -> Self {
+        self.expert_pool = Some(pool);
+        self
+    }
+
     /// Assemble the fleet: one shared store, N replica routers over
     /// clones of the base weights, one optional fault injector armed
     /// across all of them.
@@ -831,6 +893,8 @@ impl FleetBuilder {
             oracle: self.oracle,
             force_cold: self.force_cold,
             unfused_lora: self.unfused_lora,
+            gate: self.gate,
+            expert_pool: self.expert_pool,
         }
     }
 }
@@ -864,6 +928,10 @@ pub struct Fleet {
     oracle: bool,
     force_cold: bool,
     unfused_lora: bool,
+    /// Resolves [`Selection::Auto`] requests before placement.
+    gate: Option<Arc<dyn Gate>>,
+    /// Roster the gate scores over; counts per-expert utilization.
+    expert_pool: Option<SharedExpertPool>,
 }
 
 impl Fleet {
@@ -890,6 +958,8 @@ impl Fleet {
             retry_backoff_us: 100,
             oracle: true,
             force_cold: false,
+            gate: None,
+            expert_pool: None,
         }
     }
 
@@ -917,6 +987,99 @@ impl Fleet {
             rep.router.revert_all(&mut store);
             rep.batcher.clear();
         }
+    }
+
+    /// Resolve one auto request: fire any planned gate fault, score the
+    /// pool's roster with the gate, count utilization.  Pure in the
+    /// payload seed — the same seed over the same roster always yields
+    /// the same selection, on any replica count.
+    fn resolve_auto(&mut self, payload_seed: u64) -> Result<Selection, ServeError> {
+        if let Some(f) = &self.injector {
+            if f.should_fire(FaultSite::Gate) {
+                return Err(ServeError::Gate {
+                    reason: FaultInjector::GATE_FAULT_MSG.to_string(),
+                });
+            }
+        }
+        let gate = self.gate.as_ref().ok_or_else(|| ServeError::Gate {
+            reason: "no gate configured (auto selections need a gate)".into(),
+        })?;
+        let pool = self.expert_pool.as_ref().ok_or_else(|| ServeError::Gate {
+            reason: "no expert pool configured (auto selections need one)"
+                .into(),
+        })?;
+        let roster = lock_pool(pool).roster();
+        let sel = gate.select(&request_features(payload_seed), &roster)?;
+        lock_pool(pool).record_served(&sel.names());
+        Ok(sel)
+    }
+
+    /// The gate-resolution pass, policy-aware: autos resolve to explicit
+    /// selections; on a gate failure `FailFast` surfaces the error
+    /// (nothing has been queued yet, so a plain `Err` is clean),
+    /// `DegradeToBase` rewrites to [`Selection::Base`], `SkipRequest`
+    /// drops the request with a terminal disposition.
+    fn resolve(&mut self, trace: &[Request]) -> Result<GateResolution, ServeError> {
+        let mut res = GateResolution {
+            requests: Vec::with_capacity(trace.len()),
+            gated: 0,
+            degraded: 0,
+            skipped: 0,
+            actions: Vec::new(),
+            outcomes: Vec::new(),
+        };
+        for r in trace {
+            if !matches!(r.selection, Selection::Auto) {
+                res.requests.push(r.clone());
+                continue;
+            }
+            match self.resolve_auto(r.payload_seed) {
+                Ok(sel) => {
+                    res.gated += 1;
+                    let mut rr = r.clone();
+                    rr.selection = sel;
+                    res.requests.push(rr);
+                }
+                Err(e) => match self.failure_policy {
+                    FailurePolicy::FailFast => return Err(e),
+                    FailurePolicy::DegradeToBase => {
+                        res.degraded += 1;
+                        res.actions.push((r.id, "gate-degraded-to-base"));
+                        res.outcomes.push(FleetOutcome {
+                            selection: Selection::Auto.key(),
+                            requests: 1,
+                            replica: None,
+                            action: "gate-degraded-to-base",
+                            error: e.to_string(),
+                        });
+                        let mut rr = r.clone();
+                        rr.selection = Selection::Base;
+                        res.requests.push(rr);
+                    }
+                    FailurePolicy::SkipRequest => {
+                        res.skipped += 1;
+                        res.actions.push((r.id, "gate-skipped"));
+                        res.outcomes.push(FleetOutcome {
+                            selection: Selection::Auto.key(),
+                            requests: 1,
+                            replica: None,
+                            action: "gate-skipped",
+                            error: e.to_string(),
+                        });
+                    }
+                },
+            }
+        }
+        Ok(res)
+    }
+
+    /// Rewrite every [`Selection::Auto`] in `trace` into the gate's
+    /// explicit selection — the same rewrite both run modes perform
+    /// before placement.  Public so replay tests can serve the returned
+    /// explicit trace and compare resident weights and placement
+    /// bit-for-bit against the auto-served run.
+    pub fn resolve_trace(&mut self, trace: &[Request]) -> Result<Vec<Request>, ServeError> {
+        Ok(self.resolve(trace)?.requests)
     }
 
     /// Scheduler-visible snapshot of every replica (deterministic mode
@@ -957,6 +1120,7 @@ impl Fleet {
         for q in trace {
             q.selection.validate()?;
         }
+        let resolved = self.resolve(trace)?;
         let mut rng = Rng::new(seed).stream("fleet/schedule");
         let oracle = if self.oracle {
             Some(self.make_oracle())
@@ -964,12 +1128,13 @@ impl Fleet {
             None
         };
         let mut acc = Accum::new(self.slo_us, oracle);
+        acc.fold_resolution(&resolved);
         let mut rs = DetState {
             now_us: 0,
             pending: Vec::new(),
             attempts: HashMap::new(),
         };
-        for q in trace {
+        for q in &resolved.requests {
             rs.now_us = rs.now_us.max(q.arrival_us);
             self.poll_health(&mut rs, &mut acc);
             self.flush_due(&mut rs, &mut acc)?;
@@ -1596,6 +1761,23 @@ impl Fleet {
             summary.push('\n');
             summary.push_str(&acc.fairness.summary_lines());
         }
+        let expert_utilization = self
+            .expert_pool
+            .as_ref()
+            .map(|p| lock_pool(p).utilization())
+            .unwrap_or_default();
+        if acc.gated > 0 || !expert_utilization.is_empty() {
+            let util: Vec<String> = expert_utilization
+                .iter()
+                .map(|(name, served)| format!("{name}={served}"))
+                .collect();
+            summary.push('\n');
+            summary.push_str(&format!(
+                "gate: gated={} experts=[{}]",
+                acc.gated,
+                util.join(",")
+            ));
+        }
         FleetReport {
             replicas: self.replicas.len(),
             requests,
@@ -1603,6 +1785,8 @@ impl Fleet {
             shed: acc.shed,
             degraded: acc.degraded,
             skipped: acc.skipped,
+            gated: acc.gated,
+            expert_utilization,
             switches: acc.switches,
             transitions: acc.transitions,
             fallbacks: acc.fallbacks,
@@ -1641,12 +1825,17 @@ impl Fleet {
         for q in trace {
             q.selection.validate()?;
         }
+        // Gate-resolve up front on this thread: gating stays
+        // deterministic even though worker scheduling is not.
+        let resolved = self.resolve(trace)?;
         let oracle = if self.oracle {
             Some(self.make_oracle())
         } else {
             None
         };
-        let shared = Mutex::new(Accum::new(self.slo_us, oracle));
+        let mut acc0 = Accum::new(self.slo_us, oracle);
+        acc0.fold_resolution(&resolved);
+        let shared = Mutex::new(acc0);
         let slots: Vec<Slot> = (0..self.replicas.len()).map(|_| Slot::default()).collect();
         let stop = AtomicBool::new(false);
         let first_error: Mutex<Option<ServeError>> = Mutex::new(None);
@@ -1689,7 +1878,7 @@ impl Fleet {
                 let ctx = &ctx;
                 scope.spawn(move || replica_worker(rep, rx, ctx));
             }
-            for q in trace {
+            for q in &resolved.requests {
                 if stop.load(Ordering::SeqCst) {
                     break;
                 }
@@ -2899,6 +3088,77 @@ mod tests {
         assert_eq!(a.actions, b.actions);
         assert_eq!(a.summary, b.summary);
         assert_eq!(a.per_replica_served, b.per_replica_served);
+    }
+
+    #[test]
+    fn gated_fleet_resolves_autos_and_replays_explicitly() {
+        use crate::coordinator::gate::LinearGate;
+        use crate::coordinator::pool::ExpertPool;
+        let trace = fleet_trace(&[Selection::Auto], 40, 4, 0x6A);
+        let build = |with_gate: bool, plan: Option<FaultPlan>| {
+            let names = zoo_names(4);
+            let pool = ExpertPool::shared(0);
+            for n in &names {
+                lock_pool(&pool).register(n).unwrap();
+            }
+            let mut b = Fleet::builder(toy_base(DIM, 21))
+                .replicas(2)
+                .queue_depth(64)
+                .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, 21))
+                .store_config(StoreConfig {
+                    cache_bytes: 64 << 20,
+                    prefetch_depth: 0,
+                    plan_cache_bytes: 0,
+                    ..StoreConfig::default()
+                });
+            if with_gate {
+                b = b
+                    .gate(Arc::new(LinearGate::seeded(&names, 2, 0x6A7E)))
+                    .expert_pool(Arc::clone(&pool));
+            }
+            if let Some(p) = plan {
+                b = b.failure_policy(FailurePolicy::DegradeToBase).fault_plan(p);
+            }
+            b.build()
+        };
+        // Auto-served run: every request gate-resolves, serves, and
+        // counts utilization.
+        let mut auto_fleet = build(true, None);
+        let a = auto_fleet.run_trace(&trace, 0xD5).unwrap();
+        assert_eq!((a.gated, a.served), (40, 40));
+        assert!(a.oracle_failures.is_empty(), "{:?}", a.oracle_failures);
+        assert!(a.summary.contains("gate: gated=40"), "{}", a.summary);
+        let util_total: u64 = a.expert_utilization.iter().map(|(_, n)| n).sum();
+        assert!(util_total >= 40, "utilization {util_total}");
+        // The gate's rewrite is public: resolving the same trace on an
+        // identically-seeded fleet yields an explicit trace whose serve
+        // is action-, placement- and bit-identical to the auto run.
+        let explicit = build(true, None).resolve_trace(&trace).unwrap();
+        assert!(explicit
+            .iter()
+            .all(|q| matches!(q.selection, Selection::Set { .. })));
+        let mut explicit_fleet = build(false, None);
+        let b = explicit_fleet.run_trace(&explicit, 0xD5).unwrap();
+        assert_eq!(b.gated, 0);
+        assert_eq!(a.actions, b.actions);
+        assert_eq!(a.per_replica_served, b.per_replica_served);
+        for (ra, rb) in auto_fleet.routers().zip(explicit_fleet.routers()) {
+            assert_eq!(ra.active_key(), rb.active_key());
+            assert!(ra.weights().bit_equal(rb.weights()));
+        }
+        // A planned gate fault degrades that one request to base and
+        // leaves the rest gated; every request stays accounted.
+        let mut faulted = build(true, Some(FaultPlan::new().fail_gate_at(1)));
+        let c = faulted.run_trace(&trace, 0xD5).unwrap();
+        assert_eq!((c.gated, c.degraded), (39, 1));
+        assert_eq!(c.actions.len(), 40);
+        assert!(c
+            .outcomes
+            .iter()
+            .any(|o| o.action == "gate-degraded-to-base"
+                && o.replica.is_none()
+                && o.selection == "@auto"
+                && o.error.contains("injected fault")));
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Learned top-k gating over the expert pool (DESIGN.md §17): resolves
+//! [`Selection::Auto`] requests into weighted [`Selection::Set`]s that
+//! ride the existing fused-mode machinery unchanged.
+//!
+//! SHiRA's serving claim is that highly sparse adapters merge with
+//! little concept loss, which makes *serving a merged set chosen per
+//! request* viable — but a request had to name its set explicitly.
+//! Following SiRA (arXiv 2311.09179) and sparse-expert merging work
+//! (arXiv 2507.07140), the missing piece is a small learned gate: score
+//! the expert pool on per-request features, keep the top-k experts,
+//! softmax their scores into fusion weights, and emit the set.  The
+//! emitted `Set` flows through the [`Router`](super::engine::Router) /
+//! fusion engine exactly like a hand-written one, so every bit-identity
+//! and rollback guarantee downstream applies to gated traffic for free.
+//!
+//! ## Determinism
+//!
+//! A [`Gate`] is a *pure function* of `(gate parameters, features,
+//! roster)` — no clocks, no global RNG, no interior mutability.  The
+//! serving front ends resolve every `Auto` request **up front**, before
+//! any placement or batching decision, so:
+//!
+//! * the same `(trace, gate)` pair resolves to the same explicit trace
+//!   on every replay, at any thread or replica count;
+//! * a gated trace is *indistinguishable* downstream from the same trace
+//!   with the emitted sets spelled explicitly — the acceptance
+//!   bit-identity criterion reduces to ordinary fleet determinism.
+//!
+//! Per-request features are derived from [`Rng`] streams keyed by the
+//! request's `payload_seed`, mirroring how payload tokens are drawn at
+//! execute time — deterministic per request, varied across requests.
+
+use super::error::ServeError;
+use super::selection::Selection;
+use crate::util::rng::Rng;
+
+/// Number of gate input features: one occupancy bin per synthetic task
+/// dialect ([`crate::data::tasks`], 8 families) plus one bin for tokens
+/// outside every dialect (PAD/control/unused vocab).
+pub const N_FEATURES: usize = 9;
+
+/// First token of the task-dialect region (mirrors `data::tasks`).
+const DIALECT_BASE: i32 = 16;
+/// Tokens per task dialect (mirrors `data::tasks`).
+const DIALECT_SIZE: i32 = 28;
+/// Task families covered by the dialect region.
+const N_DIALECTS: usize = 8;
+/// Pseudo-token window length used for per-request features.
+const REQUEST_WINDOW: usize = 32;
+
+/// Histogram a token window into the gate's feature vector: per-dialect
+/// occupancy fractions plus an "other" bin, normalized to sum to 1 (all
+/// zeros for an empty window).  Shared by training (real task examples)
+/// and serving (per-request pseudo-token windows), so the gate sees one
+/// feature space end to end.
+pub fn features_from_tokens(tokens: &[i32]) -> [f32; N_FEATURES] {
+    let mut f = [0.0f32; N_FEATURES];
+    if tokens.is_empty() {
+        return f;
+    }
+    for &t in tokens {
+        let d = (t - DIALECT_BASE).div_euclid(DIALECT_SIZE);
+        if t >= DIALECT_BASE && (d as usize) < N_DIALECTS {
+            f[d as usize] += 1.0;
+        } else {
+            f[N_FEATURES - 1] += 1.0;
+        }
+    }
+    let n = tokens.len() as f32;
+    for v in &mut f {
+        *v /= n;
+    }
+    f
+}
+
+/// Deterministic per-request features: a pseudo-token window derived
+/// from the request's `payload_seed` — the same seed that drives the
+/// payload tokens at execute time — histogrammed through
+/// [`features_from_tokens`].  Each request leans toward one task
+/// dialect (seeded), so gated traffic spreads across experts instead of
+/// collapsing onto one, while staying exactly replayable.
+pub fn request_features(payload_seed: u64) -> [f32; N_FEATURES] {
+    let mut rng = Rng::new(payload_seed).stream("gate/features");
+    let lean = rng.below(N_DIALECTS) as i32;
+    let mut tokens = [0i32; REQUEST_WINDOW];
+    for t in tokens.iter_mut() {
+        // 3:1 leaned-dialect to anywhere — enough signal for a linear
+        // gate, enough noise that top-k weights differ across requests.
+        *t = if rng.below(4) < 3 {
+            DIALECT_BASE + lean * DIALECT_SIZE + rng.below(DIALECT_SIZE as usize) as i32
+        } else {
+            rng.below(256) as i32
+        };
+    }
+    features_from_tokens(&tokens)
+}
+
+/// A deterministic per-request expert selector.  `select` must be a pure
+/// function of its inputs (see the module docs — the fleet's replay and
+/// bit-identity guarantees depend on it); implementations carry their
+/// own parameters and are seedable at construction.
+pub trait Gate: Send + Sync {
+    /// Stable short name for reports ("linear", ...).
+    fn kind(&self) -> &'static str;
+
+    /// Resolve one request's features into a concrete selection over
+    /// `roster` (the expert pool's currently-active experts, sorted).
+    /// Returns a canonical weighted [`Selection::Set`]; errors with
+    /// [`ServeError::Gate`] when no scorable expert is active.
+    fn select(
+        &self,
+        features: &[f32; N_FEATURES],
+        roster: &[String],
+    ) -> Result<Selection, ServeError>;
+}
+
+/// Linear/softmax top-k scorer: `scores = W·features + b`, softmax over
+/// the roster-active experts, keep the top-k by probability (name-ordered
+/// on ties), renormalize to fusion weights.  Parameters come from
+/// [`crate::train::gate::train_gate`] or a seeded random init.
+#[derive(Clone, Debug)]
+pub struct LinearGate {
+    experts: Vec<String>,
+    /// Row-major `experts.len() x N_FEATURES` score matrix.
+    w: Vec<f32>,
+    b: Vec<f32>,
+    top_k: usize,
+}
+
+impl LinearGate {
+    /// Gate over `experts` with explicit parameters (the trainer's exit
+    /// path).  `w` is row-major `experts.len() x N_FEATURES`; `top_k` is
+    /// clamped to at least 1.
+    pub fn new(experts: &[String], top_k: usize, w: Vec<f32>, b: Vec<f32>) -> LinearGate {
+        debug_assert_eq!(w.len(), experts.len() * N_FEATURES);
+        debug_assert_eq!(b.len(), experts.len());
+        LinearGate {
+            experts: experts.to_vec(),
+            w,
+            b,
+            top_k: top_k.max(1),
+        }
+    }
+
+    /// Untrained gate with small seeded-random parameters — deterministic
+    /// per seed, useful for plumbing tests that don't care about routing
+    /// quality.
+    pub fn seeded(experts: &[String], top_k: usize, seed: u64) -> LinearGate {
+        let mut rng = Rng::new(seed).stream("gate/init");
+        let mut w = vec![0.0f32; experts.len() * N_FEATURES];
+        rng.fill_normal(&mut w, 0.0, 0.5);
+        let mut b = vec![0.0f32; experts.len()];
+        rng.fill_normal(&mut b, 0.0, 0.1);
+        LinearGate::new(experts, top_k, w, b)
+    }
+
+    /// The experts this gate scores, in parameter order.
+    pub fn experts(&self) -> &[String] {
+        &self.experts
+    }
+
+    /// Experts kept per selection.
+    pub fn top_k(&self) -> usize {
+        self.top_k
+    }
+
+    /// Raw linear score of expert row `i` on `features`.
+    fn score(&self, i: usize, features: &[f32; N_FEATURES]) -> f32 {
+        let row = &self.w[i * N_FEATURES..(i + 1) * N_FEATURES];
+        let mut s = self.b[i];
+        for (w, f) in row.iter().zip(features.iter()) {
+            s += w * f;
+        }
+        s
+    }
+}
+
+impl Gate for LinearGate {
+    fn kind(&self) -> &'static str {
+        "linear"
+    }
+
+    fn select(
+        &self,
+        features: &[f32; N_FEATURES],
+        roster: &[String],
+    ) -> Result<Selection, ServeError> {
+        // Score only experts the pool currently serves: a retired expert
+        // drops out of gating the moment it leaves the roster, with no
+        // retraining (its probability mass redistributes in the softmax).
+        let mut scored: Vec<(f32, &str)> = self
+            .experts
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| roster.iter().any(|r| r == *n))
+            .map(|(i, n)| (self.score(i, features), n.as_str()))
+            .collect();
+        if scored.is_empty() {
+            return Err(ServeError::Gate {
+                reason: format!(
+                    "no active expert to gate over (gate knows {}, roster has {})",
+                    self.experts.len(),
+                    roster.len()
+                ),
+            });
+        }
+        // Stable softmax over the active scores.
+        let mut max = f32::NEG_INFINITY;
+        for &(s, _) in &scored {
+            if s > max {
+                max = s;
+            }
+        }
+        let mut z = 0.0f32;
+        for (s, _) in scored.iter_mut() {
+            *s = (*s - max).exp();
+            z += *s;
+        }
+        for (s, _) in scored.iter_mut() {
+            *s /= z;
+        }
+        // Top-k by probability, name-ascending on exact ties so equal
+        // scores cannot make the selection order-dependent.
+        scored.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.1.cmp(b.1))
+        });
+        scored.truncate(self.top_k.min(scored.len()));
+        let kept: f32 = scored.iter().map(|(p, _)| p).sum();
+        // Canonical set form: members sorted by name, weights summing
+        // to 1 over the kept experts.
+        let mut members: Vec<(String, f32)> = scored
+            .into_iter()
+            .map(|(p, n)| (n.to_string(), p / kept))
+            .collect();
+        members.sort_by(|a, b| a.0.cmp(&b.0));
+        let sel = Selection::Set { members };
+        sel.validate()?;
+        Ok(sel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("adapter{i}")).collect()
+    }
+
+    #[test]
+    fn features_histogram_dialects_and_normalize() {
+        // 16 is dialect 0's first token; 16+28 dialect 1's; 0 is PAD.
+        let f = features_from_tokens(&[16, 16, 44, 0]);
+        assert_eq!(f[0], 0.5);
+        assert_eq!(f[1], 0.25);
+        assert_eq!(f[N_FEATURES - 1], 0.25);
+        assert!((f.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert_eq!(features_from_tokens(&[]), [0.0; N_FEATURES]);
+        // Tokens below the dialect base and above the last dialect both
+        // land in the "other" bin (no negative-index panic).
+        let f = features_from_tokens(&[0, 15, 16 + 8 * 28, 255]);
+        assert_eq!(f[N_FEATURES - 1], 1.0);
+    }
+
+    #[test]
+    fn request_features_are_deterministic_and_varied() {
+        assert_eq!(request_features(7), request_features(7));
+        // Across many seeds, different requests lean different ways.
+        let leads: std::collections::HashSet<usize> = (0..64u64)
+            .map(|s| {
+                let f = request_features(s);
+                (0..N_FEATURES)
+                    .max_by(|&a, &b| f[a].partial_cmp(&f[b]).unwrap())
+                    .unwrap()
+            })
+            .collect();
+        assert!(leads.len() >= 4, "request features collapsed: {leads:?}");
+    }
+
+    #[test]
+    fn seeded_gate_is_deterministic_and_emits_canonical_sets() {
+        let ex = names(6);
+        let g1 = LinearGate::seeded(&ex, 2, 42);
+        let g2 = LinearGate::seeded(&ex, 2, 42);
+        let g3 = LinearGate::seeded(&ex, 2, 43);
+        let f = request_features(11);
+        let s1 = g1.select(&f, &ex).unwrap();
+        assert_eq!(s1, g2.select(&f, &ex).unwrap());
+        assert_ne!(
+            (0..32u64)
+                .map(|s| g1.select(&request_features(s), &ex).unwrap().key())
+                .collect::<Vec<_>>(),
+            (0..32u64)
+                .map(|s| g3.select(&request_features(s), &ex).unwrap().key())
+                .collect::<Vec<_>>(),
+            "different gate seeds should route at least one request differently"
+        );
+        match &s1 {
+            Selection::Set { members } => {
+                assert_eq!(members.len(), 2);
+                assert!(members.windows(2).all(|w| w[0].0 < w[1].0), "sorted");
+                let sum: f32 = members.iter().map(|(_, w)| w).sum();
+                assert!((sum - 1.0).abs() < 1e-5, "weights renormalized: {sum}");
+                assert!(members.iter().all(|(_, w)| *w > 0.0));
+            }
+            other => panic!("expected a set, got {other}"),
+        }
+        s1.validate().unwrap();
+        assert_eq!(g1.kind(), "linear");
+    }
+
+    #[test]
+    fn roster_restricts_and_empty_roster_errors() {
+        let ex = names(4);
+        let g = LinearGate::seeded(&ex, 2, 1);
+        let f = request_features(3);
+        // Only one active expert: the set has exactly that member at 1.0.
+        let roster = vec!["adapter2".to_string()];
+        match g.select(&f, &roster).unwrap() {
+            Selection::Set { members } => {
+                assert_eq!(members.len(), 1);
+                assert_eq!(members[0].0, "adapter2");
+                assert!((members[0].1 - 1.0).abs() < 1e-6);
+            }
+            other => panic!("expected one-member set, got {other}"),
+        }
+        // Retiring an expert removes it from every future selection.
+        let full = g.select(&f, &ex).unwrap();
+        let without: Vec<String> =
+            ex.iter().filter(|n| *n != "adapter0").cloned().collect();
+        let restricted = g.select(&f, &without).unwrap();
+        assert!(!restricted.names().contains(&"adapter0"));
+        let _ = full;
+        // No overlap between gate and roster: a structured Gate error.
+        let err = g.select(&f, &["stranger".to_string()]).unwrap_err();
+        assert_eq!(err.kind(), "gate");
+        let err = g.select(&f, &[]).unwrap_err();
+        assert_eq!(err.kind(), "gate");
+    }
+
+    #[test]
+    fn top_k_clamps_to_roster_and_one() {
+        let ex = names(3);
+        // top_k 0 clamps to 1; top_k beyond the roster clamps down.
+        let g = LinearGate::seeded(&ex, 0, 5);
+        let f = request_features(9);
+        assert_eq!(g.select(&f, &ex).unwrap().names().len(), 1);
+        let g = LinearGate::seeded(&ex, 10, 5);
+        assert_eq!(g.select(&f, &ex).unwrap().names().len(), 3);
+    }
+}

@@ -190,6 +190,10 @@ pub struct ServeMetrics {
     pub single_requests: u64,
     /// Requests that selected a fused adapter set.
     pub set_requests: u64,
+    /// Requests that arrived as `Selection::Auto` and were resolved by
+    /// the gate into an explicit set (counted under the resolved kind in
+    /// the per-kind counters above, and separately here).
+    pub gated: u64,
     /// Failed weight mutations rolled back to base by the transactional
     /// guard (DESIGN.md §13.1).
     pub rollbacks: u64,
@@ -281,13 +285,23 @@ impl ServeMetrics {
         self.recoveries += 1;
     }
 
-    /// Count one incoming request by its selection kind.
+    /// Count one incoming request by its selection kind.  `Auto` arrives
+    /// here only when the front end failed to resolve it (policy-degraded
+    /// paths record the resolved kind instead); it counts as gated so the
+    /// request is never invisible.
     pub fn record_selection(&mut self, kind: SelectionKind) {
         match kind {
             SelectionKind::Base => self.base_requests += 1,
             SelectionKind::Single => self.single_requests += 1,
             SelectionKind::Set => self.set_requests += 1,
+            SelectionKind::Auto => self.gated += 1,
         }
+    }
+
+    /// Record `n` requests whose `Selection::Auto` the gate resolved
+    /// into an explicit selection.
+    pub fn record_gated(&mut self, n: u64) {
+        self.gated += n;
     }
 
     /// Record one executed batch (and its switch, when one happened).
@@ -323,7 +337,7 @@ impl ServeMetrics {
         let thr = self.requests as f64 / wall_secs.max(1e-9);
         let mut s = format!(
             "requests={} batches={} switches={} fill={:.2}\n\
-             selections: base={} single={} set={}\n\
+             selections: base={} single={} set={} gated={}\n\
              switch: mean={:.1}us p50={:.1}us | exec: mean={:.1}us\n\
              paths: transition={} fallback={} fused={} plan_mismatch={}\n\
              request latency: mean={:.1}us p50<={:.0}us p99<={:.0}us\n\
@@ -343,6 +357,7 @@ impl ServeMetrics {
             self.base_requests,
             self.single_requests,
             self.set_requests,
+            self.gated,
             self.switch_us.mean(),
             if self.switch_us.is_empty() {
                 0.0
@@ -574,5 +589,21 @@ mod tests {
         m.record_batch(4, false, 0.0, 100.0);
         let s = m.summary(1.0);
         assert!(s.contains("selections: base=1 single=2 set=1"), "{s}");
+    }
+
+    #[test]
+    fn gated_requests_surface_in_summary() {
+        let mut m = ServeMetrics::new();
+        // Resolved autos: counted under the resolved kind AND as gated.
+        m.record_selection(SelectionKind::Set);
+        m.record_gated(1);
+        m.record_selection(SelectionKind::Set);
+        m.record_gated(1);
+        // An auto that reached recording unresolved still counts.
+        m.record_selection(SelectionKind::Auto);
+        assert_eq!((m.set_requests, m.gated), (2, 3));
+        m.record_batch(3, false, 0.0, 100.0);
+        let s = m.summary(1.0);
+        assert!(s.contains("selections: base=0 single=0 set=2 gated=3"), "{s}");
     }
 }

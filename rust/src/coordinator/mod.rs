@@ -15,7 +15,12 @@
 //!   for chaos-testing every recovery path;
 //! * [`fleet`] — N-replica fleet serving (DESIGN.md §14): affinity
 //!   routing over a shared store, admission control, and the seeded
-//!   determinism harness with its bit-identity oracle.
+//!   determinism harness with its bit-identity oracle;
+//! * [`gate`] — the learned top-k [`gate::Gate`] that resolves
+//!   [`selection::Selection::Auto`] requests into weighted sets
+//!   (DESIGN.md §17);
+//! * [`pool`] — the [`pool::ExpertPool`] roster the gate selects over:
+//!   register/retire lifecycle, capacity caps, utilization counters.
 
 pub mod batcher;
 pub mod cache;
@@ -25,7 +30,9 @@ pub mod fault;
 pub mod fleet;
 pub mod fusion;
 pub mod fusion_engine;
+pub mod gate;
 pub mod metrics;
+pub mod pool;
 pub mod selection;
 pub mod server;
 pub mod store;

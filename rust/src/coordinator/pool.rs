@@ -1,0 +1,267 @@
+//! The managed expert pool behind gated serving (DESIGN.md §17): the
+//! roster of adapters a [`Gate`](super::gate::Gate) may select, with
+//! register/retire lifecycle, a capacity cap, and per-expert utilization
+//! counters — shared by `Server` and `Fleet` behind one mutex.
+//!
+//! The pool deliberately does NOT own adapter bytes; the
+//! [`AdapterStore`] keeps doing that.  Registering an expert only makes
+//! it *eligible* for gating (its bytes load lazily on first selection,
+//! like any adapter), and retiring one removes it from the gate's roster
+//! **without downtime**: in-flight and already-resolved selections that
+//! name it keep serving, because residency is protected by the store's
+//! pin machinery, not by pool membership.  Retire never evicts a pinned
+//! roster member — if the expert is pinned by some router's active
+//! selection or fusion roster, its bytes stay resident until that pin is
+//! released, and the retire simply reports the eviction as deferred.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::error::ServeError;
+use super::store::AdapterStore;
+
+/// What [`ExpertPool::retire`] did with the expert's resident bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetireDisposition {
+    /// The expert left the roster and nothing protects its bytes: normal
+    /// cache pressure may evict them whenever it likes.
+    Evictable,
+    /// The expert left the roster but its bytes are pinned by a live
+    /// selection (active single or fusion roster); eviction is deferred
+    /// until the serving side releases the pin.  Never forced.
+    DeferredPinned,
+}
+
+/// One pooled expert's lifecycle state.
+#[derive(Clone, Debug, Default)]
+struct Expert {
+    /// Retired experts stay in the map (their utilization history is
+    /// part of the report) but leave the gate's roster.
+    active: bool,
+    /// Requests whose resolved selection included this expert.
+    served: u64,
+}
+
+/// The expert roster a gate selects over.  See the module docs for the
+/// lifecycle contract; construction is via [`ExpertPool::new`] /
+/// [`ExpertPool::shared`].
+#[derive(Debug, Default)]
+pub struct ExpertPool {
+    capacity: usize,
+    experts: BTreeMap<String, Expert>,
+}
+
+/// The pool handle `Server` and `Fleet` share: one mutex, many fronts.
+pub type SharedExpertPool = Arc<Mutex<ExpertPool>>;
+
+/// Lock a shared pool, absorbing poison (a panicked holder cannot have
+/// left the map structurally broken: every mutation is a single insert
+/// or field store).
+pub fn lock_pool(pool: &SharedExpertPool) -> MutexGuard<'_, ExpertPool> {
+    pool.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl ExpertPool {
+    /// Pool with an active-expert capacity cap; `0` means unbounded.
+    pub fn new(capacity: usize) -> ExpertPool {
+        ExpertPool {
+            capacity,
+            experts: BTreeMap::new(),
+        }
+    }
+
+    /// A shareable pool (the form the builders take).
+    pub fn shared(capacity: usize) -> SharedExpertPool {
+        Arc::new(Mutex::new(ExpertPool::new(capacity)))
+    }
+
+    /// The configured capacity cap (`0` = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Experts ever registered (active + retired).
+    pub fn len(&self) -> usize {
+        self.experts.len()
+    }
+
+    /// True when no expert was ever registered.
+    pub fn is_empty(&self) -> bool {
+        self.experts.is_empty()
+    }
+
+    /// Currently-active experts.
+    pub fn active_len(&self) -> usize {
+        self.experts.values().filter(|e| e.active).count()
+    }
+
+    /// Is `name` registered and active (i.e. gate-selectable)?
+    pub fn is_active(&self, name: &str) -> bool {
+        self.experts.get(name).is_some_and(|e| e.active)
+    }
+
+    /// Register (or re-activate) an expert.  Fails when the active
+    /// roster is at capacity; re-registering an active expert is a
+    /// no-op, and re-activating a retired one keeps its utilization
+    /// history.  No bytes move here — residency is lazy, via the store.
+    pub fn register(&mut self, name: &str) -> Result<(), ServeError> {
+        if self.experts.get(name).is_some_and(|e| e.active) {
+            return Ok(());
+        }
+        if self.capacity > 0 && self.active_len() >= self.capacity {
+            return Err(ServeError::Gate {
+                reason: format!(
+                    "expert pool at capacity ({}): cannot register {name:?} \
+                     (retire an expert first)",
+                    self.capacity
+                ),
+            });
+        }
+        self.experts.entry(name.to_string()).or_default().active = true;
+        Ok(())
+    }
+
+    /// Retire an expert: it leaves the gate's roster immediately (the
+    /// next resolved request cannot select it) but its bytes are never
+    /// force-evicted — see [`RetireDisposition`].  Unknown names error.
+    pub fn retire(
+        &mut self,
+        name: &str,
+        store: &AdapterStore,
+    ) -> Result<RetireDisposition, ServeError> {
+        match self.experts.get_mut(name) {
+            Some(e) => {
+                e.active = false;
+                Ok(if store.is_pinned(name) {
+                    RetireDisposition::DeferredPinned
+                } else {
+                    RetireDisposition::Evictable
+                })
+            }
+            None => Err(ServeError::Gate {
+                reason: format!("cannot retire unknown expert {name:?}"),
+            }),
+        }
+    }
+
+    /// The gate's roster: active expert names, sorted (BTreeMap order),
+    /// so every consumer sees one canonical ordering.
+    pub fn roster(&self) -> Vec<String> {
+        self.experts
+            .iter()
+            .filter(|(_, e)| e.active)
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    /// Count one resolved request against each expert it selected.
+    /// Unknown names are ignored (a hand-built explicit set may name
+    /// adapters outside the pool).
+    pub fn record_served(&mut self, names: &[&str]) {
+        for n in names {
+            if let Some(e) = self.experts.get_mut(*n) {
+                e.served += 1;
+            }
+        }
+    }
+
+    /// Per-expert utilization, sorted by name; retired experts keep
+    /// their history (the serve reports surface this).
+    pub fn utilization(&self) -> Vec<(String, u64)> {
+        self.experts
+            .iter()
+            .map(|(n, e)| (n.clone(), e.served))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::store::StoreConfig;
+    use crate::data::synth::{adapter_names, toy_shira_zoo};
+
+    fn store_with_zoo(names: &[String]) -> AdapterStore {
+        let mut store = AdapterStore::with_config(
+            StoreConfig {
+                cache_bytes: 64 << 20,
+                ..StoreConfig::default()
+            },
+            None,
+        );
+        for a in &toy_shira_zoo(16, names, 20, 7) {
+            store.add_shira(a);
+        }
+        store
+    }
+
+    #[test]
+    fn register_retire_lifecycle_and_capacity() {
+        let names = adapter_names(3);
+        let store = store_with_zoo(&names);
+        let mut pool = ExpertPool::new(2);
+        pool.register("adapter0").unwrap();
+        pool.register("adapter1").unwrap();
+        assert_eq!(pool.active_len(), 2);
+        // At capacity: the third registration is a structured error.
+        let err = pool.register("adapter2").unwrap_err();
+        assert_eq!(err.kind(), "gate");
+        assert!(err.to_string().contains("capacity"));
+        // Re-registering an active expert is a free no-op.
+        pool.register("adapter0").unwrap();
+        assert_eq!(pool.active_len(), 2);
+        // Retiring frees a slot; history survives re-activation.
+        pool.record_served(&["adapter0", "adapter1"]);
+        assert_eq!(
+            pool.retire("adapter0", &store).unwrap(),
+            RetireDisposition::Evictable
+        );
+        assert!(!pool.is_active("adapter0"));
+        assert_eq!(pool.roster(), vec!["adapter1".to_string()]);
+        pool.register("adapter2").unwrap();
+        pool.register("adapter0").unwrap();
+        assert_eq!(pool.active_len(), 2);
+        assert!(pool.retire("ghost", &store).is_err());
+        let util = pool.utilization();
+        assert_eq!(util.len(), 3);
+        assert!(util.contains(&("adapter0".to_string(), 1)));
+        assert_eq!(pool.capacity(), 2);
+        assert_eq!(pool.len(), 3);
+        assert!(!pool.is_empty());
+    }
+
+    #[test]
+    fn retire_defers_eviction_for_pinned_experts() {
+        // The acceptance invariant at unit scope: retiring an expert
+        // whose bytes a live selection has pinned reports the eviction
+        // as deferred and leaves the pin (and the bytes) untouched.
+        let names = adapter_names(2);
+        let mut store = store_with_zoo(&names);
+        store.fetch("adapter0").unwrap();
+        store.pin("adapter0");
+        let mut pool = ExpertPool::new(0);
+        pool.register("adapter0").unwrap();
+        pool.register("adapter1").unwrap();
+        assert_eq!(
+            pool.retire("adapter0", &store).unwrap(),
+            RetireDisposition::DeferredPinned
+        );
+        assert!(store.is_pinned("adapter0"), "retire must not unpin");
+        assert!(store.is_resident("adapter0"), "retire must not evict");
+        assert_eq!(pool.roster(), vec!["adapter1".to_string()]);
+    }
+
+    #[test]
+    fn unbounded_pool_and_shared_handle() {
+        let pool = ExpertPool::shared(0);
+        for n in adapter_names(10) {
+            lock_pool(&pool).register(&n).unwrap();
+        }
+        assert_eq!(lock_pool(&pool).active_len(), 10);
+        assert_eq!(lock_pool(&pool).roster().len(), 10);
+        lock_pool(&pool).record_served(&["adapter3", "not-in-pool"]);
+        let util = lock_pool(&pool).utilization();
+        assert!(util.contains(&("adapter3".to_string(), 1)));
+        assert!(!util.iter().any(|(n, _)| n == "not-in-pool"));
+    }
+}

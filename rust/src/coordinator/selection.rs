@@ -20,6 +20,7 @@
 //! "name@0.5"          -> Single { name, alpha: 0.5 }
 //! "a@0.5+b"           -> Set { [("a", 0.5), ("b", 1.0)] }   (sorted by name)
 //! "a@0.5+"            -> Set { [("a", 0.5)] }               (one-member set)
+//! "@auto"             -> Auto                                (gate decides)
 //! ```
 //!
 //! `+` is the *set marker*: any spec containing one is a `Set`, and a
@@ -29,6 +30,13 @@
 //! and `@` are metacharacters: adapter names containing them are
 //! rejected (such an adapter could never be addressed by a spec), the
 //! guard the fused-mode roster has enforced since PR 2.
+//!
+//! `"@auto"` is [`Selection::Auto`] — the request delegates the choice to
+//! the serving front end's [`Gate`](super::gate::Gate), which resolves it
+//! to a concrete weighted `Set` over the expert pool *before* routing, so
+//! batcher affinity and prefetch see an ordinary selection.  The spelling
+//! starts with `@` precisely because no valid adapter name can (it is a
+//! metacharacter), so `Auto` can never collide with a real adapter.
 //!
 //! ## Canonical identity
 //!
@@ -76,7 +84,16 @@ pub enum Selection {
         /// [`Selection::parse`] produce that form.
         members: Vec<(String, f32)>,
     },
+    /// Let the configured gate pick: resolved by the server/fleet front
+    /// end into a weighted [`Selection::Set`] over the expert pool before
+    /// any routing happens.  Reaching a [`Router`](super::engine::Router)
+    /// unresolved is an error — engines never see this variant.
+    Auto,
 }
+
+/// The canonical spec spelling of [`Selection::Auto`].  Starts with the
+/// `@` metacharacter so it can never collide with an adapter name.
+pub const AUTO_SPEC: &str = "@auto";
 
 /// Which arm of [`Selection`] a value is — the per-request routing label
 /// surfaced in serve reports.
@@ -88,6 +105,8 @@ pub enum SelectionKind {
     Single,
     /// [`Selection::Set`].
     Set,
+    /// [`Selection::Auto`] — gate-resolved before routing.
+    Auto,
 }
 
 impl SelectionKind {
@@ -97,6 +116,7 @@ impl SelectionKind {
             SelectionKind::Base => "base",
             SelectionKind::Single => "single",
             SelectionKind::Set => "set",
+            SelectionKind::Auto => "auto",
         }
     }
 }
@@ -162,6 +182,9 @@ impl Selection {
         let trimmed = spec.trim();
         if trimmed.is_empty() {
             return Ok(Selection::Base);
+        }
+        if trimmed == AUTO_SPEC {
+            return Ok(Selection::Auto);
         }
         if !trimmed.contains('+') {
             let (name, alpha) = parse_member(spec, trimmed)?;
@@ -239,13 +262,15 @@ impl Selection {
             Selection::Base => SelectionKind::Base,
             Selection::Single { .. } => SelectionKind::Single,
             Selection::Set { .. } => SelectionKind::Set,
+            Selection::Auto => SelectionKind::Auto,
         }
     }
 
-    /// Every adapter name this selection references (empty for `Base`).
+    /// Every adapter name this selection references (empty for `Base`
+    /// and for `Auto`, whose names exist only after gate resolution).
     pub fn names(&self) -> Vec<&str> {
         match self {
-            Selection::Base => Vec::new(),
+            Selection::Base | Selection::Auto => Vec::new(),
             Selection::Single { name, .. } => vec![name.as_str()],
             Selection::Set { members } => members.iter().map(|(n, _)| n.as_str()).collect(),
         }
@@ -262,6 +287,7 @@ impl Selection {
     pub fn key(&self) -> String {
         match self {
             Selection::Base => String::new(),
+            Selection::Auto => AUTO_SPEC.to_string(),
             Selection::Single { name, alpha } => {
                 if *alpha == 1.0 {
                     name.clone()
@@ -314,7 +340,7 @@ impl Selection {
             Ok(())
         };
         match self {
-            Selection::Base => Ok(()),
+            Selection::Base | Selection::Auto => Ok(()),
             Selection::Single { name, alpha } => {
                 check_name(name)?;
                 if !alpha.is_finite() {
@@ -442,6 +468,34 @@ mod tests {
             .validate(),
             Err(ServeError::DuplicateMember(_))
         ));
+    }
+
+    #[test]
+    fn auto_parses_roundtrips_and_never_collides_with_names() {
+        assert_eq!(Selection::parse("@auto").unwrap(), Selection::Auto);
+        assert_eq!(Selection::parse("  @auto  ").unwrap(), Selection::Auto);
+        assert_eq!(Selection::Auto.key(), AUTO_SPEC);
+        assert_eq!(format!("{}", Selection::Auto), "@auto");
+        assert_eq!(
+            Selection::parse(&Selection::Auto.key()).unwrap(),
+            Selection::Auto
+        );
+        assert!(Selection::Auto.validate().is_ok());
+        assert!(Selection::Auto.names().is_empty());
+        assert_eq!(Selection::Auto.kind(), SelectionKind::Auto);
+        assert_eq!(Selection::Auto.kind().name(), "auto");
+        // The spelling is reserved by the metacharacter guard: no valid
+        // adapter could ever be named "@auto" (or anything '@'-prefixed),
+        // and near-miss spellings stay errors rather than aliasing Auto.
+        assert!(Selection::single("@auto").validate().is_err());
+        for spec in ["@aut", "@auto2", "@ auto", "@auto+b", "x@auto"] {
+            assert!(
+                !matches!(Selection::parse(spec), Ok(Selection::Auto)),
+                "{spec:?} must not parse as Auto"
+            );
+        }
+        assert!(Selection::parse("@auto+b").is_err());
+        assert!(Selection::parse("@aut").is_err());
     }
 
     #[test]

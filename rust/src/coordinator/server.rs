@@ -22,9 +22,11 @@ use std::time::Instant;
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::engine::Router;
-use super::fault::FaultPlan;
+use super::fault::{FaultInjector, FaultPlan, FaultSite};
 use super::fusion_engine::FusionEngine;
+use super::gate::{request_features, Gate};
 use super::metrics::ServeMetrics;
+use super::pool::{lock_pool, SharedExpertPool};
 use crate::adapter::io::Format;
 use crate::adapter::LoraAdapter;
 use crate::data::trace::Request;
@@ -70,10 +72,22 @@ pub struct RequestOutcome {
     pub selection: String,
     /// Requests in the affected batch.
     pub requests: u64,
-    /// `"degraded-to-base"` or `"skipped"`.
+    /// `"degraded-to-base"`, `"skipped"`, `"gate-degraded-to-base"` or
+    /// `"gate-skipped"`.
     pub action: &'static str,
     /// Display form of the error that triggered the policy.
     pub error: String,
+}
+
+/// What the gate-resolution pass did to one trace: the rewritten
+/// requests plus the counters/outcomes the serve loop folds into its
+/// metrics.
+struct Resolution {
+    requests: Vec<Request>,
+    gated: u64,
+    degraded: u64,
+    skipped: u64,
+    outcomes: Vec<RequestOutcome>,
 }
 
 /// End-of-run report.
@@ -89,6 +103,12 @@ pub struct ServeReport {
     pub single_requests: u64,
     /// Requests that selected a fused adapter set.
     pub set_requests: u64,
+    /// Requests that arrived as `Selection::Auto` and were resolved by
+    /// the gate (counted under the resolved kind above too).
+    pub gated: u64,
+    /// Per-expert served-request counters from the expert pool, sorted
+    /// by name (empty when no pool is configured).
+    pub expert_utilization: Vec<(String, u64)>,
     /// Batches executed.
     pub batches: u64,
     /// Selection switches performed (resident state changed).
@@ -169,6 +189,8 @@ pub struct ServerBuilder<'rt> {
     unfused_lora: bool,
     failure_policy: FailurePolicy,
     fault_plan: Option<FaultPlan>,
+    gate: Option<Arc<dyn Gate>>,
+    expert_pool: Option<SharedExpertPool>,
 }
 
 impl<'rt> ServerBuilder<'rt> {
@@ -184,7 +206,26 @@ impl<'rt> ServerBuilder<'rt> {
             unfused_lora: false,
             failure_policy: FailurePolicy::default(),
             fault_plan: None,
+            gate: None,
+            expert_pool: None,
         }
+    }
+
+    /// Install a gate that resolves [`Selection::Auto`] requests into
+    /// explicit selections before any batching or placement happens.
+    /// Without one, auto requests fail gate resolution (and degrade or
+    /// skip under the matching [`FailurePolicy`]).
+    pub fn gate(mut self, gate: Arc<dyn Gate>) -> Self {
+        self.gate = Some(gate);
+        self
+    }
+
+    /// Share an expert pool: the roster the gate scores over, with
+    /// register/retire lifecycle and per-expert utilization counters
+    /// (surfaced in [`ServeReport::expert_utilization`]).
+    pub fn expert_pool(mut self, pool: SharedExpertPool) -> Self {
+        self.expert_pool = Some(pool);
+        self
     }
 
     /// What to do with batches whose selection cannot be made resident
@@ -289,10 +330,14 @@ impl<'rt> ServerBuilder<'rt> {
             .unwrap_or_else(|| Arc::new(ThreadPool::host_sized()));
         let mut store = AdapterStore::with_config(self.store_cfg, Some(Arc::clone(&pool)));
         let mut router = Router::new(self.base, Some(pool), self.unfused_lora);
+        let mut fault = None;
         if let Some(plan) = &self.fault_plan {
             let injector = plan.injector();
             store.set_fault(Arc::clone(&injector));
-            router.set_fault(injector);
+            router.set_fault(Arc::clone(&injector));
+            // The server keeps its own handle: gate faults fire at
+            // resolution time, before the store or engines are involved.
+            fault = Some(injector);
         }
         let batcher = DynamicBatcher::new(self.batcher_cfg.unwrap_or(BatcherConfig {
             max_batch,
@@ -305,6 +350,9 @@ impl<'rt> ServerBuilder<'rt> {
             store,
             batcher,
             policy: self.failure_policy,
+            fault,
+            gate: self.gate,
+            expert_pool: self.expert_pool,
         })
     }
 }
@@ -321,6 +369,9 @@ pub struct Server<'rt> {
     pub store: AdapterStore,
     batcher: DynamicBatcher,
     policy: FailurePolicy,
+    fault: Option<Arc<FaultInjector>>,
+    gate: Option<Arc<dyn Gate>>,
+    expert_pool: Option<SharedExpertPool>,
 }
 
 impl<'rt> Server<'rt> {
@@ -344,6 +395,96 @@ impl<'rt> Server<'rt> {
     /// (drops the fusion roster; the next set selection rebuilds it).
     pub fn revert_all(&mut self) {
         self.router.revert_all(&mut self.store);
+    }
+
+    /// Resolve one auto request: fire any planned gate fault, score the
+    /// pool's roster with the gate, count utilization.  Pure in the
+    /// payload seed — the same seed over the same roster always yields
+    /// the same selection.
+    fn resolve_auto(&mut self, payload_seed: u64) -> Result<Selection, ServeError> {
+        if let Some(f) = &self.fault {
+            if f.should_fire(FaultSite::Gate) {
+                return Err(ServeError::Gate {
+                    reason: FaultInjector::GATE_FAULT_MSG.to_string(),
+                });
+            }
+        }
+        let gate = self.gate.as_ref().ok_or_else(|| ServeError::Gate {
+            reason: "no gate configured (auto selections need a gate)".into(),
+        })?;
+        let pool = self.expert_pool.as_ref().ok_or_else(|| ServeError::Gate {
+            reason: "no expert pool configured (auto selections need one)"
+                .into(),
+        })?;
+        let roster = lock_pool(pool).roster();
+        let sel = gate.select(&request_features(payload_seed), &roster)?;
+        lock_pool(pool).record_served(&sel.names());
+        Ok(sel)
+    }
+
+    /// The gate-resolution pass, policy-aware: autos resolve to explicit
+    /// selections; on a gate failure `FailFast` surfaces the error,
+    /// `DegradeToBase` rewrites to [`Selection::Base`], `SkipRequest`
+    /// drops the request.
+    fn resolve(&mut self, trace: &[Request]) -> Result<Resolution, ServeError> {
+        let mut res = Resolution {
+            requests: Vec::with_capacity(trace.len()),
+            gated: 0,
+            degraded: 0,
+            skipped: 0,
+            outcomes: Vec::new(),
+        };
+        for r in trace {
+            if !matches!(r.selection, Selection::Auto) {
+                res.requests.push(r.clone());
+                continue;
+            }
+            match self.resolve_auto(r.payload_seed) {
+                Ok(sel) => {
+                    res.gated += 1;
+                    let mut rr = r.clone();
+                    rr.selection = sel;
+                    res.requests.push(rr);
+                }
+                Err(e) => match self.policy {
+                    FailurePolicy::FailFast => return Err(e),
+                    FailurePolicy::DegradeToBase => {
+                        res.degraded += 1;
+                        res.outcomes.push(RequestOutcome {
+                            selection: Selection::Auto.key(),
+                            requests: 1,
+                            action: "gate-degraded-to-base",
+                            error: e.to_string(),
+                        });
+                        let mut rr = r.clone();
+                        rr.selection = Selection::Base;
+                        res.requests.push(rr);
+                    }
+                    FailurePolicy::SkipRequest => {
+                        res.skipped += 1;
+                        res.outcomes.push(RequestOutcome {
+                            selection: Selection::Auto.key(),
+                            requests: 1,
+                            action: "gate-skipped",
+                            error: e.to_string(),
+                        });
+                    }
+                },
+            }
+        }
+        Ok(res)
+    }
+
+    /// Rewrite every [`Selection::Auto`] in `trace` into the gate's
+    /// explicit selection (the same rewrite [`Self::run_trace`] performs
+    /// before batching).  Public so replay tests can serve the returned
+    /// explicit trace and compare resident weights bit-for-bit against
+    /// the auto-served run.
+    pub fn resolve_trace(
+        &mut self,
+        trace: &[Request],
+    ) -> Result<Vec<Request>, ServeError> {
+        Ok(self.resolve(trace)?.requests)
     }
 
     /// Pack a LoRA adapter into the flat theta the unfused artifact expects.
@@ -393,7 +534,19 @@ impl<'rt> Server<'rt> {
         for r in trace {
             r.selection.validate()?;
         }
-        for r in trace {
+        // ---- gate-resolution stage ----------------------------------
+        // Autos are rewritten into the gate's explicit selections BEFORE
+        // any batching: downstream, a gated trace is indistinguishable
+        // from the same trace written explicitly, so batcher affinity
+        // and transition-plan prefetch see the resolved keys and
+        // determinism reduces to the explicit-trace argument
+        // (DESIGN.md §17.3).
+        let resolved = self.resolve(trace)?;
+        metrics.record_gated(resolved.gated);
+        metrics.record_degraded(resolved.degraded);
+        metrics.record_skipped(resolved.skipped);
+        outcomes.extend(resolved.outcomes);
+        for r in &resolved.requests {
             metrics.record_selection(r.selection.kind());
             self.batcher.push(r.clone());
         }
@@ -600,6 +753,12 @@ impl<'rt> Server<'rt> {
             base_requests: metrics.base_requests,
             single_requests: metrics.single_requests,
             set_requests: metrics.set_requests,
+            gated: metrics.gated,
+            expert_utilization: self
+                .expert_pool
+                .as_ref()
+                .map(|p| lock_pool(p).utilization())
+                .unwrap_or_default(),
             batches: metrics.batches,
             switches: metrics.switches,
             transitions: metrics.transitions,
@@ -983,5 +1142,136 @@ mod tests {
         assert!(rep.summary.contains("rollbacks=1"), "{}", rep.summary);
         server.revert_all();
         assert!(server.weights().bit_equal(&base));
+    }
+
+    use crate::coordinator::gate::LinearGate;
+    use crate::coordinator::pool::ExpertPool;
+
+    fn gated_server<'rt>(
+        rt: &'rt Runtime,
+        policy: FailurePolicy,
+        fault: Option<FaultPlan>,
+    ) -> Server<'rt> {
+        let meta = rt.manifest.model("llama").unwrap();
+        let base = WeightStore::init(&meta.params, 7);
+        let names: Vec<String> = (0..3).map(|i| format!("ad{i}")).collect();
+        let pool = ExpertPool::shared(0);
+        for n in &names {
+            lock_pool(&pool).register(n).unwrap();
+        }
+        let mut b = Server::builder(rt, base)
+            .cache_bytes(1 << 20)
+            .failure_policy(policy)
+            .gate(Arc::new(LinearGate::seeded(&names, 2, 0x6A7E)))
+            .expert_pool(pool);
+        if let Some(plan) = fault {
+            b = b.fault_plan(plan);
+        }
+        let mut server = b.build().unwrap();
+        for (i, name) in names.iter().enumerate() {
+            server.store.add_shira(&make_shira(rt, name, i as u64));
+        }
+        server
+    }
+
+    #[test]
+    fn auto_serving_matches_explicit_replay_of_resolved_trace() {
+        let Some(rt) = runtime() else { return };
+        let trace = generate_trace(
+            &[Selection::Auto],
+            16,
+            TracePattern::Bursty { burst: 4 },
+            1e4,
+            21,
+        );
+        // Serve the auto trace directly.
+        let mut a = gated_server(&rt, FailurePolicy::FailFast, None);
+        let rep = a.run_trace(&trace).unwrap();
+        assert_eq!(rep.requests, 16);
+        assert_eq!(rep.gated, 16, "every auto resolved through the gate");
+        assert_eq!(rep.set_requests, 16, "gate emits weighted sets");
+        assert!(rep.summary.contains("gated=16"), "{}", rep.summary);
+        let served: u64 =
+            rep.expert_utilization.iter().map(|(_, n)| n).sum();
+        assert!(served >= 16, "utilization counters track gated requests");
+        // Replay: resolve the autos to explicit sets on an identically
+        // configured server, serve those, and demand bit-identical
+        // resident weights.
+        let mut b = gated_server(&rt, FailurePolicy::FailFast, None);
+        let explicit = b.resolve_trace(&trace).unwrap();
+        assert!(explicit
+            .iter()
+            .all(|r| matches!(r.selection, Selection::Set { .. })));
+        let mut c = gated_server(&rt, FailurePolicy::FailFast, None);
+        let rep2 = c.run_trace(&explicit).unwrap();
+        assert_eq!(rep2.requests, 16);
+        assert_eq!(rep2.gated, 0, "explicit replay never touches the gate");
+        assert!(
+            a.weights().bit_equal(c.weights()),
+            "auto-served weights == explicit-replay weights"
+        );
+    }
+
+    #[test]
+    fn gate_failures_follow_the_failure_policy() {
+        let Some(rt) = runtime() else { return };
+        let trace = generate_trace(
+            &[Selection::Auto],
+            8,
+            TracePattern::Bursty { burst: 4 },
+            1e4,
+            23,
+        );
+        // FailFast: the injected gate fault surfaces as a gate error.
+        let mut s = gated_server(
+            &rt,
+            FailurePolicy::FailFast,
+            Some(FaultPlan::new().fail_gate_at(1)),
+        );
+        let err = s.run_trace(&trace).unwrap_err();
+        assert_eq!(err.kind(), "gate");
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        // DegradeToBase: the faulted request serves on base, the rest
+        // gate normally.
+        let mut s = gated_server(
+            &rt,
+            FailurePolicy::DegradeToBase,
+            Some(FaultPlan::new().fail_gate_at(1)),
+        );
+        let rep = s.run_trace(&trace).unwrap();
+        assert_eq!(rep.requests, 8, "degraded request still serves");
+        assert_eq!(rep.degraded, 1);
+        assert_eq!(rep.gated, 7);
+        assert!(rep
+            .outcomes
+            .iter()
+            .any(|o| o.action == "gate-degraded-to-base"
+                && o.selection == "@auto"));
+        // SkipRequest: the faulted request is dropped.
+        let mut s = gated_server(
+            &rt,
+            FailurePolicy::SkipRequest,
+            Some(FaultPlan::new().fail_gate_at(1)),
+        );
+        let rep = s.run_trace(&trace).unwrap();
+        assert_eq!(rep.requests, 7);
+        assert_eq!(rep.skipped, 1);
+        assert!(rep.outcomes.iter().any(|o| o.action == "gate-skipped"));
+    }
+
+    #[test]
+    fn auto_without_gate_errors_with_gate_kind() {
+        let Some(rt) = runtime() else { return };
+        let (mut server, _names) = server_with(&rt, Zoo::Shira, false);
+        let trace = generate_trace(
+            &[Selection::Auto],
+            4,
+            TracePattern::UniformMix,
+            1e4,
+            3,
+        );
+        let err = server.run_trace(&trace).unwrap_err();
+        assert_eq!(err.kind(), "gate");
+        assert!(err.to_string().contains("no gate configured"), "{err}");
     }
 }

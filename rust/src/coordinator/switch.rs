@@ -59,56 +59,6 @@ use crate::adapter::{AdapterTransition, LoraAdapter, ShiraAdapter, ShiraF16Adapt
 use crate::model::weights::WeightStore;
 use crate::util::threadpool::ThreadPool;
 
-/// Construction-time serving policy of the pre-`Selection` API.
-///
-/// Requests now carry a [`Selection`](super::selection::Selection) and the
-/// server routes base/single/fused traffic per-request; this enum
-/// survives only as the CLI's `--policy` alias, mapped onto default
-/// selections by `shira serve` (a `--policy fusion` trace becomes rotating
-/// `Set` selections, `--policy unfused` sets the server's unfused-LoRA
-/// mode, and so on).
-#[deprecated(
-    since = "0.3.0",
-    note = "requests carry a per-request `coordinator::selection::Selection`; \
-            `Policy` survives only as the deprecated `--policy` CLI alias"
-)]
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Policy {
-    /// SHiRA snapshot + sparse scatter → `Selection::Single` (SHiRA).
-    ShiraScatter,
-    /// Fused-mode adapter sets → `Selection::Set`.
-    ShiraFusion,
-    /// Dense LoRA fuse/unfuse → `Selection::Single` (LoRA).
-    LoraFuse,
-    /// LoRA branches on the forward path → `Selection::Single` (LoRA)
-    /// with the server's unfused-LoRA mode enabled.
-    LoraUnfused,
-}
-
-#[allow(deprecated)]
-impl Policy {
-    /// Stable CLI / report name of the policy.
-    pub fn name(&self) -> &'static str {
-        match self {
-            Policy::ShiraScatter => "shira-scatter",
-            Policy::ShiraFusion => "shira-fusion",
-            Policy::LoraFuse => "lora-fuse",
-            Policy::LoraUnfused => "lora-unfused",
-        }
-    }
-
-    /// Parse a policy name (accepts the short aliases used by the CLI).
-    pub fn parse(s: &str) -> Option<Policy> {
-        Some(match s {
-            "shira-scatter" | "shira" => Policy::ShiraScatter,
-            "shira-fusion" | "fusion" | "fused" => Policy::ShiraFusion,
-            "lora-fuse" | "lora" => Policy::LoraFuse,
-            "lora-unfused" | "unfused" => Policy::LoraUnfused,
-            _ => return None,
-        })
-    }
-}
-
 /// Which path one adapter application took (recorded per switch in
 /// `ServeMetrics`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -1725,16 +1675,5 @@ mod tests {
         assert_eq!(SwitchPath::Transition.name(), "transition");
         assert_eq!(SwitchPath::Fallback.name(), "fallback");
         assert_eq!(SwitchPath::Fused.name(), "fused");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn policy_parse() {
-        assert_eq!(Policy::parse("shira"), Some(Policy::ShiraScatter));
-        assert_eq!(Policy::parse("fusion"), Some(Policy::ShiraFusion));
-        assert_eq!(Policy::parse("shira-fusion"), Some(Policy::ShiraFusion));
-        assert_eq!(Policy::parse("lora-fuse"), Some(Policy::LoraFuse));
-        assert_eq!(Policy::parse("unfused"), Some(Policy::LoraUnfused));
-        assert_eq!(Policy::parse("x"), None);
     }
 }

@@ -4,7 +4,7 @@
 //!   info          print manifest/artifact summary
 //!   train         finetune one adapter and save it
 //!   eval          evaluate an adapter file on the task suite
-//!   serve         run a serving trace under a switching policy
+//!   serve         run a serving trace (mixed selections, or a gated fleet)
 //!   fuse          fuse several SHiRA adapter files
 //!   switch-bench  quick Fig.5-style scatter-vs-fuse sweep
 //!   repro         regenerate a paper table/figure (or `--exp all`)
@@ -17,22 +17,20 @@ use shira::adapter::io;
 use shira::adapter::kernel;
 use shira::adapter::mask::MaskStrategy;
 use shira::config::RunConfig;
-#[allow(deprecated)]
-use shira::coordinator::switch::Policy;
 use shira::coordinator::switch::SwitchEngine;
 use shira::coordinator::fleet::Fleet;
+use shira::coordinator::pool::{lock_pool, ExpertPool};
 use shira::coordinator::selection::Selection;
 use shira::coordinator::server::{FailurePolicy, Server};
 use shira::coordinator::store::StoreConfig;
+use shira::train::gate::train_gate;
 use shira::util::threadpool::ThreadPool;
 use shira::data::synth::{
-    adapter_names, fleet_trace, synth_lora_adapter, synth_shira_adapter, toy_base,
-    toy_shira_zoo, FLEET_TRACE_USERS,
+    adapter_names, fleet_trace, synth_shira_adapter, toy_base, toy_shira_zoo,
+    FLEET_TRACE_USERS,
 };
 use shira::data::tasks::{Task, ALL_TASKS};
-use shira::data::trace::{
-    generate_trace, mixed_selections, rotating_sets, switch_count, TracePattern,
-};
+use shira::data::trace::{generate_trace, mixed_selections, switch_count, TracePattern};
 use shira::model::weights::WeightStore;
 use shira::repro;
 use shira::runtime::Runtime;
@@ -69,11 +67,13 @@ USAGE: shira <subcommand> [flags]
         [--retry-budget N]    (re-dispatch attempts per request)
         [--replica-quarantine-ttl-ms N]  (base replica-quarantine TTL;
         doubles per re-quarantine, probation + recovery on expiry)
-        [--policy <shira|fusion|lora-fuse|unfused>]  (DEPRECATED alias:
-        default serves one mixed trace of base/single/set selections)
+        [--gate]              (fleet path: train a top-k gate and serve an
+        @auto trace — each request's expert set is gate-selected)
+        [--top-k N]           (experts kept per gated selection; default 2)
+        [--pool-cap N]        (expert-pool capacity; 0 = unbounded)
   fuse  --out <file> <a.shira> <b.shira> ...
   switch-bench [--dims 512,1024,2048,4096] [--frac 0.02] [--rank 32]
-  repro --exp <table1..6|fig4|fig5|fig6|fig7|orthogonality|all> [--fast]
+  repro --exp <table1..6|fig4|fig5|fig6|fig7|gate|orthogonality|all> [--fast]
 
 Common flags: --seed N --steps N --fast --config cfg.json --report-dir DIR
 ";
@@ -303,7 +303,8 @@ fn cmd_serve_fleet(args: &Args, cfg: &RunConfig) -> Result<()> {
     if args.has("affinity") {
         pool.set_affinity_hints(true);
     }
-    let mut fleet = Fleet::builder(toy_base(DIM, cfg.seed))
+    let use_gate = args.has("gate");
+    let mut builder = Fleet::builder(toy_base(DIM, cfg.seed))
         .replicas(replicas)
         .queue_depth(queue_depth)
         .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, cfg.seed))
@@ -319,14 +320,41 @@ fn cmd_serve_fleet(args: &Args, cfg: &RunConfig) -> Result<()> {
         .failure_policy(FailurePolicy::DegradeToBase)
         .deadline_us(deadline_ms.saturating_mul(1_000))
         .retry_budget(retry_budget as u32)
-        .replica_quarantine_ttl_us(quarantine_ttl_ms.saturating_mul(1_000).max(1))
-        .build();
-    let sels = mixed_selections(&names);
+        .replica_quarantine_ttl_us(quarantine_ttl_ms.saturating_mul(1_000).max(1));
+    if use_gate {
+        let top_k = args.get_usize("top-k", 2)?;
+        let pool_cap = args.get_usize("pool-cap", 0)?;
+        let trained = train_gate(&names, top_k, 2000, cfg.seed);
+        println!(
+            "gate: linear top-{top_k} over {} experts, held-out accuracy {:.1}%, \
+             pool cap {}",
+            names.len(),
+            100.0 * trained.accuracy,
+            if pool_cap == 0 {
+                "unbounded".to_string()
+            } else {
+                pool_cap.to_string()
+            },
+        );
+        let expert_pool = ExpertPool::shared(pool_cap);
+        for n in &names {
+            lock_pool(&expert_pool).register(n).map_err(|e| anyhow!("{e}"))?;
+        }
+        builder = builder
+            .gate(Arc::new(trained.gate))
+            .expert_pool(expert_pool);
+    }
+    let mut fleet = builder.build();
+    let sels = if use_gate {
+        vec![Selection::Auto]
+    } else {
+        mixed_selections(&names)
+    };
     let trace = fleet_trace(&sels, cfg.trace_len, burst, cfg.seed);
     println!(
         "fleet: {replicas} replicas, queue depth {queue_depth}, {} adapters, \
          {} requests (zipf {FLEET_TRACE_USERS} users, burst {burst}, seed {}) \
-         mode={} kernel={}",
+         mode={}{} kernel={}",
         n_adapters,
         trace.len(),
         cfg.seed,
@@ -335,6 +363,7 @@ fn cmd_serve_fleet(args: &Args, cfg: &RunConfig) -> Result<()> {
         } else {
             "deterministic"
         },
+        if use_gate { "+gated" } else { "" },
         kernel::active_dispatch().name(),
     );
     let report = if args.has("concurrent") {
@@ -346,33 +375,26 @@ fn cmd_serve_fleet(args: &Args, cfg: &RunConfig) -> Result<()> {
     Ok(())
 }
 
-#[allow(deprecated)]
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = RunConfig::from_args(args).map_err(|e| anyhow!(e))?;
     // Force the kernel dispatch FIRST, before any pool/engine probes it.
     apply_kernel_flag(args)?;
+    // The --policy alias is gone (it deprecated when requests grew
+    // per-request selections): fail with the migration path instead of
+    // silently ignoring the flag.
+    if let Some(p) = args.get("policy") {
+        return Err(anyhow!(
+            "--policy {p} was removed: requests carry per-request selections \
+             now. Omit --policy for the default mixed base/single/set trace, \
+             or use `serve --replicas N --gate` for learned top-k gated \
+             selection over the expert pool"
+        ));
+    }
     // The fleet path is runtime-free: no artifacts needed.
     if args.has("replicas") {
         return cmd_serve_fleet(args, &cfg);
     }
     let rt = Runtime::with_default_artifacts()?;
-    // --policy survives only as a deprecated alias: it maps onto default
-    // per-request selections.  Without it the trace mixes base, single
-    // and set selections through one server — the new default.
-    let policy = match args.get("policy") {
-        Some(p) => {
-            let pol =
-                Policy::parse(p).ok_or_else(|| anyhow!("bad --policy {p}"))?;
-            shira::log_warn!(
-                "--policy is deprecated: requests carry per-request selections \
-                 now; mapping '{}' onto default selections (omit --policy for \
-                 a mixed base/single/set trace)",
-                pol.name()
-            );
-            Some(pol)
-        }
-        None => None,
-    };
     let pattern = match args.get_or("pattern", "bursty") {
         "bursty" => TracePattern::Bursty { burst: 8 },
         "uniform" => TracePattern::UniformMix,
@@ -409,35 +431,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .model("llama")
         .store_config(store_cfg)
         .pool(pool)
-        .unfused_lora(matches!(policy, Some(Policy::LoraUnfused)))
         .build()?;
 
-    // Seeded synth zoo shared with the serving bench and the fleet
-    // tests (data::synth): LoRA for the LoRA policy aliases, SHiRA
-    // otherwise (the mixed default exercises scatter + fused sets).
-    let lora_zoo = matches!(policy, Some(Policy::LoraFuse | Policy::LoraUnfused));
+    // Seeded SHiRA synth zoo shared with the serving bench and the
+    // fleet tests (data::synth); the mixed default trace exercises
+    // scatter and fused sets per-request.
     let names = adapter_names(n_adapters);
     for name in &names {
-        if lora_zoo {
-            server.store.add_lora(&synth_lora_adapter(
-                meta,
-                name,
-                rt.manifest.adapter.lora_scale as f32,
-                cfg.seed,
-            ));
-        } else {
-            server
-                .store
-                .add_shira(&synth_shira_adapter(meta, name, cfg.seed));
-        }
+        server
+            .store
+            .add_shira(&synth_shira_adapter(meta, name, cfg.seed));
     }
-    let selections: Vec<Selection> = match policy {
-        // Default: one trace mixing base, every single, and rotating
-        // sets — exercising all three routing arms per-request.
-        None => mixed_selections(&names),
-        Some(Policy::ShiraFusion) if names.len() > 1 => rotating_sets(&names, 1.0),
-        Some(_) => Selection::singles(&names),
-    };
+    // One trace mixing base, every single, and rotating sets —
+    // exercising all three routing arms per-request.
+    let selections: Vec<Selection> = mixed_selections(&names);
     let flash_bytes: usize = names
         .iter()
         .filter_map(|n| server.store.encoded_len(n))
@@ -455,11 +462,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let trace = generate_trace(&selections, cfg.trace_len, pattern, 1e4, cfg.seed);
     println!(
         "serving {} requests over {} selections (pattern switches: {}) \
-         mode={} kernel={}",
+         mode=mixed-selections kernel={}",
         trace.len(),
         selections.len(),
         switch_count(&trace),
-        policy.map(|p| p.name()).unwrap_or("mixed-selections"),
         kernel::active_dispatch().name(),
     );
     let report = server.run_trace(&trace)?;

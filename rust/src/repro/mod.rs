@@ -206,19 +206,21 @@ pub fn run(rt: &Runtime, cfg: &RunConfig, exp: &str) -> Result<Vec<Report>> {
         "table5" => systems::table5(rt, cfg),
         "table6" => systems::table6(rt, cfg),
         "fig5" => systems::fig5(cfg),
+        "gate" => systems::gate(cfg),
         "orthogonality" => systems::orthogonality(rt, cfg),
         "all" => {
             let mut all = Vec::new();
             for e in [
-                "fig5", "table5", "table6", "orthogonality", "table1", "fig4", "fig6",
-                "fig7", "table2", "table3", "table4",
+                "fig5", "gate", "table5", "table6", "orthogonality", "table1", "fig4",
+                "fig6", "fig7", "table2", "table3", "table4",
             ] {
                 all.extend(run(rt, cfg, e)?);
             }
             Ok(all)
         }
         other => Err(anyhow!(
-            "unknown experiment '{other}' (try table1..6, fig4/5/6/7, orthogonality, all)"
+            "unknown experiment '{other}' (try table1..6, fig4/5/6/7, gate, \
+             orthogonality, all)"
         )),
     }
 }

@@ -1,0 +1,201 @@
+//! Gate trainer (DESIGN.md §17): fits the linear top-k
+//! [`LinearGate`] on the seeded synthetic request distribution with
+//! plain SGD on a softmax cross-entropy loss.
+//!
+//! Requests lean toward one task dialect
+//! ([`request_features`]), and the supervision signal is the
+//! **oracle expert**: the expert owning the request's dominant dialect
+//! (dialects map onto the roster round-robin when there are fewer
+//! experts than dialects).  The trainer and the serving gate share one
+//! feature space — [`features_from_tokens`](crate::coordinator::gate::features_from_tokens)
+//! end to end — so training accuracy transfers directly to routing
+//! accuracy.  Everything is seeded: the same `(experts, top_k, steps,
+//! seed)` always yields bit-identical gate parameters, which is what
+//! lets gated serving replay across thread and replica counts.
+
+use crate::coordinator::gate::{request_features, Gate, LinearGate, N_FEATURES};
+use crate::coordinator::selection::Selection;
+use crate::util::rng::Rng;
+
+/// Held-out examples scored for [`GateTrainReport::accuracy`].
+pub const EVAL_EXAMPLES: usize = 256;
+
+/// The oracle expert for one feature vector: the dominant task-dialect
+/// bin (the trailing "other" bin never labels), mapped round-robin onto
+/// an `n_experts`-wide roster.  This is the supervision target for
+/// [`train_gate`] and the ground truth for the repro eval.
+pub fn oracle_expert(features: &[f32; N_FEATURES], n_experts: usize) -> usize {
+    let mut best = 0;
+    for d in 1..N_FEATURES - 1 {
+        if features[d] > features[best] {
+            best = d;
+        }
+    }
+    best % n_experts.max(1)
+}
+
+/// What [`train_gate`] produced: the fitted gate plus held-out metrics.
+#[derive(Clone, Debug)]
+pub struct GateTrainReport {
+    /// The fitted top-k gate, ready for
+    /// [`ServerBuilder::gate`](crate::coordinator::server::ServerBuilder::gate)
+    /// / [`FleetBuilder::gate`](crate::coordinator::fleet::FleetBuilder::gate).
+    pub gate: LinearGate,
+    /// SGD steps taken (one example per step).
+    pub steps: usize,
+    /// Held-out top-1 routing accuracy against the oracle expert, over
+    /// [`EVAL_EXAMPLES`] fresh seeded requests.
+    pub accuracy: f64,
+    /// Mean training cross-entropy over the final 10% of steps.
+    pub final_loss: f64,
+}
+
+/// Fit a [`LinearGate`] over `experts` with `steps` SGD steps on the
+/// seeded synthetic request stream.  Deterministic in `(experts,
+/// top_k, steps, seed)`; `steps` is clamped to at least 1.
+pub fn train_gate(experts: &[String], top_k: usize, steps: usize, seed: u64) -> GateTrainReport {
+    let n = experts.len().max(1);
+    let steps = steps.max(1);
+    let mut w = vec![0.0f32; n * N_FEATURES];
+    let mut b = vec![0.0f32; n];
+    let mut rng = Rng::new(seed).stream("gate/train");
+    let tail_from = steps - (steps + 9) / 10;
+    let mut tail_loss = 0.0f64;
+    let mut tail_count = 0usize;
+    for step in 0..steps {
+        let f = request_features(rng.next_u64());
+        let label = oracle_expert(&f, n);
+        let probs = softmax_scores(&w, &b, &f, n);
+        if step >= tail_from {
+            tail_loss += -f64::from(probs[label].max(1e-9)).ln();
+            tail_count += 1;
+        }
+        // dL/dscore_i = p_i - [i == label]; linear LR decay to a floor.
+        let lr = 0.5f32 * (1.0 - step as f32 / steps as f32).max(0.1);
+        for i in 0..n {
+            let g = probs[i] - if i == label { 1.0 } else { 0.0 };
+            b[i] -= lr * g;
+            let row = &mut w[i * N_FEATURES..(i + 1) * N_FEATURES];
+            for (wv, x) in row.iter_mut().zip(f.iter()) {
+                *wv -= lr * g * x;
+            }
+        }
+    }
+    let gate = LinearGate::new(experts, top_k, w, b);
+    // Held-out accuracy on a disjoint seeded stream: does the gate's
+    // heaviest member match the oracle expert?
+    let mut eval_rng = Rng::new(seed).stream("gate/eval");
+    let mut correct = 0usize;
+    for _ in 0..EVAL_EXAMPLES {
+        let f = request_features(eval_rng.next_u64());
+        let label = oracle_expert(&f, n);
+        if top_member(&gate, &f, experts).as_deref() == experts.get(label).map(String::as_str) {
+            correct += 1;
+        }
+    }
+    GateTrainReport {
+        gate,
+        steps,
+        accuracy: correct as f64 / EVAL_EXAMPLES as f64,
+        final_loss: tail_loss / tail_count.max(1) as f64,
+    }
+}
+
+/// Softmax over the gate's raw linear scores (stable shift-by-max).
+fn softmax_scores(w: &[f32], b: &[f32], f: &[f32; N_FEATURES], n: usize) -> Vec<f32> {
+    let mut probs = vec![0.0f32; n];
+    for (i, p) in probs.iter_mut().enumerate() {
+        let row = &w[i * N_FEATURES..(i + 1) * N_FEATURES];
+        *p = b[i] + row.iter().zip(f.iter()).map(|(wv, x)| wv * x).sum::<f32>();
+    }
+    let max = probs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0f32;
+    for p in &mut probs {
+        *p = (*p - max).exp();
+        z += *p;
+    }
+    for p in &mut probs {
+        *p /= z;
+    }
+    probs
+}
+
+/// The heaviest member of the gate's selection for `f` over `roster`
+/// (name-ascending on exact weight ties, mirroring the gate's own
+/// tie-break), or `None` when the gate cannot select.
+pub fn top_member(gate: &LinearGate, f: &[f32; N_FEATURES], roster: &[String]) -> Option<String> {
+    match gate.select(f, roster) {
+        Ok(Selection::Set { members }) => members
+            .iter()
+            .max_by(|a, b| {
+                a.1.partial_cmp(&b.1)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| b.0.cmp(&a.0))
+            })
+            .map(|(name, _)| name.clone()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn experts(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("adapter{i}")).collect()
+    }
+
+    #[test]
+    fn trained_gate_routes_to_the_oracle_expert() {
+        let ex = experts(4);
+        let out = train_gate(&ex, 2, 2000, 0x9A7E);
+        assert!(out.accuracy > 0.9, "held-out accuracy {}", out.accuracy);
+        assert!(out.final_loss < 0.6, "final loss {}", out.final_loss);
+        assert_eq!(out.steps, 2000);
+        // Training beats the untrained seeded init by a wide margin.
+        let untrained = LinearGate::seeded(&ex, 2, 0x9A7E);
+        let mut rng = Rng::new(0x9A7E).stream("gate/eval");
+        let mut base_correct = 0usize;
+        for _ in 0..EVAL_EXAMPLES {
+            let f = request_features(rng.next_u64());
+            let label = oracle_expert(&f, ex.len());
+            if top_member(&untrained, &f, &ex).as_deref() == Some(ex[label].as_str()) {
+                base_correct += 1;
+            }
+        }
+        let base_acc = base_correct as f64 / EVAL_EXAMPLES as f64;
+        assert!(
+            out.accuracy > base_acc + 0.2,
+            "trained {} vs untrained {}",
+            out.accuracy,
+            base_acc
+        );
+    }
+
+    #[test]
+    fn training_is_deterministic_in_the_seed() {
+        let ex = experts(3);
+        let a = train_gate(&ex, 2, 500, 7);
+        let b = train_gate(&ex, 2, 500, 7);
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(a.final_loss, b.final_loss);
+        let f = request_features(99);
+        assert_eq!(
+            a.gate.select(&f, &ex).ok(),
+            b.gate.select(&f, &ex).ok()
+        );
+        // A different seed trains a different (but still accurate) gate.
+        let c = train_gate(&ex, 2, 500, 8);
+        assert!(c.accuracy > 0.5);
+    }
+
+    #[test]
+    fn oracle_expert_wraps_round_robin_and_ignores_other_bin() {
+        let mut f = [0.0f32; N_FEATURES];
+        f[5] = 0.6;
+        f[N_FEATURES - 1] = 0.4;
+        assert_eq!(oracle_expert(&f, 8), 5);
+        assert_eq!(oracle_expert(&f, 3), 2);
+        assert_eq!(oracle_expert(&f, 0), 0);
+    }
+}

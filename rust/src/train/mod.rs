@@ -8,6 +8,7 @@
 
 pub mod checkpoint;
 pub mod eval;
+pub mod gate;
 pub mod schedule;
 
 use anyhow::{anyhow, Result};

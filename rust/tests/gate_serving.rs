@@ -1,0 +1,285 @@
+//! Gated-serving acceptance tests (DESIGN.md §17): a seeded all-`Auto`
+//! trace served through the learned top-k gate must be **bit-identical
+//! and placement-identical** to replaying the same trace with the
+//! gate's emitted `Selection::Set`s named explicitly — at 1 and 4
+//! worker threads and at 2 and 8 replicas.  Gating happens up front on
+//! the ingest thread, so a gated trace is indistinguishable downstream
+//! from an explicit one and the whole fleet determinism story carries
+//! over unchanged.
+//!
+//! Also covered here: replay determinism of gated runs from
+//! `(trace, schedule, gate)` seeds alone, expert retire-under-traffic
+//! never evicting a pinned roster member, and gate faults degrading to
+//! the configured `FailurePolicy`.
+//!
+//! The CI gating job runs this file once per (threads, replicas) cell
+//! via `GATE_THREADS` / `GATE_REPLICAS` (see .github/workflows/ci.yml).
+
+use std::sync::Arc;
+
+use shira::coordinator::fault::FaultPlan;
+use shira::coordinator::fleet::{Fleet, FleetReport};
+use shira::coordinator::pool::{lock_pool, ExpertPool, RetireDisposition, SharedExpertPool};
+use shira::coordinator::selection::Selection;
+use shira::coordinator::server::FailurePolicy;
+use shira::coordinator::store::StoreConfig;
+use shira::data::synth::{adapter_names, fleet_trace, toy_base, toy_shira_zoo};
+use shira::data::trace::Request;
+use shira::train::gate::train_gate;
+use shira::util::threadpool::ThreadPool;
+
+const DIM: usize = 32;
+const NNZ: usize = 80;
+const ZOO: usize = 6;
+const TRACE_SEED: u64 = 0x6A7E;
+const SCHEDULE_SEED: u64 = 0x5EED;
+const GATE_SEED: u64 = 0x9A7E;
+
+fn store_cfg() -> StoreConfig {
+    StoreConfig {
+        cache_bytes: 64 << 20,
+        prefetch_depth: 0,
+        plan_cache_bytes: 0,
+        ..StoreConfig::default()
+    }
+}
+
+fn expert_pool() -> SharedExpertPool {
+    let pool = ExpertPool::shared(0);
+    for n in &adapter_names(ZOO) {
+        lock_pool(&pool).register(n).unwrap();
+    }
+    pool
+}
+
+/// A fleet with the trained gate attached.  `threads == 0` means no
+/// worker pool (serial scatter); otherwise an N-thread pool.
+fn gated_fleet(replicas: usize, threads: usize) -> (Fleet, SharedExpertPool) {
+    let names = adapter_names(ZOO);
+    let trained = train_gate(&names, 2, 800, GATE_SEED);
+    let pool = expert_pool();
+    let mut b = Fleet::builder(toy_base(DIM, TRACE_SEED))
+        .replicas(replicas)
+        .queue_depth(256)
+        .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, TRACE_SEED))
+        .store_config(store_cfg())
+        .gate(Arc::new(trained.gate))
+        .expert_pool(Arc::clone(&pool));
+    if threads > 0 {
+        b = b.pool(Arc::new(ThreadPool::new(threads)));
+    }
+    (b.build(), pool)
+}
+
+/// The same fleet shape with no gate at all — what the explicit replay
+/// runs on, so bit-identity cannot come from shared gate state.
+fn plain_fleet(replicas: usize, threads: usize) -> Fleet {
+    let names = adapter_names(ZOO);
+    let mut b = Fleet::builder(toy_base(DIM, TRACE_SEED))
+        .replicas(replicas)
+        .queue_depth(256)
+        .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, TRACE_SEED))
+        .store_config(store_cfg());
+    if threads > 0 {
+        b = b.pool(Arc::new(ThreadPool::new(threads)));
+    }
+    b.build()
+}
+
+fn auto_trace(n: usize) -> Vec<Request> {
+    fleet_trace(&[Selection::Auto], n, 4, TRACE_SEED)
+}
+
+/// CI matrix hook: GATE_REPLICAS / GATE_THREADS pin one cell; unset
+/// runs the full acceptance sweep locally.
+fn matrix() -> (Vec<usize>, Vec<usize>) {
+    let replicas = match std::env::var("GATE_REPLICAS") {
+        Ok(s) => vec![s.parse().expect("GATE_REPLICAS must be an integer")],
+        Err(_) => vec![2, 8],
+    };
+    let threads = match std::env::var("GATE_THREADS") {
+        Ok(s) => vec![s.parse().expect("GATE_THREADS must be an integer")],
+        Err(_) => vec![1, 4],
+    };
+    (replicas, threads)
+}
+
+#[test]
+fn gated_autos_replay_bit_identically_as_explicit_sets() {
+    let t = auto_trace(160);
+    let (replica_counts, thread_counts) = matrix();
+    // Capture the gate's rewrite once: every auto becomes an explicit
+    // weighted set.
+    let (mut resolver, _) = gated_fleet(2, 0);
+    let explicit = resolver.resolve_trace(&t).unwrap();
+    assert_eq!(explicit.len(), t.len());
+    assert!(explicit
+        .iter()
+        .all(|q| matches!(q.selection, Selection::Set { .. })));
+    for &replicas in &replica_counts {
+        // Collected per thread count; everything must agree across
+        // thread counts too (the pool parallelizes scatter arithmetic,
+        // never scheduling decisions).
+        let mut per_thread: Vec<(Vec<u64>, Vec<Option<String>>)> = Vec::new();
+        for &threads in &thread_counts {
+            let (mut auto_fleet, _) = gated_fleet(replicas, threads);
+            let a = auto_fleet.run_trace(&t, SCHEDULE_SEED).unwrap();
+            assert!(
+                a.oracle_failures.is_empty(),
+                "replicas={replicas} threads={threads}: {:?}",
+                a.oracle_failures
+            );
+            assert_eq!(a.gated, 160, "replicas={replicas} threads={threads}");
+            assert_eq!(a.served, 160);
+            // Explicit replay on a gateless fleet of the same shape.
+            let mut exp_fleet = plain_fleet(replicas, threads);
+            let r = exp_fleet.run_trace(&explicit, SCHEDULE_SEED).unwrap();
+            assert_eq!(r.gated, 0);
+            assert_eq!(
+                a.actions, r.actions,
+                "replicas={replicas} threads={threads}: gated outcomes \
+                 diverge from the explicit replay"
+            );
+            assert_eq!(
+                a.per_replica_served, r.per_replica_served,
+                "replicas={replicas} threads={threads}: gated placement \
+                 diverges from the explicit replay"
+            );
+            let mut finals: Vec<Option<String>> = Vec::new();
+            for (ra, rb) in auto_fleet.routers().zip(exp_fleet.routers()) {
+                assert_eq!(ra.active_key(), rb.active_key());
+                assert!(
+                    ra.weights().bit_equal(rb.weights()),
+                    "replicas={replicas} threads={threads}: resident weights \
+                     diverge between gated and explicit serving"
+                );
+                finals.push(ra.active_key().map(str::to_string));
+            }
+            per_thread.push((a.per_replica_served.clone(), finals));
+        }
+        for w in per_thread.windows(2) {
+            assert_eq!(
+                w[0], w[1],
+                "replicas={replicas}: thread count changed placement or \
+                 final residency"
+            );
+        }
+    }
+}
+
+#[test]
+fn gated_replay_is_bit_and_placement_identical() {
+    // Same (trace, schedule, gate) seeds → the same run, byte for byte:
+    // actions, placement, summary, utilization and final weights.
+    let t = auto_trace(120);
+    let run = || {
+        let (mut f, _) = gated_fleet(2, 2);
+        let rep: FleetReport = f.run_trace(&t, SCHEDULE_SEED).unwrap();
+        let finals: Vec<Option<String>> = f
+            .routers()
+            .map(|r| r.active_key().map(str::to_string))
+            .collect();
+        (rep, finals)
+    };
+    let (a, fa) = run();
+    let (b, fb) = run();
+    assert_eq!(a.actions, b.actions);
+    assert_eq!(a.per_replica_served, b.per_replica_served);
+    assert_eq!(a.summary, b.summary);
+    assert_eq!(a.expert_utilization, b.expert_utilization);
+    assert_eq!(fa, fb);
+    assert!(a.summary.contains("gate: gated=120"), "{}", a.summary);
+}
+
+#[test]
+fn retire_under_traffic_never_evicts_pinned_roster_members() {
+    // Serve a gated burst, then retire an expert while a replica still
+    // pins its weights: the pool defers eviction (the store keeps the
+    // bytes resident and pinned), the roster shrinks immediately, and
+    // later gated traffic never selects the retiree.
+    let t = auto_trace(60);
+    let (mut f, pool) = gated_fleet(2, 0);
+    let rep = f.run_trace(&t, SCHEDULE_SEED).unwrap();
+    assert_eq!(rep.gated, 60);
+    let store = f.store();
+    let guard = store.lock().unwrap();
+    // Final active selections keep their members pinned: find one.
+    let pinned: Vec<String> = adapter_names(ZOO)
+        .into_iter()
+        .filter(|n| guard.is_pinned(n))
+        .collect();
+    assert!(!pinned.is_empty(), "end-of-run fleet should hold pins");
+    let retiree = &pinned[0];
+    let disp = lock_pool(&pool).retire(retiree, &guard).unwrap();
+    assert_eq!(disp, RetireDisposition::DeferredPinned);
+    // Never evicted: still pinned, still resident, exactly because the
+    // retire path has no eviction authority over pinned weights.
+    assert!(guard.is_pinned(retiree));
+    assert!(guard.is_resident(retiree));
+    drop(guard);
+    // The roster shrank immediately: future gated selections exclude
+    // the retiree even while its bytes remain resident.
+    assert!(!lock_pool(&pool).roster().contains(retiree));
+    let explicit = f.resolve_trace(&t).unwrap();
+    assert!(explicit
+        .iter()
+        .all(|q| !q.selection.names().contains(&retiree.as_str())));
+    // An unpinned retiree is evictable — and still not evicted by the
+    // pool itself (disposition only; the store decides under pressure).
+    let unpinned: Vec<String> = adapter_names(ZOO)
+        .into_iter()
+        .filter(|n| !pinned.contains(n))
+        .collect();
+    if let Some(name) = unpinned.first() {
+        let guard = store.lock().unwrap();
+        let disp = lock_pool(&pool).retire(name, &guard).unwrap();
+        assert_eq!(disp, RetireDisposition::Evictable);
+    }
+}
+
+#[test]
+fn gate_faults_follow_the_failure_policy() {
+    let t = auto_trace(40);
+    let build = |policy: FailurePolicy| {
+        let names = adapter_names(ZOO);
+        let trained = train_gate(&names, 2, 800, GATE_SEED);
+        Fleet::builder(toy_base(DIM, TRACE_SEED))
+            .replicas(2)
+            .queue_depth(256)
+            .shira_adapters(&toy_shira_zoo(DIM, &names, NNZ, TRACE_SEED))
+            .store_config(store_cfg())
+            .gate(Arc::new(trained.gate))
+            .expert_pool(expert_pool())
+            .failure_policy(policy)
+            .fault_plan(FaultPlan::new().fail_gate_at(2))
+            .build()
+    };
+    // FailFast: the structured gate error surfaces before anything is
+    // queued or placed.
+    let err = build(FailurePolicy::FailFast)
+        .run_trace(&t, SCHEDULE_SEED)
+        .unwrap_err();
+    assert_eq!(err.kind(), "gate");
+    assert!(err.to_string().contains("injected fault"), "{err}");
+    // DegradeToBase: the faulted request rides base weights; every
+    // request stays terminally accounted.
+    let rep = build(FailurePolicy::DegradeToBase)
+        .run_trace(&t, SCHEDULE_SEED)
+        .unwrap();
+    assert_eq!((rep.gated, rep.degraded), (39, 1));
+    assert_eq!(rep.served, 40);
+    assert_eq!(rep.actions.len(), 40);
+    assert!(rep
+        .outcomes
+        .iter()
+        .any(|o| o.action == "gate-degraded-to-base"
+            && o.replica.is_none()
+            && o.selection == "@auto"));
+    // SkipRequest: dropped, but never silently lost.
+    let rep = build(FailurePolicy::SkipRequest)
+        .run_trace(&t, SCHEDULE_SEED)
+        .unwrap();
+    assert_eq!((rep.gated, rep.skipped, rep.served), (39, 1, 39));
+    assert_eq!(rep.actions.len(), 40);
+    assert!(rep.actions.values().any(|&a| a == "gate-skipped"));
+}
